@@ -1,0 +1,173 @@
+//! The paper's §4 practical use case: six sequential CHOPT sessions that
+//! incrementally fine-tune ResNet+RandomErasing on CIFAR-100-like data
+//! (surrogate), following the Fig. 6 usage flow:
+//!
+//!   1. tune lr                      (ES on)
+//!   2. narrowed lr + momentum       (ES on)
+//!   3. + prob                       (ES on)
+//!   4. + sh                         (ES on)
+//!   5. + depth                      (ES on)   <- biased by early stopping
+//!   6. same as 5                    (ES OFF)  <- recovers deep models
+//!
+//! After each session the top-10 models narrow the ranges
+//! (`analysis::narrow_config`) and a new axis is appended
+//! (`analysis::append_param`) — exactly the paper's Table-1 progression.
+//! Produces the Fig. 3/4/5/7 artifacts under reports/finetune/.
+//!
+//!     cargo run --release --example finetune_walkthrough
+
+use std::collections::HashSet;
+
+use chopt::analysis;
+use chopt::config::{ChoptConfig, Order};
+use chopt::coordinator::{run_sim, SimSetup};
+use chopt::hparam::{Dist, ParamDef, ParamType, Value};
+use chopt::nsml::NsmlSession;
+use chopt::trainer::surrogate::SurrogateTrainer;
+use chopt::trainer::Trainer;
+use chopt::util::bench::Table;
+use chopt::viz;
+
+fn base_config() -> ChoptConfig {
+    let text = r#"{
+      "h_params": {
+        "lr": {"parameters": [0.001, 0.2], "distribution": "log_uniform",
+               "type": "float", "p_range": [0.0005, 0.5]}
+      },
+      "measure": "test/accuracy",
+      "order": "descending",
+      "step": 7,
+      "population": 5,
+      "tune": {"random": {}},
+      "termination": {"max_session_number": 40},
+      "model": "surrogate:resnet_re",
+      "max_epochs": 300,
+      "max_gpus": 5,
+      "seed": 42
+    }"#;
+    ChoptConfig::from_json_str(text).unwrap()
+}
+
+fn fdef(name: &str, lo: f64, hi: f64, p_lo: f64, p_hi: f64) -> ParamDef {
+    ParamDef {
+        name: name.into(),
+        ptype: ParamType::Float,
+        dist: Dist::Uniform,
+        parameters: vec![Value::Float(lo), Value::Float(hi)],
+        p_range: vec![p_lo, p_hi],
+    }
+}
+
+fn depth_def() -> ParamDef {
+    ParamDef {
+        name: "depth".into(),
+        ptype: ParamType::Int,
+        dist: Dist::Categorical,
+        parameters: [20, 92, 110, 122, 134, 140]
+            .iter()
+            .map(|&d| Value::Int(d))
+            .collect(),
+        p_range: vec![],
+    }
+}
+
+fn run_one(cfg: ChoptConfig, seed: u64) -> (Vec<NsmlSession>, f64) {
+    let outcome = run_sim(SimSetup::single(cfg, 8), move |id| {
+        Box::new(SurrogateTrainer::new(seed * 100 + id)) as Box<dyn Trainer>
+    });
+    let agent = &outcome.agents[0];
+    let best = agent.best().map(|(_, m)| m).unwrap_or(f64::NAN);
+    (agent.sessions.values().cloned().collect(), best)
+}
+
+fn main() -> anyhow::Result<()> {
+    let order = Order::Descending;
+    let mut cfg = base_config();
+    let mut runs: Vec<(String, Vec<NsmlSession>)> = Vec::new();
+    let mut table = Table::new(
+        "Table 1 progression: fine tuning per session",
+        &["no.", "top acc", "early stopped", "tuned axes"],
+    );
+
+    let steps: [(&str, Option<ParamDef>, bool); 6] = [
+        ("1st: lr", None, true),
+        ("2nd: +momentum", Some(fdef("momentum", 0.1, 0.999, 0.0, 1.0)), true),
+        ("3rd: +prob", Some(fdef("prob", 0.0, 0.9, 0.0, 1.0)), true),
+        ("4th: +sh", Some(fdef("sh", 0.2, 0.9, 0.05, 1.0)), true),
+        ("5th: +depth (ES)", Some(depth_def()), true),
+        ("6th: depth (no ES)", None, false),
+    ];
+
+    for (i, (label, new_param, es)) in steps.into_iter().enumerate() {
+        // Usage-flow step 3: narrow from the previous run's top-10.
+        if let Some((_, prev_sessions)) = runs.last() {
+            let top = analysis::top_k(prev_sessions, order, 10);
+            cfg = analysis::narrow_config(&cfg, &top);
+        }
+        // Usage-flow step 4: append the next axis.
+        if let Some(def) = new_param {
+            cfg = analysis::append_param(&cfg, def);
+        }
+        cfg.step = if es { 7 } else { -1 };
+        cfg.seed = 42 + i as u64;
+        let (sessions, best) = run_one(cfg.clone(), i as u64 + 1);
+        let axes: Vec<&str> = cfg.space.defs.iter().map(|d| d.name.as_str()).collect();
+        println!("{label}: best {best:.2}% over {} models", sessions.len());
+        table.row(&[
+            format!("{}", i + 1),
+            format!("{best:.2}"),
+            format!("{es}"),
+            axes.join(", "),
+        ]);
+        runs.push((label.to_string(), sessions));
+    }
+    table.print();
+
+    // The headline §4 claim: removing ES in session 6 beats session 5.
+    let best5 = analysis::top_k(&runs[4].1, order, 1)[0]
+        .best_measure(order)
+        .unwrap();
+    let best6 = analysis::top_k(&runs[5].1, order, 1)[0]
+        .best_measure(order)
+        .unwrap();
+    println!("\nES-biased session 5: {best5:.2}%  ->  no-ES session 6: {best6:.2}%");
+    assert!(best6 > best5, "no-ES must recover the deep models");
+
+    // ------- Fig. 3/4/5/7 artifacts ------------------------------------
+    std::fs::create_dir_all("reports/finetune")?;
+    // Merged parallel coordinates over all six runs (Fig. 7), with top-3
+    // of the final run highlighted (Fig. 4 masking).
+    let space = cfg.space.clone();
+    let groups: Vec<viz::parallel_coords::RunGroup> = runs
+        .iter()
+        .map(|(label, sessions)| viz::parallel_coords::RunGroup {
+            label,
+            sessions,
+        })
+        .collect();
+    let highlight: HashSet<_> = analysis::top_k(&runs[5].1, order, 3)
+        .iter()
+        .map(|s| s.id)
+        .collect();
+    viz::parallel_coords::render(&space, &groups, order, &highlight)
+        .save("reports/finetune/fig7_parallel.svg")?;
+
+    let last = &runs[5].1;
+    viz::plots::scatter(last, "prob", order).save("reports/finetune/scatter_prob.svg")?;
+    viz::plots::histogram(last, "lr", 12).save("reports/finetune/hist_lr.svg")?;
+    viz::plots::duration_bars(&runs[4].1).save("reports/finetune/fig5_duration_es.svg")?;
+    viz::plots::duration_bars(last).save("reports/finetune/fig5_duration_no_es.svg")?;
+    viz::cluster_view::render(&space, last, order).save("reports/finetune/fig5_cluster.svg")?;
+    viz::hierarchy::render(last).save("reports/finetune/fig5_hierarchy.svg")?;
+    std::fs::write(
+        "reports/finetune/parallel.json",
+        viz::export::parallel_coords_doc(&space, last, order, "6th").to_string_pretty(),
+    )?;
+    let top_refs = analysis::top_k(last, order, 3);
+    std::fs::write(
+        "reports/finetune/summary.json",
+        viz::export::summary_doc(&top_refs, order).to_string_pretty(),
+    )?;
+    println!("viz artifacts in reports/finetune/ (fig7_parallel.svg, fig5_*, scatter, hist)");
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! QA task driver: tune the BiDAF-lite model (real PJRT training) with
+//! random search + median-rule early stopping — the paper's second
+//! evaluation task (§5.1, SQuAD/BiDAF row of Table 2).
+//!
+//!     make artifacts && cargo run --release --example question_answering
+
+use chopt::config::ChoptConfig;
+use chopt::coordinator::{run_sim, SimSetup};
+use chopt::runtime::Manifest;
+use chopt::trainer::real::RealTrainer;
+use chopt::trainer::Trainer;
+use chopt::viz;
+
+const CONFIG: &str = r#"{
+  "h_params": {
+    "lr": {"parameters": [0.05, 1.0], "distribution": "log_uniform",
+           "type": "float", "p_range": [0.01, 2.0]},
+    "momentum": {"parameters": [0.5, 0.95], "distribution": "uniform",
+           "type": "float", "p_range": [0.0, 0.99]},
+    "dropout": {"parameters": [0.0, 0.4], "distribution": "uniform",
+           "type": "float", "p_range": [0.0, 0.6]}
+  },
+  "measure": "test/em",
+  "order": "descending",
+  "step": 5,
+  "population": 4,
+  "tune": {"random": {}},
+  "termination": {"max_session_number": 10},
+  "model": "qa_bidaf",
+  "max_epochs": 30,
+  "max_gpus": 4,
+  "seed": 9
+}"#;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let cfg = ChoptConfig::from_json_str(CONFIG)?;
+    let order = cfg.order;
+    println!("== question answering (REAL PJRT training, BiDAF-lite) ==");
+    println!("random search + median early stopping, 10 models, 20 epochs each");
+    let t0 = std::time::Instant::now();
+
+    let outcome = run_sim(SimSetup::single(cfg, 4), |id| {
+        Box::new(RealTrainer::new(Manifest::default_dir(), 900 + id).expect("runtime"))
+            as Box<dyn Trainer>
+    });
+
+    let agent = &outcome.agents[0];
+    let sessions: Vec<_> = agent.sessions.values().cloned().collect();
+    viz::report::outcome_table(agent).print();
+    viz::report::leaderboard_table(&sessions, order, 6).print();
+
+    std::fs::create_dir_all("reports/question_answering")?;
+    std::fs::write(
+        "reports/question_answering/curves.json",
+        viz::export::curves_doc(&sessions).to_string_pretty(),
+    )?;
+
+    let (sid, best) = agent.best().expect("best exists");
+    let s = &agent.sessions[&sid];
+    println!(
+        "\nbest model {sid}: exact-match {best:.2}% at epoch {} with {}",
+        s.epochs,
+        s.hparams.render()
+    );
+    let first = s.history.first().unwrap();
+    let last = s.history.last().unwrap();
+    println!("best-model loss {:.3} -> {:.3}", first.loss, last.loss);
+    assert!(last.loss < first.loss, "QA training must reduce loss");
+    println!("wall time {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Quickstart: run the paper's Listing-1 configuration end to end on the
+//! surrogate trainer and print the leaderboard.
+//!
+//!     cargo run --release --example quickstart
+
+use chopt::config::ChoptConfig;
+use chopt::coordinator::{run_sim, SimSetup};
+use chopt::trainer::surrogate::SurrogateTrainer;
+use chopt::trainer::Trainer;
+use chopt::viz::report;
+
+fn main() -> anyhow::Result<()> {
+    // The exact configuration from the paper's Listing 1 (PBT, step 5,
+    // population 5, 50 models max), pointed at the resnet surrogate.
+    let mut cfg = ChoptConfig::from_json_str(chopt::config::LISTING1_EXAMPLE)?;
+    cfg.model = "surrogate:resnet".to_string();
+    cfg.max_epochs = 100;
+    cfg.seed = 7;
+    let order = cfg.order;
+
+    println!("== CHOPT quickstart: Listing-1 config on surrogate:resnet ==");
+    println!(
+        "tune={} population={} step={} termination=max {} models",
+        cfg.tune.name(),
+        cfg.population,
+        cfg.step,
+        cfg.termination.max_session_number.unwrap_or(0)
+    );
+
+    let outcome = run_sim(SimSetup::single(cfg, 8), |id| {
+        Box::new(SurrogateTrainer::new(1000 + id)) as Box<dyn Trainer>
+    });
+
+    let agent = &outcome.agents[0];
+    report::outcome_table(agent).print();
+    let sessions: Vec<_> = agent.sessions.values().cloned().collect();
+    report::leaderboard_table(&sessions, order, 10).print();
+
+    let (sid, best) = agent.best().expect("a best model exists");
+    println!(
+        "\nbest model {sid}: {best:.2}% with {}",
+        agent.sessions[&sid].hparams.render()
+    );
+    println!(
+        "virtual time {:.1}h, CHOPT GPU-hours {:.1}, {} events",
+        outcome.end_time / 3600.0,
+        outcome.gpu_hours(),
+        outcome.events_processed
+    );
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Serve a CHOPT run through the web-based analytic tool: runs a quick
+//! surrogate session, exports all views, serves them over HTTP, and
+//! self-checks every route.  Pass `--hold` to keep the server alive for a
+//! browser.
+//!
+//!     cargo run --release --example serve_viz [-- --hold]
+
+use std::collections::HashSet;
+
+use chopt::config::ChoptConfig;
+use chopt::coordinator::{run_sim, SimSetup};
+use chopt::trainer::surrogate::SurrogateTrainer;
+use chopt::trainer::Trainer;
+use chopt::viz::{self, server::{http_get, Routes, VizServer}};
+
+fn main() -> anyhow::Result<()> {
+    let hold = std::env::args().any(|a| a == "--hold");
+    let mut cfg = ChoptConfig::from_json_str(chopt::config::LISTING1_EXAMPLE)?;
+    cfg.model = "surrogate:wrn_re".to_string();
+    cfg.max_epochs = 120;
+    let order = cfg.order;
+    let space = cfg.space.clone();
+
+    println!("running a quick CHOPT session to have something to look at...");
+    let outcome = run_sim(SimSetup::single(cfg, 8), |id| {
+        Box::new(SurrogateTrainer::new(5 + id)) as Box<dyn Trainer>
+    });
+    let agent = &outcome.agents[0];
+    let sessions: Vec<_> = agent.sessions.values().cloned().collect();
+
+    // Build all routes.
+    let mut routes = Routes::new();
+    let parallel = viz::export::parallel_coords_doc(&space, &sessions, order, "demo");
+    routes.insert(
+        "/api/parallel.json".into(),
+        ("application/json".into(), parallel.to_string_compact().into_bytes()),
+    );
+    routes.insert(
+        "/api/curves.json".into(),
+        (
+            "application/json".into(),
+            viz::export::curves_doc(&sessions).to_string_compact().into_bytes(),
+        ),
+    );
+    let svg = viz::parallel_coords::render(
+        &space,
+        &[viz::parallel_coords::RunGroup {
+            label: "demo",
+            sessions: &sessions,
+        }],
+        order,
+        &HashSet::new(),
+    );
+    routes.insert(
+        "/svg/parallel.svg".into(),
+        ("image/svg+xml".into(), svg.finish().into_bytes()),
+    );
+    routes.insert(
+        "/svg/cluster.svg".into(),
+        (
+            "image/svg+xml".into(),
+            viz::cluster_view::render(&space, &sessions, order)
+                .finish()
+                .into_bytes(),
+        ),
+    );
+
+    let server = VizServer::start(0, routes)?;
+    let addr = server.addr();
+    println!("viz server on http://{addr}/");
+
+    // Self-check every route.
+    for path in ["/", "/api/parallel.json", "/api/curves.json", "/svg/parallel.svg", "/svg/cluster.svg"] {
+        let (status, body) = http_get(addr, path)?;
+        assert_eq!(status, 200, "route {path}");
+        println!("  GET {path} -> 200 ({} bytes)", body.len());
+    }
+    println!("requests served: {}", server.requests.load(std::sync::atomic::Ordering::Relaxed));
+
+    if hold {
+        println!("holding (ctrl-c to stop)...");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    server.stop();
+    println!("self-check OK");
+    Ok(())
+}

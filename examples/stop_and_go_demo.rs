@@ -1,0 +1,118 @@
+//! Stop-and-Go demo (paper §3.3, Fig. 8): a CHOPT session on a shared
+//! cluster with the A–E external-load trace.  Prints the zone-by-zone
+//! allocation picture and writes the Fig.-8 timeline SVG.
+//!
+//!     cargo run --release --example stop_and_go_demo
+
+use chopt::cluster::ExternalLoadTrace;
+use chopt::config::ChoptConfig;
+use chopt::coordinator::{run_sim, AgentEvent, SimSetup, StopAndGoPolicy};
+use chopt::trainer::surrogate::SurrogateTrainer;
+use chopt::trainer::Trainer;
+use chopt::util::bench::Table;
+use chopt::viz::plots;
+
+fn main() -> anyhow::Result<()> {
+    let gpus = 16;
+    let horizon = 200_000.0; // ~2.3 virtual days
+    let cfg_text = r#"{
+      "h_params": {
+        "lr": {"parameters": [0.005, 0.09], "distribution": "log_uniform",
+               "type": "float", "p_range": [0.001, 0.2]},
+        "depth": {"parameters": [20, 140], "distribution": "uniform",
+               "type": "int", "p_range": [20, 140]}
+      },
+      "measure": "test/accuracy",
+      "order": "descending",
+      "step": 5,
+      "population": 6,
+      "tune": {"random": {}},
+      "termination": {"max_session_number": 4000},
+      "model": "surrogate:resnet",
+      "max_epochs": 120,
+      "max_gpus": 6,
+      "stop_ratio": 0.7,
+      "seed": 17
+    }"#;
+    let cfg = ChoptConfig::from_json_str(cfg_text)?;
+    let trace = ExternalLoadTrace::fig8(gpus, horizon, 23);
+
+    println!("== Stop-and-Go demo: {gpus}-GPU shared cluster, Fig.8 A-E trace ==");
+    let setup = SimSetup {
+        cluster_gpus: gpus,
+        configs: vec![cfg],
+        submit_times: Vec::new(),
+        agent_slots: 1,
+        trace: Some(trace.clone()),
+        policy: StopAndGoPolicy::default(),
+        master_period: 300.0,
+        horizon,
+        failures: Vec::new(),
+    };
+    let outcome = run_sim(setup, |id| {
+        Box::new(SurrogateTrainer::new(70 + id)) as Box<dyn Trainer>
+    });
+
+    // Zone summary from the master log.
+    let mut table = Table::new(
+        "Fig. 8 zones: mean GPUs by owner",
+        &["zone", "external demand", "external held", "CHOPT held", "utilization"],
+    );
+    for (zone, lo, hi) in [
+        ("A", 0.00, 0.15),
+        ("B", 0.15, 0.30),
+        ("C", 0.30, 0.55),
+        ("D", 0.55, 0.80),
+        ("E", 0.80, 1.00),
+    ] {
+        let rows: Vec<_> = outcome
+            .master_log
+            .iter()
+            .filter(|r| r.t >= lo * horizon && r.t < hi * horizon)
+            .collect();
+        let mean = |f: &dyn Fn(&chopt::coordinator::MasterTickLog) -> f64| {
+            rows.iter().map(|r| f(r)).sum::<f64>() / rows.len().max(1) as f64
+        };
+        table.row(&[
+            zone.to_string(),
+            format!("{:.1}", mean(&|r| r.external_demand as f64)),
+            format!("{:.1}", mean(&|r| r.external_held as f64)),
+            format!("{:.1}", mean(&|r| r.chopt_held as f64)),
+            format!("{:.2}", mean(&|r| r.utilization)),
+        ]);
+    }
+    table.print();
+
+    let agent = &outcome.agents[0];
+    let preempted = agent
+        .events
+        .iter()
+        .filter(|e| matches!(e, AgentEvent::Preempted(..)))
+        .count();
+    let revived = agent
+        .events
+        .iter()
+        .filter(|e| matches!(e, AgentEvent::Revived(_)))
+        .count();
+    println!(
+        "\npreemptions: {preempted}, revivals: {revived}, models created: {}",
+        agent.created
+    );
+    println!(
+        "best model: {:.2}%  |  CHOPT GPU-hours: {:.1}",
+        agent.best().map(|(_, m)| m).unwrap_or(f64::NAN),
+        outcome.gpu_hours()
+    );
+
+    // The Fig. 8 SVG.
+    std::fs::create_dir_all("reports/stop_and_go")?;
+    let svg = plots::utilization_timeline(
+        &outcome.cluster.usage_total.series,
+        &outcome.cluster.usage_external.series,
+        gpus,
+        horizon,
+    );
+    svg.save("reports/stop_and_go/fig8_timeline.svg")?;
+    println!("timeline written to reports/stop_and_go/fig8_timeline.svg");
+    Ok(())
+}

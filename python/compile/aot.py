@@ -1,0 +1,211 @@
+"""AOT pipeline: lower every model variant to HLO text + manifest.json.
+
+Run once at build time (``make artifacts``).  Python never runs on the
+request path: the Rust runtime (rust/src/runtime/) loads these artifacts
+through the PJRT C API and executes them from the coordinator's worker
+threads.
+
+Artifacts (under --out-dir, default ../artifacts):
+
+    <variant>_train.hlo.txt   fwd+bwd+fused-SGD train step
+    <variant>_eval.hlo.txt    loss/metric on a batch
+    <variant>_init.hlo.txt    seeded parameter initialization
+    manifest.json             input/output specs, param layout, data dims
+
+Usage: ``cd python && python -m compile.aot [--out-dir DIR] [--variants a,b]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax.numpy as jnp
+
+from . import model, model_qa
+from .hlo import lower_to_hlo_text, spec_entry
+
+
+def _sds(shape, dtype):
+    import jax
+
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# Per-variant artifact descriptions
+# ---------------------------------------------------------------------------
+
+
+def ic_variant_artifacts(name: str, blocks: int, widen: int):
+    """(artifact_name, fn, example_args, input_names, output_names) tuples."""
+    specs = model.param_specs(blocks, widen)
+    p_args = [_sds(s, F32) for _, s in specs]
+    p_names = [n for n, _ in specs]
+    v_names = [f"v_{n}" for n in p_names]
+    x = _sds((model.BATCH, model.INPUT_DIM), F32)
+    y = _sds((model.BATCH,), I32)
+    scalar_f = _sds((), F32)
+    scalar_i = _sds((), I32)
+
+    train = (
+        f"{name}_train",
+        model.make_train_step(blocks, widen),
+        [x, y, scalar_f, scalar_f, scalar_f, scalar_f, scalar_i] + p_args + p_args,
+        ["x", "y", "lr", "momentum", "re_prob", "re_sh", "seed"] + p_names + v_names,
+        ["loss", "acc"] + p_names + v_names,
+    )
+    ev = (
+        f"{name}_eval",
+        model.make_eval_step(blocks, widen),
+        [x, y] + p_args,
+        ["x", "y"] + p_names,
+        ["loss", "acc"],
+    )
+    init = (
+        f"{name}_init",
+        model.make_init(blocks, widen),
+        [scalar_i],
+        ["seed"],
+        p_names + v_names,
+    )
+    return [train, ev, init]
+
+
+def qa_artifacts():
+    specs = model_qa.param_specs()
+    p_args = [_sds(s, F32) for _, s in specs]
+    p_names = [n for n, _ in specs]
+    v_names = [f"v_{n}" for n in p_names]
+    ctx = _sds((model_qa.QA_BATCH, model_qa.CTX_LEN), I32)
+    qry = _sds((model_qa.QA_BATCH, model_qa.QRY_LEN), I32)
+    span = _sds((model_qa.QA_BATCH,), I32)
+    scalar_f = _sds((), F32)
+    scalar_i = _sds((), I32)
+
+    train = (
+        "qa_bidaf_train",
+        model_qa.make_train_step(),
+        [ctx, qry, span, span, scalar_f, scalar_f, scalar_f, scalar_i]
+        + p_args
+        + p_args,
+        ["ctx", "qry", "y_start", "y_end", "lr", "momentum", "dropout", "seed"]
+        + p_names
+        + v_names,
+        ["loss", "em"] + p_names + v_names,
+    )
+    ev = (
+        "qa_bidaf_eval",
+        model_qa.make_eval_step(),
+        [ctx, qry, span, span] + p_args,
+        ["ctx", "qry", "y_start", "y_end"] + p_names,
+        ["loss", "em"],
+    )
+    init = ("qa_bidaf_init", model_qa.make_init(), [scalar_i], ["seed"], p_names + v_names)
+    return [train, ev, init]
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def build_manifest_entry(artifact_name, example_args, input_names, output_names):
+    return {
+        "file": f"{artifact_name}.hlo.txt",
+        "inputs": [spec_entry(n, a) for n, a in zip(input_names, example_args)],
+        "n_outputs": len(output_names),
+        "output_names": output_names,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument(
+        "--variants",
+        default="all",
+        help="comma-separated artifact-name prefixes, or 'all'",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    jobs = []
+    variants = {}
+    for name, (blocks, widen) in model.IC_VARIANTS.items():
+        jobs += ic_variant_artifacts(name, blocks, widen)
+        variants[name] = {
+            "task": "image_classification",
+            "blocks": blocks,
+            "widen": widen,
+            "logical_depth": 6 * blocks + 2,
+            "param_count": model.param_count(blocks, widen),
+            "train": f"{name}_train",
+            "eval": f"{name}_eval",
+            "init": f"{name}_init",
+            "hyperparams": ["lr", "momentum", "re_prob", "re_sh"],
+            "measure": "test/accuracy",
+        }
+    jobs += qa_artifacts()
+    variants["qa_bidaf"] = {
+        "task": "question_answering",
+        "blocks": 1,
+        "widen": 1,
+        "logical_depth": 1,
+        "param_count": model_qa.param_count(),
+        "train": "qa_bidaf_train",
+        "eval": "qa_bidaf_eval",
+        "init": "qa_bidaf_init",
+        "hyperparams": ["lr", "momentum", "dropout"],
+        "measure": "test/em",
+    }
+
+    if args.variants != "all":
+        keep = tuple(args.variants.split(","))
+        jobs = [j for j in jobs if j[0].startswith(keep)]
+
+    manifest = {
+        "format": 1,
+        "data": {
+            "image": {
+                "height": model.IMG_H,
+                "width": model.IMG_W,
+                "channels": model.IMG_C,
+                "input_dim": model.INPUT_DIM,
+                "classes": model.NUM_CLASSES,
+                "batch": model.BATCH,
+            },
+            "qa": {
+                "vocab": model_qa.VOCAB,
+                "embed_dim": model_qa.EMBED_DIM,
+                "ctx_len": model_qa.CTX_LEN,
+                "qry_len": model_qa.QRY_LEN,
+                "batch": model_qa.QA_BATCH,
+            },
+        },
+        "variants": variants,
+        "artifacts": {},
+    }
+
+    for artifact_name, fn, example_args, input_names, output_names in jobs:
+        path = os.path.join(args.out_dir, f"{artifact_name}.hlo.txt")
+        text = lower_to_hlo_text(fn, example_args)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][artifact_name] = build_manifest_entry(
+            artifact_name, example_args, input_names, output_names
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Shared AOT lowering helper: jitted jax fn -> HLO *text*.
+
+HLO text (not ``HloModuleProto.serialize()``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the runtime's
+XLA (xla_extension 0.5.1, the version the published ``xla`` crate pins)
+rejects (``proto.id() <= INT_MAX``).  The text parser on the Rust side
+reassigns ids, so text round-trips cleanly.  See
+/opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax._src.lib import xla_client as xc
+
+DTYPE_NAMES = {
+    "float32": "f32",
+    "int32": "i32",
+    "uint32": "u32",
+    "bfloat16": "bf16",
+}
+
+
+def lower_to_hlo_text(fn, example_args) -> str:
+    """Lower ``fn(*example_args)`` and return HLO text (tuple root)."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_entry(name: str, aval) -> dict:
+    """Manifest entry for one input/output aval."""
+    dt = str(aval.dtype)
+    return {
+        "name": name,
+        "shape": list(int(d) for d in aval.shape),
+        "dtype": DTYPE_NAMES.get(dt, dt),
+    }

@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels (interpret=True) + pure-jnp oracles.
+
+Public surface used by the L2 models:
+
+* :func:`fused_linear.fused_linear` — act(x@w+b), tiled.
+* :func:`sgd_momentum.sgd_momentum` / ``sgd_momentum_tree`` — fused update.
+* :func:`random_erase.random_erase` / ``sample_rects`` — RE augmentation.
+* :func:`attention.bidaf_attention` — fused bidirectional attention.
+"""
+
+from . import attention, fused_linear, random_erase, ref, sgd_momentum  # noqa: F401

@@ -1,0 +1,95 @@
+"""Pallas kernel: BiDAF bidirectional attention flow (Seo et al., 2016).
+
+The QA hot-spot.  For each batch element the kernel fuses the whole
+attention block in VMEM:
+
+    S    = C Q^T / sqrt(d)                (Lc, Lq) similarity
+    A    = softmax_rows(S)                context-to-query weights
+    c2q  = A Q                            (Lc, d)
+    bvec = softmax(max_cols(S))           (Lc,)  query-to-context weights
+    q2c  = sum_i bvec_i C_i               (d,), broadcast to (Lc, d)
+    G    = [C ; c2q ; C*c2q ; C*q2c]      (Lc, 4d)
+
+One HBM read of C and Q, one HBM write of G — the similarity matrix and
+both softmaxes never leave VMEM (the flash-attention-style fusion, sized
+for BiDAF's short sequences where the whole S tile fits at once).
+
+Grid: one program instance per batch element.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_last(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _bidaf_kernel(c_ref, q_ref, o_ref):
+    c = c_ref[0]  # (Lc, d)
+    q = q_ref[0]  # (Lq, d)
+    d = c.shape[-1]
+    s = jnp.dot(c, q.T, preferred_element_type=jnp.float32) / jnp.sqrt(
+        jnp.asarray(d, jnp.float32)
+    )
+    a = _softmax_last(s)  # (Lc, Lq)
+    c2q = jnp.dot(a, q, preferred_element_type=jnp.float32)  # (Lc, d)
+    b = _softmax_last(jnp.max(s, axis=1)[None, :])[0]  # (Lc,)
+    q2c = jnp.dot(b[None, :], c, preferred_element_type=jnp.float32)  # (1, d)
+    q2c = jnp.broadcast_to(q2c, c.shape)
+    g = jnp.concatenate([c, c2q, c * c2q, c * q2c], axis=-1)
+    o_ref[0] = g.astype(o_ref.dtype)
+
+
+def _bidaf_pallas(c, q):
+    b, lc, d = c.shape
+    b2, lq, d2 = q.shape
+    assert b == b2 and d == d2, (c.shape, q.shape)
+    return pl.pallas_call(
+        _bidaf_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, lc, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, lq, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, lc, 4 * d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, lc, 4 * d), c.dtype),
+        interpret=True,
+    )(c, q)
+
+
+# ``pallas_call`` has no built-in VJP.  The forward runs the fused Pallas
+# kernel; the backward applies the vjp of the mathematically identical
+# pure-jnp oracle (XLA fuses it) — the standard "custom forward kernel,
+# compiler-generated backward" pattern.  Equivalence of the two forwards
+# is pinned by python/tests/test_attention.py, which makes the pairing
+# exact up to float association.
+@jax.custom_vjp
+def bidaf_attention(c, q):
+    """Batched BiDAF attention: c (B, Lc, d), q (B, Lq, d) -> (B, Lc, 4d)."""
+    return _bidaf_pallas(c, q)
+
+
+def _bidaf_fwd(c, q):
+    return _bidaf_pallas(c, q), (c, q)
+
+
+def _bidaf_bwd(res, dg):
+    from .ref import bidaf_attention_batched_ref
+
+    c, q = res
+    _, vjp = jax.vjp(bidaf_attention_batched_ref, c, q)
+    return vjp(dg)
+
+
+bidaf_attention.defvjp(_bidaf_fwd, _bidaf_bwd)
+
+
+def vmem_bytes(lc: int, lq: int, d: int, itemsize: int = 4) -> int:
+    """VMEM working set per program instance: C, Q, S, A, G resident."""
+    return itemsize * (lc * d + lq * d + 2 * lc * lq + lc * 4 * d)

@@ -1,0 +1,215 @@
+"""Pallas kernel: fused ``act(x @ w + b)`` with a Pallas backward pass.
+
+This is the compute hot-spot of the residual-MLP image classifier and the
+BiDAF-lite QA model: every layer is one call of this kernel, so the whole
+L2 ``train_step`` graph is dominated by it.
+
+TPU-shaped design (see DESIGN.md §Hardware-Adaptation):
+
+* The grid tiles the *output* ``(M, N)`` plane; each program instance owns
+  one ``(bm, bn)`` tile, streams the full ``K`` strip of ``x`` and ``w``
+  through VMEM, and accumulates in f32 (MXU-style accumulation even for
+  bf16 inputs).
+* ``bm``/``bn`` default to MXU-friendly multiples (8 sublanes x 128 lanes)
+  clamped to the problem size; non-dividing shapes are zero-padded by the
+  wrapper (zero padding is exact for matmul, and the pad/slice pair fuses
+  into the surrounding HLO).
+* Bias-add + activation happen in-register before the tile is written
+  back, so the fusion never round-trips HBM.
+
+Autodiff: ``pallas_call`` has no built-in VJP, so ``fused_linear`` carries
+a ``jax.custom_vjp``.  The forward kernel emits both the activated output
+``y`` and the pre-activation ``z`` (one extra VMEM->HBM store, saving a
+full recompute matmul in the backward).  The backward runs the activation
+gradient element-wise and two Pallas matmuls (``dx = dz w^T``,
+``dw = x^T dz``); ``db`` is a row-sum.
+
+On this image all kernels run with ``interpret=True`` (CPU PJRT cannot
+execute Mosaic custom-calls); the BlockSpec structure is what a real TPU
+lowering would use.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import ACTIVATIONS, apply_activation
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Whole dim if it already fits, else the MXU-friendly target."""
+    return dim if dim <= target else target
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel: one (bm, bn) tile of y = act(x @ w + b), plus z
+# ---------------------------------------------------------------------------
+
+
+def _fused_linear_kernel(x_ref, w_ref, b_ref, y_ref, z_ref, *, activation: str):
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    z = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    z = z + b_ref[...].astype(jnp.float32)[None, :]
+    z_ref[...] = z.astype(z_ref.dtype)
+    y_ref[...] = apply_activation(z, activation).astype(y_ref.dtype)
+
+
+def _fused_linear_fwd_pallas(x, w, b, activation: str, bm: int, bn: int):
+    m, k = x.shape
+    _, n = w.shape
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    mp, np_ = _round_up(m, bm), _round_up(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, 0))) if mp != m else x
+    wp = jnp.pad(w, ((0, 0), (0, np_ - n))) if np_ != n else w
+    bp = jnp.pad(b, (0, np_ - n)) if np_ != n else b
+
+    y, z = pl.pallas_call(
+        functools.partial(_fused_linear_kernel, activation=activation),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, np_), x.dtype),
+            jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        ],
+        interpret=True,
+    )(xp, wp, bp)
+    return y[:m, :n], z[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Plain tiled matmul kernel (used by the backward pass)
+# ---------------------------------------------------------------------------
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+def matmul(a, b, bm: int = 64, bn: int = 128):
+    """Tiled Pallas matmul: (M, K) @ (K, N) -> (M, N) f32 accumulation."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    mp, np_ = _round_up(m, bm), _round_up(n, bn)
+    ap = jnp.pad(a, ((0, mp - m), (0, 0))) if mp != m else a
+    bp = jnp.pad(b, ((0, 0), (0, np_ - n))) if np_ != n else b
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Activation gradients (element-wise, fuse into surrounding HLO)
+# ---------------------------------------------------------------------------
+
+
+def activation_grad(dy, z, activation: str):
+    """dz = dy * act'(z)."""
+    if activation == "linear":
+        return dy
+    if activation == "relu":
+        return dy * (z > 0.0).astype(dy.dtype)
+    if activation == "tanh":
+        t = jnp.tanh(z)
+        return dy * (1.0 - t * t)
+    if activation == "sigmoid":
+        s = 1.0 / (1.0 + jnp.exp(-z))
+        return dy * s * (1.0 - s)
+    if activation == "gelu":
+        c = jnp.sqrt(2.0 / jnp.pi).astype(z.dtype)
+        u = c * (z + 0.044715 * z**3)
+        t = jnp.tanh(u)
+        du = c * (1.0 + 3 * 0.044715 * z * z)
+        return dy * (0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * du)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrapper
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def fused_linear(x, w, b, activation: str = "linear", bm: int = 64, bn: int = 128):
+    """``act(x @ w + b)`` via a tiled Pallas kernel (differentiable).
+
+    x: (M, K); w: (K, N); b: (N,).  Returns (M, N) in ``x.dtype``.
+    """
+    if activation not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    y, _ = _fused_linear_fwd_pallas(x, w, b, activation, bm, bn)
+    return y
+
+
+def _fl_fwd(x, w, b, activation, bm, bn):
+    y, z = _fused_linear_fwd_pallas(x, w, b, activation, bm, bn)
+    return y, (x, w, z)
+
+
+def _fl_bwd(activation, bm, bn, res, dy):
+    x, w, z = res
+    dz = activation_grad(dy.astype(jnp.float32), z, activation)
+    dx = matmul(dz, w.T.astype(jnp.float32), bm, bn).astype(x.dtype)
+    dw = matmul(x.T.astype(jnp.float32), dz, bm, bn).astype(w.dtype)
+    db = jnp.sum(dz, axis=0).astype(w.dtype)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fl_fwd, _fl_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Perf models (used by EXPERIMENTS.md §Perf / DESIGN.md)
+# ---------------------------------------------------------------------------
+
+
+def vmem_bytes(m: int, k: int, n: int, bm: int = 64, bn: int = 128, itemsize: int = 4):
+    """Estimated VMEM working set per program instance.
+
+    x tile (bm, K) + w strip (K, bn) + bias (bn,) + y and z tiles
+    (bm, bn each), all resident simultaneously; double-buffered inputs
+    would double the first two terms.
+    """
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    return itemsize * (bm * k + k * bn + bn + 2 * bm * bn)
+
+
+def mxu_utilization_estimate(m: int, k: int, n: int, bm: int = 64, bn: int = 128):
+    """Fraction of the 128x128 MXU a tile keeps busy (padding tax model)."""
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    return min(bm / 128.0, 1.0) * min(bn / 128.0, 1.0) * min(k / 128.0, 1.0)

@@ -1,0 +1,84 @@
+"""Pallas kernel: batched Random Erasing (Zhong et al., 2017).
+
+The data-augmentation hot-spot of the "+RE" model variants (Tables 2-3 of
+the paper).  For each image in the batch, a rectangle ``[y0:y0+h, x0:x0+w]``
+is overwritten with a fill value iff that sample's ``apply`` flag is set.
+
+Rectangle geometry is *data*, not shape: the caller samples ``rects`` with
+``jax.random`` inside the jitted train step (so the erase probability
+``re_prob`` and scale ``re_sh`` stay runtime-tunable hyperparameters) and
+the kernel builds the mask from 2-D iotas compared against the per-sample
+bounds — no dynamic shapes, TPU-vectorizable, one pass over HBM.
+
+Grid: one program instance per image; the (H, W, C) block plus the (1, 4)
+rect row live in VMEM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _erase_kernel(img_ref, rect_ref, apply_ref, fill_ref, o_ref):
+    img = img_ref[...]  # (1, H, W, C)
+    _, h, w, _ = img.shape
+    y0 = rect_ref[0, 0]
+    x0 = rect_ref[0, 1]
+    rh = rect_ref[0, 2]
+    rw = rect_ref[0, 3]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (1, h, w, 1), 1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (1, h, w, 1), 2)
+    inside = (rows >= y0) & (rows < y0 + rh) & (cols >= x0) & (cols < x0 + rw)
+    inside = inside & (apply_ref[0] > 0.5)
+    o_ref[...] = jnp.where(inside, fill_ref[0].astype(img.dtype), img)
+
+
+@jax.jit
+def random_erase(images, rects, apply_mask, fill):
+    """Erase one rectangle per image.
+
+    images: (B, H, W, C) f32; rects: (B, 4) i32 [y0, x0, h, w];
+    apply_mask: (B,) f32 in {0,1}; fill: scalar f32.
+    """
+    b, h, w, c = images.shape
+    assert rects.shape == (b, 4), rects.shape
+    assert apply_mask.shape == (b,), apply_mask.shape
+    fill1 = jnp.reshape(jnp.asarray(fill, images.dtype), (1,))
+    return pl.pallas_call(
+        _erase_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, 4), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(images.shape, images.dtype),
+        interpret=True,
+    )(images, rects, apply_mask, fill1)
+
+
+def sample_rects(key, batch, height, width, re_sh):
+    """Sample per-image erase rectangles inside the jitted train step.
+
+    ``re_sh`` (the paper's ``sh`` hyperparameter) scales the maximum
+    erased side length as a fraction of the image side.  Traced-scalar
+    friendly: all shapes are static, only values depend on ``re_sh``.
+    """
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    max_h = jnp.clip(re_sh * height, 1.0, float(height))
+    max_w = jnp.clip(re_sh * width, 1.0, float(width))
+    rh = jnp.floor(jax.random.uniform(k1, (batch,)) * max_h).astype(jnp.int32) + 1
+    rw = jnp.floor(jax.random.uniform(k2, (batch,)) * max_w).astype(jnp.int32) + 1
+    rh = jnp.minimum(rh, height)
+    rw = jnp.minimum(rw, width)
+    y0 = jnp.floor(
+        jax.random.uniform(k3, (batch,)) * (height - rh).astype(jnp.float32)
+    ).astype(jnp.int32)
+    x0 = jnp.floor(
+        jax.random.uniform(k4, (batch,)) * (width - rw).astype(jnp.float32)
+    ).astype(jnp.int32)
+    return jnp.stack([y0, x0, rh, rw], axis=1)

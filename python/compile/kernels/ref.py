@@ -1,0 +1,111 @@
+"""Pure-jnp correctness oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` function is the mathematical definition of the matching
+kernel; pytest (``python/tests/``) sweeps shapes/dtypes with hypothesis and
+asserts ``assert_allclose`` between kernel and oracle.  The oracles are
+also used by the L2 model tests as an independent forward-pass check.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# fused_linear
+# ---------------------------------------------------------------------------
+
+ACTIVATIONS = ("linear", "relu", "tanh", "sigmoid", "gelu")
+
+
+def apply_activation(h, activation: str):
+    if activation == "linear":
+        return h
+    if activation == "relu":
+        return jnp.maximum(h, 0.0)
+    if activation == "tanh":
+        return jnp.tanh(h)
+    if activation == "sigmoid":
+        return 1.0 / (1.0 + jnp.exp(-h))
+    if activation == "gelu":
+        # tanh approximation (matches the kernel).
+        c = jnp.sqrt(2.0 / jnp.pi).astype(h.dtype)
+        return 0.5 * h * (1.0 + jnp.tanh(c * (h + 0.044715 * h**3)))
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def fused_linear_ref(x, w, b, activation: str = "linear"):
+    """act(x @ w + b) with f32 accumulation."""
+    acc = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    acc = acc + b.astype(jnp.float32)[None, :]
+    return apply_activation(acc, activation).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sgd_momentum
+# ---------------------------------------------------------------------------
+
+
+def sgd_momentum_ref(param, grad, velocity, lr, momentum):
+    """Classic momentum: v' = mu*v + g ; p' = p - lr*v'. Returns (p', v')."""
+    v = momentum * velocity + grad
+    p = param - lr * v
+    return p, v
+
+
+# ---------------------------------------------------------------------------
+# random_erase
+# ---------------------------------------------------------------------------
+
+
+def random_erase_ref(images, rects, apply_mask, fill):
+    """Erase (set to ``fill``) a rectangle per image.
+
+    images: (B, H, W, C) f32
+    rects:  (B, 4) i32 rows of [y0, x0, h, w]
+    apply_mask: (B,) f32 in {0, 1} — whether to erase this sample
+    fill: scalar f32
+    """
+    _, h, w, _ = images.shape
+    rows = jnp.arange(h)[None, :, None]  # (1, H, 1)
+    cols = jnp.arange(w)[None, None, :]  # (1, 1, W)
+    y0 = rects[:, 0][:, None, None]
+    x0 = rects[:, 1][:, None, None]
+    rh = rects[:, 2][:, None, None]
+    rw = rects[:, 3][:, None, None]
+    inside = (rows >= y0) & (rows < y0 + rh) & (cols >= x0) & (cols < x0 + rw)
+    inside = inside & (apply_mask[:, None, None] > 0.5)
+    return jnp.where(inside[..., None], jnp.asarray(fill, images.dtype), images)
+
+
+# ---------------------------------------------------------------------------
+# bidaf attention
+# ---------------------------------------------------------------------------
+
+
+def softmax_ref(x, axis=-1):
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def bidaf_attention_ref(c, q):
+    """Bidirectional attention flow (single example).
+
+    c: (Lc, d) context encodings; q: (Lq, d) query encodings.
+    Returns G: (Lc, 4d) = [c ; c2q ; c*c2q ; c*q2c] (Seo et al., 2016).
+    """
+    d = c.shape[-1]
+    s = jnp.matmul(c, q.T) / jnp.sqrt(jnp.asarray(d, jnp.float32))  # (Lc, Lq)
+    a = softmax_ref(s, axis=1)  # context-to-query
+    c2q = jnp.matmul(a, q)  # (Lc, d)
+    b = softmax_ref(jnp.max(s, axis=1), axis=0)  # (Lc,) query-to-context
+    q2c = jnp.sum(b[:, None] * c, axis=0)[None, :]  # (1, d)
+    q2c = jnp.broadcast_to(q2c, c.shape)
+    return jnp.concatenate([c, c2q, c * c2q, c * q2c], axis=-1)
+
+
+def bidaf_attention_batched_ref(c, q):
+    """Batched oracle: c (B, Lc, d), q (B, Lq, d) -> (B, Lc, 4d)."""
+    import jax
+
+    return jax.vmap(bidaf_attention_ref)(c, q)

@@ -1,0 +1,92 @@
+"""Pallas kernel: fused SGD-with-momentum parameter update.
+
+Computes, element-wise over a flat parameter vector::
+
+    v' = momentum * v + g
+    p' = p - lr * v'
+
+in a single pass, so each parameter/velocity element is read once and
+written once per optimizer step (three HBM reads + two writes per
+element, vs five reads + two writes for the unfused jnp expression).
+
+The scalars ``lr`` and ``momentum`` are runtime inputs — CHOPT tunes them —
+passed as (1,)-shaped arrays pinned to block (0,) of every program
+instance (the SMEM-scalar idiom; interpret mode has no SMEM but keeps the
+structure).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sgd_kernel(p_ref, g_ref, v_ref, lr_ref, mu_ref, po_ref, vo_ref):
+    lr = lr_ref[0]
+    mu = mu_ref[0]
+    v = mu * v_ref[...] + g_ref[...]
+    vo_ref[...] = v
+    po_ref[...] = p_ref[...] - lr * v
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def sgd_momentum_flat(param, grad, velocity, lr, momentum, block: int = 1024):
+    """Fused update over 1-D arrays. Returns (new_param, new_velocity)."""
+    (n,) = param.shape
+    assert grad.shape == (n,) and velocity.shape == (n,)
+    blk = min(block, n) if n > 0 else 1
+    np_ = _round_up(max(n, 1), blk)
+    pad = np_ - n
+
+    def padded(a):
+        return jnp.pad(a, (0, pad)) if pad else a
+
+    lr1 = jnp.reshape(jnp.asarray(lr, param.dtype), (1,))
+    mu1 = jnp.reshape(jnp.asarray(momentum, param.dtype), (1,))
+    p2, v2 = pl.pallas_call(
+        _sgd_kernel,
+        grid=(np_ // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), param.dtype),
+            jax.ShapeDtypeStruct((np_,), param.dtype),
+        ],
+        interpret=True,
+    )(padded(param), padded(grad), padded(velocity), lr1, mu1)
+    return p2[:n], v2[:n]
+
+
+def sgd_momentum(param, grad, velocity, lr, momentum):
+    """Shape-polymorphic wrapper: flattens, updates, restores shape."""
+    shape = param.shape
+    p, v = sgd_momentum_flat(
+        param.reshape(-1), grad.reshape(-1), velocity.reshape(-1), lr, momentum
+    )
+    return p.reshape(shape), v.reshape(shape)
+
+
+def sgd_momentum_tree(params, grads, velocities, lr, momentum):
+    """Apply the fused update across a list of parameter arrays."""
+    new_p, new_v = [], []
+    for p, g, v in zip(params, grads, velocities):
+        p2, v2 = sgd_momentum(p, g, v, lr, momentum)
+        new_p.append(p2)
+        new_v.append(v2)
+    return new_p, new_v

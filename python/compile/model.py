@@ -1,0 +1,197 @@
+"""Layer-2: residual-MLP image classifier (the "ResNet/WRN-like" family).
+
+The paper tunes ResNet / Wide-ResNet (+ Random Erasing) on CIFAR-100.  We
+reproduce the *tuning problem* with a residual MLP over synthetic
+CIFAR-like images: ``depth`` (number of residual blocks) and ``widen``
+(hidden-width factor) are architecture hyperparameters selecting an AOT
+variant, while ``lr``, ``momentum``, ``re_prob`` (erase probability) and
+``re_sh`` (erase scale) are *runtime* scalar inputs of the compiled
+``train_step`` — exactly the hyperparameters of the paper's Table 1 — so
+CHOPT (Rust, L3) can tune them without recompilation.
+
+Everything hot goes through the L1 Pallas kernels: ``fused_linear`` for
+all layers, ``random_erase`` for augmentation, ``sgd_momentum`` for the
+fused optimizer update.  fwd + bwd + update are one jitted function per
+variant, AOT-lowered by ``aot.py`` to a single HLO module.
+
+Parameter interchange with Rust is a *flat list* of arrays in the order
+given by :func:`param_specs`; ``manifest.json`` records names/shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_linear import fused_linear
+from .kernels.random_erase import random_erase, sample_rects
+from .kernels.sgd_momentum import sgd_momentum_tree
+
+# ---------------------------------------------------------------------------
+# Problem dimensions (shared with rust via manifest.json "data" section)
+# ---------------------------------------------------------------------------
+
+IMG_H = 8
+IMG_W = 8
+IMG_C = 3
+INPUT_DIM = IMG_H * IMG_W * IMG_C  # 192
+NUM_CLASSES = 100
+BATCH = 64
+BASE_HIDDEN = 64
+
+
+def hidden_dim(widen: int) -> int:
+    return BASE_HIDDEN * widen
+
+
+# ---------------------------------------------------------------------------
+# Parameter layout
+# ---------------------------------------------------------------------------
+
+
+def param_specs(blocks: int, widen: int):
+    """Flat, ordered (name, shape) list — the Rust interchange contract."""
+    h = hidden_dim(widen)
+    specs = [("w_in", (INPUT_DIM, h)), ("b_in", (h,))]
+    for i in range(blocks):
+        specs += [
+            (f"blk{i}_w1", (h, h)),
+            (f"blk{i}_b1", (h,)),
+            (f"blk{i}_w2", (h, h)),
+            (f"blk{i}_b2", (h,)),
+        ]
+    specs += [("w_out", (h, NUM_CLASSES)), ("b_out", (NUM_CLASSES,))]
+    return specs
+
+
+def param_count(blocks: int, widen: int) -> int:
+    """Total trainable parameters (Table 3's constraint metric)."""
+    return sum(int(jnp.prod(jnp.asarray(s))) for _, s in param_specs(blocks, widen))
+
+
+def make_init(blocks: int, widen: int):
+    """init(seed) -> (*params, *velocities). He-normal weights, zero biases."""
+    specs = param_specs(blocks, widen)
+
+    def init(seed):
+        key = jax.random.PRNGKey(seed)
+        params = []
+        for name, shape in specs:
+            key, sub = jax.random.split(key)
+            if len(shape) == 2:
+                fan_in = shape[0]
+                w = jax.random.normal(sub, shape, jnp.float32) * jnp.sqrt(
+                    2.0 / fan_in
+                )
+                params.append(w)
+            else:
+                params.append(jnp.zeros(shape, jnp.float32))
+        velocities = [jnp.zeros(s, jnp.float32) for _, s in specs]
+        return tuple(params) + tuple(velocities)
+
+    return init
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+
+def forward(params, x, blocks: int):
+    """Pre-activation residual MLP. x: (B, INPUT_DIM) -> logits (B, C)."""
+    idx = 0
+    h = fused_linear(x, params[idx], params[idx + 1], "relu")
+    idx += 2
+    for _ in range(blocks):
+        r = fused_linear(h, params[idx], params[idx + 1], "relu")
+        r = fused_linear(r, params[idx + 2], params[idx + 3], "linear")
+        h = jnp.maximum(h + r, 0.0)
+        idx += 4
+    return fused_linear(h, params[idx], params[idx + 1], "linear")
+
+
+def cross_entropy(logits, labels):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def loss_and_acc(params, x, y, blocks: int):
+    logits = forward(params, x, blocks)
+    loss = cross_entropy(logits, y)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss, acc
+
+
+# ---------------------------------------------------------------------------
+# Augmentation
+# ---------------------------------------------------------------------------
+
+
+def apply_random_erase(x, re_prob, re_sh, key):
+    """Random Erasing on flattened images; re_prob == 0 is the identity."""
+    b = x.shape[0]
+    imgs = x.reshape(b, IMG_H, IMG_W, IMG_C)
+    k_rect, k_apply = jax.random.split(key)
+    rects = sample_rects(k_rect, b, IMG_H, IMG_W, re_sh)
+    apply_mask = jax.random.bernoulli(k_apply, re_prob, (b,)).astype(jnp.float32)
+    erased = random_erase(imgs, rects, apply_mask, 0.0)
+    return erased.reshape(b, INPUT_DIM)
+
+
+# ---------------------------------------------------------------------------
+# Train / eval steps (the AOT entry points)
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(blocks: int, widen: int):
+    """train_step(x, y, lr, momentum, re_prob, re_sh, seed, *state).
+
+    ``state`` is ``(*params, *velocities)`` per :func:`param_specs`.
+    Returns ``(loss, acc, *new_state)``.
+    """
+    n = len(param_specs(blocks, widen))
+
+    def train_step(x, y, lr, momentum, re_prob, re_sh, seed, *state):
+        assert len(state) == 2 * n, f"expected {2*n} state arrays, got {len(state)}"
+        params = list(state[:n])
+        velocities = list(state[n:])
+        key = jax.random.PRNGKey(seed)
+        x_aug = apply_random_erase(x, re_prob, re_sh, key)
+
+        def loss_fn(ps):
+            return loss_and_acc(ps, x_aug, y, blocks)
+
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params, new_velocities = sgd_momentum_tree(
+            params, grads, velocities, lr, momentum
+        )
+        return (loss, acc) + tuple(new_params) + tuple(new_velocities)
+
+    return train_step
+
+
+def make_eval_step(blocks: int, widen: int):
+    """eval_step(x, y, *params) -> (loss, acc) — no augmentation, no update."""
+    n = len(param_specs(blocks, widen))
+
+    def eval_step(x, y, *params):
+        assert len(params) == n
+        loss, acc = loss_and_acc(list(params), x, y, blocks)
+        return loss, acc
+
+    return eval_step
+
+
+# ---------------------------------------------------------------------------
+# Variant registry (what aot.py lowers)
+# ---------------------------------------------------------------------------
+
+# name -> (blocks, widen). Depth/widen mirror the paper's ResNet vs WRN
+# families; the "+RE" behaviour is runtime (re_prob > 0), not a variant.
+IC_VARIANTS = {
+    "ic_d1_w1": (1, 1),
+    "ic_d2_w1": (2, 1),
+    "ic_d3_w1": (3, 1),
+    "ic_d2_w2": (2, 2),
+}

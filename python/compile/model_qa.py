@@ -1,0 +1,167 @@
+"""Layer-2: BiDAF-lite question-answering model (SQuAD-like task).
+
+Reproduces the paper's QA tuning problem (BiDAF on SQuAD 1.1) at toy
+scale: embedding -> token-wise tanh encoder (fused_linear kernel) ->
+bidirectional attention flow (Pallas attention kernel) -> modeling layer
+-> answer-span start/end logits over the context.
+
+Runtime-tunable hyperparameters (scalar inputs of the AOT ``train_step``):
+``lr``, ``momentum``, ``dropout`` (embedding dropout rate).  Metric is
+exact-match (start and end both correct), the "test/em"-style measure the
+paper optimizes for BiDAF.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import bidaf_attention
+from .kernels.fused_linear import fused_linear
+from .kernels.sgd_momentum import sgd_momentum_tree
+
+# ---------------------------------------------------------------------------
+# Problem dimensions (shared with rust via manifest.json)
+# ---------------------------------------------------------------------------
+
+VOCAB = 256
+EMBED_DIM = 32
+CTX_LEN = 32
+QRY_LEN = 16
+QA_BATCH = 32
+
+
+def param_specs():
+    d = EMBED_DIM
+    return [
+        ("embed", (VOCAB, d)),
+        ("w_enc", (d, d)),
+        ("b_enc", (d,)),
+        ("w_model", (4 * d, d)),
+        ("b_model", (d,)),
+        ("w_start", (d, 1)),
+        ("b_start", (1,)),
+        ("w_end", (d, 1)),
+        ("b_end", (1,)),
+    ]
+
+
+def param_count() -> int:
+    return sum(int(jnp.prod(jnp.asarray(s))) for _, s in param_specs())
+
+
+def make_init():
+    specs = param_specs()
+
+    def init(seed):
+        key = jax.random.PRNGKey(seed)
+        params = []
+        for name, shape in specs:
+            key, sub = jax.random.split(key)
+            if name == "embed":
+                # Unit-scale embeddings: token-identity matches must
+                # produce O(1) attention logits from step 0, otherwise the
+                # tanh encoder squashes the similarity signal and span
+                # learning stalls.
+                params.append(jax.random.normal(sub, shape, jnp.float32))
+            elif len(shape) == 2:
+                scale = jnp.sqrt(1.0 / shape[0])
+                params.append(jax.random.normal(sub, shape, jnp.float32) * scale)
+            else:
+                params.append(jnp.zeros(shape, jnp.float32))
+        velocities = [jnp.zeros(s, jnp.float32) for _, s in specs]
+        return tuple(params) + tuple(velocities)
+
+    return init
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _encode(tokens, embed, w_enc, b_enc, dropout, key):
+    """Embed + dropout + token-wise tanh projection via the L1 kernel."""
+    b, length = tokens.shape
+    d = embed.shape[1]
+    emb = jnp.take(embed, tokens, axis=0)  # (B, L, d)
+    keep = 1.0 - dropout
+    mask = jax.random.bernoulli(key, keep, emb.shape).astype(emb.dtype)
+    # Inverted dropout; dropout==0 -> identity (keep==1, mask==1).
+    emb = emb * mask / jnp.maximum(keep, 1e-6)
+    enc = fused_linear(emb.reshape(b * length, d), w_enc, b_enc, "tanh")
+    return enc.reshape(b, length, d)
+
+
+def forward(params, ctx, qry, dropout, key):
+    """Returns (start_logits, end_logits), each (B, CTX_LEN)."""
+    embed, w_enc, b_enc, w_model, b_model, w_start, b_start, w_end, b_end = params
+    k_c, k_q = jax.random.split(key)
+    c_enc = _encode(ctx, embed, w_enc, b_enc, dropout, k_c)
+    q_enc = _encode(qry, embed, w_enc, b_enc, dropout, k_q)
+    g = bidaf_attention(c_enc, q_enc)  # (B, Lc, 4d)
+    b, lc, gd = g.shape
+    m = fused_linear(g.reshape(b * lc, gd), w_model, b_model, "tanh")
+    start = fused_linear(m, w_start, b_start, "linear").reshape(b, lc)
+    end = fused_linear(m, w_end, b_end, "linear").reshape(b, lc)
+    return start, end
+
+
+def cross_entropy(logits, labels):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def loss_and_em(params, ctx, qry, y_start, y_end, dropout, key):
+    start, end = forward(params, ctx, qry, dropout, key)
+    loss = cross_entropy(start, y_start) + cross_entropy(end, y_end)
+    em = jnp.mean(
+        (
+            (jnp.argmax(start, axis=-1) == y_start)
+            & (jnp.argmax(end, axis=-1) == y_end)
+        ).astype(jnp.float32)
+    )
+    return loss, em
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points
+# ---------------------------------------------------------------------------
+
+N_PARAMS = len(param_specs())
+
+
+def make_train_step():
+    """train_step(ctx, qry, y_start, y_end, lr, momentum, dropout, seed, *state)."""
+
+    def train_step(ctx, qry, y_start, y_end, lr, momentum, dropout, seed, *state):
+        assert len(state) == 2 * N_PARAMS
+        params = list(state[:N_PARAMS])
+        velocities = list(state[N_PARAMS:])
+        key = jax.random.PRNGKey(seed)
+
+        def loss_fn(ps):
+            return loss_and_em(ps, ctx, qry, y_start, y_end, dropout, key)
+
+        (loss, em), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params, new_velocities = sgd_momentum_tree(
+            params, grads, velocities, lr, momentum
+        )
+        return (loss, em) + tuple(new_params) + tuple(new_velocities)
+
+    return train_step
+
+
+def make_eval_step():
+    """eval_step(ctx, qry, y_start, y_end, *params) -> (loss, em)."""
+
+    def eval_step(ctx, qry, y_start, y_end, *params):
+        assert len(params) == N_PARAMS
+        key = jax.random.PRNGKey(0)
+        loss, em = loss_and_em(
+            list(params), ctx, qry, y_start, y_end, jnp.float32(0.0), key
+        )
+        return loss, em
+
+    return eval_step

@@ -1,0 +1,99 @@
+"""AOT pipeline: HLO text lowering + manifest consistency.
+
+Fast checks lower a tiny function; the manifest checks validate the real
+artifacts directory when it exists (after `make artifacts`).
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model, model_qa
+from compile.hlo import lower_to_hlo_text, spec_entry
+
+
+def test_lower_tiny_function_to_hlo_text():
+    import jax
+
+    def fn(a, b):
+        return (jnp.matmul(a, b) + 1.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = lower_to_hlo_text(fn, [spec, spec])
+    assert "HloModule" in text
+    assert "f32[2,2]" in text
+    # Tuple root (return_tuple=True).
+    assert "tuple" in text.lower()
+
+
+def test_spec_entry_dtype_names():
+    import jax
+
+    e = spec_entry("x", jax.ShapeDtypeStruct((4, 3), jnp.float32))
+    assert e == {"name": "x", "shape": [4, 3], "dtype": "f32"}
+    e2 = spec_entry("y", jax.ShapeDtypeStruct((), jnp.int32))
+    assert e2["dtype"] == "i32" and e2["shape"] == []
+
+
+def test_ic_artifact_descriptions_consistent():
+    arts = aot.ic_variant_artifacts("ic_d1_w1", 1, 1)
+    names = [a[0] for a in arts]
+    assert names == ["ic_d1_w1_train", "ic_d1_w1_eval", "ic_d1_w1_init"]
+    train = arts[0]
+    _, fn, example_args, input_names, output_names = train
+    assert len(example_args) == len(input_names)
+    n_params = len(model.param_specs(1, 1))
+    assert len(input_names) == 7 + 2 * n_params
+    assert len(output_names) == 2 + 2 * n_params
+    assert input_names[:7] == ["x", "y", "lr", "momentum", "re_prob", "re_sh", "seed"]
+
+
+def test_qa_artifact_descriptions_consistent():
+    arts = aot.qa_artifacts()
+    train = arts[0]
+    _, _, example_args, input_names, output_names = train
+    assert len(example_args) == len(input_names)
+    assert len(output_names) == 2 + 2 * model_qa.N_PARAMS
+    assert input_names[4] == "lr"
+
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_manifest_matches_models():
+    with open(os.path.join(ART_DIR, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["format"] == 1
+    assert m["data"]["image"]["input_dim"] == model.INPUT_DIM
+    assert m["data"]["qa"]["vocab"] == model_qa.VOCAB
+    for name, v in m["variants"].items():
+        for key in ["train", "eval", "init"]:
+            art = m["artifacts"][v[key]]
+            path = os.path.join(ART_DIR, art["file"])
+            assert os.path.exists(path), f"{name}: missing {path}"
+            with open(path) as f:
+                head = f.read(200)
+            assert "HloModule" in head
+        if v["task"] == "image_classification":
+            blocks, widen = v["blocks"], v["widen"]
+            assert v["param_count"] == model.param_count(blocks, widen)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+    reason="artifacts not built",
+)
+def test_built_train_artifact_io_counts():
+    with open(os.path.join(ART_DIR, "manifest.json")) as f:
+        m = json.load(f)
+    a = m["artifacts"]["ic_d2_w1_train"]
+    n_params = len(model.param_specs(2, 1))
+    assert len(a["inputs"]) == 7 + 2 * n_params
+    assert a["n_outputs"] == 2 + 2 * n_params
+    assert a["inputs"][0]["shape"] == [model.BATCH, model.INPUT_DIM]

@@ -1,0 +1,137 @@
+"""L1 correctness: fused_linear Pallas kernel vs pure-jnp oracle.
+
+Hypothesis sweeps shapes/activations/dtypes; explicit cases pin the exact
+shapes the L2 models use (including non-dividing N like NUM_CLASSES=100).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.fused_linear import (
+    activation_grad,
+    fused_linear,
+    matmul,
+    mxu_utilization_estimate,
+    vmem_bytes,
+)
+from compile.kernels.ref import ACTIVATIONS, fused_linear_ref
+
+
+def _mk(m, k, n, seed=0, dtype=jnp.float32):
+    rs = np.random.RandomState(seed)
+    x = jnp.asarray(rs.randn(m, k), dtype)
+    w = jnp.asarray(rs.randn(k, n) * 0.1, dtype)
+    b = jnp.asarray(rs.randn(n) * 0.1, dtype)
+    return x, w, b
+
+
+@pytest.mark.parametrize("activation", ACTIVATIONS)
+def test_matches_ref_model_shapes(activation):
+    # The exact layer shapes of the IC model: (64,192)x(192,64), (64,64)x(64,64),
+    # and the non-dividing classifier head (64,64)x(64,100).
+    for m, k, n in [(64, 192, 64), (64, 64, 64), (64, 64, 100), (32, 128, 32)]:
+        x, w, b = _mk(m, k, n, seed=m + n)
+        got = fused_linear(x, w, b, activation)
+        want = fused_linear_ref(x, w, b, activation)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 97),
+    k=st.integers(1, 70),
+    n=st.integers(1, 150),
+    act=st.sampled_from(ACTIVATIONS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_hypothesis(m, k, n, act, seed):
+    x, w, b = _mk(m, k, n, seed=seed % 1000)
+    got = fused_linear(x, w, b, act)
+    want = fused_linear_ref(x, w, b, act)
+    assert got.shape == (m, n)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 1000),
+)
+def test_matmul_helper(m, k, n, seed):
+    rs = np.random.RandomState(seed)
+    a = jnp.asarray(rs.randn(m, k), jnp.float32)
+    b = jnp.asarray(rs.randn(k, n), jnp.float32)
+    assert_allclose(
+        np.asarray(matmul(a, b)), np.asarray(a) @ np.asarray(b), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_bfloat16_inputs_accumulate_f32():
+    x, w, b = _mk(16, 32, 48, dtype=jnp.bfloat16)
+    got = fused_linear(x, w, b, "relu")
+    assert got.dtype == jnp.bfloat16
+    want = fused_linear_ref(x, w, b, "relu")
+    assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=2e-2, atol=2e-2
+    )
+
+
+@pytest.mark.parametrize("activation", ACTIVATIONS)
+def test_gradients_match_ref(activation):
+    x, w, b = _mk(16, 24, 20, seed=3)
+
+    def f_kernel(x, w, b):
+        return jnp.sum(fused_linear(x, w, b, activation) ** 2)
+
+    def f_ref(x, w, b):
+        return jnp.sum(fused_linear_ref(x, w, b, activation) ** 2)
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(gk, gr):
+        assert_allclose(np.asarray(a), np.asarray(e), rtol=2e-4, atol=2e-4)
+
+
+def test_gradient_numerical():
+    # Finite differences on a tiny problem, independent of jax autodiff.
+    x, w, b = _mk(4, 5, 3, seed=9)
+
+    def f(wflat):
+        return float(
+            jnp.sum(fused_linear(x, wflat.reshape(5, 3), b, "tanh") ** 2)
+        )
+
+    w0 = np.asarray(w).reshape(-1)
+    g = np.asarray(
+        jax.grad(lambda w_: jnp.sum(fused_linear(x, w_, b, "tanh") ** 2))(w)
+    ).reshape(-1)
+    eps = 1e-3
+    for idx in [0, 3, 7, 14]:
+        e = np.zeros_like(w0)
+        e[idx] = eps
+        num = (f(w0 + e) - f(w0 - e)) / (2 * eps)
+        assert abs(num - g[idx]) < 5e-2 * max(1.0, abs(num))
+
+
+def test_activation_grad_unknown_raises():
+    with pytest.raises(ValueError):
+        activation_grad(jnp.ones((2, 2)), jnp.ones((2, 2)), "swish")
+
+
+def test_unknown_activation_raises():
+    x, w, b = _mk(4, 4, 4)
+    with pytest.raises(ValueError):
+        fused_linear(x, w, b, "swish")
+
+
+def test_perf_models_monotone():
+    # Structural sanity of the perf estimators used in EXPERIMENTS.md §Perf.
+    assert vmem_bytes(64, 192, 64) < vmem_bytes(128, 192, 128)
+    assert mxu_utilization_estimate(128, 128, 128, bm=128, bn=128) == 1.0
+    assert mxu_utilization_estimate(8, 128, 128) < 0.1

@@ -1,0 +1,118 @@
+"""L2: residual-MLP image classifier — shapes, learning, hparam effects."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+
+
+def data(seed=0):
+    rs = np.random.RandomState(seed)
+    x = jnp.asarray(rs.randn(model.BATCH, model.INPUT_DIM), jnp.float32)
+    y = jnp.asarray(rs.randint(0, model.NUM_CLASSES, model.BATCH), jnp.int32)
+    return x, y
+
+
+@pytest.mark.parametrize("blocks,widen", [(1, 1), (2, 1), (2, 2)])
+def test_param_specs_and_init_shapes(blocks, widen):
+    specs = model.param_specs(blocks, widen)
+    state = model.make_init(blocks, widen)(0)
+    assert len(state) == 2 * len(specs)
+    for (name, shape), arr in zip(specs, state[: len(specs)]):
+        assert arr.shape == shape, name
+    # Velocities zero-initialized.
+    for arr in state[len(specs) :]:
+        assert float(jnp.abs(arr).max()) == 0.0
+    # Param count formula matches actual sizes.
+    total = sum(int(np.prod(s)) for _, s in specs)
+    assert model.param_count(blocks, widen) == total
+
+
+def test_forward_shapes_and_determinism():
+    state = model.make_init(1, 1)(3)
+    params = list(state[: len(model.param_specs(1, 1))])
+    x, _ = data()
+    logits = model.forward(params, x, 1)
+    assert logits.shape == (model.BATCH, model.NUM_CLASSES)
+    logits2 = model.forward(params, x, 1)
+    assert_allclose(np.asarray(logits), np.asarray(logits2))
+
+
+def test_initial_loss_near_uniform():
+    state = model.make_init(1, 1)(0)
+    params = list(state[: len(model.param_specs(1, 1))])
+    x, y = data()
+    loss, acc = model.loss_and_acc(params, x, y, 1)
+    # He-init logits inflate CE somewhat above ln(C); it must still be in
+    # the random-guess regime, far from a degenerate/exploded init.
+    assert abs(float(loss) - np.log(model.NUM_CLASSES)) < 2.5
+    assert float(acc) <= 0.2
+
+
+def test_training_reduces_loss_and_improves_acc():
+    blocks, widen = 1, 1
+    ts = jax.jit(model.make_train_step(blocks, widen))
+    es = jax.jit(model.make_eval_step(blocks, widen))
+    state = list(model.make_init(blocks, widen)(1))
+    n = len(model.param_specs(blocks, widen))
+    x, y = data(1)
+    first = None
+    for i in range(30):
+        out = ts(
+            x, y,
+            jnp.float32(0.08), jnp.float32(0.9),
+            jnp.float32(0.0), jnp.float32(0.4), jnp.int32(i),
+            *state,
+        )
+        if first is None:
+            first = float(out[0])
+        state = list(out[2:])
+    last = float(out[0])
+    assert last < first * 0.6, f"loss {first} -> {last}"
+    # Train accuracy on the memorized batch improves.
+    ev = es(x, y, *state[:n])
+    assert float(ev[1]) > 0.3
+
+
+def test_lr_zero_is_a_no_op():
+    blocks, widen = 1, 1
+    ts = jax.jit(model.make_train_step(blocks, widen))
+    state = list(model.make_init(blocks, widen)(2))
+    x, y = data(2)
+    out = ts(
+        x, y,
+        jnp.float32(0.0), jnp.float32(0.9),
+        jnp.float32(0.0), jnp.float32(0.4), jnp.int32(0),
+        *state,
+    )
+    new_params = out[2 : 2 + len(model.param_specs(blocks, widen))]
+    for old, new in zip(state, new_params):
+        assert_allclose(np.asarray(old), np.asarray(new), atol=0)
+
+
+def test_re_prob_zero_matches_no_augmentation():
+    # With re_prob=0 the augmentation path must be exact identity on x.
+    key = jax.random.PRNGKey(0)
+    x, _ = data(4)
+    out = model.apply_random_erase(x, jnp.float32(0.0), jnp.float32(0.4), key)
+    assert_allclose(np.asarray(out), np.asarray(x))
+
+
+def test_re_prob_one_erases_some_pixels():
+    key = jax.random.PRNGKey(1)
+    x = jnp.ones((model.BATCH, model.INPUT_DIM), jnp.float32)
+    out = np.asarray(
+        model.apply_random_erase(x, jnp.float32(1.0), jnp.float32(0.6), key)
+    )
+    assert (out == 0.0).sum() > 0
+    assert (out == 1.0).sum() > 0
+
+
+def test_deeper_variant_expressible():
+    # Depth variants share the same train-step signature with more state.
+    for name, (blocks, widen) in model.IC_VARIANTS.items():
+        n = len(model.param_specs(blocks, widen))
+        assert n == 4 + 4 * blocks, name

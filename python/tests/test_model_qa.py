@@ -1,0 +1,87 @@
+"""L2: BiDAF-lite QA model — shapes, learning on planted spans."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model_qa
+
+
+def data(seed=0):
+    rs = np.random.RandomState(seed)
+    ctx = jnp.asarray(
+        rs.randint(2, model_qa.VOCAB, (model_qa.QA_BATCH, model_qa.CTX_LEN)), jnp.int32
+    )
+    # Plant the answer: question copies ctx[start:end+1] bracketed by 1s.
+    y_s = rs.randint(0, model_qa.CTX_LEN - 4, model_qa.QA_BATCH)
+    span = 3
+    y_e = y_s + span - 1
+    qry = np.ones((model_qa.QA_BATCH, model_qa.QRY_LEN), np.int32)
+    for i in range(model_qa.QA_BATCH):
+        qry[i, 1 : 1 + span] = np.asarray(ctx)[i, y_s[i] : y_s[i] + span]
+        qry[i, 1 + span + 1 :] = rs.randint(2, model_qa.VOCAB, model_qa.QRY_LEN - span - 2)
+    return (
+        ctx,
+        jnp.asarray(qry, jnp.int32),
+        jnp.asarray(y_s, jnp.int32),
+        jnp.asarray(y_e, jnp.int32),
+    )
+
+
+def test_init_shapes():
+    state = model_qa.make_init()(0)
+    specs = model_qa.param_specs()
+    assert len(state) == 2 * len(specs)
+    for (name, shape), arr in zip(specs, state[: len(specs)]):
+        assert arr.shape == shape, name
+    assert model_qa.param_count() == sum(int(np.prod(s)) for _, s in specs)
+
+
+def test_forward_shapes():
+    state = model_qa.make_init()(1)
+    params = list(state[: model_qa.N_PARAMS])
+    ctx, qry, _, _ = data()
+    start, end = model_qa.forward(
+        params, ctx, qry, jnp.float32(0.0), jax.random.PRNGKey(0)
+    )
+    assert start.shape == (model_qa.QA_BATCH, model_qa.CTX_LEN)
+    assert end.shape == (model_qa.QA_BATCH, model_qa.CTX_LEN)
+
+
+def test_training_reduces_loss():
+    ts = jax.jit(model_qa.make_train_step())
+    state = list(model_qa.make_init()(2))
+    ctx, qry, y_s, y_e = data(2)
+    first = None
+    for i in range(25):
+        out = ts(
+            ctx, qry, y_s, y_e,
+            jnp.float32(0.5), jnp.float32(0.9), jnp.float32(0.0), jnp.int32(i),
+            *state,
+        )
+        if first is None:
+            first = float(out[0])
+        state = list(out[2:])
+    last = float(out[0])
+    assert last < first * 0.8, f"qa loss {first} -> {last}"
+
+
+def test_eval_step_no_dropout_deterministic():
+    es = jax.jit(model_qa.make_eval_step())
+    state = model_qa.make_init()(3)
+    params = state[: model_qa.N_PARAMS]
+    ctx, qry, y_s, y_e = data(3)
+    a = es(ctx, qry, y_s, y_e, *params)
+    b = es(ctx, qry, y_s, y_e, *params)
+    assert float(a[0]) == float(b[0])
+    assert 0.0 <= float(a[1]) <= 1.0
+
+
+def test_dropout_changes_training_loss():
+    ts = jax.jit(model_qa.make_train_step())
+    state = list(model_qa.make_init()(4))
+    ctx, qry, y_s, y_e = data(4)
+    args = (ctx, qry, y_s, y_e, jnp.float32(0.1), jnp.float32(0.9))
+    out0 = ts(*args, jnp.float32(0.0), jnp.int32(0), *state)
+    out5 = ts(*args, jnp.float32(0.5), jnp.int32(0), *state)
+    assert float(out0[0]) != float(out5[0])

@@ -1,0 +1,87 @@
+"""L1 correctness: random_erase kernel vs oracle + rect sampling."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.random_erase import random_erase, sample_rects
+from compile.kernels.ref import random_erase_ref
+
+
+def _mk(b, h, w, c, seed=0):
+    rs = np.random.RandomState(seed)
+    imgs = jnp.asarray(rs.randn(b, h, w, c), jnp.float32)
+    y0 = rs.randint(0, h, b)
+    x0 = rs.randint(0, w, b)
+    rh = rs.randint(1, h + 1, b)
+    rw = rs.randint(1, w + 1, b)
+    rects = jnp.asarray(np.stack([y0, x0, rh, rw], axis=1), jnp.int32)
+    apply_mask = jnp.asarray(rs.randint(0, 2, b), jnp.float32)
+    return imgs, rects, apply_mask
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    h=st.integers(2, 12),
+    w=st.integers(2, 12),
+    c=st.integers(1, 4),
+    seed=st.integers(0, 1000),
+)
+def test_matches_ref_hypothesis(b, h, w, c, seed):
+    imgs, rects, apply_mask = _mk(b, h, w, c, seed)
+    got = random_erase(imgs, rects, apply_mask, 0.0)
+    want = random_erase_ref(imgs, rects, apply_mask, 0.0)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+def test_no_apply_is_identity():
+    imgs, rects, _ = _mk(4, 8, 8, 3)
+    got = random_erase(imgs, rects, jnp.zeros(4, jnp.float32), 0.0)
+    assert_allclose(np.asarray(got), np.asarray(imgs))
+
+
+def test_full_rect_erases_everything():
+    imgs = jnp.ones((2, 4, 4, 1), jnp.float32)
+    rects = jnp.asarray([[0, 0, 4, 4], [0, 0, 4, 4]], jnp.int32)
+    got = random_erase(imgs, rects, jnp.ones(2, jnp.float32), 0.5)
+    assert np.allclose(np.asarray(got), 0.5)
+
+
+def test_erased_area_matches_rect():
+    imgs = jnp.ones((1, 8, 8, 1), jnp.float32)
+    rects = jnp.asarray([[2, 3, 4, 2]], jnp.int32)  # y0=2,x0=3,h=4,w=2
+    got = np.asarray(random_erase(imgs, rects, jnp.ones(1, jnp.float32), 0.0))
+    erased = (got == 0.0).sum()
+    assert erased == 4 * 2
+    assert got[0, 2, 3, 0] == 0.0
+    assert got[0, 1, 3, 0] == 1.0
+
+
+def test_sample_rects_bounds_and_scaling():
+    key = jax.random.PRNGKey(0)
+    for sh in [0.1, 0.4, 0.9]:
+        rects = np.asarray(sample_rects(key, 256, 8, 8, jnp.float32(sh)))
+        y0, x0, rh, rw = rects.T
+        assert (rh >= 1).all() and (rw >= 1).all()
+        assert (y0 >= 0).all() and (x0 >= 0).all()
+        assert ((y0 + rh) <= 8).all(), "rect exceeds image height"
+        assert ((x0 + rw) <= 8).all(), "rect exceeds image width"
+    small = np.asarray(sample_rects(key, 512, 8, 8, jnp.float32(0.15)))
+    big = np.asarray(sample_rects(key, 512, 8, 8, jnp.float32(0.95)))
+    assert big[:, 2].mean() > small[:, 2].mean() + 1.0
+
+
+def test_traced_sh_is_allowed():
+    # sh must work as a traced scalar inside jit (it's a tuned hparam).
+    @jax.jit
+    def f(sh):
+        key = jax.random.PRNGKey(1)
+        return sample_rects(key, 16, 8, 8, sh)
+
+    r1 = f(jnp.float32(0.2))
+    r2 = f(jnp.float32(0.8))
+    assert r1.shape == (16, 4)
+    assert not np.array_equal(np.asarray(r1), np.asarray(r2))

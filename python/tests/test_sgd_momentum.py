@@ -1,0 +1,80 @@
+"""L1 correctness: fused SGD-momentum kernel vs oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.ref import sgd_momentum_ref
+from compile.kernels.sgd_momentum import (
+    sgd_momentum,
+    sgd_momentum_flat,
+    sgd_momentum_tree,
+)
+
+
+def _mk(n, seed=0):
+    rs = np.random.RandomState(seed)
+    return (
+        jnp.asarray(rs.randn(n), jnp.float32),
+        jnp.asarray(rs.randn(n), jnp.float32),
+        jnp.asarray(rs.randn(n), jnp.float32),
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 5000),
+    lr=st.floats(1e-4, 1.0),
+    mu=st.floats(0.0, 0.999),
+    seed=st.integers(0, 1000),
+)
+def test_matches_ref_hypothesis(n, lr, mu, seed):
+    p, g, v = _mk(n, seed)
+    p2, v2 = sgd_momentum_flat(p, g, v, lr, mu)
+    pe, ve = sgd_momentum_ref(p, g, v, lr, mu)
+    assert_allclose(np.asarray(p2), np.asarray(pe), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(v2), np.asarray(ve), rtol=1e-5, atol=1e-6)
+
+
+def test_block_boundary_sizes():
+    # Exactly one block, one element over, one element under.
+    for n in [1023, 1024, 1025, 2048, 1]:
+        p, g, v = _mk(n, n)
+        p2, v2 = sgd_momentum_flat(p, g, v, 0.1, 0.9)
+        pe, ve = sgd_momentum_ref(p, g, v, 0.1, 0.9)
+        assert_allclose(np.asarray(p2), np.asarray(pe), rtol=1e-5, atol=1e-6)
+        assert_allclose(np.asarray(v2), np.asarray(ve), rtol=1e-5, atol=1e-6)
+
+
+def test_shape_polymorphic_wrapper():
+    rs = np.random.RandomState(7)
+    p = jnp.asarray(rs.randn(12, 7), jnp.float32)
+    g = jnp.asarray(rs.randn(12, 7), jnp.float32)
+    v = jnp.asarray(rs.randn(12, 7), jnp.float32)
+    p2, v2 = sgd_momentum(p, g, v, 0.05, 0.8)
+    pe, ve = sgd_momentum_ref(p, g, v, 0.05, 0.8)
+    assert p2.shape == (12, 7)
+    assert_allclose(np.asarray(p2), np.asarray(pe), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(v2), np.asarray(ve), rtol=1e-5, atol=1e-6)
+
+
+def test_tree_update():
+    shapes = [(3, 4), (4,), (5, 6), (6,)]
+    rs = np.random.RandomState(1)
+    ps = [jnp.asarray(rs.randn(*s), jnp.float32) for s in shapes]
+    gs = [jnp.asarray(rs.randn(*s), jnp.float32) for s in shapes]
+    vs = [jnp.asarray(rs.randn(*s), jnp.float32) for s in shapes]
+    nps, nvs = sgd_momentum_tree(ps, gs, vs, 0.01, 0.9)
+    assert len(nps) == len(shapes) and len(nvs) == len(shapes)
+    for p, g, v, p2, v2 in zip(ps, gs, vs, nps, nvs):
+        pe, ve = sgd_momentum_ref(p, g, v, 0.01, 0.9)
+        assert_allclose(np.asarray(p2), np.asarray(pe), rtol=1e-5, atol=1e-6)
+        assert_allclose(np.asarray(v2), np.asarray(ve), rtol=1e-5, atol=1e-6)
+
+
+def test_zero_momentum_is_plain_sgd():
+    p, g, v0 = _mk(100, 4)
+    p2, v2 = sgd_momentum_flat(p, g, jnp.zeros_like(v0), 0.5, 0.0)
+    assert_allclose(np.asarray(p2), np.asarray(p - 0.5 * g), rtol=1e-6)
+    assert_allclose(np.asarray(v2), np.asarray(g), rtol=1e-6)

@@ -1,0 +1,94 @@
+//! Fig. 2: hyperparameter optimization with early stopping biases the
+//! search toward shallow models — "after a few steps, CHOPT with early
+//! stopping only gets to search a space with shallow depth".
+//!
+//! Prints the search history (model creation order × depth × epochs
+//! survived) and writes reports/fig2_depth_history.csv.
+//!
+//!     cargo bench --bench fig2_early_stop_bias
+
+use chopt::coordinator::{run_sim, SimSetup};
+use chopt::experiments::fig2_config;
+use chopt::trainer::surrogate::SurrogateTrainer;
+use chopt::trainer::Trainer;
+use chopt::util::bench::Table;
+
+fn run(step: i64, seed: u64) -> Vec<(f64, i64, usize)> {
+    let cfg = fig2_config(step, 120, seed);
+    let out = run_sim(SimSetup::single(cfg, 8), move |id| {
+        Box::new(SurrogateTrainer::new(seed * 37 + id)) as Box<dyn Trainer>
+    });
+    let mut rows: Vec<(f64, i64, usize)> = out.agents[0]
+        .sessions
+        .values()
+        .map(|s| (s.created_at, s.hparams.i64("depth").unwrap_or(20), s.epochs))
+        .collect();
+    rows.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    rows
+}
+
+fn mean_depth(rows: &[(f64, i64, usize)], pred: impl Fn(&(f64, i64, usize)) -> bool) -> f64 {
+    let sel: Vec<i64> = rows.iter().filter(|r| pred(r)).map(|r| r.1).collect();
+    sel.iter().sum::<i64>() as f64 / sel.len().max(1) as f64
+}
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let es = run(7, 21);
+    let no_es = run(-1, 21);
+
+    // CSV for plotting.
+    std::fs::create_dir_all("reports").unwrap();
+    let mut csv = String::from("mode,created_at,depth,epochs\n");
+    for (t, d, e) in &es {
+        csv.push_str(&format!("es,{t:.0},{d},{e}\n"));
+    }
+    for (t, d, e) in &no_es {
+        csv.push_str(&format!("no_es,{t:.0},{d},{e}\n"));
+    }
+    std::fs::write("reports/fig2_depth_history.csv", csv).unwrap();
+
+    let mut table = Table::new(
+        "Fig. 2: depth of searched models under early stopping (step=7)",
+        &["mode", "mean depth (all)", "mean depth survivors(>21ep)", "mean depth killed", "n"],
+    );
+    for (label, rows) in [("ES step=7", &es), ("no ES", &no_es)] {
+        table.row(&[
+            label.to_string(),
+            format!("{:.0}", mean_depth(rows, |_| true)),
+            format!("{:.0}", mean_depth(rows, |r| r.2 > 21)),
+            format!("{:.0}", mean_depth(rows, |r| r.2 <= 21)),
+            format!("{}", rows.len()),
+        ]);
+    }
+    table.print();
+
+    // Depth histogram of *long-lived* models (what the search "keeps").
+    let mut hist_es = [0usize; 7];
+    let mut hist_no = [0usize; 7];
+    for (rows, hist) in [(&es, &mut hist_es), (&no_es, &mut hist_no)] {
+        for (_, d, e) in rows.iter() {
+            if *e > 50 {
+                let bin = (((*d - 20) / 20) as usize).min(6);
+                hist[bin] += 1;
+            }
+        }
+    }
+    println!("long-lived (>50 epochs) depth histogram, bins 20-40-..-140+:");
+    println!("  ES    {hist_es:?}");
+    println!("  no-ES {hist_no:?}");
+    println!("csv written to reports/fig2_depth_history.csv; wall {:.1}s",
+        t0.elapsed().as_secs_f64());
+
+    let surv_es = mean_depth(&es, |r| r.2 > 21);
+    let killed_es = mean_depth(&es, |r| r.2 <= 21);
+    let surv_no = mean_depth(&no_es, |r| r.2 > 21);
+    assert!(
+        surv_es + 10.0 < killed_es,
+        "ES survivors must be shallower than its victims: {surv_es:.0} vs {killed_es:.0}"
+    );
+    assert!(
+        surv_no > surv_es + 10.0,
+        "no-ES must keep deeper models training: {surv_no:.0} vs {surv_es:.0}"
+    );
+}

@@ -1,0 +1,119 @@
+//! Fig. 8: adaptive available-GPU control between NSML (non-CHOPT) and
+//! CHOPT sessions across load zones A–E.
+//!
+//! Regenerates the figure's two series (total used GPUs, non-CHOPT GPUs)
+//! as reports/fig8_timeline.svg + reports/fig8_series.csv, and prints the
+//! per-zone allocation summary with the paper's narrative checks:
+//!   C: cluster under-utilized -> master gives CHOPT bonus GPUs
+//!   D: external surge -> master takes GPUs back from CHOPT
+//!
+//!     cargo bench --bench fig8_stop_and_go
+
+use chopt::cluster::ExternalLoadTrace;
+use chopt::coordinator::{run_sim, MasterTickLog, SimSetup, StopAndGoPolicy};
+use chopt::experiments::table2_config;
+use chopt::trainer::surrogate::SurrogateTrainer;
+use chopt::trainer::Trainer;
+use chopt::util::bench::Table;
+use chopt::viz::plots;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let gpus = 16;
+    let horizon = 250_000.0;
+    let mut cfg = table2_config("surrogate:resnet", "{\"random\": {}}", 100_000, 31);
+    cfg.step = 5;
+    cfg.max_gpus = 6;
+    cfg.max_epochs = 120;
+    let setup = SimSetup {
+        cluster_gpus: gpus,
+        configs: vec![cfg],
+        submit_times: vec![0.16 * horizon],
+        agent_slots: 1,
+        trace: Some(ExternalLoadTrace::fig8(gpus, horizon, 77)),
+        policy: StopAndGoPolicy::default(),
+        master_period: 250.0,
+        horizon,
+        failures: Vec::new(),
+    };
+    let out = run_sim(setup, |id| {
+        Box::new(SurrogateTrainer::new(400 + id)) as Box<dyn Trainer>
+    });
+
+    // Per-zone means from the master log.
+    let zone_rows = |lo: f64, hi: f64| -> Vec<&MasterTickLog> {
+        out.master_log
+            .iter()
+            .filter(|r| r.t >= lo * horizon && r.t < hi * horizon)
+            .collect()
+    };
+    let mut table = Table::new(
+        "Fig. 8: mean GPUs per zone (16-GPU cluster, CHOPT base limit 6)",
+        &["zone", "external", "CHOPT", "total used", "utilization"],
+    );
+    let mut zone_stats = Vec::new();
+    for (z, lo, hi) in [
+        ("A", 0.00, 0.15),
+        ("B", 0.15, 0.30),
+        ("C", 0.30, 0.55),
+        ("D", 0.55, 0.80),
+        ("E", 0.80, 1.00),
+    ] {
+        let rows = zone_rows(lo, hi);
+        let mean = |f: &dyn Fn(&MasterTickLog) -> f64| {
+            rows.iter().map(|r| f(r)).sum::<f64>() / rows.len().max(1) as f64
+        };
+        let ext = mean(&|r| r.external_held as f64);
+        let chopt = mean(&|r| r.chopt_held as f64);
+        let util = mean(&|r| r.utilization);
+        table.row(&[
+            z.to_string(),
+            format!("{ext:.1}"),
+            format!("{chopt:.1}"),
+            format!("{:.1}", ext + chopt),
+            format!("{util:.2}"),
+        ]);
+        zone_stats.push((z, ext, chopt, util));
+    }
+    table.print();
+
+    // Artifacts.
+    std::fs::create_dir_all("reports").unwrap();
+    plots::utilization_timeline(
+        &out.cluster.usage_total.series,
+        &out.cluster.usage_external.series,
+        gpus,
+        horizon,
+    )
+    .save("reports/fig8_timeline.svg")
+    .unwrap();
+    let mut csv = String::from("series,t,gpus\n");
+    for &(t, v) in &out.cluster.usage_total.series {
+        csv.push_str(&format!("total,{t:.0},{v}\n"));
+    }
+    for &(t, v) in &out.cluster.usage_external.series {
+        csv.push_str(&format!("external,{t:.0},{v}\n"));
+    }
+    std::fs::write("reports/fig8_series.csv", csv).unwrap();
+    println!(
+        "artifacts: reports/fig8_timeline.svg, reports/fig8_series.csv; wall {:.1}s",
+        t0.elapsed().as_secs_f64()
+    );
+
+    // Narrative checks.
+    let chopt_c = zone_stats[2].2;
+    let chopt_d = zone_stats[3].2;
+    let util_c = zone_stats[2].3;
+    assert!(
+        chopt_c > 6.5,
+        "zone C: CHOPT should exceed its base limit (got {chopt_c:.1})"
+    );
+    assert!(
+        chopt_d < chopt_c - 2.0,
+        "zone D: master must claw back GPUs ({chopt_c:.1} -> {chopt_d:.1})"
+    );
+    assert!(
+        util_c > 0.65,
+        "zone C utilization should be lifted by Stop-and-Go (got {util_c:.2})"
+    );
+}

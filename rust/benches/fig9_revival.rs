@@ -1,0 +1,76 @@
+//! Fig. 9: a model early-stopped for poor initial performance, revived by
+//! Stop-and-Go, ends fully trained with competitive accuracy — "Stop-and-
+//! Go can potentially save valuable hyperparameter configurations."
+//!
+//!     cargo bench --bench fig9_revival
+
+use chopt::config::Order;
+use chopt::coordinator::{run_sim, SimSetup};
+use chopt::experiments::fig2_config;
+use chopt::trainer::surrogate::SurrogateTrainer;
+use chopt::trainer::Trainer;
+use chopt::util::bench::Table;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    // High stop ratio + tight GPU cap: plenty of stop-pool churn.
+    let mut cfg = fig2_config(7, 120, 61);
+    cfg.stop_ratio = 0.85;
+    cfg.max_gpus = 5;
+    let out = run_sim(SimSetup::single(cfg, 5), |id| {
+        Box::new(SurrogateTrainer::new(800 + id)) as Box<dyn Trainer>
+    });
+    let agent = &out.agents[0];
+    let order = Order::Descending;
+    let overall_best = agent.best().map(|(_, m)| m).unwrap();
+
+    let mut revived: Vec<_> = agent
+        .sessions
+        .values()
+        .filter(|s| s.revivals > 0)
+        .collect();
+    revived.sort_by(|a, b| {
+        b.best_measure(order)
+            .partial_cmp(&a.best_measure(order))
+            .unwrap()
+    });
+
+    let mut table = Table::new(
+        "Fig. 9: revived early-stopped sessions (top 8 by final accuracy)",
+        &["session", "revivals", "epochs", "final acc", "vs best", "depth"],
+    );
+    for s in revived.iter().take(8) {
+        let m = s.best_measure(order).unwrap_or(f64::NAN);
+        table.row(&[
+            format!("{}", s.id),
+            format!("{}", s.revivals),
+            format!("{}", s.epochs),
+            format!("{m:.2}%"),
+            format!("{:+.2}", m - overall_best),
+            s.hparams
+                .i64("depth")
+                .map(|d| d.to_string())
+                .unwrap_or_default(),
+        ]);
+    }
+    table.print();
+    println!(
+        "revived sessions: {} / {} created; overall best {overall_best:.2}% \
+         (paper: revived model hit 76.61% vs 77.42% best)",
+        revived.len(),
+        agent.created
+    );
+    println!("wall {:.1}s", t0.elapsed().as_secs_f64());
+
+    assert!(!revived.is_empty(), "Stop-and-Go must revive something");
+    let best_revived = revived[0].best_measure(order).unwrap();
+    assert!(
+        best_revived > overall_best - 3.0,
+        "a revived session should be competitive: {best_revived:.2} vs {overall_best:.2}"
+    );
+    // At least one revived session trained substantially past its stop.
+    assert!(
+        revived.iter().any(|s| s.epochs > 50),
+        "revived sessions should train on after revival"
+    );
+}

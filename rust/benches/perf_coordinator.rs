@@ -1,0 +1,103 @@
+//! §Perf L3: coordinator micro-benchmarks — simulator event throughput,
+//! scheduler decision latency at scale, leaderboard updates, config
+//! parsing, and the JSON substrate.
+//!
+//!     cargo bench --bench perf_coordinator
+
+use chopt::config::{ChoptConfig, Order};
+use chopt::coordinator::{run_sim, SimSetup};
+use chopt::experiments::table2_config;
+use chopt::hparam::{Assignment, Value};
+use chopt::nsml::{Leaderboard, NsmlSession, SessionId};
+use chopt::trainer::surrogate::SurrogateTrainer;
+use chopt::trainer::Trainer;
+use chopt::util::bench::{Bencher, Table};
+use chopt::util::json;
+
+fn main() {
+    let bencher = Bencher::quick();
+    let mut table = Table::new("coordinator hot paths", &["path", "µs/op", "ops/s"]);
+    let mut add = |name: &str, secs: f64| {
+        table.row(&[
+            name.into(),
+            format!("{:.2}", secs * 1e6),
+            format!("{:.0}", 1.0 / secs),
+        ]);
+    };
+
+    // Simulator end-to-end event throughput.
+    let t0 = std::time::Instant::now();
+    let cfg = table2_config("surrogate:resnet", "{\"random\": {}}", 400, 3);
+    let out = run_sim(SimSetup::single(cfg, 16), |id| {
+        Box::new(SurrogateTrainer::new(id)) as Box<dyn Trainer>
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let evps = out.events_processed as f64 / wall;
+    println!(
+        "sim end-to-end: {} events, {} models, {:.2}s wall -> {:.0} events/s",
+        out.events_processed, out.agents[0].created, wall, evps
+    );
+    add("sim event (end-to-end)", wall / out.events_processed as f64);
+
+    // Leaderboard update at 10k sessions.
+    let mut sessions: Vec<NsmlSession> = (0..10_000u64)
+        .map(|i| {
+            let mut hp = Assignment::new();
+            hp.set("lr", Value::Float(0.01 + (i as f64) * 1e-6));
+            let mut s = NsmlSession::new(SessionId(i), hp, "m", 0.0);
+            s.report(10, (i % 997) as f64 / 10.0, 1.0);
+            s
+        })
+        .collect();
+    let mut lb = Leaderboard::new("m", Order::Descending);
+    lb.rebuild(sessions.iter());
+    let mut k = 0usize;
+    let r = bencher.bench("leaderboard update @10k", || {
+        k = (k + 1) % sessions.len();
+        sessions[k].report(20, (k % 991) as f64 / 10.0, 0.9);
+        lb.update(&sessions[k]);
+    });
+    println!("{}", r.report());
+    add("leaderboard update @10k", r.mean_secs());
+
+    // Space sampling + perturbation.
+    let cfg = table2_config("surrogate:wrn_re", "{\"random\": {}}", 1, 5);
+    let mut rng = chopt::util::rng::Rng::new(1);
+    let r = bencher.bench("space sample (6 hparams)", || {
+        let _ = cfg.space.sample(&mut rng).unwrap();
+    });
+    println!("{}", r.report());
+    add("space sample (6 hparams)", r.mean_secs());
+    let a = cfg.space.sample(&mut rng).unwrap();
+    let r = bencher.bench("PBT perturb", || {
+        let _ = cfg.space.perturb(&a, &mut rng, &[0.8, 1.2]);
+    });
+    println!("{}", r.report());
+    add("PBT perturb", r.mean_secs());
+
+    // Config parse (Listing 1).
+    let r = bencher.bench("config parse (Listing 1)", || {
+        let _ = ChoptConfig::from_json_str(chopt::config::LISTING1_EXAMPLE).unwrap();
+    });
+    println!("{}", r.report());
+    add("config parse", r.mean_secs());
+
+    // JSON substrate: parse a ~40 KiB sessions export.
+    let mut store = chopt::storage::SessionStore::new();
+    store.put_run("bench", sessions[..200].to_vec());
+    let doc_text = store.to_json().to_string_compact();
+    println!("json doc size: {} KiB", doc_text.len() / 1024);
+    let r = bencher.bench("json parse (sessions export)", || {
+        let _ = json::parse(&doc_text).unwrap();
+    });
+    println!("{}", r.report());
+    add("json parse (export doc)", r.mean_secs());
+
+    table.print();
+
+    // L3 target: scheduler decisions must be sub-millisecond.
+    assert!(
+        evps > 10_000.0,
+        "sim throughput too low: {evps:.0} events/s"
+    );
+}

@@ -1,0 +1,83 @@
+//! §Perf L1/L2: PJRT runtime micro-benchmarks over the AOT artifacts —
+//! compile time per artifact, train/eval step latency and throughput per
+//! model variant, plus the VMEM/MXU structural estimates for the Pallas
+//! tiles (real-TPU perf is estimated, not measured — CPU interpret mode).
+//!
+//!     make artifacts && cargo bench --bench perf_runtime
+
+use chopt::hparam::{Assignment, Value};
+use chopt::nsml::SessionId;
+use chopt::runtime::{HostTensor, Manifest, Runtime};
+use chopt::trainer::{real::RealTrainer, Trainer};
+use chopt::util::bench::{Bencher, Table};
+
+fn main() {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping perf_runtime: run `make artifacts` first");
+        return;
+    }
+
+    // --- compile times -----------------------------------------------
+    let mut rt = Runtime::new(&dir).unwrap();
+    let mut compile_table = Table::new("artifact compile time (PJRT CPU)", &["artifact", "ms"]);
+    for name in ["ic_d1_w1_train", "ic_d2_w1_train", "ic_d3_w1_train", "ic_d2_w2_train", "qa_bidaf_train"] {
+        let t0 = std::time::Instant::now();
+        rt.prepare(name).unwrap();
+        compile_table.row(&[name.into(), format!("{:.0}", t0.elapsed().as_secs_f64() * 1e3)]);
+    }
+    compile_table.print();
+
+    // --- step latency per variant -------------------------------------
+    let bencher = Bencher::quick();
+    let mut table = Table::new(
+        "train_step latency / throughput (batch=64 IC, 32 QA)",
+        &["variant", "µs/step", "steps/s", "samples/s"],
+    );
+    for (variant, batch) in [
+        ("ic_d1_w1", 64usize),
+        ("ic_d2_w1", 64),
+        ("ic_d3_w1", 64),
+        ("ic_d2_w2", 64),
+        ("qa_bidaf", 32),
+    ] {
+        let mut trainer = RealTrainer::new(&dir, 1).unwrap();
+        trainer.steps_per_epoch = 1;
+        let mut hp = Assignment::new();
+        hp.set("lr", Value::Float(0.05));
+        hp.set("momentum", Value::Float(0.9));
+        // Prime state + compile.
+        let mut epoch = 1;
+        trainer.train(SessionId(9), variant, &hp, epoch).unwrap();
+        let r = bencher.bench(variant, || {
+            epoch += 1;
+            trainer.train(SessionId(9), variant, &hp, epoch).unwrap();
+        });
+        let per = r.mean_secs();
+        table.row(&[
+            variant.into(),
+            format!("{:.0}", per * 1e6),
+            format!("{:.0}", 1.0 / per),
+            format!("{:.0}", batch as f64 / per),
+        ]);
+        println!("{}", r.report());
+    }
+    table.print();
+
+    // --- raw execute() overhead (marshalling floor) --------------------
+    let mut rt2 = Runtime::new(&dir).unwrap();
+    rt2.prepare("ic_d1_w1_init").unwrap();
+    let b2 = Bencher::quick();
+    let r = b2.bench("init-execute (marshal floor)", || {
+        rt2.execute("ic_d1_w1_init", &[HostTensor::scalar_i32(3)]).unwrap();
+    });
+    println!("{}", r.report());
+
+    println!(
+        "\nL1 structural estimates (see python/compile/kernels/*.py::vmem_bytes):\n\
+         fused_linear 64x192x64 tile: VMEM ~{:.0} KiB; BiDAF attention: ~{:.0} KiB\n\
+         (interpret=True on CPU — real-TPU ratios are estimated in EXPERIMENTS.md §Perf)",
+        (4 * (64 * 192 + 192 * 128 + 128 + 2 * 64 * 128)) as f64 / 1024.0,
+        (4 * (32 * 32 + 16 * 32 + 2 * 32 * 16 + 32 * 4 * 32)) as f64 / 1024.0,
+    );
+}

@@ -1,0 +1,146 @@
+//! Table 1: the §4 fine-tuning progression — six sequential CHOPT
+//! sessions adding one hyperparameter at a time, each narrowing ranges to
+//! the previous session's top-10; session 5 runs with early stopping
+//! (biased against deep models), session 6 without (recovers them).
+//!
+//!     cargo bench --bench table1_finetune
+
+use chopt::analysis;
+use chopt::config::{ChoptConfig, Order};
+use chopt::coordinator::{run_sim, SimSetup};
+use chopt::hparam::{Dist, ParamDef, ParamType, Value};
+use chopt::nsml::NsmlSession;
+use chopt::trainer::surrogate::SurrogateTrainer;
+use chopt::trainer::Trainer;
+use chopt::util::bench::Table;
+
+fn base_config() -> ChoptConfig {
+    ChoptConfig::from_json_str(
+        r#"{
+          "h_params": {
+            "lr": {"parameters": [0.001, 0.2], "distribution": "log_uniform",
+                   "type": "float", "p_range": [0.0005, 0.5]}
+          },
+          "measure": "test/accuracy",
+          "order": "descending",
+          "step": 7,
+          "population": 5,
+          "tune": {"random": {}},
+          "termination": {"max_session_number": 40},
+          "model": "surrogate:resnet_re",
+          "max_epochs": 300,
+          "max_gpus": 5,
+          "seed": 41
+        }"#,
+    )
+    .unwrap()
+}
+
+fn fdef(name: &str, lo: f64, hi: f64, p_lo: f64, p_hi: f64) -> ParamDef {
+    ParamDef {
+        name: name.into(),
+        ptype: ParamType::Float,
+        dist: Dist::Uniform,
+        parameters: vec![Value::Float(lo), Value::Float(hi)],
+        p_range: vec![p_lo, p_hi],
+    }
+}
+
+fn range_str(sessions: &[NsmlSession], cfg: &ChoptConfig, name: &str) -> String {
+    match cfg.space.def(name) {
+        None => "-".to_string(),
+        Some(def) => {
+            let top: Vec<&NsmlSession> =
+                analysis::top_k(sessions, Order::Descending, 10);
+            match analysis::observed_range(&top, name) {
+                Some((lo, hi)) if def.dist != Dist::Categorical => {
+                    format!("{lo:.4} - {hi:.4}")
+                }
+                _ => def
+                    .parameters
+                    .iter()
+                    .map(|v| v.to_string())
+                    .collect::<Vec<_>>()
+                    .join(","),
+            }
+        }
+    }
+}
+
+fn main() {
+    let order = Order::Descending;
+    let mut cfg = base_config();
+    let mut prev: Option<Vec<NsmlSession>> = None;
+    let mut table = Table::new(
+        "Table 1: fine tuning results and configurations per session",
+        &["no.", "Top Acc.", "early stopped", "lr (top-10)", "momentum", "prob", "sh", "depth"],
+    );
+    let t0 = std::time::Instant::now();
+    let mut accs: Vec<f64> = Vec::new();
+
+    let depth_def = ParamDef {
+        name: "depth".into(),
+        ptype: ParamType::Int,
+        dist: Dist::Categorical,
+        parameters: [20, 92, 110, 122, 134, 140]
+            .iter()
+            .map(|&d| Value::Int(d))
+            .collect(),
+        p_range: vec![],
+    };
+    let steps: [(Option<ParamDef>, bool); 6] = [
+        (None, true),
+        (Some(fdef("momentum", 0.1, 0.999, 0.0, 1.0)), true),
+        (Some(fdef("prob", 0.0, 0.9, 0.0, 1.0)), true),
+        (Some(fdef("sh", 0.2, 0.9, 0.05, 1.0)), true),
+        (Some(depth_def), true),
+        (None, false),
+    ];
+
+    for (i, (new_param, es)) in steps.into_iter().enumerate() {
+        if let Some(prev_sessions) = &prev {
+            let top = analysis::top_k(prev_sessions, order, 10);
+            cfg = analysis::narrow_config(&cfg, &top);
+        }
+        if let Some(def) = new_param {
+            cfg = analysis::append_param(&cfg, def);
+        }
+        cfg.step = if es { 7 } else { -1 };
+        cfg.seed = 41 + i as u64;
+        let seed = 1000 * (i as u64 + 1);
+        let out = run_sim(SimSetup::single(cfg.clone(), 8), move |id| {
+            Box::new(SurrogateTrainer::new(seed + id)) as Box<dyn Trainer>
+        });
+        let sessions: Vec<NsmlSession> =
+            out.agents[0].sessions.values().cloned().collect();
+        let best = out.best().map(|(_, _, m)| m).unwrap_or(f64::NAN);
+        accs.push(best);
+        table.row(&[
+            format!("{}", i + 1),
+            format!("{best:.2}"),
+            format!("{es}"),
+            range_str(&sessions, &cfg, "lr"),
+            range_str(&sessions, &cfg, "momentum"),
+            range_str(&sessions, &cfg, "prob"),
+            range_str(&sessions, &cfg, "sh"),
+            range_str(&sessions, &cfg, "depth"),
+        ]);
+        prev = Some(sessions);
+    }
+    table.print();
+    println!(
+        "paper: 69.62 / 69.78 / 70.4 / 70.36 / 70.54 / 79.37 (6th jumps when ES off)"
+    );
+    println!("wall {:.1}s", t0.elapsed().as_secs_f64());
+    // Shape assertions: fine-tuning monotone-ish; big jump at session 6.
+    assert!(
+        accs[5] > accs[4] + 0.5,
+        "session 6 (no ES) must beat session 5: {:?}",
+        accs
+    );
+    assert!(
+        accs[4] >= accs[0] - 0.5,
+        "fine-tuning should not regress: {:?}",
+        accs
+    );
+}

@@ -1,0 +1,93 @@
+//! Table 2: best top-1 accuracy found by CHOPT vs the human-tuned
+//! reference, for ResNet / WRN (± Random Erasing) and BiDAF.
+//!
+//! As in the paper (§5.1), CHOPT runs random-search+ES, PBT and Hyperband
+//! per family and reports the best; the reference is the authors'
+//! published configuration evaluated on the same (surrogate) substrate.
+//!
+//!     cargo bench --bench table2_tasks
+
+use chopt::coordinator::{run_sim, SimSetup};
+use chopt::experiments::{reference_assignment, table2_config, TABLE2_ROWS};
+use chopt::nsml::SessionId;
+use chopt::trainer::surrogate::SurrogateTrainer;
+use chopt::trainer::Trainer;
+use chopt::util::bench::Table;
+
+fn surrogate(seed: u64) -> impl FnMut(u64) -> Box<dyn Trainer> {
+    move |id| Box::new(SurrogateTrainer::new(seed ^ (id * 7919))) as Box<dyn Trainer>
+}
+
+/// Train the reference configuration to 300 epochs on the surrogate.
+fn reference_score(family: &str, seed: u64) -> f64 {
+    let mut t = SurrogateTrainer::new(seed);
+    let hp = reference_assignment(family);
+    t.train(SessionId(1), family, &hp, 300).unwrap().measure
+}
+
+fn chopt_best(family: &str, tune: &str, step: i64, seed: u64) -> f64 {
+    let mut cfg = table2_config(family, tune, 100, seed);
+    cfg.step = step;
+    let out = run_sim(SimSetup::single(cfg, 8), surrogate(seed));
+    out.best().map(|(_, _, m)| m).unwrap_or(f64::NAN)
+}
+
+fn main() {
+    println!("Reproducing Table 2 (surrogate substrate; shape, not absolute, is the claim)");
+    let mut table = Table::new(
+        "Table 2: best top-1 accuracy (%), CHOPT vs reference",
+        &[
+            "task", "model", "reference", "CHOPT", "paper ref", "paper CHOPT", "CHOPT wins",
+        ],
+    );
+    let t0 = std::time::Instant::now();
+    let mut wins = 0;
+    for (i, row) in TABLE2_ROWS.iter().enumerate() {
+        let seed = 100 + i as u64;
+        let reference = reference_score(row.family, seed);
+        // Best across the three hosted method families (paper: "we use
+        // random search with early stopping, PBT and Hyperband while
+        // reporting the best result").
+        // random+ES, PBT, Hyperband (the paper's three), plus random
+        // without ES — §5.2: "Without early stopping, CHOPT can generate
+        // the best model among all algorithms".
+        let methods = [
+            ("random+es", "{\"random\": {}}", 10),
+            ("random", "{\"random\": {}}", -1),
+            (
+                "pbt",
+                "{\"pbt\": {\"exploit\": \"truncation\", \"explore\": \"perturb\"}}",
+                10,
+            ),
+            ("hyperband", "{\"hyperband\": {\"max_resource\": 300, \"eta\": 4}}", 10),
+        ];
+        let mut best = f64::NEG_INFINITY;
+        let mut best_method = "";
+        for (name, tune, step) in methods {
+            let score = chopt_best(row.family, tune, step, seed);
+            eprintln!("  {} / {name}: {score:.2}", row.label);
+            if score > best {
+                best = score;
+                best_method = name;
+            }
+        }
+        let win = best > reference;
+        wins += win as usize;
+        table.row(&[
+            row.task.to_string(),
+            format!("{} [{best_method}]", row.label),
+            format!("{reference:.2}"),
+            format!("{best:.2}"),
+            format!("{:.2}", row.paper_reference),
+            format!("{:.2}", row.paper_chopt),
+            format!("{}", win),
+        ]);
+    }
+    table.print();
+    println!(
+        "CHOPT beats the reference on {wins}/{} rows (paper: 5/5); wall {:.1}s",
+        TABLE2_ROWS.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    assert!(wins >= 4, "CHOPT must beat the reference on >=4/5 rows");
+}

@@ -1,0 +1,91 @@
+//! Table 3: best WRN+RE model with and without a parameter-count
+//! constraint.  The paper limits the search to the reference's 36.54M
+//! parameters (WRN-28-10) and still beats the human baseline; the
+//! unconstrained search finds a 172M model.
+//!
+//!     cargo bench --bench table3_constraint
+
+use chopt::coordinator::{run_sim, SimSetup};
+use chopt::experiments::{reference_assignment, table2_config};
+use chopt::nsml::SessionId;
+use chopt::trainer::surrogate::SurrogateTrainer;
+use chopt::trainer::Trainer;
+use chopt::util::bench::Table;
+
+const LIMIT: u64 = 36_540_000; // WRN-28-10
+
+fn surrogate(seed: u64) -> impl FnMut(u64) -> Box<dyn Trainer> {
+    move |id| Box::new(SurrogateTrainer::new(seed ^ (id * 31))) as Box<dyn Trainer>
+}
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let family = "surrogate:wrn_re";
+    let probe = SurrogateTrainer::new(0);
+
+    // Baseline: the human-tuned WRN-28-10 reference.
+    let mut ref_trainer = SurrogateTrainer::new(7);
+    let ref_hp = reference_assignment(family);
+    let baseline = ref_trainer
+        .train(SessionId(1), family, &ref_hp, 300)
+        .unwrap()
+        .measure;
+    let baseline_params = probe.param_count(family, &ref_hp);
+
+    // CHOPT with the constraint.
+    let mut cfg_c = table2_config(family, "{\"random\": {}}", 80, 11);
+    cfg_c.max_params = Some(LIMIT);
+    let out_c = run_sim(SimSetup::single(cfg_c, 8), surrogate(11));
+    let agent_c = &out_c.agents[0];
+    let (best_c_id, best_c) = agent_c.best().unwrap();
+    let best_c_params = probe.param_count(family, &agent_c.sessions[&best_c_id].hparams);
+
+    // CHOPT without the constraint.
+    let cfg_u = table2_config(family, "{\"random\": {}}", 80, 12);
+    let out_u = run_sim(SimSetup::single(cfg_u, 8), surrogate(12));
+    let agent_u = &out_u.agents[0];
+    let (best_u_id, best_u) = agent_u.best().unwrap();
+    let best_u_params = probe.param_count(family, &agent_u.sessions[&best_u_id].hparams);
+
+    let fmt_m = |p: u64| format!("{:.2}M", p as f64 / 1e6);
+    let mut table = Table::new(
+        "Table 3: best model with parameter limit (paper values in parens)",
+        &["", "Top-1", "# of parameters"],
+    );
+    table.row(&[
+        "baseline (82.27, 36.54M)".into(),
+        format!("{baseline:.2}%"),
+        fmt_m(baseline_params),
+    ]);
+    table.row(&[
+        "CHOPT w/ constraint (82.41, 36.54M)".into(),
+        format!("{best_c:.2}%"),
+        fmt_m(best_c_params),
+    ]);
+    table.row(&[
+        "CHOPT w/o constraint (83.1, 172.07M)".into(),
+        format!("{best_u:.2}%"),
+        fmt_m(best_u_params),
+    ]);
+    table.print();
+    println!("wall {:.1}s", t0.elapsed().as_secs_f64());
+
+    // Shape assertions (the paper's claims).
+    assert!(
+        best_c_params <= LIMIT,
+        "constraint violated: {best_c_params}"
+    );
+    assert!(
+        best_c >= baseline - 0.3,
+        "constrained CHOPT should match/beat baseline: {best_c:.2} vs {baseline:.2}"
+    );
+    assert!(
+        best_u >= best_c,
+        "unconstrained should be at least as good: {best_u:.2} vs {best_c:.2}"
+    );
+    assert!(
+        best_u_params > LIMIT,
+        "unconstrained best should exceed the limit (found {})",
+        fmt_m(best_u_params)
+    );
+}

@@ -1,0 +1,72 @@
+//! Table 4: GPU time and best accuracy by early-stopping step size.
+//!
+//! ResNet+RE, termination = 200 models, 300 epochs max each.  The
+//! stepped rows run random search with the median early-stopping rule
+//! (the session-killing ES whose step interval the table sweeps — our
+//! PBT, like the original, rewrites members in place and never frees
+//! GPUs, so it cannot express the paper's GPU-time column); the first
+//! row runs without ES.  GPU time is exact virtual-time integration over
+//! the cluster allocator.
+//!
+//!     cargo bench --bench table4_stepsize
+
+use chopt::coordinator::{run_sim, SimSetup};
+use chopt::experiments::table4_config;
+use chopt::trainer::surrogate::SurrogateTrainer;
+use chopt::trainer::Trainer;
+use chopt::util::bench::{fmt_gpu_days, Table};
+
+fn surrogate(seed: u64) -> impl FnMut(u64) -> Box<dyn Trainer> {
+    move |id| Box::new(SurrogateTrainer::new(seed ^ (id * 131))) as Box<dyn Trainer>
+}
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let rows: [(&str, i64, &str, &str); 3] = [
+        ("without early stopping", -1, "{\"random\": {}}", "60+ days / 79.75%"),
+        ("large step size (25 epochs)", 25, "{\"random\": {}}", "22 days / 79.45%"),
+        ("small step size (3 epochs)", 3, "{\"random\": {}}", "2 days / 77.42%"),
+    ];
+
+    let mut table = Table::new(
+        "Table 4: GPU time and performance by step size (200 models, 300 epochs)",
+        &["", "GPU time", "Top-1", "paper"],
+    );
+    let mut results: Vec<(f64, f64)> = Vec::new();
+    for (i, (label, step, tune, paper)) in rows.iter().enumerate() {
+        let cfg = table4_config(*step, tune, 500 + i as u64);
+        let out = run_sim(SimSetup::single(cfg, 8), surrogate(600 + i as u64));
+        let gpu_hours = out.gpu_hours();
+        let best = out.best().map(|(_, _, m)| m).unwrap_or(f64::NAN);
+        eprintln!(
+            "  {label}: {:.1} GPU-h, best {best:.2}, {} models, {} events",
+            gpu_hours, out.agents[0].created, out.events_processed
+        );
+        table.row(&[
+            label.to_string(),
+            fmt_gpu_days(gpu_hours),
+            format!("{best:.2}%"),
+            paper.to_string(),
+        ]);
+        results.push((gpu_hours, best));
+    }
+    table.print();
+    println!("wall {:.1}s", t0.elapsed().as_secs_f64());
+
+    // Shape assertions (the paper's ordering claims).
+    let (gpu_none, acc_none) = results[0];
+    let (gpu_large, acc_large) = results[1];
+    let (gpu_small, acc_small) = results[2];
+    assert!(
+        gpu_none > 2.0 * gpu_large && gpu_large > 2.0 * gpu_small,
+        "GPU time must fall with smaller steps: {gpu_none:.0} > {gpu_large:.0} > {gpu_small:.0}"
+    );
+    assert!(
+        acc_none >= acc_large - 0.6,
+        "no-ES should be (near-)best: {acc_none:.2} vs {acc_large:.2}"
+    );
+    assert!(
+        acc_large > acc_small,
+        "large step must beat small step: {acc_large:.2} vs {acc_small:.2}"
+    );
+}

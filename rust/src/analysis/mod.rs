@@ -1,0 +1,220 @@
+//! Analysis operations behind the visual tool (paper §3.5.3–3.5.4):
+//! top-K masking, multi-range selection, session merging, and the
+//! fine-tuning loop's "rerun with narrowed ranges" / "append a new
+//! hyperparameter" config rewrites.
+
+use crate::config::{ChoptConfig, Order};
+use crate::hparam::{Dist, ParamDef, ParamType, Value};
+use crate::nsml::NsmlSession;
+
+/// Select the top-K sessions by best measure ("Masking Top K sessions",
+/// Fig. 4 top).
+pub fn top_k<'a>(sessions: &'a [NsmlSession], order: Order, k: usize) -> Vec<&'a NsmlSession> {
+    let mut scored: Vec<(&NsmlSession, f64)> = sessions
+        .iter()
+        .filter_map(|s| s.best_measure(order).map(|m| (s, m)))
+        .collect();
+    scored.sort_by(|a, b| {
+        if order.better(a.1, b.1) {
+            std::cmp::Ordering::Less
+        } else if order.better(b.1, a.1) {
+            std::cmp::Ordering::Greater
+        } else {
+            a.0.id.cmp(&b.0.id)
+        }
+    });
+    scored.into_iter().take(k).map(|(s, _)| s).collect()
+}
+
+/// A per-axis numeric range filter ("Multiple range selection", Fig. 4
+/// bottom).  String axes filter by allowed values.
+#[derive(Debug, Clone)]
+pub enum RangeFilter {
+    Numeric { param: String, lo: f64, hi: f64 },
+    Categorical { param: String, allowed: Vec<String> },
+}
+
+impl RangeFilter {
+    pub fn matches(&self, s: &NsmlSession) -> bool {
+        match self {
+            RangeFilter::Numeric { param, lo, hi } => s
+                .hparams
+                .f64(param)
+                .map(|v| v >= *lo && v <= *hi)
+                .unwrap_or(false),
+            RangeFilter::Categorical { param, allowed } => s
+                .hparams
+                .str(param)
+                .map(|v| allowed.iter().any(|a| a == v))
+                .unwrap_or(false),
+        }
+    }
+}
+
+/// Sessions passing ALL filters (drag-selection on several axes at once).
+pub fn select<'a>(sessions: &'a [NsmlSession], filters: &[RangeFilter]) -> Vec<&'a NsmlSession> {
+    sessions
+        .iter()
+        .filter(|s| filters.iter().all(|f| f.matches(s)))
+        .collect()
+}
+
+/// Merge several CHOPT runs into one session list ("Merging or switching
+/// interesting sessions").  Sessions missing a hyperparameter that other
+/// runs tuned keep it absent; the viz encodes absence explicitly, exactly
+/// like the paper's constant-value integration of sessions 1–6.
+pub fn merge_runs(runs: &[Vec<NsmlSession>]) -> Vec<NsmlSession> {
+    runs.iter().flatten().cloned().collect()
+}
+
+/// Observed [min, max] of a numeric hyperparameter over a session set.
+pub fn observed_range(sessions: &[&NsmlSession], param: &str) -> Option<(f64, f64)> {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for s in sessions {
+        if let Some(v) = s.hparams.f64(param) {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    (lo <= hi).then_some((lo, hi))
+}
+
+/// Rerun-config generation (usage-flow step 3): narrow every numeric
+/// parameter's sampling range to what the top-K sessions used.
+/// `p_range` (the hard exploration bounds) is left untouched.
+pub fn narrow_config(cfg: &ChoptConfig, top: &[&NsmlSession]) -> ChoptConfig {
+    let mut out = cfg.clone();
+    for def in out.space.defs.iter_mut() {
+        if def.dist == Dist::Categorical {
+            continue;
+        }
+        if let Some((lo, hi)) = observed_range(top, &def.name) {
+            if hi > lo {
+                def.parameters = match def.ptype {
+                    ParamType::Int => vec![Value::Int(lo as i64), Value::Int(hi.ceil() as i64)],
+                    _ => vec![Value::Float(lo), Value::Float(hi)],
+                };
+            }
+        }
+    }
+    out
+}
+
+/// Usage-flow step 4: append a new hyperparameter to be tuned (it was a
+/// constant before).
+pub fn append_param(cfg: &ChoptConfig, def: ParamDef) -> ChoptConfig {
+    let mut out = cfg.clone();
+    out.space.defs.retain(|d| d.name != def.name);
+    out.space.defs.push(def);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hparam::Assignment;
+    use crate::nsml::SessionId;
+
+    fn session(id: u64, lr: f64, measure: f64) -> NsmlSession {
+        let mut hp = Assignment::new();
+        hp.set("lr", Value::Float(lr));
+        let mut s = NsmlSession::new(SessionId(id), hp, "m", 0.0);
+        s.report(1, measure, 1.0);
+        s
+    }
+
+    #[test]
+    fn top_k_masks_best() {
+        let sessions: Vec<_> = (0..10).map(|i| session(i, 0.01 * (i + 1) as f64, i as f64)).collect();
+        let top = top_k(&sessions, Order::Descending, 3);
+        assert_eq!(top.len(), 3);
+        assert_eq!(top[0].id, SessionId(9));
+        let ids: Vec<u64> = top.iter().map(|s| s.id.0).collect();
+        assert_eq!(ids, vec![9, 8, 7]);
+    }
+
+    #[test]
+    fn range_selection() {
+        let sessions: Vec<_> = (0..10).map(|i| session(i, 0.01 * (i + 1) as f64, 1.0)).collect();
+        let sel = select(
+            &sessions,
+            &[RangeFilter::Numeric {
+                param: "lr".into(),
+                lo: 0.03,
+                hi: 0.06,
+            }],
+        );
+        assert_eq!(sel.len(), 4); // lr in {0.03,0.04,0.05,0.06}
+        // Missing param -> excluded.
+        let sel2 = select(
+            &sessions,
+            &[RangeFilter::Numeric {
+                param: "depth".into(),
+                lo: 0.0,
+                hi: 100.0,
+            }],
+        );
+        assert!(sel2.is_empty());
+    }
+
+    #[test]
+    fn narrow_config_from_top_k() {
+        let cfg = ChoptConfig::from_json_str(crate::config::LISTING1_EXAMPLE).unwrap();
+        let sessions: Vec<_> = vec![
+            session(1, 0.0334, 10.0),
+            session(2, 0.0868, 9.0),
+            session(3, 0.005, 1.0), // not in top 2
+        ];
+        let top = top_k(&sessions, Order::Descending, 2);
+        let narrowed = narrow_config(&cfg, &top);
+        let lr = narrowed.space.def("lr").unwrap();
+        assert_eq!(
+            lr.parameters,
+            vec![Value::Float(0.0334), Value::Float(0.0868)]
+        );
+        // Hard bounds untouched.
+        assert_eq!(lr.p_range, vec![0.001, 0.1]);
+        // Other params untouched (no observations).
+        let depth = narrowed.space.def("depth").unwrap();
+        assert_eq!(depth.parameters, cfg.space.def("depth").unwrap().parameters);
+    }
+
+    #[test]
+    fn append_param_adds_axis() {
+        let cfg = ChoptConfig::from_json_str(crate::config::LISTING1_EXAMPLE).unwrap();
+        let n = cfg.space.defs.len();
+        let with_mom = append_param(
+            &cfg,
+            ParamDef {
+                name: "momentum".into(),
+                ptype: ParamType::Float,
+                dist: Dist::Uniform,
+                parameters: vec![Value::Float(0.1), Value::Float(0.999)],
+                p_range: vec![0.0, 1.0],
+            },
+        );
+        assert_eq!(with_mom.space.defs.len(), n + 1);
+        assert!(with_mom.space.def("momentum").is_some());
+        // Re-appending replaces rather than duplicates.
+        let again = append_param(
+            &with_mom,
+            ParamDef {
+                name: "momentum".into(),
+                ptype: ParamType::Float,
+                dist: Dist::Uniform,
+                parameters: vec![Value::Float(0.5), Value::Float(0.9)],
+                p_range: vec![],
+            },
+        );
+        assert_eq!(again.space.defs.len(), n + 1);
+    }
+
+    #[test]
+    fn merge_runs_concatenates() {
+        let a = vec![session(1, 0.01, 1.0)];
+        let b = vec![session(2, 0.02, 2.0), session(3, 0.03, 3.0)];
+        let merged = merge_runs(&[a, b]);
+        assert_eq!(merged.len(), 3);
+    }
+}

@@ -1,0 +1,245 @@
+//! GPU allocation with per-tenant accounting and conservation invariants.
+
+use std::collections::HashMap;
+
+use crate::events::{SimTime, TimeIntegrator};
+
+/// Who holds a GPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Owner {
+    /// A CHOPT session (by CHOPT-session id, not NSML-session id).
+    Chopt(u64),
+    /// Aggregate non-CHOPT users of the shared cluster.
+    External,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum AllocError {
+    #[error("insufficient GPUs: requested {requested}, available {available}")]
+    Insufficient { requested: usize, available: usize },
+    #[error("owner releases {requested} GPUs but holds only {held}")]
+    OverRelease { requested: usize, held: usize },
+}
+
+/// The shared cluster.
+#[derive(Debug)]
+pub struct Cluster {
+    total: usize,
+    held: HashMap<Owner, usize>,
+    /// Total in-use GPUs over time (Fig. 8 green line).
+    pub usage_total: TimeIntegrator,
+    /// Non-CHOPT usage over time (Fig. 8 yellow line).
+    pub usage_external: TimeIntegrator,
+    /// CHOPT usage over time.
+    pub usage_chopt: TimeIntegrator,
+}
+
+impl Cluster {
+    pub fn new(total_gpus: usize) -> Cluster {
+        Cluster {
+            total: total_gpus,
+            held: HashMap::new(),
+            usage_total: TimeIntegrator::new(),
+            usage_external: TimeIntegrator::new(),
+            usage_chopt: TimeIntegrator::new(),
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    pub fn used(&self) -> usize {
+        self.held.values().sum()
+    }
+
+    pub fn available(&self) -> usize {
+        self.total - self.used()
+    }
+
+    /// Utilization in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.used() as f64 / self.total as f64
+        }
+    }
+
+    pub fn held_by(&self, owner: Owner) -> usize {
+        self.held.get(&owner).copied().unwrap_or(0)
+    }
+
+    /// Total GPUs held by all CHOPT sessions.
+    pub fn held_by_chopt(&self) -> usize {
+        self.held
+            .iter()
+            .filter(|(o, _)| matches!(o, Owner::Chopt(_)))
+            .map(|(_, n)| n)
+            .sum()
+    }
+
+    pub fn allocate(&mut self, owner: Owner, n: usize, now: SimTime) -> Result<(), AllocError> {
+        if n > self.available() {
+            return Err(AllocError::Insufficient {
+                requested: n,
+                available: self.available(),
+            });
+        }
+        *self.held.entry(owner).or_insert(0) += n;
+        self.record(now);
+        Ok(())
+    }
+
+    pub fn release(&mut self, owner: Owner, n: usize, now: SimTime) -> Result<(), AllocError> {
+        let held = self.held_by(owner);
+        if n > held {
+            return Err(AllocError::OverRelease {
+                requested: n,
+                held,
+            });
+        }
+        if held == n {
+            self.held.remove(&owner);
+        } else {
+            *self.held.get_mut(&owner).unwrap() -= n;
+        }
+        self.record(now);
+        Ok(())
+    }
+
+    /// Force external usage to an absolute level (trace playback); returns
+    /// the delta applied (positive = grabbed, negative = released).
+    pub fn set_external_demand(&mut self, demand: usize, now: SimTime) -> i64 {
+        let current = self.held_by(Owner::External);
+        // External users can take at most what is free right now.
+        let target = demand.min(current + self.available());
+        if target > current {
+            self.allocate(Owner::External, target - current, now).unwrap();
+        } else if target < current {
+            self.release(Owner::External, current - target, now).unwrap();
+        }
+        target as i64 - current as i64
+    }
+
+    fn record(&mut self, now: SimTime) {
+        let ext = self.held_by(Owner::External) as f64;
+        let chopt = self.held_by_chopt() as f64;
+        self.usage_external.set(now, ext);
+        self.usage_chopt.set(now, chopt);
+        self.usage_total.set(now, ext + chopt);
+        debug_assert!(self.used() <= self.total, "GPU conservation violated");
+    }
+
+    /// GPU-hours consumed by CHOPT up to `now`.
+    pub fn chopt_gpu_hours(&self, now: SimTime) -> f64 {
+        self.usage_chopt.integral_until(now) / 3600.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Config};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn allocate_release_accounting() {
+        let mut c = Cluster::new(8);
+        c.allocate(Owner::Chopt(1), 3, 0.0).unwrap();
+        c.allocate(Owner::External, 4, 1.0).unwrap();
+        assert_eq!(c.used(), 7);
+        assert_eq!(c.available(), 1);
+        assert_eq!(c.held_by(Owner::Chopt(1)), 3);
+        assert_eq!(c.held_by_chopt(), 3);
+        c.release(Owner::Chopt(1), 2, 2.0).unwrap();
+        assert_eq!(c.held_by(Owner::Chopt(1)), 1);
+        assert!((c.utilization() - 5.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_oversubscription() {
+        let mut c = Cluster::new(4);
+        c.allocate(Owner::External, 3, 0.0).unwrap();
+        assert_eq!(
+            c.allocate(Owner::Chopt(1), 2, 0.0),
+            Err(AllocError::Insufficient {
+                requested: 2,
+                available: 1
+            })
+        );
+    }
+
+    #[test]
+    fn rejects_over_release() {
+        let mut c = Cluster::new(4);
+        c.allocate(Owner::Chopt(1), 1, 0.0).unwrap();
+        assert!(matches!(
+            c.release(Owner::Chopt(1), 2, 1.0),
+            Err(AllocError::OverRelease { .. })
+        ));
+    }
+
+    #[test]
+    fn external_demand_clamps_to_free() {
+        let mut c = Cluster::new(8);
+        c.allocate(Owner::Chopt(1), 6, 0.0).unwrap();
+        c.set_external_demand(5, 1.0);
+        assert_eq!(c.held_by(Owner::External), 2); // only 2 free
+        c.release(Owner::Chopt(1), 4, 2.0).unwrap();
+        c.set_external_demand(5, 3.0);
+        assert_eq!(c.held_by(Owner::External), 5);
+        c.set_external_demand(1, 4.0);
+        assert_eq!(c.held_by(Owner::External), 1);
+    }
+
+    #[test]
+    fn gpu_hours_integration() {
+        let mut c = Cluster::new(4);
+        c.allocate(Owner::Chopt(1), 2, 0.0).unwrap();
+        c.release(Owner::Chopt(1), 2, 7200.0).unwrap(); // 2 GPUs for 2h
+        assert!((c.chopt_gpu_hours(7200.0) - 4.0).abs() < 1e-9);
+    }
+
+    /// Property: under any interleaving of allocs/releases/demand changes,
+    /// conservation holds: used <= total, and per-owner balances never go
+    /// negative (enforced by types, checked via accounting equality).
+    #[test]
+    fn prop_gpu_conservation() {
+        check("gpu-conservation", Config::default(), |rng: &mut Rng, size| {
+            let total = 1 + rng.index(32);
+            let mut c = Cluster::new(total);
+            let mut t = 0.0;
+            for _ in 0..size * 4 {
+                t += rng.f64();
+                match rng.index(3) {
+                    0 => {
+                        let owner = Owner::Chopt(rng.index(3) as u64);
+                        let n = rng.index(4);
+                        let _ = c.allocate(owner, n, t);
+                    }
+                    1 => {
+                        let owner = Owner::Chopt(rng.index(3) as u64);
+                        let held = c.held_by(owner);
+                        if held > 0 {
+                            let n = 1 + rng.index(held);
+                            c.release(owner, n, t).map_err(|e| e.to_string())?;
+                        }
+                    }
+                    _ => {
+                        c.set_external_demand(rng.index(total + 4), t);
+                    }
+                }
+                crate::prop_assert!(
+                    c.used() <= c.total(),
+                    "used {} > total {}",
+                    c.used(),
+                    c.total()
+                );
+                let sum = c.held_by_chopt() + c.held_by(Owner::External);
+                crate::prop_assert!(sum == c.used(), "owner sum {} != used {}", sum, c.used());
+            }
+            Ok(())
+        });
+    }
+}

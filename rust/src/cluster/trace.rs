@@ -1,0 +1,133 @@
+//! Non-CHOPT workload trace generator.
+//!
+//! Reproduces the load pattern of the paper's Fig. 8, which divides time
+//! into zones:
+//!
+//!   A — no CHOPT sessions; moderate external load only.
+//!   B — CHOPT sessions start; external load unchanged.
+//!   C — external users go idle; the cluster is under-utilized, so the
+//!       master agent hands idle GPUs to CHOPT.
+//!   D — external users surge back; the master agent claws GPUs back from
+//!       CHOPT sessions.
+//!   E — CHOPT sessions drain and finish; external load tapers.
+//!
+//! The trace emits *demanded* external GPUs as a function of virtual time:
+//! a piecewise base level plus seeded jitter, so runs are reproducible but
+//! not perfectly flat.
+
+use crate::events::SimTime;
+use crate::util::rng::Rng;
+
+/// Named zone of the Fig. 8 timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceZone {
+    A,
+    B,
+    C,
+    D,
+    E,
+}
+
+/// Piecewise external-demand trace over `[0, horizon)`.
+#[derive(Debug, Clone)]
+pub struct ExternalLoadTrace {
+    pub horizon: SimTime,
+    /// Fraction of total GPUs demanded per zone (A..E base levels).
+    pub base: [f64; 5],
+    pub total_gpus: usize,
+    pub jitter: f64,
+    seed: u64,
+}
+
+impl ExternalLoadTrace {
+    /// The canonical Fig. 8 shape over `horizon` seconds of virtual time.
+    pub fn fig8(total_gpus: usize, horizon: SimTime, seed: u64) -> ExternalLoadTrace {
+        ExternalLoadTrace {
+            horizon,
+            // A: moderate, B: moderate, C: idle, D: surge, E: taper.
+            base: [0.55, 0.55, 0.15, 0.85, 0.35],
+            total_gpus,
+            jitter: 0.05,
+            seed,
+        }
+    }
+
+    /// Zone boundaries at 15% / 30% / 55% / 80% of the horizon.
+    pub fn zone(&self, t: SimTime) -> TraceZone {
+        let f = (t / self.horizon).clamp(0.0, 1.0);
+        if f < 0.15 {
+            TraceZone::A
+        } else if f < 0.30 {
+            TraceZone::B
+        } else if f < 0.55 {
+            TraceZone::C
+        } else if f < 0.80 {
+            TraceZone::D
+        } else {
+            TraceZone::E
+        }
+    }
+
+    /// External GPU demand at time `t` (deterministic in (seed, t-bucket)).
+    pub fn demand(&self, t: SimTime) -> usize {
+        let zone = self.zone(t);
+        let base = self.base[zone as usize];
+        // Jitter varies per ~1%-of-horizon bucket so adjacent samples move.
+        let bucket = ((t / self.horizon) * 100.0) as u64;
+        let mut rng = Rng::new(self.seed ^ bucket.wrapping_mul(0xA24B_AED4_963E_E407));
+        let jit = (rng.f64() * 2.0 - 1.0) * self.jitter;
+        let frac = (base + jit).clamp(0.0, 1.0);
+        (frac * self.total_gpus as f64).round() as usize
+    }
+
+    /// Does the CHOPT workload exist in this zone? (Zones B..E.)
+    pub fn chopt_active(&self, t: SimTime) -> bool {
+        !matches!(self.zone(t), TraceZone::A)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zones_partition_timeline() {
+        let tr = ExternalLoadTrace::fig8(40, 1000.0, 1);
+        assert_eq!(tr.zone(0.0), TraceZone::A);
+        assert_eq!(tr.zone(200.0), TraceZone::B);
+        assert_eq!(tr.zone(400.0), TraceZone::C);
+        assert_eq!(tr.zone(700.0), TraceZone::D);
+        assert_eq!(tr.zone(950.0), TraceZone::E);
+    }
+
+    #[test]
+    fn demand_matches_zone_shape() {
+        let tr = ExternalLoadTrace::fig8(100, 1000.0, 2);
+        // C must be the trough, D the peak.
+        let c: usize = tr.demand(400.0);
+        let d: usize = tr.demand(700.0);
+        let a: usize = tr.demand(50.0);
+        assert!(c < a, "C ({c}) should be below A ({a})");
+        assert!(d > a, "D ({d}) should be above A ({a})");
+        assert!(d > c + 30);
+    }
+
+    #[test]
+    fn demand_deterministic_and_bounded() {
+        let tr = ExternalLoadTrace::fig8(64, 500.0, 3);
+        for i in 0..100 {
+            let t = i as f64 * 5.0;
+            let d1 = tr.demand(t);
+            let d2 = tr.demand(t);
+            assert_eq!(d1, d2);
+            assert!(d1 <= 64);
+        }
+    }
+
+    #[test]
+    fn chopt_activity_window() {
+        let tr = ExternalLoadTrace::fig8(10, 1000.0, 4);
+        assert!(!tr.chopt_active(10.0));
+        assert!(tr.chopt_active(500.0));
+    }
+}

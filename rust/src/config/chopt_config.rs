@@ -1,0 +1,617 @@
+//! Parsing/validation of the Listing-1 configuration document.
+
+use crate::hparam::{Condition, Conjunction, ParamDef, Space, Value as HValue};
+use crate::util::json::{self, Value as Json};
+
+/// Default fraction of exited sessions that go to the stop pool (the rest
+/// go to the dead pool) — paper §3.2.1 `stop ratio`.
+pub const DEFAULT_STOP_RATIO: f64 = 0.5;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("config json: {0}")]
+    Json(#[from] json::JsonError),
+    #[error("config space: {0}")]
+    Space(#[from] crate::hparam::SpaceError),
+    #[error("config field '{0}': {1}")]
+    Field(String, String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+fn ferr(field: &str, msg: &str) -> ConfigError {
+    ConfigError::Field(field.to_string(), msg.to_string())
+}
+
+/// Optimization goal direction for `measure`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Order {
+    /// Higher is better (accuracy).
+    Descending,
+    /// Lower is better (loss).
+    Ascending,
+}
+
+impl Order {
+    pub fn parse(s: &str) -> Option<Order> {
+        match s {
+            "descending" | "desc" | "max" => Some(Order::Descending),
+            "ascending" | "asc" | "min" => Some(Order::Ascending),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Order::Descending => "descending",
+            Order::Ascending => "ascending",
+        }
+    }
+
+    /// Is `a` strictly better than `b` under this order?
+    pub fn better(self, a: f64, b: f64) -> bool {
+        match self {
+            Order::Descending => a > b,
+            Order::Ascending => a < b,
+        }
+    }
+
+    /// Worst possible score under this order.
+    pub fn worst(self) -> f64 {
+        match self {
+            Order::Descending => f64::NEG_INFINITY,
+            Order::Ascending => f64::INFINITY,
+        }
+    }
+}
+
+/// `tune` section: which HyperOpt algorithm hosts this session.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TuneAlgo {
+    /// Random search; early stopping governed by `step` (−1 = off).
+    Random,
+    /// Population Based Training (Jaderberg et al., 2017).
+    Pbt {
+        /// "truncation" | "binary_tournament"
+        exploit: String,
+        /// "perturb" | "resample"
+        explore: String,
+    },
+    /// Hyperband (Li et al., 2017).
+    Hyperband {
+        /// Maximum resource (epochs) per configuration — R.
+        max_resource: usize,
+        /// Downsampling rate — eta.
+        eta: usize,
+    },
+    /// Asynchronous Successive Halving (extension; future-work hook).
+    Asha {
+        min_resource: usize,
+        max_resource: usize,
+        eta: usize,
+    },
+}
+
+impl TuneAlgo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TuneAlgo::Random => "random",
+            TuneAlgo::Pbt { .. } => "pbt",
+            TuneAlgo::Hyperband { .. } => "hyperband",
+            TuneAlgo::Asha { .. } => "asha",
+        }
+    }
+}
+
+/// `termination` section: first condition reached stops the session.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Termination {
+    /// Wall/virtual-time limit in hours.
+    pub time_hours: Option<f64>,
+    /// Maximum number of NSML sessions (models) ever created.
+    pub max_session_number: Option<usize>,
+    /// Stop as soon as the best score passes this threshold.
+    pub performance_threshold: Option<f64>,
+}
+
+impl Termination {
+    pub fn is_unbounded(&self) -> bool {
+        self.time_hours.is_none()
+            && self.max_session_number.is_none()
+            && self.performance_threshold.is_none()
+    }
+}
+
+/// A full CHOPT session configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChoptConfig {
+    pub space: Space,
+    /// Metric key, e.g. "test/accuracy" or "test/em".
+    pub measure: String,
+    pub order: Order,
+    /// Early-stopping check interval in epochs; −1 disables early stopping.
+    pub step: i64,
+    /// Population size (parallel NSML sessions).
+    pub population: usize,
+    pub tune: TuneAlgo,
+    pub termination: Termination,
+    /// Fraction of exited sessions routed to the stop pool (vs dead pool).
+    pub stop_ratio: f64,
+    /// Model selector: an AOT variant name (`ic_d2_w1`, `qa_bidaf`) or a
+    /// surrogate family (`surrogate:resnet`, `surrogate:wrn`, ...).
+    pub model: String,
+    /// Maximum epochs a single NSML session trains (paper uses 300).
+    pub max_epochs: usize,
+    /// GPUs a single NSML session occupies.
+    pub gpus_per_session: usize,
+    /// Resource limit for this CHOPT session (live-pool cap), before
+    /// Stop-and-Go adjustments.
+    pub max_gpus: usize,
+    /// Optional model-size constraint (Table 3): trials whose parameter
+    /// count exceeds this are rejected before launch.
+    pub max_params: Option<u64>,
+    pub seed: u64,
+}
+
+impl ChoptConfig {
+    pub fn early_stopping_enabled(&self) -> bool {
+        self.step > 0
+    }
+
+    /// Parse from JSON text (the Listing-1 document).
+    pub fn from_json_str(text: &str) -> Result<ChoptConfig, ConfigError> {
+        let doc = json::parse(text)?;
+        Self::from_json(&doc)
+    }
+
+    pub fn load(path: &str) -> Result<ChoptConfig, ConfigError> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json_str(&text)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<ChoptConfig, ConfigError> {
+        // --- space ---------------------------------------------------
+        let hp = doc.require("h_params")?;
+        let mut defs = Vec::new();
+        for (name, pj) in hp
+            .as_obj()
+            .ok_or_else(|| ferr("h_params", "must be an object"))?
+        {
+            defs.push(ParamDef::from_json(name, pj)?);
+        }
+        let conditions = match doc.get("h_params_conditions").and_then(|v| v.as_arr()) {
+            None => Vec::new(),
+            Some(items) => items
+                .iter()
+                .map(|c| parse_condition(c, &defs))
+                .collect::<Result<Vec<_>, _>>()?,
+        };
+        let conjunctions = match doc.get("h_params_conjunctions").and_then(|v| v.as_arr()) {
+            None => Vec::new(),
+            Some(items) => items
+                .iter()
+                .map(|c| parse_conjunction(c, &defs))
+                .collect::<Result<Vec<_>, _>>()?,
+        };
+        let space = Space {
+            defs,
+            conditions,
+            conjunctions,
+        };
+        space.validate()?;
+
+        // --- goal ----------------------------------------------------
+        let measure = doc
+            .require("measure")?
+            .as_str()
+            .ok_or_else(|| ferr("measure", "must be a string"))?
+            .to_string();
+        let order_s = doc
+            .require("order")?
+            .as_str()
+            .ok_or_else(|| ferr("order", "must be a string"))?;
+        let order = Order::parse(order_s)
+            .ok_or_else(|| ferr("order", "expected 'descending' or 'ascending'"))?;
+
+        // --- loop shape ----------------------------------------------
+        let step = doc
+            .get("step")
+            .map(|v| v.as_i64().ok_or_else(|| ferr("step", "must be an int")))
+            .transpose()?
+            .unwrap_or(-1);
+        if step == 0 || step < -1 {
+            return Err(ferr("step", "must be a positive epoch interval or -1"));
+        }
+        let population = doc
+            .get("population")
+            .map(|v| {
+                v.as_usize()
+                    .ok_or_else(|| ferr("population", "must be a positive int"))
+            })
+            .transpose()?
+            .unwrap_or(5);
+        if population == 0 {
+            return Err(ferr("population", "must be >= 1"));
+        }
+
+        let tune = parse_tune(doc.require("tune")?)?;
+        let termination = parse_termination(doc.get("termination"))?;
+        let stop_ratio = doc
+            .get("stop_ratio")
+            .map(|v| v.as_f64().ok_or_else(|| ferr("stop_ratio", "must be a number")))
+            .transpose()?
+            .unwrap_or(DEFAULT_STOP_RATIO);
+        if !(0.0..=1.0).contains(&stop_ratio) {
+            return Err(ferr("stop_ratio", "must be in [0, 1]"));
+        }
+
+        // --- platform ------------------------------------------------
+        let model = doc
+            .get("model")
+            .and_then(|v| v.as_str())
+            .unwrap_or("surrogate:resnet")
+            .to_string();
+        let max_epochs = doc
+            .get("max_epochs")
+            .map(|v| v.as_usize().ok_or_else(|| ferr("max_epochs", "must be a positive int")))
+            .transpose()?
+            .unwrap_or(300);
+        if max_epochs == 0 {
+            return Err(ferr("max_epochs", "must be >= 1"));
+        }
+        let gpus_per_session = doc
+            .get("gpus_per_session")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(1)
+            .max(1);
+        let max_gpus = doc
+            .get("max_gpus")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(population * gpus_per_session);
+        let max_params = doc
+            .get("max_params")
+            .and_then(|v| v.as_i64())
+            .map(|v| v as u64);
+        let seed = doc
+            .get("seed")
+            .and_then(|v| v.as_i64())
+            .map(|v| v as u64)
+            .unwrap_or(0);
+
+        Ok(ChoptConfig {
+            space,
+            measure,
+            order,
+            step,
+            population,
+            tune,
+            termination,
+            stop_ratio,
+            model,
+            max_epochs,
+            gpus_per_session,
+            max_gpus,
+            max_params,
+            seed,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut doc = self.space.to_json();
+        doc.set("measure", Json::Str(self.measure.clone()));
+        doc.set("order", Json::Str(self.order.name().to_string()));
+        doc.set("step", Json::Num(self.step as f64));
+        doc.set("population", Json::Num(self.population as f64));
+        let tune = match &self.tune {
+            TuneAlgo::Random => Json::obj().with("random", Json::obj()),
+            TuneAlgo::Pbt { exploit, explore } => Json::obj().with(
+                "pbt",
+                Json::obj()
+                    .with("exploit", Json::Str(exploit.clone()))
+                    .with("explore", Json::Str(explore.clone())),
+            ),
+            TuneAlgo::Hyperband { max_resource, eta } => Json::obj().with(
+                "hyperband",
+                Json::obj()
+                    .with("max_resource", Json::Num(*max_resource as f64))
+                    .with("eta", Json::Num(*eta as f64)),
+            ),
+            TuneAlgo::Asha {
+                min_resource,
+                max_resource,
+                eta,
+            } => Json::obj().with(
+                "asha",
+                Json::obj()
+                    .with("min_resource", Json::Num(*min_resource as f64))
+                    .with("max_resource", Json::Num(*max_resource as f64))
+                    .with("eta", Json::Num(*eta as f64)),
+            ),
+        };
+        doc.set("tune", tune);
+        let mut term = Json::obj();
+        if let Some(t) = self.termination.time_hours {
+            term.set("time", Json::Num(t));
+        }
+        if let Some(n) = self.termination.max_session_number {
+            term.set("max_session_number", Json::Num(n as f64));
+        }
+        if let Some(p) = self.termination.performance_threshold {
+            term.set("performance_threshold", Json::Num(p));
+        }
+        doc.set("termination", term);
+        doc.set("stop_ratio", Json::Num(self.stop_ratio));
+        doc.set("model", Json::Str(self.model.clone()));
+        doc.set("max_epochs", Json::Num(self.max_epochs as f64));
+        doc.set("gpus_per_session", Json::Num(self.gpus_per_session as f64));
+        doc.set("max_gpus", Json::Num(self.max_gpus as f64));
+        if let Some(p) = self.max_params {
+            doc.set("max_params", Json::Num(p as f64));
+        }
+        doc.set("seed", Json::Num(self.seed as f64));
+        doc
+    }
+}
+
+fn parse_condition(c: &Json, defs: &[ParamDef]) -> Result<Condition, ConfigError> {
+    let child = c
+        .require("child")?
+        .as_str()
+        .ok_or_else(|| ferr("h_params_conditions.child", "must be a string"))?
+        .to_string();
+    let parent = c
+        .require("parent")?
+        .as_str()
+        .ok_or_else(|| ferr("h_params_conditions.parent", "must be a string"))?
+        .to_string();
+    let values = parse_hvalues(
+        c.require("values")?,
+        defs,
+        &parent,
+        "h_params_conditions.values",
+    )?;
+    Ok(Condition {
+        child,
+        parent,
+        values,
+    })
+}
+
+fn parse_conjunction(c: &Json, defs: &[ParamDef]) -> Result<Conjunction, ConfigError> {
+    let pairs = c
+        .as_obj()
+        .ok_or_else(|| ferr("h_params_conjunctions", "entries must be objects"))?;
+    let mut clauses = Vec::new();
+    for (name, allowed) in pairs {
+        clauses.push((
+            name.clone(),
+            parse_hvalues(allowed, defs, name, "h_params_conjunctions")?,
+        ));
+    }
+    Ok(Conjunction { clauses })
+}
+
+fn parse_hvalues(
+    j: &Json,
+    defs: &[ParamDef],
+    param: &str,
+    ctx: &str,
+) -> Result<Vec<HValue>, ConfigError> {
+    let ptype = defs
+        .iter()
+        .find(|d| d.name == param)
+        .map(|d| d.ptype)
+        .unwrap_or(crate::hparam::ParamType::Str);
+    j.as_arr()
+        .ok_or_else(|| ferr(ctx, "must be an array"))?
+        .iter()
+        .map(|v| HValue::from_json(v, ptype).ok_or_else(|| ferr(ctx, "bad value")))
+        .collect()
+}
+
+fn parse_tune(j: &Json) -> Result<TuneAlgo, ConfigError> {
+    let pairs = j
+        .as_obj()
+        .ok_or_else(|| ferr("tune", "must be an object like {'pbt': {...}}"))?;
+    if pairs.len() != 1 {
+        return Err(ferr("tune", "must contain exactly one algorithm"));
+    }
+    let (name, body) = &pairs[0];
+    match name.as_str() {
+        "random" => Ok(TuneAlgo::Random),
+        "pbt" => Ok(TuneAlgo::Pbt {
+            exploit: body
+                .get("exploit")
+                .and_then(|v| v.as_str())
+                .unwrap_or("truncation")
+                .to_string(),
+            explore: body
+                .get("explore")
+                .and_then(|v| v.as_str())
+                .unwrap_or("perturb")
+                .to_string(),
+        }),
+        "hyperband" => Ok(TuneAlgo::Hyperband {
+            max_resource: body
+                .get("max_resource")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(81),
+            eta: body.get("eta").and_then(|v| v.as_usize()).unwrap_or(3).max(2),
+        }),
+        "asha" => Ok(TuneAlgo::Asha {
+            min_resource: body
+                .get("min_resource")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(1)
+                .max(1),
+            max_resource: body
+                .get("max_resource")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(81),
+            eta: body.get("eta").and_then(|v| v.as_usize()).unwrap_or(3).max(2),
+        }),
+        other => Err(ferr("tune", &format!("unknown algorithm '{other}'"))),
+    }
+}
+
+fn parse_termination(j: Option<&Json>) -> Result<Termination, ConfigError> {
+    let mut t = Termination::default();
+    let Some(j) = j else { return Ok(t) };
+    if let Some(v) = j.get("time") {
+        t.time_hours = Some(
+            v.as_f64()
+                .ok_or_else(|| ferr("termination.time", "must be hours (number)"))?,
+        );
+    }
+    if let Some(v) = j.get("max_session_number") {
+        t.max_session_number = Some(
+            v.as_usize()
+                .ok_or_else(|| ferr("termination.max_session_number", "must be an int"))?,
+        );
+    }
+    if let Some(v) = j.get("performance_threshold") {
+        t.performance_threshold = Some(
+            v.as_f64()
+                .ok_or_else(|| ferr("termination.performance_threshold", "must be a number"))?,
+        );
+    }
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+
+/// The paper's Listing-1 example, as a ready-to-use config string (used by
+/// tests, docs, and `chopt example-config`).
+pub const LISTING1_EXAMPLE: &str = r#"{
+  "h_params": {
+    "lr": {"parameters": [0.01, 0.09], "distribution": "log_uniform",
+           "type": "float", "p_range": [0.001, 0.1]},
+    "depth": {"parameters": [5, 10], "distribution": "uniform", "type": "int",
+              "p_range": [5, 10]},
+    "activation": {"parameters": ["relu", "sigmoid"], "distribution": "categorical",
+                   "type": "str", "p_range": []}
+  },
+  "h_params_conditions": [],
+  "h_params_conjunctions": [],
+  "measure": "test/accuracy",
+  "order": "descending",
+  "step": 5,
+  "population": 5,
+  "tune": {"pbt": {"exploit": "truncation", "explore": "perturb"}},
+  "termination": {"max_session_number": 50}
+}"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_listing1() {
+        let c = ChoptConfig::from_json_str(LISTING1_EXAMPLE).unwrap();
+        assert_eq!(c.measure, "test/accuracy");
+        assert_eq!(c.order, Order::Descending);
+        assert_eq!(c.step, 5);
+        assert!(c.early_stopping_enabled());
+        assert_eq!(c.population, 5);
+        assert_eq!(
+            c.tune,
+            TuneAlgo::Pbt {
+                exploit: "truncation".into(),
+                explore: "perturb".into()
+            }
+        );
+        assert_eq!(c.termination.max_session_number, Some(50));
+        assert_eq!(c.space.defs.len(), 3);
+        assert_eq!(c.stop_ratio, DEFAULT_STOP_RATIO);
+    }
+
+    #[test]
+    fn step_minus_one_disables_early_stopping() {
+        let text = LISTING1_EXAMPLE.replace("\"step\": 5", "\"step\": -1");
+        let c = ChoptConfig::from_json_str(&text).unwrap();
+        assert!(!c.early_stopping_enabled());
+    }
+
+    #[test]
+    fn rejects_bad_step() {
+        let text = LISTING1_EXAMPLE.replace("\"step\": 5", "\"step\": 0");
+        assert!(ChoptConfig::from_json_str(&text).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_tune() {
+        let text = LISTING1_EXAMPLE.replace("\"pbt\"", "\"cma_es\"");
+        assert!(ChoptConfig::from_json_str(&text).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_order_and_measure() {
+        let t1 = LISTING1_EXAMPLE.replace("\"descending\"", "\"sideways\"");
+        assert!(ChoptConfig::from_json_str(&t1).is_err());
+        let t2 = LISTING1_EXAMPLE.replace("\"measure\": \"test/accuracy\",", "");
+        assert!(ChoptConfig::from_json_str(&t2).is_err());
+    }
+
+    #[test]
+    fn order_better() {
+        assert!(Order::Descending.better(0.9, 0.8));
+        assert!(Order::Ascending.better(0.1, 0.2));
+        assert!(!Order::Descending.better(0.8, 0.8));
+        assert_eq!(Order::Descending.worst(), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ChoptConfig::from_json_str(LISTING1_EXAMPLE).unwrap();
+        let j = c.to_json().to_string_pretty();
+        let c2 = ChoptConfig::from_json_str(&j).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn hyperband_defaults() {
+        let text = LISTING1_EXAMPLE.replace(
+            "\"tune\": {\"pbt\": {\"exploit\": \"truncation\", \"explore\": \"perturb\"}}",
+            "\"tune\": {\"hyperband\": {}}",
+        );
+        let c = ChoptConfig::from_json_str(&text).unwrap();
+        assert_eq!(
+            c.tune,
+            TuneAlgo::Hyperband {
+                max_resource: 81,
+                eta: 3
+            }
+        );
+    }
+
+    #[test]
+    fn conditions_parse() {
+        let text = LISTING1_EXAMPLE.replace(
+            "\"h_params_conditions\": []",
+            r#""h_params_conditions": [{"child": "lr", "parent": "activation", "values": ["relu"]}]"#,
+        );
+        let c = ChoptConfig::from_json_str(&text).unwrap();
+        assert_eq!(c.space.conditions.len(), 1);
+        assert_eq!(c.space.conditions[0].child, "lr");
+    }
+
+    #[test]
+    fn conjunctions_parse() {
+        let text = LISTING1_EXAMPLE.replace(
+            "\"h_params_conjunctions\": []",
+            r#""h_params_conjunctions": [{"activation": ["relu"], "depth": [5, 6]}]"#,
+        );
+        let c = ChoptConfig::from_json_str(&text).unwrap();
+        assert_eq!(c.space.conjunctions.len(), 1);
+        assert_eq!(c.space.conjunctions[0].clauses.len(), 2);
+    }
+
+    #[test]
+    fn defaults_for_platform_fields() {
+        let c = ChoptConfig::from_json_str(LISTING1_EXAMPLE).unwrap();
+        assert_eq!(c.max_epochs, 300);
+        assert_eq!(c.gpus_per_session, 1);
+        assert_eq!(c.max_gpus, 5);
+        assert_eq!(c.model, "surrogate:resnet");
+    }
+}

@@ -1,0 +1,17 @@
+//! CHOPT session configuration (paper §3.4, Listing 1).
+//!
+//! A configuration is a JSON document with the exact shape of the paper's
+//! python-dict listing: `h_params` + `h_params_conditions` +
+//! `h_params_conjunctions` define the space; `measure`/`order` define the
+//! goal; `step` controls early stopping (−1 disables); `population`,
+//! `tune` and `termination` select and bound the optimization algorithm.
+//! CHOPT needs *no user-code modification*: the model side only has to
+//! accept hyperparameters as inputs (our AOT train-steps take them as
+//! scalar runtime arguments).
+
+mod chopt_config;
+
+pub use chopt_config::{
+    ChoptConfig, ConfigError, Order, Termination, TuneAlgo, DEFAULT_STOP_RATIO,
+    LISTING1_EXAMPLE,
+};

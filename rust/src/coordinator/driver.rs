@@ -1,0 +1,411 @@
+//! Discrete-event driver: runs CHOPT sessions (agents) + the master agent
+//! + the shared cluster to completion in virtual time.
+//!
+//! This is the composition root for all simulator-backed experiments
+//! (Tables 1–4, Figs 2/8/9): benches build a [`SimSetup`], call
+//! [`run_sim`], and read the [`SimOutcome`].
+
+use crate::cluster::{Cluster, ExternalLoadTrace};
+use crate::config::ChoptConfig;
+use crate::events::{EventQueue, SimTime};
+use crate::nsml::SessionId;
+use crate::trainer::Trainer;
+
+use super::agent::{Agent, ScheduleReq};
+use super::election::Election;
+use super::master::{master_tick, MasterTickLog, StopAndGoPolicy};
+use super::queue::SessionQueue;
+
+/// Simulation events.
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    /// A training interval of (agent slot, session) completed.
+    Interval { slot: usize, sid: SessionId },
+    /// Periodic master-agent control tick.
+    MasterTick,
+}
+
+/// Everything a simulated run needs.
+pub struct SimSetup {
+    pub cluster_gpus: usize,
+    /// Configs to run; queued FIFO onto `agent_slots` agent slots.
+    pub configs: Vec<ChoptConfig>,
+    /// Virtual submit time per config (missing entries = 0 — submitted at
+    /// simulation start).  Models users starting CHOPT sessions mid-trace.
+    pub submit_times: Vec<SimTime>,
+    pub agent_slots: usize,
+    /// Optional non-CHOPT background load (None = dedicated cluster).
+    pub trace: Option<ExternalLoadTrace>,
+    pub policy: StopAndGoPolicy,
+    /// Master control period in virtual seconds.
+    pub master_period: SimTime,
+    /// Hard stop for the simulation clock.
+    pub horizon: SimTime,
+    /// Failure injection: (virtual time, agent slot) pairs — the slot's
+    /// agent crashes at that time (GPUs released, CHOPT session aborted),
+    /// and if it held master-agent leadership the election fails over.
+    pub failures: Vec<(SimTime, usize)>,
+}
+
+impl SimSetup {
+    pub fn single(config: ChoptConfig, cluster_gpus: usize) -> SimSetup {
+        SimSetup {
+            cluster_gpus,
+            configs: vec![config],
+            submit_times: Vec::new(),
+            agent_slots: 1,
+            trace: None,
+            policy: StopAndGoPolicy::default(),
+            master_period: 60.0,
+            horizon: 400.0 * 24.0 * 3600.0, // 400 virtual days
+            failures: Vec::new(),
+        }
+    }
+}
+
+/// Results of a simulated run.
+pub struct SimOutcome {
+    /// All agents that ran (one per completed/active CHOPT session).
+    pub agents: Vec<Agent>,
+    pub cluster: Cluster,
+    pub master_log: Vec<MasterTickLog>,
+    pub election: Election,
+    /// Final virtual time.
+    pub end_time: SimTime,
+    pub events_processed: u64,
+}
+
+impl SimOutcome {
+    /// Best (agent idx, session, measure) across all agents.
+    pub fn best(&self) -> Option<(usize, SessionId, f64)> {
+        self.agents
+            .iter()
+            .enumerate()
+            .filter_map(|(i, a)| a.best().map(|(sid, m)| (i, sid, m)))
+            .max_by(|a, b| a.2.partial_cmp(&b.2).unwrap_or(std::cmp::Ordering::Equal))
+    }
+
+    /// Total CHOPT GPU-hours consumed.
+    pub fn gpu_hours(&self) -> f64 {
+        self.cluster.chopt_gpu_hours(self.end_time)
+    }
+}
+
+/// Run a simulation to completion (all configs done, or horizon).
+///
+/// `make_trainer(chopt_session_id)` builds a fresh trainer per CHOPT
+/// session (surrogate for sim-scale runs, real PJRT for small ones).
+pub fn run_sim(
+    setup: SimSetup,
+    mut make_trainer: impl FnMut(u64) -> Box<dyn Trainer>,
+) -> SimOutcome {
+    let mut cluster = Cluster::new(setup.cluster_gpus);
+    let mut queue = SessionQueue::new();
+    for (i, c) in setup.configs.into_iter().enumerate() {
+        let at = setup.submit_times.get(i).copied().unwrap_or(0.0);
+        queue.submit(c, at);
+    }
+    let n_slots = setup.agent_slots.max(1);
+    let mut election = Election::new(n_slots);
+    // Agent slots: None = idle. Completed agents are moved to `done`.
+    let mut slots: Vec<Option<Agent>> = (0..n_slots).map(|_| None).collect();
+    let mut done: Vec<Agent> = Vec::new();
+    let mut master_log: Vec<MasterTickLog> = Vec::new();
+    let mut evq: EventQueue<Ev> = EventQueue::new();
+    let mut next_chopt_id: u64 = 0;
+
+    // Helpers -------------------------------------------------------------
+    let assign_idle =
+        |slots: &mut Vec<Option<Agent>>,
+         queue: &mut SessionQueue,
+         next_chopt_id: &mut u64,
+         make_trainer: &mut dyn FnMut(u64) -> Box<dyn Trainer>,
+         cluster: &mut Cluster,
+         now: SimTime,
+         evq: &mut EventQueue<Ev>| {
+            for (slot_idx, slot) in slots.iter_mut().enumerate() {
+                if slot.is_none() {
+                    if let Some(sub) = queue.pull_ready(now) {
+                        *next_chopt_id += 1;
+                        let id = *next_chopt_id;
+                        let trainer = make_trainer(id);
+                        let mut agent = Agent::new(id, sub.config, trainer);
+                        let mut reqs: Vec<ScheduleReq> = Vec::new();
+                        agent.fill(cluster, now, &mut reqs);
+                        for r in reqs {
+                            evq.schedule_in(
+                                r.seconds,
+                                Ev::Interval {
+                                    slot: slot_idx,
+                                    sid: r.session,
+                                },
+                            );
+                        }
+                        *slot = Some(agent);
+                    }
+                }
+            }
+        };
+
+    // Bootstrap.
+    assign_idle(
+        &mut slots,
+        &mut queue,
+        &mut next_chopt_id,
+        &mut make_trainer,
+        &mut cluster,
+        0.0,
+        &mut evq,
+    );
+    evq.schedule_at(0.0, Ev::MasterTick);
+
+    // Main loop ------------------------------------------------------------
+    while let Some((t, ev)) = evq.pop() {
+        if t > setup.horizon {
+            break;
+        }
+        match ev {
+            Ev::Interval { slot, sid } => {
+                if let Some(agent) = slots[slot].as_mut() {
+                    let mut reqs: Vec<ScheduleReq> = Vec::new();
+                    agent.on_interval_done(sid, &mut cluster, t, &mut reqs);
+                    for r in reqs {
+                        evq.schedule_in(
+                            r.seconds,
+                            Ev::Interval {
+                                slot,
+                                sid: r.session,
+                            },
+                        );
+                    }
+                    if agent.finished {
+                        done.push(slots[slot].take().unwrap());
+                        assign_idle(
+                            &mut slots,
+                            &mut queue,
+                            &mut next_chopt_id,
+                            &mut make_trainer,
+                            &mut cluster,
+                            t,
+                            &mut evq,
+                        );
+                    }
+                }
+            }
+            Ev::MasterTick => {
+                // Failure injection: crash scheduled agents first so the
+                // election reflects reality before this tick's decisions.
+                for &(at, slot_idx) in &setup.failures {
+                    if at <= t && slot_idx < slots.len() {
+                        if let Some(mut dead) = slots[slot_idx].take() {
+                            dead.shutdown("agent_failure", &mut cluster, t);
+                            done.push(dead);
+                            election.fail(slot_idx);
+                        }
+                    }
+                }
+                // The elected leader runs Stop-and-Go (any agent could; the
+                // election just decides who — in-process it's the policy
+                // call below either way).
+                let external = setup
+                    .trace
+                    .as_ref()
+                    .map(|tr| tr.demand(t))
+                    .unwrap_or(0);
+                let bases: Vec<usize> = slots
+                    .iter()
+                    .flatten()
+                    .filter(|a| !a.finished)
+                    .map(|a| a.cfg.max_gpus)
+                    .collect();
+                let (targets, log) =
+                    master_tick(&setup.policy, &mut cluster, external, &bases, t);
+                master_log.push(log);
+                let mut ti = 0;
+                for slot_idx in 0..slots.len() {
+                    let Some(agent) = slots[slot_idx].as_mut() else {
+                        continue;
+                    };
+                    if agent.finished {
+                        continue;
+                    }
+                    agent.check_termination(&mut cluster, t);
+                    if agent.finished {
+                        done.push(slots[slot_idx].take().unwrap());
+                        continue;
+                    }
+                    let target = targets.get(ti).copied().unwrap_or(agent.cfg.max_gpus);
+                    ti += 1;
+                    let mut reqs: Vec<ScheduleReq> = Vec::new();
+                    agent.set_gpu_target(target, &mut cluster, t, &mut reqs);
+                    for r in reqs {
+                        evq.schedule_in(
+                            r.seconds,
+                            Ev::Interval {
+                                slot: slot_idx,
+                                sid: r.session,
+                            },
+                        );
+                    }
+                }
+                assign_idle(
+                    &mut slots,
+                    &mut queue,
+                    &mut next_chopt_id,
+                    &mut make_trainer,
+                    &mut cluster,
+                    t,
+                    &mut evq,
+                );
+                let any_active = slots.iter().any(|s| s.is_some()) || !queue.is_empty();
+                if any_active {
+                    evq.schedule_in(setup.master_period, Ev::MasterTick);
+                }
+            }
+        }
+        let all_done = slots.iter().all(|s| s.is_none()) && queue.is_empty();
+        if all_done {
+            break;
+        }
+    }
+
+    // Keep the elected-master abstraction honest: if slot 0's agent is
+    // gone, fail it over (exercised further in tests).
+    if slots.first().map(|s| s.is_none()).unwrap_or(false) {
+        election.fail(0);
+    }
+
+    let end_time = evq.now();
+    for slot in slots.iter_mut() {
+        if let Some(mut a) = slot.take() {
+            a.shutdown("horizon", &mut cluster, end_time);
+            done.push(a);
+        }
+    }
+    let events_processed = evq.processed();
+    SimOutcome {
+        agents: done,
+        cluster,
+        master_log,
+        election,
+        end_time,
+        events_processed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChoptConfig;
+    use crate::trainer::surrogate::SurrogateTrainer;
+
+    fn small_cfg(tune: &str, step: i64, max_sessions: usize) -> ChoptConfig {
+        let text = format!(
+            r#"{{
+              "h_params": {{
+                "lr": {{"parameters": [0.01, 0.09], "distribution": "log_uniform",
+                        "type": "float", "p_range": [0.001, 0.1]}},
+                "momentum": {{"parameters": [0.5, 0.99], "distribution": "uniform",
+                        "type": "float", "p_range": [0.1, 0.999]}}
+              }},
+              "measure": "test/accuracy",
+              "order": "descending",
+              "step": {step},
+              "population": 4,
+              "tune": {tune},
+              "termination": {{"max_session_number": {max_sessions}}},
+              "model": "surrogate:resnet",
+              "max_epochs": 50,
+              "max_gpus": 4,
+              "seed": 11
+            }}"#
+        );
+        ChoptConfig::from_json_str(&text).unwrap()
+    }
+
+    #[test]
+    fn random_search_runs_to_completion() {
+        let cfg = small_cfg("{\"random\": {}}", 10, 12);
+        let out = run_sim(SimSetup::single(cfg, 8), |id| {
+            Box::new(SurrogateTrainer::new(100 + id))
+        });
+        assert_eq!(out.agents.len(), 1);
+        let a = &out.agents[0];
+        assert!(a.finished);
+        assert!(a.created >= 12, "created {}", a.created);
+        let (_, _, best) = out.best().unwrap();
+        assert!(best > 60.0, "best {best}");
+        assert!(out.gpu_hours() > 0.0);
+        // Pool invariants hold at the end.
+        a.pools.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pbt_runs_and_mutates() {
+        let cfg = small_cfg(
+            "{\"pbt\": {\"exploit\": \"truncation\", \"explore\": \"perturb\"}}",
+            5,
+            16,
+        );
+        let out = run_sim(SimSetup::single(cfg, 8), |id| {
+            Box::new(SurrogateTrainer::new(200 + id))
+        });
+        let a = &out.agents[0];
+        assert!(a.finished);
+        let mutations = a
+            .events
+            .iter()
+            .filter(|e| matches!(e, super::super::agent::AgentEvent::Mutated { .. }))
+            .count();
+        assert!(mutations > 0, "PBT should exploit at least once");
+    }
+
+    #[test]
+    fn hyperband_completes_brackets() {
+        let cfg = small_cfg(
+            "{\"hyperband\": {\"max_resource\": 9, \"eta\": 3}}",
+            3,
+            1000,
+        );
+        let out = run_sim(SimSetup::single(cfg, 16), |id| {
+            Box::new(SurrogateTrainer::new(300 + id))
+        });
+        let a = &out.agents[0];
+        assert!(a.finished, "hyperband session should finish");
+        // Hyperband R=9/eta=3 runs 2 brackets: 9+3+1 + 3+... sessions.
+        assert!(a.created >= 9, "created {}", a.created);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let cfg = small_cfg("{\"random\": {}}", 10, 8);
+            let out = run_sim(SimSetup::single(cfg, 4), |id| {
+                Box::new(SurrogateTrainer::new(42 + id))
+            });
+            (
+                out.best().map(|(_, _, m)| m),
+                out.end_time,
+                out.events_processed,
+            )
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn gpu_cap_respected() {
+        let cfg = small_cfg("{\"random\": {}}", 5, 10);
+        let out = run_sim(SimSetup::single(cfg, 2), |id| {
+            Box::new(SurrogateTrainer::new(id))
+        });
+        // Peak CHOPT usage never exceeded the 2-GPU cluster.
+        let peak = out
+            .cluster
+            .usage_chopt
+            .series
+            .iter()
+            .map(|&(_, v)| v)
+            .fold(0.0, f64::max);
+        assert!(peak <= 2.0, "peak {peak}");
+    }
+}

@@ -1,0 +1,146 @@
+//! Master-agent leader election (paper §3.2.2).
+//!
+//! "Master agent is elected from one of agents like zookeeper's leader
+//! election. If master agent falls, any agent can be the next master
+//! agent."  We reproduce the zookeeper *semantics* in-process: every agent
+//! holds a monotonically increasing term; the live agent with the lowest
+//! id wins the term (ephemeral-sequential-node order), and any liveness
+//! failure triggers a new term.
+
+/// Election state over a fixed agent slot set.
+#[derive(Debug, Clone)]
+pub struct Election {
+    alive: Vec<bool>,
+    term: u64,
+    leader: Option<usize>,
+}
+
+impl Election {
+    pub fn new(n_agents: usize) -> Election {
+        let mut e = Election {
+            alive: vec![true; n_agents],
+            term: 0,
+            leader: None,
+        };
+        e.elect();
+        e
+    }
+
+    /// Current leader (the master agent), if any agent is alive.
+    pub fn leader(&self) -> Option<usize> {
+        self.leader
+    }
+
+    /// Current term (bumps on every leadership change).
+    pub fn term(&self) -> u64 {
+        self.term
+    }
+
+    pub fn is_leader(&self, agent: usize) -> bool {
+        self.leader == Some(agent)
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
+    }
+
+    /// An agent failed (missed heartbeats). Re-elects if it was leader.
+    pub fn fail(&mut self, agent: usize) {
+        if agent < self.alive.len() && self.alive[agent] {
+            self.alive[agent] = false;
+            if self.leader == Some(agent) {
+                self.elect();
+            }
+        }
+    }
+
+    /// An agent recovered. It does NOT preempt the current leader (no
+    /// leadership flapping) — it only becomes eligible for future terms.
+    pub fn recover(&mut self, agent: usize) {
+        if agent < self.alive.len() && !self.alive[agent] {
+            self.alive[agent] = true;
+            if self.leader.is_none() {
+                self.elect();
+            }
+        }
+    }
+
+    fn elect(&mut self) {
+        let next = self.alive.iter().position(|&a| a);
+        if next != self.leader {
+            self.leader = next;
+            self.term += 1;
+        } else if self.leader.is_none() {
+            // No candidates; term unchanged.
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_agent_wins_initially() {
+        let e = Election::new(3);
+        assert_eq!(e.leader(), Some(0));
+        assert_eq!(e.term(), 1);
+        assert!(e.is_leader(0));
+        assert!(!e.is_leader(1));
+    }
+
+    #[test]
+    fn failover_to_next_alive() {
+        let mut e = Election::new(3);
+        e.fail(0);
+        assert_eq!(e.leader(), Some(1));
+        assert_eq!(e.term(), 2);
+        e.fail(1);
+        assert_eq!(e.leader(), Some(2));
+        assert_eq!(e.term(), 3);
+        e.fail(2);
+        assert_eq!(e.leader(), None);
+        assert_eq!(e.alive_count(), 0);
+    }
+
+    #[test]
+    fn non_leader_failure_keeps_leader() {
+        let mut e = Election::new(3);
+        e.fail(2);
+        assert_eq!(e.leader(), Some(0));
+        assert_eq!(e.term(), 1, "term must not bump");
+    }
+
+    #[test]
+    fn recovery_does_not_preempt() {
+        let mut e = Election::new(3);
+        e.fail(0);
+        assert_eq!(e.leader(), Some(1));
+        e.recover(0);
+        assert_eq!(e.leader(), Some(1), "agent 0 must not steal leadership");
+        // But after the current leader fails, 0 is eligible again.
+        e.fail(1);
+        assert_eq!(e.leader(), Some(0));
+    }
+
+    #[test]
+    fn recovery_from_total_failure() {
+        let mut e = Election::new(2);
+        e.fail(0);
+        e.fail(1);
+        assert_eq!(e.leader(), None);
+        e.recover(1);
+        assert_eq!(e.leader(), Some(1));
+    }
+
+    #[test]
+    fn idempotent_fail_recover() {
+        let mut e = Election::new(2);
+        e.fail(0);
+        let term = e.term();
+        e.fail(0); // double-fail: no-op
+        assert_eq!(e.term(), term);
+        e.recover(1); // already alive: no-op
+        assert_eq!(e.leader(), Some(1));
+    }
+}

@@ -1,0 +1,176 @@
+//! Master agent: session assignment + the Stop-and-Go controller
+//! (paper §3.2.2, §3.3).
+//!
+//! "Whenever a resource cluster is under-utilized, the master agent
+//! assigns more resources (GPUs) to CHOPT sessions so that they can
+//! quickly finish hyperparameter optimization.  On the other hand, if the
+//! cluster is over-utilized, the master agent takes GPUs from CHOPT
+//! sessions so that other non-CHOPT users can train their models."
+
+use crate::cluster::{Cluster, Owner};
+use crate::events::SimTime;
+
+/// Stop-and-Go tuning knobs.
+#[derive(Debug, Clone)]
+pub struct StopAndGoPolicy {
+    /// Below this utilization the cluster counts as under-utilized and
+    /// idle GPUs are handed to CHOPT sessions.
+    pub low_util: f64,
+    /// Never let a CHOPT session exceed `max_bonus_factor ×` its
+    /// configured limit ("it exceeds maximum number of GPU for CHOPT but
+    /// not that much" — Fig. 8 narration).
+    pub max_bonus_factor: f64,
+    /// Floor per active CHOPT session when shrinking (keep progress).
+    pub min_gpus: usize,
+}
+
+impl Default for StopAndGoPolicy {
+    fn default() -> Self {
+        StopAndGoPolicy {
+            low_util: 0.90,
+            max_bonus_factor: 2.0,
+            min_gpus: 1,
+        }
+    }
+}
+
+impl StopAndGoPolicy {
+    /// Compute per-agent GPU targets.
+    ///
+    /// `external_demand` is what non-CHOPT users want *right now* (from
+    /// the trace / arrival stream); `bases` are the per-agent configured
+    /// GPU limits (`max_gpus`) for agents that are still active.
+    pub fn targets(
+        &self,
+        total_gpus: usize,
+        external_demand: usize,
+        bases: &[usize],
+    ) -> Vec<usize> {
+        if bases.is_empty() {
+            return Vec::new();
+        }
+        // Capacity left for CHOPT after honoring external users.
+        let chopt_capacity = total_gpus.saturating_sub(external_demand);
+        let base_sum: usize = bases.iter().sum();
+
+        if chopt_capacity >= base_sum {
+            // Under-utilized: hand out the surplus evenly, capped.
+            let surplus = chopt_capacity - base_sum;
+            let util = (external_demand + base_sum) as f64 / total_gpus.max(1) as f64;
+            if util < self.low_util && surplus > 0 {
+                let bonus_each = surplus / bases.len();
+                bases
+                    .iter()
+                    .map(|&b| {
+                        let cap = ((b as f64) * self.max_bonus_factor).ceil() as usize;
+                        (b + bonus_each).min(cap.max(b))
+                    })
+                    .collect()
+            } else {
+                bases.to_vec()
+            }
+        } else {
+            // Over-utilized: shrink proportionally with a floor.
+            bases
+                .iter()
+                .map(|&b| {
+                    let share = (b as f64 / base_sum as f64) * chopt_capacity as f64;
+                    (share.floor() as usize).max(self.min_gpus.min(b))
+                })
+                .collect()
+        }
+    }
+}
+
+/// Utilization/allocation snapshot the master logs each tick (Fig. 8 rows).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MasterTickLog {
+    pub t: SimTime,
+    pub external_demand: usize,
+    pub external_held: usize,
+    pub chopt_held: usize,
+    pub chopt_target: usize,
+    pub utilization: f64,
+}
+
+/// The master-agent control loop body (driver calls it every tick).
+/// Returns the per-agent targets plus a log row.
+pub fn master_tick(
+    policy: &StopAndGoPolicy,
+    cluster: &mut Cluster,
+    external_demand: usize,
+    agent_bases: &[usize],
+    now: SimTime,
+) -> (Vec<usize>, MasterTickLog) {
+    // External users grab/release first (they are not ours to schedule —
+    // we only observe their demand and get out of the way).
+    cluster.set_external_demand(external_demand, now);
+    let targets = policy.targets(cluster.total(), external_demand, agent_bases);
+    let log = MasterTickLog {
+        t: now,
+        external_demand,
+        external_held: cluster.held_by(Owner::External),
+        chopt_held: cluster.held_by_chopt(),
+        chopt_target: targets.iter().sum(),
+        utilization: cluster.utilization(),
+    };
+    (targets, log)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn under_utilized_grants_bonus() {
+        let p = StopAndGoPolicy::default();
+        // 40 GPUs, external wants 8, two agents of base 5 each: 22 idle.
+        let t = p.targets(40, 8, &[5, 5]);
+        assert_eq!(t.len(), 2);
+        assert!(t[0] > 5 && t[1] > 5, "targets should grow: {t:?}");
+        assert!(t[0] <= 10, "bonus capped at 2x: {t:?}");
+    }
+
+    #[test]
+    fn over_utilized_shrinks_with_floor() {
+        let p = StopAndGoPolicy::default();
+        // 16 GPUs, external wants 14 -> only 2 left for 2 agents of base 4.
+        let t = p.targets(16, 14, &[4, 4]);
+        assert_eq!(t, vec![1, 1]);
+        // Full external saturation still leaves the floor.
+        let t2 = p.targets(16, 16, &[4, 4]);
+        assert_eq!(t2, vec![1, 1]);
+    }
+
+    #[test]
+    fn exact_fit_keeps_bases() {
+        let p = StopAndGoPolicy::default();
+        let t = p.targets(20, 10, &[5, 5]);
+        assert_eq!(t, vec![5, 5]);
+    }
+
+    #[test]
+    fn high_util_no_bonus() {
+        let p = StopAndGoPolicy::default();
+        // util = (30 + 8)/40 = 0.95 > low_util -> no bonus despite surplus.
+        let t = p.targets(40, 30, &[4, 4]);
+        assert_eq!(t, vec![4, 4]);
+    }
+
+    #[test]
+    fn empty_agents() {
+        let p = StopAndGoPolicy::default();
+        assert!(p.targets(8, 4, &[]).is_empty());
+    }
+
+    #[test]
+    fn master_tick_logs_consistent_row() {
+        let p = StopAndGoPolicy::default();
+        let mut c = Cluster::new(16);
+        let (targets, log) = master_tick(&p, &mut c, 6, &[4], 10.0);
+        assert_eq!(log.external_held, 6);
+        assert_eq!(log.external_demand, 6);
+        assert_eq!(log.chopt_target, targets.iter().sum::<usize>());
+        assert!(log.utilization > 0.0);
+    }
+}

@@ -1,0 +1,24 @@
+//! The CHOPT coordinator (paper §3.2–3.3) — the system contribution.
+//!
+//! * [`queue::SessionQueue`] — submitted CHOPT sessions wait for an agent.
+//! * [`agent::Agent`] — runs one CHOPT session: tuner + trainer + the
+//!   live/stop/dead pools, with `stop_ratio` routing on exit.
+//! * [`election::Election`] — zookeeper-style master-agent failover.
+//! * [`master`] — the Stop-and-Go policy: shift GPUs between CHOPT and
+//!   non-CHOPT tenants by cluster utilization.
+//! * [`driver`] — the discrete-event composition root used by every
+//!   simulator-backed experiment.
+
+pub mod agent;
+pub mod driver;
+pub mod election;
+pub mod master;
+pub mod pools;
+pub mod queue;
+
+pub use agent::{Agent, AgentEvent, ScheduleReq};
+pub use driver::{run_sim, SimOutcome, SimSetup};
+pub use election::Election;
+pub use master::{master_tick, MasterTickLog, StopAndGoPolicy};
+pub use pools::{Pool, Pools};
+pub use queue::{SessionQueue, Submission};

@@ -1,0 +1,12 @@
+//! Synthetic datasets (substitution for CIFAR-100 / SQuAD 1.1 — see
+//! DESIGN.md §Substitutions).
+//!
+//! Both generators are deterministic from a seed and match the dimensions
+//! recorded in `artifacts/manifest.json`, so the Rust trainer and the
+//! python tests see the same distributions.
+
+mod cifar_like;
+mod squad_like;
+
+pub use cifar_like::{CifarLike, ImageBatch};
+pub use squad_like::{QaBatch, SquadLike};

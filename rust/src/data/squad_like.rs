@@ -1,0 +1,138 @@
+//! Token-sequence QA dataset ("SQuAD-like") with planted answer spans.
+//!
+//! A context is a random token sequence; the "question" is a copy of the
+//! answer span's tokens bracketed by marker tokens, so a model that learns
+//! to match question tokens against the context can locate the span —
+//! giving the BiDAF-lite model a learnable exact-match signal.
+
+use crate::util::rng::Rng;
+
+/// One QA batch (token ids + gold span indices).
+#[derive(Debug, Clone)]
+pub struct QaBatch {
+    /// (batch, ctx_len) row-major.
+    pub ctx: Vec<i32>,
+    /// (batch, qry_len) row-major.
+    pub qry: Vec<i32>,
+    pub y_start: Vec<i32>,
+    pub y_end: Vec<i32>,
+    pub batch: usize,
+    pub ctx_len: usize,
+    pub qry_len: usize,
+}
+
+/// Deterministic synthetic QA dataset.
+pub struct SquadLike {
+    pub vocab: usize,
+    pub ctx_len: usize,
+    pub qry_len: usize,
+    seed: u64,
+}
+
+/// Marker token bracketing the copied answer in the question.
+const MARKER: i32 = 1;
+
+impl SquadLike {
+    pub fn new(vocab: usize, ctx_len: usize, qry_len: usize, seed: u64) -> SquadLike {
+        assert!(vocab > 8 && ctx_len >= 8 && qry_len >= 4);
+        SquadLike {
+            vocab,
+            ctx_len,
+            qry_len,
+            seed,
+        }
+    }
+
+    pub fn batch(&self, index: u64, batch: usize) -> QaBatch {
+        let mut rng = Rng::new(self.seed ^ index.wrapping_mul(0xD1B5_4A32_D192_ED03));
+        let span_max = (self.qry_len - 2).min(6);
+        let mut ctx = Vec::with_capacity(batch * self.ctx_len);
+        let mut qry = Vec::with_capacity(batch * self.qry_len);
+        let mut y_start = Vec::with_capacity(batch);
+        let mut y_end = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            // Context tokens in [2, vocab): 0 = pad, 1 = marker.
+            let base = ctx.len();
+            for _ in 0..self.ctx_len {
+                ctx.push(rng.int_range(2, self.vocab as i64 - 1) as i32);
+            }
+            let span_len = rng.int_range(1, span_max as i64) as usize;
+            let start = rng.index(self.ctx_len - span_len);
+            let end = start + span_len - 1;
+            y_start.push(start as i32);
+            y_end.push(end as i32);
+            // Question: MARKER, answer tokens..., MARKER, random fill.
+            qry.push(MARKER);
+            for k in 0..span_len {
+                qry.push(ctx[base + start + k]);
+            }
+            qry.push(MARKER);
+            while qry.len() % self.qry_len != 0 {
+                qry.push(rng.int_range(2, self.vocab as i64 - 1) as i32);
+            }
+        }
+        QaBatch {
+            ctx,
+            qry,
+            y_start,
+            y_end,
+            batch,
+            ctx_len: self.ctx_len,
+            qry_len: self.qry_len,
+        }
+    }
+
+    pub fn train_batch(&self, step: u64, batch: usize) -> QaBatch {
+        self.batch(step * 2, batch)
+    }
+
+    pub fn eval_batch(&self, step: u64, batch: usize) -> QaBatch {
+        self.batch(step * 2 + 1, batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_shaped() {
+        let d = SquadLike::new(256, 32, 16, 5);
+        let a = d.batch(2, 8);
+        let b = d.batch(2, 8);
+        assert_eq!(a.ctx, b.ctx);
+        assert_eq!(a.qry, b.qry);
+        assert_eq!(a.ctx.len(), 8 * 32);
+        assert_eq!(a.qry.len(), 8 * 16);
+    }
+
+    #[test]
+    fn spans_valid_and_copied() {
+        let d = SquadLike::new(256, 32, 16, 9);
+        let b = d.batch(0, 16);
+        for i in 0..b.batch {
+            let s = b.y_start[i] as usize;
+            let e = b.y_end[i] as usize;
+            assert!(s <= e && e < b.ctx_len);
+            // Question must contain the answer tokens right after MARKER.
+            let q = &b.qry[i * b.qry_len..(i + 1) * b.qry_len];
+            assert_eq!(q[0], MARKER);
+            for (k, pos) in (s..=e).enumerate() {
+                assert_eq!(
+                    q[1 + k],
+                    b.ctx[i * b.ctx_len + pos],
+                    "answer token {k} not copied into question"
+                );
+            }
+            assert_eq!(q[1 + (e - s + 1)], MARKER);
+        }
+    }
+
+    #[test]
+    fn token_range() {
+        let d = SquadLike::new(64, 16, 8, 1);
+        let b = d.batch(1, 8);
+        assert!(b.ctx.iter().all(|&t| (2..64).contains(&t)));
+        assert!(b.qry.iter().all(|&t| (1..64).contains(&t)));
+    }
+}

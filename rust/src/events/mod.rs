@@ -1,0 +1,221 @@
+//! Discrete-event simulation core: virtual clock + event queue.
+//!
+//! The paper's cluster-scale experiments (Tables 1–4, Figs 2/8/9: hundreds
+//! of models × 300 epochs × 60+ GPU-days) are reproduced in *virtual
+//! time*: the coordinator and cluster run unchanged, but "an epoch of
+//! training" advances this clock instead of a wall clock.  GPU-time
+//! accounting (Table 4's "60+ days") is exact integration over
+//! allocation × virtual duration.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Virtual time in seconds since simulation start.
+pub type SimTime = f64;
+
+/// A scheduled event: fires at `at`, carries an opaque payload `E`.
+struct Scheduled<E> {
+    at: SimTime,
+    seq: u64,
+    payload: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap by time (BinaryHeap is a max-heap, so reverse), with
+        // FIFO tie-break on the sequence number for determinism.
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic discrete-event loop.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    now: SimTime,
+    seq: u64,
+    processed: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> EventQueue<E> {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            now: 0.0,
+            seq: 0,
+            processed: 0,
+        }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Number of events popped so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Schedule `payload` to fire `delay` seconds from now.
+    pub fn schedule_in(&mut self, delay: SimTime, payload: E) {
+        debug_assert!(delay >= 0.0, "negative delay");
+        self.schedule_at(self.now + delay.max(0.0), payload);
+    }
+
+    /// Schedule at an absolute virtual time (clamped to now).
+    pub fn schedule_at(&mut self, at: SimTime, payload: E) {
+        let at = at.max(self.now);
+        self.heap.push(Scheduled {
+            at,
+            seq: self.seq,
+            payload,
+        });
+        self.seq += 1;
+    }
+
+    /// Pop the next event, advancing the clock to its timestamp.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        let ev = self.heap.pop()?;
+        debug_assert!(ev.at >= self.now, "time went backwards");
+        self.now = ev.at;
+        self.processed += 1;
+        Some((ev.at, ev.payload))
+    }
+
+    /// Peek at the next event time without advancing.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|e| e.at)
+    }
+}
+
+/// Integrates a step function of virtual time — used for GPU-hours
+/// accounting (`value` = allocated GPUs) and utilization curves (Fig. 8).
+#[derive(Debug, Clone, Default)]
+pub struct TimeIntegrator {
+    last_t: SimTime,
+    last_v: f64,
+    integral: f64,
+    /// (time, value) change points, for plotting.
+    pub series: Vec<(SimTime, f64)>,
+}
+
+impl TimeIntegrator {
+    pub fn new() -> TimeIntegrator {
+        TimeIntegrator::default()
+    }
+
+    /// Record that the tracked value becomes `v` at time `t`.
+    pub fn set(&mut self, t: SimTime, v: f64) {
+        debug_assert!(t >= self.last_t, "time went backwards in integrator");
+        self.integral += self.last_v * (t - self.last_t).max(0.0);
+        self.last_t = t;
+        if self.series.last().map(|&(_, lv)| lv) != Some(v) {
+            self.series.push((t, v));
+        }
+        self.last_v = v;
+    }
+
+    /// Integral of the step function up to time `t` (value·seconds).
+    pub fn integral_until(&self, t: SimTime) -> f64 {
+        self.integral + self.last_v * (t - self.last_t).max(0.0)
+    }
+
+    pub fn current(&self) -> f64 {
+        self.last_v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(5.0, "c");
+        q.schedule_at(1.0, "a");
+        q.schedule_at(3.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+        assert_eq!(q.now(), 5.0);
+        assert_eq!(q.processed(), 3);
+    }
+
+    #[test]
+    fn fifo_tie_break() {
+        let mut q = EventQueue::new();
+        q.schedule_at(1.0, 1);
+        q.schedule_at(1.0, 2);
+        q.schedule_at(1.0, 3);
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn schedule_in_is_relative() {
+        let mut q = EventQueue::new();
+        q.schedule_at(10.0, "later");
+        q.pop();
+        q.schedule_in(2.0, "after");
+        assert_eq!(q.peek_time(), Some(12.0));
+    }
+
+    #[test]
+    fn past_times_clamp_to_now() {
+        let mut q = EventQueue::new();
+        q.schedule_at(10.0, "x");
+        q.pop();
+        q.schedule_at(5.0, "clamped");
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 10.0);
+    }
+
+    #[test]
+    fn integrator_accumulates() {
+        let mut i = TimeIntegrator::new();
+        i.set(0.0, 4.0); // 4 GPUs from t=0
+        i.set(10.0, 2.0); // 2 GPUs from t=10
+        i.set(20.0, 0.0);
+        assert!((i.integral_until(20.0) - (4.0 * 10.0 + 2.0 * 10.0)).abs() < 1e-9);
+        assert!((i.integral_until(25.0) - 60.0).abs() < 1e-9);
+        assert_eq!(i.series.len(), 3);
+        assert_eq!(i.current(), 0.0);
+    }
+
+    #[test]
+    fn integrator_dedups_series() {
+        let mut i = TimeIntegrator::new();
+        i.set(0.0, 1.0);
+        i.set(5.0, 1.0); // no change
+        assert_eq!(i.series.len(), 1);
+    }
+}

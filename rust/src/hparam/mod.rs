@@ -1,0 +1,15 @@
+//! Hyperparameter space model (paper §3.4.1).
+//!
+//! Mirrors the Listing-1 configuration: each parameter has `parameters`
+//! (the initial sampling range or category list), a `distribution`, a
+//! `type`, and `p_range` (the hard bounds PBT perturbation may explore).
+//! Hierarchical spaces are expressed with *conditions* (a child parameter
+//! is only active when its parent takes one of the listed values) and
+//! *conjunctions* (joint constraints that sampled assignments must
+//! satisfy).
+
+mod space;
+mod value;
+
+pub use space::{Condition, Conjunction, ParamDef, Space, SpaceError};
+pub use value::{Assignment, Dist, ParamType, Value};

@@ -1,0 +1,607 @@
+//! Hyperparameter space: definitions, sampling, PBT perturbation,
+//! conditions (hierarchical spaces) and conjunctions (joint constraints).
+
+use crate::util::json::Value as Json;
+use crate::util::rng::Rng;
+
+use super::value::{Assignment, Dist, ParamType, Value};
+
+#[derive(Debug, thiserror::Error)]
+pub enum SpaceError {
+    #[error("parameter '{0}': {1}")]
+    BadParam(String, String),
+    #[error("condition references unknown parameter '{0}'")]
+    UnknownParam(String),
+    #[error("could not satisfy conjunctions after {0} resamples")]
+    Unsatisfiable(usize),
+}
+
+/// One tunable parameter (Listing 1 entry).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamDef {
+    pub name: String,
+    pub ptype: ParamType,
+    pub dist: Dist,
+    /// Initial sampling range `[lo, hi]` (numeric) or category list.
+    pub parameters: Vec<Value>,
+    /// Hard exploration bounds for perturbation; empty = use `parameters`.
+    pub p_range: Vec<f64>,
+}
+
+impl ParamDef {
+    /// Numeric sampling bounds (lo, hi) from `parameters`.
+    fn sample_bounds(&self) -> Option<(f64, f64)> {
+        if self.parameters.len() == 2 {
+            let lo = self.parameters[0].as_f64()?;
+            let hi = self.parameters[1].as_f64()?;
+            Some((lo.min(hi), lo.max(hi)))
+        } else {
+            None
+        }
+    }
+
+    /// Hard clamp bounds (p_range, falling back to the sampling range).
+    pub fn hard_bounds(&self) -> Option<(f64, f64)> {
+        if self.p_range.len() == 2 {
+            Some((
+                self.p_range[0].min(self.p_range[1]),
+                self.p_range[0].max(self.p_range[1]),
+            ))
+        } else {
+            self.sample_bounds()
+        }
+    }
+
+    /// Draw an initial value.
+    pub fn sample(&self, rng: &mut Rng) -> Value {
+        match (&self.dist, self.ptype) {
+            (Dist::Categorical, _) => {
+                debug_assert!(!self.parameters.is_empty());
+                self.parameters[rng.index(self.parameters.len())].clone()
+            }
+            (dist, ParamType::Float) => {
+                let (lo, hi) = self.sample_bounds().expect("numeric bounds");
+                Value::Float(sample_numeric(dist, lo, hi, rng))
+            }
+            (dist, ParamType::Int) => {
+                let (lo, hi) = self.sample_bounds().expect("numeric bounds");
+                let v = sample_numeric(dist, lo, hi + 1.0 - 1e-9, rng);
+                Value::Int((v.floor() as i64).clamp(lo as i64, hi as i64))
+            }
+            (_, ParamType::Str) => {
+                // Non-categorical string spaces degenerate to choice.
+                self.parameters[rng.index(self.parameters.len())].clone()
+            }
+        }
+    }
+
+    /// PBT "perturb" explore: scale numeric values by one of `factors`,
+    /// clamp to hard bounds; categorical values (of any type) resample
+    /// with prob 0.25.
+    pub fn perturb(&self, current: &Value, rng: &mut Rng, factors: &[f64]) -> Value {
+        if self.dist == Dist::Categorical {
+            return if rng.bool(0.25) {
+                self.parameters[rng.index(self.parameters.len())].clone()
+            } else {
+                current.clone()
+            };
+        }
+        match (current, self.ptype) {
+            (Value::Float(f), _) => {
+                let factor = *rng.choose(factors);
+                let (lo, hi) = self.hard_bounds().expect("numeric bounds");
+                Value::Float((f * factor).clamp(lo, hi))
+            }
+            (Value::Int(i), _) => {
+                let factor = *rng.choose(factors);
+                let (lo, hi) = self.hard_bounds().expect("numeric bounds");
+                let v = ((*i as f64) * factor).round().clamp(lo, hi);
+                Value::Int(v as i64)
+            }
+            (Value::Str(_), _) => {
+                if rng.bool(0.25) {
+                    self.parameters[rng.index(self.parameters.len())].clone()
+                } else {
+                    current.clone()
+                }
+            }
+        }
+    }
+
+    /// Validate structural consistency.
+    pub fn validate(&self) -> Result<(), SpaceError> {
+        let bad = |m: &str| Err(SpaceError::BadParam(self.name.clone(), m.to_string()));
+        if self.parameters.is_empty() {
+            return bad("empty 'parameters'");
+        }
+        match self.dist {
+            Dist::Categorical => {}
+            _ => {
+                if self.ptype == ParamType::Str {
+                    return bad("non-categorical distribution over strings");
+                }
+                if self.parameters.len() != 2 {
+                    return bad("numeric 'parameters' must be [lo, hi]");
+                }
+                let (lo, hi) = self.sample_bounds().ok_or_else(|| {
+                    SpaceError::BadParam(self.name.clone(), "non-numeric bounds".into())
+                })?;
+                if !(lo <= hi) {
+                    return bad("lo > hi");
+                }
+                if self.dist == Dist::LogUniform && lo <= 0.0 {
+                    return bad("log_uniform requires lo > 0");
+                }
+                if self.p_range.len() != 0 && self.p_range.len() != 2 {
+                    return bad("p_range must be [] or [lo, hi]");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with(
+                "parameters",
+                Json::Arr(self.parameters.iter().map(|v| v.to_json()).collect()),
+            )
+            .with("distribution", Json::Str(self.dist.name().to_string()))
+            .with("type", Json::Str(self.ptype.name().to_string()))
+            .with("p_range", Json::from_f64_slice(&self.p_range))
+    }
+
+    pub fn from_json(name: &str, j: &Json) -> Result<ParamDef, SpaceError> {
+        let err = |m: &str| SpaceError::BadParam(name.to_string(), m.to_string());
+        let dist_s = j
+            .get("distribution")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| err("missing 'distribution'"))?;
+        let dist = Dist::parse(dist_s).ok_or_else(|| err("unknown distribution"))?;
+        let ptype_s = j
+            .get("type")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| err("missing 'type'"))?;
+        let ptype = ParamType::parse(ptype_s).ok_or_else(|| err("unknown type"))?;
+        let parameters = j
+            .get("parameters")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| err("missing 'parameters'"))?
+            .iter()
+            .map(|v| Value::from_json(v, ptype).ok_or_else(|| err("bad parameter value")))
+            .collect::<Result<Vec<_>, _>>()?;
+        let p_range = match j.get("p_range").and_then(|v| v.as_arr()) {
+            None => Vec::new(),
+            Some(items) => items
+                .iter()
+                .map(|v| v.as_f64().ok_or_else(|| err("non-numeric p_range")))
+                .collect::<Result<Vec<_>, _>>()?,
+        };
+        let def = ParamDef {
+            name: name.to_string(),
+            ptype,
+            dist,
+            parameters,
+            p_range,
+        };
+        def.validate()?;
+        Ok(def)
+    }
+}
+
+fn sample_numeric(dist: &Dist, lo: f64, hi: f64, rng: &mut Rng) -> f64 {
+    match dist {
+        Dist::Uniform => rng.uniform(lo, hi),
+        Dist::LogUniform => rng.log_uniform(lo.max(1e-300), hi),
+        Dist::Gaussian => {
+            // Mean at the center, std spanning the range; clipped.
+            let mean = 0.5 * (lo + hi);
+            let std = (hi - lo) / 4.0;
+            rng.gaussian(mean, std).clamp(lo, hi)
+        }
+        Dist::Categorical => unreachable!("categorical handled by caller"),
+    }
+}
+
+/// Hierarchical-space condition: `child` is active iff `parent`'s value is
+/// in `values` (paper §3.4.1: momentum only exists when optimizer == sgd).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Condition {
+    pub child: String,
+    pub parent: String,
+    pub values: Vec<Value>,
+}
+
+/// Joint constraint: the assignment must satisfy at least one of the
+/// listed (param -> allowed values) combinations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Conjunction {
+    /// (param name, allowed values) — all must hold simultaneously.
+    pub clauses: Vec<(String, Vec<Value>)>,
+}
+
+impl Conjunction {
+    pub fn satisfied(&self, a: &Assignment) -> bool {
+        self.clauses.iter().all(|(name, allowed)| {
+            a.get(name)
+                .map(|v| allowed.iter().any(|av| values_match(av, v)))
+                .unwrap_or(true) // inactive params don't violate
+        })
+    }
+}
+
+fn values_match(a: &Value, b: &Value) -> bool {
+    match (a.as_f64(), b.as_f64()) {
+        (Some(x), Some(y)) => (x - y).abs() < 1e-12,
+        _ => a == b,
+    }
+}
+
+/// The full hyperparameter space.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Space {
+    pub defs: Vec<ParamDef>,
+    pub conditions: Vec<Condition>,
+    pub conjunctions: Vec<Conjunction>,
+}
+
+impl Space {
+    pub fn def(&self, name: &str) -> Option<&ParamDef> {
+        self.defs.iter().find(|d| d.name == name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.defs.iter().map(|d| d.name.as_str()).collect()
+    }
+
+    pub fn validate(&self) -> Result<(), SpaceError> {
+        for d in &self.defs {
+            d.validate()?;
+        }
+        for c in &self.conditions {
+            for p in [&c.child, &c.parent] {
+                if self.def(p).is_none() {
+                    return Err(SpaceError::UnknownParam(p.clone()));
+                }
+            }
+        }
+        for cj in &self.conjunctions {
+            for (name, _) in &cj.clauses {
+                if self.def(name).is_none() {
+                    return Err(SpaceError::UnknownParam(name.clone()));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Is `name` active under `a` (all its conditions satisfied)?
+    pub fn active(&self, name: &str, a: &Assignment) -> bool {
+        self.conditions
+            .iter()
+            .filter(|c| c.child == name)
+            .all(|c| {
+                a.get(&c.parent)
+                    .map(|v| c.values.iter().any(|cv| values_match(cv, v)))
+                    .unwrap_or(false)
+            })
+    }
+
+    /// Sample a full assignment: iterate to fixpoint so parents activate
+    /// children regardless of definition order; resample until all
+    /// conjunctions hold.
+    pub fn sample(&self, rng: &mut Rng) -> Result<Assignment, SpaceError> {
+        const MAX_TRIES: usize = 1000;
+        for _ in 0..MAX_TRIES {
+            let mut a = Assignment::new();
+            loop {
+                let mut grew = false;
+                for d in &self.defs {
+                    if !a.contains(&d.name) && self.active(&d.name, &a) {
+                        a.set(&d.name, d.sample(rng));
+                        grew = true;
+                    }
+                }
+                if !grew {
+                    break;
+                }
+            }
+            if self.conjunctions.iter().all(|c| c.satisfied(&a)) {
+                return Ok(a);
+            }
+        }
+        Err(SpaceError::Unsatisfiable(MAX_TRIES))
+    }
+
+    /// PBT explore: perturb every active parameter of `a`.
+    pub fn perturb(&self, a: &Assignment, rng: &mut Rng, factors: &[f64]) -> Assignment {
+        let mut out = Assignment::new();
+        for d in &self.defs {
+            if let Some(v) = a.get(&d.name) {
+                out.set(&d.name, d.perturb(v, rng, factors));
+            }
+        }
+        out
+    }
+
+    /// PBT resample explore: fresh draw for every active parameter.
+    pub fn resample(&self, a: &Assignment, rng: &mut Rng) -> Assignment {
+        let mut out = Assignment::new();
+        for d in &self.defs {
+            if a.contains(&d.name) {
+                out.set(&d.name, d.sample(rng));
+            }
+        }
+        out
+    }
+
+    /// Encode an assignment as a feature vector in [0,1]^n (viz cluster
+    /// view, PCA).  Numeric: normalized to hard bounds (log scale for
+    /// log-uniform); categorical: index / (k-1); missing (inactive): -1.
+    pub fn encode(&self, a: &Assignment) -> Vec<f64> {
+        self.defs
+            .iter()
+            .map(|d| match a.get(&d.name) {
+                None => -1.0,
+                Some(v) => match (&d.dist, v) {
+                    (Dist::Categorical, v) => {
+                        let k = d.parameters.len().max(2);
+                        let idx = d
+                            .parameters
+                            .iter()
+                            .position(|p| values_match(p, v))
+                            .unwrap_or(0);
+                        idx as f64 / (k - 1) as f64
+                    }
+                    (Dist::LogUniform, v) => {
+                        let (lo, hi) = d.hard_bounds().unwrap_or((1e-9, 1.0));
+                        let x = v.as_f64().unwrap_or(lo).max(1e-300);
+                        ((x.ln() - lo.ln()) / (hi.ln() - lo.ln()).max(1e-12)).clamp(0.0, 1.0)
+                    }
+                    (_, v) => {
+                        let (lo, hi) = d.hard_bounds().unwrap_or((0.0, 1.0));
+                        let x = v.as_f64().unwrap_or(lo);
+                        ((x - lo) / (hi - lo).max(1e-12)).clamp(0.0, 1.0)
+                    }
+                },
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut hp = Json::obj();
+        for d in &self.defs {
+            hp.set(&d.name, d.to_json());
+        }
+        let conds = self
+            .conditions
+            .iter()
+            .map(|c| {
+                Json::obj()
+                    .with("child", Json::Str(c.child.clone()))
+                    .with("parent", Json::Str(c.parent.clone()))
+                    .with(
+                        "values",
+                        Json::Arr(c.values.iter().map(|v| v.to_json()).collect()),
+                    )
+            })
+            .collect();
+        let conjs = self
+            .conjunctions
+            .iter()
+            .map(|c| {
+                let mut o = Json::obj();
+                for (name, allowed) in &c.clauses {
+                    o.set(name, Json::Arr(allowed.iter().map(|v| v.to_json()).collect()));
+                }
+                o
+            })
+            .collect();
+        Json::obj()
+            .with("h_params", hp)
+            .with("h_params_conditions", Json::Arr(conds))
+            .with("h_params_conjunctions", Json::Arr(conjs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lr_def() -> ParamDef {
+        ParamDef {
+            name: "lr".into(),
+            ptype: ParamType::Float,
+            dist: Dist::LogUniform,
+            parameters: vec![Value::Float(0.01), Value::Float(0.09)],
+            p_range: vec![0.001, 0.1],
+        }
+    }
+
+    fn depth_def() -> ParamDef {
+        ParamDef {
+            name: "depth".into(),
+            ptype: ParamType::Int,
+            dist: Dist::Uniform,
+            parameters: vec![Value::Int(5), Value::Int(10)],
+            p_range: vec![5.0, 10.0],
+        }
+    }
+
+    fn act_def() -> ParamDef {
+        ParamDef {
+            name: "activation".into(),
+            ptype: ParamType::Str,
+            dist: Dist::Categorical,
+            parameters: vec![Value::Str("relu".into()), Value::Str("sigmoid".into())],
+            p_range: vec![],
+        }
+    }
+
+    fn space() -> Space {
+        Space {
+            defs: vec![lr_def(), depth_def(), act_def()],
+            conditions: vec![],
+            conjunctions: vec![],
+        }
+    }
+
+    #[test]
+    fn sample_within_bounds() {
+        let s = space();
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let a = s.sample(&mut rng).unwrap();
+            let lr = a.f64("lr").unwrap();
+            assert!((0.01..=0.09).contains(&lr), "lr={lr}");
+            let d = a.i64("depth").unwrap();
+            assert!((5..=10).contains(&d), "depth={d}");
+            assert!(["relu", "sigmoid"].contains(&a.str("activation").unwrap()));
+        }
+    }
+
+    #[test]
+    fn int_sampling_covers_endpoints() {
+        let s = space();
+        let mut rng = Rng::new(2);
+        let mut seen = [false; 6];
+        for _ in 0..500 {
+            let a = s.sample(&mut rng).unwrap();
+            seen[(a.i64("depth").unwrap() - 5) as usize] = true;
+        }
+        assert!(seen.iter().all(|&x| x), "seen={seen:?}");
+    }
+
+    #[test]
+    fn perturb_respects_p_range() {
+        let s = space();
+        let mut rng = Rng::new(3);
+        let mut a = s.sample(&mut rng).unwrap();
+        for _ in 0..300 {
+            a = s.perturb(&a, &mut rng, &[0.8, 1.2]);
+            let lr = a.f64("lr").unwrap();
+            assert!((0.001..=0.1).contains(&lr), "lr={lr} escaped p_range");
+            let d = a.i64("depth").unwrap();
+            assert!((5..=10).contains(&d));
+        }
+    }
+
+    #[test]
+    fn conditions_gate_children() {
+        let mut s = space();
+        s.conditions.push(Condition {
+            child: "depth".into(),
+            parent: "activation".into(),
+            values: vec![Value::Str("relu".into())],
+        });
+        let mut rng = Rng::new(4);
+        let mut saw_active = false;
+        let mut saw_inactive = false;
+        for _ in 0..200 {
+            let a = s.sample(&mut rng).unwrap();
+            match a.str("activation").unwrap() {
+                "relu" => {
+                    assert!(a.contains("depth"));
+                    saw_active = true;
+                }
+                _ => {
+                    assert!(!a.contains("depth"));
+                    saw_inactive = true;
+                }
+            }
+        }
+        assert!(saw_active && saw_inactive);
+    }
+
+    #[test]
+    fn conjunctions_filter_samples() {
+        let mut s = space();
+        // Require activation == relu whenever depth >= 5 (i.e. always):
+        // effectively forces relu.
+        s.conjunctions.push(Conjunction {
+            clauses: vec![(
+                "activation".into(),
+                vec![Value::Str("relu".into())],
+            )],
+        });
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            let a = s.sample(&mut rng).unwrap();
+            assert_eq!(a.str("activation"), Some("relu"));
+        }
+    }
+
+    #[test]
+    fn unsatisfiable_conjunction_errors() {
+        let mut s = space();
+        s.conjunctions.push(Conjunction {
+            clauses: vec![("activation".into(), vec![Value::Str("gelu".into())])],
+        });
+        let mut rng = Rng::new(6);
+        assert!(matches!(
+            s.sample(&mut rng),
+            Err(SpaceError::Unsatisfiable(_))
+        ));
+    }
+
+    #[test]
+    fn validate_catches_bad_defs() {
+        let mut d = lr_def();
+        d.parameters = vec![Value::Float(0.0), Value::Float(0.1)];
+        assert!(d.validate().is_err(), "log_uniform lo=0 must fail");
+        let mut d2 = depth_def();
+        d2.parameters = vec![Value::Int(10)];
+        assert!(d2.validate().is_err(), "single bound must fail");
+        let mut s = space();
+        s.conditions.push(Condition {
+            child: "nope".into(),
+            parent: "lr".into(),
+            values: vec![],
+        });
+        assert!(matches!(s.validate(), Err(SpaceError::UnknownParam(_))));
+    }
+
+    #[test]
+    fn encode_normalizes() {
+        let s = space();
+        let mut a = Assignment::new();
+        a.set("lr", Value::Float(0.1)); // == hard hi
+        a.set("depth", Value::Int(5)); // == hard lo
+        a.set("activation", Value::Str("sigmoid".into())); // idx 1 of 2
+        let e = s.encode(&a);
+        assert_eq!(e.len(), 3);
+        assert!((e[0] - 1.0).abs() < 1e-9, "lr at hi -> 1.0, got {}", e[0]);
+        assert!((e[1] - 0.0).abs() < 1e-9);
+        assert!((e[2] - 1.0).abs() < 1e-9);
+        // Inactive param encodes -1.
+        let mut b = Assignment::new();
+        b.set("lr", Value::Float(0.01));
+        let eb = s.encode(&b);
+        assert_eq!(eb[1], -1.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = space();
+        let j = s.to_json();
+        let lr = j.path("h_params.lr").unwrap();
+        let def = ParamDef::from_json("lr", lr).unwrap();
+        assert_eq!(def, lr_def());
+    }
+
+    #[test]
+    fn gaussian_sampling_clips() {
+        let d = ParamDef {
+            name: "x".into(),
+            ptype: ParamType::Float,
+            dist: Dist::Gaussian,
+            parameters: vec![Value::Float(-1.0), Value::Float(1.0)],
+            p_range: vec![],
+        };
+        let mut rng = Rng::new(7);
+        for _ in 0..500 {
+            let v = d.sample(&mut rng).as_f64().unwrap();
+            assert!((-1.0..=1.0).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! Hyperparameter values, types, distributions, and assignments.
+
+use std::fmt;
+
+use crate::util::json::Value as Json;
+
+/// A single hyperparameter value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Float(f64),
+    Int(i64),
+    Str(String),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            Value::Str(_) => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::Float(f) if f.fract() == 0.0 => Some(*f as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Value::Float(f) => Json::Num(*f),
+            Value::Int(i) => Json::Num(*i as f64),
+            Value::Str(s) => Json::Str(s.clone()),
+        }
+    }
+
+    pub fn from_json(j: &Json, ptype: ParamType) -> Option<Value> {
+        match (j, ptype) {
+            (Json::Num(n), ParamType::Float) => Some(Value::Float(*n)),
+            (Json::Num(n), ParamType::Int) => Some(Value::Int(*n as i64)),
+            (Json::Str(s), ParamType::Str) => Some(Value::Str(s.clone())),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Float(v) => write!(f, "{v:.6}"),
+            Value::Int(v) => write!(f, "{v}"),
+            Value::Str(v) => write!(f, "{v}"),
+        }
+    }
+}
+
+/// Declared parameter type (`'type'` in Listing 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamType {
+    Float,
+    Int,
+    Str,
+}
+
+impl ParamType {
+    pub fn parse(s: &str) -> Option<ParamType> {
+        match s {
+            "float" => Some(ParamType::Float),
+            "int" => Some(ParamType::Int),
+            "str" | "string" => Some(ParamType::Str),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ParamType::Float => "float",
+            ParamType::Int => "int",
+            ParamType::Str => "str",
+        }
+    }
+}
+
+/// Sampling distribution (`'distribution'` in Listing 1).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Dist {
+    Uniform,
+    LogUniform,
+    /// Gaussian clipped to the sampling range.
+    Gaussian,
+    Categorical,
+}
+
+impl Dist {
+    pub fn parse(s: &str) -> Option<Dist> {
+        match s {
+            "uniform" => Some(Dist::Uniform),
+            // The paper's listing spells it 'log\_uniform' (LaTeX escape).
+            "log_uniform" | "log\\_uniform" | "loguniform" => Some(Dist::LogUniform),
+            "gaussian" | "normal" => Some(Dist::Gaussian),
+            "categorical" => Some(Dist::Categorical),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dist::Uniform => "uniform",
+            Dist::LogUniform => "log_uniform",
+            Dist::Gaussian => "gaussian",
+            Dist::Categorical => "categorical",
+        }
+    }
+}
+
+/// One sampled configuration: ordered (name, value) pairs.  Order follows
+/// the space definition so viz axes and interchange stay stable.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Assignment {
+    pairs: Vec<(String, Value)>,
+}
+
+impl Assignment {
+    pub fn new() -> Assignment {
+        Assignment { pairs: Vec::new() }
+    }
+
+    pub fn set(&mut self, name: &str, value: Value) {
+        if let Some(slot) = self.pairs.iter_mut().find(|(n, _)| n == name) {
+            slot.1 = value;
+        } else {
+            self.pairs.push((name.to_string(), value));
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Value> {
+        self.pairs.iter().find(|(n, _)| n == name).map(|(_, v)| v)
+    }
+
+    pub fn f64(&self, name: &str) -> Option<f64> {
+        self.get(name).and_then(|v| v.as_f64())
+    }
+
+    pub fn i64(&self, name: &str) -> Option<i64> {
+        self.get(name).and_then(|v| v.as_i64())
+    }
+
+    pub fn str(&self, name: &str) -> Option<&str> {
+        self.get(name).and_then(|v| v.as_str())
+    }
+
+    pub fn remove(&mut self, name: &str) -> Option<Value> {
+        let idx = self.pairs.iter().position(|(n, _)| n == name)?;
+        Some(self.pairs.remove(idx).1)
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.get(name).is_some()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &(String, Value)> {
+        self.pairs.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        for (k, v) in &self.pairs {
+            obj.set(k, v.to_json());
+        }
+        obj
+    }
+
+    /// Compact one-line rendering for logs/leaderboards.
+    pub fn render(&self) -> String {
+        self.pairs
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+impl FromIterator<(String, Value)> for Assignment {
+    fn from_iter<T: IntoIterator<Item = (String, Value)>>(iter: T) -> Self {
+        let mut a = Assignment::new();
+        for (k, v) in iter {
+            a.set(&k, v);
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_conversions() {
+        assert_eq!(Value::Float(2.0).as_i64(), Some(2));
+        assert_eq!(Value::Float(2.5).as_i64(), None);
+        assert_eq!(Value::Int(3).as_f64(), Some(3.0));
+        assert_eq!(Value::Str("relu".into()).as_str(), Some("relu"));
+        assert_eq!(Value::Str("x".into()).as_f64(), None);
+    }
+
+    #[test]
+    fn dist_parse_accepts_paper_spelling() {
+        assert_eq!(Dist::parse("log\\_uniform"), Some(Dist::LogUniform));
+        assert_eq!(Dist::parse("log_uniform"), Some(Dist::LogUniform));
+        assert_eq!(Dist::parse("nope"), None);
+    }
+
+    #[test]
+    fn assignment_set_get_replace() {
+        let mut a = Assignment::new();
+        a.set("lr", Value::Float(0.1));
+        a.set("act", Value::Str("relu".into()));
+        a.set("lr", Value::Float(0.2)); // replace
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.f64("lr"), Some(0.2));
+        assert_eq!(a.str("act"), Some("relu"));
+        assert!(a.render().contains("lr=0.2"));
+    }
+
+    #[test]
+    fn assignment_json_roundtrip_values() {
+        let mut a = Assignment::new();
+        a.set("depth", Value::Int(20));
+        let j = a.to_json();
+        assert_eq!(j.get("depth").unwrap().as_i64(), Some(20));
+    }
+}

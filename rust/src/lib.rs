@@ -1,0 +1,42 @@
+//! # CHOPT — Cloud-based Hyperparameter OPTimization
+//!
+//! A from-scratch reproduction of *"CHOPT: Automated Hyperparameter
+//! Optimization Framework for Cloud-Based Machine Learning Platforms"*
+//! (Kim et al., 2018) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the CHOPT coordinator: session queue,
+//!   agents, master agent with leader election, live/stop/dead session
+//!   pools, and the *Stop-and-Go* shared-cluster resource controller.
+//! * **Layer 2** — JAX models (residual-MLP image classifier, BiDAF-lite
+//!   QA model) AOT-lowered to HLO text under `artifacts/`.
+//! * **Layer 1** — Pallas kernels (fused linear, SGD-momentum, random
+//!   erasing, attention) called from the L2 graphs.
+//!
+//! Python never runs on the request path: the `runtime` module loads the
+//! AOT artifacts through the PJRT C API (`xla` crate) and executes them
+//! from Rust worker threads.
+//!
+//! The paper's testbed (a multi-tenant NSML GPU cluster) is reproduced by
+//! the [`cluster`] simulator + [`nsml`] platform substrate; training at
+//! cluster scale (hundreds of models x 300 epochs) runs against the
+//! [`trainer::surrogate`] learning-curve model in virtual time, while the
+//! end-to-end examples drive *real* training through PJRT.
+
+pub mod analysis;
+pub mod cluster;
+pub mod experiments;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod events;
+pub mod hparam;
+pub mod nsml;
+pub mod runtime;
+pub mod storage;
+pub mod trainer;
+pub mod tuner;
+pub mod util;
+pub mod viz;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,187 @@
+//! `chopt` — CLI for the CHOPT coordinator.
+//!
+//! Subcommands:
+//!   run            run a CHOPT session from a config file (sim or real)
+//!   example-config print the paper's Listing-1 example configuration
+//!   artifacts      inspect the AOT artifact manifest
+//!   serve          serve stored results through the viz HTTP server
+
+use std::collections::HashSet;
+
+use chopt::config::ChoptConfig;
+use chopt::coordinator::{run_sim, SimSetup};
+use chopt::storage::SessionStore;
+use chopt::trainer::{real::RealTrainer, surrogate::SurrogateTrainer, Trainer};
+use chopt::util::cli::{CliError, Command};
+use chopt::viz;
+
+fn cli() -> Command {
+    Command::new("chopt", "cloud-based hyperparameter optimization framework")
+        .subcommand(
+            Command::new("run", "run a CHOPT session from a config file")
+                .opt_required("config", "path to a Listing-1 style JSON config")
+                .opt("gpus", Some("8"), "simulated cluster size")
+                .opt("out", Some("reports/run"), "output directory for exports")
+                .opt("seed", None, "override the config seed")
+                .flag("real", "train with the PJRT runtime instead of the surrogate"),
+        )
+        .subcommand(Command::new(
+            "example-config",
+            "print the paper's Listing-1 example configuration",
+        ))
+        .subcommand(
+            Command::new("artifacts", "inspect the AOT artifact manifest")
+                .opt("dir", Some("artifacts"), "artifacts directory"),
+        )
+        .subcommand(
+            Command::new("serve", "serve a stored run through the viz server")
+                .opt_required("store", "path to a sessions.json written by `run`")
+                .opt("port", Some("8787"), "listen port"),
+        )
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = cli();
+    let matches = match cmd.parse(&argv) {
+        Ok(m) => m,
+        Err(CliError::HelpRequested) => {
+            print!("{}", cmd.help_text());
+            return;
+        }
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", cmd.help_text());
+            std::process::exit(2);
+        }
+    };
+    let result = match &matches.subcommand {
+        Some((name, sub)) => match name.as_str() {
+            "run" => cmd_run(sub),
+            "example-config" => {
+                println!("{}", chopt::config::LISTING1_EXAMPLE);
+                Ok(())
+            }
+            "artifacts" => cmd_artifacts(sub),
+            "serve" => cmd_serve(sub),
+            _ => unreachable!(),
+        },
+        None => {
+            print!("{}", cmd.help_text());
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_run(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
+    let mut cfg = ChoptConfig::load(m.get("config").unwrap())?;
+    if let Some(seed) = m.get_u64("seed") {
+        cfg.seed = seed;
+    }
+    let gpus = m.get_usize("gpus").unwrap_or(8);
+    let out_dir = m.get_or("out", "reports/run").to_string();
+    let use_real = m.flag("real");
+    let space = cfg.space.clone();
+    let order = cfg.order;
+
+    println!(
+        "running CHOPT: tune={} model={} population={} step={} gpus={gpus} real={use_real}",
+        cfg.tune.name(),
+        cfg.model,
+        cfg.population,
+        cfg.step
+    );
+    let seed = cfg.seed;
+    let outcome = run_sim(SimSetup::single(cfg, gpus), move |id| -> Box<dyn Trainer> {
+        if use_real {
+            Box::new(
+                RealTrainer::new(chopt::runtime::Manifest::default_dir(), seed + id)
+                    .expect("real trainer requires `make artifacts`"),
+            )
+        } else {
+            Box::new(SurrogateTrainer::new(seed + id))
+        }
+    });
+
+    for agent in &outcome.agents {
+        viz::report::outcome_table(agent).print();
+        let sessions: Vec<_> = agent.sessions.values().cloned().collect();
+        viz::report::leaderboard_table(&sessions, order, 5).print();
+
+        // Exports.
+        let mut store = SessionStore::new();
+        store.put_run(&format!("chopt-{}", agent.id), sessions.clone());
+        store.save(format!("{out_dir}/sessions.json"))?;
+        let doc = viz::export::parallel_coords_doc(&space, &sessions, order, "run");
+        std::fs::write(
+            format!("{out_dir}/parallel.json"),
+            doc.to_string_pretty(),
+        )?;
+        let svg = viz::parallel_coords::render(
+            &space,
+            &[viz::parallel_coords::RunGroup {
+                label: "run",
+                sessions: &sessions,
+            }],
+            order,
+            &HashSet::new(),
+        );
+        svg.save(format!("{out_dir}/parallel.svg"))?;
+        println!("exports written to {out_dir}/");
+    }
+    println!(
+        "done: {} events, {:.1} virtual hours, {:.1} CHOPT GPU-hours",
+        outcome.events_processed,
+        outcome.end_time / 3600.0,
+        outcome.gpu_hours()
+    );
+    Ok(())
+}
+
+fn cmd_artifacts(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
+    let dir = m.get_or("dir", "artifacts");
+    let manifest = chopt::runtime::Manifest::load(dir)?;
+    println!("artifacts dir: {dir}");
+    println!(
+        "data: input_dim={} classes={} batch={} | qa vocab={} ctx={} qry={} batch={}",
+        manifest.data.input_dim,
+        manifest.data.classes,
+        manifest.data.batch,
+        manifest.data.qa_vocab,
+        manifest.data.qa_ctx_len,
+        manifest.data.qa_qry_len,
+        manifest.data.qa_batch
+    );
+    let mut names: Vec<_> = manifest.variants.keys().collect();
+    names.sort();
+    for name in names {
+        let v = &manifest.variants[name];
+        println!(
+            "variant {name}: task={} blocks={} widen={} params={} measure={}",
+            v.task, v.blocks, v.widen, v.param_count, v.measure
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
+    let store_path = m.get("store").unwrap();
+    let port: u16 = m.get_usize("port").unwrap_or(8787) as u16;
+    let doc = SessionStore::load_json(store_path)?;
+    let mut routes = viz::server::Routes::new();
+    routes.insert(
+        "/api/sessions.json".into(),
+        (
+            "application/json".into(),
+            doc.to_string_pretty().into_bytes(),
+        ),
+    );
+    let server = viz::server::VizServer::start(port, routes)?;
+    println!("serving {store_path} on http://{}/ (ctrl-c to stop)", server.addr());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}

@@ -1,0 +1,175 @@
+//! NSML leaderboard: ranks sessions by their best objective measure.
+
+use crate::config::Order;
+
+use super::session::{NsmlSession, SessionId};
+
+/// A ranked view over sessions (paper §2.3: "comparison of performance
+/// metrics between models via a leaderboard").
+#[derive(Debug, Clone)]
+pub struct Leaderboard {
+    pub measure: String,
+    pub order: Order,
+    /// (session, best measure), best first.
+    entries: Vec<(SessionId, f64)>,
+}
+
+impl Leaderboard {
+    pub fn new(measure: &str, order: Order) -> Leaderboard {
+        Leaderboard {
+            measure: measure.to_string(),
+            order,
+            entries: Vec::new(),
+        }
+    }
+
+    /// Rebuild from a session set.
+    pub fn rebuild<'a>(&mut self, sessions: impl Iterator<Item = &'a NsmlSession>) {
+        self.entries.clear();
+        for s in sessions {
+            if let Some(best) = s.best_measure(self.order) {
+                self.entries.push((s.id, best));
+            }
+        }
+        let order = self.order;
+        self.entries.sort_by(|a, b| {
+            if order.better(a.1, b.1) {
+                std::cmp::Ordering::Less
+            } else if order.better(b.1, a.1) {
+                std::cmp::Ordering::Greater
+            } else {
+                a.0.cmp(&b.0) // deterministic tie-break
+            }
+        });
+    }
+
+    /// Incremental update for one session: O(log n) rank search plus one
+    /// element move, instead of a full re-sort (the coordinator calls
+    /// this on every reported interval — see perf_coordinator §Perf).
+    pub fn update(&mut self, session: &NsmlSession) {
+        let Some(best) = session.best_measure(self.order) else {
+            return;
+        };
+        let order = self.order;
+        let cmp = |a: &(SessionId, f64), b: &(SessionId, f64)| {
+            if order.better(a.1, b.1) {
+                std::cmp::Ordering::Less
+            } else if order.better(b.1, a.1) {
+                std::cmp::Ordering::Greater
+            } else {
+                a.0.cmp(&b.0)
+            }
+        };
+        // Remove the stale entry (linear scan — ids are unsorted), then
+        // binary-search the insertion point in the sorted-by-score list.
+        if let Some(pos) = self.entries.iter().position(|(id, _)| *id == session.id) {
+            self.entries.remove(pos);
+        }
+        let entry = (session.id, best);
+        let idx = self
+            .entries
+            .binary_search_by(|probe| cmp(probe, &entry))
+            .unwrap_or_else(|i| i);
+        self.entries.insert(idx, entry);
+    }
+
+    pub fn remove(&mut self, id: SessionId) {
+        self.entries.retain(|(sid, _)| *sid != id);
+    }
+
+    pub fn best(&self) -> Option<(SessionId, f64)> {
+        self.entries.first().copied()
+    }
+
+    /// Top-k entries, best first.
+    pub fn top(&self, k: usize) -> &[(SessionId, f64)] {
+        &self.entries[..k.min(self.entries.len())]
+    }
+
+    /// Rank of a session (0 = best).
+    pub fn rank(&self, id: SessionId) -> Option<usize> {
+        self.entries.iter().position(|(sid, _)| *sid == id)
+    }
+
+    /// Is `id` in the bottom `frac` fraction? (PBT truncation exploit.)
+    pub fn in_bottom_fraction(&self, id: SessionId, frac: f64) -> bool {
+        match self.rank(id) {
+            None => false,
+            Some(r) => {
+                let n = self.entries.len();
+                n > 0 && (r as f64) >= (1.0 - frac) * n as f64
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hparam::Assignment;
+
+    fn session(id: u64, measures: &[f64]) -> NsmlSession {
+        let mut s = NsmlSession::new(SessionId(id), Assignment::new(), "m", 0.0);
+        for (i, &m) in measures.iter().enumerate() {
+            s.report(i + 1, m, 1.0);
+        }
+        s
+    }
+
+    #[test]
+    fn ranks_descending() {
+        let mut lb = Leaderboard::new("test/accuracy", Order::Descending);
+        let sessions = vec![session(1, &[0.5]), session(2, &[0.9]), session(3, &[0.7])];
+        lb.rebuild(sessions.iter());
+        assert_eq!(lb.best(), Some((SessionId(2), 0.9)));
+        assert_eq!(lb.rank(SessionId(1)), Some(2));
+        assert_eq!(lb.top(2).len(), 2);
+    }
+
+    #[test]
+    fn ranks_ascending_for_loss() {
+        let mut lb = Leaderboard::new("test/loss", Order::Ascending);
+        lb.rebuild(vec![session(1, &[2.0]), session(2, &[0.5])].iter());
+        assert_eq!(lb.best(), Some((SessionId(2), 0.5)));
+    }
+
+    #[test]
+    fn incremental_update_re_ranks() {
+        let mut lb = Leaderboard::new("m", Order::Descending);
+        lb.rebuild(vec![session(1, &[0.5]), session(2, &[0.6])].iter());
+        let improved = session(1, &[0.5, 0.95]);
+        lb.update(&improved);
+        assert_eq!(lb.best(), Some((SessionId(1), 0.95)));
+        lb.remove(SessionId(1));
+        assert_eq!(lb.best(), Some((SessionId(2), 0.6)));
+    }
+
+    #[test]
+    fn bottom_fraction() {
+        let mut lb = Leaderboard::new("m", Order::Descending);
+        let sessions: Vec<_> = (0..10)
+            .map(|i| session(i as u64, &[i as f64 / 10.0]))
+            .collect();
+        lb.rebuild(sessions.iter());
+        // Sessions 0 and 1 have the lowest scores -> bottom 20%.
+        assert!(lb.in_bottom_fraction(SessionId(0), 0.2));
+        assert!(lb.in_bottom_fraction(SessionId(1), 0.2));
+        assert!(!lb.in_bottom_fraction(SessionId(9), 0.2));
+        assert!(!lb.in_bottom_fraction(SessionId(5), 0.2));
+    }
+
+    #[test]
+    fn sessions_without_history_excluded() {
+        let mut lb = Leaderboard::new("m", Order::Descending);
+        lb.rebuild(vec![session(1, &[])].iter());
+        assert!(lb.is_empty());
+    }
+}

@@ -1,0 +1,14 @@
+//! NSML platform substrate (paper §2.3).
+//!
+//! NSML is the cloud ML platform CHOPT is built on: it owns *training
+//! sessions* (one session = one model being trained), GPU binding, metric
+//! reporting, model snapshots, and a leaderboard.  This module provides
+//! those primitives; the trainers (`trainer/`) own the actual model state
+//! keyed by [`SessionId`], so a session object stays cheap metadata that
+//! pools can move around freely.
+
+mod leaderboard;
+mod session;
+
+pub use leaderboard::Leaderboard;
+pub use session::{MetricPoint, NsmlSession, SessionId, SessionStatus};

@@ -1,0 +1,270 @@
+//! NSML training-session object: lifecycle + metric log + lineage.
+
+use crate::events::SimTime;
+use crate::hparam::Assignment;
+use crate::util::json::Value as Json;
+
+/// Globally unique NSML session id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SessionId(pub u64);
+
+impl std::fmt::Display for SessionId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "nsml-{}", self.0)
+    }
+}
+
+/// Lifecycle (paper §3.2.1): live pool ⇄ stop pool, or → dead pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionStatus {
+    /// Created, not yet scheduled on a GPU.
+    Pending,
+    /// In the live pool, occupying GPUs, training.
+    Running,
+    /// Early-stopped into the stop pool; resumable (checkpoint kept).
+    Stopped,
+    /// In the dead pool: checkpoint GC'd, not resumable.
+    Dead,
+    /// Reached max epochs (or termination); final metrics recorded.
+    Finished,
+}
+
+impl SessionStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            SessionStatus::Pending => "pending",
+            SessionStatus::Running => "running",
+            SessionStatus::Stopped => "stopped",
+            SessionStatus::Dead => "dead",
+            SessionStatus::Finished => "finished",
+        }
+    }
+
+    /// Legal state machine (enforced by [`NsmlSession::transition`]).
+    pub fn can_transition_to(self, next: SessionStatus) -> bool {
+        use SessionStatus::*;
+        matches!(
+            (self, next),
+            (Pending, Running)
+                | (Running, Stopped)
+                | (Running, Dead)
+                | (Running, Finished)
+                | (Stopped, Running) // Stop-and-Go revival
+                | (Stopped, Dead)    // stop-pool GC
+        )
+    }
+}
+
+/// One metric observation at an epoch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricPoint {
+    pub epoch: usize,
+    /// The session's objective measure (e.g. test/accuracy).
+    pub measure: f64,
+    /// Training loss at that epoch (scalar-plot view).
+    pub loss: f64,
+}
+
+/// A single training model under CHOPT control.
+#[derive(Debug, Clone)]
+pub struct NsmlSession {
+    pub id: SessionId,
+    /// Hyperparameter configuration this model trains with.  PBT may
+    /// rewrite it at exploit/explore boundaries.
+    pub hparams: Assignment,
+    /// Model/artifact selector (AOT variant or surrogate family).
+    pub model: String,
+    pub status: SessionStatus,
+    /// Epochs completed so far.
+    pub epochs: usize,
+    /// Metric log, one point per reported epoch.
+    pub history: Vec<MetricPoint>,
+    /// PBT lineage: the session this one was cloned from.
+    pub parent: Option<SessionId>,
+    /// GPUs occupied while running.
+    pub gpus: usize,
+    /// Virtual timestamps for duration views (Fig. 5).
+    pub created_at: SimTime,
+    pub last_started_at: SimTime,
+    pub exited_at: Option<SimTime>,
+    /// Cumulative GPU-seconds consumed.
+    pub gpu_seconds: f64,
+    /// Times this session was revived from the stop pool (Fig. 9).
+    pub revivals: usize,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("illegal transition {from:?} -> {to:?} for {id}")]
+pub struct TransitionError {
+    pub id: SessionId,
+    pub from: SessionStatus,
+    pub to: SessionStatus,
+}
+
+impl NsmlSession {
+    pub fn new(id: SessionId, hparams: Assignment, model: &str, now: SimTime) -> NsmlSession {
+        NsmlSession {
+            id,
+            hparams,
+            model: model.to_string(),
+            status: SessionStatus::Pending,
+            epochs: 0,
+            history: Vec::new(),
+            parent: None,
+            gpus: 1,
+            created_at: now,
+            last_started_at: now,
+            exited_at: None,
+            gpu_seconds: 0.0,
+            revivals: 0,
+        }
+    }
+
+    /// Enforce the pool state machine.
+    pub fn transition(&mut self, to: SessionStatus, now: SimTime) -> Result<(), TransitionError> {
+        if !self.status.can_transition_to(to) {
+            return Err(TransitionError {
+                id: self.id,
+                from: self.status,
+                to,
+            });
+        }
+        match to {
+            SessionStatus::Running => {
+                self.last_started_at = now;
+                if self.status == SessionStatus::Stopped {
+                    self.revivals += 1;
+                    self.exited_at = None;
+                }
+            }
+            SessionStatus::Stopped | SessionStatus::Dead | SessionStatus::Finished => {
+                self.exited_at = Some(now);
+            }
+            SessionStatus::Pending => {}
+        }
+        self.status = to;
+        Ok(())
+    }
+
+    /// Record an epoch's metrics (reported by the trainer).
+    pub fn report(&mut self, epoch: usize, measure: f64, loss: f64) {
+        self.epochs = self.epochs.max(epoch);
+        self.history.push(MetricPoint {
+            epoch,
+            measure,
+            loss,
+        });
+    }
+
+    /// Best measure so far under `order`.
+    pub fn best_measure(&self, order: crate::config::Order) -> Option<f64> {
+        self.history
+            .iter()
+            .map(|p| p.measure)
+            .fold(None, |acc, m| match acc {
+                None => Some(m),
+                Some(best) => Some(if order.better(m, best) { m } else { best }),
+            })
+    }
+
+    /// Latest reported measure.
+    pub fn last_measure(&self) -> Option<f64> {
+        self.history.last().map(|p| p.measure)
+    }
+
+    pub fn is_exited(&self) -> bool {
+        matches!(
+            self.status,
+            SessionStatus::Stopped | SessionStatus::Dead | SessionStatus::Finished
+        )
+    }
+
+    /// Serialize for the viz/export layer.
+    pub fn to_json(&self) -> Json {
+        let hist = self
+            .history
+            .iter()
+            .map(|p| {
+                Json::obj()
+                    .with("epoch", Json::Num(p.epoch as f64))
+                    .with("measure", Json::Num(p.measure))
+                    .with("loss", Json::Num(p.loss))
+            })
+            .collect();
+        Json::obj()
+            .with("id", Json::Num(self.id.0 as f64))
+            .with("hparams", self.hparams.to_json())
+            .with("model", Json::Str(self.model.clone()))
+            .with("status", Json::Str(self.status.name().to_string()))
+            .with("epochs", Json::Num(self.epochs as f64))
+            .with("history", Json::Arr(hist))
+            .with(
+                "parent",
+                self.parent
+                    .map(|p| Json::Num(p.0 as f64))
+                    .unwrap_or(Json::Null),
+            )
+            .with("gpu_seconds", Json::Num(self.gpu_seconds))
+            .with("revivals", Json::Num(self.revivals as f64))
+            .with("created_at", Json::Num(self.created_at))
+            .with(
+                "exited_at",
+                self.exited_at.map(Json::Num).unwrap_or(Json::Null),
+            )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Order;
+
+    fn mk() -> NsmlSession {
+        NsmlSession::new(SessionId(1), Assignment::new(), "surrogate:resnet", 0.0)
+    }
+
+    #[test]
+    fn legal_lifecycle() {
+        let mut s = mk();
+        s.transition(SessionStatus::Running, 1.0).unwrap();
+        s.transition(SessionStatus::Stopped, 2.0).unwrap();
+        assert_eq!(s.exited_at, Some(2.0));
+        s.transition(SessionStatus::Running, 3.0).unwrap(); // revival
+        assert_eq!(s.revivals, 1);
+        assert_eq!(s.exited_at, None);
+        s.transition(SessionStatus::Finished, 4.0).unwrap();
+        assert!(s.is_exited());
+    }
+
+    #[test]
+    fn illegal_transitions_rejected() {
+        let mut s = mk();
+        assert!(s.transition(SessionStatus::Stopped, 1.0).is_err());
+        s.transition(SessionStatus::Running, 1.0).unwrap();
+        s.transition(SessionStatus::Dead, 2.0).unwrap();
+        assert!(s.transition(SessionStatus::Running, 3.0).is_err());
+        assert!(s.transition(SessionStatus::Stopped, 3.0).is_err());
+    }
+
+    #[test]
+    fn best_measure_respects_order() {
+        let mut s = mk();
+        s.report(1, 0.5, 2.0);
+        s.report(2, 0.7, 1.5);
+        s.report(3, 0.6, 1.2);
+        assert_eq!(s.best_measure(Order::Descending), Some(0.7));
+        assert_eq!(s.best_measure(Order::Ascending), Some(0.5));
+        assert_eq!(s.last_measure(), Some(0.6));
+        assert_eq!(s.epochs, 3);
+    }
+
+    #[test]
+    fn json_contains_core_fields() {
+        let mut s = mk();
+        s.report(1, 0.4, 3.0);
+        let j = s.to_json();
+        assert_eq!(j.get("id").unwrap().as_i64(), Some(1));
+        assert_eq!(j.get("status").unwrap().as_str(), Some("pending"));
+        assert_eq!(j.get("history").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

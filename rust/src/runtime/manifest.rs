@@ -1,0 +1,328 @@
+//! `artifacts/manifest.json` parsing: input/output specs per artifact,
+//! parameter layouts per model variant, dataset dimensions.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Value as Json};
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("manifest io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("manifest json: {0}")]
+    Json(#[from] json::JsonError),
+    #[error("manifest schema: {0}")]
+    Schema(String),
+}
+
+fn schema(msg: impl Into<String>) -> ManifestError {
+    ManifestError::Schema(msg.into())
+}
+
+/// Shape+dtype of one artifact input.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "f32" | "i32" | "u32" | "bf16"
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One compiled HLO module.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub n_outputs: usize,
+    pub output_names: Vec<String>,
+}
+
+impl ArtifactSpec {
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|t| t.name == name)
+    }
+}
+
+/// One model variant (train/eval/init artifact triple + metadata).
+#[derive(Debug, Clone)]
+pub struct VariantSpec {
+    pub name: String,
+    pub task: String,
+    pub blocks: usize,
+    pub widen: usize,
+    pub logical_depth: usize,
+    pub param_count: u64,
+    pub train: String,
+    pub eval: String,
+    pub init: String,
+    pub hyperparams: Vec<String>,
+    pub measure: String,
+}
+
+/// Dataset dimensions shared with python.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DataDims {
+    pub input_dim: usize,
+    pub classes: usize,
+    pub batch: usize,
+    pub img_h: usize,
+    pub img_w: usize,
+    pub img_c: usize,
+    pub qa_vocab: usize,
+    pub qa_ctx_len: usize,
+    pub qa_qry_len: usize,
+    pub qa_batch: usize,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub data: DataDims,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+    pub variants: HashMap<String, VariantSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, ManifestError> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let doc = json::parse(&text)?;
+
+        let img = doc
+            .path("data.image")
+            .ok_or_else(|| schema("missing data.image"))?;
+        let qa = doc
+            .path("data.qa")
+            .ok_or_else(|| schema("missing data.qa"))?;
+        let u = |j: &Json, k: &str| -> Result<usize, ManifestError> {
+            j.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| schema(format!("missing data field {k}")))
+        };
+        let data = DataDims {
+            input_dim: u(img, "input_dim")?,
+            classes: u(img, "classes")?,
+            batch: u(img, "batch")?,
+            img_h: u(img, "height")?,
+            img_w: u(img, "width")?,
+            img_c: u(img, "channels")?,
+            qa_vocab: u(qa, "vocab")?,
+            qa_ctx_len: u(qa, "ctx_len")?,
+            qa_qry_len: u(qa, "qry_len")?,
+            qa_batch: u(qa, "batch")?,
+        };
+
+        let mut artifacts = HashMap::new();
+        for (name, aj) in doc
+            .require("artifacts")?
+            .as_obj()
+            .ok_or_else(|| schema("artifacts must be an object"))?
+        {
+            let inputs = aj
+                .require("inputs")?
+                .as_arr()
+                .ok_or_else(|| schema("inputs must be an array"))?
+                .iter()
+                .map(|t| -> Result<TensorSpec, ManifestError> {
+                    Ok(TensorSpec {
+                        name: t
+                            .get("name")
+                            .and_then(|v| v.as_str())
+                            .ok_or_else(|| schema("input missing name"))?
+                            .to_string(),
+                        shape: t
+                            .get("shape")
+                            .and_then(|v| v.as_arr())
+                            .ok_or_else(|| schema("input missing shape"))?
+                            .iter()
+                            .map(|d| d.as_usize().ok_or_else(|| schema("bad dim")))
+                            .collect::<Result<Vec<_>, _>>()?,
+                        dtype: t
+                            .get("dtype")
+                            .and_then(|v| v.as_str())
+                            .ok_or_else(|| schema("input missing dtype"))?
+                            .to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            let output_names = aj
+                .require("output_names")?
+                .as_arr()
+                .ok_or_else(|| schema("output_names must be an array"))?
+                .iter()
+                .map(|v| v.as_str().unwrap_or("").to_string())
+                .collect::<Vec<_>>();
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: aj
+                        .get("file")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| schema("artifact missing file"))?
+                        .to_string(),
+                    inputs,
+                    n_outputs: aj
+                        .get("n_outputs")
+                        .and_then(|v| v.as_usize())
+                        .unwrap_or(output_names.len()),
+                    output_names,
+                },
+            );
+        }
+
+        let mut variants = HashMap::new();
+        for (name, vj) in doc
+            .require("variants")?
+            .as_obj()
+            .ok_or_else(|| schema("variants must be an object"))?
+        {
+            variants.insert(
+                name.clone(),
+                VariantSpec {
+                    name: name.clone(),
+                    task: vj
+                        .get("task")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("")
+                        .to_string(),
+                    blocks: vj.get("blocks").and_then(|v| v.as_usize()).unwrap_or(1),
+                    widen: vj.get("widen").and_then(|v| v.as_usize()).unwrap_or(1),
+                    logical_depth: vj
+                        .get("logical_depth")
+                        .and_then(|v| v.as_usize())
+                        .unwrap_or(1),
+                    param_count: vj
+                        .get("param_count")
+                        .and_then(|v| v.as_i64())
+                        .unwrap_or(0) as u64,
+                    train: vj
+                        .get("train")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| schema("variant missing train"))?
+                        .to_string(),
+                    eval: vj
+                        .get("eval")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| schema("variant missing eval"))?
+                        .to_string(),
+                    init: vj
+                        .get("init")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| schema("variant missing init"))?
+                        .to_string(),
+                    hyperparams: vj
+                        .get("hyperparams")
+                        .and_then(|v| v.as_arr())
+                        .map(|a| {
+                            a.iter()
+                                .filter_map(|v| v.as_str().map(|s| s.to_string()))
+                                .collect()
+                        })
+                        .unwrap_or_default(),
+                    measure: vj
+                        .get("measure")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("test/accuracy")
+                        .to_string(),
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir,
+            data,
+            artifacts,
+            variants,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.get(name)
+    }
+
+    pub fn variant(&self, name: &str) -> Option<&VariantSpec> {
+        self.variants.get(name)
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Option<PathBuf> {
+        self.artifacts.get(name).map(|a| self.dir.join(&a.file))
+    }
+
+    /// Default artifacts directory: $CHOPT_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("CHOPT_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests require `make artifacts` to have run (they are the
+    /// python->rust contract check).
+    fn manifest() -> Option<Manifest> {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(dir).expect("manifest parses"))
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn loads_and_has_variants() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert!(m.variants.contains_key("ic_d1_w1"));
+        assert!(m.variants.contains_key("qa_bidaf"));
+        let v = m.variant("ic_d1_w1").unwrap();
+        assert!(m.artifacts.contains_key(&v.train));
+        assert!(m.artifacts.contains_key(&v.eval));
+        assert!(m.artifacts.contains_key(&v.init));
+        assert!(v.param_count > 0);
+    }
+
+    #[test]
+    fn train_artifact_io_contract() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let a = m.artifact("ic_d1_w1_train").unwrap();
+        // x, y, 4 scalars, seed, then params+velocities.
+        assert_eq!(a.inputs[0].name, "x");
+        assert_eq!(a.inputs[0].shape, vec![m.data.batch, m.data.input_dim]);
+        assert_eq!(a.inputs[1].dtype, "i32");
+        assert_eq!(a.input_index("lr"), Some(2));
+        assert_eq!(a.output_names[0], "loss");
+        assert_eq!(a.n_outputs, a.output_names.len());
+        // train outputs = 2 metrics + full state.
+        let state_inputs = a.inputs.len() - 7;
+        assert_eq!(a.n_outputs, 2 + state_inputs);
+        assert!(m.artifact_path("ic_d1_w1_train").unwrap().exists());
+    }
+
+    #[test]
+    fn data_dims_consistent() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert_eq!(m.data.input_dim, m.data.img_h * m.data.img_w * m.data.img_c);
+        assert!(m.data.classes >= 2);
+    }
+}

@@ -1,0 +1,16 @@
+//! Runtime bridge: load AOT HLO-text artifacts and execute them via PJRT.
+//!
+//! Python runs once at build time (`make artifacts`); this module is the
+//! only thing that touches the resulting `artifacts/` directory at run
+//! time.  HLO *text* is the interchange format (see python/compile/hlo.py
+//! and /opt/xla-example/README.md: serialized protos from jax >= 0.5 are
+//! rejected by xla_extension 0.5.1).
+//!
+//! Thread model: `PjRtClient` wraps raw C pointers and is used from the
+//! thread that created it; each agent thread owns its own [`Runtime`].
+
+mod manifest;
+mod rt;
+
+pub use manifest::{ArtifactSpec, DataDims, Manifest, TensorSpec, VariantSpec};
+pub use rt::{HostTensor, Runtime};

@@ -1,0 +1,262 @@
+//! PJRT execution: compile HLO text once per artifact, execute many times.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest, TensorSpec};
+
+/// Host-side tensor for marshalling into/out of PJRT literals.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::F32(vec![v], vec![])
+    }
+
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor::I32(vec![v], vec![])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(d, _) => d.len(),
+            HostTensor::I32(d, _) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            HostTensor::F32(d, _) => Some(d),
+            _ => None,
+        }
+    }
+
+    pub fn f32_scalar(&self) -> Option<f32> {
+        self.as_f32().and_then(|d| d.first().copied())
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        match self {
+            HostTensor::F32(data, _) => {
+                let l = xla::Literal::vec1(data);
+                if dims.is_empty() {
+                    // Rank-0: reshape a singleton vec to scalar shape.
+                    Ok(l.reshape(&[])?)
+                } else {
+                    Ok(l.reshape(&dims)?)
+                }
+            }
+            HostTensor::I32(data, _) => {
+                let l = xla::Literal::vec1(data);
+                if dims.is_empty() {
+                    Ok(l.reshape(&[])?)
+                } else {
+                    Ok(l.reshape(&dims)?)
+                }
+            }
+        }
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::F32(lit.to_vec::<f32>()?, dims)),
+            xla::ElementType::S32 => Ok(HostTensor::I32(lit.to_vec::<i32>()?, dims)),
+            other => Err(anyhow!("unsupported output element type {other:?}")),
+        }
+    }
+}
+
+/// A compiled-executable cache over one PJRT (CPU) client.
+///
+/// Not `Sync`: each agent thread builds its own `Runtime` (PJRT wraps raw
+/// C pointers).  Compilation happens once per artifact per runtime.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions served (perf counters).
+    pub executions: u64,
+    /// Compilations performed.
+    pub compilations: u64,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime over an artifacts directory.
+    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir).context("loading manifest.json")?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            manifest,
+            client,
+            executables: HashMap::new(),
+            executions: 0,
+            compilations: 0,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Ensure `artifact` is compiled; returns its spec.
+    pub fn prepare(&mut self, artifact: &str) -> Result<&ArtifactSpec> {
+        if !self.executables.contains_key(artifact) {
+            let path = self
+                .manifest
+                .artifact_path(artifact)
+                .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {artifact}"))?;
+            self.executables.insert(artifact.to_string(), exe);
+            self.compilations += 1;
+        }
+        self.manifest
+            .artifact(artifact)
+            .ok_or_else(|| anyhow!("artifact '{artifact}' missing from manifest"))
+    }
+
+    /// Execute an artifact with host tensors; returns the untupled outputs.
+    pub fn execute(&mut self, artifact: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let spec = self.prepare(artifact)?.clone();
+        validate_inputs(&spec, inputs)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let exe = self.executables.get(artifact).expect("prepared above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {artifact}"))?;
+        self.executions += 1;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = out.to_tuple().context("untupling result")?;
+        let tensors = parts
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<Vec<_>>>()?;
+        if tensors.len() != spec.n_outputs {
+            return Err(anyhow!(
+                "{artifact}: expected {} outputs, got {}",
+                spec.n_outputs,
+                tensors.len()
+            ));
+        }
+        Ok(tensors)
+    }
+
+    /// Number of compiled executables resident.
+    pub fn compiled_count(&self) -> usize {
+        self.executables.len()
+    }
+}
+
+fn validate_inputs(spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<()> {
+    if inputs.len() != spec.inputs.len() {
+        return Err(anyhow!(
+            "{}: expected {} inputs, got {}",
+            spec.name,
+            spec.inputs.len(),
+            inputs.len()
+        ));
+    }
+    for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+        check_one(i, t, s).with_context(|| format!("artifact {}", spec.name))?;
+    }
+    Ok(())
+}
+
+fn check_one(i: usize, t: &HostTensor, s: &TensorSpec) -> Result<()> {
+    if t.shape() != s.shape.as_slice() {
+        return Err(anyhow!(
+            "input {i} ('{}'): shape {:?} != spec {:?}",
+            s.name,
+            t.shape(),
+            s.shape
+        ));
+    }
+    let ok = matches!(
+        (t, s.dtype.as_str()),
+        (HostTensor::F32(..), "f32") | (HostTensor::I32(..), "i32")
+    );
+    if !ok {
+        return Err(anyhow!(
+            "input {i} ('{}'): dtype mismatch (spec {})",
+            s.name,
+            s.dtype
+        ));
+    }
+    if t.len() != s.elements() {
+        return Err(anyhow!(
+            "input {i} ('{}'): {} elements != {}",
+            s.name,
+            t.len(),
+            s.elements()
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shapes() {
+        let t = HostTensor::F32(vec![1.0; 6], vec![2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        let s = HostTensor::scalar_i32(7);
+        assert!(s.shape().is_empty());
+    }
+
+    #[test]
+    fn validate_rejects_mismatches() {
+        let spec = ArtifactSpec {
+            name: "a".into(),
+            file: "a.hlo.txt".into(),
+            inputs: vec![TensorSpec {
+                name: "x".into(),
+                shape: vec![2, 2],
+                dtype: "f32".into(),
+            }],
+            n_outputs: 1,
+            output_names: vec!["y".into()],
+        };
+        let bad_shape = [HostTensor::F32(vec![0.0; 4], vec![4])];
+        assert!(validate_inputs(&spec, &bad_shape).is_err());
+        let bad_dtype = [HostTensor::I32(vec![0; 4], vec![2, 2])];
+        assert!(validate_inputs(&spec, &bad_dtype).is_err());
+        let bad_count: [HostTensor; 0] = [];
+        assert!(validate_inputs(&spec, &bad_count).is_err());
+        let good = [HostTensor::F32(vec![0.0; 4], vec![2, 2])];
+        assert!(validate_inputs(&spec, &good).is_ok());
+    }
+}

@@ -1,0 +1,263 @@
+//! Real trainer: drives the AOT PJRT artifacts on synthetic data.
+//!
+//! One "epoch" = `steps_per_epoch` executions of the variant's
+//! `train_step` HLO followed by one `eval_step` on a held-out batch.
+//! Model state (params + momentum buffers) lives here per session as
+//! host tensors, making PBT's weight copy a `Vec::clone` and dead-pool
+//! GC a map removal.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::{CifarLike, SquadLike};
+use crate::hparam::Assignment;
+use crate::nsml::SessionId;
+use crate::runtime::{HostTensor, Runtime};
+
+use super::{EpochResult, Trainer};
+
+struct ModelState {
+    /// Params followed by velocities, in manifest order.
+    state: Vec<HostTensor>,
+    epochs: usize,
+    steps: u64,
+}
+
+/// PJRT-backed trainer.
+pub struct RealTrainer {
+    rt: Runtime,
+    states: HashMap<SessionId, ModelState>,
+    ic_data: CifarLike,
+    qa_data: SquadLike,
+    pub steps_per_epoch: usize,
+    pub seed: u64,
+    /// Measured wall seconds per (variant) epoch, EMA — used by
+    /// `epoch_seconds` so sim-time accounting matches reality.
+    measured: HashMap<String, f64>,
+}
+
+impl RealTrainer {
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>, seed: u64) -> Result<RealTrainer> {
+        let rt = Runtime::new(artifacts_dir)?;
+        let d = &rt.manifest.data;
+        // Noise 1.6 makes the synthetic task hard enough that eval
+        // accuracy discriminates hyperparameter configurations instead of
+        // saturating at 100%.
+        let ic_data = CifarLike::new(d.input_dim, d.classes, 1.6, seed);
+        let qa_data = SquadLike::new(d.qa_vocab, d.qa_ctx_len, d.qa_qry_len, seed);
+        Ok(RealTrainer {
+            rt,
+            states: HashMap::new(),
+            ic_data,
+            qa_data,
+            steps_per_epoch: 8,
+            seed,
+            measured: HashMap::new(),
+        })
+    }
+
+    pub fn runtime(&mut self) -> &mut Runtime {
+        &mut self.rt
+    }
+
+    fn variant<'a>(rt: &'a Runtime, model: &str) -> Result<crate::runtime::VariantSpec> {
+        rt.manifest
+            .variant(model)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown variant '{model}' (run `make artifacts`?)"))
+    }
+
+    fn init_state(&mut self, id: SessionId, model: &str) -> Result<()> {
+        let v = Self::variant(&self.rt, model)?;
+        let seed = (self.seed ^ id.0.wrapping_mul(0x9E37)) as i32 & 0x7FFF_FFFF;
+        let out = self
+            .rt
+            .execute(&v.init, &[HostTensor::scalar_i32(seed)])?;
+        self.states.insert(
+            id,
+            ModelState {
+                state: out,
+                epochs: 0,
+                steps: 0,
+            },
+        );
+        Ok(())
+    }
+
+    /// Run one train epoch; returns (mean train loss, mean train measure).
+    fn train_epoch(
+        &mut self,
+        id: SessionId,
+        v: &crate::runtime::VariantSpec,
+        hp: &Assignment,
+    ) -> Result<(f64, f64)> {
+        let is_qa = v.task == "question_answering";
+        let mut losses = Vec::new();
+        let mut measures = Vec::new();
+        for _ in 0..self.steps_per_epoch {
+            let st = self
+                .states
+                .get(&id)
+                .ok_or_else(|| anyhow!("no state for {id}"))?;
+            let step = st.steps;
+            let mut inputs: Vec<HostTensor> = Vec::new();
+            if is_qa {
+                let b = self.qa_data.train_batch(step, self.rt.manifest.data.qa_batch);
+                inputs.push(HostTensor::I32(b.ctx, vec![b.batch, b.ctx_len]));
+                inputs.push(HostTensor::I32(b.qry, vec![b.batch, b.qry_len]));
+                inputs.push(HostTensor::I32(b.y_start, vec![b.batch]));
+                inputs.push(HostTensor::I32(b.y_end, vec![b.batch]));
+                inputs.push(HostTensor::scalar_f32(hp.f64("lr").unwrap_or(0.05) as f32));
+                inputs.push(HostTensor::scalar_f32(
+                    hp.f64("momentum").unwrap_or(0.9) as f32
+                ));
+                inputs.push(HostTensor::scalar_f32(
+                    hp.f64("dropout").unwrap_or(0.0) as f32
+                ));
+                inputs.push(HostTensor::scalar_i32(
+                    (step as i32) ^ (self.seed as i32 & 0x7FFF),
+                ));
+            } else {
+                let b = self.ic_data.train_batch(step, self.rt.manifest.data.batch);
+                inputs.push(HostTensor::F32(b.x, vec![b.batch, b.input_dim]));
+                inputs.push(HostTensor::I32(b.y, vec![b.batch]));
+                inputs.push(HostTensor::scalar_f32(hp.f64("lr").unwrap_or(0.05) as f32));
+                inputs.push(HostTensor::scalar_f32(
+                    hp.f64("momentum").unwrap_or(0.9) as f32
+                ));
+                inputs.push(HostTensor::scalar_f32(hp.f64("prob").unwrap_or(0.0) as f32));
+                inputs.push(HostTensor::scalar_f32(hp.f64("sh").unwrap_or(0.4) as f32));
+                inputs.push(HostTensor::scalar_i32(
+                    (step as i32) ^ (self.seed as i32 & 0x7FFF),
+                ));
+            }
+            let st = self.states.get(&id).unwrap();
+            inputs.extend(st.state.iter().cloned());
+            let out = self.rt.execute(&v.train, &inputs)?;
+            let loss = out[0].f32_scalar().unwrap_or(f32::NAN) as f64;
+            let measure = out[1].f32_scalar().unwrap_or(f32::NAN) as f64;
+            losses.push(loss);
+            measures.push(measure);
+            let st = self.states.get_mut(&id).unwrap();
+            st.state = out[2..].to_vec();
+            st.steps += 1;
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+        Ok((mean(&losses), mean(&measures)))
+    }
+
+    /// Evaluate on a held-out batch; returns (loss, measure).
+    fn eval(&mut self, id: SessionId, v: &crate::runtime::VariantSpec) -> Result<(f64, f64)> {
+        let is_qa = v.task == "question_answering";
+        let st = self
+            .states
+            .get(&id)
+            .ok_or_else(|| anyhow!("no state for {id}"))?;
+        let n_params = self
+            .rt
+            .manifest
+            .artifact(&v.eval)
+            .map(|a| a.inputs.len() - if is_qa { 4 } else { 2 })
+            .unwrap_or(st.state.len() / 2);
+        let params = st.state[..n_params].to_vec();
+        let step = st.epochs as u64;
+        let mut inputs: Vec<HostTensor> = Vec::new();
+        if is_qa {
+            let b = self.qa_data.eval_batch(step, self.rt.manifest.data.qa_batch);
+            inputs.push(HostTensor::I32(b.ctx, vec![b.batch, b.ctx_len]));
+            inputs.push(HostTensor::I32(b.qry, vec![b.batch, b.qry_len]));
+            inputs.push(HostTensor::I32(b.y_start, vec![b.batch]));
+            inputs.push(HostTensor::I32(b.y_end, vec![b.batch]));
+        } else {
+            let b = self.ic_data.eval_batch(step, self.rt.manifest.data.batch);
+            inputs.push(HostTensor::F32(b.x, vec![b.batch, b.input_dim]));
+            inputs.push(HostTensor::I32(b.y, vec![b.batch]));
+        }
+        inputs.extend(params);
+        let out = self.rt.execute(&v.eval, &inputs)?;
+        Ok((
+            out[0].f32_scalar().unwrap_or(f32::NAN) as f64,
+            out[1].f32_scalar().unwrap_or(f32::NAN) as f64,
+        ))
+    }
+}
+
+impl Trainer for RealTrainer {
+    fn train(
+        &mut self,
+        id: SessionId,
+        model: &str,
+        hparams: &Assignment,
+        to_epoch: usize,
+    ) -> Result<EpochResult> {
+        let v = Self::variant(&self.rt, model)?;
+        if !self.states.contains_key(&id) {
+            self.init_state(id, model)?;
+        }
+        let from = self.states[&id].epochs;
+        let mut last = (f64::NAN, f64::NAN);
+        for e in from..to_epoch.max(from) {
+            let t0 = std::time::Instant::now();
+            let (train_loss, _train_measure) = self.train_epoch(id, &v, hparams)?;
+            let st = self.states.get_mut(&id).unwrap();
+            st.epochs = e + 1;
+            let (_eval_loss, eval_measure) = self.eval(id, &v)?;
+            last = (eval_measure, train_loss);
+            let dt = t0.elapsed().as_secs_f64();
+            let slot = self.measured.entry(model.to_string()).or_insert(dt);
+            *slot = 0.8 * *slot + 0.2 * dt;
+        }
+        if to_epoch <= from {
+            // No new work: report current eval.
+            let (eval_loss, eval_measure) = self.eval(id, &v)?;
+            last = (eval_measure, eval_loss);
+        }
+        Ok(EpochResult {
+            // Measure reported as percent to match the surrogate scale.
+            measure: last.0 * 100.0,
+            loss: last.1,
+        })
+    }
+
+    fn clone_state(&mut self, src: SessionId, dst: SessionId) -> Result<()> {
+        let s = self
+            .states
+            .get(&src)
+            .ok_or_else(|| anyhow!("clone_state: no state for {src}"))?;
+        let copied = ModelState {
+            state: s.state.clone(),
+            epochs: s.epochs,
+            steps: s.steps,
+        };
+        self.states.insert(dst, copied);
+        Ok(())
+    }
+
+    fn drop_state(&mut self, id: SessionId) {
+        self.states.remove(&id);
+    }
+
+    fn epochs_done(&self, id: SessionId) -> usize {
+        self.states.get(&id).map(|s| s.epochs).unwrap_or(0)
+    }
+
+    fn epoch_seconds(&self, model: &str, _hparams: &Assignment) -> f64 {
+        self.measured.get(model).copied().unwrap_or(1.0)
+    }
+
+    fn param_count(&self, model: &str, _hparams: &Assignment) -> u64 {
+        self.rt
+            .manifest
+            .variant(model)
+            .map(|v| v.param_count)
+            .unwrap_or(0)
+    }
+
+    fn state_count(&self) -> usize {
+        self.states.len()
+    }
+}
+
+// Integration tests for the real trainer live in rust/tests/ (they need
+// built artifacts); unit coverage here is limited to pure helpers.

@@ -1,0 +1,379 @@
+//! Hyperband (Li et al., 2017): successive-halving brackets over an
+//! epoch budget.
+//!
+//! Bracket `s` (from `s_max = floor(log_eta R)` down to 0) starts
+//! `n = ceil((s_max+1)/(s+1) · eta^s)` configurations at resource
+//! `r = R · eta^{-s}` and halves (well, eta-ths) the population each rung
+//! while multiplying the budget by eta.  Rung barriers map naturally onto
+//! CHOPT's stop pool: sessions awaiting promotion are `Pause`d (parked in
+//! the stop pool); promotions come back as `resume_of` trials; the
+//! unpromoted are evicted to the dead pool.
+
+use std::collections::HashMap;
+
+use crate::config::Order;
+use crate::hparam::Space;
+use crate::nsml::SessionId;
+use crate::util::rng::Rng;
+
+use super::{better, Decision, Report, Trial, Tuner};
+
+#[derive(Debug, Clone)]
+struct Rung {
+    /// Number of configs entering this rung.
+    n: usize,
+    /// Cumulative epoch budget at this rung.
+    budget: usize,
+}
+
+#[derive(Debug, Clone)]
+struct Bracket {
+    rungs: Vec<Rung>,
+}
+
+/// Compute the Hyperband bracket schedule for (R, eta).
+fn brackets(max_resource: usize, eta: usize) -> Vec<Bracket> {
+    let r = max_resource.max(1) as f64;
+    let eta_f = eta.max(2) as f64;
+    let s_max = r.ln() / eta_f.ln();
+    let s_max = s_max.floor() as i64;
+    let b = (s_max + 1) as f64;
+    let mut out = Vec::new();
+    for s in (0..=s_max).rev() {
+        let n = ((b / (s as f64 + 1.0)) * eta_f.powi(s as i32)).ceil() as usize;
+        let r0 = r * eta_f.powi(-(s as i32));
+        let mut rungs = Vec::new();
+        for i in 0..=(s as usize) {
+            let ni = ((n as f64) * eta_f.powi(-(i as i32))).floor() as usize;
+            let ri = (r0 * eta_f.powi(i as i32)).round() as usize;
+            rungs.push(Rung {
+                n: ni.max(1),
+                budget: ri.clamp(1, max_resource),
+            });
+        }
+        out.push(Bracket { rungs });
+    }
+    out
+}
+
+pub struct Hyperband {
+    space: Space,
+    order: Order,
+    max_resource: usize,
+    brackets: Vec<Bracket>,
+    /// Index of the active bracket.
+    bracket_idx: usize,
+    /// Active rung within the bracket.
+    rung_idx: usize,
+    /// Fresh launches made for rung 0 of the active bracket.
+    launched: usize,
+    /// Completed (id, measure) results for the active rung.
+    results: Vec<(SessionId, f64)>,
+    /// Promotions waiting to be handed out as resume trials.
+    promotions: Vec<(SessionId, usize)>,
+    /// Sessions the coordinator should move stop→dead.
+    evictions: Vec<SessionId>,
+    /// Hyperparameters by session (to refill resumes' Trial).
+    hparams: HashMap<SessionId, crate::hparam::Assignment>,
+}
+
+impl Hyperband {
+    pub fn new(space: Space, order: Order, max_resource: usize, eta: usize) -> Hyperband {
+        Hyperband {
+            space,
+            order,
+            max_resource,
+            brackets: brackets(max_resource, eta),
+            bracket_idx: 0,
+            rung_idx: 0,
+            launched: 0,
+            results: Vec::new(),
+            promotions: Vec::new(),
+            evictions: Vec::new(),
+            hparams: HashMap::new(),
+        }
+    }
+
+    fn active(&self) -> Option<&Bracket> {
+        self.brackets.get(self.bracket_idx)
+    }
+
+    fn rung(&self) -> Option<&Rung> {
+        self.active().and_then(|b| b.rungs.get(self.rung_idx))
+    }
+
+    fn complete_rung_if_ready(&mut self) {
+        let Some(rung) = self.rung().cloned() else { return };
+        if self.results.len() < rung.n {
+            return;
+        }
+        let Some(bracket) = self.active().cloned() else { return };
+        let is_last = self.rung_idx + 1 >= bracket.rungs.len();
+        if is_last {
+            // Bracket finished; everything in results is done (already
+            // Stopped by budget). Advance to the next bracket.
+            self.bracket_idx += 1;
+            self.rung_idx = 0;
+            self.launched = 0;
+            self.results.clear();
+            return;
+        }
+        // Promote the top n_{i+1}.
+        let keep = bracket.rungs[self.rung_idx + 1].n.min(self.results.len());
+        let order = self.order;
+        self.results.sort_by(|a, b| {
+            if better(order, a.1, b.1) {
+                std::cmp::Ordering::Less
+            } else if better(order, b.1, a.1) {
+                std::cmp::Ordering::Greater
+            } else {
+                a.0.cmp(&b.0)
+            }
+        });
+        let next_budget = bracket.rungs[self.rung_idx + 1].budget;
+        for (i, (id, _)) in self.results.drain(..).enumerate() {
+            if i < keep {
+                self.promotions.push((id, next_budget));
+            } else {
+                self.evictions.push(id);
+            }
+        }
+        self.rung_idx += 1;
+    }
+}
+
+impl Tuner for Hyperband {
+    fn name(&self) -> &'static str {
+        "hyperband"
+    }
+
+    fn next_trial(&mut self, rng: &mut Rng) -> Option<Trial> {
+        // Resume promotions first (they hold rung state).
+        if let Some((id, budget)) = self.promotions.pop() {
+            let hp = self.hparams.get(&id).cloned().unwrap_or_default();
+            return Some(Trial {
+                hparams: hp,
+                budget,
+                clone_of: None,
+                resume_of: Some(id),
+            });
+        }
+        // Fresh launches for rung 0 of the active bracket.
+        let rung0 = self.active()?.rungs.first()?.clone();
+        if self.rung_idx == 0 && self.launched < rung0.n {
+            let hparams = self.space.sample(rng).ok()?;
+            self.launched += 1;
+            return Some(Trial::fresh(hparams, rung0.budget));
+        }
+        None
+    }
+
+    fn register(&mut self, id: SessionId, trial: &Trial) {
+        if trial.resume_of.is_none() {
+            self.hparams.insert(id, trial.hparams.clone());
+        }
+    }
+
+    fn report(&mut self, r: Report, _rng: &mut Rng) -> Decision {
+        let Some(rung) = self.rung().cloned() else {
+            return Decision::Stop;
+        };
+        if r.epoch < rung.budget {
+            return Decision::Continue {
+                budget: rung.budget,
+            };
+        }
+        // Rung budget reached: record and pause (or finish at final rung).
+        self.results.push((r.id, r.measure));
+        let is_final_budget = rung.budget >= self.max_resource
+            || self
+                .active()
+                .map(|b| self.rung_idx + 1 >= b.rungs.len())
+                .unwrap_or(true);
+        let decision = if is_final_budget {
+            Decision::Stop
+        } else {
+            Decision::Pause
+        };
+        self.complete_rung_if_ready();
+        decision
+    }
+
+    fn done(&self) -> bool {
+        self.bracket_idx >= self.brackets.len()
+    }
+
+    fn take_evictions(&mut self) -> Vec<SessionId> {
+        std::mem::take(&mut self.evictions)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChoptConfig;
+
+    fn space() -> Space {
+        ChoptConfig::from_json_str(crate::config::LISTING1_EXAMPLE)
+            .unwrap()
+            .space
+    }
+
+    #[test]
+    fn bracket_schedule_matches_li_et_al() {
+        // R=81, eta=3 -> s_max=4, first bracket: n=81 configs at r=1.
+        let bs = brackets(81, 3);
+        assert_eq!(bs.len(), 5);
+        assert_eq!(bs[0].rungs[0].n, 81);
+        assert_eq!(bs[0].rungs[0].budget, 1);
+        assert_eq!(bs[0].rungs.len(), 5);
+        assert_eq!(bs[0].rungs[4].budget, 81);
+        assert_eq!(bs[0].rungs[4].n, 1);
+        // Last bracket: n = s_max+1 = 5 configs straight at R.
+        assert_eq!(bs[4].rungs.len(), 1);
+        assert_eq!(bs[4].rungs[0].budget, 81);
+        assert_eq!(bs[4].rungs[0].n, 5);
+    }
+
+    #[test]
+    fn full_bracket_flow_promotes_best() {
+        // R=9, eta=3: bracket 0 has rungs (n=9,r=1),(n=3,r=3),(n=1,r=9).
+        let mut t = Hyperband::new(space(), Order::Descending, 9, 3);
+        let mut rng = Rng::new(1);
+        let mut ids = Vec::new();
+        while let Some(trial) = t.next_trial(&mut rng) {
+            let id = SessionId(ids.len() as u64);
+            t.register(id, &trial);
+            assert_eq!(trial.budget, 1);
+            ids.push(id);
+        }
+        assert_eq!(ids.len(), 9);
+        // Report rung 0: measure = id (so 6,7,8 are best).
+        let mut pauses = 0;
+        for &id in &ids {
+            let d = t.report(
+                Report {
+                    id,
+                    epoch: 1,
+                    measure: id.0 as f64,
+                },
+                &mut rng,
+            );
+            if d == Decision::Pause {
+                pauses += 1;
+            }
+        }
+        assert_eq!(pauses, 9);
+        // 6 evicted, 3 promoted with budget 3.
+        let ev = t.take_evictions();
+        assert_eq!(ev.len(), 6);
+        let mut resumed = Vec::new();
+        while let Some(trial) = t.next_trial(&mut rng) {
+            if let Some(rid) = trial.resume_of {
+                assert_eq!(trial.budget, 3);
+                resumed.push(rid);
+            } else {
+                break;
+            }
+        }
+        let mut resumed_ids: Vec<u64> = resumed.iter().map(|r| r.0).collect();
+        resumed_ids.sort_unstable();
+        assert_eq!(resumed_ids, vec![6, 7, 8]);
+    }
+
+    #[test]
+    fn final_rung_stops_outright() {
+        let mut t = Hyperband::new(space(), Order::Descending, 9, 3);
+        let mut rng = Rng::new(2);
+        // Drain bracket 0 completely.
+        let mut ids = Vec::new();
+        while let Some(trial) = t.next_trial(&mut rng) {
+            let id = SessionId(100 + ids.len() as u64);
+            t.register(id, &trial);
+            ids.push(id);
+        }
+        for &id in &ids {
+            t.report(
+                Report {
+                    id,
+                    epoch: 1,
+                    measure: id.0 as f64,
+                },
+                &mut rng,
+            );
+        }
+        t.take_evictions();
+        // Promote and finish rung 1.
+        let mut rung1 = Vec::new();
+        while let Some(trial) = t.next_trial(&mut rng) {
+            match trial.resume_of {
+                Some(rid) => rung1.push(rid),
+                None => break,
+            }
+        }
+        for &id in &rung1 {
+            let d = t.report(
+                Report {
+                    id,
+                    epoch: 3,
+                    measure: id.0 as f64,
+                },
+                &mut rng,
+            );
+            assert_eq!(d, Decision::Pause);
+        }
+        // Rung 2 (final, budget 9): the single survivor must get Stop.
+        let mut last = Vec::new();
+        while let Some(trial) = t.next_trial(&mut rng) {
+            match trial.resume_of {
+                Some(rid) => {
+                    assert_eq!(trial.budget, 9);
+                    last.push(rid);
+                }
+                None => break,
+            }
+        }
+        assert_eq!(last.len(), 1);
+        let d = t.report(
+            Report {
+                id: last[0],
+                epoch: 9,
+                measure: 1.0,
+            },
+            &mut rng,
+        );
+        assert_eq!(d, Decision::Stop);
+    }
+
+    #[test]
+    fn done_after_all_brackets() {
+        let mut t = Hyperband::new(space(), Order::Descending, 3, 3);
+        let mut rng = Rng::new(3);
+        assert!(!t.done());
+        // R=3,eta=3: bracket0 rungs (n=2? ...) just drive everything.
+        let mut guard = 0;
+        while !t.done() && guard < 1000 {
+            guard += 1;
+            let mut progressed = false;
+            while let Some(trial) = t.next_trial(&mut rng) {
+                progressed = true;
+                let id = SessionId(1000 + guard * 50 + t.hparams.len() as u64);
+                t.register(id, &trial);
+                let budget = trial.budget;
+                t.report(
+                    Report {
+                        id,
+                        epoch: budget,
+                        measure: rng.f64(),
+                    },
+                    &mut rng,
+                );
+                t.take_evictions();
+            }
+            if !progressed {
+                break;
+            }
+        }
+        assert!(t.done(), "hyperband should exhaust its brackets");
+    }
+}

@@ -1,0 +1,216 @@
+//! Micro-bench harness (the vendor set has no `criterion`).
+//!
+//! All `[[bench]]` targets are `harness = false` binaries built on this:
+//! warmup, timed iterations, and a stats line (mean ± std, p50/p99,
+//! throughput).  Also provides [`Table`], a plain-text table printer used
+//! by every paper-table bench to print the same rows the paper reports.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub per_iter: Summary,
+    pub total: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let s = &self.per_iter;
+        format!(
+            "{:<40} {:>10.3} µs/iter ± {:>8.3} (p50 {:>10.3}, p99 {:>10.3}) [{} iters, {:.3}s]",
+            self.name,
+            s.mean * 1e6,
+            s.std * 1e6,
+            s.p50 * 1e6,
+            s.p99 * 1e6,
+            self.iters,
+            self.total.as_secs_f64(),
+        )
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        self.per_iter.mean
+    }
+}
+
+/// Benchmark runner with warmup + adaptive iteration count.
+pub struct Bencher {
+    /// Target wall time for the measured phase.
+    pub target_time: Duration,
+    /// Warmup wall time.
+    pub warmup: Duration,
+    /// Hard cap on measured iterations.
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            target_time: Duration::from_secs(1),
+            warmup: Duration::from_millis(200),
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Bencher {
+        Bencher {
+            target_time: Duration::from_millis(300),
+            warmup: Duration::from_millis(50),
+            max_iters: 2_000,
+        }
+    }
+
+    /// Run `f` repeatedly; returns per-iteration timing stats.
+    pub fn bench<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup (also primes caches / JIT-ish lazy init).
+        let w0 = Instant::now();
+        let mut warm_iters = 0usize;
+        while w0.elapsed() < self.warmup && warm_iters < self.max_iters {
+            f();
+            warm_iters += 1;
+        }
+        // Estimate per-iter cost from warmup to pick a batch count.
+        let est = if warm_iters > 0 {
+            w0.elapsed().as_secs_f64() / warm_iters as f64
+        } else {
+            1e-6
+        };
+        let planned = ((self.target_time.as_secs_f64() / est.max(1e-9)) as usize)
+            .clamp(1, self.max_iters);
+
+        let mut samples = Vec::with_capacity(planned);
+        let t0 = Instant::now();
+        for _ in 0..planned {
+            let it = Instant::now();
+            f();
+            samples.push(it.elapsed().as_secs_f64());
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters: planned,
+            per_iter: Summary::of(&samples),
+            total: t0.elapsed(),
+        }
+    }
+}
+
+/// Plain-text table printer: the benches print the paper's tables with it.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| format!("+{}", "-".repeat(w + 2)))
+            .collect::<String>()
+            + "+";
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::new();
+            for (c, cell) in cells.iter().enumerate() {
+                s.push_str(&format!("| {:<width$} ", cell, width = widths[c]));
+            }
+            s.push('|');
+            s
+        };
+        let mut out = format!("\n== {} ==\n{}\n{}\n{}\n", self.title, sep, fmt_row(&self.header), sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a GPU-time duration the way the paper's Table 4 does ("60+ days",
+/// "22 days", "2 days").
+pub fn fmt_gpu_days(hours: f64) -> String {
+    let days = hours / 24.0;
+    if days >= 1.0 {
+        format!("{:.1} days", days)
+    } else {
+        format!("{:.1} hours", hours)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let b = Bencher {
+            target_time: Duration::from_millis(20),
+            warmup: Duration::from_millis(5),
+            max_iters: 1000,
+        };
+        let mut counter = 0u64;
+        let r = b.bench("noop", || {
+            counter = counter.wrapping_add(1);
+        });
+        assert!(r.iters >= 1);
+        assert!(r.per_iter.mean >= 0.0);
+        assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Table X", &["model", "acc"]);
+        t.row(&["resnet".into(), "77.75".into()]);
+        t.row(&["wrn-with-long-name".into(), "81.66".into()]);
+        let s = t.render();
+        assert!(s.contains("Table X"));
+        assert!(s.contains("| resnet"));
+        assert!(s.lines().filter(|l| l.starts_with('+')).count() >= 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn gpu_days_formatting() {
+        assert_eq!(fmt_gpu_days(48.0), "2.0 days");
+        assert_eq!(fmt_gpu_days(12.0), "12.0 hours");
+    }
+}

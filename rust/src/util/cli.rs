@@ -1,0 +1,345 @@
+//! Declarative CLI argument parser (the vendor set has no `clap`).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with defaults, required options, and positional arguments; generates
+//! `--help` text.  Used by `rust/src/main.rs` and the examples.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+enum ArgKind {
+    Flag,
+    Option { default: Option<String>, required: bool },
+    Positional { required: bool },
+}
+
+#[derive(Debug, Clone)]
+struct ArgSpec {
+    name: String,
+    kind: ArgKind,
+    help: String,
+}
+
+/// A (sub)command specification.
+#[derive(Debug, Clone)]
+pub struct Command {
+    pub name: String,
+    pub about: String,
+    args: Vec<ArgSpec>,
+    subcommands: Vec<Command>,
+}
+
+/// Parse result: matched values plus the chosen subcommand chain.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub subcommand: Option<(String, Box<Matches>)>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum CliError {
+    #[error("unknown argument '{0}'")]
+    Unknown(String),
+    #[error("missing value for '--{0}'")]
+    MissingValue(String),
+    #[error("missing required argument '{0}'")]
+    MissingRequired(String),
+    #[error("unknown subcommand '{0}'")]
+    UnknownSubcommand(String),
+    #[error("help requested")]
+    HelpRequested,
+}
+
+impl Command {
+    pub fn new(name: &str, about: &str) -> Command {
+        Command {
+            name: name.to_string(),
+            about: about.to_string(),
+            args: Vec::new(),
+            subcommands: Vec::new(),
+        }
+    }
+
+    /// Boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Command {
+        self.args.push(ArgSpec {
+            name: name.to_string(),
+            kind: ArgKind::Flag,
+            help: help.to_string(),
+        });
+        self
+    }
+
+    /// `--name <value>` with optional default.
+    pub fn opt(mut self, name: &str, default: Option<&str>, help: &str) -> Command {
+        self.args.push(ArgSpec {
+            name: name.to_string(),
+            kind: ArgKind::Option {
+                default: default.map(|s| s.to_string()),
+                required: false,
+            },
+            help: help.to_string(),
+        });
+        self
+    }
+
+    /// Required `--name <value>`.
+    pub fn opt_required(mut self, name: &str, help: &str) -> Command {
+        self.args.push(ArgSpec {
+            name: name.to_string(),
+            kind: ArgKind::Option {
+                default: None,
+                required: true,
+            },
+            help: help.to_string(),
+        });
+        self
+    }
+
+    /// Positional argument (filled in declaration order).
+    pub fn positional(mut self, name: &str, required: bool, help: &str) -> Command {
+        self.args.push(ArgSpec {
+            name: name.to_string(),
+            kind: ArgKind::Positional { required },
+            help: help.to_string(),
+        });
+        self
+    }
+
+    pub fn subcommand(mut self, cmd: Command) -> Command {
+        self.subcommands.push(cmd);
+        self
+    }
+
+    /// Render `--help`.
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        if !self.subcommands.is_empty() {
+            s.push_str(" <SUBCOMMAND>");
+        }
+        for a in &self.args {
+            match &a.kind {
+                ArgKind::Flag => s.push_str(&format!(" [--{}]", a.name)),
+                ArgKind::Option { required: true, .. } => {
+                    s.push_str(&format!(" --{} <v>", a.name))
+                }
+                ArgKind::Option { .. } => s.push_str(&format!(" [--{} <v>]", a.name)),
+                ArgKind::Positional { required: true } => {
+                    s.push_str(&format!(" <{}>", a.name))
+                }
+                ArgKind::Positional { .. } => s.push_str(&format!(" [{}]", a.name)),
+            }
+        }
+        s.push('\n');
+        if !self.args.is_empty() {
+            s.push_str("\nARGS:\n");
+            for a in &self.args {
+                let default = match &a.kind {
+                    ArgKind::Option {
+                        default: Some(d), ..
+                    } => format!(" [default: {d}]"),
+                    _ => String::new(),
+                };
+                s.push_str(&format!("  --{:<22} {}{}\n", a.name, a.help, default));
+            }
+        }
+        if !self.subcommands.is_empty() {
+            s.push_str("\nSUBCOMMANDS:\n");
+            for c in &self.subcommands {
+                s.push_str(&format!("  {:<24} {}\n", c.name, c.about));
+            }
+        }
+        s
+    }
+
+    /// Parse a raw argv slice (excluding the program name).
+    pub fn parse(&self, argv: &[String]) -> Result<Matches, CliError> {
+        let mut m = Matches::default();
+        // Seed defaults.
+        for a in &self.args {
+            if let ArgKind::Option {
+                default: Some(d), ..
+            } = &a.kind
+            {
+                m.values.insert(a.name.clone(), d.clone());
+            }
+        }
+        let positionals: Vec<&ArgSpec> = self
+            .args
+            .iter()
+            .filter(|a| matches!(a.kind, ArgKind::Positional { .. }))
+            .collect();
+        let mut pos_idx = 0;
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError::HelpRequested);
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .args
+                    .iter()
+                    .find(|a| a.name == name)
+                    .ok_or_else(|| CliError::Unknown(tok.clone()))?;
+                match &spec.kind {
+                    ArgKind::Flag => {
+                        m.flags.push(name);
+                    }
+                    ArgKind::Option { .. } => {
+                        let val = match inline_val {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                argv.get(i)
+                                    .cloned()
+                                    .ok_or(CliError::MissingValue(name.clone()))?
+                            }
+                        };
+                        m.values.insert(name, val);
+                    }
+                    ArgKind::Positional { .. } => {
+                        return Err(CliError::Unknown(tok.clone()))
+                    }
+                }
+            } else if !self.subcommands.is_empty() {
+                let sub = self
+                    .subcommands
+                    .iter()
+                    .find(|c| c.name == *tok)
+                    .ok_or_else(|| CliError::UnknownSubcommand(tok.clone()))?;
+                let rest = sub.parse(&argv[i + 1..])?;
+                m.subcommand = Some((sub.name.clone(), Box::new(rest)));
+                break;
+            } else if pos_idx < positionals.len() {
+                m.values
+                    .insert(positionals[pos_idx].name.clone(), tok.clone());
+                pos_idx += 1;
+            } else {
+                return Err(CliError::Unknown(tok.clone()));
+            }
+            i += 1;
+        }
+        // Required checks (only on the matched level; subcommands check
+        // themselves in the recursive call).
+        for a in &self.args {
+            let required = matches!(
+                a.kind,
+                ArgKind::Option { required: true, .. } | ArgKind::Positional { required: true }
+            );
+            if required && !m.values.contains_key(&a.name) {
+                return Err(CliError::MissingRequired(a.name.clone()));
+            }
+        }
+        Ok(m)
+    }
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Option<f64> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Option<usize> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+
+    pub fn get_u64(&self, name: &str) -> Option<u64> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("chopt", "test")
+            .flag("verbose", "noise")
+            .opt("seed", Some("42"), "rng seed")
+            .opt_required("config", "config path")
+            .positional("input", false, "input file")
+    }
+
+    #[test]
+    fn parses_flags_options_positionals() {
+        let m = cmd()
+            .parse(&argv(&["--verbose", "--config", "c.json", "data.bin"]))
+            .unwrap();
+        assert!(m.flag("verbose"));
+        assert_eq!(m.get("config"), Some("c.json"));
+        assert_eq!(m.get("seed"), Some("42")); // default
+        assert_eq!(m.get("input"), Some("data.bin"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let m = cmd().parse(&argv(&["--config=x.json", "--seed=7"])).unwrap();
+        assert_eq!(m.get("config"), Some("x.json"));
+        assert_eq!(m.get_u64("seed"), Some(7));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert_eq!(
+            cmd().parse(&argv(&[])),
+            Err(CliError::MissingRequired("config".into()))
+        );
+    }
+
+    #[test]
+    fn unknown_arg_errors() {
+        let e = cmd().parse(&argv(&["--config", "c", "--nope"]));
+        assert_eq!(e, Err(CliError::Unknown("--nope".into())));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let e = cmd().parse(&argv(&["--config"]));
+        assert_eq!(e, Err(CliError::MissingValue("config".into())));
+    }
+
+    #[test]
+    fn subcommands_route() {
+        let c = Command::new("chopt", "root").subcommand(
+            Command::new("run", "run a session").opt("agents", Some("2"), "n agents"),
+        );
+        let m = c.parse(&argv(&["run", "--agents", "4"])).unwrap();
+        let (name, sub) = m.subcommand.unwrap();
+        assert_eq!(name, "run");
+        assert_eq!(sub.get_usize("agents"), Some(4));
+        assert_eq!(
+            c.parse(&argv(&["nope"])),
+            Err(CliError::UnknownSubcommand("nope".into()))
+        );
+    }
+
+    #[test]
+    fn help_requested() {
+        assert_eq!(cmd().parse(&argv(&["-h"])), Err(CliError::HelpRequested));
+        let text = cmd().help_text();
+        assert!(text.contains("--config"));
+        assert!(text.contains("[default: 42]"));
+    }
+}

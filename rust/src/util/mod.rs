@@ -1,0 +1,11 @@
+//! Foundational substrates built in-repo (the offline vendor set has no
+//! serde_json / rand / clap / criterion / proptest — see DESIGN.md
+//! §Offline-vendor substitutions).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

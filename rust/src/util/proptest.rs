@@ -1,0 +1,155 @@
+//! Property-testing harness (the vendor set has no `proptest`).
+//!
+//! Seeded random-input generation with failure shrinking over a scalar
+//! "size" knob: when a case fails, the harness retries with progressively
+//! smaller sizes to report a minimal-ish reproduction, and always prints
+//! the failing seed so the case can be replayed exactly.
+//!
+//! Used by the coordinator/cluster invariant tests (GPU conservation,
+//! pool-transition legality, tuner budget accounting).
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// Maximum "size" passed to the generator (e.g. number of events).
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 64,
+            seed: 0xC0FFEE,
+            max_size: 64,
+        }
+    }
+}
+
+/// Outcome of a failed property with its reproduction info.
+#[derive(Debug)]
+pub struct Failure {
+    pub seed: u64,
+    pub size: usize,
+    pub message: String,
+}
+
+/// Run `prop(rng, size)` for `cfg.cases` random (seed, size) pairs.
+///
+/// `prop` returns `Err(msg)` to signal a violated invariant. On failure the
+/// harness shrinks `size` toward 1 (halving) while the failure reproduces,
+/// then panics with the smallest reproduction found.
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    let mut meta = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let case_seed = meta.next_u64();
+        // Sizes sweep small -> large so early failures are already small.
+        let size = 1 + (cfg.max_size - 1) * case / cfg.cases.max(1);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            let shrunk = shrink(&mut prop, case_seed, size, msg);
+            panic!(
+                "property '{name}' failed: {}\n  reproduce with seed={} size={}",
+                shrunk.message, shrunk.seed, shrunk.size
+            );
+        }
+    }
+}
+
+fn shrink<F>(prop: &mut F, seed: u64, size: usize, first_msg: String) -> Failure
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    let mut best = Failure {
+        seed,
+        size,
+        message: first_msg,
+    };
+    let mut s = size;
+    while s > 1 {
+        s /= 2;
+        let mut rng = Rng::new(seed);
+        match prop(&mut rng, s) {
+            Err(msg) => {
+                best = Failure {
+                    seed,
+                    size: s,
+                    message: msg,
+                };
+            }
+            Ok(()) => break, // smaller size passes; stop shrinking
+        }
+    }
+    best
+}
+
+/// Assert-style helper for inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", Config::default(), |rng, size| {
+            let xs: Vec<i64> = (0..size).map(|_| rng.int_range(-100, 100)).collect();
+            let a: i64 = xs.iter().sum();
+            let b: i64 = xs.iter().rev().sum();
+            prop_assert!(a == b, "sum not commutative: {a} vs {b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_repro() {
+        check(
+            "always-fails",
+            Config {
+                cases: 4,
+                ..Config::default()
+            },
+            |_rng, size| Err(format!("boom at size {size}")),
+        );
+    }
+
+    #[test]
+    fn shrink_reduces_size() {
+        // Fails whenever size >= 4; shrink should land at 4's neighborhood.
+        let mut calls = Vec::new();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check(
+                "ge4",
+                Config {
+                    cases: 16,
+                    max_size: 64,
+                    seed: 9,
+                },
+                |_rng, size| {
+                    calls.push(size);
+                    if size >= 4 {
+                        Err(format!("size {size} >= 4"))
+                    } else {
+                        Ok(())
+                    }
+                },
+            )
+        }));
+        let msg = format!("{:?}", result.unwrap_err().downcast_ref::<String>());
+        assert!(msg.contains("size="), "panic message should carry repro: {msg}");
+    }
+}

@@ -1,0 +1,155 @@
+//! Session results → JSON export (the contract between the coordinator
+//! and any front end; the embedded HTML viewer consumes exactly this).
+
+use crate::config::Order;
+use crate::hparam::Space;
+use crate::nsml::NsmlSession;
+use crate::util::json::Value as Json;
+
+/// Axes + lines document for parallel coordinates (Fig. 3):
+/// every axis is a hyperparameter (plus the measure as the last axis);
+/// every line is one NSML session.
+pub fn parallel_coords_doc(
+    space: &Space,
+    sessions: &[NsmlSession],
+    order: Order,
+    run_label: &str,
+) -> Json {
+    let mut axes: Vec<Json> = space
+        .defs
+        .iter()
+        .map(|d| {
+            Json::obj()
+                .with("name", Json::Str(d.name.clone()))
+                .with("type", Json::Str(d.ptype.name().to_string()))
+                .with("distribution", Json::Str(d.dist.name().to_string()))
+        })
+        .collect();
+    axes.push(
+        Json::obj()
+            .with("name", Json::Str("measure".into()))
+            .with("type", Json::Str("float".into()))
+            .with("distribution", Json::Str("uniform".into())),
+    );
+
+    let lines: Vec<Json> = sessions
+        .iter()
+        .map(|s| {
+            let mut values = Json::obj();
+            for (k, v) in s.hparams.iter() {
+                values.set(k, v.to_json());
+            }
+            Json::obj()
+                .with("id", Json::Num(s.id.0 as f64))
+                .with("values", values)
+                .with(
+                    "measure",
+                    s.best_measure(order).map(Json::Num).unwrap_or(Json::Null),
+                )
+                .with("status", Json::Str(s.status.name().to_string()))
+                .with("epochs", Json::Num(s.epochs as f64))
+        })
+        .collect();
+
+    Json::obj()
+        .with("label", Json::Str(run_label.to_string()))
+        .with("axes", Json::Arr(axes))
+        .with("lines", Json::Arr(lines))
+}
+
+/// Scalar-plot view: loss/measure curves per session ("Scalar plot view").
+pub fn curves_doc(sessions: &[NsmlSession]) -> Json {
+    let curves: Vec<Json> = sessions
+        .iter()
+        .map(|s| {
+            Json::obj()
+                .with("id", Json::Num(s.id.0 as f64))
+                .with(
+                    "epochs",
+                    Json::Arr(s.history.iter().map(|p| Json::Num(p.epoch as f64)).collect()),
+                )
+                .with(
+                    "measure",
+                    Json::Arr(s.history.iter().map(|p| Json::Num(p.measure)).collect()),
+                )
+                .with(
+                    "loss",
+                    Json::Arr(s.history.iter().map(|p| Json::Num(p.loss)).collect()),
+                )
+        })
+        .collect();
+    Json::obj().with("curves", Json::Arr(curves))
+}
+
+/// Model summary table rows ("Model summary view"): precise values of the
+/// selected sessions.
+pub fn summary_doc(sessions: &[&NsmlSession], order: Order) -> Json {
+    let rows: Vec<Json> = sessions
+        .iter()
+        .map(|s| {
+            Json::obj()
+                .with("id", Json::Num(s.id.0 as f64))
+                .with("hparams", s.hparams.to_json())
+                .with(
+                    "best",
+                    s.best_measure(order).map(Json::Num).unwrap_or(Json::Null),
+                )
+                .with("epochs", Json::Num(s.epochs as f64))
+                .with("revivals", Json::Num(s.revivals as f64))
+                .with("gpu_seconds", Json::Num(s.gpu_seconds))
+        })
+        .collect();
+    Json::obj().with("rows", Json::Arr(rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChoptConfig;
+    use crate::hparam::{Assignment, Value};
+    use crate::nsml::SessionId;
+
+    fn sessions() -> Vec<NsmlSession> {
+        (0..3)
+            .map(|i| {
+                let mut hp = Assignment::new();
+                hp.set("lr", Value::Float(0.01 * (i + 1) as f64));
+                let mut s = NsmlSession::new(SessionId(i), hp, "m", 0.0);
+                s.report(1, 50.0 + i as f64, 2.0);
+                s.report(2, 55.0 + i as f64, 1.5);
+                s
+            })
+            .collect()
+    }
+
+    #[test]
+    fn parallel_doc_shape() {
+        let cfg = ChoptConfig::from_json_str(crate::config::LISTING1_EXAMPLE).unwrap();
+        let doc = parallel_coords_doc(&cfg.space, &sessions(), Order::Descending, "run-1");
+        let axes = doc.get("axes").unwrap().as_arr().unwrap();
+        assert_eq!(axes.len(), cfg.space.defs.len() + 1);
+        assert_eq!(
+            axes.last().unwrap().get("name").unwrap().as_str(),
+            Some("measure")
+        );
+        let lines = doc.get("lines").unwrap().as_arr().unwrap();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[2].get("measure").unwrap().as_f64(), Some(57.0));
+    }
+
+    #[test]
+    fn curves_doc_shape() {
+        let doc = curves_doc(&sessions());
+        let c = doc.get("curves").unwrap().idx(0).unwrap();
+        assert_eq!(c.get("epochs").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(c.get("loss").unwrap().idx(1).unwrap().as_f64(), Some(1.5));
+    }
+
+    #[test]
+    fn summary_doc_shape() {
+        let ss = sessions();
+        let refs: Vec<&NsmlSession> = ss.iter().collect();
+        let doc = summary_doc(&refs, Order::Descending);
+        assert_eq!(doc.get("rows").unwrap().as_arr().unwrap().len(), 3);
+    }
+}

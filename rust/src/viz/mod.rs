@@ -1,0 +1,28 @@
+//! Web-based analytic visual tool (paper §3.5, Figs 3–7).
+//!
+//! The paper ships a web UI; we ship its data + rendering layer:
+//!
+//! * [`export`] — session results → JSON documents (the axes/lines format
+//!   a parallel-coordinates front end consumes).
+//! * [`parallel_coords`] — SVG parallel-coordinates renderer (Fig. 3),
+//!   with top-K highlighting (Fig. 4).
+//! * [`plots`] — scatter (parameter analytic view), histogram, and
+//!   learning-duration bars (Fig. 5 left).
+//! * [`cluster_view`] — 2-D PCA projection of hyperparameter vectors
+//!   (stand-in for the t-SNE clustered view of Fig. 5).
+//! * [`hierarchy`] — PBT parent→child lineage as a node-link SVG (Fig. 5
+//!   right).
+//! * [`server`] — dependency-free HTTP server exposing the JSON and SVGs
+//!   plus an embedded HTML viewer.
+//! * [`report`] — terminal leaderboard/session tables.
+
+pub mod cluster_view;
+pub mod export;
+pub mod hierarchy;
+pub mod parallel_coords;
+pub mod plots;
+pub mod report;
+pub mod server;
+mod svg;
+
+pub use svg::Svg;

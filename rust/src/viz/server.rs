@@ -1,0 +1,214 @@
+//! Dependency-free HTTP server for the analytic tool.
+//!
+//! Serves the JSON exports and SVG renders over `GET`, plus an embedded
+//! single-file HTML viewer that draws the parallel coordinates client-side
+//! from `/api/parallel.json` (the same document `export::parallel_coords_doc`
+//! produces).  This is the "web-based" half of §3.5 without a JS toolchain.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A route table: path → (content type, body).
+pub type Routes = HashMap<String, (String, Vec<u8>)>;
+
+/// The viz HTTP server.
+pub struct VizServer {
+    routes: Arc<Mutex<Routes>>,
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    pub requests: Arc<AtomicU64>,
+}
+
+impl VizServer {
+    /// Bind on 127.0.0.1:`port` (0 = ephemeral) and start serving.
+    pub fn start(port: u16, mut routes: Routes) -> std::io::Result<VizServer> {
+        routes
+            .entry("/".to_string())
+            .or_insert(("text/html".to_string(), VIEWER_HTML.as_bytes().to_vec()));
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let routes = Arc::new(Mutex::new(routes));
+        let stop = Arc::new(AtomicBool::new(false));
+        let requests = Arc::new(AtomicU64::new(0));
+        let (r2, s2, q2) = (routes.clone(), stop.clone(), requests.clone());
+        let handle = std::thread::spawn(move || {
+            while !s2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        q2.fetch_add(1, Ordering::Relaxed);
+                        let _ = handle_conn(stream, &r2);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(10));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(VizServer {
+            routes,
+            addr,
+            stop,
+            handle: Some(handle),
+            requests,
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Replace/add a route while running.
+    pub fn put_route(&self, path: &str, content_type: &str, body: Vec<u8>) {
+        self.routes
+            .lock()
+            .unwrap()
+            .insert(path.to_string(), (content_type.to_string(), body));
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for VizServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, routes: &Arc<Mutex<Routes>>) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(500)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut request_line = String::new();
+    reader.read_line(&mut request_line)?;
+    // Drain headers.
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 || line == "\r\n" || line == "\n" {
+            break;
+        }
+    }
+    let path = request_line
+        .split_whitespace()
+        .nth(1)
+        .unwrap_or("/")
+        .split('?')
+        .next()
+        .unwrap_or("/")
+        .to_string();
+    let routes = routes.lock().unwrap();
+    let response = match routes.get(&path) {
+        Some((ctype, body)) => {
+            let mut r = format!(
+                "HTTP/1.1 200 OK\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+                body.len()
+            )
+            .into_bytes();
+            r.extend_from_slice(body);
+            r
+        }
+        None => {
+            let body = b"404 not found";
+            let mut r = format!(
+                "HTTP/1.1 404 Not Found\r\nContent-Type: text/plain\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+                body.len()
+            )
+            .into_bytes();
+            r.extend_from_slice(body);
+            r
+        }
+    };
+    stream.write_all(&response)?;
+    stream.flush()
+}
+
+/// Minimal GET client (tests + examples' self-check).
+pub fn http_get(addr: std::net::SocketAddr, path: &str) -> std::io::Result<(u16, Vec<u8>)> {
+    let mut stream = TcpStream::connect(addr)?;
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n")?;
+    let mut buf = Vec::new();
+    stream.read_to_end(&mut buf)?;
+    let text_end = buf
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .map(|p| p + 4)
+        .unwrap_or(buf.len());
+    let head = String::from_utf8_lossy(&buf[..text_end]).to_string();
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    Ok((status, buf[text_end..].to_vec()))
+}
+
+/// Embedded single-file viewer: fetches /api/parallel.json and draws
+/// parallel coordinates on a canvas.
+const VIEWER_HTML: &str = r#"<!doctype html>
+<html><head><meta charset="utf-8"><title>CHOPT viz</title>
+<style>body{font-family:monospace;margin:16px}canvas{border:1px solid #ccc}</style>
+</head><body>
+<h2>CHOPT — parallel coordinates</h2>
+<div>views: <a href="/api/parallel.json">parallel.json</a>
+ <a href="/api/curves.json">curves.json</a>
+ <a href="/svg/parallel.svg">parallel.svg</a></div>
+<canvas id="c" width="1000" height="440"></canvas>
+<script>
+fetch('/api/parallel.json').then(r=>r.json()).then(doc=>{
+  const cv=document.getElementById('c'),g=cv.getContext('2d');
+  const axes=doc.axes,lines=doc.lines;const m=60,w=cv.width-2*m,h=cv.height-80;
+  const x=i=>m+w*i/(axes.length-1);
+  const ranges=axes.map(a=>({lo:Infinity,hi:-Infinity}));
+  const val=(l,a,i)=>i==axes.length-1?l.measure:(typeof l.values[a.name]==='number'?l.values[a.name]:null);
+  lines.forEach(l=>axes.forEach((a,i)=>{const v=val(l,a,i);if(v!=null){ranges[i].lo=Math.min(ranges[i].lo,v);ranges[i].hi=Math.max(ranges[i].hi,v);}}));
+  g.strokeStyle='#888';axes.forEach((a,i)=>{g.beginPath();g.moveTo(x(i),40);g.lineTo(x(i),40+h);g.stroke();g.fillText(a.name,x(i)-20,30);});
+  g.strokeStyle='rgba(123,79,166,0.45)';
+  lines.forEach(l=>{g.beginPath();let started=false;axes.forEach((a,i)=>{
+    let v=val(l,a,i);const r=ranges[i];if(v==null||r.hi<=r.lo){v=r.lo||0}
+    const y=40+h-(r.hi>r.lo?(v-r.lo)/(r.hi-r.lo):0.5)*h;
+    if(!started){g.moveTo(x(i),y);started=true}else{g.lineTo(x(i),y)}});g.stroke();});
+});
+</script></body></html>"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serves_routes_and_404() {
+        let mut routes = Routes::new();
+        routes.insert(
+            "/api/test.json".into(),
+            ("application/json".into(), b"{\"ok\":true}".to_vec()),
+        );
+        let server = VizServer::start(0, routes).unwrap();
+        let addr = server.addr();
+        let (status, body) = http_get(addr, "/api/test.json").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"{\"ok\":true}");
+        let (status, _) = http_get(addr, "/nope").unwrap();
+        assert_eq!(status, 404);
+        // Embedded viewer present at /.
+        let (status, body) = http_get(addr, "/").unwrap();
+        assert_eq!(status, 200);
+        assert!(String::from_utf8_lossy(&body).contains("parallel coordinates"));
+        // Live route update.
+        server.put_route("/late", "text/plain", b"hello".to_vec());
+        let (status, body) = http_get(addr, "/late").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"hello");
+        server.stop();
+    }
+}

@@ -1,0 +1,108 @@
+//! Tiny SVG document builder shared by all renderers.
+
+/// SVG document accumulator.
+#[derive(Debug, Clone)]
+pub struct Svg {
+    pub width: f64,
+    pub height: f64,
+    body: String,
+}
+
+impl Svg {
+    pub fn new(width: f64, height: f64) -> Svg {
+        Svg {
+            width,
+            height,
+            body: String::new(),
+        }
+    }
+
+    pub fn line(&mut self, x1: f64, y1: f64, x2: f64, y2: f64, stroke: &str, width: f64) {
+        self.body.push_str(&format!(
+            r#"<line x1="{x1:.2}" y1="{y1:.2}" x2="{x2:.2}" y2="{y2:.2}" stroke="{stroke}" stroke-width="{width}"/>"#
+        ));
+    }
+
+    /// Polyline through points.
+    pub fn polyline(&mut self, pts: &[(f64, f64)], stroke: &str, width: f64, opacity: f64) {
+        if pts.is_empty() {
+            return;
+        }
+        let path: String = pts
+            .iter()
+            .map(|(x, y)| format!("{x:.2},{y:.2}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        self.body.push_str(&format!(
+            r#"<polyline points="{path}" fill="none" stroke="{stroke}" stroke-width="{width}" stroke-opacity="{opacity:.3}"/>"#
+        ));
+    }
+
+    pub fn circle(&mut self, cx: f64, cy: f64, r: f64, fill: &str, opacity: f64) {
+        self.body.push_str(&format!(
+            r#"<circle cx="{cx:.2}" cy="{cy:.2}" r="{r:.2}" fill="{fill}" fill-opacity="{opacity:.3}"/>"#
+        ));
+    }
+
+    pub fn rect(&mut self, x: f64, y: f64, w: f64, h: f64, fill: &str) {
+        self.body.push_str(&format!(
+            r#"<rect x="{x:.2}" y="{y:.2}" width="{w:.2}" height="{h:.2}" fill="{fill}"/>"#
+        ));
+    }
+
+    pub fn text(&mut self, x: f64, y: f64, size: f64, content: &str) {
+        let escaped = content
+            .replace('&', "&amp;")
+            .replace('<', "&lt;")
+            .replace('>', "&gt;");
+        self.body.push_str(&format!(
+            r#"<text x="{x:.2}" y="{y:.2}" font-size="{size:.1}" font-family="monospace">{escaped}</text>"#
+        ));
+    }
+
+    pub fn finish(&self) -> String {
+        format!(
+            r#"<svg xmlns="http://www.w3.org/2000/svg" width="{:.0}" height="{:.0}" viewBox="0 0 {:.0} {:.0}"><rect width="100%" height="100%" fill="white"/>{}</svg>"#,
+            self.width, self.height, self.width, self.height, self.body
+        )
+    }
+
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.finish())
+    }
+}
+
+/// A categorical color cycle (run colors in Fig. 7: purple, red, ...).
+pub const PALETTE: [&str; 8] = [
+    "#7b4fa6", "#d62728", "#2ca02c", "#1f77b4", "#ff7f0e", "#17becf", "#e377c2", "#8c564b",
+];
+
+pub fn color(i: usize) -> &'static str {
+    PALETTE[i % PALETTE.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_valid_svg() {
+        let mut s = Svg::new(100.0, 50.0);
+        s.line(0.0, 0.0, 100.0, 50.0, "#000", 1.0);
+        s.circle(10.0, 10.0, 2.0, "red", 0.5);
+        s.text(5.0, 5.0, 10.0, "a<b&c");
+        let doc = s.finish();
+        assert!(doc.starts_with("<svg"));
+        assert!(doc.ends_with("</svg>"));
+        assert!(doc.contains("&lt;b&amp;c"));
+        assert!(doc.contains("<line"));
+    }
+
+    #[test]
+    fn palette_cycles() {
+        assert_eq!(color(0), color(8));
+    }
+}

@@ -1,0 +1,292 @@
+//! Integration tests over the full coordinator stack (surrogate-backed):
+//! multi-session scheduling, Stop-and-Go under external load, pool
+//! invariants across a whole run, and property tests on the composed
+//! system.
+
+use chopt::cluster::ExternalLoadTrace;
+use chopt::config::ChoptConfig;
+use chopt::coordinator::{run_sim, AgentEvent, SimSetup, StopAndGoPolicy};
+use chopt::trainer::surrogate::SurrogateTrainer;
+use chopt::trainer::Trainer;
+use chopt::util::proptest::{check, Config as PropConfig};
+
+fn cfg(tune: &str, step: i64, max_sessions: usize, max_gpus: usize, seed: u64) -> ChoptConfig {
+    let text = format!(
+        r#"{{
+          "h_params": {{
+            "lr": {{"parameters": [0.005, 0.09], "distribution": "log_uniform",
+                    "type": "float", "p_range": [0.001, 0.2]}},
+            "momentum": {{"parameters": [0.5, 0.99], "distribution": "uniform",
+                    "type": "float", "p_range": [0.1, 0.999]}},
+            "depth": {{"parameters": [20, 140], "distribution": "uniform",
+                    "type": "int", "p_range": [20, 140]}}
+          }},
+          "measure": "test/accuracy",
+          "order": "descending",
+          "step": {step},
+          "population": 4,
+          "tune": {tune},
+          "termination": {{"max_session_number": {max_sessions}}},
+          "model": "surrogate:resnet",
+          "max_epochs": 60,
+          "max_gpus": {max_gpus},
+          "seed": {seed}
+        }}"#
+    );
+    ChoptConfig::from_json_str(&text).unwrap()
+}
+
+fn surrogate(seed: u64) -> impl FnMut(u64) -> Box<dyn Trainer> {
+    move |id| Box::new(SurrogateTrainer::new(seed ^ id)) as Box<dyn Trainer>
+}
+
+#[test]
+fn two_chopt_sessions_share_cluster_via_queue() {
+    let setup = SimSetup {
+        cluster_gpus: 6,
+        configs: vec![
+            cfg("{\"random\": {}}", 10, 8, 3, 1),
+            cfg(
+                "{\"pbt\": {\"exploit\": \"truncation\", \"explore\": \"perturb\"}}",
+                10,
+                10,
+                3,
+                2,
+            ),
+        ],
+        submit_times: Vec::new(),
+        agent_slots: 2,
+        trace: None,
+        policy: StopAndGoPolicy::default(),
+        master_period: 60.0,
+        horizon: 1e9,
+        failures: Vec::new(),
+    };
+    let out = run_sim(setup, surrogate(7));
+    assert_eq!(out.agents.len(), 2);
+    for a in &out.agents {
+        assert!(a.finished, "agent {} unfinished", a.id);
+        a.pools.check_invariants().unwrap();
+        assert!(a.best().is_some());
+    }
+    // Cluster never oversubscribed.
+    let peak = out
+        .cluster
+        .usage_total
+        .series
+        .iter()
+        .map(|&(_, v)| v)
+        .fold(0.0, f64::max);
+    assert!(peak <= 6.0);
+}
+
+#[test]
+fn queued_sessions_wait_for_free_slot() {
+    // 3 configs, 1 agent slot: they must run sequentially, all finishing.
+    let setup = SimSetup {
+        cluster_gpus: 4,
+        configs: vec![
+            cfg("{\"random\": {}}", 10, 5, 4, 3),
+            cfg("{\"random\": {}}", 10, 5, 4, 4),
+            cfg("{\"random\": {}}", 10, 5, 4, 5),
+        ],
+        submit_times: Vec::new(),
+        agent_slots: 1,
+        trace: None,
+        policy: StopAndGoPolicy::default(),
+        master_period: 60.0,
+        horizon: 1e9,
+        failures: Vec::new(),
+    };
+    let out = run_sim(setup, surrogate(9));
+    assert_eq!(out.agents.len(), 3);
+    assert!(out.agents.iter().all(|a| a.finished));
+    // Distinct CHOPT ids assigned in order.
+    let mut ids: Vec<u64> = out.agents.iter().map(|a| a.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![1, 2, 3]);
+}
+
+#[test]
+fn stop_and_go_preempts_under_external_surge() {
+    // Small cluster + fig8 trace: during zone D the external demand
+    // forces preemptions; during zone C CHOPT gets bonus GPUs.
+    let horizon = 40_000.0;
+    let setup = SimSetup {
+        cluster_gpus: 8,
+        configs: vec![cfg("{\"random\": {}}", 5, 200, 4, 6)],
+        submit_times: Vec::new(),
+        agent_slots: 1,
+        trace: Some(ExternalLoadTrace::fig8(8, horizon, 11)),
+        policy: StopAndGoPolicy::default(),
+        master_period: 120.0,
+        horizon,
+        failures: Vec::new(),
+    };
+    let out = run_sim(setup, surrogate(20));
+    let a = &out.agents[0];
+    let preemptions = a
+        .events
+        .iter()
+        .filter(|e| matches!(e, AgentEvent::Preempted(..)))
+        .count();
+    let revivals = a
+        .events
+        .iter()
+        .filter(|e| matches!(e, AgentEvent::Revived(_)))
+        .count();
+    assert!(preemptions > 0, "zone D must preempt something");
+    assert!(revivals > 0, "freed GPUs must revive stopped sessions");
+    a.pools.check_invariants().unwrap();
+    // CHOPT allocation must exceed its base limit at some point (zone C
+    // bonus) — the Fig. 8 effect.
+    let peak_chopt = out
+        .cluster
+        .usage_chopt
+        .series
+        .iter()
+        .map(|&(_, v)| v)
+        .fold(0.0, f64::max);
+    assert!(peak_chopt > 4.0, "bonus GPUs never granted: peak {peak_chopt}");
+}
+
+#[test]
+fn dead_pool_reclaims_trainer_state() {
+    let c = cfg("{\"random\": {}}", 3, 40, 4, 12);
+    let out = run_sim(SimSetup::single(c, 4), surrogate(31));
+    let a = &out.agents[0];
+    assert!(a.pools.dead_count() > 0, "with stop_ratio 0.5 some must die");
+    // Dead sessions must have no trainer state left.
+    assert_eq!(
+        a.trainer.state_count(),
+        a.created - a.pools.dead_count(),
+        "state_count must equal non-dead sessions"
+    );
+}
+
+#[test]
+fn performance_threshold_terminates_early() {
+    let mut c = cfg("{\"random\": {}}", 10, 100000, 4, 13);
+    c.termination.max_session_number = None;
+    c.termination.performance_threshold = Some(70.0);
+    let out = run_sim(SimSetup::single(c, 4), surrogate(32));
+    let a = &out.agents[0];
+    assert!(a.finished);
+    assert!(
+        a.events
+            .iter()
+            .any(|e| matches!(e, AgentEvent::Terminated("performance_threshold"))),
+        "events: {:?}",
+        a.events.last()
+    );
+    let (_, best) = a.best().unwrap();
+    assert!(best >= 70.0);
+}
+
+#[test]
+fn time_termination_bounds_virtual_clock() {
+    let mut c = cfg("{\"random\": {}}", 10, 1000000, 2, 14);
+    c.termination.max_session_number = None;
+    c.termination.time_hours = Some(5.0);
+    let out = run_sim(SimSetup::single(c, 2), surrogate(33));
+    assert!(out.agents[0].finished);
+    // One master period of slack allowed.
+    assert!(out.end_time <= 5.0 * 3600.0 + 120.0, "end {}", out.end_time);
+}
+
+#[test]
+fn election_term_advances() {
+    let c = cfg("{\"random\": {}}", 10, 4, 2, 15);
+    let out = run_sim(SimSetup::single(c, 2), surrogate(34));
+    assert!(out.election.term() >= 1);
+}
+
+#[test]
+fn master_agent_failure_fails_over_and_work_continues() {
+    // Two agent slots; slot 0 (the initial master) crashes mid-run.  The
+    // election must fail over (term bump), the crashed agent's GPUs must
+    // be released, and the surviving CHOPT session must still finish.
+    let setup = SimSetup {
+        cluster_gpus: 6,
+        configs: vec![
+            cfg("{\"random\": {}}", 5, 5000, 3, 1), // long-runner (slot 0)
+            cfg("{\"random\": {}}", 10, 12, 3, 2),
+        ],
+        submit_times: Vec::new(),
+        agent_slots: 2,
+        trace: None,
+        policy: StopAndGoPolicy::default(),
+        master_period: 60.0,
+        horizon: 1e9,
+        failures: vec![(20_000.0, 0)],
+    };
+    let out = run_sim(setup, surrogate(55));
+    assert!(
+        out.election.term() >= 2,
+        "leadership must have changed hands: term {}",
+        out.election.term()
+    );
+    assert!(!out.election.is_leader(0), "slot 0 must not lead after crash");
+    // The crashed agent was aborted; the other finished normally.
+    let crashed = out
+        .agents
+        .iter()
+        .find(|a| a.events.contains(&AgentEvent::Terminated("agent_failure")))
+        .expect("one agent must have crashed");
+    assert!(crashed.finished_at.is_some());
+    let survivor = out
+        .agents
+        .iter()
+        .find(|a| !a.events.contains(&AgentEvent::Terminated("agent_failure")))
+        .expect("one agent must survive");
+    assert!(survivor.finished);
+    assert!(survivor.best().is_some());
+    // All GPUs returned to the cluster at the end.
+    assert_eq!(out.cluster.held_by_chopt(), 0, "crashed agent leaked GPUs");
+}
+
+/// Property: for random configs and cluster sizes, the composed system
+/// terminates, never oversubscribes GPUs, keeps pool exclusivity, and
+/// the best measure stays in the surrogate's physical range.
+#[test]
+fn prop_sim_safety() {
+    check(
+        "sim-safety",
+        PropConfig {
+            cases: 12,
+            max_size: 24,
+            seed: 0xBEEF,
+        },
+        |rng, size| {
+            let gpus = 1 + rng.index(8);
+            let max_sessions = 2 + rng.index(size.max(2));
+            let step = [3, 7, 10, -1][rng.index(4)];
+            let tune = ["{\"random\": {}}",
+                "{\"pbt\": {\"exploit\": \"truncation\", \"explore\": \"perturb\"}}"]
+                [rng.index(2)];
+            let c = cfg(tune, step, max_sessions, 1 + rng.index(4), rng.next_u64() % 1000);
+            let out = run_sim(SimSetup::single(c, gpus), surrogate(rng.next_u64()));
+            let a = &out.agents[0];
+            a.pools.check_invariants()?;
+            let peak = out
+                .cluster
+                .usage_total
+                .series
+                .iter()
+                .map(|&(_, v)| v)
+                .fold(0.0, f64::max);
+            if peak > gpus as f64 {
+                return Err(format!("oversubscribed: peak {peak} > {gpus}"));
+            }
+            if let Some((_, best)) = a.best() {
+                if !(0.0..=100.0).contains(&best) {
+                    return Err(format!("measure out of range: {best}"));
+                }
+            }
+            if !a.finished {
+                return Err("agent did not finish".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,130 @@
+//! The paper's qualitative phenomena, reproduced at test scale:
+//!
+//! * Fig. 2 — naive early stopping biases the search toward shallow
+//!   models (deep models get pruned before they take off).
+//! * Table 4 — step size trades GPU-time for final quality.
+//! * Fig. 9 — a session revived from the stop pool can end competitive.
+
+use chopt::config::ChoptConfig;
+use chopt::coordinator::{run_sim, SimSetup};
+use chopt::nsml::SessionStatus;
+use chopt::trainer::surrogate::SurrogateTrainer;
+use chopt::trainer::Trainer;
+
+fn cfg(step: i64, max_sessions: usize, seed: u64) -> ChoptConfig {
+    let text = format!(
+        r#"{{
+          "h_params": {{
+            "lr": {{"parameters": [0.02, 0.09], "distribution": "log_uniform",
+                    "type": "float", "p_range": [0.001, 0.2]}},
+            "depth": {{"parameters": [20, 140], "distribution": "uniform",
+                    "type": "int", "p_range": [20, 140]}}
+          }},
+          "measure": "test/accuracy",
+          "order": "descending",
+          "step": {step},
+          "population": 6,
+          "tune": {{"random": {{}}}},
+          "termination": {{"max_session_number": {max_sessions}}},
+          "model": "surrogate:resnet",
+          "max_epochs": 200,
+          "max_gpus": 6,
+          "seed": {seed}
+        }}"#
+    );
+    ChoptConfig::from_json_str(&text).unwrap()
+}
+
+fn surrogate(seed: u64) -> impl FnMut(u64) -> Box<dyn Trainer> {
+    move |id| Box::new(SurrogateTrainer::new(seed ^ id)) as Box<dyn Trainer>
+}
+
+/// Mean depth of sessions that survived past a given epoch, vs all.
+#[test]
+fn early_stopping_biases_against_depth_fig2() {
+    let out = run_sim(SimSetup::single(cfg(7, 60, 1), 6), surrogate(5));
+    let a = &out.agents[0];
+    let all: Vec<(i64, bool)> = a
+        .sessions
+        .values()
+        .map(|s| {
+            let depth = s.hparams.i64("depth").unwrap_or(20);
+            let survived = s.epochs > 21; // lived past 3 ES checks
+            (depth, survived)
+        })
+        .collect();
+    let mean = |xs: &[i64]| xs.iter().sum::<i64>() as f64 / xs.len().max(1) as f64;
+    let survived: Vec<i64> = all.iter().filter(|&&(_, s)| s).map(|&(d, _)| d).collect();
+    let killed: Vec<i64> = all.iter().filter(|&&(_, s)| !s).map(|&(d, _)| d).collect();
+    assert!(
+        survived.len() >= 3 && killed.len() >= 3,
+        "need both groups: {} survived {} killed",
+        survived.len(),
+        killed.len()
+    );
+    assert!(
+        mean(&survived) + 10.0 < mean(&killed),
+        "ES should kill deeper models early: survived depth {:.0} vs killed {:.0}",
+        mean(&survived),
+        mean(&killed)
+    );
+}
+
+#[test]
+fn step_size_trades_gpu_time_for_quality_table4() {
+    // No ES vs small step: no-ES must consume far more GPU time and find
+    // at-least-as-good models.
+    let no_es = run_sim(SimSetup::single(cfg(-1, 25, 2), 6), surrogate(8));
+    let small = run_sim(SimSetup::single(cfg(3, 25, 2), 6), surrogate(8));
+    let (gpu_no_es, gpu_small) = (no_es.gpu_hours(), small.gpu_hours());
+    assert!(
+        gpu_no_es > 3.0 * gpu_small,
+        "no-ES {gpu_no_es:.1}h should dwarf small-step {gpu_small:.1}h"
+    );
+    let best_no_es = no_es.best().unwrap().2;
+    let best_small = small.best().unwrap().2;
+    assert!(
+        best_no_es + 0.3 >= best_small,
+        "no-ES should not lose: {best_no_es} vs {best_small}"
+    );
+}
+
+#[test]
+fn revived_sessions_can_finish_competitively_fig9() {
+    // Small GPU cap + high stop ratio: sessions bounce through the stop
+    // pool and some revived ones finish with competitive accuracy.
+    let mut c = cfg(7, 40, 3);
+    c.stop_ratio = 0.9;
+    let out = run_sim(SimSetup::single(c, 6), surrogate(12));
+    let a = &out.agents[0];
+    let revived_best = a
+        .sessions
+        .values()
+        .filter(|s| s.revivals > 0)
+        .filter_map(|s| s.best_measure(chopt::config::Order::Descending))
+        .fold(f64::NEG_INFINITY, f64::max);
+    let overall_best = a.best().map(|(_, m)| m).unwrap();
+    assert!(
+        revived_best.is_finite(),
+        "at least one session must be revived"
+    );
+    assert!(
+        revived_best > overall_best - 8.0,
+        "revived best {revived_best:.2} should be competitive with {overall_best:.2}"
+    );
+}
+
+#[test]
+fn finished_sessions_trained_to_budget() {
+    let out = run_sim(SimSetup::single(cfg(10, 20, 4), 6), surrogate(21));
+    let a = &out.agents[0];
+    for s in a.sessions.values() {
+        if s.status == SessionStatus::Finished && s.revivals == 0 && s.parent.is_none() {
+            // Finished sessions reached max_epochs (unless terminated by
+            // the CHOPT session shutdown sweep at the end).
+            assert!(s.epochs <= 200);
+        }
+        // Nothing ever exceeds the budget.
+        assert!(s.epochs <= 200, "session {} overtrained: {}", s.id, s.epochs);
+    }
+}

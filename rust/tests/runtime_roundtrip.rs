@@ -1,0 +1,154 @@
+//! Integration: python-AOT artifacts -> rust PJRT load/execute round trip.
+//!
+//! These tests require `make artifacts` (they ARE the python->rust
+//! contract check); they skip with a note when artifacts are missing so
+//! `cargo test` stays green on a fresh checkout.
+
+use chopt::hparam::{Assignment, Value};
+use chopt::nsml::SessionId;
+use chopt::runtime::{HostTensor, Manifest, Runtime};
+use chopt::trainer::{real::RealTrainer, Trainer};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = Manifest::default_dir();
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn init_artifact_produces_full_state() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let platform = rt.platform().to_lowercase();
+    assert!(
+        platform.contains("cpu") || platform.contains("host"),
+        "unexpected platform {platform}"
+    );
+    let out = rt
+        .execute("ic_d1_w1_init", &[HostTensor::scalar_i32(7)])
+        .unwrap();
+    let spec = rt.manifest.artifact("ic_d1_w1_init").unwrap();
+    assert_eq!(out.len(), spec.n_outputs);
+    // Params initialized He-normal: w_in must have nonzero variance.
+    let w_in = out[0].as_f32().unwrap();
+    let mean: f32 = w_in.iter().sum::<f32>() / w_in.len() as f32;
+    let var: f32 = w_in.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / w_in.len() as f32;
+    assert!(var > 1e-4, "w_in variance {var}");
+    // Velocities (second half) start at zero.
+    let n = out.len();
+    let v_last = out[n - 1].as_f32().unwrap();
+    assert!(v_last.iter().all(|&x| x == 0.0));
+    // Deterministic in the seed.
+    let out2 = rt
+        .execute("ic_d1_w1_init", &[HostTensor::scalar_i32(7)])
+        .unwrap();
+    assert_eq!(out[0], out2[0]);
+    let out3 = rt
+        .execute("ic_d1_w1_init", &[HostTensor::scalar_i32(8)])
+        .unwrap();
+    assert_ne!(out[0], out3[0]);
+}
+
+#[test]
+fn train_step_decreases_loss() {
+    let dir = require_artifacts!();
+    let mut trainer = RealTrainer::new(&dir, 42).unwrap();
+    let mut hp = Assignment::new();
+    hp.set("lr", Value::Float(0.08));
+    hp.set("momentum", Value::Float(0.9));
+    let id = SessionId(1);
+    let first = trainer.train(id, "ic_d1_w1", &hp, 1).unwrap();
+    assert!(first.loss.is_finite(), "loss {:?}", first);
+    let later = trainer.train(id, "ic_d1_w1", &hp, 6).unwrap();
+    assert!(
+        later.loss < first.loss,
+        "loss should fall: {} -> {}",
+        first.loss,
+        later.loss
+    );
+    assert!(later.measure >= 0.0 && later.measure <= 100.0);
+    assert_eq!(trainer.epochs_done(id), 6);
+}
+
+#[test]
+fn random_erasing_hyperparameter_is_runtime() {
+    // re_prob is a scalar input: the same artifact trains with and
+    // without augmentation — no recompilation.
+    let dir = require_artifacts!();
+    let mut trainer = RealTrainer::new(&dir, 43).unwrap();
+    let mut hp = Assignment::new();
+    hp.set("lr", Value::Float(0.05));
+    hp.set("prob", Value::Float(0.9));
+    hp.set("sh", Value::Float(0.5));
+    let r = trainer.train(SessionId(2), "ic_d1_w1", &hp, 2).unwrap();
+    assert!(r.loss.is_finite());
+}
+
+#[test]
+fn clone_state_copies_weights() {
+    let dir = require_artifacts!();
+    let mut trainer = RealTrainer::new(&dir, 44).unwrap();
+    let hp = Assignment::new();
+    trainer.train(SessionId(3), "ic_d1_w1", &hp, 2).unwrap();
+    trainer.clone_state(SessionId(3), SessionId(4)).unwrap();
+    assert_eq!(trainer.epochs_done(SessionId(4)), 2);
+    // The clone continues training from the copied weights.
+    let r = trainer.train(SessionId(4), "ic_d1_w1", &hp, 3).unwrap();
+    assert!(r.loss.is_finite());
+    trainer.drop_state(SessionId(3));
+    assert_eq!(trainer.state_count(), 1);
+}
+
+#[test]
+fn qa_variant_trains() {
+    let dir = require_artifacts!();
+    let mut trainer = RealTrainer::new(&dir, 45).unwrap();
+    let mut hp = Assignment::new();
+    hp.set("lr", Value::Float(0.3));
+    hp.set("momentum", Value::Float(0.9));
+    hp.set("dropout", Value::Float(0.1));
+    let id = SessionId(5);
+    let first = trainer.train(id, "qa_bidaf", &hp, 1).unwrap();
+    let later = trainer.train(id, "qa_bidaf", &hp, 5).unwrap();
+    assert!(
+        later.loss < first.loss,
+        "qa loss should fall: {} -> {}",
+        first.loss,
+        later.loss
+    );
+}
+
+#[test]
+fn depth_variants_have_increasing_param_counts() {
+    let dir = require_artifacts!();
+    let trainer = RealTrainer::new(&dir, 46).unwrap();
+    let hp = Assignment::new();
+    let p1 = trainer.param_count("ic_d1_w1", &hp);
+    let p2 = trainer.param_count("ic_d2_w1", &hp);
+    let p3 = trainer.param_count("ic_d3_w1", &hp);
+    let p2w = trainer.param_count("ic_d2_w2", &hp);
+    assert!(p1 < p2 && p2 < p3, "{p1} {p2} {p3}");
+    assert!(p2w > p2, "widen must add params: {p2w} vs {p2}");
+}
+
+#[test]
+fn input_validation_rejects_bad_shapes() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let err = rt
+        .execute("ic_d1_w1_init", &[HostTensor::scalar_f32(1.0)])
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("dtype"), "got: {msg}");
+}
