@@ -11,11 +11,12 @@ use chopt::hparam::{Assignment, Value};
 use chopt::nsml::{Leaderboard, NsmlSession, SessionId};
 use chopt::trainer::surrogate::SurrogateTrainer;
 use chopt::trainer::Trainer;
-use chopt::util::bench::{Bencher, Table};
+use chopt::util::bench::{BenchJson, Bencher, Table};
 use chopt::util::json;
 
 fn main() {
     let bencher = Bencher::quick();
+    let mut json_out = BenchJson::new("perf_coordinator");
     let mut table = Table::new("coordinator hot paths", &["path", "µs/op", "ops/s"]);
     let mut add = |name: &str, secs: f64| {
         table.row(&[
@@ -59,6 +60,7 @@ fn main() {
     });
     println!("{}", r.report());
     add("leaderboard update @10k", r.mean_secs());
+    json_out.result(&r);
 
     // Space sampling + perturbation.
     let cfg = table2_config("surrogate:wrn_re", "{\"random\": {}}", 1, 5);
@@ -68,12 +70,14 @@ fn main() {
     });
     println!("{}", r.report());
     add("space sample (6 hparams)", r.mean_secs());
+    json_out.result(&r);
     let a = cfg.space.sample(&mut rng).unwrap();
     let r = bencher.bench("PBT perturb", || {
         let _ = cfg.space.perturb(&a, &mut rng, &[0.8, 1.2]);
     });
     println!("{}", r.report());
     add("PBT perturb", r.mean_secs());
+    json_out.result(&r);
 
     // Config parse (Listing 1).
     let r = bencher.bench("config parse (Listing 1)", || {
@@ -81,6 +85,7 @@ fn main() {
     });
     println!("{}", r.report());
     add("config parse", r.mean_secs());
+    json_out.result(&r);
 
     // JSON substrate: parse a ~40 KiB sessions export.
     let mut store = chopt::storage::SessionStore::new();
@@ -92,8 +97,20 @@ fn main() {
     });
     println!("{}", r.report());
     add("json parse (export doc)", r.mean_secs());
+    json_out.result(&r);
 
     table.print();
+
+    // Machine-readable trajectory (BENCH_perf_coordinator.json).
+    json_out
+        .metric("sim_events_per_sec", evps)
+        .metric("sim_events_total", out.events_processed as f64)
+        .metric("sim_wall_secs", wall)
+        .note("mode", "quick");
+    match json_out.save() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
 
     // L3 target: scheduler decisions must be sub-millisecond.
     assert!(

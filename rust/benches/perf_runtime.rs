@@ -9,12 +9,19 @@ use chopt::hparam::{Assignment, Value};
 use chopt::nsml::SessionId;
 use chopt::runtime::{HostTensor, Manifest, Runtime};
 use chopt::trainer::{real::RealTrainer, Trainer};
-use chopt::util::bench::{Bencher, Table};
+use chopt::util::bench::{BenchJson, Bencher, Table};
 
 fn main() {
+    let mut json_out = BenchJson::new("perf_runtime");
     let dir = Manifest::default_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("skipping perf_runtime: run `make artifacts` first");
+        // Still leave a machine-readable marker so the perf trajectory
+        // records that this environment had no artifacts (vs. a regression).
+        json_out.note("skipped", "no artifacts (run `make artifacts`)");
+        if let Ok(path) = json_out.save() {
+            println!("wrote {}", path.display());
+        }
         return;
     }
 
@@ -24,7 +31,9 @@ fn main() {
     for name in ["ic_d1_w1_train", "ic_d2_w1_train", "ic_d3_w1_train", "ic_d2_w2_train", "qa_bidaf_train"] {
         let t0 = std::time::Instant::now();
         rt.prepare(name).unwrap();
-        compile_table.row(&[name.into(), format!("{:.0}", t0.elapsed().as_secs_f64() * 1e3)]);
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        json_out.metric(&format!("compile.{name}.ms"), ms);
+        compile_table.row(&[name.into(), format!("{ms:.0}")]);
     }
     compile_table.print();
 
@@ -54,6 +63,8 @@ fn main() {
             trainer.train(SessionId(9), variant, &hp, epoch).unwrap();
         });
         let per = r.mean_secs();
+        json_out.result(&r);
+        json_out.metric(&format!("{variant}.samples_per_sec"), batch as f64 / per);
         table.row(&[
             variant.into(),
             format!("{:.0}", per * 1e6),
@@ -72,6 +83,11 @@ fn main() {
         rt2.execute("ic_d1_w1_init", &[HostTensor::scalar_i32(3)]).unwrap();
     });
     println!("{}", r.report());
+    json_out.result(&r);
+    match json_out.save() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
 
     println!(
         "\nL1 structural estimates (see python/compile/kernels/*.py::vmem_bytes):\n\

@@ -52,6 +52,65 @@ impl ExternalLoadTrace {
         }
     }
 
+    /// Jitter seed (private field; exposed for snapshot serialization).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Serialize for engine snapshots.  The seed travels as a string:
+    /// JSON numbers are f64 and would corrupt seeds ≥ 2^53, silently
+    /// breaking restore determinism.
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value as Json;
+        Json::obj()
+            .with("horizon", Json::Num(self.horizon))
+            .with("base", Json::from_f64_slice(&self.base))
+            .with("total_gpus", Json::Num(self.total_gpus as f64))
+            .with("jitter", Json::Num(self.jitter))
+            .with("seed", Json::Str(self.seed.to_string()))
+    }
+
+    /// Inverse of [`ExternalLoadTrace::to_json`].
+    pub fn from_json(doc: &crate::util::json::Value) -> anyhow::Result<ExternalLoadTrace> {
+        let num = |key: &str| -> anyhow::Result<f64> {
+            doc.get(key)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("trace missing numeric '{key}'"))
+        };
+        let base_arr = doc
+            .get("base")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("trace missing 'base'"))?;
+        if base_arr.len() != 5 {
+            anyhow::bail!("trace 'base' must have 5 zone levels");
+        }
+        let mut base = [0.0; 5];
+        for (slot, v) in base.iter_mut().zip(base_arr) {
+            *slot = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("trace 'base' entries must be numbers"))?;
+        }
+        let seed = match doc.get("seed") {
+            Some(v) => match v.as_str() {
+                Some(s) => s
+                    .parse::<u64>()
+                    .map_err(|_| anyhow::anyhow!("trace 'seed' is not a u64: {s:?}"))?,
+                None => v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("trace 'seed' must be a string or number"))?
+                    as u64,
+            },
+            None => anyhow::bail!("trace missing 'seed'"),
+        };
+        Ok(ExternalLoadTrace {
+            horizon: num("horizon")?,
+            base,
+            total_gpus: num("total_gpus")? as usize,
+            jitter: num("jitter")?,
+            seed,
+        })
+    }
+
     /// Zone boundaries at 15% / 30% / 55% / 80% of the horizon.
     pub fn zone(&self, t: SimTime) -> TraceZone {
         let f = (t / self.horizon).clamp(0.0, 1.0);
@@ -121,6 +180,20 @@ mod tests {
             let d2 = tr.demand(t);
             assert_eq!(d1, d2);
             assert!(d1 <= 64);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_demand() {
+        // Seed above 2^53 — must survive JSON (travels as a string, since
+        // an f64 number would corrupt the low bits).
+        let big_seed = (1u64 << 60) | 77;
+        let tr = ExternalLoadTrace::fig8(24, 2000.0, big_seed);
+        let back = ExternalLoadTrace::from_json(&tr.to_json()).unwrap();
+        assert_eq!(back.seed(), big_seed);
+        for i in 0..40 {
+            let t = i as f64 * 50.0;
+            assert_eq!(tr.demand(t), back.demand(t));
         }
     }
 

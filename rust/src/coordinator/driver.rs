@@ -1,29 +1,25 @@
-//! Discrete-event driver: runs CHOPT sessions (agents) + the master agent
-//! + the shared cluster to completion in virtual time.
+//! Batch entry point over the re-entrant engine.
 //!
 //! This is the composition root for all simulator-backed experiments
 //! (Tables 1–4, Figs 2/8/9): benches build a [`SimSetup`], call
-//! [`run_sim`], and read the [`SimOutcome`].
+//! [`run_sim`], and read the [`SimOutcome`].  The discrete-event loop
+//! itself lives in [`super::engine::SimEngine`]; `run_sim` is a thin
+//! compatibility wrapper (`new` → `run_to_completion` → `into_outcome`)
+//! kept so the closed-world callers stay unchanged while live callers
+//! (the [`super::platform::Platform`], `chopt watch`, `chopt serve
+//! --live`) drive the engine incrementally.
 
 use crate::cluster::{Cluster, ExternalLoadTrace};
 use crate::config::ChoptConfig;
-use crate::events::{EventQueue, SimTime};
+use crate::events::SimTime;
 use crate::nsml::SessionId;
 use crate::trainer::Trainer;
+use crate::util::json::Value as Json;
 
-use super::agent::{Agent, ScheduleReq};
+use super::agent::Agent;
 use super::election::Election;
-use super::master::{master_tick, MasterTickLog, StopAndGoPolicy};
-use super::queue::SessionQueue;
-
-/// Simulation events.
-#[derive(Debug, Clone, Copy)]
-enum Ev {
-    /// A training interval of (agent slot, session) completed.
-    Interval { slot: usize, sid: SessionId },
-    /// Periodic master-agent control tick.
-    MasterTick,
-}
+use super::engine::SimEngine;
+use super::master::{MasterTickLog, StopAndGoPolicy};
 
 /// Everything a simulated run needs.
 pub struct SimSetup {
@@ -44,6 +40,7 @@ pub struct SimSetup {
     /// Failure injection: (virtual time, agent slot) pairs — the slot's
     /// agent crashes at that time (GPUs released, CHOPT session aborted),
     /// and if it held master-agent leadership the election fails over.
+    /// Each failure fires exactly once.
     pub failures: Vec<(SimTime, usize)>,
 }
 
@@ -61,6 +58,105 @@ impl SimSetup {
             failures: Vec::new(),
         }
     }
+
+    /// Serialize the replay inputs (engine snapshots embed this).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("cluster_gpus", Json::Num(self.cluster_gpus as f64))
+            .with("agent_slots", Json::Num(self.agent_slots as f64))
+            .with("master_period", Json::Num(self.master_period))
+            .with("horizon", Json::Num(self.horizon))
+            .with("policy", self.policy.to_json())
+            .with(
+                "trace",
+                self.trace.as_ref().map(|t| t.to_json()).unwrap_or(Json::Null),
+            )
+            .with(
+                "failures",
+                Json::Arr(
+                    self.failures
+                        .iter()
+                        .map(|&(at, slot)| {
+                            Json::Arr(vec![Json::Num(at), Json::Num(slot as f64)])
+                        })
+                        .collect(),
+                ),
+            )
+            .with(
+                "configs",
+                Json::Arr(self.configs.iter().map(|c| c.to_json()).collect()),
+            )
+            .with("submit_times", Json::from_f64_slice(&self.submit_times))
+    }
+
+    /// Inverse of [`SimSetup::to_json`].
+    pub fn from_json(doc: &Json) -> anyhow::Result<SimSetup> {
+        let req_num = |key: &str| -> anyhow::Result<f64> {
+            doc.get(key)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("setup missing numeric '{key}'"))
+        };
+        let configs = doc
+            .get("configs")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("setup missing 'configs'"))?
+            .iter()
+            .map(ChoptConfig::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let submit_times = doc
+            .get("submit_times")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+            .unwrap_or_default();
+        let failures = doc
+            .get("failures")
+            .and_then(|v| v.as_arr())
+            .map(|a| {
+                a.iter()
+                    .filter_map(|pair| {
+                        Some((
+                            pair.idx(0)?.as_f64()?,
+                            pair.idx(1)?.as_usize()?,
+                        ))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        let trace = match doc.get("trace") {
+            None | Some(Json::Null) => None,
+            Some(t) => Some(ExternalLoadTrace::from_json(t)?),
+        };
+        let policy = doc
+            .get("policy")
+            .map(StopAndGoPolicy::from_json)
+            .transpose()?
+            .unwrap_or_default();
+        Ok(SimSetup {
+            cluster_gpus: req_num("cluster_gpus")? as usize,
+            configs,
+            submit_times,
+            agent_slots: req_num("agent_slots")? as usize,
+            trace,
+            policy,
+            master_period: req_num("master_period")?,
+            horizon: req_num("horizon")?,
+            failures,
+        })
+    }
+}
+
+/// NaN-safe best over keyed agents, shared by the batch outcome and the
+/// live engine so the two views rank identically: NaN measures are
+/// excluded (in `f64` total order a positive NaN ranks above +inf, so
+/// `total_cmp` alone would crown it), and the rest rank deterministically
+/// via `f64::total_cmp` instead of the old `partial_cmp → Equal` scramble.
+pub(crate) fn best_of<'a, K>(
+    agents: impl Iterator<Item = (K, &'a Agent)>,
+) -> Option<(K, SessionId, f64)> {
+    agents
+        .filter_map(|(k, a)| a.best().map(|(sid, m)| (k, sid, m)))
+        .filter(|entry| !entry.2.is_nan())
+        .max_by(|a, b| a.2.total_cmp(&b.2))
 }
 
 /// Results of a simulated run.
@@ -76,13 +172,10 @@ pub struct SimOutcome {
 }
 
 impl SimOutcome {
-    /// Best (agent idx, session, measure) across all agents.
+    /// Best (agent idx, session, measure) across all agents (NaN-safe —
+    /// see [`best_of`]).
     pub fn best(&self) -> Option<(usize, SessionId, f64)> {
-        self.agents
-            .iter()
-            .enumerate()
-            .filter_map(|(i, a)| a.best().map(|(sid, m)| (i, sid, m)))
-            .max_by(|a, b| a.2.partial_cmp(&b.2).unwrap_or(std::cmp::Ordering::Equal))
+        best_of(self.agents.iter().enumerate())
     }
 
     /// Total CHOPT GPU-hours consumed.
@@ -97,200 +190,11 @@ impl SimOutcome {
 /// session (surrogate for sim-scale runs, real PJRT for small ones).
 pub fn run_sim(
     setup: SimSetup,
-    mut make_trainer: impl FnMut(u64) -> Box<dyn Trainer>,
+    make_trainer: impl FnMut(u64) -> Box<dyn Trainer>,
 ) -> SimOutcome {
-    let mut cluster = Cluster::new(setup.cluster_gpus);
-    let mut queue = SessionQueue::new();
-    for (i, c) in setup.configs.into_iter().enumerate() {
-        let at = setup.submit_times.get(i).copied().unwrap_or(0.0);
-        queue.submit(c, at);
-    }
-    let n_slots = setup.agent_slots.max(1);
-    let mut election = Election::new(n_slots);
-    // Agent slots: None = idle. Completed agents are moved to `done`.
-    let mut slots: Vec<Option<Agent>> = (0..n_slots).map(|_| None).collect();
-    let mut done: Vec<Agent> = Vec::new();
-    let mut master_log: Vec<MasterTickLog> = Vec::new();
-    let mut evq: EventQueue<Ev> = EventQueue::new();
-    let mut next_chopt_id: u64 = 0;
-
-    // Helpers -------------------------------------------------------------
-    let assign_idle =
-        |slots: &mut Vec<Option<Agent>>,
-         queue: &mut SessionQueue,
-         next_chopt_id: &mut u64,
-         make_trainer: &mut dyn FnMut(u64) -> Box<dyn Trainer>,
-         cluster: &mut Cluster,
-         now: SimTime,
-         evq: &mut EventQueue<Ev>| {
-            for (slot_idx, slot) in slots.iter_mut().enumerate() {
-                if slot.is_none() {
-                    if let Some(sub) = queue.pull_ready(now) {
-                        *next_chopt_id += 1;
-                        let id = *next_chopt_id;
-                        let trainer = make_trainer(id);
-                        let mut agent = Agent::new(id, sub.config, trainer);
-                        let mut reqs: Vec<ScheduleReq> = Vec::new();
-                        agent.fill(cluster, now, &mut reqs);
-                        for r in reqs {
-                            evq.schedule_in(
-                                r.seconds,
-                                Ev::Interval {
-                                    slot: slot_idx,
-                                    sid: r.session,
-                                },
-                            );
-                        }
-                        *slot = Some(agent);
-                    }
-                }
-            }
-        };
-
-    // Bootstrap.
-    assign_idle(
-        &mut slots,
-        &mut queue,
-        &mut next_chopt_id,
-        &mut make_trainer,
-        &mut cluster,
-        0.0,
-        &mut evq,
-    );
-    evq.schedule_at(0.0, Ev::MasterTick);
-
-    // Main loop ------------------------------------------------------------
-    while let Some((t, ev)) = evq.pop() {
-        if t > setup.horizon {
-            break;
-        }
-        match ev {
-            Ev::Interval { slot, sid } => {
-                if let Some(agent) = slots[slot].as_mut() {
-                    let mut reqs: Vec<ScheduleReq> = Vec::new();
-                    agent.on_interval_done(sid, &mut cluster, t, &mut reqs);
-                    for r in reqs {
-                        evq.schedule_in(
-                            r.seconds,
-                            Ev::Interval {
-                                slot,
-                                sid: r.session,
-                            },
-                        );
-                    }
-                    if agent.finished {
-                        done.push(slots[slot].take().unwrap());
-                        assign_idle(
-                            &mut slots,
-                            &mut queue,
-                            &mut next_chopt_id,
-                            &mut make_trainer,
-                            &mut cluster,
-                            t,
-                            &mut evq,
-                        );
-                    }
-                }
-            }
-            Ev::MasterTick => {
-                // Failure injection: crash scheduled agents first so the
-                // election reflects reality before this tick's decisions.
-                for &(at, slot_idx) in &setup.failures {
-                    if at <= t && slot_idx < slots.len() {
-                        if let Some(mut dead) = slots[slot_idx].take() {
-                            dead.shutdown("agent_failure", &mut cluster, t);
-                            done.push(dead);
-                            election.fail(slot_idx);
-                        }
-                    }
-                }
-                // The elected leader runs Stop-and-Go (any agent could; the
-                // election just decides who — in-process it's the policy
-                // call below either way).
-                let external = setup
-                    .trace
-                    .as_ref()
-                    .map(|tr| tr.demand(t))
-                    .unwrap_or(0);
-                let bases: Vec<usize> = slots
-                    .iter()
-                    .flatten()
-                    .filter(|a| !a.finished)
-                    .map(|a| a.cfg.max_gpus)
-                    .collect();
-                let (targets, log) =
-                    master_tick(&setup.policy, &mut cluster, external, &bases, t);
-                master_log.push(log);
-                let mut ti = 0;
-                for slot_idx in 0..slots.len() {
-                    let Some(agent) = slots[slot_idx].as_mut() else {
-                        continue;
-                    };
-                    if agent.finished {
-                        continue;
-                    }
-                    agent.check_termination(&mut cluster, t);
-                    if agent.finished {
-                        done.push(slots[slot_idx].take().unwrap());
-                        continue;
-                    }
-                    let target = targets.get(ti).copied().unwrap_or(agent.cfg.max_gpus);
-                    ti += 1;
-                    let mut reqs: Vec<ScheduleReq> = Vec::new();
-                    agent.set_gpu_target(target, &mut cluster, t, &mut reqs);
-                    for r in reqs {
-                        evq.schedule_in(
-                            r.seconds,
-                            Ev::Interval {
-                                slot: slot_idx,
-                                sid: r.session,
-                            },
-                        );
-                    }
-                }
-                assign_idle(
-                    &mut slots,
-                    &mut queue,
-                    &mut next_chopt_id,
-                    &mut make_trainer,
-                    &mut cluster,
-                    t,
-                    &mut evq,
-                );
-                let any_active = slots.iter().any(|s| s.is_some()) || !queue.is_empty();
-                if any_active {
-                    evq.schedule_in(setup.master_period, Ev::MasterTick);
-                }
-            }
-        }
-        let all_done = slots.iter().all(|s| s.is_none()) && queue.is_empty();
-        if all_done {
-            break;
-        }
-    }
-
-    // Keep the elected-master abstraction honest: if slot 0's agent is
-    // gone, fail it over (exercised further in tests).
-    if slots.first().map(|s| s.is_none()).unwrap_or(false) {
-        election.fail(0);
-    }
-
-    let end_time = evq.now();
-    for slot in slots.iter_mut() {
-        if let Some(mut a) = slot.take() {
-            a.shutdown("horizon", &mut cluster, end_time);
-            done.push(a);
-        }
-    }
-    let events_processed = evq.processed();
-    SimOutcome {
-        agents: done,
-        cluster,
-        master_log,
-        election,
-        end_time,
-        events_processed,
-    }
+    let mut engine = SimEngine::new(setup, make_trainer);
+    engine.run_to_completion();
+    engine.into_outcome()
 }
 
 #[cfg(test)]
@@ -407,5 +311,35 @@ mod tests {
             .map(|&(_, v)| v)
             .fold(0.0, f64::max);
         assert!(peak <= 2.0, "peak {peak}");
+    }
+
+    #[test]
+    fn setup_json_roundtrip() {
+        let setup = SimSetup {
+            cluster_gpus: 12,
+            configs: vec![small_cfg("{\"random\": {}}", 10, 6)],
+            submit_times: vec![300.0],
+            agent_slots: 3,
+            trace: Some(ExternalLoadTrace::fig8(12, 50_000.0, 9)),
+            policy: StopAndGoPolicy::default(),
+            master_period: 90.0,
+            horizon: 1e7,
+            failures: vec![(1000.0, 1)],
+        };
+        let doc = setup.to_json();
+        let back = SimSetup::from_json(&doc).unwrap();
+        assert_eq!(back.cluster_gpus, 12);
+        assert_eq!(back.agent_slots, 3);
+        assert_eq!(back.submit_times, vec![300.0]);
+        assert_eq!(back.failures, vec![(1000.0, 1)]);
+        assert_eq!(back.master_period, 90.0);
+        assert!(back.trace.is_some());
+        assert_eq!(back.configs.len(), 1);
+        assert_eq!(back.configs[0].seed, 11);
+        // Round-tripped setups produce identical runs.
+        let a = run_sim(setup, |id| Box::new(SurrogateTrainer::new(id)));
+        let b = run_sim(back, |id| Box::new(SurrogateTrainer::new(id)));
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.end_time, b.end_time);
     }
 }

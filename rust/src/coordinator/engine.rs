@@ -1,0 +1,563 @@
+//! Re-entrant discrete-event engine: the stateful core behind [`run_sim`].
+//!
+//! The original driver was a closed-world function — it consumed a
+//! [`SimSetup`] and returned only after every session finished, so nothing
+//! could observe a run in flight.  `SimEngine` lifts all loop state (event
+//! queue, agent slots, done list, cluster, election, session queue, master
+//! log, failure schedule) into struct fields and exposes incremental
+//! drivers:
+//!
+//! * [`SimEngine::step`] — process exactly one event,
+//! * [`SimEngine::run_until`] — advance virtual time to a bound,
+//! * [`SimEngine::run_to_completion`] — the old batch behavior,
+//! * [`SimEngine::submit`] — accept a *new* CHOPT session while running
+//!   (the paper's platform story: users join a shared cluster any time),
+//! * [`SimEngine::snapshot_json`] / [`SimEngine::restore`] — persist a run
+//!   as JSON and rebuild it deterministically by replay.
+//!
+//! [`run_sim`] is now a thin wrapper: `new` → `run_to_completion` →
+//! `into_outcome`, so every existing bench/test drives this engine.
+//!
+//! Determinism contract: given the same [`SimSetup`], the same trainer
+//! factory, and the same `submit` calls (config + effective time), the
+//! engine pops the identical event sequence regardless of how the run is
+//! sliced into `step`/`run_until` calls.  Restore replays the recorded
+//! inputs up to the snapshot's `events_processed` count, which reproduces
+//! the exact engine state.
+//!
+//! [`run_sim`]: super::driver::run_sim
+
+use crate::cluster::Cluster;
+use crate::config::ChoptConfig;
+use crate::events::{EventQueue, SimTime};
+use crate::nsml::SessionId;
+use crate::trainer::Trainer;
+use crate::util::json::Value as Json;
+
+use super::agent::{Agent, ScheduleReq};
+use super::driver::{SimOutcome, SimSetup};
+use super::election::Election;
+use super::master::{master_tick, MasterTickLog};
+use super::queue::SessionQueue;
+
+/// Simulation events.
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    /// A training interval of (agent slot, session) completed.
+    Interval { slot: usize, sid: SessionId },
+    /// Periodic master-agent control tick.
+    MasterTick,
+    /// An online submission (index into `SimEngine::online`) arrives.
+    Submit { idx: usize },
+}
+
+/// A failure-injection record.  `consumed` guards against the stale-failure
+/// bug the batch driver had: without it, every master tick re-applied all
+/// past failures, instantly crashing any fresh agent later assigned to the
+/// same slot.
+#[derive(Debug, Clone, Copy)]
+struct Failure {
+    at: SimTime,
+    slot: usize,
+    consumed: bool,
+}
+
+/// A CHOPT session submitted while the engine was live (vs. the setup's
+/// initial batch).  Kept for snapshot/replay: `after_events` records how
+/// many events the engine had processed when `submit` was called, so a
+/// restore re-issues the submit at the same point — reproducing the exact
+/// event-queue sequence numbers and therefore identical same-timestamp
+/// tie-breaking.
+#[derive(Debug, Clone)]
+struct OnlineSubmission {
+    config: ChoptConfig,
+    at: SimTime,
+    after_events: u64,
+}
+
+/// What one [`SimEngine::step`] call did.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Step {
+    /// Processed one event at this virtual time.
+    Advanced(SimTime),
+    /// Popped an event past the horizon; the engine halted.
+    HorizonReached,
+    /// Nothing to do (completed, horizon already reached, or queue empty).
+    Idle,
+}
+
+/// The re-entrant simulation engine.  See the module docs.
+pub struct SimEngine<'t> {
+    cluster: Cluster,
+    queue: SessionQueue,
+    election: Election,
+    /// Agent slots: `None` = idle.  Completed agents move to `done`.
+    slots: Vec<Option<Agent>>,
+    done: Vec<Agent>,
+    master_log: Vec<MasterTickLog>,
+    evq: EventQueue<Ev>,
+    next_chopt_id: u64,
+    /// The original inputs, retained whole: runtime parameters (policy,
+    /// trace, periods) are read from here, and snapshots serialize it via
+    /// [`SimSetup::to_json`] so the two encodings cannot drift.
+    setup: SimSetup,
+    /// Consumable runtime view of `setup.failures`.
+    failures: Vec<Failure>,
+    make_trainer: Box<dyn FnMut(u64) -> Box<dyn Trainer> + 't>,
+    /// Online submissions in arrival order (snapshot/replay input).
+    online: Vec<OnlineSubmission>,
+    /// Scheduled-but-unprocessed `Ev::Submit` events.
+    submits_pending: usize,
+    /// Scheduled-but-unprocessed `Ev::MasterTick` events; when the chain
+    /// dies (everything drained) a later submit re-arms it.
+    ticks_pending: usize,
+    /// All work drained (slots empty, queue empty, no pending submits).
+    completed: bool,
+    horizon_reached: bool,
+}
+
+impl<'t> SimEngine<'t> {
+    /// Build an engine from a setup: queue the initial submissions, fill
+    /// idle slots at t=0, and arm the master-tick chain — exactly the
+    /// bootstrap the batch driver performed.
+    pub fn new(
+        setup: SimSetup,
+        make_trainer: impl FnMut(u64) -> Box<dyn Trainer> + 't,
+    ) -> SimEngine<'t> {
+        let mut queue = SessionQueue::new();
+        for (i, c) in setup.configs.iter().enumerate() {
+            let at = setup.submit_times.get(i).copied().unwrap_or(0.0);
+            queue.submit(c.clone(), at);
+        }
+        let n_slots = setup.agent_slots.max(1);
+        let mut engine = SimEngine {
+            cluster: Cluster::new(setup.cluster_gpus),
+            queue,
+            election: Election::new(n_slots),
+            slots: (0..n_slots).map(|_| None).collect(),
+            done: Vec::new(),
+            master_log: Vec::new(),
+            evq: EventQueue::new(),
+            next_chopt_id: 0,
+            failures: setup
+                .failures
+                .iter()
+                .map(|&(at, slot)| Failure {
+                    at,
+                    slot,
+                    consumed: false,
+                })
+                .collect(),
+            setup,
+            make_trainer: Box::new(make_trainer),
+            online: Vec::new(),
+            submits_pending: 0,
+            ticks_pending: 0,
+            completed: false,
+            horizon_reached: false,
+        };
+        engine.assign_idle(0.0);
+        engine.evq.schedule_at(0.0, Ev::MasterTick);
+        engine.ticks_pending += 1;
+        engine
+    }
+
+    // -- observability -----------------------------------------------------
+
+    /// Current virtual time (time of the last processed event).
+    pub fn now(&self) -> SimTime {
+        self.evq.now()
+    }
+
+    /// Number of events popped so far.
+    pub fn events_processed(&self) -> u64 {
+        self.evq.processed()
+    }
+
+    /// All work drained and no online submissions pending.
+    pub fn is_done(&self) -> bool {
+        self.completed || self.horizon_reached || self.evq.is_empty()
+    }
+
+    pub fn horizon_reached(&self) -> bool {
+        self.horizon_reached
+    }
+
+    /// Queued (not yet assigned) CHOPT sessions.
+    pub fn queue_len(&self) -> usize {
+        self.queue.len() + self.submits_pending
+    }
+
+    /// Virtual time of the next pending event, if any.
+    pub fn next_event_time(&self) -> Option<SimTime> {
+        self.evq.peek_time()
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    pub fn election(&self) -> &Election {
+        &self.election
+    }
+
+    pub fn master_log(&self) -> &[MasterTickLog] {
+        &self.master_log
+    }
+
+    /// Agents whose CHOPT sessions completed (or crashed).
+    pub fn done_agents(&self) -> &[Agent] {
+        &self.done
+    }
+
+    /// Agents currently occupying a slot.
+    pub fn active_agents(&self) -> impl Iterator<Item = &Agent> {
+        self.slots.iter().flatten()
+    }
+
+    /// Every agent the engine ever created: completed first, then active.
+    pub fn all_agents(&self) -> impl Iterator<Item = &Agent> {
+        self.done.iter().chain(self.slots.iter().flatten())
+    }
+
+    /// Best (chopt id, session, measure) across all agents so far
+    /// (NaN-safe — see [`super::driver::best_of`]).
+    pub fn best(&self) -> Option<(u64, SessionId, f64)> {
+        super::driver::best_of(self.all_agents().map(|a| (a.id, a)))
+    }
+
+    // -- drivers -----------------------------------------------------------
+
+    /// Process exactly one event.
+    pub fn step(&mut self) -> Step {
+        if self.completed || self.horizon_reached {
+            return Step::Idle;
+        }
+        let Some((t, ev)) = self.evq.pop() else {
+            self.completed = true;
+            return Step::Idle;
+        };
+        if t > self.setup.horizon {
+            self.horizon_reached = true;
+            return Step::HorizonReached;
+        }
+        self.dispatch(t, ev);
+        if self.all_done() {
+            self.completed = true;
+        }
+        Step::Advanced(t)
+    }
+
+    /// Process every event with timestamp `<= t`.  Returns the number of
+    /// events processed.  Re-entrant: `run_until(a); run_until(b)` pops the
+    /// same sequence as a single uninterrupted run.
+    pub fn run_until(&mut self, t: SimTime) -> u64 {
+        let mut n = 0;
+        while !self.completed && !self.horizon_reached {
+            match self.evq.peek_time() {
+                Some(next) if next <= t => {
+                    if !matches!(self.step(), Step::Advanced(_)) {
+                        break;
+                    }
+                    n += 1;
+                }
+                _ => break,
+            }
+        }
+        n
+    }
+
+    /// Drive until all sessions finish (or the horizon passes) — the
+    /// original batch semantics.
+    pub fn run_to_completion(&mut self) -> u64 {
+        let mut n = 0;
+        while matches!(self.step(), Step::Advanced(_)) {
+            n += 1;
+        }
+        n
+    }
+
+    /// Submit a new CHOPT session while the engine is live.  `at` is
+    /// clamped to the current virtual time; returns the effective submit
+    /// time.  If the engine had already drained, the master-tick chain is
+    /// re-armed so the new session gets scheduled.  Returns `None` once
+    /// the horizon has been reached — the clock cannot advance past it,
+    /// so the submission would silently never run.
+    pub fn submit(&mut self, config: ChoptConfig, at: SimTime) -> Option<SimTime> {
+        if self.horizon_reached {
+            return None;
+        }
+        let at = at.max(self.evq.now());
+        let idx = self.online.len();
+        self.online.push(OnlineSubmission {
+            config,
+            at,
+            after_events: self.evq.processed(),
+        });
+        self.evq.schedule_at(at, Ev::Submit { idx });
+        self.submits_pending += 1;
+        self.completed = false;
+        Some(at)
+    }
+
+    // -- event dispatch ----------------------------------------------------
+
+    fn all_done(&self) -> bool {
+        self.slots.iter().all(|s| s.is_none())
+            && self.queue.is_empty()
+            && self.submits_pending == 0
+    }
+
+    fn schedule_reqs(&mut self, slot: usize, reqs: Vec<ScheduleReq>) {
+        for r in reqs {
+            self.evq.schedule_in(
+                r.seconds,
+                Ev::Interval {
+                    slot,
+                    sid: r.session,
+                },
+            );
+        }
+    }
+
+    /// Fill idle slots from the session queue (same policy as the batch
+    /// driver: FIFO, first idle slot wins).
+    fn assign_idle(&mut self, now: SimTime) {
+        for slot_idx in 0..self.slots.len() {
+            if self.slots[slot_idx].is_none() {
+                if let Some(sub) = self.queue.pull_ready(now) {
+                    self.next_chopt_id += 1;
+                    let id = self.next_chopt_id;
+                    let trainer = (self.make_trainer)(id);
+                    let mut agent = Agent::new(id, sub.config, trainer);
+                    let mut reqs: Vec<ScheduleReq> = Vec::new();
+                    agent.fill(&mut self.cluster, now, &mut reqs);
+                    self.slots[slot_idx] = Some(agent);
+                    self.schedule_reqs(slot_idx, reqs);
+                }
+            }
+        }
+    }
+
+    fn dispatch(&mut self, t: SimTime, ev: Ev) {
+        match ev {
+            Ev::Interval { slot, sid } => self.on_interval(t, slot, sid),
+            Ev::MasterTick => self.on_master_tick(t),
+            Ev::Submit { idx } => self.on_submit(t, idx),
+        }
+    }
+
+    fn on_interval(&mut self, t: SimTime, slot: usize, sid: SessionId) {
+        let Some(agent) = self.slots[slot].as_mut() else {
+            return; // stale event: the slot's agent crashed or finished
+        };
+        let mut reqs: Vec<ScheduleReq> = Vec::new();
+        agent.on_interval_done(sid, &mut self.cluster, t, &mut reqs);
+        let finished = agent.finished;
+        self.schedule_reqs(slot, reqs);
+        if finished {
+            self.done.push(self.slots[slot].take().unwrap());
+            self.assign_idle(t);
+        }
+    }
+
+    fn on_master_tick(&mut self, t: SimTime) {
+        self.ticks_pending = self.ticks_pending.saturating_sub(1);
+        // Failure injection: crash scheduled agents first so the election
+        // reflects reality before this tick's decisions.  Each failure
+        // fires exactly once (consumed), so an agent later assigned to the
+        // same slot is not crashed by a stale record.
+        for i in 0..self.failures.len() {
+            let Failure { at, slot, consumed } = self.failures[i];
+            if !consumed && at <= t {
+                self.failures[i].consumed = true;
+                if slot < self.slots.len() {
+                    if let Some(mut dead) = self.slots[slot].take() {
+                        dead.shutdown("agent_failure", &mut self.cluster, t);
+                        self.done.push(dead);
+                        self.election.fail(slot);
+                    }
+                }
+            }
+        }
+        // The elected leader runs Stop-and-Go (any agent could; the
+        // election just decides who — in-process it's the policy call
+        // below either way).
+        let external = self.setup.trace.as_ref().map(|tr| tr.demand(t)).unwrap_or(0);
+        // Record *which slot* produced each `bases` entry, so each agent
+        // reads its own target even if an earlier agent terminates during
+        // the loop below.  (The batch driver kept a running index that
+        // skipped terminated agents without consuming their target slot,
+        // shifting every later agent onto its neighbor's target.)
+        let active: Vec<usize> = (0..self.slots.len())
+            .filter(|&i| self.slots[i].as_ref().map(|a| !a.finished).unwrap_or(false))
+            .collect();
+        let bases: Vec<usize> = active
+            .iter()
+            .map(|&i| self.slots[i].as_ref().unwrap().cfg.max_gpus)
+            .collect();
+        let (targets, log) =
+            master_tick(&self.setup.policy, &mut self.cluster, external, &bases, t);
+        self.master_log.push(log);
+        for (ti, &slot_idx) in active.iter().enumerate() {
+            let Some(agent) = self.slots[slot_idx].as_mut() else {
+                continue;
+            };
+            agent.check_termination(&mut self.cluster, t);
+            if agent.finished {
+                self.done.push(self.slots[slot_idx].take().unwrap());
+                continue;
+            }
+            let target = targets.get(ti).copied().unwrap_or(agent.cfg.max_gpus);
+            let mut reqs: Vec<ScheduleReq> = Vec::new();
+            agent.set_gpu_target(target, &mut self.cluster, t, &mut reqs);
+            self.schedule_reqs(slot_idx, reqs);
+        }
+        self.assign_idle(t);
+        let any_active = self.slots.iter().any(|s| s.is_some()) || !self.queue.is_empty();
+        if any_active {
+            self.evq.schedule_in(self.setup.master_period, Ev::MasterTick);
+            self.ticks_pending += 1;
+        }
+    }
+
+    fn on_submit(&mut self, t: SimTime, idx: usize) {
+        self.submits_pending = self.submits_pending.saturating_sub(1);
+        let config = self.online[idx].config.clone();
+        self.queue.submit(config, t);
+        // Re-arm the master-tick chain if it died (engine had drained);
+        // the tick at `t` assigns the new session and resumes the cadence.
+        if self.ticks_pending == 0 {
+            self.evq.schedule_at(t, Ev::MasterTick);
+            self.ticks_pending += 1;
+        }
+    }
+
+    // -- finalization ------------------------------------------------------
+
+    /// Consume the engine into the batch outcome: shut down any agents
+    /// still running (horizon semantics) and fail slot 0's election entry
+    /// if it is empty — identical to the batch driver's epilogue.
+    pub fn into_outcome(mut self) -> SimOutcome {
+        // Keep the elected-master abstraction honest: if slot 0's agent is
+        // gone, fail it over (exercised further in tests).
+        if self.slots.first().map(|s| s.is_none()).unwrap_or(false) {
+            self.election.fail(0);
+        }
+        let end_time = self.evq.now();
+        for slot in self.slots.iter_mut() {
+            if let Some(mut a) = slot.take() {
+                a.shutdown("horizon", &mut self.cluster, end_time);
+                self.done.push(a);
+            }
+        }
+        let events_processed = self.evq.processed();
+        SimOutcome {
+            agents: self.done,
+            cluster: self.cluster,
+            master_log: self.master_log,
+            election: self.election,
+            end_time,
+            events_processed,
+        }
+    }
+
+    // -- snapshot / restore ------------------------------------------------
+
+    /// Serialize the run's replay inputs plus a progress summary.  A
+    /// restore rebuilds the engine from the recorded inputs and replays the
+    /// same number of events, reproducing the exact state (given the same
+    /// trainer factory).
+    pub fn snapshot_json(&self) -> Json {
+        let online = Json::Arr(
+            self.online
+                .iter()
+                .map(|o| {
+                    Json::obj()
+                        .with("at", Json::Num(o.at))
+                        .with("after_events", Json::Num(o.after_events as f64))
+                        .with("config", o.config.to_json())
+                })
+                .collect(),
+        );
+        let progress = Json::obj()
+            .with("queue_len", Json::Num(self.queue_len() as f64))
+            .with("active_agents", Json::Num(self.active_agents().count() as f64))
+            .with("done_agents", Json::Num(self.done.len() as f64))
+            .with(
+                "best",
+                self.best().map(|(_, _, m)| Json::Num(m)).unwrap_or(Json::Null),
+            );
+        Json::obj()
+            .with("version", Json::Num(1.0))
+            .with("t", Json::Num(self.evq.now()))
+            .with("events_processed", Json::Num(self.evq.processed() as f64))
+            .with("setup", self.setup.to_json())
+            .with("online", online)
+            .with("progress", progress)
+    }
+
+    /// Replay helper: step until `target` events have been processed.
+    /// The past-horizon pop counts (it incremented `processed` in the
+    /// original run too), so horizon-terminated snapshots restore cleanly.
+    fn replay_to(&mut self, target: u64) -> anyhow::Result<()> {
+        while self.events_processed() < target {
+            match self.step() {
+                Step::Advanced(_) | Step::HorizonReached => {}
+                Step::Idle => anyhow::bail!(
+                    "replay stalled at {} / {} events — snapshot does not match inputs",
+                    self.events_processed(),
+                    target
+                ),
+            }
+        }
+        Ok(())
+    }
+
+    /// Rebuild an engine from [`SimEngine::snapshot_json`] output by
+    /// replaying the recorded inputs up to the snapshot's event count.
+    /// Each online submission is re-issued at the event count where the
+    /// original `submit` call happened, so the event queue assigns the
+    /// same sequence numbers and same-timestamp ties break identically.
+    /// `make_trainer` must be the factory the original run used (the
+    /// trainers' internal state is reproduced by replay, not serialized).
+    pub fn restore(
+        doc: &Json,
+        make_trainer: impl FnMut(u64) -> Box<dyn Trainer> + 't,
+    ) -> anyhow::Result<SimEngine<'t>> {
+        let setup_doc = doc
+            .get("setup")
+            .ok_or_else(|| anyhow::anyhow!("snapshot missing 'setup'"))?;
+        let setup = SimSetup::from_json(setup_doc)?;
+        let target: u64 = doc
+            .get("events_processed")
+            .and_then(|v| v.as_i64())
+            .ok_or_else(|| anyhow::anyhow!("snapshot missing 'events_processed'"))?
+            as u64;
+        let mut engine = SimEngine::new(setup, make_trainer);
+        if let Some(online) = doc.get("online").and_then(|v| v.as_arr()) {
+            for o in online {
+                let at = o
+                    .get("at")
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| anyhow::anyhow!("online submission missing 'at'"))?;
+                let after_events = o
+                    .get("after_events")
+                    .and_then(|v| v.as_i64())
+                    .unwrap_or(0) as u64;
+                let cfg = ChoptConfig::from_json(
+                    o.get("config")
+                        .ok_or_else(|| anyhow::anyhow!("online submission missing 'config'"))?,
+                )?;
+                engine.replay_to(after_events.min(target))?;
+                if engine.submit(cfg, at).is_none() {
+                    anyhow::bail!(
+                        "replay hit the horizon before a recorded submission at t={at}"
+                    );
+                }
+            }
+        }
+        engine.replay_to(target)?;
+        Ok(engine)
+    }
+}

@@ -35,6 +35,32 @@ impl Default for StopAndGoPolicy {
 }
 
 impl StopAndGoPolicy {
+    /// Serialize for engine snapshots.
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value as Json;
+        Json::obj()
+            .with("low_util", Json::Num(self.low_util))
+            .with("max_bonus_factor", Json::Num(self.max_bonus_factor))
+            .with("min_gpus", Json::Num(self.min_gpus as f64))
+    }
+
+    /// Inverse of [`StopAndGoPolicy::to_json`]; missing keys fall back to
+    /// the defaults.
+    pub fn from_json(doc: &crate::util::json::Value) -> anyhow::Result<StopAndGoPolicy> {
+        let d = StopAndGoPolicy::default();
+        Ok(StopAndGoPolicy {
+            low_util: doc.get("low_util").and_then(|v| v.as_f64()).unwrap_or(d.low_util),
+            max_bonus_factor: doc
+                .get("max_bonus_factor")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(d.max_bonus_factor),
+            min_gpus: doc
+                .get("min_gpus")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(d.min_gpus),
+        })
+    }
+
     /// Compute per-agent GPU targets.
     ///
     /// `external_demand` is what non-CHOPT users want *right now* (from

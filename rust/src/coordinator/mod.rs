@@ -6,19 +6,28 @@
 //! * [`election::Election`] — zookeeper-style master-agent failover.
 //! * [`master`] — the Stop-and-Go policy: shift GPUs between CHOPT and
 //!   non-CHOPT tenants by cluster utilization.
-//! * [`driver`] — the discrete-event composition root used by every
+//! * [`engine`] — the re-entrant discrete-event state machine: `step` /
+//!   `run_until` / online `submit` / snapshot-and-restore.
+//! * [`platform`] — the live layer over an engine: structured progress
+//!   events, periodic snapshots, and the view documents `serve --live`
+//!   republishes.
+//! * [`driver`] — the batch wrapper ([`run_sim`]) used by every
 //!   simulator-backed experiment.
 
 pub mod agent;
 pub mod driver;
 pub mod election;
+pub mod engine;
 pub mod master;
+pub mod platform;
 pub mod pools;
 pub mod queue;
 
 pub use agent::{Agent, AgentEvent, ScheduleReq};
 pub use driver::{run_sim, SimOutcome, SimSetup};
 pub use election::Election;
+pub use engine::{SimEngine, Step};
 pub use master::{master_tick, MasterTickLog, StopAndGoPolicy};
+pub use platform::Platform;
 pub use pools::{Pool, Pools};
 pub use queue::{SessionQueue, Submission};

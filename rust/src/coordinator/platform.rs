@@ -1,0 +1,445 @@
+//! The live CHOPT platform: a long-lived coordinator wrapped around a
+//! [`SimEngine`] (paper §3, §3.5).
+//!
+//! Where the engine is a pure state machine, the platform owns the
+//! *observable* side of a run:
+//!
+//! * a structured progress stream — every agent pool transition
+//!   (launch/early-stop/preempt/revive/mutate/evict/finish) is appended to
+//!   a JSONL [`EventLog`] as it happens,
+//! * periodic JSON snapshots of the engine (`snapshot.json`) from which a
+//!   run can be **restored** and continued ([`Platform::restore`]),
+//! * live view documents (leaderboard, sessions, parallel coordinates,
+//!   cluster utilization, status) that `chopt serve --live` republishes to
+//!   the viz HTTP server as the engine advances, and
+//! * online [`Platform::submit`] — users joining the shared cluster while
+//!   other sessions are mid-flight.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::ChoptConfig;
+use crate::events::SimTime;
+use crate::nsml::NsmlSession;
+use crate::storage::{EventLog, SessionStore};
+use crate::trainer::Trainer;
+use crate::util::json::Value as Json;
+use crate::viz::export;
+
+use super::agent::AgentEvent;
+use super::driver::{SimOutcome, SimSetup};
+use super::engine::SimEngine;
+
+/// A live run: engine + event log + snapshot cadence + view builders.
+pub struct Platform<'t> {
+    engine: SimEngine<'t>,
+    event_log: Option<EventLog>,
+    /// Per-agent count of [`AgentEvent`]s already drained to the log.
+    cursors: HashMap<u64, usize>,
+    snapshot_path: Option<PathBuf>,
+    /// Virtual seconds between automatic snapshots.
+    snapshot_every: SimTime,
+    last_snapshot_t: SimTime,
+    /// Done agents drained to completion — their event vectors can never
+    /// grow again, so drains skip them (keeps the per-event drain in
+    /// `drive_until` bounded by the active agent count, not run history).
+    done_drained: usize,
+    /// Progress events emitted over the platform's lifetime.
+    pub progress_events: u64,
+}
+
+impl<'t> Platform<'t> {
+    pub fn new(
+        setup: SimSetup,
+        make_trainer: impl FnMut(u64) -> Box<dyn Trainer> + 't,
+    ) -> Platform<'t> {
+        Platform::from_engine(SimEngine::new(setup, make_trainer))
+    }
+
+    pub fn from_engine(engine: SimEngine<'t>) -> Platform<'t> {
+        Platform {
+            engine,
+            event_log: None,
+            cursors: HashMap::new(),
+            snapshot_path: None,
+            snapshot_every: 3600.0,
+            last_snapshot_t: 0.0,
+            done_drained: 0,
+            progress_events: 0,
+        }
+    }
+
+    /// Append structured progress events to a JSONL log at `path`.
+    pub fn with_event_log(mut self, path: impl AsRef<Path>) -> std::io::Result<Platform<'t>> {
+        self.event_log = Some(EventLog::open(path)?);
+        Ok(self)
+    }
+
+    /// Write an engine snapshot to `path` every `every` virtual seconds
+    /// (and once more at completion).
+    pub fn with_snapshots(mut self, path: impl AsRef<Path>, every: SimTime) -> Platform<'t> {
+        self.snapshot_path = Some(path.as_ref().to_path_buf());
+        self.snapshot_every = every.max(1.0);
+        self
+    }
+
+    pub fn engine(&self) -> &SimEngine<'t> {
+        &self.engine
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.engine.is_done()
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.engine.now()
+    }
+
+    /// Submit a new CHOPT session to the live run (clamped to now).
+    /// Returns `None` if the engine's horizon has already been reached.
+    pub fn submit(&mut self, config: ChoptConfig, at: SimTime) -> Option<SimTime> {
+        let at = self.engine.submit(config, at)?;
+        self.log_json(
+            Json::obj()
+                .with("t", Json::Num(self.engine.now()))
+                .with("ev", Json::Str("submitted".into()))
+                .with("at", Json::Num(at)),
+        );
+        Some(at)
+    }
+
+    /// Advance the engine by `dt` virtual seconds, then drain progress
+    /// events and maybe snapshot.  Returns events processed.  If the
+    /// window is an idle gap (no event within `dt`), one event past the
+    /// gap is processed so callers looping on `advance` always progress;
+    /// a return of 0 therefore means the run is over.
+    pub fn advance(&mut self, dt: SimTime) -> u64 {
+        let mut n = self.drive_until(self.engine.now() + dt);
+        if n == 0
+            && !self.engine.is_done()
+            && matches!(self.engine.step(), super::engine::Step::Advanced(_))
+        {
+            n += 1;
+            self.drain_progress();
+        }
+        self.after_advance();
+        n
+    }
+
+    /// Advance the engine to virtual time `t` (strict bound — see
+    /// [`SimEngine::run_until`]).
+    pub fn run_until(&mut self, t: SimTime) -> u64 {
+        let n = self.drive_until(t);
+        self.after_advance();
+        n
+    }
+
+    /// Engine `run_until`, but when an event log is attached the progress
+    /// stream is drained after *every* event so each JSONL record carries
+    /// the virtual time the pool transition actually happened (not the
+    /// advance-chunk boundary).
+    fn drive_until(&mut self, t: SimTime) -> u64 {
+        if self.event_log.is_none() {
+            return self.engine.run_until(t);
+        }
+        let mut n = 0;
+        while !self.engine.is_done() {
+            match self.engine.next_event_time() {
+                Some(next) if next <= t => {
+                    if !matches!(self.engine.step(), super::engine::Step::Advanced(_)) {
+                        break;
+                    }
+                    n += 1;
+                    self.drain_progress();
+                }
+                _ => break,
+            }
+        }
+        n
+    }
+
+    /// Drive the run to completion in `chunk`-sized virtual-time slices so
+    /// progress/snapshot cadence is honored throughout.
+    pub fn run_to_completion(&mut self, chunk: SimTime) -> u64 {
+        let chunk = chunk.max(1.0);
+        let mut n = 0;
+        loop {
+            let stepped = self.advance(chunk);
+            n += stepped;
+            if self.engine.is_done() || stepped == 0 {
+                break;
+            }
+        }
+        if self.snapshot_path.is_some() {
+            let _ = self.snapshot_now();
+        }
+        n
+    }
+
+    /// Consume the platform into the batch outcome.  The engine's final
+    /// shutdown can itself emit transitions (`Terminated("horizon")` on
+    /// still-active agents), so those are drained from the outcome into
+    /// the event log before it is handed back.
+    pub fn into_outcome(mut self) -> SimOutcome {
+        self.after_advance();
+        let outcome = self.engine.into_outcome();
+        let now = outcome.end_time;
+        for agent in &outcome.agents {
+            let seen = self.cursors.get(&agent.id).copied().unwrap_or(0);
+            for ev in &agent.events[seen..] {
+                self.progress_events += 1;
+                if let Some(log) = &mut self.event_log {
+                    let _ = log.append(&agent_event_json(agent.id, ev, now));
+                }
+            }
+        }
+        if let Some(log) = &mut self.event_log {
+            let _ = log.flush();
+        }
+        outcome
+    }
+
+    // -- progress stream ---------------------------------------------------
+
+    fn after_advance(&mut self) {
+        self.drain_progress();
+        if let Some(log) = &mut self.event_log {
+            let _ = log.flush();
+        }
+        self.maybe_snapshot();
+    }
+
+    /// Append agent events that occurred since the last drain to the
+    /// event log (one JSON object per pool transition).  When called once
+    /// per engine step (see [`Platform::drive_until`]) `engine.now()` is
+    /// exactly the virtual time the transitions happened.
+    fn drain_progress(&mut self) {
+        let now = self.engine.now();
+        let mut fresh: Vec<Json> = Vec::new();
+        // Newly-completed agents get one final drain; long-done ones are
+        // skipped (their event vectors are immutable).
+        let done = self.engine.done_agents();
+        let newly_done = &done[self.done_drained.min(done.len())..];
+        for agent in newly_done.iter().chain(self.engine.active_agents()) {
+            let seen = self.cursors.get(&agent.id).copied().unwrap_or(0);
+            for ev in &agent.events[seen..] {
+                fresh.push(agent_event_json(agent.id, ev, now));
+            }
+            self.cursors.insert(agent.id, agent.events.len());
+        }
+        self.done_drained = done.len();
+        self.progress_events += fresh.len() as u64;
+        for doc in fresh {
+            self.log_json(doc);
+        }
+    }
+
+    fn log_json(&mut self, doc: Json) {
+        if let Some(log) = &mut self.event_log {
+            let _ = log.append(&doc);
+        }
+    }
+
+    fn maybe_snapshot(&mut self) {
+        if self.snapshot_path.is_none() {
+            return;
+        }
+        let now = self.engine.now();
+        if now - self.last_snapshot_t >= self.snapshot_every {
+            let _ = self.snapshot_now();
+        }
+    }
+
+    /// Write (and return) a snapshot right now.
+    pub fn snapshot_now(&mut self) -> std::io::Result<Json> {
+        let doc = self.engine.snapshot_json();
+        if let Some(path) = &self.snapshot_path {
+            if let Some(parent) = path.parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            std::fs::write(path, doc.to_string_pretty())?;
+        }
+        self.last_snapshot_t = self.engine.now();
+        Ok(doc)
+    }
+
+    /// Rebuild a platform from a snapshot file written by
+    /// [`Platform::snapshot_now`].  `make_trainer` must be the factory the
+    /// original run used (state is reproduced by deterministic replay).
+    pub fn restore(
+        path: impl AsRef<Path>,
+        make_trainer: impl FnMut(u64) -> Box<dyn Trainer> + 't,
+    ) -> anyhow::Result<Platform<'t>> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = crate::util::json::parse(&text)?;
+        let engine = SimEngine::restore(&doc, make_trainer)?;
+        let mut platform = Platform::from_engine(engine);
+        // Events up to the snapshot were already logged by the original
+        // run; start the cursors at the replayed state so a reattached
+        // log only receives new transitions.
+        for agent in platform.engine.all_agents() {
+            platform.cursors.insert(agent.id, agent.events.len());
+        }
+        platform.done_drained = platform.engine.done_agents().len();
+        platform.last_snapshot_t = platform.engine.now();
+        Ok(platform)
+    }
+
+    // -- live views --------------------------------------------------------
+
+    /// All NSML sessions across all agents, done agents first.
+    pub fn sessions(&self) -> Vec<NsmlSession> {
+        let mut out = Vec::new();
+        for agent in self.engine.all_agents() {
+            let mut ss: Vec<&NsmlSession> = agent.sessions.values().collect();
+            ss.sort_by_key(|s| s.id);
+            out.extend(ss.into_iter().cloned());
+        }
+        out
+    }
+
+    /// Live leaderboard rows (top `k` across every agent's sessions).
+    pub fn leaderboard_doc(&self, k: usize) -> Json {
+        let mut rows: Vec<Json> = Vec::new();
+        for agent in self.engine.all_agents() {
+            let order = agent.cfg.order;
+            for &(sid, best) in agent.leaderboard.top(k) {
+                let s = &agent.sessions[&sid];
+                rows.push(
+                    Json::obj()
+                        .with("chopt", Json::Num(agent.id as f64))
+                        .with("session", Json::Num(sid.0 as f64))
+                        .with("best", Json::Num(best))
+                        .with("epochs", Json::Num(s.epochs as f64))
+                        .with("status", Json::Str(s.status.name().to_string()))
+                        .with("order", Json::Str(order.name().to_string())),
+                );
+            }
+        }
+        // Cross-agent merge: best first under the first agent's order
+        // (platform runs share a measure in practice).  NaN-safe.
+        let descending = self.order() == crate::config::Order::Descending;
+        rows.sort_by(|a, b| {
+            let ma = a.get("best").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+            let mb = b.get("best").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+            // NaN rows sink to the bottom regardless of order direction.
+            match (ma.is_nan(), mb.is_nan()) {
+                (true, true) => std::cmp::Ordering::Equal,
+                (true, false) => std::cmp::Ordering::Greater,
+                (false, true) => std::cmp::Ordering::Less,
+                (false, false) if descending => mb.total_cmp(&ma),
+                (false, false) => ma.total_cmp(&mb),
+            }
+        });
+        rows.truncate(k);
+        Json::obj()
+            .with("t", Json::Num(self.engine.now()))
+            .with("rows", Json::Arr(rows))
+    }
+
+    /// Sessions document in the `SessionStore` format `chopt serve` uses.
+    pub fn sessions_doc(&self) -> Json {
+        let mut store = SessionStore::new();
+        for agent in self.engine.all_agents() {
+            let mut ss: Vec<&NsmlSession> = agent.sessions.values().collect();
+            ss.sort_by_key(|s| s.id);
+            store.put_run(
+                &format!("chopt-{}", agent.id),
+                ss.into_iter().cloned().collect(),
+            );
+        }
+        store.to_json()
+    }
+
+    /// The run's measure order (first agent's; platform runs share one).
+    pub fn order(&self) -> crate::config::Order {
+        self.engine
+            .all_agents()
+            .next()
+            .map(|a| a.cfg.order)
+            .unwrap_or(crate::config::Order::Descending)
+    }
+
+    /// Parallel-coordinates document over all sessions (axes from `space`).
+    pub fn parallel_doc(&self, space: &crate::hparam::Space) -> Json {
+        self.parallel_doc_from(space, &self.sessions())
+    }
+
+    /// Same, over a caller-held session list — lets a publish loop collect
+    /// [`Platform::sessions`] once instead of deep-cloning per document.
+    pub fn parallel_doc_from(
+        &self,
+        space: &crate::hparam::Space,
+        sessions: &[NsmlSession],
+    ) -> Json {
+        export::parallel_coords_doc(space, sessions, self.order(), "live")
+    }
+
+    /// Cluster utilization view (live Fig. 8).
+    pub fn cluster_doc(&self) -> Json {
+        export::cluster_doc(self.engine.cluster(), self.engine.now())
+    }
+
+    /// One-object run status (the `/api/status.json` heartbeat).
+    pub fn status_doc(&self) -> Json {
+        let engine = &self.engine;
+        let (live, stop, dead) = engine.active_agents().fold((0, 0, 0), |acc, a| {
+            (
+                acc.0 + a.pools.live_count(),
+                acc.1 + a.pools.stop_count(),
+                acc.2 + a.pools.dead_count(),
+            )
+        });
+        Json::obj()
+            .with("t", Json::Num(engine.now()))
+            .with("events_processed", Json::Num(engine.events_processed() as f64))
+            .with("done", Json::Bool(engine.is_done()))
+            .with("queue_len", Json::Num(engine.queue_len() as f64))
+            .with("active_agents", Json::Num(engine.active_agents().count() as f64))
+            .with("done_agents", Json::Num(engine.done_agents().len() as f64))
+            .with("pool_live", Json::Num(live as f64))
+            .with("pool_stop", Json::Num(stop as f64))
+            .with("pool_dead", Json::Num(dead as f64))
+            .with(
+                "best",
+                engine
+                    .best()
+                    .map(|(_, _, m)| Json::Num(m))
+                    .unwrap_or(Json::Null),
+            )
+            .with(
+                "utilization",
+                Json::Num(engine.cluster().utilization()),
+            )
+            .with("election_term", Json::Num(engine.election().term() as f64))
+            .with("progress_events", Json::Num(self.progress_events as f64))
+    }
+}
+
+/// One pool transition as a structured JSONL record.
+fn agent_event_json(agent_id: u64, ev: &AgentEvent, now: SimTime) -> Json {
+    let base = |name: &str| {
+        Json::obj()
+            .with("t", Json::Num(now))
+            .with("chopt", Json::Num(agent_id as f64))
+            .with("ev", Json::Str(name.to_string()))
+    };
+    match ev {
+        AgentEvent::Launched(sid) => base("launched").with("session", Json::Num(sid.0 as f64)),
+        AgentEvent::Revived(sid) => base("revived").with("session", Json::Num(sid.0 as f64)),
+        AgentEvent::EarlyStopped(sid, pool) => base("early_stopped")
+            .with("session", Json::Num(sid.0 as f64))
+            .with("pool", Json::Str(format!("{pool:?}").to_lowercase())),
+        AgentEvent::Preempted(sid, pool) => base("preempted")
+            .with("session", Json::Num(sid.0 as f64))
+            .with("pool", Json::Str(format!("{pool:?}").to_lowercase())),
+        AgentEvent::Finished(sid) => base("finished").with("session", Json::Num(sid.0 as f64)),
+        AgentEvent::Mutated { victim, source } => base("mutated")
+            .with("session", Json::Num(victim.0 as f64))
+            .with("source", Json::Num(source.0 as f64)),
+        AgentEvent::Evicted(sid) => base("evicted").with("session", Json::Num(sid.0 as f64)),
+        AgentEvent::Terminated(reason) => {
+            base("terminated").with("reason", Json::Str(reason.to_string()))
+        }
+    }
+}

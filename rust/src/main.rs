@@ -2,14 +2,17 @@
 //!
 //! Subcommands:
 //!   run            run a CHOPT session from a config file (sim or real)
+//!   watch          run through the live Platform: progress stream,
+//!                  periodic snapshots, stop-and-go restore
 //!   example-config print the paper's Listing-1 example configuration
 //!   artifacts      inspect the AOT artifact manifest
-//!   serve          serve stored results through the viz HTTP server
+//!   serve          serve stored results (or a live run) through the viz
+//!                  HTTP server
 
 use std::collections::HashSet;
 
 use chopt::config::ChoptConfig;
-use chopt::coordinator::{run_sim, SimSetup};
+use chopt::coordinator::{run_sim, Platform, SimSetup};
 use chopt::storage::SessionStore;
 use chopt::trainer::{real::RealTrainer, surrogate::SurrogateTrainer, Trainer};
 use chopt::util::cli::{CliError, Command};
@@ -25,6 +28,20 @@ fn cli() -> Command {
                 .opt("seed", None, "override the config seed")
                 .flag("real", "train with the PJRT runtime instead of the surrogate"),
         )
+        .subcommand(
+            Command::new("watch", "run through the live Platform, observable as it goes")
+                .opt("config", None, "path to a Listing-1 style JSON config")
+                .opt("restore", None, "resume from a snapshot.json instead of a config")
+                .opt("gpus", Some("8"), "simulated cluster size")
+                .opt(
+                    "out",
+                    Some("reports/watch"),
+                    "output directory (events.jsonl, snapshot.json, exports)",
+                )
+                .opt("seed", None, "override the config seed")
+                .opt("chunk", Some("3600"), "virtual seconds per progress report")
+                .opt("snapshot-every", Some("14400"), "virtual seconds between snapshots"),
+        )
         .subcommand(Command::new(
             "example-config",
             "print the paper's Listing-1 example configuration",
@@ -34,9 +51,14 @@ fn cli() -> Command {
                 .opt("dir", Some("artifacts"), "artifacts directory"),
         )
         .subcommand(
-            Command::new("serve", "serve a stored run through the viz server")
-                .opt_required("store", "path to a sessions.json written by `run`")
-                .opt("port", Some("8787"), "listen port"),
+            Command::new("serve", "serve a stored run (or a live one) through the viz server")
+                .opt("store", None, "path to a sessions.json written by `run`")
+                .opt("port", Some("8787"), "listen port")
+                .flag("live", "drive a run in-process and re-render views as it advances")
+                .opt("config", None, "config for --live mode")
+                .opt("gpus", Some("8"), "simulated cluster size (--live)")
+                .opt("chunk", Some("1800"), "virtual seconds advanced per refresh (--live)")
+                .opt("throttle-ms", Some("250"), "wall-clock pause between refreshes (--live)"),
         )
 }
 
@@ -57,6 +79,7 @@ fn main() {
     let result = match &matches.subcommand {
         Some((name, sub)) => match name.as_str() {
             "run" => cmd_run(sub),
+            "watch" => cmd_watch(sub),
             "example-config" => {
                 println!("{}", chopt::config::LISTING1_EXAMPLE);
                 Ok(())
@@ -141,6 +164,136 @@ fn cmd_run(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `chopt watch`: drive a run through the live [`Platform`] — structured
+/// progress on stdout, a JSONL event stream, periodic snapshots, and
+/// stop-and-go resume via `--restore`.
+fn cmd_watch(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
+    let out_dir = m.get_or("out", "reports/watch").to_string();
+    let chunk = m.get_f64("chunk").unwrap_or(3600.0).max(1.0);
+    let snap_every = m.get_f64("snapshot-every").unwrap_or(14400.0);
+    let snap_path = format!("{out_dir}/snapshot.json");
+    std::fs::create_dir_all(&out_dir)?;
+
+    let mut platform = if let Some(restore) = m.get("restore") {
+        // The factory seed comes from the snapshot's own configs, so a
+        // restored run replays with the trainers the original run built.
+        let platform = Platform::restore(restore, |id| -> Box<dyn Trainer> {
+            Box::new(SurrogateTrainer::new(id))
+        })?;
+        println!(
+            "restored from {restore}: t={:.0}s, {} events replayed",
+            platform.now(),
+            platform.engine().events_processed()
+        );
+        // The previous process logged transitions past the snapshot point
+        // before it died; the continued run re-emits that window, so trim
+        // those records or the append-mode log would hold them twice.
+        trim_event_log(&format!("{out_dir}/events.jsonl"), platform.now())?;
+        platform
+    } else {
+        let Some(config_path) = m.get("config") else {
+            anyhow::bail!("watch needs --config (or --restore)");
+        };
+        let mut cfg = ChoptConfig::load(config_path)?;
+        if let Some(seed) = m.get_u64("seed") {
+            cfg.seed = seed;
+        }
+        let gpus = m.get_usize("gpus").unwrap_or(8);
+        println!(
+            "watching CHOPT: tune={} model={} population={} gpus={gpus}",
+            cfg.tune.name(),
+            cfg.model,
+            cfg.population
+        );
+        // Fresh run: a leftover log from a previous run would be appended
+        // to (EventLog opens in append mode, which is what --restore
+        // wants), interleaving two runs' histories — start clean instead.
+        // The old snapshot goes too: until this run's first snapshot
+        // lands, --restore would otherwise silently resume the *previous*
+        // run on top of this run's log.
+        let _ = std::fs::remove_file(format!("{out_dir}/events.jsonl"));
+        let _ = std::fs::remove_file(&snap_path);
+        Platform::new(SimSetup::single(cfg, gpus), |id| -> Box<dyn Trainer> {
+            Box::new(SurrogateTrainer::new(id))
+        })
+    };
+    platform = platform
+        .with_event_log(format!("{out_dir}/events.jsonl"))?
+        .with_snapshots(&snap_path, snap_every);
+
+    loop {
+        let n = platform.advance(chunk);
+        let status = platform.status_doc();
+        println!(
+            "t={:>10.0}s events={:>7} queue={} agents={} pools l/s/d={}/{}/{} best={}",
+            platform.now(),
+            status.get("events_processed").and_then(|v| v.as_i64()).unwrap_or(0),
+            status.get("queue_len").and_then(|v| v.as_i64()).unwrap_or(0),
+            status.get("active_agents").and_then(|v| v.as_i64()).unwrap_or(0),
+            status.get("pool_live").and_then(|v| v.as_i64()).unwrap_or(0),
+            status.get("pool_stop").and_then(|v| v.as_i64()).unwrap_or(0),
+            status.get("pool_dead").and_then(|v| v.as_i64()).unwrap_or(0),
+            status
+                .get("best")
+                .and_then(|v| v.as_f64())
+                .map(|b| format!("{b:.2}"))
+                .unwrap_or_else(|| "-".into()),
+        );
+        if platform.is_done() || n == 0 {
+            break;
+        }
+    }
+    platform.snapshot_now()?;
+
+    // Final exports (same shape `run` writes, so `serve --store` works).
+    std::fs::write(
+        format!("{out_dir}/sessions.json"),
+        platform.sessions_doc().to_string_pretty(),
+    )?;
+    let sessions = platform.sessions();
+    if let Some(agent) = platform.engine().all_agents().next() {
+        viz::report::leaderboard_table(&sessions, agent.cfg.order, 5).print();
+    }
+    println!(
+        "done: {} events, {:.1} virtual hours, {} progress events\nwrote {out_dir}/{{events.jsonl,snapshot.json,sessions.json}}\nresume anytime: chopt watch --restore {snap_path}",
+        platform.engine().events_processed(),
+        platform.now() / 3600.0,
+        platform.progress_events,
+    );
+    Ok(())
+}
+
+/// Drop event-log records stamped after `cut` (the restored snapshot's
+/// virtual time): the continued run re-emits that window, and the log is
+/// opened in append mode, so keeping them would duplicate every pool
+/// transition between the last snapshot and the interruption.
+fn trim_event_log(path: &str, cut: f64) -> anyhow::Result<()> {
+    if !std::path::Path::new(path).exists() {
+        return Ok(());
+    }
+    let events = chopt::storage::EventLog::read_all(path)?;
+    let kept: Vec<String> = events
+        .iter()
+        .filter(|e| {
+            e.get("t")
+                .and_then(|v| v.as_f64())
+                .map(|t| t <= cut)
+                .unwrap_or(true)
+        })
+        .map(|e| e.to_string_compact())
+        .collect();
+    let dropped = events.len() - kept.len();
+    if dropped > 0 {
+        let mut body = kept.join("\n");
+        if !body.is_empty() {
+            body.push('\n');
+        }
+        std::fs::write(path, body)?;
+        println!("trimmed {dropped} post-snapshot records from {path}");
+    }
+    Ok(())
+}
+
 fn cmd_artifacts(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
     let dir = m.get_or("dir", "artifacts");
     let manifest = chopt::runtime::Manifest::load(dir)?;
@@ -168,8 +321,13 @@ fn cmd_artifacts(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
-    let store_path = m.get("store").unwrap();
     let port: u16 = m.get_usize("port").unwrap_or(8787) as u16;
+    if m.flag("live") {
+        return cmd_serve_live(m, port);
+    }
+    let Some(store_path) = m.get("store") else {
+        anyhow::bail!("serve needs --store (or --live with --config)");
+    };
     let doc = SessionStore::load_json(store_path)?;
     let mut routes = viz::server::Routes::new();
     routes.insert(
@@ -181,6 +339,55 @@ fn cmd_serve(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
     );
     let server = viz::server::VizServer::start(port, routes)?;
     println!("serving {store_path} on http://{}/ (ctrl-c to stop)", server.addr());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// `chopt serve --live`: run the engine in-process and republish the
+/// leaderboard / parallel-coords / cluster-view JSON on every advance, so
+/// the browser watches the optimization unfold (paper §3.5's analytic
+/// tool over a *running* session instead of a stored one).
+fn cmd_serve_live(m: &chopt::util::cli::Matches, port: u16) -> anyhow::Result<()> {
+    let Some(config_path) = m.get("config") else {
+        anyhow::bail!("serve --live needs --config");
+    };
+    let cfg = ChoptConfig::load(config_path)?;
+    let gpus = m.get_usize("gpus").unwrap_or(8);
+    let chunk = m.get_f64("chunk").unwrap_or(1800.0).max(1.0);
+    let throttle = std::time::Duration::from_millis(m.get_u64("throttle-ms").unwrap_or(250));
+    let space = cfg.space.clone();
+
+    let mut platform = Platform::new(SimSetup::single(cfg, gpus), |id| -> Box<dyn Trainer> {
+        Box::new(SurrogateTrainer::new(id))
+    });
+    let server = viz::server::VizServer::start(port, viz::server::Routes::new())?;
+    let publish = |p: &Platform| {
+        let sessions = p.sessions();
+        server.put_json("/api/sessions.json", &p.sessions_doc());
+        server.put_json("/api/leaderboard.json", &p.leaderboard_doc(10));
+        server.put_json("/api/parallel.json", &p.parallel_doc_from(&space, &sessions));
+        server.put_json("/api/cluster.json", &p.cluster_doc());
+        server.put_json("/api/status.json", &p.status_doc());
+    };
+    publish(&platform);
+    println!(
+        "live run on http://{}/ (leaderboard/parallel/cluster JSON refresh as the engine advances)",
+        server.addr()
+    );
+    loop {
+        let n = platform.advance(chunk);
+        publish(&platform);
+        if platform.is_done() || n == 0 {
+            break;
+        }
+        std::thread::sleep(throttle);
+    }
+    println!(
+        "run complete at t={:.0}s ({} events); still serving — ctrl-c to stop",
+        platform.now(),
+        platform.engine().events_processed()
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

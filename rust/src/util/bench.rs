@@ -159,6 +159,80 @@ impl Table {
     }
 }
 
+/// Machine-readable bench output: collects named metrics and writes
+/// `BENCH_<name>.json` at the repo root (override the directory with
+/// `CHOPT_BENCH_DIR`), so CI can track the perf trajectory across PRs.
+#[derive(Debug, Clone)]
+pub struct BenchJson {
+    name: String,
+    metrics: Vec<(String, f64)>,
+    notes: Vec<(String, String)>,
+}
+
+impl BenchJson {
+    pub fn new(name: &str) -> BenchJson {
+        BenchJson {
+            name: name.to_string(),
+            metrics: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    /// Record one scalar metric (replaces an existing key).
+    pub fn metric(&mut self, key: &str, value: f64) -> &mut BenchJson {
+        if let Some(slot) = self.metrics.iter_mut().find(|(k, _)| k == key) {
+            slot.1 = value;
+        } else {
+            self.metrics.push((key.to_string(), value));
+        }
+        self
+    }
+
+    /// Record a [`BenchResult`] as `<name>.{mean,p50,p99}_us` metrics.
+    pub fn result(&mut self, r: &BenchResult) -> &mut BenchJson {
+        let key = r.name.replace(' ', "_");
+        self.metric(&format!("{key}.mean_us"), r.per_iter.mean * 1e6);
+        self.metric(&format!("{key}.p50_us"), r.per_iter.p50 * 1e6);
+        self.metric(&format!("{key}.p99_us"), r.per_iter.p99 * 1e6);
+        self
+    }
+
+    /// Attach a free-form annotation (e.g. "skipped": "no artifacts").
+    pub fn note(&mut self, key: &str, value: &str) -> &mut BenchJson {
+        self.notes.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value as Json;
+        let unix = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs() as f64)
+            .unwrap_or(0.0);
+        let mut metrics = Json::obj();
+        for (k, v) in &self.metrics {
+            metrics.set(k, Json::Num(*v));
+        }
+        let mut notes = Json::obj();
+        for (k, v) in &self.notes {
+            notes.set(k, Json::Str(v.clone()));
+        }
+        Json::obj()
+            .with("bench", Json::Str(self.name.clone()))
+            .with("unix_time", Json::Num(unix))
+            .with("metrics", metrics)
+            .with("notes", notes)
+    }
+
+    /// Write `BENCH_<name>.json`; returns the path written.
+    pub fn save(&self) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::env::var("CHOPT_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+        let path = std::path::Path::new(&dir).join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json().to_string_pretty())?;
+        Ok(path)
+    }
+}
+
 /// Format a GPU-time duration the way the paper's Table 4 does ("60+ days",
 /// "22 days", "2 days").
 pub fn fmt_gpu_days(hours: f64) -> String {
@@ -212,5 +286,31 @@ mod tests {
     fn gpu_days_formatting() {
         assert_eq!(fmt_gpu_days(48.0), "2.0 days");
         assert_eq!(fmt_gpu_days(12.0), "12.0 hours");
+    }
+
+    #[test]
+    fn bench_json_collects_and_serializes() {
+        let mut j = BenchJson::new("unit");
+        j.metric("events_per_sec", 12_500.0)
+            .metric("events_per_sec", 13_000.0) // replaces
+            .note("mode", "quick");
+        let b = Bencher {
+            target_time: Duration::from_millis(5),
+            warmup: Duration::from_millis(1),
+            max_iters: 100,
+        };
+        let r = b.bench("tiny case", || {});
+        j.result(&r);
+        let doc = j.to_json();
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("unit"));
+        assert_eq!(
+            doc.path("metrics.events_per_sec").unwrap().as_f64(),
+            Some(13_000.0)
+        );
+        let metrics = doc.get("metrics").unwrap();
+        assert!(metrics.get("tiny_case.mean_us").unwrap().as_f64().is_some());
+        assert_eq!(doc.path("notes.mode").unwrap().as_str(), Some("quick"));
+        // Reparseable.
+        crate::util::json::parse(&doc.to_string_pretty()).unwrap();
     }
 }

@@ -5,9 +5,8 @@
 
 use std::io::Write;
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::LazyLock;
 use std::time::Instant;
-
-use once_cell::sync::Lazy;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
@@ -41,8 +40,8 @@ impl Level {
     }
 }
 
-static START: Lazy<Instant> = Lazy::new(Instant::now);
-static MAX_LEVEL: Lazy<AtomicU8> = Lazy::new(|| {
+static START: LazyLock<Instant> = LazyLock::new(Instant::now);
+static MAX_LEVEL: LazyLock<AtomicU8> = LazyLock::new(|| {
     let lvl = std::env::var("CHOPT_LOG")
         .ok()
         .and_then(|s| Level::from_str(&s))

@@ -102,6 +102,30 @@ pub fn summary_doc(sessions: &[&NsmlSession], order: Order) -> Json {
     Json::obj().with("rows", Json::Arr(rows))
 }
 
+/// Live cluster-utilization document (Fig. 8 as a stream): the per-tenant
+/// usage change-points plus the instantaneous holdings at `now`.  The
+/// `serve --live` viewer polls this as the engine advances.
+pub fn cluster_doc(cluster: &crate::cluster::Cluster, now: f64) -> Json {
+    let series = |ti: &crate::events::TimeIntegrator| {
+        Json::Arr(
+            ti.series
+                .iter()
+                .map(|&(t, v)| Json::Arr(vec![Json::Num(t), Json::Num(v)]))
+                .collect(),
+        )
+    };
+    Json::obj()
+        .with("t", Json::Num(now))
+        .with("total_gpus", Json::Num(cluster.total() as f64))
+        .with("used", Json::Num(cluster.used() as f64))
+        .with("chopt_held", Json::Num(cluster.held_by_chopt() as f64))
+        .with("utilization", Json::Num(cluster.utilization()))
+        .with("chopt_gpu_hours", Json::Num(cluster.chopt_gpu_hours(now)))
+        .with("series_total", series(&cluster.usage_total))
+        .with("series_chopt", series(&cluster.usage_chopt))
+        .with("series_external", series(&cluster.usage_external))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -151,5 +175,19 @@ mod tests {
         let refs: Vec<&NsmlSession> = ss.iter().collect();
         let doc = summary_doc(&refs, Order::Descending);
         assert_eq!(doc.get("rows").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn cluster_doc_shape() {
+        use crate::cluster::{Cluster, Owner};
+        let mut c = Cluster::new(8);
+        c.allocate(Owner::Chopt(1), 3, 0.0).unwrap();
+        c.allocate(Owner::External, 2, 10.0).unwrap();
+        let doc = cluster_doc(&c, 20.0);
+        assert_eq!(doc.get("total_gpus").unwrap().as_i64(), Some(8));
+        assert_eq!(doc.get("used").unwrap().as_i64(), Some(5));
+        assert_eq!(doc.get("chopt_held").unwrap().as_i64(), Some(3));
+        assert!(doc.get("chopt_gpu_hours").unwrap().as_f64().unwrap() > 0.0);
+        assert!(!doc.get("series_chopt").unwrap().as_arr().unwrap().is_empty());
     }
 }

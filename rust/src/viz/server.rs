@@ -71,6 +71,13 @@ impl VizServer {
             .insert(path.to_string(), (content_type.to_string(), body));
     }
 
+    /// Replace/add a JSON route while running (`serve --live` republishes
+    /// the leaderboard/parallel/cluster documents through this on every
+    /// engine advance).
+    pub fn put_json(&self, path: &str, doc: &crate::util::json::Value) {
+        self.put_route(path, "application/json", doc.to_string_compact().into_bytes());
+    }
+
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(h) = self.handle.take() {
@@ -164,10 +171,18 @@ const VIEWER_HTML: &str = r#"<!doctype html>
 <div>views: <a href="/api/parallel.json">parallel.json</a>
  <a href="/api/curves.json">curves.json</a>
  <a href="/svg/parallel.svg">parallel.svg</a></div>
+<div id="status"></div>
 <canvas id="c" width="1000" height="440"></canvas>
 <script>
-fetch('/api/parallel.json').then(r=>r.json()).then(doc=>{
+function draw(){
+fetch('/api/status.json').then(r=>r.ok?r.json():null).then(s=>{
+  if(s)document.getElementById('status').textContent=
+    't='+Math.round(s.t)+'s  events='+s.events_processed+'  best='+(s.best==null?'-':s.best.toFixed(2))+(s.done?'  [done]':'');
+}).catch(()=>{});
+fetch('/api/parallel.json').then(r=>r.ok?r.json():null).then(doc=>{
+  if(!doc)return;
   const cv=document.getElementById('c'),g=cv.getContext('2d');
+  g.clearRect(0,0,cv.width,cv.height);
   const axes=doc.axes,lines=doc.lines;const m=60,w=cv.width-2*m,h=cv.height-80;
   const x=i=>m+w*i/(axes.length-1);
   const ranges=axes.map(a=>({lo:Infinity,hi:-Infinity}));
@@ -179,7 +194,9 @@ fetch('/api/parallel.json').then(r=>r.json()).then(doc=>{
     let v=val(l,a,i);const r=ranges[i];if(v==null||r.hi<=r.lo){v=r.lo||0}
     const y=40+h-(r.hi>r.lo?(v-r.lo)/(r.hi-r.lo):0.5)*h;
     if(!started){g.moveTo(x(i),y);started=true}else{g.lineTo(x(i),y)}});g.stroke();});
-});
+}).catch(()=>{});
+}
+draw();setInterval(draw,2000);
 </script></body></html>"#;
 
 #[cfg(test)]

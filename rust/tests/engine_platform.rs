@@ -1,0 +1,314 @@
+//! Integration tests for the re-entrant engine + live platform layer:
+//! step/run_until re-entry vs. one-shot equality, online submit while
+//! running, snapshot → restore → continue determinism, the
+//! failure-injection consume-once regression, and live viz routes that
+//! change as the engine advances.
+
+use chopt::config::ChoptConfig;
+use chopt::coordinator::{
+    run_sim, AgentEvent, Platform, SimEngine, SimSetup, Step, StopAndGoPolicy,
+};
+use chopt::trainer::surrogate::SurrogateTrainer;
+use chopt::trainer::Trainer;
+use chopt::viz::server::{http_get, Routes, VizServer};
+
+fn cfg(tune: &str, step: i64, max_sessions: usize, max_gpus: usize, seed: u64) -> ChoptConfig {
+    let text = format!(
+        r#"{{
+          "h_params": {{
+            "lr": {{"parameters": [0.005, 0.09], "distribution": "log_uniform",
+                    "type": "float", "p_range": [0.001, 0.2]}},
+            "momentum": {{"parameters": [0.5, 0.99], "distribution": "uniform",
+                    "type": "float", "p_range": [0.1, 0.999]}}
+          }},
+          "measure": "test/accuracy",
+          "order": "descending",
+          "step": {step},
+          "population": 4,
+          "tune": {tune},
+          "termination": {{"max_session_number": {max_sessions}}},
+          "model": "surrogate:resnet",
+          "max_epochs": 60,
+          "max_gpus": {max_gpus},
+          "seed": {seed}
+        }}"#
+    );
+    ChoptConfig::from_json_str(&text).unwrap()
+}
+
+fn surrogate(seed: u64) -> impl FnMut(u64) -> Box<dyn Trainer> {
+    move |id| Box::new(SurrogateTrainer::new(seed ^ id)) as Box<dyn Trainer>
+}
+
+fn setup(n_cfgs: usize, slots: usize, gpus: usize) -> SimSetup {
+    SimSetup {
+        cluster_gpus: gpus,
+        configs: (0..n_cfgs)
+            .map(|i| cfg("{\"random\": {}}", 10, 8, 3, 100 + i as u64))
+            .collect(),
+        submit_times: Vec::new(),
+        agent_slots: slots,
+        trace: None,
+        policy: StopAndGoPolicy::default(),
+        master_period: 60.0,
+        horizon: 1e9,
+        failures: Vec::new(),
+    }
+}
+
+fn outcome_key(out: &chopt::coordinator::SimOutcome) -> (Option<f64>, f64, u64, usize) {
+    (
+        out.best().map(|(_, _, m)| m),
+        out.end_time,
+        out.events_processed,
+        out.agents.len(),
+    )
+}
+
+#[test]
+fn paused_and_resumed_run_equals_one_shot() {
+    let one_shot = run_sim(setup(2, 2, 6), surrogate(7));
+
+    let mut engine = SimEngine::new(setup(2, 2, 6), surrogate(7));
+    // Slice the run arbitrarily: a few single steps, two time-bounded
+    // chunks, then drain.  The popped event sequence must be identical.
+    for _ in 0..5 {
+        assert!(matches!(engine.step(), Step::Advanced(_)));
+    }
+    engine.run_until(3_000.0);
+    assert!(engine.now() <= 3_000.0);
+    engine.run_until(50_000.0);
+    engine.run_to_completion();
+    let sliced = engine.into_outcome();
+
+    assert_eq!(outcome_key(&one_shot), outcome_key(&sliced));
+    for a in &sliced.agents {
+        assert!(a.finished);
+        a.pools.check_invariants().unwrap();
+    }
+}
+
+#[test]
+fn online_submit_while_running_gets_scheduled() {
+    let mut engine = SimEngine::new(setup(1, 2, 6), surrogate(9));
+    engine.run_until(2_000.0);
+    assert!(!engine.is_done(), "first session should still be running");
+
+    // A second user joins the shared cluster mid-run.
+    let at = engine.submit(cfg("{\"random\": {}}", 10, 6, 3, 500), 2_500.0);
+    assert_eq!(at, Some(2_500.0));
+    assert_eq!(engine.queue_len(), 1);
+
+    engine.run_to_completion();
+    let out = engine.into_outcome();
+    assert_eq!(out.agents.len(), 2, "online submission must run");
+    assert!(out.agents.iter().all(|a| a.finished));
+    let mut ids: Vec<u64> = out.agents.iter().map(|a| a.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![1, 2]);
+}
+
+#[test]
+fn submit_after_drain_revives_engine() {
+    let mut engine = SimEngine::new(setup(1, 1, 4), surrogate(11));
+    engine.run_to_completion();
+    assert!(engine.is_done());
+    let drained_at = engine.now();
+
+    let accepted = engine.submit(cfg("{\"random\": {}}", 10, 5, 3, 600), drained_at + 1_000.0);
+    assert!(accepted.is_some());
+    assert!(!engine.is_done(), "a new submission must re-arm the engine");
+    engine.run_to_completion();
+    let out = engine.into_outcome();
+    assert_eq!(out.agents.len(), 2);
+    assert!(out.agents.iter().all(|a| a.finished));
+    assert!(out.end_time > drained_at + 1_000.0);
+}
+
+#[test]
+fn snapshot_restore_continue_is_deterministic() {
+    // Reference: a single engine runs straight through, with one online
+    // submission along the way.
+    let drive = |engine: &mut SimEngine| {
+        engine.run_until(3_000.0);
+        engine
+            .submit(cfg("{\"random\": {}}", 10, 6, 3, 700), 5_000.0)
+            .unwrap();
+        engine.run_until(8_000.0);
+    };
+    let mut reference = SimEngine::new(setup(1, 2, 6), surrogate(13));
+    drive(&mut reference);
+    reference.run_to_completion();
+    let ref_out = reference.into_outcome();
+
+    // Same run, but snapshotted mid-flight and restored into a fresh
+    // engine (replay), which then continues to completion.
+    let mut original = SimEngine::new(setup(1, 2, 6), surrogate(13));
+    drive(&mut original);
+    let snap = original.snapshot_json();
+    // Snapshot text round-trips through serialization.
+    let snap = chopt::util::json::parse(&snap.to_string_pretty()).unwrap();
+    let mut restored = SimEngine::restore(&snap, surrogate(13)).unwrap();
+    assert_eq!(restored.now(), original.now());
+    assert_eq!(restored.events_processed(), original.events_processed());
+    restored.run_to_completion();
+    let restored_out = restored.into_outcome();
+
+    assert_eq!(outcome_key(&ref_out), outcome_key(&restored_out));
+    let created: Vec<usize> = ref_out.agents.iter().map(|a| a.created).collect();
+    let created_r: Vec<usize> = restored_out.agents.iter().map(|a| a.created).collect();
+    assert_eq!(created, created_r);
+}
+
+#[test]
+fn horizon_terminated_run_restores() {
+    // The final event pop past the horizon still counts toward
+    // events_processed; restore must tolerate it (the replay's last step
+    // reports HorizonReached, not Advanced).
+    let mut s = setup(1, 1, 4);
+    s.horizon = 2_000.0;
+    let mut engine = SimEngine::new(s, surrogate(17));
+    engine.run_to_completion();
+    assert!(engine.horizon_reached(), "run must end via the horizon");
+    let snap = engine.snapshot_json();
+
+    let restored = SimEngine::restore(&snap, surrogate(17)).unwrap();
+    assert_eq!(restored.events_processed(), engine.events_processed());
+    assert_eq!(restored.now(), engine.now());
+    assert!(restored.horizon_reached());
+    // Past the horizon the clock cannot advance; submission is refused
+    // instead of silently never running.
+    assert_eq!(
+        engine.submit(cfg("{\"random\": {}}", 10, 4, 3, 900), 9_000.0),
+        None
+    );
+    assert_eq!(
+        outcome_key(&engine.into_outcome()),
+        outcome_key(&restored.into_outcome())
+    );
+}
+
+#[test]
+fn failure_injection_fires_exactly_once() {
+    // Regression for the stale-failure bug: a (t, slot) failure record
+    // used to be re-applied on *every* master tick with t <= now, so the
+    // next agent assigned to that slot was instantly crashed too.  One
+    // slot, two queued configs, one failure while the first is running:
+    // the second agent must survive.
+    let mut s = setup(2, 1, 4);
+    s.configs[0] = cfg("{\"random\": {}}", 5, 5000, 3, 1); // long-runner
+    s.failures = vec![(5_000.0, 0)];
+    let out = run_sim(s, surrogate(55));
+
+    assert_eq!(out.agents.len(), 2);
+    let crashed: Vec<_> = out
+        .agents
+        .iter()
+        .filter(|a| a.events.contains(&AgentEvent::Terminated("agent_failure")))
+        .collect();
+    assert_eq!(
+        crashed.len(),
+        1,
+        "the failure record must crash exactly one agent"
+    );
+    let survivor = out
+        .agents
+        .iter()
+        .find(|a| !a.events.contains(&AgentEvent::Terminated("agent_failure")))
+        .expect("second agent must run");
+    assert!(survivor.finished);
+    assert!(survivor.best().is_some());
+    assert_eq!(out.cluster.held_by_chopt(), 0);
+}
+
+#[test]
+fn platform_event_log_and_snapshot_roundtrip() {
+    let dir = std::env::temp_dir().join(format!("chopt-platform-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let log_path = dir.join("events.jsonl");
+    let snap_path = dir.join("snapshot.json");
+
+    let mut platform = Platform::new(setup(1, 1, 4), surrogate(21))
+        .with_event_log(&log_path)
+        .unwrap()
+        .with_snapshots(&snap_path, 2_000.0);
+    platform.run_until(6_000.0);
+    platform.snapshot_now().unwrap();
+    let t_snap = platform.now();
+    let events_snap = platform.engine().events_processed();
+    assert!(platform.progress_events > 0, "pool transitions must stream");
+
+    // The JSONL stream is parseable and structured.
+    let events = chopt::storage::EventLog::read_all(&log_path).unwrap();
+    assert!(!events.is_empty());
+    assert!(events
+        .iter()
+        .all(|e| e.get("ev").and_then(|v| v.as_str()).is_some()));
+    assert!(events
+        .iter()
+        .any(|e| e.get("ev").and_then(|v| v.as_str()) == Some("launched")));
+
+    // Restore from the snapshot file and continue to completion; the
+    // original platform continued live must agree.
+    let mut restored = Platform::restore(&snap_path, surrogate(21)).unwrap();
+    assert_eq!(restored.now(), t_snap);
+    assert_eq!(restored.engine().events_processed(), events_snap);
+    restored.run_to_completion(1_000.0);
+    platform.run_to_completion(1_000.0);
+    let a = platform.into_outcome();
+    let b = restored.into_outcome();
+    assert_eq!(outcome_key(&a), outcome_key(&b));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn live_routes_change_as_engine_advances() {
+    // The acceptance criterion behind `chopt serve --live`: leaderboard
+    // JSON served over HTTP must change as the engine advances.
+    let mut platform = Platform::new(setup(1, 1, 4), surrogate(33));
+    let server = VizServer::start(0, Routes::new()).unwrap();
+    let addr = server.addr();
+
+    platform.run_until(1_000.0);
+    server.put_json("/api/leaderboard.json", &platform.leaderboard_doc(10));
+    server.put_json("/api/status.json", &platform.status_doc());
+    let (code, body1) = http_get(addr, "/api/leaderboard.json").unwrap();
+    assert_eq!(code, 200);
+    let doc1 = chopt::util::json::parse(&String::from_utf8(body1).unwrap()).unwrap();
+
+    platform.run_to_completion(5_000.0);
+    server.put_json("/api/leaderboard.json", &platform.leaderboard_doc(10));
+    server.put_json("/api/status.json", &platform.status_doc());
+    let (code, body2) = http_get(addr, "/api/leaderboard.json").unwrap();
+    assert_eq!(code, 200);
+    let doc2 = chopt::util::json::parse(&String::from_utf8(body2).unwrap()).unwrap();
+
+    assert_ne!(doc1, doc2, "leaderboard must advance with the engine");
+    assert!(
+        doc2.get("t").unwrap().as_f64().unwrap() > doc1.get("t").unwrap().as_f64().unwrap()
+    );
+    assert!(!doc2.get("rows").unwrap().as_arr().unwrap().is_empty());
+
+    let (code, status) = http_get(addr, "/api/status.json").unwrap();
+    assert_eq!(code, 200);
+    let status = chopt::util::json::parse(&String::from_utf8(status).unwrap()).unwrap();
+    assert_eq!(status.get("done").unwrap().as_bool(), Some(true));
+    server.stop();
+}
+
+#[test]
+fn engine_views_expose_live_state() {
+    let mut engine = SimEngine::new(setup(2, 2, 6), surrogate(41));
+    engine.run_until(2_000.0);
+    assert_eq!(engine.active_agents().count(), 2);
+    assert!(engine.best().is_some());
+    assert!(engine.events_processed() > 0);
+    assert!(!engine.master_log().is_empty());
+    assert_eq!(engine.cluster().total(), 6);
+    engine.run_to_completion();
+    assert!(engine.is_done());
+    assert_eq!(engine.done_agents().len(), 2);
+    assert_eq!(engine.active_agents().count(), 0);
+}
