@@ -26,6 +26,10 @@ pub enum AllocError {
 pub struct Cluster {
     total: usize,
     held: HashMap<Owner, usize>,
+    /// Per-owner allocation ceilings (multi-tenant quota/fair-share
+    /// bookkeeping).  Owners without an entry are unbounded — the
+    /// single-study path never sets caps and behaves exactly as before.
+    caps: HashMap<Owner, usize>,
     /// Total in-use GPUs over time (Fig. 8 green line).
     pub usage_total: TimeIntegrator,
     /// Non-CHOPT usage over time (Fig. 8 yellow line).
@@ -39,6 +43,7 @@ impl Cluster {
         Cluster {
             total: total_gpus,
             held: HashMap::new(),
+            caps: HashMap::new(),
             usage_total: TimeIntegrator::new(),
             usage_external: TimeIntegrator::new(),
             usage_chopt: TimeIntegrator::new(),
@@ -79,11 +84,34 @@ impl Cluster {
             .sum()
     }
 
+    /// Cap `owner`'s total allocation (scheduler quota / borrow target).
+    /// A later, lower cap does not reclaim GPUs already held — the
+    /// scheduler preempts to drain down; the cap only gates new grants.
+    pub fn set_cap(&mut self, owner: Owner, cap: usize) {
+        self.caps.insert(owner, cap);
+    }
+
+    pub fn cap_of(&self, owner: Owner) -> Option<usize> {
+        self.caps.get(&owner).copied()
+    }
+
+    /// GPUs `owner` could allocate right now: cluster headroom, further
+    /// bounded by the owner's cap when one is set.  Schedulers consult
+    /// this *before* asking tuners for work so a capped tenant's decision
+    /// stream is identical to running on a dedicated cluster of cap size.
+    pub fn available_for(&self, owner: Owner) -> usize {
+        let free = self.available();
+        match self.caps.get(&owner) {
+            Some(&cap) => free.min(cap.saturating_sub(self.held_by(owner))),
+            None => free,
+        }
+    }
+
     pub fn allocate(&mut self, owner: Owner, n: usize, now: SimTime) -> Result<(), AllocError> {
-        if n > self.available() {
+        if n > self.available_for(owner) {
             return Err(AllocError::Insufficient {
                 requested: n,
-                available: self.available(),
+                available: self.available_for(owner),
             });
         }
         *self.held.entry(owner).or_insert(0) += n;
@@ -191,6 +219,46 @@ mod tests {
         assert_eq!(c.held_by(Owner::External), 5);
         c.set_external_demand(1, 4.0);
         assert_eq!(c.held_by(Owner::External), 1);
+    }
+
+    #[test]
+    fn caps_bound_per_owner_allocation() {
+        let mut c = Cluster::new(8);
+        c.set_cap(Owner::Chopt(1), 3);
+        assert_eq!(c.available_for(Owner::Chopt(1)), 3);
+        assert_eq!(c.available_for(Owner::Chopt(2)), 8); // uncapped
+        c.allocate(Owner::Chopt(1), 3, 0.0).unwrap();
+        assert_eq!(c.available_for(Owner::Chopt(1)), 0);
+        assert_eq!(
+            c.allocate(Owner::Chopt(1), 1, 1.0),
+            Err(AllocError::Insufficient {
+                requested: 1,
+                available: 0
+            })
+        );
+        // Other owners still see the remaining cluster headroom.
+        assert_eq!(c.available_for(Owner::Chopt(2)), 5);
+        c.allocate(Owner::Chopt(2), 5, 2.0).unwrap();
+        assert_eq!(c.available_for(Owner::Chopt(1)), 0);
+        // Raising the cap re-opens headroom only as the cluster frees up.
+        c.set_cap(Owner::Chopt(1), 6);
+        assert_eq!(c.available_for(Owner::Chopt(1)), 0); // cluster full
+        c.release(Owner::Chopt(2), 2, 3.0).unwrap();
+        assert_eq!(c.available_for(Owner::Chopt(1)), 2);
+    }
+
+    #[test]
+    fn lowering_cap_below_held_does_not_reclaim() {
+        let mut c = Cluster::new(8);
+        c.set_cap(Owner::Chopt(1), 6);
+        c.allocate(Owner::Chopt(1), 6, 0.0).unwrap();
+        c.set_cap(Owner::Chopt(1), 2);
+        // Held stays at 6 (the scheduler preempts to drain); new grants
+        // are refused and available_for saturates at 0 instead of
+        // underflowing.
+        assert_eq!(c.held_by(Owner::Chopt(1)), 6);
+        assert_eq!(c.available_for(Owner::Chopt(1)), 0);
+        assert!(c.allocate(Owner::Chopt(1), 1, 1.0).is_err());
     }
 
     #[test]

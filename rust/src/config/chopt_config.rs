@@ -272,11 +272,22 @@ impl ChoptConfig {
             .get("max_params")
             .and_then(|v| v.as_i64())
             .map(|v| v as u64);
-        let seed = doc
-            .get("seed")
-            .and_then(|v| v.as_i64())
-            .map(|v| v as u64)
-            .unwrap_or(0);
+        // Seed accepts a string or a number: `to_json` writes a string
+        // (JSON numbers are f64 and corrupt seeds ≥ 2^53, which would
+        // silently break snapshot-restore determinism), while
+        // hand-written configs keep using plain numbers.
+        let seed = match doc.get("seed") {
+            None => 0,
+            Some(v) => match v.as_str() {
+                Some(s) => s
+                    .parse::<u64>()
+                    .map_err(|_| ferr("seed", "string seed is not a u64"))?,
+                None => v
+                    .as_i64()
+                    .ok_or_else(|| ferr("seed", "must be a u64 or string"))?
+                    as u64,
+            },
+        };
 
         Ok(ChoptConfig {
             space,
@@ -348,7 +359,8 @@ impl ChoptConfig {
         if let Some(p) = self.max_params {
             doc.set("max_params", Json::Num(p as f64));
         }
-        doc.set("seed", Json::Num(self.seed as f64));
+        // String, not Num: an f64 corrupts seeds ≥ 2^53 (see from_json).
+        doc.set("seed", Json::Str(self.seed.to_string()));
         doc
     }
 }
@@ -566,6 +578,25 @@ mod tests {
         let j = c.to_json().to_string_pretty();
         let c2 = ChoptConfig::from_json_str(&j).unwrap();
         assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn seed_survives_past_f64_precision() {
+        // Regression: seeds ≥ 2^53 used to round-trip through Json::Num
+        // (an f64) and come back rounded, silently breaking the RNG
+        // stream on snapshot restore.
+        let big = (1u64 << 53) + 1;
+        let mut c = ChoptConfig::from_json_str(LISTING1_EXAMPLE).unwrap();
+        c.seed = big;
+        let text = c.to_json().to_string_pretty();
+        let back = ChoptConfig::from_json_str(&text).unwrap();
+        assert_eq!(back.seed, big);
+        // Plain numeric seeds in hand-written configs still parse.
+        let t2 = LISTING1_EXAMPLE.replace(
+            "\"termination\": {\"max_session_number\": 50}",
+            "\"termination\": {\"max_session_number\": 50},\n  \"seed\": 7",
+        );
+        assert_eq!(ChoptConfig::from_json_str(&t2).unwrap().seed, 7);
     }
 
     #[test]

@@ -41,8 +41,14 @@ pub enum AgentEvent {
 }
 
 pub struct Agent {
-    /// CHOPT-session id (cluster tenant id).
+    /// CHOPT-session id, *local* to its scheduler: drives the RNG stream,
+    /// trainer identity, and NSML session ids, so a study scheduled on a
+    /// shared cluster reproduces the exact run it would have had alone.
     pub id: u64,
+    /// Cluster-accounting identity ([`Owner::Chopt`] key).  Equals `id`
+    /// in the single-study engine; the multi-study scheduler assigns a
+    /// study-qualified value so tenants never collide in the allocator.
+    pub tenant: u64,
     pub cfg: ChoptConfig,
     pub tuner: Box<dyn Tuner>,
     pub trainer: Box<dyn Trainer>,
@@ -75,6 +81,7 @@ impl Agent {
         let gpu_target = cfg.max_gpus;
         Agent {
             id,
+            tenant: id,
             cfg,
             tuner,
             trainer,
@@ -183,7 +190,12 @@ impl Agent {
         // Bound on consecutive size-constraint rejections per fill pass.
         let mut rejections = 0usize;
         loop {
-            if self.gpus_in_use() + per > self.gpu_target || cluster.available() < per {
+            // Quota-aware headroom: checked *before* asking the tuner so a
+            // capped tenant's RNG/tuner stream matches a dedicated cluster
+            // of its quota size (uncapped owners see plain availability).
+            if self.gpus_in_use() + per > self.gpu_target
+                || cluster.available_for(Owner::Chopt(self.tenant)) < per
+            {
                 break;
             }
             // 1) Buffered or fresh trial with resume_of (promotion).
@@ -207,6 +219,10 @@ impl Agent {
                 Some(t) if t.resume_of.is_some() => {
                     let rid = t.resume_of.unwrap();
                     if self.resume_session(rid, Some(t.budget), cluster, now, out) {
+                        // Re-register the resume so the tuner keeps the
+                        // session's hparams reachable for later
+                        // promotions (restore-by-replay relies on this).
+                        self.tuner.register(rid, &t);
                         continue;
                     } else {
                         // Promotion target vanished (e.g. GC'd); drop it.
@@ -222,8 +238,15 @@ impl Agent {
                                 continue;
                             }
                         }
-                        // Revival failed; fall through to the buffered trial.
+                        // Revival failed (e.g. the stop pool holds only
+                        // parked rung-barrier sessions); fall through to
+                        // the buffered trial — under the same session-cap
+                        // guard as the empty-stop-pool path.
                         let t = self.pending_trial.take().unwrap();
+                        if !self.may_create_more() {
+                            self.pending_trial = Some(t);
+                            break;
+                        }
                         if !self.launch(t, cluster, now, out) {
                             break;
                         }
@@ -266,7 +289,7 @@ impl Agent {
         out: &mut Vec<ScheduleReq>,
     ) -> bool {
         let per = self.cfg.gpus_per_session.max(1);
-        if cluster.allocate(Owner::Chopt(self.id), per, now).is_err() {
+        if cluster.allocate(Owner::Chopt(self.tenant), per, now).is_err() {
             self.pending_trial = Some(trial);
             return false;
         }
@@ -297,21 +320,33 @@ impl Agent {
         now: SimTime,
         out: &mut Vec<ScheduleReq>,
     ) -> bool {
+        let was_parked = self.pools.is_parked(sid);
+        let was_preempted = self.pools.is_preempted(sid);
+        // Restores the pool flags if the revival has to be rolled back —
+        // losing `parked` would re-expose a rung-barrier session to the
+        // generic revival churn the flag exists to prevent.
+        let undo = |pools: &mut Pools, sid: SessionId| {
+            if was_parked {
+                pools.park_session(sid);
+            } else {
+                pools.stop_session(sid, was_preempted);
+            }
+        };
         if self.pools.locate(sid) == Some(Pool::Live) {
             // pick_revival already moved it; proceed.
         } else if !self.pools.revive(sid) {
             return false;
         }
         let per = self.cfg.gpus_per_session.max(1);
-        if cluster.allocate(Owner::Chopt(self.id), per, now).is_err() {
+        if cluster.allocate(Owner::Chopt(self.tenant), per, now).is_err() {
             // Undo the pool move.
-            self.pools.stop_session(sid, false);
+            undo(&mut self.pools, sid);
             return false;
         }
         let s = self.sessions.get_mut(&sid).expect("session exists");
         if s.transition(SessionStatus::Running, now).is_err() {
-            let _ = cluster.release(Owner::Chopt(self.id), per, now);
-            self.pools.stop_session(sid, false);
+            let _ = cluster.release(Owner::Chopt(self.tenant), per, now);
+            undo(&mut self.pools, sid);
             return false;
         }
         if let Some(b) = new_budget {
@@ -440,7 +475,7 @@ impl Agent {
     fn finish_session(&mut self, sid: SessionId, cluster: &mut Cluster, now: SimTime) {
         let per = self.cfg.gpus_per_session.max(1);
         if self.pools.finish_live(sid) {
-            let _ = cluster.release(Owner::Chopt(self.id), per, now);
+            let _ = cluster.release(Owner::Chopt(self.tenant), per, now);
         }
         if let Some(s) = self.sessions.get_mut(&sid) {
             let _ = s.transition(SessionStatus::Finished, now);
@@ -454,7 +489,7 @@ impl Agent {
         let per = self.cfg.gpus_per_session.max(1);
         let stop_ratio = self.cfg.stop_ratio;
         let pool = self.pools.exit_live(sid, stop_ratio, &mut self.rng, preempted);
-        let _ = cluster.release(Owner::Chopt(self.id), per, now);
+        let _ = cluster.release(Owner::Chopt(self.tenant), per, now);
         self.planned.remove(&sid);
         if let Some(s) = self.sessions.get_mut(&sid) {
             let to = match pool {
@@ -474,15 +509,68 @@ impl Agent {
         self.events.push(ev);
     }
 
-    /// Hyperband rung barrier: park in the stop pool, keep state.
-    fn pause_session(&mut self, sid: SessionId, cluster: &mut Cluster, now: SimTime) {
+    /// Common teardown for live → stop-pool moves that keep state:
+    /// release the GPUs, cancel the planned interval, mark Stopped.
+    /// `parked` routes to the tuner rung barrier (invisible to generic
+    /// revival); otherwise the session is flagged preempted so it
+    /// revives first when GPUs return.
+    fn suspend_session(
+        &mut self,
+        sid: SessionId,
+        parked: bool,
+        cluster: &mut Cluster,
+        now: SimTime,
+    ) -> bool {
         let per = self.cfg.gpus_per_session.max(1);
-        if self.pools.stop_session(sid, false) {
-            let _ = cluster.release(Owner::Chopt(self.id), per, now);
+        let moved = if parked {
+            self.pools.park_session(sid)
+        } else {
+            self.pools.stop_session(sid, true)
+        };
+        if moved {
+            let _ = cluster.release(Owner::Chopt(self.tenant), per, now);
         }
         self.planned.remove(&sid);
         if let Some(s) = self.sessions.get_mut(&sid) {
             let _ = s.transition(SessionStatus::Stopped, now);
+        }
+        moved
+    }
+
+    /// Hyperband rung barrier: park in the stop pool, keep state.  Parked
+    /// sessions are invisible to the generic Stop-and-Go revival — only
+    /// their tuner promotion resumes them (reviving one early made it
+    /// train past its rung and contaminate the next rung's barrier).
+    fn pause_session(&mut self, sid: SessionId, cluster: &mut Cluster, now: SimTime) {
+        self.suspend_session(sid, true, cluster, now);
+    }
+
+    /// Shared Stop-and-Go shrink loop: evict random live victims until
+    /// usage fits `target`, then refill.  `pause_only` chooses the
+    /// victim disposition: `false` is the paper's §3.3.2 split (exit via
+    /// `stop_ratio`, so victims may land in the dead pool); `true`
+    /// always pauses into the stop pool with revival priority.
+    fn shrink_to_target(
+        &mut self,
+        target: usize,
+        pause_only: bool,
+        cluster: &mut Cluster,
+        now: SimTime,
+        out: &mut Vec<ScheduleReq>,
+    ) {
+        self.gpu_target = target;
+        while self.gpus_in_use() > target && self.pools.live_count() > 0 {
+            let victims = self.pools.live().to_vec();
+            let victim = victims[self.rng.index(victims.len())];
+            if pause_only {
+                self.suspend_session(victim, false, cluster, now);
+                self.events.push(AgentEvent::Preempted(victim, Pool::Stop));
+            } else {
+                self.exit_session(victim, cluster, now, true);
+            }
+        }
+        if !self.finished {
+            self.fill(cluster, now, out);
         }
     }
 
@@ -496,17 +584,23 @@ impl Agent {
         now: SimTime,
         out: &mut Vec<ScheduleReq>,
     ) {
-        self.gpu_target = target;
-        let per = self.cfg.gpus_per_session.max(1);
-        while self.gpus_in_use() > target && self.pools.live_count() > 0 {
-            let victims = self.pools.live().to_vec();
-            let victim = victims[self.rng.index(victims.len())];
-            self.exit_session(victim, cluster, now, true);
-        }
-        let _ = per;
-        if !self.finished {
-            self.fill(cluster, now, out);
-        }
+        self.shrink_to_target(target, false, cluster, now, out);
+    }
+
+    /// Cross-study Stop-and-Go reclaim: shrink to `target` by *pausing*
+    /// random live sessions into the stop pool.  Unlike
+    /// [`Agent::set_gpu_target`] (whose `stop_ratio` draw may route
+    /// victims to the dead pool), a cross-tenant preemption never
+    /// destroys a borrower's work — the victim keeps its checkpoint and
+    /// is flagged `preempted`, so it revives first when GPUs return.
+    pub fn preempt_pause_to_target(
+        &mut self,
+        target: usize,
+        cluster: &mut Cluster,
+        now: SimTime,
+        out: &mut Vec<ScheduleReq>,
+    ) {
+        self.shrink_to_target(target, true, cluster, now, out);
     }
 
     /// Stop everything and mark the CHOPT session finished.
@@ -518,7 +612,7 @@ impl Agent {
         let per = self.cfg.gpus_per_session.max(1);
         for sid in live {
             self.pools.finish_live(sid);
-            let _ = cluster.release(Owner::Chopt(self.id), per, now);
+            let _ = cluster.release(Owner::Chopt(self.tenant), per, now);
             if let Some(s) = self.sessions.get_mut(&sid) {
                 let _ = s.transition(SessionStatus::Finished, now);
             }

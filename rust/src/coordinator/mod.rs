@@ -11,6 +11,10 @@
 //! * [`platform`] — the live layer over an engine: structured progress
 //!   events, periodic snapshots, and the view documents `serve --live`
 //!   republishes.
+//! * [`scheduler`] — the multi-tenant study scheduler: N studies (each
+//!   its own config/tuner/RNG/pools) on one shared cluster with
+//!   fair-share quotas and cross-study Stop-and-Go (pause-preemption of
+//!   borrowers).
 //! * [`driver`] — the batch wrapper ([`run_sim`]) used by every
 //!   simulator-backed experiment.
 
@@ -22,12 +26,16 @@ pub mod master;
 pub mod platform;
 pub mod pools;
 pub mod queue;
+pub mod scheduler;
 
 pub use agent::{Agent, AgentEvent, ScheduleReq};
 pub use driver::{run_sim, SimOutcome, SimSetup};
 pub use election::Election;
 pub use engine::{SimEngine, Step};
 pub use master::{master_tick, MasterTickLog, StopAndGoPolicy};
-pub use platform::Platform;
+pub use platform::{MultiPlatform, Platform};
 pub use pools::{Pool, Pools};
 pub use queue::{SessionQueue, Submission};
+pub use scheduler::{
+    MultiOutcome, StudyManifest, StudyResult, StudyScheduler, StudySpec, StudyState,
+};

@@ -29,6 +29,7 @@ use crate::viz::export;
 use super::agent::AgentEvent;
 use super::driver::{SimOutcome, SimSetup};
 use super::engine::SimEngine;
+use super::scheduler::{MultiOutcome, StudyManifest, StudyScheduler, StudySpec};
 
 /// A live run: engine + event log + snapshot cadence + view builders.
 pub struct Platform<'t> {
@@ -307,8 +308,12 @@ impl<'t> Platform<'t> {
                 let s = &agent.sessions[&sid];
                 rows.push(
                     Json::obj()
-                        .with("chopt", Json::Num(agent.id as f64))
-                        .with("session", Json::Num(sid.0 as f64))
+                        // Ids are serialized as strings: session ids pack
+                        // (chopt_id << 32 | counter) into a u64, which an
+                        // f64 corrupts past 2^53 (same class as the trace
+                        // seed PR 1 fixed).
+                        .with("chopt", Json::Str(agent.id.to_string()))
+                        .with("session", Json::Str(sid.0.to_string()))
                         .with("best", Json::Num(best))
                         .with("epochs", Json::Num(s.epochs as f64))
                         .with("status", Json::Str(s.status.name().to_string()))
@@ -416,30 +421,469 @@ impl<'t> Platform<'t> {
     }
 }
 
-/// One pool transition as a structured JSONL record.
+/// The live layer over a [`StudyScheduler`]: the multi-tenant analog of
+/// [`Platform`].
+///
+/// * **per-study JSONL streams** — each study gets its own
+///   `events-<name>.jsonl` (created lazily, so online-submitted studies
+///   stream too); every record carries a `"study"` label on top of the
+///   [`agent_event_json`] fields,
+/// * **merged fair-share document** — [`MultiPlatform::fair_share_doc`]
+///   reports cluster utilization plus per-study quota / target / held /
+///   borrowed accounting (the multi-tenant Fig. 8 view),
+/// * periodic snapshots + [`MultiPlatform::restore`], same replay
+///   contract as the single-study platform.
+pub struct MultiPlatform<'t> {
+    sched: StudyScheduler<'t>,
+    /// Directory for per-study JSONL streams (None = no logging).
+    log_dir: Option<PathBuf>,
+    logs: HashMap<usize, EventLog>,
+    /// Per-study count of agent events already drained.
+    cursors: HashMap<usize, usize>,
+    snapshot_path: Option<PathBuf>,
+    snapshot_every: SimTime,
+    last_snapshot_t: SimTime,
+    /// Progress events emitted over the platform's lifetime.
+    pub progress_events: u64,
+}
+
+impl<'t> MultiPlatform<'t> {
+    pub fn new(
+        manifest: StudyManifest,
+        make_trainer: impl FnMut(usize, u64) -> Box<dyn Trainer> + 't,
+    ) -> MultiPlatform<'t> {
+        MultiPlatform::from_scheduler(StudyScheduler::new(manifest, make_trainer))
+    }
+
+    pub fn from_scheduler(sched: StudyScheduler<'t>) -> MultiPlatform<'t> {
+        MultiPlatform {
+            sched,
+            log_dir: None,
+            logs: HashMap::new(),
+            cursors: HashMap::new(),
+            snapshot_path: None,
+            snapshot_every: 3600.0,
+            last_snapshot_t: 0.0,
+            progress_events: 0,
+        }
+    }
+
+    /// Stream per-study progress into `dir/events-<study>.jsonl`.
+    pub fn with_event_logs(mut self, dir: impl AsRef<Path>) -> std::io::Result<MultiPlatform<'t>> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        self.log_dir = Some(dir.as_ref().to_path_buf());
+        Ok(self)
+    }
+
+    /// Write a scheduler snapshot to `path` every `every` virtual seconds
+    /// (and once more at completion).
+    pub fn with_snapshots(mut self, path: impl AsRef<Path>, every: SimTime) -> MultiPlatform<'t> {
+        self.snapshot_path = Some(path.as_ref().to_path_buf());
+        self.snapshot_every = every.max(1.0);
+        self
+    }
+
+    pub fn scheduler(&self) -> &StudyScheduler<'t> {
+        &self.sched
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.sched.is_done()
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.sched.now()
+    }
+
+    /// Submit a new study to the live run (see
+    /// [`StudyScheduler::submit_study`] for the quota rules).
+    pub fn submit_study(&mut self, spec: StudySpec, at: SimTime) -> Option<SimTime> {
+        self.sched.submit_study(spec, at)
+    }
+
+    /// Advance to virtual time `t`, draining per-study progress after
+    /// every event when logging is enabled (so each record carries the
+    /// virtual time its transition actually happened).
+    pub fn run_until(&mut self, t: SimTime) -> u64 {
+        let n = self.drive_until(t);
+        self.after_advance();
+        n
+    }
+
+    /// Advance by `dt`; if the window is an idle gap, one event past it
+    /// is processed so callers looping on `advance` always make progress
+    /// (a return of 0 means the run is over).
+    pub fn advance(&mut self, dt: SimTime) -> u64 {
+        let mut n = self.drive_until(self.sched.now() + dt);
+        if n == 0
+            && !self.sched.is_done()
+            && matches!(self.sched.step(), super::engine::Step::Advanced(_))
+        {
+            n += 1;
+            self.drain_progress();
+        }
+        self.after_advance();
+        n
+    }
+
+    /// Drive to completion in `chunk`-sized slices (progress/snapshot
+    /// cadence honored throughout).
+    pub fn run_to_completion(&mut self, chunk: SimTime) -> u64 {
+        let chunk = chunk.max(1.0);
+        let mut n = 0;
+        loop {
+            let stepped = self.advance(chunk);
+            n += stepped;
+            if self.sched.is_done() || stepped == 0 {
+                break;
+            }
+        }
+        if self.snapshot_path.is_some() {
+            let _ = self.snapshot_now();
+        }
+        n
+    }
+
+    fn drive_until(&mut self, t: SimTime) -> u64 {
+        if self.log_dir.is_none() {
+            return self.sched.run_until(t);
+        }
+        let mut n = 0;
+        while !self.sched.is_done() {
+            match self.sched.next_event_time() {
+                Some(next) if next <= t => {
+                    if !matches!(self.sched.step(), super::engine::Step::Advanced(_)) {
+                        break;
+                    }
+                    n += 1;
+                    self.drain_progress();
+                }
+                _ => break,
+            }
+        }
+        n
+    }
+
+    /// Consume the platform into the outcome, draining final shutdown
+    /// transitions into the logs first.
+    pub fn into_outcome(mut self) -> MultiOutcome {
+        self.after_advance();
+        let MultiPlatform {
+            sched,
+            log_dir,
+            mut logs,
+            cursors,
+            ..
+        } = self;
+        let outcome = sched.into_outcome();
+        let now = outcome.end_time;
+        if log_dir.is_some() {
+            for (idx, study) in outcome.studies.iter().enumerate() {
+                let Some(agent) = &study.agent else { continue };
+                let seen = cursors.get(&idx).copied().unwrap_or(0);
+                for ev in &agent.events[seen..] {
+                    let doc = agent_event_json(agent.id, ev, now)
+                        .with("study", Json::Str(study.name.clone()));
+                    if let Some(log) = open_study_log(&log_dir, &mut logs, idx, &study.name) {
+                        let _ = log.append(&doc);
+                    }
+                }
+            }
+            for log in logs.values_mut() {
+                let _ = log.flush();
+            }
+        }
+        outcome
+    }
+
+    // -- progress stream ---------------------------------------------------
+
+    fn after_advance(&mut self) {
+        self.drain_progress();
+        for log in self.logs.values_mut() {
+            let _ = log.flush();
+        }
+        self.maybe_snapshot();
+    }
+
+    fn log_for(&mut self, idx: usize, name: &str) -> Option<&mut EventLog> {
+        open_study_log(&self.log_dir, &mut self.logs, idx, name)
+    }
+
+    fn drain_progress(&mut self) {
+        if self.log_dir.is_none() {
+            return;
+        }
+        let now = self.sched.now();
+        let mut fresh: Vec<(usize, String, Json)> = Vec::new();
+        for (idx, st) in self.sched.studies().iter().enumerate() {
+            let Some(agent) = st.agent() else { continue };
+            let seen = self.cursors.get(&idx).copied().unwrap_or(0);
+            for ev in &agent.events[seen..] {
+                fresh.push((
+                    idx,
+                    st.name().to_string(),
+                    agent_event_json(agent.id, ev, now)
+                        .with("study", Json::Str(st.name().to_string())),
+                ));
+            }
+            self.cursors.insert(idx, agent.events.len());
+        }
+        self.progress_events += fresh.len() as u64;
+        for (idx, name, doc) in fresh {
+            if let Some(log) = self.log_for(idx, &name) {
+                let _ = log.append(&doc);
+            }
+        }
+    }
+
+    fn maybe_snapshot(&mut self) {
+        if self.snapshot_path.is_none() {
+            return;
+        }
+        if self.sched.now() - self.last_snapshot_t >= self.snapshot_every {
+            let _ = self.snapshot_now();
+        }
+    }
+
+    /// Write (and return) a snapshot right now.
+    pub fn snapshot_now(&mut self) -> std::io::Result<Json> {
+        let doc = self.sched.snapshot_json();
+        if let Some(path) = &self.snapshot_path {
+            if let Some(parent) = path.parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            std::fs::write(path, doc.to_string_pretty())?;
+        }
+        self.last_snapshot_t = self.sched.now();
+        Ok(doc)
+    }
+
+    /// Rebuild a platform from a snapshot file written by
+    /// [`MultiPlatform::snapshot_now`] (state reproduced by replay).
+    pub fn restore(
+        path: impl AsRef<Path>,
+        make_trainer: impl FnMut(usize, u64) -> Box<dyn Trainer> + 't,
+    ) -> anyhow::Result<MultiPlatform<'t>> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = crate::util::json::parse(&text)?;
+        let sched = StudyScheduler::restore(&doc, make_trainer)?;
+        let mut platform = MultiPlatform::from_scheduler(sched);
+        // Events up to the snapshot were already logged by the original
+        // run; start the cursors at the replayed state.
+        for (idx, st) in platform.sched.studies().iter().enumerate() {
+            if let Some(agent) = st.agent() {
+                platform.cursors.insert(idx, agent.events.len());
+            }
+        }
+        platform.last_snapshot_t = platform.sched.now();
+        Ok(platform)
+    }
+
+    // -- live views --------------------------------------------------------
+
+    /// Merged cluster-utilization / fair-share accounting (the
+    /// multi-tenant Fig. 8 view): who is guaranteed what, who holds what,
+    /// and who is borrowing beyond quota right now.
+    pub fn fair_share_doc(&self) -> Json {
+        let cluster = self.sched.cluster();
+        let studies = self
+            .sched
+            .studies()
+            .iter()
+            .map(|st| {
+                let (held, live, stop, dead, best) = match st.agent() {
+                    Some(a) => (
+                        cluster.held_by(crate::cluster::Owner::Chopt(a.tenant)),
+                        a.pools.live_count(),
+                        a.pools.stop_count(),
+                        a.pools.dead_count(),
+                        a.best().map(|(_, m)| Json::Num(m)).unwrap_or(Json::Null),
+                    ),
+                    None => (0, 0, 0, 0, Json::Null),
+                };
+                Json::obj()
+                    .with("study", Json::Str(st.name().to_string()))
+                    .with("quota", Json::Num(st.quota() as f64))
+                    .with("target", Json::Num(st.target() as f64))
+                    .with("held", Json::Num(held as f64))
+                    .with(
+                        "borrowed",
+                        Json::Num(held.saturating_sub(st.quota()) as f64),
+                    )
+                    .with("pool_live", Json::Num(live as f64))
+                    .with("pool_stop", Json::Num(stop as f64))
+                    .with("pool_dead", Json::Num(dead as f64))
+                    .with("started", Json::Bool(st.started()))
+                    .with("done", Json::Bool(st.done()))
+                    .with("best", best)
+            })
+            .collect();
+        Json::obj()
+            .with("t", Json::Num(self.sched.now()))
+            .with("cluster_gpus", Json::Num(cluster.total() as f64))
+            .with("used", Json::Num(cluster.used() as f64))
+            .with(
+                "external",
+                Json::Num(cluster.held_by(crate::cluster::Owner::External) as f64),
+            )
+            .with("utilization", Json::Num(cluster.utilization()))
+            .with("studies", Json::Arr(studies))
+    }
+
+    /// Live leaderboard for one study (rows shaped like
+    /// [`Platform::leaderboard_doc`], plus the study label).
+    pub fn study_leaderboard_doc(&self, name: &str, k: usize) -> Json {
+        let mut rows: Vec<Json> = Vec::new();
+        if let Some(agent) = self.sched.study(name).and_then(|st| st.agent()) {
+            for &(sid, best) in agent.leaderboard.top(k) {
+                let s = &agent.sessions[&sid];
+                rows.push(
+                    Json::obj()
+                        .with("study", Json::Str(name.to_string()))
+                        .with("chopt", Json::Str(agent.id.to_string()))
+                        .with("session", Json::Str(sid.0.to_string()))
+                        .with("best", Json::Num(best))
+                        .with("epochs", Json::Num(s.epochs as f64))
+                        .with("status", Json::Str(s.status.name().to_string()))
+                        .with("order", Json::Str(agent.cfg.order.name().to_string())),
+                );
+            }
+        }
+        Json::obj()
+            .with("t", Json::Num(self.sched.now()))
+            .with("study", Json::Str(name.to_string()))
+            .with("rows", Json::Arr(rows))
+    }
+
+    /// Sessions document for one study in the `SessionStore` format.
+    pub fn study_sessions_doc(&self, name: &str) -> Json {
+        let mut store = SessionStore::new();
+        if let Some(agent) = self.sched.study(name).and_then(|st| st.agent()) {
+            let mut ss: Vec<&NsmlSession> = agent.sessions.values().collect();
+            ss.sort_by_key(|s| s.id);
+            store.put_run(
+                &format!("{name}-chopt-{}", agent.id),
+                ss.into_iter().cloned().collect(),
+            );
+        }
+        store.to_json()
+    }
+
+    /// One-object run status across all studies.
+    pub fn status_doc(&self) -> Json {
+        let sched = &self.sched;
+        let (started, done) = sched.studies().iter().fold((0, 0), |acc, st| {
+            (
+                acc.0 + usize::from(st.started()),
+                acc.1 + usize::from(st.done()),
+            )
+        });
+        Json::obj()
+            .with("t", Json::Num(sched.now()))
+            .with("events_processed", Json::Num(sched.events_processed() as f64))
+            .with("done", Json::Bool(sched.is_done()))
+            .with("studies", Json::Num(sched.studies().len() as f64))
+            .with("studies_started", Json::Num(started as f64))
+            .with("studies_done", Json::Num(done as f64))
+            .with("utilization", Json::Num(sched.cluster().utilization()))
+            .with("progress_events", Json::Num(self.progress_events as f64))
+    }
+}
+
+/// Lazily open `dir/events-<study>.jsonl` (free function so
+/// [`MultiPlatform::into_outcome`] can use it after `sched` is moved).
+fn open_study_log<'a>(
+    dir: &Option<PathBuf>,
+    logs: &'a mut HashMap<usize, EventLog>,
+    idx: usize,
+    name: &str,
+) -> Option<&'a mut EventLog> {
+    let dir = dir.as_ref()?;
+    if !logs.contains_key(&idx) {
+        let log = EventLog::open(dir.join(format!("events-{name}.jsonl"))).ok()?;
+        logs.insert(idx, log);
+    }
+    logs.get_mut(&idx)
+}
+
+/// One pool transition as a structured JSONL record.  Agent/session ids
+/// are serialized as **strings**: session ids pack `(chopt_id << 32 |
+/// counter)` into a u64, and routing that through `Json::Num` (an f64)
+/// silently corrupts values past 2^53 — the same corruption class PR 1
+/// fixed for trace seeds.  The in-repo readers
+/// (`EventLog::read_all`-based tests and the viz routes) treat these
+/// fields as opaque labels, so the representation change is safe.
 fn agent_event_json(agent_id: u64, ev: &AgentEvent, now: SimTime) -> Json {
+    let sid_str = |sid: &crate::nsml::SessionId| Json::Str(sid.0.to_string());
     let base = |name: &str| {
         Json::obj()
             .with("t", Json::Num(now))
-            .with("chopt", Json::Num(agent_id as f64))
+            .with("chopt", Json::Str(agent_id.to_string()))
             .with("ev", Json::Str(name.to_string()))
     };
     match ev {
-        AgentEvent::Launched(sid) => base("launched").with("session", Json::Num(sid.0 as f64)),
-        AgentEvent::Revived(sid) => base("revived").with("session", Json::Num(sid.0 as f64)),
+        AgentEvent::Launched(sid) => base("launched").with("session", sid_str(sid)),
+        AgentEvent::Revived(sid) => base("revived").with("session", sid_str(sid)),
         AgentEvent::EarlyStopped(sid, pool) => base("early_stopped")
-            .with("session", Json::Num(sid.0 as f64))
+            .with("session", sid_str(sid))
             .with("pool", Json::Str(format!("{pool:?}").to_lowercase())),
         AgentEvent::Preempted(sid, pool) => base("preempted")
-            .with("session", Json::Num(sid.0 as f64))
+            .with("session", sid_str(sid))
             .with("pool", Json::Str(format!("{pool:?}").to_lowercase())),
-        AgentEvent::Finished(sid) => base("finished").with("session", Json::Num(sid.0 as f64)),
+        AgentEvent::Finished(sid) => base("finished").with("session", sid_str(sid)),
         AgentEvent::Mutated { victim, source } => base("mutated")
-            .with("session", Json::Num(victim.0 as f64))
-            .with("source", Json::Num(source.0 as f64)),
-        AgentEvent::Evicted(sid) => base("evicted").with("session", Json::Num(sid.0 as f64)),
+            .with("session", sid_str(victim))
+            .with("source", sid_str(source)),
+        AgentEvent::Evicted(sid) => base("evicted").with("session", sid_str(sid)),
         AgentEvent::Terminated(reason) => {
             base("terminated").with("reason", Json::Str(reason.to_string()))
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pools::Pool;
+    use crate::nsml::SessionId;
+
+    /// Regression for the u64-through-f64 id corruption: a session id
+    /// above 2^53 must survive the progress stream byte-exactly.
+    #[test]
+    fn event_stream_ids_survive_past_f64_precision() {
+        // (chopt_id << 32 | counter) with chopt_id = 2^22 lands at
+        // 2^54 + 1 — one past f64's contiguous-integer range, so the old
+        // Json::Num encoding would have silently rounded it.
+        let big = (1u64 << 54) + 1;
+        let sid = SessionId(big);
+        for ev in [
+            AgentEvent::Launched(sid),
+            AgentEvent::Revived(sid),
+            AgentEvent::EarlyStopped(sid, Pool::Stop),
+            AgentEvent::Preempted(sid, Pool::Stop),
+            AgentEvent::Finished(sid),
+            AgentEvent::Evicted(sid),
+        ] {
+            let doc = agent_event_json(big, &ev, 1.0);
+            let text = doc.to_string_compact();
+            let back = crate::util::json::parse(&text).unwrap();
+            let session = back.get("session").and_then(|v| v.as_str()).unwrap();
+            assert_eq!(session.parse::<u64>().unwrap(), big, "{ev:?}");
+            let chopt = back.get("chopt").and_then(|v| v.as_str()).unwrap();
+            assert_eq!(chopt.parse::<u64>().unwrap(), big);
+        }
+        let doc = agent_event_json(
+            big,
+            &AgentEvent::Mutated {
+                victim: sid,
+                source: SessionId(big + 1),
+            },
+            1.0,
+        );
+        assert_eq!(
+            doc.get("source").and_then(|v| v.as_str()),
+            Some(format!("{}", big + 1).as_str())
+        );
     }
 }

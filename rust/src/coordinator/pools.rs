@@ -25,6 +25,13 @@ pub struct Pools {
     /// Subset of `stop` that was stopped by Stop-and-Go preemption (these
     /// get revival priority over tuner-early-stopped sessions).
     preempted: HashSet<SessionId>,
+    /// Subset of `stop` parked by the tuner at a rung barrier
+    /// (Hyperband `Pause`).  Parked sessions wait for an explicit
+    /// promotion ([`Pools::revive`]); the generic Stop-and-Go revival
+    /// ([`Pools::pick_revival`]) must skip them — reviving one outside
+    /// tuner control made it train past its rung and contaminate the
+    /// next rung's barrier.
+    parked: HashSet<SessionId>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -95,6 +102,26 @@ impl Pools {
         }
     }
 
+    /// Move live -> stop as a tuner rung barrier: parked until an
+    /// explicit [`Pools::revive`] promotion; invisible to
+    /// [`Pools::pick_revival`].
+    pub fn park_session(&mut self, id: SessionId) -> bool {
+        if self.stop_session(id, false) {
+            self.parked.insert(id);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn is_parked(&self, id: SessionId) -> bool {
+        self.parked.contains(&id)
+    }
+
+    pub fn is_preempted(&self, id: SessionId) -> bool {
+        self.preempted.contains(&id)
+    }
+
     /// Move live -> dead.
     pub fn kill_live(&mut self, id: SessionId) -> bool {
         if let Some(i) = self.live.iter().position(|&s| s == id) {
@@ -111,6 +138,7 @@ impl Pools {
         if let Some(i) = self.stop.iter().position(|&s| s == id) {
             self.stop.remove(i);
             self.preempted.remove(&id);
+            self.parked.remove(&id);
             self.dead.push(id);
             true
         } else {
@@ -142,14 +170,23 @@ impl Pools {
 
     /// Pick a session to revive: preempted sessions first (FIFO), then the
     /// general stop pool (random — the paper's future work notes smarter
-    /// policies; random is what CHOPT ships).
+    /// policies; random is what CHOPT ships).  Parked sessions (tuner
+    /// rung barriers) are never picked — they resume only via their
+    /// promotion ([`Pools::revive`]).
     pub fn pick_revival(&mut self, rng: &mut Rng) -> Option<SessionId> {
         let id = if let Some(&id) = self.stop.iter().find(|id| self.preempted.contains(id)) {
             id
-        } else if self.stop.is_empty() {
-            return None;
         } else {
-            self.stop[rng.index(self.stop.len())]
+            let free: Vec<SessionId> = self
+                .stop
+                .iter()
+                .copied()
+                .filter(|id| !self.parked.contains(id))
+                .collect();
+            if free.is_empty() {
+                return None;
+            }
+            free[rng.index(free.len())]
         };
         let i = self.stop.iter().position(|&s| s == id).unwrap();
         self.stop.remove(i);
@@ -163,6 +200,7 @@ impl Pools {
         if let Some(i) = self.stop.iter().position(|&s| s == id) {
             self.stop.remove(i);
             self.preempted.remove(&id);
+            self.parked.remove(&id);
             self.live.push(id);
             true
         } else {
@@ -183,6 +221,11 @@ impl Pools {
         for id in &self.preempted {
             if !self.stop.contains(id) {
                 return Err(format!("{id} marked preempted but not in stop pool"));
+            }
+        }
+        for id in &self.parked {
+            if !self.stop.contains(id) {
+                return Err(format!("{id} marked parked but not in stop pool"));
             }
         }
         Ok(())
@@ -259,5 +302,33 @@ mod tests {
         let mut p = Pools::new();
         let mut rng = Rng::new(3);
         assert!(p.pick_revival(&mut rng).is_none());
+    }
+
+    #[test]
+    fn parked_sessions_skip_generic_revival() {
+        let mut p = Pools::new();
+        let mut rng = Rng::new(4);
+        for i in 0..3 {
+            p.add_live(SessionId(i));
+        }
+        p.park_session(SessionId(0)); // tuner rung barrier
+        p.park_session(SessionId(1));
+        p.stop_session(SessionId(2), false); // ordinary early stop
+        assert!(p.is_parked(SessionId(0)));
+        // Generic revival must only ever see the non-parked session.
+        for _ in 0..20 {
+            let got = p.pick_revival(&mut rng).unwrap();
+            assert_eq!(got, SessionId(2));
+            p.stop_session(SessionId(2), false);
+        }
+        p.check_invariants().unwrap();
+        // With only parked sessions left, generic revival finds nothing…
+        assert!(p.kill_stopped(SessionId(2)));
+        assert!(p.pick_revival(&mut rng).is_none());
+        // …but an explicit promotion still works and clears the flag.
+        assert!(p.revive(SessionId(0)));
+        assert!(!p.is_parked(SessionId(0)));
+        assert_eq!(p.locate(SessionId(0)), Some(Pool::Live));
+        p.check_invariants().unwrap();
     }
 }

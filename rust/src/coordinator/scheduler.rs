@@ -1,0 +1,980 @@
+//! Multi-tenant study scheduler: N independent studies on one shared
+//! cluster (the paper's §3.3 sharing story, across *tenants*).
+//!
+//! PR 1 made the engine re-entrant but still single-study: one
+//! [`SimEngine`] owned one cluster and one batch of configs.  The
+//! `StudyScheduler` multiplexes many **studies** — each with its own
+//! [`ChoptConfig`], tuner, RNG stream, trainer, and session pools — onto
+//! one shared [`Cluster`], with:
+//!
+//! * **fair-share quotas** — every study is guaranteed `quota` GPUs (the
+//!   manifest validates Σ quota ≤ cluster size).  Enforced through
+//!   per-tenant caps in the allocator, checked *before* the tuner is
+//!   asked for work, so a study's decision stream on the shared cluster
+//!   is bit-identical to running alone on a dedicated cluster of its
+//!   quota size (the multi-tenant determinism contract, verified in
+//!   `rust/tests/multi_study.rs`);
+//! * **cross-study Stop-and-Go** — with `borrow: true`, a study whose
+//!   peers are idle may exceed its quota (opportunistic reclaim,
+//!   bounded by the policy's bonus cap); when an under-quota study
+//!   returns, the borrower is preempted back down by *pausing* sessions
+//!   into its stop pool ([`Agent::preempt_pause_to_target`]) — work is
+//!   suspended, never destroyed;
+//! * **deterministic interleave** — one shared event queue with
+//!   study-tagged events and FIFO tie-breaking; per-study event
+//!   subsequences are independent of how other studies interleave;
+//! * **snapshot / restore by replay** — like the engine, a snapshot
+//!   records the manifest plus online study submissions and the event
+//!   count; [`StudyScheduler::restore`] replays to the exact state.
+//!
+//! Identity: each study's agent keeps *local* id 1 (RNG/trainer/session
+//! ids match a solo run) while its cluster identity is the
+//! study-qualified [`Agent::tenant`], so tenants never collide in the
+//! allocator and merged platform documents label rows by study name.
+//!
+//! [`SimEngine`]: super::engine::SimEngine
+
+use crate::cluster::{Cluster, ExternalLoadTrace, Owner};
+use crate::config::ChoptConfig;
+use crate::events::{EventQueue, SimTime};
+use crate::nsml::SessionId;
+use crate::trainer::Trainer;
+use crate::util::json::Value as Json;
+
+use super::agent::{Agent, ScheduleReq};
+use super::master::StopAndGoPolicy;
+
+/// One study in a multi-tenant manifest.
+#[derive(Debug, Clone)]
+pub struct StudySpec {
+    pub name: String,
+    pub config: ChoptConfig,
+    /// Guaranteed GPU share.  Resolved at parse time (unspecified studies
+    /// split the unreserved remainder evenly).
+    pub quota: usize,
+    /// Virtual time the study joins the cluster.
+    pub submit_at: SimTime,
+}
+
+impl StudySpec {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("name", Json::Str(self.name.clone()))
+            .with("quota", Json::Num(self.quota as f64))
+            .with("submit_at", Json::Num(self.submit_at))
+            .with("config", self.config.to_json())
+    }
+
+    pub fn from_json(doc: &Json, index: usize) -> anyhow::Result<StudySpec> {
+        let name = doc
+            .get("name")
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| format!("study-{index}"));
+        let config = ChoptConfig::from_json(
+            doc.get("config")
+                .ok_or_else(|| anyhow::anyhow!("study '{name}' missing 'config'"))?,
+        )?;
+        let quota = doc.get("quota").and_then(|v| v.as_usize()).unwrap_or(0);
+        let submit_at = doc
+            .get("submit_at")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0)
+            .max(0.0);
+        Ok(StudySpec {
+            name,
+            config,
+            quota,
+            submit_at,
+        })
+    }
+}
+
+/// The `chopt multi` manifest: a shared cluster plus a `studies: [...]`
+/// array.  See `README.md` for a worked two-study example.
+#[derive(Debug, Clone)]
+pub struct StudyManifest {
+    pub cluster_gpus: usize,
+    pub studies: Vec<StudySpec>,
+    pub policy: StopAndGoPolicy,
+    /// Optional non-CHOPT background load over the whole cluster.
+    pub trace: Option<ExternalLoadTrace>,
+    pub master_period: SimTime,
+    pub horizon: SimTime,
+    /// Work-conserving mode: studies may borrow idle peers' quota
+    /// (bounded by the policy bonus cap) and are pause-preempted back
+    /// when the owner returns.  `false` gives hard isolation — every
+    /// study behaves exactly as it would on a dedicated quota-size
+    /// cluster.
+    pub borrow: bool,
+}
+
+impl StudyManifest {
+    pub fn load(path: &str) -> anyhow::Result<StudyManifest> {
+        let text = std::fs::read_to_string(path)?;
+        StudyManifest::from_json_str(&text)
+    }
+
+    pub fn from_json_str(text: &str) -> anyhow::Result<StudyManifest> {
+        let doc = crate::util::json::parse(text)?;
+        StudyManifest::from_json(&doc)
+    }
+
+    pub fn from_json(doc: &Json) -> anyhow::Result<StudyManifest> {
+        let cluster_gpus = doc
+            .get("cluster_gpus")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing numeric 'cluster_gpus'"))?;
+        let studies_doc = doc
+            .get("studies")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'studies' array"))?;
+        if studies_doc.is_empty() {
+            anyhow::bail!("manifest 'studies' must not be empty");
+        }
+        let mut studies = studies_doc
+            .iter()
+            .enumerate()
+            .map(|(i, s)| StudySpec::from_json(s, i))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        resolve_quotas(cluster_gpus, &mut studies)?;
+        let policy = doc
+            .get("policy")
+            .map(StopAndGoPolicy::from_json)
+            .transpose()?
+            .unwrap_or_default();
+        let trace = match doc.get("trace") {
+            None | Some(Json::Null) => None,
+            Some(t) => Some(ExternalLoadTrace::from_json(t)?),
+        };
+        Ok(StudyManifest {
+            cluster_gpus,
+            studies,
+            policy,
+            trace,
+            master_period: doc
+                .get("master_period")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(60.0),
+            horizon: doc
+                .get("horizon")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(400.0 * 24.0 * 3600.0),
+            borrow: doc.get("borrow").and_then(|v| v.as_bool()).unwrap_or(true),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("cluster_gpus", Json::Num(self.cluster_gpus as f64))
+            .with("master_period", Json::Num(self.master_period))
+            .with("horizon", Json::Num(self.horizon))
+            .with("borrow", Json::Bool(self.borrow))
+            .with("policy", self.policy.to_json())
+            .with(
+                "trace",
+                self.trace.as_ref().map(|t| t.to_json()).unwrap_or(Json::Null),
+            )
+            .with(
+                "studies",
+                Json::Arr(self.studies.iter().map(|s| s.to_json()).collect()),
+            )
+    }
+}
+
+/// Fill in unspecified quotas (even split of the unreserved remainder)
+/// and validate the fair-share guarantee is satisfiable.
+fn resolve_quotas(cluster_gpus: usize, studies: &mut [StudySpec]) -> anyhow::Result<()> {
+    let explicit: usize = studies.iter().map(|s| s.quota).sum();
+    if explicit > cluster_gpus {
+        anyhow::bail!(
+            "study quotas sum to {explicit} but the cluster has only {cluster_gpus} GPUs"
+        );
+    }
+    let unspecified = studies.iter().filter(|s| s.quota == 0).count();
+    if unspecified > 0 {
+        let share = (cluster_gpus - explicit) / unspecified;
+        if share == 0 {
+            anyhow::bail!(
+                "{unspecified} studies without quotas but only {} unreserved GPUs",
+                cluster_gpus - explicit
+            );
+        }
+        for s in studies.iter_mut().filter(|s| s.quota == 0) {
+            s.quota = share;
+        }
+    }
+    let mut names = std::collections::HashSet::new();
+    for s in studies.iter() {
+        if !valid_study_name(&s.name) {
+            anyhow::bail!(
+                "study name '{}' is invalid (allowed: [A-Za-z0-9._-], no leading dot)",
+                s.name
+            );
+        }
+        if !names.insert(s.name.as_str()) {
+            anyhow::bail!("duplicate study name '{}'", s.name);
+        }
+    }
+    Ok(())
+}
+
+/// Study names end up in file paths (`events-<name>.jsonl`,
+/// `sessions-<name>.json`) and URL routes, so restrict them to a safe
+/// charset — no separators, no `..`, no leading dot.
+fn valid_study_name(name: &str) -> bool {
+    !name.is_empty()
+        && !name.starts_with('.')
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-'))
+}
+
+/// Study-tagged simulation events.
+#[derive(Debug, Clone, Copy)]
+enum SEv {
+    /// A training interval of (study, session) completed.
+    Interval { study: usize, sid: SessionId },
+    /// Shared fair-share / Stop-and-Go control tick.
+    MasterTick,
+    /// An online study submission (index into `online`) arrives.
+    Submit { idx: usize },
+}
+
+/// A study submitted while the scheduler was live (snapshot/replay input).
+#[derive(Debug, Clone)]
+struct OnlineStudy {
+    spec: StudySpec,
+    at: SimTime,
+    after_events: u64,
+}
+
+/// Per-study runtime state.
+pub struct StudyState {
+    name: String,
+    config: ChoptConfig,
+    quota: usize,
+    submit_at: SimTime,
+    /// `None` until `submit_at` passes a master tick.
+    agent: Option<Agent>,
+    /// Last fair-share target handed to the study (quota ± borrow).
+    last_target: usize,
+}
+
+impl StudyState {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn quota(&self) -> usize {
+        self.quota
+    }
+
+    /// Last fair-share target (0 before activation / after completion).
+    pub fn target(&self) -> usize {
+        self.last_target
+    }
+
+    pub fn agent(&self) -> Option<&Agent> {
+        self.agent.as_ref()
+    }
+
+    pub fn started(&self) -> bool {
+        self.agent.is_some()
+    }
+
+    pub fn done(&self) -> bool {
+        self.agent.as_ref().map(|a| a.finished).unwrap_or(false)
+    }
+}
+
+/// Final state of one study after [`StudyScheduler::into_outcome`].
+pub struct StudyResult {
+    pub name: String,
+    pub quota: usize,
+    /// `None` if the study never activated (submit_at past the horizon).
+    pub agent: Option<Agent>,
+}
+
+/// Results of a multi-study run.
+pub struct MultiOutcome {
+    pub studies: Vec<StudyResult>,
+    pub cluster: Cluster,
+    pub end_time: SimTime,
+    pub events_processed: u64,
+}
+
+impl MultiOutcome {
+    pub fn study(&self, name: &str) -> Option<&StudyResult> {
+        self.studies.iter().find(|s| s.name == name)
+    }
+}
+
+/// The multi-tenant scheduler.  See the module docs.
+pub struct StudyScheduler<'t> {
+    cluster: Cluster,
+    manifest: StudyManifest,
+    studies: Vec<StudyState>,
+    evq: EventQueue<SEv>,
+    /// Online study submissions in arrival order (snapshot/replay input).
+    online: Vec<OnlineStudy>,
+    submits_pending: usize,
+    ticks_pending: usize,
+    completed: bool,
+    horizon_reached: bool,
+    make_trainer: Box<dyn FnMut(usize, u64) -> Box<dyn Trainer> + 't>,
+}
+
+impl<'t> StudyScheduler<'t> {
+    /// Build a scheduler: activate studies with `submit_at == 0`, fill
+    /// them within their quotas, and arm the shared master-tick chain —
+    /// the same bootstrap a solo engine performs per study.
+    ///
+    /// `make_trainer(study_index, chopt_id)` builds one trainer per
+    /// study; `chopt_id` is the study-*local* id (1 for the first agent),
+    /// matching what the same factory would see in a solo run.
+    pub fn new(
+        manifest: StudyManifest,
+        make_trainer: impl FnMut(usize, u64) -> Box<dyn Trainer> + 't,
+    ) -> StudyScheduler<'t> {
+        let studies = manifest
+            .studies
+            .iter()
+            .map(|spec| StudyState {
+                name: spec.name.clone(),
+                config: spec.config.clone(),
+                quota: spec.quota,
+                submit_at: spec.submit_at,
+                agent: None,
+                last_target: 0,
+            })
+            .collect();
+        let mut sched = StudyScheduler {
+            cluster: Cluster::new(manifest.cluster_gpus),
+            manifest,
+            studies,
+            evq: EventQueue::new(),
+            online: Vec::new(),
+            submits_pending: 0,
+            ticks_pending: 0,
+            completed: false,
+            horizon_reached: false,
+            make_trainer: Box::new(make_trainer),
+        };
+        sched.activate_ready(0.0);
+        sched.evq.schedule_at(0.0, SEv::MasterTick);
+        sched.ticks_pending += 1;
+        sched
+    }
+
+    // -- observability -----------------------------------------------------
+
+    pub fn now(&self) -> SimTime {
+        self.evq.now()
+    }
+
+    pub fn events_processed(&self) -> u64 {
+        self.evq.processed()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.completed || self.horizon_reached || self.evq.is_empty()
+    }
+
+    pub fn horizon_reached(&self) -> bool {
+        self.horizon_reached
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    pub fn manifest(&self) -> &StudyManifest {
+        &self.manifest
+    }
+
+    pub fn studies(&self) -> &[StudyState] {
+        &self.studies
+    }
+
+    pub fn study(&self, name: &str) -> Option<&StudyState> {
+        self.studies.iter().find(|s| s.name == name)
+    }
+
+    /// Virtual time of the next pending event, if any.
+    pub fn next_event_time(&self) -> Option<SimTime> {
+        self.evq.peek_time()
+    }
+
+    // -- drivers -----------------------------------------------------------
+
+    /// Process exactly one event (see [`super::engine::Step`]).
+    pub fn step(&mut self) -> super::engine::Step {
+        use super::engine::Step;
+        if self.completed || self.horizon_reached {
+            return Step::Idle;
+        }
+        let Some((t, ev)) = self.evq.pop() else {
+            self.completed = true;
+            return Step::Idle;
+        };
+        if t > self.manifest.horizon {
+            self.horizon_reached = true;
+            return Step::HorizonReached;
+        }
+        self.dispatch(t, ev);
+        if self.all_done() {
+            self.completed = true;
+        }
+        Step::Advanced(t)
+    }
+
+    /// Process every event with timestamp `<= t`; returns events popped.
+    pub fn run_until(&mut self, t: SimTime) -> u64 {
+        use super::engine::Step;
+        let mut n = 0;
+        while !self.completed && !self.horizon_reached {
+            match self.evq.peek_time() {
+                Some(next) if next <= t => {
+                    if !matches!(self.step(), Step::Advanced(_)) {
+                        break;
+                    }
+                    n += 1;
+                }
+                _ => break,
+            }
+        }
+        n
+    }
+
+    /// Drive until every study finishes (or the horizon passes).
+    pub fn run_to_completion(&mut self) -> u64 {
+        use super::engine::Step;
+        let mut n = 0;
+        while matches!(self.step(), Step::Advanced(_)) {
+            n += 1;
+        }
+        n
+    }
+
+    /// Submit a new study while the scheduler is live.  The spec must
+    /// carry an explicit quota that still fits next to the existing
+    /// guarantees; `at` is clamped to now.  Returns the effective submit
+    /// time, or `None` if the quota does not fit or the horizon has been
+    /// reached.
+    pub fn submit_study(&mut self, spec: StudySpec, at: SimTime) -> Option<SimTime> {
+        if self.horizon_reached || spec.quota == 0 || !valid_study_name(&spec.name) {
+            return None;
+        }
+        let reserved: usize = self.studies.iter().map(|s| s.quota).sum();
+        if reserved + spec.quota > self.cluster.total() {
+            return None;
+        }
+        if self.studies.iter().any(|s| s.name == spec.name) {
+            return None;
+        }
+        let at = at.max(self.evq.now());
+        let mut spec = spec;
+        spec.submit_at = at;
+        let idx = self.online.len();
+        self.online.push(OnlineStudy {
+            spec: spec.clone(),
+            at,
+            after_events: self.evq.processed(),
+        });
+        self.studies.push(StudyState {
+            name: spec.name.clone(),
+            config: spec.config,
+            quota: spec.quota,
+            submit_at: at,
+            agent: None,
+            last_target: 0,
+        });
+        self.evq.schedule_at(at, SEv::Submit { idx });
+        self.submits_pending += 1;
+        self.completed = false;
+        Some(at)
+    }
+
+    // -- event dispatch ----------------------------------------------------
+
+    fn all_done(&self) -> bool {
+        self.submits_pending == 0
+            && self
+                .studies
+                .iter()
+                .all(|s| s.agent.as_ref().map(|a| a.finished).unwrap_or(false))
+    }
+
+    fn any_alive(&self) -> bool {
+        self.submits_pending > 0
+            || self
+                .studies
+                .iter()
+                .any(|s| s.agent.as_ref().map(|a| !a.finished).unwrap_or(true))
+    }
+
+    fn schedule_reqs(&mut self, study: usize, reqs: Vec<ScheduleReq>) {
+        for r in reqs {
+            self.evq.schedule_in(
+                r.seconds,
+                SEv::Interval {
+                    study,
+                    sid: r.session,
+                },
+            );
+        }
+    }
+
+    fn dispatch(&mut self, t: SimTime, ev: SEv) {
+        match ev {
+            SEv::Interval { study, sid } => self.on_interval(t, study, sid),
+            SEv::MasterTick => self.on_master_tick(t),
+            SEv::Submit { idx } => self.on_submit(t, idx),
+        }
+    }
+
+    fn on_interval(&mut self, t: SimTime, study: usize, sid: SessionId) {
+        let mut reqs: Vec<ScheduleReq> = Vec::new();
+        {
+            let Some(agent) = self.studies[study].agent.as_mut() else {
+                return;
+            };
+            agent.on_interval_done(sid, &mut self.cluster, t, &mut reqs);
+        }
+        self.schedule_reqs(study, reqs);
+    }
+
+    /// The study's own Stop-and-Go target, exactly as the master of a
+    /// dedicated quota-size cluster would compute it — the anchor of the
+    /// multi-tenant determinism contract.
+    fn solo_target(&self, study: usize) -> usize {
+        let st = &self.studies[study];
+        self.manifest
+            .policy
+            .targets(st.quota, 0, &[st.config.max_gpus])
+            .first()
+            .copied()
+            .unwrap_or(st.config.max_gpus)
+    }
+
+    /// Cross-study reconciliation of per-study solo targets against the
+    /// real shared cluster: with `borrow` the policy redistributes idle
+    /// headroom (bounded bonus) or shrinks proportionally under external
+    /// load; without it, targets pass through untouched unless external
+    /// load overflows the unreserved capacity.  `active` maps each solo
+    /// entry back to its study index.
+    fn reconcile_targets(&self, external: usize, active: &[usize], solo: &[usize]) -> Vec<usize> {
+        let total = self.cluster.total();
+        let sum: usize = solo.iter().sum();
+        if self.manifest.borrow || external + sum > total {
+            let mut finals = self.manifest.policy.targets(total, external, solo);
+            // The bonus cap is relative to each study's *configured*
+            // base (max_gpus), but the reconcile pass sees the already-
+            // bonused solo targets as bases — without this clamp the
+            // two-stage computation compounds max_bonus_factor (a
+            // quota-8/max_gpus-4 study on an idle 16-GPU cluster would
+            // reach 4× its configured limit instead of 2×).
+            let bonus = self.manifest.policy.max_bonus_factor;
+            for (k, f) in finals.iter_mut().enumerate() {
+                let base = self.studies[active[k]].config.max_gpus;
+                let cap = ((base as f64) * bonus).ceil() as usize;
+                *f = (*f).min(cap.max(base));
+            }
+            finals
+        } else {
+            solo.to_vec()
+        }
+    }
+
+    fn on_master_tick(&mut self, t: SimTime) {
+        self.ticks_pending = self.ticks_pending.saturating_sub(1);
+        // Activate due studies *before* reconciling targets so a
+        // newcomer counts in this tick's fair share: a borrowing peer is
+        // preempted on the same tick the newcomer arrives, not one
+        // master period later.
+        self.activate_ready(t);
+        let external = self
+            .manifest
+            .trace
+            .as_ref()
+            .map(|tr| tr.demand(t))
+            .unwrap_or(0);
+        self.cluster.set_external_demand(external, t);
+        let active: Vec<usize> = (0..self.studies.len())
+            .filter(|&i| {
+                self.studies[i]
+                    .agent
+                    .as_ref()
+                    .map(|a| !a.finished)
+                    .unwrap_or(false)
+            })
+            .collect();
+        let solo: Vec<usize> = active.iter().map(|&i| self.solo_target(i)).collect();
+        let finals = self.reconcile_targets(external, &active, &solo);
+        // Two-phase application: all shrinks (preempting borrowers)
+        // first, then all grows — so GPUs reclaimed this tick are free
+        // before any study fills, regardless of study index order.
+        let mut grows: Vec<(usize, usize)> = Vec::new();
+        for (k, &i) in active.iter().enumerate() {
+            let target = finals.get(k).copied().unwrap_or(self.studies[i].quota);
+            let mut reqs: Vec<ScheduleReq> = Vec::new();
+            {
+                let st = &mut self.studies[i];
+                let agent = st.agent.as_mut().unwrap();
+                agent.check_termination(&mut self.cluster, t);
+                if agent.finished {
+                    st.last_target = 0;
+                    continue;
+                }
+                st.last_target = target;
+                // The cap gates *new* grants: at least the quota (the
+                // guarantee), raised to the target when borrowing.
+                self.cluster
+                    .set_cap(Owner::Chopt(agent.tenant), target.max(st.quota));
+                if target < agent.gpus_in_use() {
+                    // Borrowed GPUs being reclaimed by an under-quota
+                    // peer: pause, never kill.
+                    agent.preempt_pause_to_target(target, &mut self.cluster, t, &mut reqs);
+                } else {
+                    grows.push((i, target));
+                }
+            }
+            self.schedule_reqs(i, reqs);
+        }
+        for (i, target) in grows {
+            let mut reqs: Vec<ScheduleReq> = Vec::new();
+            {
+                let agent = self.studies[i].agent.as_mut().unwrap();
+                if !agent.finished {
+                    agent.set_gpu_target(target, &mut self.cluster, t, &mut reqs);
+                }
+            }
+            self.schedule_reqs(i, reqs);
+        }
+        if self.any_alive() {
+            self.evq
+                .schedule_in(self.manifest.master_period, SEv::MasterTick);
+            self.ticks_pending += 1;
+        }
+    }
+
+    /// Activate studies whose submit time has arrived: build the agent
+    /// (local id 1, study-qualified tenant), cap it at its quota, and
+    /// fill — the same bootstrap a solo engine runs at t = 0.
+    fn activate_ready(&mut self, now: SimTime) {
+        for i in 0..self.studies.len() {
+            if self.studies[i].agent.is_some() || self.studies[i].submit_at > now {
+                continue;
+            }
+            let local_id = 1u64;
+            let tenant = (((i + 1) as u64) << 32) | local_id;
+            let trainer = (self.make_trainer)(i, local_id);
+            let mut agent = Agent::new(local_id, self.studies[i].config.clone(), trainer);
+            agent.tenant = tenant;
+            self.cluster
+                .set_cap(Owner::Chopt(tenant), self.studies[i].quota);
+            let mut reqs: Vec<ScheduleReq> = Vec::new();
+            agent.fill(&mut self.cluster, now, &mut reqs);
+            self.studies[i].last_target = agent.gpu_target();
+            self.studies[i].agent = Some(agent);
+            self.schedule_reqs(i, reqs);
+        }
+    }
+
+    fn on_submit(&mut self, t: SimTime, idx: usize) {
+        self.submits_pending = self.submits_pending.saturating_sub(1);
+        let _ = idx; // the study was appended at submit_study time
+        // Re-arm the tick chain if it died (everything had drained); the
+        // tick at `t` activates the new study and resumes the cadence.
+        if self.ticks_pending == 0 {
+            self.evq.schedule_at(t, SEv::MasterTick);
+            self.ticks_pending += 1;
+        }
+    }
+
+    // -- finalization ------------------------------------------------------
+
+    /// Consume the scheduler into the outcome: agents still running are
+    /// shut down with horizon semantics.
+    pub fn into_outcome(mut self) -> MultiOutcome {
+        let end_time = self.evq.now();
+        let studies = self
+            .studies
+            .into_iter()
+            .map(|mut st| {
+                if let Some(agent) = st.agent.as_mut() {
+                    if !agent.finished {
+                        agent.shutdown("horizon", &mut self.cluster, end_time);
+                    }
+                }
+                StudyResult {
+                    name: st.name,
+                    quota: st.quota,
+                    agent: st.agent,
+                }
+            })
+            .collect();
+        MultiOutcome {
+            studies,
+            cluster: self.cluster,
+            end_time,
+            events_processed: self.evq.processed(),
+        }
+    }
+
+    // -- snapshot / restore ------------------------------------------------
+
+    /// Serialize the replay inputs plus a progress summary.  Restore
+    /// rebuilds from the manifest and replays the recorded event count,
+    /// re-issuing online study submissions at the event counts where the
+    /// original calls happened.
+    pub fn snapshot_json(&self) -> Json {
+        let online = Json::Arr(
+            self.online
+                .iter()
+                .map(|o| {
+                    Json::obj()
+                        .with("at", Json::Num(o.at))
+                        .with("after_events", Json::Num(o.after_events as f64))
+                        .with("study", o.spec.to_json())
+                })
+                .collect(),
+        );
+        let progress = Json::Arr(
+            self.studies
+                .iter()
+                .map(|st| {
+                    Json::obj()
+                        .with("study", Json::Str(st.name.clone()))
+                        .with("started", Json::Bool(st.started()))
+                        .with("done", Json::Bool(st.done()))
+                        .with(
+                            "best",
+                            st.agent
+                                .as_ref()
+                                .and_then(|a| a.best())
+                                .map(|(_, m)| Json::Num(m))
+                                .unwrap_or(Json::Null),
+                        )
+                })
+                .collect(),
+        );
+        Json::obj()
+            .with("version", Json::Num(1.0))
+            .with("kind", Json::Str("multi_study".into()))
+            .with("t", Json::Num(self.evq.now()))
+            .with("events_processed", Json::Num(self.evq.processed() as f64))
+            .with("manifest", self.manifest.to_json())
+            .with("online", online)
+            .with("progress", progress)
+    }
+
+    fn replay_to(&mut self, target: u64) -> anyhow::Result<()> {
+        use super::engine::Step;
+        while self.events_processed() < target {
+            match self.step() {
+                Step::Advanced(_) | Step::HorizonReached => {}
+                Step::Idle => anyhow::bail!(
+                    "multi-study replay stalled at {} / {} events — snapshot does not match inputs",
+                    self.events_processed(),
+                    target
+                ),
+            }
+        }
+        Ok(())
+    }
+
+    /// Rebuild a scheduler from [`StudyScheduler::snapshot_json`] output.
+    /// `make_trainer` must be the factory the original run used.
+    pub fn restore(
+        doc: &Json,
+        make_trainer: impl FnMut(usize, u64) -> Box<dyn Trainer> + 't,
+    ) -> anyhow::Result<StudyScheduler<'t>> {
+        if doc.get("kind").and_then(|v| v.as_str()) != Some("multi_study") {
+            anyhow::bail!("snapshot is not a multi-study snapshot");
+        }
+        let manifest = StudyManifest::from_json(
+            doc.get("manifest")
+                .ok_or_else(|| anyhow::anyhow!("snapshot missing 'manifest'"))?,
+        )?;
+        let target: u64 = doc
+            .get("events_processed")
+            .and_then(|v| v.as_i64())
+            .ok_or_else(|| anyhow::anyhow!("snapshot missing 'events_processed'"))?
+            as u64;
+        let mut sched = StudyScheduler::new(manifest, make_trainer);
+        if let Some(online) = doc.get("online").and_then(|v| v.as_arr()) {
+            for (i, o) in online.iter().enumerate() {
+                let at = o
+                    .get("at")
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| anyhow::anyhow!("online study missing 'at'"))?;
+                let after_events = o
+                    .get("after_events")
+                    .and_then(|v| v.as_i64())
+                    .unwrap_or(0) as u64;
+                let spec = StudySpec::from_json(
+                    o.get("study")
+                        .ok_or_else(|| anyhow::anyhow!("online study missing 'study'"))?,
+                    i,
+                )?;
+                sched.replay_to(after_events.min(target))?;
+                if sched.submit_study(spec, at).is_none() {
+                    anyhow::bail!("replay could not re-issue the online study at t={at}");
+                }
+            }
+        }
+        sched.replay_to(target)?;
+        Ok(sched)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trainer::surrogate::SurrogateTrainer;
+
+    fn study_json(name: &str, quota: usize) -> String {
+        format!(
+            r#"{{"name": "{name}", "quota": {quota}, "config": {{
+              "h_params": {{
+                "lr": {{"parameters": [0.005, 0.09], "distribution": "log_uniform",
+                        "type": "float", "p_range": [0.001, 0.2]}}
+              }},
+              "measure": "test/accuracy", "order": "descending", "step": 10,
+              "population": 4, "tune": {{"random": {{}}}},
+              "termination": {{"max_session_number": 6}},
+              "model": "surrogate:resnet", "max_epochs": 40, "max_gpus": 3,
+              "seed": 21
+            }}}}"#
+        )
+    }
+
+    fn manifest_json(borrow: bool) -> String {
+        format!(
+            r#"{{"cluster_gpus": 8, "borrow": {borrow},
+                "studies": [{}, {}]}}"#,
+            study_json("alice", 4),
+            study_json("bob", 4)
+        )
+    }
+
+    #[test]
+    fn manifest_parses_and_round_trips() {
+        let m = StudyManifest::from_json_str(&manifest_json(true)).unwrap();
+        assert_eq!(m.cluster_gpus, 8);
+        assert_eq!(m.studies.len(), 2);
+        assert_eq!(m.studies[0].name, "alice");
+        assert_eq!(m.studies[0].quota, 4);
+        assert!(m.borrow);
+        assert_eq!(m.master_period, 60.0);
+        let back = StudyManifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.studies[1].name, "bob");
+        assert_eq!(back.studies[1].quota, 4);
+        assert_eq!(back.borrow, m.borrow);
+    }
+
+    #[test]
+    fn default_quotas_split_the_cluster() {
+        let text = r#"{"cluster_gpus": 9, "studies": [
+            {"name": "a", "config": {"h_params": {}, "measure": "m",
+             "order": "descending", "tune": {"random": {}}}},
+            {"name": "b", "config": {"h_params": {}, "measure": "m",
+             "order": "descending", "tune": {"random": {}}}},
+            {"name": "c", "quota": 3, "config": {"h_params": {}, "measure": "m",
+             "order": "descending", "tune": {"random": {}}}}
+        ]}"#;
+        let m = StudyManifest::from_json_str(text).unwrap();
+        assert_eq!(m.studies[0].quota, 3);
+        assert_eq!(m.studies[1].quota, 3);
+        assert_eq!(m.studies[2].quota, 3);
+    }
+
+    #[test]
+    fn oversubscribed_quotas_rejected() {
+        let text = format!(
+            r#"{{"cluster_gpus": 6, "studies": [{}, {}]}}"#,
+            study_json("a", 4),
+            study_json("b", 4)
+        );
+        assert!(StudyManifest::from_json_str(&text).is_err());
+        let dup = format!(
+            r#"{{"cluster_gpus": 8, "studies": [{}, {}]}}"#,
+            study_json("same", 4),
+            study_json("same", 4)
+        );
+        assert!(StudyManifest::from_json_str(&dup).is_err());
+        // Names flow into file paths and routes: separators rejected.
+        for bad in ["a/b", "..", ".hidden", ""] {
+            let text = format!(
+                r#"{{"cluster_gpus": 8, "studies": [{}]}}"#,
+                study_json(bad, 4)
+            );
+            assert!(
+                StudyManifest::from_json_str(&text).is_err(),
+                "name {bad:?} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn two_studies_run_to_completion_deterministically() {
+        let run = || {
+            let m = StudyManifest::from_json_str(&manifest_json(false)).unwrap();
+            let mut sched = StudyScheduler::new(m, |study, id| {
+                Box::new(SurrogateTrainer::new(1000 * (study as u64 + 1) + id))
+                    as Box<dyn Trainer>
+            });
+            sched.run_to_completion();
+            let out = sched.into_outcome();
+            assert_eq!(out.studies.len(), 2);
+            (
+                out.events_processed,
+                out.end_time,
+                out.studies
+                    .iter()
+                    .map(|s| s.agent.as_ref().and_then(|a| a.best()).map(|(_, m)| m))
+                    .collect::<Vec<_>>(),
+            )
+        };
+        let a = run();
+        assert!(a.2.iter().all(|b| b.is_some()));
+        assert_eq!(a, run());
+    }
+
+    #[test]
+    fn borrow_bonus_capped_relative_to_configured_base() {
+        // One study (quota 8, max_gpus 3) alone on an idle 16-GPU
+        // cluster: its solo target already carries the 2× bonus
+        // (min(8, ceil(3×2)) = 6); the cross-study reconcile pass must
+        // not compound the cap on top of it (12 before the clamp).
+        let text = format!(
+            r#"{{"cluster_gpus": 16, "borrow": true, "studies": [{}]}}"#,
+            study_json("solo", 8)
+        );
+        let m = StudyManifest::from_json_str(&text).unwrap();
+        let mut sched = StudyScheduler::new(m, |study, id| {
+            Box::new(SurrogateTrainer::new(100 * (study as u64 + 1) + id)) as Box<dyn Trainer>
+        });
+        sched.run_until(120.0);
+        assert_eq!(sched.studies()[0].target(), 6);
+    }
+
+    #[test]
+    fn snapshot_round_trips_through_text() {
+        let m = StudyManifest::from_json_str(&manifest_json(true)).unwrap();
+        let mut sched = StudyScheduler::new(m, |study, id| {
+            Box::new(SurrogateTrainer::new(7 * (study as u64 + 1) + id)) as Box<dyn Trainer>
+        });
+        sched.run_until(5_000.0);
+        let snap = sched.snapshot_json();
+        let snap = crate::util::json::parse(&snap.to_string_pretty()).unwrap();
+        let restored = StudyScheduler::restore(&snap, |study, id| {
+            Box::new(SurrogateTrainer::new(7 * (study as u64 + 1) + id)) as Box<dyn Trainer>
+        })
+        .unwrap();
+        assert_eq!(restored.now(), sched.now());
+        assert_eq!(restored.events_processed(), sched.events_processed());
+    }
+}

@@ -95,8 +95,17 @@ impl ParamDef {
             (Value::Int(i), _) => {
                 let factor = *rng.choose(factors);
                 let (lo, hi) = self.hard_bounds().expect("numeric bounds");
-                let v = ((*i as f64) * factor).round().clamp(lo, hi);
-                Value::Int(v as i64)
+                let mut v = ((*i as f64) * factor).round() as i64;
+                // Small ints stagnate under multiplicative perturbation:
+                // round(1 × 1.2) = round(1 × 0.8) = 1, so values like a
+                // batch size of 1–2 never move.  Guarantee a ±1 step in
+                // the factor's direction whenever rounding swallowed it;
+                // the hard bounds still win at the edges.
+                if v == *i && factor != 1.0 {
+                    v = if factor > 1.0 { *i + 1 } else { *i - 1 };
+                }
+                let (ilo, ihi) = (lo.ceil() as i64, hi.floor() as i64);
+                Value::Int(v.clamp(ilo, ihi.max(ilo)))
             }
             (Value::Str(_), _) => {
                 if rng.bool(0.25) {
@@ -484,6 +493,42 @@ mod tests {
             let d = a.i64("depth").unwrap();
             assert!((5..=10).contains(&d));
         }
+    }
+
+    #[test]
+    fn int_perturb_always_moves_small_values() {
+        // Regression: round(i × 0.8/1.2) left small ints (batch size 1–2)
+        // frozen forever; a perturbation must step at least ±1 within the
+        // hard bounds.
+        let d = ParamDef {
+            name: "batch".into(),
+            ptype: ParamType::Int,
+            dist: Dist::Uniform,
+            parameters: vec![Value::Int(1), Value::Int(64)],
+            p_range: vec![1.0, 64.0],
+        };
+        let mut rng = Rng::new(11);
+        assert_eq!(d.perturb(&Value::Int(2), &mut rng, &[1.2]), Value::Int(3));
+        assert_eq!(d.perturb(&Value::Int(2), &mut rng, &[0.8]), Value::Int(1));
+        assert_eq!(d.perturb(&Value::Int(1), &mut rng, &[1.2]), Value::Int(2));
+        // At the hard bound the bound wins (no escape below lo).
+        assert_eq!(d.perturb(&Value::Int(1), &mut rng, &[0.8]), Value::Int(1));
+        // Large values keep the multiplicative behavior.
+        assert_eq!(d.perturb(&Value::Int(10), &mut rng, &[1.2]), Value::Int(12));
+        assert_eq!(d.perturb(&Value::Int(10), &mut rng, &[0.8]), Value::Int(8));
+        // A long random walk stays in bounds and is not stuck at 1.
+        let mut v = Value::Int(1);
+        let mut seen_above_one = false;
+        for _ in 0..100 {
+            v = d.perturb(&v, &mut rng, &[0.8, 1.2]);
+            let i = match &v {
+                Value::Int(i) => *i,
+                _ => unreachable!(),
+            };
+            assert!((1..=64).contains(&i), "escaped bounds: {i}");
+            seen_above_one |= i > 1;
+        }
+        assert!(seen_above_one, "walk never left the stagnation point");
     }
 
     #[test]

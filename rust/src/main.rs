@@ -4,6 +4,8 @@
 //!   run            run a CHOPT session from a config file (sim or real)
 //!   watch          run through the live Platform: progress stream,
 //!                  periodic snapshots, stop-and-go restore
+//!   multi          run N studies from a manifest on one shared cluster
+//!                  (fair-share quotas + cross-study Stop-and-Go)
 //!   example-config print the paper's Listing-1 example configuration
 //!   artifacts      inspect the AOT artifact manifest
 //!   serve          serve stored results (or a live run) through the viz
@@ -12,7 +14,7 @@
 use std::collections::HashSet;
 
 use chopt::config::ChoptConfig;
-use chopt::coordinator::{run_sim, Platform, SimSetup};
+use chopt::coordinator::{run_sim, MultiPlatform, Platform, SimSetup, StudyManifest};
 use chopt::storage::SessionStore;
 use chopt::trainer::{real::RealTrainer, surrogate::SurrogateTrainer, Trainer};
 use chopt::util::cli::{CliError, Command};
@@ -42,6 +44,18 @@ fn cli() -> Command {
                 .opt("chunk", Some("3600"), "virtual seconds per progress report")
                 .opt("snapshot-every", Some("14400"), "virtual seconds between snapshots"),
         )
+        .subcommand(
+            Command::new("multi", "run N studies from a manifest on one shared cluster")
+                .opt("manifest", None, "path to a studies manifest (see README)")
+                .opt("restore", None, "resume from a multi-study snapshot.json")
+                .opt(
+                    "out",
+                    Some("reports/multi"),
+                    "output directory (events-<study>.jsonl, snapshot.json, fair_share.json)",
+                )
+                .opt("chunk", Some("3600"), "virtual seconds per progress report")
+                .opt("snapshot-every", Some("14400"), "virtual seconds between snapshots"),
+        )
         .subcommand(Command::new(
             "example-config",
             "print the paper's Listing-1 example configuration",
@@ -56,6 +70,7 @@ fn cli() -> Command {
                 .opt("port", Some("8787"), "listen port")
                 .flag("live", "drive a run in-process and re-render views as it advances")
                 .opt("config", None, "config for --live mode")
+                .opt("manifest", None, "studies manifest for multi-study --live mode")
                 .opt("gpus", Some("8"), "simulated cluster size (--live)")
                 .opt("chunk", Some("1800"), "virtual seconds advanced per refresh (--live)")
                 .opt("throttle-ms", Some("250"), "wall-clock pause between refreshes (--live)"),
@@ -80,6 +95,7 @@ fn main() {
         Some((name, sub)) => match name.as_str() {
             "run" => cmd_run(sub),
             "watch" => cmd_watch(sub),
+            "multi" => cmd_multi(sub),
             "example-config" => {
                 println!("{}", chopt::config::LISTING1_EXAMPLE);
                 Ok(())
@@ -263,6 +279,155 @@ fn cmd_watch(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The trainer factory every multi-study entry point shares: one
+/// decorrelated surrogate stream per (study, chopt id).  Restore-by-
+/// replay requires the factory the original run used, so `chopt multi`,
+/// `--restore`, and `serve --live --manifest` must all resolve to this
+/// one definition.
+fn multi_trainer(study: usize, id: u64) -> Box<dyn Trainer> {
+    Box::new(SurrogateTrainer::new(((study as u64 + 1) << 16) ^ id))
+}
+
+/// `chopt multi`: drive N studies from a manifest on one shared cluster
+/// through the live [`MultiPlatform`] — per-study JSONL streams, the
+/// merged fair-share document, periodic snapshots, and `--restore`.
+fn cmd_multi(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
+    let out_dir = m.get_or("out", "reports/multi").to_string();
+    let chunk = m.get_f64("chunk").unwrap_or(3600.0).max(1.0);
+    let snap_every = m.get_f64("snapshot-every").unwrap_or(14400.0);
+    let snap_path = format!("{out_dir}/snapshot.json");
+    std::fs::create_dir_all(&out_dir)?;
+
+    let mut platform = if let Some(restore) = m.get("restore") {
+        let platform = MultiPlatform::restore(restore, multi_trainer)?;
+        println!(
+            "restored from {restore}: t={:.0}s, {} events replayed, {} studies",
+            platform.now(),
+            platform.scheduler().events_processed(),
+            platform.scheduler().studies().len()
+        );
+        // The previous process logged past the snapshot point before it
+        // died; the continued run re-emits that window, so trim it from
+        // every per-study stream (the logs open in append mode).
+        for st in platform.scheduler().studies() {
+            trim_event_log(
+                &format!("{out_dir}/events-{}.jsonl", st.name()),
+                platform.now(),
+            )?;
+        }
+        platform
+    } else {
+        let Some(manifest_path) = m.get("manifest") else {
+            anyhow::bail!("multi needs --manifest (or --restore)");
+        };
+        let manifest = StudyManifest::load(manifest_path)?;
+        println!(
+            "multi-study CHOPT: {} studies on {} GPUs (borrow={})",
+            manifest.studies.len(),
+            manifest.cluster_gpus,
+            manifest.borrow
+        );
+        for s in &manifest.studies {
+            println!(
+                "  study {:<16} quota={} tune={} submit_at={:.0}s",
+                s.name,
+                s.quota,
+                s.config.tune.name(),
+                s.submit_at
+            );
+        }
+        // Start clean: leftover logs from a previous run would be
+        // appended to (append mode is what --restore wants).  Scan the
+        // directory instead of the manifest so per-study files from an
+        // earlier run with *different* study names go too.
+        if let Ok(entries) = std::fs::read_dir(&out_dir) {
+            for entry in entries.flatten() {
+                let name = entry.file_name();
+                let name = name.to_string_lossy();
+                let stale = (name.starts_with("events-") && name.ends_with(".jsonl"))
+                    || (name.starts_with("sessions-") && name.ends_with(".json"))
+                    || name.as_ref() == "fair_share.json";
+                if stale {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+            }
+        }
+        let _ = std::fs::remove_file(&snap_path);
+        MultiPlatform::new(manifest, multi_trainer)
+    };
+    platform = platform
+        .with_event_logs(&out_dir)?
+        .with_snapshots(&snap_path, snap_every);
+
+    loop {
+        let n = platform.advance(chunk);
+        let fair = platform.fair_share_doc();
+        let per_study: Vec<String> = fair
+            .get("studies")
+            .and_then(|v| v.as_arr())
+            .map(|rows| {
+                rows.iter()
+                    .map(|r| {
+                        format!(
+                            "{}:{}/{}g{}",
+                            r.get("study").and_then(|v| v.as_str()).unwrap_or("?"),
+                            r.get("held").and_then(|v| v.as_i64()).unwrap_or(0),
+                            r.get("quota").and_then(|v| v.as_i64()).unwrap_or(0),
+                            if r.get("done").and_then(|v| v.as_bool()) == Some(true) {
+                                " done"
+                            } else {
+                                ""
+                            }
+                        )
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        println!(
+            "t={:>10.0}s events={:>7} util={:.2} [{}]",
+            platform.now(),
+            platform.scheduler().events_processed(),
+            fair.get("utilization").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            per_study.join(" "),
+        );
+        if platform.is_done() || n == 0 {
+            break;
+        }
+    }
+    platform.snapshot_now()?;
+    std::fs::write(
+        format!("{out_dir}/fair_share.json"),
+        platform.fair_share_doc().to_string_pretty(),
+    )?;
+
+    let names: Vec<String> = platform
+        .scheduler()
+        .studies()
+        .iter()
+        .map(|s| s.name().to_string())
+        .collect();
+    for name in &names {
+        std::fs::write(
+            format!("{out_dir}/sessions-{name}.json"),
+            platform.study_sessions_doc(name).to_string_pretty(),
+        )?;
+        if let Some(st) = platform.scheduler().study(name) {
+            if let Some(agent) = st.agent() {
+                println!("\nstudy {name} (quota {}):", st.quota());
+                let sessions: Vec<_> = agent.sessions.values().cloned().collect();
+                viz::report::leaderboard_table(&sessions, agent.cfg.order, 5).print();
+            }
+        }
+    }
+    println!(
+        "\ndone: {} events, {:.1} virtual hours, {} progress events\nwrote {out_dir}/{{events-<study>.jsonl,snapshot.json,fair_share.json,sessions-<study>.json}}\nresume anytime: chopt multi --restore {snap_path}",
+        platform.scheduler().events_processed(),
+        platform.now() / 3600.0,
+        platform.progress_events,
+    );
+    Ok(())
+}
+
 /// Drop event-log records stamped after `cut` (the restored snapshot's
 /// virtual time): the continued run re-emits that window, and the log is
 /// opened in append mode, so keeping them would duplicate every pool
@@ -349,8 +514,11 @@ fn cmd_serve(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
 /// the browser watches the optimization unfold (paper §3.5's analytic
 /// tool over a *running* session instead of a stored one).
 fn cmd_serve_live(m: &chopt::util::cli::Matches, port: u16) -> anyhow::Result<()> {
+    if m.get("manifest").is_some() {
+        return cmd_serve_live_multi(m, port);
+    }
     let Some(config_path) = m.get("config") else {
-        anyhow::bail!("serve --live needs --config");
+        anyhow::bail!("serve --live needs --config (or --manifest)");
     };
     let cfg = ChoptConfig::load(config_path)?;
     let gpus = m.get_usize("gpus").unwrap_or(8);
@@ -387,6 +555,54 @@ fn cmd_serve_live(m: &chopt::util::cli::Matches, port: u16) -> anyhow::Result<()
         "run complete at t={:.0}s ({} events); still serving — ctrl-c to stop",
         platform.now(),
         platform.engine().events_processed()
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// `chopt serve --live --manifest`: drive a multi-study run in-process
+/// and republish per-study routes (`/api/studies/<name>/...`) plus the
+/// merged fair-share document as the scheduler advances.
+fn cmd_serve_live_multi(m: &chopt::util::cli::Matches, port: u16) -> anyhow::Result<()> {
+    let manifest = StudyManifest::load(m.get("manifest").unwrap())?;
+    let chunk = m.get_f64("chunk").unwrap_or(1800.0).max(1.0);
+    let throttle = std::time::Duration::from_millis(m.get_u64("throttle-ms").unwrap_or(250));
+
+    let mut platform = MultiPlatform::new(manifest, multi_trainer);
+    let server = viz::server::VizServer::start(port, viz::server::Routes::new())?;
+    let publish = |p: &MultiPlatform| {
+        server.put_json("/api/fair_share.json", &p.fair_share_doc());
+        server.put_json("/api/status.json", &p.status_doc());
+        for st in p.scheduler().studies() {
+            let name = st.name();
+            server.put_json(
+                &format!("/api/studies/{name}/leaderboard.json"),
+                &p.study_leaderboard_doc(name, 10),
+            );
+            server.put_json(
+                &format!("/api/studies/{name}/sessions.json"),
+                &p.study_sessions_doc(name),
+            );
+        }
+    };
+    publish(&platform);
+    println!(
+        "live multi-study run on http://{}/ (per-study routes under /api/studies/<name>/)",
+        server.addr()
+    );
+    loop {
+        let n = platform.advance(chunk);
+        publish(&platform);
+        if platform.is_done() || n == 0 {
+            break;
+        }
+        std::thread::sleep(throttle);
+    }
+    println!(
+        "run complete at t={:.0}s ({} events); still serving — ctrl-c to stop",
+        platform.now(),
+        platform.scheduler().events_processed()
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -75,6 +75,14 @@ pub struct Hyperband {
     evictions: Vec<SessionId>,
     /// Hyperparameters by session (to refill resumes' Trial).
     hparams: HashMap<SessionId, crate::hparam::Assignment>,
+    /// (bracket, rung) each session belongs to.  Fresh registrations join
+    /// the active bracket's rung 0; promotions move the session at
+    /// hand-out time.  `report` only counts a result toward the barrier
+    /// when the session's membership matches the active rung — late
+    /// reports (e.g. a Stop-and-Go revival finishing after
+    /// `complete_rung_if_ready` advanced) used to leak into the *next*
+    /// rung's barrier.
+    membership: HashMap<SessionId, (usize, usize)>,
 }
 
 impl Hyperband {
@@ -91,6 +99,7 @@ impl Hyperband {
             promotions: Vec::new(),
             evictions: Vec::new(),
             hparams: HashMap::new(),
+            membership: HashMap::new(),
         }
     }
 
@@ -150,7 +159,16 @@ impl Tuner for Hyperband {
     fn next_trial(&mut self, rng: &mut Rng) -> Option<Trial> {
         // Resume promotions first (they hold rung state).
         if let Some((id, budget)) = self.promotions.pop() {
-            let hp = self.hparams.get(&id).cloned().unwrap_or_default();
+            // A promoted session without a stored assignment is a broken
+            // invariant (it trained rung 0 with *some* hparams that are
+            // now lost); resuming it with an empty assignment would
+            // silently train a default model, so fail loudly instead.
+            let hp = self.hparams.get(&id).cloned().unwrap_or_else(|| {
+                panic!("hyperband: promoting {id} but its hparams were never registered")
+            });
+            // The session now belongs to the rung it is promoted into
+            // (complete_rung_if_ready already advanced rung_idx).
+            self.membership.insert(id, (self.bracket_idx, self.rung_idx));
             return Some(Trial {
                 hparams: hp,
                 budget,
@@ -169,12 +187,33 @@ impl Tuner for Hyperband {
     }
 
     fn register(&mut self, id: SessionId, trial: &Trial) {
+        // Stored for fresh launches *and* resumes: a resumed session must
+        // keep its assignment reachable for later promotions (before this,
+        // a restore-by-replay that re-registered only fresh trials left
+        // promoted sessions without hparams).
+        self.hparams.insert(id, trial.hparams.clone());
         if trial.resume_of.is_none() {
-            self.hparams.insert(id, trial.hparams.clone());
+            self.membership.insert(id, (self.bracket_idx, self.rung_idx));
         }
     }
 
     fn report(&mut self, r: Report, _rng: &mut Rng) -> Decision {
+        let Some(&(b, ri)) = self.membership.get(&r.id) else {
+            return Decision::Stop; // unknown/evicted session: nothing to count
+        };
+        if b != self.bracket_idx || ri != self.rung_idx {
+            // Straggler from an already-completed rung (or an earlier
+            // bracket): its barrier is long gone, so the result must not
+            // leak into the *active* rung's barrier.  If the session
+            // still holds a pending promotion, park it until the
+            // promotion resumes it properly; otherwise it was evicted or
+            // superseded — stop it.
+            return if self.promotions.iter().any(|&(id, _)| id == r.id) {
+                Decision::Pause
+            } else {
+                Decision::Stop
+            };
+        }
         let Some(rung) = self.rung().cloned() else {
             return Decision::Stop;
         };
@@ -182,6 +221,12 @@ impl Tuner for Hyperband {
             return Decision::Continue {
                 budget: rung.budget,
             };
+        }
+        if self.results.iter().any(|&(id, _)| id == r.id) {
+            // Double report at the same barrier (revived straggler that
+            // trained past its budget): already counted once, wait for
+            // the rung to settle its fate.
+            return Decision::Pause;
         }
         // Rung budget reached: record and pause (or finish at final rung).
         self.results.push((r.id, r.measure));
@@ -204,7 +249,14 @@ impl Tuner for Hyperband {
     }
 
     fn take_evictions(&mut self) -> Vec<SessionId> {
-        std::mem::take(&mut self.evictions)
+        let evicted = std::mem::take(&mut self.evictions);
+        for id in &evicted {
+            // Evicted sessions can never be promoted again; drop their
+            // bookkeeping (a later straggler report resolves to Stop).
+            self.hparams.remove(id);
+            self.membership.remove(id);
+        }
+        evicted
     }
 }
 
@@ -352,12 +404,18 @@ mod tests {
         assert!(!t.done());
         // R=3,eta=3: bracket0 rungs (n=2? ...) just drive everything.
         let mut guard = 0;
+        let mut minted = 0u64;
         while !t.done() && guard < 1000 {
             guard += 1;
             let mut progressed = false;
             while let Some(trial) = t.next_trial(&mut rng) {
                 progressed = true;
-                let id = SessionId(1000 + guard * 50 + t.hparams.len() as u64);
+                // Promotions resume their original session; only fresh
+                // trials get a new id (the agent behaves the same way).
+                let id = trial.resume_of.unwrap_or_else(|| {
+                    minted += 1;
+                    SessionId(1000 + minted)
+                });
                 t.register(id, &trial);
                 let budget = trial.budget;
                 t.report(
@@ -375,5 +433,127 @@ mod tests {
             }
         }
         assert!(t.done(), "hyperband should exhaust its brackets");
+    }
+
+    #[test]
+    fn straggler_report_does_not_contaminate_next_rung() {
+        // R=9, eta=3: rung 0 (n=9, r=1) → rung 1 (n=3, r=3) → rung 2.
+        let mut t = Hyperband::new(space(), Order::Descending, 9, 3);
+        let mut rng = Rng::new(7);
+        let mut ids = Vec::new();
+        while let Some(trial) = t.next_trial(&mut rng) {
+            let id = SessionId(ids.len() as u64);
+            t.register(id, &trial);
+            ids.push(id);
+        }
+        for &id in &ids {
+            t.report(
+                Report {
+                    id,
+                    epoch: 1,
+                    measure: id.0 as f64,
+                },
+                &mut rng,
+            );
+        }
+        // Rung advanced: 6,7,8 promoted, 0..=5 evicted.
+        let evicted = t.take_evictions();
+        assert_eq!(evicted.len(), 6);
+        // An evicted rung-0 session straggles in (a Stop-and-Go revival
+        // that trained past its rung) — it must be stopped, not counted
+        // toward rung 1's 3-result barrier.
+        let d = t.report(
+            Report {
+                id: SessionId(2),
+                epoch: 3,
+                measure: 1e9, // absurdly good: would win rung 1 if counted
+            },
+            &mut rng,
+        );
+        assert_eq!(d, Decision::Stop);
+        assert!(t.results.is_empty(), "straggler leaked into rung 1 barrier");
+        // A *promoted* session reporting before its resume trial was
+        // handed out parks again instead of being double-counted.
+        let d = t.report(
+            Report {
+                id: SessionId(6),
+                epoch: 1,
+                measure: 6.0,
+            },
+            &mut rng,
+        );
+        assert_eq!(d, Decision::Pause);
+        assert!(t.results.is_empty());
+        // Rung 1 then completes with exactly the promoted trio.
+        let mut promoted = Vec::new();
+        while let Some(trial) = t.next_trial(&mut rng) {
+            match trial.resume_of {
+                Some(rid) => promoted.push(rid),
+                None => break,
+            }
+        }
+        assert_eq!(promoted.len(), 3);
+        for &id in &promoted {
+            t.report(
+                Report {
+                    id,
+                    epoch: 3,
+                    measure: id.0 as f64,
+                },
+                &mut rng,
+            );
+        }
+        // Exactly one survivor promoted into the final rung, and it is
+        // the true best (8), not the straggler.
+        let last = t.next_trial(&mut rng).unwrap();
+        assert_eq!(last.resume_of, Some(SessionId(8)));
+        assert_eq!(last.budget, 9);
+    }
+
+    #[test]
+    fn promoted_trials_carry_registered_hparams() {
+        let mut t = Hyperband::new(space(), Order::Descending, 9, 3);
+        let mut rng = Rng::new(8);
+        let mut by_id = std::collections::HashMap::new();
+        let mut ids = Vec::new();
+        while let Some(trial) = t.next_trial(&mut rng) {
+            let id = SessionId(ids.len() as u64);
+            t.register(id, &trial);
+            by_id.insert(id, trial.hparams.clone());
+            ids.push(id);
+        }
+        for &id in &ids {
+            t.report(
+                Report {
+                    id,
+                    epoch: 1,
+                    measure: id.0 as f64,
+                },
+                &mut rng,
+            );
+        }
+        t.take_evictions();
+        while let Some(trial) = t.next_trial(&mut rng) {
+            let Some(rid) = trial.resume_of else { break };
+            // Regression: this used to be `unwrap_or_default()` — a lost
+            // map entry silently resumed with an *empty* assignment.
+            assert!(!trial.hparams.is_empty(), "promotion lost its hparams");
+            assert_eq!(&trial.hparams, &by_id[&rid]);
+            // Re-registering the resume (as the agent now does) must keep
+            // the assignment reachable for the next promotion.
+            t.register(rid, &trial);
+            assert_eq!(t.hparams.get(&rid), Some(&by_id[&rid]));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "hparams were never registered")]
+    fn promotion_without_registered_hparams_is_a_hard_error() {
+        let mut t = Hyperband::new(space(), Order::Descending, 9, 3);
+        let mut rng = Rng::new(9);
+        // Force the broken invariant directly: a promotion for a session
+        // that was never registered.
+        t.promotions.push((SessionId(999), 3));
+        let _ = t.next_trial(&mut rng);
     }
 }

@@ -1,0 +1,410 @@
+//! Multi-tenant scheduler integration tests: the fair-share determinism
+//! contract (a study on a shared cluster behaves exactly as it would on
+//! a dedicated cluster of its quota size), quota enforcement under
+//! stepping, cross-study Stop-and-Go preemption (pauses, never kills),
+//! online study submission, and multi-study snapshot/restore.
+
+use chopt::cluster::Owner;
+use chopt::config::ChoptConfig;
+use chopt::coordinator::{
+    run_sim, Agent, AgentEvent, MultiPlatform, Pool, SimSetup, Step, StudyManifest,
+    StudyScheduler, StudySpec,
+};
+use chopt::trainer::surrogate::SurrogateTrainer;
+use chopt::trainer::Trainer;
+
+fn config_json(step: i64, max_sessions: usize, max_gpus: usize, seed: u64) -> String {
+    format!(
+        r#"{{
+          "h_params": {{
+            "lr": {{"parameters": [0.005, 0.09], "distribution": "log_uniform",
+                    "type": "float", "p_range": [0.001, 0.2]}},
+            "momentum": {{"parameters": [0.5, 0.99], "distribution": "uniform",
+                    "type": "float", "p_range": [0.1, 0.999]}}
+          }},
+          "measure": "test/accuracy",
+          "order": "descending",
+          "step": {step},
+          "population": 4,
+          "tune": {{"random": {{}}}},
+          "termination": {{"max_session_number": {max_sessions}}},
+          "model": "surrogate:resnet",
+          "max_epochs": 60,
+          "max_gpus": {max_gpus},
+          "seed": {seed}
+        }}"#
+    )
+}
+
+fn cfg(step: i64, max_sessions: usize, max_gpus: usize, seed: u64) -> ChoptConfig {
+    ChoptConfig::from_json_str(&config_json(step, max_sessions, max_gpus, seed)).unwrap()
+}
+
+fn two_study_manifest(borrow: bool) -> StudyManifest {
+    let text = format!(
+        r#"{{"cluster_gpus": 8, "borrow": {borrow}, "studies": [
+            {{"name": "alice", "quota": 4, "config": {}}},
+            {{"name": "bob", "quota": 4, "config": {}}}
+        ]}}"#,
+        config_json(10, 8, 3, 100),
+        config_json(10, 8, 3, 101)
+    );
+    StudyManifest::from_json_str(&text).unwrap()
+}
+
+/// Per-study trainer streams, reproducible for the solo baselines.
+fn study_seed(study: usize) -> u64 {
+    7_000 + 1_000 * study as u64
+}
+
+fn multi_factory() -> impl FnMut(usize, u64) -> Box<dyn Trainer> {
+    |study, id| Box::new(SurrogateTrainer::new(study_seed(study) ^ id)) as Box<dyn Trainer>
+}
+
+fn solo_factory(study: usize) -> impl FnMut(u64) -> Box<dyn Trainer> {
+    move |id| Box::new(SurrogateTrainer::new(study_seed(study) ^ id)) as Box<dyn Trainer>
+}
+
+/// Everything that characterizes one study's run, for exact comparison.
+fn agent_key(a: &Agent) -> (usize, usize, Option<(u64, String)>, Option<f64>, usize) {
+    (
+        a.created,
+        a.sessions.len(),
+        a.best().map(|(sid, m)| (sid.0, format!("{m:.12}"))),
+        a.finished_at,
+        a.events.len(),
+    )
+}
+
+/// The headline acceptance criterion: two concurrent studies on a shared
+/// 8-GPU cluster (quota 4 + 4, hard isolation) finish with per-study
+/// results **identical** to running each study alone on a dedicated
+/// 4-GPU cluster.
+#[test]
+fn shared_cluster_matches_dedicated_quota_runs() {
+    let mut sched = StudyScheduler::new(two_study_manifest(false), multi_factory());
+    sched.run_to_completion();
+    let multi = sched.into_outcome();
+    assert_eq!(multi.studies.len(), 2);
+    let all_finished = multi
+        .studies
+        .iter()
+        .all(|s| s.agent.as_ref().map(|a| a.finished).unwrap_or(false));
+    assert!(all_finished);
+
+    for (study, (name, seed)) in [("alice", 100u64), ("bob", 101u64)].iter().enumerate() {
+        let solo = run_sim(
+            SimSetup::single(cfg(10, 8, 3, *seed), 4), // dedicated quota-size cluster
+            solo_factory(study),
+        );
+        assert_eq!(solo.agents.len(), 1);
+        let shared_agent = multi.study(name).unwrap().agent.as_ref().unwrap();
+        assert_eq!(
+            agent_key(&solo.agents[0]),
+            agent_key(shared_agent),
+            "study '{name}' diverged from its dedicated-cluster run"
+        );
+        // Full leaderboard equality, not just the single best entry.
+        let top_solo: Vec<(u64, String)> = solo.agents[0]
+            .leaderboard
+            .top(10)
+            .iter()
+            .map(|&(sid, m)| (sid.0, format!("{m:.12}")))
+            .collect();
+        let top_shared: Vec<(u64, String)> = shared_agent
+            .leaderboard
+            .top(10)
+            .iter()
+            .map(|&(sid, m)| (sid.0, format!("{m:.12}")))
+            .collect();
+        assert_eq!(top_solo, top_shared, "study '{name}' leaderboard diverged");
+    }
+}
+
+/// Stepping through the run, no study ever holds more than its quota
+/// when borrowing is disabled, and tenants never collide in the
+/// allocator.
+#[test]
+fn fair_share_quotas_respected_throughout() {
+    let mut sched = StudyScheduler::new(two_study_manifest(false), multi_factory());
+    let mut steps = 0u64;
+    while matches!(sched.step(), Step::Advanced(_)) {
+        steps += 1;
+        for st in sched.studies() {
+            if let Some(agent) = st.agent() {
+                let held = sched.cluster().held_by(Owner::Chopt(agent.tenant));
+                assert!(
+                    held <= st.quota(),
+                    "study '{}' holds {held} > quota {} at step {steps}",
+                    st.name(),
+                    st.quota()
+                );
+            }
+        }
+        assert!(
+            sched.cluster().used() <= sched.cluster().total(),
+            "cluster oversubscribed"
+        );
+    }
+    assert!(sched.is_done());
+    let tenants: Vec<u64> = sched
+        .studies()
+        .iter()
+        .filter_map(|s| s.agent().map(|a| a.tenant))
+        .collect();
+    assert_eq!(tenants.len(), 2);
+    assert_ne!(tenants[0], tenants[1], "tenants must be study-qualified");
+}
+
+/// Cross-study Stop-and-Go: a lone study borrows idle quota; when the
+/// second tenant arrives the borrower is preempted back down by
+/// *pausing* sessions (stop pool, revival priority) — never by killing
+/// them — and the newcomer gets its full guarantee.
+#[test]
+fn cross_study_preemption_pauses_not_kills() {
+    let text = format!(
+        r#"{{"cluster_gpus": 8, "borrow": true, "studies": [
+            {{"name": "alice", "quota": 4, "config": {}}},
+            {{"name": "bob", "quota": 4, "submit_at": 10000, "config": {}}}
+        ]}}"#,
+        // step -1 (no early stopping): alice's cohorts train straight to
+        // max_epochs, so her live pool deterministically fills the
+        // borrowed allocation for the phase-1/2 assertions below.
+        config_json(-1, 40, 4, 100),
+        config_json(10, 8, 4, 101)
+    );
+    let manifest = StudyManifest::from_json_str(&text).unwrap();
+    let mut sched = StudyScheduler::new(manifest, multi_factory());
+
+    // Phase 1: alice alone borrows past her quota (bounded by the bonus
+    // cap: 2 × her 4-GPU base = 8 = the whole cluster).
+    sched.run_until(9_000.0);
+    let alice_tenant = sched.study("alice").unwrap().agent().unwrap().tenant;
+    assert_eq!(
+        sched.cluster().held_by(Owner::Chopt(alice_tenant)),
+        8,
+        "lone study should borrow the idle quota"
+    );
+    assert!(!sched.study("bob").unwrap().started());
+
+    // Phase 2: bob arrives; within two master periods the borrower is
+    // preempted back to quota and bob holds his guarantee.
+    sched.run_until(10_200.0);
+    let bob_tenant = sched.study("bob").unwrap().agent().unwrap().tenant;
+    assert_eq!(sched.cluster().held_by(Owner::Chopt(alice_tenant)), 4);
+    assert_eq!(sched.cluster().held_by(Owner::Chopt(bob_tenant)), 4);
+
+    let alice = sched.study("alice").unwrap().agent().unwrap();
+    let preempted: Vec<&AgentEvent> = alice
+        .events
+        .iter()
+        .filter(|e| matches!(e, AgentEvent::Preempted(..)))
+        .collect();
+    assert!(
+        preempted.len() >= 4,
+        "borrowed GPUs must be reclaimed by preemption, got {preempted:?}"
+    );
+    assert!(
+        preempted
+            .iter()
+            .all(|e| matches!(e, AgentEvent::Preempted(_, Pool::Stop))),
+        "cross-study preemption must pause (stop pool), never kill: {preempted:?}"
+    );
+
+    // Phase 3: both studies complete; preempted work was resumed, not
+    // lost.
+    sched.run_to_completion();
+    let out = sched.into_outcome();
+    let alice = out.study("alice").unwrap().agent.as_ref().unwrap();
+    let bob = out.study("bob").unwrap().agent.as_ref().unwrap();
+    assert!(alice.finished && bob.finished);
+    assert!(
+        alice.events.iter().any(|e| matches!(e, AgentEvent::Revived(_))),
+        "preempted sessions must revive when capacity returns"
+    );
+    let killed = alice
+        .events
+        .iter()
+        .any(|e| matches!(e, AgentEvent::Preempted(_, Pool::Dead)));
+    assert!(!killed);
+    assert!(bob.best().is_some());
+    alice.pools.check_invariants().unwrap();
+    bob.pools.check_invariants().unwrap();
+}
+
+/// A study submitted while the scheduler is live gets activated, honors
+/// the quota arithmetic, and runs to completion; oversubscribing quotas
+/// is refused.
+#[test]
+fn online_study_submission_runs() {
+    let text = format!(
+        r#"{{"cluster_gpus": 8, "borrow": false, "studies": [
+            {{"name": "alice", "quota": 4, "config": {}}}
+        ]}}"#,
+        config_json(10, 8, 3, 100)
+    );
+    let manifest = StudyManifest::from_json_str(&text).unwrap();
+    let mut sched = StudyScheduler::new(manifest, multi_factory());
+    sched.run_until(2_000.0);
+    assert!(!sched.is_done());
+
+    // Too big: would break the existing guarantee.
+    let oversized = StudySpec {
+        name: "greedy".into(),
+        config: cfg(10, 6, 3, 555),
+        quota: 6,
+        submit_at: 0.0,
+    };
+    assert_eq!(sched.submit_study(oversized, 2_500.0), None);
+
+    let fits = StudySpec {
+        name: "carol".into(),
+        config: cfg(10, 6, 3, 200),
+        quota: 4,
+        submit_at: 0.0,
+    };
+    assert_eq!(sched.submit_study(fits, 2_500.0), Some(2_500.0));
+    sched.run_to_completion();
+    let out = sched.into_outcome();
+    assert_eq!(out.studies.len(), 2);
+    let carol = out.study("carol").unwrap().agent.as_ref().unwrap();
+    assert!(carol.finished);
+    assert!(carol.best().is_some());
+}
+
+/// A mid-run snapshot of the whole multi-study state (including an
+/// online submission) restores by replay and finishes identically to
+/// the uninterrupted run.
+#[test]
+fn multi_study_snapshot_restore_is_deterministic() {
+    let drive = |sched: &mut StudyScheduler| {
+        sched.run_until(3_000.0);
+        sched.run_until(8_000.0);
+    };
+    let text = format!(
+        r#"{{"cluster_gpus": 8, "borrow": true, "studies": [
+            {{"name": "alice", "quota": 4, "config": {}}},
+            {{"name": "bob", "quota": 2, "config": {}}}
+        ]}}"#,
+        config_json(10, 8, 3, 100),
+        config_json(10, 8, 3, 101)
+    );
+    let manifest = StudyManifest::from_json_str(&text).unwrap();
+
+    // Reference: straight through, with one online study on the way.
+    let mut reference = StudyScheduler::new(manifest.clone(), multi_factory());
+    drive(&mut reference);
+    reference
+        .submit_study(
+            StudySpec {
+                name: "carol".into(),
+                config: cfg(10, 6, 3, 200),
+                quota: 2,
+                submit_at: 0.0,
+            },
+            9_000.0,
+        )
+        .unwrap();
+    reference.run_to_completion();
+    let ref_out = reference.into_outcome();
+
+    // Same run, snapshotted mid-flight after the online submission and
+    // restored into a fresh scheduler.
+    let mut original = StudyScheduler::new(manifest, multi_factory());
+    drive(&mut original);
+    original
+        .submit_study(
+            StudySpec {
+                name: "carol".into(),
+                config: cfg(10, 6, 3, 200),
+                quota: 2,
+                submit_at: 0.0,
+            },
+            9_000.0,
+        )
+        .unwrap();
+    original.run_until(20_000.0);
+    let snap = original.snapshot_json();
+    let snap = chopt::util::json::parse(&snap.to_string_pretty()).unwrap();
+    let mut restored = StudyScheduler::restore(&snap, multi_factory()).unwrap();
+    assert_eq!(restored.now(), original.now());
+    assert_eq!(restored.events_processed(), original.events_processed());
+    restored.run_to_completion();
+    let restored_out = restored.into_outcome();
+
+    assert_eq!(ref_out.end_time, restored_out.end_time);
+    assert_eq!(ref_out.events_processed, restored_out.events_processed);
+    assert_eq!(ref_out.studies.len(), restored_out.studies.len());
+    for (a, b) in ref_out.studies.iter().zip(restored_out.studies.iter()) {
+        assert_eq!(a.name, b.name);
+        match (&a.agent, &b.agent) {
+            (Some(x), Some(y)) => assert_eq!(agent_key(x), agent_key(y), "study {}", a.name),
+            (None, None) => {}
+            _ => panic!("study {} activation diverged", a.name),
+        }
+    }
+}
+
+/// The MultiPlatform streams per-study JSONL (study-labelled, string
+/// ids), publishes a consistent fair-share document, and restores from
+/// its own snapshots.
+#[test]
+fn multi_platform_streams_and_restores() {
+    let dir = std::env::temp_dir().join(format!("chopt-multi-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let snap_path = dir.join("snapshot.json");
+
+    let mut platform = MultiPlatform::new(two_study_manifest(true), multi_factory())
+        .with_event_logs(&dir)
+        .unwrap()
+        .with_snapshots(&snap_path, 2_000.0);
+    platform.run_until(6_000.0);
+    platform.snapshot_now().unwrap();
+    let t_snap = platform.now();
+    let events_snap = platform.scheduler().events_processed();
+    assert!(platform.progress_events > 0);
+
+    // Per-study streams exist, carry the study label, and keep ids as
+    // strings (the ≥2^53 corruption fix).
+    for name in ["alice", "bob"] {
+        let events =
+            chopt::storage::EventLog::read_all(dir.join(format!("events-{name}.jsonl"))).unwrap();
+        assert!(!events.is_empty(), "study {name} must stream");
+        for e in &events {
+            assert_eq!(e.get("study").and_then(|v| v.as_str()), Some(name));
+            if let Some(sid) = e.get("session") {
+                let sid = sid.as_str().expect("session ids must be strings");
+                sid.parse::<u64>().expect("session ids must round-trip");
+            }
+        }
+    }
+
+    // Fair-share doc is self-consistent.
+    let fair = platform.fair_share_doc();
+    let rows = fair.get("studies").and_then(|v| v.as_arr()).unwrap();
+    assert_eq!(rows.len(), 2);
+    let held_sum: i64 = rows
+        .iter()
+        .map(|r| r.get("held").and_then(|v| v.as_i64()).unwrap_or(0))
+        .sum();
+    let used = fair.get("used").and_then(|v| v.as_i64()).unwrap();
+    assert_eq!(held_sum, used, "per-study held must sum to cluster used");
+    for r in rows {
+        let quota = r.get("quota").and_then(|v| v.as_i64()).unwrap();
+        assert_eq!(quota, 4);
+    }
+
+    // Restore from the snapshot file; both continuations agree.
+    let mut restored = MultiPlatform::restore(&snap_path, multi_factory()).unwrap();
+    assert_eq!(restored.now(), t_snap);
+    assert_eq!(restored.scheduler().events_processed(), events_snap);
+    restored.run_to_completion(1_000.0);
+    platform.run_to_completion(1_000.0);
+    let a = platform.into_outcome();
+    let b = restored.into_outcome();
+    assert_eq!(a.end_time, b.end_time);
+    assert_eq!(a.events_processed, b.events_processed);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
