@@ -1,0 +1,198 @@
+//! §Perf scale: 64-study coordinator throughput, quiet fast-restore, and
+//! live-document render cost — the hot paths this repo's multi-tenant
+//! story depends on, measured end to end and written to
+//! `BENCH_perf_scale.json` for the CI regression gate
+//! (`cargo run --release --bin bench_gate`, see README §Performance).
+//!
+//!     cargo bench --bench perf_scale
+
+use std::time::Instant;
+
+use chopt::cluster::{Cluster, Owner};
+use chopt::config::ChoptConfig;
+use chopt::coordinator::{
+    MultiPlatform, StopAndGoPolicy, StudyManifest, StudyScheduler, StudySpec,
+};
+use chopt::trainer::surrogate::SurrogateTrainer;
+use chopt::trainer::Trainer;
+use chopt::util::bench::{BenchJson, Bencher};
+
+const STUDIES: usize = 64;
+const CLUSTER_GPUS: usize = 128;
+
+fn study_config(seed: u64) -> ChoptConfig {
+    let text = format!(
+        r#"{{
+          "h_params": {{
+            "lr": {{"parameters": [0.005, 0.09], "distribution": "log_uniform",
+                    "type": "float", "p_range": [0.001, 0.2]}},
+            "momentum": {{"parameters": [0.5, 0.99], "distribution": "uniform",
+                    "type": "float", "p_range": [0.1, 0.999]}}
+          }},
+          "measure": "test/accuracy",
+          "order": "descending",
+          "step": 10,
+          "population": 4,
+          "tune": {{"random": {{}}}},
+          "termination": {{"max_session_number": 48}},
+          "model": "surrogate:resnet",
+          "max_epochs": 40,
+          "max_gpus": 2,
+          "seed": {seed}
+        }}"#
+    );
+    ChoptConfig::from_json_str(&text).unwrap()
+}
+
+fn scale_manifest() -> StudyManifest {
+    let studies = (0..STUDIES)
+        .map(|i| StudySpec {
+            name: format!("study-{i:03}"),
+            config: study_config(10_000 + i as u64),
+            quota: CLUSTER_GPUS / STUDIES,
+            submit_at: 0.0,
+        })
+        .collect();
+    StudyManifest {
+        cluster_gpus: CLUSTER_GPUS,
+        studies,
+        policy: StopAndGoPolicy::default(),
+        trace: None,
+        master_period: 60.0,
+        horizon: 400.0 * 24.0 * 3600.0,
+        borrow: true,
+    }
+}
+
+fn factory(study: usize, id: u64) -> Box<dyn Trainer> {
+    Box::new(SurrogateTrainer::new(((study as u64 + 1) << 16) ^ id)) as Box<dyn Trainer>
+}
+
+fn main() {
+    let mut out = BenchJson::new("perf_scale");
+    out.note("scenario", "64 studies x 128 GPUs, borrow=true, random+median-stop");
+
+    // -- A. end-to-end 64-study throughput --------------------------------
+    let t0 = Instant::now();
+    let mut sched = StudyScheduler::new(scale_manifest(), factory);
+    sched.run_to_completion();
+    let wall = t0.elapsed().as_secs_f64();
+    let events = sched.events_processed();
+    let end_t = sched.now();
+    let sessions: usize = sched
+        .studies()
+        .iter()
+        .filter_map(|s| s.agent().map(|a| a.sessions.len()))
+        .sum();
+    assert!(sched.is_done(), "scale run must drain");
+    assert!(events > 1_000, "suspiciously few events: {events}");
+    let evps = events as f64 / wall.max(1e-9);
+    println!(
+        "scale run: {STUDIES} studies, {sessions} sessions, {events} events, \
+         {:.2}s wall -> {evps:.0} events/s (virtual end t={end_t:.0}s)",
+        wall
+    );
+    out.metric("scale_studies", STUDIES as f64)
+        .metric("scale_sessions_total", sessions as f64)
+        .metric("scale_events_total", events as f64)
+        .metric("scale_wall_secs", wall)
+        .metric("scale_events_per_sec", evps);
+
+    // -- B. quiet fast-restore at half-run --------------------------------
+    let mut half = StudyScheduler::new(scale_manifest(), factory);
+    half.run_until(end_t / 2.0);
+    let snap = half.snapshot_json();
+    let snap = chopt::util::json::parse(&snap.to_string_pretty()).unwrap();
+    let snap_events = half.events_processed();
+    let t1 = Instant::now();
+    let restored = StudyScheduler::restore(&snap, factory).unwrap();
+    let restore_wall = t1.elapsed().as_secs_f64();
+    assert_eq!(restored.events_processed(), snap_events);
+    assert_eq!(restored.now(), half.now());
+    // Quiet replay retains (almost) no pre-snapshot series points; the
+    // live run accumulated the full history.
+    let live_pts = half.cluster().usage_total.series.len();
+    let replay_pts = restored.cluster().usage_total.series.len();
+    assert!(
+        replay_pts < live_pts,
+        "quiet replay retained {replay_pts} series points vs live {live_pts}"
+    );
+    let restore_evps = snap_events as f64 / restore_wall.max(1e-9);
+    println!(
+        "restore: {snap_events} events replayed in {restore_wall:.3}s \
+         -> {restore_evps:.0} events/s (series pts: live {live_pts}, replay {replay_pts})"
+    );
+    out.metric("restore_events_total", snap_events as f64)
+        .metric("restore_secs", restore_wall)
+        .metric("restore_events_per_sec", restore_evps)
+        .metric("restore_series_pts", replay_pts as f64)
+        .metric("live_series_pts", live_pts as f64);
+
+    // -- C. live-document render cost mid-run ------------------------------
+    let platform = MultiPlatform::from_scheduler(half);
+    let names: Vec<String> = platform
+        .scheduler()
+        .studies()
+        .iter()
+        .map(|s| s.name().to_string())
+        .collect();
+    let mut peak = 0.0f64;
+    let mut total = 0.0f64;
+    let rounds = 5;
+    for _ in 0..rounds {
+        let t = Instant::now();
+        std::hint::black_box(platform.fair_share_doc());
+        std::hint::black_box(platform.status_doc());
+        for name in &names {
+            std::hint::black_box(platform.study_leaderboard_doc(name, 10));
+            std::hint::black_box(platform.study_sessions_doc(name));
+        }
+        let dt = t.elapsed().as_secs_f64();
+        peak = peak.max(dt);
+        total += dt;
+    }
+    let mean = total / rounds as f64;
+    println!(
+        "doc publish cycle ({} studies, all routes): mean {:.2}ms, peak {:.2}ms",
+        names.len(),
+        mean * 1e3,
+        peak * 1e3
+    );
+    out.metric("doc_publish_mean_ms", mean * 1e3)
+        .metric("doc_publish_peak_ms", peak * 1e3);
+
+    // -- D. O(1) accounting vs the pre-PR recompute ------------------------
+    // `Cluster::used`/`held_by_chopt` used to sum the held map on every
+    // call; `recount()` preserves that exact computation so the speedup
+    // of the running counters is measured, not guessed.
+    let owners = 256usize;
+    let mut c = Cluster::new(owners * 4);
+    for i in 0..owners {
+        c.allocate(Owner::Chopt(i as u64), 3, i as f64).unwrap();
+    }
+    let b = Bencher::quick();
+    let r_o1 = b.bench("accounting O(1) counters", || {
+        std::hint::black_box(c.used() + c.held_by_chopt());
+    });
+    let r_re = b.bench("accounting recompute", || {
+        let (total, chopt) = c.recount();
+        std::hint::black_box(total + chopt);
+    });
+    println!("{}", r_o1.report());
+    println!("{}", r_re.report());
+    let speedup = r_re.mean_secs() / r_o1.mean_secs().max(1e-12);
+    println!("accounting speedup at {owners} owners: {speedup:.1}x");
+    assert!(
+        speedup >= 5.0,
+        "O(1) accounting must beat the recompute by >=5x, got {speedup:.1}x"
+    );
+    out.metric("accounting_owners", owners as f64)
+        .metric("accounting_o1_ns", r_o1.mean_secs() * 1e9)
+        .metric("accounting_recompute_ns", r_re.mean_secs() * 1e9)
+        .metric("accounting_speedup_x", speedup);
+
+    match out.save() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+}

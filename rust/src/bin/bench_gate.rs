@@ -1,0 +1,205 @@
+//! CI perf-regression gate over the `BENCH_*.json` trajectory files.
+//!
+//! For every baseline committed under `rust/benches/baselines/`, the gate
+//! loads the freshly-produced `BENCH_<name>.json` (written by the perf
+//! benches into the current directory, or `CHOPT_BENCH_DIR`) and compares
+//! each metric *present in the baseline* against the fresh value:
+//!
+//! * `*_per_sec`, `*_speedup_x`  — higher is better; fail when the fresh
+//!   value drops below `baseline * (1 - tolerance)`.
+//! * `*_us`, `*_ms`, `*_ns`, `*_secs` — lower is better; fail when the
+//!   fresh value rises above `baseline * (1 + tolerance)`.
+//! * `*_total`, `*_count`, `*_pts`, `*_studies`, `*_owners` — expected
+//!   stable (deterministic counters); fail when outside the symmetric
+//!   tolerance band.
+//! * anything else — reported, never enforced.
+//!
+//! Metrics in the fresh file but absent from the baseline are ignored, so
+//! baselines can be adopted incrementally (pin only what a CI runner has
+//! actually produced).  Re-baseline intentionally with:
+//!
+//!     cp BENCH_<name>.json rust/benches/baselines/
+//!
+//! Exit code: 0 = all gated metrics within tolerance, 1 = regression (or
+//! a baseline whose bench output is missing).
+//!
+//!     cargo run --release --bin bench_gate [-- --tolerance 0.2]
+
+use std::path::Path;
+
+use chopt::util::json::{self, Value as Json};
+
+#[derive(Clone, Copy, PartialEq)]
+enum Direction {
+    HigherBetter,
+    LowerBetter,
+    Stable,
+    Informational,
+}
+
+fn direction(key: &str) -> Direction {
+    if key.ends_with("_per_sec") || key.ends_with("_speedup_x") {
+        Direction::HigherBetter
+    } else if key.ends_with("_us")
+        || key.ends_with("_ms")
+        || key.ends_with("_ns")
+        || key.ends_with("_secs")
+    {
+        Direction::LowerBetter
+    } else if key.ends_with("_total")
+        || key.ends_with("_count")
+        || key.ends_with("_pts")
+        || key.ends_with("_studies")
+        || key.ends_with("_owners")
+    {
+        Direction::Stable
+    } else {
+        Direction::Informational
+    }
+}
+
+fn load(path: &Path) -> anyhow::Result<Json> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(json::parse(&text)?)
+}
+
+fn main() {
+    let mut baseline_dir = "rust/benches/baselines".to_string();
+    let mut current_dir = std::env::var("CHOPT_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+    let mut tolerance = 0.20f64;
+    let mut args = std::env::args().skip(1);
+    // Flag values are required and validated: silently falling back to a
+    // default tolerance would run the gate at a different band than the
+    // CI workflow asked for, masking regressions.
+    let value_of = |flag: &str, args: &mut dyn Iterator<Item = String>| -> String {
+        args.next().unwrap_or_else(|| {
+            eprintln!("bench_gate: {flag} requires a value");
+            std::process::exit(2);
+        })
+    };
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--baseline-dir" => baseline_dir = value_of("--baseline-dir", &mut args),
+            "--dir" => current_dir = value_of("--dir", &mut args),
+            "--tolerance" => {
+                let raw = value_of("--tolerance", &mut args);
+                tolerance = raw.parse().unwrap_or_else(|_| {
+                    eprintln!(
+                        "bench_gate: --tolerance expects a fraction like 0.2, got '{raw}'"
+                    );
+                    std::process::exit(2);
+                });
+            }
+            other => {
+                eprintln!("bench_gate: unknown argument '{other}'");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    let mut baselines: Vec<std::path::PathBuf> = match std::fs::read_dir(&baseline_dir) {
+        Ok(entries) => entries
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+                    .unwrap_or(false)
+            })
+            .collect(),
+        Err(_) => Vec::new(),
+    };
+    baselines.sort();
+    if baselines.is_empty() {
+        println!(
+            "bench_gate: no baselines under {baseline_dir} — nothing enforced.\n\
+             Pin one from a fresh bench run: cp BENCH_<name>.json {baseline_dir}/"
+        );
+        return;
+    }
+
+    let mut failures = 0usize;
+    let mut gated = 0usize;
+    for base_path in &baselines {
+        let file = base_path.file_name().unwrap().to_string_lossy().to_string();
+        let base = match load(base_path) {
+            Ok(doc) => doc,
+            Err(e) => {
+                eprintln!("FAIL {file}: unreadable baseline: {e}");
+                failures += 1;
+                continue;
+            }
+        };
+        let cur_path = Path::new(&current_dir).join(&file);
+        let cur = match load(&cur_path) {
+            Ok(doc) => doc,
+            Err(_) => {
+                eprintln!(
+                    "FAIL {file}: no fresh bench output at {} (did the bench run?)",
+                    cur_path.display()
+                );
+                failures += 1;
+                continue;
+            }
+        };
+        let Some(metrics) = base.get("metrics").and_then(|m| m.as_obj()) else {
+            eprintln!("FAIL {file}: baseline has no 'metrics' object");
+            failures += 1;
+            continue;
+        };
+        for (key, bv) in metrics {
+            let Some(base_v) = bv.as_f64() else { continue };
+            let cur_v = cur
+                .get("metrics")
+                .and_then(|m| m.get(key))
+                .and_then(|v| v.as_f64());
+            let Some(cur_v) = cur_v else {
+                eprintln!("FAIL {file}: metric '{key}' missing from fresh output");
+                failures += 1;
+                continue;
+            };
+            let dir = direction(key);
+            let ok = match dir {
+                Direction::HigherBetter => cur_v >= base_v * (1.0 - tolerance),
+                Direction::LowerBetter => cur_v <= base_v * (1.0 + tolerance),
+                Direction::Stable => {
+                    cur_v >= base_v * (1.0 - tolerance) && cur_v <= base_v * (1.0 + tolerance)
+                }
+                Direction::Informational => true,
+            };
+            let label = match dir {
+                Direction::HigherBetter => "higher-better",
+                Direction::LowerBetter => "lower-better",
+                Direction::Stable => "stable",
+                Direction::Informational => "info-only",
+            };
+            if dir == Direction::Informational {
+                println!("  --  {file} {key}: {cur_v} (baseline {base_v}, {label})");
+                continue;
+            }
+            gated += 1;
+            if ok {
+                println!("  ok  {file} {key}: {cur_v} vs baseline {base_v} ({label})");
+            } else {
+                eprintln!(
+                    "FAIL {file} {key}: {cur_v} vs baseline {base_v} ({label}, \
+                     tolerance {:.0}%)",
+                    tolerance * 100.0
+                );
+                failures += 1;
+            }
+        }
+    }
+    println!(
+        "bench_gate: {gated} metric(s) gated across {} baseline file(s), {failures} failure(s)",
+        baselines.len()
+    );
+    if failures > 0 {
+        eprintln!(
+            "bench_gate: regression detected. Intentional change? Re-baseline with:\n\
+             \tcp BENCH_<name>.json {baseline_dir}/"
+        );
+        std::process::exit(1);
+    }
+}

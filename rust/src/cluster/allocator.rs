@@ -22,10 +22,22 @@ pub enum AllocError {
 }
 
 /// The shared cluster.
+///
+/// Accounting is O(1) on the hot path: `used()` / `held_by_chopt()` /
+/// `available_for()` read running counters maintained by
+/// `allocate`/`release` instead of summing the `held` map on every call
+/// (the coordinator consults them on every fill/preempt/master-tick, so
+/// the old O(owners) sums were the dominant per-event cost at 100+
+/// tenants).  A debug-assert invariant keeps the counters equal to a
+/// from-scratch recomputation ([`Cluster::recount`]).
 #[derive(Debug)]
 pub struct Cluster {
     total: usize,
     held: HashMap<Owner, usize>,
+    /// Running Σ `held` over all owners (O(1) `used()`).
+    used_total: usize,
+    /// Running Σ `held` over `Owner::Chopt(_)` (O(1) `held_by_chopt()`).
+    used_chopt: usize,
     /// Per-owner allocation ceilings (multi-tenant quota/fair-share
     /// bookkeeping).  Owners without an entry are unbounded — the
     /// single-study path never sets caps and behaves exactly as before.
@@ -43,6 +55,8 @@ impl Cluster {
         Cluster {
             total: total_gpus,
             held: HashMap::new(),
+            used_total: 0,
+            used_chopt: 0,
             caps: HashMap::new(),
             usage_total: TimeIntegrator::new(),
             usage_external: TimeIntegrator::new(),
@@ -55,11 +69,11 @@ impl Cluster {
     }
 
     pub fn used(&self) -> usize {
-        self.held.values().sum()
+        self.used_total
     }
 
     pub fn available(&self) -> usize {
-        self.total - self.used()
+        self.total - self.used_total
     }
 
     /// Utilization in [0, 1].
@@ -67,7 +81,7 @@ impl Cluster {
         if self.total == 0 {
             0.0
         } else {
-            self.used() as f64 / self.total as f64
+            self.used_total as f64 / self.total as f64
         }
     }
 
@@ -77,11 +91,32 @@ impl Cluster {
 
     /// Total GPUs held by all CHOPT sessions.
     pub fn held_by_chopt(&self) -> usize {
-        self.held
+        self.used_chopt
+    }
+
+    /// From-scratch recomputation of the running counters — the pre-PR
+    /// per-call cost, kept for the debug-assert invariant, the property
+    /// tests, and the scale bench's O(1)-vs-recompute comparison.
+    /// Returns (Σ held over all owners, Σ held over CHOPT owners).
+    pub fn recount(&self) -> (usize, usize) {
+        let total = self.held.values().sum();
+        let chopt = self
+            .held
             .iter()
             .filter(|(o, _)| matches!(o, Owner::Chopt(_)))
             .map(|(_, n)| n)
-            .sum()
+            .sum();
+        (total, chopt)
+    }
+
+    /// Quiet fast-restore hook: suspend (or resume) series retention on
+    /// the usage integrators.  GPU-hour integrals keep accumulating
+    /// either way; only the plotting change-points are suppressed, and
+    /// re-enabling reconciles the series with the live level.
+    pub fn set_series_retention(&mut self, on: bool) {
+        self.usage_total.set_series_retention(on);
+        self.usage_chopt.set_series_retention(on);
+        self.usage_external.set_series_retention(on);
     }
 
     /// Cap `owner`'s total allocation (scheduler quota / borrow target).
@@ -115,6 +150,10 @@ impl Cluster {
             });
         }
         *self.held.entry(owner).or_insert(0) += n;
+        self.used_total += n;
+        if matches!(owner, Owner::Chopt(_)) {
+            self.used_chopt += n;
+        }
         self.record(now);
         Ok(())
     }
@@ -131,6 +170,10 @@ impl Cluster {
             self.held.remove(&owner);
         } else {
             *self.held.get_mut(&owner).unwrap() -= n;
+        }
+        self.used_total -= n;
+        if matches!(owner, Owner::Chopt(_)) {
+            self.used_chopt -= n;
         }
         self.record(now);
         Ok(())
@@ -151,12 +194,17 @@ impl Cluster {
     }
 
     fn record(&mut self, now: SimTime) {
+        debug_assert_eq!(
+            (self.used_total, self.used_chopt),
+            self.recount(),
+            "running counters diverged from the held map"
+        );
+        debug_assert!(self.used_total <= self.total, "GPU conservation violated");
         let ext = self.held_by(Owner::External) as f64;
-        let chopt = self.held_by_chopt() as f64;
+        let chopt = self.used_chopt as f64;
         self.usage_external.set(now, ext);
         self.usage_chopt.set(now, chopt);
         self.usage_total.set(now, ext + chopt);
-        debug_assert!(self.used() <= self.total, "GPU conservation violated");
     }
 
     /// GPU-hours consumed by CHOPT up to `now`.
@@ -309,5 +357,67 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// Property: under random interleavings of allocate / release /
+    /// set_cap / set_external_demand, the O(1) running counters stay
+    /// equal to a from-scratch recomputation over the held map, and
+    /// conservation (`used <= total`) holds throughout.
+    #[test]
+    fn prop_counters_match_recount() {
+        check(
+            "counters-match-recount",
+            Config::default(),
+            |rng: &mut Rng, size| {
+                let total = 1 + rng.index(32);
+                let mut c = Cluster::new(total);
+                let mut t = 0.0;
+                for _ in 0..size * 4 {
+                    t += rng.f64();
+                    match rng.index(4) {
+                        0 => {
+                            let owner = Owner::Chopt(rng.index(4) as u64);
+                            let _ = c.allocate(owner, rng.index(4), t);
+                        }
+                        1 => {
+                            let owner = Owner::Chopt(rng.index(4) as u64);
+                            let held = c.held_by(owner);
+                            if held > 0 {
+                                c.release(owner, 1 + rng.index(held), t)
+                                    .map_err(|e| e.to_string())?;
+                            }
+                        }
+                        2 => {
+                            // Caps gate future grants only; they must
+                            // never perturb the accounting itself.
+                            c.set_cap(Owner::Chopt(rng.index(4) as u64), rng.index(total + 1));
+                        }
+                        _ => {
+                            c.set_external_demand(rng.index(total + 4), t);
+                        }
+                    }
+                    let (sum_total, sum_chopt) = c.recount();
+                    crate::prop_assert!(
+                        c.used() == sum_total,
+                        "used() {} != recount {}",
+                        c.used(),
+                        sum_total
+                    );
+                    crate::prop_assert!(
+                        c.held_by_chopt() == sum_chopt,
+                        "held_by_chopt() {} != recount {}",
+                        c.held_by_chopt(),
+                        sum_chopt
+                    );
+                    crate::prop_assert!(
+                        c.used() <= c.total(),
+                        "used {} > total {}",
+                        c.used(),
+                        c.total()
+                    );
+                }
+                Ok(())
+            },
+        );
     }
 }

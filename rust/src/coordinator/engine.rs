@@ -29,7 +29,7 @@
 
 use crate::cluster::Cluster;
 use crate::config::ChoptConfig;
-use crate::events::{EventQueue, SimTime};
+use crate::events::{DirtySet, EventQueue, SimTime};
 use crate::nsml::SessionId;
 use crate::trainer::Trainer;
 use crate::util::json::Value as Json;
@@ -114,6 +114,11 @@ pub struct SimEngine<'t> {
     /// All work drained (slots empty, queue empty, no pending submits).
     completed: bool,
     horizon_reached: bool,
+    /// Slots whose agents may have appended [`super::agent::AgentEvent`]s
+    /// since the last [`SimEngine::take_dirty_slots`] — lets the
+    /// platform's progress drain visit only touched agents instead of
+    /// scanning every slot after every processed event.
+    dirty: DirtySet,
 }
 
 impl<'t> SimEngine<'t> {
@@ -155,6 +160,7 @@ impl<'t> SimEngine<'t> {
             ticks_pending: 0,
             completed: false,
             horizon_reached: false,
+            dirty: DirtySet::with_len(n_slots),
         };
         engine.assign_idle(0.0);
         engine.evq.schedule_at(0.0, Ev::MasterTick);
@@ -213,6 +219,23 @@ impl<'t> SimEngine<'t> {
     /// Agents currently occupying a slot.
     pub fn active_agents(&self) -> impl Iterator<Item = &Agent> {
         self.slots.iter().flatten()
+    }
+
+    /// Agent currently occupying `slot`, if any.
+    pub fn agent_at(&self, slot: usize) -> Option<&Agent> {
+        self.slots.get(slot).and_then(|s| s.as_ref())
+    }
+
+    /// Drain the list of slots touched since the last call (progress-
+    /// drain bookkeeping; see the `dirty` field).  Agents that moved to
+    /// `done` are *not* listed — the platform tracks those through
+    /// [`SimEngine::done_agents`] growth instead.
+    pub fn take_dirty_slots(&mut self) -> Vec<usize> {
+        self.dirty.take()
+    }
+
+    fn mark_dirty(&mut self, slot: usize) {
+        self.dirty.mark(slot);
     }
 
     /// Every agent the engine ever created: completed first, then active.
@@ -333,6 +356,7 @@ impl<'t> SimEngine<'t> {
                     let mut reqs: Vec<ScheduleReq> = Vec::new();
                     agent.fill(&mut self.cluster, now, &mut reqs);
                     self.slots[slot_idx] = Some(agent);
+                    self.mark_dirty(slot_idx);
                     self.schedule_reqs(slot_idx, reqs);
                 }
             }
@@ -348,9 +372,11 @@ impl<'t> SimEngine<'t> {
     }
 
     fn on_interval(&mut self, t: SimTime, slot: usize, sid: SessionId) {
-        let Some(agent) = self.slots[slot].as_mut() else {
+        if self.slots[slot].is_none() {
             return; // stale event: the slot's agent crashed or finished
-        };
+        }
+        self.mark_dirty(slot);
+        let agent = self.slots[slot].as_mut().unwrap();
         let mut reqs: Vec<ScheduleReq> = Vec::new();
         agent.on_interval_done(sid, &mut self.cluster, t, &mut reqs);
         let finished = agent.finished;
@@ -400,9 +426,11 @@ impl<'t> SimEngine<'t> {
             master_tick(&self.setup.policy, &mut self.cluster, external, &bases, t);
         self.master_log.push(log);
         for (ti, &slot_idx) in active.iter().enumerate() {
-            let Some(agent) = self.slots[slot_idx].as_mut() else {
+            if self.slots[slot_idx].is_none() {
                 continue;
-            };
+            }
+            self.mark_dirty(slot_idx);
+            let agent = self.slots[slot_idx].as_mut().unwrap();
             agent.check_termination(&mut self.cluster, t);
             if agent.finished {
                 self.done.push(self.slots[slot_idx].take().unwrap());
@@ -521,6 +549,18 @@ impl<'t> SimEngine<'t> {
     /// same sequence numbers and same-timestamp ties break identically.
     /// `make_trainer` must be the factory the original run used (the
     /// trainers' internal state is reproduced by replay, not serialized).
+    ///
+    /// The replay runs **quiet**: integrator series retention is
+    /// suspended until the target event count is reached (then reconciled
+    /// once), so a restore does O(1) work per replayed event.  The
+    /// trade-off is explicit: a restored engine's plotting series
+    /// (`cluster_doc`'s live Fig. 8 view) starts at the snapshot point —
+    /// the pre-snapshot utilization *curve* is not rebuilt, only its
+    /// integral.  GPU-hour accounting stays exact, no doc rendering or
+    /// event-log writes happen during replay (the platform layer attaches
+    /// its log and reconciles cursors after the engine is rebuilt), and
+    /// no simulation decision changes: the event sequence is
+    /// bit-identical (verified by the snapshot-determinism tests).
     pub fn restore(
         doc: &Json,
         make_trainer: impl FnMut(u64) -> Box<dyn Trainer> + 't,
@@ -535,6 +575,7 @@ impl<'t> SimEngine<'t> {
             .ok_or_else(|| anyhow::anyhow!("snapshot missing 'events_processed'"))?
             as u64;
         let mut engine = SimEngine::new(setup, make_trainer);
+        engine.cluster.set_series_retention(false);
         if let Some(online) = doc.get("online").and_then(|v| v.as_arr()) {
             for o in online {
                 let at = o
@@ -558,6 +599,7 @@ impl<'t> SimEngine<'t> {
             }
         }
         engine.replay_to(target)?;
+        engine.cluster.set_series_retention(true);
         Ok(engine)
     }
 }

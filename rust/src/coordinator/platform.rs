@@ -15,6 +15,7 @@
 //! * online [`Platform::submit`] — users joining the shared cluster while
 //!   other sessions are mid-flight.
 
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -26,10 +27,30 @@ use crate::trainer::Trainer;
 use crate::util::json::Value as Json;
 use crate::viz::export;
 
-use super::agent::AgentEvent;
+use super::agent::{Agent, AgentEvent};
 use super::driver::{SimOutcome, SimSetup};
 use super::engine::SimEngine;
 use super::scheduler::{MultiOutcome, StudyManifest, StudyScheduler, StudySpec};
+
+/// Cached leaderboard document keyed by the engine's processed-event
+/// count: when nothing was processed between renders, the previous
+/// document is returned instead of rebuilding it.
+struct LbCache {
+    processed: u64,
+    k: usize,
+    doc: Json,
+}
+
+/// Leaderboard rows of *completed* agents.  Their leaderboards are
+/// frozen, so the rows are rendered once when an agent finishes and
+/// reused by every later render — a render only rebuilds rows for the
+/// (bounded) active agent set, not the whole run history.
+#[derive(Default)]
+struct DoneRows {
+    upto: usize,
+    k: usize,
+    rows: Vec<Json>,
+}
 
 /// A live run: engine + event log + snapshot cadence + view builders.
 pub struct Platform<'t> {
@@ -45,6 +66,10 @@ pub struct Platform<'t> {
     /// grow again, so drains skip them (keeps the per-event drain in
     /// `drive_until` bounded by the active agent count, not run history).
     done_drained: usize,
+    /// Render caches (interior-mutable so the doc methods stay `&self`
+    /// for the publish loops).
+    lb_cache: RefCell<Option<LbCache>>,
+    done_rows: RefCell<DoneRows>,
     /// Progress events emitted over the platform's lifetime.
     pub progress_events: u64,
 }
@@ -66,6 +91,8 @@ impl<'t> Platform<'t> {
             snapshot_every: 3600.0,
             last_snapshot_t: 0.0,
             done_drained: 0,
+            lb_cache: RefCell::new(None),
+            done_rows: RefCell::new(DoneRows::default()),
             progress_events: 0,
         }
     }
@@ -214,21 +241,26 @@ impl<'t> Platform<'t> {
     /// event log (one JSON object per pool transition).  When called once
     /// per engine step (see [`Platform::drive_until`]) `engine.now()` is
     /// exactly the virtual time the transitions happened.
+    ///
+    /// Only agents the engine marked *dirty* since the last drain are
+    /// visited (plus newly-completed ones, for their final events), so a
+    /// drain after one interval event touches one agent — not every slot.
     fn drain_progress(&mut self) {
         let now = self.engine.now();
         let mut fresh: Vec<Json> = Vec::new();
         // Newly-completed agents get one final drain; long-done ones are
         // skipped (their event vectors are immutable).
-        let done = self.engine.done_agents();
-        let newly_done = &done[self.done_drained.min(done.len())..];
-        for agent in newly_done.iter().chain(self.engine.active_agents()) {
-            let seen = self.cursors.get(&agent.id).copied().unwrap_or(0);
-            for ev in &agent.events[seen..] {
-                fresh.push(agent_event_json(agent.id, ev, now));
-            }
-            self.cursors.insert(agent.id, agent.events.len());
+        let done_len = self.engine.done_agents().len();
+        for agent in &self.engine.done_agents()[self.done_drained.min(done_len)..] {
+            catch_up_cursor(&mut self.cursors, agent.id, agent, now, |doc| fresh.push(doc));
         }
-        self.done_drained = done.len();
+        self.done_drained = done_len;
+        for slot in self.engine.take_dirty_slots() {
+            let Some(agent) = self.engine.agent_at(slot) else {
+                continue; // the touched agent finished (drained above)
+            };
+            catch_up_cursor(&mut self.cursors, agent.id, agent, now, |doc| fresh.push(doc));
+        }
         self.progress_events += fresh.len() as u64;
         for doc in fresh {
             self.log_json(doc);
@@ -282,45 +314,49 @@ impl<'t> Platform<'t> {
             platform.cursors.insert(agent.id, agent.events.len());
         }
         platform.done_drained = platform.engine.done_agents().len();
+        // Replay marked every touched slot dirty; the cursors above
+        // already account for those events, so drop the marks.
+        platform.engine.take_dirty_slots();
         platform.last_snapshot_t = platform.engine.now();
         Ok(platform)
     }
 
     // -- live views --------------------------------------------------------
 
-    /// All NSML sessions across all agents, done agents first.
-    pub fn sessions(&self) -> Vec<NsmlSession> {
+    /// All NSML sessions across all agents (done agents first), by
+    /// reference — the publish-loop variant.  Rendering 10k+ sessions per
+    /// refresh must not deep-clone them first.
+    pub fn sessions_ref(&self) -> Vec<&NsmlSession> {
         let mut out = Vec::new();
         for agent in self.engine.all_agents() {
             let mut ss: Vec<&NsmlSession> = agent.sessions.values().collect();
             ss.sort_by_key(|s| s.id);
-            out.extend(ss.into_iter().cloned());
+            out.extend(ss);
         }
         out
     }
 
+    /// Owned-clone variant of [`Platform::sessions_ref`], kept for final
+    /// exports that outlive the platform.
+    pub fn sessions(&self) -> Vec<NsmlSession> {
+        self.sessions_ref().into_iter().cloned().collect()
+    }
+
     /// Live leaderboard rows (top `k` across every agent's sessions).
+    ///
+    /// Incremental: rows for completed agents are rendered once and
+    /// cached (their leaderboards are frozen), and the whole document is
+    /// cached against the engine's processed-event count — a publish loop
+    /// polling an idle engine gets the cached document back instead of a
+    /// rebuild over every agent in the run's history.
     pub fn leaderboard_doc(&self, k: usize) -> Json {
-        let mut rows: Vec<Json> = Vec::new();
-        for agent in self.engine.all_agents() {
-            let order = agent.cfg.order;
-            for &(sid, best) in agent.leaderboard.top(k) {
-                let s = &agent.sessions[&sid];
-                rows.push(
-                    Json::obj()
-                        // Ids are serialized as strings: session ids pack
-                        // (chopt_id << 32 | counter) into a u64, which an
-                        // f64 corrupts past 2^53 (same class as the trace
-                        // seed PR 1 fixed).
-                        .with("chopt", Json::Str(agent.id.to_string()))
-                        .with("session", Json::Str(sid.0.to_string()))
-                        .with("best", Json::Num(best))
-                        .with("epochs", Json::Num(s.epochs as f64))
-                        .with("status", Json::Str(s.status.name().to_string()))
-                        .with("order", Json::Str(order.name().to_string())),
-                );
+        let processed = self.engine.events_processed();
+        if let Some(c) = self.lb_cache.borrow().as_ref() {
+            if c.processed == processed && c.k == k {
+                return c.doc.clone();
             }
         }
+        let mut rows = self.collect_leaderboard_rows(k);
         // Cross-agent merge: best first under the first agent's order
         // (platform runs share a measure in practice).  NaN-safe.
         let descending = self.order() == crate::config::Order::Descending;
@@ -337,23 +373,52 @@ impl<'t> Platform<'t> {
             }
         });
         rows.truncate(k);
-        Json::obj()
+        let doc = Json::obj()
             .with("t", Json::Num(self.engine.now()))
-            .with("rows", Json::Arr(rows))
+            .with("rows", Json::Arr(rows));
+        *self.lb_cache.borrow_mut() = Some(LbCache {
+            processed,
+            k,
+            doc: doc.clone(),
+        });
+        doc
     }
 
-    /// Sessions document in the `SessionStore` format `chopt serve` uses.
-    pub fn sessions_doc(&self) -> Json {
-        let mut store = SessionStore::new();
-        for agent in self.engine.all_agents() {
-            let mut ss: Vec<&NsmlSession> = agent.sessions.values().collect();
-            ss.sort_by_key(|s| s.id);
-            store.put_run(
-                &format!("chopt-{}", agent.id),
-                ss.into_iter().cloned().collect(),
-            );
+    /// Candidate rows for the merged leaderboard: cached frozen rows for
+    /// done agents plus freshly-rendered rows for active ones.
+    fn collect_leaderboard_rows(&self, k: usize) -> Vec<Json> {
+        let done = self.engine.done_agents();
+        let mut cache = self.done_rows.borrow_mut();
+        if cache.k != k {
+            cache.rows.clear();
+            cache.upto = 0;
+            cache.k = k;
         }
-        store.to_json()
+        let upto = cache.upto.min(done.len());
+        for agent in &done[upto..] {
+            agent_leaderboard_rows(agent, k, &mut cache.rows);
+        }
+        cache.upto = done.len();
+        let mut rows = cache.rows.clone();
+        for agent in self.engine.active_agents() {
+            agent_leaderboard_rows(agent, k, &mut rows);
+        }
+        rows
+    }
+
+    /// Sessions document in the `SessionStore` format `chopt serve` uses
+    /// (rendered from references — no session clones).
+    pub fn sessions_doc(&self) -> Json {
+        let runs: Vec<(String, Vec<&NsmlSession>)> = self
+            .engine
+            .all_agents()
+            .map(|agent| {
+                let mut ss: Vec<&NsmlSession> = agent.sessions.values().collect();
+                ss.sort_by_key(|s| s.id);
+                (format!("chopt-{}", agent.id), ss)
+            })
+            .collect();
+        SessionStore::doc_from_refs(&runs)
     }
 
     /// The run's measure order (first agent's; platform runs share one).
@@ -367,17 +432,18 @@ impl<'t> Platform<'t> {
 
     /// Parallel-coordinates document over all sessions (axes from `space`).
     pub fn parallel_doc(&self, space: &crate::hparam::Space) -> Json {
-        self.parallel_doc_from(space, &self.sessions())
+        self.parallel_doc_from(space, &self.sessions_ref())
     }
 
     /// Same, over a caller-held session list — lets a publish loop collect
-    /// [`Platform::sessions`] once instead of deep-cloning per document.
+    /// [`Platform::sessions_ref`] once and render every document from the
+    /// same borrowed set.
     pub fn parallel_doc_from(
         &self,
         space: &crate::hparam::Space,
-        sessions: &[NsmlSession],
+        sessions: &[&NsmlSession],
     ) -> Json {
-        export::parallel_coords_doc(space, sessions, self.order(), "live")
+        export::parallel_coords_doc_refs(space, sessions, self.order(), "live")
     }
 
     /// Cluster utilization view (live Fig. 8).
@@ -610,24 +676,28 @@ impl<'t> MultiPlatform<'t> {
         open_study_log(&self.log_dir, &mut self.logs, idx, name)
     }
 
+    /// Drain fresh agent events into the per-study logs.  Only studies
+    /// the scheduler marked dirty since the last drain are visited — the
+    /// per-event drain in `drive_until` is O(touched studies), not
+    /// O(all studies), which matters at 64+ tenants.
     fn drain_progress(&mut self) {
         if self.log_dir.is_none() {
+            // No sink: discard the marks so the list cannot grow across
+            // a long unlogged run.
+            self.sched.take_dirty_studies();
             return;
         }
         let now = self.sched.now();
         let mut fresh: Vec<(usize, String, Json)> = Vec::new();
-        for (idx, st) in self.sched.studies().iter().enumerate() {
+        for idx in self.sched.take_dirty_studies() {
+            let Some(st) = self.sched.studies().get(idx) else {
+                continue;
+            };
             let Some(agent) = st.agent() else { continue };
-            let seen = self.cursors.get(&idx).copied().unwrap_or(0);
-            for ev in &agent.events[seen..] {
-                fresh.push((
-                    idx,
-                    st.name().to_string(),
-                    agent_event_json(agent.id, ev, now)
-                        .with("study", Json::Str(st.name().to_string())),
-                ));
-            }
-            self.cursors.insert(idx, agent.events.len());
+            let name = st.name().to_string();
+            catch_up_cursor(&mut self.cursors, idx, agent, now, |doc| {
+                fresh.push((idx, name.clone(), doc.with("study", Json::Str(name.clone()))));
+            });
         }
         self.progress_events += fresh.len() as u64;
         for (idx, name, doc) in fresh {
@@ -671,11 +741,19 @@ impl<'t> MultiPlatform<'t> {
         let mut platform = MultiPlatform::from_scheduler(sched);
         // Events up to the snapshot were already logged by the original
         // run; start the cursors at the replayed state.
-        for (idx, st) in platform.sched.studies().iter().enumerate() {
-            if let Some(agent) = st.agent() {
-                platform.cursors.insert(idx, agent.events.len());
-            }
+        let ends: Vec<(usize, usize)> = platform
+            .sched
+            .studies()
+            .iter()
+            .enumerate()
+            .filter_map(|(idx, st)| st.agent().map(|a| (idx, a.events.len())))
+            .collect();
+        for (idx, len) in ends {
+            platform.cursors.insert(idx, len);
         }
+        // Replay marked every touched study dirty; the cursors already
+        // account for those events, so drop the marks.
+        platform.sched.take_dirty_studies();
         platform.last_snapshot_t = platform.sched.now();
         Ok(platform)
     }
@@ -756,18 +834,16 @@ impl<'t> MultiPlatform<'t> {
             .with("rows", Json::Arr(rows))
     }
 
-    /// Sessions document for one study in the `SessionStore` format.
+    /// Sessions document for one study in the `SessionStore` format
+    /// (rendered from references — no session clones).
     pub fn study_sessions_doc(&self, name: &str) -> Json {
-        let mut store = SessionStore::new();
+        let mut runs: Vec<(String, Vec<&NsmlSession>)> = Vec::new();
         if let Some(agent) = self.sched.study(name).and_then(|st| st.agent()) {
             let mut ss: Vec<&NsmlSession> = agent.sessions.values().collect();
             ss.sort_by_key(|s| s.id);
-            store.put_run(
-                &format!("{name}-chopt-{}", agent.id),
-                ss.into_iter().cloned().collect(),
-            );
+            runs.push((format!("{name}-chopt-{}", agent.id), ss));
         }
-        store.to_json()
+        SessionStore::doc_from_refs(&runs)
     }
 
     /// One-object run status across all studies.
@@ -788,6 +864,45 @@ impl<'t> MultiPlatform<'t> {
             .with("studies_done", Json::Num(done as f64))
             .with("utilization", Json::Num(sched.cluster().utilization()))
             .with("progress_events", Json::Num(self.progress_events as f64))
+    }
+}
+
+/// Cursor catch-up shared by the progress drains: render `agent`'s
+/// events past the cursor stored under `key` into `emit`, then advance
+/// the cursor to the end of the agent's event vector.  Keys are agent
+/// ids for [`Platform`] and study indices for [`MultiPlatform`].
+fn catch_up_cursor<K: std::hash::Hash + Eq + Copy>(
+    cursors: &mut HashMap<K, usize>,
+    key: K,
+    agent: &Agent,
+    now: SimTime,
+    mut emit: impl FnMut(Json),
+) {
+    let seen = cursors.get(&key).copied().unwrap_or(0);
+    for ev in &agent.events[seen..] {
+        emit(agent_event_json(agent.id, ev, now));
+    }
+    cursors.insert(key, agent.events.len());
+}
+
+/// Render one agent's top-`k` leaderboard rows (shared by the live
+/// merged leaderboard and its done-agent row cache).  Ids are serialized
+/// as strings: session ids pack (chopt_id << 32 | counter) into a u64,
+/// which an f64 corrupts past 2^53 (same class as the trace seed PR 1
+/// fixed).
+fn agent_leaderboard_rows(agent: &Agent, k: usize, rows: &mut Vec<Json>) {
+    let order = agent.cfg.order;
+    for &(sid, best) in agent.leaderboard.top(k) {
+        let s = &agent.sessions[&sid];
+        rows.push(
+            Json::obj()
+                .with("chopt", Json::Str(agent.id.to_string()))
+                .with("session", Json::Str(sid.0.to_string()))
+                .with("best", Json::Num(best))
+                .with("epochs", Json::Num(s.epochs as f64))
+                .with("status", Json::Str(s.status.name().to_string()))
+                .with("order", Json::Str(order.name().to_string())),
+        );
     }
 }
 

@@ -36,7 +36,7 @@
 
 use crate::cluster::{Cluster, ExternalLoadTrace, Owner};
 use crate::config::ChoptConfig;
-use crate::events::{EventQueue, SimTime};
+use crate::events::{DirtySet, EventQueue, SimTime};
 use crate::nsml::SessionId;
 use crate::trainer::Trainer;
 use crate::util::json::Value as Json;
@@ -323,6 +323,10 @@ pub struct StudyScheduler<'t> {
     completed: bool,
     horizon_reached: bool,
     make_trainer: Box<dyn FnMut(usize, u64) -> Box<dyn Trainer> + 't>,
+    /// Studies whose agents may have appended events since the last
+    /// [`StudyScheduler::take_dirty_studies`] — lets the multi-platform
+    /// progress drain skip the O(studies) scan per processed event.
+    dirty: DirtySet,
 }
 
 impl<'t> StudyScheduler<'t> {
@@ -349,6 +353,7 @@ impl<'t> StudyScheduler<'t> {
                 last_target: 0,
             })
             .collect();
+        let n_studies = manifest.studies.len();
         let mut sched = StudyScheduler {
             cluster: Cluster::new(manifest.cluster_gpus),
             manifest,
@@ -360,6 +365,7 @@ impl<'t> StudyScheduler<'t> {
             completed: false,
             horizon_reached: false,
             make_trainer: Box::new(make_trainer),
+            dirty: DirtySet::with_len(n_studies),
         };
         sched.activate_ready(0.0);
         sched.evq.schedule_at(0.0, SEv::MasterTick);
@@ -404,6 +410,17 @@ impl<'t> StudyScheduler<'t> {
     /// Virtual time of the next pending event, if any.
     pub fn next_event_time(&self) -> Option<SimTime> {
         self.evq.peek_time()
+    }
+
+    /// Drain the list of studies touched since the last call (progress-
+    /// drain bookkeeping; see the `dirty` field).  First-touch order,
+    /// deterministic given the event order.
+    pub fn take_dirty_studies(&mut self) -> Vec<usize> {
+        self.dirty.take()
+    }
+
+    fn mark_dirty(&mut self, study: usize) {
+        self.dirty.mark(study);
     }
 
     // -- drivers -----------------------------------------------------------
@@ -490,6 +507,7 @@ impl<'t> StudyScheduler<'t> {
             agent: None,
             last_target: 0,
         });
+        self.dirty.push_slot();
         self.evq.schedule_at(at, SEv::Submit { idx });
         self.submits_pending += 1;
         self.completed = false;
@@ -542,6 +560,7 @@ impl<'t> StudyScheduler<'t> {
             };
             agent.on_interval_done(sid, &mut self.cluster, t, &mut reqs);
         }
+        self.mark_dirty(study);
         self.schedule_reqs(study, reqs);
     }
 
@@ -618,6 +637,7 @@ impl<'t> StudyScheduler<'t> {
         let mut grows: Vec<(usize, usize)> = Vec::new();
         for (k, &i) in active.iter().enumerate() {
             let target = finals.get(k).copied().unwrap_or(self.studies[i].quota);
+            self.mark_dirty(i);
             let mut reqs: Vec<ScheduleReq> = Vec::new();
             {
                 let st = &mut self.studies[i];
@@ -678,6 +698,7 @@ impl<'t> StudyScheduler<'t> {
             agent.fill(&mut self.cluster, now, &mut reqs);
             self.studies[i].last_target = agent.gpu_target();
             self.studies[i].agent = Some(agent);
+            self.mark_dirty(i);
             self.schedule_reqs(i, reqs);
         }
     }
@@ -786,7 +807,14 @@ impl<'t> StudyScheduler<'t> {
     }
 
     /// Rebuild a scheduler from [`StudyScheduler::snapshot_json`] output.
-    /// `make_trainer` must be the factory the original run used.
+    /// `make_trainer` must be the factory the original run used.  Like
+    /// [`super::engine::SimEngine::restore`], the replay runs quiet:
+    /// integrator series retention is suspended until the target event
+    /// count is reached, then reconciled once.  A restored run's
+    /// utilization *plot* therefore starts at the snapshot point (the
+    /// pre-snapshot curve is not rebuilt; its integral is exact), and
+    /// simulation decisions are unaffected (snapshot-determinism tests
+    /// verify this).
     pub fn restore(
         doc: &Json,
         make_trainer: impl FnMut(usize, u64) -> Box<dyn Trainer> + 't,
@@ -804,6 +832,7 @@ impl<'t> StudyScheduler<'t> {
             .ok_or_else(|| anyhow::anyhow!("snapshot missing 'events_processed'"))?
             as u64;
         let mut sched = StudyScheduler::new(manifest, make_trainer);
+        sched.cluster.set_series_retention(false);
         if let Some(online) = doc.get("online").and_then(|v| v.as_arr()) {
             for (i, o) in online.iter().enumerate() {
                 let at = o
@@ -826,6 +855,7 @@ impl<'t> StudyScheduler<'t> {
             }
         }
         sched.replay_to(target)?;
+        sched.cluster.set_series_retention(true);
         Ok(sched)
     }
 }

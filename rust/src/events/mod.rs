@@ -117,15 +117,81 @@ impl<E> EventQueue<E> {
     }
 }
 
+/// First-touch-ordered dirty-index tracking, shared by the engine
+/// (slots) and the multi-study scheduler (studies): O(1) `mark`, O(k)
+/// `take` over the k touched indices.  The platform's progress drains
+/// consume it to visit only agents whose event vectors actually grew,
+/// instead of scanning every tenant after every processed event.
+#[derive(Debug, Default)]
+pub struct DirtySet {
+    flags: Vec<bool>,
+    /// Marked indices in first-touch order (deterministic given the
+    /// marking order, i.e. the event order).
+    list: Vec<usize>,
+}
+
+impl DirtySet {
+    pub fn with_len(n: usize) -> DirtySet {
+        DirtySet {
+            flags: vec![false; n],
+            list: Vec::new(),
+        }
+    }
+
+    /// Track one more index (collections that grow, e.g. online studies).
+    pub fn push_slot(&mut self) {
+        self.flags.push(false);
+    }
+
+    /// Mark `i` touched; out-of-range indices are ignored.
+    pub fn mark(&mut self, i: usize) {
+        if let Some(flag) = self.flags.get_mut(i) {
+            if !*flag {
+                *flag = true;
+                self.list.push(i);
+            }
+        }
+    }
+
+    /// Drain the touched indices (first-touch order), clearing the marks.
+    pub fn take(&mut self) -> Vec<usize> {
+        for &i in &self.list {
+            self.flags[i] = false;
+        }
+        std::mem::take(&mut self.list)
+    }
+}
+
 /// Integrates a step function of virtual time — used for GPU-hours
 /// accounting (`value` = allocated GPUs) and utilization curves (Fig. 8).
-#[derive(Debug, Clone, Default)]
+///
+/// The integral is maintained incrementally (running sum + last point),
+/// so `set` and `integral_until` are O(1) regardless of run length.  The
+/// plotting `series` only records *level changes* (consecutive same-value
+/// points are dropped), and can be suspended entirely for quiet replay
+/// via [`TimeIntegrator::set_series_retention`].
+#[derive(Debug, Clone)]
 pub struct TimeIntegrator {
     last_t: SimTime,
     last_v: f64,
     integral: f64,
     /// (time, value) change points, for plotting.
     pub series: Vec<(SimTime, f64)>,
+    /// When false, `set` keeps integrating but retains no series points
+    /// (quiet fast-restore replays suppress plot retention).
+    retain_series: bool,
+}
+
+impl Default for TimeIntegrator {
+    fn default() -> Self {
+        TimeIntegrator {
+            last_t: 0.0,
+            last_v: 0.0,
+            integral: 0.0,
+            series: Vec::new(),
+            retain_series: true,
+        }
+    }
 }
 
 impl TimeIntegrator {
@@ -138,10 +204,25 @@ impl TimeIntegrator {
         debug_assert!(t >= self.last_t, "time went backwards in integrator");
         self.integral += self.last_v * (t - self.last_t).max(0.0);
         self.last_t = t;
-        if self.series.last().map(|&(_, lv)| lv) != Some(v) {
+        if self.retain_series && self.series.last().map(|&(_, lv)| lv) != Some(v) {
             self.series.push((t, v));
         }
         self.last_v = v;
+    }
+
+    /// Toggle series retention.  Turning retention back on reconciles the
+    /// series with the live level: the current (time, value) point is
+    /// appended when it differs from the stored tail, so plots of a
+    /// quietly-replayed run resume from a coherent level.  The integral
+    /// is unaffected either way.
+    pub fn set_series_retention(&mut self, on: bool) {
+        if on && !self.retain_series {
+            let tail = self.series.last().map(|&(_, lv)| lv);
+            if tail != Some(self.last_v) && !(tail.is_none() && self.last_v == 0.0) {
+                self.series.push((self.last_t, self.last_v));
+            }
+        }
+        self.retain_series = on;
     }
 
     /// Integral of the step function up to time `t` (value·seconds).
@@ -217,5 +298,51 @@ mod tests {
         i.set(0.0, 1.0);
         i.set(5.0, 1.0); // no change
         assert_eq!(i.series.len(), 1);
+    }
+
+    #[test]
+    fn retention_off_keeps_integral_and_reconciles_on_reenable() {
+        let mut i = TimeIntegrator::new();
+        i.set(0.0, 4.0);
+        assert_eq!(i.series.len(), 1);
+        i.set_series_retention(false);
+        i.set(10.0, 2.0);
+        i.set(20.0, 6.0);
+        // No points retained while quiet, but the integral is exact.
+        assert_eq!(i.series.len(), 1);
+        assert!((i.integral_until(20.0) - (4.0 * 10.0 + 2.0 * 10.0)).abs() < 1e-9);
+        // Re-enabling appends the current level so plotting resumes
+        // coherently; further sets extend the series normally.
+        i.set_series_retention(true);
+        assert_eq!(i.series.last().copied(), Some((20.0, 6.0)));
+        i.set(30.0, 6.0); // deduped against the reconcile point
+        assert_eq!(i.series.len(), 2);
+        i.set(40.0, 1.0);
+        assert_eq!(i.series.last().copied(), Some((40.0, 1.0)));
+        // 0..10 @4 + 10..20 @2 + 20..40 @6 = 40 + 20 + 120.
+        assert!((i.integral_until(40.0) - 180.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reenabling_retention_on_untouched_integrator_adds_no_point() {
+        let mut i = TimeIntegrator::new();
+        i.set_series_retention(false);
+        i.set_series_retention(true);
+        assert!(i.series.is_empty());
+    }
+
+    #[test]
+    fn dirty_set_marks_once_in_first_touch_order() {
+        let mut d = DirtySet::with_len(3);
+        d.mark(2);
+        d.mark(0);
+        d.mark(2); // dedup
+        d.mark(9); // out of range: ignored
+        assert_eq!(d.take(), vec![2, 0]);
+        assert_eq!(d.take(), Vec::<usize>::new());
+        d.push_slot(); // index 3 now tracked
+        d.mark(3);
+        d.mark(1);
+        assert_eq!(d.take(), vec![3, 1]);
     }
 }

@@ -531,7 +531,9 @@ fn cmd_serve_live(m: &chopt::util::cli::Matches, port: u16) -> anyhow::Result<()
     });
     let server = viz::server::VizServer::start(port, viz::server::Routes::new())?;
     let publish = |p: &Platform| {
-        let sessions = p.sessions();
+        // Borrowed sessions: the refresh loop renders every document from
+        // one reference collection instead of deep-cloning per publish.
+        let sessions = p.sessions_ref();
         server.put_json("/api/sessions.json", &p.sessions_doc());
         server.put_json("/api/leaderboard.json", &p.leaderboard_doc(10));
         server.put_json("/api/parallel.json", &p.parallel_doc_from(&space, &sessions));

@@ -1,8 +1,22 @@
 //! NSML leaderboard: ranks sessions by their best objective measure.
 
+use std::collections::HashMap;
+
 use crate::config::Order;
 
 use super::session::{NsmlSession, SessionId};
+
+/// Deterministic total order over (session, score) entries: better score
+/// first, id tie-break.
+fn cmp_entries(order: Order, a: &(SessionId, f64), b: &(SessionId, f64)) -> std::cmp::Ordering {
+    if order.better(a.1, b.1) {
+        std::cmp::Ordering::Less
+    } else if order.better(b.1, a.1) {
+        std::cmp::Ordering::Greater
+    } else {
+        a.0.cmp(&b.0)
+    }
+}
 
 /// A ranked view over sessions (paper §2.3: "comparison of performance
 /// metrics between models via a leaderboard").
@@ -12,6 +26,12 @@ pub struct Leaderboard {
     pub order: Order,
     /// (session, best measure), best first.
     entries: Vec<(SessionId, f64)>,
+    /// Current score of every ranked session, so `update`/`remove`/`rank`
+    /// can locate an entry by binary search on its (score, id) key
+    /// instead of a linear scan — the coordinator calls `update` on every
+    /// reported interval, which at 10k+ sessions made the old O(n) scan a
+    /// hot-path cost (see perf_coordinator / perf_scale).
+    scores: HashMap<SessionId, f64>,
 }
 
 impl Leaderboard {
@@ -20,27 +40,41 @@ impl Leaderboard {
             measure: measure.to_string(),
             order,
             entries: Vec::new(),
+            scores: HashMap::new(),
         }
     }
 
     /// Rebuild from a session set.
     pub fn rebuild<'a>(&mut self, sessions: impl Iterator<Item = &'a NsmlSession>) {
         self.entries.clear();
+        self.scores.clear();
         for s in sessions {
             if let Some(best) = s.best_measure(self.order) {
                 self.entries.push((s.id, best));
+                self.scores.insert(s.id, best);
             }
         }
         let order = self.order;
-        self.entries.sort_by(|a, b| {
-            if order.better(a.1, b.1) {
-                std::cmp::Ordering::Less
-            } else if order.better(b.1, a.1) {
-                std::cmp::Ordering::Greater
-            } else {
-                a.0.cmp(&b.0) // deterministic tie-break
+        self.entries.sort_by(|a, b| cmp_entries(order, a, b));
+    }
+
+    /// Locate `id`'s current index: O(log n) by its stored (score, id)
+    /// key.  NaN scores fall back to a linear scan — `Order::better` is
+    /// not a total order over NaN, so binary search can miss them.
+    fn find_index(&self, id: SessionId) -> Option<usize> {
+        let &score = self.scores.get(&id)?;
+        if !score.is_nan() {
+            let key = (id, score);
+            if let Ok(i) = self
+                .entries
+                .binary_search_by(|probe| cmp_entries(self.order, probe, &key))
+            {
+                if self.entries[i].0 == id {
+                    return Some(i);
+                }
             }
-        });
+        }
+        self.entries.iter().position(|(sid, _)| *sid == id)
     }
 
     /// Incremental update for one session: O(log n) rank search plus one
@@ -50,31 +84,23 @@ impl Leaderboard {
         let Some(best) = session.best_measure(self.order) else {
             return;
         };
-        let order = self.order;
-        let cmp = |a: &(SessionId, f64), b: &(SessionId, f64)| {
-            if order.better(a.1, b.1) {
-                std::cmp::Ordering::Less
-            } else if order.better(b.1, a.1) {
-                std::cmp::Ordering::Greater
-            } else {
-                a.0.cmp(&b.0)
-            }
-        };
-        // Remove the stale entry (linear scan — ids are unsorted), then
-        // binary-search the insertion point in the sorted-by-score list.
-        if let Some(pos) = self.entries.iter().position(|(id, _)| *id == session.id) {
+        if let Some(pos) = self.find_index(session.id) {
             self.entries.remove(pos);
         }
         let entry = (session.id, best);
         let idx = self
             .entries
-            .binary_search_by(|probe| cmp(probe, &entry))
+            .binary_search_by(|probe| cmp_entries(self.order, probe, &entry))
             .unwrap_or_else(|i| i);
         self.entries.insert(idx, entry);
+        self.scores.insert(session.id, best);
     }
 
     pub fn remove(&mut self, id: SessionId) {
-        self.entries.retain(|(sid, _)| *sid != id);
+        if let Some(pos) = self.find_index(id) {
+            self.entries.remove(pos);
+        }
+        self.scores.remove(&id);
     }
 
     pub fn best(&self) -> Option<(SessionId, f64)> {
@@ -88,7 +114,7 @@ impl Leaderboard {
 
     /// Rank of a session (0 = best).
     pub fn rank(&self, id: SessionId) -> Option<usize> {
-        self.entries.iter().position(|(sid, _)| *sid == id)
+        self.find_index(id)
     }
 
     /// Is `id` in the bottom `frac` fraction? (PBT truncation exploit.)
@@ -171,5 +197,33 @@ mod tests {
         let mut lb = Leaderboard::new("m", Order::Descending);
         lb.rebuild(vec![session(1, &[])].iter());
         assert!(lb.is_empty());
+    }
+
+    /// The indexed lookup must agree with a naive linear scan under
+    /// churn: repeated re-ranks, removals, ties, and re-insertions.
+    #[test]
+    fn indexed_lookup_matches_linear_scan_under_churn() {
+        let mut lb = Leaderboard::new("m", Order::Descending);
+        let mut rng = crate::util::rng::Rng::new(0xBEEF);
+        let mut sessions: Vec<NsmlSession> =
+            (0..64u64).map(|i| session(i, &[(i % 7) as f64])).collect();
+        lb.rebuild(sessions.iter());
+        for step in 0..500usize {
+            let k = rng.index(sessions.len());
+            match rng.index(3) {
+                0 => {
+                    // Ties are common on purpose: (score % 5) collides.
+                    sessions[k].report(step + 2, rng.index(5) as f64, 1.0);
+                    lb.update(&sessions[k]);
+                }
+                1 => lb.remove(SessionId(k as u64)),
+                _ => lb.update(&sessions[k]),
+            }
+            for probe in 0..sessions.len() as u64 {
+                let id = SessionId(probe);
+                let linear = lb.entries.iter().position(|(sid, _)| *sid == id);
+                assert_eq!(lb.rank(id), linear, "rank diverged for {id:?} at step {step}");
+            }
+        }
     }
 }

@@ -32,15 +32,37 @@ impl SessionStore {
             .runs
             .iter()
             .map(|(label, sessions)| {
-                Json::obj()
-                    .with("label", Json::Str(label.clone()))
-                    .with(
-                        "sessions",
-                        Json::Arr(sessions.iter().map(|s| s.to_json()).collect()),
-                    )
+                let refs: Vec<&NsmlSession> = sessions.iter().collect();
+                SessionStore::run_json(label, &refs)
             })
             .collect();
         Json::obj().with("runs", Json::Arr(runs))
+    }
+
+    /// One run as the `{"label", "sessions"}` object [`Self::to_json`]
+    /// emits — shared with live views that render straight from borrowed
+    /// sessions, so the owned and borrowed encodings cannot drift.
+    pub fn run_json(label: &str, sessions: &[&NsmlSession]) -> Json {
+        Json::obj()
+            .with("label", Json::Str(label.to_string()))
+            .with(
+                "sessions",
+                Json::Arr(sessions.iter().map(|s| s.to_json()).collect()),
+            )
+    }
+
+    /// Full store-shaped document from borrowed runs — the live platform
+    /// documents render through this instead of cloning every session
+    /// into a temporary store per refresh.
+    pub fn doc_from_refs(runs: &[(String, Vec<&NsmlSession>)]) -> Json {
+        Json::obj().with(
+            "runs",
+            Json::Arr(
+                runs.iter()
+                    .map(|(label, ss)| SessionStore::run_json(label, ss))
+                    .collect(),
+            ),
+        )
     }
 
     pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {

@@ -23,7 +23,13 @@ pub struct Asha {
     rungs: Vec<usize>,
     /// Results recorded per rung (measure only; promotion compares ranks).
     rung_results: Vec<Vec<f64>>,
-    /// Session -> current rung index.
+    /// Session -> current rung membership.  A session is removed the
+    /// moment ASHA stops it (not-promoted, or top rung reached), so a
+    /// late report from a Stop-and-Go revival that trained past that
+    /// point resolves to an *unknown* session and is stopped without
+    /// touching any rung's promotion accounting (mirrors the Hyperband
+    /// straggler fix from PR 2 — the old `unwrap_or(&0)` default counted
+    /// such stragglers into rung 0 again).
     session_rung: HashMap<SessionId, usize>,
 }
 
@@ -93,7 +99,12 @@ impl Tuner for Asha {
     }
 
     fn report(&mut self, r: Report, _rng: &mut Rng) -> Decision {
-        let rung = *self.session_rung.get(&r.id).unwrap_or(&0);
+        // Membership gate: sessions ASHA already retired (stopped at a
+        // rung, or finished the top rung) have no entry — their late
+        // reports must not leak into rung accounting.
+        let Some(&rung) = self.session_rung.get(&r.id) else {
+            return Decision::Stop;
+        };
         let budget = self.rungs[rung];
         if r.epoch < budget {
             return Decision::Continue { budget };
@@ -255,5 +266,77 @@ mod tests {
             &mut rng,
         );
         assert_eq!(d2, Decision::Stop);
+    }
+
+    /// Regression (mirrors the Hyperband straggler fix): a session ASHA
+    /// already stopped can be revived by generic Stop-and-Go and report
+    /// again later.  That late report used to default to rung 0
+    /// (`unwrap_or(&0)`) and be counted into rung 0's results — an
+    /// absurdly good straggler would even *promote*, contaminating the
+    /// next rung's accounting.  It must be stopped without touching any
+    /// rung's results.
+    #[test]
+    fn straggler_report_does_not_contaminate_rung_accounting() {
+        let mut a = mk();
+        let mut rng = Rng::new(5);
+        // Fill rung 0 with a strong cohort so a weak newcomer stops.
+        for i in 0..6 {
+            let t = a.next_trial(&mut rng).unwrap();
+            a.register(SessionId(i), &t);
+            a.report(
+                Report {
+                    id: SessionId(i),
+                    epoch: 1,
+                    measure: 0.9,
+                },
+                &mut rng,
+            );
+        }
+        let t = a.next_trial(&mut rng).unwrap();
+        a.register(SessionId(50), &t);
+        let d = a.report(
+            Report {
+                id: SessionId(50),
+                epoch: 1,
+                measure: 0.01,
+            },
+            &mut rng,
+        );
+        assert_eq!(d, Decision::Stop);
+        assert!(!a.session_rung.contains_key(&SessionId(50)));
+
+        // The stopped session straggles back in (a Stop-and-Go revival
+        // that trained past rung 0) with an absurdly good result.
+        let counted_before: Vec<usize> = a.rung_results.iter().map(|r| r.len()).collect();
+        let d = a.report(
+            Report {
+                id: SessionId(50),
+                epoch: 3,
+                measure: 1e9, // would promote straight to rung 1 if counted
+            },
+            &mut rng,
+        );
+        assert_eq!(d, Decision::Stop, "retired straggler must be stopped");
+        let counted_after: Vec<usize> = a.rung_results.iter().map(|r| r.len()).collect();
+        assert_eq!(
+            counted_before, counted_after,
+            "straggler leaked into rung accounting"
+        );
+        assert!(!a.session_rung.contains_key(&SessionId(50)));
+
+        // A session that was never registered at all resolves the same way.
+        let d = a.report(
+            Report {
+                id: SessionId(999),
+                epoch: 1,
+                measure: 0.99,
+            },
+            &mut rng,
+        );
+        assert_eq!(d, Decision::Stop);
+        assert_eq!(
+            counted_after,
+            a.rung_results.iter().map(|r| r.len()).collect::<Vec<_>>()
+        );
     }
 }

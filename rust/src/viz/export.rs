@@ -15,6 +15,18 @@ pub fn parallel_coords_doc(
     order: Order,
     run_label: &str,
 ) -> Json {
+    let refs: Vec<&NsmlSession> = sessions.iter().collect();
+    parallel_coords_doc_refs(space, &refs, order, run_label)
+}
+
+/// Reference-taking core of [`parallel_coords_doc`] — the live publish
+/// loop renders 10k+ sessions per refresh and must not clone them first.
+pub fn parallel_coords_doc_refs(
+    space: &Space,
+    sessions: &[&NsmlSession],
+    order: Order,
+    run_label: &str,
+) -> Json {
     let mut axes: Vec<Json> = space
         .defs
         .iter()

@@ -189,6 +189,69 @@ fn horizon_terminated_run_restores() {
 }
 
 #[test]
+fn quiet_restore_suppresses_series_but_changes_no_decisions() {
+    // Reference run, straight through.
+    fn series_len(e: &SimEngine) -> usize {
+        e.cluster().usage_total.series.len()
+    }
+    let mut reference = SimEngine::new(setup(1, 2, 6), surrogate(29));
+    reference.run_until(5_000.0);
+    assert!(!reference.is_done(), "snapshot must be taken mid-flight");
+    let live_pts = series_len(&reference);
+    let snap = reference.snapshot_json();
+    let snap = chopt::util::json::parse(&snap.to_string_pretty()).unwrap();
+
+    // Quiet restore: the replay must not re-accumulate the utilization
+    // history it is about to discard...
+    let mut restored = SimEngine::restore(&snap, surrogate(29)).unwrap();
+    let replay_pts = series_len(&restored);
+    assert!(
+        replay_pts < live_pts,
+        "quiet replay kept {replay_pts} series points vs live {live_pts}"
+    );
+    // ...but integrals (GPU-hour accounting) are preserved exactly...
+    let t = reference.now();
+    assert!(
+        (reference.cluster().chopt_gpu_hours(t) - restored.cluster().chopt_gpu_hours(t)).abs()
+            < 1e-9,
+        "quiet replay changed the GPU-hours integral"
+    );
+    // ...and post-restore the series records level changes again.
+    restored.run_to_completion();
+    reference.run_to_completion();
+    assert!(series_len(&restored) > replay_pts);
+    let a = reference.into_outcome();
+    let b = restored.into_outcome();
+    assert_eq!(outcome_key(&a), outcome_key(&b));
+    assert!((a.gpu_hours() - b.gpu_hours()).abs() < 1e-9);
+}
+
+#[test]
+fn leaderboard_doc_is_cached_until_the_engine_advances() {
+    let mut platform = Platform::new(setup(2, 2, 6), surrogate(37));
+    platform.run_until(5_000.0);
+    // Idle engine: repeated renders return the identical document.
+    let a = platform.leaderboard_doc(10);
+    let b = platform.leaderboard_doc(10);
+    assert_eq!(a, b);
+    // A different k is a different document (cache must not leak k).
+    let top1 = platform.leaderboard_doc(1);
+    assert_eq!(top1.get("rows").unwrap().as_arr().unwrap().len(), 1);
+    // Advancing invalidates the cache.
+    platform.run_until(30_000.0);
+    let c = platform.leaderboard_doc(10);
+    assert_ne!(a, c, "leaderboard must advance with the engine");
+    // The by-reference session views agree with the owned ones.
+    let refs = platform.sessions_ref();
+    let owned = platform.sessions();
+    assert_eq!(refs.len(), owned.len());
+    for (r, o) in refs.iter().zip(owned.iter()) {
+        assert_eq!(r.id, o.id);
+        assert_eq!(r.epochs, o.epochs);
+    }
+}
+
+#[test]
 fn failure_injection_fires_exactly_once() {
     // Regression for the stale-failure bug: a (t, slot) failure record
     // used to be re-applied on *every* master tick with t <= now, so the

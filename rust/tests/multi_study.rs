@@ -329,6 +329,18 @@ fn multi_study_snapshot_restore_is_deterministic() {
     let mut restored = StudyScheduler::restore(&snap, multi_factory()).unwrap();
     assert_eq!(restored.now(), original.now());
     assert_eq!(restored.events_processed(), original.events_processed());
+    // Quiet fast-restore: the replay keeps integrals exact but does not
+    // re-accumulate the pre-snapshot utilization series.
+    assert!(
+        restored.cluster().usage_total.series.len() < original.cluster().usage_total.series.len(),
+        "quiet replay should retain fewer series points than the live run"
+    );
+    assert!(
+        (restored.cluster().chopt_gpu_hours(restored.now())
+            - original.cluster().chopt_gpu_hours(original.now()))
+        .abs()
+            < 1e-9
+    );
     restored.run_to_completion();
     let restored_out = restored.into_outcome();
 
