@@ -50,6 +50,7 @@ fn scale_manifest() -> StudyManifest {
             name: format!("study-{i:03}"),
             config: study_config(10_000 + i as u64),
             quota: CLUSTER_GPUS / STUDIES,
+            priority: 1.0,
             submit_at: 0.0,
         })
         .collect();

@@ -67,6 +67,13 @@ pub struct Agent {
     budgets: HashMap<SessionId, usize>,
     /// Buffered fresh trial (revival-first policy never drops tuner state).
     pending_trial: Option<Trial>,
+    /// Sessions parked by an operator pause command.  While any of them
+    /// still sits in the stop pool, the "no live sessions left" half of
+    /// the `max_session_number` / `tuner_done` termination checks is
+    /// held off — an operator pause is suspended work, not a drained run
+    /// (tuner rung barriers are *not* in this set; their parked-only
+    /// drain still terminates as before).
+    user_paused: std::collections::HashSet<SessionId>,
     pub finished: bool,
     pub events: Vec<AgentEvent>,
     /// Virtual time when the CHOPT session finished.
@@ -95,6 +102,7 @@ impl Agent {
             planned: HashMap::new(),
             budgets: HashMap::new(),
             pending_trial: None,
+            user_paused: std::collections::HashSet::new(),
             finished: false,
             events: Vec::new(),
             finished_at: None,
@@ -146,6 +154,15 @@ impl Agent {
         });
     }
 
+    /// Operator-paused work still waiting in the stop pool (resumed or
+    /// killed sessions drop out via the pool check, so stale ids in the
+    /// marker set never hold the run open).
+    fn operator_paused_pending(&self) -> bool {
+        self.user_paused
+            .iter()
+            .any(|&sid| self.pools.locate(sid) == Some(Pool::Stop))
+    }
+
     /// Termination checks that don't need a fresh report.
     fn termination_reached(&self, now: SimTime) -> Option<&'static str> {
         let t = &self.cfg.termination;
@@ -154,8 +171,12 @@ impl Agent {
                 return Some("time");
             }
         }
+        // "No live sessions left" must not count operator-paused work as
+        // drained — a paused run is held open until resumed (explicit
+        // time/threshold terminations above still apply).
+        let drained = self.pools.live_count() == 0 && !self.operator_paused_pending();
         if let Some(n) = t.max_session_number {
-            if self.created >= n && self.pools.live_count() == 0 {
+            if self.created >= n && drained {
                 return Some("max_session_number");
             }
         }
@@ -166,7 +187,7 @@ impl Agent {
                 }
             }
         }
-        if self.tuner.done() && self.pools.live_count() == 0 {
+        if self.tuner.done() && drained {
             return Some("tuner_done");
         }
         None
@@ -352,6 +373,10 @@ impl Agent {
         if let Some(b) = new_budget {
             self.budgets.insert(sid, b);
         }
+        // Any kind of revival clears the operator-pause marker; if the
+        // session is early-stopped again later, that is ordinary tuner
+        // state and must not hold the run open.
+        self.user_paused.remove(&sid);
         self.events.push(AgentEvent::Revived(sid));
         self.plan_interval(sid, out);
         true
@@ -601,6 +626,104 @@ impl Agent {
         out: &mut Vec<ScheduleReq>,
     ) {
         self.shrink_to_target(target, true, cluster, now, out);
+    }
+
+    // -- operator commands (the /api/v1 control plane) ----------------------
+
+    /// Operator pause: park a live session.  Parked sessions are
+    /// invisible to the generic Stop-and-Go revival, so the session stays
+    /// down until an explicit resume (or a tuner promotion) — pausing
+    /// into the plain stop pool would be undone by the very next `fill`.
+    pub fn pause_session_cmd(
+        &mut self,
+        sid: SessionId,
+        cluster: &mut Cluster,
+        now: SimTime,
+    ) -> bool {
+        if self.finished || self.pools.locate(sid) != Some(Pool::Live) {
+            return false;
+        }
+        if self.suspend_session(sid, true, cluster, now) {
+            self.user_paused.insert(sid);
+            self.events.push(AgentEvent::Preempted(sid, Pool::Stop));
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Operator resume: revive a stopped/parked session immediately when
+    /// the GPU target and cluster allow it; otherwise lift any `parked`
+    /// mark and flag it preempted, so the next `fill` with capacity
+    /// revives it first.
+    pub fn resume_session_cmd(
+        &mut self,
+        sid: SessionId,
+        cluster: &mut Cluster,
+        now: SimTime,
+        out: &mut Vec<ScheduleReq>,
+    ) -> bool {
+        if self.finished || self.pools.locate(sid) != Some(Pool::Stop) {
+            return false;
+        }
+        let per = self.cfg.gpus_per_session.max(1);
+        if self.gpus_in_use() + per <= self.gpu_target
+            && self.resume_session(sid, None, cluster, now, out)
+        {
+            return true;
+        }
+        // No capacity right now: the session stays in `user_paused` (and
+        // keeps the run open) until a later fill actually revives it —
+        // `resume_session` clears the marker at that point.
+        self.pools.prioritize_revival(sid)
+    }
+
+    /// Operator stop: kill a session outright (live or stopped) into the
+    /// dead pool, releasing its GPUs and trainer state.  Unlike the
+    /// tuner's `Decision::Stop` this bypasses the `stop_ratio` draw — an
+    /// explicit kill is never resumable.  The tuner is told via
+    /// [`Tuner::retire`] so barrier tuners (Hyperband) adjust their rung
+    /// accounting instead of waiting forever on a report that will never
+    /// come.
+    pub fn stop_session_cmd(
+        &mut self,
+        sid: SessionId,
+        cluster: &mut Cluster,
+        now: SimTime,
+    ) -> bool {
+        if self.finished {
+            return false;
+        }
+        self.user_paused.remove(&sid);
+        match self.pools.locate(sid) {
+            Some(Pool::Live) => {
+                let per = self.cfg.gpus_per_session.max(1);
+                self.pools.kill_live(sid);
+                let _ = cluster.release(Owner::Chopt(self.tenant), per, now);
+                self.planned.remove(&sid);
+                if let Some(s) = self.sessions.get_mut(&sid) {
+                    let _ = s.transition(SessionStatus::Dead, now);
+                }
+                self.trainer.drop_state(sid);
+                self.tuner.retire(sid);
+                self.events.push(AgentEvent::EarlyStopped(sid, Pool::Dead));
+                true
+            }
+            Some(Pool::Stop) => {
+                if self.pools.kill_stopped(sid) {
+                    if let Some(s) = self.sessions.get_mut(&sid) {
+                        let _ = s.transition(SessionStatus::Dead, now);
+                    }
+                    self.trainer.drop_state(sid);
+                    self.tuner.retire(sid);
+                    self.events.push(AgentEvent::Evicted(sid));
+                    true
+                } else {
+                    false
+                }
+            }
+            _ => false,
+        }
     }
 
     /// Stop everything and mark the CHOPT session finished.

@@ -47,8 +47,9 @@ enum Ev {
     Interval { slot: usize, sid: SessionId },
     /// Periodic master-agent control tick.
     MasterTick,
-    /// An online submission (index into `SimEngine::online`) arrives.
-    Submit { idx: usize },
+    /// A recorded external input (index into `SimEngine::inputs`) —
+    /// an online submission or a control-plane command — takes effect.
+    Input { idx: usize },
 }
 
 /// A failure-injection record.  `consumed` guards against the stale-failure
@@ -62,17 +63,66 @@ struct Failure {
     consumed: bool,
 }
 
-/// A CHOPT session submitted while the engine was live (vs. the setup's
-/// initial batch).  Kept for snapshot/replay: `after_events` records how
-/// many events the engine had processed when `submit` was called, so a
-/// restore re-issues the submit at the same point — reproducing the exact
-/// event-queue sequence numbers and therefore identical same-timestamp
-/// tie-breaking.
+/// An external input that arrived while the engine was live: an online
+/// session submission or a control-plane command (`/api/v1/commands`).
 #[derive(Debug, Clone)]
-struct OnlineSubmission {
-    config: ChoptConfig,
+enum InputKind {
+    /// Submit a new CHOPT session (vs. the setup's initial batch).
+    Submit(ChoptConfig),
+    /// Park a live NSML session until an explicit resume.
+    PauseSession(SessionId),
+    /// Revive a paused/stopped NSML session (priority-queued if no GPU
+    /// is free at apply time).
+    ResumeSession(SessionId),
+    /// Kill an NSML session outright.
+    StopSession(SessionId),
+}
+
+/// One recorded input, kept whole for snapshot/replay: `after_events`
+/// records how many events the engine had processed when the input was
+/// enqueued, so a restore re-issues it at the same point — reproducing
+/// the exact event-queue sequence numbers and therefore identical
+/// same-timestamp tie-breaking.  Commands are replay inputs for the same
+/// reason online submissions are: a pause changes every event after it,
+/// so a snapshot that forgot commands could never replay past one.
+#[derive(Debug, Clone)]
+struct RecordedInput {
+    kind: InputKind,
     at: SimTime,
     after_events: u64,
+}
+
+impl RecordedInput {
+    fn to_json(&self) -> Json {
+        let base = Json::obj()
+            .with("at", Json::Num(self.at))
+            .with("after_events", Json::Num(self.after_events as f64));
+        // Session ids serialize as strings (u64 through f64 corrupts
+        // past 2^53 — the same class the progress stream fixed).
+        let sid = |s: &SessionId| Json::Str(s.0.to_string());
+        match &self.kind {
+            InputKind::Submit(cfg) => base
+                .with("kind", Json::Str("submit".into()))
+                .with("config", cfg.to_json()),
+            InputKind::PauseSession(s) => base
+                .with("kind", Json::Str("pause_session".into()))
+                .with("session", sid(s)),
+            InputKind::ResumeSession(s) => base
+                .with("kind", Json::Str("resume_session".into()))
+                .with("session", sid(s)),
+            InputKind::StopSession(s) => base
+                .with("kind", Json::Str("stop_session".into()))
+                .with("session", sid(s)),
+        }
+    }
+}
+
+/// Parse the `"session"` field of a recorded input (the shared wire form
+/// — see [`SessionId::from_json`]).
+fn session_field(doc: &Json) -> anyhow::Result<SessionId> {
+    doc.get("session")
+        .and_then(SessionId::from_json)
+        .ok_or_else(|| anyhow::anyhow!("recorded input missing a valid 'session' id"))
 }
 
 /// What one [`SimEngine::step`] call did.
@@ -104,9 +154,11 @@ pub struct SimEngine<'t> {
     /// Consumable runtime view of `setup.failures`.
     failures: Vec<Failure>,
     make_trainer: Box<dyn FnMut(u64) -> Box<dyn Trainer> + 't>,
-    /// Online submissions in arrival order (snapshot/replay input).
-    online: Vec<OnlineSubmission>,
-    /// Scheduled-but-unprocessed `Ev::Submit` events.
+    /// External inputs (submissions + commands) in arrival order — the
+    /// snapshot/replay input log.
+    inputs: Vec<RecordedInput>,
+    /// Scheduled-but-unprocessed *submission* inputs (commands pending
+    /// on a drained engine don't keep it alive; a submission does).
     submits_pending: usize,
     /// Scheduled-but-unprocessed `Ev::MasterTick` events; when the chain
     /// dies (everything drained) a later submit re-arms it.
@@ -155,7 +207,7 @@ impl<'t> SimEngine<'t> {
                 .collect(),
             setup,
             make_trainer: Box::new(make_trainer),
-            online: Vec::new(),
+            inputs: Vec::new(),
             submits_pending: 0,
             ticks_pending: 0,
             completed: false,
@@ -310,17 +362,74 @@ impl<'t> SimEngine<'t> {
         if self.horizon_reached {
             return None;
         }
-        let at = at.max(self.evq.now());
-        let idx = self.online.len();
-        self.online.push(OnlineSubmission {
-            config,
-            at,
-            after_events: self.evq.processed(),
-        });
-        self.evq.schedule_at(at, Ev::Submit { idx });
+        let at = self.enqueue_input(InputKind::Submit(config), at);
         self.submits_pending += 1;
         self.completed = false;
         Some(at)
+    }
+
+    /// Record an input and schedule its effect event (clamped to now).
+    /// Recorded inputs are the replay log — see [`RecordedInput`].
+    fn enqueue_input(&mut self, kind: InputKind, at: SimTime) -> SimTime {
+        let at = at.max(self.evq.now());
+        let idx = self.inputs.len();
+        self.inputs.push(RecordedInput {
+            kind,
+            at,
+            after_events: self.evq.processed(),
+        });
+        self.evq.schedule_at(at, Ev::Input { idx });
+        at
+    }
+
+    /// Active slot currently holding `sid`, if any.
+    fn slot_of(&self, sid: SessionId) -> Option<usize> {
+        (0..self.slots.len()).find(|&i| {
+            self.slots[i]
+                .as_ref()
+                .map(|a| a.sessions.contains_key(&sid))
+                .unwrap_or(false)
+        })
+    }
+
+    /// Pool the session sits in right now (active agents only).
+    fn pool_of(&self, sid: SessionId) -> Option<super::pools::Pool> {
+        self.slot_of(sid)
+            .and_then(|i| self.slots[i].as_ref())
+            .and_then(|a| a.pools.locate(sid))
+    }
+
+    /// Control-plane pause: park a live session at the next event
+    /// boundary (it stays down until an explicit resume).  Returns the
+    /// effective time, or `None` if the session is not live right now or
+    /// the horizon has been reached.
+    pub fn pause_session(&mut self, sid: SessionId, at: SimTime) -> Option<SimTime> {
+        if self.horizon_reached || self.pool_of(sid) != Some(super::pools::Pool::Live) {
+            return None;
+        }
+        Some(self.enqueue_input(InputKind::PauseSession(sid), at))
+    }
+
+    /// Control-plane resume of a paused/stopped session.  Returns `None`
+    /// if the session is not in a stop pool right now.
+    pub fn resume_session(&mut self, sid: SessionId, at: SimTime) -> Option<SimTime> {
+        if self.horizon_reached || self.pool_of(sid) != Some(super::pools::Pool::Stop) {
+            return None;
+        }
+        Some(self.enqueue_input(InputKind::ResumeSession(sid), at))
+    }
+
+    /// Control-plane stop: kill a live or paused session outright.
+    pub fn stop_session(&mut self, sid: SessionId, at: SimTime) -> Option<SimTime> {
+        if self.horizon_reached
+            || !matches!(
+                self.pool_of(sid),
+                Some(super::pools::Pool::Live | super::pools::Pool::Stop)
+            )
+        {
+            return None;
+        }
+        Some(self.enqueue_input(InputKind::StopSession(sid), at))
     }
 
     // -- event dispatch ----------------------------------------------------
@@ -367,7 +476,7 @@ impl<'t> SimEngine<'t> {
         match ev {
             Ev::Interval { slot, sid } => self.on_interval(t, slot, sid),
             Ev::MasterTick => self.on_master_tick(t),
-            Ev::Submit { idx } => self.on_submit(t, idx),
+            Ev::Input { idx } => self.on_input(t, idx),
         }
     }
 
@@ -449,15 +558,47 @@ impl<'t> SimEngine<'t> {
         }
     }
 
-    fn on_submit(&mut self, t: SimTime, idx: usize) {
-        self.submits_pending = self.submits_pending.saturating_sub(1);
-        let config = self.online[idx].config.clone();
-        self.queue.submit(config, t);
-        // Re-arm the master-tick chain if it died (engine had drained);
-        // the tick at `t` assigns the new session and resumes the cadence.
-        if self.ticks_pending == 0 {
-            self.evq.schedule_at(t, Ev::MasterTick);
-            self.ticks_pending += 1;
+    /// Apply a recorded input at its event boundary.  Command inputs
+    /// re-validate against the state *now* (it may have shifted since the
+    /// enqueue-time check) and no-op when stale — both the original run
+    /// and a replay see the same state here, so both no-op identically.
+    fn on_input(&mut self, t: SimTime, idx: usize) {
+        let kind = self.inputs[idx].kind.clone();
+        match kind {
+            InputKind::Submit(config) => {
+                self.submits_pending = self.submits_pending.saturating_sub(1);
+                self.queue.submit(config, t);
+                // Re-arm the master-tick chain if it died (engine had
+                // drained); the tick at `t` assigns the new session and
+                // resumes the cadence.
+                if self.ticks_pending == 0 {
+                    self.evq.schedule_at(t, Ev::MasterTick);
+                    self.ticks_pending += 1;
+                }
+            }
+            InputKind::PauseSession(sid) => {
+                if let Some(slot) = self.slot_of(sid) {
+                    self.mark_dirty(slot);
+                    let agent = self.slots[slot].as_mut().unwrap();
+                    agent.pause_session_cmd(sid, &mut self.cluster, t);
+                }
+            }
+            InputKind::ResumeSession(sid) => {
+                if let Some(slot) = self.slot_of(sid) {
+                    self.mark_dirty(slot);
+                    let mut reqs: Vec<ScheduleReq> = Vec::new();
+                    let agent = self.slots[slot].as_mut().unwrap();
+                    agent.resume_session_cmd(sid, &mut self.cluster, t, &mut reqs);
+                    self.schedule_reqs(slot, reqs);
+                }
+            }
+            InputKind::StopSession(sid) => {
+                if let Some(slot) = self.slot_of(sid) {
+                    self.mark_dirty(slot);
+                    let agent = self.slots[slot].as_mut().unwrap();
+                    agent.stop_session_cmd(sid, &mut self.cluster, t);
+                }
+            }
         }
     }
 
@@ -495,19 +636,11 @@ impl<'t> SimEngine<'t> {
     /// Serialize the run's replay inputs plus a progress summary.  A
     /// restore rebuilds the engine from the recorded inputs and replays the
     /// same number of events, reproducing the exact state (given the same
-    /// trainer factory).
+    /// trainer factory).  The input log covers online submissions *and*
+    /// control-plane commands (pause/resume/stop), so a run steered over
+    /// `/api/v1/commands` stays restorable.
     pub fn snapshot_json(&self) -> Json {
-        let online = Json::Arr(
-            self.online
-                .iter()
-                .map(|o| {
-                    Json::obj()
-                        .with("at", Json::Num(o.at))
-                        .with("after_events", Json::Num(o.after_events as f64))
-                        .with("config", o.config.to_json())
-                })
-                .collect(),
-        );
+        let inputs = Json::Arr(self.inputs.iter().map(|i| i.to_json()).collect());
         let progress = Json::obj()
             .with("queue_len", Json::Num(self.queue_len() as f64))
             .with("active_agents", Json::Num(self.active_agents().count() as f64))
@@ -517,11 +650,11 @@ impl<'t> SimEngine<'t> {
                 self.best().map(|(_, _, m)| Json::Num(m)).unwrap_or(Json::Null),
             );
         Json::obj()
-            .with("version", Json::Num(1.0))
+            .with("version", Json::Num(2.0))
             .with("t", Json::Num(self.evq.now()))
             .with("events_processed", Json::Num(self.evq.processed() as f64))
             .with("setup", self.setup.to_json())
-            .with("online", online)
+            .with("inputs", inputs)
             .with("progress", progress)
     }
 
@@ -576,26 +709,41 @@ impl<'t> SimEngine<'t> {
             as u64;
         let mut engine = SimEngine::new(setup, make_trainer);
         engine.cluster.set_series_retention(false);
-        if let Some(online) = doc.get("online").and_then(|v| v.as_arr()) {
-            for o in online {
-                let at = o
-                    .get("at")
-                    .and_then(|v| v.as_f64())
-                    .ok_or_else(|| anyhow::anyhow!("online submission missing 'at'"))?;
-                let after_events = o
-                    .get("after_events")
-                    .and_then(|v| v.as_i64())
-                    .unwrap_or(0) as u64;
-                let cfg = ChoptConfig::from_json(
-                    o.get("config")
-                        .ok_or_else(|| anyhow::anyhow!("online submission missing 'config'"))?,
-                )?;
-                engine.replay_to(after_events.min(target))?;
-                if engine.submit(cfg, at).is_none() {
-                    anyhow::bail!(
-                        "replay hit the horizon before a recorded submission at t={at}"
-                    );
+        // "inputs" is the v2 unified log; v1 snapshots recorded online
+        // submissions under "online" (kind implied).
+        let recorded = doc
+            .get("inputs")
+            .or_else(|| doc.get("online"))
+            .and_then(|v| v.as_arr())
+            .unwrap_or(&[]);
+        for o in recorded {
+            let at = o
+                .get("at")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("recorded input missing 'at'"))?;
+            let after_events = o
+                .get("after_events")
+                .and_then(|v| v.as_i64())
+                .unwrap_or(0) as u64;
+            engine.replay_to(after_events.min(target))?;
+            let kind = o.get("kind").and_then(|v| v.as_str()).unwrap_or("submit");
+            let reissued = match kind {
+                "submit" => {
+                    let cfg = ChoptConfig::from_json(
+                        o.get("config")
+                            .ok_or_else(|| anyhow::anyhow!("submit input missing 'config'"))?,
+                    )?;
+                    engine.submit(cfg, at)
                 }
+                "pause_session" => engine.pause_session(session_field(o)?, at),
+                "resume_session" => engine.resume_session(session_field(o)?, at),
+                "stop_session" => engine.stop_session(session_field(o)?, at),
+                other => anyhow::bail!("unknown recorded input kind '{other}'"),
+            };
+            if reissued.is_none() {
+                anyhow::bail!(
+                    "replay could not re-issue a recorded '{kind}' input at t={at} — snapshot does not match inputs"
+                );
             }
         }
         engine.replay_to(target)?;

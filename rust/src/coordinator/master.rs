@@ -61,7 +61,7 @@ impl StopAndGoPolicy {
         })
     }
 
-    /// Compute per-agent GPU targets.
+    /// Compute per-agent GPU targets (all agents weighted equally).
     ///
     /// `external_demand` is what non-CHOPT users want *right now* (from
     /// the trace / arrival stream); `bases` are the per-agent configured
@@ -72,35 +72,71 @@ impl StopAndGoPolicy {
         external_demand: usize,
         bases: &[usize],
     ) -> Vec<usize> {
+        self.targets_weighted(total_gpus, external_demand, bases, &[])
+    }
+
+    /// Weighted fair share: like [`StopAndGoPolicy::targets`], but each
+    /// agent's share of *redistributed* capacity scales with its weight
+    /// (`weights[i]`; missing or non-positive entries count as 1.0, so an
+    /// empty slice reproduces the unweighted behavior exactly).
+    ///
+    /// * Under-utilized: the idle surplus is split ∝ weight (floor per
+    ///   agent — fractional remainders are left idle, matching the
+    ///   unweighted `surplus / n` division), still capped at
+    ///   `max_bonus_factor ×` each agent's base.
+    /// * Over-utilized: the remaining CHOPT capacity is split
+    ///   ∝ base × weight with the `min_gpus` floor.
+    pub fn targets_weighted(
+        &self,
+        total_gpus: usize,
+        external_demand: usize,
+        bases: &[usize],
+        weights: &[f64],
+    ) -> Vec<usize> {
         if bases.is_empty() {
             return Vec::new();
         }
+        let w = |i: usize| {
+            weights
+                .get(i)
+                .copied()
+                .filter(|w| w.is_finite() && *w > 0.0)
+                .unwrap_or(1.0)
+        };
         // Capacity left for CHOPT after honoring external users.
         let chopt_capacity = total_gpus.saturating_sub(external_demand);
         let base_sum: usize = bases.iter().sum();
 
         if chopt_capacity >= base_sum {
-            // Under-utilized: hand out the surplus evenly, capped.
+            // Under-utilized: hand out the surplus ∝ weight, capped.
             let surplus = chopt_capacity - base_sum;
             let util = (external_demand + base_sum) as f64 / total_gpus.max(1) as f64;
             if util < self.low_util && surplus > 0 {
-                let bonus_each = surplus / bases.len();
+                let wsum: f64 = (0..bases.len()).map(w).sum();
                 bases
                     .iter()
-                    .map(|&b| {
+                    .enumerate()
+                    .map(|(i, &b)| {
+                        let bonus = (surplus as f64 * w(i) / wsum).floor() as usize;
                         let cap = ((b as f64) * self.max_bonus_factor).ceil() as usize;
-                        (b + bonus_each).min(cap.max(b))
+                        (b + bonus).min(cap.max(b))
                     })
                     .collect()
             } else {
                 bases.to_vec()
             }
         } else {
-            // Over-utilized: shrink proportionally with a floor.
+            // Over-utilized: shrink ∝ base × weight with a floor.
+            let wbase_sum: f64 = bases
+                .iter()
+                .enumerate()
+                .map(|(i, &b)| b as f64 * w(i))
+                .sum();
             bases
                 .iter()
-                .map(|&b| {
-                    let share = (b as f64 / base_sum as f64) * chopt_capacity as f64;
+                .enumerate()
+                .map(|(i, &b)| {
+                    let share = (b as f64 * w(i) / wbase_sum) * chopt_capacity as f64;
                     (share.floor() as usize).max(self.min_gpus.min(b))
                 })
                 .collect()
@@ -187,6 +223,35 @@ mod tests {
     fn empty_agents() {
         let p = StopAndGoPolicy::default();
         assert!(p.targets(8, 4, &[]).is_empty());
+    }
+
+    #[test]
+    fn weighted_targets_split_surplus_by_weight() {
+        let p = StopAndGoPolicy {
+            max_bonus_factor: 100.0, // don't cap — isolate the split
+            ..StopAndGoPolicy::default()
+        };
+        // 30 GPUs, no external, bases 1+1: surplus 28 split 2:1.
+        let t = p.targets_weighted(30, 0, &[1, 1], &[2.0, 1.0]);
+        assert_eq!(t, vec![1 + 18, 1 + 9]);
+        // Equal weights reproduce the unweighted division exactly.
+        assert_eq!(
+            p.targets_weighted(30, 0, &[1, 1], &[1.0, 1.0]),
+            p.targets(30, 0, &[1, 1])
+        );
+        // Empty / non-positive weights fall back to 1.0.
+        assert_eq!(
+            p.targets_weighted(30, 0, &[1, 1], &[]),
+            p.targets(30, 0, &[1, 1])
+        );
+        assert_eq!(
+            p.targets_weighted(30, 0, &[1, 1], &[0.0, -3.0]),
+            p.targets(30, 0, &[1, 1])
+        );
+        // Over-utilized: capacity splits ∝ base × weight.
+        let d = StopAndGoPolicy::default();
+        let shrink = d.targets_weighted(16, 10, &[4, 4], &[2.0, 1.0]);
+        assert_eq!(shrink, vec![4, 2]); // 6 left: 6·(8/12)=4, 6·(4/12)=2
     }
 
     #[test]

@@ -21,10 +21,11 @@ use std::path::{Path, PathBuf};
 
 use crate::config::ChoptConfig;
 use crate::events::SimTime;
-use crate::nsml::NsmlSession;
+use crate::nsml::{NsmlSession, SessionId};
 use crate::storage::{EventLog, SessionStore};
 use crate::trainer::Trainer;
 use crate::util::json::Value as Json;
+use crate::viz::api::{ApiCommand, ApiError, ApiQuery, PlatformApi};
 use crate::viz::export;
 
 use super::agent::{Agent, AgentEvent};
@@ -451,6 +452,19 @@ impl<'t> Platform<'t> {
         export::cluster_doc(self.engine.cluster(), self.engine.now())
     }
 
+    /// Paginated session page (the v1 `/api/v1/sessions` document):
+    /// `total` sessions overall, rows `[offset, offset+limit)` in
+    /// done-agents-first order, each labelled with its CHOPT agent id.
+    pub fn sessions_page_doc(&self, limit: usize, offset: usize) -> Json {
+        let mut all: Vec<(u64, &NsmlSession)> = Vec::new();
+        for agent in self.engine.all_agents() {
+            let mut ss: Vec<&NsmlSession> = agent.sessions.values().collect();
+            ss.sort_by_key(|s| s.id);
+            all.extend(ss.into_iter().map(|s| (agent.id, s)));
+        }
+        sessions_page(all, limit, offset)
+    }
+
     /// One-object run status (the `/api/status.json` heartbeat).
     pub fn status_doc(&self) -> Json {
         let engine = &self.engine;
@@ -783,6 +797,8 @@ impl<'t> MultiPlatform<'t> {
                 Json::obj()
                     .with("study", Json::Str(st.name().to_string()))
                     .with("quota", Json::Num(st.quota() as f64))
+                    .with("priority", Json::Num(st.priority()))
+                    .with("paused", Json::Bool(st.paused()))
                     .with("target", Json::Num(st.target() as f64))
                     .with("held", Json::Num(held as f64))
                     .with(
@@ -846,6 +862,61 @@ impl<'t> MultiPlatform<'t> {
         SessionStore::doc_from_refs(&runs)
     }
 
+    /// Paginated session page for one study (the v1
+    /// `/api/v1/studies/<name>/sessions` document).
+    pub fn study_sessions_page_doc(&self, name: &str, limit: usize, offset: usize) -> Json {
+        let mut all: Vec<(u64, &NsmlSession)> = Vec::new();
+        if let Some(agent) = self.sched.study(name).and_then(|st| st.agent()) {
+            let mut ss: Vec<&NsmlSession> = agent.sessions.values().collect();
+            ss.sort_by_key(|s| s.id);
+            all.extend(ss.into_iter().map(|s| (agent.id, s)));
+        }
+        sessions_page(all, limit, offset).with("study", Json::Str(name.to_string()))
+    }
+
+    /// Study directory (the v1 `/api/v1/studies` document).
+    pub fn studies_doc(&self) -> Json {
+        let rows: Vec<Json> = self
+            .sched
+            .studies()
+            .iter()
+            .map(|st| {
+                Json::obj()
+                    .with("study", Json::Str(st.name().to_string()))
+                    .with("quota", Json::Num(st.quota() as f64))
+                    .with("priority", Json::Num(st.priority()))
+                    .with("paused", Json::Bool(st.paused()))
+                    .with("started", Json::Bool(st.started()))
+                    .with("done", Json::Bool(st.done()))
+                    .with(
+                        "sessions",
+                        Json::Num(st.agent().map(|a| a.sessions.len()).unwrap_or(0) as f64),
+                    )
+            })
+            .collect();
+        Json::obj()
+            .with("t", Json::Num(self.sched.now()))
+            .with("count", Json::Num(rows.len() as f64))
+            .with("studies", Json::Arr(rows))
+    }
+
+    /// Parallel-coordinates document for one study (axes from the
+    /// study's own search space).
+    pub fn study_parallel_doc(&self, name: &str) -> Option<Json> {
+        let st = self.sched.study(name)?;
+        let mut refs: Vec<&NsmlSession> = Vec::new();
+        if let Some(agent) = st.agent() {
+            refs.extend(agent.sessions.values());
+            refs.sort_by_key(|s| s.id);
+        }
+        Some(export::parallel_coords_doc_refs(
+            &st.config().space,
+            &refs,
+            st.config().order,
+            name,
+        ))
+    }
+
     /// One-object run status across all studies.
     pub fn status_doc(&self) -> Json {
         let sched = &self.sched;
@@ -864,6 +935,247 @@ impl<'t> MultiPlatform<'t> {
             .with("studies_done", Json::Num(done as f64))
             .with("utilization", Json::Num(sched.cluster().utilization()))
             .with("progress_events", Json::Num(self.progress_events as f64))
+    }
+}
+
+/// Shared pagination shell: `total` + the `[offset, offset+limit)` page
+/// of rows, each a session document labelled with its CHOPT agent id.
+/// Out-of-range offsets yield an empty page, not an error.
+fn sessions_page(all: Vec<(u64, &NsmlSession)>, limit: usize, offset: usize) -> Json {
+    let total = all.len();
+    let rows: Vec<Json> = all
+        .into_iter()
+        .skip(offset)
+        .take(limit)
+        .map(|(aid, s)| s.to_json().with("chopt", Json::Str(aid.to_string())))
+        .collect();
+    Json::obj()
+        .with("total", Json::Num(total as f64))
+        .with("offset", Json::Num(offset as f64))
+        .with("returned", Json::Num(rows.len() as f64))
+        .with("sessions", Json::Arr(rows))
+}
+
+/// The single-study control plane: queries serve from the incremental
+/// documents; commands feed the engine's recorded-input channel and take
+/// effect at the next event boundary.
+impl<'t> PlatformApi for Platform<'t> {
+    fn api_generation(&self) -> u64 {
+        self.engine.events_processed()
+    }
+
+    fn api_query(&self, q: &ApiQuery) -> Result<Json, ApiError> {
+        match q {
+            ApiQuery::Status => Ok(self.status_doc()),
+            ApiQuery::Cluster { window } => Ok(export::cluster_doc_windowed(
+                self.engine.cluster(),
+                self.engine.now(),
+                *window,
+            )),
+            ApiQuery::Leaderboard { k } => Ok(self.leaderboard_doc(*k)),
+            ApiQuery::Sessions { limit, offset } => Ok(self.sessions_page_doc(*limit, *offset)),
+            ApiQuery::Parallel => {
+                let space = self
+                    .engine
+                    .all_agents()
+                    .next()
+                    .map(|a| a.cfg.space.clone())
+                    .ok_or_else(|| ApiError::NotFound("no agent has started yet".into()))?;
+                Ok(self.parallel_doc(&space))
+            }
+            ApiQuery::FairShare
+            | ApiQuery::Studies
+            | ApiQuery::StudySessions { .. }
+            | ApiQuery::StudyLeaderboard { .. }
+            | ApiQuery::StudyParallel { .. } => Err(ApiError::NotFound(
+                "multi-study endpoint; this server runs a single study".into(),
+            )),
+        }
+    }
+
+    fn api_command(&mut self, c: &ApiCommand) -> Result<Json, ApiError> {
+        let now = self.engine.now();
+        let ack = |kind: &str, at: SimTime| {
+            Json::obj()
+                .with("applied", Json::Bool(true))
+                .with("command", Json::Str(kind.to_string()))
+                .with("effective_at", Json::Num(at))
+        };
+        match c {
+            ApiCommand::Submit { config, at } => {
+                let cfg = ChoptConfig::from_json(config)
+                    .map_err(|e| ApiError::BadRequest(format!("bad config: {e:#}")))?;
+                let at = self
+                    .submit(cfg, (*at).unwrap_or(now))
+                    .ok_or_else(|| ApiError::BadRequest("horizon reached".into()))?;
+                Ok(ack(c.name(), at))
+            }
+            ApiCommand::PauseSession { session, .. } => {
+                let at = self
+                    .engine
+                    .pause_session(SessionId(*session), now)
+                    .ok_or_else(|| ApiError::BadRequest("session is not live".into()))?;
+                Ok(ack(c.name(), at))
+            }
+            ApiCommand::ResumeSession { session, .. } => {
+                let at = self
+                    .engine
+                    .resume_session(SessionId(*session), now)
+                    .ok_or_else(|| ApiError::BadRequest("session is not paused".into()))?;
+                Ok(ack(c.name(), at))
+            }
+            ApiCommand::StopSession { session, .. } => {
+                let at = self
+                    .engine
+                    .stop_session(SessionId(*session), now)
+                    .ok_or_else(|| ApiError::BadRequest("session is not live or paused".into()))?;
+                Ok(ack(c.name(), at))
+            }
+            ApiCommand::SubmitStudy { .. }
+            | ApiCommand::PauseStudy { .. }
+            | ApiCommand::ResumeStudy { .. }
+            | ApiCommand::StopStudy { .. }
+            | ApiCommand::SetQuota { .. } => Err(ApiError::NotFound(
+                "study command; this server runs a single study".into(),
+            )),
+        }
+    }
+}
+
+/// The multi-tenant control plane over a [`StudyScheduler`].
+impl<'t> PlatformApi for MultiPlatform<'t> {
+    fn api_generation(&self) -> u64 {
+        self.sched.events_processed()
+    }
+
+    fn api_query(&self, q: &ApiQuery) -> Result<Json, ApiError> {
+        let known = |study: &str| -> Result<(), ApiError> {
+            if self.sched.study(study).is_some() {
+                Ok(())
+            } else {
+                Err(ApiError::NotFound(format!("unknown study '{study}'")))
+            }
+        };
+        match q {
+            ApiQuery::Status => Ok(self.status_doc()),
+            ApiQuery::Cluster { window } => Ok(export::cluster_doc_windowed(
+                self.sched.cluster(),
+                self.sched.now(),
+                *window,
+            )),
+            ApiQuery::FairShare => Ok(self.fair_share_doc()),
+            ApiQuery::Studies => Ok(self.studies_doc()),
+            ApiQuery::StudySessions {
+                study,
+                limit,
+                offset,
+            } => {
+                known(study)?;
+                Ok(self.study_sessions_page_doc(study, *limit, *offset))
+            }
+            ApiQuery::StudyLeaderboard { study, k } => {
+                known(study)?;
+                Ok(self.study_leaderboard_doc(study, *k))
+            }
+            ApiQuery::StudyParallel { study } => self
+                .study_parallel_doc(study)
+                .ok_or_else(|| ApiError::NotFound(format!("unknown study '{study}'"))),
+            ApiQuery::Sessions { .. } | ApiQuery::Leaderboard { .. } | ApiQuery::Parallel => {
+                Err(ApiError::NotFound(
+                    "single-study endpoint; use /api/v1/studies/<name>/…".into(),
+                ))
+            }
+        }
+    }
+
+    fn api_command(&mut self, c: &ApiCommand) -> Result<Json, ApiError> {
+        let now = self.sched.now();
+        let ack = |kind: &str, at: SimTime| {
+            Json::obj()
+                .with("applied", Json::Bool(true))
+                .with("command", Json::Str(kind.to_string()))
+                .with("effective_at", Json::Num(at))
+        };
+        // Session commands must name their study: local session ids
+        // repeat across studies.
+        let study_of = |study: &Option<String>| -> Result<&str, ApiError> {
+            study.as_deref().ok_or_else(|| {
+                ApiError::BadRequest("session commands need a 'study' on a multi-study run".into())
+            })
+        };
+        let rejected = |msg: &str| ApiError::BadRequest(msg.to_string());
+        match c {
+            ApiCommand::SubmitStudy { spec, at } => {
+                let spec = StudySpec::from_json(spec, self.sched.studies().len())
+                    .map_err(|e| ApiError::BadRequest(format!("bad study spec: {e:#}")))?;
+                let at = self
+                    .submit_study(spec, (*at).unwrap_or(now))
+                    .ok_or_else(|| {
+                        rejected(
+                            "study rejected (duplicate name, bad quota/priority, or quota does not fit)",
+                        )
+                    })?;
+                Ok(ack(c.name(), at))
+            }
+            ApiCommand::PauseStudy { study } => {
+                let at = self
+                    .sched
+                    .pause_study(study, now)
+                    .ok_or_else(|| rejected("unknown or finished study"))?;
+                Ok(ack(c.name(), at))
+            }
+            ApiCommand::ResumeStudy { study } => {
+                let at = self
+                    .sched
+                    .resume_study(study, now)
+                    .ok_or_else(|| rejected("unknown or finished study"))?;
+                Ok(ack(c.name(), at))
+            }
+            ApiCommand::StopStudy { study } => {
+                let at = self
+                    .sched
+                    .stop_study(study, now)
+                    .ok_or_else(|| rejected("unknown or finished study"))?;
+                Ok(ack(c.name(), at))
+            }
+            ApiCommand::SetQuota {
+                study,
+                quota,
+                priority,
+            } => {
+                let at = self
+                    .sched
+                    .set_quota(study, *quota, *priority, now)
+                    .ok_or_else(|| {
+                        rejected("rejected (unknown study, quota does not fit, or priority ≤ 0)")
+                    })?;
+                Ok(ack(c.name(), at))
+            }
+            ApiCommand::PauseSession { study, session } => {
+                let at = self
+                    .sched
+                    .pause_session(study_of(study)?, SessionId(*session), now)
+                    .ok_or_else(|| rejected("session is not live in that study"))?;
+                Ok(ack(c.name(), at))
+            }
+            ApiCommand::ResumeSession { study, session } => {
+                let at = self
+                    .sched
+                    .resume_session(study_of(study)?, SessionId(*session), now)
+                    .ok_or_else(|| rejected("session is not paused in that study"))?;
+                Ok(ack(c.name(), at))
+            }
+            ApiCommand::StopSession { study, session } => {
+                let at = self
+                    .sched
+                    .stop_session(study_of(study)?, SessionId(*session), now)
+                    .ok_or_else(|| rejected("session is not live or paused in that study"))?;
+                Ok(ack(c.name(), at))
+            }
+            ApiCommand::Submit { .. } => Err(ApiError::NotFound(
+                "single-study command; use 'submit_study' on a multi-study run".into(),
+            )),
+        }
     }
 }
 

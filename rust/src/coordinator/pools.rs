@@ -195,6 +195,21 @@ impl Pools {
         Some(id)
     }
 
+    /// Flag a stopped session for priority revival: clears a `parked`
+    /// mark (rung barrier) and sets `preempted`, so the next generic
+    /// [`Pools::pick_revival`] takes it first.  Used by the operator
+    /// resume command when no GPU is free at apply time — the session
+    /// revives as soon as capacity returns instead of staying invisible.
+    pub fn prioritize_revival(&mut self, id: SessionId) -> bool {
+        if self.stop.contains(&id) {
+            self.parked.remove(&id);
+            self.preempted.insert(id);
+            true
+        } else {
+            false
+        }
+    }
+
     /// Revive a *specific* stopped session (Hyperband promotion).
     pub fn revive(&mut self, id: SessionId) -> bool {
         if let Some(i) = self.stop.iter().position(|&s| s == id) {

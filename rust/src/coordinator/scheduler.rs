@@ -24,8 +24,9 @@
 //!   study-tagged events and FIFO tie-breaking; per-study event
 //!   subsequences are independent of how other studies interleave;
 //! * **snapshot / restore by replay** — like the engine, a snapshot
-//!   records the manifest plus online study submissions and the event
-//!   count; [`StudyScheduler::restore`] replays to the exact state.
+//!   records the manifest plus every external input (online study
+//!   submissions *and* `/api/v1` control commands) and the event count;
+//!   [`StudyScheduler::restore`] replays to the exact state.
 //!
 //! Identity: each study's agent keeps *local* id 1 (RNG/trainer/session
 //! ids match a solo run) while its cluster identity is the
@@ -52,6 +53,11 @@ pub struct StudySpec {
     /// Guaranteed GPU share.  Resolved at parse time (unspecified studies
     /// split the unreserved remainder evenly).
     pub quota: usize,
+    /// Fair-share weight (> 0, default 1.0): the study's share of
+    /// *redistributed* capacity — borrow bonus when peers are idle,
+    /// shrink share under external load — scales with it.  The `quota`
+    /// guarantee itself is not weighted.
+    pub priority: f64,
     /// Virtual time the study joins the cluster.
     pub submit_at: SimTime,
 }
@@ -61,6 +67,7 @@ impl StudySpec {
         Json::obj()
             .with("name", Json::Str(self.name.clone()))
             .with("quota", Json::Num(self.quota as f64))
+            .with("priority", Json::Num(self.priority))
             .with("submit_at", Json::Num(self.submit_at))
             .with("config", self.config.to_json())
     }
@@ -76,6 +83,18 @@ impl StudySpec {
                 .ok_or_else(|| anyhow::anyhow!("study '{name}' missing 'config'"))?,
         )?;
         let quota = doc.get("quota").and_then(|v| v.as_usize()).unwrap_or(0);
+        let priority = match doc.get("priority") {
+            None | Some(Json::Null) => 1.0,
+            Some(v) => {
+                let p = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("study '{name}': 'priority' must be a number"))?;
+                if !(p.is_finite() && p > 0.0) {
+                    anyhow::bail!("study '{name}': 'priority' must be > 0 (got {p})");
+                }
+                p
+            }
+        };
         let submit_at = doc
             .get("submit_at")
             .and_then(|v| v.as_f64())
@@ -85,6 +104,7 @@ impl StudySpec {
             name,
             config,
             quota,
+            priority,
             submit_at,
         })
     }
@@ -237,16 +257,74 @@ enum SEv {
     Interval { study: usize, sid: SessionId },
     /// Shared fair-share / Stop-and-Go control tick.
     MasterTick,
-    /// An online study submission (index into `online`) arrives.
-    Submit { idx: usize },
+    /// A recorded external input (index into `inputs`) takes effect —
+    /// an online study submission or a control-plane command.
+    Input { idx: usize },
 }
 
-/// A study submitted while the scheduler was live (snapshot/replay input).
+/// An external input that arrived while the scheduler was live.  Like
+/// the engine's log, this is the snapshot/replay record: commands change
+/// every event after them, so they must be re-issued on restore.
 #[derive(Debug, Clone)]
-struct OnlineStudy {
-    spec: StudySpec,
+enum MInputKind {
+    SubmitStudy(StudySpec),
+    PauseStudy(String),
+    ResumeStudy(String),
+    StopStudy(String),
+    PauseSession(String, SessionId),
+    ResumeSession(String, SessionId),
+    StopSession(String, SessionId),
+    SetQuota {
+        study: String,
+        quota: Option<usize>,
+        priority: Option<f64>,
+    },
+}
+
+#[derive(Debug, Clone)]
+struct MInput {
+    kind: MInputKind,
     at: SimTime,
     after_events: u64,
+}
+
+impl MInput {
+    fn to_json(&self) -> Json {
+        let base = Json::obj()
+            .with("at", Json::Num(self.at))
+            .with("after_events", Json::Num(self.after_events as f64));
+        let sid = |s: &SessionId| Json::Str(s.0.to_string());
+        let named = |kind: &str, study: &str| {
+            base.clone()
+                .with("kind", Json::Str(kind.into()))
+                .with("study", Json::Str(study.to_string()))
+        };
+        match &self.kind {
+            MInputKind::SubmitStudy(spec) => base
+                .clone()
+                .with("kind", Json::Str("submit_study".into()))
+                .with("study", spec.to_json()),
+            MInputKind::PauseStudy(n) => named("pause_study", n),
+            MInputKind::ResumeStudy(n) => named("resume_study", n),
+            MInputKind::StopStudy(n) => named("stop_study", n),
+            MInputKind::PauseSession(n, s) => named("pause_session", n).with("session", sid(s)),
+            MInputKind::ResumeSession(n, s) => named("resume_session", n).with("session", sid(s)),
+            MInputKind::StopSession(n, s) => named("stop_session", n).with("session", sid(s)),
+            MInputKind::SetQuota {
+                study,
+                quota,
+                priority,
+            } => named("set_quota", study)
+                .with(
+                    "quota",
+                    quota.map(|q| Json::Num(q as f64)).unwrap_or(Json::Null),
+                )
+                .with(
+                    "priority",
+                    priority.map(Json::Num).unwrap_or(Json::Null),
+                ),
+        }
+    }
 }
 
 /// Per-study runtime state.
@@ -254,11 +332,23 @@ pub struct StudyState {
     name: String,
     config: ChoptConfig,
     quota: usize,
+    /// Fair-share weight (see [`StudySpec::priority`]).
+    priority: f64,
     submit_at: SimTime,
     /// `None` until `submit_at` passes a master tick.
     agent: Option<Agent>,
     /// Last fair-share target handed to the study (quota ± borrow).
     last_target: usize,
+    /// Operator-paused: target/cap held at 0 until resumed (the study's
+    /// sessions sit in its stop pool with revival priority).
+    paused: bool,
+    /// One-shot grace consumed by the first master tick after a resume:
+    /// skip that tick's termination check (zero live sessions is the
+    /// operator's doing, not "done") and let `fill` revive first.
+    resume_grace: bool,
+    /// Operator-stopped before activation: never activates, counts as
+    /// done.  (Stopping an *active* study shuts its agent down instead.)
+    cancelled: bool,
 }
 
 impl StudyState {
@@ -270,6 +360,11 @@ impl StudyState {
         self.quota
     }
 
+    /// Fair-share weight (manifest `priority` / `set_quota` command).
+    pub fn priority(&self) -> f64 {
+        self.priority
+    }
+
     /// Last fair-share target (0 before activation / after completion).
     pub fn target(&self) -> usize {
         self.last_target
@@ -279,12 +374,21 @@ impl StudyState {
         self.agent.as_ref()
     }
 
+    pub fn config(&self) -> &ChoptConfig {
+        &self.config
+    }
+
     pub fn started(&self) -> bool {
         self.agent.is_some()
     }
 
+    /// Operator-paused (held at zero GPUs until resumed).
+    pub fn paused(&self) -> bool {
+        self.paused
+    }
+
     pub fn done(&self) -> bool {
-        self.agent.as_ref().map(|a| a.finished).unwrap_or(false)
+        self.cancelled || self.agent.as_ref().map(|a| a.finished).unwrap_or(false)
     }
 }
 
@@ -316,8 +420,11 @@ pub struct StudyScheduler<'t> {
     manifest: StudyManifest,
     studies: Vec<StudyState>,
     evq: EventQueue<SEv>,
-    /// Online study submissions in arrival order (snapshot/replay input).
-    online: Vec<OnlineStudy>,
+    /// External inputs (study submissions + commands) in arrival order —
+    /// the snapshot/replay input log.
+    inputs: Vec<MInput>,
+    /// Scheduled-but-unprocessed *submission* inputs (these keep the
+    /// scheduler alive; pending commands on a drained run don't).
     submits_pending: usize,
     ticks_pending: usize,
     completed: bool,
@@ -348,9 +455,13 @@ impl<'t> StudyScheduler<'t> {
                 name: spec.name.clone(),
                 config: spec.config.clone(),
                 quota: spec.quota,
+                priority: spec.priority,
                 submit_at: spec.submit_at,
                 agent: None,
                 last_target: 0,
+                paused: false,
+                resume_grace: false,
+                cancelled: false,
             })
             .collect();
         let n_studies = manifest.studies.len();
@@ -359,7 +470,7 @@ impl<'t> StudyScheduler<'t> {
             manifest,
             studies,
             evq: EventQueue::new(),
-            online: Vec::new(),
+            inputs: Vec::new(),
             submits_pending: 0,
             ticks_pending: 0,
             completed: false,
@@ -480,7 +591,11 @@ impl<'t> StudyScheduler<'t> {
     /// time, or `None` if the quota does not fit or the horizon has been
     /// reached.
     pub fn submit_study(&mut self, spec: StudySpec, at: SimTime) -> Option<SimTime> {
-        if self.horizon_reached || spec.quota == 0 || !valid_study_name(&spec.name) {
+        if self.horizon_reached
+            || spec.quota == 0
+            || !(spec.priority.is_finite() && spec.priority > 0.0)
+            || !valid_study_name(&spec.name)
+        {
             return None;
         }
         let reserved: usize = self.studies.iter().map(|s| s.quota).sum();
@@ -493,43 +608,175 @@ impl<'t> StudyScheduler<'t> {
         let at = at.max(self.evq.now());
         let mut spec = spec;
         spec.submit_at = at;
-        let idx = self.online.len();
-        self.online.push(OnlineStudy {
-            spec: spec.clone(),
-            at,
-            after_events: self.evq.processed(),
-        });
         self.studies.push(StudyState {
             name: spec.name.clone(),
-            config: spec.config,
+            config: spec.config.clone(),
             quota: spec.quota,
+            priority: spec.priority,
             submit_at: at,
             agent: None,
             last_target: 0,
+            paused: false,
+            resume_grace: false,
+            cancelled: false,
         });
         self.dirty.push_slot();
-        self.evq.schedule_at(at, SEv::Submit { idx });
+        self.enqueue_input(MInputKind::SubmitStudy(spec), at);
         self.submits_pending += 1;
         self.completed = false;
         Some(at)
     }
 
+    /// Record an input and schedule its effect event (clamped to now).
+    fn enqueue_input(&mut self, kind: MInputKind, at: SimTime) -> SimTime {
+        let at = at.max(self.evq.now());
+        let idx = self.inputs.len();
+        self.inputs.push(MInput {
+            kind,
+            at,
+            after_events: self.evq.processed(),
+        });
+        self.evq.schedule_at(at, SEv::Input { idx });
+        at
+    }
+
+    fn study_idx(&self, name: &str) -> Option<usize> {
+        self.studies.iter().position(|s| s.name == name)
+    }
+
+    /// Control-plane pause: hold a study at zero GPUs (its live sessions
+    /// are paused into the stop pool with revival priority) until a
+    /// matching resume.  Returns the effective time, or `None` if the
+    /// study is unknown / already finished.
+    pub fn pause_study(&mut self, name: &str, at: SimTime) -> Option<SimTime> {
+        let idx = self.study_idx(name)?;
+        if self.horizon_reached || self.studies[idx].done() {
+            return None;
+        }
+        Some(self.enqueue_input(MInputKind::PauseStudy(name.to_string()), at))
+    }
+
+    /// Control-plane resume of a paused study: the next master tick
+    /// restores its fair-share target and revives its sessions.
+    pub fn resume_study(&mut self, name: &str, at: SimTime) -> Option<SimTime> {
+        let idx = self.study_idx(name)?;
+        if self.horizon_reached || self.studies[idx].done() {
+            return None;
+        }
+        Some(self.enqueue_input(MInputKind::ResumeStudy(name.to_string()), at))
+    }
+
+    /// Control-plane stop: shut the study down (horizon semantics for its
+    /// sessions); a not-yet-activated study is cancelled instead.
+    pub fn stop_study(&mut self, name: &str, at: SimTime) -> Option<SimTime> {
+        let idx = self.study_idx(name)?;
+        if self.horizon_reached || self.studies[idx].done() {
+            return None;
+        }
+        Some(self.enqueue_input(MInputKind::StopStudy(name.to_string()), at))
+    }
+
+    /// Control-plane re-quota / re-weight.  `quota` must keep
+    /// Σ quota ≤ cluster size; `priority` must be > 0.  `None` fields are
+    /// left unchanged.
+    pub fn set_quota(
+        &mut self,
+        name: &str,
+        quota: Option<usize>,
+        priority: Option<f64>,
+        at: SimTime,
+    ) -> Option<SimTime> {
+        let idx = self.study_idx(name)?;
+        if self.horizon_reached || (quota.is_none() && priority.is_none()) {
+            return None;
+        }
+        if let Some(q) = quota {
+            let others: usize = self
+                .studies
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| i != idx)
+                .map(|(_, s)| s.quota)
+                .sum();
+            if q == 0 || others + q > self.cluster.total() {
+                return None;
+            }
+        }
+        if let Some(p) = priority {
+            if !(p.is_finite() && p > 0.0) {
+                return None;
+            }
+        }
+        let at = self.enqueue_input(
+            MInputKind::SetQuota {
+                study: name.to_string(),
+                quota,
+                priority,
+            },
+            at,
+        );
+        // A drained scheduler must still process the input event (the
+        // ack promised it): lowering a finished study's quota frees
+        // guarantee room for later submits.  `step()` short-circuits on
+        // `completed`, so clear it; the run re-settles right after the
+        // input is applied.
+        self.completed = false;
+        Some(at)
+    }
+
+    /// Control-plane pause of one NSML session (`study` qualifies the
+    /// session id — local ids repeat across studies).
+    pub fn pause_session(&mut self, study: &str, sid: SessionId, at: SimTime) -> Option<SimTime> {
+        self.session_cmd_guard(study, sid, super::pools::Pool::Live)?;
+        Some(self.enqueue_input(MInputKind::PauseSession(study.to_string(), sid), at))
+    }
+
+    /// Control-plane resume of a paused session.
+    pub fn resume_session(&mut self, study: &str, sid: SessionId, at: SimTime) -> Option<SimTime> {
+        self.session_cmd_guard(study, sid, super::pools::Pool::Stop)?;
+        Some(self.enqueue_input(MInputKind::ResumeSession(study.to_string(), sid), at))
+    }
+
+    /// Control-plane stop (kill) of a live or paused session.
+    pub fn stop_session(&mut self, study: &str, sid: SessionId, at: SimTime) -> Option<SimTime> {
+        let pool = self.session_cmd_guard_any(study, sid)?;
+        if !matches!(pool, super::pools::Pool::Live | super::pools::Pool::Stop) {
+            return None;
+        }
+        Some(self.enqueue_input(MInputKind::StopSession(study.to_string(), sid), at))
+    }
+
+    fn session_cmd_guard(
+        &self,
+        study: &str,
+        sid: SessionId,
+        want: super::pools::Pool,
+    ) -> Option<()> {
+        (self.session_cmd_guard_any(study, sid)? == want).then_some(())
+    }
+
+    /// The session's current pool within `study`, if the scheduler can
+    /// accept commands for it.
+    fn session_cmd_guard_any(&self, study: &str, sid: SessionId) -> Option<super::pools::Pool> {
+        if self.horizon_reached {
+            return None;
+        }
+        let idx = self.study_idx(study)?;
+        let agent = self.studies[idx].agent.as_ref()?;
+        if agent.finished {
+            return None;
+        }
+        agent.pools.locate(sid)
+    }
+
     // -- event dispatch ----------------------------------------------------
 
     fn all_done(&self) -> bool {
-        self.submits_pending == 0
-            && self
-                .studies
-                .iter()
-                .all(|s| s.agent.as_ref().map(|a| a.finished).unwrap_or(false))
+        self.submits_pending == 0 && self.studies.iter().all(|s| s.done())
     }
 
     fn any_alive(&self) -> bool {
-        self.submits_pending > 0
-            || self
-                .studies
-                .iter()
-                .any(|s| s.agent.as_ref().map(|a| !a.finished).unwrap_or(true))
+        self.submits_pending > 0 || self.studies.iter().any(|s| !s.done())
     }
 
     fn schedule_reqs(&mut self, study: usize, reqs: Vec<ScheduleReq>) {
@@ -548,7 +795,7 @@ impl<'t> StudyScheduler<'t> {
         match ev {
             SEv::Interval { study, sid } => self.on_interval(t, study, sid),
             SEv::MasterTick => self.on_master_tick(t),
-            SEv::Submit { idx } => self.on_submit(t, idx),
+            SEv::Input { idx } => self.on_input(t, idx),
         }
     }
 
@@ -579,15 +826,20 @@ impl<'t> StudyScheduler<'t> {
 
     /// Cross-study reconciliation of per-study solo targets against the
     /// real shared cluster: with `borrow` the policy redistributes idle
-    /// headroom (bounded bonus) or shrinks proportionally under external
-    /// load; without it, targets pass through untouched unless external
-    /// load overflows the unreserved capacity.  `active` maps each solo
-    /// entry back to its study index.
+    /// headroom (bounded bonus, split ∝ each study's `priority` weight)
+    /// or shrinks ∝ base × weight under external load; without it,
+    /// targets pass through untouched unless external load overflows the
+    /// unreserved capacity.  `active` maps each solo entry back to its
+    /// study index.
     fn reconcile_targets(&self, external: usize, active: &[usize], solo: &[usize]) -> Vec<usize> {
         let total = self.cluster.total();
         let sum: usize = solo.iter().sum();
         if self.manifest.borrow || external + sum > total {
-            let mut finals = self.manifest.policy.targets(total, external, solo);
+            let weights: Vec<f64> = active.iter().map(|&i| self.studies[i].priority).collect();
+            let mut finals = self
+                .manifest
+                .policy
+                .targets_weighted(total, external, solo, &weights);
             // The bonus cap is relative to each study's *configured*
             // base (max_gpus), but the reconcile pass sees the already-
             // bonused solo targets as bases — without this clamp the
@@ -620,13 +872,17 @@ impl<'t> StudyScheduler<'t> {
             .map(|tr| tr.demand(t))
             .unwrap_or(0);
         self.cluster.set_external_demand(external, t);
+        // Paused studies are excluded entirely: their target/cap stays 0
+        // (set at pause time) and their termination checks are deferred —
+        // an operator pause must not look like "no live sessions left".
         let active: Vec<usize> = (0..self.studies.len())
             .filter(|&i| {
-                self.studies[i]
-                    .agent
-                    .as_ref()
-                    .map(|a| !a.finished)
-                    .unwrap_or(false)
+                !self.studies[i].paused
+                    && self.studies[i]
+                        .agent
+                        .as_ref()
+                        .map(|a| !a.finished)
+                        .unwrap_or(false)
             })
             .collect();
         let solo: Vec<usize> = active.iter().map(|&i| self.solo_target(i)).collect();
@@ -642,7 +898,13 @@ impl<'t> StudyScheduler<'t> {
             {
                 let st = &mut self.studies[i];
                 let agent = st.agent.as_mut().unwrap();
-                agent.check_termination(&mut self.cluster, t);
+                // One-shot post-resume grace: a just-resumed study has
+                // zero live sessions *by operator decree*, which the
+                // max_session_number check would mistake for "done" —
+                // give it this tick to refill before checking again.
+                if !std::mem::take(&mut st.resume_grace) {
+                    agent.check_termination(&mut self.cluster, t);
+                }
                 if agent.finished {
                     st.last_target = 0;
                     continue;
@@ -684,7 +946,11 @@ impl<'t> StudyScheduler<'t> {
     /// fill — the same bootstrap a solo engine runs at t = 0.
     fn activate_ready(&mut self, now: SimTime) {
         for i in 0..self.studies.len() {
-            if self.studies[i].agent.is_some() || self.studies[i].submit_at > now {
+            if self.studies[i].agent.is_some()
+                || self.studies[i].submit_at > now
+                || self.studies[i].paused
+                || self.studies[i].cancelled
+            {
                 continue;
             }
             let local_id = 1u64;
@@ -703,11 +969,125 @@ impl<'t> StudyScheduler<'t> {
         }
     }
 
-    fn on_submit(&mut self, t: SimTime, idx: usize) {
-        self.submits_pending = self.submits_pending.saturating_sub(1);
-        let _ = idx; // the study was appended at submit_study time
-        // Re-arm the tick chain if it died (everything had drained); the
-        // tick at `t` activates the new study and resumes the cadence.
+    /// Apply a recorded input at its event boundary.  Commands
+    /// re-validate against the state *now* and no-op when stale — the
+    /// original run and a replay see identical state here, so both no-op
+    /// identically.
+    fn on_input(&mut self, t: SimTime, idx: usize) {
+        let kind = self.inputs[idx].kind.clone();
+        match kind {
+            MInputKind::SubmitStudy(_) => {
+                self.submits_pending = self.submits_pending.saturating_sub(1);
+                // The study was appended at submit_study time.  Re-arm
+                // the tick chain if it died (everything had drained); the
+                // tick at `t` activates the new study and resumes the
+                // cadence.
+                self.rearm_ticks(t);
+            }
+            MInputKind::PauseStudy(name) => {
+                if let Some(i) = self.study_idx(&name) {
+                    if self.studies[i].done() {
+                        return;
+                    }
+                    self.studies[i].paused = true;
+                    let mut reqs: Vec<ScheduleReq> = Vec::new();
+                    if let Some(agent) = self.studies[i].agent.as_mut() {
+                        if !agent.finished {
+                            agent.preempt_pause_to_target(0, &mut self.cluster, t, &mut reqs);
+                            self.cluster.set_cap(Owner::Chopt(agent.tenant), 0);
+                        }
+                    }
+                    self.studies[i].last_target = 0;
+                    self.mark_dirty(i);
+                    self.schedule_reqs(i, reqs);
+                }
+            }
+            MInputKind::ResumeStudy(name) => {
+                if let Some(i) = self.study_idx(&name) {
+                    if self.studies[i].paused {
+                        self.studies[i].paused = false;
+                        self.studies[i].resume_grace = true;
+                    }
+                    self.mark_dirty(i);
+                    // The next tick recomputes the fair share and revives
+                    // (or first activates) the study.
+                    self.rearm_ticks(t);
+                }
+            }
+            MInputKind::StopStudy(name) => {
+                if let Some(i) = self.study_idx(&name) {
+                    self.studies[i].paused = false;
+                    match self.studies[i].agent.as_mut() {
+                        Some(agent) => {
+                            if !agent.finished {
+                                agent.shutdown("user_stop", &mut self.cluster, t);
+                            }
+                        }
+                        None => self.studies[i].cancelled = true,
+                    }
+                    self.studies[i].last_target = 0;
+                    self.mark_dirty(i);
+                }
+            }
+            MInputKind::PauseSession(name, sid) => {
+                if let Some(i) = self.study_idx(&name) {
+                    if let Some(agent) = self.studies[i].agent.as_mut() {
+                        agent.pause_session_cmd(sid, &mut self.cluster, t);
+                        self.mark_dirty(i);
+                    }
+                }
+            }
+            MInputKind::ResumeSession(name, sid) => {
+                if let Some(i) = self.study_idx(&name) {
+                    let mut reqs: Vec<ScheduleReq> = Vec::new();
+                    if let Some(agent) = self.studies[i].agent.as_mut() {
+                        agent.resume_session_cmd(sid, &mut self.cluster, t, &mut reqs);
+                        self.mark_dirty(i);
+                    }
+                    self.schedule_reqs(i, reqs);
+                }
+            }
+            MInputKind::StopSession(name, sid) => {
+                if let Some(i) = self.study_idx(&name) {
+                    if let Some(agent) = self.studies[i].agent.as_mut() {
+                        agent.stop_session_cmd(sid, &mut self.cluster, t);
+                        self.mark_dirty(i);
+                    }
+                }
+            }
+            MInputKind::SetQuota {
+                study,
+                quota,
+                priority,
+            } => {
+                if let Some(i) = self.study_idx(&study) {
+                    if let Some(q) = quota {
+                        // Re-check the guarantee against the *current*
+                        // quota set (it may have changed since enqueue).
+                        let others: usize = self
+                            .studies
+                            .iter()
+                            .enumerate()
+                            .filter(|&(j, _)| j != i)
+                            .map(|(_, s)| s.quota)
+                            .sum();
+                        if q > 0 && others + q <= self.cluster.total() {
+                            self.studies[i].quota = q;
+                        }
+                    }
+                    if let Some(p) = priority {
+                        if p.is_finite() && p > 0.0 {
+                            self.studies[i].priority = p;
+                        }
+                    }
+                    // The next tick folds the new quota/weight into caps
+                    // and targets.
+                }
+            }
+        }
+    }
+
+    fn rearm_ticks(&mut self, t: SimTime) {
         if self.ticks_pending == 0 {
             self.evq.schedule_at(t, SEv::MasterTick);
             self.ticks_pending += 1;
@@ -748,20 +1128,12 @@ impl<'t> StudyScheduler<'t> {
 
     /// Serialize the replay inputs plus a progress summary.  Restore
     /// rebuilds from the manifest and replays the recorded event count,
-    /// re-issuing online study submissions at the event counts where the
-    /// original calls happened.
+    /// re-issuing every external input (study submissions *and*
+    /// control-plane commands) at the event counts where the original
+    /// calls happened — a run steered over `/api/v1/commands` stays
+    /// restorable.
     pub fn snapshot_json(&self) -> Json {
-        let online = Json::Arr(
-            self.online
-                .iter()
-                .map(|o| {
-                    Json::obj()
-                        .with("at", Json::Num(o.at))
-                        .with("after_events", Json::Num(o.after_events as f64))
-                        .with("study", o.spec.to_json())
-                })
-                .collect(),
-        );
+        let inputs = Json::Arr(self.inputs.iter().map(|i| i.to_json()).collect());
         let progress = Json::Arr(
             self.studies
                 .iter()
@@ -782,12 +1154,12 @@ impl<'t> StudyScheduler<'t> {
                 .collect(),
         );
         Json::obj()
-            .with("version", Json::Num(1.0))
+            .with("version", Json::Num(2.0))
             .with("kind", Json::Str("multi_study".into()))
             .with("t", Json::Num(self.evq.now()))
             .with("events_processed", Json::Num(self.evq.processed() as f64))
             .with("manifest", self.manifest.to_json())
-            .with("online", online)
+            .with("inputs", inputs)
             .with("progress", progress)
     }
 
@@ -833,25 +1205,63 @@ impl<'t> StudyScheduler<'t> {
             as u64;
         let mut sched = StudyScheduler::new(manifest, make_trainer);
         sched.cluster.set_series_retention(false);
-        if let Some(online) = doc.get("online").and_then(|v| v.as_arr()) {
-            for (i, o) in online.iter().enumerate() {
-                let at = o
-                    .get("at")
-                    .and_then(|v| v.as_f64())
-                    .ok_or_else(|| anyhow::anyhow!("online study missing 'at'"))?;
-                let after_events = o
-                    .get("after_events")
-                    .and_then(|v| v.as_i64())
-                    .unwrap_or(0) as u64;
-                let spec = StudySpec::from_json(
-                    o.get("study")
-                        .ok_or_else(|| anyhow::anyhow!("online study missing 'study'"))?,
-                    i,
-                )?;
-                sched.replay_to(after_events.min(target))?;
-                if sched.submit_study(spec, at).is_none() {
-                    anyhow::bail!("replay could not re-issue the online study at t={at}");
+        // "inputs" is the v2 unified log; v1 snapshots recorded online
+        // study submissions under "online" (kind implied).
+        let recorded = doc
+            .get("inputs")
+            .or_else(|| doc.get("online"))
+            .and_then(|v| v.as_arr())
+            .unwrap_or(&[]);
+        for (i, o) in recorded.iter().enumerate() {
+            let at = o
+                .get("at")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("recorded input missing 'at'"))?;
+            let after_events = o
+                .get("after_events")
+                .and_then(|v| v.as_i64())
+                .unwrap_or(0) as u64;
+            sched.replay_to(after_events.min(target))?;
+            let kind = o
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .unwrap_or("submit_study");
+            let study_name = || -> anyhow::Result<&str> {
+                o.get("study")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("recorded '{kind}' input missing 'study'"))
+            };
+            let session = || -> anyhow::Result<SessionId> {
+                o.get("session").and_then(SessionId::from_json).ok_or_else(|| {
+                    anyhow::anyhow!("recorded '{kind}' input missing a valid 'session' id")
+                })
+            };
+            let reissued = match kind {
+                "submit_study" => {
+                    let spec = StudySpec::from_json(
+                        o.get("study")
+                            .ok_or_else(|| anyhow::anyhow!("submit_study input missing 'study'"))?,
+                        i,
+                    )?;
+                    sched.submit_study(spec, at)
                 }
+                "pause_study" => sched.pause_study(study_name()?, at),
+                "resume_study" => sched.resume_study(study_name()?, at),
+                "stop_study" => sched.stop_study(study_name()?, at),
+                "pause_session" => sched.pause_session(study_name()?, session()?, at),
+                "resume_session" => sched.resume_session(study_name()?, session()?, at),
+                "stop_session" => sched.stop_session(study_name()?, session()?, at),
+                "set_quota" => {
+                    let quota = o.get("quota").and_then(|v| v.as_usize());
+                    let priority = o.get("priority").and_then(|v| v.as_f64());
+                    sched.set_quota(study_name()?, quota, priority, at)
+                }
+                other => anyhow::bail!("unknown recorded input kind '{other}'"),
+            };
+            if reissued.is_none() {
+                anyhow::bail!(
+                    "replay could not re-issue a recorded '{kind}' input at t={at} — snapshot does not match inputs"
+                );
             }
         }
         sched.replay_to(target)?;

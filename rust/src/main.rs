@@ -509,10 +509,12 @@ fn cmd_serve(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
     }
 }
 
-/// `chopt serve --live`: run the engine in-process and republish the
-/// leaderboard / parallel-coords / cluster-view JSON on every advance, so
-/// the browser watches the optimization unfold (paper §3.5's analytic
-/// tool over a *running* session instead of a stored one).
+/// `chopt serve --live`: run the engine in-process behind the versioned
+/// control plane.  Queries (`GET /api/v1/...`) are answered on demand
+/// from the platform's incremental documents — nothing is re-rendered
+/// per tick for nobody — and commands (`POST /api/v1/commands`) are
+/// applied at tick boundaries, so a browser can watch *and steer* the
+/// optimization (paper §3.5's analytic tool made read-write).
 fn cmd_serve_live(m: &chopt::util::cli::Matches, port: u16) -> anyhow::Result<()> {
     if m.get("manifest").is_some() {
         return cmd_serve_live_multi(m, port);
@@ -524,48 +526,40 @@ fn cmd_serve_live(m: &chopt::util::cli::Matches, port: u16) -> anyhow::Result<()
     let gpus = m.get_usize("gpus").unwrap_or(8);
     let chunk = m.get_f64("chunk").unwrap_or(1800.0).max(1.0);
     let throttle = std::time::Duration::from_millis(m.get_u64("throttle-ms").unwrap_or(250));
-    let space = cfg.space.clone();
 
     let mut platform = Platform::new(SimSetup::single(cfg, gpus), |id| -> Box<dyn Trainer> {
         Box::new(SurrogateTrainer::new(id))
     });
     let server = viz::server::VizServer::start(port, viz::server::Routes::new())?;
-    let publish = |p: &Platform| {
-        // Borrowed sessions: the refresh loop renders every document from
-        // one reference collection instead of deep-cloning per publish.
-        let sessions = p.sessions_ref();
-        server.put_json("/api/sessions.json", &p.sessions_doc());
-        server.put_json("/api/leaderboard.json", &p.leaderboard_doc(10));
-        server.put_json("/api/parallel.json", &p.parallel_doc_from(&space, &sessions));
-        server.put_json("/api/cluster.json", &p.cluster_doc());
-        server.put_json("/api/status.json", &p.status_doc());
-    };
-    publish(&platform);
+    let inbox = server.enable_api();
     println!(
-        "live run on http://{}/ (leaderboard/parallel/cluster JSON refresh as the engine advances)",
+        "live run on http://{}/ — GET /api/v1/{{status,cluster,sessions,leaderboard,parallel}}, POST /api/v1/commands",
         server.addr()
     );
     loop {
         let n = platform.advance(chunk);
-        publish(&platform);
-        if platform.is_done() || n == 0 {
-            break;
+        let done = platform.is_done() || n == 0;
+        if done {
+            println!(
+                "run complete at t={:.0}s ({} events); still serving /api/v1 — a submit command revives it, ctrl-c to stop",
+                platform.now(),
+                platform.engine().events_processed()
+            );
+            // Idle: block on the inbox until a command revives the run.
+            while platform.is_done() {
+                inbox.serve_one(&mut platform, std::time::Duration::from_millis(500));
+            }
+        } else {
+            // The between-advances breather doubles as the API window:
+            // queries answered now, commands land on this tick boundary.
+            inbox.serve_for(&mut platform, throttle);
         }
-        std::thread::sleep(throttle);
-    }
-    println!(
-        "run complete at t={:.0}s ({} events); still serving — ctrl-c to stop",
-        platform.now(),
-        platform.engine().events_processed()
-    );
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
     }
 }
 
-/// `chopt serve --live --manifest`: drive a multi-study run in-process
-/// and republish per-study routes (`/api/studies/<name>/...`) plus the
-/// merged fair-share document as the scheduler advances.
+/// `chopt serve --live --manifest`: the multi-tenant control plane —
+/// fair-share and per-study queries under `/api/v1/studies/<name>/`,
+/// plus study-level commands (submit/pause/resume/stop/set_quota).
 fn cmd_serve_live_multi(m: &chopt::util::cli::Matches, port: u16) -> anyhow::Result<()> {
     let manifest = StudyManifest::load(m.get("manifest").unwrap())?;
     let chunk = m.get_f64("chunk").unwrap_or(1800.0).max(1.0);
@@ -573,40 +567,29 @@ fn cmd_serve_live_multi(m: &chopt::util::cli::Matches, port: u16) -> anyhow::Res
 
     let mut platform = MultiPlatform::new(manifest, multi_trainer);
     let server = viz::server::VizServer::start(port, viz::server::Routes::new())?;
-    let publish = |p: &MultiPlatform| {
-        server.put_json("/api/fair_share.json", &p.fair_share_doc());
-        server.put_json("/api/status.json", &p.status_doc());
-        for st in p.scheduler().studies() {
-            let name = st.name();
-            server.put_json(
-                &format!("/api/studies/{name}/leaderboard.json"),
-                &p.study_leaderboard_doc(name, 10),
-            );
-            server.put_json(
-                &format!("/api/studies/{name}/sessions.json"),
-                &p.study_sessions_doc(name),
-            );
-        }
-    };
-    publish(&platform);
+    let inbox = server.enable_api();
     println!(
-        "live multi-study run on http://{}/ (per-study routes under /api/studies/<name>/)",
+        "live multi-study run on http://{}/ — GET /api/v1/{{status,cluster,fair_share,studies}}, /api/v1/studies/<name>/..., POST /api/v1/commands",
         server.addr()
     );
     loop {
         let n = platform.advance(chunk);
-        publish(&platform);
-        if platform.is_done() || n == 0 {
-            break;
+        let done = platform.is_done() || n == 0;
+        if done {
+            println!(
+                "run complete at t={:.0}s ({} events); still serving /api/v1 — a submit_study command revives it, ctrl-c to stop",
+                platform.now(),
+                platform.scheduler().events_processed()
+            );
+            // Idle: block on the inbox until a command revives the run.
+            while platform.is_done() {
+                inbox.serve_one(&mut platform, std::time::Duration::from_millis(500));
+            }
+        } else {
+            // The between-advances breather doubles as the API window:
+            // queries answered now, commands land on this tick boundary.
+            inbox.serve_for(&mut platform, throttle);
         }
-        std::thread::sleep(throttle);
-    }
-    println!(
-        "run complete at t={:.0}s ({} events); still serving — ctrl-c to stop",
-        platform.now(),
-        platform.scheduler().events_processed()
-    );
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
     }
 }
+

@@ -8,6 +8,23 @@ use crate::util::json::Value as Json;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct SessionId(pub u64);
 
+impl SessionId {
+    /// Parse the wire form of a session id shared by the `/api/v1`
+    /// command bodies and the snapshot input logs: a string-encoded u64
+    /// (canonical — ids pack `(chopt_id << 32 | counter)`, which an f64
+    /// corrupts past 2^53) or, as a convenience, a bare JSON number
+    /// within the exact-integer range.
+    pub fn from_json(v: &Json) -> Option<SessionId> {
+        match v {
+            Json::Str(s) => s.parse::<u64>().ok().map(SessionId),
+            _ => v
+                .as_i64()
+                .and_then(|n| u64::try_from(n).ok())
+                .map(SessionId),
+        }
+    }
+}
+
 impl std::fmt::Display for SessionId {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "nsml-{}", self.0)
@@ -192,7 +209,9 @@ impl NsmlSession {
             })
             .collect();
         Json::obj()
-            .with("id", Json::Num(self.id.0 as f64))
+            // Ids serialize as strings: they pack (chopt_id << 32 |
+            // counter) into a u64, which an f64 corrupts past 2^53.
+            .with("id", Json::Str(self.id.0.to_string()))
             .with("hparams", self.hparams.to_json())
             .with("model", Json::Str(self.model.clone()))
             .with("status", Json::Str(self.status.name().to_string()))
@@ -201,7 +220,7 @@ impl NsmlSession {
             .with(
                 "parent",
                 self.parent
-                    .map(|p| Json::Num(p.0 as f64))
+                    .map(|p| Json::Str(p.0.to_string()))
                     .unwrap_or(Json::Null),
             )
             .with("gpu_seconds", Json::Num(self.gpu_seconds))
@@ -263,7 +282,8 @@ mod tests {
         let mut s = mk();
         s.report(1, 0.4, 3.0);
         let j = s.to_json();
-        assert_eq!(j.get("id").unwrap().as_i64(), Some(1));
+        // Ids are strings (u64 through f64 corrupts past 2^53).
+        assert_eq!(j.get("id").unwrap().as_str(), Some("1"));
         assert_eq!(j.get("status").unwrap().as_str(), Some("pending"));
         assert_eq!(j.get("history").unwrap().as_arr().unwrap().len(), 1);
     }

@@ -69,6 +69,11 @@ pub struct Hyperband {
     launched: usize,
     /// Completed (id, measure) results for the active rung.
     results: Vec<(SessionId, f64)>,
+    /// Active-rung members that will never report (operator-killed, or a
+    /// promotion shortfall carried from the previous rung): the barrier
+    /// counts them as arrived-with-no-result so the surviving cohort is
+    /// not stalled waiting on the dead.
+    retired: usize,
     /// Promotions waiting to be handed out as resume trials.
     promotions: Vec<(SessionId, usize)>,
     /// Sessions the coordinator should move stop→dead.
@@ -96,6 +101,7 @@ impl Hyperband {
             rung_idx: 0,
             launched: 0,
             results: Vec::new(),
+            retired: 0,
             promotions: Vec::new(),
             evictions: Vec::new(),
             hparams: HashMap::new(),
@@ -113,7 +119,7 @@ impl Hyperband {
 
     fn complete_rung_if_ready(&mut self) {
         let Some(rung) = self.rung().cloned() else { return };
-        if self.results.len() < rung.n {
+        if self.results.len() + self.retired < rung.n {
             return;
         }
         let Some(bracket) = self.active().cloned() else { return };
@@ -125,6 +131,7 @@ impl Hyperband {
             self.rung_idx = 0;
             self.launched = 0;
             self.results.clear();
+            self.retired = 0;
             return;
         }
         // Promote the top n_{i+1}.
@@ -148,6 +155,10 @@ impl Hyperband {
             }
         }
         self.rung_idx += 1;
+        // Retirements can leave fewer survivors than the next rung
+        // expects; carry the shortfall so its barrier is not waiting on
+        // members that were never promoted.
+        self.retired = bracket.rungs[self.rung_idx].n.saturating_sub(keep);
     }
 }
 
@@ -258,6 +269,30 @@ impl Tuner for Hyperband {
         }
         evicted
     }
+
+    /// Operator kill: the session will never report, so the barrier it
+    /// belongs to must not wait on it.  A queued promotion was already
+    /// counted toward the *active* rung's cohort at advance time, so
+    /// dropping one is also a retirement there.
+    fn retire(&mut self, id: SessionId) {
+        let before = self.promotions.len();
+        self.promotions.retain(|&(pid, _)| pid != id);
+        if self.promotions.len() < before {
+            self.retired += 1;
+        }
+        if let Some((b, r)) = self.membership.remove(&id) {
+            if b == self.bracket_idx && r == self.rung_idx {
+                // Whether it reported already (parked at the barrier) or
+                // not, the member is gone: drop any recorded result so a
+                // dead session is never promoted, and count it retired —
+                // the barrier sum stays consistent in both cases.
+                self.results.retain(|&(sid, _)| sid != id);
+                self.retired += 1;
+            }
+        }
+        self.hparams.remove(&id);
+        self.complete_rung_if_ready();
+    }
 }
 
 #[cfg(test)]
@@ -331,6 +366,68 @@ mod tests {
         let mut resumed_ids: Vec<u64> = resumed.iter().map(|r| r.0).collect();
         resumed_ids.sort_unstable();
         assert_eq!(resumed_ids, vec![6, 7, 8]);
+    }
+
+    /// An operator-killed rung member (Tuner::retire) must not stall its
+    /// cohort's barrier, and the shortfall carries into the next rung.
+    #[test]
+    fn retired_member_does_not_stall_the_rung_barrier() {
+        // R=9, eta=3: bracket 0 rungs (n=9,r=1),(n=3,r=3),(n=1,r=9).
+        let mut t = Hyperband::new(space(), Order::Descending, 9, 3);
+        let mut rng = Rng::new(3);
+        let mut ids = Vec::new();
+        while let Some(trial) = t.next_trial(&mut rng) {
+            let id = SessionId(ids.len() as u64);
+            t.register(id, &trial);
+            ids.push(id);
+        }
+        assert_eq!(ids.len(), 9);
+        // 8 of 9 report; the 9th is killed by the operator instead.
+        for &id in &ids[..8] {
+            t.report(
+                Report {
+                    id,
+                    epoch: 1,
+                    measure: id.0 as f64,
+                },
+                &mut rng,
+            );
+        }
+        t.retire(ids[8]);
+        // Barrier completed without the dead member: promotions flow and
+        // the retired session is never among them.
+        let mut resumed = Vec::new();
+        while let Some(trial) = t.next_trial(&mut rng) {
+            match trial.resume_of {
+                Some(rid) => resumed.push(rid),
+                None => break,
+            }
+        }
+        assert_eq!(resumed.len(), 3, "rung must advance past the dead member");
+        assert!(!resumed.contains(&ids[8]));
+        // Retiring a *promoted* session keeps the next rung's barrier
+        // honest too: the two survivors' reports complete it.
+        t.retire(resumed[0]);
+        for (k, &id) in resumed[1..].iter().enumerate() {
+            t.register(id, &Trial {
+                hparams: crate::hparam::Assignment::new(),
+                budget: 3,
+                clone_of: None,
+                resume_of: Some(id),
+            });
+            t.report(
+                Report {
+                    id,
+                    epoch: 3,
+                    measure: 100.0 + k as f64,
+                },
+                &mut rng,
+            );
+        }
+        // Next rung (n=1) promotion arrives despite the retirement.
+        let last = t.next_trial(&mut rng).expect("final-rung promotion");
+        assert!(last.resume_of.is_some());
+        assert_ne!(last.resume_of, Some(resumed[0]));
     }
 
     #[test]

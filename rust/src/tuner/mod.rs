@@ -108,6 +108,13 @@ pub trait Tuner: Send {
     fn take_evictions(&mut self) -> Vec<SessionId> {
         Vec::new()
     }
+
+    /// The coordinator killed `id` outright (operator `stop_session`
+    /// command): it will never report again.  Report-driven tuners can
+    /// ignore this (the default), but synchronous-barrier tuners must
+    /// adjust their cohort accounting — a Hyperband rung waiting on a
+    /// member that can never report would otherwise stall forever.
+    fn retire(&mut self, _id: SessionId) {}
 }
 
 /// Build the tuner a config asks for.

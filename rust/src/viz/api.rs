@@ -1,0 +1,606 @@
+//! The versioned control-plane API: command + query `/api/v1`.
+//!
+//! The serving layer used to be a passive route table the engine loop
+//! pushed full documents into on every tick.  This module replaces that
+//! with a **pull-based** surface:
+//!
+//! * **Queries** — `GET /api/v1/{status,cluster,fair_share,studies,
+//!   sessions,leaderboard,parallel}` (plus per-study variants under
+//!   `/api/v1/studies/<name>/`) are parsed into typed [`ApiQuery`]
+//!   values and answered from the platform's incremental documents at
+//!   request time, instead of the loop re-rendering every document every
+//!   tick whether anyone is watching or not.
+//! * **Commands** — `POST /api/v1/commands` bodies parse into typed
+//!   [`ApiCommand`] values which the `SimEngine` / `StudyScheduler` loop
+//!   applies at tick boundaries (submit a study, pause/resume/stop a
+//!   session or study, set quota/priority).  Commands are recorded as
+//!   replay inputs, so a command-steered run stays snapshot-restorable.
+//! * **Envelope** — every response carries `schema_version`,
+//!   `generated_at_event` (a *string*: event counts are u64), and the
+//!   payload under `data` (or `error`).  All ids are strings throughout.
+//!
+//! The legacy unversioned `/api/*.json` paths are **deprecated aliases**
+//! onto the v1 handlers: they serve byte-identical v1 bodies.
+//!
+//! Threading: the HTTP server answers each connection on its own thread,
+//! but the platform is single-threaded by design (`&mut` engine loop).
+//! The bridge is a channel of [`ApiRequest`]s: connection threads enqueue
+//! and block on a reply; the engine loop drains the [`ApiInbox`] between
+//! advances — which is exactly the "commands apply at tick boundaries"
+//! contract.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Value as Json;
+
+/// Schema version stamped into every envelope.
+pub const SCHEMA_VERSION: f64 = 1.0;
+
+/// A typed v1 query (the GET half of the surface).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiQuery {
+    /// One-object run status heartbeat.
+    Status,
+    /// Cluster utilization; `window` caps the serialized series to the
+    /// last `window` virtual seconds.
+    Cluster { window: Option<f64> },
+    /// Multi-tenant fair-share accounting (multi-study runs only).
+    FairShare,
+    /// Study directory (multi-study runs only).
+    Studies,
+    /// Paginated session list.
+    Sessions { limit: usize, offset: usize },
+    /// Merged leaderboard, top `k`.
+    Leaderboard { k: usize },
+    /// Parallel-coordinates document.
+    Parallel,
+    /// Paginated session list of one study.
+    StudySessions {
+        study: String,
+        limit: usize,
+        offset: usize,
+    },
+    /// One study's leaderboard, top `k`.
+    StudyLeaderboard { study: String, k: usize },
+    /// One study's parallel-coordinates document.
+    StudyParallel { study: String },
+}
+
+/// A typed v1 command (the POST half).  Session ids travel as strings.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiCommand {
+    /// Submit a new study from a manifest-style spec (multi-study runs).
+    /// The spec is kept as raw JSON and parsed by the platform so parse
+    /// errors surface as 400s with the real message.
+    SubmitStudy { spec: Json, at: Option<f64> },
+    /// Submit a new CHOPT session from a Listing-1 config (single-study).
+    Submit { config: Json, at: Option<f64> },
+    /// Park a live session until an explicit resume.
+    PauseSession { study: Option<String>, session: u64 },
+    /// Revive a paused session (priority-queued if no GPU is free).
+    ResumeSession { study: Option<String>, session: u64 },
+    /// Kill a session outright.
+    StopSession { study: Option<String>, session: u64 },
+    /// Hold a study at zero GPUs until resumed.
+    PauseStudy { study: String },
+    ResumeStudy { study: String },
+    /// Shut a study down (its sessions finish with horizon semantics).
+    StopStudy { study: String },
+    /// Change a study's guaranteed quota and/or fair-share weight.
+    SetQuota {
+        study: String,
+        quota: Option<usize>,
+        priority: Option<f64>,
+    },
+}
+
+impl ApiCommand {
+    /// Parse a `POST /api/v1/commands` body.
+    pub fn from_json(doc: &Json) -> Result<ApiCommand, String> {
+        let kind = doc
+            .get("command")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| "body must carry a string 'command' field".to_string())?;
+        let study = || {
+            doc.get("study")
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string())
+                .ok_or_else(|| format!("'{kind}' needs a string 'study' field"))
+        };
+        let opt_study = doc
+            .get("study")
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string());
+        // Session ids are string-encoded u64s (bare numbers accepted for
+        // convenience but corrupt past 2^53) — the shared wire form.
+        let session = || -> Result<u64, String> {
+            match doc.get("session") {
+                Some(v) => crate::nsml::SessionId::from_json(v)
+                    .map(|sid| sid.0)
+                    .ok_or_else(|| "'session' must be a string-encoded u64 id".to_string()),
+                None => Err(format!("'{kind}' needs a 'session' field")),
+            }
+        };
+        let at = doc.get("at").and_then(|v| v.as_f64());
+        match kind {
+            "submit_study" => Ok(ApiCommand::SubmitStudy {
+                spec: doc
+                    .get("study")
+                    .cloned()
+                    .ok_or_else(|| "'submit_study' needs a 'study' spec object".to_string())?,
+                at,
+            }),
+            "submit" => Ok(ApiCommand::Submit {
+                config: doc
+                    .get("config")
+                    .cloned()
+                    .ok_or_else(|| "'submit' needs a 'config' object".to_string())?,
+                at,
+            }),
+            "pause_session" => Ok(ApiCommand::PauseSession {
+                study: opt_study,
+                session: session()?,
+            }),
+            "resume_session" => Ok(ApiCommand::ResumeSession {
+                study: opt_study,
+                session: session()?,
+            }),
+            "stop_session" => Ok(ApiCommand::StopSession {
+                study: opt_study,
+                session: session()?,
+            }),
+            "pause_study" => Ok(ApiCommand::PauseStudy { study: study()? }),
+            "resume_study" => Ok(ApiCommand::ResumeStudy { study: study()? }),
+            "stop_study" => Ok(ApiCommand::StopStudy { study: study()? }),
+            "set_quota" => {
+                let quota = match doc.get("quota") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => Some(
+                        v.as_usize()
+                            .ok_or_else(|| "'quota' must be a non-negative integer".to_string())?,
+                    ),
+                };
+                let priority = match doc.get("priority") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => {
+                        Some(v.as_f64().ok_or_else(|| "'priority' must be a number".to_string())?)
+                    }
+                };
+                if quota.is_none() && priority.is_none() {
+                    return Err("'set_quota' needs 'quota' and/or 'priority'".to_string());
+                }
+                Ok(ApiCommand::SetQuota {
+                    study: study()?,
+                    quota,
+                    priority,
+                })
+            }
+            other => Err(format!("unknown command '{other}'")),
+        }
+    }
+
+    /// The command's wire name (acks echo it).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ApiCommand::SubmitStudy { .. } => "submit_study",
+            ApiCommand::Submit { .. } => "submit",
+            ApiCommand::PauseSession { .. } => "pause_session",
+            ApiCommand::ResumeSession { .. } => "resume_session",
+            ApiCommand::StopSession { .. } => "stop_session",
+            ApiCommand::PauseStudy { .. } => "pause_study",
+            ApiCommand::ResumeStudy { .. } => "resume_study",
+            ApiCommand::StopStudy { .. } => "stop_study",
+            ApiCommand::SetQuota { .. } => "set_quota",
+        }
+    }
+}
+
+/// Handler-side error: mapped to an HTTP status + error envelope.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiError {
+    /// Unknown resource (study, endpoint not served by this run shape).
+    NotFound(String),
+    /// The request was understood but invalid (bad param, rejected
+    /// command, malformed embedded config).
+    BadRequest(String),
+}
+
+impl ApiError {
+    pub fn http_status(&self) -> u16 {
+        match self {
+            ApiError::NotFound(_) => 404,
+            ApiError::BadRequest(_) => 400,
+        }
+    }
+}
+
+/// Route-parse outcome: a typed call, or an HTTP-level error.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiCall {
+    Query(ApiQuery),
+    Command(ApiCommand),
+}
+
+/// Route-level errors the server answers without consulting the platform.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RouteError {
+    /// Not an API path this version serves.
+    NotFound,
+    /// Known path, wrong method (GET on /commands, POST on a query).
+    MethodNotAllowed,
+    /// Bad query parameter or malformed command body.
+    BadRequest(String),
+}
+
+/// Parse an HTTP request into a typed API call.  `query` is the raw
+/// query string (no leading `?`); `body` is the request body.
+///
+/// Legacy `/api/*.json` paths parse to the same [`ApiQuery`] values as
+/// their `/api/v1` counterparts — the deprecation story is "same handler,
+/// same bytes, new name".
+pub fn parse_route(
+    method: &str,
+    path: &str,
+    query: &str,
+    body: &[u8],
+) -> Result<ApiCall, RouteError> {
+    if path == "/api/v1/commands" {
+        if method != "POST" {
+            return Err(RouteError::MethodNotAllowed);
+        }
+        let text = std::str::from_utf8(body)
+            .map_err(|_| RouteError::BadRequest("body is not UTF-8".into()))?;
+        let doc = crate::util::json::parse(text)
+            .map_err(|e| RouteError::BadRequest(format!("malformed JSON body: {e}")))?;
+        let cmd = ApiCommand::from_json(&doc).map_err(RouteError::BadRequest)?;
+        return Ok(ApiCall::Command(cmd));
+    }
+
+    let q = match route_query(path, query)? {
+        Some(q) => q,
+        None => return Err(RouteError::NotFound),
+    };
+    if method != "GET" {
+        return Err(RouteError::MethodNotAllowed);
+    }
+    Ok(ApiCall::Query(q))
+}
+
+/// Map a path (v1 or legacy alias) to a query, or `None` if unknown.
+fn route_query(path: &str, query: &str) -> Result<Option<ApiQuery>, RouteError> {
+    let k = || param_usize(query, "k", 10);
+    let limit = || param_usize(query, "limit", usize::MAX);
+    let offset = || param_usize(query, "offset", 0);
+    let q = match path {
+        "/api/v1/status" | "/api/status.json" => ApiQuery::Status,
+        "/api/v1/cluster" | "/api/cluster.json" => ApiQuery::Cluster {
+            window: param_f64(query, "window")?,
+        },
+        "/api/v1/fair_share" | "/api/fair_share.json" => ApiQuery::FairShare,
+        "/api/v1/studies" => ApiQuery::Studies,
+        "/api/v1/sessions" | "/api/sessions.json" => ApiQuery::Sessions {
+            limit: limit()?,
+            offset: offset()?,
+        },
+        "/api/v1/leaderboard" | "/api/leaderboard.json" => ApiQuery::Leaderboard { k: k()? },
+        "/api/v1/parallel" | "/api/parallel.json" => ApiQuery::Parallel,
+        _ => {
+            // /api/v1/studies/<name>/<view> and the legacy
+            // /api/studies/<name>/<view>.json per-study routes.
+            let rest = if let Some(r) = path.strip_prefix("/api/v1/studies/") {
+                r
+            } else if let Some(r) = path.strip_prefix("/api/studies/") {
+                r
+            } else {
+                return Ok(None);
+            };
+            let Some((study, view)) = rest.split_once('/') else {
+                return Ok(None);
+            };
+            if study.is_empty() || study.contains('/') {
+                return Ok(None);
+            }
+            let study = study.to_string();
+            match view {
+                "sessions" | "sessions.json" => ApiQuery::StudySessions {
+                    study,
+                    limit: limit()?,
+                    offset: offset()?,
+                },
+                "leaderboard" | "leaderboard.json" => {
+                    ApiQuery::StudyLeaderboard { study, k: k()? }
+                }
+                "parallel" | "parallel.json" => ApiQuery::StudyParallel { study },
+                _ => return Ok(None),
+            }
+        }
+    };
+    Ok(Some(q))
+}
+
+fn param<'q>(query: &'q str, name: &str) -> Option<&'q str> {
+    query
+        .split('&')
+        .filter_map(|kv| kv.split_once('='))
+        .find(|(k, _)| *k == name)
+        .map(|(_, v)| v)
+}
+
+fn param_usize(query: &str, name: &str, default: usize) -> Result<usize, RouteError> {
+    match param(query, name) {
+        None | Some("") => Ok(default),
+        Some(v) => v.parse::<usize>().map_err(|_| {
+            RouteError::BadRequest(format!("'{name}' must be a non-negative integer"))
+        }),
+    }
+}
+
+fn param_f64(query: &str, name: &str) -> Result<Option<f64>, RouteError> {
+    match param(query, name) {
+        None | Some("") => Ok(None),
+        Some(v) => v
+            .parse::<f64>()
+            .ok()
+            .filter(|w| w.is_finite() && *w >= 0.0)
+            .map(Some)
+            .ok_or_else(|| {
+                RouteError::BadRequest(format!("'{name}' must be a non-negative number"))
+            }),
+    }
+}
+
+/// The query/command surface a platform exposes to the API.  Implemented
+/// by `coordinator::Platform` (single study) and
+/// `coordinator::MultiPlatform` (multi-tenant); endpoints that don't
+/// apply to a run shape return [`ApiError::NotFound`].
+pub trait PlatformApi {
+    /// Monotone progress marker stamped into every envelope
+    /// (`generated_at_event`) — the engine's processed-event count.
+    fn api_generation(&self) -> u64;
+
+    /// Answer a query from the live (incremental) documents.
+    fn api_query(&self, q: &ApiQuery) -> Result<Json, ApiError>;
+
+    /// Apply a command.  Called by the engine loop between advances, so
+    /// effects land at tick boundaries; the returned ack documents what
+    /// was accepted (commands take effect at the *next* event boundary).
+    fn api_command(&mut self, c: &ApiCommand) -> Result<Json, ApiError>;
+}
+
+/// Wrap a payload in the uniform v1 envelope.
+pub fn envelope(generation: u64, data: Json) -> Json {
+    Json::obj()
+        .with("schema_version", Json::Num(SCHEMA_VERSION))
+        .with("api", Json::Str("v1".into()))
+        .with("generated_at_event", Json::Str(generation.to_string()))
+        .with("data", data)
+}
+
+/// The error-envelope twin of [`envelope`].
+pub fn error_envelope(generation: Option<u64>, message: &str) -> Json {
+    Json::obj()
+        .with("schema_version", Json::Num(SCHEMA_VERSION))
+        .with("api", Json::Str("v1".into()))
+        .with(
+            "generated_at_event",
+            generation
+                .map(|g| Json::Str(g.to_string()))
+                .unwrap_or(Json::Null),
+        )
+        .with("error", Json::Str(message.to_string()))
+}
+
+/// One in-flight HTTP API request: the parsed call plus the reply slot
+/// the connection thread blocks on.
+pub struct ApiRequest {
+    pub call: ApiCall,
+    pub reply: mpsc::Sender<(u16, Json)>,
+}
+
+/// The engine-loop end of the API bridge (`VizServer::enable_api`).
+pub struct ApiInbox {
+    rx: mpsc::Receiver<ApiRequest>,
+}
+
+impl ApiInbox {
+    pub(crate) fn new(rx: mpsc::Receiver<ApiRequest>) -> ApiInbox {
+        ApiInbox { rx }
+    }
+
+    fn answer(req: ApiRequest, api: &mut impl PlatformApi) {
+        let generation = api.api_generation();
+        let outcome = match &req.call {
+            ApiCall::Query(q) => api.api_query(q),
+            ApiCall::Command(c) => api.api_command(c),
+        };
+        let (status, body) = match outcome {
+            Ok(data) => (200, envelope(generation, data)),
+            Err(e) => (e.http_status(), error_envelope(Some(generation), &match e {
+                ApiError::NotFound(m) | ApiError::BadRequest(m) => m,
+            })),
+        };
+        // A vanished client (timeout, dropped connection) is not an error.
+        let _ = req.reply.send((status, body));
+    }
+
+    /// Answer everything currently queued without blocking.  Returns the
+    /// number of requests served.
+    pub fn drain(&self, api: &mut impl PlatformApi) -> usize {
+        let mut n = 0;
+        while let Ok(req) = self.rx.try_recv() {
+            Self::answer(req, api);
+            n += 1;
+        }
+        n
+    }
+
+    /// Block up to `timeout` for one request and answer it.  Returns
+    /// whether a request was served.
+    pub fn serve_one(&self, api: &mut impl PlatformApi, timeout: Duration) -> bool {
+        match self.rx.recv_timeout(timeout) {
+            Ok(req) => {
+                Self::answer(req, api);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Serve requests for roughly `window` wall-clock time (the engine
+    /// loop's between-advances breather — replaces a blind sleep).
+    pub fn serve_for(&self, api: &mut impl PlatformApi, window: Duration) -> usize {
+        let deadline = Instant::now() + window;
+        let mut n = 0;
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                return n;
+            }
+            if self.serve_one(api, deadline - now) {
+                n += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v1_and_legacy_paths_parse_to_the_same_query() {
+        for (v1, legacy) in [
+            ("/api/v1/status", "/api/status.json"),
+            ("/api/v1/cluster", "/api/cluster.json"),
+            ("/api/v1/fair_share", "/api/fair_share.json"),
+            ("/api/v1/sessions", "/api/sessions.json"),
+            ("/api/v1/leaderboard", "/api/leaderboard.json"),
+            ("/api/v1/parallel", "/api/parallel.json"),
+            ("/api/v1/studies/alice/sessions", "/api/studies/alice/sessions.json"),
+            (
+                "/api/v1/studies/alice/leaderboard",
+                "/api/studies/alice/leaderboard.json",
+            ),
+        ] {
+            let a = parse_route("GET", v1, "", b"").unwrap();
+            let b = parse_route("GET", legacy, "", b"").unwrap();
+            assert_eq!(a, b, "{v1} vs {legacy}");
+        }
+    }
+
+    #[test]
+    fn query_params_parse_and_validate() {
+        assert_eq!(
+            parse_route("GET", "/api/v1/sessions", "limit=5&offset=10", b"").unwrap(),
+            ApiCall::Query(ApiQuery::Sessions {
+                limit: 5,
+                offset: 10
+            })
+        );
+        assert_eq!(
+            parse_route("GET", "/api/v1/cluster", "window=3600", b"").unwrap(),
+            ApiCall::Query(ApiQuery::Cluster {
+                window: Some(3600.0)
+            })
+        );
+        assert_eq!(
+            parse_route("GET", "/api/v1/leaderboard", "k=3", b"").unwrap(),
+            ApiCall::Query(ApiQuery::Leaderboard { k: 3 })
+        );
+        assert!(matches!(
+            parse_route("GET", "/api/v1/sessions", "limit=abc", b""),
+            Err(RouteError::BadRequest(_))
+        ));
+        assert!(matches!(
+            parse_route("GET", "/api/v1/cluster", "window=-5", b""),
+            Err(RouteError::BadRequest(_))
+        ));
+    }
+
+    #[test]
+    fn methods_are_enforced() {
+        assert!(matches!(
+            parse_route("POST", "/api/v1/status", "", b""),
+            Err(RouteError::MethodNotAllowed)
+        ));
+        assert!(matches!(
+            parse_route("GET", "/api/v1/commands", "", b""),
+            Err(RouteError::MethodNotAllowed)
+        ));
+        assert!(matches!(
+            parse_route("GET", "/api/v1/nope", "", b""),
+            Err(RouteError::NotFound)
+        ));
+        assert!(matches!(
+            parse_route("GET", "/api/v1/studies/a/unknown", "", b""),
+            Err(RouteError::NotFound)
+        ));
+    }
+
+    #[test]
+    fn command_bodies_parse() {
+        let pause = parse_route(
+            "POST",
+            "/api/v1/commands",
+            "",
+            br#"{"command": "pause_session", "study": "alice", "session": "18014398509481985"}"#,
+        )
+        .unwrap();
+        // Session ids round-trip as strings past 2^53.
+        assert_eq!(
+            pause,
+            ApiCall::Command(ApiCommand::PauseSession {
+                study: Some("alice".into()),
+                session: (1u64 << 54) + 1,
+            })
+        );
+        let quota = parse_route(
+            "POST",
+            "/api/v1/commands",
+            "",
+            br#"{"command": "set_quota", "study": "bob", "priority": 2.5}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            quota,
+            ApiCall::Command(ApiCommand::SetQuota {
+                study: "bob".into(),
+                quota: None,
+                priority: Some(2.5),
+            })
+        );
+        for bad in [
+            &b"not json"[..],
+            br#"{"command": "warp"}"#,
+            br#"{"command": "pause_session"}"#,
+            br#"{"command": "set_quota", "study": "x"}"#,
+        ] {
+            assert!(
+                matches!(
+                    parse_route("POST", "/api/v1/commands", "", bad),
+                    Err(RouteError::BadRequest(_))
+                ),
+                "{:?} must be a 400",
+                String::from_utf8_lossy(bad)
+            );
+        }
+    }
+
+    #[test]
+    fn envelope_shape() {
+        let e = envelope(u64::MAX, Json::obj().with("x", Json::Num(1.0)));
+        let text = e.to_string_compact();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("schema_version").unwrap().as_f64(), Some(1.0));
+        // The generation survives as a string even past 2^53.
+        assert_eq!(
+            back.get("generated_at_event").unwrap().as_str(),
+            Some(u64::MAX.to_string().as_str())
+        );
+        assert_eq!(back.path("data.x").unwrap().as_f64(), Some(1.0));
+        let err = error_envelope(None, "nope");
+        assert!(err.get("generated_at_event").unwrap().is_null());
+        assert_eq!(err.get("error").unwrap().as_str(), Some("nope"));
+    }
+}

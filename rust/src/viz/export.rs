@@ -52,7 +52,9 @@ pub fn parallel_coords_doc_refs(
                 values.set(k, v.to_json());
             }
             Json::obj()
-                .with("id", Json::Num(s.id.0 as f64))
+                // Session ids are strings: they pack (chopt_id << 32 |
+                // counter) into a u64, which an f64 corrupts past 2^53.
+                .with("id", Json::Str(s.id.0.to_string()))
                 .with("values", values)
                 .with(
                     "measure",
@@ -75,7 +77,7 @@ pub fn curves_doc(sessions: &[NsmlSession]) -> Json {
         .iter()
         .map(|s| {
             Json::obj()
-                .with("id", Json::Num(s.id.0 as f64))
+                .with("id", Json::Str(s.id.0.to_string()))
                 .with(
                     "epochs",
                     Json::Arr(s.history.iter().map(|p| Json::Num(p.epoch as f64)).collect()),
@@ -100,7 +102,7 @@ pub fn summary_doc(sessions: &[&NsmlSession], order: Order) -> Json {
         .iter()
         .map(|s| {
             Json::obj()
-                .with("id", Json::Num(s.id.0 as f64))
+                .with("id", Json::Str(s.id.0.to_string()))
                 .with("hparams", s.hparams.to_json())
                 .with(
                     "best",
@@ -118,9 +120,30 @@ pub fn summary_doc(sessions: &[&NsmlSession], order: Order) -> Json {
 /// usage change-points plus the instantaneous holdings at `now`.  The
 /// `serve --live` viewer polls this as the engine advances.
 pub fn cluster_doc(cluster: &crate::cluster::Cluster, now: f64) -> Json {
+    cluster_doc_windowed(cluster, now, None)
+}
+
+/// [`cluster_doc`] with an optional history window (`?window=` on the v1
+/// cluster query): only change-points within the last `window` virtual
+/// seconds are serialized, plus one carried point *before* the cut so the
+/// level at the window start is correct.  A long live run's unbounded
+/// series no longer has to be re-serialized whole on every refresh.
+pub fn cluster_doc_windowed(
+    cluster: &crate::cluster::Cluster,
+    now: f64,
+    window: Option<f64>,
+) -> Json {
+    let cut = window.map(|w| now - w.max(0.0));
     let series = |ti: &crate::events::TimeIntegrator| {
+        let pts = &ti.series;
+        let start = match cut {
+            // First change-point inside the window, minus one so the
+            // pre-window level is carried across the cut.
+            Some(c) => pts.partition_point(|&(t, _)| t < c).saturating_sub(1),
+            None => 0,
+        };
         Json::Arr(
-            ti.series
+            pts[start..]
                 .iter()
                 .map(|&(t, v)| Json::Arr(vec![Json::Num(t), Json::Num(v)]))
                 .collect(),
@@ -133,6 +156,7 @@ pub fn cluster_doc(cluster: &crate::cluster::Cluster, now: f64) -> Json {
         .with("chopt_held", Json::Num(cluster.held_by_chopt() as f64))
         .with("utilization", Json::Num(cluster.utilization()))
         .with("chopt_gpu_hours", Json::Num(cluster.chopt_gpu_hours(now)))
+        .with("window", window.map(Json::Num).unwrap_or(Json::Null))
         .with("series_total", series(&cluster.usage_total))
         .with("series_chopt", series(&cluster.usage_chopt))
         .with("series_external", series(&cluster.usage_external))
@@ -171,6 +195,40 @@ mod tests {
         let lines = doc.get("lines").unwrap().as_arr().unwrap();
         assert_eq!(lines.len(), 3);
         assert_eq!(lines[2].get("measure").unwrap().as_f64(), Some(57.0));
+        // Ids are strings (u64 through f64 corrupts past 2^53).
+        assert_eq!(lines[1].get("id").unwrap().as_str(), Some("1"));
+    }
+
+    /// Regression for the export-format debt: a session id above 2^53
+    /// survives every export document byte-exactly.
+    #[test]
+    fn export_docs_keep_ids_as_strings_past_f64_precision() {
+        let big = (1u64 << 54) + 1;
+        let mut s = NsmlSession::new(SessionId(big), Assignment::new(), "m", 0.0);
+        s.report(1, 50.0, 2.0);
+        let sessions = vec![s];
+        let refs: Vec<&NsmlSession> = sessions.iter().collect();
+        let cfg = ChoptConfig::from_json_str(crate::config::LISTING1_EXAMPLE).unwrap();
+        let expect = big.to_string();
+        for doc in [
+            parallel_coords_doc(&cfg.space, &sessions, Order::Descending, "x")
+                .get("lines")
+                .unwrap()
+                .idx(0)
+                .unwrap()
+                .clone(),
+            curves_doc(&sessions).get("curves").unwrap().idx(0).unwrap().clone(),
+            summary_doc(&refs, Order::Descending)
+                .get("rows")
+                .unwrap()
+                .idx(0)
+                .unwrap()
+                .clone(),
+        ] {
+            let text = doc.to_string_compact();
+            let back = crate::util::json::parse(&text).unwrap();
+            assert_eq!(back.get("id").and_then(|v| v.as_str()), Some(expect.as_str()));
+        }
     }
 
     #[test]
@@ -201,5 +259,32 @@ mod tests {
         assert_eq!(doc.get("chopt_held").unwrap().as_i64(), Some(3));
         assert!(doc.get("chopt_gpu_hours").unwrap().as_f64().unwrap() > 0.0);
         assert!(!doc.get("series_chopt").unwrap().as_arr().unwrap().is_empty());
+        assert!(doc.get("window").unwrap().is_null());
+    }
+
+    #[test]
+    fn cluster_doc_window_caps_series_and_carries_the_cut_level() {
+        use crate::cluster::{Cluster, Owner};
+        let mut c = Cluster::new(8);
+        // Change-points at t = 0, 10, 20, 30.
+        c.allocate(Owner::Chopt(1), 1, 0.0).unwrap();
+        c.allocate(Owner::Chopt(1), 1, 10.0).unwrap();
+        c.allocate(Owner::Chopt(1), 1, 20.0).unwrap();
+        c.allocate(Owner::Chopt(1), 1, 30.0).unwrap();
+        // Window [25, 40]: the t=30 point plus the carried t=20 level.
+        let doc = cluster_doc_windowed(&c, 40.0, Some(15.0));
+        let series = doc.get("series_chopt").unwrap().as_arr().unwrap();
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0].idx(0).unwrap().as_f64(), Some(20.0));
+        assert_eq!(series[1].idx(0).unwrap().as_f64(), Some(30.0));
+        assert_eq!(doc.get("window").unwrap().as_f64(), Some(15.0));
+        // Integral-bearing scalars are unaffected by the window.
+        assert_eq!(
+            doc.get("chopt_gpu_hours").unwrap().as_f64(),
+            cluster_doc(&c, 40.0).get("chopt_gpu_hours").unwrap().as_f64()
+        );
+        // A window wider than the run returns the whole series.
+        let all = cluster_doc_windowed(&c, 40.0, Some(1e9));
+        assert_eq!(all.get("series_chopt").unwrap().as_arr().unwrap().len(), 4);
     }
 }

@@ -14,8 +14,11 @@
 //!   right).
 //! * [`server`] — dependency-free HTTP server exposing the JSON and SVGs
 //!   plus an embedded HTML viewer.
+//! * [`api`] — the versioned `/api/v1` command + query surface the
+//!   server dispatches through (typed routes, envelope, command bodies).
 //! * [`report`] — terminal leaderboard/session tables.
 
+pub mod api;
 pub mod cluster_view;
 pub mod export;
 pub mod hierarchy;

@@ -1,22 +1,46 @@
 //! Dependency-free HTTP server for the analytic tool.
 //!
-//! Serves the JSON exports and SVG renders over `GET`, plus an embedded
-//! single-file HTML viewer that draws the parallel coordinates client-side
-//! from `/api/parallel.json` (the same document `export::parallel_coords_doc`
-//! produces).  This is the "web-based" half of §3.5 without a JS toolchain.
+//! Two serving modes compose:
+//!
+//! * a **static route table** (`Routes`) for the embedded viewer, SVG
+//!   renders, and stored-run documents (`chopt serve --store`), and
+//! * the **versioned control-plane API** (`/api/v1`, see [`crate::viz::api`])
+//!   when enabled via [`VizServer::enable_api`]: API paths are parsed
+//!   into typed calls and forwarded over a channel to the engine loop,
+//!   which answers them between advances (pull-based queries, commands
+//!   applied at tick boundaries).  Legacy `/api/*.json` paths are
+//!   deprecated aliases onto the same v1 handlers.
+//!
+//! Each accepted connection is handled on its own thread, so one slow
+//! client cannot stall the listener; methods are parsed and enforced
+//! (405 on mismatch) rather than treating every request as a GET.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
+
+use super::api::{self, ApiInbox, ApiRequest, RouteError};
 
 /// A route table: path → (content type, body).
 pub type Routes = HashMap<String, (String, Vec<u8>)>;
 
+/// Largest accepted request body (command manifests are small).
+const MAX_BODY: usize = 1 << 20;
+
+/// How long a connection thread waits for the engine loop to answer an
+/// API request before giving up with a 503.
+const API_REPLY_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(10);
+
+/// Connection threads' handle to the API bridge (None until
+/// [`VizServer::enable_api`]).
+type ApiSender = Arc<Mutex<Option<mpsc::Sender<ApiRequest>>>>;
+
 /// The viz HTTP server.
 pub struct VizServer {
     routes: Arc<Mutex<Routes>>,
+    api_tx: ApiSender,
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     handle: Option<std::thread::JoinHandle<()>>,
@@ -33,15 +57,26 @@ impl VizServer {
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let routes = Arc::new(Mutex::new(routes));
+        let api_tx: ApiSender = Arc::new(Mutex::new(None));
         let stop = Arc::new(AtomicBool::new(false));
         let requests = Arc::new(AtomicU64::new(0));
-        let (r2, s2, q2) = (routes.clone(), stop.clone(), requests.clone());
+        let (r2, a2, s2, q2) = (routes.clone(), api_tx.clone(), stop.clone(), requests.clone());
         let handle = std::thread::spawn(move || {
             while !s2.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
                         q2.fetch_add(1, Ordering::Relaxed);
-                        let _ = handle_conn(stream, &r2);
+                        // One thread per connection: a slow or stalled
+                        // client must not block the accept loop.  Builder
+                        // (not thread::spawn) so thread exhaustion drops
+                        // this one connection instead of panicking the
+                        // accept loop dead.
+                        let (routes, api) = (r2.clone(), a2.clone());
+                        let _ = std::thread::Builder::new()
+                            .name("viz-conn".into())
+                            .spawn(move || {
+                                let _ = handle_conn(stream, &routes, &api);
+                            });
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         std::thread::sleep(std::time::Duration::from_millis(10));
@@ -52,6 +87,7 @@ impl VizServer {
         });
         Ok(VizServer {
             routes,
+            api_tx,
             addr,
             stop,
             handle: Some(handle),
@@ -63,6 +99,15 @@ impl VizServer {
         self.addr
     }
 
+    /// Enable the `/api/v1` surface: API paths stop falling through to
+    /// the static table and are forwarded to the returned [`ApiInbox`],
+    /// which the engine loop drains between advances.
+    pub fn enable_api(&self) -> ApiInbox {
+        let (tx, rx) = mpsc::channel();
+        *self.api_tx.lock().unwrap() = Some(tx);
+        ApiInbox::new(rx)
+    }
+
     /// Replace/add a route while running.
     pub fn put_route(&self, path: &str, content_type: &str, body: Vec<u8>) {
         self.routes
@@ -71,9 +116,8 @@ impl VizServer {
             .insert(path.to_string(), (content_type.to_string(), body));
     }
 
-    /// Replace/add a JSON route while running (`serve --live` republishes
-    /// the leaderboard/parallel/cluster documents through this on every
-    /// engine advance).
+    /// Replace/add a JSON route while running (static-document serving;
+    /// live runs answer through the v1 API instead).
     pub fn put_json(&self, path: &str, doc: &crate::util::json::Value) {
         self.put_route(path, "application/json", doc.to_string_compact().into_bytes());
     }
@@ -95,56 +139,183 @@ impl Drop for VizServer {
     }
 }
 
-fn handle_conn(mut stream: TcpStream, routes: &Arc<Mutex<Routes>>) -> std::io::Result<()> {
-    stream.set_read_timeout(Some(std::time::Duration::from_millis(500)))?;
+/// One parsed HTTP request.
+struct Request {
+    method: String,
+    path: String,
+    query: String,
+    body: Vec<u8>,
+}
+
+fn read_request(stream: &TcpStream) -> std::io::Result<Option<Request>> {
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(2)))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut request_line = String::new();
     reader.read_line(&mut request_line)?;
-    // Drain headers.
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("GET").to_uppercase();
+    let target = parts.next().unwrap_or("/");
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+    // Drain headers, keeping Content-Length.
+    let mut content_length = 0usize;
     loop {
         let mut line = String::new();
         if reader.read_line(&mut line)? == 0 || line == "\r\n" || line == "\n" {
             break;
         }
-    }
-    let path = request_line
-        .split_whitespace()
-        .nth(1)
-        .unwrap_or("/")
-        .split('?')
-        .next()
-        .unwrap_or("/")
-        .to_string();
-    let routes = routes.lock().unwrap();
-    let response = match routes.get(&path) {
-        Some((ctype, body)) => {
-            let mut r = format!(
-                "HTTP/1.1 200 OK\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
-                body.len()
-            )
-            .into_bytes();
-            r.extend_from_slice(body);
-            r
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().unwrap_or(0);
+            }
         }
+    }
+    if content_length > MAX_BODY {
+        return Ok(None); // caller answers 400
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok(Some(Request {
+        method,
+        path,
+        query,
+        body,
+    }))
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    routes: &Arc<Mutex<Routes>>,
+    api: &ApiSender,
+) -> std::io::Result<()> {
+    let req = match read_request(&stream)? {
+        Some(r) => r,
         None => {
-            let body = b"404 not found";
-            let mut r = format!(
-                "HTTP/1.1 404 Not Found\r\nContent-Type: text/plain\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
-                body.len()
+            return respond_json(
+                &mut stream,
+                400,
+                &api::error_envelope(None, "request body too large"),
             )
-            .into_bytes();
-            r.extend_from_slice(body);
-            r
         }
     };
-    stream.write_all(&response)?;
+
+    // The control-plane API, when enabled, owns every /api path.
+    let api_tx = api.lock().unwrap().clone();
+    if let Some(tx) = api_tx {
+        if req.path.starts_with("/api/") {
+            return handle_api(&mut stream, &req, &tx);
+        }
+    }
+
+    // Static routes are GET-only.
+    if req.method != "GET" {
+        let body = b"405 method not allowed";
+        return respond(&mut stream, 405, "text/plain", body, "Allow: GET\r\n");
+    }
+    let found = routes.lock().unwrap().get(&req.path).cloned();
+    match found {
+        Some((ctype, body)) => respond(&mut stream, 200, &ctype, &body, ""),
+        None => respond(&mut stream, 404, "text/plain", b"404 not found", ""),
+    }
+}
+
+fn handle_api(
+    stream: &mut TcpStream,
+    req: &Request,
+    tx: &mpsc::Sender<ApiRequest>,
+) -> std::io::Result<()> {
+    let call = match api::parse_route(&req.method, &req.path, &req.query, &req.body) {
+        Ok(call) => call,
+        Err(RouteError::NotFound) => {
+            return respond_json(stream, 404, &api::error_envelope(None, "unknown API path"));
+        }
+        Err(RouteError::MethodNotAllowed) => {
+            let doc = api::error_envelope(None, "method not allowed");
+            let body = doc.to_string_compact().into_bytes();
+            return respond(stream, 405, "application/json", &body, "Allow: GET, POST\r\n");
+        }
+        Err(RouteError::BadRequest(msg)) => {
+            return respond_json(stream, 400, &api::error_envelope(None, &msg));
+        }
+    };
+    let (reply_tx, reply_rx) = mpsc::channel();
+    let sent = tx
+        .send(ApiRequest {
+            call,
+            reply: reply_tx,
+        })
+        .is_ok();
+    let reply = if sent {
+        reply_rx.recv_timeout(API_REPLY_TIMEOUT).ok()
+    } else {
+        None
+    };
+    match reply {
+        Some((status, doc)) => respond_json(stream, status, &doc),
+        None => respond_json(
+            stream,
+            503,
+            &api::error_envelope(None, "engine loop is not serving the API"),
+        ),
+    }
+}
+
+fn respond_json(
+    stream: &mut TcpStream,
+    status: u16,
+    doc: &crate::util::json::Value,
+) -> std::io::Result<()> {
+    let body = doc.to_string_compact().into_bytes();
+    respond(stream, status, "application/json", &body, "")
+}
+
+fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        503 => "Service Unavailable",
+        _ => "OK",
+    }
+}
+
+fn respond(
+    stream: &mut TcpStream,
+    status: u16,
+    ctype: &str,
+    body: &[u8],
+    extra_headers: &str,
+) -> std::io::Result<()> {
+    let mut r = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\n{extra_headers}Connection: close\r\n\r\n",
+        status_text(status),
+        body.len()
+    )
+    .into_bytes();
+    r.extend_from_slice(body);
+    stream.write_all(&r)?;
     stream.flush()
 }
 
-/// Minimal GET client (tests + examples' self-check).
-pub fn http_get(addr: std::net::SocketAddr, path: &str) -> std::io::Result<(u16, Vec<u8>)> {
+/// Minimal HTTP client (tests, examples' self-check, smoke scripts).
+pub fn http_request(
+    addr: std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> std::io::Result<(u16, Vec<u8>)> {
     let mut stream = TcpStream::connect(addr)?;
-    write!(stream, "GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n")?;
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )?;
+    stream.write_all(body)?;
     let mut buf = Vec::new();
     stream.read_to_end(&mut buf)?;
     let text_end = buf
@@ -161,26 +332,52 @@ pub fn http_get(addr: std::net::SocketAddr, path: &str) -> std::io::Result<(u16,
     Ok((status, buf[text_end..].to_vec()))
 }
 
-/// Embedded single-file viewer: fetches /api/parallel.json and draws
-/// parallel coordinates on a canvas.
+/// Minimal GET client.
+pub fn http_get(addr: std::net::SocketAddr, path: &str) -> std::io::Result<(u16, Vec<u8>)> {
+    http_request(addr, "GET", path, b"")
+}
+
+/// Minimal POST client (command bodies).
+pub fn http_post(
+    addr: std::net::SocketAddr,
+    path: &str,
+    body: &[u8],
+) -> std::io::Result<(u16, Vec<u8>)> {
+    http_request(addr, "POST", path, body)
+}
+
+/// Embedded single-file viewer: polls the v1 status + parallel queries
+/// (unwrapping the versioned envelope) and draws parallel coordinates on
+/// a canvas.
 const VIEWER_HTML: &str = r#"<!doctype html>
 <html><head><meta charset="utf-8"><title>CHOPT viz</title>
 <style>body{font-family:monospace;margin:16px}canvas{border:1px solid #ccc}</style>
 </head><body>
 <h2>CHOPT — parallel coordinates</h2>
-<div>views: <a href="/api/parallel.json">parallel.json</a>
- <a href="/api/curves.json">curves.json</a>
+<div>views: <a href="/api/v1/parallel">parallel</a>
+ <a href="/api/v1/status">status</a>
+ <a href="/api/v1/cluster?window=86400">cluster</a>
  <a href="/svg/parallel.svg">parallel.svg</a></div>
 <div id="status"></div>
 <canvas id="c" width="1000" height="440"></canvas>
 <script>
-function draw(){
-fetch('/api/status.json').then(r=>r.ok?r.json():null).then(s=>{
+// v1 responses wrap the document in {schema_version, data}; stored-run
+// mode serves bare legacy documents on the unversioned paths — accept
+// both, preferring v1.
+const unwrap=j=>j&&j.data!==undefined?j.data:j;
+async function getDoc(paths){
+  for(const p of paths){
+    try{const r=await fetch(p);if(r.ok)return unwrap(await r.json());}catch(e){}
+  }
+  return null;
+}
+async function draw(){
+getDoc(['/api/v1/status','/api/status.json']).then(s=>{
   if(s)document.getElementById('status').textContent=
     't='+Math.round(s.t)+'s  events='+s.events_processed+'  best='+(s.best==null?'-':s.best.toFixed(2))+(s.done?'  [done]':'');
-}).catch(()=>{});
-fetch('/api/parallel.json').then(r=>r.ok?r.json():null).then(doc=>{
-  if(!doc)return;
+});
+getDoc(['/api/v1/parallel','/api/parallel.json']).then(doc=>{
+  if(!doc||!doc.axes)return;
   const cv=document.getElementById('c'),g=cv.getContext('2d');
   g.clearRect(0,0,cv.width,cv.height);
   const axes=doc.axes,lines=doc.lines;const m=60,w=cv.width-2*m,h=cv.height-80;
@@ -226,6 +423,34 @@ mod tests {
         let (status, body) = http_get(addr, "/late").unwrap();
         assert_eq!(status, 200);
         assert_eq!(body, b"hello");
+        server.stop();
+    }
+
+    #[test]
+    fn static_routes_reject_non_get() {
+        let server = VizServer::start(0, Routes::new()).unwrap();
+        let addr = server.addr();
+        let (status, _) = http_post(addr, "/", b"{}").unwrap();
+        assert_eq!(status, 405, "POST to a static route must be a 405");
+        server.stop();
+    }
+
+    #[test]
+    fn concurrent_connections_are_served() {
+        // Per-connection threads: several clients at once all complete.
+        let mut routes = Routes::new();
+        routes.insert("/x".into(), ("text/plain".into(), b"y".to_vec()));
+        let server = VizServer::start(0, routes).unwrap();
+        let addr = server.addr();
+        let handles: Vec<_> = (0..8)
+            .map(|_| std::thread::spawn(move || http_get(addr, "/x").unwrap()))
+            .collect();
+        for h in handles {
+            let (status, body) = h.join().unwrap();
+            assert_eq!(status, 200);
+            assert_eq!(body, b"y");
+        }
+        assert!(server.requests.load(std::sync::atomic::Ordering::Relaxed) >= 8);
         server.stop();
     }
 }

@@ -1,0 +1,571 @@
+//! Integration tests for the versioned control-plane API: envelope
+//! schema + string ids on every endpoint, pagination bounds, HTTP error
+//! mapping (404/405/400), command round-trips (pause → parked at the
+//! next event boundary → resume), legacy-alias byte equivalence with the
+//! v1 bodies, and engine-level command replay through snapshots.
+
+use std::time::{Duration, Instant};
+
+use chopt::config::ChoptConfig;
+use chopt::coordinator::{
+    AgentEvent, MultiPlatform, Platform, SimEngine, SimSetup, StopAndGoPolicy, StudyManifest,
+};
+use chopt::nsml::SessionId;
+use chopt::trainer::surrogate::SurrogateTrainer;
+use chopt::trainer::Trainer;
+use chopt::util::json::Value as Json;
+use chopt::viz::api::{ApiInbox, PlatformApi};
+use chopt::viz::server::{http_request, Routes, VizServer};
+
+fn cfg(seed: u64) -> ChoptConfig {
+    let text = format!(
+        r#"{{
+          "h_params": {{
+            "lr": {{"parameters": [0.005, 0.09], "distribution": "log_uniform",
+                    "type": "float", "p_range": [0.001, 0.2]}}
+          }},
+          "measure": "test/accuracy",
+          "order": "descending",
+          "step": 10,
+          "population": 4,
+          "tune": {{"random": {{}}}},
+          "termination": {{"max_session_number": 8}},
+          "model": "surrogate:resnet",
+          "max_epochs": 60,
+          "max_gpus": 3,
+          "seed": {seed}
+        }}"#
+    );
+    ChoptConfig::from_json_str(&text).unwrap()
+}
+
+fn setup(seed: u64) -> SimSetup {
+    SimSetup {
+        cluster_gpus: 6,
+        configs: vec![cfg(seed)],
+        submit_times: Vec::new(),
+        agent_slots: 1,
+        trace: None,
+        policy: StopAndGoPolicy::default(),
+        master_period: 60.0,
+        horizon: 1e9,
+        failures: Vec::new(),
+    }
+}
+
+fn surrogate(seed: u64) -> impl FnMut(u64) -> Box<dyn Trainer> {
+    move |id| Box::new(SurrogateTrainer::new(seed ^ id)) as Box<dyn Trainer>
+}
+
+fn multi_manifest() -> StudyManifest {
+    let study = |name: &str, extra: &str, seed: u64| {
+        format!(
+            r#"{{"name": "{name}", "quota": 4, {extra} "config": {{
+              "h_params": {{
+                "lr": {{"parameters": [0.005, 0.09], "distribution": "log_uniform",
+                        "type": "float", "p_range": [0.001, 0.2]}}
+              }},
+              "measure": "test/accuracy", "order": "descending", "step": 10,
+              "population": 4, "tune": {{"random": {{}}}},
+              "termination": {{"max_session_number": 8}},
+              "model": "surrogate:resnet", "max_epochs": 60, "max_gpus": 3,
+              "seed": {seed}
+            }}}}"#
+        )
+    };
+    let text = format!(
+        r#"{{"cluster_gpus": 12, "borrow": true, "studies": [{}, {}]}}"#,
+        study("alice", r#""priority": 2,"#, 100),
+        study("bob", "", 101)
+    );
+    StudyManifest::from_json_str(&text).unwrap()
+}
+
+fn multi_trainer(study: usize, id: u64) -> Box<dyn Trainer> {
+    Box::new(SurrogateTrainer::new(9_000 + 1_000 * study as u64 + id)) as Box<dyn Trainer>
+}
+
+/// Issue one HTTP request against the server while serving the inbox
+/// from this thread (the platform is single-threaded by design, so the
+/// client must run on a helper thread).
+fn call(
+    addr: std::net::SocketAddr,
+    inbox: &ApiInbox,
+    api: &mut impl PlatformApi,
+    method: &'static str,
+    path: &str,
+    body: &[u8],
+) -> (u16, Json) {
+    let path = path.to_string();
+    let body = body.to_vec();
+    let client = std::thread::spawn(move || http_request(addr, method, &path, &body).unwrap());
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !client.is_finished() && Instant::now() < deadline {
+        inbox.serve_one(api, Duration::from_millis(20));
+    }
+    let (status, bytes) = client.join().unwrap();
+    let doc = chopt::util::json::parse(&String::from_utf8(bytes).unwrap()).unwrap();
+    (status, doc)
+}
+
+fn get(
+    addr: std::net::SocketAddr,
+    inbox: &ApiInbox,
+    api: &mut impl PlatformApi,
+    path: &str,
+) -> (u16, Json) {
+    call(addr, inbox, api, "GET", path, b"")
+}
+
+/// Every 200 must carry the v1 envelope; returns the data payload.
+fn expect_enveloped(status: u16, doc: &Json, what: &str) -> Json {
+    assert_eq!(status, 200, "{what}: {doc}");
+    assert_eq!(
+        doc.get("schema_version").and_then(|v| v.as_f64()),
+        Some(1.0),
+        "{what} missing schema_version"
+    );
+    let gen = doc
+        .get("generated_at_event")
+        .and_then(|v| v.as_str())
+        .unwrap_or_else(|| panic!("{what}: generated_at_event must be a string"));
+    gen.parse::<u64>().expect("generated_at_event parses as u64");
+    doc.get("data").unwrap_or_else(|| panic!("{what} missing data")).clone()
+}
+
+#[test]
+fn v1_single_study_surface_envelope_and_string_ids() {
+    let mut platform = Platform::new(setup(7), surrogate(7));
+    platform.run_until(5_000.0);
+    let server = VizServer::start(0, Routes::new()).unwrap();
+    let inbox = server.enable_api();
+    let addr = server.addr();
+
+    let (s, doc) = get(addr, &inbox, &mut platform, "/api/v1/status");
+    let status_doc = expect_enveloped(s, &doc, "status");
+    assert_eq!(status_doc.get("done").and_then(|v| v.as_bool()), Some(false));
+
+    let (s, doc) = get(addr, &inbox, &mut platform, "/api/v1/cluster?window=3600");
+    let cluster = expect_enveloped(s, &doc, "cluster");
+    assert_eq!(cluster.get("window").and_then(|v| v.as_f64()), Some(3600.0));
+    assert!(!cluster.get("series_chopt").unwrap().as_arr().unwrap().is_empty());
+
+    let (s, doc) = get(addr, &inbox, &mut platform, "/api/v1/leaderboard?k=5");
+    let lb = expect_enveloped(s, &doc, "leaderboard");
+    let rows = lb.get("rows").unwrap().as_arr().unwrap();
+    assert!(!rows.is_empty());
+    for r in rows {
+        let sid = r.get("session").and_then(|v| v.as_str()).expect("string id");
+        sid.parse::<u64>().unwrap();
+        r.get("chopt").and_then(|v| v.as_str()).expect("string id");
+    }
+
+    let (s, doc) = get(addr, &inbox, &mut platform, "/api/v1/sessions");
+    let sessions = expect_enveloped(s, &doc, "sessions");
+    let total = sessions.get("total").and_then(|v| v.as_usize()).unwrap();
+    assert!(total > 0);
+    for row in sessions.get("sessions").unwrap().as_arr().unwrap() {
+        row.get("id").and_then(|v| v.as_str()).expect("string id");
+        row.get("chopt").and_then(|v| v.as_str()).expect("string id");
+    }
+
+    let (s, doc) = get(addr, &inbox, &mut platform, "/api/v1/parallel");
+    let par = expect_enveloped(s, &doc, "parallel");
+    for line in par.get("lines").unwrap().as_arr().unwrap() {
+        line.get("id").and_then(|v| v.as_str()).expect("string id");
+    }
+
+    // Multi-study endpoints don't exist on a single-study server.
+    let (s, doc) = get(addr, &inbox, &mut platform, "/api/v1/fair_share");
+    assert_eq!(s, 404, "{doc}");
+    assert!(doc.get("error").is_some());
+
+    server.stop();
+}
+
+#[test]
+fn v1_pagination_bounds() {
+    let mut platform = Platform::new(setup(11), surrogate(11));
+    platform.run_until(8_000.0);
+    let server = VizServer::start(0, Routes::new()).unwrap();
+    let inbox = server.enable_api();
+    let addr = server.addr();
+
+    let (s, doc) = get(addr, &inbox, &mut platform, "/api/v1/sessions");
+    let all = expect_enveloped(s, &doc, "sessions");
+    let total = all.get("total").and_then(|v| v.as_usize()).unwrap();
+    assert!(total >= 2, "need a few sessions to page over");
+    assert_eq!(
+        all.get("sessions").unwrap().as_arr().unwrap().len(),
+        total,
+        "no limit → every session"
+    );
+
+    let (s, doc) = get(addr, &inbox, &mut platform, "/api/v1/sessions?limit=1&offset=1");
+    let page = expect_enveloped(s, &doc, "page");
+    assert_eq!(page.get("returned").and_then(|v| v.as_usize()), Some(1));
+    assert_eq!(page.get("total").and_then(|v| v.as_usize()), Some(total));
+    // The page is a window into the same ordering.
+    assert_eq!(
+        page.get("sessions").unwrap().idx(0).unwrap().get("id"),
+        all.get("sessions").unwrap().idx(1).unwrap().get("id")
+    );
+
+    // Out-of-range offset → empty page, not an error.
+    let (s, doc) = get(
+        addr,
+        &inbox,
+        &mut platform,
+        &format!("/api/v1/sessions?offset={}", total + 50),
+    );
+    let empty = expect_enveloped(s, &doc, "past-the-end page");
+    assert_eq!(empty.get("returned").and_then(|v| v.as_usize()), Some(0));
+    assert!(empty.get("sessions").unwrap().as_arr().unwrap().is_empty());
+
+    // limit=0 → empty page as well.
+    let (s, doc) = get(addr, &inbox, &mut platform, "/api/v1/sessions?limit=0");
+    let zero = expect_enveloped(s, &doc, "limit-0 page");
+    assert_eq!(zero.get("returned").and_then(|v| v.as_usize()), Some(0));
+
+    // Bad parameter → 400 with an error envelope.
+    let (s, doc) = get(addr, &inbox, &mut platform, "/api/v1/sessions?limit=abc");
+    assert_eq!(s, 400);
+    assert!(doc.get("error").is_some());
+
+    server.stop();
+}
+
+#[test]
+fn v1_http_error_mapping() {
+    let mut platform = Platform::new(setup(13), surrogate(13));
+    platform.run_until(1_000.0);
+    let server = VizServer::start(0, Routes::new()).unwrap();
+    let inbox = server.enable_api();
+    let addr = server.addr();
+
+    // Unknown API path → 404.
+    let (s, doc) = get(addr, &inbox, &mut platform, "/api/v1/nope");
+    assert_eq!(s, 404, "{doc}");
+
+    // Wrong method on a query → 405; GET on /commands → 405.
+    let (s, _) = call(addr, &inbox, &mut platform, "POST", "/api/v1/status", b"{}");
+    assert_eq!(s, 405);
+    let (s, _) = call(addr, &inbox, &mut platform, "GET", "/api/v1/commands", b"");
+    assert_eq!(s, 405);
+
+    // Malformed / unknown command bodies → 400 with an error envelope.
+    for body in [
+        &b"not json"[..],
+        br#"{"command": "warp_time"}"#,
+        br#"{"command": "pause_session"}"#,
+    ] {
+        let (s, doc) = call(addr, &inbox, &mut platform, "POST", "/api/v1/commands", body);
+        assert_eq!(s, 400, "{doc}");
+        assert!(doc.get("error").is_some());
+    }
+
+    // A well-formed command naming a nonexistent session → 400 too.
+    let (s, doc) = call(
+        addr,
+        &inbox,
+        &mut platform,
+        "POST",
+        "/api/v1/commands",
+        br#"{"command": "pause_session", "session": "424242"}"#,
+    );
+    assert_eq!(s, 400, "{doc}");
+
+    server.stop();
+}
+
+#[test]
+fn v1_command_round_trip_pause_resume_session() {
+    let mut platform = Platform::new(setup(17), surrogate(17));
+    platform.run_until(3_000.0);
+    let server = VizServer::start(0, Routes::new()).unwrap();
+    let inbox = server.enable_api();
+    let addr = server.addr();
+
+    let sid = platform
+        .engine()
+        .active_agents()
+        .next()
+        .unwrap()
+        .pools
+        .live()[0];
+    let status_of = |p: &Platform, sid: SessionId| {
+        p.sessions_ref()
+            .iter()
+            .find(|s| s.id == sid)
+            .map(|s| s.status.name().to_string())
+            .unwrap()
+    };
+    assert_eq!(status_of(&platform, sid), "running");
+
+    // POST pause → accepted; the session parks at the next event
+    // boundary the engine processes.
+    let body = format!(r#"{{"command": "pause_session", "session": "{}"}}"#, sid.0);
+    let (s, doc) = call(addr, &inbox, &mut platform, "POST", "/api/v1/commands", body.as_bytes());
+    let ack = expect_enveloped(s, &doc, "pause ack");
+    assert_eq!(ack.get("applied").and_then(|v| v.as_bool()), Some(true));
+
+    platform.advance(120.0);
+    assert_eq!(status_of(&platform, sid), "stopped", "pause must park the session");
+    let agent = platform.engine().active_agents().next().unwrap();
+    assert!(agent.pools.is_parked(sid), "user pause parks (no auto-revival)");
+
+    // The paused session survives further progress without reviving.
+    platform.advance(600.0);
+    assert_eq!(status_of(&platform, sid), "stopped");
+
+    // POST resume → revived with priority.  The freed GPU may have been
+    // refilled with a fresh trial in the meantime, so the revival lands
+    // as soon as a GPU frees up — advance until it leaves the stop pool.
+    // (It may even train to completion within one advance window, so
+    // "running or finished" is the revival evidence, plus the Revived
+    // event itself.)
+    let body = format!(r#"{{"command": "resume_session", "session": "{}"}}"#, sid.0);
+    let (s, doc) = call(addr, &inbox, &mut platform, "POST", "/api/v1/commands", body.as_bytes());
+    expect_enveloped(s, &doc, "resume ack");
+    let mut tries = 0;
+    while status_of(&platform, sid) == "stopped" && tries < 50 {
+        platform.advance(600.0);
+        tries += 1;
+    }
+    assert!(
+        matches!(status_of(&platform, sid).as_str(), "running" | "finished"),
+        "resume must revive the session (status: {})",
+        status_of(&platform, sid)
+    );
+    let revived = platform.engine().all_agents().any(|a| {
+        a.events
+            .iter()
+            .any(|e| matches!(e, AgentEvent::Revived(s) if *s == sid))
+    });
+    assert!(revived, "a Revived event must be recorded for the session");
+
+    // And the observable surface reflects the progress.
+    let (s, doc) = get(addr, &inbox, &mut platform, "/api/v1/status");
+    expect_enveloped(s, &doc, "status");
+
+    server.stop();
+}
+
+#[test]
+fn legacy_aliases_serve_v1_bytes() {
+    let mut platform = Platform::new(setup(19), surrogate(19));
+    platform.run_until(4_000.0);
+    let server = VizServer::start(0, Routes::new()).unwrap();
+    let inbox = server.enable_api();
+    let addr = server.addr();
+
+    for (v1, legacy) in [
+        ("/api/v1/status", "/api/status.json"),
+        ("/api/v1/cluster", "/api/cluster.json"),
+        ("/api/v1/leaderboard", "/api/leaderboard.json"),
+        ("/api/v1/sessions", "/api/sessions.json"),
+        ("/api/v1/parallel", "/api/parallel.json"),
+    ] {
+        // The engine does not advance between the two requests, so the
+        // deprecated alias must serve byte-identical v1 bodies.
+        let (sa, a) = get(addr, &inbox, &mut platform, v1);
+        let (sb, b) = get(addr, &inbox, &mut platform, legacy);
+        assert_eq!((sa, sb), (200, 200), "{v1} vs {legacy}");
+        assert_eq!(
+            a.to_string_compact(),
+            b.to_string_compact(),
+            "{legacy} must be a byte-equivalent alias of {v1}"
+        );
+    }
+    server.stop();
+}
+
+#[test]
+fn v1_multi_study_surface_and_commands() {
+    let mut platform = MultiPlatform::new(multi_manifest(), multi_trainer);
+    platform.run_until(2_000.0);
+    let server = VizServer::start(0, Routes::new()).unwrap();
+    let inbox = server.enable_api();
+    let addr = server.addr();
+
+    // Directory + fair-share carry priority/paused fields.
+    let (s, doc) = get(addr, &inbox, &mut platform, "/api/v1/studies");
+    let studies = expect_enveloped(s, &doc, "studies");
+    assert_eq!(studies.get("count").and_then(|v| v.as_usize()), Some(2));
+    let (s, doc) = get(addr, &inbox, &mut platform, "/api/v1/fair_share");
+    let fair = expect_enveloped(s, &doc, "fair_share");
+    let rows = fair.get("studies").unwrap().as_arr().unwrap();
+    let row = |name: &str| {
+        rows.iter()
+            .find(|r| r.get("study").and_then(|v| v.as_str()) == Some(name))
+            .unwrap()
+            .clone()
+    };
+    assert_eq!(row("alice").get("priority").and_then(|v| v.as_f64()), Some(2.0));
+    assert_eq!(row("alice").get("paused").and_then(|v| v.as_bool()), Some(false));
+
+    // Per-study queries.
+    let (s, doc) = get(addr, &inbox, &mut platform, "/api/v1/studies/alice/sessions?limit=3");
+    let page = expect_enveloped(s, &doc, "study sessions");
+    assert!(page.get("total").and_then(|v| v.as_usize()).unwrap() > 0);
+    let (s, doc) = get(addr, &inbox, &mut platform, "/api/v1/studies/alice/leaderboard?k=3");
+    expect_enveloped(s, &doc, "study leaderboard");
+    let (s, doc) = get(addr, &inbox, &mut platform, "/api/v1/studies/alice/parallel");
+    let par = expect_enveloped(s, &doc, "study parallel");
+    assert!(!par.get("lines").unwrap().as_arr().unwrap().is_empty());
+    let (s, _) = get(addr, &inbox, &mut platform, "/api/v1/studies/nobody/sessions");
+    assert_eq!(s, 404);
+
+    // Command: reweight bob, observable after the next tick.
+    let (s, doc) = call(
+        addr,
+        &inbox,
+        &mut platform,
+        "POST",
+        "/api/v1/commands",
+        br#"{"command": "set_quota", "study": "bob", "priority": 3.5}"#,
+    );
+    expect_enveloped(s, &doc, "set_quota ack");
+    platform.advance(120.0);
+    let (s, doc) = get(addr, &inbox, &mut platform, "/api/v1/fair_share");
+    let fair = expect_enveloped(s, &doc, "fair_share after set_quota");
+    let bob = fair
+        .get("studies")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|r| r.get("study").and_then(|v| v.as_str()) == Some("bob"))
+        .unwrap()
+        .clone();
+    assert_eq!(bob.get("priority").and_then(|v| v.as_f64()), Some(3.5));
+
+    // Command: pause then resume alice, observable through held GPUs.
+    let (s, doc) = call(
+        addr,
+        &inbox,
+        &mut platform,
+        "POST",
+        "/api/v1/commands",
+        br#"{"command": "pause_study", "study": "alice"}"#,
+    );
+    expect_enveloped(s, &doc, "pause ack");
+    platform.advance(120.0);
+    let (s, doc) = get(addr, &inbox, &mut platform, "/api/v1/fair_share");
+    let fair = expect_enveloped(s, &doc, "fair_share paused");
+    let alice = fair
+        .get("studies")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|r| r.get("study").and_then(|v| v.as_str()) == Some("alice"))
+        .unwrap()
+        .clone();
+    assert_eq!(alice.get("paused").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(alice.get("held").and_then(|v| v.as_i64()), Some(0));
+
+    let (s, doc) = call(
+        addr,
+        &inbox,
+        &mut platform,
+        "POST",
+        "/api/v1/commands",
+        br#"{"command": "resume_study", "study": "alice"}"#,
+    );
+    expect_enveloped(s, &doc, "resume ack");
+    platform.advance(200.0);
+    let (s, doc) = get(addr, &inbox, &mut platform, "/api/v1/fair_share");
+    let fair = expect_enveloped(s, &doc, "fair_share resumed");
+    let alice = fair
+        .get("studies")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|r| r.get("study").and_then(|v| v.as_str()) == Some("alice"))
+        .unwrap()
+        .clone();
+    assert_eq!(alice.get("paused").and_then(|v| v.as_bool()), Some(false));
+    assert!(alice.get("held").and_then(|v| v.as_i64()).unwrap() > 0);
+
+    // Command: submit a new study from a manifest body; it appears in
+    // the directory and runs.
+    let spec = format!(
+        r#"{{"command": "submit_study", "study": {{"name": "carol", "quota": 2, "config": {{
+            "h_params": {{
+              "lr": {{"parameters": [0.005, 0.09], "distribution": "log_uniform",
+                      "type": "float", "p_range": [0.001, 0.2]}}
+            }},
+            "measure": "test/accuracy", "order": "descending", "step": 10,
+            "population": 4, "tune": {{"random": {{}}}},
+            "termination": {{"max_session_number": 4}},
+            "model": "surrogate:resnet", "max_epochs": 40, "max_gpus": 2,
+            "seed": 300
+        }}}}}}"#
+    );
+    let (s, doc) = call(addr, &inbox, &mut platform, "POST", "/api/v1/commands", spec.as_bytes());
+    expect_enveloped(s, &doc, "submit_study ack");
+    platform.advance(200.0);
+    let (s, doc) = get(addr, &inbox, &mut platform, "/api/v1/studies");
+    let studies = expect_enveloped(s, &doc, "studies after submit");
+    assert_eq!(studies.get("count").and_then(|v| v.as_usize()), Some(3));
+    let (s, doc) = get(addr, &inbox, &mut platform, "/api/v1/studies/carol/sessions");
+    let carol = expect_enveloped(s, &doc, "carol sessions");
+    assert!(carol.get("total").and_then(|v| v.as_usize()).unwrap() > 0);
+
+    // Oversubscribed submit is refused with a 400.
+    let (s, doc) = call(
+        addr,
+        &inbox,
+        &mut platform,
+        "POST",
+        "/api/v1/commands",
+        br#"{"command": "submit_study", "study": {"name": "greedy", "quota": 99, "config": {
+            "h_params": {}, "measure": "m", "order": "descending",
+            "tune": {"random": {}}}}}"#,
+    );
+    assert_eq!(s, 400, "{doc}");
+
+    server.stop();
+}
+
+/// Engine-level command replay: pause/resume inputs are part of the
+/// snapshot, so a restored engine replays them and matches the original.
+#[test]
+fn engine_session_commands_replay_through_snapshot() {
+    let drive = |engine: &mut SimEngine| {
+        engine.run_until(3_000.0);
+        let sid = engine.active_agents().next().unwrap().pools.live()[0];
+        engine.pause_session(sid, 3_000.0).unwrap();
+        engine.run_until(5_000.0);
+        engine.resume_session(sid, 5_000.0).unwrap();
+        engine.run_until(7_000.0);
+    };
+    let mut reference = SimEngine::new(setup(23), surrogate(23));
+    drive(&mut reference);
+    reference.run_to_completion();
+
+    let mut original = SimEngine::new(setup(23), surrogate(23));
+    drive(&mut original);
+    let snap = original.snapshot_json();
+    let snap = chopt::util::json::parse(&snap.to_string_pretty()).unwrap();
+    let mut restored = SimEngine::restore(&snap, surrogate(23)).unwrap();
+    assert_eq!(restored.now(), original.now());
+    assert_eq!(restored.events_processed(), original.events_processed());
+    restored.run_to_completion();
+    original.run_to_completion();
+
+    let key = |out: &chopt::coordinator::SimOutcome| {
+        (
+            out.best().map(|(_, _, m)| format!("{m:.12}")),
+            out.end_time,
+            out.events_processed,
+        )
+    };
+    let a = key(&reference.into_outcome());
+    let b = key(&original.into_outcome());
+    let c = key(&restored.into_outcome());
+    assert_eq!(a, b, "commands must not break determinism");
+    assert_eq!(b, c, "restored run must replay the recorded commands");
+}

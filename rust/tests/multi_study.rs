@@ -253,6 +253,7 @@ fn online_study_submission_runs() {
         name: "greedy".into(),
         config: cfg(10, 6, 3, 555),
         quota: 6,
+        priority: 1.0,
         submit_at: 0.0,
     };
     assert_eq!(sched.submit_study(oversized, 2_500.0), None);
@@ -261,6 +262,7 @@ fn online_study_submission_runs() {
         name: "carol".into(),
         config: cfg(10, 6, 3, 200),
         quota: 4,
+        priority: 1.0,
         submit_at: 0.0,
     };
     assert_eq!(sched.submit_study(fits, 2_500.0), Some(2_500.0));
@@ -300,6 +302,7 @@ fn multi_study_snapshot_restore_is_deterministic() {
                 name: "carol".into(),
                 config: cfg(10, 6, 3, 200),
                 quota: 2,
+                priority: 1.0,
                 submit_at: 0.0,
             },
             9_000.0,
@@ -318,6 +321,7 @@ fn multi_study_snapshot_restore_is_deterministic() {
                 name: "carol".into(),
                 config: cfg(10, 6, 3, 200),
                 quota: 2,
+                priority: 1.0,
                 submit_at: 0.0,
             },
             9_000.0,
@@ -355,6 +359,144 @@ fn multi_study_snapshot_restore_is_deterministic() {
             _ => panic!("study {} activation diverged", a.name),
         }
     }
+}
+
+/// Weighted fair share: a priority-2 study converges to ~2× the GPUs of
+/// a priority-1 peer (the quota guarantee is equal; the *redistributed*
+/// surplus is split by weight).
+#[test]
+fn weighted_fair_share_gives_priority_study_double_gpus() {
+    // Quotas 1 + 1 on a 30-GPU cluster leave a 28-GPU surplus for the
+    // weighted split (policy bonus cap loosened so the cap doesn't mask
+    // the weights): hi gets 1 + ⌊28·2/3⌋ = 19, lo gets 1 + ⌊28·1/3⌋ = 10.
+    // step -1 (no early stopping) keeps sessions long-lived so the live
+    // pools deterministically fill their targets.
+    let text = format!(
+        r#"{{"cluster_gpus": 30, "borrow": true,
+            "policy": {{"max_bonus_factor": 100}},
+            "studies": [
+              {{"name": "hi", "quota": 1, "priority": 2, "config": {}}},
+              {{"name": "lo", "quota": 1, "config": {}}}
+            ]}}"#,
+        config_json(-1, 400, 20, 100),
+        config_json(-1, 400, 20, 101)
+    );
+    let manifest = StudyManifest::from_json_str(&text).unwrap();
+    assert_eq!(manifest.studies[0].priority, 2.0);
+    assert_eq!(manifest.studies[1].priority, 1.0); // default
+    let mut sched = StudyScheduler::new(manifest, multi_factory());
+    sched.run_until(1_000.0);
+
+    let hi = sched.study("hi").unwrap();
+    let lo = sched.study("lo").unwrap();
+    assert_eq!((hi.target(), lo.target()), (19, 10));
+    let held = |sched: &StudyScheduler, name: &str| {
+        let tenant = sched.study(name).unwrap().agent().unwrap().tenant;
+        sched.cluster().held_by(Owner::Chopt(tenant))
+    };
+    let (h, l) = (held(&sched, "hi"), held(&sched, "lo"));
+    assert_eq!((h, l), (19, 10), "held GPUs must track the weighted targets");
+    let ratio = h as f64 / l as f64;
+    assert!((1.7..=2.2).contains(&ratio), "hi/lo GPU ratio {ratio} not ~2x");
+}
+
+/// Control-plane commands (pause/resume/set_quota) are recorded replay
+/// inputs: a snapshot taken *after* commands were issued restores by
+/// replay and the continued run matches the uninterrupted reference.
+#[test]
+fn control_commands_replay_through_snapshot_restore() {
+    let drive = |sched: &mut StudyScheduler| {
+        sched.run_until(3_000.0);
+        // Session-level commands on bob (study-qualified ids) + a
+        // study-level pause on alice, all recorded as replay inputs.
+        let bob_sid = sched.study("bob").unwrap().agent().unwrap().pools.live()[0];
+        sched.pause_session("bob", bob_sid, 3_000.0).unwrap();
+        sched.pause_study("alice", 3_000.0).unwrap();
+        sched.run_until(5_000.0);
+        // While paused, alice holds nothing and bob's weight doubles.
+        sched.set_quota("bob", None, Some(2.0), 5_000.0).unwrap();
+        sched.resume_session("bob", bob_sid, 5_000.0).unwrap();
+        sched.run_until(6_000.0);
+        sched.resume_study("alice", 6_000.0).unwrap();
+        sched.run_until(9_000.0);
+    };
+
+    let mut reference = StudyScheduler::new(two_study_manifest(true), multi_factory());
+    drive(&mut reference);
+    reference.run_to_completion();
+    let ref_out = reference.into_outcome();
+
+    let mut original = StudyScheduler::new(two_study_manifest(true), multi_factory());
+    drive(&mut original);
+    let snap = original.snapshot_json();
+    let snap = chopt::util::json::parse(&snap.to_string_pretty()).unwrap();
+    let mut restored = StudyScheduler::restore(&snap, multi_factory()).unwrap();
+    assert_eq!(restored.now(), original.now());
+    assert_eq!(restored.events_processed(), original.events_processed());
+    assert_eq!(restored.study("bob").unwrap().priority(), 2.0);
+
+    restored.run_to_completion();
+    original.run_to_completion();
+    let restored_out = restored.into_outcome();
+    let original_out = original.into_outcome();
+    for out in [&restored_out, &original_out] {
+        assert_eq!(ref_out.end_time, out.end_time);
+        assert_eq!(ref_out.events_processed, out.events_processed);
+    }
+    for (a, b) in ref_out.studies.iter().zip(restored_out.studies.iter()) {
+        assert_eq!(a.name, b.name);
+        match (&a.agent, &b.agent) {
+            (Some(x), Some(y)) => assert_eq!(agent_key(x), agent_key(y), "study {}", a.name),
+            (None, None) => {}
+            _ => panic!("study {} activation diverged", a.name),
+        }
+    }
+}
+
+/// Scheduler-level pause/resume semantics: a paused study drains to zero
+/// GPUs (work parked, never killed) and resumes where it left off.
+#[test]
+fn pause_study_drains_and_resume_revives() {
+    let mut sched = StudyScheduler::new(two_study_manifest(true), multi_factory());
+    sched.run_until(2_000.0);
+    let alice_tenant = sched.study("alice").unwrap().agent().unwrap().tenant;
+    assert!(sched.cluster().held_by(Owner::Chopt(alice_tenant)) > 0);
+
+    sched.pause_study("alice", 2_000.0).unwrap();
+    // One event boundary applies the command; a master period settles it.
+    sched.run_until(2_100.0);
+    assert!(sched.study("alice").unwrap().paused());
+    assert_eq!(sched.cluster().held_by(Owner::Chopt(alice_tenant)), 0);
+    let alice = sched.study("alice").unwrap().agent().unwrap();
+    assert_eq!(alice.pools.live_count(), 0);
+    assert!(alice.pools.stop_count() > 0, "paused work must be parked, not killed");
+    assert!(!alice.finished);
+
+    // Paused ≠ done: the scheduler stays alive and bob keeps running.
+    assert!(!sched.is_done());
+    sched.run_until(4_000.0);
+    assert_eq!(sched.cluster().held_by(Owner::Chopt(alice_tenant)), 0);
+
+    sched.resume_study("alice", 4_000.0).unwrap();
+    sched.run_until(4_200.0);
+    assert!(!sched.study("alice").unwrap().paused());
+    assert!(
+        sched.cluster().held_by(Owner::Chopt(alice_tenant)) > 0,
+        "resumed study must get GPUs back at the next tick"
+    );
+    let alice = sched.study("alice").unwrap().agent().unwrap();
+    assert!(
+        alice.events.iter().any(|e| matches!(e, AgentEvent::Revived(_))),
+        "paused sessions must revive on resume"
+    );
+
+    sched.run_to_completion();
+    let out = sched.into_outcome();
+    assert!(out.studies.iter().all(|s| s
+        .agent
+        .as_ref()
+        .map(|a| a.finished)
+        .unwrap_or(false)));
 }
 
 /// The MultiPlatform streams per-study JSONL (study-labelled, string
