@@ -52,6 +52,7 @@ fn scale_manifest() -> StudyManifest {
             quota: CLUSTER_GPUS / STUDIES,
             priority: 1.0,
             submit_at: 0.0,
+            failures: Vec::new(),
         })
         .collect();
     StudyManifest {

@@ -570,11 +570,20 @@ impl Agent {
         self.suspend_session(sid, true, cluster, now);
     }
 
-    /// Shared Stop-and-Go shrink loop: evict random live victims until
-    /// usage fits `target`, then refill.  `pause_only` chooses the
-    /// victim disposition: `false` is the paper's §3.3.2 split (exit via
-    /// `stop_ratio`, so victims may land in the dead pool); `true`
-    /// always pauses into the stop pool with revival priority.
+    /// Shared Stop-and-Go shrink loop: evict live victims until usage
+    /// fits `target`, then refill.  `pause_only` chooses both the victim
+    /// disposition *and* the selection policy:
+    ///
+    /// * `false` — the paper's §3.3.2 split: a **random** live victim
+    ///   exits via `stop_ratio` (may land in the dead pool).
+    /// * `true` — cross-tenant reclaim: the **most recently granted**
+    ///   live session is paused first (LIFO over the live pool, which is
+    ///   insertion-ordered by launch/revival — under borrowing the latest
+    ///   grants are exactly the borrowed capacity, and the youngest
+    ///   session has the least progress to suspend).  The pick is
+    ///   deterministic — no RNG draw — so a cross-study preemption (or an
+    ///   operator `pause_study`) never perturbs the victim study's
+    ///   decision stream; the grant order itself is the stable tiebreak.
     fn shrink_to_target(
         &mut self,
         target: usize,
@@ -585,12 +594,13 @@ impl Agent {
     ) {
         self.gpu_target = target;
         while self.gpus_in_use() > target && self.pools.live_count() > 0 {
-            let victims = self.pools.live().to_vec();
-            let victim = victims[self.rng.index(victims.len())];
             if pause_only {
+                let victim = *self.pools.live().last().unwrap();
                 self.suspend_session(victim, false, cluster, now);
                 self.events.push(AgentEvent::Preempted(victim, Pool::Stop));
             } else {
+                let victims = self.pools.live().to_vec();
+                let victim = victims[self.rng.index(victims.len())];
                 self.exit_session(victim, cluster, now, true);
             }
         }

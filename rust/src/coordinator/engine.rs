@@ -698,17 +698,56 @@ impl<'t> SimEngine<'t> {
         doc: &Json,
         make_trainer: impl FnMut(u64) -> Box<dyn Trainer> + 't,
     ) -> anyhow::Result<SimEngine<'t>> {
+        SimEngine::restore_impl(doc, make_trainer, None, true)
+    }
+
+    /// [`SimEngine::restore`] with series retention kept **on** during
+    /// the replay: the utilization change-point series is rebuilt
+    /// point-for-point, so every document a restored engine renders —
+    /// including `cluster_doc`'s series — is byte-identical to the live
+    /// run's.  This is the full-fidelity read-model restore
+    /// (`storage::StoredRun`); prefer [`SimEngine::restore`] when only
+    /// continuing the run matters, as the loud replay does O(series)
+    /// extra work.
+    pub fn restore_full(
+        doc: &Json,
+        make_trainer: impl FnMut(u64) -> Box<dyn Trainer> + 't,
+    ) -> anyhow::Result<SimEngine<'t>> {
+        SimEngine::restore_impl(doc, make_trainer, None, false)
+    }
+
+    /// Scrub restore: replay only the first `upto` events (capped at the
+    /// snapshot's recorded count), re-issuing exactly the inputs that had
+    /// been enqueued by that point.  This is the `?at_event=` primitive
+    /// (`storage::ReplaySource`); the replay runs quiet.
+    pub fn restore_at(
+        doc: &Json,
+        make_trainer: impl FnMut(u64) -> Box<dyn Trainer> + 't,
+        upto: u64,
+    ) -> anyhow::Result<SimEngine<'t>> {
+        SimEngine::restore_impl(doc, make_trainer, Some(upto), true)
+    }
+
+    fn restore_impl(
+        doc: &Json,
+        make_trainer: impl FnMut(u64) -> Box<dyn Trainer> + 't,
+        upto: Option<u64>,
+        quiet: bool,
+    ) -> anyhow::Result<SimEngine<'t>> {
         let setup_doc = doc
             .get("setup")
             .ok_or_else(|| anyhow::anyhow!("snapshot missing 'setup'"))?;
         let setup = SimSetup::from_json(setup_doc)?;
-        let target: u64 = doc
+        let recorded_target: u64 = doc
             .get("events_processed")
             .and_then(|v| v.as_i64())
             .ok_or_else(|| anyhow::anyhow!("snapshot missing 'events_processed'"))?
             as u64;
+        let target = upto.map(|u| u.min(recorded_target)).unwrap_or(recorded_target);
         let mut engine = SimEngine::new(setup, make_trainer);
-        engine.cluster.set_series_retention(false);
+        if quiet {
+            engine.cluster.set_series_retention(false);
+        }
         // "inputs" is the v2 unified log; v1 snapshots recorded online
         // submissions under "online" (kind implied).
         let recorded = doc
@@ -725,7 +764,13 @@ impl<'t> SimEngine<'t> {
                 .get("after_events")
                 .and_then(|v| v.as_i64())
                 .unwrap_or(0) as u64;
-            engine.replay_to(after_events.min(target))?;
+            if after_events > target {
+                // Scrub point predates this input's enqueue: the state at
+                // `target` events had not seen it (nor any later input —
+                // the log is in arrival order).
+                break;
+            }
+            engine.replay_to(after_events)?;
             let kind = o.get("kind").and_then(|v| v.as_str()).unwrap_or("submit");
             let reissued = match kind {
                 "submit" => {
@@ -747,7 +792,9 @@ impl<'t> SimEngine<'t> {
             }
         }
         engine.replay_to(target)?;
-        engine.cluster.set_series_retention(true);
+        if quiet {
+            engine.cluster.set_series_retention(true);
+        }
         Ok(engine)
     }
 }

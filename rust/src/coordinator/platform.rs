@@ -18,6 +18,7 @@
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use crate::config::ChoptConfig;
 use crate::events::SimTime;
@@ -25,8 +26,9 @@ use crate::nsml::{NsmlSession, SessionId};
 use crate::storage::{EventLog, SessionStore};
 use crate::trainer::Trainer;
 use crate::util::json::Value as Json;
-use crate::viz::api::{ApiCommand, ApiError, ApiQuery, PlatformApi};
+use crate::viz::api::{ApiCommand, ApiError, ApiQuery, CommandSink, RunSource};
 use crate::viz::export;
+use crate::viz::sse::EventFeed;
 
 use super::agent::{Agent, AgentEvent};
 use super::driver::{SimOutcome, SimSetup};
@@ -57,6 +59,9 @@ struct DoneRows {
 pub struct Platform<'t> {
     engine: SimEngine<'t>,
     event_log: Option<EventLog>,
+    /// SSE push: progress records are published here as well as (or
+    /// instead of) the JSONL log, so `GET /api/v1/events` streams them.
+    progress_feed: Option<Arc<EventFeed>>,
     /// Per-agent count of [`AgentEvent`]s already drained to the log.
     cursors: HashMap<u64, usize>,
     snapshot_path: Option<PathBuf>,
@@ -87,6 +92,7 @@ impl<'t> Platform<'t> {
         Platform {
             engine,
             event_log: None,
+            progress_feed: None,
             cursors: HashMap::new(),
             snapshot_path: None,
             snapshot_every: 3600.0,
@@ -102,6 +108,15 @@ impl<'t> Platform<'t> {
     pub fn with_event_log(mut self, path: impl AsRef<Path>) -> std::io::Result<Platform<'t>> {
         self.event_log = Some(EventLog::open(path)?);
         Ok(self)
+    }
+
+    /// Publish structured progress events into an SSE feed as well —
+    /// the push stream behind `GET /api/v1/events`.  Like the JSONL log,
+    /// attaching a feed switches the drive loop to per-event drains so
+    /// each record carries the virtual time its transition happened.
+    pub fn with_progress_feed(mut self, feed: Arc<EventFeed>) -> Platform<'t> {
+        self.progress_feed = Some(feed);
+        self
     }
 
     /// Write an engine snapshot to `path` every `every` virtual seconds
@@ -168,7 +183,7 @@ impl<'t> Platform<'t> {
     /// the virtual time the pool transition actually happened (not the
     /// advance-chunk boundary).
     fn drive_until(&mut self, t: SimTime) -> u64 {
-        if self.event_log.is_none() {
+        if self.event_log.is_none() && self.progress_feed.is_none() {
             return self.engine.run_until(t);
         }
         let mut n = 0;
@@ -217,8 +232,12 @@ impl<'t> Platform<'t> {
             let seen = self.cursors.get(&agent.id).copied().unwrap_or(0);
             for ev in &agent.events[seen..] {
                 self.progress_events += 1;
+                let doc = agent_event_json(agent.id, ev, now);
+                if let Some(feed) = &self.progress_feed {
+                    feed.publish_json(&doc);
+                }
                 if let Some(log) = &mut self.event_log {
-                    let _ = log.append(&agent_event_json(agent.id, ev, now));
+                    let _ = log.append(&doc);
                 }
             }
         }
@@ -269,6 +288,9 @@ impl<'t> Platform<'t> {
     }
 
     fn log_json(&mut self, doc: Json) {
+        if let Some(feed) = &self.progress_feed {
+            feed.publish_json(&doc);
+        }
         if let Some(log) = &mut self.event_log {
             let _ = log.append(&doc);
         }
@@ -306,20 +328,71 @@ impl<'t> Platform<'t> {
     ) -> anyhow::Result<Platform<'t>> {
         let text = std::fs::read_to_string(path)?;
         let doc = crate::util::json::parse(&text)?;
-        let engine = SimEngine::restore(&doc, make_trainer)?;
+        Platform::restore_doc(&doc, make_trainer)
+    }
+
+    /// [`Platform::restore`] from an already-parsed snapshot document
+    /// (quiet replay — a continued run's utilization chart starts at the
+    /// snapshot point).
+    pub fn restore_doc(
+        doc: &Json,
+        make_trainer: impl FnMut(u64) -> Box<dyn Trainer> + 't,
+    ) -> anyhow::Result<Platform<'t>> {
+        Ok(Platform::from_restored_engine(SimEngine::restore(
+            doc,
+            make_trainer,
+        )?))
+    }
+
+    /// Full-fidelity restore for read models (`storage::StoredRun`): the
+    /// replay keeps series retention on, so every rendered document —
+    /// including the cluster series — is byte-identical to the live
+    /// run's at the same event count.
+    pub fn restore_doc_full(
+        doc: &Json,
+        make_trainer: impl FnMut(u64) -> Box<dyn Trainer> + 't,
+    ) -> anyhow::Result<Platform<'t>> {
+        Ok(Platform::from_restored_engine(SimEngine::restore_full(
+            doc,
+            make_trainer,
+        )?))
+    }
+
+    /// Scrub restore: the platform view of the run after only `upto`
+    /// recorded events (`storage::ReplaySource`, `?at_event=`).
+    pub fn restore_doc_at(
+        doc: &Json,
+        make_trainer: impl FnMut(u64) -> Box<dyn Trainer> + 't,
+        upto: u64,
+    ) -> anyhow::Result<Platform<'t>> {
+        Ok(Platform::from_restored_engine(SimEngine::restore_at(
+            doc,
+            make_trainer,
+            upto,
+        )?))
+    }
+
+    /// Wrap a replayed engine: cursors start at the replayed state so a
+    /// reattached log/feed only receives new transitions, and
+    /// `progress_events` is reconciled to the count a live platform that
+    /// drained every event would report (one per agent event) — the
+    /// status document stays byte-compatible between live and restored.
+    fn from_restored_engine(engine: SimEngine<'t>) -> Platform<'t> {
         let mut platform = Platform::from_engine(engine);
-        // Events up to the snapshot were already logged by the original
-        // run; start the cursors at the replayed state so a reattached
-        // log only receives new transitions.
         for agent in platform.engine.all_agents() {
             platform.cursors.insert(agent.id, agent.events.len());
         }
+        platform.progress_events = platform
+            .engine
+            .all_agents()
+            .map(|a| a.events.len() as u64)
+            .sum();
         platform.done_drained = platform.engine.done_agents().len();
         // Replay marked every touched slot dirty; the cursors above
         // already account for those events, so drop the marks.
         platform.engine.take_dirty_slots();
         platform.last_snapshot_t = platform.engine.now();
-        Ok(platform)
+        platform
     }
 
     // -- live views --------------------------------------------------------
@@ -465,6 +538,15 @@ impl<'t> Platform<'t> {
         sessions_page(all, limit, offset)
     }
 
+    /// Paginated per-session curves page (the v1 `/api/v1/curves`
+    /// document): `total` sessions overall, curve rows for
+    /// `[offset, offset+limit)` in the same done-agents-first order the
+    /// sessions page uses.
+    pub fn curves_page_doc(&self, limit: usize, offset: usize) -> Json {
+        let all = self.sessions_ref();
+        curves_page(&all, limit, offset)
+    }
+
     /// One-object run status (the `/api/status.json` heartbeat).
     pub fn status_doc(&self) -> Json {
         let engine = &self.engine;
@@ -518,11 +600,19 @@ pub struct MultiPlatform<'t> {
     /// Directory for per-study JSONL streams (None = no logging).
     log_dir: Option<PathBuf>,
     logs: HashMap<usize, EventLog>,
+    /// SSE push: the merged progress stream (every record carries its
+    /// `"study"` label) behind `GET /api/v1/events`.
+    progress_feed: Option<Arc<EventFeed>>,
     /// Per-study count of agent events already drained.
     cursors: HashMap<usize, usize>,
     snapshot_path: Option<PathBuf>,
     snapshot_every: SimTime,
     last_snapshot_t: SimTime,
+    /// Per-study leaderboard documents keyed on the scheduler's
+    /// processed-event count (the same RefCell pattern as the merged
+    /// leaderboard cache): a dashboard polling N tenants between events
+    /// re-renders nothing.
+    study_lb_cache: RefCell<HashMap<String, LbCache>>,
     /// Progress events emitted over the platform's lifetime.
     pub progress_events: u64,
 }
@@ -540,10 +630,12 @@ impl<'t> MultiPlatform<'t> {
             sched,
             log_dir: None,
             logs: HashMap::new(),
+            progress_feed: None,
             cursors: HashMap::new(),
             snapshot_path: None,
             snapshot_every: 3600.0,
             last_snapshot_t: 0.0,
+            study_lb_cache: RefCell::new(HashMap::new()),
             progress_events: 0,
         }
     }
@@ -553,6 +645,14 @@ impl<'t> MultiPlatform<'t> {
         std::fs::create_dir_all(dir.as_ref())?;
         self.log_dir = Some(dir.as_ref().to_path_buf());
         Ok(self)
+    }
+
+    /// Publish the merged progress stream into an SSE feed (the push
+    /// stream behind `GET /api/v1/events`); switches the drive loop to
+    /// per-event drains like the JSONL logs do.
+    pub fn with_progress_feed(mut self, feed: Arc<EventFeed>) -> MultiPlatform<'t> {
+        self.progress_feed = Some(feed);
+        self
     }
 
     /// Write a scheduler snapshot to `path` every `every` virtual seconds
@@ -625,7 +725,7 @@ impl<'t> MultiPlatform<'t> {
     }
 
     fn drive_until(&mut self, t: SimTime) -> u64 {
-        if self.log_dir.is_none() {
+        if self.log_dir.is_none() && self.progress_feed.is_none() {
             return self.sched.run_until(t);
         }
         let mut n = 0;
@@ -652,18 +752,22 @@ impl<'t> MultiPlatform<'t> {
             sched,
             log_dir,
             mut logs,
+            progress_feed,
             cursors,
             ..
         } = self;
         let outcome = sched.into_outcome();
         let now = outcome.end_time;
-        if log_dir.is_some() {
+        if log_dir.is_some() || progress_feed.is_some() {
             for (idx, study) in outcome.studies.iter().enumerate() {
                 let Some(agent) = &study.agent else { continue };
                 let seen = cursors.get(&idx).copied().unwrap_or(0);
                 for ev in &agent.events[seen..] {
                     let doc = agent_event_json(agent.id, ev, now)
                         .with("study", Json::Str(study.name.clone()));
+                    if let Some(feed) = &progress_feed {
+                        feed.publish_json(&doc);
+                    }
                     if let Some(log) = open_study_log(&log_dir, &mut logs, idx, &study.name) {
                         let _ = log.append(&doc);
                     }
@@ -695,7 +799,7 @@ impl<'t> MultiPlatform<'t> {
     /// per-event drain in `drive_until` is O(touched studies), not
     /// O(all studies), which matters at 64+ tenants.
     fn drain_progress(&mut self) {
-        if self.log_dir.is_none() {
+        if self.log_dir.is_none() && self.progress_feed.is_none() {
             // No sink: discard the marks so the list cannot grow across
             // a long unlogged run.
             self.sched.take_dirty_studies();
@@ -715,8 +819,13 @@ impl<'t> MultiPlatform<'t> {
         }
         self.progress_events += fresh.len() as u64;
         for (idx, name, doc) in fresh {
-            if let Some(log) = self.log_for(idx, &name) {
-                let _ = log.append(&doc);
+            if let Some(feed) = &self.progress_feed {
+                feed.publish_json(&doc);
+            }
+            if self.log_dir.is_some() {
+                if let Some(log) = self.log_for(idx, &name) {
+                    let _ = log.append(&doc);
+                }
             }
         }
     }
@@ -751,7 +860,37 @@ impl<'t> MultiPlatform<'t> {
     ) -> anyhow::Result<MultiPlatform<'t>> {
         let text = std::fs::read_to_string(path)?;
         let doc = crate::util::json::parse(&text)?;
-        let sched = StudyScheduler::restore(&doc, make_trainer)?;
+        MultiPlatform::restore_doc(&doc, make_trainer)
+    }
+
+    /// [`MultiPlatform::restore`] from an already-parsed snapshot
+    /// document (quiet replay).
+    pub fn restore_doc(
+        doc: &Json,
+        make_trainer: impl FnMut(usize, u64) -> Box<dyn Trainer> + 't,
+    ) -> anyhow::Result<MultiPlatform<'t>> {
+        Ok(MultiPlatform::from_restored_scheduler(
+            StudyScheduler::restore(doc, make_trainer)?,
+        ))
+    }
+
+    /// Full-fidelity restore for read models (`storage::StoredRun`):
+    /// series retention stays on during the replay, so every rendered
+    /// document is byte-identical to the live run's.
+    pub fn restore_doc_full(
+        doc: &Json,
+        make_trainer: impl FnMut(usize, u64) -> Box<dyn Trainer> + 't,
+    ) -> anyhow::Result<MultiPlatform<'t>> {
+        Ok(MultiPlatform::from_restored_scheduler(
+            StudyScheduler::restore_full(doc, make_trainer)?,
+        ))
+    }
+
+    /// Wrap a replayed scheduler: cursors start at the replayed state,
+    /// and `progress_events` is reconciled to the count a live, logged
+    /// run would report (one per agent event) so the status document
+    /// stays byte-compatible between live and restored.
+    fn from_restored_scheduler(sched: StudyScheduler<'t>) -> MultiPlatform<'t> {
         let mut platform = MultiPlatform::from_scheduler(sched);
         // Events up to the snapshot were already logged by the original
         // run; start the cursors at the replayed state.
@@ -762,6 +901,7 @@ impl<'t> MultiPlatform<'t> {
             .enumerate()
             .filter_map(|(idx, st)| st.agent().map(|a| (idx, a.events.len())))
             .collect();
+        platform.progress_events = ends.iter().map(|&(_, len)| len as u64).sum();
         for (idx, len) in ends {
             platform.cursors.insert(idx, len);
         }
@@ -769,7 +909,7 @@ impl<'t> MultiPlatform<'t> {
         // account for those events, so drop the marks.
         platform.sched.take_dirty_studies();
         platform.last_snapshot_t = platform.sched.now();
-        Ok(platform)
+        platform
     }
 
     // -- live views --------------------------------------------------------
@@ -827,7 +967,19 @@ impl<'t> MultiPlatform<'t> {
 
     /// Live leaderboard for one study (rows shaped like
     /// [`Platform::leaderboard_doc`], plus the study label).
+    ///
+    /// Cached per study against the scheduler's processed-event count
+    /// (the same RefCell pattern as the merged leaderboard): polling an
+    /// idle run — or one where only *other* studies advanced the clock
+    /// without any event — returns the previous document instead of
+    /// re-ranking.
     pub fn study_leaderboard_doc(&self, name: &str, k: usize) -> Json {
+        let processed = self.sched.events_processed();
+        if let Some(c) = self.study_lb_cache.borrow().get(name) {
+            if c.processed == processed && c.k == k {
+                return c.doc.clone();
+            }
+        }
         let mut rows: Vec<Json> = Vec::new();
         if let Some(agent) = self.sched.study(name).and_then(|st| st.agent()) {
             for &(sid, best) in agent.leaderboard.top(k) {
@@ -844,10 +996,19 @@ impl<'t> MultiPlatform<'t> {
                 );
             }
         }
-        Json::obj()
+        let doc = Json::obj()
             .with("t", Json::Num(self.sched.now()))
             .with("study", Json::Str(name.to_string()))
-            .with("rows", Json::Arr(rows))
+            .with("rows", Json::Arr(rows));
+        self.study_lb_cache.borrow_mut().insert(
+            name.to_string(),
+            LbCache {
+                processed,
+                k,
+                doc: doc.clone(),
+            },
+        );
+        doc
     }
 
     /// Sessions document for one study in the `SessionStore` format
@@ -872,6 +1033,17 @@ impl<'t> MultiPlatform<'t> {
             all.extend(ss.into_iter().map(|s| (agent.id, s)));
         }
         sessions_page(all, limit, offset).with("study", Json::Str(name.to_string()))
+    }
+
+    /// Paginated curves page for one study (the v1
+    /// `/api/v1/studies/<name>/curves` document).
+    pub fn study_curves_page_doc(&self, name: &str, limit: usize, offset: usize) -> Json {
+        let mut all: Vec<&NsmlSession> = Vec::new();
+        if let Some(agent) = self.sched.study(name).and_then(|st| st.agent()) {
+            all.extend(agent.sessions.values());
+            all.sort_by_key(|s| s.id);
+        }
+        curves_page(&all, limit, offset).with("study", Json::Str(name.to_string()))
     }
 
     /// Study directory (the v1 `/api/v1/studies` document).
@@ -956,15 +1128,37 @@ fn sessions_page(all: Vec<(u64, &NsmlSession)>, limit: usize, offset: usize) -> 
         .with("sessions", Json::Arr(rows))
 }
 
-/// The single-study control plane: queries serve from the incremental
-/// documents; commands feed the engine's recorded-input channel and take
-/// effect at the next event boundary.
-impl<'t> PlatformApi for Platform<'t> {
-    fn api_generation(&self) -> u64 {
+/// The curves twin of [`sessions_page`]: the `[offset, offset+limit)`
+/// window of per-session loss/measure curves.
+fn curves_page(all: &[&NsmlSession], limit: usize, offset: usize) -> Json {
+    let total = all.len();
+    let page: Vec<&NsmlSession> = all
+        .iter()
+        .copied()
+        .skip(offset)
+        .take(limit)
+        .collect();
+    let curves = export::curves_doc_refs(&page);
+    Json::obj()
+        .with("total", Json::Num(total as f64))
+        .with("offset", Json::Num(offset as f64))
+        .with("returned", Json::Num(page.len() as f64))
+        .with(
+            "curves",
+            curves.get("curves").cloned().unwrap_or(Json::Arr(Vec::new())),
+        )
+}
+
+/// The single-study **read model**: queries serve from the incremental
+/// documents.  `storage::StoredRun` reuses exactly this implementation
+/// on a replayed engine, which is what makes stored bodies byte-
+/// identical to live ones.
+impl<'t> RunSource for Platform<'t> {
+    fn generation(&self) -> u64 {
         self.engine.events_processed()
     }
 
-    fn api_query(&self, q: &ApiQuery) -> Result<Json, ApiError> {
+    fn query(&self, q: &ApiQuery) -> Result<Json, ApiError> {
         match q {
             ApiQuery::Status => Ok(self.status_doc()),
             ApiQuery::Cluster { window } => Ok(export::cluster_doc_windowed(
@@ -974,6 +1168,7 @@ impl<'t> PlatformApi for Platform<'t> {
             )),
             ApiQuery::Leaderboard { k } => Ok(self.leaderboard_doc(*k)),
             ApiQuery::Sessions { limit, offset } => Ok(self.sessions_page_doc(*limit, *offset)),
+            ApiQuery::Curves { limit, offset } => Ok(self.curves_page_doc(*limit, *offset)),
             ApiQuery::Parallel => {
                 let space = self
                     .engine
@@ -987,13 +1182,18 @@ impl<'t> PlatformApi for Platform<'t> {
             | ApiQuery::Studies
             | ApiQuery::StudySessions { .. }
             | ApiQuery::StudyLeaderboard { .. }
-            | ApiQuery::StudyParallel { .. } => Err(ApiError::NotFound(
+            | ApiQuery::StudyParallel { .. }
+            | ApiQuery::StudyCurves { .. } => Err(ApiError::NotFound(
                 "multi-study endpoint; this server runs a single study".into(),
             )),
         }
     }
+}
 
-    fn api_command(&mut self, c: &ApiCommand) -> Result<Json, ApiError> {
+/// The single-study **command side**: commands feed the engine's
+/// recorded-input channel and take effect at the next event boundary.
+impl<'t> CommandSink for Platform<'t> {
+    fn command(&mut self, c: &ApiCommand) -> Result<Json, ApiError> {
         let now = self.engine.now();
         let ack = |kind: &str, at: SimTime| {
             Json::obj()
@@ -1042,13 +1242,14 @@ impl<'t> PlatformApi for Platform<'t> {
     }
 }
 
-/// The multi-tenant control plane over a [`StudyScheduler`].
-impl<'t> PlatformApi for MultiPlatform<'t> {
-    fn api_generation(&self) -> u64 {
+/// The multi-tenant **read model** over a [`StudyScheduler`] — also
+/// reused verbatim by `storage::StoredRun` for multi-study directories.
+impl<'t> RunSource for MultiPlatform<'t> {
+    fn generation(&self) -> u64 {
         self.sched.events_processed()
     }
 
-    fn api_query(&self, q: &ApiQuery) -> Result<Json, ApiError> {
+    fn query(&self, q: &ApiQuery) -> Result<Json, ApiError> {
         let known = |study: &str| -> Result<(), ApiError> {
             if self.sched.study(study).is_some() {
                 Ok(())
@@ -1077,18 +1278,30 @@ impl<'t> PlatformApi for MultiPlatform<'t> {
                 known(study)?;
                 Ok(self.study_leaderboard_doc(study, *k))
             }
+            ApiQuery::StudyCurves {
+                study,
+                limit,
+                offset,
+            } => {
+                known(study)?;
+                Ok(self.study_curves_page_doc(study, *limit, *offset))
+            }
             ApiQuery::StudyParallel { study } => self
                 .study_parallel_doc(study)
                 .ok_or_else(|| ApiError::NotFound(format!("unknown study '{study}'"))),
-            ApiQuery::Sessions { .. } | ApiQuery::Leaderboard { .. } | ApiQuery::Parallel => {
-                Err(ApiError::NotFound(
-                    "single-study endpoint; use /api/v1/studies/<name>/…".into(),
-                ))
-            }
+            ApiQuery::Sessions { .. }
+            | ApiQuery::Leaderboard { .. }
+            | ApiQuery::Parallel
+            | ApiQuery::Curves { .. } => Err(ApiError::NotFound(
+                "single-study endpoint; use /api/v1/studies/<name>/…".into(),
+            )),
         }
     }
+}
 
-    fn api_command(&mut self, c: &ApiCommand) -> Result<Json, ApiError> {
+/// The multi-tenant **command side** (study + session control).
+impl<'t> CommandSink for MultiPlatform<'t> {
+    fn command(&mut self, c: &ApiCommand) -> Result<Json, ApiError> {
         let now = self.sched.now();
         let ack = |kind: &str, at: SimTime| {
             Json::obj()

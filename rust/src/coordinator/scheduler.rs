@@ -60,6 +60,15 @@ pub struct StudySpec {
     pub priority: f64,
     /// Virtual time the study joins the cluster.
     pub submit_at: SimTime,
+    /// Failure injection: virtual times at which the study's agent
+    /// crashes (GPUs released, CHOPT session aborted with
+    /// `agent_failure`) — the multi-tenant analog of
+    /// `SimSetup::failures`.  Each entry fires at most once, at the
+    /// first master tick past its time, and only if the study's agent is
+    /// active then (a failure scheduled before activation is consumed
+    /// without effect — the stale-failure class the single-study engine
+    /// already guards against).
+    pub failures: Vec<SimTime>,
 }
 
 impl StudySpec {
@@ -69,6 +78,7 @@ impl StudySpec {
             .with("quota", Json::Num(self.quota as f64))
             .with("priority", Json::Num(self.priority))
             .with("submit_at", Json::Num(self.submit_at))
+            .with("failures", Json::from_f64_slice(&self.failures))
             .with("config", self.config.to_json())
     }
 
@@ -100,12 +110,18 @@ impl StudySpec {
             .and_then(|v| v.as_f64())
             .unwrap_or(0.0)
             .max(0.0);
+        let failures = doc
+            .get("failures")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+            .unwrap_or_default();
         Ok(StudySpec {
             name,
             config,
             quota,
             priority,
             submit_at,
+            failures,
         })
     }
 }
@@ -349,6 +365,9 @@ pub struct StudyState {
     /// Operator-stopped before activation: never activates, counts as
     /// done.  (Stopping an *active* study shuts its agent down instead.)
     cancelled: bool,
+    /// Consumable runtime view of [`StudySpec::failures`]: `(at,
+    /// consumed)`.  Consumed exactly once — see the spec field's docs.
+    failures: Vec<(SimTime, bool)>,
 }
 
 impl StudyState {
@@ -462,6 +481,7 @@ impl<'t> StudyScheduler<'t> {
                 paused: false,
                 resume_grace: false,
                 cancelled: false,
+                failures: spec.failures.iter().map(|&at| (at, false)).collect(),
             })
             .collect();
         let n_studies = manifest.studies.len();
@@ -619,6 +639,7 @@ impl<'t> StudyScheduler<'t> {
             paused: false,
             resume_grace: false,
             cancelled: false,
+            failures: spec.failures.iter().map(|&f| (f, false)).collect(),
         });
         self.dirty.push_slot();
         self.enqueue_input(MInputKind::SubmitStudy(spec), at);
@@ -865,6 +886,33 @@ impl<'t> StudyScheduler<'t> {
         // preempted on the same tick the newcomer arrives, not one
         // master period later.
         self.activate_ready(t);
+        // Failure injection: crash scheduled studies first so this
+        // tick's fair share reflects reality (the freed quota is
+        // redistributable immediately).  Each failure fires exactly once
+        // and only against an agent that is active *now* — a record due
+        // before activation is consumed without effect, so it can never
+        // crash a later incarnation (the single-engine stale-failure
+        // guard, per study).
+        for i in 0..self.studies.len() {
+            let mut crash = false;
+            for f in self.studies[i].failures.iter_mut() {
+                if !f.1 && f.0 <= t {
+                    f.1 = true;
+                    crash = true;
+                }
+            }
+            if !crash {
+                continue;
+            }
+            if let Some(agent) = self.studies[i].agent.as_mut() {
+                if !agent.finished {
+                    agent.shutdown("agent_failure", &mut self.cluster, t);
+                    self.studies[i].paused = false;
+                    self.studies[i].last_target = 0;
+                    self.mark_dirty(i);
+                }
+            }
+        }
         let external = self
             .manifest
             .trace
@@ -1191,6 +1239,26 @@ impl<'t> StudyScheduler<'t> {
         doc: &Json,
         make_trainer: impl FnMut(usize, u64) -> Box<dyn Trainer> + 't,
     ) -> anyhow::Result<StudyScheduler<'t>> {
+        StudyScheduler::restore_impl(doc, make_trainer, true)
+    }
+
+    /// [`StudyScheduler::restore`] with series retention kept **on**
+    /// during the replay: the utilization series is rebuilt point-for-
+    /// point so every rendered document is byte-identical to the live
+    /// run's (the `storage::StoredRun` read model).  Costs O(series)
+    /// extra work over the quiet restore.
+    pub fn restore_full(
+        doc: &Json,
+        make_trainer: impl FnMut(usize, u64) -> Box<dyn Trainer> + 't,
+    ) -> anyhow::Result<StudyScheduler<'t>> {
+        StudyScheduler::restore_impl(doc, make_trainer, false)
+    }
+
+    fn restore_impl(
+        doc: &Json,
+        make_trainer: impl FnMut(usize, u64) -> Box<dyn Trainer> + 't,
+        quiet: bool,
+    ) -> anyhow::Result<StudyScheduler<'t>> {
         if doc.get("kind").and_then(|v| v.as_str()) != Some("multi_study") {
             anyhow::bail!("snapshot is not a multi-study snapshot");
         }
@@ -1204,7 +1272,9 @@ impl<'t> StudyScheduler<'t> {
             .ok_or_else(|| anyhow::anyhow!("snapshot missing 'events_processed'"))?
             as u64;
         let mut sched = StudyScheduler::new(manifest, make_trainer);
-        sched.cluster.set_series_retention(false);
+        if quiet {
+            sched.cluster.set_series_retention(false);
+        }
         // "inputs" is the v2 unified log; v1 snapshots recorded online
         // study submissions under "online" (kind implied).
         let recorded = doc
@@ -1265,7 +1335,9 @@ impl<'t> StudyScheduler<'t> {
             }
         }
         sched.replay_to(target)?;
-        sched.cluster.set_series_retention(true);
+        if quiet {
+            sched.cluster.set_series_retention(true);
+        }
         Ok(sched)
     }
 }

@@ -12,13 +12,15 @@
 //!                  HTTP server
 
 use std::collections::HashSet;
+use std::time::Duration;
 
 use chopt::config::ChoptConfig;
 use chopt::coordinator::{run_sim, MultiPlatform, Platform, SimSetup, StudyManifest};
-use chopt::storage::SessionStore;
-use chopt::trainer::{real::RealTrainer, surrogate::SurrogateTrainer, Trainer};
+use chopt::storage::{SessionStore, StoredRun};
+use chopt::trainer::{real::RealTrainer, surrogate, surrogate::SurrogateTrainer, Trainer};
 use chopt::util::cli::{CliError, Command};
 use chopt::viz;
+use chopt::viz::sse::EventFeed;
 
 fn cli() -> Command {
     Command::new("chopt", "cloud-based hyperparameter optimization framework")
@@ -66,14 +68,23 @@ fn cli() -> Command {
         )
         .subcommand(
             Command::new("serve", "serve a stored run (or a live one) through the viz server")
-                .opt("store", None, "path to a sessions.json written by `run`")
+                .opt(
+                    "store",
+                    None,
+                    "run directory (snapshot.json + events JSONL) written by `watch`/`multi`",
+                )
                 .opt("port", Some("8787"), "listen port")
-                .flag("live", "drive a run in-process and re-render views as it advances")
+                .flag("live", "drive a run in-process and answer /api/v1 as it advances")
                 .opt("config", None, "config for --live mode")
                 .opt("manifest", None, "studies manifest for multi-study --live mode")
                 .opt("gpus", Some("8"), "simulated cluster size (--live)")
                 .opt("chunk", Some("1800"), "virtual seconds advanced per refresh (--live)")
-                .opt("throttle-ms", Some("250"), "wall-clock pause between refreshes (--live)"),
+                .opt("throttle-ms", Some("250"), "wall-clock pause between refreshes (--live)")
+                .opt(
+                    "api-token",
+                    None,
+                    "bearer token for POST /api/v1/commands (or CHOPT_API_TOKEN; reads stay open)",
+                ),
         )
 }
 
@@ -193,9 +204,7 @@ fn cmd_watch(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
     let mut platform = if let Some(restore) = m.get("restore") {
         // The factory seed comes from the snapshot's own configs, so a
         // restored run replays with the trainers the original run built.
-        let platform = Platform::restore(restore, |id| -> Box<dyn Trainer> {
-            Box::new(SurrogateTrainer::new(id))
-        })?;
+        let platform = Platform::restore(restore, surrogate::default_factory)?;
         println!(
             "restored from {restore}: t={:.0}s, {} events replayed",
             platform.now(),
@@ -229,9 +238,7 @@ fn cmd_watch(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
         // run on top of this run's log.
         let _ = std::fs::remove_file(format!("{out_dir}/events.jsonl"));
         let _ = std::fs::remove_file(&snap_path);
-        Platform::new(SimSetup::single(cfg, gpus), |id| -> Box<dyn Trainer> {
-            Box::new(SurrogateTrainer::new(id))
-        })
+        Platform::new(SimSetup::single(cfg, gpus), surrogate::default_factory)
     };
     platform = platform
         .with_event_log(format!("{out_dir}/events.jsonl"))?
@@ -279,13 +286,13 @@ fn cmd_watch(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// The trainer factory every multi-study entry point shares: one
-/// decorrelated surrogate stream per (study, chopt id).  Restore-by-
-/// replay requires the factory the original run used, so `chopt multi`,
-/// `--restore`, and `serve --live --manifest` must all resolve to this
-/// one definition.
+/// The trainer factory every multi-study entry point shares —
+/// `chopt multi`, `--restore`, `serve --live --manifest`, and
+/// `serve --store` on a multi run directory all resolve to the
+/// library's one definition (restore-by-replay requires the factory
+/// the original run used).
 fn multi_trainer(study: usize, id: u64) -> Box<dyn Trainer> {
-    Box::new(SurrogateTrainer::new(((study as u64 + 1) << 16) ^ id))
+    surrogate::default_multi_factory(study, id)
 }
 
 /// `chopt multi`: drive N studies from a manifest on one shared cluster
@@ -485,6 +492,18 @@ fn cmd_artifacts(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// SSE idle-heartbeat cadence for the CLI servers.
+const SSE_HEARTBEAT: Duration = Duration::from_secs(15);
+
+/// Resolve the command-surface bearer token: `--api-token` wins, then
+/// the `CHOPT_API_TOKEN` environment variable.
+fn api_token(m: &chopt::util::cli::Matches) -> Option<String> {
+    m.get("api-token")
+        .map(|s| s.to_string())
+        .or_else(|| std::env::var("CHOPT_API_TOKEN").ok())
+        .filter(|s| !s.is_empty())
+}
+
 fn cmd_serve(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
     let port: u16 = m.get_usize("port").unwrap_or(8787) as u16;
     if m.flag("live") {
@@ -493,19 +512,38 @@ fn cmd_serve(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
     let Some(store_path) = m.get("store") else {
         anyhow::bail!("serve needs --store (or --live with --config)");
     };
-    let doc = SessionStore::load_json(store_path)?;
-    let mut routes = viz::server::Routes::new();
-    routes.insert(
-        "/api/sessions.json".into(),
-        (
-            "application/json".into(),
-            doc.to_string_pretty().into_bytes(),
-        ),
+    // The stored run is rebuilt into the same incremental documents the
+    // live path serves (full-fidelity replay), so every /api/v1 query —
+    // and the legacy /api/*.json aliases — answers with bodies byte-
+    // identical to the run served live.  The old static sessions-table
+    // branch is gone.
+    let stored = StoredRun::open(store_path)?;
+    // SSE replays the recorded progress stream, then heartbeats.
+    let feed = EventFeed::new(usize::MAX);
+    for line in stored.event_lines() {
+        feed.publish(line);
+    }
+    let server = viz::server::VizServer::start(port, viz::server::Routes::new())?;
+    server.serve_events(feed.clone(), SSE_HEARTBEAT);
+    let inbox = server.enable_api();
+    println!(
+        "serving stored run {store_path} on http://{}/ — GET /api/v1/{{status,cluster,sessions,leaderboard,parallel,curves{}}}, /api/v1/events (SSE, {} recorded events){} (read-only; ctrl-c to stop)",
+        server.addr(),
+        if stored.is_multi() {
+            ",fair_share,studies"
+        } else {
+            ""
+        },
+        feed.last_seq(),
+        if stored.is_multi() {
+            ""
+        } else {
+            "; scrub any query with ?at_event=N"
+        },
     );
-    let server = viz::server::VizServer::start(port, routes)?;
-    println!("serving {store_path} on http://{}/ (ctrl-c to stop)", server.addr());
+    let mut source = stored;
     loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+        inbox.serve_one(&mut source, Duration::from_millis(500));
     }
 }
 
@@ -526,15 +564,20 @@ fn cmd_serve_live(m: &chopt::util::cli::Matches, port: u16) -> anyhow::Result<()
     let gpus = m.get_usize("gpus").unwrap_or(8);
     let chunk = m.get_f64("chunk").unwrap_or(1800.0).max(1.0);
     let throttle = std::time::Duration::from_millis(m.get_u64("throttle-ms").unwrap_or(250));
+    let token = api_token(m);
 
-    let mut platform = Platform::new(SimSetup::single(cfg, gpus), |id| -> Box<dyn Trainer> {
-        Box::new(SurrogateTrainer::new(id))
-    });
+    let feed = EventFeed::new(chopt::viz::sse::DEFAULT_FEED_CAPACITY);
+    let mut platform = Platform::new(SimSetup::single(cfg, gpus), surrogate::default_factory)
+        .with_progress_feed(feed.clone());
     let server = viz::server::VizServer::start(port, viz::server::Routes::new())?;
+    server.serve_events(feed, SSE_HEARTBEAT);
+    let authed = token.is_some();
+    server.set_api_token(token);
     let inbox = server.enable_api();
     println!(
-        "live run on http://{}/ — GET /api/v1/{{status,cluster,sessions,leaderboard,parallel}}, POST /api/v1/commands",
-        server.addr()
+        "live run on http://{}/ — GET /api/v1/{{status,cluster,sessions,leaderboard,parallel,curves}}, /api/v1/events (SSE), POST /api/v1/commands{}",
+        server.addr(),
+        if authed { " (bearer token required)" } else { "" }
     );
     loop {
         let n = platform.advance(chunk);
@@ -564,13 +607,19 @@ fn cmd_serve_live_multi(m: &chopt::util::cli::Matches, port: u16) -> anyhow::Res
     let manifest = StudyManifest::load(m.get("manifest").unwrap())?;
     let chunk = m.get_f64("chunk").unwrap_or(1800.0).max(1.0);
     let throttle = std::time::Duration::from_millis(m.get_u64("throttle-ms").unwrap_or(250));
+    let token = api_token(m);
 
-    let mut platform = MultiPlatform::new(manifest, multi_trainer);
+    let feed = EventFeed::new(chopt::viz::sse::DEFAULT_FEED_CAPACITY);
+    let mut platform = MultiPlatform::new(manifest, multi_trainer).with_progress_feed(feed.clone());
     let server = viz::server::VizServer::start(port, viz::server::Routes::new())?;
+    server.serve_events(feed, SSE_HEARTBEAT);
+    let authed = token.is_some();
+    server.set_api_token(token);
     let inbox = server.enable_api();
     println!(
-        "live multi-study run on http://{}/ — GET /api/v1/{{status,cluster,fair_share,studies}}, /api/v1/studies/<name>/..., POST /api/v1/commands",
-        server.addr()
+        "live multi-study run on http://{}/ — GET /api/v1/{{status,cluster,fair_share,studies}}, /api/v1/studies/<name>/..., /api/v1/events (SSE), POST /api/v1/commands{}",
+        server.addr(),
+        if authed { " (bearer token required)" } else { "" }
     );
     loop {
         let n = platform.advance(chunk);

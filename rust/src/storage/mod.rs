@@ -1,4 +1,6 @@
-//! Persistence: session store, JSONL event log, snapshot GC accounting.
+//! Persistence: session store, JSONL event log, snapshot GC accounting,
+//! and the stored-run read models (`StoredRun` / `ReplaySource`) that
+//! serve `/api/v1` from a run directory with live-identical bodies.
 //!
 //! The paper's motivation for the dead pool is storage pressure ("automl
 //! systems commonly create models a lot and it often takes up too much
@@ -9,4 +11,4 @@ mod event_log;
 mod store;
 
 pub use event_log::EventLog;
-pub use store::{SessionStore, SnapshotStore};
+pub use store::{ReplaySource, SessionStore, SnapshotStore, StoredRun};

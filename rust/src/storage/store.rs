@@ -1,10 +1,23 @@
-//! Session result store + model-snapshot accounting.
+//! Session result store, model-snapshot accounting, and the stored-run
+//! read models behind `chopt serve --store`.
+//!
+//! [`StoredRun`] rebuilds a finished (or interrupted) run directory into
+//! the *same* incremental documents the live platform serves — the
+//! snapshot is replayed in full fidelity, so every `/api/v1` body is
+//! byte-identical to the run served live at the same event count.
+//! [`ReplaySource`] is its scrub sibling: `?at_event=N` replays a
+//! single-study snapshot to any recorded event count.
 
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
+use crate::coordinator::{MultiPlatform, Platform};
 use crate::nsml::{NsmlSession, SessionId};
+use crate::trainer::{surrogate, Trainer};
 use crate::util::json::{self, Value as Json};
+use crate::viz::api::{ApiCommand, ApiError, ApiQuery, CommandSink, RunSource};
 
 /// Persists finished CHOPT runs (sessions + metadata) as a JSON document
 /// the viz tool serves.
@@ -146,10 +159,302 @@ impl SnapshotStore {
     }
 }
 
+/// Scrub-to-event replay over a single-study snapshot: the
+/// [`RunSource`] behind `?at_event=N`.
+///
+/// Wraps `SimEngine::restore` (via [`Platform::restore_doc_at`]): a
+/// query at event count `N` rebuilds the engine by replaying the first
+/// `N` recorded events (re-issuing exactly the external inputs that had
+/// been enqueued by then) and renders the document from that state.
+/// The last scrub position is cached, so repeated queries at the same
+/// `N` — the common dashboard case, several views of one moment — replay
+/// once.  Determinism of the engine replay makes scrubbing stable:
+/// the same `N` always yields the same bytes regardless of scrub order.
+pub struct ReplaySource {
+    snapshot: Json,
+    /// The snapshot's recorded event count — scrub positions cap here.
+    target: u64,
+    make: Arc<dyn Fn(u64) -> Box<dyn Trainer>>,
+    /// (position, replayed platform) of the last scrub.
+    cache: RefCell<Option<(u64, Platform<'static>)>>,
+}
+
+impl ReplaySource {
+    /// Build a scrubber over a parsed single-study snapshot document.
+    /// `make` must be the trainer factory the original run used.
+    pub fn new(
+        snapshot: Json,
+        make: impl Fn(u64) -> Box<dyn Trainer> + 'static,
+    ) -> anyhow::Result<ReplaySource> {
+        ReplaySource::with_factory(snapshot, Arc::new(make))
+    }
+
+    fn with_factory(
+        snapshot: Json,
+        make: Arc<dyn Fn(u64) -> Box<dyn Trainer>>,
+    ) -> anyhow::Result<ReplaySource> {
+        if snapshot.get("kind").and_then(|v| v.as_str()) == Some("multi_study") {
+            anyhow::bail!("?at_event scrubbing supports single-study snapshots only");
+        }
+        let target = snapshot
+            .get("events_processed")
+            .and_then(|v| v.as_i64())
+            .ok_or_else(|| anyhow::anyhow!("snapshot missing 'events_processed'"))?
+            as u64;
+        Ok(ReplaySource {
+            snapshot,
+            target,
+            make,
+            cache: RefCell::new(None),
+        })
+    }
+
+    /// The snapshot's recorded event count (the maximum scrub position).
+    pub fn target(&self) -> u64 {
+        self.target
+    }
+
+    /// Ensure the cached platform sits at event count `min(at, target)`;
+    /// returns the effective position.
+    fn scrub_to(&self, at: u64) -> Result<u64, ApiError> {
+        let at = at.min(self.target);
+        if let Some((pos, _)) = self.cache.borrow().as_ref() {
+            if *pos == at {
+                return Ok(at);
+            }
+        }
+        let f = self.make.clone();
+        let platform = Platform::restore_doc_at(&self.snapshot, move |id| (*f)(id), at)
+            .map_err(|e| ApiError::BadRequest(format!("replay to event {at} failed: {e:#}")))?;
+        *self.cache.borrow_mut() = Some((at, platform));
+        Ok(at)
+    }
+}
+
+impl RunSource for ReplaySource {
+    /// The current scrub position (the snapshot end before any scrub).
+    fn generation(&self) -> u64 {
+        self.cache
+            .borrow()
+            .as_ref()
+            .map(|&(pos, _)| pos)
+            .unwrap_or(self.target)
+    }
+
+    fn query(&self, q: &ApiQuery) -> Result<Json, ApiError> {
+        let at = self.generation();
+        self.query_at(q, at).map(|(_, doc)| doc)
+    }
+
+    fn query_at(&self, q: &ApiQuery, at: u64) -> Result<(u64, Json), ApiError> {
+        let at = self.scrub_to(at)?;
+        let cache = self.cache.borrow();
+        let (_, platform) = cache.as_ref().expect("scrub_to populated the cache");
+        platform.query(q).map(|doc| (at, doc))
+    }
+}
+
+/// Which platform shape a run directory restored into.
+enum StoredPlatform {
+    Single(Platform<'static>),
+    Multi(MultiPlatform<'static>),
+}
+
+/// A run directory rebuilt into the live read model: the [`RunSource`]
+/// behind `chopt serve --store`.
+///
+/// `open` reads `snapshot.json` (written by `chopt watch` / `chopt
+/// multi` / their `serve --live` twins) and replays it **in full
+/// fidelity** (`restore_doc_full`) through the same `Platform` /
+/// `MultiPlatform` document pipeline the live server uses — which is
+/// what makes every `/api/v1` body byte-identical between `serve
+/// --store` and `serve --live` at the same event count.  The recorded
+/// JSONL progress streams are exposed via [`StoredRun::event_lines`] so
+/// `GET /api/v1/events` replays them over SSE.  Single-study runs also
+/// carry a [`ReplaySource`] for `?at_event=` scrubbing.
+///
+/// Stored runs are read-only: the [`CommandSink`] half rejects every
+/// command with a 400 pointing at `serve --live`.
+pub struct StoredRun {
+    platform: StoredPlatform,
+    replay: Option<ReplaySource>,
+    /// Recorded JSONL streams (one for single-study, one per study for
+    /// multi), in deterministic filename order.
+    events_paths: Vec<PathBuf>,
+}
+
+impl StoredRun {
+    /// Open a run directory (or a `snapshot.json` path directly) with
+    /// the standard CLI trainer factories.  Runs produced with custom
+    /// factories restore through [`StoredRun::open_with`].
+    pub fn open(path: impl AsRef<Path>) -> anyhow::Result<StoredRun> {
+        StoredRun::open_with(
+            path,
+            surrogate::default_factory,
+            surrogate::default_multi_factory,
+        )
+    }
+
+    /// [`StoredRun::open`] with explicit trainer factories (`make` for
+    /// single-study snapshots, `make_multi` for multi-study ones —
+    /// restore-by-replay requires the factories the original run used).
+    pub fn open_with(
+        path: impl AsRef<Path>,
+        make: impl Fn(u64) -> Box<dyn Trainer> + 'static,
+        make_multi: impl FnMut(usize, u64) -> Box<dyn Trainer> + 'static,
+    ) -> anyhow::Result<StoredRun> {
+        let path = path.as_ref();
+        let (snap_path, dir) = if path.is_dir() {
+            (path.join("snapshot.json"), path.to_path_buf())
+        } else {
+            (
+                path.to_path_buf(),
+                path.parent()
+                    .filter(|p| !p.as_os_str().is_empty())
+                    .unwrap_or(Path::new("."))
+                    .to_path_buf(),
+            )
+        };
+        if !snap_path.exists() {
+            anyhow::bail!(
+                "no snapshot.json under '{}' — `serve --store` reads a run directory written by \
+                 `chopt watch` or `chopt multi` (the legacy static sessions.json store was \
+                 retired; see README §Control-plane API)",
+                path.display()
+            );
+        }
+        let text = std::fs::read_to_string(&snap_path)?;
+        let doc = json::parse(&text)?;
+        if doc.get("runs").is_some() && doc.get("events_processed").is_none() {
+            anyhow::bail!(
+                "'{}' is a legacy sessions.json store, not a run snapshot — re-run through \
+                 `chopt watch`/`chopt multi` to produce a servable run directory",
+                snap_path.display()
+            );
+        }
+        if doc.get("kind").and_then(|v| v.as_str()) == Some("multi_study") {
+            let platform = MultiPlatform::restore_doc_full(&doc, make_multi)?;
+            let mut events_paths: Vec<PathBuf> = std::fs::read_dir(&dir)
+                .map(|entries| {
+                    entries
+                        .flatten()
+                        .map(|e| e.path())
+                        .filter(|p| {
+                            p.file_name()
+                                .and_then(|n| n.to_str())
+                                .map(|n| n.starts_with("events-") && n.ends_with(".jsonl"))
+                                .unwrap_or(false)
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            events_paths.sort();
+            Ok(StoredRun {
+                platform: StoredPlatform::Multi(platform),
+                replay: None,
+                events_paths,
+            })
+        } else {
+            let make: Arc<dyn Fn(u64) -> Box<dyn Trainer>> = Arc::new(make);
+            let f = make.clone();
+            let platform = Platform::restore_doc_full(&doc, move |id| (*f)(id))?;
+            let replay = ReplaySource::with_factory(doc, make)?;
+            let events = dir.join("events.jsonl");
+            Ok(StoredRun {
+                platform: StoredPlatform::Single(platform),
+                replay: Some(replay),
+                events_paths: if events.exists() { vec![events] } else { Vec::new() },
+            })
+        }
+    }
+
+    pub fn is_multi(&self) -> bool {
+        matches!(self.platform, StoredPlatform::Multi(_))
+    }
+
+    /// The recorded progress stream, in emit order: single-study runs
+    /// return `events.jsonl` verbatim; multi-study runs merge the
+    /// per-study streams by virtual time (ties keep filename order, so
+    /// the merge is deterministic).  Feed these into an SSE `EventFeed`
+    /// to replay the run's progress over `GET /api/v1/events`.
+    pub fn event_lines(&self) -> Vec<String> {
+        let mut records: Vec<(f64, usize, String)> = Vec::new();
+        for (file_idx, path) in self.events_paths.iter().enumerate() {
+            let Ok(text) = std::fs::read_to_string(path) else {
+                continue;
+            };
+            for line in text.lines() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let t = json::parse(line)
+                    .ok()
+                    .and_then(|doc| doc.get("t").and_then(|v| v.as_f64()))
+                    .unwrap_or(0.0);
+                records.push((t, file_idx, line.to_string()));
+            }
+        }
+        // Stable by (t, file): intra-file order is preserved, cross-file
+        // ties resolve by filename order.
+        records.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        records.into_iter().map(|(_, _, line)| line).collect()
+    }
+}
+
+impl RunSource for StoredRun {
+    fn generation(&self) -> u64 {
+        match &self.platform {
+            StoredPlatform::Single(p) => p.generation(),
+            StoredPlatform::Multi(m) => m.generation(),
+        }
+    }
+
+    fn query(&self, q: &ApiQuery) -> Result<Json, ApiError> {
+        match &self.platform {
+            StoredPlatform::Single(p) => p.query(q),
+            StoredPlatform::Multi(m) => m.query(q),
+        }
+    }
+
+    fn query_at(&self, q: &ApiQuery, at: u64) -> Result<(u64, Json), ApiError> {
+        match &self.replay {
+            Some(replay) => replay.query_at(q, at),
+            None => Err(ApiError::BadRequest(
+                "?at_event scrubbing is supported for single-study stored runs only".into(),
+            )),
+        }
+    }
+}
+
+impl CommandSink for StoredRun {
+    fn command(&mut self, c: &ApiCommand) -> Result<Json, ApiError> {
+        Err(ApiError::BadRequest(format!(
+            "stored run is read-only — '{}' needs a live server (chopt serve --live)",
+            c.name()
+        )))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::hparam::Assignment;
+
+    #[test]
+    fn stored_run_rejects_missing_and_legacy_stores() {
+        let dir = std::env::temp_dir().join(format!("chopt-stored-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // No snapshot.json at all.
+        let err = StoredRun::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("snapshot.json"), "{err}");
+        // A legacy sessions.json store is named as such.
+        let legacy = dir.join("legacy.json");
+        std::fs::write(&legacy, r#"{"runs": []}"#).unwrap();
+        let err = StoredRun::open(&legacy).unwrap_err().to_string();
+        assert!(err.contains("legacy sessions.json"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 
     #[test]
     fn store_roundtrip() {

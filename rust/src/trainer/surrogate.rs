@@ -167,6 +167,23 @@ pub struct SurrogateTrainer {
     pub jitter_std: f64,
 }
 
+/// The trainer factory the single-study CLI surfaces share (`chopt
+/// watch`, `watch --restore`, `serve --live --config`, `serve --store`
+/// on a watch-style run directory).  Restore-by-replay requires the
+/// factory the original run used, so every entry point that may restore
+/// another's snapshot must resolve to this one definition.
+pub fn default_factory(id: u64) -> Box<dyn Trainer> {
+    Box::new(SurrogateTrainer::new(id))
+}
+
+/// The multi-study twin of [`default_factory`] (`chopt multi`,
+/// `multi --restore`, `serve --live --manifest`, `serve --store` on a
+/// multi-study run directory): one decorrelated surrogate stream per
+/// (study, chopt id).
+pub fn default_multi_factory(study: usize, id: u64) -> Box<dyn Trainer> {
+    Box::new(SurrogateTrainer::new(((study as u64 + 1) << 16) ^ id))
+}
+
 impl SurrogateTrainer {
     pub fn new(seed: u64) -> SurrogateTrainer {
         SurrogateTrainer {

@@ -5,19 +5,31 @@
 //! with a **pull-based** surface:
 //!
 //! * **Queries** — `GET /api/v1/{status,cluster,fair_share,studies,
-//!   sessions,leaderboard,parallel}` (plus per-study variants under
-//!   `/api/v1/studies/<name>/`) are parsed into typed [`ApiQuery`]
-//!   values and answered from the platform's incremental documents at
+//!   sessions,leaderboard,parallel,curves}` (plus per-study variants
+//!   under `/api/v1/studies/<name>/`) are parsed into typed [`ApiQuery`]
+//!   values and answered from a [`RunSource`]'s incremental documents at
 //!   request time, instead of the loop re-rendering every document every
 //!   tick whether anyone is watching or not.
 //! * **Commands** — `POST /api/v1/commands` bodies parse into typed
-//!   [`ApiCommand`] values which the `SimEngine` / `StudyScheduler` loop
-//!   applies at tick boundaries (submit a study, pause/resume/stop a
-//!   session or study, set quota/priority).  Commands are recorded as
-//!   replay inputs, so a command-steered run stays snapshot-restorable.
+//!   [`ApiCommand`] values which a [`CommandSink`] (the `SimEngine` /
+//!   `StudyScheduler` loop) applies at tick boundaries (submit a study,
+//!   pause/resume/stop a session or study, set quota/priority).
+//!   Commands are recorded as replay inputs, so a command-steered run
+//!   stays snapshot-restorable.
 //! * **Envelope** — every response carries `schema_version`,
 //!   `generated_at_event` (a *string*: event counts are u64), and the
 //!   payload under `data` (or `error`).  All ids are strings throughout.
+//!
+//! The read side is deliberately its own trait so the same `/api/v1`
+//! surface serves three run shapes behind one abstraction:
+//!
+//! * **live** — `Platform` / `MultiPlatform` answer from their
+//!   incremental documents ([`RunSource`] + [`CommandSink`]),
+//! * **stored** — `storage::StoredRun` rebuilds the identical documents
+//!   from a run directory's snapshot (read-only: its [`CommandSink`]
+//!   rejects every command),
+//! * **replayed** — `storage::ReplaySource` scrubs a snapshot to any
+//!   recorded event count (`?at_event=N` on any query).
 //!
 //! The legacy unversioned `/api/*.json` paths are **deprecated aliases**
 //! onto the v1 handlers: they serve byte-identical v1 bodies.
@@ -27,7 +39,10 @@
 //! The bridge is a channel of [`ApiRequest`]s: connection threads enqueue
 //! and block on a reply; the engine loop drains the [`ApiInbox`] between
 //! advances — which is exactly the "commands apply at tick boundaries"
-//! contract.
+//! contract.  Auth (`--api-token`) and the SSE push stream
+//! (`/api/v1/events`) are enforced/served by the HTTP layer itself, so
+//! the engine loop never sees unauthorized commands and never blocks on
+//! a slow stream consumer.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -55,6 +70,8 @@ pub enum ApiQuery {
     Leaderboard { k: usize },
     /// Parallel-coordinates document.
     Parallel,
+    /// Paginated per-session loss/measure curves ("Scalar plot view").
+    Curves { limit: usize, offset: usize },
     /// Paginated session list of one study.
     StudySessions {
         study: String,
@@ -65,6 +82,12 @@ pub enum ApiQuery {
     StudyLeaderboard { study: String, k: usize },
     /// One study's parallel-coordinates document.
     StudyParallel { study: String },
+    /// Paginated curves of one study.
+    StudyCurves {
+        study: String,
+        limit: usize,
+        offset: usize,
+    },
 }
 
 /// A typed v1 command (the POST half).  Session ids travel as strings.
@@ -204,6 +227,10 @@ pub enum ApiError {
     /// The request was understood but invalid (bad param, rejected
     /// command, malformed embedded config).
     BadRequest(String),
+    /// The command surface requires a bearer token and none was sent.
+    Unauthorized(String),
+    /// A bearer token was sent but it does not match `--api-token`.
+    Forbidden(String),
 }
 
 impl ApiError {
@@ -211,6 +238,17 @@ impl ApiError {
         match self {
             ApiError::NotFound(_) => 404,
             ApiError::BadRequest(_) => 400,
+            ApiError::Unauthorized(_) => 401,
+            ApiError::Forbidden(_) => 403,
+        }
+    }
+
+    pub fn message(&self) -> &str {
+        match self {
+            ApiError::NotFound(m)
+            | ApiError::BadRequest(m)
+            | ApiError::Unauthorized(m)
+            | ApiError::Forbidden(m) => m,
         }
     }
 }
@@ -219,6 +257,9 @@ impl ApiError {
 #[derive(Debug, Clone, PartialEq)]
 pub enum ApiCall {
     Query(ApiQuery),
+    /// A query scrubbed to a recorded event count (`?at_event=N`) —
+    /// served by replay-capable sources ([`RunSource::query_at`]).
+    QueryAt(ApiQuery, u64),
     Command(ApiCommand),
 }
 
@@ -264,7 +305,12 @@ pub fn parse_route(
     if method != "GET" {
         return Err(RouteError::MethodNotAllowed);
     }
-    Ok(ApiCall::Query(q))
+    // `?at_event=N` scrubs any query to a recorded event count (replay-
+    // capable sources; others answer 400).
+    match param_u64(query, "at_event")? {
+        Some(at) => Ok(ApiCall::QueryAt(q, at)),
+        None => Ok(ApiCall::Query(q)),
+    }
 }
 
 /// Map a path (v1 or legacy alias) to a query, or `None` if unknown.
@@ -285,6 +331,10 @@ fn route_query(path: &str, query: &str) -> Result<Option<ApiQuery>, RouteError> 
         },
         "/api/v1/leaderboard" | "/api/leaderboard.json" => ApiQuery::Leaderboard { k: k()? },
         "/api/v1/parallel" | "/api/parallel.json" => ApiQuery::Parallel,
+        "/api/v1/curves" | "/api/curves.json" => ApiQuery::Curves {
+            limit: limit()?,
+            offset: offset()?,
+        },
         _ => {
             // /api/v1/studies/<name>/<view> and the legacy
             // /api/studies/<name>/<view>.json per-study routes.
@@ -312,6 +362,11 @@ fn route_query(path: &str, query: &str) -> Result<Option<ApiQuery>, RouteError> 
                     ApiQuery::StudyLeaderboard { study, k: k()? }
                 }
                 "parallel" | "parallel.json" => ApiQuery::StudyParallel { study },
+                "curves" | "curves.json" => ApiQuery::StudyCurves {
+                    study,
+                    limit: limit()?,
+                    offset: offset()?,
+                },
                 _ => return Ok(None),
             }
         }
@@ -336,6 +391,15 @@ fn param_usize(query: &str, name: &str, default: usize) -> Result<usize, RouteEr
     }
 }
 
+fn param_u64(query: &str, name: &str) -> Result<Option<u64>, RouteError> {
+    match param(query, name) {
+        None | Some("") => Ok(None),
+        Some(v) => v.parse::<u64>().map(Some).map_err(|_| {
+            RouteError::BadRequest(format!("'{name}' must be a non-negative integer"))
+        }),
+    }
+}
+
 fn param_f64(query: &str, name: &str) -> Result<Option<f64>, RouteError> {
     match param(query, name) {
         None | Some("") => Ok(None),
@@ -350,23 +414,47 @@ fn param_f64(query: &str, name: &str) -> Result<Option<f64>, RouteError> {
     }
 }
 
-/// The query/command surface a platform exposes to the API.  Implemented
-/// by `coordinator::Platform` (single study) and
-/// `coordinator::MultiPlatform` (multi-tenant); endpoints that don't
-/// apply to a run shape return [`ApiError::NotFound`].
-pub trait PlatformApi {
+/// The **read side** of the `/api/v1` surface: one trait, three
+/// backends.  Implemented by `coordinator::Platform` (live single
+/// study), `coordinator::MultiPlatform` (live multi-tenant),
+/// `storage::StoredRun` (a run directory rebuilt into the same
+/// incremental documents), and `storage::ReplaySource` (scrub-to-event
+/// replay).  Endpoints that don't apply to a run shape return
+/// [`ApiError::NotFound`].
+pub trait RunSource {
     /// Monotone progress marker stamped into every envelope
     /// (`generated_at_event`) — the engine's processed-event count.
-    fn api_generation(&self) -> u64;
+    fn generation(&self) -> u64;
 
-    /// Answer a query from the live (incremental) documents.
-    fn api_query(&self, q: &ApiQuery) -> Result<Json, ApiError>;
+    /// Answer a query from the (incremental) documents.
+    fn query(&self, q: &ApiQuery) -> Result<Json, ApiError>;
 
-    /// Apply a command.  Called by the engine loop between advances, so
-    /// effects land at tick boundaries; the returned ack documents what
-    /// was accepted (commands take effect at the *next* event boundary).
-    fn api_command(&mut self, c: &ApiCommand) -> Result<Json, ApiError>;
+    /// Answer `q` as of recorded event count `at` (`?at_event=N`).
+    /// Returns the effective generation (the replayed event count, which
+    /// caps at the snapshot's end) alongside the document.  Only replay-
+    /// capable sources override this; live runs cannot rewind.
+    fn query_at(&self, _q: &ApiQuery, _at: u64) -> Result<(u64, Json), ApiError> {
+        Err(ApiError::BadRequest(
+            "this run source does not support ?at_event — serve a stored run to scrub".into(),
+        ))
+    }
 }
+
+/// The **command side** of the surface: applied by the engine loop
+/// between advances, so effects land at tick boundaries; the returned
+/// ack documents what was accepted (commands take effect at the *next*
+/// event boundary).  Read-only sources (stored runs) reject every
+/// command.
+pub trait CommandSink {
+    fn command(&mut self, c: &ApiCommand) -> Result<Json, ApiError>;
+}
+
+/// Read + command halves together — what a *live* platform exposes and
+/// what the [`ApiInbox`] serves.  Blanket-implemented, so implementing
+/// the two halves is all a backend ever does.
+pub trait PlatformApi: RunSource + CommandSink {}
+
+impl<T: RunSource + CommandSink> PlatformApi for T {}
 
 /// Wrap a payload in the uniform v1 envelope.
 pub fn envelope(generation: u64, data: Json) -> Json {
@@ -409,16 +497,19 @@ impl ApiInbox {
     }
 
     fn answer(req: ApiRequest, api: &mut impl PlatformApi) {
-        let generation = api.api_generation();
+        // Scrubbed queries report the replayed event count as their
+        // generation; everything else reports the source's current one.
         let outcome = match &req.call {
-            ApiCall::Query(q) => api.api_query(q),
-            ApiCall::Command(c) => api.api_command(c),
+            ApiCall::Query(q) => api.query(q).map(|d| (api.generation(), d)),
+            ApiCall::QueryAt(q, at) => api.query_at(q, *at),
+            ApiCall::Command(c) => api.command(c).map(|d| (api.generation(), d)),
         };
         let (status, body) = match outcome {
-            Ok(data) => (200, envelope(generation, data)),
-            Err(e) => (e.http_status(), error_envelope(Some(generation), &match e {
-                ApiError::NotFound(m) | ApiError::BadRequest(m) => m,
-            })),
+            Ok((generation, data)) => (200, envelope(generation, data)),
+            Err(e) => (
+                e.http_status(),
+                error_envelope(Some(api.generation()), e.message()),
+            ),
         };
         // A vanished client (timeout, dropped connection) is not an error.
         let _ = req.reply.send((status, body));
@@ -477,6 +568,7 @@ mod tests {
             ("/api/v1/sessions", "/api/sessions.json"),
             ("/api/v1/leaderboard", "/api/leaderboard.json"),
             ("/api/v1/parallel", "/api/parallel.json"),
+            ("/api/v1/curves", "/api/curves.json"),
             ("/api/v1/studies/alice/sessions", "/api/studies/alice/sessions.json"),
             (
                 "/api/v1/studies/alice/leaderboard",
@@ -514,6 +606,22 @@ mod tests {
         ));
         assert!(matches!(
             parse_route("GET", "/api/v1/cluster", "window=-5", b""),
+            Err(RouteError::BadRequest(_))
+        ));
+    }
+
+    #[test]
+    fn at_event_wraps_any_query_into_a_scrub_call() {
+        assert_eq!(
+            parse_route("GET", "/api/v1/status", "at_event=120", b"").unwrap(),
+            ApiCall::QueryAt(ApiQuery::Status, 120)
+        );
+        assert_eq!(
+            parse_route("GET", "/api/v1/curves", "limit=2&at_event=7", b"").unwrap(),
+            ApiCall::QueryAt(ApiQuery::Curves { limit: 2, offset: 0 }, 7)
+        );
+        assert!(matches!(
+            parse_route("GET", "/api/v1/status", "at_event=nope", b""),
             Err(RouteError::BadRequest(_))
         ));
     }

@@ -73,6 +73,13 @@ pub fn parallel_coords_doc_refs(
 
 /// Scalar-plot view: loss/measure curves per session ("Scalar plot view").
 pub fn curves_doc(sessions: &[NsmlSession]) -> Json {
+    let refs: Vec<&NsmlSession> = sessions.iter().collect();
+    curves_doc_refs(&refs)
+}
+
+/// Reference-taking core of [`curves_doc`] — the `/api/v1/curves` query
+/// renders straight from borrowed sessions (no clones per request).
+pub fn curves_doc_refs(sessions: &[&NsmlSession]) -> Json {
     let curves: Vec<Json> = sessions
         .iter()
         .map(|s| {

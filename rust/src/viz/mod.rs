@@ -15,7 +15,11 @@
 //! * [`server`] — dependency-free HTTP server exposing the JSON and SVGs
 //!   plus an embedded HTML viewer.
 //! * [`api`] — the versioned `/api/v1` command + query surface the
-//!   server dispatches through (typed routes, envelope, command bodies).
+//!   server dispatches through (typed routes, envelope, command bodies,
+//!   and the `RunSource`/`CommandSink` split that lets live, stored, and
+//!   replayed runs serve the same read model).
+//! * [`sse`] — the progress-event feed behind `GET /api/v1/events`
+//!   (SSE push with `Last-Event-ID` resume, so dashboards stop polling).
 //! * [`report`] — terminal leaderboard/session tables.
 
 pub mod api;
@@ -26,6 +30,7 @@ pub mod parallel_coords;
 pub mod plots;
 pub mod report;
 pub mod server;
+pub mod sse;
 mod svg;
 
 pub use svg::Svg;

@@ -1,15 +1,23 @@
 //! Dependency-free HTTP server for the analytic tool.
 //!
-//! Two serving modes compose:
+//! Three serving surfaces compose:
 //!
-//! * a **static route table** (`Routes`) for the embedded viewer, SVG
-//!   renders, and stored-run documents (`chopt serve --store`), and
+//! * a **static route table** (`Routes`) for the embedded viewer and SVG
+//!   renders,
 //! * the **versioned control-plane API** (`/api/v1`, see [`crate::viz::api`])
 //!   when enabled via [`VizServer::enable_api`]: API paths are parsed
-//!   into typed calls and forwarded over a channel to the engine loop,
-//!   which answers them between advances (pull-based queries, commands
-//!   applied at tick boundaries).  Legacy `/api/*.json` paths are
-//!   deprecated aliases onto the same v1 handlers.
+//!   into typed calls and forwarded over a channel to the serving loop,
+//!   which answers them between advances from any `RunSource` — a live
+//!   platform, a stored run, or a replay scrubber.  Legacy `/api/*.json`
+//!   paths are deprecated aliases onto the same v1 handlers.  When a
+//!   bearer token is configured ([`VizServer::set_api_token`]) the
+//!   command surface (`POST /api/v1/commands`) answers 401/403 in the
+//!   envelope error format before anything reaches the engine loop; the
+//!   read side stays open.
+//! * the **SSE push stream** (`GET /api/v1/events`, see
+//!   [`crate::viz::sse`]) when enabled via [`VizServer::serve_events`]:
+//!   each connection gets a tailing thread with heartbeats and
+//!   `Last-Event-ID` resume, so dashboards stop polling.
 //!
 //! Each accepted connection is handled on its own thread, so one slow
 //! client cannot stall the listener; methods are parsed and enforced
@@ -20,8 +28,10 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
 
 use super::api::{self, ApiInbox, ApiRequest, RouteError};
+use super::sse::EventFeed;
 
 /// A route table: path → (content type, body).
 pub type Routes = HashMap<String, (String, Vec<u8>)>;
@@ -37,10 +47,26 @@ const API_REPLY_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(10
 /// [`VizServer::enable_api`]).
 type ApiSender = Arc<Mutex<Option<mpsc::Sender<ApiRequest>>>>;
 
-/// The viz HTTP server.
-pub struct VizServer {
+/// The SSE surface: the feed plus the idle heartbeat cadence.
+#[derive(Clone)]
+struct SseHandle {
+    feed: Arc<EventFeed>,
+    heartbeat: Duration,
+}
+
+/// Everything a connection thread needs, cloned per accept.
+#[derive(Clone)]
+struct ConnShared {
     routes: Arc<Mutex<Routes>>,
     api_tx: ApiSender,
+    token: Arc<Mutex<Option<String>>>,
+    sse: Arc<Mutex<Option<SseHandle>>>,
+    stop: Arc<AtomicBool>,
+}
+
+/// The viz HTTP server.
+pub struct VizServer {
+    shared: ConnShared,
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     handle: Option<std::thread::JoinHandle<()>>,
@@ -56,11 +82,16 @@ impl VizServer {
         let listener = TcpListener::bind(("127.0.0.1", port))?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        let routes = Arc::new(Mutex::new(routes));
-        let api_tx: ApiSender = Arc::new(Mutex::new(None));
         let stop = Arc::new(AtomicBool::new(false));
+        let shared = ConnShared {
+            routes: Arc::new(Mutex::new(routes)),
+            api_tx: Arc::new(Mutex::new(None)),
+            token: Arc::new(Mutex::new(None)),
+            sse: Arc::new(Mutex::new(None)),
+            stop: stop.clone(),
+        };
         let requests = Arc::new(AtomicU64::new(0));
-        let (r2, a2, s2, q2) = (routes.clone(), api_tx.clone(), stop.clone(), requests.clone());
+        let (sh2, s2, q2) = (shared.clone(), stop.clone(), requests.clone());
         let handle = std::thread::spawn(move || {
             while !s2.load(Ordering::Relaxed) {
                 match listener.accept() {
@@ -71,11 +102,11 @@ impl VizServer {
                         // (not thread::spawn) so thread exhaustion drops
                         // this one connection instead of panicking the
                         // accept loop dead.
-                        let (routes, api) = (r2.clone(), a2.clone());
+                        let shared = sh2.clone();
                         let _ = std::thread::Builder::new()
                             .name("viz-conn".into())
                             .spawn(move || {
-                                let _ = handle_conn(stream, &routes, &api);
+                                let _ = handle_conn(stream, &shared);
                             });
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -86,8 +117,7 @@ impl VizServer {
             }
         });
         Ok(VizServer {
-            routes,
-            api_tx,
+            shared,
             addr,
             stop,
             handle: Some(handle),
@@ -104,13 +134,32 @@ impl VizServer {
     /// which the engine loop drains between advances.
     pub fn enable_api(&self) -> ApiInbox {
         let (tx, rx) = mpsc::channel();
-        *self.api_tx.lock().unwrap() = Some(tx);
+        *self.shared.api_tx.lock().unwrap() = Some(tx);
         ApiInbox::new(rx)
+    }
+
+    /// Require `Authorization: Bearer <token>` on the command surface
+    /// (`POST /api/v1/commands`).  The read side stays open; a missing
+    /// header answers 401 and a mismatched token 403, both in the
+    /// envelope error format.  `None` re-opens the surface.
+    pub fn set_api_token(&self, token: Option<String>) {
+        *self.shared.token.lock().unwrap() = token;
+    }
+
+    /// Serve `GET /api/v1/events` as an SSE stream of `feed`: one
+    /// tailing thread per connection, a comment heartbeat every
+    /// `heartbeat` while idle, and `Last-Event-ID` resume.
+    pub fn serve_events(&self, feed: Arc<EventFeed>, heartbeat: Duration) {
+        *self.shared.sse.lock().unwrap() = Some(SseHandle {
+            feed,
+            heartbeat: heartbeat.max(Duration::from_millis(10)),
+        });
     }
 
     /// Replace/add a route while running.
     pub fn put_route(&self, path: &str, content_type: &str, body: Vec<u8>) {
-        self.routes
+        self.shared
+            .routes
             .lock()
             .unwrap()
             .insert(path.to_string(), (content_type.to_string(), body));
@@ -145,6 +194,10 @@ struct Request {
     path: String,
     query: String,
     body: Vec<u8>,
+    /// Raw `Authorization` header value, if sent.
+    authorization: Option<String>,
+    /// Parsed `Last-Event-ID` header (SSE resume), if sent.
+    last_event_id: Option<u64>,
 }
 
 fn read_request(stream: &TcpStream) -> std::io::Result<Option<Request>> {
@@ -159,8 +212,10 @@ fn read_request(stream: &TcpStream) -> std::io::Result<Option<Request>> {
         Some((p, q)) => (p.to_string(), q.to_string()),
         None => (target.to_string(), String::new()),
     };
-    // Drain headers, keeping Content-Length.
+    // Drain headers, keeping the ones the API layer consumes.
     let mut content_length = 0usize;
+    let mut authorization = None;
+    let mut last_event_id = None;
     loop {
         let mut line = String::new();
         if reader.read_line(&mut line)? == 0 || line == "\r\n" || line == "\n" {
@@ -169,6 +224,10 @@ fn read_request(stream: &TcpStream) -> std::io::Result<Option<Request>> {
         if let Some((name, value)) = line.split_once(':') {
             if name.eq_ignore_ascii_case("content-length") {
                 content_length = value.trim().parse().unwrap_or(0);
+            } else if name.eq_ignore_ascii_case("authorization") {
+                authorization = Some(value.trim().to_string());
+            } else if name.eq_ignore_ascii_case("last-event-id") {
+                last_event_id = value.trim().parse().ok();
             }
         }
     }
@@ -184,14 +243,12 @@ fn read_request(stream: &TcpStream) -> std::io::Result<Option<Request>> {
         path,
         query,
         body,
+        authorization,
+        last_event_id,
     }))
 }
 
-fn handle_conn(
-    mut stream: TcpStream,
-    routes: &Arc<Mutex<Routes>>,
-    api: &ApiSender,
-) -> std::io::Result<()> {
+fn handle_conn(mut stream: TcpStream, shared: &ConnShared) -> std::io::Result<()> {
     let req = match read_request(&stream)? {
         Some(r) => r,
         None => {
@@ -203,10 +260,37 @@ fn handle_conn(
         }
     };
 
-    // The control-plane API, when enabled, owns every /api path.
-    let api_tx = api.lock().unwrap().clone();
+    // The SSE push stream, when enabled, owns /api/v1/events (it never
+    // goes through the engine-loop bridge — a slow stream consumer must
+    // not occupy the inbox).
+    let sse = shared.sse.lock().unwrap().clone();
+    if let Some(sse) = sse {
+        if req.path == "/api/v1/events" {
+            if req.method != "GET" {
+                let doc = api::error_envelope(None, "method not allowed");
+                let body = doc.to_string_compact().into_bytes();
+                return respond(&mut stream, 405, "application/json", &body, "Allow: GET\r\n");
+            }
+            return stream_events(&mut stream, &req, &sse, &shared.stop);
+        }
+    }
+
+    // The control-plane API, when enabled, owns every other /api path.
+    let api_tx = shared.api_tx.lock().unwrap().clone();
     if let Some(tx) = api_tx {
         if req.path.starts_with("/api/") {
+            // Command auth happens here, before anything reaches the
+            // engine loop; the read side stays open.
+            let token = shared.token.lock().unwrap().clone();
+            if req.path == "/api/v1/commands" && req.method == "POST" {
+                if let Err(e) = check_bearer(&req, &token) {
+                    return respond_json(
+                        &mut stream,
+                        e.http_status(),
+                        &api::error_envelope(None, e.message()),
+                    );
+                }
+            }
             return handle_api(&mut stream, &req, &tx);
         }
     }
@@ -216,10 +300,70 @@ fn handle_conn(
         let body = b"405 method not allowed";
         return respond(&mut stream, 405, "text/plain", body, "Allow: GET\r\n");
     }
-    let found = routes.lock().unwrap().get(&req.path).cloned();
+    let found = shared.routes.lock().unwrap().get(&req.path).cloned();
     match found {
         Some((ctype, body)) => respond(&mut stream, 200, &ctype, &body, ""),
         None => respond(&mut stream, 404, "text/plain", b"404 not found", ""),
+    }
+}
+
+/// Enforce `Authorization: Bearer <token>` when a token is configured:
+/// missing/malformed credentials → 401, a wrong token → 403.
+fn check_bearer(req: &Request, required: &Option<String>) -> Result<(), api::ApiError> {
+    let Some(required) = required else {
+        return Ok(());
+    };
+    match req
+        .authorization
+        .as_deref()
+        .and_then(|h| h.strip_prefix("Bearer "))
+    {
+        None => Err(api::ApiError::Unauthorized(
+            "commands require 'Authorization: Bearer <token>' on this server".into(),
+        )),
+        Some(sent) if sent.trim() == required => Ok(()),
+        Some(_) => Err(api::ApiError::Forbidden("bearer token does not match".into())),
+    }
+}
+
+/// Tail the event feed into one SSE connection: `id:`-framed progress
+/// records, comment heartbeats while idle, resume from `Last-Event-ID`.
+/// Ends when the client disconnects (write error) or the server stops.
+fn stream_events(
+    stream: &mut TcpStream,
+    req: &Request,
+    sse: &SseHandle,
+    stop: &Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    stream.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n",
+    )?;
+    // A Last-Event-ID past anything published cannot be honored (the
+    // header is client-controlled); treat it as "caught up to now" so
+    // later events still flow.
+    let mut cursor = req.last_event_id.unwrap_or(0).min(sse.feed.last_seq());
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        let (missed, batch) = sse.feed.wait_after(cursor, sse.heartbeat);
+        // A cursor that fell behind the retention window — at connect
+        // time or mid-stream under publish pressure — is told how many
+        // records it lost instead of silently skipping them.
+        if missed > 0 {
+            stream.write_all(format!(": resumed past {missed} dropped events\n\n").as_bytes())?;
+        }
+        if batch.is_empty() {
+            stream.write_all(b": heartbeat\n\n")?;
+        } else {
+            let mut out = String::new();
+            for (seq, line) in &batch {
+                out.push_str(&format!("id: {seq}\ndata: {line}\n\n"));
+                cursor = *seq;
+            }
+            stream.write_all(out.as_bytes())?;
+        }
+        stream.flush()?;
     }
 }
 
@@ -277,6 +421,8 @@ fn status_text(status: u16) -> &'static str {
     match status {
         200 => "OK",
         400 => "Bad Request",
+        401 => "Unauthorized",
+        403 => "Forbidden",
         404 => "Not Found",
         405 => "Method Not Allowed",
         503 => "Service Unavailable",
@@ -309,10 +455,25 @@ pub fn http_request(
     path: &str,
     body: &[u8],
 ) -> std::io::Result<(u16, Vec<u8>)> {
+    http_request_with_headers(addr, method, path, &[], body)
+}
+
+/// [`http_request`] with extra request headers (auth, SSE resume).
+pub fn http_request_with_headers(
+    addr: std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> std::io::Result<(u16, Vec<u8>)> {
     let mut stream = TcpStream::connect(addr)?;
+    let extra: String = headers
+        .iter()
+        .map(|(k, v)| format!("{k}: {v}\r\n"))
+        .collect();
     write!(
         stream,
-        "{method} {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "{method} {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\n{extra}Connection: close\r\n\r\n",
         body.len()
     )?;
     stream.write_all(body)?;
@@ -346,9 +507,11 @@ pub fn http_post(
     http_request(addr, "POST", path, body)
 }
 
-/// Embedded single-file viewer: polls the v1 status + parallel queries
-/// (unwrapping the versioned envelope) and draws parallel coordinates on
-/// a canvas.
+/// Embedded single-file viewer: renders the v1 status + parallel queries
+/// (unwrapping the versioned envelope) on a canvas.  Redraws are pushed:
+/// the viewer subscribes to `GET /api/v1/events` (SSE) and re-renders
+/// when progress arrives, with a slow safety-net poll instead of the old
+/// 2-second busy poll.
 const VIEWER_HTML: &str = r#"<!doctype html>
 <html><head><meta charset="utf-8"><title>CHOPT viz</title>
 <style>body{font-family:monospace;margin:16px}canvas{border:1px solid #ccc}</style>
@@ -357,13 +520,15 @@ const VIEWER_HTML: &str = r#"<!doctype html>
 <div>views: <a href="/api/v1/parallel">parallel</a>
  <a href="/api/v1/status">status</a>
  <a href="/api/v1/cluster?window=86400">cluster</a>
+ <a href="/api/v1/curves?limit=20">curves</a>
+ <a href="/api/v1/events">events (SSE)</a>
  <a href="/svg/parallel.svg">parallel.svg</a></div>
 <div id="status"></div>
 <canvas id="c" width="1000" height="440"></canvas>
 <script>
-// v1 responses wrap the document in {schema_version, data}; stored-run
-// mode serves bare legacy documents on the unversioned paths — accept
-// both, preferring v1.
+// v1 responses wrap the document in {schema_version, data}; static
+// tables may serve bare legacy documents on the unversioned paths —
+// accept both, preferring v1.
 const unwrap=j=>j&&j.data!==undefined?j.data:j;
 async function getDoc(paths){
   for(const p of paths){
@@ -393,7 +558,18 @@ getDoc(['/api/v1/parallel','/api/parallel.json']).then(doc=>{
     if(!started){g.moveTo(x(i),y);started=true}else{g.lineTo(x(i),y)}});g.stroke();});
 }).catch(()=>{});
 }
-draw();setInterval(draw,2000);
+draw();
+// Push-driven redraw: progress events (SSE) coalesce into one draw per
+// 500ms; polling is only the fallback when EventSource is unavailable
+// or the stream endpoint is not served.
+let pend=null;const kick=()=>{if(pend)return;pend=setTimeout(()=>{pend=null;draw()},500)};
+let pushed=false;
+if(window.EventSource){
+  const es=new EventSource('/api/v1/events');
+  es.onmessage=()=>{pushed=true;kick()};
+}
+setInterval(()=>{if(!pushed)draw()},2000);
+setInterval(draw,30000);
 </script></body></html>"#;
 
 #[cfg(test)]
@@ -432,6 +608,48 @@ mod tests {
         let addr = server.addr();
         let (status, _) = http_post(addr, "/", b"{}").unwrap();
         assert_eq!(status, 405, "POST to a static route must be a 405");
+        server.stop();
+    }
+
+    #[test]
+    fn bearer_check_maps_missing_vs_wrong() {
+        let req = |auth: Option<&str>| Request {
+            method: "POST".into(),
+            path: "/api/v1/commands".into(),
+            query: String::new(),
+            body: Vec::new(),
+            authorization: auth.map(|s| s.to_string()),
+            last_event_id: None,
+        };
+        let token = Some("sekrit".to_string());
+        // No token configured: everything passes.
+        assert!(check_bearer(&req(None), &None).is_ok());
+        // Missing or non-bearer credentials: 401.
+        assert_eq!(
+            check_bearer(&req(None), &token).unwrap_err().http_status(),
+            401
+        );
+        assert_eq!(
+            check_bearer(&req(Some("Basic abc")), &token).unwrap_err().http_status(),
+            401
+        );
+        // Wrong token: 403.  Right token: pass.
+        assert_eq!(
+            check_bearer(&req(Some("Bearer nope")), &token).unwrap_err().http_status(),
+            403
+        );
+        assert!(check_bearer(&req(Some("Bearer sekrit")), &token).is_ok());
+    }
+
+    #[test]
+    fn sse_route_rejects_non_get() {
+        let server = VizServer::start(0, Routes::new()).unwrap();
+        server.serve_events(
+            crate::viz::sse::EventFeed::new(8),
+            Duration::from_millis(50),
+        );
+        let (status, _) = http_post(server.addr(), "/api/v1/events", b"").unwrap();
+        assert_eq!(status, 405);
         server.stop();
     }
 

@@ -1,0 +1,193 @@
+//! Server-sent-events push for dashboards: the progress-stream feed
+//! behind `GET /api/v1/events`.
+//!
+//! The viewer used to poll every v1 query on a timer whether anything
+//! had happened or not.  The platform now publishes every progress
+//! record (the same JSON objects the JSONL event log receives) into an
+//! [`EventFeed`] — a bounded, sequence-numbered ring buffer — and each
+//! SSE connection gets its own thread that tails the feed:
+//!
+//! * events are framed as `id: <seq>` + `data: <json>` blocks, so
+//!   browsers' `EventSource` reconnect sends `Last-Event-ID` and the
+//!   stream resumes after the last record the client saw;
+//! * when the feed is idle a comment heartbeat (`: heartbeat`) is
+//!   written at the configured cadence, so proxies and clients can tell
+//!   "no events" from "dead server";
+//! * the buffer is bounded: a slow client that reconnects past the
+//!   retention window resumes from the oldest retained record and the
+//!   frame notes how many were dropped.
+//!
+//! The feed is `Sync` (mutex + condvar) while the platform stays
+//! single-threaded: publishing is a lock + push from the engine loop,
+//! never an I/O wait on a consumer.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Value as Json;
+
+/// Default retained events for live runs (stored runs retain everything).
+pub const DEFAULT_FEED_CAPACITY: usize = 65_536;
+
+struct FeedInner {
+    /// (sequence, serialized JSON line) — sequences start at 1 and never
+    /// repeat; the front is the oldest retained record.
+    events: VecDeque<(u64, String)>,
+    next_seq: u64,
+    /// Records evicted by the capacity bound over the feed's lifetime.
+    dropped: u64,
+}
+
+/// The progress-event ring buffer SSE connections tail.
+pub struct EventFeed {
+    inner: Mutex<FeedInner>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+impl EventFeed {
+    /// A feed retaining at most `capacity` records (older ones are
+    /// evicted; reconnecting clients see the drop count).
+    pub fn new(capacity: usize) -> Arc<EventFeed> {
+        Arc::new(EventFeed {
+            inner: Mutex::new(FeedInner {
+                events: VecDeque::new(),
+                next_seq: 1,
+                dropped: 0,
+            }),
+            cv: Condvar::new(),
+            capacity: capacity.max(1),
+        })
+    }
+
+    /// Publish one already-serialized JSON record; returns its sequence.
+    pub fn publish(&self, line: String) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        inner.events.push_back((seq, line));
+        while inner.events.len() > self.capacity {
+            inner.events.pop_front();
+            inner.dropped += 1;
+        }
+        drop(inner);
+        self.cv.notify_all();
+        seq
+    }
+
+    /// Publish a JSON document (compact form — same bytes as the JSONL
+    /// event log).
+    pub fn publish_json(&self, doc: &Json) -> u64 {
+        self.publish(doc.to_string_compact())
+    }
+
+    /// Sequence of the most recent record (0 = nothing published yet).
+    pub fn last_seq(&self) -> u64 {
+        self.inner.lock().unwrap().next_seq - 1
+    }
+
+    /// Shared core of [`EventFeed::read_after`] / [`EventFeed::wait_after`]:
+    /// records with sequence > `after` that are still retained, plus how
+    /// many the cursor missed to eviction.  Saturating arithmetic —
+    /// `after` arrives from the client-controlled `Last-Event-ID`
+    /// header, so `u64::MAX` must not overflow (it simply sees nothing
+    /// new and no drops).
+    fn collect_after(inner: &FeedInner, after: u64) -> (u64, Vec<(u64, String)>) {
+        let oldest = inner.events.front().map(|&(s, _)| s).unwrap_or(inner.next_seq);
+        let missed = oldest.saturating_sub(after.saturating_add(1));
+        let out = inner
+            .events
+            .iter()
+            .filter(|&&(s, _)| s > after)
+            .cloned()
+            .collect();
+        (missed, out)
+    }
+
+    /// Records with sequence > `after` that are still retained, plus how
+    /// many the client missed to eviction (non-zero only when `after`
+    /// fell behind the retention window).
+    pub fn read_after(&self, after: u64) -> (u64, Vec<(u64, String)>) {
+        EventFeed::collect_after(&self.inner.lock().unwrap(), after)
+    }
+
+    /// Like [`EventFeed::read_after`], but blocks up to `timeout` for at
+    /// least one fresh record.  An empty result means the timeout passed
+    /// with nothing new — the caller's heartbeat moment.
+    pub fn wait_after(&self, after: u64, timeout: Duration) -> (u64, Vec<(u64, String)>) {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            // Cheap emptiness check before scanning the ring.
+            if inner.next_seq > after.saturating_add(1) {
+                let (missed, out) = EventFeed::collect_after(&inner, after);
+                if !out.is_empty() || missed > 0 {
+                    return (missed, out);
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return (0, Vec::new());
+            }
+            let (guard, _) = self.cv.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequences_and_reads_are_ordered() {
+        let feed = EventFeed::new(16);
+        assert_eq!(feed.last_seq(), 0);
+        assert_eq!(feed.publish("a".into()), 1);
+        assert_eq!(feed.publish("b".into()), 2);
+        let (missed, got) = feed.read_after(0);
+        assert_eq!(missed, 0);
+        assert_eq!(got, vec![(1, "a".to_string()), (2, "b".to_string())]);
+        let (_, tail) = feed.read_after(1);
+        assert_eq!(tail, vec![(2, "b".to_string())]);
+        assert!(feed.read_after(2).1.is_empty());
+    }
+
+    #[test]
+    fn capacity_evicts_and_reports_missed() {
+        let feed = EventFeed::new(2);
+        for s in ["a", "b", "c", "d"] {
+            feed.publish(s.into());
+        }
+        // Only 3 and 4 retained; a client resuming after 1 missed one.
+        let (missed, got) = feed.read_after(1);
+        assert_eq!(missed, 1);
+        assert_eq!(got.first().map(|&(s, _)| s), Some(3));
+        assert_eq!(feed.last_seq(), 4);
+        // A future/huge cursor (client-controlled Last-Event-ID) must
+        // not overflow or mis-report drops — it just sees nothing new.
+        let (missed, got) = feed.read_after(u64::MAX);
+        assert_eq!((missed, got.len()), (0, 0));
+        assert!(feed.wait_after(u64::MAX, Duration::from_millis(5)).1.is_empty());
+    }
+
+    #[test]
+    fn wait_blocks_until_publish_or_timeout() {
+        let feed = EventFeed::new(8);
+        // Timeout path: nothing published.
+        let t0 = Instant::now();
+        let (_, got) = feed.wait_after(0, Duration::from_millis(30));
+        assert!(got.is_empty());
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        // Wake path: a publish from another thread releases the wait.
+        let f2 = feed.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            f2.publish("x".into());
+        });
+        let (_, got) = feed.wait_after(0, Duration::from_secs(5));
+        assert_eq!(got.len(), 1);
+        h.join().unwrap();
+    }
+}

@@ -1,9 +1,13 @@
 //! Integration tests for the versioned control-plane API: envelope
 //! schema + string ids on every endpoint, pagination bounds, HTTP error
-//! mapping (404/405/400), command round-trips (pause → parked at the
-//! next event boundary → resume), legacy-alias byte equivalence with the
-//! v1 bodies, and engine-level command replay through snapshots.
+//! mapping (404/405/400/401/403), command round-trips (pause → parked at
+//! the next event boundary → resume), legacy-alias byte equivalence with
+//! the v1 bodies, engine-level command replay through snapshots,
+//! stored-vs-live byte parity per endpoint (`StoredRun`), `?at_event=`
+//! replay scrubbing (`ReplaySource`), and the SSE push stream
+//! (connect / heartbeat / `Last-Event-ID` resume over a real socket).
 
+use std::io::{Read as _, Write as _};
 use std::time::{Duration, Instant};
 
 use chopt::config::ChoptConfig;
@@ -11,11 +15,13 @@ use chopt::coordinator::{
     AgentEvent, MultiPlatform, Platform, SimEngine, SimSetup, StopAndGoPolicy, StudyManifest,
 };
 use chopt::nsml::SessionId;
+use chopt::storage::{ReplaySource, StoredRun};
 use chopt::trainer::surrogate::SurrogateTrainer;
 use chopt::trainer::Trainer;
 use chopt::util::json::Value as Json;
-use chopt::viz::api::{ApiInbox, PlatformApi};
-use chopt::viz::server::{http_request, Routes, VizServer};
+use chopt::viz::api::{envelope, ApiInbox, ApiQuery, PlatformApi, RunSource};
+use chopt::viz::server::{http_request, http_request_with_headers, Routes, VizServer};
+use chopt::viz::sse::EventFeed;
 
 fn cfg(seed: u64) -> ChoptConfig {
     let text = format!(
@@ -568,4 +574,485 @@ fn engine_session_commands_replay_through_snapshot() {
     let c = key(&restored.into_outcome());
     assert_eq!(a, b, "commands must not break determinism");
     assert_eq!(b, c, "restored run must replay the recorded commands");
+}
+
+// -- the unified RunSource surface: stored, replayed, pushed, authed ----
+
+/// `call` with extra request headers (auth tests).
+fn call_headers(
+    addr: std::net::SocketAddr,
+    inbox: &ApiInbox,
+    api: &mut impl PlatformApi,
+    method: &'static str,
+    path: &str,
+    headers: Vec<(String, String)>,
+    body: &[u8],
+) -> (u16, Json) {
+    let path = path.to_string();
+    let body = body.to_vec();
+    let client = std::thread::spawn(move || {
+        let hdrs: Vec<(&str, &str)> = headers
+            .iter()
+            .map(|(k, v)| (k.as_str(), v.as_str()))
+            .collect();
+        http_request_with_headers(addr, method, &path, &hdrs, &body).unwrap()
+    });
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !client.is_finished() && Instant::now() < deadline {
+        inbox.serve_one(api, Duration::from_millis(20));
+    }
+    let (status, bytes) = client.join().unwrap();
+    let doc = chopt::util::json::parse(&String::from_utf8(bytes).unwrap()).unwrap();
+    (status, doc)
+}
+
+fn temp_run_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("chopt-api-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Every documented single-study query, in both default and parameterized
+/// forms — the per-endpoint parity checklist.
+fn single_queries() -> Vec<ApiQuery> {
+    vec![
+        ApiQuery::Status,
+        ApiQuery::Cluster { window: None },
+        ApiQuery::Cluster {
+            window: Some(3_600.0),
+        },
+        ApiQuery::Sessions {
+            limit: usize::MAX,
+            offset: 0,
+        },
+        ApiQuery::Sessions { limit: 2, offset: 1 },
+        ApiQuery::Leaderboard { k: 5 },
+        ApiQuery::Parallel,
+        ApiQuery::Curves {
+            limit: usize::MAX,
+            offset: 0,
+        },
+        ApiQuery::Curves { limit: 3, offset: 2 },
+    ]
+}
+
+/// The acceptance criterion pin: a run directory served through
+/// `StoredRun` answers every documented v1 query with bytes identical to
+/// the same run served live — envelope included.
+#[test]
+fn stored_run_serves_live_identical_bytes_per_endpoint() {
+    let dir = temp_run_dir("parity");
+    let snap_path = dir.join("snapshot.json");
+    let seed = 61u64;
+    let mut platform = Platform::new(setup(seed), surrogate(seed))
+        .with_event_log(dir.join("events.jsonl"))
+        .unwrap()
+        .with_snapshots(&snap_path, 2_000.0);
+    platform.run_until(6_000.0);
+    platform.snapshot_now().unwrap();
+
+    let stored = StoredRun::open_with(
+        &dir,
+        move |id| Box::new(SurrogateTrainer::new(seed ^ id)) as Box<dyn Trainer>,
+        chopt::trainer::surrogate::default_multi_factory,
+    )
+    .unwrap();
+    assert!(!stored.is_multi());
+    assert_eq!(stored.generation(), platform.generation());
+
+    for q in single_queries() {
+        let live = envelope(platform.generation(), platform.query(&q).unwrap());
+        let replayed = envelope(stored.generation(), stored.query(&q).unwrap());
+        assert_eq!(
+            live.to_string_compact(),
+            replayed.to_string_compact(),
+            "stored body diverged from live for {q:?}"
+        );
+    }
+
+    // The recorded progress stream is exposed (ordered by virtual time)
+    // for SSE replay.
+    let lines = stored.event_lines();
+    assert!(!lines.is_empty(), "single-run events.jsonl must surface");
+    let ts: Vec<f64> = lines
+        .iter()
+        .map(|l| {
+            chopt::util::json::parse(l)
+                .unwrap()
+                .get("t")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0)
+        })
+        .collect();
+    assert!(ts.windows(2).all(|w| w[0] <= w[1]), "event replay must be time-ordered");
+
+    // And the same bytes arrive over a real socket: serve the StoredRun
+    // through the HTTP bridge and compare one endpoint end to end.
+    let server = VizServer::start(0, Routes::new()).unwrap();
+    let inbox = server.enable_api();
+    let addr = server.addr();
+    let mut source = stored;
+    let (s, doc) = get(addr, &inbox, &mut source, "/api/v1/status");
+    assert_eq!(s, 200);
+    assert_eq!(
+        doc.to_string_compact(),
+        envelope(platform.generation(), platform.query(&ApiQuery::Status).unwrap())
+            .to_string_compact(),
+        "HTTP-served stored status must be byte-identical to live"
+    );
+
+    // Stored runs are read-only: commands are refused with an envelope
+    // error naming the live alternative.
+    let (s, doc) = call(
+        addr,
+        &inbox,
+        &mut source,
+        "POST",
+        "/api/v1/commands",
+        br#"{"command": "stop_session", "session": "4294967297"}"#,
+    );
+    assert_eq!(s, 400, "{doc}");
+    let err = doc.get("error").and_then(|v| v.as_str()).unwrap();
+    assert!(err.contains("read-only"), "{err}");
+
+    server.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Multi-study parity: the same checklist over a multi run directory.
+#[test]
+fn stored_multi_run_serves_live_identical_bytes() {
+    let dir = temp_run_dir("parity-multi");
+    let snap_path = dir.join("snapshot.json");
+    let mut platform = MultiPlatform::new(multi_manifest(), multi_trainer)
+        .with_event_logs(&dir)
+        .unwrap()
+        .with_snapshots(&snap_path, 2_000.0);
+    platform.run_until(5_000.0);
+    platform.snapshot_now().unwrap();
+
+    let stored = StoredRun::open_with(
+        &dir,
+        chopt::trainer::surrogate::default_factory,
+        multi_trainer,
+    )
+    .unwrap();
+    assert!(stored.is_multi());
+    assert_eq!(stored.generation(), platform.generation());
+
+    let queries = vec![
+        ApiQuery::Status,
+        ApiQuery::Cluster { window: None },
+        ApiQuery::Cluster {
+            window: Some(1_800.0),
+        },
+        ApiQuery::FairShare,
+        ApiQuery::Studies,
+        ApiQuery::StudySessions {
+            study: "alice".into(),
+            limit: usize::MAX,
+            offset: 0,
+        },
+        ApiQuery::StudyLeaderboard {
+            study: "alice".into(),
+            k: 5,
+        },
+        ApiQuery::StudyParallel {
+            study: "alice".into(),
+        },
+        ApiQuery::StudyCurves {
+            study: "bob".into(),
+            limit: 4,
+            offset: 0,
+        },
+    ];
+    for q in queries {
+        let live = envelope(platform.generation(), platform.query(&q).unwrap());
+        let replayed = envelope(stored.generation(), stored.query(&q).unwrap());
+        assert_eq!(
+            live.to_string_compact(),
+            replayed.to_string_compact(),
+            "stored body diverged from live for {q:?}"
+        );
+    }
+
+    // The merged replay stream is time-ordered and study-labelled.
+    let lines = stored.event_lines();
+    assert!(!lines.is_empty());
+    let docs: Vec<Json> = lines
+        .iter()
+        .map(|l| chopt::util::json::parse(l).unwrap())
+        .collect();
+    assert!(docs
+        .windows(2)
+        .all(|w| w[0].get("t").unwrap().as_f64() <= w[1].get("t").unwrap().as_f64()));
+    assert!(docs
+        .iter()
+        .all(|d| d.get("study").and_then(|v| v.as_str()).is_some()));
+
+    // Scrubbing is single-study only — a clear 400, not a panic.
+    let err = stored
+        .query_at(&ApiQuery::Status, 10)
+        .expect_err("multi scrub must be refused");
+    assert_eq!(err.http_status(), 400);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `?at_event=N` replay scrubbing is deterministic: the same position
+/// yields the same bytes no matter the scrub order, positions cap at the
+/// snapshot's end, and the envelope reports the replayed event count.
+#[test]
+fn at_event_scrubbing_is_deterministic() {
+    let seed = 67u64;
+    let mut engine = SimEngine::new(setup(seed), surrogate(seed));
+    engine.run_until(6_000.0);
+    let snap =
+        chopt::util::json::parse(&engine.snapshot_json().to_string_pretty()).unwrap();
+
+    let rs = ReplaySource::new(snap.clone(), move |id| {
+        Box::new(SurrogateTrainer::new(seed ^ id)) as Box<dyn Trainer>
+    })
+    .unwrap();
+    let target = rs.target();
+    assert_eq!(target, engine.events_processed());
+    let mid = target / 2;
+
+    let (g1, status_mid) = rs.query_at(&ApiQuery::Status, mid).unwrap();
+    assert_eq!(g1, mid);
+    assert_eq!(
+        status_mid.get("events_processed").and_then(|v| v.as_i64()),
+        Some(mid as i64),
+        "scrubbed status must reflect the replayed position"
+    );
+    let (_, sessions_mid) = rs
+        .query_at(&ApiQuery::Sessions { limit: usize::MAX, offset: 0 }, mid)
+        .unwrap();
+
+    // Scrub forward to the end, then back: bytes identical to the first
+    // visit (replay determinism).
+    let (g_end, status_end) = rs.query_at(&ApiQuery::Status, target + 999).unwrap();
+    assert_eq!(g_end, target, "positions cap at the snapshot end");
+    assert_ne!(
+        status_mid.to_string_compact(),
+        status_end.to_string_compact(),
+        "different positions must observe different states"
+    );
+    let (_, status_mid2) = rs.query_at(&ApiQuery::Status, mid).unwrap();
+    let (_, sessions_mid2) = rs
+        .query_at(&ApiQuery::Sessions { limit: usize::MAX, offset: 0 }, mid)
+        .unwrap();
+    assert_eq!(status_mid.to_string_compact(), status_mid2.to_string_compact());
+    assert_eq!(
+        sessions_mid.to_string_compact(),
+        sessions_mid2.to_string_compact()
+    );
+
+    // End-to-end over HTTP through a StoredRun: the envelope's
+    // generated_at_event is the scrub position.
+    let dir = temp_run_dir("scrub");
+    std::fs::write(dir.join("snapshot.json"), snap.to_string_pretty()).unwrap();
+    let mut stored = StoredRun::open_with(
+        &dir,
+        move |id| Box::new(SurrogateTrainer::new(seed ^ id)) as Box<dyn Trainer>,
+        chopt::trainer::surrogate::default_multi_factory,
+    )
+    .unwrap();
+    let server = VizServer::start(0, Routes::new()).unwrap();
+    let inbox = server.enable_api();
+    let addr = server.addr();
+    let (s, doc) = get(
+        addr,
+        &inbox,
+        &mut stored,
+        &format!("/api/v1/status?at_event={mid}"),
+    );
+    assert_eq!(s, 200, "{doc}");
+    assert_eq!(
+        doc.get("generated_at_event").and_then(|v| v.as_str()),
+        Some(mid.to_string().as_str())
+    );
+    assert_eq!(
+        doc.get("data").unwrap().to_string_compact(),
+        status_mid.to_string_compact(),
+        "HTTP scrub must serve the same bytes as the direct ReplaySource"
+    );
+    // A live server cannot rewind: at_event there is a 400.
+    let mut live = Platform::new(setup(seed), surrogate(seed));
+    live.run_until(1_000.0);
+    let (s, doc) = get(addr, &inbox, &mut live, "/api/v1/status?at_event=1");
+    assert_eq!(s, 400, "{doc}");
+
+    server.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Raw SSE client: sends the request (optionally with Last-Event-ID) and
+/// reads until every needle appears or the deadline passes.
+fn read_sse(
+    addr: std::net::SocketAddr,
+    last_event_id: Option<u64>,
+    needles: &[&str],
+    deadline: Duration,
+) -> String {
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    let extra = last_event_id
+        .map(|id| format!("Last-Event-ID: {id}\r\n"))
+        .unwrap_or_default();
+    write!(
+        stream,
+        "GET /api/v1/events HTTP/1.1\r\nHost: localhost\r\nAccept: text/event-stream\r\n{extra}Connection: close\r\n\r\n"
+    )
+    .unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_millis(100)))
+        .unwrap();
+    let end = Instant::now() + deadline;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        let text = String::from_utf8_lossy(&buf);
+        if needles.iter().all(|n| text.contains(n)) || Instant::now() >= end {
+            break;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) => {}
+            Err(_) => break,
+        }
+    }
+    String::from_utf8_lossy(&buf).to_string()
+}
+
+/// The acceptance criterion pin for push: `GET /api/v1/events` streams
+/// real progress events plus heartbeats over a real socket, and a
+/// reconnect with `Last-Event-ID` resumes after the cursor.
+#[test]
+fn sse_stream_pushes_progress_heartbeats_and_resumes() {
+    // Real progress: the platform publishes its event stream into the feed.
+    let feed = EventFeed::new(4_096);
+    let mut platform = Platform::new(setup(71), surrogate(71)).with_progress_feed(feed.clone());
+    platform.run_until(2_000.0);
+    assert!(
+        feed.last_seq() >= 2,
+        "the run must publish progress events (got {})",
+        feed.last_seq()
+    );
+
+    let server = VizServer::start(0, Routes::new()).unwrap();
+    server.serve_events(feed.clone(), Duration::from_millis(80));
+    let addr = server.addr();
+
+    // Fresh connect: SSE headers, the first recorded event, and a
+    // heartbeat once the feed idles.
+    let text = read_sse(
+        addr,
+        None,
+        &["text/event-stream", "id: 1\ndata: ", ": heartbeat"],
+        Duration::from_secs(10),
+    );
+    assert!(text.contains("text/event-stream"), "{text}");
+    assert!(text.contains("id: 1\ndata: "), "{text}");
+    assert!(
+        text.contains(r#""ev""#),
+        "frames must carry the progress JSON records: {text}"
+    );
+    assert!(text.contains(": heartbeat"), "{text}");
+
+    // Reconnect with Last-Event-ID: the stream resumes after the cursor
+    // instead of replaying from the start.
+    let text = read_sse(addr, Some(1), &["id: 2\ndata: "], Duration::from_secs(10));
+    assert!(text.contains("id: 2\ndata: "), "{text}");
+    assert!(
+        !text.contains("id: 1\ndata: "),
+        "resumed stream must not replay event 1: {text}"
+    );
+
+    // A fresh progress event published mid-stream is pushed to an open
+    // connection (no polling involved).
+    let before = feed.last_seq();
+    let opened = std::thread::spawn(move || {
+        read_sse(
+            addr,
+            Some(before),
+            &[&format!("id: {}\ndata: ", before + 1)],
+            Duration::from_secs(10),
+        )
+    });
+    std::thread::sleep(Duration::from_millis(150));
+    feed.publish_json(&Json::obj().with("ev", Json::Str("poke".into())));
+    let text = opened.join().unwrap();
+    assert!(
+        text.contains(&format!("id: {}\ndata: ", before + 1)),
+        "published event must be pushed to the open stream: {text}"
+    );
+
+    server.stop();
+}
+
+/// Command auth: with a token configured, the read side stays open while
+/// POST /api/v1/commands answers 401 (missing credentials) / 403 (wrong
+/// token) in the envelope error format, and the right token goes
+/// through to the engine loop.
+#[test]
+fn command_surface_enforces_bearer_token() {
+    let mut platform = Platform::new(setup(73), surrogate(73));
+    platform.run_until(3_000.0);
+    let server = VizServer::start(0, Routes::new()).unwrap();
+    server.set_api_token(Some("sekrit".into()));
+    let inbox = server.enable_api();
+    let addr = server.addr();
+
+    // Reads are open — no credentials needed.
+    let (s, doc) = get(addr, &inbox, &mut platform, "/api/v1/status");
+    expect_enveloped(s, &doc, "status without credentials");
+
+    let sid = platform
+        .engine()
+        .active_agents()
+        .next()
+        .unwrap()
+        .pools
+        .live()[0];
+    let body = format!(r#"{{"command": "pause_session", "session": "{}"}}"#, sid.0);
+
+    // Missing credentials → 401, envelope-shaped.
+    let (s, doc) = call(addr, &inbox, &mut platform, "POST", "/api/v1/commands", body.as_bytes());
+    assert_eq!(s, 401, "{doc}");
+    assert_eq!(doc.get("schema_version").and_then(|v| v.as_f64()), Some(1.0));
+    assert!(doc.get("error").and_then(|v| v.as_str()).unwrap().contains("Bearer"));
+
+    // Wrong token → 403.
+    let (s, doc) = call_headers(
+        addr,
+        &inbox,
+        &mut platform,
+        "POST",
+        "/api/v1/commands",
+        vec![("Authorization".into(), "Bearer wrong".into())],
+        body.as_bytes(),
+    );
+    assert_eq!(s, 403, "{doc}");
+    assert!(doc.get("error").is_some());
+
+    // Right token → the command reaches the engine and is acked.
+    let (s, doc) = call_headers(
+        addr,
+        &inbox,
+        &mut platform,
+        "POST",
+        "/api/v1/commands",
+        vec![("Authorization".into(), "Bearer sekrit".into())],
+        body.as_bytes(),
+    );
+    let ack = expect_enveloped(s, &doc, "authorized pause");
+    assert_eq!(ack.get("applied").and_then(|v| v.as_bool()), Some(true));
+
+    server.stop();
 }

@@ -4,7 +4,7 @@
 //! stepping, cross-study Stop-and-Go preemption (pauses, never kills),
 //! online study submission, and multi-study snapshot/restore.
 
-use chopt::cluster::Owner;
+use chopt::cluster::{Cluster, Owner};
 use chopt::config::ChoptConfig;
 use chopt::coordinator::{
     run_sim, Agent, AgentEvent, MultiPlatform, Pool, SimSetup, Step, StudyManifest,
@@ -255,6 +255,7 @@ fn online_study_submission_runs() {
         quota: 6,
         priority: 1.0,
         submit_at: 0.0,
+        failures: Vec::new(),
     };
     assert_eq!(sched.submit_study(oversized, 2_500.0), None);
 
@@ -264,6 +265,7 @@ fn online_study_submission_runs() {
         quota: 4,
         priority: 1.0,
         submit_at: 0.0,
+        failures: Vec::new(),
     };
     assert_eq!(sched.submit_study(fits, 2_500.0), Some(2_500.0));
     sched.run_to_completion();
@@ -304,6 +306,7 @@ fn multi_study_snapshot_restore_is_deterministic() {
                 quota: 2,
                 priority: 1.0,
                 submit_at: 0.0,
+                failures: Vec::new(),
             },
             9_000.0,
         )
@@ -323,6 +326,7 @@ fn multi_study_snapshot_restore_is_deterministic() {
                 quota: 2,
                 priority: 1.0,
                 submit_at: 0.0,
+                failures: Vec::new(),
             },
             9_000.0,
         )
@@ -561,4 +565,121 @@ fn multi_platform_streams_and_restores() {
     assert_eq!(a.events_processed, b.events_processed);
 
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Failure injection for the multi-study scheduler (manifest
+/// `failures: [t, ...]` per study): the named study's agent crashes at
+/// the first master tick past `t` — and, because the crash consumes no
+/// random draws and frees quota only through the ordinary fair-share
+/// pass, a failure injected into study A never perturbs study B's RNG
+/// stream (B's run is bit-identical with and without A's crash under
+/// hard isolation).  The failure is part of the manifest, so a snapshot
+/// taken after the crash restores deterministically too.
+#[test]
+fn injected_failure_never_perturbs_peer_study() {
+    let manifest = |failures: &str| {
+        let text = format!(
+            r#"{{"cluster_gpus": 8, "borrow": false, "studies": [
+                {{"name": "alice", "quota": 4, {failures} "config": {}}},
+                {{"name": "bob", "quota": 4, "config": {}}}
+            ]}}"#,
+            config_json(10, 12, 4, 100),
+            config_json(10, 8, 4, 101)
+        );
+        StudyManifest::from_json_str(&text).unwrap()
+    };
+
+    let run = |m: StudyManifest| {
+        let mut sched = StudyScheduler::new(m, multi_factory());
+        sched.run_to_completion();
+        sched.into_outcome()
+    };
+    let clean = run(manifest(""));
+    let failed = run(manifest(r#""failures": [2000],"#));
+
+    // Alice crashed in the failure run (and only there).
+    let alice = failed.study("alice").unwrap().agent.as_ref().unwrap();
+    assert!(
+        alice.events.contains(&AgentEvent::Terminated("agent_failure")),
+        "failure record must crash alice's agent"
+    );
+    assert!(alice.finished);
+    assert!(!clean
+        .study("alice")
+        .unwrap()
+        .agent
+        .as_ref()
+        .unwrap()
+        .events
+        .contains(&AgentEvent::Terminated("agent_failure")));
+
+    // Bob's run is bit-identical either way: the injected failure never
+    // touched his RNG stream or decisions.
+    let bob_clean = clean.study("bob").unwrap().agent.as_ref().unwrap();
+    let bob_failed = failed.study("bob").unwrap().agent.as_ref().unwrap();
+    assert_eq!(agent_key(bob_clean), agent_key(bob_failed));
+    let measures = |a: &Agent| -> Vec<String> {
+        let mut ss: Vec<_> = a.sessions.values().collect();
+        ss.sort_by_key(|s| s.id);
+        ss.iter()
+            .map(|s| {
+                format!(
+                    "{}:{}:{:?}",
+                    s.id,
+                    s.epochs,
+                    s.best_measure(chopt::config::Order::Descending)
+                )
+            })
+            .collect()
+    };
+    assert_eq!(measures(bob_clean), measures(bob_failed));
+
+    // The failure replays: snapshot after the crash, restore, continue —
+    // identical outcome.
+    let mut original = StudyScheduler::new(manifest(r#""failures": [2000],"#), multi_factory());
+    original.run_until(8_000.0);
+    assert!(original.study("alice").unwrap().done(), "crash lands well before t=8000");
+    let snap = original.snapshot_json();
+    let snap = chopt::util::json::parse(&snap.to_string_pretty()).unwrap();
+    let mut restored = StudyScheduler::restore(&snap, multi_factory()).unwrap();
+    assert_eq!(restored.events_processed(), original.events_processed());
+    original.run_to_completion();
+    restored.run_to_completion();
+    let (a, b) = (original.into_outcome(), restored.into_outcome());
+    assert_eq!(a.events_processed, b.events_processed);
+    assert_eq!(a.end_time, b.end_time);
+}
+
+/// Cross-study reclaim picks the most recently granted live session
+/// first (LIFO over the live pool), deterministically — no RNG draw —
+/// so a preemption never perturbs the victim study's decision stream.
+#[test]
+fn preemption_pauses_most_recent_sessions_first() {
+    let mut agent = Agent::new(1, cfg(-1, 40, 4, 77), Box::new(SurrogateTrainer::new(7)));
+    let mut cluster = Cluster::new(4);
+    let mut reqs = Vec::new();
+    agent.fill(&mut cluster, 0.0, &mut reqs);
+    let live = agent.pools.live().to_vec();
+    assert_eq!(live.len(), 4, "fill should launch to the 4-GPU target");
+
+    agent.preempt_pause_to_target(2, &mut cluster, 10.0, &mut reqs);
+
+    // Victims are the most recently launched sessions, newest first.
+    let preempted: Vec<_> = agent
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            AgentEvent::Preempted(sid, Pool::Stop) => Some(*sid),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(preempted, vec![live[3], live[2]]);
+    // Survivors are the oldest grants, order preserved.
+    assert_eq!(agent.pools.live(), &live[..2]);
+    // Victims sit in the stop pool with revival priority.
+    for sid in &preempted {
+        assert_eq!(agent.pools.locate(*sid), Some(Pool::Stop));
+        assert!(agent.pools.is_preempted(*sid));
+    }
+    agent.pools.check_invariants().unwrap();
 }
