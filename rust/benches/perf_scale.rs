@@ -6,7 +6,7 @@
 //!
 //!     cargo bench --bench perf_scale
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use chopt::cluster::{Cluster, Owner};
 use chopt::config::ChoptConfig;
@@ -16,6 +16,7 @@ use chopt::coordinator::{
 use chopt::trainer::surrogate::SurrogateTrainer;
 use chopt::trainer::Trainer;
 use chopt::util::bench::{BenchJson, Bencher};
+use chopt::viz::server::{http_request, Routes, ServerConfig, VizServer};
 
 const STUDIES: usize = 64;
 const CLUSTER_GPUS: usize = 128;
@@ -131,7 +132,7 @@ fn main() {
         .metric("live_series_pts", live_pts as f64);
 
     // -- C. live-document render cost mid-run ------------------------------
-    let platform = MultiPlatform::from_scheduler(half);
+    let mut platform = MultiPlatform::from_scheduler(half);
     let names: Vec<String> = platform
         .scheduler()
         .studies()
@@ -193,8 +194,116 @@ fn main() {
         .metric("accounting_recompute_ns", r_re.mean_secs() * 1e9)
         .metric("accounting_speedup_x", speedup);
 
+    // -- E. concurrent read-side throughput: cached vs uncached ------------
+    // The same mid-run 64-study platform serves its heaviest /api/v1
+    // documents over real sockets to 8 concurrent clients — once with
+    // the response cache disabled (every GET renders through the
+    // single-threaded engine bridge) and once with it on (everything
+    // after the warm pass is answered by pool workers from the
+    // generation-keyed cache).  The generation is fixed between ticks,
+    // exactly the regime a dashboard fans out in.
+    let paths: Vec<String> = vec![
+        "/api/v1/fair_share".to_string(),
+        "/api/v1/status".to_string(),
+        format!("/api/v1/studies/{}/sessions", names[0]),
+        format!("/api/v1/studies/{}/leaderboard?k=10", names[1]),
+        format!("/api/v1/studies/{}/curves?limit=8&offset=0", names[2]),
+        format!("/api/v1/studies/{}/parallel", names[3]),
+    ];
+    let (uncached_rps, bodies_uncached) = read_side_rps(&mut platform, &paths, 0);
+    let (cached_rps, bodies_cached) = read_side_rps(&mut platform, &paths, 32 << 20);
+    assert_eq!(
+        bodies_uncached, bodies_cached,
+        "cached responses must be byte-identical to freshly rendered ones"
+    );
+    let read_speedup = cached_rps / uncached_rps.max(1e-9);
+    println!(
+        "read side (8 clients, {} paths): uncached {uncached_rps:.0} req/s, \
+         cached {cached_rps:.0} req/s -> {read_speedup:.1}x",
+        paths.len()
+    );
+    assert!(
+        read_speedup >= 5.0,
+        "cached repeat-GET throughput must beat uncached by >=5x, got {read_speedup:.1}x"
+    );
+    out.metric("read_paths", paths.len() as f64)
+        .metric("read_uncached_rps", uncached_rps)
+        .metric("read_cached_rps", cached_rps)
+        .metric("read_cache_speedup_x", read_speedup);
+
     match out.save() {
         Ok(path) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("could not write bench json: {e}"),
     }
+}
+
+/// Serve `paths` to 8 concurrent clients through a worker-pool server
+/// with the given cache budget; returns (requests/sec, the canonical
+/// body per path).  Every response is asserted byte-identical to the
+/// warm pass's rendering, so the cached run proves it serves the same
+/// bytes the uncached run renders.
+fn read_side_rps(
+    platform: &mut MultiPlatform,
+    paths: &[String],
+    cache_bytes: usize,
+) -> (f64, Vec<Vec<u8>>) {
+    const CLIENTS: usize = 8;
+    const PER_CLIENT: usize = 40;
+    let server = VizServer::start_with(
+        0,
+        Routes::new(),
+        ServerConfig {
+            workers: CLIENTS,
+            queue: 256,
+            cache_bytes,
+        },
+    )
+    .unwrap();
+    let inbox = server.enable_api();
+    platform.set_generation_gauge(inbox.generation_gauge());
+    let addr = server.addr();
+
+    // Warm pass: render each path once and keep the canonical bodies.
+    let mut canonical: Vec<Vec<u8>> = Vec::new();
+    for p in paths {
+        let pp = p.clone();
+        let client = std::thread::spawn(move || http_request(addr, "GET", &pp, b"").unwrap());
+        while !client.is_finished() {
+            inbox.serve_one(platform, Duration::from_millis(2));
+        }
+        let (status, body) = client.join().unwrap();
+        assert_eq!(status, 200, "warm GET {p} failed");
+        canonical.push(body);
+    }
+
+    let t = Instant::now();
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let paths = paths.to_vec();
+            let canonical = canonical.clone();
+            std::thread::spawn(move || {
+                for i in 0..PER_CLIENT {
+                    let k = (c + i) % paths.len();
+                    let (status, body) = http_request(addr, "GET", &paths[k], b"").unwrap();
+                    assert_eq!(status, 200, "{}", paths[k]);
+                    assert_eq!(
+                        body, canonical[k],
+                        "response bytes diverged from the rendered body for {}",
+                        paths[k]
+                    );
+                }
+            })
+        })
+        .collect();
+    // The engine thread pumps the bridge while clients are in flight;
+    // with the cache on, workers answer without ever reaching it.
+    while handles.iter().any(|h| !h.is_finished()) {
+        inbox.serve_one(platform, Duration::from_millis(2));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t.elapsed().as_secs_f64();
+    server.stop();
+    ((CLIENTS * PER_CLIENT) as f64 / wall.max(1e-9), canonical)
 }

@@ -18,6 +18,7 @@
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::config::ChoptConfig;
@@ -76,6 +77,9 @@ pub struct Platform<'t> {
     /// for the publish loops).
     lb_cache: RefCell<Option<LbCache>>,
     done_rows: RefCell<DoneRows>,
+    /// HTTP read-side generation gauge (see
+    /// [`Platform::set_generation_gauge`]).
+    generation_gauge: Option<Arc<AtomicU64>>,
     /// Progress events emitted over the platform's lifetime.
     pub progress_events: u64,
 }
@@ -100,8 +104,20 @@ impl<'t> Platform<'t> {
             done_drained: 0,
             lb_cache: RefCell::new(None),
             done_rows: RefCell::new(DoneRows::default()),
+            generation_gauge: None,
             progress_events: 0,
         }
+    }
+
+    /// Publish the engine's processed-event count into `gauge` after
+    /// every advance.  The HTTP layer's response cache keys live entries
+    /// on this gauge (`ApiInbox::generation_gauge`); publishing from
+    /// inside the advance — not just when the engine loop next serves
+    /// the inbox — means a GET racing an advance can never be answered
+    /// with a pre-advance cached body.
+    pub fn set_generation_gauge(&mut self, gauge: Arc<AtomicU64>) {
+        gauge.store(self.engine.events_processed(), Ordering::Release);
+        self.generation_gauge = Some(gauge);
     }
 
     /// Append structured progress events to a JSONL log at `path`.
@@ -253,6 +269,9 @@ impl<'t> Platform<'t> {
         self.drain_progress();
         if let Some(log) = &mut self.event_log {
             let _ = log.flush();
+        }
+        if let Some(gauge) = &self.generation_gauge {
+            gauge.store(self.engine.events_processed(), Ordering::Release);
         }
         self.maybe_snapshot();
     }
@@ -613,6 +632,9 @@ pub struct MultiPlatform<'t> {
     /// leaderboard cache): a dashboard polling N tenants between events
     /// re-renders nothing.
     study_lb_cache: RefCell<HashMap<String, LbCache>>,
+    /// HTTP read-side generation gauge (see
+    /// [`MultiPlatform::set_generation_gauge`]).
+    generation_gauge: Option<Arc<AtomicU64>>,
     /// Progress events emitted over the platform's lifetime.
     pub progress_events: u64,
 }
@@ -636,8 +658,17 @@ impl<'t> MultiPlatform<'t> {
             snapshot_every: 3600.0,
             last_snapshot_t: 0.0,
             study_lb_cache: RefCell::new(HashMap::new()),
+            generation_gauge: None,
             progress_events: 0,
         }
+    }
+
+    /// Publish the scheduler's processed-event count into `gauge` after
+    /// every advance — same contract as
+    /// [`Platform::set_generation_gauge`].
+    pub fn set_generation_gauge(&mut self, gauge: Arc<AtomicU64>) {
+        gauge.store(self.sched.events_processed(), Ordering::Release);
+        self.generation_gauge = Some(gauge);
     }
 
     /// Stream per-study progress into `dir/events-<study>.jsonl`.
@@ -786,6 +817,9 @@ impl<'t> MultiPlatform<'t> {
         self.drain_progress();
         for log in self.logs.values_mut() {
             let _ = log.flush();
+        }
+        if let Some(gauge) = &self.generation_gauge {
+            gauge.store(self.sched.events_processed(), Ordering::Release);
         }
         self.maybe_snapshot();
     }

@@ -12,6 +12,7 @@
 //!                  HTTP server
 
 use std::collections::HashSet;
+use std::sync::Arc;
 use std::time::Duration;
 
 use chopt::config::ChoptConfig;
@@ -84,6 +85,23 @@ fn cli() -> Command {
                     "api-token",
                     None,
                     "bearer token for POST /api/v1/commands (or CHOPT_API_TOKEN; reads stay open)",
+                )
+                .opt("http-workers", Some("8"), "HTTP worker threads (request concurrency)")
+                .opt(
+                    "http-queue",
+                    Some("128"),
+                    "pending-connection queue depth (beyond it, connections get 503)",
+                )
+                .opt(
+                    "cache-mb",
+                    Some("32"),
+                    "response-cache budget in MiB (0 disables caching; ETags stay on)",
+                )
+                .opt(
+                    "out",
+                    None,
+                    "directory for the SSE history log (--live; enables /api/v1/events?since=N \
+                     below the ring's retention window)",
                 ),
         )
 }
@@ -504,6 +522,34 @@ fn api_token(m: &chopt::util::cli::Matches) -> Option<String> {
         .filter(|s| !s.is_empty())
 }
 
+/// Worker-pool and response-cache sizing from the serve flags.
+fn server_config(m: &chopt::util::cli::Matches) -> viz::server::ServerConfig {
+    let defaults = viz::server::ServerConfig::default();
+    viz::server::ServerConfig {
+        workers: m.get_usize("http-workers").unwrap_or(defaults.workers).max(1),
+        queue: m.get_usize("http-queue").unwrap_or(defaults.queue).max(1),
+        cache_bytes: m
+            .get_usize("cache-mb")
+            .map(|mb| mb.saturating_mul(1 << 20))
+            .unwrap_or(defaults.cache_bytes),
+    }
+}
+
+/// The progress feed for a live serve: plain ring buffer, or — when
+/// `--out` names a directory — a ring mirrored to `<out>/events.jsonl`
+/// so `?since=<seq>` can replay records the ring already evicted.
+fn live_feed(m: &chopt::util::cli::Matches) -> anyhow::Result<Arc<EventFeed>> {
+    match m.get("out") {
+        Some(dir) => {
+            let path = format!("{dir}/events.jsonl");
+            let feed = EventFeed::with_history(chopt::viz::sse::DEFAULT_FEED_CAPACITY, &path)?;
+            println!("SSE history log: {path}");
+            Ok(feed)
+        }
+        None => Ok(EventFeed::new(chopt::viz::sse::DEFAULT_FEED_CAPACITY)),
+    }
+}
+
 fn cmd_serve(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
     let port: u16 = m.get_usize("port").unwrap_or(8787) as u16;
     if m.flag("live") {
@@ -523,7 +569,8 @@ fn cmd_serve(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
     for line in stored.event_lines() {
         feed.publish(line);
     }
-    let server = viz::server::VizServer::start(port, viz::server::Routes::new())?;
+    let server =
+        viz::server::VizServer::start_with(port, viz::server::Routes::new(), server_config(m))?;
     server.serve_events(feed.clone(), SSE_HEARTBEAT);
     let inbox = server.enable_api();
     println!(
@@ -566,14 +613,19 @@ fn cmd_serve_live(m: &chopt::util::cli::Matches, port: u16) -> anyhow::Result<()
     let throttle = std::time::Duration::from_millis(m.get_u64("throttle-ms").unwrap_or(250));
     let token = api_token(m);
 
-    let feed = EventFeed::new(chopt::viz::sse::DEFAULT_FEED_CAPACITY);
+    let feed = live_feed(m)?;
     let mut platform = Platform::new(SimSetup::single(cfg, gpus), surrogate::default_factory)
         .with_progress_feed(feed.clone());
-    let server = viz::server::VizServer::start(port, viz::server::Routes::new())?;
+    let server =
+        viz::server::VizServer::start_with(port, viz::server::Routes::new(), server_config(m))?;
     server.serve_events(feed, SSE_HEARTBEAT);
     let authed = token.is_some();
     server.set_api_token(token);
     let inbox = server.enable_api();
+    // The platform publishes its generation into the server's cache
+    // gauge after every advance, so cached bodies from the previous
+    // tick can never be served once the engine has moved on.
+    platform.set_generation_gauge(inbox.generation_gauge());
     println!(
         "live run on http://{}/ — GET /api/v1/{{status,cluster,sessions,leaderboard,parallel,curves}}, /api/v1/events (SSE), POST /api/v1/commands{}",
         server.addr(),
@@ -609,13 +661,16 @@ fn cmd_serve_live_multi(m: &chopt::util::cli::Matches, port: u16) -> anyhow::Res
     let throttle = std::time::Duration::from_millis(m.get_u64("throttle-ms").unwrap_or(250));
     let token = api_token(m);
 
-    let feed = EventFeed::new(chopt::viz::sse::DEFAULT_FEED_CAPACITY);
+    let feed = live_feed(m)?;
     let mut platform = MultiPlatform::new(manifest, multi_trainer).with_progress_feed(feed.clone());
-    let server = viz::server::VizServer::start(port, viz::server::Routes::new())?;
+    let server =
+        viz::server::VizServer::start_with(port, viz::server::Routes::new(), server_config(m))?;
     server.serve_events(feed, SSE_HEARTBEAT);
     let authed = token.is_some();
     server.set_api_token(token);
     let inbox = server.enable_api();
+    // Same generation-gauge wiring as the single-study live serve.
+    platform.set_generation_gauge(inbox.generation_gauge());
     println!(
         "live multi-study run on http://{}/ — GET /api/v1/{{status,cluster,fair_share,studies}}, /api/v1/studies/<name>/..., /api/v1/events (SSE), POST /api/v1/commands{}",
         server.addr(),

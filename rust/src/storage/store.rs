@@ -424,6 +424,14 @@ impl RunSource for StoredRun {
             )),
         }
     }
+
+    /// A stored run's documents can never change: the HTTP response
+    /// cache pins its entries, making the whole read surface
+    /// cache-resident after first touch.  (`ReplaySource` must *not*
+    /// claim this — scrubbing moves its generation.)
+    fn fixed_generation(&self) -> bool {
+        true
+    }
 }
 
 impl CommandSink for StoredRun {

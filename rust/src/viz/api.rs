@@ -44,7 +44,9 @@
 //! the engine loop never sees unauthorized commands and never blocks on
 //! a slow stream consumer.
 
-use std::sync::mpsc;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::util::json::Value as Json;
@@ -438,6 +440,15 @@ pub trait RunSource {
             "this run source does not support ?at_event — serve a stored run to scrub".into(),
         ))
     }
+
+    /// True when this source's generation can never change (a stored
+    /// run).  The response cache **pins** such entries: they stay valid
+    /// without consulting the generation gauge, so the whole read
+    /// surface becomes cache-resident after first touch.  `ReplaySource`
+    /// stays `false` — scrubbing moves its generation.
+    fn fixed_generation(&self) -> bool {
+        false
+    }
 }
 
 /// The **command side** of the surface: applied by the engine loop
@@ -479,48 +490,363 @@ pub fn error_envelope(generation: Option<u64>, message: &str) -> Json {
         .with("error", Json::Str(message.to_string()))
 }
 
+// ---------------------------------------------------------------------
+// Read-side response cache
+// ---------------------------------------------------------------------
+
+/// Sentinel for "no generation published yet" in the [`ReadState`]
+/// gauge.  Until the engine loop (or a platform wired via
+/// `set_generation_gauge`) publishes a real value, HTTP workers bypass
+/// the generation-keyed half of the cache rather than guess.
+pub const GEN_UNKNOWN: u64 = u64::MAX;
+
+/// Key of one cached rendered response.  Live entries key on
+/// `(path, query, generation, epoch)` — a generation bump or an applied
+/// command changes the key, so invalidation is implicit.  `pinned`
+/// entries (`?at_event=` scrubs and fixed-generation stored runs) ignore
+/// both counters: their bytes can never change for that path+query.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+struct CacheKey {
+    path: String,
+    query: String,
+    generation: u64,
+    epoch: u64,
+    pinned: bool,
+}
+
+impl CacheKey {
+    fn live(path: &str, query: &str, generation: u64, epoch: u64) -> CacheKey {
+        CacheKey {
+            path: path.to_string(),
+            query: query.to_string(),
+            generation,
+            epoch,
+            pinned: false,
+        }
+    }
+
+    fn pinned(path: &str, query: &str) -> CacheKey {
+        CacheKey {
+            path: path.to_string(),
+            query: query.to_string(),
+            generation: 0,
+            epoch: 0,
+            pinned: true,
+        }
+    }
+}
+
+struct CacheEntry {
+    body: Arc<Vec<u8>>,
+    etag: String,
+    last_used: u64,
+}
+
+/// Size-bounded LRU of rendered response bodies.  Bodies are `Arc`ed so
+/// a hit is a refcount bump, not a copy; eviction is by total body
+/// bytes, so many distinct param combinations cannot grow the map
+/// without bound.  `max_bytes == 0` disables caching entirely.
+struct ResponseCache {
+    map: HashMap<CacheKey, CacheEntry>,
+    max_bytes: usize,
+    used_bytes: usize,
+    tick: u64,
+    hits: u64,
+    insertions: u64,
+}
+
+impl ResponseCache {
+    fn new(max_bytes: usize) -> ResponseCache {
+        ResponseCache {
+            map: HashMap::new(),
+            max_bytes,
+            used_bytes: 0,
+            tick: 0,
+            hits: 0,
+            insertions: 0,
+        }
+    }
+
+    fn get(&mut self, key: &CacheKey) -> Option<(Arc<Vec<u8>>, String)> {
+        self.tick += 1;
+        let tick = self.tick;
+        let entry = self.map.get_mut(key)?;
+        entry.last_used = tick;
+        self.hits += 1;
+        Some((entry.body.clone(), entry.etag.clone()))
+    }
+
+    fn insert(&mut self, key: CacheKey, body: Arc<Vec<u8>>, etag: String) {
+        if self.max_bytes == 0 || body.len() > self.max_bytes {
+            return;
+        }
+        self.tick += 1;
+        if let Some(old) = self.map.remove(&key) {
+            self.used_bytes -= old.body.len();
+        }
+        self.used_bytes += body.len();
+        self.insertions += 1;
+        self.map.insert(
+            key,
+            CacheEntry {
+                body,
+                etag,
+                last_used: self.tick,
+            },
+        );
+        // LRU eviction by total bytes.  The scan is O(entries), but
+        // eviction only runs when an insert crosses the bound — rare
+        // next to lookups, and the map stays small (generation bumps
+        // orphan old entries, which age out here).
+        while self.used_bytes > self.max_bytes {
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    if let Some(e) = self.map.remove(&k) {
+                        self.used_bytes -= e.body.len();
+                    }
+                }
+                None => break,
+            }
+        }
+    }
+}
+
+/// Strong ETag for a v1 response: FNV-1a 64 over the cache-key fields,
+/// with the generation visible in the suffix.  Deterministic across
+/// restarts — an etag curl'd from a stored run keeps validating after
+/// the server is restarted on the same directory.
+pub fn etag_for(path: &str, query: &str, generation: u64, epoch: u64) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    eat(path.as_bytes());
+    eat(&[0]);
+    eat(query.as_bytes());
+    eat(&[0]);
+    eat(&generation.to_le_bytes());
+    eat(&epoch.to_le_bytes());
+    format!("\"{h:016x}-{generation}\"")
+}
+
+/// Read-side state shared between the HTTP workers and the engine loop:
+/// the generation gauge, the command epoch, and the response cache.
+///
+/// * **generation** — the source's processed-event count, published by
+///   the engine loop whenever it answers or starts serving, and by the
+///   platforms after every advance (`set_generation_gauge`), so workers
+///   can key cache lookups without a round trip to the engine thread.
+/// * **epoch** — bumped on every successfully applied command.  Some
+///   commands (`set_quota`) mutate scheduler state without consuming an
+///   engine event, so generation alone would serve stale bytes on an
+///   idle engine; folding the epoch into live keys invalidates those
+///   entries too.
+/// * **cache** — the size-bounded LRU of rendered bodies.
+pub struct ReadState {
+    generation: Arc<AtomicU64>,
+    epoch: AtomicU64,
+    cache: Mutex<ResponseCache>,
+}
+
+impl ReadState {
+    pub fn new(cache_bytes: usize) -> Arc<ReadState> {
+        Arc::new(ReadState {
+            generation: Arc::new(AtomicU64::new(GEN_UNKNOWN)),
+            epoch: AtomicU64::new(0),
+            cache: Mutex::new(ResponseCache::new(cache_bytes)),
+        })
+    }
+
+    /// The gauge handle platforms publish into
+    /// (`Platform::set_generation_gauge`).
+    pub fn generation_gauge(&self) -> Arc<AtomicU64> {
+        self.generation.clone()
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
+    pub fn publish_generation(&self, generation: u64) {
+        self.generation.store(generation, Ordering::Release);
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    fn bump_epoch(&self) {
+        self.epoch.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Worker-side lookup: the pinned key first (scrub targets and
+    /// stored-run bodies never go stale), then the live key at the
+    /// current gauge — skipped while the gauge is still unknown.
+    pub fn lookup(&self, path: &str, query: &str) -> Option<(Arc<Vec<u8>>, String)> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(hit) = cache.get(&CacheKey::pinned(path, query)) {
+            return Some(hit);
+        }
+        let generation = self.generation();
+        if generation == GEN_UNKNOWN {
+            return None;
+        }
+        let epoch = self.epoch();
+        cache.get(&CacheKey::live(path, query, generation, epoch))
+    }
+
+    /// Worker-side insert after a fresh render, keyed by the reply's
+    /// authoritative [`CacheStamp`] (not the gauge — the engine may have
+    /// advanced while the reply was in flight).  Returns the entry's
+    /// ETag; the ETag is produced even when caching is disabled, so
+    /// `If-None-Match` keeps working with `--cache-mb 0`.
+    pub fn store(&self, path: &str, query: &str, stamp: &CacheStamp, body: Arc<Vec<u8>>) -> String {
+        let (key, etag) = if stamp.pinned {
+            (
+                CacheKey::pinned(path, query),
+                etag_for(path, query, stamp.generation, 0),
+            )
+        } else {
+            (
+                CacheKey::live(path, query, stamp.generation, stamp.epoch),
+                etag_for(path, query, stamp.generation, stamp.epoch),
+            )
+        };
+        self.cache.lock().unwrap().insert(key, body, etag.clone());
+        etag
+    }
+
+    /// Cache counters for tests and benches:
+    /// `(entries, used_bytes, hits, insertions)`.
+    pub fn cache_stats(&self) -> (usize, usize, u64, u64) {
+        let cache = self.cache.lock().unwrap();
+        (cache.map.len(), cache.used_bytes, cache.hits, cache.insertions)
+    }
+}
+
+/// Cache metadata the engine loop stamps onto successful query replies:
+/// the generation/epoch the body was rendered at, and whether the entry
+/// is immune to both (`pinned` — deterministic `?at_event=` scrubs and
+/// fixed-generation stored runs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStamp {
+    pub generation: u64,
+    pub epoch: u64,
+    pub pinned: bool,
+}
+
+/// One answered API request travelling back over the bridge.
+pub struct ApiReply {
+    pub status: u16,
+    pub body: Json,
+    /// Present only on cacheable (status-200 query) replies.
+    pub stamp: Option<CacheStamp>,
+}
+
 /// One in-flight HTTP API request: the parsed call plus the reply slot
 /// the connection thread blocks on.
 pub struct ApiRequest {
     pub call: ApiCall,
-    pub reply: mpsc::Sender<(u16, Json)>,
+    pub reply: mpsc::Sender<ApiReply>,
 }
 
 /// The engine-loop end of the API bridge (`VizServer::enable_api`).
 pub struct ApiInbox {
     rx: mpsc::Receiver<ApiRequest>,
+    state: Arc<ReadState>,
 }
 
 impl ApiInbox {
-    pub(crate) fn new(rx: mpsc::Receiver<ApiRequest>) -> ApiInbox {
-        ApiInbox { rx }
+    pub(crate) fn new(rx: mpsc::Receiver<ApiRequest>, state: Arc<ReadState>) -> ApiInbox {
+        ApiInbox { rx, state }
     }
 
-    fn answer(req: ApiRequest, api: &mut impl PlatformApi) {
+    /// The generation gauge the response cache keys live entries on.
+    /// Wire it with `Platform::set_generation_gauge` so advances update
+    /// cache keys immediately instead of at the next serve call — a GET
+    /// racing an advance must never see a pre-advance body.
+    pub fn generation_gauge(&self) -> Arc<AtomicU64> {
+        self.state.generation_gauge()
+    }
+
+    fn error_reply(generation: u64, e: ApiError) -> ApiReply {
+        ApiReply {
+            status: e.http_status(),
+            body: error_envelope(Some(generation), e.message()),
+            stamp: None,
+        }
+    }
+
+    fn answer(&self, req: ApiRequest, api: &mut impl PlatformApi) {
         // Scrubbed queries report the replayed event count as their
         // generation; everything else reports the source's current one.
-        let outcome = match &req.call {
-            ApiCall::Query(q) => api.query(q).map(|d| (api.generation(), d)),
-            ApiCall::QueryAt(q, at) => api.query_at(q, *at),
-            ApiCall::Command(c) => api.command(c).map(|d| (api.generation(), d)),
+        let reply = match &req.call {
+            ApiCall::Query(q) => match api.query(q) {
+                Ok(data) => {
+                    let generation = api.generation();
+                    ApiReply {
+                        status: 200,
+                        body: envelope(generation, data),
+                        stamp: Some(CacheStamp {
+                            generation,
+                            epoch: self.state.epoch(),
+                            pinned: api.fixed_generation(),
+                        }),
+                    }
+                }
+                Err(e) => Self::error_reply(api.generation(), e),
+            },
+            ApiCall::QueryAt(q, at) => match api.query_at(q, *at) {
+                // Replay to a recorded position is deterministic, so the
+                // entry is pinned: valid at any later generation.
+                Ok((generation, data)) => ApiReply {
+                    status: 200,
+                    body: envelope(generation, data),
+                    stamp: Some(CacheStamp {
+                        generation,
+                        epoch: 0,
+                        pinned: true,
+                    }),
+                },
+                Err(e) => Self::error_reply(api.generation(), e),
+            },
+            ApiCall::Command(c) => match api.command(c) {
+                Ok(data) => {
+                    // Applied commands can mutate state without consuming
+                    // an engine event (set_quota): bump the epoch so live
+                    // cache entries stop matching either way.
+                    self.state.bump_epoch();
+                    ApiReply {
+                        status: 200,
+                        body: envelope(api.generation(), data),
+                        stamp: None,
+                    }
+                }
+                Err(e) => Self::error_reply(api.generation(), e),
+            },
         };
-        let (status, body) = match outcome {
-            Ok((generation, data)) => (200, envelope(generation, data)),
-            Err(e) => (
-                e.http_status(),
-                error_envelope(Some(api.generation()), e.message()),
-            ),
-        };
+        // Answering doubles as a gauge publish — the cheap way to keep
+        // un-wired sources (stored runs, replay scrubbers) current.
+        self.state.publish_generation(api.generation());
         // A vanished client (timeout, dropped connection) is not an error.
-        let _ = req.reply.send((status, body));
+        let _ = req.reply.send(reply);
     }
 
     /// Answer everything currently queued without blocking.  Returns the
     /// number of requests served.
     pub fn drain(&self, api: &mut impl PlatformApi) -> usize {
+        self.state.publish_generation(api.generation());
         let mut n = 0;
         while let Ok(req) = self.rx.try_recv() {
-            Self::answer(req, api);
+            self.answer(req, api);
             n += 1;
         }
         n
@@ -529,9 +855,10 @@ impl ApiInbox {
     /// Block up to `timeout` for one request and answer it.  Returns
     /// whether a request was served.
     pub fn serve_one(&self, api: &mut impl PlatformApi, timeout: Duration) -> bool {
+        self.state.publish_generation(api.generation());
         match self.rx.recv_timeout(timeout) {
             Ok(req) => {
-                Self::answer(req, api);
+                self.answer(req, api);
                 true
             }
             Err(_) => false,
@@ -693,6 +1020,76 @@ mod tests {
                 String::from_utf8_lossy(bad)
             );
         }
+    }
+
+    #[test]
+    fn etag_is_deterministic_and_key_sensitive() {
+        let base = etag_for("/api/v1/status", "", 42, 0);
+        assert_eq!(base, etag_for("/api/v1/status", "", 42, 0));
+        assert!(base.starts_with('"') && base.ends_with('"'), "{base}");
+        assert!(base.contains("-42"), "generation visible in {base}");
+        for other in [
+            etag_for("/api/v1/sessions", "", 42, 0),
+            etag_for("/api/v1/status", "limit=2", 42, 0),
+            etag_for("/api/v1/status", "", 43, 0),
+            etag_for("/api/v1/status", "", 42, 1),
+        ] {
+            assert_ne!(base, other);
+        }
+    }
+
+    #[test]
+    fn response_cache_is_lru_and_byte_bounded() {
+        let mut c = ResponseCache::new(100);
+        let body = |n: usize| Arc::new(vec![b'x'; n]);
+        c.insert(CacheKey::live("/a", "", 1, 0), body(40), "a".into());
+        c.insert(CacheKey::live("/b", "", 1, 0), body(40), "b".into());
+        // Touch /a so /b is the LRU victim when /c overflows the bound.
+        assert!(c.get(&CacheKey::live("/a", "", 1, 0)).is_some());
+        c.insert(CacheKey::live("/c", "", 1, 0), body(40), "c".into());
+        assert!(c.get(&CacheKey::live("/b", "", 1, 0)).is_none(), "LRU evicted");
+        assert!(c.get(&CacheKey::live("/a", "", 1, 0)).is_some());
+        assert!(c.get(&CacheKey::live("/c", "", 1, 0)).is_some());
+        assert!(c.used_bytes <= 100);
+        // Oversized bodies and a zero-byte cache are never stored.
+        c.insert(CacheKey::live("/big", "", 1, 0), body(101), "big".into());
+        assert!(c.get(&CacheKey::live("/big", "", 1, 0)).is_none());
+        let mut off = ResponseCache::new(0);
+        off.insert(CacheKey::live("/a", "", 1, 0), body(1), "a".into());
+        assert!(off.get(&CacheKey::live("/a", "", 1, 0)).is_none());
+    }
+
+    #[test]
+    fn read_state_keys_on_generation_epoch_and_pinning() {
+        let state = ReadState::new(1 << 20);
+        let body = Arc::new(b"{\"data\":1}".to_vec());
+
+        // Live entries stay invisible until the gauge knows the
+        // generation they were rendered at.
+        let live = CacheStamp { generation: 7, epoch: 0, pinned: false };
+        let etag = state.store("/api/v1/status", "", &live, body.clone());
+        assert!(state.lookup("/api/v1/status", "").is_none(), "gauge unknown");
+        state.publish_generation(7);
+        let (hit, hit_etag) = state.lookup("/api/v1/status", "").unwrap();
+        assert_eq!((hit.as_slice(), hit_etag.as_str()), (body.as_slice(), etag.as_str()));
+        // A generation bump or an applied command orphans the entry.
+        state.publish_generation(8);
+        assert!(state.lookup("/api/v1/status", "").is_none());
+        state.publish_generation(7);
+        state.bump_epoch();
+        assert!(state.lookup("/api/v1/status", "").is_none());
+
+        // Pinned entries (scrubs, stored runs) hit regardless of both.
+        let pinned = CacheStamp { generation: 5, epoch: 0, pinned: true };
+        state.store("/api/v1/status", "at_event=5", &pinned, body.clone());
+        state.publish_generation(GEN_UNKNOWN);
+        assert!(state.lookup("/api/v1/status", "at_event=5").is_some());
+        // Distinct ?at_event= targets are distinct query strings: they
+        // never share an entry or an etag.
+        let pinned9 = CacheStamp { generation: 9, epoch: 0, pinned: true };
+        let e9 = state.store("/api/v1/status", "at_event=9", &pinned9, body.clone());
+        let e5 = state.lookup("/api/v1/status", "at_event=5").unwrap().1;
+        assert_ne!(e5, e9);
     }
 
     #[test]

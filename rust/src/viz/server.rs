@@ -16,21 +16,40 @@
 //!   read side stays open.
 //! * the **SSE push stream** (`GET /api/v1/events`, see
 //!   [`crate::viz::sse`]) when enabled via [`VizServer::serve_events`]:
-//!   each connection gets a tailing thread with heartbeats and
-//!   `Last-Event-ID` resume, so dashboards stop polling.
+//!   each subscriber gets its own long-lived tailing thread with
+//!   heartbeats, `Last-Event-ID` resume, and `?since=<seq>` historical
+//!   replay when the feed carries a JSONL history log.
 //!
-//! Each accepted connection is handled on its own thread, so one slow
-//! client cannot stall the listener; methods are parsed and enforced
-//! (405 on mismatch) rather than treating every request as a GET.
+//! **Concurrency model** ([`ServerConfig`]): a fixed pool of worker
+//! threads drains a bounded connection queue.  When the queue is full
+//! the accept loop sheds the connection with an immediate `503` +
+//! `Retry-After` instead of spawning without limit — under overload the
+//! server degrades to fast rejections, not to thread exhaustion.  SSE
+//! subscribers are handed off to their own threads so thousands of open
+//! streams never occupy request workers.  Request sockets carry read
+//! *and* write timeouts plus a total header deadline, so a stalled or
+//! slow-loris client cannot pin a worker (SSE connections keep their
+//! heartbeat-based liveness instead).
+//!
+//! **Response cache** ([`crate::viz::api::ReadState`]): rendered v1
+//! query bodies are cached keyed on `(path, params, generation, epoch)`
+//! — a generation bump (engine advance) or an applied command changes
+//! the key, so invalidation is implicit and a repeat GET at a fixed
+//! generation is a lock + `Arc` clone, never a re-render or an engine
+//! round trip.  Stored runs and `?at_event=` scrubs cache as *pinned*
+//! entries (their bytes can never change), making the whole read surface
+//! of a stored run cache-resident after first touch.  Every query
+//! response carries a strong `ETag` + `Cache-Control: no-cache`;
+//! `If-None-Match` answers a bodyless `304`.
 
-use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Read, Write};
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
-use std::time::Duration;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
-use super::api::{self, ApiInbox, ApiRequest, RouteError};
+use super::api::{self, ApiCall, ApiInbox, ApiRequest, ReadState, RouteError};
 use super::sse::EventFeed;
 
 /// A route table: path → (content type, body).
@@ -39,13 +58,57 @@ pub type Routes = HashMap<String, (String, Vec<u8>)>;
 /// Largest accepted request body (command manifests are small).
 const MAX_BODY: usize = 1 << 20;
 
-/// How long a connection thread waits for the engine loop to answer an
-/// API request before giving up with a 503.
-const API_REPLY_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(10);
+/// How long a worker waits for the engine loop to answer an API request
+/// before giving up with a 503.
+const API_REPLY_TIMEOUT: Duration = Duration::from_secs(10);
 
-/// Connection threads' handle to the API bridge (None until
+/// Per-read socket timeout while parsing a request (each `recv`).
+const REQUEST_READ_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Total wall-clock budget for reading one request (headers + body): a
+/// drip-feeding client is cut off here even if every individual read
+/// stays under [`REQUEST_READ_TIMEOUT`].
+const REQUEST_DEADLINE: Duration = Duration::from_secs(10);
+
+/// Write timeout on request responses (SSE uses its own, longer one).
+const RESPONSE_WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Write timeout on SSE streams: generous (streams are long-lived and
+/// bursty) but bounded, so a stalled subscriber fails within a couple
+/// of heartbeat cycles instead of holding its thread forever.
+const SSE_WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Longest accepted header line and header count (slow-loris bounds).
+const MAX_HEADER_LINE: usize = 8 * 1024;
+const MAX_HEADER_LINES: usize = 128;
+
+/// Records per `?since=` history backfill batch (see `stream_events`).
+const HISTORY_CHUNK: usize = 1024;
+
+/// Worker threads' handle to the API bridge (None until
 /// [`VizServer::enable_api`]).
 type ApiSender = Arc<Mutex<Option<mpsc::Sender<ApiRequest>>>>;
+
+/// Sizing knobs for the worker pool and the response cache.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Fixed number of request worker threads.
+    pub workers: usize,
+    /// Bounded connection-queue depth; accepts past it answer 503.
+    pub queue: usize,
+    /// Response-cache bound in bytes (0 disables caching; ETags remain).
+    pub cache_bytes: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            workers: 8,
+            queue: 128,
+            cache_bytes: 32 << 20,
+        }
+    }
+}
 
 /// The SSE surface: the feed plus the idle heartbeat cadence.
 #[derive(Clone)]
@@ -54,7 +117,7 @@ struct SseHandle {
     heartbeat: Duration,
 }
 
-/// Everything a connection thread needs, cloned per accept.
+/// Everything a worker needs, cloned per pool thread.
 #[derive(Clone)]
 struct ConnShared {
     routes: Arc<Mutex<Routes>>,
@@ -62,6 +125,49 @@ struct ConnShared {
     token: Arc<Mutex<Option<String>>>,
     sse: Arc<Mutex<Option<SseHandle>>>,
     stop: Arc<AtomicBool>,
+    state: Arc<ReadState>,
+    sse_active: Arc<AtomicU64>,
+}
+
+/// The bounded connection queue between the accept loop and the worker
+/// pool.  `push` fails (returning the stream) when full — that is the
+/// accept loop's backpressure signal.
+struct ConnQueue {
+    inner: Mutex<VecDeque<TcpStream>>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+impl ConnQueue {
+    fn new(capacity: usize) -> ConnQueue {
+        ConnQueue {
+            inner: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    fn push(&self, stream: TcpStream) -> Result<(), TcpStream> {
+        let mut q = self.inner.lock().unwrap();
+        if q.len() >= self.capacity {
+            return Err(stream);
+        }
+        q.push_back(stream);
+        drop(q);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Pop one connection, waiting up to `timeout`.  Workers loop on
+    /// this with a short timeout so the stop flag is observed promptly.
+    fn pop(&self, timeout: Duration) -> Option<TcpStream> {
+        let mut q = self.inner.lock().unwrap();
+        if q.is_empty() {
+            let (guard, _) = self.cv.wait_timeout(q, timeout).unwrap();
+            q = guard;
+        }
+        q.pop_front()
+    }
 }
 
 /// The viz HTTP server.
@@ -69,13 +175,28 @@ pub struct VizServer {
     shared: ConnShared,
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    queue: Arc<ConnQueue>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Connections accepted over the server's lifetime.
     pub requests: Arc<AtomicU64>,
+    /// Connections shed with a 503 because the queue was full.
+    pub rejected: Arc<AtomicU64>,
 }
 
 impl VizServer {
-    /// Bind on 127.0.0.1:`port` (0 = ephemeral) and start serving.
-    pub fn start(port: u16, mut routes: Routes) -> std::io::Result<VizServer> {
+    /// Bind on 127.0.0.1:`port` (0 = ephemeral) and start serving with
+    /// the default pool/cache sizing.
+    pub fn start(port: u16, routes: Routes) -> std::io::Result<VizServer> {
+        VizServer::start_with(port, routes, ServerConfig::default())
+    }
+
+    /// [`VizServer::start`] with explicit worker-pool and cache sizing.
+    pub fn start_with(
+        port: u16,
+        mut routes: Routes,
+        config: ServerConfig,
+    ) -> std::io::Result<VizServer> {
         routes
             .entry("/".to_string())
             .or_insert(("text/html".to_string(), VIEWER_HTML.as_bytes().to_vec()));
@@ -89,39 +210,68 @@ impl VizServer {
             token: Arc::new(Mutex::new(None)),
             sse: Arc::new(Mutex::new(None)),
             stop: stop.clone(),
+            state: ReadState::new(config.cache_bytes),
+            sse_active: Arc::new(AtomicU64::new(0)),
         };
         let requests = Arc::new(AtomicU64::new(0));
-        let (sh2, s2, q2) = (shared.clone(), stop.clone(), requests.clone());
-        let handle = std::thread::spawn(move || {
-            while !s2.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        q2.fetch_add(1, Ordering::Relaxed);
-                        // One thread per connection: a slow or stalled
-                        // client must not block the accept loop.  Builder
-                        // (not thread::spawn) so thread exhaustion drops
-                        // this one connection instead of panicking the
-                        // accept loop dead.
-                        let shared = sh2.clone();
-                        let _ = std::thread::Builder::new()
-                            .name("viz-conn".into())
-                            .spawn(move || {
-                                let _ = handle_conn(stream, &shared);
-                            });
+        let rejected = Arc::new(AtomicU64::new(0));
+        let queue = Arc::new(ConnQueue::new(config.queue));
+
+        let (s2, q2, r2, queue2) = (stop.clone(), requests.clone(), rejected.clone(), queue.clone());
+        let accept = std::thread::Builder::new()
+            .name("viz-accept".into())
+            .spawn(move || {
+                while !s2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            q2.fetch_add(1, Ordering::Relaxed);
+                            if let Err(stream) = queue2.push(stream) {
+                                // Backpressure: every worker is busy and
+                                // the queue is at capacity.  Shed the
+                                // connection with an immediate 503 —
+                                // bounded load, never unbounded threads.
+                                r2.fetch_add(1, Ordering::Relaxed);
+                                reject_saturated(stream);
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        Err(_) => break,
                     }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(10));
-                    }
-                    Err(_) => break,
                 }
-            }
-        });
+            })?;
+
+        let mut workers = Vec::with_capacity(config.workers.max(1));
+        for i in 0..config.workers.max(1) {
+            let (shared_i, queue_i) = (shared.clone(), queue.clone());
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("viz-worker-{i}"))
+                    .spawn(move || loop {
+                        match queue_i.pop(Duration::from_millis(100)) {
+                            Some(stream) => {
+                                let _ = handle_conn(stream, &shared_i);
+                            }
+                            None => {
+                                if shared_i.stop.load(Ordering::Relaxed) {
+                                    return;
+                                }
+                            }
+                        }
+                    })?,
+            );
+        }
+
         Ok(VizServer {
             shared,
             addr,
             stop,
-            handle: Some(handle),
+            queue,
+            accept: Some(accept),
+            workers,
             requests,
+            rejected,
         })
     }
 
@@ -131,11 +281,13 @@ impl VizServer {
 
     /// Enable the `/api/v1` surface: API paths stop falling through to
     /// the static table and are forwarded to the returned [`ApiInbox`],
-    /// which the engine loop drains between advances.
+    /// which the engine loop drains between advances.  The inbox shares
+    /// this server's [`ReadState`], so answered queries populate the
+    /// response cache and applied commands invalidate it.
     pub fn enable_api(&self) -> ApiInbox {
         let (tx, rx) = mpsc::channel();
         *self.shared.api_tx.lock().unwrap() = Some(tx);
-        ApiInbox::new(rx)
+        ApiInbox::new(rx, self.shared.state.clone())
     }
 
     /// Require `Authorization: Bearer <token>` on the command surface
@@ -147,13 +299,19 @@ impl VizServer {
     }
 
     /// Serve `GET /api/v1/events` as an SSE stream of `feed`: one
-    /// tailing thread per connection, a comment heartbeat every
-    /// `heartbeat` while idle, and `Last-Event-ID` resume.
+    /// tailing thread per subscriber (off the worker pool), a comment
+    /// heartbeat every `heartbeat` while idle, `Last-Event-ID` resume,
+    /// and `?since=<seq>` history replay when the feed records one.
     pub fn serve_events(&self, feed: Arc<EventFeed>, heartbeat: Duration) {
         *self.shared.sse.lock().unwrap() = Some(SseHandle {
             feed,
             heartbeat: heartbeat.max(Duration::from_millis(10)),
         });
+    }
+
+    /// Currently open SSE subscriber connections.
+    pub fn sse_active(&self) -> u64 {
+        self.shared.sse_active.load(Ordering::Relaxed)
     }
 
     /// Replace/add a route while running.
@@ -171,21 +329,43 @@ impl VizServer {
         self.put_route(path, "application/json", doc.to_string_compact().into_bytes());
     }
 
-    pub fn stop(mut self) {
+    fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.handle.take() {
+        self.queue.cv.notify_all();
+        if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        // SSE threads are detached; they observe the stop flag within
+        // one heartbeat and exit on their own.
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown();
     }
 }
 
 impl Drop for VizServer {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+        self.shutdown();
     }
+}
+
+/// Best-effort 503 for a shed connection: written before the request is
+/// even read, with a short write timeout so a hostile peer cannot stall
+/// the accept loop either.
+fn reject_saturated(mut stream: TcpStream) {
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+    let doc = api::error_envelope(None, "server saturated: connection queue is full");
+    let _ = respond(
+        &mut stream,
+        503,
+        "application/json",
+        &doc.to_string_compact().into_bytes(),
+        "Retry-After: 1\r\n",
+    );
 }
 
 /// One parsed HTTP request.
@@ -198,13 +378,57 @@ struct Request {
     authorization: Option<String>,
     /// Parsed `Last-Event-ID` header (SSE resume), if sent.
     last_event_id: Option<u64>,
+    /// Raw `If-None-Match` header (ETag revalidation), if sent.
+    if_none_match: Option<String>,
+}
+
+/// Read one header line byte-wise so both bounds hold: the per-recv
+/// socket timeout catches a stalled client, the deadline catches a
+/// drip-feeding one, and the length cap catches an endless line.
+fn read_line_bounded(
+    reader: &mut BufReader<TcpStream>,
+    deadline: Instant,
+) -> std::io::Result<String> {
+    let mut out: Vec<u8> = Vec::new();
+    let mut byte = [0u8; 1];
+    loop {
+        if out.len() > MAX_HEADER_LINE {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "header line too long",
+            ));
+        }
+        if Instant::now() >= deadline {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                "request read deadline exceeded",
+            ));
+        }
+        match reader.read(&mut byte)? {
+            0 => break, // EOF
+            _ => {
+                out.push(byte[0]);
+                if byte[0] == b'\n' {
+                    break;
+                }
+            }
+        }
+    }
+    Ok(String::from_utf8_lossy(&out).into_owned())
 }
 
 fn read_request(stream: &TcpStream) -> std::io::Result<Option<Request>> {
-    stream.set_read_timeout(Some(std::time::Duration::from_secs(2)))?;
+    stream.set_read_timeout(Some(REQUEST_READ_TIMEOUT))?;
+    let deadline = Instant::now() + REQUEST_DEADLINE;
     let mut reader = BufReader::new(stream.try_clone()?);
-    let mut request_line = String::new();
-    reader.read_line(&mut request_line)?;
+    let request_line = read_line_bounded(&mut reader, deadline)?;
+    if request_line.trim().is_empty() {
+        // Connection opened and closed (or never spoke): nothing to do.
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "empty request",
+        ));
+    }
     let mut parts = request_line.split_whitespace();
     let method = parts.next().unwrap_or("GET").to_uppercase();
     let target = parts.next().unwrap_or("/");
@@ -216,9 +440,10 @@ fn read_request(stream: &TcpStream) -> std::io::Result<Option<Request>> {
     let mut content_length = 0usize;
     let mut authorization = None;
     let mut last_event_id = None;
-    loop {
-        let mut line = String::new();
-        if reader.read_line(&mut line)? == 0 || line == "\r\n" || line == "\n" {
+    let mut if_none_match = None;
+    for _ in 0..MAX_HEADER_LINES {
+        let line = read_line_bounded(&mut reader, deadline)?;
+        if line.is_empty() || line == "\r\n" || line == "\n" {
             break;
         }
         if let Some((name, value)) = line.split_once(':') {
@@ -228,6 +453,8 @@ fn read_request(stream: &TcpStream) -> std::io::Result<Option<Request>> {
                 authorization = Some(value.trim().to_string());
             } else if name.eq_ignore_ascii_case("last-event-id") {
                 last_event_id = value.trim().parse().ok();
+            } else if name.eq_ignore_ascii_case("if-none-match") {
+                if_none_match = Some(value.trim().to_string());
             }
         }
     }
@@ -235,8 +462,22 @@ fn read_request(stream: &TcpStream) -> std::io::Result<Option<Request>> {
         return Ok(None); // caller answers 400
     }
     let mut body = vec![0u8; content_length];
-    if content_length > 0 {
-        reader.read_exact(&mut body)?;
+    let mut off = 0;
+    while off < content_length {
+        if Instant::now() >= deadline {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                "request body read deadline exceeded",
+            ));
+        }
+        let n = reader.read(&mut body[off..])?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "request body truncated",
+            ));
+        }
+        off += n;
     }
     Ok(Some(Request {
         method,
@@ -245,6 +486,7 @@ fn read_request(stream: &TcpStream) -> std::io::Result<Option<Request>> {
         body,
         authorization,
         last_event_id,
+        if_none_match,
     }))
 }
 
@@ -252,17 +494,20 @@ fn handle_conn(mut stream: TcpStream, shared: &ConnShared) -> std::io::Result<()
     let req = match read_request(&stream)? {
         Some(r) => r,
         None => {
+            stream.set_write_timeout(Some(RESPONSE_WRITE_TIMEOUT))?;
             return respond_json(
                 &mut stream,
                 400,
                 &api::error_envelope(None, "request body too large"),
-            )
+            );
         }
     };
+    stream.set_write_timeout(Some(RESPONSE_WRITE_TIMEOUT))?;
 
-    // The SSE push stream, when enabled, owns /api/v1/events (it never
-    // goes through the engine-loop bridge — a slow stream consumer must
-    // not occupy the inbox).
+    // The SSE push stream, when enabled, owns /api/v1/events.  It never
+    // goes through the engine-loop bridge, and the connection is handed
+    // to its own long-lived thread: subscribers must not occupy request
+    // workers.
     let sse = shared.sse.lock().unwrap().clone();
     if let Some(sse) = sse {
         if req.path == "/api/v1/events" {
@@ -271,7 +516,18 @@ fn handle_conn(mut stream: TcpStream, shared: &ConnShared) -> std::io::Result<()
                 let body = doc.to_string_compact().into_bytes();
                 return respond(&mut stream, 405, "application/json", &body, "Allow: GET\r\n");
             }
-            return stream_events(&mut stream, &req, &sse, &shared.stop);
+            let stop = shared.stop.clone();
+            let active = shared.sse_active.clone();
+            active.fetch_add(1, Ordering::Relaxed);
+            let spawned = std::thread::Builder::new().name("viz-sse".into()).spawn(move || {
+                let _ = stream_events(&mut stream, &req, &sse, &stop);
+                active.fetch_sub(1, Ordering::Relaxed);
+            });
+            if spawned.is_err() {
+                // Thread exhaustion drops this subscriber, not the worker.
+                shared.sse_active.fetch_sub(1, Ordering::Relaxed);
+            }
+            return Ok(());
         }
     }
 
@@ -291,7 +547,7 @@ fn handle_conn(mut stream: TcpStream, shared: &ConnShared) -> std::io::Result<()
                     );
                 }
             }
-            return handle_api(&mut stream, &req, &tx);
+            return handle_api(&mut stream, &req, &tx, &shared.state);
         }
     }
 
@@ -326,32 +582,64 @@ fn check_bearer(req: &Request, required: &Option<String>) -> Result<(), api::Api
     }
 }
 
+/// First `name=<u64>` query parameter, if present and parseable.
+fn query_param_u64(query: &str, name: &str) -> Option<u64> {
+    query
+        .split('&')
+        .filter_map(|kv| kv.split_once('='))
+        .find(|(k, _)| *k == name)
+        .and_then(|(_, v)| v.parse().ok())
+}
+
 /// Tail the event feed into one SSE connection: `id:`-framed progress
-/// records, comment heartbeats while idle, resume from `Last-Event-ID`.
-/// Ends when the client disconnects (write error) or the server stops.
+/// records, comment heartbeats while idle, resume from `Last-Event-ID`
+/// or an explicit `?since=<seq>` cursor.  When the cursor points below
+/// the ring's retention window and the feed carries a history log, the
+/// gap is replayed from disk before switching to the live ring; without
+/// history the client is told how many records it lost.  Ends when the
+/// client disconnects (write error) or the server stops.
 fn stream_events(
     stream: &mut TcpStream,
     req: &Request,
     sse: &SseHandle,
     stop: &Arc<AtomicBool>,
 ) -> std::io::Result<()> {
+    stream.set_write_timeout(Some(SSE_WRITE_TIMEOUT))?;
     stream.write_all(
         b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n",
     )?;
-    // A Last-Event-ID past anything published cannot be honored (the
-    // header is client-controlled); treat it as "caught up to now" so
-    // later events still flow.
-    let mut cursor = req.last_event_id.unwrap_or(0).min(sse.feed.last_seq());
+    // ?since= (explicit) wins over Last-Event-ID (reconnect); a cursor
+    // past anything published cannot be honored (both are client-
+    // controlled), so it clamps to "caught up to now".
+    let requested = query_param_u64(&req.query, "since").or(req.last_event_id);
+    let mut cursor = requested.unwrap_or(0).min(sse.feed.last_seq());
     loop {
         if stop.load(Ordering::Relaxed) {
             return Ok(());
         }
         let (missed, batch) = sse.feed.wait_after(cursor, sse.heartbeat);
-        // A cursor that fell behind the retention window — at connect
-        // time or mid-stream under publish pressure — is told how many
-        // records it lost instead of silently skipping them.
         if missed > 0 {
-            stream.write_all(format!(": resumed past {missed} dropped events\n\n").as_bytes())?;
+            // The ring evicted part of the requested window.  Replay the
+            // gap from the history log in bounded batches, then fall
+            // back into the live ring; without history, say what was
+            // lost instead of silently skipping it.
+            let backfill = sse.feed.history_after(cursor, HISTORY_CHUNK);
+            match backfill {
+                Some(hist) if !hist.is_empty() => {
+                    let mut out = String::new();
+                    for (seq, line) in &hist {
+                        out.push_str(&format!("id: {seq}\ndata: {line}\n\n"));
+                        cursor = *seq;
+                    }
+                    stream.write_all(out.as_bytes())?;
+                    stream.flush()?;
+                    continue;
+                }
+                _ => {
+                    stream
+                        .write_all(format!(": resumed past {missed} dropped events\n\n").as_bytes())?;
+                }
+            }
         }
         if batch.is_empty() {
             stream.write_all(b": heartbeat\n\n")?;
@@ -371,6 +659,7 @@ fn handle_api(
     stream: &mut TcpStream,
     req: &Request,
     tx: &mpsc::Sender<ApiRequest>,
+    state: &Arc<ReadState>,
 ) -> std::io::Result<()> {
     let call = match api::parse_route(&req.method, &req.path, &req.query, &req.body) {
         Ok(call) => call,
@@ -386,6 +675,14 @@ fn handle_api(
             return respond_json(stream, 400, &api::error_envelope(None, &msg));
         }
     };
+    // Queries try the response cache first: at a fixed generation the
+    // whole read path is a lock + Arc clone, no engine round trip.
+    let cacheable = matches!(call, ApiCall::Query(_) | ApiCall::QueryAt(..));
+    if cacheable {
+        if let Some((body, etag)) = state.lookup(&req.path, &req.query) {
+            return respond_query(stream, req, &body, &etag, "hit");
+        }
+    }
     let (reply_tx, reply_rx) = mpsc::channel();
     let sent = tx
         .send(ApiRequest {
@@ -399,13 +696,50 @@ fn handle_api(
         None
     };
     match reply {
-        Some((status, doc)) => respond_json(stream, status, &doc),
+        Some(reply) => {
+            if let (200, Some(stamp)) = (reply.status, reply.stamp.as_ref()) {
+                let body = Arc::new(reply.body.to_string_compact().into_bytes());
+                let etag = state.store(&req.path, &req.query, stamp, body.clone());
+                return respond_query(stream, req, &body, &etag, "miss");
+            }
+            respond_json(stream, reply.status, &reply.body)
+        }
         None => respond_json(
             stream,
             503,
             &api::error_envelope(None, "engine loop is not serving the API"),
         ),
     }
+}
+
+/// Answer a cacheable query: `ETag` + `Cache-Control: no-cache` on
+/// every response, `X-Cache` reporting hit/miss, and `If-None-Match`
+/// short-circuited to a bodyless 304 (no re-render, no copy).
+fn respond_query(
+    stream: &mut TcpStream,
+    req: &Request,
+    body: &[u8],
+    etag: &str,
+    x_cache: &str,
+) -> std::io::Result<()> {
+    let headers = format!("ETag: {etag}\r\nCache-Control: no-cache\r\nX-Cache: {x_cache}\r\n");
+    if if_none_match_matches(req.if_none_match.as_deref(), etag) {
+        return respond(stream, 304, "application/json", b"", &headers);
+    }
+    respond(stream, 200, "application/json", body, &headers)
+}
+
+/// `If-None-Match` comparison: `*` matches anything; otherwise compare
+/// against each listed entity-tag (the weak prefix is ignored — weak
+/// comparison is what 304 revalidation uses).
+fn if_none_match_matches(header: Option<&str>, etag: &str) -> bool {
+    let Some(header) = header else {
+        return false;
+    };
+    header
+        .split(',')
+        .map(str::trim)
+        .any(|t| t == "*" || t == etag || t.strip_prefix("W/") == Some(etag))
 }
 
 fn respond_json(
@@ -420,6 +754,7 @@ fn respond_json(
 fn status_text(status: u16) -> &'static str {
     match status {
         200 => "OK",
+        304 => "Not Modified",
         400 => "Bad Request",
         401 => "Unauthorized",
         403 => "Forbidden",
@@ -466,6 +801,19 @@ pub fn http_request_with_headers(
     headers: &[(&str, &str)],
     body: &[u8],
 ) -> std::io::Result<(u16, Vec<u8>)> {
+    let (status, _head, body) = http_request_full(addr, method, path, headers, body)?;
+    Ok((status, body))
+}
+
+/// [`http_request_with_headers`], also returning the raw response head
+/// (status line + headers) so callers can read `ETag`/`X-Cache`.
+pub fn http_request_full(
+    addr: std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> std::io::Result<(u16, String, Vec<u8>)> {
     let mut stream = TcpStream::connect(addr)?;
     let extra: String = headers
         .iter()
@@ -490,7 +838,7 @@ pub fn http_request_with_headers(
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(0);
-    Ok((status, buf[text_end..].to_vec()))
+    Ok((status, head, buf[text_end..].to_vec()))
 }
 
 /// Minimal GET client.
@@ -620,6 +968,7 @@ mod tests {
             body: Vec::new(),
             authorization: auth.map(|s| s.to_string()),
             last_event_id: None,
+            if_none_match: None,
         };
         let token = Some("sekrit".to_string());
         // No token configured: everything passes.
@@ -642,6 +991,17 @@ mod tests {
     }
 
     #[test]
+    fn if_none_match_comparison() {
+        let etag = "\"abc-7\"";
+        assert!(if_none_match_matches(Some("\"abc-7\""), etag));
+        assert!(if_none_match_matches(Some("W/\"abc-7\""), etag));
+        assert!(if_none_match_matches(Some("\"x\", \"abc-7\""), etag));
+        assert!(if_none_match_matches(Some("*"), etag));
+        assert!(!if_none_match_matches(Some("\"other\""), etag));
+        assert!(!if_none_match_matches(None, etag));
+    }
+
+    #[test]
     fn sse_route_rejects_non_get() {
         let server = VizServer::start(0, Routes::new()).unwrap();
         server.serve_events(
@@ -654,13 +1014,23 @@ mod tests {
     }
 
     #[test]
-    fn concurrent_connections_are_served() {
-        // Per-connection threads: several clients at once all complete.
+    fn worker_pool_serves_concurrent_connections() {
+        // A pool smaller than the burst still completes every request:
+        // the queue absorbs what the workers haven't reached yet.
         let mut routes = Routes::new();
         routes.insert("/x".into(), ("text/plain".into(), b"y".to_vec()));
-        let server = VizServer::start(0, routes).unwrap();
+        let server = VizServer::start_with(
+            0,
+            routes,
+            ServerConfig {
+                workers: 2,
+                queue: 64,
+                cache_bytes: 0,
+            },
+        )
+        .unwrap();
         let addr = server.addr();
-        let handles: Vec<_> = (0..8)
+        let handles: Vec<_> = (0..16)
             .map(|_| std::thread::spawn(move || http_get(addr, "/x").unwrap()))
             .collect();
         for h in handles {
@@ -668,7 +1038,94 @@ mod tests {
             assert_eq!(status, 200);
             assert_eq!(body, b"y");
         }
-        assert!(server.requests.load(std::sync::atomic::Ordering::Relaxed) >= 8);
+        assert!(server.requests.load(std::sync::atomic::Ordering::Relaxed) >= 16);
+        assert_eq!(server.rejected.load(std::sync::atomic::Ordering::Relaxed), 0);
+        server.stop();
+    }
+
+    #[test]
+    fn saturated_queue_sheds_with_503() {
+        let mut routes = Routes::new();
+        routes.insert("/x".into(), ("text/plain".into(), b"y".to_vec()));
+        let server = VizServer::start_with(
+            0,
+            routes,
+            ServerConfig {
+                workers: 1,
+                queue: 1,
+                cache_bytes: 0,
+            },
+        )
+        .unwrap();
+        let addr = server.addr();
+        // Occupy the lone worker with an idle connection, then fill the
+        // one queue slot with another.  The staggered sleeps let the
+        // accept loop dispatch each before the next arrives.
+        let idle_a = TcpStream::connect(addr).unwrap();
+        std::thread::sleep(Duration::from_millis(200));
+        let idle_b = TcpStream::connect(addr).unwrap();
+        std::thread::sleep(Duration::from_millis(200));
+        // Third connection: queue full → unsolicited 503 + Retry-After.
+        let mut probe = TcpStream::connect(addr).unwrap();
+        probe
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        let mut buf = Vec::new();
+        let _ = probe.read_to_end(&mut buf);
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.contains("503"), "expected a 503, got: {text}");
+        assert!(text.contains("Retry-After"), "{text}");
+        assert!(text.contains("saturated"), "{text}");
+        assert!(server.rejected.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+        // Recovery: once the idle connections drain (read timeout or
+        // close), normal requests flow again.
+        drop(idle_a);
+        drop(idle_b);
+        let t0 = Instant::now();
+        loop {
+            if let Ok((200, body)) = http_get(addr, "/x") {
+                assert_eq!(body, b"y");
+                break;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "server never recovered after shedding"
+            );
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn slow_loris_header_is_cut_off() {
+        let server = VizServer::start_with(
+            0,
+            Routes::new(),
+            ServerConfig {
+                workers: 1,
+                queue: 4,
+                cache_bytes: 0,
+            },
+        )
+        .unwrap();
+        let addr = server.addr();
+        // A client that sends a partial request line and stalls: the
+        // per-recv timeout must free the worker (connection closed)
+        // rather than pinning it, and the server keeps serving others.
+        let mut loris = TcpStream::connect(addr).unwrap();
+        loris.write_all(b"GET /").unwrap();
+        loris
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        let mut buf = Vec::new();
+        let t0 = Instant::now();
+        let _ = loris.read_to_end(&mut buf); // server closes on timeout
+        assert!(
+            t0.elapsed() < Duration::from_secs(8),
+            "stalled client was not cut off"
+        );
+        let (status, _) = http_get(addr, "/").unwrap();
+        assert_eq!(status, 200, "worker must be free after the cut-off");
         server.stop();
     }
 }

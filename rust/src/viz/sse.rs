@@ -22,6 +22,8 @@
 //! never an I/O wait on a consumer.
 
 use std::collections::VecDeque;
+use std::io::{BufRead, Write};
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -39,17 +41,53 @@ struct FeedInner {
     dropped: u64,
 }
 
+/// Optional on-disk mirror of the feed: every published record appended
+/// as one JSONL line *while the ring lock is held*, so line `k` of the
+/// file is exactly sequence `k`.  This is what lets `?since=<seq>` (and
+/// a `Last-Event-ID` resume that fell behind the window) replay records
+/// the bounded ring already evicted.
+struct HistoryLog {
+    path: PathBuf,
+    file: Mutex<std::fs::File>,
+}
+
 /// The progress-event ring buffer SSE connections tail.
 pub struct EventFeed {
     inner: Mutex<FeedInner>,
     cv: Condvar,
     capacity: usize,
+    history: Option<HistoryLog>,
 }
 
 impl EventFeed {
     /// A feed retaining at most `capacity` records (older ones are
     /// evicted; reconnecting clients see the drop count).
     pub fn new(capacity: usize) -> Arc<EventFeed> {
+        EventFeed::build(capacity, None)
+    }
+
+    /// A feed that also mirrors every record to a JSONL history log at
+    /// `path` (truncated — feed sequences restart at 1 with the feed).
+    /// SSE connections use it to serve `?since=` below the ring's
+    /// retention window.
+    pub fn with_history(capacity: usize, path: impl AsRef<Path>) -> std::io::Result<Arc<EventFeed>> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let file = std::fs::File::create(&path)?;
+        Ok(EventFeed::build(
+            capacity,
+            Some(HistoryLog {
+                path,
+                file: Mutex::new(file),
+            }),
+        ))
+    }
+
+    fn build(capacity: usize, history: Option<HistoryLog>) -> Arc<EventFeed> {
         Arc::new(EventFeed {
             inner: Mutex::new(FeedInner {
                 events: VecDeque::new(),
@@ -58,7 +96,13 @@ impl EventFeed {
             }),
             cv: Condvar::new(),
             capacity: capacity.max(1),
+            history,
         })
+    }
+
+    /// Path of the history log, when one is attached.
+    pub fn history_path(&self) -> Option<&Path> {
+        self.history.as_ref().map(|h| h.path.as_path())
     }
 
     /// Publish one already-serialized JSON record; returns its sequence.
@@ -66,6 +110,14 @@ impl EventFeed {
         let mut inner = self.inner.lock().unwrap();
         let seq = inner.next_seq;
         inner.next_seq += 1;
+        if let Some(h) = &self.history {
+            // Written under the ring lock so line k == seq k.  A failed
+            // write (disk full) degrades ?since= to the drop notice;
+            // publishing itself never fails.
+            let mut f = h.file.lock().unwrap();
+            let _ = f.write_all(line.as_bytes());
+            let _ = f.write_all(b"\n");
+        }
         inner.events.push_back((seq, line));
         while inner.events.len() > self.capacity {
             inner.events.pop_front();
@@ -74,6 +126,42 @@ impl EventFeed {
         drop(inner);
         self.cv.notify_all();
         seq
+    }
+
+    /// Replay records from the history log with sequence in
+    /// `(after, oldest-retained)` — the gap the ring has already
+    /// evicted.  At most `cap` records per call: callers loop,
+    /// interleaving writes, instead of buffering an unbounded backlog.
+    /// `None` when the feed has no history log attached.  Only fully
+    /// written lines below the ring's oldest record are returned, so a
+    /// concurrent publish can never surface a torn line.
+    pub fn history_after(&self, after: u64, cap: usize) -> Option<Vec<(u64, String)>> {
+        let history = self.history.as_ref()?;
+        let oldest = {
+            let inner = self.inner.lock().unwrap();
+            inner.events.front().map(|&(s, _)| s).unwrap_or(inner.next_seq)
+        };
+        if after.saturating_add(1) >= oldest {
+            return Some(Vec::new());
+        }
+        let file = match std::fs::File::open(&history.path) {
+            Ok(f) => f,
+            Err(_) => return Some(Vec::new()),
+        };
+        let mut out = Vec::new();
+        let mut seq = 0u64;
+        for line in std::io::BufReader::new(file).lines() {
+            let Ok(line) = line else { break };
+            seq += 1;
+            if seq <= after {
+                continue;
+            }
+            if seq >= oldest || out.len() >= cap {
+                break;
+            }
+            out.push((seq, line));
+        }
+        Some(out)
     }
 
     /// Publish a JSON document (compact form — same bytes as the JSONL
@@ -170,6 +258,36 @@ mod tests {
         let (missed, got) = feed.read_after(u64::MAX);
         assert_eq!((missed, got.len()), (0, 0));
         assert!(feed.wait_after(u64::MAX, Duration::from_millis(5)).1.is_empty());
+    }
+
+    #[test]
+    fn history_log_replays_evicted_records() {
+        let dir = std::env::temp_dir().join(format!("chopt-sse-hist-{}", std::process::id()));
+        let path = dir.join("events.jsonl");
+        let feed = EventFeed::with_history(2, &path).unwrap();
+        assert_eq!(feed.history_path(), Some(path.as_path()));
+        for s in ["a", "b", "c", "d", "e"] {
+            feed.publish(s.into());
+        }
+        // Ring retains 4..5; the ring alone reports 3 missed from 0.
+        let (missed, got) = feed.read_after(0);
+        assert_eq!(missed, 3);
+        assert_eq!(got.first().map(|&(s, _)| s), Some(4));
+        // The history log covers the evicted gap exactly: (after, oldest).
+        assert_eq!(
+            feed.history_after(0, 100).unwrap(),
+            vec![(1, "a".to_string()), (2, "b".to_string()), (3, "c".to_string())]
+        );
+        // The cap bounds each batch; the cursor loop picks up the rest.
+        assert_eq!(feed.history_after(0, 1).unwrap(), vec![(1, "a".to_string())]);
+        assert_eq!(feed.history_after(1, 1).unwrap(), vec![(2, "b".to_string())]);
+        // At or past the ring's oldest record: nothing from history.
+        assert!(feed.history_after(3, 100).unwrap().is_empty());
+        assert!(feed.history_after(u64::MAX, 100).unwrap().is_empty());
+        // Feeds without history report None (callers fall back to the
+        // drop notice).
+        assert!(EventFeed::new(2).history_after(0, 10).is_none());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -20,7 +20,9 @@ use chopt::trainer::surrogate::SurrogateTrainer;
 use chopt::trainer::Trainer;
 use chopt::util::json::Value as Json;
 use chopt::viz::api::{envelope, ApiInbox, ApiQuery, PlatformApi, RunSource};
-use chopt::viz::server::{http_request, http_request_with_headers, Routes, VizServer};
+use chopt::viz::server::{
+    http_request, http_request_full, http_request_with_headers, Routes, VizServer,
+};
 use chopt::viz::sse::EventFeed;
 
 fn cfg(seed: u64) -> ChoptConfig {
@@ -392,6 +394,9 @@ fn v1_multi_study_surface_and_commands() {
     platform.run_until(2_000.0);
     let server = VizServer::start(0, Routes::new()).unwrap();
     let inbox = server.enable_api();
+    // The test re-GETs the same paths across advances; the gauge keeps
+    // the response cache from answering with a previous tick's bytes.
+    platform.set_generation_gauge(inbox.generation_gauge());
     let addr = server.addr();
 
     // Directory + fair-share carry priority/paused fields.
@@ -896,13 +901,24 @@ fn read_sse(
     needles: &[&str],
     deadline: Duration,
 ) -> String {
+    read_sse_at(addr, "/api/v1/events", last_event_id, needles, deadline)
+}
+
+/// [`read_sse`] against an explicit path (`?since=` tests).
+fn read_sse_at(
+    addr: std::net::SocketAddr,
+    path: &str,
+    last_event_id: Option<u64>,
+    needles: &[&str],
+    deadline: Duration,
+) -> String {
     let mut stream = std::net::TcpStream::connect(addr).unwrap();
     let extra = last_event_id
         .map(|id| format!("Last-Event-ID: {id}\r\n"))
         .unwrap_or_default();
     write!(
         stream,
-        "GET /api/v1/events HTTP/1.1\r\nHost: localhost\r\nAccept: text/event-stream\r\n{extra}Connection: close\r\n\r\n"
+        "GET {path} HTTP/1.1\r\nHost: localhost\r\nAccept: text/event-stream\r\n{extra}Connection: close\r\n\r\n"
     )
     .unwrap();
     stream
@@ -1055,4 +1071,371 @@ fn command_surface_enforces_bearer_token() {
     assert_eq!(ack.get("applied").and_then(|v| v.as_bool()), Some(true));
 
     server.stop();
+}
+
+// -- read-side scale: response cache, ETag/304, SSE history replay -----
+
+/// `call` returning the raw response head as well (ETag / X-Cache
+/// assertions) while pumping the inbox from this thread.
+fn call_full(
+    addr: std::net::SocketAddr,
+    inbox: &ApiInbox,
+    api: &mut impl PlatformApi,
+    method: &'static str,
+    path: &str,
+    headers: Vec<(String, String)>,
+    body: &[u8],
+) -> (u16, String, Vec<u8>) {
+    let path = path.to_string();
+    let body = body.to_vec();
+    let client = std::thread::spawn(move || {
+        let hdrs: Vec<(&str, &str)> = headers
+            .iter()
+            .map(|(k, v)| (k.as_str(), v.as_str()))
+            .collect();
+        http_request_full(addr, method, &path, &hdrs, &body).unwrap()
+    });
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !client.is_finished() && Instant::now() < deadline {
+        inbox.serve_one(api, Duration::from_millis(20));
+    }
+    client.join().unwrap()
+}
+
+fn header_value(head: &str, name: &str) -> Option<String> {
+    head.lines().find_map(|l| {
+        let (k, v) = l.split_once(':')?;
+        if k.eq_ignore_ascii_case(name) {
+            Some(v.trim().to_string())
+        } else {
+            None
+        }
+    })
+}
+
+/// The tentpole acceptance pin: at a fixed generation every v1 query is
+/// served from the response cache after first touch, with bodies
+/// byte-identical to the freshly rendered ones; a command bumps the
+/// epoch and an engine tick bumps the generation, and either implicitly
+/// drops the whole read surface out of cache — no stale bytes, ever.
+#[test]
+fn v1_read_cache_serves_identical_bytes_and_tracks_generation() {
+    let mut platform = Platform::new(setup(83), surrogate(83));
+    platform.run_until(4_000.0);
+    let server = VizServer::start(0, Routes::new()).unwrap();
+    let inbox = server.enable_api();
+    platform.set_generation_gauge(inbox.generation_gauge());
+    let addr = server.addr();
+
+    let paths = [
+        "/api/v1/status",
+        "/api/v1/cluster?window=3600",
+        "/api/v1/sessions",
+        "/api/v1/sessions?limit=2&offset=1",
+        "/api/v1/leaderboard?k=5",
+        "/api/v1/parallel",
+        "/api/v1/curves?limit=3&offset=0",
+    ];
+    for path in paths {
+        let (s1, h1, b1) = call_full(addr, &inbox, &mut platform, "GET", path, vec![], b"");
+        let (s2, h2, b2) = call_full(addr, &inbox, &mut platform, "GET", path, vec![], b"");
+        assert_eq!((s1, s2), (200, 200), "{path}");
+        assert_eq!(
+            header_value(&h1, "X-Cache").as_deref(),
+            Some("miss"),
+            "{path}: first GET renders"
+        );
+        assert_eq!(
+            header_value(&h2, "X-Cache").as_deref(),
+            Some("hit"),
+            "{path}: repeat GET at a fixed generation must be cache-resident"
+        );
+        assert_eq!(
+            b1, b2,
+            "{path}: cached body must be byte-identical to the rendered one"
+        );
+        assert_eq!(header_value(&h1, "ETag"), header_value(&h2, "ETag"), "{path}");
+        assert_eq!(
+            header_value(&h2, "Cache-Control").as_deref(),
+            Some("no-cache"),
+            "{path}: clients must revalidate, not reuse blindly"
+        );
+    }
+
+    let (_, h0, b0) = call_full(addr, &inbox, &mut platform, "GET", "/api/v1/status", vec![], b"");
+    assert_eq!(header_value(&h0, "X-Cache").as_deref(), Some("hit"));
+    let gen_of = |bytes: &[u8]| {
+        chopt::util::json::parse(&String::from_utf8(bytes.to_vec()).unwrap())
+            .unwrap()
+            .get("generated_at_event")
+            .and_then(|v| v.as_str())
+            .unwrap()
+            .parse::<u64>()
+            .unwrap()
+    };
+    let gen0 = gen_of(&b0);
+
+    // An accepted command bumps the command epoch: the next GET misses
+    // even before the engine ticks (set_quota-style mutations don't
+    // advance the event counter, so the epoch is what catches them).
+    let sid = platform.engine().active_agents().next().unwrap().pools.live()[0];
+    let body = format!(r#"{{"command": "pause_session", "session": "{}"}}"#, sid.0);
+    let (s, doc) = call(addr, &inbox, &mut platform, "POST", "/api/v1/commands", body.as_bytes());
+    expect_enveloped(s, &doc, "pause ack");
+    let (s, h1, _) = call_full(addr, &inbox, &mut platform, "GET", "/api/v1/status", vec![], b"");
+    assert_eq!(s, 200);
+    assert_eq!(
+        header_value(&h1, "X-Cache").as_deref(),
+        Some("miss"),
+        "a successful command must drop the read surface out of cache"
+    );
+
+    // An engine tick bumps the generation: miss again, fresh body.
+    platform.advance(600.0);
+    let (s, h2, b2) = call_full(addr, &inbox, &mut platform, "GET", "/api/v1/status", vec![], b"");
+    assert_eq!(s, 200);
+    assert_eq!(
+        header_value(&h2, "X-Cache").as_deref(),
+        Some("miss"),
+        "a new generation must not reuse the previous tick's bytes"
+    );
+    let gen2 = gen_of(&b2);
+    assert!(gen2 > gen0, "generation must move forward ({gen0} -> {gen2})");
+
+    server.stop();
+}
+
+/// Multi-study endpoints go through the same cache: miss → hit with
+/// byte-identical bodies on every documented path.
+#[test]
+fn v1_read_cache_covers_multi_study_endpoints() {
+    let mut platform = MultiPlatform::new(multi_manifest(), multi_trainer);
+    platform.run_until(2_500.0);
+    let server = VizServer::start(0, Routes::new()).unwrap();
+    let inbox = server.enable_api();
+    platform.set_generation_gauge(inbox.generation_gauge());
+    let addr = server.addr();
+
+    for path in [
+        "/api/v1/status",
+        "/api/v1/cluster?window=1800",
+        "/api/v1/fair_share",
+        "/api/v1/studies",
+        "/api/v1/studies/alice/sessions?limit=3",
+        "/api/v1/studies/alice/leaderboard?k=3",
+        "/api/v1/studies/alice/parallel",
+        "/api/v1/studies/bob/curves?limit=2&offset=0",
+    ] {
+        let (s1, h1, b1) = call_full(addr, &inbox, &mut platform, "GET", path, vec![], b"");
+        let (s2, h2, b2) = call_full(addr, &inbox, &mut platform, "GET", path, vec![], b"");
+        assert_eq!((s1, s2), (200, 200), "{path}");
+        assert_eq!(header_value(&h1, "X-Cache").as_deref(), Some("miss"), "{path}");
+        assert_eq!(header_value(&h2, "X-Cache").as_deref(), Some("hit"), "{path}");
+        assert_eq!(b1, b2, "{path}: cached bytes diverged");
+    }
+    // Errors are never cached: an unknown study misses every time.
+    let (s, h, _) = call_full(
+        addr,
+        &inbox,
+        &mut platform,
+        "GET",
+        "/api/v1/studies/nobody/sessions",
+        vec![],
+        b"",
+    );
+    assert_eq!(s, 404);
+    assert!(header_value(&h, "X-Cache").is_none(), "errors must not carry cache headers");
+
+    server.stop();
+}
+
+/// ETag round-trip: a 200 carries a strong validator, If-None-Match on
+/// the same entity answers a bodyless 304 (no re-render, no copy), and
+/// after an engine tick the stale validator gets a fresh 200 with a new
+/// ETag.
+#[test]
+fn v1_etag_if_none_match_round_trip() {
+    let mut platform = Platform::new(setup(89), surrogate(89));
+    platform.run_until(3_000.0);
+    let server = VizServer::start(0, Routes::new()).unwrap();
+    let inbox = server.enable_api();
+    platform.set_generation_gauge(inbox.generation_gauge());
+    let addr = server.addr();
+    let path = "/api/v1/leaderboard?k=3";
+
+    let (s, head, body) = call_full(addr, &inbox, &mut platform, "GET", path, vec![], b"");
+    assert_eq!(s, 200);
+    let etag = header_value(&head, "ETag").expect("200 queries carry an ETag");
+    assert!(
+        etag.starts_with('"') && etag.ends_with('"') && !etag.starts_with("W/"),
+        "ETag must be a strong validator: {etag}"
+    );
+    assert!(!body.is_empty());
+
+    // Same entity → 304, empty body, validator echoed.
+    let (s, head304, body304) = call_full(
+        addr,
+        &inbox,
+        &mut platform,
+        "GET",
+        path,
+        vec![("If-None-Match".into(), etag.clone())],
+        b"",
+    );
+    assert_eq!(s, 304, "{head304}");
+    assert!(body304.is_empty(), "304 must not carry a body");
+    assert_eq!(header_value(&head304, "ETag"), Some(etag.clone()));
+
+    // The engine ticks → new generation → the old validator is stale.
+    platform.advance(2_000.0);
+    let (s, head2, body2) = call_full(
+        addr,
+        &inbox,
+        &mut platform,
+        "GET",
+        path,
+        vec![("If-None-Match".into(), etag.clone())],
+        b"",
+    );
+    assert_eq!(s, 200, "stale validator must re-render");
+    assert!(!body2.is_empty());
+    let etag2 = header_value(&head2, "ETag").unwrap();
+    assert_ne!(etag, etag2, "a new generation must mint a new ETag");
+
+    server.stop();
+}
+
+/// `?at_event=` scrub results are pinned cache entries: distinct targets
+/// never share an entry, repeats hit with identical bytes, and the whole
+/// fixed-generation stored surface is cache-resident after first touch.
+#[test]
+fn at_event_scrub_cache_entries_are_pinned_and_distinct() {
+    let seed = 97u64;
+    let mut engine = SimEngine::new(setup(seed), surrogate(seed));
+    engine.run_until(6_000.0);
+    let target = engine.events_processed();
+    assert!(target >= 4, "need a few events to scrub over (got {target})");
+    let snap = chopt::util::json::parse(&engine.snapshot_json().to_string_pretty()).unwrap();
+    let dir = temp_run_dir("scrub-cache");
+    std::fs::write(dir.join("snapshot.json"), snap.to_string_pretty()).unwrap();
+    let mut stored = StoredRun::open_with(
+        &dir,
+        move |id| Box::new(SurrogateTrainer::new(seed ^ id)) as Box<dyn Trainer>,
+        chopt::trainer::surrogate::default_multi_factory,
+    )
+    .unwrap();
+    let server = VizServer::start(0, Routes::new()).unwrap();
+    let inbox = server.enable_api();
+    let addr = server.addr();
+
+    let (m1, m2) = (target / 2, target / 4);
+    assert_ne!(m1, m2);
+    let p1 = format!("/api/v1/status?at_event={m1}");
+    let p2 = format!("/api/v1/status?at_event={m2}");
+
+    let (s, h1a, b1a) = call_full(addr, &inbox, &mut stored, "GET", &p1, vec![], b"");
+    assert_eq!(s, 200);
+    assert_eq!(header_value(&h1a, "X-Cache").as_deref(), Some("miss"));
+    let (s, h1b, b1b) = call_full(addr, &inbox, &mut stored, "GET", &p1, vec![], b"");
+    assert_eq!(s, 200);
+    assert_eq!(
+        header_value(&h1b, "X-Cache").as_deref(),
+        Some("hit"),
+        "a repeated scrub target must not replay again"
+    );
+    assert_eq!(b1a, b1b, "pinned entry bytes diverged");
+
+    // A different target is a different entity: own entry, own ETag.
+    let (s, h2, b2) = call_full(addr, &inbox, &mut stored, "GET", &p2, vec![], b"");
+    assert_eq!(s, 200);
+    assert_eq!(
+        header_value(&h2, "X-Cache").as_deref(),
+        Some("miss"),
+        "distinct at_event targets must never share a cache entry"
+    );
+    assert_ne!(b1a, b2, "different positions must observe different states");
+    assert_ne!(header_value(&h1a, "ETag"), header_value(&h2, "ETag"));
+
+    // Conditional scrub: 304 against the pinned validator.
+    let etag = header_value(&h1a, "ETag").unwrap();
+    let (s, _, body) = call_full(
+        addr,
+        &inbox,
+        &mut stored,
+        "GET",
+        &p1,
+        vec![("If-None-Match".into(), etag)],
+        b"",
+    );
+    assert_eq!(s, 304);
+    assert!(body.is_empty());
+
+    // Stored runs have a fixed generation: the plain read surface is
+    // cache-resident after one touch, no gauge wiring involved.
+    let (_, ha, ba) = call_full(addr, &inbox, &mut stored, "GET", "/api/v1/status", vec![], b"");
+    let (_, hb, bb) = call_full(addr, &inbox, &mut stored, "GET", "/api/v1/status", vec![], b"");
+    assert_eq!(header_value(&ha, "X-Cache").as_deref(), Some("miss"));
+    assert_eq!(header_value(&hb, "X-Cache").as_deref(), Some("hit"));
+    assert_eq!(ba, bb);
+
+    server.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `?since=<seq>` (and a `Last-Event-ID` resume that fell behind the
+/// ring) replays the recorded history log before switching to the live
+/// feed — no dropped-events notice when the history covers the gap.
+#[test]
+fn sse_since_replays_history_below_the_ring_window() {
+    let dir = temp_run_dir("sse-hist");
+    // Tiny ring: after six publishes only 5..6 are retained in memory.
+    let feed = EventFeed::with_history(2, dir.join("events.jsonl")).unwrap();
+    for i in 1..=6 {
+        feed.publish(format!(r#"{{"ev":"e{i}"}}"#));
+    }
+    assert_eq!(feed.last_seq(), 6);
+    let server = VizServer::start(0, Routes::new()).unwrap();
+    server.serve_events(feed.clone(), Duration::from_millis(80));
+    let addr = server.addr();
+
+    // ?since=0 tails the full recorded stream from disk, then the ring.
+    let text = read_sse_at(
+        addr,
+        "/api/v1/events?since=0",
+        None,
+        &["id: 6\ndata: "],
+        Duration::from_secs(10),
+    );
+    for i in 1..=6 {
+        assert!(
+            text.contains(&format!("id: {i}\ndata: ")),
+            "history replay must cover seq {i}: {text}"
+        );
+    }
+    assert!(
+        !text.contains("dropped"),
+        "history covers the gap — no drop notice expected: {text}"
+    );
+
+    // Last-Event-ID below the retention window reuses the same path.
+    let text = read_sse(addr, Some(2), &["id: 6\ndata: "], Duration::from_secs(10));
+    for i in 3..=6 {
+        assert!(text.contains(&format!("id: {i}\ndata: ")), "{text}");
+    }
+    assert!(!text.contains("id: 2\ndata: "), "resume must start after the cursor: {text}");
+    assert!(!text.contains("dropped"), "{text}");
+
+    // An explicit ?since= wins over the reconnect header.
+    let text = read_sse_at(
+        addr,
+        "/api/v1/events?since=5",
+        Some(0),
+        &["id: 6\ndata: "],
+        Duration::from_secs(10),
+    );
+    assert!(text.contains("id: 6\ndata: "), "{text}");
+    assert!(!text.contains("id: 5\ndata: "), "?since must override Last-Event-ID: {text}");
+
+    server.stop();
+    let _ = std::fs::remove_dir_all(&dir);
 }
