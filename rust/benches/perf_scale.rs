@@ -67,8 +67,8 @@ fn scale_manifest() -> StudyManifest {
     }
 }
 
-fn factory(study: usize, id: u64) -> Box<dyn Trainer> {
-    Box::new(SurrogateTrainer::new(((study as u64 + 1) << 16) ^ id)) as Box<dyn Trainer>
+fn factory(study: usize, id: u64) -> Box<dyn Trainer + Send> {
+    Box::new(SurrogateTrainer::new(((study as u64 + 1) << 16) ^ id)) as Box<dyn Trainer + Send>
 }
 
 fn main() {
@@ -230,6 +230,37 @@ fn main() {
         .metric("read_uncached_rps", uncached_rps)
         .metric("read_cached_rps", cached_rps)
         .metric("read_cache_speedup_x", read_speedup);
+
+    // -- F. parallel stepping: 8 step threads vs serial --------------------
+    // Section A's serial run is the specification.  Re-run the same
+    // manifest with `--step-threads 8` and assert the final scheduler
+    // state is bit-identical (event count, virtual clock, and the full
+    // snapshot document) before reporting the wall-clock speedup; the
+    // `parallel_step_speedup_x` floor is pinned in the committed
+    // baseline, so CI fails if windowed stepping stops paying off.
+    let t2 = Instant::now();
+    let mut par = StudyScheduler::new(scale_manifest(), factory);
+    par.set_step_threads(8);
+    par.run_to_completion();
+    let par_wall = t2.elapsed().as_secs_f64();
+    assert!(par.is_done(), "parallel scale run must drain");
+    assert_eq!(par.events_processed(), events, "parallel event count diverged from serial");
+    assert_eq!(par.now(), end_t, "parallel virtual end time diverged from serial");
+    assert_eq!(
+        par.snapshot_json().to_string_compact(),
+        sched.snapshot_json().to_string_compact(),
+        "parallel snapshot diverged from serial"
+    );
+    let par_evps = events as f64 / par_wall.max(1e-9);
+    let par_speedup = wall / par_wall.max(1e-9);
+    println!(
+        "parallel stepping (8 threads): {par_wall:.2}s wall -> {par_evps:.0} events/s, \
+         {par_speedup:.2}x vs serial"
+    );
+    out.metric("parallel_step_threads", 8.0)
+        .metric("parallel_step_wall_secs", par_wall)
+        .metric("parallel_step_events_per_sec", par_evps)
+        .metric("parallel_step_speedup_x", par_speedup);
 
     match out.save() {
         Ok(path) => println!("wrote {}", path.display()),

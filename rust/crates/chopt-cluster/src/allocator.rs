@@ -1,0 +1,510 @@
+//! GPU allocation with per-tenant accounting and conservation invariants.
+
+use std::collections::HashMap;
+
+use chopt_core::events::{SimTime, TimeIntegrator};
+
+/// Who holds a GPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Owner {
+    /// A CHOPT session (by CHOPT-session id, not NSML-session id).
+    Chopt(u64),
+    /// Aggregate non-CHOPT users of the shared cluster.
+    External,
+}
+
+/// One successful allocator mutation, recorded for deterministic
+/// replay.  A scheduler that steps studies against per-study *shadow*
+/// clusters on worker threads records each shadow's ops and re-applies
+/// them to the real cluster in serial event order, so the real
+/// integrator series (and every derived document) is byte-identical to
+/// a serial run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ClusterOp {
+    Alloc { owner: Owner, n: usize, at: SimTime },
+    Release { owner: Owner, n: usize, at: SimTime },
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum AllocError {
+    #[error("insufficient GPUs: requested {requested}, available {available}")]
+    Insufficient { requested: usize, available: usize },
+    #[error("owner releases {requested} GPUs but holds only {held}")]
+    OverRelease { requested: usize, held: usize },
+}
+
+/// The shared cluster.
+///
+/// Accounting is O(1) on the hot path: `used()` / `held_by_chopt()` /
+/// `available_for()` read running counters maintained by
+/// `allocate`/`release` instead of summing the `held` map on every call
+/// (the coordinator consults them on every fill/preempt/master-tick, so
+/// the old O(owners) sums were the dominant per-event cost at 100+
+/// tenants).  A debug-assert invariant keeps the counters equal to a
+/// from-scratch recomputation ([`Cluster::recount`]).
+#[derive(Debug)]
+pub struct Cluster {
+    total: usize,
+    held: HashMap<Owner, usize>,
+    /// Running Σ `held` over all owners (O(1) `used()`).
+    used_total: usize,
+    /// Running Σ `held` over `Owner::Chopt(_)` (O(1) `held_by_chopt()`).
+    used_chopt: usize,
+    /// Per-owner allocation ceilings (multi-tenant quota/fair-share
+    /// bookkeeping).  Owners without an entry are unbounded — the
+    /// single-study path never sets caps and behaves exactly as before.
+    caps: HashMap<Owner, usize>,
+    /// Total in-use GPUs over time (Fig. 8 green line).
+    pub usage_total: TimeIntegrator,
+    /// Non-CHOPT usage over time (Fig. 8 yellow line).
+    pub usage_external: TimeIntegrator,
+    /// CHOPT usage over time.
+    pub usage_chopt: TimeIntegrator,
+    /// When `Some`, every successful allocate/release is appended here
+    /// (see [`ClusterOp`]).  Off (`None`) outside shadow stepping.
+    ops: Option<Vec<ClusterOp>>,
+}
+
+impl Cluster {
+    pub fn new(total_gpus: usize) -> Cluster {
+        Cluster {
+            total: total_gpus,
+            held: HashMap::new(),
+            used_total: 0,
+            used_chopt: 0,
+            caps: HashMap::new(),
+            usage_total: TimeIntegrator::new(),
+            usage_external: TimeIntegrator::new(),
+            usage_chopt: TimeIntegrator::new(),
+            ops: None,
+        }
+    }
+
+    /// Build a shadow cluster for stepping one capped tenant in
+    /// isolation: a dedicated cluster of `cap` GPUs with the tenant's
+    /// current holding pre-seeded, recording every subsequent mutation.
+    /// Valid only while the tenant's cap is its binding constraint on
+    /// the real cluster (the scheduler checks this before going
+    /// parallel); series retention is off — the recorded ops are
+    /// replayed against the real cluster's integrators instead.
+    pub fn shadow_for(owner: Owner, cap: usize, held: usize, now: SimTime) -> Cluster {
+        debug_assert!(held <= cap, "shadow holding exceeds its cap");
+        let mut c = Cluster::new(cap);
+        c.set_series_retention(false);
+        c.set_cap(owner, cap);
+        if held > 0 {
+            c.allocate(owner, held, now).expect("held <= cap");
+        }
+        c.ops = Some(Vec::new());
+        c
+    }
+
+    /// Drain the recorded ops (recording stays on if it was on).
+    pub fn take_ops(&mut self) -> Vec<ClusterOp> {
+        self.ops.as_mut().map(std::mem::take).unwrap_or_default()
+    }
+
+    /// Re-apply one recorded op.
+    pub fn apply_op(&mut self, op: ClusterOp) -> Result<(), AllocError> {
+        match op {
+            ClusterOp::Alloc { owner, n, at } => self.allocate(owner, n, at),
+            ClusterOp::Release { owner, n, at } => self.release(owner, n, at),
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    pub fn used(&self) -> usize {
+        self.used_total
+    }
+
+    pub fn available(&self) -> usize {
+        self.total - self.used_total
+    }
+
+    /// Utilization in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.used_total as f64 / self.total as f64
+        }
+    }
+
+    pub fn held_by(&self, owner: Owner) -> usize {
+        self.held.get(&owner).copied().unwrap_or(0)
+    }
+
+    /// Total GPUs held by all CHOPT sessions.
+    pub fn held_by_chopt(&self) -> usize {
+        self.used_chopt
+    }
+
+    /// From-scratch recomputation of the running counters — the pre-PR
+    /// per-call cost, kept for the debug-assert invariant, the property
+    /// tests, and the scale bench's O(1)-vs-recompute comparison.
+    /// Returns (Σ held over all owners, Σ held over CHOPT owners).
+    pub fn recount(&self) -> (usize, usize) {
+        let total = self.held.values().sum();
+        let chopt = self
+            .held
+            .iter()
+            .filter(|(o, _)| matches!(o, Owner::Chopt(_)))
+            .map(|(_, n)| n)
+            .sum();
+        (total, chopt)
+    }
+
+    /// Quiet fast-restore hook: suspend (or resume) series retention on
+    /// the usage integrators.  GPU-hour integrals keep accumulating
+    /// either way; only the plotting change-points are suppressed, and
+    /// re-enabling reconciles the series with the live level.
+    pub fn set_series_retention(&mut self, on: bool) {
+        self.usage_total.set_series_retention(on);
+        self.usage_chopt.set_series_retention(on);
+        self.usage_external.set_series_retention(on);
+    }
+
+    /// Cap `owner`'s total allocation (scheduler quota / borrow target).
+    /// A later, lower cap does not reclaim GPUs already held — the
+    /// scheduler preempts to drain down; the cap only gates new grants.
+    pub fn set_cap(&mut self, owner: Owner, cap: usize) {
+        self.caps.insert(owner, cap);
+    }
+
+    pub fn cap_of(&self, owner: Owner) -> Option<usize> {
+        self.caps.get(&owner).copied()
+    }
+
+    /// GPUs `owner` could allocate right now: cluster headroom, further
+    /// bounded by the owner's cap when one is set.  Schedulers consult
+    /// this *before* asking tuners for work so a capped tenant's decision
+    /// stream is identical to running on a dedicated cluster of cap size.
+    pub fn available_for(&self, owner: Owner) -> usize {
+        let free = self.available();
+        match self.caps.get(&owner) {
+            Some(&cap) => free.min(cap.saturating_sub(self.held_by(owner))),
+            None => free,
+        }
+    }
+
+    pub fn allocate(&mut self, owner: Owner, n: usize, now: SimTime) -> Result<(), AllocError> {
+        if n > self.available_for(owner) {
+            return Err(AllocError::Insufficient {
+                requested: n,
+                available: self.available_for(owner),
+            });
+        }
+        *self.held.entry(owner).or_insert(0) += n;
+        self.used_total += n;
+        if matches!(owner, Owner::Chopt(_)) {
+            self.used_chopt += n;
+        }
+        if let Some(ops) = self.ops.as_mut() {
+            ops.push(ClusterOp::Alloc { owner, n, at: now });
+        }
+        self.record(now);
+        Ok(())
+    }
+
+    pub fn release(&mut self, owner: Owner, n: usize, now: SimTime) -> Result<(), AllocError> {
+        let held = self.held_by(owner);
+        if n > held {
+            return Err(AllocError::OverRelease {
+                requested: n,
+                held,
+            });
+        }
+        if held == n {
+            self.held.remove(&owner);
+        } else {
+            *self.held.get_mut(&owner).unwrap() -= n;
+        }
+        self.used_total -= n;
+        if matches!(owner, Owner::Chopt(_)) {
+            self.used_chopt -= n;
+        }
+        if let Some(ops) = self.ops.as_mut() {
+            ops.push(ClusterOp::Release { owner, n, at: now });
+        }
+        self.record(now);
+        Ok(())
+    }
+
+    /// Force external usage to an absolute level (trace playback); returns
+    /// the delta applied (positive = grabbed, negative = released).
+    pub fn set_external_demand(&mut self, demand: usize, now: SimTime) -> i64 {
+        let current = self.held_by(Owner::External);
+        // External users can take at most what is free right now.
+        let target = demand.min(current + self.available());
+        if target > current {
+            self.allocate(Owner::External, target - current, now).unwrap();
+        } else if target < current {
+            self.release(Owner::External, current - target, now).unwrap();
+        }
+        target as i64 - current as i64
+    }
+
+    fn record(&mut self, now: SimTime) {
+        debug_assert_eq!(
+            (self.used_total, self.used_chopt),
+            self.recount(),
+            "running counters diverged from the held map"
+        );
+        debug_assert!(self.used_total <= self.total, "GPU conservation violated");
+        let ext = self.held_by(Owner::External) as f64;
+        let chopt = self.used_chopt as f64;
+        self.usage_external.set(now, ext);
+        self.usage_chopt.set(now, chopt);
+        self.usage_total.set(now, ext + chopt);
+    }
+
+    /// GPU-hours consumed by CHOPT up to `now`.
+    pub fn chopt_gpu_hours(&self, now: SimTime) -> f64 {
+        self.usage_chopt.integral_until(now) / 3600.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use chopt_core::util::proptest::{check, Config};
+    use chopt_core::util::rng::Rng;
+
+    #[test]
+    fn allocate_release_accounting() {
+        let mut c = Cluster::new(8);
+        c.allocate(Owner::Chopt(1), 3, 0.0).unwrap();
+        c.allocate(Owner::External, 4, 1.0).unwrap();
+        assert_eq!(c.used(), 7);
+        assert_eq!(c.available(), 1);
+        assert_eq!(c.held_by(Owner::Chopt(1)), 3);
+        assert_eq!(c.held_by_chopt(), 3);
+        c.release(Owner::Chopt(1), 2, 2.0).unwrap();
+        assert_eq!(c.held_by(Owner::Chopt(1)), 1);
+        assert!((c.utilization() - 5.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_oversubscription() {
+        let mut c = Cluster::new(4);
+        c.allocate(Owner::External, 3, 0.0).unwrap();
+        assert_eq!(
+            c.allocate(Owner::Chopt(1), 2, 0.0),
+            Err(AllocError::Insufficient {
+                requested: 2,
+                available: 1
+            })
+        );
+    }
+
+    #[test]
+    fn rejects_over_release() {
+        let mut c = Cluster::new(4);
+        c.allocate(Owner::Chopt(1), 1, 0.0).unwrap();
+        assert!(matches!(
+            c.release(Owner::Chopt(1), 2, 1.0),
+            Err(AllocError::OverRelease { .. })
+        ));
+    }
+
+    #[test]
+    fn external_demand_clamps_to_free() {
+        let mut c = Cluster::new(8);
+        c.allocate(Owner::Chopt(1), 6, 0.0).unwrap();
+        c.set_external_demand(5, 1.0);
+        assert_eq!(c.held_by(Owner::External), 2); // only 2 free
+        c.release(Owner::Chopt(1), 4, 2.0).unwrap();
+        c.set_external_demand(5, 3.0);
+        assert_eq!(c.held_by(Owner::External), 5);
+        c.set_external_demand(1, 4.0);
+        assert_eq!(c.held_by(Owner::External), 1);
+    }
+
+    #[test]
+    fn caps_bound_per_owner_allocation() {
+        let mut c = Cluster::new(8);
+        c.set_cap(Owner::Chopt(1), 3);
+        assert_eq!(c.available_for(Owner::Chopt(1)), 3);
+        assert_eq!(c.available_for(Owner::Chopt(2)), 8); // uncapped
+        c.allocate(Owner::Chopt(1), 3, 0.0).unwrap();
+        assert_eq!(c.available_for(Owner::Chopt(1)), 0);
+        assert_eq!(
+            c.allocate(Owner::Chopt(1), 1, 1.0),
+            Err(AllocError::Insufficient {
+                requested: 1,
+                available: 0
+            })
+        );
+        // Other owners still see the remaining cluster headroom.
+        assert_eq!(c.available_for(Owner::Chopt(2)), 5);
+        c.allocate(Owner::Chopt(2), 5, 2.0).unwrap();
+        assert_eq!(c.available_for(Owner::Chopt(1)), 0);
+        // Raising the cap re-opens headroom only as the cluster frees up.
+        c.set_cap(Owner::Chopt(1), 6);
+        assert_eq!(c.available_for(Owner::Chopt(1)), 0); // cluster full
+        c.release(Owner::Chopt(2), 2, 3.0).unwrap();
+        assert_eq!(c.available_for(Owner::Chopt(1)), 2);
+    }
+
+    #[test]
+    fn lowering_cap_below_held_does_not_reclaim() {
+        let mut c = Cluster::new(8);
+        c.set_cap(Owner::Chopt(1), 6);
+        c.allocate(Owner::Chopt(1), 6, 0.0).unwrap();
+        c.set_cap(Owner::Chopt(1), 2);
+        // Held stays at 6 (the scheduler preempts to drain); new grants
+        // are refused and available_for saturates at 0 instead of
+        // underflowing.
+        assert_eq!(c.held_by(Owner::Chopt(1)), 6);
+        assert_eq!(c.available_for(Owner::Chopt(1)), 0);
+        assert!(c.allocate(Owner::Chopt(1), 1, 1.0).is_err());
+    }
+
+    #[test]
+    fn shadow_records_ops_and_replay_matches() {
+        // A capped tenant stepped against a shadow cluster makes the
+        // same decisions as against the real one, and replaying the
+        // recorded ops reproduces the real cluster's state and series.
+        let owner = Owner::Chopt(7);
+        let mut real = Cluster::new(16);
+        real.set_cap(owner, 4);
+        real.allocate(owner, 2, 0.0).unwrap();
+
+        let mut shadow = Cluster::shadow_for(owner, 4, 2, 0.0);
+        assert_eq!(shadow.available_for(owner), real.available_for(owner));
+        shadow.allocate(owner, 2, 1.0).unwrap();
+        assert_eq!(shadow.available_for(owner), 0);
+        shadow.release(owner, 3, 2.0).unwrap();
+        let ops = shadow.take_ops();
+        assert_eq!(
+            ops,
+            vec![
+                ClusterOp::Alloc { owner, n: 2, at: 1.0 },
+                ClusterOp::Release { owner, n: 3, at: 2.0 },
+            ]
+        );
+        assert!(shadow.take_ops().is_empty()); // drained, still recording
+        for op in ops {
+            real.apply_op(op).unwrap();
+        }
+        assert_eq!(real.held_by(owner), 1);
+        assert_eq!(real.held_by(owner), shadow.held_by(owner));
+        // The real series saw the replayed change points.
+        assert_eq!(real.usage_chopt.series.last().copied(), Some((2.0, 1.0)));
+    }
+
+    #[test]
+    fn gpu_hours_integration() {
+        let mut c = Cluster::new(4);
+        c.allocate(Owner::Chopt(1), 2, 0.0).unwrap();
+        c.release(Owner::Chopt(1), 2, 7200.0).unwrap(); // 2 GPUs for 2h
+        assert!((c.chopt_gpu_hours(7200.0) - 4.0).abs() < 1e-9);
+    }
+
+    /// Property: under any interleaving of allocs/releases/demand changes,
+    /// conservation holds: used <= total, and per-owner balances never go
+    /// negative (enforced by types, checked via accounting equality).
+    #[test]
+    fn prop_gpu_conservation() {
+        check("gpu-conservation", Config::default(), |rng: &mut Rng, size| {
+            let total = 1 + rng.index(32);
+            let mut c = Cluster::new(total);
+            let mut t = 0.0;
+            for _ in 0..size * 4 {
+                t += rng.f64();
+                match rng.index(3) {
+                    0 => {
+                        let owner = Owner::Chopt(rng.index(3) as u64);
+                        let n = rng.index(4);
+                        let _ = c.allocate(owner, n, t);
+                    }
+                    1 => {
+                        let owner = Owner::Chopt(rng.index(3) as u64);
+                        let held = c.held_by(owner);
+                        if held > 0 {
+                            let n = 1 + rng.index(held);
+                            c.release(owner, n, t).map_err(|e| e.to_string())?;
+                        }
+                    }
+                    _ => {
+                        c.set_external_demand(rng.index(total + 4), t);
+                    }
+                }
+                chopt_core::prop_assert!(
+                    c.used() <= c.total(),
+                    "used {} > total {}",
+                    c.used(),
+                    c.total()
+                );
+                let sum = c.held_by_chopt() + c.held_by(Owner::External);
+                chopt_core::prop_assert!(sum == c.used(), "owner sum {} != used {}", sum, c.used());
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: under random interleavings of allocate / release /
+    /// set_cap / set_external_demand, the O(1) running counters stay
+    /// equal to a from-scratch recomputation over the held map, and
+    /// conservation (`used <= total`) holds throughout.
+    #[test]
+    fn prop_counters_match_recount() {
+        check(
+            "counters-match-recount",
+            Config::default(),
+            |rng: &mut Rng, size| {
+                let total = 1 + rng.index(32);
+                let mut c = Cluster::new(total);
+                let mut t = 0.0;
+                for _ in 0..size * 4 {
+                    t += rng.f64();
+                    match rng.index(4) {
+                        0 => {
+                            let owner = Owner::Chopt(rng.index(4) as u64);
+                            let _ = c.allocate(owner, rng.index(4), t);
+                        }
+                        1 => {
+                            let owner = Owner::Chopt(rng.index(4) as u64);
+                            let held = c.held_by(owner);
+                            if held > 0 {
+                                c.release(owner, 1 + rng.index(held), t)
+                                    .map_err(|e| e.to_string())?;
+                            }
+                        }
+                        2 => {
+                            // Caps gate future grants only; they must
+                            // never perturb the accounting itself.
+                            c.set_cap(Owner::Chopt(rng.index(4) as u64), rng.index(total + 1));
+                        }
+                        _ => {
+                            c.set_external_demand(rng.index(total + 4), t);
+                        }
+                    }
+                    let (sum_total, sum_chopt) = c.recount();
+                    chopt_core::prop_assert!(
+                        c.used() == sum_total,
+                        "used() {} != recount {}",
+                        c.used(),
+                        sum_total
+                    );
+                    chopt_core::prop_assert!(
+                        c.held_by_chopt() == sum_chopt,
+                        "held_by_chopt() {} != recount {}",
+                        c.held_by_chopt(),
+                        sum_chopt
+                    );
+                    chopt_core::prop_assert!(
+                        c.used() <= c.total(),
+                        "used {} > total {}",
+                        c.used(),
+                        c.total()
+                    );
+                }
+                Ok(())
+            },
+        );
+    }
+}

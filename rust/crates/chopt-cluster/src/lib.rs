@@ -1,0 +1,13 @@
+//! Shared GPU cluster simulator (substitution for the NSML cluster — see
+//! DESIGN.md §Substitutions).
+//!
+//! The cluster tracks who owns every GPU (CHOPT sessions vs. non-CHOPT
+//! users), enforces capacity, and integrates per-tenant usage over virtual
+//! time — the signals the master agent's Stop-and-Go controller reads and
+//! the series Fig. 8 plots.
+
+mod allocator;
+mod trace;
+
+pub use allocator::{AllocError, Cluster, ClusterOp, Owner};
+pub use trace::{ExternalLoadTrace, TraceZone};

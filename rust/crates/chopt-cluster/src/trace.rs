@@ -1,0 +1,206 @@
+//! Non-CHOPT workload trace generator.
+//!
+//! Reproduces the load pattern of the paper's Fig. 8, which divides time
+//! into zones:
+//!
+//!   A — no CHOPT sessions; moderate external load only.
+//!   B — CHOPT sessions start; external load unchanged.
+//!   C — external users go idle; the cluster is under-utilized, so the
+//!       master agent hands idle GPUs to CHOPT.
+//!   D — external users surge back; the master agent claws GPUs back from
+//!       CHOPT sessions.
+//!   E — CHOPT sessions drain and finish; external load tapers.
+//!
+//! The trace emits *demanded* external GPUs as a function of virtual time:
+//! a piecewise base level plus seeded jitter, so runs are reproducible but
+//! not perfectly flat.
+
+use chopt_core::events::SimTime;
+use chopt_core::util::rng::Rng;
+
+/// Named zone of the Fig. 8 timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceZone {
+    A,
+    B,
+    C,
+    D,
+    E,
+}
+
+/// Piecewise external-demand trace over `[0, horizon)`.
+#[derive(Debug, Clone)]
+pub struct ExternalLoadTrace {
+    pub horizon: SimTime,
+    /// Fraction of total GPUs demanded per zone (A..E base levels).
+    pub base: [f64; 5],
+    pub total_gpus: usize,
+    pub jitter: f64,
+    seed: u64,
+}
+
+impl ExternalLoadTrace {
+    /// The canonical Fig. 8 shape over `horizon` seconds of virtual time.
+    pub fn fig8(total_gpus: usize, horizon: SimTime, seed: u64) -> ExternalLoadTrace {
+        ExternalLoadTrace {
+            horizon,
+            // A: moderate, B: moderate, C: idle, D: surge, E: taper.
+            base: [0.55, 0.55, 0.15, 0.85, 0.35],
+            total_gpus,
+            jitter: 0.05,
+            seed,
+        }
+    }
+
+    /// Jitter seed (private field; exposed for snapshot serialization).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Serialize for engine snapshots.  The seed travels as a string:
+    /// JSON numbers are f64 and would corrupt seeds ≥ 2^53, silently
+    /// breaking restore determinism.
+    pub fn to_json(&self) -> chopt_core::util::json::Value {
+        use chopt_core::util::json::Value as Json;
+        Json::obj()
+            .with("horizon", Json::Num(self.horizon))
+            .with("base", Json::from_f64_slice(&self.base))
+            .with("total_gpus", Json::Num(self.total_gpus as f64))
+            .with("jitter", Json::Num(self.jitter))
+            .with("seed", Json::Str(self.seed.to_string()))
+    }
+
+    /// Inverse of [`ExternalLoadTrace::to_json`].
+    pub fn from_json(doc: &chopt_core::util::json::Value) -> anyhow::Result<ExternalLoadTrace> {
+        let num = |key: &str| -> anyhow::Result<f64> {
+            doc.get(key)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("trace missing numeric '{key}'"))
+        };
+        let base_arr = doc
+            .get("base")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("trace missing 'base'"))?;
+        if base_arr.len() != 5 {
+            anyhow::bail!("trace 'base' must have 5 zone levels");
+        }
+        let mut base = [0.0; 5];
+        for (slot, v) in base.iter_mut().zip(base_arr) {
+            *slot = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("trace 'base' entries must be numbers"))?;
+        }
+        let seed = match doc.get("seed") {
+            Some(v) => match v.as_str() {
+                Some(s) => s
+                    .parse::<u64>()
+                    .map_err(|_| anyhow::anyhow!("trace 'seed' is not a u64: {s:?}"))?,
+                None => v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("trace 'seed' must be a string or number"))?
+                    as u64,
+            },
+            None => anyhow::bail!("trace missing 'seed'"),
+        };
+        Ok(ExternalLoadTrace {
+            horizon: num("horizon")?,
+            base,
+            total_gpus: num("total_gpus")? as usize,
+            jitter: num("jitter")?,
+            seed,
+        })
+    }
+
+    /// Zone boundaries at 15% / 30% / 55% / 80% of the horizon.
+    pub fn zone(&self, t: SimTime) -> TraceZone {
+        let f = (t / self.horizon).clamp(0.0, 1.0);
+        if f < 0.15 {
+            TraceZone::A
+        } else if f < 0.30 {
+            TraceZone::B
+        } else if f < 0.55 {
+            TraceZone::C
+        } else if f < 0.80 {
+            TraceZone::D
+        } else {
+            TraceZone::E
+        }
+    }
+
+    /// External GPU demand at time `t` (deterministic in (seed, t-bucket)).
+    pub fn demand(&self, t: SimTime) -> usize {
+        let zone = self.zone(t);
+        let base = self.base[zone as usize];
+        // Jitter varies per ~1%-of-horizon bucket so adjacent samples move.
+        let bucket = ((t / self.horizon) * 100.0) as u64;
+        let mut rng = Rng::new(self.seed ^ bucket.wrapping_mul(0xA24B_AED4_963E_E407));
+        let jit = (rng.f64() * 2.0 - 1.0) * self.jitter;
+        let frac = (base + jit).clamp(0.0, 1.0);
+        (frac * self.total_gpus as f64).round() as usize
+    }
+
+    /// Does the CHOPT workload exist in this zone? (Zones B..E.)
+    pub fn chopt_active(&self, t: SimTime) -> bool {
+        !matches!(self.zone(t), TraceZone::A)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zones_partition_timeline() {
+        let tr = ExternalLoadTrace::fig8(40, 1000.0, 1);
+        assert_eq!(tr.zone(0.0), TraceZone::A);
+        assert_eq!(tr.zone(200.0), TraceZone::B);
+        assert_eq!(tr.zone(400.0), TraceZone::C);
+        assert_eq!(tr.zone(700.0), TraceZone::D);
+        assert_eq!(tr.zone(950.0), TraceZone::E);
+    }
+
+    #[test]
+    fn demand_matches_zone_shape() {
+        let tr = ExternalLoadTrace::fig8(100, 1000.0, 2);
+        // C must be the trough, D the peak.
+        let c: usize = tr.demand(400.0);
+        let d: usize = tr.demand(700.0);
+        let a: usize = tr.demand(50.0);
+        assert!(c < a, "C ({c}) should be below A ({a})");
+        assert!(d > a, "D ({d}) should be above A ({a})");
+        assert!(d > c + 30);
+    }
+
+    #[test]
+    fn demand_deterministic_and_bounded() {
+        let tr = ExternalLoadTrace::fig8(64, 500.0, 3);
+        for i in 0..100 {
+            let t = i as f64 * 5.0;
+            let d1 = tr.demand(t);
+            let d2 = tr.demand(t);
+            assert_eq!(d1, d2);
+            assert!(d1 <= 64);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_demand() {
+        // Seed above 2^53 — must survive JSON (travels as a string, since
+        // an f64 number would corrupt the low bits).
+        let big_seed = (1u64 << 60) | 77;
+        let tr = ExternalLoadTrace::fig8(24, 2000.0, big_seed);
+        let back = ExternalLoadTrace::from_json(&tr.to_json()).unwrap();
+        assert_eq!(back.seed(), big_seed);
+        for i in 0..40 {
+            let t = i as f64 * 50.0;
+            assert_eq!(tr.demand(t), back.demand(t));
+        }
+    }
+
+    #[test]
+    fn chopt_activity_window() {
+        let tr = ExternalLoadTrace::fig8(10, 1000.0, 4);
+        assert!(!tr.chopt_active(10.0));
+        assert!(tr.chopt_active(500.0));
+    }
+}

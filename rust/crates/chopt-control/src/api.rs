@@ -1,0 +1,1111 @@
+//! The versioned control-plane API: command + query `/api/v1`.
+//!
+//! The serving layer used to be a passive route table the engine loop
+//! pushed full documents into on every tick.  This module replaces that
+//! with a **pull-based** surface:
+//!
+//! * **Queries** — `GET /api/v1/{status,cluster,fair_share,studies,
+//!   sessions,leaderboard,parallel,curves}` (plus per-study variants
+//!   under `/api/v1/studies/<name>/`) are parsed into typed [`ApiQuery`]
+//!   values and answered from a [`RunSource`]'s incremental documents at
+//!   request time, instead of the loop re-rendering every document every
+//!   tick whether anyone is watching or not.
+//! * **Commands** — `POST /api/v1/commands` bodies parse into typed
+//!   [`ApiCommand`] values which a [`CommandSink`] (the `SimEngine` /
+//!   `StudyScheduler` loop) applies at tick boundaries (submit a study,
+//!   pause/resume/stop a session or study, set quota/priority).
+//!   Commands are recorded as replay inputs, so a command-steered run
+//!   stays snapshot-restorable.
+//! * **Envelope** — every response carries `schema_version`,
+//!   `generated_at_event` (a *string*: event counts are u64), and the
+//!   payload under `data` (or `error`).  All ids are strings throughout.
+//!
+//! The read side is deliberately its own trait so the same `/api/v1`
+//! surface serves three run shapes behind one abstraction:
+//!
+//! * **live** — `Platform` / `MultiPlatform` answer from their
+//!   incremental documents ([`RunSource`] + [`CommandSink`]),
+//! * **stored** — `stored::StoredRun` rebuilds the identical documents
+//!   from a run directory's snapshot (read-only: its [`CommandSink`]
+//!   rejects every command),
+//! * **replayed** — `stored::ReplaySource` scrubs a snapshot to any
+//!   recorded event count (`?at_event=N` on any query).
+//!
+//! The legacy unversioned `/api/*.json` paths are **deprecated aliases**
+//! onto the v1 handlers: they serve byte-identical v1 bodies.
+//!
+//! Threading: the HTTP server answers each connection on its own thread,
+//! but the platform is single-threaded by design (`&mut` engine loop).
+//! The bridge is a channel of [`ApiRequest`]s: connection threads enqueue
+//! and block on a reply; the engine loop drains the [`ApiInbox`] between
+//! advances — which is exactly the "commands apply at tick boundaries"
+//! contract.  Auth (`--api-token`) and the SSE push stream
+//! (`/api/v1/events`) are enforced/served by the HTTP layer itself, so
+//! the engine loop never sees unauthorized commands and never blocks on
+//! a slow stream consumer.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use chopt_core::util::json::Value as Json;
+
+/// Schema version stamped into every envelope.
+pub const SCHEMA_VERSION: f64 = 1.0;
+
+/// A typed v1 query (the GET half of the surface).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiQuery {
+    /// One-object run status heartbeat.
+    Status,
+    /// Cluster utilization; `window` caps the serialized series to the
+    /// last `window` virtual seconds.
+    Cluster { window: Option<f64> },
+    /// Multi-tenant fair-share accounting (multi-study runs only).
+    FairShare,
+    /// Study directory (multi-study runs only).
+    Studies,
+    /// Paginated session list.
+    Sessions { limit: usize, offset: usize },
+    /// Merged leaderboard, top `k`.
+    Leaderboard { k: usize },
+    /// Parallel-coordinates document.
+    Parallel,
+    /// Paginated per-session loss/measure curves ("Scalar plot view").
+    Curves { limit: usize, offset: usize },
+    /// Paginated session list of one study.
+    StudySessions {
+        study: String,
+        limit: usize,
+        offset: usize,
+    },
+    /// One study's leaderboard, top `k`.
+    StudyLeaderboard { study: String, k: usize },
+    /// One study's parallel-coordinates document.
+    StudyParallel { study: String },
+    /// Paginated curves of one study.
+    StudyCurves {
+        study: String,
+        limit: usize,
+        offset: usize,
+    },
+}
+
+/// A typed v1 command (the POST half).  Session ids travel as strings.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiCommand {
+    /// Submit a new study from a manifest-style spec (multi-study runs).
+    /// The spec is kept as raw JSON and parsed by the platform so parse
+    /// errors surface as 400s with the real message.
+    SubmitStudy { spec: Json, at: Option<f64> },
+    /// Submit a new CHOPT session from a Listing-1 config (single-study).
+    Submit { config: Json, at: Option<f64> },
+    /// Park a live session until an explicit resume.
+    PauseSession { study: Option<String>, session: u64 },
+    /// Revive a paused session (priority-queued if no GPU is free).
+    ResumeSession { study: Option<String>, session: u64 },
+    /// Kill a session outright.
+    StopSession { study: Option<String>, session: u64 },
+    /// Hold a study at zero GPUs until resumed.
+    PauseStudy { study: String },
+    ResumeStudy { study: String },
+    /// Shut a study down (its sessions finish with horizon semantics).
+    StopStudy { study: String },
+    /// Change a study's guaranteed quota and/or fair-share weight.
+    SetQuota {
+        study: String,
+        quota: Option<usize>,
+        priority: Option<f64>,
+    },
+}
+
+impl ApiCommand {
+    /// Parse a `POST /api/v1/commands` body.
+    pub fn from_json(doc: &Json) -> Result<ApiCommand, String> {
+        let kind = doc
+            .get("command")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| "body must carry a string 'command' field".to_string())?;
+        let study = || {
+            doc.get("study")
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string())
+                .ok_or_else(|| format!("'{kind}' needs a string 'study' field"))
+        };
+        let opt_study = doc
+            .get("study")
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string());
+        // Session ids are string-encoded u64s (bare numbers accepted for
+        // convenience but corrupt past 2^53) — the shared wire form.
+        let session = || -> Result<u64, String> {
+            match doc.get("session") {
+                Some(v) => chopt_core::nsml::SessionId::from_json(v)
+                    .map(|sid| sid.0)
+                    .ok_or_else(|| "'session' must be a string-encoded u64 id".to_string()),
+                None => Err(format!("'{kind}' needs a 'session' field")),
+            }
+        };
+        let at = doc.get("at").and_then(|v| v.as_f64());
+        match kind {
+            "submit_study" => Ok(ApiCommand::SubmitStudy {
+                spec: doc
+                    .get("study")
+                    .cloned()
+                    .ok_or_else(|| "'submit_study' needs a 'study' spec object".to_string())?,
+                at,
+            }),
+            "submit" => Ok(ApiCommand::Submit {
+                config: doc
+                    .get("config")
+                    .cloned()
+                    .ok_or_else(|| "'submit' needs a 'config' object".to_string())?,
+                at,
+            }),
+            "pause_session" => Ok(ApiCommand::PauseSession {
+                study: opt_study,
+                session: session()?,
+            }),
+            "resume_session" => Ok(ApiCommand::ResumeSession {
+                study: opt_study,
+                session: session()?,
+            }),
+            "stop_session" => Ok(ApiCommand::StopSession {
+                study: opt_study,
+                session: session()?,
+            }),
+            "pause_study" => Ok(ApiCommand::PauseStudy { study: study()? }),
+            "resume_study" => Ok(ApiCommand::ResumeStudy { study: study()? }),
+            "stop_study" => Ok(ApiCommand::StopStudy { study: study()? }),
+            "set_quota" => {
+                let quota = match doc.get("quota") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => Some(
+                        v.as_usize()
+                            .ok_or_else(|| "'quota' must be a non-negative integer".to_string())?,
+                    ),
+                };
+                let priority = match doc.get("priority") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => {
+                        Some(v.as_f64().ok_or_else(|| "'priority' must be a number".to_string())?)
+                    }
+                };
+                if quota.is_none() && priority.is_none() {
+                    return Err("'set_quota' needs 'quota' and/or 'priority'".to_string());
+                }
+                Ok(ApiCommand::SetQuota {
+                    study: study()?,
+                    quota,
+                    priority,
+                })
+            }
+            other => Err(format!("unknown command '{other}'")),
+        }
+    }
+
+    /// The command's wire name (acks echo it).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ApiCommand::SubmitStudy { .. } => "submit_study",
+            ApiCommand::Submit { .. } => "submit",
+            ApiCommand::PauseSession { .. } => "pause_session",
+            ApiCommand::ResumeSession { .. } => "resume_session",
+            ApiCommand::StopSession { .. } => "stop_session",
+            ApiCommand::PauseStudy { .. } => "pause_study",
+            ApiCommand::ResumeStudy { .. } => "resume_study",
+            ApiCommand::StopStudy { .. } => "stop_study",
+            ApiCommand::SetQuota { .. } => "set_quota",
+        }
+    }
+}
+
+/// Handler-side error: mapped to an HTTP status + error envelope.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiError {
+    /// Unknown resource (study, endpoint not served by this run shape).
+    NotFound(String),
+    /// The request was understood but invalid (bad param, rejected
+    /// command, malformed embedded config).
+    BadRequest(String),
+    /// The command surface requires a bearer token and none was sent.
+    Unauthorized(String),
+    /// A bearer token was sent but it does not match `--api-token`.
+    Forbidden(String),
+}
+
+impl ApiError {
+    pub fn http_status(&self) -> u16 {
+        match self {
+            ApiError::NotFound(_) => 404,
+            ApiError::BadRequest(_) => 400,
+            ApiError::Unauthorized(_) => 401,
+            ApiError::Forbidden(_) => 403,
+        }
+    }
+
+    pub fn message(&self) -> &str {
+        match self {
+            ApiError::NotFound(m)
+            | ApiError::BadRequest(m)
+            | ApiError::Unauthorized(m)
+            | ApiError::Forbidden(m) => m,
+        }
+    }
+}
+
+/// Route-parse outcome: a typed call, or an HTTP-level error.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiCall {
+    Query(ApiQuery),
+    /// A query scrubbed to a recorded event count (`?at_event=N`) —
+    /// served by replay-capable sources ([`RunSource::query_at`]).
+    QueryAt(ApiQuery, u64),
+    Command(ApiCommand),
+}
+
+/// Route-level errors the server answers without consulting the platform.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RouteError {
+    /// Not an API path this version serves.
+    NotFound,
+    /// Known path, wrong method (GET on /commands, POST on a query).
+    MethodNotAllowed,
+    /// Bad query parameter or malformed command body.
+    BadRequest(String),
+}
+
+/// Parse an HTTP request into a typed API call.  `query` is the raw
+/// query string (no leading `?`); `body` is the request body.
+///
+/// Legacy `/api/*.json` paths parse to the same [`ApiQuery`] values as
+/// their `/api/v1` counterparts — the deprecation story is "same handler,
+/// same bytes, new name".
+pub fn parse_route(
+    method: &str,
+    path: &str,
+    query: &str,
+    body: &[u8],
+) -> Result<ApiCall, RouteError> {
+    if path == "/api/v1/commands" {
+        if method != "POST" {
+            return Err(RouteError::MethodNotAllowed);
+        }
+        let text = std::str::from_utf8(body)
+            .map_err(|_| RouteError::BadRequest("body is not UTF-8".into()))?;
+        let doc = chopt_core::util::json::parse(text)
+            .map_err(|e| RouteError::BadRequest(format!("malformed JSON body: {e}")))?;
+        let cmd = ApiCommand::from_json(&doc).map_err(RouteError::BadRequest)?;
+        return Ok(ApiCall::Command(cmd));
+    }
+
+    let q = match route_query(path, query)? {
+        Some(q) => q,
+        None => return Err(RouteError::NotFound),
+    };
+    if method != "GET" {
+        return Err(RouteError::MethodNotAllowed);
+    }
+    // `?at_event=N` scrubs any query to a recorded event count (replay-
+    // capable sources; others answer 400).
+    match param_u64(query, "at_event")? {
+        Some(at) => Ok(ApiCall::QueryAt(q, at)),
+        None => Ok(ApiCall::Query(q)),
+    }
+}
+
+/// Map a path (v1 or legacy alias) to a query, or `None` if unknown.
+fn route_query(path: &str, query: &str) -> Result<Option<ApiQuery>, RouteError> {
+    let k = || param_usize(query, "k", 10);
+    let limit = || param_usize(query, "limit", usize::MAX);
+    let offset = || param_usize(query, "offset", 0);
+    let q = match path {
+        "/api/v1/status" | "/api/status.json" => ApiQuery::Status,
+        "/api/v1/cluster" | "/api/cluster.json" => ApiQuery::Cluster {
+            window: param_f64(query, "window")?,
+        },
+        "/api/v1/fair_share" | "/api/fair_share.json" => ApiQuery::FairShare,
+        "/api/v1/studies" => ApiQuery::Studies,
+        "/api/v1/sessions" | "/api/sessions.json" => ApiQuery::Sessions {
+            limit: limit()?,
+            offset: offset()?,
+        },
+        "/api/v1/leaderboard" | "/api/leaderboard.json" => ApiQuery::Leaderboard { k: k()? },
+        "/api/v1/parallel" | "/api/parallel.json" => ApiQuery::Parallel,
+        "/api/v1/curves" | "/api/curves.json" => ApiQuery::Curves {
+            limit: limit()?,
+            offset: offset()?,
+        },
+        _ => {
+            // /api/v1/studies/<name>/<view> and the legacy
+            // /api/studies/<name>/<view>.json per-study routes.
+            let rest = if let Some(r) = path.strip_prefix("/api/v1/studies/") {
+                r
+            } else if let Some(r) = path.strip_prefix("/api/studies/") {
+                r
+            } else {
+                return Ok(None);
+            };
+            let Some((study, view)) = rest.split_once('/') else {
+                return Ok(None);
+            };
+            if study.is_empty() || study.contains('/') {
+                return Ok(None);
+            }
+            let study = study.to_string();
+            match view {
+                "sessions" | "sessions.json" => ApiQuery::StudySessions {
+                    study,
+                    limit: limit()?,
+                    offset: offset()?,
+                },
+                "leaderboard" | "leaderboard.json" => {
+                    ApiQuery::StudyLeaderboard { study, k: k()? }
+                }
+                "parallel" | "parallel.json" => ApiQuery::StudyParallel { study },
+                "curves" | "curves.json" => ApiQuery::StudyCurves {
+                    study,
+                    limit: limit()?,
+                    offset: offset()?,
+                },
+                _ => return Ok(None),
+            }
+        }
+    };
+    Ok(Some(q))
+}
+
+fn param<'q>(query: &'q str, name: &str) -> Option<&'q str> {
+    query
+        .split('&')
+        .filter_map(|kv| kv.split_once('='))
+        .find(|(k, _)| *k == name)
+        .map(|(_, v)| v)
+}
+
+fn param_usize(query: &str, name: &str, default: usize) -> Result<usize, RouteError> {
+    match param(query, name) {
+        None | Some("") => Ok(default),
+        Some(v) => v.parse::<usize>().map_err(|_| {
+            RouteError::BadRequest(format!("'{name}' must be a non-negative integer"))
+        }),
+    }
+}
+
+fn param_u64(query: &str, name: &str) -> Result<Option<u64>, RouteError> {
+    match param(query, name) {
+        None | Some("") => Ok(None),
+        Some(v) => v.parse::<u64>().map(Some).map_err(|_| {
+            RouteError::BadRequest(format!("'{name}' must be a non-negative integer"))
+        }),
+    }
+}
+
+fn param_f64(query: &str, name: &str) -> Result<Option<f64>, RouteError> {
+    match param(query, name) {
+        None | Some("") => Ok(None),
+        Some(v) => v
+            .parse::<f64>()
+            .ok()
+            .filter(|w| w.is_finite() && *w >= 0.0)
+            .map(Some)
+            .ok_or_else(|| {
+                RouteError::BadRequest(format!("'{name}' must be a non-negative number"))
+            }),
+    }
+}
+
+/// The **read side** of the `/api/v1` surface: one trait, three
+/// backends.  Implemented by `coordinator::Platform` (live single
+/// study), `coordinator::MultiPlatform` (live multi-tenant),
+/// `stored::StoredRun` (a run directory rebuilt into the same
+/// incremental documents), and `stored::ReplaySource` (scrub-to-event
+/// replay).  Endpoints that don't apply to a run shape return
+/// [`ApiError::NotFound`].
+pub trait RunSource {
+    /// Monotone progress marker stamped into every envelope
+    /// (`generated_at_event`) — the engine's processed-event count.
+    fn generation(&self) -> u64;
+
+    /// Answer a query from the (incremental) documents.
+    fn query(&self, q: &ApiQuery) -> Result<Json, ApiError>;
+
+    /// Answer `q` as of recorded event count `at` (`?at_event=N`).
+    /// Returns the effective generation (the replayed event count, which
+    /// caps at the snapshot's end) alongside the document.  Only replay-
+    /// capable sources override this; live runs cannot rewind.
+    fn query_at(&self, _q: &ApiQuery, _at: u64) -> Result<(u64, Json), ApiError> {
+        Err(ApiError::BadRequest(
+            "this run source does not support ?at_event — serve a stored run to scrub".into(),
+        ))
+    }
+
+    /// True when this source's generation can never change (a stored
+    /// run).  The response cache **pins** such entries: they stay valid
+    /// without consulting the generation gauge, so the whole read
+    /// surface becomes cache-resident after first touch.  `ReplaySource`
+    /// stays `false` — scrubbing moves its generation.
+    fn fixed_generation(&self) -> bool {
+        false
+    }
+}
+
+/// The **command side** of the surface: applied by the engine loop
+/// between advances, so effects land at tick boundaries; the returned
+/// ack documents what was accepted (commands take effect at the *next*
+/// event boundary).  Read-only sources (stored runs) reject every
+/// command.
+pub trait CommandSink {
+    fn command(&mut self, c: &ApiCommand) -> Result<Json, ApiError>;
+}
+
+/// Read + command halves together — what a *live* platform exposes and
+/// what the [`ApiInbox`] serves.  Blanket-implemented, so implementing
+/// the two halves is all a backend ever does.
+pub trait PlatformApi: RunSource + CommandSink {}
+
+impl<T: RunSource + CommandSink> PlatformApi for T {}
+
+/// Wrap a payload in the uniform v1 envelope.
+pub fn envelope(generation: u64, data: Json) -> Json {
+    Json::obj()
+        .with("schema_version", Json::Num(SCHEMA_VERSION))
+        .with("api", Json::Str("v1".into()))
+        .with("generated_at_event", Json::Str(generation.to_string()))
+        .with("data", data)
+}
+
+/// The error-envelope twin of [`envelope`].
+pub fn error_envelope(generation: Option<u64>, message: &str) -> Json {
+    Json::obj()
+        .with("schema_version", Json::Num(SCHEMA_VERSION))
+        .with("api", Json::Str("v1".into()))
+        .with(
+            "generated_at_event",
+            generation
+                .map(|g| Json::Str(g.to_string()))
+                .unwrap_or(Json::Null),
+        )
+        .with("error", Json::Str(message.to_string()))
+}
+
+// ---------------------------------------------------------------------
+// Read-side response cache
+// ---------------------------------------------------------------------
+
+/// Sentinel for "no generation published yet" in the [`ReadState`]
+/// gauge.  Until the engine loop (or a platform wired via
+/// `set_generation_gauge`) publishes a real value, HTTP workers bypass
+/// the generation-keyed half of the cache rather than guess.
+pub const GEN_UNKNOWN: u64 = u64::MAX;
+
+/// Key of one cached rendered response.  Live entries key on
+/// `(path, query, generation, epoch)` — a generation bump or an applied
+/// command changes the key, so invalidation is implicit.  `pinned`
+/// entries (`?at_event=` scrubs and fixed-generation stored runs) ignore
+/// both counters: their bytes can never change for that path+query.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+struct CacheKey {
+    path: String,
+    query: String,
+    generation: u64,
+    epoch: u64,
+    pinned: bool,
+}
+
+impl CacheKey {
+    fn live(path: &str, query: &str, generation: u64, epoch: u64) -> CacheKey {
+        CacheKey {
+            path: path.to_string(),
+            query: query.to_string(),
+            generation,
+            epoch,
+            pinned: false,
+        }
+    }
+
+    fn pinned(path: &str, query: &str) -> CacheKey {
+        CacheKey {
+            path: path.to_string(),
+            query: query.to_string(),
+            generation: 0,
+            epoch: 0,
+            pinned: true,
+        }
+    }
+}
+
+struct CacheEntry {
+    body: Arc<Vec<u8>>,
+    etag: String,
+    last_used: u64,
+}
+
+/// Size-bounded LRU of rendered response bodies.  Bodies are `Arc`ed so
+/// a hit is a refcount bump, not a copy; eviction is by total body
+/// bytes, so many distinct param combinations cannot grow the map
+/// without bound.  `max_bytes == 0` disables caching entirely.
+struct ResponseCache {
+    map: HashMap<CacheKey, CacheEntry>,
+    max_bytes: usize,
+    used_bytes: usize,
+    tick: u64,
+    hits: u64,
+    insertions: u64,
+}
+
+impl ResponseCache {
+    fn new(max_bytes: usize) -> ResponseCache {
+        ResponseCache {
+            map: HashMap::new(),
+            max_bytes,
+            used_bytes: 0,
+            tick: 0,
+            hits: 0,
+            insertions: 0,
+        }
+    }
+
+    fn get(&mut self, key: &CacheKey) -> Option<(Arc<Vec<u8>>, String)> {
+        self.tick += 1;
+        let tick = self.tick;
+        let entry = self.map.get_mut(key)?;
+        entry.last_used = tick;
+        self.hits += 1;
+        Some((entry.body.clone(), entry.etag.clone()))
+    }
+
+    fn insert(&mut self, key: CacheKey, body: Arc<Vec<u8>>, etag: String) {
+        if self.max_bytes == 0 || body.len() > self.max_bytes {
+            return;
+        }
+        self.tick += 1;
+        if let Some(old) = self.map.remove(&key) {
+            self.used_bytes -= old.body.len();
+        }
+        self.used_bytes += body.len();
+        self.insertions += 1;
+        self.map.insert(
+            key,
+            CacheEntry {
+                body,
+                etag,
+                last_used: self.tick,
+            },
+        );
+        // LRU eviction by total bytes.  The scan is O(entries), but
+        // eviction only runs when an insert crosses the bound — rare
+        // next to lookups, and the map stays small (generation bumps
+        // orphan old entries, which age out here).
+        while self.used_bytes > self.max_bytes {
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    if let Some(e) = self.map.remove(&k) {
+                        self.used_bytes -= e.body.len();
+                    }
+                }
+                None => break,
+            }
+        }
+    }
+}
+
+/// Strong ETag for a v1 response: FNV-1a 64 over the cache-key fields,
+/// with the generation visible in the suffix.  Deterministic across
+/// restarts — an etag curl'd from a stored run keeps validating after
+/// the server is restarted on the same directory.
+pub fn etag_for(path: &str, query: &str, generation: u64, epoch: u64) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    eat(path.as_bytes());
+    eat(&[0]);
+    eat(query.as_bytes());
+    eat(&[0]);
+    eat(&generation.to_le_bytes());
+    eat(&epoch.to_le_bytes());
+    format!("\"{h:016x}-{generation}\"")
+}
+
+/// Read-side state shared between the HTTP workers and the engine loop:
+/// the generation gauge, the command epoch, and the response cache.
+///
+/// * **generation** — the source's processed-event count, published by
+///   the engine loop whenever it answers or starts serving, and by the
+///   platforms after every advance (`set_generation_gauge`), so workers
+///   can key cache lookups without a round trip to the engine thread.
+/// * **epoch** — bumped on every successfully applied command.  Some
+///   commands (`set_quota`) mutate scheduler state without consuming an
+///   engine event, so generation alone would serve stale bytes on an
+///   idle engine; folding the epoch into live keys invalidates those
+///   entries too.
+/// * **cache** — the size-bounded LRU of rendered bodies.
+pub struct ReadState {
+    generation: Arc<AtomicU64>,
+    epoch: AtomicU64,
+    cache: Mutex<ResponseCache>,
+}
+
+impl ReadState {
+    pub fn new(cache_bytes: usize) -> Arc<ReadState> {
+        Arc::new(ReadState {
+            generation: Arc::new(AtomicU64::new(GEN_UNKNOWN)),
+            epoch: AtomicU64::new(0),
+            cache: Mutex::new(ResponseCache::new(cache_bytes)),
+        })
+    }
+
+    /// The gauge handle platforms publish into
+    /// (`Platform::set_generation_gauge`).
+    pub fn generation_gauge(&self) -> Arc<AtomicU64> {
+        self.generation.clone()
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
+    pub fn publish_generation(&self, generation: u64) {
+        self.generation.store(generation, Ordering::Release);
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    fn bump_epoch(&self) {
+        self.epoch.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Worker-side lookup: the pinned key first (scrub targets and
+    /// stored-run bodies never go stale), then the live key at the
+    /// current gauge — skipped while the gauge is still unknown.
+    pub fn lookup(&self, path: &str, query: &str) -> Option<(Arc<Vec<u8>>, String)> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(hit) = cache.get(&CacheKey::pinned(path, query)) {
+            return Some(hit);
+        }
+        let generation = self.generation();
+        if generation == GEN_UNKNOWN {
+            return None;
+        }
+        let epoch = self.epoch();
+        cache.get(&CacheKey::live(path, query, generation, epoch))
+    }
+
+    /// Worker-side insert after a fresh render, keyed by the reply's
+    /// authoritative [`CacheStamp`] (not the gauge — the engine may have
+    /// advanced while the reply was in flight).  Returns the entry's
+    /// ETag; the ETag is produced even when caching is disabled, so
+    /// `If-None-Match` keeps working with `--cache-mb 0`.
+    pub fn store(&self, path: &str, query: &str, stamp: &CacheStamp, body: Arc<Vec<u8>>) -> String {
+        let (key, etag) = if stamp.pinned {
+            (
+                CacheKey::pinned(path, query),
+                etag_for(path, query, stamp.generation, 0),
+            )
+        } else {
+            (
+                CacheKey::live(path, query, stamp.generation, stamp.epoch),
+                etag_for(path, query, stamp.generation, stamp.epoch),
+            )
+        };
+        self.cache.lock().unwrap().insert(key, body, etag.clone());
+        etag
+    }
+
+    /// Cache counters for tests and benches:
+    /// `(entries, used_bytes, hits, insertions)`.
+    pub fn cache_stats(&self) -> (usize, usize, u64, u64) {
+        let cache = self.cache.lock().unwrap();
+        (cache.map.len(), cache.used_bytes, cache.hits, cache.insertions)
+    }
+}
+
+/// Cache metadata the engine loop stamps onto successful query replies:
+/// the generation/epoch the body was rendered at, and whether the entry
+/// is immune to both (`pinned` — deterministic `?at_event=` scrubs and
+/// fixed-generation stored runs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStamp {
+    pub generation: u64,
+    pub epoch: u64,
+    pub pinned: bool,
+}
+
+/// One answered API request travelling back over the bridge.
+pub struct ApiReply {
+    pub status: u16,
+    pub body: Json,
+    /// Present only on cacheable (status-200 query) replies.
+    pub stamp: Option<CacheStamp>,
+}
+
+/// One in-flight HTTP API request: the parsed call plus the reply slot
+/// the connection thread blocks on.
+pub struct ApiRequest {
+    pub call: ApiCall,
+    pub reply: mpsc::Sender<ApiReply>,
+}
+
+/// The engine-loop end of the API bridge (`VizServer::enable_api`).
+pub struct ApiInbox {
+    rx: mpsc::Receiver<ApiRequest>,
+    state: Arc<ReadState>,
+}
+
+impl ApiInbox {
+    pub(crate) fn new(rx: mpsc::Receiver<ApiRequest>, state: Arc<ReadState>) -> ApiInbox {
+        ApiInbox { rx, state }
+    }
+
+    /// The generation gauge the response cache keys live entries on.
+    /// Wire it with `Platform::set_generation_gauge` so advances update
+    /// cache keys immediately instead of at the next serve call — a GET
+    /// racing an advance must never see a pre-advance body.
+    pub fn generation_gauge(&self) -> Arc<AtomicU64> {
+        self.state.generation_gauge()
+    }
+
+    fn error_reply(generation: u64, e: ApiError) -> ApiReply {
+        ApiReply {
+            status: e.http_status(),
+            body: error_envelope(Some(generation), e.message()),
+            stamp: None,
+        }
+    }
+
+    fn answer(&self, req: ApiRequest, api: &mut impl PlatformApi) {
+        // Scrubbed queries report the replayed event count as their
+        // generation; everything else reports the source's current one.
+        let reply = match &req.call {
+            ApiCall::Query(q) => match api.query(q) {
+                Ok(data) => {
+                    let generation = api.generation();
+                    ApiReply {
+                        status: 200,
+                        body: envelope(generation, data),
+                        stamp: Some(CacheStamp {
+                            generation,
+                            epoch: self.state.epoch(),
+                            pinned: api.fixed_generation(),
+                        }),
+                    }
+                }
+                Err(e) => Self::error_reply(api.generation(), e),
+            },
+            ApiCall::QueryAt(q, at) => match api.query_at(q, *at) {
+                // Replay to a recorded position is deterministic, so the
+                // entry is pinned: valid at any later generation.
+                Ok((generation, data)) => ApiReply {
+                    status: 200,
+                    body: envelope(generation, data),
+                    stamp: Some(CacheStamp {
+                        generation,
+                        epoch: 0,
+                        pinned: true,
+                    }),
+                },
+                Err(e) => Self::error_reply(api.generation(), e),
+            },
+            ApiCall::Command(c) => match api.command(c) {
+                Ok(data) => {
+                    // Applied commands can mutate state without consuming
+                    // an engine event (set_quota): bump the epoch so live
+                    // cache entries stop matching either way.
+                    self.state.bump_epoch();
+                    ApiReply {
+                        status: 200,
+                        body: envelope(api.generation(), data),
+                        stamp: None,
+                    }
+                }
+                Err(e) => Self::error_reply(api.generation(), e),
+            },
+        };
+        // Answering doubles as a gauge publish — the cheap way to keep
+        // un-wired sources (stored runs, replay scrubbers) current.
+        self.state.publish_generation(api.generation());
+        // A vanished client (timeout, dropped connection) is not an error.
+        let _ = req.reply.send(reply);
+    }
+
+    /// Answer everything currently queued without blocking.  Returns the
+    /// number of requests served.
+    pub fn drain(&self, api: &mut impl PlatformApi) -> usize {
+        self.state.publish_generation(api.generation());
+        let mut n = 0;
+        while let Ok(req) = self.rx.try_recv() {
+            self.answer(req, api);
+            n += 1;
+        }
+        n
+    }
+
+    /// Block up to `timeout` for one request and answer it.  Returns
+    /// whether a request was served.
+    pub fn serve_one(&self, api: &mut impl PlatformApi, timeout: Duration) -> bool {
+        self.state.publish_generation(api.generation());
+        match self.rx.recv_timeout(timeout) {
+            Ok(req) => {
+                self.answer(req, api);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Serve requests for roughly `window` wall-clock time (the engine
+    /// loop's between-advances breather — replaces a blind sleep).
+    pub fn serve_for(&self, api: &mut impl PlatformApi, window: Duration) -> usize {
+        let deadline = Instant::now() + window;
+        let mut n = 0;
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                return n;
+            }
+            if self.serve_one(api, deadline - now) {
+                n += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v1_and_legacy_paths_parse_to_the_same_query() {
+        for (v1, legacy) in [
+            ("/api/v1/status", "/api/status.json"),
+            ("/api/v1/cluster", "/api/cluster.json"),
+            ("/api/v1/fair_share", "/api/fair_share.json"),
+            ("/api/v1/sessions", "/api/sessions.json"),
+            ("/api/v1/leaderboard", "/api/leaderboard.json"),
+            ("/api/v1/parallel", "/api/parallel.json"),
+            ("/api/v1/curves", "/api/curves.json"),
+            ("/api/v1/studies/alice/sessions", "/api/studies/alice/sessions.json"),
+            (
+                "/api/v1/studies/alice/leaderboard",
+                "/api/studies/alice/leaderboard.json",
+            ),
+        ] {
+            let a = parse_route("GET", v1, "", b"").unwrap();
+            let b = parse_route("GET", legacy, "", b"").unwrap();
+            assert_eq!(a, b, "{v1} vs {legacy}");
+        }
+    }
+
+    #[test]
+    fn query_params_parse_and_validate() {
+        assert_eq!(
+            parse_route("GET", "/api/v1/sessions", "limit=5&offset=10", b"").unwrap(),
+            ApiCall::Query(ApiQuery::Sessions {
+                limit: 5,
+                offset: 10
+            })
+        );
+        assert_eq!(
+            parse_route("GET", "/api/v1/cluster", "window=3600", b"").unwrap(),
+            ApiCall::Query(ApiQuery::Cluster {
+                window: Some(3600.0)
+            })
+        );
+        assert_eq!(
+            parse_route("GET", "/api/v1/leaderboard", "k=3", b"").unwrap(),
+            ApiCall::Query(ApiQuery::Leaderboard { k: 3 })
+        );
+        assert!(matches!(
+            parse_route("GET", "/api/v1/sessions", "limit=abc", b""),
+            Err(RouteError::BadRequest(_))
+        ));
+        assert!(matches!(
+            parse_route("GET", "/api/v1/cluster", "window=-5", b""),
+            Err(RouteError::BadRequest(_))
+        ));
+    }
+
+    #[test]
+    fn at_event_wraps_any_query_into_a_scrub_call() {
+        assert_eq!(
+            parse_route("GET", "/api/v1/status", "at_event=120", b"").unwrap(),
+            ApiCall::QueryAt(ApiQuery::Status, 120)
+        );
+        assert_eq!(
+            parse_route("GET", "/api/v1/curves", "limit=2&at_event=7", b"").unwrap(),
+            ApiCall::QueryAt(ApiQuery::Curves { limit: 2, offset: 0 }, 7)
+        );
+        assert!(matches!(
+            parse_route("GET", "/api/v1/status", "at_event=nope", b""),
+            Err(RouteError::BadRequest(_))
+        ));
+    }
+
+    #[test]
+    fn methods_are_enforced() {
+        assert!(matches!(
+            parse_route("POST", "/api/v1/status", "", b""),
+            Err(RouteError::MethodNotAllowed)
+        ));
+        assert!(matches!(
+            parse_route("GET", "/api/v1/commands", "", b""),
+            Err(RouteError::MethodNotAllowed)
+        ));
+        assert!(matches!(
+            parse_route("GET", "/api/v1/nope", "", b""),
+            Err(RouteError::NotFound)
+        ));
+        assert!(matches!(
+            parse_route("GET", "/api/v1/studies/a/unknown", "", b""),
+            Err(RouteError::NotFound)
+        ));
+    }
+
+    #[test]
+    fn command_bodies_parse() {
+        let pause = parse_route(
+            "POST",
+            "/api/v1/commands",
+            "",
+            br#"{"command": "pause_session", "study": "alice", "session": "18014398509481985"}"#,
+        )
+        .unwrap();
+        // Session ids round-trip as strings past 2^53.
+        assert_eq!(
+            pause,
+            ApiCall::Command(ApiCommand::PauseSession {
+                study: Some("alice".into()),
+                session: (1u64 << 54) + 1,
+            })
+        );
+        let quota = parse_route(
+            "POST",
+            "/api/v1/commands",
+            "",
+            br#"{"command": "set_quota", "study": "bob", "priority": 2.5}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            quota,
+            ApiCall::Command(ApiCommand::SetQuota {
+                study: "bob".into(),
+                quota: None,
+                priority: Some(2.5),
+            })
+        );
+        for bad in [
+            &b"not json"[..],
+            br#"{"command": "warp"}"#,
+            br#"{"command": "pause_session"}"#,
+            br#"{"command": "set_quota", "study": "x"}"#,
+        ] {
+            assert!(
+                matches!(
+                    parse_route("POST", "/api/v1/commands", "", bad),
+                    Err(RouteError::BadRequest(_))
+                ),
+                "{:?} must be a 400",
+                String::from_utf8_lossy(bad)
+            );
+        }
+    }
+
+    #[test]
+    fn etag_is_deterministic_and_key_sensitive() {
+        let base = etag_for("/api/v1/status", "", 42, 0);
+        assert_eq!(base, etag_for("/api/v1/status", "", 42, 0));
+        assert!(base.starts_with('"') && base.ends_with('"'), "{base}");
+        assert!(base.contains("-42"), "generation visible in {base}");
+        for other in [
+            etag_for("/api/v1/sessions", "", 42, 0),
+            etag_for("/api/v1/status", "limit=2", 42, 0),
+            etag_for("/api/v1/status", "", 43, 0),
+            etag_for("/api/v1/status", "", 42, 1),
+        ] {
+            assert_ne!(base, other);
+        }
+    }
+
+    #[test]
+    fn response_cache_is_lru_and_byte_bounded() {
+        let mut c = ResponseCache::new(100);
+        let body = |n: usize| Arc::new(vec![b'x'; n]);
+        c.insert(CacheKey::live("/a", "", 1, 0), body(40), "a".into());
+        c.insert(CacheKey::live("/b", "", 1, 0), body(40), "b".into());
+        // Touch /a so /b is the LRU victim when /c overflows the bound.
+        assert!(c.get(&CacheKey::live("/a", "", 1, 0)).is_some());
+        c.insert(CacheKey::live("/c", "", 1, 0), body(40), "c".into());
+        assert!(c.get(&CacheKey::live("/b", "", 1, 0)).is_none(), "LRU evicted");
+        assert!(c.get(&CacheKey::live("/a", "", 1, 0)).is_some());
+        assert!(c.get(&CacheKey::live("/c", "", 1, 0)).is_some());
+        assert!(c.used_bytes <= 100);
+        // Oversized bodies and a zero-byte cache are never stored.
+        c.insert(CacheKey::live("/big", "", 1, 0), body(101), "big".into());
+        assert!(c.get(&CacheKey::live("/big", "", 1, 0)).is_none());
+        let mut off = ResponseCache::new(0);
+        off.insert(CacheKey::live("/a", "", 1, 0), body(1), "a".into());
+        assert!(off.get(&CacheKey::live("/a", "", 1, 0)).is_none());
+    }
+
+    #[test]
+    fn read_state_keys_on_generation_epoch_and_pinning() {
+        let state = ReadState::new(1 << 20);
+        let body = Arc::new(b"{\"data\":1}".to_vec());
+
+        // Live entries stay invisible until the gauge knows the
+        // generation they were rendered at.
+        let live = CacheStamp { generation: 7, epoch: 0, pinned: false };
+        let etag = state.store("/api/v1/status", "", &live, body.clone());
+        assert!(state.lookup("/api/v1/status", "").is_none(), "gauge unknown");
+        state.publish_generation(7);
+        let (hit, hit_etag) = state.lookup("/api/v1/status", "").unwrap();
+        assert_eq!((hit.as_slice(), hit_etag.as_str()), (body.as_slice(), etag.as_str()));
+        // A generation bump or an applied command orphans the entry.
+        state.publish_generation(8);
+        assert!(state.lookup("/api/v1/status", "").is_none());
+        state.publish_generation(7);
+        state.bump_epoch();
+        assert!(state.lookup("/api/v1/status", "").is_none());
+
+        // Pinned entries (scrubs, stored runs) hit regardless of both.
+        let pinned = CacheStamp { generation: 5, epoch: 0, pinned: true };
+        state.store("/api/v1/status", "at_event=5", &pinned, body.clone());
+        state.publish_generation(GEN_UNKNOWN);
+        assert!(state.lookup("/api/v1/status", "at_event=5").is_some());
+        // Distinct ?at_event= targets are distinct query strings: they
+        // never share an entry or an etag.
+        let pinned9 = CacheStamp { generation: 9, epoch: 0, pinned: true };
+        let e9 = state.store("/api/v1/status", "at_event=9", &pinned9, body.clone());
+        let e5 = state.lookup("/api/v1/status", "at_event=5").unwrap().1;
+        assert_ne!(e5, e9);
+    }
+
+    #[test]
+    fn envelope_shape() {
+        let e = envelope(u64::MAX, Json::obj().with("x", Json::Num(1.0)));
+        let text = e.to_string_compact();
+        let back = chopt_core::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("schema_version").unwrap().as_f64(), Some(1.0));
+        // The generation survives as a string even past 2^53.
+        assert_eq!(
+            back.get("generated_at_event").unwrap().as_str(),
+            Some(u64::MAX.to_string().as_str())
+        );
+        assert_eq!(back.path("data.x").unwrap().as_f64(), Some(1.0));
+        let err = error_envelope(None, "nope");
+        assert!(err.get("generated_at_event").unwrap().is_null());
+        assert_eq!(err.get("error").unwrap().as_str(), Some("nope"));
+    }
+}

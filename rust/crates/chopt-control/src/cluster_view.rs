@@ -1,0 +1,204 @@
+//! Clustered overview: 2-D PCA projection of hyperparameter vectors
+//! (Fig. 5 middle).  The paper uses t-SNE; PCA is our dependency-free
+//! stand-in — the view's purpose (structural overview of created models,
+//! colored by performance) is preserved.
+
+use chopt_core::config::Order;
+use chopt_core::hparam::Space;
+use chopt_core::nsml::NsmlSession;
+
+use crate::svg::Svg;
+
+/// Power-iteration PCA: top-2 principal axes of the encoded vectors.
+/// Returns (projections, explained-variance fractions).
+pub fn pca2(data: &[Vec<f64>]) -> (Vec<(f64, f64)>, (f64, f64)) {
+    let n = data.len();
+    if n == 0 {
+        return (Vec::new(), (0.0, 0.0));
+    }
+    let d = data[0].len();
+    if d == 0 {
+        return (vec![(0.0, 0.0); n], (0.0, 0.0));
+    }
+    // Center.
+    let mut mean = vec![0.0; d];
+    for row in data {
+        for (m, &x) in mean.iter_mut().zip(row) {
+            *m += x;
+        }
+    }
+    for m in &mut mean {
+        *m /= n as f64;
+    }
+    let centered: Vec<Vec<f64>> = data
+        .iter()
+        .map(|row| row.iter().zip(&mean).map(|(&x, &m)| x - m).collect())
+        .collect();
+    let total_var: f64 = centered
+        .iter()
+        .map(|r| r.iter().map(|x| x * x).sum::<f64>())
+        .sum::<f64>()
+        / n as f64;
+
+    let mut axes: Vec<Vec<f64>> = Vec::new();
+    let mut vars = [0.0f64; 2];
+    let mut residual = centered.clone();
+    for k in 0..2.min(d) {
+        // Power iteration on X^T X.
+        let mut v = vec![0.0; d];
+        v[k % d] = 1.0;
+        for _ in 0..100 {
+            // w = X^T (X v)
+            let mut w = vec![0.0; d];
+            for row in &residual {
+                let dot: f64 = row.iter().zip(&v).map(|(a, b)| a * b).sum();
+                for (wi, &ri) in w.iter_mut().zip(row) {
+                    *wi += dot * ri;
+                }
+            }
+            let norm: f64 = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm < 1e-12 {
+                break;
+            }
+            for (vi, wi) in v.iter_mut().zip(&w) {
+                *vi = wi / norm;
+            }
+        }
+        // Variance along v + deflation.
+        let mut var = 0.0;
+        for row in &mut residual {
+            let dot: f64 = row.iter().zip(&v).map(|(a, b)| a * b).sum();
+            var += dot * dot;
+            for (ri, &vi) in row.iter_mut().zip(&v) {
+                *ri -= dot * vi;
+            }
+        }
+        vars[k] = var / n as f64;
+        axes.push(v);
+    }
+    while axes.len() < 2 {
+        axes.push(vec![0.0; d]);
+    }
+
+    let proj: Vec<(f64, f64)> = centered
+        .iter()
+        .map(|row| {
+            let x: f64 = row.iter().zip(&axes[0]).map(|(a, b)| a * b).sum();
+            let y: f64 = row.iter().zip(&axes[1]).map(|(a, b)| a * b).sum();
+            (x, y)
+        })
+        .collect();
+    let ev = if total_var > 1e-12 {
+        (vars[0] / total_var, vars[1] / total_var)
+    } else {
+        (0.0, 0.0)
+    };
+    (proj, ev)
+}
+
+/// Render the clustered view: PCA scatter colored by measure quantile.
+pub fn render(space: &Space, sessions: &[NsmlSession], order: Order) -> Svg {
+    let data: Vec<Vec<f64>> = sessions.iter().map(|s| space.encode(&s.hparams)).collect();
+    let (proj, ev) = pca2(&data);
+    let mut svg = Svg::new(420.0, 360.0);
+    svg.text(
+        20.0,
+        18.0,
+        12.0,
+        &format!(
+            "hyperparameter clustered view (PCA, ev {:.0}%/{:.0}%)",
+            ev.0 * 100.0,
+            ev.1 * 100.0
+        ),
+    );
+    if proj.is_empty() {
+        return svg;
+    }
+    let (x_lo, x_hi) = proj
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &(x, _)| {
+            (l.min(x), h.max(x))
+        });
+    let (y_lo, y_hi) = proj
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &(_, y)| {
+            (l.min(y), h.max(y))
+        });
+    let measures: Vec<Option<f64>> = sessions.iter().map(|s| s.best_measure(order)).collect();
+    let m_hi = measures.iter().flatten().fold(f64::NEG_INFINITY, |a, &b| a.max(b));
+    let m_lo = measures.iter().flatten().fold(f64::INFINITY, |a, &b| a.min(b));
+    for (i, &(x, y)) in proj.iter().enumerate() {
+        let px = 30.0 + (x - x_lo) / (x_hi - x_lo).max(1e-12) * 360.0;
+        let py = 330.0 - (y - y_lo) / (y_hi - y_lo).max(1e-12) * 290.0;
+        // Color by performance tercile: green good, orange mid, red poor.
+        let c = match measures[i] {
+            Some(m) if m_hi > m_lo => {
+                let t = (m - m_lo) / (m_hi - m_lo);
+                if t > 0.66 {
+                    "#2ca02c"
+                } else if t > 0.33 {
+                    "#ff7f0e"
+                } else {
+                    "#d62728"
+                }
+            }
+            _ => "#999999",
+        };
+        svg.circle(px, py, 4.0, c, 0.75);
+    }
+    svg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use chopt_core::config::ChoptConfig;
+    use chopt_core::hparam::{Assignment, Value};
+    use chopt_core::nsml::SessionId;
+
+    #[test]
+    fn pca_identifies_dominant_axis() {
+        // Points along (1, 2) direction: first component captures ~all var.
+        let data: Vec<Vec<f64>> = (0..50)
+            .map(|i| {
+                let t = i as f64 / 10.0;
+                vec![t, 2.0 * t, 0.001 * (i % 3) as f64]
+            })
+            .collect();
+        let (proj, ev) = pca2(&data);
+        assert_eq!(proj.len(), 50);
+        assert!(ev.0 > 0.99, "ev0={}", ev.0);
+        assert!(ev.1 < 0.01);
+        // Projections along axis-1 are spread, axis-2 nearly constant.
+        let spread0: f64 = proj.iter().map(|p| p.0.abs()).fold(0.0, f64::max);
+        let spread1: f64 = proj.iter().map(|p| p.1.abs()).fold(0.0, f64::max);
+        assert!(spread0 > 10.0 * spread1);
+    }
+
+    #[test]
+    fn pca_degenerate_inputs() {
+        assert!(pca2(&[]).0.is_empty());
+        let (proj, ev) = pca2(&[vec![1.0, 1.0], vec![1.0, 1.0]]);
+        assert_eq!(proj.len(), 2);
+        assert_eq!(ev, (0.0, 0.0));
+    }
+
+    #[test]
+    fn render_colors_by_measure() {
+        let cfg = ChoptConfig::from_json_str(chopt_core::config::LISTING1_EXAMPLE).unwrap();
+        let sessions: Vec<NsmlSession> = (0..9)
+            .map(|i| {
+                let mut hp = Assignment::new();
+                hp.set("lr", Value::Float(0.01 + 0.008 * i as f64));
+                hp.set("depth", Value::Int(5 + (i % 5) as i64));
+                hp.set("activation", Value::Str("relu".into()));
+                let mut s = NsmlSession::new(SessionId(i), hp, "m", 0.0);
+                s.report(1, i as f64 * 10.0, 1.0);
+                s
+            })
+            .collect();
+        let doc = render(&cfg.space, &sessions, Order::Descending).finish();
+        assert_eq!(doc.matches("<circle").count(), 9);
+        assert!(doc.contains("#2ca02c") && doc.contains("#d62728"));
+    }
+}

@@ -1,0 +1,297 @@
+//! Session results → JSON export (the contract between the coordinator
+//! and any front end; the embedded HTML viewer consumes exactly this).
+
+use chopt_core::config::Order;
+use chopt_core::hparam::Space;
+use chopt_core::nsml::NsmlSession;
+use chopt_core::util::json::Value as Json;
+
+/// Axes + lines document for parallel coordinates (Fig. 3):
+/// every axis is a hyperparameter (plus the measure as the last axis);
+/// every line is one NSML session.
+pub fn parallel_coords_doc(
+    space: &Space,
+    sessions: &[NsmlSession],
+    order: Order,
+    run_label: &str,
+) -> Json {
+    let refs: Vec<&NsmlSession> = sessions.iter().collect();
+    parallel_coords_doc_refs(space, &refs, order, run_label)
+}
+
+/// Reference-taking core of [`parallel_coords_doc`] — the live publish
+/// loop renders 10k+ sessions per refresh and must not clone them first.
+pub fn parallel_coords_doc_refs(
+    space: &Space,
+    sessions: &[&NsmlSession],
+    order: Order,
+    run_label: &str,
+) -> Json {
+    let mut axes: Vec<Json> = space
+        .defs
+        .iter()
+        .map(|d| {
+            Json::obj()
+                .with("name", Json::Str(d.name.clone()))
+                .with("type", Json::Str(d.ptype.name().to_string()))
+                .with("distribution", Json::Str(d.dist.name().to_string()))
+        })
+        .collect();
+    axes.push(
+        Json::obj()
+            .with("name", Json::Str("measure".into()))
+            .with("type", Json::Str("float".into()))
+            .with("distribution", Json::Str("uniform".into())),
+    );
+
+    let lines: Vec<Json> = sessions
+        .iter()
+        .map(|s| {
+            let mut values = Json::obj();
+            for (k, v) in s.hparams.iter() {
+                values.set(k, v.to_json());
+            }
+            Json::obj()
+                // Session ids are strings: they pack (chopt_id << 32 |
+                // counter) into a u64, which an f64 corrupts past 2^53.
+                .with("id", Json::Str(s.id.0.to_string()))
+                .with("values", values)
+                .with(
+                    "measure",
+                    s.best_measure(order).map(Json::Num).unwrap_or(Json::Null),
+                )
+                .with("status", Json::Str(s.status.name().to_string()))
+                .with("epochs", Json::Num(s.epochs as f64))
+        })
+        .collect();
+
+    Json::obj()
+        .with("label", Json::Str(run_label.to_string()))
+        .with("axes", Json::Arr(axes))
+        .with("lines", Json::Arr(lines))
+}
+
+/// Scalar-plot view: loss/measure curves per session ("Scalar plot view").
+pub fn curves_doc(sessions: &[NsmlSession]) -> Json {
+    let refs: Vec<&NsmlSession> = sessions.iter().collect();
+    curves_doc_refs(&refs)
+}
+
+/// Reference-taking core of [`curves_doc`] — the `/api/v1/curves` query
+/// renders straight from borrowed sessions (no clones per request).
+pub fn curves_doc_refs(sessions: &[&NsmlSession]) -> Json {
+    let curves: Vec<Json> = sessions
+        .iter()
+        .map(|s| {
+            Json::obj()
+                .with("id", Json::Str(s.id.0.to_string()))
+                .with(
+                    "epochs",
+                    Json::Arr(s.history.iter().map(|p| Json::Num(p.epoch as f64)).collect()),
+                )
+                .with(
+                    "measure",
+                    Json::Arr(s.history.iter().map(|p| Json::Num(p.measure)).collect()),
+                )
+                .with(
+                    "loss",
+                    Json::Arr(s.history.iter().map(|p| Json::Num(p.loss)).collect()),
+                )
+        })
+        .collect();
+    Json::obj().with("curves", Json::Arr(curves))
+}
+
+/// Model summary table rows ("Model summary view"): precise values of the
+/// selected sessions.
+pub fn summary_doc(sessions: &[&NsmlSession], order: Order) -> Json {
+    let rows: Vec<Json> = sessions
+        .iter()
+        .map(|s| {
+            Json::obj()
+                .with("id", Json::Str(s.id.0.to_string()))
+                .with("hparams", s.hparams.to_json())
+                .with(
+                    "best",
+                    s.best_measure(order).map(Json::Num).unwrap_or(Json::Null),
+                )
+                .with("epochs", Json::Num(s.epochs as f64))
+                .with("revivals", Json::Num(s.revivals as f64))
+                .with("gpu_seconds", Json::Num(s.gpu_seconds))
+        })
+        .collect();
+    Json::obj().with("rows", Json::Arr(rows))
+}
+
+/// Live cluster-utilization document (Fig. 8 as a stream): the per-tenant
+/// usage change-points plus the instantaneous holdings at `now`.  The
+/// `serve --live` viewer polls this as the engine advances.
+pub fn cluster_doc(cluster: &chopt_cluster::Cluster, now: f64) -> Json {
+    cluster_doc_windowed(cluster, now, None)
+}
+
+/// [`cluster_doc`] with an optional history window (`?window=` on the v1
+/// cluster query): only change-points within the last `window` virtual
+/// seconds are serialized, plus one carried point *before* the cut so the
+/// level at the window start is correct.  A long live run's unbounded
+/// series no longer has to be re-serialized whole on every refresh.
+pub fn cluster_doc_windowed(
+    cluster: &chopt_cluster::Cluster,
+    now: f64,
+    window: Option<f64>,
+) -> Json {
+    let cut = window.map(|w| now - w.max(0.0));
+    let series = |ti: &chopt_core::events::TimeIntegrator| {
+        let pts = &ti.series;
+        let start = match cut {
+            // First change-point inside the window, minus one so the
+            // pre-window level is carried across the cut.
+            Some(c) => pts.partition_point(|&(t, _)| t < c).saturating_sub(1),
+            None => 0,
+        };
+        Json::Arr(
+            pts[start..]
+                .iter()
+                .map(|&(t, v)| Json::Arr(vec![Json::Num(t), Json::Num(v)]))
+                .collect(),
+        )
+    };
+    Json::obj()
+        .with("t", Json::Num(now))
+        .with("total_gpus", Json::Num(cluster.total() as f64))
+        .with("used", Json::Num(cluster.used() as f64))
+        .with("chopt_held", Json::Num(cluster.held_by_chopt() as f64))
+        .with("utilization", Json::Num(cluster.utilization()))
+        .with("chopt_gpu_hours", Json::Num(cluster.chopt_gpu_hours(now)))
+        .with("window", window.map(Json::Num).unwrap_or(Json::Null))
+        .with("series_total", series(&cluster.usage_total))
+        .with("series_chopt", series(&cluster.usage_chopt))
+        .with("series_external", series(&cluster.usage_external))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use chopt_core::config::ChoptConfig;
+    use chopt_core::hparam::{Assignment, Value};
+    use chopt_core::nsml::SessionId;
+
+    fn sessions() -> Vec<NsmlSession> {
+        (0..3)
+            .map(|i| {
+                let mut hp = Assignment::new();
+                hp.set("lr", Value::Float(0.01 * (i + 1) as f64));
+                let mut s = NsmlSession::new(SessionId(i), hp, "m", 0.0);
+                s.report(1, 50.0 + i as f64, 2.0);
+                s.report(2, 55.0 + i as f64, 1.5);
+                s
+            })
+            .collect()
+    }
+
+    #[test]
+    fn parallel_doc_shape() {
+        let cfg = ChoptConfig::from_json_str(chopt_core::config::LISTING1_EXAMPLE).unwrap();
+        let doc = parallel_coords_doc(&cfg.space, &sessions(), Order::Descending, "run-1");
+        let axes = doc.get("axes").unwrap().as_arr().unwrap();
+        assert_eq!(axes.len(), cfg.space.defs.len() + 1);
+        assert_eq!(
+            axes.last().unwrap().get("name").unwrap().as_str(),
+            Some("measure")
+        );
+        let lines = doc.get("lines").unwrap().as_arr().unwrap();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[2].get("measure").unwrap().as_f64(), Some(57.0));
+        // Ids are strings (u64 through f64 corrupts past 2^53).
+        assert_eq!(lines[1].get("id").unwrap().as_str(), Some("1"));
+    }
+
+    /// Regression for the export-format debt: a session id above 2^53
+    /// survives every export document byte-exactly.
+    #[test]
+    fn export_docs_keep_ids_as_strings_past_f64_precision() {
+        let big = (1u64 << 54) + 1;
+        let mut s = NsmlSession::new(SessionId(big), Assignment::new(), "m", 0.0);
+        s.report(1, 50.0, 2.0);
+        let sessions = vec![s];
+        let refs: Vec<&NsmlSession> = sessions.iter().collect();
+        let cfg = ChoptConfig::from_json_str(chopt_core::config::LISTING1_EXAMPLE).unwrap();
+        let expect = big.to_string();
+        for doc in [
+            parallel_coords_doc(&cfg.space, &sessions, Order::Descending, "x")
+                .get("lines")
+                .unwrap()
+                .idx(0)
+                .unwrap()
+                .clone(),
+            curves_doc(&sessions).get("curves").unwrap().idx(0).unwrap().clone(),
+            summary_doc(&refs, Order::Descending)
+                .get("rows")
+                .unwrap()
+                .idx(0)
+                .unwrap()
+                .clone(),
+        ] {
+            let text = doc.to_string_compact();
+            let back = chopt_core::util::json::parse(&text).unwrap();
+            assert_eq!(back.get("id").and_then(|v| v.as_str()), Some(expect.as_str()));
+        }
+    }
+
+    #[test]
+    fn curves_doc_shape() {
+        let doc = curves_doc(&sessions());
+        let c = doc.get("curves").unwrap().idx(0).unwrap();
+        assert_eq!(c.get("epochs").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(c.get("loss").unwrap().idx(1).unwrap().as_f64(), Some(1.5));
+    }
+
+    #[test]
+    fn summary_doc_shape() {
+        let ss = sessions();
+        let refs: Vec<&NsmlSession> = ss.iter().collect();
+        let doc = summary_doc(&refs, Order::Descending);
+        assert_eq!(doc.get("rows").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn cluster_doc_shape() {
+        use chopt_cluster::{Cluster, Owner};
+        let mut c = Cluster::new(8);
+        c.allocate(Owner::Chopt(1), 3, 0.0).unwrap();
+        c.allocate(Owner::External, 2, 10.0).unwrap();
+        let doc = cluster_doc(&c, 20.0);
+        assert_eq!(doc.get("total_gpus").unwrap().as_i64(), Some(8));
+        assert_eq!(doc.get("used").unwrap().as_i64(), Some(5));
+        assert_eq!(doc.get("chopt_held").unwrap().as_i64(), Some(3));
+        assert!(doc.get("chopt_gpu_hours").unwrap().as_f64().unwrap() > 0.0);
+        assert!(!doc.get("series_chopt").unwrap().as_arr().unwrap().is_empty());
+        assert!(doc.get("window").unwrap().is_null());
+    }
+
+    #[test]
+    fn cluster_doc_window_caps_series_and_carries_the_cut_level() {
+        use chopt_cluster::{Cluster, Owner};
+        let mut c = Cluster::new(8);
+        // Change-points at t = 0, 10, 20, 30.
+        c.allocate(Owner::Chopt(1), 1, 0.0).unwrap();
+        c.allocate(Owner::Chopt(1), 1, 10.0).unwrap();
+        c.allocate(Owner::Chopt(1), 1, 20.0).unwrap();
+        c.allocate(Owner::Chopt(1), 1, 30.0).unwrap();
+        // Window [25, 40]: the t=30 point plus the carried t=20 level.
+        let doc = cluster_doc_windowed(&c, 40.0, Some(15.0));
+        let series = doc.get("series_chopt").unwrap().as_arr().unwrap();
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0].idx(0).unwrap().as_f64(), Some(20.0));
+        assert_eq!(series[1].idx(0).unwrap().as_f64(), Some(30.0));
+        assert_eq!(doc.get("window").unwrap().as_f64(), Some(15.0));
+        // Integral-bearing scalars are unaffected by the window.
+        assert_eq!(
+            doc.get("chopt_gpu_hours").unwrap().as_f64(),
+            cluster_doc(&c, 40.0).get("chopt_gpu_hours").unwrap().as_f64()
+        );
+        // A window wider than the run returns the whole series.
+        let all = cluster_doc_windowed(&c, 40.0, Some(1e9));
+        assert_eq!(all.get("series_chopt").unwrap().as_arr().unwrap().len(), 4);
+    }
+}

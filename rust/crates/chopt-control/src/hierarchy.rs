@@ -1,0 +1,117 @@
+//! Hierarchical view (Fig. 5 right): PBT parent→child lineage as a
+//! layered node-link diagram.
+
+use std::collections::HashMap;
+
+use chopt_core::nsml::{NsmlSession, SessionId};
+
+use crate::svg::{color, Svg};
+
+/// Depth of each node in the lineage forest (roots at 0).
+pub fn lineage_depths(sessions: &[NsmlSession]) -> HashMap<SessionId, usize> {
+    let parent: HashMap<SessionId, Option<SessionId>> =
+        sessions.iter().map(|s| (s.id, s.parent)).collect();
+    let mut depth: HashMap<SessionId, usize> = HashMap::new();
+    fn depth_of(
+        id: SessionId,
+        parent: &HashMap<SessionId, Option<SessionId>>,
+        depth: &mut HashMap<SessionId, usize>,
+        guard: usize,
+    ) -> usize {
+        if let Some(&d) = depth.get(&id) {
+            return d;
+        }
+        if guard > 64 {
+            return 0; // cycle guard (shouldn't happen)
+        }
+        let d = match parent.get(&id).copied().flatten() {
+            Some(p) if parent.contains_key(&p) => {
+                depth_of(p, parent, depth, guard + 1) + 1
+            }
+            _ => 0,
+        };
+        depth.insert(id, d);
+        d
+    }
+    for s in sessions {
+        depth_of(s.id, &parent, &mut depth, 0);
+    }
+    depth
+}
+
+/// Render the node-link diagram: layers left→right by lineage depth.
+pub fn render(sessions: &[NsmlSession]) -> Svg {
+    let depths = lineage_depths(sessions);
+    let max_depth = depths.values().copied().max().unwrap_or(0);
+    let mut by_depth: Vec<Vec<SessionId>> = vec![Vec::new(); max_depth + 1];
+    let mut order: Vec<&NsmlSession> = sessions.iter().collect();
+    order.sort_by_key(|s| s.id);
+    for s in &order {
+        by_depth[depths[&s.id]].push(s.id);
+    }
+    let width = 140.0 * (max_depth + 1) as f64 + 80.0;
+    let tallest = by_depth.iter().map(|v| v.len()).max().unwrap_or(1);
+    let height = 40.0 * tallest as f64 + 80.0;
+    let mut svg = Svg::new(width, height);
+    svg.text(20.0, 18.0, 12.0, "session lineage (parent -> child)");
+
+    let mut pos: HashMap<SessionId, (f64, f64)> = HashMap::new();
+    for (d, ids) in by_depth.iter().enumerate() {
+        for (i, &id) in ids.iter().enumerate() {
+            let x = 60.0 + 140.0 * d as f64;
+            let y = 50.0 + 40.0 * i as f64;
+            pos.insert(id, (x, y));
+        }
+    }
+    // Edges first.
+    for s in &order {
+        if let Some(p) = s.parent {
+            if let (Some(&(x1, y1)), Some(&(x2, y2))) = (pos.get(&p), pos.get(&s.id)) {
+                svg.line(x1 + 10.0, y1, x2 - 10.0, y2, "#999", 1.0);
+            }
+        }
+    }
+    for s in &order {
+        let (x, y) = pos[&s.id];
+        let c = if s.revivals > 0 { color(2) } else { color(0) };
+        svg.circle(x, y, 8.0, c, 0.9);
+        svg.text(x - 10.0, y - 12.0, 8.0, &format!("#{}", s.id.0));
+    }
+    svg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use chopt_core::hparam::Assignment;
+
+    fn s(id: u64, parent: Option<u64>) -> NsmlSession {
+        let mut x = NsmlSession::new(SessionId(id), Assignment::new(), "m", 0.0);
+        x.parent = parent.map(SessionId);
+        x
+    }
+
+    #[test]
+    fn depths_follow_lineage() {
+        let sessions = vec![s(1, None), s(2, Some(1)), s(3, Some(2)), s(4, None)];
+        let d = lineage_depths(&sessions);
+        assert_eq!(d[&SessionId(1)], 0);
+        assert_eq!(d[&SessionId(2)], 1);
+        assert_eq!(d[&SessionId(3)], 2);
+        assert_eq!(d[&SessionId(4)], 0);
+    }
+
+    #[test]
+    fn missing_parent_is_root() {
+        let sessions = vec![s(5, Some(99))]; // parent not in set
+        assert_eq!(lineage_depths(&sessions)[&SessionId(5)], 0);
+    }
+
+    #[test]
+    fn renders_edges_and_nodes() {
+        let sessions = vec![s(1, None), s(2, Some(1)), s(3, Some(1))];
+        let doc = render(&sessions).finish();
+        assert_eq!(doc.matches("<circle").count(), 3);
+        assert_eq!(doc.matches("<line").count(), 2);
+    }
+}

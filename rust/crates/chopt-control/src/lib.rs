@@ -1,0 +1,48 @@
+//! `chopt-control` — the control plane and analytic visual tool (paper
+//! §3.5, Figs 3–7).
+//!
+//! The paper ships a web UI; we ship its serving + rendering layer:
+//!
+//! * [`platform`] — the live layer over an engine ([`Platform`] /
+//!   [`MultiPlatform`]): structured progress events, periodic
+//!   snapshots, and the view documents `serve --live` republishes.
+//! * [`stored`] — stored-run read models ([`StoredRun`] /
+//!   [`ReplaySource`]) serving `/api/v1` from a run directory with
+//!   live-identical bodies, plus `?at_event=` scrubbing.
+//! * [`export`] — session results → JSON documents (the axes/lines format
+//!   a parallel-coordinates front end consumes).
+//! * [`parallel_coords`] — SVG parallel-coordinates renderer (Fig. 3),
+//!   with top-K highlighting (Fig. 4).
+//! * [`plots`] — scatter (parameter analytic view), histogram, and
+//!   learning-duration bars (Fig. 5 left).
+//! * [`cluster_view`] — 2-D PCA projection of hyperparameter vectors
+//!   (stand-in for the t-SNE clustered view of Fig. 5).
+//! * [`hierarchy`] — PBT parent→child lineage as a node-link SVG (Fig. 5
+//!   right).
+//! * [`server`] — dependency-free HTTP server exposing the JSON and SVGs
+//!   plus an embedded HTML viewer.
+//! * [`api`] — the versioned `/api/v1` command + query surface the
+//!   server dispatches through (typed routes, envelope, command bodies,
+//!   and the `RunSource`/`CommandSink` split that lets live, stored, and
+//!   replayed runs serve the same read model).
+//! * [`sse`] — the progress-event feed behind `GET /api/v1/events` and
+//!   the broadcast writer pool that fans it out to subscribers (SSE
+//!   push with `Last-Event-ID` resume, so dashboards stop polling).
+//! * [`report`] — terminal leaderboard/session tables.
+
+pub mod api;
+pub mod cluster_view;
+pub mod export;
+pub mod hierarchy;
+pub mod parallel_coords;
+pub mod platform;
+pub mod plots;
+pub mod report;
+pub mod server;
+pub mod sse;
+pub mod stored;
+mod svg;
+
+pub use platform::{MultiPlatform, Platform};
+pub use stored::{ReplaySource, StoredRun};
+pub use svg::Svg;

@@ -1,0 +1,229 @@
+//! Parallel-coordinates SVG renderer (Fig. 3 / Fig. 7).
+//!
+//! Each hyperparameter is a vertical axis (log scale for log-uniform
+//! parameters, category slots for categoricals); the last axis is the
+//! measure.  One polyline per session, colored by run; top-K sessions can
+//! be highlighted (Fig. 4's masking).
+
+use std::collections::HashSet;
+
+use chopt_core::config::Order;
+use chopt_core::hparam::Space;
+use chopt_core::nsml::{NsmlSession, SessionId};
+
+use crate::svg::{color, Svg};
+
+const MARGIN: f64 = 50.0;
+const WIDTH_PER_AXIS: f64 = 130.0;
+const HEIGHT: f64 = 420.0;
+
+/// One run (color group) of sessions.
+pub struct RunGroup<'a> {
+    pub label: &'a str,
+    pub sessions: &'a [NsmlSession],
+}
+
+/// Render several runs over the union space (merged-session view).
+pub fn render(
+    space: &Space,
+    runs: &[RunGroup<'_>],
+    order: Order,
+    highlight: &HashSet<SessionId>,
+) -> Svg {
+    let n_axes = space.defs.len() + 1;
+    let width = MARGIN * 2.0 + WIDTH_PER_AXIS * (n_axes.max(2) - 1) as f64;
+    let mut svg = Svg::new(width, HEIGHT);
+    let x_of = |axis: usize| MARGIN + WIDTH_PER_AXIS * axis as f64;
+    let y_top = 40.0;
+    let y_bottom = HEIGHT - 40.0;
+
+    // Measure range across all runs.
+    let mut m_lo = f64::INFINITY;
+    let mut m_hi = f64::NEG_INFINITY;
+    for run in runs {
+        for s in run.sessions {
+            if let Some(m) = s.best_measure(order) {
+                m_lo = m_lo.min(m);
+                m_hi = m_hi.max(m);
+            }
+        }
+    }
+    if m_lo > m_hi {
+        m_lo = 0.0;
+        m_hi = 1.0;
+    }
+    if (m_hi - m_lo).abs() < 1e-12 {
+        m_hi = m_lo + 1.0;
+    }
+
+    // Axes.
+    for (i, d) in space.defs.iter().enumerate() {
+        svg.line(x_of(i), y_top, x_of(i), y_bottom, "#888", 1.0);
+        svg.text(x_of(i) - 20.0, y_top - 12.0, 11.0, &d.name);
+    }
+    let mx = x_of(space.defs.len());
+    svg.line(mx, y_top, mx, y_bottom, "#444", 1.5);
+    svg.text(mx - 25.0, y_top - 12.0, 11.0, "measure");
+    svg.text(mx + 4.0, y_bottom, 9.0, &format!("{m_lo:.2}"));
+    svg.text(mx + 4.0, y_top + 6.0, 9.0, &format!("{m_hi:.2}"));
+
+    // Lines.
+    for (ri, run) in runs.iter().enumerate() {
+        let stroke = color(ri);
+        for s in run.sessions {
+            let mut pts = Vec::with_capacity(space.defs.len() + 1);
+            let enc = space.encode(&s.hparams);
+            for (i, &e) in enc.iter().enumerate() {
+                // Inactive params pin to the bottom of the axis.
+                let t = if e < 0.0 { 0.0 } else { e };
+                let y = y_bottom - t * (y_bottom - y_top);
+                pts.push((x_of(i), y));
+            }
+            if let Some(m) = s.best_measure(order) {
+                let t = (m - m_lo) / (m_hi - m_lo);
+                pts.push((mx, y_bottom - t * (y_bottom - y_top)));
+            }
+            let hl = highlight.contains(&s.id);
+            let (w, op) = if hl {
+                (2.2, 0.95)
+            } else if highlight.is_empty() {
+                (1.0, 0.45)
+            } else {
+                (0.7, 0.12)
+            };
+            svg.polyline(&pts, stroke, w, op);
+        }
+        // Legend.
+        svg.rect(MARGIN + 120.0 * ri as f64, HEIGHT - 22.0, 10.0, 10.0, stroke);
+        svg.text(
+            MARGIN + 120.0 * ri as f64 + 14.0,
+            HEIGHT - 13.0,
+            10.0,
+            run.label,
+        );
+    }
+
+    // Per-axis density strips (the paper's distribution hint): quintile
+    // tick marks of observed values.
+    for (i, d) in space.defs.iter().enumerate() {
+        let mut vals: Vec<f64> = Vec::new();
+        for run in runs {
+            for s in run.sessions {
+                let e = space.encode(&s.hparams);
+                if e[i] >= 0.0 {
+                    vals.push(e[i]);
+                }
+            }
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        for q in [0.25, 0.5, 0.75] {
+            if !vals.is_empty() {
+                let v = chopt_core::util::stats::percentile_sorted(&vals, q);
+                let y = y_bottom - v * (y_bottom - y_top);
+                svg.line(x_of(i) - 4.0, y, x_of(i) + 4.0, y, "#bbb", 1.0);
+            }
+        }
+        let _ = d;
+    }
+
+    svg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use chopt_core::config::ChoptConfig;
+    use chopt_core::hparam::{Assignment, Value};
+    use chopt_core::util::rng::Rng;
+
+    fn mk_sessions(n: usize, space: &Space) -> Vec<NsmlSession> {
+        let mut rng = Rng::new(5);
+        (0..n)
+            .map(|i| {
+                let hp = space.sample(&mut rng).unwrap();
+                let mut s = NsmlSession::new(SessionId(i as u64), hp, "m", 0.0);
+                s.report(1, 50.0 + rng.f64() * 30.0, 2.0);
+                s
+            })
+            .collect()
+    }
+
+    #[test]
+    fn renders_all_lines() {
+        let cfg = ChoptConfig::from_json_str(chopt_core::config::LISTING1_EXAMPLE).unwrap();
+        let sessions = mk_sessions(12, &cfg.space);
+        let svg = render(
+            &cfg.space,
+            &[RunGroup {
+                label: "run-1",
+                sessions: &sessions,
+            }],
+            Order::Descending,
+            &HashSet::new(),
+        );
+        let doc = svg.finish();
+        assert_eq!(doc.matches("<polyline").count(), 12);
+        assert!(doc.contains("measure"));
+        assert!(doc.contains("lr"));
+    }
+
+    #[test]
+    fn highlight_changes_weights() {
+        let cfg = ChoptConfig::from_json_str(chopt_core::config::LISTING1_EXAMPLE).unwrap();
+        let sessions = mk_sessions(5, &cfg.space);
+        let mut hl = HashSet::new();
+        hl.insert(SessionId(0));
+        let doc = render(
+            &cfg.space,
+            &[RunGroup {
+                label: "r",
+                sessions: &sessions,
+            }],
+            Order::Descending,
+            &hl,
+        )
+        .finish();
+        assert!(doc.contains("stroke-width=\"2.2\""));
+        assert!(doc.contains("stroke-width=\"0.7\""));
+    }
+
+    #[test]
+    fn multiple_runs_get_distinct_colors() {
+        let cfg = ChoptConfig::from_json_str(chopt_core::config::LISTING1_EXAMPLE).unwrap();
+        let a = mk_sessions(3, &cfg.space);
+        let b = mk_sessions(3, &cfg.space);
+        let doc = render(
+            &cfg.space,
+            &[
+                RunGroup { label: "a", sessions: &a },
+                RunGroup { label: "b", sessions: &b },
+            ],
+            Order::Descending,
+            &HashSet::new(),
+        )
+        .finish();
+        assert!(doc.contains(crate::svg::PALETTE[0]));
+        assert!(doc.contains(crate::svg::PALETTE[1]));
+    }
+
+    #[test]
+    fn handles_missing_params_and_empty() {
+        let cfg = ChoptConfig::from_json_str(chopt_core::config::LISTING1_EXAMPLE).unwrap();
+        // Session with only lr set (others constant in that run).
+        let mut hp = Assignment::new();
+        hp.set("lr", Value::Float(0.05));
+        let mut s = NsmlSession::new(SessionId(9), hp, "m", 0.0);
+        s.report(1, 60.0, 1.0);
+        let doc = render(
+            &cfg.space,
+            &[RunGroup { label: "partial", sessions: &[s] }],
+            Order::Descending,
+            &HashSet::new(),
+        )
+        .finish();
+        assert!(doc.contains("<polyline"));
+        // Empty run set renders without panic.
+        let empty = render(&cfg.space, &[], Order::Descending, &HashSet::new()).finish();
+        assert!(empty.contains("<svg"));
+    }
+}

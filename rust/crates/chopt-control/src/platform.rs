@@ -1,0 +1,1633 @@
+//! The live CHOPT platform: a long-lived coordinator wrapped around a
+//! [`SimEngine`] (paper §3, §3.5).
+//!
+//! Where the engine is a pure state machine, the platform owns the
+//! *observable* side of a run:
+//!
+//! * a structured progress stream — every agent pool transition
+//!   (launch/early-stop/preempt/revive/mutate/evict/finish) is appended to
+//!   a JSONL [`EventLog`] as it happens,
+//! * periodic JSON snapshots of the engine (`snapshot.json`) from which a
+//!   run can be **restored** and continued ([`Platform::restore`]),
+//! * live view documents (leaderboard, sessions, parallel coordinates,
+//!   cluster utilization, status) that `chopt serve --live` republishes to
+//!   the viz HTTP server as the engine advances, and
+//! * online [`Platform::submit`] — users joining the shared cluster while
+//!   other sessions are mid-flight.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use chopt_core::config::ChoptConfig;
+use chopt_core::events::SimTime;
+use chopt_core::nsml::{NsmlSession, SessionId};
+use chopt_core::trainer::Trainer;
+use chopt_core::util::json::Value as Json;
+use chopt_engine::storage::{EventLog, SessionStore};
+
+use crate::api::{ApiCommand, ApiError, ApiQuery, CommandSink, RunSource};
+use crate::export;
+use crate::sse::EventFeed;
+
+use chopt_engine::coordinator::agent::{Agent, AgentEvent};
+use chopt_engine::coordinator::driver::{SimOutcome, SimSetup};
+use chopt_engine::coordinator::engine::{SimEngine, Step};
+use chopt_engine::coordinator::scheduler::{MultiOutcome, StudyManifest, StudyScheduler, StudySpec};
+
+/// Cached leaderboard document keyed by the engine's processed-event
+/// count: when nothing was processed between renders, the previous
+/// document is returned instead of rebuilding it.
+struct LbCache {
+    processed: u64,
+    k: usize,
+    doc: Json,
+}
+
+/// Leaderboard rows of *completed* agents.  Their leaderboards are
+/// frozen, so the rows are rendered once when an agent finishes and
+/// reused by every later render — a render only rebuilds rows for the
+/// (bounded) active agent set, not the whole run history.
+#[derive(Default)]
+struct DoneRows {
+    upto: usize,
+    k: usize,
+    rows: Vec<Json>,
+}
+
+/// A live run: engine + event log + snapshot cadence + view builders.
+pub struct Platform<'t> {
+    engine: SimEngine<'t>,
+    event_log: Option<EventLog>,
+    /// SSE push: progress records are published here as well as (or
+    /// instead of) the JSONL log, so `GET /api/v1/events` streams them.
+    progress_feed: Option<Arc<EventFeed>>,
+    /// Per-agent count of [`AgentEvent`]s already drained to the log.
+    cursors: HashMap<u64, usize>,
+    snapshot_path: Option<PathBuf>,
+    /// Virtual seconds between automatic snapshots.
+    snapshot_every: SimTime,
+    last_snapshot_t: SimTime,
+    /// Done agents drained to completion — their event vectors can never
+    /// grow again, so drains skip them (keeps the per-event drain in
+    /// `drive_until` bounded by the active agent count, not run history).
+    done_drained: usize,
+    /// Render caches (interior-mutable so the doc methods stay `&self`
+    /// for the publish loops).
+    lb_cache: RefCell<Option<LbCache>>,
+    done_rows: RefCell<DoneRows>,
+    /// HTTP read-side generation gauge (see
+    /// [`Platform::set_generation_gauge`]).
+    generation_gauge: Option<Arc<AtomicU64>>,
+    /// Progress events emitted over the platform's lifetime.
+    pub progress_events: u64,
+}
+
+impl<'t> Platform<'t> {
+    pub fn new(
+        setup: SimSetup,
+        make_trainer: impl FnMut(u64) -> Box<dyn Trainer> + 't,
+    ) -> Platform<'t> {
+        Platform::from_engine(SimEngine::new(setup, make_trainer))
+    }
+
+    pub fn from_engine(engine: SimEngine<'t>) -> Platform<'t> {
+        Platform {
+            engine,
+            event_log: None,
+            progress_feed: None,
+            cursors: HashMap::new(),
+            snapshot_path: None,
+            snapshot_every: 3600.0,
+            last_snapshot_t: 0.0,
+            done_drained: 0,
+            lb_cache: RefCell::new(None),
+            done_rows: RefCell::new(DoneRows::default()),
+            generation_gauge: None,
+            progress_events: 0,
+        }
+    }
+
+    /// Publish the engine's processed-event count into `gauge` after
+    /// every advance.  The HTTP layer's response cache keys live entries
+    /// on this gauge (`ApiInbox::generation_gauge`); publishing from
+    /// inside the advance — not just when the engine loop next serves
+    /// the inbox — means a GET racing an advance can never be answered
+    /// with a pre-advance cached body.
+    pub fn set_generation_gauge(&mut self, gauge: Arc<AtomicU64>) {
+        gauge.store(self.engine.events_processed(), Ordering::Release);
+        self.generation_gauge = Some(gauge);
+    }
+
+    /// Append structured progress events to a JSONL log at `path`.
+    pub fn with_event_log(mut self, path: impl AsRef<Path>) -> std::io::Result<Platform<'t>> {
+        self.event_log = Some(EventLog::open(path)?);
+        Ok(self)
+    }
+
+    /// Publish structured progress events into an SSE feed as well —
+    /// the push stream behind `GET /api/v1/events`.  Like the JSONL log,
+    /// attaching a feed switches the drive loop to per-event drains so
+    /// each record carries the virtual time its transition happened.
+    pub fn with_progress_feed(mut self, feed: Arc<EventFeed>) -> Platform<'t> {
+        self.progress_feed = Some(feed);
+        self
+    }
+
+    /// Write an engine snapshot to `path` every `every` virtual seconds
+    /// (and once more at completion).
+    pub fn with_snapshots(mut self, path: impl AsRef<Path>, every: SimTime) -> Platform<'t> {
+        self.snapshot_path = Some(path.as_ref().to_path_buf());
+        self.snapshot_every = every.max(1.0);
+        self
+    }
+
+    pub fn engine(&self) -> &SimEngine<'t> {
+        &self.engine
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.engine.is_done()
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.engine.now()
+    }
+
+    /// Submit a new CHOPT session to the live run (clamped to now).
+    /// Returns `None` if the engine's horizon has already been reached.
+    pub fn submit(&mut self, config: ChoptConfig, at: SimTime) -> Option<SimTime> {
+        let at = self.engine.submit(config, at)?;
+        self.log_json(
+            Json::obj()
+                .with("t", Json::Num(self.engine.now()))
+                .with("ev", Json::Str("submitted".into()))
+                .with("at", Json::Num(at)),
+        );
+        Some(at)
+    }
+
+    /// Advance the engine by `dt` virtual seconds, then drain progress
+    /// events and maybe snapshot.  Returns events processed.  If the
+    /// window is an idle gap (no event within `dt`), one event past the
+    /// gap is processed so callers looping on `advance` always progress;
+    /// a return of 0 therefore means the run is over.
+    pub fn advance(&mut self, dt: SimTime) -> u64 {
+        let mut n = self.drive_until(self.engine.now() + dt);
+        if n == 0
+            && !self.engine.is_done()
+            && matches!(self.engine.step(), Step::Advanced(_))
+        {
+            n += 1;
+            self.drain_progress();
+        }
+        self.after_advance();
+        n
+    }
+
+    /// Advance the engine to virtual time `t` (strict bound — see
+    /// [`SimEngine::run_until`]).
+    pub fn run_until(&mut self, t: SimTime) -> u64 {
+        let n = self.drive_until(t);
+        self.after_advance();
+        n
+    }
+
+    /// Engine `run_until`, but when an event log is attached the progress
+    /// stream is drained after *every* event so each JSONL record carries
+    /// the virtual time the pool transition actually happened (not the
+    /// advance-chunk boundary).
+    fn drive_until(&mut self, t: SimTime) -> u64 {
+        if self.event_log.is_none() && self.progress_feed.is_none() {
+            return self.engine.run_until(t);
+        }
+        let mut n = 0;
+        while !self.engine.is_done() {
+            match self.engine.next_event_time() {
+                Some(next) if next <= t => {
+                    if !matches!(self.engine.step(), Step::Advanced(_)) {
+                        break;
+                    }
+                    n += 1;
+                    self.drain_progress();
+                }
+                _ => break,
+            }
+        }
+        n
+    }
+
+    /// Drive the run to completion in `chunk`-sized virtual-time slices so
+    /// progress/snapshot cadence is honored throughout.
+    pub fn run_to_completion(&mut self, chunk: SimTime) -> u64 {
+        let chunk = chunk.max(1.0);
+        let mut n = 0;
+        loop {
+            let stepped = self.advance(chunk);
+            n += stepped;
+            if self.engine.is_done() || stepped == 0 {
+                break;
+            }
+        }
+        if self.snapshot_path.is_some() {
+            let _ = self.snapshot_now();
+        }
+        n
+    }
+
+    /// Consume the platform into the batch outcome.  The engine's final
+    /// shutdown can itself emit transitions (`Terminated("horizon")` on
+    /// still-active agents), so those are drained from the outcome into
+    /// the event log before it is handed back.
+    pub fn into_outcome(mut self) -> SimOutcome {
+        self.after_advance();
+        let outcome = self.engine.into_outcome();
+        let now = outcome.end_time;
+        for agent in &outcome.agents {
+            let seen = self.cursors.get(&agent.id).copied().unwrap_or(0);
+            for ev in &agent.events[seen..] {
+                self.progress_events += 1;
+                let doc = agent_event_json(agent.id, ev, now);
+                if let Some(feed) = &self.progress_feed {
+                    feed.publish_json(&doc);
+                }
+                if let Some(log) = &mut self.event_log {
+                    let _ = log.append(&doc);
+                }
+            }
+        }
+        if let Some(log) = &mut self.event_log {
+            let _ = log.flush();
+        }
+        outcome
+    }
+
+    // -- progress stream ---------------------------------------------------
+
+    fn after_advance(&mut self) {
+        self.drain_progress();
+        if let Some(log) = &mut self.event_log {
+            let _ = log.flush();
+        }
+        if let Some(gauge) = &self.generation_gauge {
+            gauge.store(self.engine.events_processed(), Ordering::Release);
+        }
+        self.maybe_snapshot();
+    }
+
+    /// Append agent events that occurred since the last drain to the
+    /// event log (one JSON object per pool transition).  When called once
+    /// per engine step (see [`Platform::drive_until`]) `engine.now()` is
+    /// exactly the virtual time the transitions happened.
+    ///
+    /// Only agents the engine marked *dirty* since the last drain are
+    /// visited (plus newly-completed ones, for their final events), so a
+    /// drain after one interval event touches one agent — not every slot.
+    fn drain_progress(&mut self) {
+        let now = self.engine.now();
+        let mut fresh: Vec<Json> = Vec::new();
+        // Newly-completed agents get one final drain; long-done ones are
+        // skipped (their event vectors are immutable).
+        let done_len = self.engine.done_agents().len();
+        for agent in &self.engine.done_agents()[self.done_drained.min(done_len)..] {
+            catch_up_cursor(&mut self.cursors, agent.id, agent, now, |doc| fresh.push(doc));
+        }
+        self.done_drained = done_len;
+        for slot in self.engine.take_dirty_slots() {
+            let Some(agent) = self.engine.agent_at(slot) else {
+                continue; // the touched agent finished (drained above)
+            };
+            catch_up_cursor(&mut self.cursors, agent.id, agent, now, |doc| fresh.push(doc));
+        }
+        self.progress_events += fresh.len() as u64;
+        for doc in fresh {
+            self.log_json(doc);
+        }
+    }
+
+    fn log_json(&mut self, doc: Json) {
+        if let Some(feed) = &self.progress_feed {
+            feed.publish_json(&doc);
+        }
+        if let Some(log) = &mut self.event_log {
+            let _ = log.append(&doc);
+        }
+    }
+
+    fn maybe_snapshot(&mut self) {
+        if self.snapshot_path.is_none() {
+            return;
+        }
+        let now = self.engine.now();
+        if now - self.last_snapshot_t >= self.snapshot_every {
+            let _ = self.snapshot_now();
+        }
+    }
+
+    /// Write (and return) a snapshot right now.
+    pub fn snapshot_now(&mut self) -> std::io::Result<Json> {
+        let doc = self.engine.snapshot_json();
+        if let Some(path) = &self.snapshot_path {
+            if let Some(parent) = path.parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            std::fs::write(path, doc.to_string_pretty())?;
+        }
+        self.last_snapshot_t = self.engine.now();
+        Ok(doc)
+    }
+
+    /// Rebuild a platform from a snapshot file written by
+    /// [`Platform::snapshot_now`].  `make_trainer` must be the factory the
+    /// original run used (state is reproduced by deterministic replay).
+    pub fn restore(
+        path: impl AsRef<Path>,
+        make_trainer: impl FnMut(u64) -> Box<dyn Trainer> + 't,
+    ) -> anyhow::Result<Platform<'t>> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = chopt_core::util::json::parse(&text)?;
+        Platform::restore_doc(&doc, make_trainer)
+    }
+
+    /// [`Platform::restore`] from an already-parsed snapshot document
+    /// (quiet replay — a continued run's utilization chart starts at the
+    /// snapshot point).
+    pub fn restore_doc(
+        doc: &Json,
+        make_trainer: impl FnMut(u64) -> Box<dyn Trainer> + 't,
+    ) -> anyhow::Result<Platform<'t>> {
+        Ok(Platform::from_restored_engine(SimEngine::restore(
+            doc,
+            make_trainer,
+        )?))
+    }
+
+    /// Full-fidelity restore for read models (`stored::StoredRun`): the
+    /// replay keeps series retention on, so every rendered document —
+    /// including the cluster series — is byte-identical to the live
+    /// run's at the same event count.
+    pub fn restore_doc_full(
+        doc: &Json,
+        make_trainer: impl FnMut(u64) -> Box<dyn Trainer> + 't,
+    ) -> anyhow::Result<Platform<'t>> {
+        Ok(Platform::from_restored_engine(SimEngine::restore_full(
+            doc,
+            make_trainer,
+        )?))
+    }
+
+    /// Scrub restore: the platform view of the run after only `upto`
+    /// recorded events (`stored::ReplaySource`, `?at_event=`).
+    pub fn restore_doc_at(
+        doc: &Json,
+        make_trainer: impl FnMut(u64) -> Box<dyn Trainer> + 't,
+        upto: u64,
+    ) -> anyhow::Result<Platform<'t>> {
+        Ok(Platform::from_restored_engine(SimEngine::restore_at(
+            doc,
+            make_trainer,
+            upto,
+        )?))
+    }
+
+    /// Wrap a replayed engine: cursors start at the replayed state so a
+    /// reattached log/feed only receives new transitions, and
+    /// `progress_events` is reconciled to the count a live platform that
+    /// drained every event would report (one per agent event) — the
+    /// status document stays byte-compatible between live and restored.
+    fn from_restored_engine(engine: SimEngine<'t>) -> Platform<'t> {
+        let mut platform = Platform::from_engine(engine);
+        for agent in platform.engine.all_agents() {
+            platform.cursors.insert(agent.id, agent.events.len());
+        }
+        platform.progress_events = platform
+            .engine
+            .all_agents()
+            .map(|a| a.events.len() as u64)
+            .sum();
+        platform.done_drained = platform.engine.done_agents().len();
+        // Replay marked every touched slot dirty; the cursors above
+        // already account for those events, so drop the marks.
+        platform.engine.take_dirty_slots();
+        platform.last_snapshot_t = platform.engine.now();
+        platform
+    }
+
+    // -- live views --------------------------------------------------------
+
+    /// All NSML sessions across all agents (done agents first), by
+    /// reference — the publish-loop variant.  Rendering 10k+ sessions per
+    /// refresh must not deep-clone them first.
+    pub fn sessions_ref(&self) -> Vec<&NsmlSession> {
+        let mut out = Vec::new();
+        for agent in self.engine.all_agents() {
+            let mut ss: Vec<&NsmlSession> = agent.sessions.values().collect();
+            ss.sort_by_key(|s| s.id);
+            out.extend(ss);
+        }
+        out
+    }
+
+    /// Owned-clone variant of [`Platform::sessions_ref`], kept for final
+    /// exports that outlive the platform.
+    pub fn sessions(&self) -> Vec<NsmlSession> {
+        self.sessions_ref().into_iter().cloned().collect()
+    }
+
+    /// Live leaderboard rows (top `k` across every agent's sessions).
+    ///
+    /// Incremental: rows for completed agents are rendered once and
+    /// cached (their leaderboards are frozen), and the whole document is
+    /// cached against the engine's processed-event count — a publish loop
+    /// polling an idle engine gets the cached document back instead of a
+    /// rebuild over every agent in the run's history.
+    pub fn leaderboard_doc(&self, k: usize) -> Json {
+        let processed = self.engine.events_processed();
+        if let Some(c) = self.lb_cache.borrow().as_ref() {
+            if c.processed == processed && c.k == k {
+                return c.doc.clone();
+            }
+        }
+        let mut rows = self.collect_leaderboard_rows(k);
+        // Cross-agent merge: best first under the first agent's order
+        // (platform runs share a measure in practice).  NaN-safe.
+        let descending = self.order() == chopt_core::config::Order::Descending;
+        rows.sort_by(|a, b| {
+            let ma = a.get("best").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+            let mb = b.get("best").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+            // NaN rows sink to the bottom regardless of order direction.
+            match (ma.is_nan(), mb.is_nan()) {
+                (true, true) => std::cmp::Ordering::Equal,
+                (true, false) => std::cmp::Ordering::Greater,
+                (false, true) => std::cmp::Ordering::Less,
+                (false, false) if descending => mb.total_cmp(&ma),
+                (false, false) => ma.total_cmp(&mb),
+            }
+        });
+        rows.truncate(k);
+        let doc = Json::obj()
+            .with("t", Json::Num(self.engine.now()))
+            .with("rows", Json::Arr(rows));
+        *self.lb_cache.borrow_mut() = Some(LbCache {
+            processed,
+            k,
+            doc: doc.clone(),
+        });
+        doc
+    }
+
+    /// Candidate rows for the merged leaderboard: cached frozen rows for
+    /// done agents plus freshly-rendered rows for active ones.
+    fn collect_leaderboard_rows(&self, k: usize) -> Vec<Json> {
+        let done = self.engine.done_agents();
+        let mut cache = self.done_rows.borrow_mut();
+        if cache.k != k {
+            cache.rows.clear();
+            cache.upto = 0;
+            cache.k = k;
+        }
+        let upto = cache.upto.min(done.len());
+        for agent in &done[upto..] {
+            agent_leaderboard_rows(agent, k, &mut cache.rows);
+        }
+        cache.upto = done.len();
+        let mut rows = cache.rows.clone();
+        for agent in self.engine.active_agents() {
+            agent_leaderboard_rows(agent, k, &mut rows);
+        }
+        rows
+    }
+
+    /// Sessions document in the `SessionStore` format `chopt serve` uses
+    /// (rendered from references — no session clones).
+    pub fn sessions_doc(&self) -> Json {
+        let runs: Vec<(String, Vec<&NsmlSession>)> = self
+            .engine
+            .all_agents()
+            .map(|agent| {
+                let mut ss: Vec<&NsmlSession> = agent.sessions.values().collect();
+                ss.sort_by_key(|s| s.id);
+                (format!("chopt-{}", agent.id), ss)
+            })
+            .collect();
+        SessionStore::doc_from_refs(&runs)
+    }
+
+    /// The run's measure order (first agent's; platform runs share one).
+    pub fn order(&self) -> chopt_core::config::Order {
+        self.engine
+            .all_agents()
+            .next()
+            .map(|a| a.cfg.order)
+            .unwrap_or(chopt_core::config::Order::Descending)
+    }
+
+    /// Parallel-coordinates document over all sessions (axes from `space`).
+    pub fn parallel_doc(&self, space: &chopt_core::hparam::Space) -> Json {
+        self.parallel_doc_from(space, &self.sessions_ref())
+    }
+
+    /// Same, over a caller-held session list — lets a publish loop collect
+    /// [`Platform::sessions_ref`] once and render every document from the
+    /// same borrowed set.
+    pub fn parallel_doc_from(
+        &self,
+        space: &chopt_core::hparam::Space,
+        sessions: &[&NsmlSession],
+    ) -> Json {
+        export::parallel_coords_doc_refs(space, sessions, self.order(), "live")
+    }
+
+    /// Cluster utilization view (live Fig. 8).
+    pub fn cluster_doc(&self) -> Json {
+        export::cluster_doc(self.engine.cluster(), self.engine.now())
+    }
+
+    /// Paginated session page (the v1 `/api/v1/sessions` document):
+    /// `total` sessions overall, rows `[offset, offset+limit)` in
+    /// done-agents-first order, each labelled with its CHOPT agent id.
+    pub fn sessions_page_doc(&self, limit: usize, offset: usize) -> Json {
+        let mut all: Vec<(u64, &NsmlSession)> = Vec::new();
+        for agent in self.engine.all_agents() {
+            let mut ss: Vec<&NsmlSession> = agent.sessions.values().collect();
+            ss.sort_by_key(|s| s.id);
+            all.extend(ss.into_iter().map(|s| (agent.id, s)));
+        }
+        sessions_page(all, limit, offset)
+    }
+
+    /// Paginated per-session curves page (the v1 `/api/v1/curves`
+    /// document): `total` sessions overall, curve rows for
+    /// `[offset, offset+limit)` in the same done-agents-first order the
+    /// sessions page uses.
+    pub fn curves_page_doc(&self, limit: usize, offset: usize) -> Json {
+        let all = self.sessions_ref();
+        curves_page(&all, limit, offset)
+    }
+
+    /// One-object run status (the `/api/status.json` heartbeat).
+    pub fn status_doc(&self) -> Json {
+        let engine = &self.engine;
+        let (live, stop, dead) = engine.active_agents().fold((0, 0, 0), |acc, a| {
+            (
+                acc.0 + a.pools.live_count(),
+                acc.1 + a.pools.stop_count(),
+                acc.2 + a.pools.dead_count(),
+            )
+        });
+        Json::obj()
+            .with("t", Json::Num(engine.now()))
+            .with("events_processed", Json::Num(engine.events_processed() as f64))
+            .with("done", Json::Bool(engine.is_done()))
+            .with("queue_len", Json::Num(engine.queue_len() as f64))
+            .with("active_agents", Json::Num(engine.active_agents().count() as f64))
+            .with("done_agents", Json::Num(engine.done_agents().len() as f64))
+            .with("pool_live", Json::Num(live as f64))
+            .with("pool_stop", Json::Num(stop as f64))
+            .with("pool_dead", Json::Num(dead as f64))
+            .with(
+                "best",
+                engine
+                    .best()
+                    .map(|(_, _, m)| Json::Num(m))
+                    .unwrap_or(Json::Null),
+            )
+            .with(
+                "utilization",
+                Json::Num(engine.cluster().utilization()),
+            )
+            .with("election_term", Json::Num(engine.election().term() as f64))
+            .with("progress_events", Json::Num(self.progress_events as f64))
+    }
+}
+
+/// The live layer over a [`StudyScheduler`]: the multi-tenant analog of
+/// [`Platform`].
+///
+/// * **per-study JSONL streams** — each study gets its own
+///   `events-<name>.jsonl` (created lazily, so online-submitted studies
+///   stream too); every record carries a `"study"` label on top of the
+///   [`agent_event_json`] fields,
+/// * **merged fair-share document** — [`MultiPlatform::fair_share_doc`]
+///   reports cluster utilization plus per-study quota / target / held /
+///   borrowed accounting (the multi-tenant Fig. 8 view),
+/// * periodic snapshots + [`MultiPlatform::restore`], same replay
+///   contract as the single-study platform.
+pub struct MultiPlatform<'t> {
+    sched: StudyScheduler<'t>,
+    /// Directory for per-study JSONL streams (None = no logging).
+    log_dir: Option<PathBuf>,
+    logs: HashMap<usize, EventLog>,
+    /// SSE push: the merged progress stream (every record carries its
+    /// `"study"` label) behind `GET /api/v1/events`.
+    progress_feed: Option<Arc<EventFeed>>,
+    /// Per-study count of agent events already drained.
+    cursors: HashMap<usize, usize>,
+    snapshot_path: Option<PathBuf>,
+    snapshot_every: SimTime,
+    last_snapshot_t: SimTime,
+    /// Per-study leaderboard documents keyed on the scheduler's
+    /// processed-event count (the same RefCell pattern as the merged
+    /// leaderboard cache): a dashboard polling N tenants between events
+    /// re-renders nothing.
+    study_lb_cache: RefCell<HashMap<String, LbCache>>,
+    /// HTTP read-side generation gauge (see
+    /// [`MultiPlatform::set_generation_gauge`]).
+    generation_gauge: Option<Arc<AtomicU64>>,
+    /// Progress events emitted over the platform's lifetime.
+    pub progress_events: u64,
+}
+
+impl<'t> MultiPlatform<'t> {
+    pub fn new(
+        manifest: StudyManifest,
+        make_trainer: impl FnMut(usize, u64) -> Box<dyn Trainer + Send> + 't,
+    ) -> MultiPlatform<'t> {
+        MultiPlatform::from_scheduler(StudyScheduler::new(manifest, make_trainer))
+    }
+
+    pub fn from_scheduler(sched: StudyScheduler<'t>) -> MultiPlatform<'t> {
+        MultiPlatform {
+            sched,
+            log_dir: None,
+            logs: HashMap::new(),
+            progress_feed: None,
+            cursors: HashMap::new(),
+            snapshot_path: None,
+            snapshot_every: 3600.0,
+            last_snapshot_t: 0.0,
+            study_lb_cache: RefCell::new(HashMap::new()),
+            generation_gauge: None,
+            progress_events: 0,
+        }
+    }
+
+    /// Publish the scheduler's processed-event count into `gauge` after
+    /// every advance — same contract as
+    /// [`Platform::set_generation_gauge`].
+    pub fn set_generation_gauge(&mut self, gauge: Arc<AtomicU64>) {
+        gauge.store(self.sched.events_processed(), Ordering::Release);
+        self.generation_gauge = Some(gauge);
+    }
+
+    /// Stream per-study progress into `dir/events-<study>.jsonl`.
+    pub fn with_event_logs(mut self, dir: impl AsRef<Path>) -> std::io::Result<MultiPlatform<'t>> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        self.log_dir = Some(dir.as_ref().to_path_buf());
+        Ok(self)
+    }
+
+    /// Publish the merged progress stream into an SSE feed (the push
+    /// stream behind `GET /api/v1/events`); switches the drive loop to
+    /// per-event drains like the JSONL logs do.
+    pub fn with_progress_feed(mut self, feed: Arc<EventFeed>) -> MultiPlatform<'t> {
+        self.progress_feed = Some(feed);
+        self
+    }
+
+    /// Write a scheduler snapshot to `path` every `every` virtual seconds
+    /// (and once more at completion).
+    pub fn with_snapshots(mut self, path: impl AsRef<Path>, every: SimTime) -> MultiPlatform<'t> {
+        self.snapshot_path = Some(path.as_ref().to_path_buf());
+        self.snapshot_every = every.max(1.0);
+        self
+    }
+
+    pub fn scheduler(&self) -> &StudyScheduler<'t> {
+        &self.sched
+    }
+
+    /// Step independent studies on up to `n` worker threads between
+    /// fair-share reconciliations (the `--step-threads` flag).  Purely a
+    /// wall-clock knob — see [`StudyScheduler::set_step_threads`].
+    pub fn set_step_threads(&mut self, n: usize) {
+        self.sched.set_step_threads(n);
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.sched.is_done()
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.sched.now()
+    }
+
+    /// Submit a new study to the live run (see
+    /// [`StudyScheduler::submit_study`] for the quota rules).
+    pub fn submit_study(&mut self, spec: StudySpec, at: SimTime) -> Option<SimTime> {
+        self.sched.submit_study(spec, at)
+    }
+
+    /// Advance to virtual time `t`, draining per-study progress after
+    /// every event when logging is enabled (so each record carries the
+    /// virtual time its transition actually happened).
+    pub fn run_until(&mut self, t: SimTime) -> u64 {
+        let n = self.drive_until(t);
+        self.after_advance();
+        n
+    }
+
+    /// Advance by `dt`; if the window is an idle gap, one event past it
+    /// is processed so callers looping on `advance` always make progress
+    /// (a return of 0 means the run is over).
+    pub fn advance(&mut self, dt: SimTime) -> u64 {
+        let mut n = self.drive_until(self.sched.now() + dt);
+        if n == 0
+            && !self.sched.is_done()
+            && matches!(self.sched.step(), Step::Advanced(_))
+        {
+            n += 1;
+            self.drain_progress();
+        }
+        self.after_advance();
+        n
+    }
+
+    /// Drive to completion in `chunk`-sized slices (progress/snapshot
+    /// cadence honored throughout).
+    pub fn run_to_completion(&mut self, chunk: SimTime) -> u64 {
+        let chunk = chunk.max(1.0);
+        let mut n = 0;
+        loop {
+            let stepped = self.advance(chunk);
+            n += stepped;
+            if self.sched.is_done() || stepped == 0 {
+                break;
+            }
+        }
+        if self.snapshot_path.is_some() {
+            let _ = self.snapshot_now();
+        }
+        n
+    }
+
+    fn drive_until(&mut self, t: SimTime) -> u64 {
+        if self.log_dir.is_none() && self.progress_feed.is_none() {
+            return self.sched.run_until(t);
+        }
+        let mut n = 0;
+        while !self.sched.is_done() {
+            // Windowed parallel stepping: process a whole inter-barrier
+            // window, then emit its progress from the recorded marks —
+            // each record still stamped with the virtual time its event
+            // fired, byte-identical to the per-event serial drain.
+            if self.sched.step_threads() > 1 {
+                let stepped = self.sched.parallel_window(t);
+                if stepped > 0 {
+                    n += stepped;
+                    self.drain_window_progress();
+                    continue;
+                }
+            }
+            match self.sched.next_event_time() {
+                Some(next) if next <= t => {
+                    if !matches!(self.sched.step(), Step::Advanced(_)) {
+                        break;
+                    }
+                    n += 1;
+                    self.drain_progress();
+                }
+                _ => break,
+            }
+        }
+        n
+    }
+
+    /// Drain the progress of one parallel window from its per-event
+    /// marks (see [`StudyScheduler::take_window_marks`]): each mark
+    /// slices that study's agent event buffer up to the recorded length
+    /// and stamps the records with the mark's event time, reproducing
+    /// the serial per-event drain byte-for-byte.
+    fn drain_window_progress(&mut self) {
+        let marks = self.sched.take_window_marks();
+        // The dirty set is superseded by the marks for this window.
+        self.sched.take_dirty_studies();
+        let mut fresh: Vec<(usize, String, Json)> = Vec::new();
+        for (idx, at, events_len) in marks {
+            let Some(st) = self.sched.studies().get(idx) else {
+                continue;
+            };
+            let Some(agent) = st.agent() else { continue };
+            let name = st.name().to_string();
+            let seen = self.cursors.get(&idx).copied().unwrap_or(0);
+            let upto = events_len.min(agent.events.len());
+            for ev in &agent.events[seen.min(upto)..upto] {
+                let doc = agent_event_json(agent.id, ev, at).with("study", Json::Str(name.clone()));
+                fresh.push((idx, name.clone(), doc));
+            }
+            self.cursors.insert(idx, upto.max(seen));
+        }
+        self.progress_events += fresh.len() as u64;
+        for (idx, name, doc) in fresh {
+            if let Some(feed) = &self.progress_feed {
+                feed.publish_json(&doc);
+            }
+            if self.log_dir.is_some() {
+                if let Some(log) = self.log_for(idx, &name) {
+                    let _ = log.append(&doc);
+                }
+            }
+        }
+    }
+
+    /// Consume the platform into the outcome, draining final shutdown
+    /// transitions into the logs first.
+    pub fn into_outcome(mut self) -> MultiOutcome {
+        self.after_advance();
+        let MultiPlatform {
+            sched,
+            log_dir,
+            mut logs,
+            progress_feed,
+            cursors,
+            ..
+        } = self;
+        let outcome = sched.into_outcome();
+        let now = outcome.end_time;
+        if log_dir.is_some() || progress_feed.is_some() {
+            for (idx, study) in outcome.studies.iter().enumerate() {
+                let Some(agent) = &study.agent else { continue };
+                let seen = cursors.get(&idx).copied().unwrap_or(0);
+                for ev in &agent.events[seen..] {
+                    let doc = agent_event_json(agent.id, ev, now)
+                        .with("study", Json::Str(study.name.clone()));
+                    if let Some(feed) = &progress_feed {
+                        feed.publish_json(&doc);
+                    }
+                    if let Some(log) = open_study_log(&log_dir, &mut logs, idx, &study.name) {
+                        let _ = log.append(&doc);
+                    }
+                }
+            }
+            for log in logs.values_mut() {
+                let _ = log.flush();
+            }
+        }
+        outcome
+    }
+
+    // -- progress stream ---------------------------------------------------
+
+    fn after_advance(&mut self) {
+        self.drain_progress();
+        for log in self.logs.values_mut() {
+            let _ = log.flush();
+        }
+        if let Some(gauge) = &self.generation_gauge {
+            gauge.store(self.sched.events_processed(), Ordering::Release);
+        }
+        self.maybe_snapshot();
+    }
+
+    fn log_for(&mut self, idx: usize, name: &str) -> Option<&mut EventLog> {
+        open_study_log(&self.log_dir, &mut self.logs, idx, name)
+    }
+
+    /// Drain fresh agent events into the per-study logs.  Only studies
+    /// the scheduler marked dirty since the last drain are visited — the
+    /// per-event drain in `drive_until` is O(touched studies), not
+    /// O(all studies), which matters at 64+ tenants.
+    fn drain_progress(&mut self) {
+        if self.log_dir.is_none() && self.progress_feed.is_none() {
+            // No sink: discard the marks so the list cannot grow across
+            // a long unlogged run.
+            self.sched.take_dirty_studies();
+            return;
+        }
+        let now = self.sched.now();
+        let mut fresh: Vec<(usize, String, Json)> = Vec::new();
+        for idx in self.sched.take_dirty_studies() {
+            let Some(st) = self.sched.studies().get(idx) else {
+                continue;
+            };
+            let Some(agent) = st.agent() else { continue };
+            let name = st.name().to_string();
+            catch_up_cursor(&mut self.cursors, idx, agent, now, |doc| {
+                fresh.push((idx, name.clone(), doc.with("study", Json::Str(name.clone()))));
+            });
+        }
+        self.progress_events += fresh.len() as u64;
+        for (idx, name, doc) in fresh {
+            if let Some(feed) = &self.progress_feed {
+                feed.publish_json(&doc);
+            }
+            if self.log_dir.is_some() {
+                if let Some(log) = self.log_for(idx, &name) {
+                    let _ = log.append(&doc);
+                }
+            }
+        }
+    }
+
+    fn maybe_snapshot(&mut self) {
+        if self.snapshot_path.is_none() {
+            return;
+        }
+        if self.sched.now() - self.last_snapshot_t >= self.snapshot_every {
+            let _ = self.snapshot_now();
+        }
+    }
+
+    /// Write (and return) a snapshot right now.
+    pub fn snapshot_now(&mut self) -> std::io::Result<Json> {
+        let doc = self.sched.snapshot_json();
+        if let Some(path) = &self.snapshot_path {
+            if let Some(parent) = path.parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            std::fs::write(path, doc.to_string_pretty())?;
+        }
+        self.last_snapshot_t = self.sched.now();
+        Ok(doc)
+    }
+
+    /// Rebuild a platform from a snapshot file written by
+    /// [`MultiPlatform::snapshot_now`] (state reproduced by replay).
+    pub fn restore(
+        path: impl AsRef<Path>,
+        make_trainer: impl FnMut(usize, u64) -> Box<dyn Trainer + Send> + 't,
+    ) -> anyhow::Result<MultiPlatform<'t>> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = chopt_core::util::json::parse(&text)?;
+        MultiPlatform::restore_doc(&doc, make_trainer)
+    }
+
+    /// [`MultiPlatform::restore`] from an already-parsed snapshot
+    /// document (quiet replay).
+    pub fn restore_doc(
+        doc: &Json,
+        make_trainer: impl FnMut(usize, u64) -> Box<dyn Trainer + Send> + 't,
+    ) -> anyhow::Result<MultiPlatform<'t>> {
+        Ok(MultiPlatform::from_restored_scheduler(
+            StudyScheduler::restore(doc, make_trainer)?,
+        ))
+    }
+
+    /// Full-fidelity restore for read models (`stored::StoredRun`):
+    /// series retention stays on during the replay, so every rendered
+    /// document is byte-identical to the live run's.
+    pub fn restore_doc_full(
+        doc: &Json,
+        make_trainer: impl FnMut(usize, u64) -> Box<dyn Trainer + Send> + 't,
+    ) -> anyhow::Result<MultiPlatform<'t>> {
+        Ok(MultiPlatform::from_restored_scheduler(
+            StudyScheduler::restore_full(doc, make_trainer)?,
+        ))
+    }
+
+    /// Scrub restore: the platform view of the run after only `upto`
+    /// recorded events (`stored::ReplaySource`, `?at_event=`) — the
+    /// multi-study twin of [`Platform::restore_doc_at`].
+    pub fn restore_doc_at(
+        doc: &Json,
+        make_trainer: impl FnMut(usize, u64) -> Box<dyn Trainer + Send> + 't,
+        upto: u64,
+    ) -> anyhow::Result<MultiPlatform<'t>> {
+        Ok(MultiPlatform::from_restored_scheduler(
+            StudyScheduler::restore_at(doc, make_trainer, upto)?,
+        ))
+    }
+
+    /// Wrap a replayed scheduler: cursors start at the replayed state,
+    /// and `progress_events` is reconciled to the count a live, logged
+    /// run would report (one per agent event) so the status document
+    /// stays byte-compatible between live and restored.
+    fn from_restored_scheduler(sched: StudyScheduler<'t>) -> MultiPlatform<'t> {
+        let mut platform = MultiPlatform::from_scheduler(sched);
+        // Events up to the snapshot were already logged by the original
+        // run; start the cursors at the replayed state.
+        let ends: Vec<(usize, usize)> = platform
+            .sched
+            .studies()
+            .iter()
+            .enumerate()
+            .filter_map(|(idx, st)| st.agent().map(|a| (idx, a.events.len())))
+            .collect();
+        platform.progress_events = ends.iter().map(|&(_, len)| len as u64).sum();
+        for (idx, len) in ends {
+            platform.cursors.insert(idx, len);
+        }
+        // Replay marked every touched study dirty; the cursors already
+        // account for those events, so drop the marks.
+        platform.sched.take_dirty_studies();
+        platform.last_snapshot_t = platform.sched.now();
+        platform
+    }
+
+    // -- live views --------------------------------------------------------
+
+    /// Merged cluster-utilization / fair-share accounting (the
+    /// multi-tenant Fig. 8 view): who is guaranteed what, who holds what,
+    /// and who is borrowing beyond quota right now.
+    pub fn fair_share_doc(&self) -> Json {
+        let cluster = self.sched.cluster();
+        let studies = self
+            .sched
+            .studies()
+            .iter()
+            .map(|st| {
+                let (held, live, stop, dead, best) = match st.agent() {
+                    Some(a) => (
+                        cluster.held_by(chopt_cluster::Owner::Chopt(a.tenant)),
+                        a.pools.live_count(),
+                        a.pools.stop_count(),
+                        a.pools.dead_count(),
+                        a.best().map(|(_, m)| Json::Num(m)).unwrap_or(Json::Null),
+                    ),
+                    None => (0, 0, 0, 0, Json::Null),
+                };
+                Json::obj()
+                    .with("study", Json::Str(st.name().to_string()))
+                    .with("quota", Json::Num(st.quota() as f64))
+                    .with("priority", Json::Num(st.priority()))
+                    .with("paused", Json::Bool(st.paused()))
+                    .with("target", Json::Num(st.target() as f64))
+                    .with("held", Json::Num(held as f64))
+                    .with(
+                        "borrowed",
+                        Json::Num(held.saturating_sub(st.quota()) as f64),
+                    )
+                    .with("pool_live", Json::Num(live as f64))
+                    .with("pool_stop", Json::Num(stop as f64))
+                    .with("pool_dead", Json::Num(dead as f64))
+                    .with("started", Json::Bool(st.started()))
+                    .with("done", Json::Bool(st.done()))
+                    .with("best", best)
+            })
+            .collect();
+        Json::obj()
+            .with("t", Json::Num(self.sched.now()))
+            .with("cluster_gpus", Json::Num(cluster.total() as f64))
+            .with("used", Json::Num(cluster.used() as f64))
+            .with(
+                "external",
+                Json::Num(cluster.held_by(chopt_cluster::Owner::External) as f64),
+            )
+            .with("utilization", Json::Num(cluster.utilization()))
+            .with("studies", Json::Arr(studies))
+    }
+
+    /// Live leaderboard for one study (rows shaped like
+    /// [`Platform::leaderboard_doc`], plus the study label).
+    ///
+    /// Cached per study against the scheduler's processed-event count
+    /// (the same RefCell pattern as the merged leaderboard): polling an
+    /// idle run — or one where only *other* studies advanced the clock
+    /// without any event — returns the previous document instead of
+    /// re-ranking.
+    pub fn study_leaderboard_doc(&self, name: &str, k: usize) -> Json {
+        let processed = self.sched.events_processed();
+        if let Some(c) = self.study_lb_cache.borrow().get(name) {
+            if c.processed == processed && c.k == k {
+                return c.doc.clone();
+            }
+        }
+        let mut rows: Vec<Json> = Vec::new();
+        if let Some(agent) = self.sched.study(name).and_then(|st| st.agent()) {
+            for &(sid, best) in agent.leaderboard.top(k) {
+                let s = &agent.sessions[&sid];
+                rows.push(
+                    Json::obj()
+                        .with("study", Json::Str(name.to_string()))
+                        .with("chopt", Json::Str(agent.id.to_string()))
+                        .with("session", Json::Str(sid.0.to_string()))
+                        .with("best", Json::Num(best))
+                        .with("epochs", Json::Num(s.epochs as f64))
+                        .with("status", Json::Str(s.status.name().to_string()))
+                        .with("order", Json::Str(agent.cfg.order.name().to_string())),
+                );
+            }
+        }
+        let doc = Json::obj()
+            .with("t", Json::Num(self.sched.now()))
+            .with("study", Json::Str(name.to_string()))
+            .with("rows", Json::Arr(rows));
+        self.study_lb_cache.borrow_mut().insert(
+            name.to_string(),
+            LbCache {
+                processed,
+                k,
+                doc: doc.clone(),
+            },
+        );
+        doc
+    }
+
+    /// Sessions document for one study in the `SessionStore` format
+    /// (rendered from references — no session clones).
+    pub fn study_sessions_doc(&self, name: &str) -> Json {
+        let mut runs: Vec<(String, Vec<&NsmlSession>)> = Vec::new();
+        if let Some(agent) = self.sched.study(name).and_then(|st| st.agent()) {
+            let mut ss: Vec<&NsmlSession> = agent.sessions.values().collect();
+            ss.sort_by_key(|s| s.id);
+            runs.push((format!("{name}-chopt-{}", agent.id), ss));
+        }
+        SessionStore::doc_from_refs(&runs)
+    }
+
+    /// Paginated session page for one study (the v1
+    /// `/api/v1/studies/<name>/sessions` document).
+    pub fn study_sessions_page_doc(&self, name: &str, limit: usize, offset: usize) -> Json {
+        let mut all: Vec<(u64, &NsmlSession)> = Vec::new();
+        if let Some(agent) = self.sched.study(name).and_then(|st| st.agent()) {
+            let mut ss: Vec<&NsmlSession> = agent.sessions.values().collect();
+            ss.sort_by_key(|s| s.id);
+            all.extend(ss.into_iter().map(|s| (agent.id, s)));
+        }
+        sessions_page(all, limit, offset).with("study", Json::Str(name.to_string()))
+    }
+
+    /// Paginated curves page for one study (the v1
+    /// `/api/v1/studies/<name>/curves` document).
+    pub fn study_curves_page_doc(&self, name: &str, limit: usize, offset: usize) -> Json {
+        let mut all: Vec<&NsmlSession> = Vec::new();
+        if let Some(agent) = self.sched.study(name).and_then(|st| st.agent()) {
+            all.extend(agent.sessions.values());
+            all.sort_by_key(|s| s.id);
+        }
+        curves_page(&all, limit, offset).with("study", Json::Str(name.to_string()))
+    }
+
+    /// Study directory (the v1 `/api/v1/studies` document).
+    pub fn studies_doc(&self) -> Json {
+        let rows: Vec<Json> = self
+            .sched
+            .studies()
+            .iter()
+            .map(|st| {
+                Json::obj()
+                    .with("study", Json::Str(st.name().to_string()))
+                    .with("quota", Json::Num(st.quota() as f64))
+                    .with("priority", Json::Num(st.priority()))
+                    .with("paused", Json::Bool(st.paused()))
+                    .with("started", Json::Bool(st.started()))
+                    .with("done", Json::Bool(st.done()))
+                    .with(
+                        "sessions",
+                        Json::Num(st.agent().map(|a| a.sessions.len()).unwrap_or(0) as f64),
+                    )
+            })
+            .collect();
+        Json::obj()
+            .with("t", Json::Num(self.sched.now()))
+            .with("count", Json::Num(rows.len() as f64))
+            .with("studies", Json::Arr(rows))
+    }
+
+    /// Parallel-coordinates document for one study (axes from the
+    /// study's own search space).
+    pub fn study_parallel_doc(&self, name: &str) -> Option<Json> {
+        let st = self.sched.study(name)?;
+        let mut refs: Vec<&NsmlSession> = Vec::new();
+        if let Some(agent) = st.agent() {
+            refs.extend(agent.sessions.values());
+            refs.sort_by_key(|s| s.id);
+        }
+        Some(export::parallel_coords_doc_refs(
+            &st.config().space,
+            &refs,
+            st.config().order,
+            name,
+        ))
+    }
+
+    /// One-object run status across all studies.
+    pub fn status_doc(&self) -> Json {
+        let sched = &self.sched;
+        let (started, done) = sched.studies().iter().fold((0, 0), |acc, st| {
+            (
+                acc.0 + usize::from(st.started()),
+                acc.1 + usize::from(st.done()),
+            )
+        });
+        Json::obj()
+            .with("t", Json::Num(sched.now()))
+            .with("events_processed", Json::Num(sched.events_processed() as f64))
+            .with("done", Json::Bool(sched.is_done()))
+            .with("studies", Json::Num(sched.studies().len() as f64))
+            .with("studies_started", Json::Num(started as f64))
+            .with("studies_done", Json::Num(done as f64))
+            .with("utilization", Json::Num(sched.cluster().utilization()))
+            .with("progress_events", Json::Num(self.progress_events as f64))
+    }
+}
+
+/// Shared pagination shell: `total` + the `[offset, offset+limit)` page
+/// of rows, each a session document labelled with its CHOPT agent id.
+/// Out-of-range offsets yield an empty page, not an error.
+fn sessions_page(all: Vec<(u64, &NsmlSession)>, limit: usize, offset: usize) -> Json {
+    let total = all.len();
+    let rows: Vec<Json> = all
+        .into_iter()
+        .skip(offset)
+        .take(limit)
+        .map(|(aid, s)| s.to_json().with("chopt", Json::Str(aid.to_string())))
+        .collect();
+    Json::obj()
+        .with("total", Json::Num(total as f64))
+        .with("offset", Json::Num(offset as f64))
+        .with("returned", Json::Num(rows.len() as f64))
+        .with("sessions", Json::Arr(rows))
+}
+
+/// The curves twin of [`sessions_page`]: the `[offset, offset+limit)`
+/// window of per-session loss/measure curves.
+fn curves_page(all: &[&NsmlSession], limit: usize, offset: usize) -> Json {
+    let total = all.len();
+    let page: Vec<&NsmlSession> = all
+        .iter()
+        .copied()
+        .skip(offset)
+        .take(limit)
+        .collect();
+    let curves = export::curves_doc_refs(&page);
+    Json::obj()
+        .with("total", Json::Num(total as f64))
+        .with("offset", Json::Num(offset as f64))
+        .with("returned", Json::Num(page.len() as f64))
+        .with(
+            "curves",
+            curves.get("curves").cloned().unwrap_or(Json::Arr(Vec::new())),
+        )
+}
+
+/// The single-study **read model**: queries serve from the incremental
+/// documents.  `stored::StoredRun` reuses exactly this implementation
+/// on a replayed engine, which is what makes stored bodies byte-
+/// identical to live ones.
+impl<'t> RunSource for Platform<'t> {
+    fn generation(&self) -> u64 {
+        self.engine.events_processed()
+    }
+
+    fn query(&self, q: &ApiQuery) -> Result<Json, ApiError> {
+        match q {
+            ApiQuery::Status => Ok(self.status_doc()),
+            ApiQuery::Cluster { window } => Ok(export::cluster_doc_windowed(
+                self.engine.cluster(),
+                self.engine.now(),
+                *window,
+            )),
+            ApiQuery::Leaderboard { k } => Ok(self.leaderboard_doc(*k)),
+            ApiQuery::Sessions { limit, offset } => Ok(self.sessions_page_doc(*limit, *offset)),
+            ApiQuery::Curves { limit, offset } => Ok(self.curves_page_doc(*limit, *offset)),
+            ApiQuery::Parallel => {
+                let space = self
+                    .engine
+                    .all_agents()
+                    .next()
+                    .map(|a| a.cfg.space.clone())
+                    .ok_or_else(|| ApiError::NotFound("no agent has started yet".into()))?;
+                Ok(self.parallel_doc(&space))
+            }
+            ApiQuery::FairShare
+            | ApiQuery::Studies
+            | ApiQuery::StudySessions { .. }
+            | ApiQuery::StudyLeaderboard { .. }
+            | ApiQuery::StudyParallel { .. }
+            | ApiQuery::StudyCurves { .. } => Err(ApiError::NotFound(
+                "multi-study endpoint; this server runs a single study".into(),
+            )),
+        }
+    }
+}
+
+/// The single-study **command side**: commands feed the engine's
+/// recorded-input channel and take effect at the next event boundary.
+impl<'t> CommandSink for Platform<'t> {
+    fn command(&mut self, c: &ApiCommand) -> Result<Json, ApiError> {
+        let now = self.engine.now();
+        let ack = |kind: &str, at: SimTime| {
+            Json::obj()
+                .with("applied", Json::Bool(true))
+                .with("command", Json::Str(kind.to_string()))
+                .with("effective_at", Json::Num(at))
+        };
+        match c {
+            ApiCommand::Submit { config, at } => {
+                let cfg = ChoptConfig::from_json(config)
+                    .map_err(|e| ApiError::BadRequest(format!("bad config: {e:#}")))?;
+                let at = self
+                    .submit(cfg, (*at).unwrap_or(now))
+                    .ok_or_else(|| ApiError::BadRequest("horizon reached".into()))?;
+                Ok(ack(c.name(), at))
+            }
+            ApiCommand::PauseSession { session, .. } => {
+                let at = self
+                    .engine
+                    .pause_session(SessionId(*session), now)
+                    .ok_or_else(|| ApiError::BadRequest("session is not live".into()))?;
+                Ok(ack(c.name(), at))
+            }
+            ApiCommand::ResumeSession { session, .. } => {
+                let at = self
+                    .engine
+                    .resume_session(SessionId(*session), now)
+                    .ok_or_else(|| ApiError::BadRequest("session is not paused".into()))?;
+                Ok(ack(c.name(), at))
+            }
+            ApiCommand::StopSession { session, .. } => {
+                let at = self
+                    .engine
+                    .stop_session(SessionId(*session), now)
+                    .ok_or_else(|| ApiError::BadRequest("session is not live or paused".into()))?;
+                Ok(ack(c.name(), at))
+            }
+            ApiCommand::SubmitStudy { .. }
+            | ApiCommand::PauseStudy { .. }
+            | ApiCommand::ResumeStudy { .. }
+            | ApiCommand::StopStudy { .. }
+            | ApiCommand::SetQuota { .. } => Err(ApiError::NotFound(
+                "study command; this server runs a single study".into(),
+            )),
+        }
+    }
+}
+
+/// The multi-tenant **read model** over a [`StudyScheduler`] — also
+/// reused verbatim by `stored::StoredRun` for multi-study directories.
+impl<'t> RunSource for MultiPlatform<'t> {
+    fn generation(&self) -> u64 {
+        self.sched.events_processed()
+    }
+
+    fn query(&self, q: &ApiQuery) -> Result<Json, ApiError> {
+        let known = |study: &str| -> Result<(), ApiError> {
+            if self.sched.study(study).is_some() {
+                Ok(())
+            } else {
+                Err(ApiError::NotFound(format!("unknown study '{study}'")))
+            }
+        };
+        match q {
+            ApiQuery::Status => Ok(self.status_doc()),
+            ApiQuery::Cluster { window } => Ok(export::cluster_doc_windowed(
+                self.sched.cluster(),
+                self.sched.now(),
+                *window,
+            )),
+            ApiQuery::FairShare => Ok(self.fair_share_doc()),
+            ApiQuery::Studies => Ok(self.studies_doc()),
+            ApiQuery::StudySessions {
+                study,
+                limit,
+                offset,
+            } => {
+                known(study)?;
+                Ok(self.study_sessions_page_doc(study, *limit, *offset))
+            }
+            ApiQuery::StudyLeaderboard { study, k } => {
+                known(study)?;
+                Ok(self.study_leaderboard_doc(study, *k))
+            }
+            ApiQuery::StudyCurves {
+                study,
+                limit,
+                offset,
+            } => {
+                known(study)?;
+                Ok(self.study_curves_page_doc(study, *limit, *offset))
+            }
+            ApiQuery::StudyParallel { study } => self
+                .study_parallel_doc(study)
+                .ok_or_else(|| ApiError::NotFound(format!("unknown study '{study}'"))),
+            ApiQuery::Sessions { .. }
+            | ApiQuery::Leaderboard { .. }
+            | ApiQuery::Parallel
+            | ApiQuery::Curves { .. } => Err(ApiError::NotFound(
+                "single-study endpoint; use /api/v1/studies/<name>/…".into(),
+            )),
+        }
+    }
+}
+
+/// The multi-tenant **command side** (study + session control).
+impl<'t> CommandSink for MultiPlatform<'t> {
+    fn command(&mut self, c: &ApiCommand) -> Result<Json, ApiError> {
+        let now = self.sched.now();
+        let ack = |kind: &str, at: SimTime| {
+            Json::obj()
+                .with("applied", Json::Bool(true))
+                .with("command", Json::Str(kind.to_string()))
+                .with("effective_at", Json::Num(at))
+        };
+        // Session commands must name their study: local session ids
+        // repeat across studies.
+        let study_of = |study: &Option<String>| -> Result<&str, ApiError> {
+            study.as_deref().ok_or_else(|| {
+                ApiError::BadRequest("session commands need a 'study' on a multi-study run".into())
+            })
+        };
+        let rejected = |msg: &str| ApiError::BadRequest(msg.to_string());
+        match c {
+            ApiCommand::SubmitStudy { spec, at } => {
+                let spec = StudySpec::from_json(spec, self.sched.studies().len())
+                    .map_err(|e| ApiError::BadRequest(format!("bad study spec: {e:#}")))?;
+                let at = self
+                    .submit_study(spec, (*at).unwrap_or(now))
+                    .ok_or_else(|| {
+                        rejected(
+                            "study rejected (duplicate name, bad quota/priority, or quota does not fit)",
+                        )
+                    })?;
+                Ok(ack(c.name(), at))
+            }
+            ApiCommand::PauseStudy { study } => {
+                let at = self
+                    .sched
+                    .pause_study(study, now)
+                    .ok_or_else(|| rejected("unknown or finished study"))?;
+                Ok(ack(c.name(), at))
+            }
+            ApiCommand::ResumeStudy { study } => {
+                let at = self
+                    .sched
+                    .resume_study(study, now)
+                    .ok_or_else(|| rejected("unknown or finished study"))?;
+                Ok(ack(c.name(), at))
+            }
+            ApiCommand::StopStudy { study } => {
+                let at = self
+                    .sched
+                    .stop_study(study, now)
+                    .ok_or_else(|| rejected("unknown or finished study"))?;
+                Ok(ack(c.name(), at))
+            }
+            ApiCommand::SetQuota {
+                study,
+                quota,
+                priority,
+            } => {
+                let at = self
+                    .sched
+                    .set_quota(study, *quota, *priority, now)
+                    .ok_or_else(|| {
+                        rejected("rejected (unknown study, quota does not fit, or priority ≤ 0)")
+                    })?;
+                Ok(ack(c.name(), at))
+            }
+            ApiCommand::PauseSession { study, session } => {
+                let at = self
+                    .sched
+                    .pause_session(study_of(study)?, SessionId(*session), now)
+                    .ok_or_else(|| rejected("session is not live in that study"))?;
+                Ok(ack(c.name(), at))
+            }
+            ApiCommand::ResumeSession { study, session } => {
+                let at = self
+                    .sched
+                    .resume_session(study_of(study)?, SessionId(*session), now)
+                    .ok_or_else(|| rejected("session is not paused in that study"))?;
+                Ok(ack(c.name(), at))
+            }
+            ApiCommand::StopSession { study, session } => {
+                let at = self
+                    .sched
+                    .stop_session(study_of(study)?, SessionId(*session), now)
+                    .ok_or_else(|| rejected("session is not live or paused in that study"))?;
+                Ok(ack(c.name(), at))
+            }
+            ApiCommand::Submit { .. } => Err(ApiError::NotFound(
+                "single-study command; use 'submit_study' on a multi-study run".into(),
+            )),
+        }
+    }
+}
+
+/// Cursor catch-up shared by the progress drains: render `agent`'s
+/// events past the cursor stored under `key` into `emit`, then advance
+/// the cursor to the end of the agent's event vector.  Keys are agent
+/// ids for [`Platform`] and study indices for [`MultiPlatform`].
+fn catch_up_cursor<K: std::hash::Hash + Eq + Copy, T: ?Sized + Trainer>(
+    cursors: &mut HashMap<K, usize>,
+    key: K,
+    agent: &Agent<T>,
+    now: SimTime,
+    mut emit: impl FnMut(Json),
+) {
+    let seen = cursors.get(&key).copied().unwrap_or(0);
+    for ev in &agent.events[seen..] {
+        emit(agent_event_json(agent.id, ev, now));
+    }
+    cursors.insert(key, agent.events.len());
+}
+
+/// Render one agent's top-`k` leaderboard rows (shared by the live
+/// merged leaderboard and its done-agent row cache).  Ids are serialized
+/// as strings: session ids pack (chopt_id << 32 | counter) into a u64,
+/// which an f64 corrupts past 2^53 (same class as the trace seed PR 1
+/// fixed).
+fn agent_leaderboard_rows(agent: &Agent, k: usize, rows: &mut Vec<Json>) {
+    let order = agent.cfg.order;
+    for &(sid, best) in agent.leaderboard.top(k) {
+        let s = &agent.sessions[&sid];
+        rows.push(
+            Json::obj()
+                .with("chopt", Json::Str(agent.id.to_string()))
+                .with("session", Json::Str(sid.0.to_string()))
+                .with("best", Json::Num(best))
+                .with("epochs", Json::Num(s.epochs as f64))
+                .with("status", Json::Str(s.status.name().to_string()))
+                .with("order", Json::Str(order.name().to_string())),
+        );
+    }
+}
+
+/// Lazily open `dir/events-<study>.jsonl` (free function so
+/// [`MultiPlatform::into_outcome`] can use it after `sched` is moved).
+fn open_study_log<'a>(
+    dir: &Option<PathBuf>,
+    logs: &'a mut HashMap<usize, EventLog>,
+    idx: usize,
+    name: &str,
+) -> Option<&'a mut EventLog> {
+    let dir = dir.as_ref()?;
+    if !logs.contains_key(&idx) {
+        let log = EventLog::open(dir.join(format!("events-{name}.jsonl"))).ok()?;
+        logs.insert(idx, log);
+    }
+    logs.get_mut(&idx)
+}
+
+/// One pool transition as a structured JSONL record.  Agent/session ids
+/// are serialized as **strings**: session ids pack `(chopt_id << 32 |
+/// counter)` into a u64, and routing that through `Json::Num` (an f64)
+/// silently corrupts values past 2^53 — the same corruption class PR 1
+/// fixed for trace seeds.  The in-repo readers
+/// (`EventLog::read_all`-based tests and the viz routes) treat these
+/// fields as opaque labels, so the representation change is safe.
+fn agent_event_json(agent_id: u64, ev: &AgentEvent, now: SimTime) -> Json {
+    let sid_str = |sid: &chopt_core::nsml::SessionId| Json::Str(sid.0.to_string());
+    let base = |name: &str| {
+        Json::obj()
+            .with("t", Json::Num(now))
+            .with("chopt", Json::Str(agent_id.to_string()))
+            .with("ev", Json::Str(name.to_string()))
+    };
+    match ev {
+        AgentEvent::Launched(sid) => base("launched").with("session", sid_str(sid)),
+        AgentEvent::Revived(sid) => base("revived").with("session", sid_str(sid)),
+        AgentEvent::EarlyStopped(sid, pool) => base("early_stopped")
+            .with("session", sid_str(sid))
+            .with("pool", Json::Str(format!("{pool:?}").to_lowercase())),
+        AgentEvent::Preempted(sid, pool) => base("preempted")
+            .with("session", sid_str(sid))
+            .with("pool", Json::Str(format!("{pool:?}").to_lowercase())),
+        AgentEvent::Finished(sid) => base("finished").with("session", sid_str(sid)),
+        AgentEvent::Mutated { victim, source } => base("mutated")
+            .with("session", sid_str(victim))
+            .with("source", sid_str(source)),
+        AgentEvent::Evicted(sid) => base("evicted").with("session", sid_str(sid)),
+        AgentEvent::Terminated(reason) => {
+            base("terminated").with("reason", Json::Str(reason.to_string()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use chopt_engine::coordinator::pools::Pool;
+    use chopt_core::nsml::SessionId;
+
+    /// Regression for the u64-through-f64 id corruption: a session id
+    /// above 2^53 must survive the progress stream byte-exactly.
+    #[test]
+    fn event_stream_ids_survive_past_f64_precision() {
+        // (chopt_id << 32 | counter) with chopt_id = 2^22 lands at
+        // 2^54 + 1 — one past f64's contiguous-integer range, so the old
+        // Json::Num encoding would have silently rounded it.
+        let big = (1u64 << 54) + 1;
+        let sid = SessionId(big);
+        for ev in [
+            AgentEvent::Launched(sid),
+            AgentEvent::Revived(sid),
+            AgentEvent::EarlyStopped(sid, Pool::Stop),
+            AgentEvent::Preempted(sid, Pool::Stop),
+            AgentEvent::Finished(sid),
+            AgentEvent::Evicted(sid),
+        ] {
+            let doc = agent_event_json(big, &ev, 1.0);
+            let text = doc.to_string_compact();
+            let back = chopt_core::util::json::parse(&text).unwrap();
+            let session = back.get("session").and_then(|v| v.as_str()).unwrap();
+            assert_eq!(session.parse::<u64>().unwrap(), big, "{ev:?}");
+            let chopt = back.get("chopt").and_then(|v| v.as_str()).unwrap();
+            assert_eq!(chopt.parse::<u64>().unwrap(), big);
+        }
+        let doc = agent_event_json(
+            big,
+            &AgentEvent::Mutated {
+                victim: sid,
+                source: SessionId(big + 1),
+            },
+            1.0,
+        );
+        assert_eq!(
+            doc.get("source").and_then(|v| v.as_str()),
+            Some(format!("{}", big + 1).as_str())
+        );
+    }
+}

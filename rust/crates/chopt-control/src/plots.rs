@@ -1,0 +1,195 @@
+//! Parameter-analytic plots: scatter, histogram, duration bars, and the
+//! Fig. 8 utilization timeline.
+
+use chopt_core::config::Order;
+use chopt_core::nsml::NsmlSession;
+use chopt_core::util::stats::Histogram;
+
+use crate::svg::{color, Svg};
+
+const W: f64 = 460.0;
+const H: f64 = 320.0;
+const M: f64 = 45.0;
+
+fn scale(v: f64, lo: f64, hi: f64, out_lo: f64, out_hi: f64) -> f64 {
+    let t = if (hi - lo).abs() < 1e-300 {
+        0.5
+    } else {
+        (v - lo) / (hi - lo)
+    };
+    out_lo + t.clamp(0.0, 1.0) * (out_hi - out_lo)
+}
+
+/// Scatter of hyperparameter vs measure (Fig. 7 right-top: 'prob' vs
+/// 'test/accuracy').
+pub fn scatter(sessions: &[NsmlSession], param: &str, order: Order) -> Svg {
+    let pts: Vec<(f64, f64)> = sessions
+        .iter()
+        .filter_map(|s| {
+            Some((s.hparams.f64(param)?, s.best_measure(order)?))
+        })
+        .collect();
+    let mut svg = Svg::new(W, H);
+    svg.text(M, 18.0, 12.0, &format!("{param} vs measure (n={})", pts.len()));
+    svg.line(M, H - M, W - 10.0, H - M, "#333", 1.0);
+    svg.line(M, H - M, M, 25.0, "#333", 1.0);
+    if pts.is_empty() {
+        return svg;
+    }
+    let (x_lo, x_hi) = pts
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &(x, _)| {
+            (l.min(x), h.max(x))
+        });
+    let (y_lo, y_hi) = pts
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &(_, y)| {
+            (l.min(y), h.max(y))
+        });
+    for &(x, y) in &pts {
+        let px = scale(x, x_lo, x_hi, M, W - 10.0);
+        let py = scale(y, y_lo, y_hi, H - M, 25.0);
+        svg.circle(px, py, 3.0, color(3), 0.65);
+    }
+    svg.text(M, H - M + 24.0, 9.0, &format!("{x_lo:.4}"));
+    svg.text(W - 60.0, H - M + 24.0, 9.0, &format!("{x_hi:.4}"));
+    svg.text(2.0, H - M, 9.0, &format!("{y_lo:.1}"));
+    svg.text(2.0, 32.0, 9.0, &format!("{y_hi:.1}"));
+    svg
+}
+
+/// Histogram of one hyperparameter's sampled values.
+pub fn histogram(sessions: &[NsmlSession], param: &str, bins: usize) -> Svg {
+    let vals: Vec<f64> = sessions
+        .iter()
+        .filter_map(|s| s.hparams.f64(param))
+        .collect();
+    let h = Histogram::build(&vals, bins.max(1));
+    let mut svg = Svg::new(W, H);
+    svg.text(M, 18.0, 12.0, &format!("distribution of {param} (n={})", vals.len()));
+    let max_count = h.counts.iter().copied().max().unwrap_or(1).max(1) as f64;
+    let bw = (W - M - 10.0) / h.counts.len() as f64;
+    for (i, &c) in h.counts.iter().enumerate() {
+        let bh = (c as f64 / max_count) * (H - M - 40.0);
+        svg.rect(M + i as f64 * bw, H - M - bh, bw - 2.0, bh, color(0));
+    }
+    svg.line(M, H - M, W - 10.0, H - M, "#333", 1.0);
+    svg.text(M, H - M + 24.0, 9.0, &format!("{:.4}", h.lo));
+    svg.text(W - 70.0, H - M + 24.0, 9.0, &format!("{:.4}", h.hi));
+    svg
+}
+
+/// Learning-duration horizontal bars (Fig. 5 left / Fig. 7 right-middle):
+/// x-axis is the last learning step (epochs) of each model — "this plot
+/// can help users to find biased experiments".
+pub fn duration_bars(sessions: &[NsmlSession]) -> Svg {
+    let mut rows: Vec<(u64, usize)> = sessions.iter().map(|s| (s.id.0, s.epochs)).collect();
+    rows.sort_by_key(|&(id, _)| id);
+    let height = (rows.len() as f64 * 14.0 + 70.0).max(H);
+    let mut svg = Svg::new(W, height);
+    svg.text(M, 18.0, 12.0, &format!("learning duration ({} models)", rows.len()));
+    let max_e = rows.iter().map(|&(_, e)| e).max().unwrap_or(1).max(1) as f64;
+    for (i, &(id, e)) in rows.iter().enumerate() {
+        let y = 32.0 + i as f64 * 14.0;
+        let w = (e as f64 / max_e) * (W - M - 80.0);
+        svg.rect(M, y, w.max(1.0), 10.0, color(1));
+        svg.text(M + w + 4.0, y + 9.0, 8.0, &format!("#{id} ({e}ep)"));
+    }
+    svg
+}
+
+/// Fig. 8: GPU allocation over time — total-used (green), non-CHOPT
+/// (yellow), plus zone boundary ticks.
+pub fn utilization_timeline(
+    total_series: &[(f64, f64)],
+    external_series: &[(f64, f64)],
+    total_gpus: usize,
+    horizon: f64,
+) -> Svg {
+    let mut svg = Svg::new(720.0, 300.0);
+    let m = 45.0;
+    let (w, h) = (720.0, 300.0);
+    svg.text(m, 18.0, 12.0, "GPU allocation: total used (green) vs non-CHOPT (yellow)");
+    svg.line(m, h - m, w - 10.0, h - m, "#333", 1.0);
+    svg.line(m, h - m, m, 25.0, "#333", 1.0);
+    let to_xy = |t: f64, v: f64| {
+        (
+            scale(t, 0.0, horizon, m, w - 10.0),
+            scale(v, 0.0, total_gpus as f64, h - m, 25.0),
+        )
+    };
+    // Step-function polylines.
+    let steps = |series: &[(f64, f64)]| -> Vec<(f64, f64)> {
+        let mut pts = Vec::new();
+        let mut last_v = 0.0;
+        for &(t, v) in series {
+            pts.push(to_xy(t, last_v));
+            pts.push(to_xy(t, v));
+            last_v = v;
+        }
+        pts.push(to_xy(horizon, last_v));
+        pts
+    };
+    svg.polyline(&steps(total_series), "#2ca02c", 1.8, 0.9);
+    svg.polyline(&steps(external_series), "#e6b400", 1.8, 0.9);
+    // Zone boundaries at the Fig. 8 fractions.
+    for (frac, label) in [(0.0, "A"), (0.15, "B"), (0.30, "C"), (0.55, "D"), (0.80, "E")] {
+        let x = scale(frac * horizon, 0.0, horizon, m, w - 10.0);
+        svg.line(x, 25.0, x, h - m, "#ccc", 0.8);
+        svg.text(x + 3.0, 36.0, 11.0, label);
+    }
+    svg.text(2.0, h - m, 9.0, "0");
+    svg.text(2.0, 32.0, 9.0, &format!("{total_gpus}"));
+    svg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use chopt_core::hparam::{Assignment, Value};
+    use chopt_core::nsml::SessionId;
+
+    fn sessions() -> Vec<NsmlSession> {
+        (0..8)
+            .map(|i| {
+                let mut hp = Assignment::new();
+                hp.set("prob", Value::Float(0.1 * i as f64));
+                let mut s = NsmlSession::new(SessionId(i), hp, "m", 0.0);
+                s.report((i as usize + 1) * 10, 60.0 + i as f64, 1.0);
+                s
+            })
+            .collect()
+    }
+
+    #[test]
+    fn scatter_renders_points() {
+        let doc = scatter(&sessions(), "prob", Order::Descending).finish();
+        assert_eq!(doc.matches("<circle").count(), 8);
+        // Unknown param -> no points, no panic.
+        let empty = scatter(&sessions(), "nope", Order::Descending).finish();
+        assert_eq!(empty.matches("<circle").count(), 0);
+    }
+
+    #[test]
+    fn histogram_renders_bars() {
+        let doc = histogram(&sessions(), "prob", 4).finish();
+        assert!(doc.matches("<rect").count() >= 4);
+    }
+
+    #[test]
+    fn duration_bars_scale() {
+        let doc = duration_bars(&sessions()).finish();
+        assert!(doc.contains("80ep"), "longest session labelled");
+    }
+
+    #[test]
+    fn timeline_draws_zones() {
+        let total = vec![(0.0, 2.0), (100.0, 5.0)];
+        let ext = vec![(0.0, 2.0), (150.0, 1.0)];
+        let doc = utilization_timeline(&total, &ext, 8, 1000.0).finish();
+        for z in ["A", "B", "C", "D", "E"] {
+            assert!(doc.contains(&format!(">{z}</text>")), "zone {z}");
+        }
+        assert!(doc.matches("<polyline").count() == 2);
+    }
+}

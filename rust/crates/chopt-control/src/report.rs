@@ -1,0 +1,79 @@
+//! Terminal report views: leaderboard table + CHOPT session summary.
+
+use chopt_core::config::Order;
+use chopt_core::nsml::NsmlSession;
+use chopt_core::util::bench::Table;
+
+/// Leaderboard table of the top-k sessions.
+pub fn leaderboard_table(sessions: &[NsmlSession], order: Order, k: usize) -> Table {
+    let top = chopt_core::analysis::top_k(sessions, order, k);
+    let mut t = Table::new(
+        &format!("Leaderboard (top {k})"),
+        &["rank", "session", "best", "epochs", "revivals", "hyperparameters"],
+    );
+    for (i, s) in top.iter().enumerate() {
+        t.row(&[
+            format!("{}", i + 1),
+            format!("{}", s.id),
+            s.best_measure(order)
+                .map(|m| format!("{m:.2}"))
+                .unwrap_or_else(|| "-".into()),
+            format!("{}", s.epochs),
+            format!("{}", s.revivals),
+            s.hparams.render(),
+        ]);
+    }
+    t
+}
+
+/// Pool/outcome summary of a finished CHOPT session.
+pub fn outcome_table(agent: &chopt_engine::coordinator::Agent) -> Table {
+    let mut t = Table::new(
+        &format!("CHOPT session {} ({})", agent.id, agent.tuner.name()),
+        &["metric", "value"],
+    );
+    let sessions: Vec<&NsmlSession> = agent.sessions.values().collect();
+    let finished = sessions
+        .iter()
+        .filter(|s| s.status == chopt_core::nsml::SessionStatus::Finished)
+        .count();
+    t.row(&["models created".into(), format!("{}", agent.created)]);
+    t.row(&["finished".into(), format!("{finished}")]);
+    t.row(&["stop pool".into(), format!("{}", agent.pools.stop_count())]);
+    t.row(&["dead pool".into(), format!("{}", agent.pools.dead_count())]);
+    t.row(&[
+        "best".into(),
+        agent
+            .best()
+            .map(|(id, m)| format!("{m:.2} ({id})"))
+            .unwrap_or_else(|| "-".into()),
+    ]);
+    let gpu_h: f64 = agent.sessions.values().map(|s| s.gpu_seconds).sum::<f64>() / 3600.0;
+    t.row(&["GPU hours".into(), format!("{gpu_h:.1}")]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use chopt_core::hparam::{Assignment, Value};
+    use chopt_core::nsml::SessionId;
+
+    #[test]
+    fn leaderboard_renders() {
+        let sessions: Vec<NsmlSession> = (0..5)
+            .map(|i| {
+                let mut hp = Assignment::new();
+                hp.set("lr", Value::Float(0.01));
+                let mut s = NsmlSession::new(SessionId(i), hp, "m", 0.0);
+                s.report(10, 70.0 + i as f64, 1.0);
+                s
+            })
+            .collect();
+        let t = leaderboard_table(&sessions, Order::Descending, 3);
+        let s = t.render();
+        assert!(s.contains("74.00"));
+        assert!(s.contains("nsml-4"));
+        assert!(!s.contains("70.00"), "only top-3 shown");
+    }
+}

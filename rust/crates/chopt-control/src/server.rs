@@ -1,0 +1,1127 @@
+//! Dependency-free HTTP server for the analytic tool.
+//!
+//! Three serving surfaces compose:
+//!
+//! * a **static route table** (`Routes`) for the embedded viewer and SVG
+//!   renders,
+//! * the **versioned control-plane API** (`/api/v1`, see [`crate::api`])
+//!   when enabled via [`VizServer::enable_api`]: API paths are parsed
+//!   into typed calls and forwarded over a channel to the serving loop,
+//!   which answers them between advances from any `RunSource` — a live
+//!   platform, a stored run, or a replay scrubber.  Legacy `/api/*.json`
+//!   paths are deprecated aliases onto the same v1 handlers.  When a
+//!   bearer token is configured ([`VizServer::set_api_token`]) the
+//!   command surface (`POST /api/v1/commands`) answers 401/403 in the
+//!   envelope error format before anything reaches the engine loop; the
+//!   read side stays open.
+//! * the **SSE push stream** (`GET /api/v1/events`, see
+//!   [`crate::sse`]) when enabled via [`VizServer::serve_events`]:
+//!   subscribers are adopted by a small broadcast writer pool
+//!   ([`crate::sse::Broadcaster`]) with per-subscriber heartbeats,
+//!   `Last-Event-ID` resume, and `?since=<seq>` historical replay when
+//!   the feed carries a JSONL history log.
+//!
+//! **Concurrency model** ([`ServerConfig`]): a fixed pool of worker
+//! threads drains a bounded connection queue.  When the queue is full
+//! the accept loop sheds the connection with an immediate `503` +
+//! `Retry-After` instead of spawning without limit — under overload the
+//! server degrades to fast rejections, not to thread exhaustion.  SSE
+//! subscribers are handed off to the broadcast pool, so thousands of
+//! open streams occupy neither request workers nor a thread each — just
+//! an entry in a writer shard.  Request sockets carry read *and* write
+//! timeouts plus a total header deadline, so a stalled or slow-loris
+//! client cannot pin a worker (SSE connections keep their
+//! heartbeat-based liveness instead).
+//!
+//! **Response cache** ([`crate::api::ReadState`]): rendered v1
+//! query bodies are cached keyed on `(path, params, generation, epoch)`
+//! — a generation bump (engine advance) or an applied command changes
+//! the key, so invalidation is implicit and a repeat GET at a fixed
+//! generation is a lock + `Arc` clone, never a re-render or an engine
+//! round trip.  Stored runs and `?at_event=` scrubs cache as *pinned*
+//! entries (their bytes can never change), making the whole read surface
+//! of a stored run cache-resident after first touch.  Every query
+//! response carries a strong `ETag` + `Cache-Control: no-cache`;
+//! `If-None-Match` answers a bodyless `304`.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::api::{self, ApiCall, ApiInbox, ApiRequest, ReadState, RouteError};
+use crate::sse::{Broadcaster, EventFeed, DEFAULT_BROADCAST_WRITERS};
+
+/// A route table: path → (content type, body).
+pub type Routes = HashMap<String, (String, Vec<u8>)>;
+
+/// Largest accepted request body (command manifests are small).
+const MAX_BODY: usize = 1 << 20;
+
+/// How long a worker waits for the engine loop to answer an API request
+/// before giving up with a 503.
+const API_REPLY_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Per-read socket timeout while parsing a request (each `recv`).
+const REQUEST_READ_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Total wall-clock budget for reading one request (headers + body): a
+/// drip-feeding client is cut off here even if every individual read
+/// stays under [`REQUEST_READ_TIMEOUT`].
+const REQUEST_DEADLINE: Duration = Duration::from_secs(10);
+
+/// Write timeout on request responses (SSE uses its own, longer one).
+const RESPONSE_WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Write timeout on SSE streams: generous (streams are long-lived and
+/// bursty) but bounded — it caps how long a stalled subscriber can
+/// block its broadcast-pool shard before being dropped.
+const SSE_WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Longest accepted header line and header count (slow-loris bounds).
+const MAX_HEADER_LINE: usize = 8 * 1024;
+const MAX_HEADER_LINES: usize = 128;
+
+/// Worker threads' handle to the API bridge (None until
+/// [`VizServer::enable_api`]).
+type ApiSender = Arc<Mutex<Option<mpsc::Sender<ApiRequest>>>>;
+
+/// Sizing knobs for the worker pool and the response cache.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Fixed number of request worker threads.
+    pub workers: usize,
+    /// Bounded connection-queue depth; accepts past it answer 503.
+    pub queue: usize,
+    /// Response-cache bound in bytes (0 disables caching; ETags remain).
+    pub cache_bytes: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            workers: 8,
+            queue: 128,
+            cache_bytes: 32 << 20,
+        }
+    }
+}
+
+/// The SSE surface: the feed plus the broadcast pool that fans it out.
+#[derive(Clone)]
+struct SseHandle {
+    feed: Arc<EventFeed>,
+    broadcast: Arc<Broadcaster<TcpStream>>,
+}
+
+/// Everything a worker needs, cloned per pool thread.
+#[derive(Clone)]
+struct ConnShared {
+    routes: Arc<Mutex<Routes>>,
+    api_tx: ApiSender,
+    token: Arc<Mutex<Option<String>>>,
+    sse: Arc<Mutex<Option<SseHandle>>>,
+    stop: Arc<AtomicBool>,
+    state: Arc<ReadState>,
+    sse_active: Arc<AtomicU64>,
+}
+
+/// The bounded connection queue between the accept loop and the worker
+/// pool.  `push` fails (returning the stream) when full — that is the
+/// accept loop's backpressure signal.
+struct ConnQueue {
+    inner: Mutex<VecDeque<TcpStream>>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+impl ConnQueue {
+    fn new(capacity: usize) -> ConnQueue {
+        ConnQueue {
+            inner: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    fn push(&self, stream: TcpStream) -> Result<(), TcpStream> {
+        let mut q = self.inner.lock().unwrap();
+        if q.len() >= self.capacity {
+            return Err(stream);
+        }
+        q.push_back(stream);
+        drop(q);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Pop one connection, waiting up to `timeout`.  Workers loop on
+    /// this with a short timeout so the stop flag is observed promptly.
+    fn pop(&self, timeout: Duration) -> Option<TcpStream> {
+        let mut q = self.inner.lock().unwrap();
+        if q.is_empty() {
+            let (guard, _) = self.cv.wait_timeout(q, timeout).unwrap();
+            q = guard;
+        }
+        q.pop_front()
+    }
+}
+
+/// The viz HTTP server.
+pub struct VizServer {
+    shared: ConnShared,
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    queue: Arc<ConnQueue>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Connections accepted over the server's lifetime.
+    pub requests: Arc<AtomicU64>,
+    /// Connections shed with a 503 because the queue was full.
+    pub rejected: Arc<AtomicU64>,
+}
+
+impl VizServer {
+    /// Bind on 127.0.0.1:`port` (0 = ephemeral) and start serving with
+    /// the default pool/cache sizing.
+    pub fn start(port: u16, routes: Routes) -> std::io::Result<VizServer> {
+        VizServer::start_with(port, routes, ServerConfig::default())
+    }
+
+    /// [`VizServer::start`] with explicit worker-pool and cache sizing.
+    pub fn start_with(
+        port: u16,
+        mut routes: Routes,
+        config: ServerConfig,
+    ) -> std::io::Result<VizServer> {
+        routes
+            .entry("/".to_string())
+            .or_insert(("text/html".to_string(), VIEWER_HTML.as_bytes().to_vec()));
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let shared = ConnShared {
+            routes: Arc::new(Mutex::new(routes)),
+            api_tx: Arc::new(Mutex::new(None)),
+            token: Arc::new(Mutex::new(None)),
+            sse: Arc::new(Mutex::new(None)),
+            stop: stop.clone(),
+            state: ReadState::new(config.cache_bytes),
+            sse_active: Arc::new(AtomicU64::new(0)),
+        };
+        let requests = Arc::new(AtomicU64::new(0));
+        let rejected = Arc::new(AtomicU64::new(0));
+        let queue = Arc::new(ConnQueue::new(config.queue));
+
+        let (s2, q2, r2, queue2) =
+            (stop.clone(), requests.clone(), rejected.clone(), queue.clone());
+        let accept = std::thread::Builder::new()
+            .name("viz-accept".into())
+            .spawn(move || {
+                while !s2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            q2.fetch_add(1, Ordering::Relaxed);
+                            if let Err(stream) = queue2.push(stream) {
+                                // Backpressure: every worker is busy and
+                                // the queue is at capacity.  Shed the
+                                // connection with an immediate 503 —
+                                // bounded load, never unbounded threads.
+                                r2.fetch_add(1, Ordering::Relaxed);
+                                reject_saturated(stream);
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+
+        let mut workers = Vec::with_capacity(config.workers.max(1));
+        for i in 0..config.workers.max(1) {
+            let (shared_i, queue_i) = (shared.clone(), queue.clone());
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("viz-worker-{i}"))
+                    .spawn(move || loop {
+                        match queue_i.pop(Duration::from_millis(100)) {
+                            Some(stream) => {
+                                let _ = handle_conn(stream, &shared_i);
+                            }
+                            None => {
+                                if shared_i.stop.load(Ordering::Relaxed) {
+                                    return;
+                                }
+                            }
+                        }
+                    })?,
+            );
+        }
+
+        Ok(VizServer {
+            shared,
+            addr,
+            stop,
+            queue,
+            accept: Some(accept),
+            workers,
+            requests,
+            rejected,
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Enable the `/api/v1` surface: API paths stop falling through to
+    /// the static table and are forwarded to the returned [`ApiInbox`],
+    /// which the engine loop drains between advances.  The inbox shares
+    /// this server's [`ReadState`], so answered queries populate the
+    /// response cache and applied commands invalidate it.
+    pub fn enable_api(&self) -> ApiInbox {
+        let (tx, rx) = mpsc::channel();
+        *self.shared.api_tx.lock().unwrap() = Some(tx);
+        ApiInbox::new(rx, self.shared.state.clone())
+    }
+
+    /// Require `Authorization: Bearer <token>` on the command surface
+    /// (`POST /api/v1/commands`).  The read side stays open; a missing
+    /// header answers 401 and a mismatched token 403, both in the
+    /// envelope error format.  `None` re-opens the surface.
+    pub fn set_api_token(&self, token: Option<String>) {
+        *self.shared.token.lock().unwrap() = token;
+    }
+
+    /// Serve `GET /api/v1/events` as an SSE stream of `feed`: a small
+    /// broadcast writer pool tails the feed for every subscriber (off
+    /// the worker pool), with a comment heartbeat every `heartbeat`
+    /// while a stream is idle, `Last-Event-ID` resume, and
+    /// `?since=<seq>` history replay when the feed records one.
+    pub fn serve_events(&self, feed: Arc<EventFeed>, heartbeat: Duration) {
+        self.serve_events_with(feed, heartbeat, DEFAULT_BROADCAST_WRITERS);
+    }
+
+    /// [`VizServer::serve_events`] with an explicit broadcast-pool
+    /// size.  Calling it again replaces the surface: new subscribers go
+    /// to the new pool, while streams the old pool already owns keep
+    /// draining until they disconnect or the server stops.
+    pub fn serve_events_with(&self, feed: Arc<EventFeed>, heartbeat: Duration, writers: usize) {
+        let broadcast = Broadcaster::start(
+            feed.clone(),
+            heartbeat,
+            writers,
+            self.stop.clone(),
+            self.shared.sse_active.clone(),
+        );
+        *self.shared.sse.lock().unwrap() = Some(SseHandle { feed, broadcast });
+    }
+
+    /// Currently open SSE subscriber connections.
+    pub fn sse_active(&self) -> u64 {
+        self.shared.sse_active.load(Ordering::Relaxed)
+    }
+
+    /// Replace/add a route while running.
+    pub fn put_route(&self, path: &str, content_type: &str, body: Vec<u8>) {
+        self.shared
+            .routes
+            .lock()
+            .unwrap()
+            .insert(path.to_string(), (content_type.to_string(), body));
+    }
+
+    /// Replace/add a JSON route while running (static-document serving;
+    /// live runs answer through the v1 API instead).
+    pub fn put_json(&self, path: &str, doc: &chopt_core::util::json::Value) {
+        self.put_route(path, "application/json", doc.to_string_compact().into_bytes());
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.queue.cv.notify_all();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        // The SSE broadcast writers are detached; they observe the stop
+        // flag within one wait slice, release their subscribers (the
+        // gauge drains to zero), and exit on their own.
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+}
+
+impl Drop for VizServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Best-effort 503 for a shed connection: written before the request is
+/// even read, with a short write timeout so a hostile peer cannot stall
+/// the accept loop either.
+fn reject_saturated(mut stream: TcpStream) {
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+    let doc = api::error_envelope(None, "server saturated: connection queue is full");
+    let _ = respond(
+        &mut stream,
+        503,
+        "application/json",
+        &doc.to_string_compact().into_bytes(),
+        "Retry-After: 1\r\n",
+    );
+}
+
+/// One parsed HTTP request.
+struct Request {
+    method: String,
+    path: String,
+    query: String,
+    body: Vec<u8>,
+    /// Raw `Authorization` header value, if sent.
+    authorization: Option<String>,
+    /// Parsed `Last-Event-ID` header (SSE resume), if sent.
+    last_event_id: Option<u64>,
+    /// Raw `If-None-Match` header (ETag revalidation), if sent.
+    if_none_match: Option<String>,
+}
+
+/// Read one header line byte-wise so both bounds hold: the per-recv
+/// socket timeout catches a stalled client, the deadline catches a
+/// drip-feeding one, and the length cap catches an endless line.
+fn read_line_bounded(
+    reader: &mut BufReader<TcpStream>,
+    deadline: Instant,
+) -> std::io::Result<String> {
+    let mut out: Vec<u8> = Vec::new();
+    let mut byte = [0u8; 1];
+    loop {
+        if out.len() > MAX_HEADER_LINE {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "header line too long",
+            ));
+        }
+        if Instant::now() >= deadline {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                "request read deadline exceeded",
+            ));
+        }
+        match reader.read(&mut byte)? {
+            0 => break, // EOF
+            _ => {
+                out.push(byte[0]);
+                if byte[0] == b'\n' {
+                    break;
+                }
+            }
+        }
+    }
+    Ok(String::from_utf8_lossy(&out).into_owned())
+}
+
+fn read_request(stream: &TcpStream) -> std::io::Result<Option<Request>> {
+    stream.set_read_timeout(Some(REQUEST_READ_TIMEOUT))?;
+    let deadline = Instant::now() + REQUEST_DEADLINE;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let request_line = read_line_bounded(&mut reader, deadline)?;
+    if request_line.trim().is_empty() {
+        // Connection opened and closed (or never spoke): nothing to do.
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "empty request",
+        ));
+    }
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("GET").to_uppercase();
+    let target = parts.next().unwrap_or("/");
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+    // Drain headers, keeping the ones the API layer consumes.
+    let mut content_length = 0usize;
+    let mut authorization = None;
+    let mut last_event_id = None;
+    let mut if_none_match = None;
+    for _ in 0..MAX_HEADER_LINES {
+        let line = read_line_bounded(&mut reader, deadline)?;
+        if line.is_empty() || line == "\r\n" || line == "\n" {
+            break;
+        }
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().unwrap_or(0);
+            } else if name.eq_ignore_ascii_case("authorization") {
+                authorization = Some(value.trim().to_string());
+            } else if name.eq_ignore_ascii_case("last-event-id") {
+                last_event_id = value.trim().parse().ok();
+            } else if name.eq_ignore_ascii_case("if-none-match") {
+                if_none_match = Some(value.trim().to_string());
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        return Ok(None); // caller answers 400
+    }
+    let mut body = vec![0u8; content_length];
+    let mut off = 0;
+    while off < content_length {
+        if Instant::now() >= deadline {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                "request body read deadline exceeded",
+            ));
+        }
+        let n = reader.read(&mut body[off..])?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "request body truncated",
+            ));
+        }
+        off += n;
+    }
+    Ok(Some(Request {
+        method,
+        path,
+        query,
+        body,
+        authorization,
+        last_event_id,
+        if_none_match,
+    }))
+}
+
+fn handle_conn(mut stream: TcpStream, shared: &ConnShared) -> std::io::Result<()> {
+    let req = match read_request(&stream)? {
+        Some(r) => r,
+        None => {
+            stream.set_write_timeout(Some(RESPONSE_WRITE_TIMEOUT))?;
+            return respond_json(
+                &mut stream,
+                400,
+                &api::error_envelope(None, "request body too large"),
+            );
+        }
+    };
+    stream.set_write_timeout(Some(RESPONSE_WRITE_TIMEOUT))?;
+
+    // The SSE push stream, when enabled, owns /api/v1/events.  It never
+    // goes through the engine-loop bridge: the worker writes the stream
+    // head and hands the socket to the broadcast pool, so a subscriber
+    // costs an entry in a writer shard, not a worker or a thread.
+    let sse = shared.sse.lock().unwrap().clone();
+    if let Some(sse) = sse {
+        if req.path == "/api/v1/events" {
+            if req.method != "GET" {
+                let doc = api::error_envelope(None, "method not allowed");
+                let body = doc.to_string_compact().into_bytes();
+                return respond(&mut stream, 405, "application/json", &body, "Allow: GET\r\n");
+            }
+            stream.set_write_timeout(Some(SSE_WRITE_TIMEOUT))?;
+            stream.write_all(
+                b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n",
+            )?;
+            // ?since= (explicit) wins over Last-Event-ID (reconnect); a
+            // cursor past anything published cannot be honored (both
+            // are client-controlled), so it clamps to "caught up".
+            let requested = query_param_u64(&req.query, "since").or(req.last_event_id);
+            let cursor = requested.unwrap_or(0).min(sse.feed.last_seq());
+            sse.broadcast.adopt(stream, cursor);
+            return Ok(());
+        }
+    }
+
+    // The control-plane API, when enabled, owns every other /api path.
+    let api_tx = shared.api_tx.lock().unwrap().clone();
+    if let Some(tx) = api_tx {
+        if req.path.starts_with("/api/") {
+            // Command auth happens here, before anything reaches the
+            // engine loop; the read side stays open.
+            let token = shared.token.lock().unwrap().clone();
+            if req.path == "/api/v1/commands" && req.method == "POST" {
+                if let Err(e) = check_bearer(&req, &token) {
+                    return respond_json(
+                        &mut stream,
+                        e.http_status(),
+                        &api::error_envelope(None, e.message()),
+                    );
+                }
+            }
+            return handle_api(&mut stream, &req, &tx, &shared.state);
+        }
+    }
+
+    // Static routes are GET-only.
+    if req.method != "GET" {
+        let body = b"405 method not allowed";
+        return respond(&mut stream, 405, "text/plain", body, "Allow: GET\r\n");
+    }
+    let found = shared.routes.lock().unwrap().get(&req.path).cloned();
+    match found {
+        Some((ctype, body)) => respond(&mut stream, 200, &ctype, &body, ""),
+        None => respond(&mut stream, 404, "text/plain", b"404 not found", ""),
+    }
+}
+
+/// Enforce `Authorization: Bearer <token>` when a token is configured:
+/// missing/malformed credentials → 401, a wrong token → 403.
+fn check_bearer(req: &Request, required: &Option<String>) -> Result<(), api::ApiError> {
+    let Some(required) = required else {
+        return Ok(());
+    };
+    match req
+        .authorization
+        .as_deref()
+        .and_then(|h| h.strip_prefix("Bearer "))
+    {
+        None => Err(api::ApiError::Unauthorized(
+            "commands require 'Authorization: Bearer <token>' on this server".into(),
+        )),
+        Some(sent) if sent.trim() == required => Ok(()),
+        Some(_) => Err(api::ApiError::Forbidden("bearer token does not match".into())),
+    }
+}
+
+/// First `name=<u64>` query parameter, if present and parseable.
+fn query_param_u64(query: &str, name: &str) -> Option<u64> {
+    query
+        .split('&')
+        .filter_map(|kv| kv.split_once('='))
+        .find(|(k, _)| *k == name)
+        .and_then(|(_, v)| v.parse().ok())
+}
+
+fn handle_api(
+    stream: &mut TcpStream,
+    req: &Request,
+    tx: &mpsc::Sender<ApiRequest>,
+    state: &Arc<ReadState>,
+) -> std::io::Result<()> {
+    let call = match api::parse_route(&req.method, &req.path, &req.query, &req.body) {
+        Ok(call) => call,
+        Err(RouteError::NotFound) => {
+            return respond_json(stream, 404, &api::error_envelope(None, "unknown API path"));
+        }
+        Err(RouteError::MethodNotAllowed) => {
+            let doc = api::error_envelope(None, "method not allowed");
+            let body = doc.to_string_compact().into_bytes();
+            return respond(stream, 405, "application/json", &body, "Allow: GET, POST\r\n");
+        }
+        Err(RouteError::BadRequest(msg)) => {
+            return respond_json(stream, 400, &api::error_envelope(None, &msg));
+        }
+    };
+    // Queries try the response cache first: at a fixed generation the
+    // whole read path is a lock + Arc clone, no engine round trip.
+    let cacheable = matches!(call, ApiCall::Query(_) | ApiCall::QueryAt(..));
+    if cacheable {
+        if let Some((body, etag)) = state.lookup(&req.path, &req.query) {
+            return respond_query(stream, req, &body, &etag, "hit");
+        }
+    }
+    let (reply_tx, reply_rx) = mpsc::channel();
+    let sent = tx
+        .send(ApiRequest {
+            call,
+            reply: reply_tx,
+        })
+        .is_ok();
+    let reply = if sent {
+        reply_rx.recv_timeout(API_REPLY_TIMEOUT).ok()
+    } else {
+        None
+    };
+    match reply {
+        Some(reply) => {
+            if let (200, Some(stamp)) = (reply.status, reply.stamp.as_ref()) {
+                let body = Arc::new(reply.body.to_string_compact().into_bytes());
+                let etag = state.store(&req.path, &req.query, stamp, body.clone());
+                return respond_query(stream, req, &body, &etag, "miss");
+            }
+            respond_json(stream, reply.status, &reply.body)
+        }
+        None => respond_json(
+            stream,
+            503,
+            &api::error_envelope(None, "engine loop is not serving the API"),
+        ),
+    }
+}
+
+/// Answer a cacheable query: `ETag` + `Cache-Control: no-cache` on
+/// every response, `X-Cache` reporting hit/miss, and `If-None-Match`
+/// short-circuited to a bodyless 304 (no re-render, no copy).
+fn respond_query(
+    stream: &mut TcpStream,
+    req: &Request,
+    body: &[u8],
+    etag: &str,
+    x_cache: &str,
+) -> std::io::Result<()> {
+    let headers = format!("ETag: {etag}\r\nCache-Control: no-cache\r\nX-Cache: {x_cache}\r\n");
+    if if_none_match_matches(req.if_none_match.as_deref(), etag) {
+        return respond(stream, 304, "application/json", b"", &headers);
+    }
+    respond(stream, 200, "application/json", body, &headers)
+}
+
+/// `If-None-Match` comparison: `*` matches anything; otherwise compare
+/// against each listed entity-tag (the weak prefix is ignored — weak
+/// comparison is what 304 revalidation uses).
+fn if_none_match_matches(header: Option<&str>, etag: &str) -> bool {
+    let Some(header) = header else {
+        return false;
+    };
+    header
+        .split(',')
+        .map(str::trim)
+        .any(|t| t == "*" || t == etag || t.strip_prefix("W/") == Some(etag))
+}
+
+fn respond_json(
+    stream: &mut TcpStream,
+    status: u16,
+    doc: &chopt_core::util::json::Value,
+) -> std::io::Result<()> {
+    let body = doc.to_string_compact().into_bytes();
+    respond(stream, status, "application/json", &body, "")
+}
+
+fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        304 => "Not Modified",
+        400 => "Bad Request",
+        401 => "Unauthorized",
+        403 => "Forbidden",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        503 => "Service Unavailable",
+        _ => "OK",
+    }
+}
+
+fn respond(
+    stream: &mut TcpStream,
+    status: u16,
+    ctype: &str,
+    body: &[u8],
+    extra_headers: &str,
+) -> std::io::Result<()> {
+    let mut r = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\n{extra_headers}Connection: close\r\n\r\n",
+        status_text(status),
+        body.len()
+    )
+    .into_bytes();
+    r.extend_from_slice(body);
+    stream.write_all(&r)?;
+    stream.flush()
+}
+
+/// Minimal HTTP client (tests, examples' self-check, smoke scripts).
+pub fn http_request(
+    addr: std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> std::io::Result<(u16, Vec<u8>)> {
+    http_request_with_headers(addr, method, path, &[], body)
+}
+
+/// [`http_request`] with extra request headers (auth, SSE resume).
+pub fn http_request_with_headers(
+    addr: std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> std::io::Result<(u16, Vec<u8>)> {
+    let (status, _head, body) = http_request_full(addr, method, path, headers, body)?;
+    Ok((status, body))
+}
+
+/// [`http_request_with_headers`], also returning the raw response head
+/// (status line + headers) so callers can read `ETag`/`X-Cache`.
+pub fn http_request_full(
+    addr: std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> std::io::Result<(u16, String, Vec<u8>)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let extra: String = headers
+        .iter()
+        .map(|(k, v)| format!("{k}: {v}\r\n"))
+        .collect();
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\n{extra}Connection: close\r\n\r\n",
+        body.len()
+    )?;
+    stream.write_all(body)?;
+    let mut buf = Vec::new();
+    stream.read_to_end(&mut buf)?;
+    let text_end = buf
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .map(|p| p + 4)
+        .unwrap_or(buf.len());
+    let head = String::from_utf8_lossy(&buf[..text_end]).to_string();
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    Ok((status, head, buf[text_end..].to_vec()))
+}
+
+/// Minimal GET client.
+pub fn http_get(addr: std::net::SocketAddr, path: &str) -> std::io::Result<(u16, Vec<u8>)> {
+    http_request(addr, "GET", path, b"")
+}
+
+/// Minimal POST client (command bodies).
+pub fn http_post(
+    addr: std::net::SocketAddr,
+    path: &str,
+    body: &[u8],
+) -> std::io::Result<(u16, Vec<u8>)> {
+    http_request(addr, "POST", path, body)
+}
+
+/// Embedded single-file viewer: renders the v1 status + parallel queries
+/// (unwrapping the versioned envelope) on a canvas.  Redraws are pushed:
+/// the viewer subscribes to `GET /api/v1/events` (SSE) and re-renders
+/// when progress arrives, with a slow safety-net poll instead of the old
+/// 2-second busy poll.
+const VIEWER_HTML: &str = r#"<!doctype html>
+<html><head><meta charset="utf-8"><title>CHOPT viz</title>
+<style>body{font-family:monospace;margin:16px}canvas{border:1px solid #ccc}</style>
+</head><body>
+<h2>CHOPT — parallel coordinates</h2>
+<div>views: <a href="/api/v1/parallel">parallel</a>
+ <a href="/api/v1/status">status</a>
+ <a href="/api/v1/cluster?window=86400">cluster</a>
+ <a href="/api/v1/curves?limit=20">curves</a>
+ <a href="/api/v1/events">events (SSE)</a>
+ <a href="/svg/parallel.svg">parallel.svg</a></div>
+<div id="status"></div>
+<canvas id="c" width="1000" height="440"></canvas>
+<script>
+// v1 responses wrap the document in {schema_version, data}; static
+// tables may serve bare legacy documents on the unversioned paths —
+// accept both, preferring v1.
+const unwrap=j=>j&&j.data!==undefined?j.data:j;
+async function getDoc(paths){
+  for(const p of paths){
+    try{const r=await fetch(p);if(r.ok)return unwrap(await r.json());}catch(e){}
+  }
+  return null;
+}
+async function draw(){
+getDoc(['/api/v1/status','/api/status.json']).then(s=>{
+  if(s)document.getElementById('status').textContent=
+    't='+Math.round(s.t)+'s  events='+s.events_processed+'  best='+(s.best==null?'-':s.best.toFixed(2))+(s.done?'  [done]':'');
+});
+getDoc(['/api/v1/parallel','/api/parallel.json']).then(doc=>{
+  if(!doc||!doc.axes)return;
+  const cv=document.getElementById('c'),g=cv.getContext('2d');
+  g.clearRect(0,0,cv.width,cv.height);
+  const axes=doc.axes,lines=doc.lines;const m=60,w=cv.width-2*m,h=cv.height-80;
+  const x=i=>m+w*i/(axes.length-1);
+  const ranges=axes.map(a=>({lo:Infinity,hi:-Infinity}));
+  const val=(l,a,i)=>i==axes.length-1?l.measure:(typeof l.values[a.name]==='number'?l.values[a.name]:null);
+  lines.forEach(l=>axes.forEach((a,i)=>{const v=val(l,a,i);if(v!=null){ranges[i].lo=Math.min(ranges[i].lo,v);ranges[i].hi=Math.max(ranges[i].hi,v);}}));
+  g.strokeStyle='#888';axes.forEach((a,i)=>{g.beginPath();g.moveTo(x(i),40);g.lineTo(x(i),40+h);g.stroke();g.fillText(a.name,x(i)-20,30);});
+  g.strokeStyle='rgba(123,79,166,0.45)';
+  lines.forEach(l=>{g.beginPath();let started=false;axes.forEach((a,i)=>{
+    let v=val(l,a,i);const r=ranges[i];if(v==null||r.hi<=r.lo){v=r.lo||0}
+    const y=40+h-(r.hi>r.lo?(v-r.lo)/(r.hi-r.lo):0.5)*h;
+    if(!started){g.moveTo(x(i),y);started=true}else{g.lineTo(x(i),y)}});g.stroke();});
+}).catch(()=>{});
+}
+draw();
+// Push-driven redraw: progress events (SSE) coalesce into one draw per
+// 500ms; polling is only the fallback when EventSource is unavailable
+// or the stream endpoint is not served.
+let pend=null;const kick=()=>{if(pend)return;pend=setTimeout(()=>{pend=null;draw()},500)};
+let pushed=false;
+if(window.EventSource){
+  const es=new EventSource('/api/v1/events');
+  es.onmessage=()=>{pushed=true;kick()};
+}
+setInterval(()=>{if(!pushed)draw()},2000);
+setInterval(draw,30000);
+</script></body></html>"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serves_routes_and_404() {
+        let mut routes = Routes::new();
+        routes.insert(
+            "/api/test.json".into(),
+            ("application/json".into(), b"{\"ok\":true}".to_vec()),
+        );
+        let server = VizServer::start(0, routes).unwrap();
+        let addr = server.addr();
+        let (status, body) = http_get(addr, "/api/test.json").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"{\"ok\":true}");
+        let (status, _) = http_get(addr, "/nope").unwrap();
+        assert_eq!(status, 404);
+        // Embedded viewer present at /.
+        let (status, body) = http_get(addr, "/").unwrap();
+        assert_eq!(status, 200);
+        assert!(String::from_utf8_lossy(&body).contains("parallel coordinates"));
+        // Live route update.
+        server.put_route("/late", "text/plain", b"hello".to_vec());
+        let (status, body) = http_get(addr, "/late").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"hello");
+        server.stop();
+    }
+
+    #[test]
+    fn static_routes_reject_non_get() {
+        let server = VizServer::start(0, Routes::new()).unwrap();
+        let addr = server.addr();
+        let (status, _) = http_post(addr, "/", b"{}").unwrap();
+        assert_eq!(status, 405, "POST to a static route must be a 405");
+        server.stop();
+    }
+
+    #[test]
+    fn bearer_check_maps_missing_vs_wrong() {
+        let req = |auth: Option<&str>| Request {
+            method: "POST".into(),
+            path: "/api/v1/commands".into(),
+            query: String::new(),
+            body: Vec::new(),
+            authorization: auth.map(|s| s.to_string()),
+            last_event_id: None,
+            if_none_match: None,
+        };
+        let token = Some("sekrit".to_string());
+        // No token configured: everything passes.
+        assert!(check_bearer(&req(None), &None).is_ok());
+        // Missing or non-bearer credentials: 401.
+        assert_eq!(
+            check_bearer(&req(None), &token).unwrap_err().http_status(),
+            401
+        );
+        assert_eq!(
+            check_bearer(&req(Some("Basic abc")), &token).unwrap_err().http_status(),
+            401
+        );
+        // Wrong token: 403.  Right token: pass.
+        assert_eq!(
+            check_bearer(&req(Some("Bearer nope")), &token).unwrap_err().http_status(),
+            403
+        );
+        assert!(check_bearer(&req(Some("Bearer sekrit")), &token).is_ok());
+    }
+
+    #[test]
+    fn if_none_match_comparison() {
+        let etag = "\"abc-7\"";
+        assert!(if_none_match_matches(Some("\"abc-7\""), etag));
+        assert!(if_none_match_matches(Some("W/\"abc-7\""), etag));
+        assert!(if_none_match_matches(Some("\"x\", \"abc-7\""), etag));
+        assert!(if_none_match_matches(Some("*"), etag));
+        assert!(!if_none_match_matches(Some("\"other\""), etag));
+        assert!(!if_none_match_matches(None, etag));
+    }
+
+    #[test]
+    fn sse_route_rejects_non_get() {
+        let server = VizServer::start(0, Routes::new()).unwrap();
+        server.serve_events(
+            crate::sse::EventFeed::new(8),
+            Duration::from_millis(50),
+        );
+        let (status, _) = http_post(server.addr(), "/api/v1/events", b"").unwrap();
+        assert_eq!(status, 405);
+        server.stop();
+    }
+
+    #[test]
+    fn sse_subscribers_share_the_broadcast_pool_and_track_active() {
+        let server = VizServer::start(0, Routes::new()).unwrap();
+        let feed = crate::sse::EventFeed::new(64);
+        feed.publish(r#"{"ev":"x"}"#.into());
+        // Two writers, three subscribers: more streams than pool threads.
+        server.serve_events_with(feed.clone(), Duration::from_millis(30), 2);
+        let addr = server.addr();
+        let mut clients = Vec::new();
+        for _ in 0..3 {
+            let mut s = TcpStream::connect(addr).unwrap();
+            write!(s, "GET /api/v1/events HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+            s.flush().unwrap();
+            s.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+            clients.push(s);
+        }
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while server.sse_active() < 3 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(server.sse_active(), 3, "gauge counts every open stream");
+        // Every subscriber gets the retained record, regardless of which
+        // shard owns it.
+        for s in &mut clients {
+            let mut buf = Vec::new();
+            let mut chunk = [0u8; 1024];
+            while !String::from_utf8_lossy(&buf).contains("id: 1\ndata: ") {
+                assert!(Instant::now() < deadline, "no frame: {:?}", String::from_utf8_lossy(&buf));
+                match s.read(&mut chunk) {
+                    Ok(0) => break,
+                    Ok(n) => buf.extend_from_slice(&chunk[..n]),
+                    Err(_) => {}
+                }
+            }
+            assert!(String::from_utf8_lossy(&buf).contains("id: 1\ndata: "));
+        }
+        // Disconnects release their slots; publishes force the writers
+        // to notice the dead sockets.
+        drop(clients);
+        while server.sse_active() > 0 && Instant::now() < deadline {
+            feed.publish(r#"{"ev":"y"}"#.into());
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert_eq!(server.sse_active(), 0, "closed streams must drain the gauge");
+        server.stop();
+    }
+
+    #[test]
+    fn worker_pool_serves_concurrent_connections() {
+        // A pool smaller than the burst still completes every request:
+        // the queue absorbs what the workers haven't reached yet.
+        let mut routes = Routes::new();
+        routes.insert("/x".into(), ("text/plain".into(), b"y".to_vec()));
+        let server = VizServer::start_with(
+            0,
+            routes,
+            ServerConfig {
+                workers: 2,
+                queue: 64,
+                cache_bytes: 0,
+            },
+        )
+        .unwrap();
+        let addr = server.addr();
+        let handles: Vec<_> = (0..16)
+            .map(|_| std::thread::spawn(move || http_get(addr, "/x").unwrap()))
+            .collect();
+        for h in handles {
+            let (status, body) = h.join().unwrap();
+            assert_eq!(status, 200);
+            assert_eq!(body, b"y");
+        }
+        assert!(server.requests.load(std::sync::atomic::Ordering::Relaxed) >= 16);
+        assert_eq!(server.rejected.load(std::sync::atomic::Ordering::Relaxed), 0);
+        server.stop();
+    }
+
+    #[test]
+    fn saturated_queue_sheds_with_503() {
+        let mut routes = Routes::new();
+        routes.insert("/x".into(), ("text/plain".into(), b"y".to_vec()));
+        let server = VizServer::start_with(
+            0,
+            routes,
+            ServerConfig {
+                workers: 1,
+                queue: 1,
+                cache_bytes: 0,
+            },
+        )
+        .unwrap();
+        let addr = server.addr();
+        // Occupy the lone worker with an idle connection, then fill the
+        // one queue slot with another.  The staggered sleeps let the
+        // accept loop dispatch each before the next arrives.
+        let idle_a = TcpStream::connect(addr).unwrap();
+        std::thread::sleep(Duration::from_millis(200));
+        let idle_b = TcpStream::connect(addr).unwrap();
+        std::thread::sleep(Duration::from_millis(200));
+        // Third connection: queue full → unsolicited 503 + Retry-After.
+        let mut probe = TcpStream::connect(addr).unwrap();
+        probe
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        let mut buf = Vec::new();
+        let _ = probe.read_to_end(&mut buf);
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.contains("503"), "expected a 503, got: {text}");
+        assert!(text.contains("Retry-After"), "{text}");
+        assert!(text.contains("saturated"), "{text}");
+        assert!(server.rejected.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+        // Recovery: once the idle connections drain (read timeout or
+        // close), normal requests flow again.
+        drop(idle_a);
+        drop(idle_b);
+        let t0 = Instant::now();
+        loop {
+            if let Ok((200, body)) = http_get(addr, "/x") {
+                assert_eq!(body, b"y");
+                break;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "server never recovered after shedding"
+            );
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn slow_loris_header_is_cut_off() {
+        let server = VizServer::start_with(
+            0,
+            Routes::new(),
+            ServerConfig {
+                workers: 1,
+                queue: 4,
+                cache_bytes: 0,
+            },
+        )
+        .unwrap();
+        let addr = server.addr();
+        // A client that sends a partial request line and stalls: the
+        // per-recv timeout must free the worker (connection closed)
+        // rather than pinning it, and the server keeps serving others.
+        let mut loris = TcpStream::connect(addr).unwrap();
+        loris.write_all(b"GET /").unwrap();
+        loris
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        let mut buf = Vec::new();
+        let t0 = Instant::now();
+        let _ = loris.read_to_end(&mut buf); // server closes on timeout
+        assert!(
+            t0.elapsed() < Duration::from_secs(8),
+            "stalled client was not cut off"
+        );
+        let (status, _) = http_get(addr, "/").unwrap();
+        assert_eq!(status, 200, "worker must be free after the cut-off");
+        server.stop();
+    }
+}

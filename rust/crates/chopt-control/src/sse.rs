@@ -1,0 +1,714 @@
+//! Server-sent-events push for dashboards: the progress-stream feed
+//! behind `GET /api/v1/events`.
+//!
+//! The viewer used to poll every v1 query on a timer whether anything
+//! had happened or not.  The platform now publishes every progress
+//! record (the same JSON objects the JSONL event log receives) into an
+//! [`EventFeed`] — a bounded, sequence-numbered ring buffer — and a
+//! small [`Broadcaster`] writer pool fans the feed out to every open
+//! SSE connection:
+//!
+//! * events are framed as `id: <seq>` + `data: <json>` blocks, so
+//!   browsers' `EventSource` reconnect sends `Last-Event-ID` and the
+//!   stream resumes after the last record the client saw;
+//! * when a stream is idle a comment heartbeat (`: heartbeat`) is
+//!   written at the configured cadence, so proxies and clients can tell
+//!   "no events" from "dead server";
+//! * the buffer is bounded: a slow client that reconnects past the
+//!   retention window resumes from the oldest retained record and the
+//!   frame notes how many were dropped.
+//!
+//! The feed is `Sync` (mutex + condvar) while the platform stays
+//! single-threaded: publishing is a lock + push from the engine loop,
+//! never an I/O wait on a consumer.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use chopt_core::util::json::Value as Json;
+
+/// Default retained events for live runs (stored runs retain everything).
+pub const DEFAULT_FEED_CAPACITY: usize = 65_536;
+
+struct FeedInner {
+    /// (sequence, serialized JSON line) — sequences start at 1 and never
+    /// repeat; the front is the oldest retained record.
+    events: VecDeque<(u64, String)>,
+    next_seq: u64,
+    /// Records evicted by the capacity bound over the feed's lifetime.
+    dropped: u64,
+}
+
+/// Optional on-disk mirror of the feed: every published record appended
+/// as one JSONL line *while the ring lock is held*, so line `k` of the
+/// file is exactly sequence `k`.  This is what lets `?since=<seq>` (and
+/// a `Last-Event-ID` resume that fell behind the window) replay records
+/// the bounded ring already evicted.
+struct HistoryLog {
+    path: PathBuf,
+    file: Mutex<std::fs::File>,
+}
+
+/// The progress-event ring buffer SSE connections tail.
+pub struct EventFeed {
+    inner: Mutex<FeedInner>,
+    cv: Condvar,
+    capacity: usize,
+    history: Option<HistoryLog>,
+}
+
+impl EventFeed {
+    /// A feed retaining at most `capacity` records (older ones are
+    /// evicted; reconnecting clients see the drop count).
+    pub fn new(capacity: usize) -> Arc<EventFeed> {
+        EventFeed::build(capacity, None)
+    }
+
+    /// A feed that also mirrors every record to a JSONL history log at
+    /// `path` (truncated — feed sequences restart at 1 with the feed).
+    /// SSE connections use it to serve `?since=` below the ring's
+    /// retention window.
+    pub fn with_history(
+        capacity: usize,
+        path: impl AsRef<Path>,
+    ) -> std::io::Result<Arc<EventFeed>> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let file = std::fs::File::create(&path)?;
+        Ok(EventFeed::build(
+            capacity,
+            Some(HistoryLog {
+                path,
+                file: Mutex::new(file),
+            }),
+        ))
+    }
+
+    fn build(capacity: usize, history: Option<HistoryLog>) -> Arc<EventFeed> {
+        Arc::new(EventFeed {
+            inner: Mutex::new(FeedInner {
+                events: VecDeque::new(),
+                next_seq: 1,
+                dropped: 0,
+            }),
+            cv: Condvar::new(),
+            capacity: capacity.max(1),
+            history,
+        })
+    }
+
+    /// Path of the history log, when one is attached.
+    pub fn history_path(&self) -> Option<&Path> {
+        self.history.as_ref().map(|h| h.path.as_path())
+    }
+
+    /// Publish one already-serialized JSON record; returns its sequence.
+    pub fn publish(&self, line: String) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        if let Some(h) = &self.history {
+            // Written under the ring lock so line k == seq k.  A failed
+            // write (disk full) degrades ?since= to the drop notice;
+            // publishing itself never fails.
+            let mut f = h.file.lock().unwrap();
+            let _ = f.write_all(line.as_bytes());
+            let _ = f.write_all(b"\n");
+        }
+        inner.events.push_back((seq, line));
+        while inner.events.len() > self.capacity {
+            inner.events.pop_front();
+            inner.dropped += 1;
+        }
+        drop(inner);
+        self.cv.notify_all();
+        seq
+    }
+
+    /// Replay records from the history log with sequence in
+    /// `(after, oldest-retained)` — the gap the ring has already
+    /// evicted.  At most `cap` records per call: callers loop,
+    /// interleaving writes, instead of buffering an unbounded backlog.
+    /// `None` when the feed has no history log attached.  Only fully
+    /// written lines below the ring's oldest record are returned, so a
+    /// concurrent publish can never surface a torn line.
+    pub fn history_after(&self, after: u64, cap: usize) -> Option<Vec<(u64, String)>> {
+        let history = self.history.as_ref()?;
+        let oldest = {
+            let inner = self.inner.lock().unwrap();
+            inner.events.front().map(|&(s, _)| s).unwrap_or(inner.next_seq)
+        };
+        if after.saturating_add(1) >= oldest {
+            return Some(Vec::new());
+        }
+        let file = match std::fs::File::open(&history.path) {
+            Ok(f) => f,
+            Err(_) => return Some(Vec::new()),
+        };
+        let mut out = Vec::new();
+        let mut seq = 0u64;
+        for line in std::io::BufReader::new(file).lines() {
+            let Ok(line) = line else { break };
+            seq += 1;
+            if seq <= after {
+                continue;
+            }
+            if seq >= oldest || out.len() >= cap {
+                break;
+            }
+            out.push((seq, line));
+        }
+        Some(out)
+    }
+
+    /// Publish a JSON document (compact form — same bytes as the JSONL
+    /// event log).
+    pub fn publish_json(&self, doc: &Json) -> u64 {
+        self.publish(doc.to_string_compact())
+    }
+
+    /// Sequence of the most recent record (0 = nothing published yet).
+    pub fn last_seq(&self) -> u64 {
+        self.inner.lock().unwrap().next_seq - 1
+    }
+
+    /// Shared core of [`EventFeed::read_after`] / [`EventFeed::wait_after`]:
+    /// records with sequence > `after` that are still retained, plus how
+    /// many the cursor missed to eviction.  Saturating arithmetic —
+    /// `after` arrives from the client-controlled `Last-Event-ID`
+    /// header, so `u64::MAX` must not overflow (it simply sees nothing
+    /// new and no drops).
+    fn collect_after(inner: &FeedInner, after: u64) -> (u64, Vec<(u64, String)>) {
+        let oldest = inner.events.front().map(|&(s, _)| s).unwrap_or(inner.next_seq);
+        let missed = oldest.saturating_sub(after.saturating_add(1));
+        let out = inner
+            .events
+            .iter()
+            .filter(|&&(s, _)| s > after)
+            .cloned()
+            .collect();
+        (missed, out)
+    }
+
+    /// Records with sequence > `after` that are still retained, plus how
+    /// many the client missed to eviction (non-zero only when `after`
+    /// fell behind the retention window).
+    pub fn read_after(&self, after: u64) -> (u64, Vec<(u64, String)>) {
+        EventFeed::collect_after(&self.inner.lock().unwrap(), after)
+    }
+
+    /// Like [`EventFeed::read_after`], but blocks up to `timeout` for at
+    /// least one fresh record.  An empty result means the timeout passed
+    /// with nothing new — the caller's heartbeat moment.
+    pub fn wait_after(&self, after: u64, timeout: Duration) -> (u64, Vec<(u64, String)>) {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            // Cheap emptiness check before scanning the ring.
+            if inner.next_seq > after.saturating_add(1) {
+                let (missed, out) = EventFeed::collect_after(&inner, after);
+                if !out.is_empty() || missed > 0 {
+                    return (missed, out);
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return (0, Vec::new());
+            }
+            let (guard, _) = self.cv.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
+        }
+    }
+}
+
+/// Writer threads in the default broadcast pool (see [`Broadcaster`]).
+pub const DEFAULT_BROADCAST_WRITERS: usize = 4;
+
+/// Records per history-backfill batch written in one sweep: bounds the
+/// memory a far-behind `?since=` subscriber can pin per iteration (the
+/// next sweep continues from its advanced cursor).
+const HISTORY_CHUNK: usize = 1024;
+
+/// Upper bound on one broadcast wait slice: new subscribers are adopted
+/// and the stop flag observed within this latency even when the feed is
+/// idle and the heartbeat cadence is long.
+const BROADCAST_SLICE: Duration = Duration::from_millis(50);
+
+/// One SSE subscriber owned by the broadcast pool.
+struct Subscriber<W> {
+    sink: W,
+    /// Sequence of the last record written to this sink.
+    cursor: u64,
+    /// When the sink last received bytes (heartbeat bookkeeping).
+    last_write: Instant,
+}
+
+/// A writer thread's adoption inbox; the thread itself owns its share
+/// of the subscribers.
+struct Shard<W> {
+    inbox: Mutex<Vec<Subscriber<W>>>,
+    cv: Condvar,
+}
+
+/// A small fixed pool of writer threads fanning one [`EventFeed`] out
+/// to every SSE subscriber.
+///
+/// The server used to spawn one long-lived tailing thread per
+/// subscriber; under thousands of open streams that is thousands of
+/// parked threads.  The broadcaster instead keeps a handful of writer
+/// threads, each owning a shard of the subscribers: one
+/// [`EventFeed::wait_after`] per shard wakes on fresh records, and the
+/// writer sweeps its shard, framing each subscriber's batch from that
+/// subscriber's own cursor — `Last-Event-ID` resume, `?since=` history
+/// backfill, and drop notices behave exactly as the per-thread tailers
+/// did.  Heartbeats stay per-subscriber at the configured cadence.  A
+/// stalled sink blocks only its shard, and only up to the sink's write
+/// timeout, after which it is dropped.
+pub struct Broadcaster<W: Write + Send + 'static> {
+    feed: Arc<EventFeed>,
+    shards: Vec<Arc<Shard<W>>>,
+    /// Round-robin adoption counter.
+    next: AtomicUsize,
+    /// Currently owned subscribers — the server's `sse_active` gauge.
+    active: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+}
+
+impl<W: Write + Send + 'static> Broadcaster<W> {
+    /// Start `writers` detached writer threads tailing `feed`.  The
+    /// threads exit once `stop` is set (observed within one wait
+    /// slice); `active` is incremented per adopted subscriber and
+    /// decremented when one is dropped, so it always reads as
+    /// "currently open streams".
+    pub fn start(
+        feed: Arc<EventFeed>,
+        heartbeat: Duration,
+        writers: usize,
+        stop: Arc<AtomicBool>,
+        active: Arc<AtomicU64>,
+    ) -> Arc<Broadcaster<W>> {
+        let heartbeat = heartbeat.max(Duration::from_millis(10));
+        let mut shards = Vec::with_capacity(writers.max(1));
+        for i in 0..writers.max(1) {
+            let shard = Arc::new(Shard {
+                inbox: Mutex::new(Vec::new()),
+                cv: Condvar::new(),
+            });
+            let (feed_i, stop_i, active_i, shard_i) =
+                (feed.clone(), stop.clone(), active.clone(), shard.clone());
+            let spawned = std::thread::Builder::new()
+                .name(format!("viz-sse-{i}"))
+                .spawn(move || writer_loop(&feed_i, heartbeat, &shard_i, &stop_i, &active_i));
+            // A shard only joins the pool with a live writer behind it;
+            // thread exhaustion shrinks the pool instead of stranding
+            // subscribers in an inbox nobody drains.
+            if spawned.is_ok() {
+                shards.push(shard);
+            }
+        }
+        Arc::new(Broadcaster {
+            feed,
+            shards,
+            next: AtomicUsize::new(0),
+            active,
+            stop,
+        })
+    }
+
+    /// The feed this pool broadcasts.
+    pub fn feed(&self) -> &Arc<EventFeed> {
+        &self.feed
+    }
+
+    /// Hand one subscriber to the pool, resuming after `cursor` (0 =
+    /// from the start of retention).  The sink's HTTP/SSE response head
+    /// must already be written and its write timeout configured.  With
+    /// no live writers (thread exhaustion at start) or a stopped pool
+    /// the sink is simply dropped, closing the connection.
+    pub fn adopt(&self, sink: W, cursor: u64) {
+        if self.shards.is_empty() || self.stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        self.active.fetch_add(1, Ordering::Relaxed);
+        let shard = &self.shards[i];
+        shard.inbox.lock().unwrap().push(Subscriber {
+            sink,
+            cursor,
+            last_write: Instant::now(),
+        });
+        shard.cv.notify_one();
+    }
+}
+
+/// One shard's writer: adopt pending subscribers, wait (bounded) for
+/// the feed to move past the furthest-behind cursor, then sweep every
+/// subscriber.  Dead sinks are dropped and decrement the gauge; on stop
+/// the remaining subscribers are released the same way.
+fn writer_loop<W: Write>(
+    feed: &EventFeed,
+    heartbeat: Duration,
+    shard: &Shard<W>,
+    stop: &AtomicBool,
+    active: &AtomicU64,
+) {
+    let mut subs: Vec<Subscriber<W>> = Vec::new();
+    let slice = heartbeat.min(BROADCAST_SLICE);
+    loop {
+        {
+            let mut inbox = shard.inbox.lock().unwrap();
+            if subs.is_empty() && inbox.is_empty() && !stop.load(Ordering::Relaxed) {
+                // Nothing to tail: the inbox condvar is the only event
+                // worth waking for, and `adopt` signals it.
+                let (guard, _) = shard.cv.wait_timeout(inbox, slice).unwrap();
+                inbox = guard;
+            }
+            subs.append(&mut inbox);
+        }
+        if stop.load(Ordering::Relaxed) {
+            active.fetch_sub(subs.len() as u64, Ordering::Relaxed);
+            return;
+        }
+        if subs.is_empty() {
+            continue;
+        }
+        // One bounded wait for the whole shard, keyed on the furthest-
+        // behind cursor so a backfilling subscriber never stalls the
+        // sweep; the slice cap keeps adoption and stop latency low.
+        let min_cursor = subs.iter().map(|s| s.cursor).min().unwrap_or(0);
+        let _ = feed.wait_after(min_cursor, slice);
+        subs.retain_mut(|sub| match sweep_one(feed, heartbeat, sub) {
+            Ok(()) => true,
+            Err(_) => {
+                // Disconnected (or write-timed-out): release the slot.
+                active.fetch_sub(1, Ordering::Relaxed);
+                false
+            }
+        });
+    }
+}
+
+/// Write everything one subscriber is owed right now: a history
+/// backfill batch when its cursor fell below the ring's retention
+/// window (or the drop notice when no history log is attached), any
+/// fresh ring records, or a heartbeat once idle past the cadence.
+/// `Err` means the sink is gone and the subscriber must be dropped.
+fn sweep_one<W: Write>(
+    feed: &EventFeed,
+    heartbeat: Duration,
+    sub: &mut Subscriber<W>,
+) -> std::io::Result<()> {
+    let (missed, batch) = feed.read_after(sub.cursor);
+    if missed > 0 {
+        // The ring evicted part of the requested window.  Replay the
+        // gap from the history log in bounded batches (the next sweep
+        // continues from the advanced cursor), or say what was lost
+        // instead of silently skipping it.
+        match feed.history_after(sub.cursor, HISTORY_CHUNK) {
+            Some(hist) if !hist.is_empty() => {
+                let mut out = String::new();
+                for (seq, line) in &hist {
+                    out.push_str(&format!("id: {seq}\ndata: {line}\n\n"));
+                    sub.cursor = *seq;
+                }
+                sub.sink.write_all(out.as_bytes())?;
+                sub.sink.flush()?;
+                sub.last_write = Instant::now();
+                return Ok(());
+            }
+            _ => {
+                sub.sink
+                    .write_all(format!(": resumed past {missed} dropped events\n\n").as_bytes())?;
+            }
+        }
+    }
+    if batch.is_empty() {
+        if sub.last_write.elapsed() >= heartbeat {
+            sub.sink.write_all(b": heartbeat\n\n")?;
+            sub.sink.flush()?;
+            sub.last_write = Instant::now();
+        }
+        return Ok(());
+    }
+    let mut out = String::new();
+    for (seq, line) in &batch {
+        out.push_str(&format!("id: {seq}\ndata: {line}\n\n"));
+        sub.cursor = *seq;
+    }
+    sub.sink.write_all(out.as_bytes())?;
+    sub.sink.flush()?;
+    sub.last_write = Instant::now();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequences_and_reads_are_ordered() {
+        let feed = EventFeed::new(16);
+        assert_eq!(feed.last_seq(), 0);
+        assert_eq!(feed.publish("a".into()), 1);
+        assert_eq!(feed.publish("b".into()), 2);
+        let (missed, got) = feed.read_after(0);
+        assert_eq!(missed, 0);
+        assert_eq!(got, vec![(1, "a".to_string()), (2, "b".to_string())]);
+        let (_, tail) = feed.read_after(1);
+        assert_eq!(tail, vec![(2, "b".to_string())]);
+        assert!(feed.read_after(2).1.is_empty());
+    }
+
+    #[test]
+    fn capacity_evicts_and_reports_missed() {
+        let feed = EventFeed::new(2);
+        for s in ["a", "b", "c", "d"] {
+            feed.publish(s.into());
+        }
+        // Only 3 and 4 retained; a client resuming after 1 missed one.
+        let (missed, got) = feed.read_after(1);
+        assert_eq!(missed, 1);
+        assert_eq!(got.first().map(|&(s, _)| s), Some(3));
+        assert_eq!(feed.last_seq(), 4);
+        // A future/huge cursor (client-controlled Last-Event-ID) must
+        // not overflow or mis-report drops — it just sees nothing new.
+        let (missed, got) = feed.read_after(u64::MAX);
+        assert_eq!((missed, got.len()), (0, 0));
+        assert!(feed.wait_after(u64::MAX, Duration::from_millis(5)).1.is_empty());
+    }
+
+    #[test]
+    fn history_log_replays_evicted_records() {
+        let dir = std::env::temp_dir().join(format!("chopt-sse-hist-{}", std::process::id()));
+        let path = dir.join("events.jsonl");
+        let feed = EventFeed::with_history(2, &path).unwrap();
+        assert_eq!(feed.history_path(), Some(path.as_path()));
+        for s in ["a", "b", "c", "d", "e"] {
+            feed.publish(s.into());
+        }
+        // Ring retains 4..5; the ring alone reports 3 missed from 0.
+        let (missed, got) = feed.read_after(0);
+        assert_eq!(missed, 3);
+        assert_eq!(got.first().map(|&(s, _)| s), Some(4));
+        // The history log covers the evicted gap exactly: (after, oldest).
+        assert_eq!(
+            feed.history_after(0, 100).unwrap(),
+            vec![(1, "a".to_string()), (2, "b".to_string()), (3, "c".to_string())]
+        );
+        // The cap bounds each batch; the cursor loop picks up the rest.
+        assert_eq!(feed.history_after(0, 1).unwrap(), vec![(1, "a".to_string())]);
+        assert_eq!(feed.history_after(1, 1).unwrap(), vec![(2, "b".to_string())]);
+        // At or past the ring's oldest record: nothing from history.
+        assert!(feed.history_after(3, 100).unwrap().is_empty());
+        assert!(feed.history_after(u64::MAX, 100).unwrap().is_empty());
+        // Feeds without history report None (callers fall back to the
+        // drop notice).
+        assert!(EventFeed::new(2).history_after(0, 10).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wait_blocks_until_publish_or_timeout() {
+        let feed = EventFeed::new(8);
+        // Timeout path: nothing published.
+        let t0 = Instant::now();
+        let (_, got) = feed.wait_after(0, Duration::from_millis(30));
+        assert!(got.is_empty());
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        // Wake path: a publish from another thread releases the wait.
+        let f2 = feed.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            f2.publish("x".into());
+        });
+        let (_, got) = feed.wait_after(0, Duration::from_secs(5));
+        assert_eq!(got.len(), 1);
+        h.join().unwrap();
+    }
+
+    /// Shared-buffer sink for broadcast tests.
+    #[derive(Clone)]
+    struct MemSink(Arc<Mutex<Vec<u8>>>);
+
+    impl MemSink {
+        fn new() -> MemSink {
+            MemSink(Arc::new(Mutex::new(Vec::new())))
+        }
+
+        fn text(&self) -> String {
+            String::from_utf8_lossy(&self.0.lock().unwrap()).to_string()
+        }
+    }
+
+    impl Write for MemSink {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    /// A sink whose client hung up: every write fails.
+    struct DeadSink;
+
+    impl Write for DeadSink {
+        fn write(&mut self, _buf: &[u8]) -> std::io::Result<usize> {
+            Err(std::io::Error::new(std::io::ErrorKind::BrokenPipe, "gone"))
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Err(std::io::Error::new(std::io::ErrorKind::BrokenPipe, "gone"))
+        }
+    }
+
+    fn wait_until(deadline: Duration, mut ok: impl FnMut() -> bool) -> bool {
+        let end = Instant::now() + deadline;
+        while Instant::now() < end {
+            if ok() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        ok()
+    }
+
+    enum Sink {
+        Mem(MemSink),
+        Dead(DeadSink),
+    }
+
+    impl Write for Sink {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            match self {
+                Sink::Mem(m) => m.write(buf),
+                Sink::Dead(d) => d.write(buf),
+            }
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            match self {
+                Sink::Mem(m) => m.flush(),
+                Sink::Dead(d) => d.flush(),
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_pool_fans_out_resumes_and_tracks_active() {
+        let feed = EventFeed::new(64);
+        feed.publish("a".into());
+        feed.publish("b".into());
+        let stop = Arc::new(AtomicBool::new(false));
+        let active = Arc::new(AtomicU64::new(0));
+        let pool: Arc<Broadcaster<Sink>> = Broadcaster::start(
+            feed.clone(),
+            Duration::from_millis(20),
+            2,
+            stop.clone(),
+            active.clone(),
+        );
+        assert_eq!(pool.feed().last_seq(), 2);
+
+        // Two subscribers at different cursors: each gets its own window.
+        let fresh = MemSink::new();
+        let resumed = MemSink::new();
+        pool.adopt(Sink::Mem(fresh.clone()), 0);
+        pool.adopt(Sink::Mem(resumed.clone()), 1);
+        assert_eq!(active.load(Ordering::Relaxed), 2, "gauge counts open streams");
+        assert!(
+            wait_until(Duration::from_secs(5), || {
+                fresh.text().contains("id: 2\ndata: b")
+                    && resumed.text().contains("id: 2\ndata: b")
+            }),
+            "fresh: {:?} resumed: {:?}",
+            fresh.text(),
+            resumed.text()
+        );
+        assert!(fresh.text().contains("id: 1\ndata: a"), "{}", fresh.text());
+        assert!(
+            !resumed.text().contains("id: 1\ndata: a"),
+            "a resumed stream must not replay its cursor: {}",
+            resumed.text()
+        );
+
+        // A record published after adoption is pushed to both, and an
+        // idle stream heartbeats at the cadence.
+        feed.publish("c".into());
+        assert!(
+            wait_until(Duration::from_secs(5), || {
+                [&fresh, &resumed].iter().all(|s| {
+                    let t = s.text();
+                    t.contains("id: 3\ndata: c") && t.contains(": heartbeat")
+                })
+            }),
+            "fresh: {:?} resumed: {:?}",
+            fresh.text(),
+            resumed.text()
+        );
+
+        // A dead sink is dropped on its first sweep and releases the slot.
+        pool.adopt(Sink::Dead(DeadSink), 0);
+        assert!(
+            wait_until(Duration::from_secs(5), || active.load(Ordering::Relaxed) == 2),
+            "dead subscriber must decrement the gauge (active={})",
+            active.load(Ordering::Relaxed)
+        );
+
+        // Stop releases the survivors; the gauge drains to zero.
+        stop.store(true, Ordering::Relaxed);
+        assert!(
+            wait_until(Duration::from_secs(5), || active.load(Ordering::Relaxed) == 0),
+            "stop must release every subscriber (active={})",
+            active.load(Ordering::Relaxed)
+        );
+        // A post-stop adoption is refused outright.
+        pool.adopt(Sink::Mem(MemSink::new()), 0);
+        assert_eq!(active.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn broadcast_pool_backfills_evicted_gap_from_history() {
+        let dir = std::env::temp_dir().join(format!("chopt-sse-pool-{}", std::process::id()));
+        let feed = EventFeed::with_history(2, dir.join("events.jsonl")).unwrap();
+        for s in ["a", "b", "c", "d"] {
+            feed.publish(s.into());
+        }
+        // Ring retains 3..4; a from-zero subscriber needs 1..2 from disk.
+        let stop = Arc::new(AtomicBool::new(false));
+        let pool: Arc<Broadcaster<MemSink>> = Broadcaster::start(
+            feed.clone(),
+            Duration::from_millis(20),
+            1,
+            stop.clone(),
+            Arc::new(AtomicU64::new(0)),
+        );
+        let sink = MemSink::new();
+        pool.adopt(sink.clone(), 0);
+        assert!(
+            wait_until(Duration::from_secs(5), || sink.text().contains("id: 4\ndata: d")),
+            "{}",
+            sink.text()
+        );
+        let text = sink.text();
+        for frame in ["id: 1\ndata: a", "id: 2\ndata: b", "id: 3\ndata: c"] {
+            assert!(text.contains(frame), "missing {frame:?} in {text}");
+        }
+        assert!(
+            !text.contains("dropped events"),
+            "history-backed resume must not report drops: {text}"
+        );
+        stop.store(true, Ordering::Relaxed);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,402 @@
+//! Stored-run read models behind `chopt serve --store`.
+//!
+//! [`StoredRun`] rebuilds a finished (or interrupted) run directory into
+//! the *same* incremental documents the live platform serves — the
+//! snapshot is replayed in full fidelity, so every `/api/v1` body is
+//! byte-identical to the run served live at the same event count.
+//! [`ReplaySource`] is its scrub sibling: `?at_event=N` replays a
+//! snapshot (single- or multi-study) to any recorded event count.
+
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::api::{ApiCommand, ApiError, ApiQuery, CommandSink, RunSource};
+use crate::platform::{MultiPlatform, Platform};
+use chopt_core::trainer::{surrogate, Trainer};
+use chopt_core::util::json::{self, Value as Json};
+
+/// Scrub-to-event replay over a run snapshot: the [`RunSource`] behind
+/// `?at_event=N`.
+///
+/// Wraps `SimEngine::restore` (via [`Platform::restore_doc_at`]) for
+/// single-study snapshots and `StudyScheduler::restore_at` (via
+/// [`MultiPlatform::restore_doc_at`]) for multi-study ones: a query at
+/// event count `N` rebuilds the engine by replaying the first `N`
+/// recorded events (re-issuing exactly the external inputs that had
+/// been enqueued by then — for multi-study runs the per-study input
+/// logs are merged by virtual enqueue time during the replay) and
+/// renders the document from that state.  The last scrub position is
+/// cached, so repeated queries at the same `N` — the common dashboard
+/// case, several views of one moment — replay once.  Determinism of the
+/// engine replay makes scrubbing stable: the same `N` always yields the
+/// same bytes regardless of scrub order.
+pub struct ReplaySource {
+    snapshot: Json,
+    /// The snapshot's recorded event count — scrub positions cap here.
+    target: u64,
+    make: ReplayFactory,
+    /// (position, replayed platform) of the last scrub.
+    cache: RefCell<Option<(u64, ScrubPlatform)>>,
+}
+
+/// Trainer factory for either snapshot shape.
+enum ReplayFactory {
+    Single(Arc<dyn Fn(u64) -> Box<dyn Trainer>>),
+    Multi(Arc<dyn Fn(usize, u64) -> Box<dyn Trainer + Send>>),
+}
+
+/// Which platform shape a scrub replayed into.
+enum ScrubPlatform {
+    Single(Platform<'static>),
+    Multi(MultiPlatform<'static>),
+}
+
+impl ScrubPlatform {
+    fn query(&self, q: &ApiQuery) -> Result<Json, ApiError> {
+        match self {
+            ScrubPlatform::Single(p) => p.query(q),
+            ScrubPlatform::Multi(m) => m.query(q),
+        }
+    }
+}
+
+impl ReplaySource {
+    /// Build a scrubber over a parsed single-study snapshot document.
+    /// `make` must be the trainer factory the original run used.
+    pub fn new(
+        snapshot: Json,
+        make: impl Fn(u64) -> Box<dyn Trainer> + 'static,
+    ) -> anyhow::Result<ReplaySource> {
+        ReplaySource::with_factory(snapshot, Arc::new(make))
+    }
+
+    /// Build a scrubber over a parsed multi-study snapshot document.
+    /// `make` must be the per-study trainer factory the original run
+    /// used.
+    pub fn new_multi(
+        snapshot: Json,
+        make: impl Fn(usize, u64) -> Box<dyn Trainer + Send> + 'static,
+    ) -> anyhow::Result<ReplaySource> {
+        ReplaySource::with_multi_factory(snapshot, Arc::new(make))
+    }
+
+    fn with_factory(
+        snapshot: Json,
+        make: Arc<dyn Fn(u64) -> Box<dyn Trainer>>,
+    ) -> anyhow::Result<ReplaySource> {
+        if snapshot.get("kind").and_then(|v| v.as_str()) == Some("multi_study") {
+            anyhow::bail!(
+                "multi-study snapshot handed to the single-study scrubber — \
+                 use ReplaySource::new_multi"
+            );
+        }
+        ReplaySource::with_any_factory(snapshot, ReplayFactory::Single(make))
+    }
+
+    fn with_multi_factory(
+        snapshot: Json,
+        make: Arc<dyn Fn(usize, u64) -> Box<dyn Trainer + Send>>,
+    ) -> anyhow::Result<ReplaySource> {
+        if snapshot.get("kind").and_then(|v| v.as_str()) != Some("multi_study") {
+            anyhow::bail!(
+                "single-study snapshot handed to the multi-study scrubber — use ReplaySource::new"
+            );
+        }
+        ReplaySource::with_any_factory(snapshot, ReplayFactory::Multi(make))
+    }
+
+    fn with_any_factory(snapshot: Json, make: ReplayFactory) -> anyhow::Result<ReplaySource> {
+        let target = snapshot
+            .get("events_processed")
+            .and_then(|v| v.as_i64())
+            .ok_or_else(|| anyhow::anyhow!("snapshot missing 'events_processed'"))?
+            as u64;
+        Ok(ReplaySource {
+            snapshot,
+            target,
+            make,
+            cache: RefCell::new(None),
+        })
+    }
+
+    /// The snapshot's recorded event count (the maximum scrub position).
+    pub fn target(&self) -> u64 {
+        self.target
+    }
+
+    /// Ensure the cached platform sits at event count `min(at, target)`;
+    /// returns the effective position.
+    fn scrub_to(&self, at: u64) -> Result<u64, ApiError> {
+        let at = at.min(self.target);
+        if let Some((pos, _)) = self.cache.borrow().as_ref() {
+            if *pos == at {
+                return Ok(at);
+            }
+        }
+        let platform = match &self.make {
+            ReplayFactory::Single(f) => {
+                let f = f.clone();
+                Platform::restore_doc_at(&self.snapshot, move |id| (*f)(id), at)
+                    .map(ScrubPlatform::Single)
+            }
+            ReplayFactory::Multi(f) => {
+                let f = f.clone();
+                MultiPlatform::restore_doc_at(&self.snapshot, move |study, id| (*f)(study, id), at)
+                    .map(ScrubPlatform::Multi)
+            }
+        }
+        .map_err(|e| ApiError::BadRequest(format!("replay to event {at} failed: {e:#}")))?;
+        *self.cache.borrow_mut() = Some((at, platform));
+        Ok(at)
+    }
+}
+
+impl RunSource for ReplaySource {
+    /// The current scrub position (the snapshot end before any scrub).
+    fn generation(&self) -> u64 {
+        self.cache
+            .borrow()
+            .as_ref()
+            .map(|&(pos, _)| pos)
+            .unwrap_or(self.target)
+    }
+
+    fn query(&self, q: &ApiQuery) -> Result<Json, ApiError> {
+        let at = self.generation();
+        self.query_at(q, at).map(|(_, doc)| doc)
+    }
+
+    fn query_at(&self, q: &ApiQuery, at: u64) -> Result<(u64, Json), ApiError> {
+        let at = self.scrub_to(at)?;
+        let cache = self.cache.borrow();
+        let (_, platform) = cache.as_ref().expect("scrub_to populated the cache");
+        platform.query(q).map(|doc| (at, doc))
+    }
+}
+
+/// Which platform shape a run directory restored into.
+enum StoredPlatform {
+    Single(Platform<'static>),
+    Multi(MultiPlatform<'static>),
+}
+
+/// A run directory rebuilt into the live read model: the [`RunSource`]
+/// behind `chopt serve --store`.
+///
+/// `open` reads `snapshot.json` (written by `chopt watch` / `chopt
+/// multi` / their `serve --live` twins) and replays it **in full
+/// fidelity** (`restore_doc_full`) through the same `Platform` /
+/// `MultiPlatform` document pipeline the live server uses — which is
+/// what makes every `/api/v1` body byte-identical between `serve
+/// --store` and `serve --live` at the same event count.  The recorded
+/// JSONL progress streams are exposed via [`StoredRun::event_lines`] so
+/// `GET /api/v1/events` replays them over SSE.  Both single- and
+/// multi-study runs carry a [`ReplaySource`] for `?at_event=`
+/// scrubbing.
+///
+/// Stored runs are read-only: the [`CommandSink`] half rejects every
+/// command with a 400 pointing at `serve --live`.
+pub struct StoredRun {
+    platform: StoredPlatform,
+    replay: ReplaySource,
+    /// Recorded JSONL streams (one for single-study, one per study for
+    /// multi), in deterministic filename order.
+    events_paths: Vec<PathBuf>,
+}
+
+impl StoredRun {
+    /// Open a run directory (or a `snapshot.json` path directly) with
+    /// the standard CLI trainer factories.  Runs produced with custom
+    /// factories restore through [`StoredRun::open_with`].
+    pub fn open(path: impl AsRef<Path>) -> anyhow::Result<StoredRun> {
+        StoredRun::open_with(
+            path,
+            surrogate::default_factory,
+            surrogate::default_multi_factory,
+        )
+    }
+
+    /// [`StoredRun::open`] with explicit trainer factories (`make` for
+    /// single-study snapshots, `make_multi` for multi-study ones —
+    /// restore-by-replay requires the factories the original run used).
+    pub fn open_with(
+        path: impl AsRef<Path>,
+        make: impl Fn(u64) -> Box<dyn Trainer> + 'static,
+        make_multi: impl Fn(usize, u64) -> Box<dyn Trainer + Send> + 'static,
+    ) -> anyhow::Result<StoredRun> {
+        let path = path.as_ref();
+        let (snap_path, dir) = if path.is_dir() {
+            (path.join("snapshot.json"), path.to_path_buf())
+        } else {
+            (
+                path.to_path_buf(),
+                path.parent()
+                    .filter(|p| !p.as_os_str().is_empty())
+                    .unwrap_or(Path::new("."))
+                    .to_path_buf(),
+            )
+        };
+        if !snap_path.exists() {
+            anyhow::bail!(
+                "no snapshot.json under '{}' — `serve --store` reads a run directory written by \
+                 `chopt watch` or `chopt multi` (the legacy static sessions.json store was \
+                 retired; see README §Control-plane API)",
+                path.display()
+            );
+        }
+        let text = std::fs::read_to_string(&snap_path)?;
+        let doc = json::parse(&text)?;
+        if doc.get("runs").is_some() && doc.get("events_processed").is_none() {
+            anyhow::bail!(
+                "'{}' is a legacy sessions.json store, not a run snapshot — re-run through \
+                 `chopt watch`/`chopt multi` to produce a servable run directory",
+                snap_path.display()
+            );
+        }
+        if doc.get("kind").and_then(|v| v.as_str()) == Some("multi_study") {
+            let make_multi: Arc<dyn Fn(usize, u64) -> Box<dyn Trainer + Send>> =
+                Arc::new(make_multi);
+            let f = make_multi.clone();
+            let platform = MultiPlatform::restore_doc_full(&doc, move |study, id| (*f)(study, id))?;
+            let replay = ReplaySource::with_multi_factory(doc, make_multi)?;
+            let mut events_paths: Vec<PathBuf> = std::fs::read_dir(&dir)
+                .map(|entries| {
+                    entries
+                        .flatten()
+                        .map(|e| e.path())
+                        .filter(|p| {
+                            p.file_name()
+                                .and_then(|n| n.to_str())
+                                .map(|n| n.starts_with("events-") && n.ends_with(".jsonl"))
+                                .unwrap_or(false)
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            events_paths.sort();
+            Ok(StoredRun {
+                platform: StoredPlatform::Multi(platform),
+                replay,
+                events_paths,
+            })
+        } else {
+            let make: Arc<dyn Fn(u64) -> Box<dyn Trainer>> = Arc::new(make);
+            let f = make.clone();
+            let platform = Platform::restore_doc_full(&doc, move |id| (*f)(id))?;
+            let replay = ReplaySource::with_factory(doc, make)?;
+            let events = dir.join("events.jsonl");
+            Ok(StoredRun {
+                platform: StoredPlatform::Single(platform),
+                replay,
+                events_paths: if events.exists() { vec![events] } else { Vec::new() },
+            })
+        }
+    }
+
+    pub fn is_multi(&self) -> bool {
+        matches!(self.platform, StoredPlatform::Multi(_))
+    }
+
+    /// The recorded progress stream, in emit order: single-study runs
+    /// return `events.jsonl` verbatim; multi-study runs merge the
+    /// per-study streams by virtual time (ties keep filename order, so
+    /// the merge is deterministic).  Feed these into an SSE `EventFeed`
+    /// to replay the run's progress over `GET /api/v1/events`.
+    pub fn event_lines(&self) -> Vec<String> {
+        let mut records: Vec<(f64, usize, String)> = Vec::new();
+        for (file_idx, path) in self.events_paths.iter().enumerate() {
+            let Ok(text) = std::fs::read_to_string(path) else {
+                continue;
+            };
+            for line in text.lines() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let t = json::parse(line)
+                    .ok()
+                    .and_then(|doc| doc.get("t").and_then(|v| v.as_f64()))
+                    .unwrap_or(0.0);
+                records.push((t, file_idx, line.to_string()));
+            }
+        }
+        // Stable by (t, file): intra-file order is preserved, cross-file
+        // ties resolve by filename order.
+        records.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        records.into_iter().map(|(_, _, line)| line).collect()
+    }
+}
+
+impl RunSource for StoredRun {
+    fn generation(&self) -> u64 {
+        match &self.platform {
+            StoredPlatform::Single(p) => p.generation(),
+            StoredPlatform::Multi(m) => m.generation(),
+        }
+    }
+
+    fn query(&self, q: &ApiQuery) -> Result<Json, ApiError> {
+        match &self.platform {
+            StoredPlatform::Single(p) => p.query(q),
+            StoredPlatform::Multi(m) => m.query(q),
+        }
+    }
+
+    fn query_at(&self, q: &ApiQuery, at: u64) -> Result<(u64, Json), ApiError> {
+        self.replay.query_at(q, at)
+    }
+
+    /// A stored run's documents can never change: the HTTP response
+    /// cache pins its entries, making the whole read surface
+    /// cache-resident after first touch.  (`ReplaySource` must *not*
+    /// claim this — scrubbing moves its generation.)
+    fn fixed_generation(&self) -> bool {
+        true
+    }
+}
+
+impl CommandSink for StoredRun {
+    fn command(&mut self, c: &ApiCommand) -> Result<Json, ApiError> {
+        Err(ApiError::BadRequest(format!(
+            "stored run is read-only — '{}' needs a live server (chopt serve --live)",
+            c.name()
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stored_run_rejects_missing_and_legacy_stores() {
+        let dir = std::env::temp_dir().join(format!("chopt-stored-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // No snapshot.json at all.
+        let err = StoredRun::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("snapshot.json"), "{err}");
+        // A legacy sessions.json store is named as such.
+        let legacy = dir.join("legacy.json");
+        std::fs::write(&legacy, r#"{"runs": []}"#).unwrap();
+        let err = StoredRun::open(&legacy).unwrap_err().to_string();
+        assert!(err.contains("legacy sessions.json"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn replay_source_rejects_shape_mismatch() {
+        let single = Json::obj().with("events_processed", Json::Num(3.0));
+        let err = ReplaySource::new_multi(single, surrogate::default_multi_factory)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("single-study snapshot"), "{err}");
+        let multi = Json::obj()
+            .with("kind", Json::Str("multi_study".into()))
+            .with("events_processed", Json::Num(3.0));
+        let err = ReplaySource::new(multi, surrogate::default_factory)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("multi-study snapshot"), "{err}");
+    }
+}

@@ -1,0 +1,434 @@
+//! Discrete-event simulation core: virtual clock + event queue.
+//!
+//! The paper's cluster-scale experiments (Tables 1–4, Figs 2/8/9: hundreds
+//! of models × 300 epochs × 60+ GPU-days) are reproduced in *virtual
+//! time*: the coordinator and cluster run unchanged, but "an epoch of
+//! training" advances this clock instead of a wall clock.  GPU-time
+//! accounting (Table 4's "60+ days") is exact integration over
+//! allocation × virtual duration.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Virtual time in seconds since simulation start.
+pub type SimTime = f64;
+
+/// A scheduled event: fires at `at`, carries an opaque payload `E`.
+struct Scheduled<E> {
+    at: SimTime,
+    seq: u64,
+    payload: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap by time (BinaryHeap is a max-heap, so reverse), with
+        // FIFO tie-break on the sequence number for determinism.
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic discrete-event loop.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    now: SimTime,
+    seq: u64,
+    processed: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> EventQueue<E> {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            now: 0.0,
+            seq: 0,
+            processed: 0,
+        }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Number of events popped so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Schedule `payload` to fire `delay` seconds from now.
+    pub fn schedule_in(&mut self, delay: SimTime, payload: E) {
+        debug_assert!(delay >= 0.0, "negative delay");
+        self.schedule_at(self.now + delay.max(0.0), payload);
+    }
+
+    /// Schedule at an absolute virtual time (clamped to now).
+    pub fn schedule_at(&mut self, at: SimTime, payload: E) {
+        let at = at.max(self.now);
+        self.heap.push(Scheduled {
+            at,
+            seq: self.seq,
+            payload,
+        });
+        self.seq += 1;
+    }
+
+    /// Pop the next event, advancing the clock to its timestamp.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        let ev = self.heap.pop()?;
+        debug_assert!(ev.at >= self.now, "time went backwards");
+        self.now = ev.at;
+        self.processed += 1;
+        Some((ev.at, ev.payload))
+    }
+
+    /// Peek at the next event time without advancing.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    // -- parallel-window support -------------------------------------------
+    //
+    // A scheduler that steps independent event streams on worker threads
+    // and then merges them back must be able to (a) pull the queue apart,
+    // (b) assign sequence numbers at exactly the points the serial run
+    // would have, and (c) account merged events as processed.  These
+    // hooks expose just enough of the queue's bookkeeping for that; used
+    // together they keep `(now, seq, processed)` bit-identical to a
+    // serial execution of the same events.
+
+    /// Next sequence number that `schedule_at` would assign (all queued
+    /// events carry strictly smaller numbers).
+    pub fn next_seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Claim the next sequence number, exactly as one `schedule_at` call
+    /// would — for events whose payloads are merged externally.
+    pub fn alloc_seq(&mut self) -> u64 {
+        let s = self.seq;
+        self.seq += 1;
+        s
+    }
+
+    /// Re-insert an event under a sequence number previously issued by
+    /// this queue (drained or externally allocated).  Does *not* advance
+    /// the sequence counter.
+    pub fn insert_prescheduled(&mut self, at: SimTime, seq: u64, payload: E) {
+        debug_assert!(seq < self.seq, "prescheduled seq was never issued");
+        let at = at.max(self.now);
+        self.heap.push(Scheduled { at, seq, payload });
+    }
+
+    /// Account one externally-dispatched event as popped: advances the
+    /// clock and the processed counter just like [`EventQueue::pop`].
+    pub fn note_processed(&mut self, at: SimTime) {
+        debug_assert!(at >= self.now, "time went backwards");
+        self.now = at;
+        self.processed += 1;
+    }
+
+    /// Remove every queued event, sorted by firing order `(at, seq)`.
+    /// The clock, sequence counter, and processed count are untouched.
+    pub fn drain_sorted(&mut self) -> Vec<(SimTime, u64, E)> {
+        let mut out: Vec<(SimTime, u64, E)> = std::mem::take(&mut self.heap)
+            .into_iter()
+            .map(|e| (e.at, e.seq, e.payload))
+            .collect();
+        out.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .unwrap_or(Ordering::Equal)
+                .then(a.1.cmp(&b.1))
+        });
+        out
+    }
+}
+
+/// First-touch-ordered dirty-index tracking, shared by the engine
+/// (slots) and the multi-study scheduler (studies): O(1) `mark`, O(k)
+/// `take` over the k touched indices.  The platform's progress drains
+/// consume it to visit only agents whose event vectors actually grew,
+/// instead of scanning every tenant after every processed event.
+#[derive(Debug, Default)]
+pub struct DirtySet {
+    flags: Vec<bool>,
+    /// Marked indices in first-touch order (deterministic given the
+    /// marking order, i.e. the event order).
+    list: Vec<usize>,
+}
+
+impl DirtySet {
+    pub fn with_len(n: usize) -> DirtySet {
+        DirtySet {
+            flags: vec![false; n],
+            list: Vec::new(),
+        }
+    }
+
+    /// Track one more index (collections that grow, e.g. online studies).
+    pub fn push_slot(&mut self) {
+        self.flags.push(false);
+    }
+
+    /// Mark `i` touched; out-of-range indices are ignored.
+    pub fn mark(&mut self, i: usize) {
+        if let Some(flag) = self.flags.get_mut(i) {
+            if !*flag {
+                *flag = true;
+                self.list.push(i);
+            }
+        }
+    }
+
+    /// Drain the touched indices (first-touch order), clearing the marks.
+    pub fn take(&mut self) -> Vec<usize> {
+        for &i in &self.list {
+            self.flags[i] = false;
+        }
+        std::mem::take(&mut self.list)
+    }
+}
+
+/// Integrates a step function of virtual time — used for GPU-hours
+/// accounting (`value` = allocated GPUs) and utilization curves (Fig. 8).
+///
+/// The integral is maintained incrementally (running sum + last point),
+/// so `set` and `integral_until` are O(1) regardless of run length.  The
+/// plotting `series` only records *level changes* (consecutive same-value
+/// points are dropped), and can be suspended entirely for quiet replay
+/// via [`TimeIntegrator::set_series_retention`].
+#[derive(Debug, Clone)]
+pub struct TimeIntegrator {
+    last_t: SimTime,
+    last_v: f64,
+    integral: f64,
+    /// (time, value) change points, for plotting.
+    pub series: Vec<(SimTime, f64)>,
+    /// When false, `set` keeps integrating but retains no series points
+    /// (quiet fast-restore replays suppress plot retention).
+    retain_series: bool,
+}
+
+impl Default for TimeIntegrator {
+    fn default() -> Self {
+        TimeIntegrator {
+            last_t: 0.0,
+            last_v: 0.0,
+            integral: 0.0,
+            series: Vec::new(),
+            retain_series: true,
+        }
+    }
+}
+
+impl TimeIntegrator {
+    pub fn new() -> TimeIntegrator {
+        TimeIntegrator::default()
+    }
+
+    /// Record that the tracked value becomes `v` at time `t`.
+    pub fn set(&mut self, t: SimTime, v: f64) {
+        debug_assert!(t >= self.last_t, "time went backwards in integrator");
+        self.integral += self.last_v * (t - self.last_t).max(0.0);
+        self.last_t = t;
+        if self.retain_series && self.series.last().map(|&(_, lv)| lv) != Some(v) {
+            self.series.push((t, v));
+        }
+        self.last_v = v;
+    }
+
+    /// Toggle series retention.  Turning retention back on reconciles the
+    /// series with the live level: the current (time, value) point is
+    /// appended when it differs from the stored tail, so plots of a
+    /// quietly-replayed run resume from a coherent level.  The integral
+    /// is unaffected either way.
+    pub fn set_series_retention(&mut self, on: bool) {
+        if on && !self.retain_series {
+            let tail = self.series.last().map(|&(_, lv)| lv);
+            if tail != Some(self.last_v) && !(tail.is_none() && self.last_v == 0.0) {
+                self.series.push((self.last_t, self.last_v));
+            }
+        }
+        self.retain_series = on;
+    }
+
+    /// Integral of the step function up to time `t` (value·seconds).
+    pub fn integral_until(&self, t: SimTime) -> f64 {
+        self.integral + self.last_v * (t - self.last_t).max(0.0)
+    }
+
+    pub fn current(&self) -> f64 {
+        self.last_v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(5.0, "c");
+        q.schedule_at(1.0, "a");
+        q.schedule_at(3.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+        assert_eq!(q.now(), 5.0);
+        assert_eq!(q.processed(), 3);
+    }
+
+    #[test]
+    fn fifo_tie_break() {
+        let mut q = EventQueue::new();
+        q.schedule_at(1.0, 1);
+        q.schedule_at(1.0, 2);
+        q.schedule_at(1.0, 3);
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn schedule_in_is_relative() {
+        let mut q = EventQueue::new();
+        q.schedule_at(10.0, "later");
+        q.pop();
+        q.schedule_in(2.0, "after");
+        assert_eq!(q.peek_time(), Some(12.0));
+    }
+
+    #[test]
+    fn past_times_clamp_to_now() {
+        let mut q = EventQueue::new();
+        q.schedule_at(10.0, "x");
+        q.pop();
+        q.schedule_at(5.0, "clamped");
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 10.0);
+    }
+
+    #[test]
+    fn drain_and_reinsert_preserve_serial_order() {
+        // Simulate the parallel-window dance: drain, process some events
+        // externally, re-insert the rest, and check (now, seq, processed)
+        // match what a serial pop sequence would produce.
+        let mut q = EventQueue::new();
+        q.schedule_at(1.0, "a");
+        q.schedule_at(2.0, "b");
+        q.schedule_at(2.0, "c");
+        let drained = q.drain_sorted();
+        assert_eq!(drained, vec![(1.0, 0, "a"), (2.0, 1, "b"), (2.0, 2, "c")]);
+        assert!(q.is_empty());
+        // "a" is merged externally; its child claims the next seq.
+        q.note_processed(1.0);
+        let child_seq = q.alloc_seq();
+        assert_eq!(child_seq, 3);
+        q.insert_prescheduled(1.5, child_seq, "a-child");
+        for &(at, seq, e) in &drained[1..] {
+            q.insert_prescheduled(at, seq, e);
+        }
+        assert_eq!(q.now(), 1.0);
+        assert_eq!(q.processed(), 1);
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a-child", "b", "c"]);
+        assert_eq!(q.processed(), 4);
+        // The counter keeps advancing from where alloc_seq left it.
+        q.schedule_at(9.0, "d");
+        assert_eq!(q.drain_sorted()[0].1, 4);
+    }
+
+    #[test]
+    fn integrator_accumulates() {
+        let mut i = TimeIntegrator::new();
+        i.set(0.0, 4.0); // 4 GPUs from t=0
+        i.set(10.0, 2.0); // 2 GPUs from t=10
+        i.set(20.0, 0.0);
+        assert!((i.integral_until(20.0) - (4.0 * 10.0 + 2.0 * 10.0)).abs() < 1e-9);
+        assert!((i.integral_until(25.0) - 60.0).abs() < 1e-9);
+        assert_eq!(i.series.len(), 3);
+        assert_eq!(i.current(), 0.0);
+    }
+
+    #[test]
+    fn integrator_dedups_series() {
+        let mut i = TimeIntegrator::new();
+        i.set(0.0, 1.0);
+        i.set(5.0, 1.0); // no change
+        assert_eq!(i.series.len(), 1);
+    }
+
+    #[test]
+    fn retention_off_keeps_integral_and_reconciles_on_reenable() {
+        let mut i = TimeIntegrator::new();
+        i.set(0.0, 4.0);
+        assert_eq!(i.series.len(), 1);
+        i.set_series_retention(false);
+        i.set(10.0, 2.0);
+        i.set(20.0, 6.0);
+        // No points retained while quiet, but the integral is exact.
+        assert_eq!(i.series.len(), 1);
+        assert!((i.integral_until(20.0) - (4.0 * 10.0 + 2.0 * 10.0)).abs() < 1e-9);
+        // Re-enabling appends the current level so plotting resumes
+        // coherently; further sets extend the series normally.
+        i.set_series_retention(true);
+        assert_eq!(i.series.last().copied(), Some((20.0, 6.0)));
+        i.set(30.0, 6.0); // deduped against the reconcile point
+        assert_eq!(i.series.len(), 2);
+        i.set(40.0, 1.0);
+        assert_eq!(i.series.last().copied(), Some((40.0, 1.0)));
+        // 0..10 @4 + 10..20 @2 + 20..40 @6 = 40 + 20 + 120.
+        assert!((i.integral_until(40.0) - 180.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reenabling_retention_on_untouched_integrator_adds_no_point() {
+        let mut i = TimeIntegrator::new();
+        i.set_series_retention(false);
+        i.set_series_retention(true);
+        assert!(i.series.is_empty());
+    }
+
+    #[test]
+    fn dirty_set_marks_once_in_first_touch_order() {
+        let mut d = DirtySet::with_len(3);
+        d.mark(2);
+        d.mark(0);
+        d.mark(2); // dedup
+        d.mark(9); // out of range: ignored
+        assert_eq!(d.take(), vec![2, 0]);
+        assert_eq!(d.take(), Vec::<usize>::new());
+        d.push_slot(); // index 3 now tracked
+        d.mark(3);
+        d.mark(1);
+        assert_eq!(d.take(), vec![3, 1]);
+    }
+}

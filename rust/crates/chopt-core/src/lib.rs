@@ -1,0 +1,21 @@
+//! `chopt-core` — the dependency-free foundation of the CHOPT workspace.
+//!
+//! Everything here is shared vocabulary for the layers above: the
+//! discrete-event toolkit ([`events`]), the hyperparameter space and
+//! value model ([`hparam`]), study configuration ([`config`]), NSML
+//! session/leaderboard records ([`nsml`]), deterministic surrogate
+//! trainers ([`trainer`]), synthetic datasets ([`data`]), paper
+//! analysis/experiment helpers ([`analysis`], [`experiments`]), and the
+//! utility belt ([`util`]: rng, json, stats, logging, proptest, bench,
+//! cli).  No module in this crate knows about clusters, tuners, the
+//! coordinator, or the control plane.
+
+pub mod analysis;
+pub mod config;
+pub mod data;
+pub mod events;
+pub mod experiments;
+pub mod hparam;
+pub mod nsml;
+pub mod trainer;
+pub mod util;

@@ -1,0 +1,65 @@
+//! Trainers: turn "train this NSML session for k epochs" into metrics.
+//!
+//! Two implementations behind one trait:
+//!
+//! * [`surrogate::SurrogateTrainer`] — parametric learning curves in
+//!   virtual time, for the paper's cluster-scale experiments (hundreds of
+//!   models × 300 epochs; see DESIGN.md §Substitutions item 3).
+//! * `RealTrainer` (in the `chopt` facade crate, `chopt::trainer::real`)
+//!   — the AOT PJRT path: executes the compiled `train_step`/`eval_step`
+//!   artifacts on synthetic data, holding model state per session (the
+//!   end-to-end examples use this).  It lives outside `chopt-core` so
+//!   this crate stays free of the PJRT runtime dependency.
+//!
+//! Trainers own all model state keyed by [`SessionId`], so PBT's exploit
+//! (weight copy) and the dead pool's GC are trainer operations.
+
+pub mod surrogate;
+
+use crate::hparam::Assignment;
+use crate::nsml::SessionId;
+
+/// Metrics from one training interval.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EpochResult {
+    /// Objective measure at the end of the interval (e.g. test accuracy).
+    pub measure: f64,
+    /// Training loss at the end of the interval.
+    pub loss: f64,
+}
+
+/// The trainer interface the coordinator drives.
+///
+/// Deliberately not `Send`: the real trainer wraps a PJRT client (raw C
+/// pointers).  Agent threads construct their own trainer instance inside
+/// the thread instead of sharing one.
+pub trait Trainer {
+    /// Train `id` (model `model`, hyperparameters `hparams`) from its
+    /// current epoch up to `to_epoch`. Creates state on first call.
+    fn train(
+        &mut self,
+        id: SessionId,
+        model: &str,
+        hparams: &Assignment,
+        to_epoch: usize,
+    ) -> anyhow::Result<EpochResult>;
+
+    /// Copy model state (weights) from `src` into `dst` (PBT exploit).
+    fn clone_state(&mut self, src: SessionId, dst: SessionId) -> anyhow::Result<()>;
+
+    /// Discard state (dead-pool GC). Idempotent.
+    fn drop_state(&mut self, id: SessionId);
+
+    /// Epochs of training already materialized for `id`.
+    fn epochs_done(&self, id: SessionId) -> usize;
+
+    /// Virtual seconds one epoch takes on one GPU (sim-time + GPU-hours
+    /// accounting; for the real trainer this is measured wall time).
+    fn epoch_seconds(&self, model: &str, hparams: &Assignment) -> f64;
+
+    /// Trainable-parameter count of this configuration (Table 3).
+    fn param_count(&self, model: &str, hparams: &Assignment) -> u64;
+
+    /// Number of sessions with live state (storage accounting).
+    fn state_count(&self) -> usize;
+}

@@ -1,0 +1,772 @@
+//! Agent: runs one CHOPT session (paper §3.2.1).
+//!
+//! The agent owns the tuner, the NSML sessions it created, the three
+//! session pools, and a trainer.  It is driven by the discrete-event
+//! driver: `fill` launches/revives work up to the GPU target,
+//! `on_interval_done` materializes one training interval (every `step`
+//! epochs when early stopping is on) and applies the tuner's verdict.
+//! `set_gpu_target` is the Stop-and-Go entry point the master agent calls.
+
+use std::collections::HashMap;
+
+use chopt_cluster::{Cluster, Owner};
+use chopt_core::config::ChoptConfig;
+use chopt_core::events::SimTime;
+use chopt_core::nsml::{Leaderboard, NsmlSession, SessionId, SessionStatus};
+use chopt_core::trainer::Trainer;
+use chopt_core::util::rng::Rng;
+use chopt_tuners::{Decision, Report, Trial, Tuner};
+
+use super::pools::{Pool, Pools};
+
+/// What the driver must do after an agent call: schedule the next
+/// interval-done event for these sessions after `seconds`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScheduleReq {
+    pub session: SessionId,
+    pub seconds: f64,
+}
+
+/// Log record of notable agent events (viz + assertions in tests).
+#[derive(Debug, Clone, PartialEq)]
+pub enum AgentEvent {
+    Launched(SessionId),
+    Revived(SessionId),
+    EarlyStopped(SessionId, Pool),
+    Preempted(SessionId, Pool),
+    Finished(SessionId),
+    Mutated { victim: SessionId, source: SessionId },
+    Evicted(SessionId),
+    Terminated(&'static str),
+}
+
+/// Generic over the trainer's unsized type so schedulers that step
+/// agents on worker threads can demand `Agent<dyn Trainer + Send>`
+/// while the single-study engine keeps the historical `Agent`
+/// (= `Agent<dyn Trainer>`) and can hold thread-bound trainers like the
+/// PJRT-backed one.
+pub struct Agent<T: ?Sized + Trainer = dyn Trainer> {
+    /// CHOPT-session id, *local* to its scheduler: drives the RNG stream,
+    /// trainer identity, and NSML session ids, so a study scheduled on a
+    /// shared cluster reproduces the exact run it would have had alone.
+    pub id: u64,
+    /// Cluster-accounting identity ([`Owner::Chopt`] key).  Equals `id`
+    /// in the single-study engine; the multi-study scheduler assigns a
+    /// study-qualified value so tenants never collide in the allocator.
+    pub tenant: u64,
+    pub cfg: ChoptConfig,
+    pub tuner: Box<dyn Tuner>,
+    pub trainer: Box<T>,
+    pub sessions: HashMap<SessionId, NsmlSession>,
+    pub pools: Pools,
+    pub leaderboard: Leaderboard,
+    rng: Rng,
+    sid_counter: u64,
+    /// Sessions ever created (termination accounting).
+    pub created: usize,
+    /// Stop-and-Go GPU target (master-agent controlled).
+    gpu_target: usize,
+    /// Target epoch each live session trains to in its current interval.
+    planned: HashMap<SessionId, usize>,
+    /// Total epoch budget per session (tuner-managed).
+    budgets: HashMap<SessionId, usize>,
+    /// Buffered fresh trial (revival-first policy never drops tuner state).
+    pending_trial: Option<Trial>,
+    /// Sessions parked by an operator pause command.  While any of them
+    /// still sits in the stop pool, the "no live sessions left" half of
+    /// the `max_session_number` / `tuner_done` termination checks is
+    /// held off — an operator pause is suspended work, not a drained run
+    /// (tuner rung barriers are *not* in this set; their parked-only
+    /// drain still terminates as before).
+    user_paused: std::collections::HashSet<SessionId>,
+    pub finished: bool,
+    pub events: Vec<AgentEvent>,
+    /// Virtual time when the CHOPT session finished.
+    pub finished_at: Option<SimTime>,
+}
+
+impl<T: ?Sized + Trainer> Agent<T> {
+    pub fn new(id: u64, cfg: ChoptConfig, trainer: Box<T>) -> Agent<T> {
+        let tuner = chopt_tuners::build(&cfg);
+        let leaderboard = Leaderboard::new(&cfg.measure, cfg.order);
+        let rng = Rng::new(cfg.seed ^ id.wrapping_mul(0x5851_F42D_4C95_7F2D));
+        let gpu_target = cfg.max_gpus;
+        Agent {
+            id,
+            tenant: id,
+            cfg,
+            tuner,
+            trainer,
+            sessions: HashMap::new(),
+            pools: Pools::new(),
+            leaderboard,
+            rng,
+            sid_counter: 0,
+            created: 0,
+            gpu_target,
+            planned: HashMap::new(),
+            budgets: HashMap::new(),
+            pending_trial: None,
+            user_paused: std::collections::HashSet::new(),
+            finished: false,
+            events: Vec::new(),
+            finished_at: None,
+        }
+    }
+
+    fn next_sid(&mut self) -> SessionId {
+        self.sid_counter += 1;
+        SessionId((self.id << 32) | self.sid_counter)
+    }
+
+    pub fn gpus_in_use(&self) -> usize {
+        self.pools.live_count() * self.cfg.gpus_per_session
+    }
+
+    pub fn gpu_target(&self) -> usize {
+        self.gpu_target
+    }
+
+    /// Best (session, measure) so far.
+    pub fn best(&self) -> Option<(SessionId, f64)> {
+        self.leaderboard.best()
+    }
+
+    /// Interval length in epochs from the current epoch of a session.
+    fn interval_epochs(&self, epochs: usize, budget: usize) -> usize {
+        let remaining = budget.saturating_sub(epochs);
+        let chunk = if self.cfg.step > 0 {
+            self.cfg.step as usize
+        } else {
+            // No early stopping: still report every 25 epochs so loss
+            // curves and utilization series exist.
+            25
+        };
+        remaining.min(chunk).max(1)
+    }
+
+    /// Schedule the next interval for a (live) session.
+    fn plan_interval(&mut self, sid: SessionId, out: &mut Vec<ScheduleReq>) {
+        let budget = *self.budgets.get(&sid).unwrap_or(&self.cfg.max_epochs);
+        let s = &self.sessions[&sid];
+        let epochs = s.epochs;
+        let dt_epoch = self.trainer.epoch_seconds(&s.model, &s.hparams);
+        let interval = self.interval_epochs(epochs, budget);
+        self.planned.insert(sid, epochs + interval);
+        out.push(ScheduleReq {
+            session: sid,
+            seconds: dt_epoch * interval as f64 / self.cfg.gpus_per_session.max(1) as f64,
+        });
+    }
+
+    /// Operator-paused work still waiting in the stop pool (resumed or
+    /// killed sessions drop out via the pool check, so stale ids in the
+    /// marker set never hold the run open).
+    fn operator_paused_pending(&self) -> bool {
+        self.user_paused
+            .iter()
+            .any(|&sid| self.pools.locate(sid) == Some(Pool::Stop))
+    }
+
+    /// Termination checks that don't need a fresh report.
+    fn termination_reached(&self, now: SimTime) -> Option<&'static str> {
+        let t = &self.cfg.termination;
+        if let Some(h) = t.time_hours {
+            if now >= h * 3600.0 {
+                return Some("time");
+            }
+        }
+        // "No live sessions left" must not count operator-paused work as
+        // drained — a paused run is held open until resumed (explicit
+        // time/threshold terminations above still apply).
+        let drained = self.pools.live_count() == 0 && !self.operator_paused_pending();
+        if let Some(n) = t.max_session_number {
+            if self.created >= n && drained {
+                return Some("max_session_number");
+            }
+        }
+        if let Some(th) = t.performance_threshold {
+            if let Some((_, best)) = self.leaderboard.best() {
+                if !self.cfg.order.better(th, best) {
+                    return Some("performance_threshold");
+                }
+            }
+        }
+        if self.tuner.done() && drained {
+            return Some("tuner_done");
+        }
+        None
+    }
+
+    fn may_create_more(&self) -> bool {
+        match self.cfg.termination.max_session_number {
+            Some(n) => self.created < n,
+            None => true,
+        }
+    }
+
+    /// Fill the live pool up to the GPU target.  Policy (paper §3.3.2):
+    /// tuner promotions first (they resume specific sessions), then
+    /// Stop-and-Go revival from the stop pool, then fresh trials.
+    pub fn fill(&mut self, cluster: &mut Cluster, now: SimTime, out: &mut Vec<ScheduleReq>) {
+        if self.finished {
+            return;
+        }
+        let per = self.cfg.gpus_per_session.max(1);
+        // Bound on consecutive size-constraint rejections per fill pass.
+        let mut rejections = 0usize;
+        loop {
+            // Quota-aware headroom: checked *before* asking the tuner so a
+            // capped tenant's RNG/tuner stream matches a dedicated cluster
+            // of its quota size (uncapped owners see plain availability).
+            if self.gpus_in_use() + per > self.gpu_target
+                || cluster.available_for(Owner::Chopt(self.tenant)) < per
+            {
+                break;
+            }
+            // 1) Buffered or fresh trial with resume_of (promotion).
+            let trial = match self.pending_trial.take() {
+                Some(t) => Some(t),
+                None => self.tuner.next_trial(&mut self.rng),
+            };
+            // Table-3 model-size constraint: reject oversize fresh trials.
+            if let (Some(limit), Some(t)) = (self.cfg.max_params, trial.as_ref()) {
+                if t.resume_of.is_none()
+                    && self.trainer.param_count(&self.cfg.model, &t.hparams) > limit
+                {
+                    rejections += 1;
+                    if rejections > 500 {
+                        break; // space has almost no feasible mass
+                    }
+                    continue;
+                }
+            }
+            match trial {
+                Some(t) if t.resume_of.is_some() => {
+                    let rid = t.resume_of.unwrap();
+                    if self.resume_session(rid, Some(t.budget), cluster, now, out) {
+                        // Re-register the resume so the tuner keeps the
+                        // session's hparams reachable for later
+                        // promotions (restore-by-replay relies on this).
+                        self.tuner.register(rid, &t);
+                        continue;
+                    } else {
+                        // Promotion target vanished (e.g. GC'd); drop it.
+                        continue;
+                    }
+                }
+                Some(t) => {
+                    // 2) Revival-first when the stop pool has candidates.
+                    if self.pools.stop_count() > 0 {
+                        self.pending_trial = Some(t);
+                        if let Some(rid) = self.pools_pick_revival() {
+                            if self.resume_session(rid, None, cluster, now, out) {
+                                continue;
+                            }
+                        }
+                        // Revival failed (e.g. the stop pool holds only
+                        // parked rung-barrier sessions); fall through to
+                        // the buffered trial — under the same session-cap
+                        // guard as the empty-stop-pool path.
+                        let t = self.pending_trial.take().unwrap();
+                        if !self.may_create_more() {
+                            self.pending_trial = Some(t);
+                            break;
+                        }
+                        if !self.launch(t, cluster, now, out) {
+                            break;
+                        }
+                        continue;
+                    }
+                    if !self.may_create_more() {
+                        self.pending_trial = Some(t);
+                        break;
+                    }
+                    if !self.launch(t, cluster, now, out) {
+                        break;
+                    }
+                }
+                None => {
+                    // 3) No tuner work; revive stopped sessions if any.
+                    match self.pools_pick_revival() {
+                        Some(rid) => {
+                            if !self.resume_session(rid, None, cluster, now, out) {
+                                break;
+                            }
+                        }
+                        None => break,
+                    }
+                }
+            }
+        }
+    }
+
+    fn pools_pick_revival(&mut self) -> Option<SessionId> {
+        // Only sessions that still have trainer state can resume.
+        let id = self.pools.pick_revival(&mut self.rng)?;
+        Some(id)
+    }
+
+    fn launch(
+        &mut self,
+        trial: Trial,
+        cluster: &mut Cluster,
+        now: SimTime,
+        out: &mut Vec<ScheduleReq>,
+    ) -> bool {
+        let per = self.cfg.gpus_per_session.max(1);
+        if cluster.allocate(Owner::Chopt(self.tenant), per, now).is_err() {
+            self.pending_trial = Some(trial);
+            return false;
+        }
+        let sid = self.next_sid();
+        let mut s = NsmlSession::new(sid, trial.hparams.clone(), &self.cfg.model, now);
+        s.gpus = per;
+        if let Some(src) = trial.clone_of {
+            let _ = self.trainer.clone_state(src, sid);
+            s.parent = Some(src);
+        }
+        s.transition(SessionStatus::Running, now).expect("pending->running");
+        self.sessions.insert(sid, s);
+        self.pools.add_live(sid);
+        self.budgets.insert(sid, trial.budget);
+        self.created += 1;
+        self.tuner.register(sid, &trial);
+        self.events.push(AgentEvent::Launched(sid));
+        self.plan_interval(sid, out);
+        true
+    }
+
+    /// Resume a stopped session (Stop-and-Go revival or tuner promotion).
+    fn resume_session(
+        &mut self,
+        sid: SessionId,
+        new_budget: Option<usize>,
+        cluster: &mut Cluster,
+        now: SimTime,
+        out: &mut Vec<ScheduleReq>,
+    ) -> bool {
+        let was_parked = self.pools.is_parked(sid);
+        let was_preempted = self.pools.is_preempted(sid);
+        // Restores the pool flags if the revival has to be rolled back —
+        // losing `parked` would re-expose a rung-barrier session to the
+        // generic revival churn the flag exists to prevent.
+        let undo = |pools: &mut Pools, sid: SessionId| {
+            if was_parked {
+                pools.park_session(sid);
+            } else {
+                pools.stop_session(sid, was_preempted);
+            }
+        };
+        if self.pools.locate(sid) == Some(Pool::Live) {
+            // pick_revival already moved it; proceed.
+        } else if !self.pools.revive(sid) {
+            return false;
+        }
+        let per = self.cfg.gpus_per_session.max(1);
+        if cluster.allocate(Owner::Chopt(self.tenant), per, now).is_err() {
+            // Undo the pool move.
+            undo(&mut self.pools, sid);
+            return false;
+        }
+        let s = self.sessions.get_mut(&sid).expect("session exists");
+        if s.transition(SessionStatus::Running, now).is_err() {
+            let _ = cluster.release(Owner::Chopt(self.tenant), per, now);
+            undo(&mut self.pools, sid);
+            return false;
+        }
+        if let Some(b) = new_budget {
+            self.budgets.insert(sid, b);
+        }
+        // Any kind of revival clears the operator-pause marker; if the
+        // session is early-stopped again later, that is ordinary tuner
+        // state and must not hold the run open.
+        self.user_paused.remove(&sid);
+        self.events.push(AgentEvent::Revived(sid));
+        self.plan_interval(sid, out);
+        true
+    }
+
+    /// One training interval elapsed for `sid`: materialize it, report to
+    /// the tuner, apply the verdict, then refill.
+    pub fn on_interval_done(
+        &mut self,
+        sid: SessionId,
+        cluster: &mut Cluster,
+        now: SimTime,
+        out: &mut Vec<ScheduleReq>,
+    ) {
+        if self.finished {
+            return;
+        }
+        let Some(&target) = self.planned.get(&sid) else {
+            return; // stale event (session was preempted mid-interval)
+        };
+        if self.sessions.get(&sid).map(|s| s.status) != Some(SessionStatus::Running) {
+            return; // stale event
+        }
+        self.planned.remove(&sid);
+        // Materialize the training result.
+        let (model, hp) = {
+            let s = &self.sessions[&sid];
+            (s.model.clone(), s.hparams.clone())
+        };
+        let result = match self.trainer.train(sid, &model, &hp, target) {
+            Ok(r) => r,
+            Err(e) => {
+                chopt_core::log_warn!("agent", "train failed for {sid}: {e:#}");
+                self.exit_session(sid, cluster, now, false);
+                return;
+            }
+        };
+        {
+            let s = self.sessions.get_mut(&sid).unwrap();
+            let dt_epoch = self.trainer.epoch_seconds(&model, &hp);
+            let prev = s.epochs;
+            s.report(target, result.measure, result.loss);
+            s.gpu_seconds += (target - prev) as f64 * dt_epoch;
+        }
+        let s_ref = self.sessions.get(&sid).unwrap().clone();
+        self.leaderboard.update(&s_ref);
+
+        // Tuner verdict.
+        let decision = self.tuner.report(
+            Report {
+                id: sid,
+                epoch: target,
+                measure: result.measure,
+            },
+            &mut self.rng,
+        );
+        let budget = *self.budgets.get(&sid).unwrap_or(&self.cfg.max_epochs);
+        match decision {
+            Decision::Continue { budget: b } => {
+                self.budgets.insert(sid, b);
+                if target >= b.max(budget) && target >= self.cfg.max_epochs {
+                    self.finish_session(sid, cluster, now);
+                } else {
+                    self.plan_interval(sid, out);
+                }
+            }
+            Decision::Stop => {
+                if target >= budget.min(self.cfg.max_epochs) {
+                    self.finish_session(sid, cluster, now);
+                } else {
+                    self.exit_session(sid, cluster, now, false);
+                }
+            }
+            Decision::Pause => {
+                self.pause_session(sid, cluster, now);
+            }
+            Decision::Mutate {
+                hparams,
+                clone_of,
+                budget: b,
+            } => {
+                if self.sessions.contains_key(&clone_of)
+                    && self.trainer.clone_state(clone_of, sid).is_ok()
+                {
+                    let src_epochs = self.trainer.epochs_done(sid);
+                    let s = self.sessions.get_mut(&sid).unwrap();
+                    s.hparams = hparams;
+                    s.parent = Some(clone_of);
+                    // Weights (and thus epochs) jump to the source's.
+                    s.epochs = src_epochs.max(s.epochs);
+                    self.events.push(AgentEvent::Mutated {
+                        victim: sid,
+                        source: clone_of,
+                    });
+                }
+                self.budgets.insert(sid, b);
+                self.plan_interval(sid, out);
+            }
+        }
+
+        // Tuner-requested GC of paused sessions.
+        for ev in self.tuner.take_evictions() {
+            if self.pools.kill_stopped(ev) {
+                if let Some(s) = self.sessions.get_mut(&ev) {
+                    let _ = s.transition(SessionStatus::Dead, now);
+                }
+                self.trainer.drop_state(ev);
+                self.events.push(AgentEvent::Evicted(ev));
+            }
+        }
+
+        // Termination + refill.
+        if let Some(reason) = self.termination_reached(now) {
+            self.shutdown(reason, cluster, now);
+            return;
+        }
+        self.fill(cluster, now, out);
+    }
+
+    /// Session reached its budget: leaves the live pool as Finished.
+    fn finish_session(&mut self, sid: SessionId, cluster: &mut Cluster, now: SimTime) {
+        let per = self.cfg.gpus_per_session.max(1);
+        if self.pools.finish_live(sid) {
+            let _ = cluster.release(Owner::Chopt(self.tenant), per, now);
+        }
+        if let Some(s) = self.sessions.get_mut(&sid) {
+            let _ = s.transition(SessionStatus::Finished, now);
+        }
+        self.planned.remove(&sid);
+        self.events.push(AgentEvent::Finished(sid));
+    }
+
+    /// Early-stop a session; stop-vs-dead by stop_ratio.
+    fn exit_session(&mut self, sid: SessionId, cluster: &mut Cluster, now: SimTime, preempted: bool) {
+        let per = self.cfg.gpus_per_session.max(1);
+        let stop_ratio = self.cfg.stop_ratio;
+        let pool = self.pools.exit_live(sid, stop_ratio, &mut self.rng, preempted);
+        let _ = cluster.release(Owner::Chopt(self.tenant), per, now);
+        self.planned.remove(&sid);
+        if let Some(s) = self.sessions.get_mut(&sid) {
+            let to = match pool {
+                Pool::Stop => SessionStatus::Stopped,
+                _ => SessionStatus::Dead,
+            };
+            let _ = s.transition(to, now);
+        }
+        if pool == Pool::Dead {
+            self.trainer.drop_state(sid);
+        }
+        let ev = if preempted {
+            AgentEvent::Preempted(sid, pool)
+        } else {
+            AgentEvent::EarlyStopped(sid, pool)
+        };
+        self.events.push(ev);
+    }
+
+    /// Common teardown for live → stop-pool moves that keep state:
+    /// release the GPUs, cancel the planned interval, mark Stopped.
+    /// `parked` routes to the tuner rung barrier (invisible to generic
+    /// revival); otherwise the session is flagged preempted so it
+    /// revives first when GPUs return.
+    fn suspend_session(
+        &mut self,
+        sid: SessionId,
+        parked: bool,
+        cluster: &mut Cluster,
+        now: SimTime,
+    ) -> bool {
+        let per = self.cfg.gpus_per_session.max(1);
+        let moved = if parked {
+            self.pools.park_session(sid)
+        } else {
+            self.pools.stop_session(sid, true)
+        };
+        if moved {
+            let _ = cluster.release(Owner::Chopt(self.tenant), per, now);
+        }
+        self.planned.remove(&sid);
+        if let Some(s) = self.sessions.get_mut(&sid) {
+            let _ = s.transition(SessionStatus::Stopped, now);
+        }
+        moved
+    }
+
+    /// Hyperband rung barrier: park in the stop pool, keep state.  Parked
+    /// sessions are invisible to the generic Stop-and-Go revival — only
+    /// their tuner promotion resumes them (reviving one early made it
+    /// train past its rung and contaminate the next rung's barrier).
+    fn pause_session(&mut self, sid: SessionId, cluster: &mut Cluster, now: SimTime) {
+        self.suspend_session(sid, true, cluster, now);
+    }
+
+    /// Shared Stop-and-Go shrink loop: evict live victims until usage
+    /// fits `target`, then refill.  `pause_only` chooses both the victim
+    /// disposition *and* the selection policy:
+    ///
+    /// * `false` — the paper's §3.3.2 split: a **random** live victim
+    ///   exits via `stop_ratio` (may land in the dead pool).
+    /// * `true` — cross-tenant reclaim: the **most recently granted**
+    ///   live session is paused first (LIFO over the live pool, which is
+    ///   insertion-ordered by launch/revival — under borrowing the latest
+    ///   grants are exactly the borrowed capacity, and the youngest
+    ///   session has the least progress to suspend).  The pick is
+    ///   deterministic — no RNG draw — so a cross-study preemption (or an
+    ///   operator `pause_study`) never perturbs the victim study's
+    ///   decision stream; the grant order itself is the stable tiebreak.
+    fn shrink_to_target(
+        &mut self,
+        target: usize,
+        pause_only: bool,
+        cluster: &mut Cluster,
+        now: SimTime,
+        out: &mut Vec<ScheduleReq>,
+    ) {
+        self.gpu_target = target;
+        while self.gpus_in_use() > target && self.pools.live_count() > 0 {
+            if pause_only {
+                let victim = *self.pools.live().last().unwrap();
+                self.suspend_session(victim, false, cluster, now);
+                self.events.push(AgentEvent::Preempted(victim, Pool::Stop));
+            } else {
+                let victims = self.pools.live().to_vec();
+                let victim = victims[self.rng.index(victims.len())];
+                self.exit_session(victim, cluster, now, true);
+            }
+        }
+        if !self.finished {
+            self.fill(cluster, now, out);
+        }
+    }
+
+    /// Stop-and-Go entry point: the master agent changed our GPU target.
+    /// Shrinking preempts random live sessions (split stop/dead by
+    /// stop_ratio — paper §3.3.2); growing is handled by the next `fill`.
+    pub fn set_gpu_target(
+        &mut self,
+        target: usize,
+        cluster: &mut Cluster,
+        now: SimTime,
+        out: &mut Vec<ScheduleReq>,
+    ) {
+        self.shrink_to_target(target, false, cluster, now, out);
+    }
+
+    /// Cross-study Stop-and-Go reclaim: shrink to `target` by *pausing*
+    /// random live sessions into the stop pool.  Unlike
+    /// [`Agent::set_gpu_target`] (whose `stop_ratio` draw may route
+    /// victims to the dead pool), a cross-tenant preemption never
+    /// destroys a borrower's work — the victim keeps its checkpoint and
+    /// is flagged `preempted`, so it revives first when GPUs return.
+    pub fn preempt_pause_to_target(
+        &mut self,
+        target: usize,
+        cluster: &mut Cluster,
+        now: SimTime,
+        out: &mut Vec<ScheduleReq>,
+    ) {
+        self.shrink_to_target(target, true, cluster, now, out);
+    }
+
+    // -- operator commands (the /api/v1 control plane) ----------------------
+
+    /// Operator pause: park a live session.  Parked sessions are
+    /// invisible to the generic Stop-and-Go revival, so the session stays
+    /// down until an explicit resume (or a tuner promotion) — pausing
+    /// into the plain stop pool would be undone by the very next `fill`.
+    pub fn pause_session_cmd(
+        &mut self,
+        sid: SessionId,
+        cluster: &mut Cluster,
+        now: SimTime,
+    ) -> bool {
+        if self.finished || self.pools.locate(sid) != Some(Pool::Live) {
+            return false;
+        }
+        if self.suspend_session(sid, true, cluster, now) {
+            self.user_paused.insert(sid);
+            self.events.push(AgentEvent::Preempted(sid, Pool::Stop));
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Operator resume: revive a stopped/parked session immediately when
+    /// the GPU target and cluster allow it; otherwise lift any `parked`
+    /// mark and flag it preempted, so the next `fill` with capacity
+    /// revives it first.
+    pub fn resume_session_cmd(
+        &mut self,
+        sid: SessionId,
+        cluster: &mut Cluster,
+        now: SimTime,
+        out: &mut Vec<ScheduleReq>,
+    ) -> bool {
+        if self.finished || self.pools.locate(sid) != Some(Pool::Stop) {
+            return false;
+        }
+        let per = self.cfg.gpus_per_session.max(1);
+        if self.gpus_in_use() + per <= self.gpu_target
+            && self.resume_session(sid, None, cluster, now, out)
+        {
+            return true;
+        }
+        // No capacity right now: the session stays in `user_paused` (and
+        // keeps the run open) until a later fill actually revives it —
+        // `resume_session` clears the marker at that point.
+        self.pools.prioritize_revival(sid)
+    }
+
+    /// Operator stop: kill a session outright (live or stopped) into the
+    /// dead pool, releasing its GPUs and trainer state.  Unlike the
+    /// tuner's `Decision::Stop` this bypasses the `stop_ratio` draw — an
+    /// explicit kill is never resumable.  The tuner is told via
+    /// [`Tuner::retire`] so barrier tuners (Hyperband) adjust their rung
+    /// accounting instead of waiting forever on a report that will never
+    /// come.
+    pub fn stop_session_cmd(
+        &mut self,
+        sid: SessionId,
+        cluster: &mut Cluster,
+        now: SimTime,
+    ) -> bool {
+        if self.finished {
+            return false;
+        }
+        self.user_paused.remove(&sid);
+        match self.pools.locate(sid) {
+            Some(Pool::Live) => {
+                let per = self.cfg.gpus_per_session.max(1);
+                self.pools.kill_live(sid);
+                let _ = cluster.release(Owner::Chopt(self.tenant), per, now);
+                self.planned.remove(&sid);
+                if let Some(s) = self.sessions.get_mut(&sid) {
+                    let _ = s.transition(SessionStatus::Dead, now);
+                }
+                self.trainer.drop_state(sid);
+                self.tuner.retire(sid);
+                self.events.push(AgentEvent::EarlyStopped(sid, Pool::Dead));
+                true
+            }
+            Some(Pool::Stop) => {
+                if self.pools.kill_stopped(sid) {
+                    if let Some(s) = self.sessions.get_mut(&sid) {
+                        let _ = s.transition(SessionStatus::Dead, now);
+                    }
+                    self.trainer.drop_state(sid);
+                    self.tuner.retire(sid);
+                    self.events.push(AgentEvent::Evicted(sid));
+                    true
+                } else {
+                    false
+                }
+            }
+            _ => false,
+        }
+    }
+
+    /// Stop everything and mark the CHOPT session finished.
+    pub fn shutdown(&mut self, reason: &'static str, cluster: &mut Cluster, now: SimTime) {
+        if self.finished {
+            return;
+        }
+        let live = self.pools.live().to_vec();
+        let per = self.cfg.gpus_per_session.max(1);
+        for sid in live {
+            self.pools.finish_live(sid);
+            let _ = cluster.release(Owner::Chopt(self.tenant), per, now);
+            if let Some(s) = self.sessions.get_mut(&sid) {
+                let _ = s.transition(SessionStatus::Finished, now);
+            }
+        }
+        self.finished = true;
+        self.finished_at = Some(now);
+        self.events.push(AgentEvent::Terminated(reason));
+    }
+
+    /// Externally visible termination check (driver time-limit sweep).
+    pub fn check_termination(&mut self, cluster: &mut Cluster, now: SimTime) {
+        if self.finished {
+            return;
+        }
+        if let Some(reason) = self.termination_reached(now) {
+            self.shutdown(reason, cluster, now);
+        }
+    }
+}

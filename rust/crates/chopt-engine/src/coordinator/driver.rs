@@ -1,0 +1,345 @@
+//! Batch entry point over the re-entrant engine.
+//!
+//! This is the composition root for all simulator-backed experiments
+//! (Tables 1–4, Figs 2/8/9): benches build a [`SimSetup`], call
+//! [`run_sim`], and read the [`SimOutcome`].  The discrete-event loop
+//! itself lives in [`super::engine::SimEngine`]; `run_sim` is a thin
+//! compatibility wrapper (`new` → `run_to_completion` → `into_outcome`)
+//! kept so the closed-world callers stay unchanged while live callers
+//! (the `Platform` (chopt-control), `chopt watch`, `chopt serve
+//! --live`) drive the engine incrementally.
+
+use chopt_cluster::{Cluster, ExternalLoadTrace};
+use chopt_core::config::ChoptConfig;
+use chopt_core::events::SimTime;
+use chopt_core::nsml::SessionId;
+use chopt_core::trainer::Trainer;
+use chopt_core::util::json::Value as Json;
+
+use super::agent::Agent;
+use super::election::Election;
+use super::engine::SimEngine;
+use super::master::{MasterTickLog, StopAndGoPolicy};
+
+/// Everything a simulated run needs.
+pub struct SimSetup {
+    pub cluster_gpus: usize,
+    /// Configs to run; queued FIFO onto `agent_slots` agent slots.
+    pub configs: Vec<ChoptConfig>,
+    /// Virtual submit time per config (missing entries = 0 — submitted at
+    /// simulation start).  Models users starting CHOPT sessions mid-trace.
+    pub submit_times: Vec<SimTime>,
+    pub agent_slots: usize,
+    /// Optional non-CHOPT background load (None = dedicated cluster).
+    pub trace: Option<ExternalLoadTrace>,
+    pub policy: StopAndGoPolicy,
+    /// Master control period in virtual seconds.
+    pub master_period: SimTime,
+    /// Hard stop for the simulation clock.
+    pub horizon: SimTime,
+    /// Failure injection: (virtual time, agent slot) pairs — the slot's
+    /// agent crashes at that time (GPUs released, CHOPT session aborted),
+    /// and if it held master-agent leadership the election fails over.
+    /// Each failure fires exactly once.
+    pub failures: Vec<(SimTime, usize)>,
+}
+
+impl SimSetup {
+    pub fn single(config: ChoptConfig, cluster_gpus: usize) -> SimSetup {
+        SimSetup {
+            cluster_gpus,
+            configs: vec![config],
+            submit_times: Vec::new(),
+            agent_slots: 1,
+            trace: None,
+            policy: StopAndGoPolicy::default(),
+            master_period: 60.0,
+            horizon: 400.0 * 24.0 * 3600.0, // 400 virtual days
+            failures: Vec::new(),
+        }
+    }
+
+    /// Serialize the replay inputs (engine snapshots embed this).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("cluster_gpus", Json::Num(self.cluster_gpus as f64))
+            .with("agent_slots", Json::Num(self.agent_slots as f64))
+            .with("master_period", Json::Num(self.master_period))
+            .with("horizon", Json::Num(self.horizon))
+            .with("policy", self.policy.to_json())
+            .with(
+                "trace",
+                self.trace.as_ref().map(|t| t.to_json()).unwrap_or(Json::Null),
+            )
+            .with(
+                "failures",
+                Json::Arr(
+                    self.failures
+                        .iter()
+                        .map(|&(at, slot)| {
+                            Json::Arr(vec![Json::Num(at), Json::Num(slot as f64)])
+                        })
+                        .collect(),
+                ),
+            )
+            .with(
+                "configs",
+                Json::Arr(self.configs.iter().map(|c| c.to_json()).collect()),
+            )
+            .with("submit_times", Json::from_f64_slice(&self.submit_times))
+    }
+
+    /// Inverse of [`SimSetup::to_json`].
+    pub fn from_json(doc: &Json) -> anyhow::Result<SimSetup> {
+        let req_num = |key: &str| -> anyhow::Result<f64> {
+            doc.get(key)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("setup missing numeric '{key}'"))
+        };
+        let configs = doc
+            .get("configs")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("setup missing 'configs'"))?
+            .iter()
+            .map(ChoptConfig::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let submit_times = doc
+            .get("submit_times")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+            .unwrap_or_default();
+        let failures = doc
+            .get("failures")
+            .and_then(|v| v.as_arr())
+            .map(|a| {
+                a.iter()
+                    .filter_map(|pair| {
+                        Some((
+                            pair.idx(0)?.as_f64()?,
+                            pair.idx(1)?.as_usize()?,
+                        ))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        let trace = match doc.get("trace") {
+            None | Some(Json::Null) => None,
+            Some(t) => Some(ExternalLoadTrace::from_json(t)?),
+        };
+        let policy = doc
+            .get("policy")
+            .map(StopAndGoPolicy::from_json)
+            .transpose()?
+            .unwrap_or_default();
+        Ok(SimSetup {
+            cluster_gpus: req_num("cluster_gpus")? as usize,
+            configs,
+            submit_times,
+            agent_slots: req_num("agent_slots")? as usize,
+            trace,
+            policy,
+            master_period: req_num("master_period")?,
+            horizon: req_num("horizon")?,
+            failures,
+        })
+    }
+}
+
+/// NaN-safe best over keyed agents, shared by the batch outcome and the
+/// live engine so the two views rank identically: NaN measures are
+/// excluded (in `f64` total order a positive NaN ranks above +inf, so
+/// `total_cmp` alone would crown it), and the rest rank deterministically
+/// via `f64::total_cmp` instead of the old `partial_cmp → Equal` scramble.
+pub(crate) fn best_of<'a, K>(
+    agents: impl Iterator<Item = (K, &'a Agent)>,
+) -> Option<(K, SessionId, f64)> {
+    agents
+        .filter_map(|(k, a)| a.best().map(|(sid, m)| (k, sid, m)))
+        .filter(|entry| !entry.2.is_nan())
+        .max_by(|a, b| a.2.total_cmp(&b.2))
+}
+
+/// Results of a simulated run.
+pub struct SimOutcome {
+    /// All agents that ran (one per completed/active CHOPT session).
+    pub agents: Vec<Agent>,
+    pub cluster: Cluster,
+    pub master_log: Vec<MasterTickLog>,
+    pub election: Election,
+    /// Final virtual time.
+    pub end_time: SimTime,
+    pub events_processed: u64,
+}
+
+impl SimOutcome {
+    /// Best (agent idx, session, measure) across all agents (NaN-safe —
+    /// see [`best_of`]).
+    pub fn best(&self) -> Option<(usize, SessionId, f64)> {
+        best_of(self.agents.iter().enumerate())
+    }
+
+    /// Total CHOPT GPU-hours consumed.
+    pub fn gpu_hours(&self) -> f64 {
+        self.cluster.chopt_gpu_hours(self.end_time)
+    }
+}
+
+/// Run a simulation to completion (all configs done, or horizon).
+///
+/// `make_trainer(chopt_session_id)` builds a fresh trainer per CHOPT
+/// session (surrogate for sim-scale runs, real PJRT for small ones).
+pub fn run_sim(
+    setup: SimSetup,
+    make_trainer: impl FnMut(u64) -> Box<dyn Trainer>,
+) -> SimOutcome {
+    let mut engine = SimEngine::new(setup, make_trainer);
+    engine.run_to_completion();
+    engine.into_outcome()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use chopt_core::config::ChoptConfig;
+    use chopt_core::trainer::surrogate::SurrogateTrainer;
+
+    fn small_cfg(tune: &str, step: i64, max_sessions: usize) -> ChoptConfig {
+        let text = format!(
+            r#"{{
+              "h_params": {{
+                "lr": {{"parameters": [0.01, 0.09], "distribution": "log_uniform",
+                        "type": "float", "p_range": [0.001, 0.1]}},
+                "momentum": {{"parameters": [0.5, 0.99], "distribution": "uniform",
+                        "type": "float", "p_range": [0.1, 0.999]}}
+              }},
+              "measure": "test/accuracy",
+              "order": "descending",
+              "step": {step},
+              "population": 4,
+              "tune": {tune},
+              "termination": {{"max_session_number": {max_sessions}}},
+              "model": "surrogate:resnet",
+              "max_epochs": 50,
+              "max_gpus": 4,
+              "seed": 11
+            }}"#
+        );
+        ChoptConfig::from_json_str(&text).unwrap()
+    }
+
+    #[test]
+    fn random_search_runs_to_completion() {
+        let cfg = small_cfg("{\"random\": {}}", 10, 12);
+        let out = run_sim(SimSetup::single(cfg, 8), |id| {
+            Box::new(SurrogateTrainer::new(100 + id))
+        });
+        assert_eq!(out.agents.len(), 1);
+        let a = &out.agents[0];
+        assert!(a.finished);
+        assert!(a.created >= 12, "created {}", a.created);
+        let (_, _, best) = out.best().unwrap();
+        assert!(best > 60.0, "best {best}");
+        assert!(out.gpu_hours() > 0.0);
+        // Pool invariants hold at the end.
+        a.pools.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pbt_runs_and_mutates() {
+        let cfg = small_cfg(
+            "{\"pbt\": {\"exploit\": \"truncation\", \"explore\": \"perturb\"}}",
+            5,
+            16,
+        );
+        let out = run_sim(SimSetup::single(cfg, 8), |id| {
+            Box::new(SurrogateTrainer::new(200 + id))
+        });
+        let a = &out.agents[0];
+        assert!(a.finished);
+        let mutations = a
+            .events
+            .iter()
+            .filter(|e| matches!(e, super::super::agent::AgentEvent::Mutated { .. }))
+            .count();
+        assert!(mutations > 0, "PBT should exploit at least once");
+    }
+
+    #[test]
+    fn hyperband_completes_brackets() {
+        let cfg = small_cfg(
+            "{\"hyperband\": {\"max_resource\": 9, \"eta\": 3}}",
+            3,
+            1000,
+        );
+        let out = run_sim(SimSetup::single(cfg, 16), |id| {
+            Box::new(SurrogateTrainer::new(300 + id))
+        });
+        let a = &out.agents[0];
+        assert!(a.finished, "hyperband session should finish");
+        // Hyperband R=9/eta=3 runs 2 brackets: 9+3+1 + 3+... sessions.
+        assert!(a.created >= 9, "created {}", a.created);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let cfg = small_cfg("{\"random\": {}}", 10, 8);
+            let out = run_sim(SimSetup::single(cfg, 4), |id| {
+                Box::new(SurrogateTrainer::new(42 + id))
+            });
+            (
+                out.best().map(|(_, _, m)| m),
+                out.end_time,
+                out.events_processed,
+            )
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn gpu_cap_respected() {
+        let cfg = small_cfg("{\"random\": {}}", 5, 10);
+        let out = run_sim(SimSetup::single(cfg, 2), |id| {
+            Box::new(SurrogateTrainer::new(id))
+        });
+        // Peak CHOPT usage never exceeded the 2-GPU cluster.
+        let peak = out
+            .cluster
+            .usage_chopt
+            .series
+            .iter()
+            .map(|&(_, v)| v)
+            .fold(0.0, f64::max);
+        assert!(peak <= 2.0, "peak {peak}");
+    }
+
+    #[test]
+    fn setup_json_roundtrip() {
+        let setup = SimSetup {
+            cluster_gpus: 12,
+            configs: vec![small_cfg("{\"random\": {}}", 10, 6)],
+            submit_times: vec![300.0],
+            agent_slots: 3,
+            trace: Some(ExternalLoadTrace::fig8(12, 50_000.0, 9)),
+            policy: StopAndGoPolicy::default(),
+            master_period: 90.0,
+            horizon: 1e7,
+            failures: vec![(1000.0, 1)],
+        };
+        let doc = setup.to_json();
+        let back = SimSetup::from_json(&doc).unwrap();
+        assert_eq!(back.cluster_gpus, 12);
+        assert_eq!(back.agent_slots, 3);
+        assert_eq!(back.submit_times, vec![300.0]);
+        assert_eq!(back.failures, vec![(1000.0, 1)]);
+        assert_eq!(back.master_period, 90.0);
+        assert!(back.trace.is_some());
+        assert_eq!(back.configs.len(), 1);
+        assert_eq!(back.configs[0].seed, 11);
+        // Round-tripped setups produce identical runs.
+        let a = run_sim(setup, |id| Box::new(SurrogateTrainer::new(id)));
+        let b = run_sim(back, |id| Box::new(SurrogateTrainer::new(id)));
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.end_time, b.end_time);
+    }
+}

@@ -1,0 +1,800 @@
+//! Re-entrant discrete-event engine: the stateful core behind [`run_sim`].
+//!
+//! The original driver was a closed-world function — it consumed a
+//! [`SimSetup`] and returned only after every session finished, so nothing
+//! could observe a run in flight.  `SimEngine` lifts all loop state (event
+//! queue, agent slots, done list, cluster, election, session queue, master
+//! log, failure schedule) into struct fields and exposes incremental
+//! drivers:
+//!
+//! * [`SimEngine::step`] — process exactly one event,
+//! * [`SimEngine::run_until`] — advance virtual time to a bound,
+//! * [`SimEngine::run_to_completion`] — the old batch behavior,
+//! * [`SimEngine::submit`] — accept a *new* CHOPT session while running
+//!   (the paper's platform story: users join a shared cluster any time),
+//! * [`SimEngine::snapshot_json`] / [`SimEngine::restore`] — persist a run
+//!   as JSON and rebuild it deterministically by replay.
+//!
+//! [`run_sim`] is now a thin wrapper: `new` → `run_to_completion` →
+//! `into_outcome`, so every existing bench/test drives this engine.
+//!
+//! Determinism contract: given the same [`SimSetup`], the same trainer
+//! factory, and the same `submit` calls (config + effective time), the
+//! engine pops the identical event sequence regardless of how the run is
+//! sliced into `step`/`run_until` calls.  Restore replays the recorded
+//! inputs up to the snapshot's `events_processed` count, which reproduces
+//! the exact engine state.
+//!
+//! [`run_sim`]: super::driver::run_sim
+
+use chopt_cluster::Cluster;
+use chopt_core::config::ChoptConfig;
+use chopt_core::events::{DirtySet, EventQueue, SimTime};
+use chopt_core::nsml::SessionId;
+use chopt_core::trainer::Trainer;
+use chopt_core::util::json::Value as Json;
+
+use super::agent::{Agent, ScheduleReq};
+use super::driver::{SimOutcome, SimSetup};
+use super::election::Election;
+use super::master::{master_tick, MasterTickLog};
+use super::queue::SessionQueue;
+
+/// Simulation events.
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    /// A training interval of (agent slot, session) completed.
+    Interval { slot: usize, sid: SessionId },
+    /// Periodic master-agent control tick.
+    MasterTick,
+    /// A recorded external input (index into `SimEngine::inputs`) —
+    /// an online submission or a control-plane command — takes effect.
+    Input { idx: usize },
+}
+
+/// A failure-injection record.  `consumed` guards against the stale-failure
+/// bug the batch driver had: without it, every master tick re-applied all
+/// past failures, instantly crashing any fresh agent later assigned to the
+/// same slot.
+#[derive(Debug, Clone, Copy)]
+struct Failure {
+    at: SimTime,
+    slot: usize,
+    consumed: bool,
+}
+
+/// An external input that arrived while the engine was live: an online
+/// session submission or a control-plane command (`/api/v1/commands`).
+#[derive(Debug, Clone)]
+enum InputKind {
+    /// Submit a new CHOPT session (vs. the setup's initial batch).
+    Submit(ChoptConfig),
+    /// Park a live NSML session until an explicit resume.
+    PauseSession(SessionId),
+    /// Revive a paused/stopped NSML session (priority-queued if no GPU
+    /// is free at apply time).
+    ResumeSession(SessionId),
+    /// Kill an NSML session outright.
+    StopSession(SessionId),
+}
+
+/// One recorded input, kept whole for snapshot/replay: `after_events`
+/// records how many events the engine had processed when the input was
+/// enqueued, so a restore re-issues it at the same point — reproducing
+/// the exact event-queue sequence numbers and therefore identical
+/// same-timestamp tie-breaking.  Commands are replay inputs for the same
+/// reason online submissions are: a pause changes every event after it,
+/// so a snapshot that forgot commands could never replay past one.
+#[derive(Debug, Clone)]
+struct RecordedInput {
+    kind: InputKind,
+    at: SimTime,
+    after_events: u64,
+}
+
+impl RecordedInput {
+    fn to_json(&self) -> Json {
+        let base = Json::obj()
+            .with("at", Json::Num(self.at))
+            .with("after_events", Json::Num(self.after_events as f64));
+        // Session ids serialize as strings (u64 through f64 corrupts
+        // past 2^53 — the same class the progress stream fixed).
+        let sid = |s: &SessionId| Json::Str(s.0.to_string());
+        match &self.kind {
+            InputKind::Submit(cfg) => base
+                .with("kind", Json::Str("submit".into()))
+                .with("config", cfg.to_json()),
+            InputKind::PauseSession(s) => base
+                .with("kind", Json::Str("pause_session".into()))
+                .with("session", sid(s)),
+            InputKind::ResumeSession(s) => base
+                .with("kind", Json::Str("resume_session".into()))
+                .with("session", sid(s)),
+            InputKind::StopSession(s) => base
+                .with("kind", Json::Str("stop_session".into()))
+                .with("session", sid(s)),
+        }
+    }
+}
+
+/// Parse the `"session"` field of a recorded input (the shared wire form
+/// — see [`SessionId::from_json`]).
+fn session_field(doc: &Json) -> anyhow::Result<SessionId> {
+    doc.get("session")
+        .and_then(SessionId::from_json)
+        .ok_or_else(|| anyhow::anyhow!("recorded input missing a valid 'session' id"))
+}
+
+/// What one [`SimEngine::step`] call did.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Step {
+    /// Processed one event at this virtual time.
+    Advanced(SimTime),
+    /// Popped an event past the horizon; the engine halted.
+    HorizonReached,
+    /// Nothing to do (completed, horizon already reached, or queue empty).
+    Idle,
+}
+
+/// The re-entrant simulation engine.  See the module docs.
+pub struct SimEngine<'t> {
+    cluster: Cluster,
+    queue: SessionQueue,
+    election: Election,
+    /// Agent slots: `None` = idle.  Completed agents move to `done`.
+    slots: Vec<Option<Agent>>,
+    done: Vec<Agent>,
+    master_log: Vec<MasterTickLog>,
+    evq: EventQueue<Ev>,
+    next_chopt_id: u64,
+    /// The original inputs, retained whole: runtime parameters (policy,
+    /// trace, periods) are read from here, and snapshots serialize it via
+    /// [`SimSetup::to_json`] so the two encodings cannot drift.
+    setup: SimSetup,
+    /// Consumable runtime view of `setup.failures`.
+    failures: Vec<Failure>,
+    make_trainer: Box<dyn FnMut(u64) -> Box<dyn Trainer> + 't>,
+    /// External inputs (submissions + commands) in arrival order — the
+    /// snapshot/replay input log.
+    inputs: Vec<RecordedInput>,
+    /// Scheduled-but-unprocessed *submission* inputs (commands pending
+    /// on a drained engine don't keep it alive; a submission does).
+    submits_pending: usize,
+    /// Scheduled-but-unprocessed `Ev::MasterTick` events; when the chain
+    /// dies (everything drained) a later submit re-arms it.
+    ticks_pending: usize,
+    /// All work drained (slots empty, queue empty, no pending submits).
+    completed: bool,
+    horizon_reached: bool,
+    /// Slots whose agents may have appended [`super::agent::AgentEvent`]s
+    /// since the last [`SimEngine::take_dirty_slots`] — lets the
+    /// platform's progress drain visit only touched agents instead of
+    /// scanning every slot after every processed event.
+    dirty: DirtySet,
+}
+
+impl<'t> SimEngine<'t> {
+    /// Build an engine from a setup: queue the initial submissions, fill
+    /// idle slots at t=0, and arm the master-tick chain — exactly the
+    /// bootstrap the batch driver performed.
+    pub fn new(
+        setup: SimSetup,
+        make_trainer: impl FnMut(u64) -> Box<dyn Trainer> + 't,
+    ) -> SimEngine<'t> {
+        let mut queue = SessionQueue::new();
+        for (i, c) in setup.configs.iter().enumerate() {
+            let at = setup.submit_times.get(i).copied().unwrap_or(0.0);
+            queue.submit(c.clone(), at);
+        }
+        let n_slots = setup.agent_slots.max(1);
+        let mut engine = SimEngine {
+            cluster: Cluster::new(setup.cluster_gpus),
+            queue,
+            election: Election::new(n_slots),
+            slots: (0..n_slots).map(|_| None).collect(),
+            done: Vec::new(),
+            master_log: Vec::new(),
+            evq: EventQueue::new(),
+            next_chopt_id: 0,
+            failures: setup
+                .failures
+                .iter()
+                .map(|&(at, slot)| Failure {
+                    at,
+                    slot,
+                    consumed: false,
+                })
+                .collect(),
+            setup,
+            make_trainer: Box::new(make_trainer),
+            inputs: Vec::new(),
+            submits_pending: 0,
+            ticks_pending: 0,
+            completed: false,
+            horizon_reached: false,
+            dirty: DirtySet::with_len(n_slots),
+        };
+        engine.assign_idle(0.0);
+        engine.evq.schedule_at(0.0, Ev::MasterTick);
+        engine.ticks_pending += 1;
+        engine
+    }
+
+    // -- observability -----------------------------------------------------
+
+    /// Current virtual time (time of the last processed event).
+    pub fn now(&self) -> SimTime {
+        self.evq.now()
+    }
+
+    /// Number of events popped so far.
+    pub fn events_processed(&self) -> u64 {
+        self.evq.processed()
+    }
+
+    /// All work drained and no online submissions pending.
+    pub fn is_done(&self) -> bool {
+        self.completed || self.horizon_reached || self.evq.is_empty()
+    }
+
+    pub fn horizon_reached(&self) -> bool {
+        self.horizon_reached
+    }
+
+    /// Queued (not yet assigned) CHOPT sessions.
+    pub fn queue_len(&self) -> usize {
+        self.queue.len() + self.submits_pending
+    }
+
+    /// Virtual time of the next pending event, if any.
+    pub fn next_event_time(&self) -> Option<SimTime> {
+        self.evq.peek_time()
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    pub fn election(&self) -> &Election {
+        &self.election
+    }
+
+    pub fn master_log(&self) -> &[MasterTickLog] {
+        &self.master_log
+    }
+
+    /// Agents whose CHOPT sessions completed (or crashed).
+    pub fn done_agents(&self) -> &[Agent] {
+        &self.done
+    }
+
+    /// Agents currently occupying a slot.
+    pub fn active_agents(&self) -> impl Iterator<Item = &Agent> {
+        self.slots.iter().flatten()
+    }
+
+    /// Agent currently occupying `slot`, if any.
+    pub fn agent_at(&self, slot: usize) -> Option<&Agent> {
+        self.slots.get(slot).and_then(|s| s.as_ref())
+    }
+
+    /// Drain the list of slots touched since the last call (progress-
+    /// drain bookkeeping; see the `dirty` field).  Agents that moved to
+    /// `done` are *not* listed — the platform tracks those through
+    /// [`SimEngine::done_agents`] growth instead.
+    pub fn take_dirty_slots(&mut self) -> Vec<usize> {
+        self.dirty.take()
+    }
+
+    fn mark_dirty(&mut self, slot: usize) {
+        self.dirty.mark(slot);
+    }
+
+    /// Every agent the engine ever created: completed first, then active.
+    pub fn all_agents(&self) -> impl Iterator<Item = &Agent> {
+        self.done.iter().chain(self.slots.iter().flatten())
+    }
+
+    /// Best (chopt id, session, measure) across all agents so far
+    /// (NaN-safe — see [`super::driver::best_of`]).
+    pub fn best(&self) -> Option<(u64, SessionId, f64)> {
+        super::driver::best_of(self.all_agents().map(|a| (a.id, a)))
+    }
+
+    // -- drivers -----------------------------------------------------------
+
+    /// Process exactly one event.
+    pub fn step(&mut self) -> Step {
+        if self.completed || self.horizon_reached {
+            return Step::Idle;
+        }
+        let Some((t, ev)) = self.evq.pop() else {
+            self.completed = true;
+            return Step::Idle;
+        };
+        if t > self.setup.horizon {
+            self.horizon_reached = true;
+            return Step::HorizonReached;
+        }
+        self.dispatch(t, ev);
+        if self.all_done() {
+            self.completed = true;
+        }
+        Step::Advanced(t)
+    }
+
+    /// Process every event with timestamp `<= t`.  Returns the number of
+    /// events processed.  Re-entrant: `run_until(a); run_until(b)` pops the
+    /// same sequence as a single uninterrupted run.
+    pub fn run_until(&mut self, t: SimTime) -> u64 {
+        let mut n = 0;
+        while !self.completed && !self.horizon_reached {
+            match self.evq.peek_time() {
+                Some(next) if next <= t => {
+                    if !matches!(self.step(), Step::Advanced(_)) {
+                        break;
+                    }
+                    n += 1;
+                }
+                _ => break,
+            }
+        }
+        n
+    }
+
+    /// Drive until all sessions finish (or the horizon passes) — the
+    /// original batch semantics.
+    pub fn run_to_completion(&mut self) -> u64 {
+        let mut n = 0;
+        while matches!(self.step(), Step::Advanced(_)) {
+            n += 1;
+        }
+        n
+    }
+
+    /// Submit a new CHOPT session while the engine is live.  `at` is
+    /// clamped to the current virtual time; returns the effective submit
+    /// time.  If the engine had already drained, the master-tick chain is
+    /// re-armed so the new session gets scheduled.  Returns `None` once
+    /// the horizon has been reached — the clock cannot advance past it,
+    /// so the submission would silently never run.
+    pub fn submit(&mut self, config: ChoptConfig, at: SimTime) -> Option<SimTime> {
+        if self.horizon_reached {
+            return None;
+        }
+        let at = self.enqueue_input(InputKind::Submit(config), at);
+        self.submits_pending += 1;
+        self.completed = false;
+        Some(at)
+    }
+
+    /// Record an input and schedule its effect event (clamped to now).
+    /// Recorded inputs are the replay log — see [`RecordedInput`].
+    fn enqueue_input(&mut self, kind: InputKind, at: SimTime) -> SimTime {
+        let at = at.max(self.evq.now());
+        let idx = self.inputs.len();
+        self.inputs.push(RecordedInput {
+            kind,
+            at,
+            after_events: self.evq.processed(),
+        });
+        self.evq.schedule_at(at, Ev::Input { idx });
+        at
+    }
+
+    /// Active slot currently holding `sid`, if any.
+    fn slot_of(&self, sid: SessionId) -> Option<usize> {
+        (0..self.slots.len()).find(|&i| {
+            self.slots[i]
+                .as_ref()
+                .map(|a| a.sessions.contains_key(&sid))
+                .unwrap_or(false)
+        })
+    }
+
+    /// Pool the session sits in right now (active agents only).
+    fn pool_of(&self, sid: SessionId) -> Option<super::pools::Pool> {
+        self.slot_of(sid)
+            .and_then(|i| self.slots[i].as_ref())
+            .and_then(|a| a.pools.locate(sid))
+    }
+
+    /// Control-plane pause: park a live session at the next event
+    /// boundary (it stays down until an explicit resume).  Returns the
+    /// effective time, or `None` if the session is not live right now or
+    /// the horizon has been reached.
+    pub fn pause_session(&mut self, sid: SessionId, at: SimTime) -> Option<SimTime> {
+        if self.horizon_reached || self.pool_of(sid) != Some(super::pools::Pool::Live) {
+            return None;
+        }
+        Some(self.enqueue_input(InputKind::PauseSession(sid), at))
+    }
+
+    /// Control-plane resume of a paused/stopped session.  Returns `None`
+    /// if the session is not in a stop pool right now.
+    pub fn resume_session(&mut self, sid: SessionId, at: SimTime) -> Option<SimTime> {
+        if self.horizon_reached || self.pool_of(sid) != Some(super::pools::Pool::Stop) {
+            return None;
+        }
+        Some(self.enqueue_input(InputKind::ResumeSession(sid), at))
+    }
+
+    /// Control-plane stop: kill a live or paused session outright.
+    pub fn stop_session(&mut self, sid: SessionId, at: SimTime) -> Option<SimTime> {
+        if self.horizon_reached
+            || !matches!(
+                self.pool_of(sid),
+                Some(super::pools::Pool::Live | super::pools::Pool::Stop)
+            )
+        {
+            return None;
+        }
+        Some(self.enqueue_input(InputKind::StopSession(sid), at))
+    }
+
+    // -- event dispatch ----------------------------------------------------
+
+    fn all_done(&self) -> bool {
+        self.slots.iter().all(|s| s.is_none())
+            && self.queue.is_empty()
+            && self.submits_pending == 0
+    }
+
+    fn schedule_reqs(&mut self, slot: usize, reqs: Vec<ScheduleReq>) {
+        for r in reqs {
+            self.evq.schedule_in(
+                r.seconds,
+                Ev::Interval {
+                    slot,
+                    sid: r.session,
+                },
+            );
+        }
+    }
+
+    /// Fill idle slots from the session queue (same policy as the batch
+    /// driver: FIFO, first idle slot wins).
+    fn assign_idle(&mut self, now: SimTime) {
+        for slot_idx in 0..self.slots.len() {
+            if self.slots[slot_idx].is_none() {
+                if let Some(sub) = self.queue.pull_ready(now) {
+                    self.next_chopt_id += 1;
+                    let id = self.next_chopt_id;
+                    let trainer = (self.make_trainer)(id);
+                    let mut agent = Agent::new(id, sub.config, trainer);
+                    let mut reqs: Vec<ScheduleReq> = Vec::new();
+                    agent.fill(&mut self.cluster, now, &mut reqs);
+                    self.slots[slot_idx] = Some(agent);
+                    self.mark_dirty(slot_idx);
+                    self.schedule_reqs(slot_idx, reqs);
+                }
+            }
+        }
+    }
+
+    fn dispatch(&mut self, t: SimTime, ev: Ev) {
+        match ev {
+            Ev::Interval { slot, sid } => self.on_interval(t, slot, sid),
+            Ev::MasterTick => self.on_master_tick(t),
+            Ev::Input { idx } => self.on_input(t, idx),
+        }
+    }
+
+    fn on_interval(&mut self, t: SimTime, slot: usize, sid: SessionId) {
+        if self.slots[slot].is_none() {
+            return; // stale event: the slot's agent crashed or finished
+        }
+        self.mark_dirty(slot);
+        let agent = self.slots[slot].as_mut().unwrap();
+        let mut reqs: Vec<ScheduleReq> = Vec::new();
+        agent.on_interval_done(sid, &mut self.cluster, t, &mut reqs);
+        let finished = agent.finished;
+        self.schedule_reqs(slot, reqs);
+        if finished {
+            self.done.push(self.slots[slot].take().unwrap());
+            self.assign_idle(t);
+        }
+    }
+
+    fn on_master_tick(&mut self, t: SimTime) {
+        self.ticks_pending = self.ticks_pending.saturating_sub(1);
+        // Failure injection: crash scheduled agents first so the election
+        // reflects reality before this tick's decisions.  Each failure
+        // fires exactly once (consumed), so an agent later assigned to the
+        // same slot is not crashed by a stale record.
+        for i in 0..self.failures.len() {
+            let Failure { at, slot, consumed } = self.failures[i];
+            if !consumed && at <= t {
+                self.failures[i].consumed = true;
+                if slot < self.slots.len() {
+                    if let Some(mut dead) = self.slots[slot].take() {
+                        dead.shutdown("agent_failure", &mut self.cluster, t);
+                        self.done.push(dead);
+                        self.election.fail(slot);
+                    }
+                }
+            }
+        }
+        // The elected leader runs Stop-and-Go (any agent could; the
+        // election just decides who — in-process it's the policy call
+        // below either way).
+        let external = self.setup.trace.as_ref().map(|tr| tr.demand(t)).unwrap_or(0);
+        // Record *which slot* produced each `bases` entry, so each agent
+        // reads its own target even if an earlier agent terminates during
+        // the loop below.  (The batch driver kept a running index that
+        // skipped terminated agents without consuming their target slot,
+        // shifting every later agent onto its neighbor's target.)
+        let active: Vec<usize> = (0..self.slots.len())
+            .filter(|&i| self.slots[i].as_ref().map(|a| !a.finished).unwrap_or(false))
+            .collect();
+        let bases: Vec<usize> = active
+            .iter()
+            .map(|&i| self.slots[i].as_ref().unwrap().cfg.max_gpus)
+            .collect();
+        let (targets, log) =
+            master_tick(&self.setup.policy, &mut self.cluster, external, &bases, t);
+        self.master_log.push(log);
+        for (ti, &slot_idx) in active.iter().enumerate() {
+            if self.slots[slot_idx].is_none() {
+                continue;
+            }
+            self.mark_dirty(slot_idx);
+            let agent = self.slots[slot_idx].as_mut().unwrap();
+            agent.check_termination(&mut self.cluster, t);
+            if agent.finished {
+                self.done.push(self.slots[slot_idx].take().unwrap());
+                continue;
+            }
+            let target = targets.get(ti).copied().unwrap_or(agent.cfg.max_gpus);
+            let mut reqs: Vec<ScheduleReq> = Vec::new();
+            agent.set_gpu_target(target, &mut self.cluster, t, &mut reqs);
+            self.schedule_reqs(slot_idx, reqs);
+        }
+        self.assign_idle(t);
+        let any_active = self.slots.iter().any(|s| s.is_some()) || !self.queue.is_empty();
+        if any_active {
+            self.evq.schedule_in(self.setup.master_period, Ev::MasterTick);
+            self.ticks_pending += 1;
+        }
+    }
+
+    /// Apply a recorded input at its event boundary.  Command inputs
+    /// re-validate against the state *now* (it may have shifted since the
+    /// enqueue-time check) and no-op when stale — both the original run
+    /// and a replay see the same state here, so both no-op identically.
+    fn on_input(&mut self, t: SimTime, idx: usize) {
+        let kind = self.inputs[idx].kind.clone();
+        match kind {
+            InputKind::Submit(config) => {
+                self.submits_pending = self.submits_pending.saturating_sub(1);
+                self.queue.submit(config, t);
+                // Re-arm the master-tick chain if it died (engine had
+                // drained); the tick at `t` assigns the new session and
+                // resumes the cadence.
+                if self.ticks_pending == 0 {
+                    self.evq.schedule_at(t, Ev::MasterTick);
+                    self.ticks_pending += 1;
+                }
+            }
+            InputKind::PauseSession(sid) => {
+                if let Some(slot) = self.slot_of(sid) {
+                    self.mark_dirty(slot);
+                    let agent = self.slots[slot].as_mut().unwrap();
+                    agent.pause_session_cmd(sid, &mut self.cluster, t);
+                }
+            }
+            InputKind::ResumeSession(sid) => {
+                if let Some(slot) = self.slot_of(sid) {
+                    self.mark_dirty(slot);
+                    let mut reqs: Vec<ScheduleReq> = Vec::new();
+                    let agent = self.slots[slot].as_mut().unwrap();
+                    agent.resume_session_cmd(sid, &mut self.cluster, t, &mut reqs);
+                    self.schedule_reqs(slot, reqs);
+                }
+            }
+            InputKind::StopSession(sid) => {
+                if let Some(slot) = self.slot_of(sid) {
+                    self.mark_dirty(slot);
+                    let agent = self.slots[slot].as_mut().unwrap();
+                    agent.stop_session_cmd(sid, &mut self.cluster, t);
+                }
+            }
+        }
+    }
+
+    // -- finalization ------------------------------------------------------
+
+    /// Consume the engine into the batch outcome: shut down any agents
+    /// still running (horizon semantics) and fail slot 0's election entry
+    /// if it is empty — identical to the batch driver's epilogue.
+    pub fn into_outcome(mut self) -> SimOutcome {
+        // Keep the elected-master abstraction honest: if slot 0's agent is
+        // gone, fail it over (exercised further in tests).
+        if self.slots.first().map(|s| s.is_none()).unwrap_or(false) {
+            self.election.fail(0);
+        }
+        let end_time = self.evq.now();
+        for slot in self.slots.iter_mut() {
+            if let Some(mut a) = slot.take() {
+                a.shutdown("horizon", &mut self.cluster, end_time);
+                self.done.push(a);
+            }
+        }
+        let events_processed = self.evq.processed();
+        SimOutcome {
+            agents: self.done,
+            cluster: self.cluster,
+            master_log: self.master_log,
+            election: self.election,
+            end_time,
+            events_processed,
+        }
+    }
+
+    // -- snapshot / restore ------------------------------------------------
+
+    /// Serialize the run's replay inputs plus a progress summary.  A
+    /// restore rebuilds the engine from the recorded inputs and replays the
+    /// same number of events, reproducing the exact state (given the same
+    /// trainer factory).  The input log covers online submissions *and*
+    /// control-plane commands (pause/resume/stop), so a run steered over
+    /// `/api/v1/commands` stays restorable.
+    pub fn snapshot_json(&self) -> Json {
+        let inputs = Json::Arr(self.inputs.iter().map(|i| i.to_json()).collect());
+        let progress = Json::obj()
+            .with("queue_len", Json::Num(self.queue_len() as f64))
+            .with("active_agents", Json::Num(self.active_agents().count() as f64))
+            .with("done_agents", Json::Num(self.done.len() as f64))
+            .with(
+                "best",
+                self.best().map(|(_, _, m)| Json::Num(m)).unwrap_or(Json::Null),
+            );
+        Json::obj()
+            .with("version", Json::Num(2.0))
+            .with("t", Json::Num(self.evq.now()))
+            .with("events_processed", Json::Num(self.evq.processed() as f64))
+            .with("setup", self.setup.to_json())
+            .with("inputs", inputs)
+            .with("progress", progress)
+    }
+
+    /// Replay helper: step until `target` events have been processed.
+    /// The past-horizon pop counts (it incremented `processed` in the
+    /// original run too), so horizon-terminated snapshots restore cleanly.
+    fn replay_to(&mut self, target: u64) -> anyhow::Result<()> {
+        while self.events_processed() < target {
+            match self.step() {
+                Step::Advanced(_) | Step::HorizonReached => {}
+                Step::Idle => anyhow::bail!(
+                    "replay stalled at {} / {} events — snapshot does not match inputs",
+                    self.events_processed(),
+                    target
+                ),
+            }
+        }
+        Ok(())
+    }
+
+    /// Rebuild an engine from [`SimEngine::snapshot_json`] output by
+    /// replaying the recorded inputs up to the snapshot's event count.
+    /// Each online submission is re-issued at the event count where the
+    /// original `submit` call happened, so the event queue assigns the
+    /// same sequence numbers and same-timestamp ties break identically.
+    /// `make_trainer` must be the factory the original run used (the
+    /// trainers' internal state is reproduced by replay, not serialized).
+    ///
+    /// The replay runs **quiet**: integrator series retention is
+    /// suspended until the target event count is reached (then reconciled
+    /// once), so a restore does O(1) work per replayed event.  The
+    /// trade-off is explicit: a restored engine's plotting series
+    /// (`cluster_doc`'s live Fig. 8 view) starts at the snapshot point —
+    /// the pre-snapshot utilization *curve* is not rebuilt, only its
+    /// integral.  GPU-hour accounting stays exact, no doc rendering or
+    /// event-log writes happen during replay (the platform layer attaches
+    /// its log and reconciles cursors after the engine is rebuilt), and
+    /// no simulation decision changes: the event sequence is
+    /// bit-identical (verified by the snapshot-determinism tests).
+    pub fn restore(
+        doc: &Json,
+        make_trainer: impl FnMut(u64) -> Box<dyn Trainer> + 't,
+    ) -> anyhow::Result<SimEngine<'t>> {
+        SimEngine::restore_impl(doc, make_trainer, None, true)
+    }
+
+    /// [`SimEngine::restore`] with series retention kept **on** during
+    /// the replay: the utilization change-point series is rebuilt
+    /// point-for-point, so every document a restored engine renders —
+    /// including `cluster_doc`'s series — is byte-identical to the live
+    /// run's.  This is the full-fidelity read-model restore
+    /// (`StoredRun` (chopt-control)); prefer [`SimEngine::restore`] when only
+    /// continuing the run matters, as the loud replay does O(series)
+    /// extra work.
+    pub fn restore_full(
+        doc: &Json,
+        make_trainer: impl FnMut(u64) -> Box<dyn Trainer> + 't,
+    ) -> anyhow::Result<SimEngine<'t>> {
+        SimEngine::restore_impl(doc, make_trainer, None, false)
+    }
+
+    /// Scrub restore: replay only the first `upto` events (capped at the
+    /// snapshot's recorded count), re-issuing exactly the inputs that had
+    /// been enqueued by that point.  This is the `?at_event=` primitive
+    /// (`ReplaySource` (chopt-control)); the replay runs quiet.
+    pub fn restore_at(
+        doc: &Json,
+        make_trainer: impl FnMut(u64) -> Box<dyn Trainer> + 't,
+        upto: u64,
+    ) -> anyhow::Result<SimEngine<'t>> {
+        SimEngine::restore_impl(doc, make_trainer, Some(upto), true)
+    }
+
+    fn restore_impl(
+        doc: &Json,
+        make_trainer: impl FnMut(u64) -> Box<dyn Trainer> + 't,
+        upto: Option<u64>,
+        quiet: bool,
+    ) -> anyhow::Result<SimEngine<'t>> {
+        let setup_doc = doc
+            .get("setup")
+            .ok_or_else(|| anyhow::anyhow!("snapshot missing 'setup'"))?;
+        let setup = SimSetup::from_json(setup_doc)?;
+        let recorded_target: u64 = doc
+            .get("events_processed")
+            .and_then(|v| v.as_i64())
+            .ok_or_else(|| anyhow::anyhow!("snapshot missing 'events_processed'"))?
+            as u64;
+        let target = upto.map(|u| u.min(recorded_target)).unwrap_or(recorded_target);
+        let mut engine = SimEngine::new(setup, make_trainer);
+        if quiet {
+            engine.cluster.set_series_retention(false);
+        }
+        // "inputs" is the v2 unified log; v1 snapshots recorded online
+        // submissions under "online" (kind implied).
+        let recorded = doc
+            .get("inputs")
+            .or_else(|| doc.get("online"))
+            .and_then(|v| v.as_arr())
+            .unwrap_or(&[]);
+        for o in recorded {
+            let at = o
+                .get("at")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("recorded input missing 'at'"))?;
+            let after_events = o
+                .get("after_events")
+                .and_then(|v| v.as_i64())
+                .unwrap_or(0) as u64;
+            if after_events > target {
+                // Scrub point predates this input's enqueue: the state at
+                // `target` events had not seen it (nor any later input —
+                // the log is in arrival order).
+                break;
+            }
+            engine.replay_to(after_events)?;
+            let kind = o.get("kind").and_then(|v| v.as_str()).unwrap_or("submit");
+            let reissued = match kind {
+                "submit" => {
+                    let cfg = ChoptConfig::from_json(
+                        o.get("config")
+                            .ok_or_else(|| anyhow::anyhow!("submit input missing 'config'"))?,
+                    )?;
+                    engine.submit(cfg, at)
+                }
+                "pause_session" => engine.pause_session(session_field(o)?, at),
+                "resume_session" => engine.resume_session(session_field(o)?, at),
+                "stop_session" => engine.stop_session(session_field(o)?, at),
+                other => anyhow::bail!("unknown recorded input kind '{other}'"),
+            };
+            if reissued.is_none() {
+                anyhow::bail!(
+                    "replay could not re-issue a recorded '{kind}' input at t={at} — snapshot does not match inputs"
+                );
+            }
+        }
+        engine.replay_to(target)?;
+        if quiet {
+            engine.cluster.set_series_retention(true);
+        }
+        Ok(engine)
+    }
+}

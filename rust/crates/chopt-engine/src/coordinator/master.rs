@@ -1,0 +1,267 @@
+//! Master agent: session assignment + the Stop-and-Go controller
+//! (paper §3.2.2, §3.3).
+//!
+//! "Whenever a resource cluster is under-utilized, the master agent
+//! assigns more resources (GPUs) to CHOPT sessions so that they can
+//! quickly finish hyperparameter optimization.  On the other hand, if the
+//! cluster is over-utilized, the master agent takes GPUs from CHOPT
+//! sessions so that other non-CHOPT users can train their models."
+
+use chopt_cluster::{Cluster, Owner};
+use chopt_core::events::SimTime;
+
+/// Stop-and-Go tuning knobs.
+#[derive(Debug, Clone)]
+pub struct StopAndGoPolicy {
+    /// Below this utilization the cluster counts as under-utilized and
+    /// idle GPUs are handed to CHOPT sessions.
+    pub low_util: f64,
+    /// Never let a CHOPT session exceed `max_bonus_factor ×` its
+    /// configured limit ("it exceeds maximum number of GPU for CHOPT but
+    /// not that much" — Fig. 8 narration).
+    pub max_bonus_factor: f64,
+    /// Floor per active CHOPT session when shrinking (keep progress).
+    pub min_gpus: usize,
+}
+
+impl Default for StopAndGoPolicy {
+    fn default() -> Self {
+        StopAndGoPolicy {
+            low_util: 0.90,
+            max_bonus_factor: 2.0,
+            min_gpus: 1,
+        }
+    }
+}
+
+impl StopAndGoPolicy {
+    /// Serialize for engine snapshots.
+    pub fn to_json(&self) -> chopt_core::util::json::Value {
+        use chopt_core::util::json::Value as Json;
+        Json::obj()
+            .with("low_util", Json::Num(self.low_util))
+            .with("max_bonus_factor", Json::Num(self.max_bonus_factor))
+            .with("min_gpus", Json::Num(self.min_gpus as f64))
+    }
+
+    /// Inverse of [`StopAndGoPolicy::to_json`]; missing keys fall back to
+    /// the defaults.
+    pub fn from_json(doc: &chopt_core::util::json::Value) -> anyhow::Result<StopAndGoPolicy> {
+        let d = StopAndGoPolicy::default();
+        Ok(StopAndGoPolicy {
+            low_util: doc.get("low_util").and_then(|v| v.as_f64()).unwrap_or(d.low_util),
+            max_bonus_factor: doc
+                .get("max_bonus_factor")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(d.max_bonus_factor),
+            min_gpus: doc
+                .get("min_gpus")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(d.min_gpus),
+        })
+    }
+
+    /// Compute per-agent GPU targets (all agents weighted equally).
+    ///
+    /// `external_demand` is what non-CHOPT users want *right now* (from
+    /// the trace / arrival stream); `bases` are the per-agent configured
+    /// GPU limits (`max_gpus`) for agents that are still active.
+    pub fn targets(
+        &self,
+        total_gpus: usize,
+        external_demand: usize,
+        bases: &[usize],
+    ) -> Vec<usize> {
+        self.targets_weighted(total_gpus, external_demand, bases, &[])
+    }
+
+    /// Weighted fair share: like [`StopAndGoPolicy::targets`], but each
+    /// agent's share of *redistributed* capacity scales with its weight
+    /// (`weights[i]`; missing or non-positive entries count as 1.0, so an
+    /// empty slice reproduces the unweighted behavior exactly).
+    ///
+    /// * Under-utilized: the idle surplus is split ∝ weight (floor per
+    ///   agent — fractional remainders are left idle, matching the
+    ///   unweighted `surplus / n` division), still capped at
+    ///   `max_bonus_factor ×` each agent's base.
+    /// * Over-utilized: the remaining CHOPT capacity is split
+    ///   ∝ base × weight with the `min_gpus` floor.
+    pub fn targets_weighted(
+        &self,
+        total_gpus: usize,
+        external_demand: usize,
+        bases: &[usize],
+        weights: &[f64],
+    ) -> Vec<usize> {
+        if bases.is_empty() {
+            return Vec::new();
+        }
+        let w = |i: usize| {
+            weights
+                .get(i)
+                .copied()
+                .filter(|w| w.is_finite() && *w > 0.0)
+                .unwrap_or(1.0)
+        };
+        // Capacity left for CHOPT after honoring external users.
+        let chopt_capacity = total_gpus.saturating_sub(external_demand);
+        let base_sum: usize = bases.iter().sum();
+
+        if chopt_capacity >= base_sum {
+            // Under-utilized: hand out the surplus ∝ weight, capped.
+            let surplus = chopt_capacity - base_sum;
+            let util = (external_demand + base_sum) as f64 / total_gpus.max(1) as f64;
+            if util < self.low_util && surplus > 0 {
+                let wsum: f64 = (0..bases.len()).map(w).sum();
+                bases
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &b)| {
+                        let bonus = (surplus as f64 * w(i) / wsum).floor() as usize;
+                        let cap = ((b as f64) * self.max_bonus_factor).ceil() as usize;
+                        (b + bonus).min(cap.max(b))
+                    })
+                    .collect()
+            } else {
+                bases.to_vec()
+            }
+        } else {
+            // Over-utilized: shrink ∝ base × weight with a floor.
+            let wbase_sum: f64 = bases
+                .iter()
+                .enumerate()
+                .map(|(i, &b)| b as f64 * w(i))
+                .sum();
+            bases
+                .iter()
+                .enumerate()
+                .map(|(i, &b)| {
+                    let share = (b as f64 * w(i) / wbase_sum) * chopt_capacity as f64;
+                    (share.floor() as usize).max(self.min_gpus.min(b))
+                })
+                .collect()
+        }
+    }
+}
+
+/// Utilization/allocation snapshot the master logs each tick (Fig. 8 rows).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MasterTickLog {
+    pub t: SimTime,
+    pub external_demand: usize,
+    pub external_held: usize,
+    pub chopt_held: usize,
+    pub chopt_target: usize,
+    pub utilization: f64,
+}
+
+/// The master-agent control loop body (driver calls it every tick).
+/// Returns the per-agent targets plus a log row.
+pub fn master_tick(
+    policy: &StopAndGoPolicy,
+    cluster: &mut Cluster,
+    external_demand: usize,
+    agent_bases: &[usize],
+    now: SimTime,
+) -> (Vec<usize>, MasterTickLog) {
+    // External users grab/release first (they are not ours to schedule —
+    // we only observe their demand and get out of the way).
+    cluster.set_external_demand(external_demand, now);
+    let targets = policy.targets(cluster.total(), external_demand, agent_bases);
+    let log = MasterTickLog {
+        t: now,
+        external_demand,
+        external_held: cluster.held_by(Owner::External),
+        chopt_held: cluster.held_by_chopt(),
+        chopt_target: targets.iter().sum(),
+        utilization: cluster.utilization(),
+    };
+    (targets, log)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn under_utilized_grants_bonus() {
+        let p = StopAndGoPolicy::default();
+        // 40 GPUs, external wants 8, two agents of base 5 each: 22 idle.
+        let t = p.targets(40, 8, &[5, 5]);
+        assert_eq!(t.len(), 2);
+        assert!(t[0] > 5 && t[1] > 5, "targets should grow: {t:?}");
+        assert!(t[0] <= 10, "bonus capped at 2x: {t:?}");
+    }
+
+    #[test]
+    fn over_utilized_shrinks_with_floor() {
+        let p = StopAndGoPolicy::default();
+        // 16 GPUs, external wants 14 -> only 2 left for 2 agents of base 4.
+        let t = p.targets(16, 14, &[4, 4]);
+        assert_eq!(t, vec![1, 1]);
+        // Full external saturation still leaves the floor.
+        let t2 = p.targets(16, 16, &[4, 4]);
+        assert_eq!(t2, vec![1, 1]);
+    }
+
+    #[test]
+    fn exact_fit_keeps_bases() {
+        let p = StopAndGoPolicy::default();
+        let t = p.targets(20, 10, &[5, 5]);
+        assert_eq!(t, vec![5, 5]);
+    }
+
+    #[test]
+    fn high_util_no_bonus() {
+        let p = StopAndGoPolicy::default();
+        // util = (30 + 8)/40 = 0.95 > low_util -> no bonus despite surplus.
+        let t = p.targets(40, 30, &[4, 4]);
+        assert_eq!(t, vec![4, 4]);
+    }
+
+    #[test]
+    fn empty_agents() {
+        let p = StopAndGoPolicy::default();
+        assert!(p.targets(8, 4, &[]).is_empty());
+    }
+
+    #[test]
+    fn weighted_targets_split_surplus_by_weight() {
+        let p = StopAndGoPolicy {
+            max_bonus_factor: 100.0, // don't cap — isolate the split
+            ..StopAndGoPolicy::default()
+        };
+        // 30 GPUs, no external, bases 1+1: surplus 28 split 2:1.
+        let t = p.targets_weighted(30, 0, &[1, 1], &[2.0, 1.0]);
+        assert_eq!(t, vec![1 + 18, 1 + 9]);
+        // Equal weights reproduce the unweighted division exactly.
+        assert_eq!(
+            p.targets_weighted(30, 0, &[1, 1], &[1.0, 1.0]),
+            p.targets(30, 0, &[1, 1])
+        );
+        // Empty / non-positive weights fall back to 1.0.
+        assert_eq!(
+            p.targets_weighted(30, 0, &[1, 1], &[]),
+            p.targets(30, 0, &[1, 1])
+        );
+        assert_eq!(
+            p.targets_weighted(30, 0, &[1, 1], &[0.0, -3.0]),
+            p.targets(30, 0, &[1, 1])
+        );
+        // Over-utilized: capacity splits ∝ base × weight.
+        let d = StopAndGoPolicy::default();
+        let shrink = d.targets_weighted(16, 10, &[4, 4], &[2.0, 1.0]);
+        assert_eq!(shrink, vec![4, 2]); // 6 left: 6·(8/12)=4, 6·(4/12)=2
+    }
+
+    #[test]
+    fn master_tick_logs_consistent_row() {
+        let p = StopAndGoPolicy::default();
+        let mut c = Cluster::new(16);
+        let (targets, log) = master_tick(&p, &mut c, 6, &[4], 10.0);
+        assert_eq!(log.external_held, 6);
+        assert_eq!(log.external_demand, 6);
+        assert_eq!(log.chopt_target, targets.iter().sum::<usize>());
+        assert!(log.utilization > 0.0);
+    }
+}

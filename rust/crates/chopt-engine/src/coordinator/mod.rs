@@ -1,0 +1,41 @@
+//! The CHOPT coordinator (paper §3.2–3.3) — the system contribution.
+//!
+//! * [`queue::SessionQueue`] — submitted CHOPT sessions wait for an agent.
+//! * [`agent::Agent`] — runs one CHOPT session: tuner + trainer + the
+//!   live/stop/dead pools, with `stop_ratio` routing on exit.
+//! * [`election::Election`] — zookeeper-style master-agent failover.
+//! * [`master`] — the Stop-and-Go policy: shift GPUs between CHOPT and
+//!   non-CHOPT tenants by cluster utilization.
+//! * [`engine`] — the re-entrant discrete-event state machine: `step` /
+//!   `run_until` / online `submit` / snapshot-and-restore.
+//! * [`scheduler`] — the multi-tenant study scheduler: N studies (each
+//!   its own config/tuner/RNG/pools) on one shared cluster with
+//!   fair-share quotas, cross-study Stop-and-Go (pause-preemption of
+//!   borrowers), and deterministic parallel stepping between
+//!   reconciliations.
+//! * [`driver`] — the batch wrapper ([`run_sim`]) used by every
+//!   simulator-backed experiment.
+//!
+//! (The live serving layer — `Platform` / `MultiPlatform`, structured
+//! progress events, periodic snapshots, view documents — sits above in
+//! `chopt-control`.)
+
+pub mod agent;
+pub mod driver;
+pub mod election;
+pub mod engine;
+pub mod master;
+pub mod pools;
+pub mod queue;
+pub mod scheduler;
+
+pub use agent::{Agent, AgentEvent, ScheduleReq};
+pub use driver::{run_sim, SimOutcome, SimSetup};
+pub use election::Election;
+pub use engine::{SimEngine, Step};
+pub use master::{master_tick, MasterTickLog, StopAndGoPolicy};
+pub use pools::{Pool, Pools};
+pub use queue::{SessionQueue, Submission};
+pub use scheduler::{
+    MultiOutcome, StudyAgent, StudyManifest, StudyResult, StudyScheduler, StudySpec, StudyState,
+};

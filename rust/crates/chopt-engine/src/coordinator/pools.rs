@@ -1,0 +1,349 @@
+//! The three session pools of a CHOPT session (paper §3.2.1).
+//!
+//! * **live** — running NSML sessions, bounded by the GPU target.
+//! * **stop** — exited sessions kept resumable (checkpoint retained);
+//!   Stop-and-Go revives from here when GPUs free up.
+//! * **dead** — exited sessions whose storage is reclaimed ("automl
+//!   systems commonly create models a lot and it often takes up too much
+//!   system storage space").
+//!
+//! Exited sessions are split stop-vs-dead by `stop_ratio` (random draw),
+//! exactly as §3.2.1 describes.
+
+use std::collections::HashSet;
+
+use chopt_core::nsml::SessionId;
+use chopt_core::util::rng::Rng;
+
+/// Which pool a session sits in (the `NsmlSession.status` is the source of
+/// truth for lifecycle; the pools index it for O(1) scheduling decisions).
+#[derive(Debug, Clone, Default)]
+pub struct Pools {
+    live: Vec<SessionId>,
+    stop: Vec<SessionId>,
+    dead: Vec<SessionId>,
+    /// Subset of `stop` that was stopped by Stop-and-Go preemption (these
+    /// get revival priority over tuner-early-stopped sessions).
+    preempted: HashSet<SessionId>,
+    /// Subset of `stop` parked by the tuner at a rung barrier
+    /// (Hyperband `Pause`).  Parked sessions wait for an explicit
+    /// promotion ([`Pools::revive`]); the generic Stop-and-Go revival
+    /// ([`Pools::pick_revival`]) must skip them — reviving one outside
+    /// tuner control made it train past its rung and contaminate the
+    /// next rung's barrier.
+    parked: HashSet<SessionId>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pool {
+    Live,
+    Stop,
+    Dead,
+}
+
+impl Pools {
+    pub fn new() -> Pools {
+        Pools::default()
+    }
+
+    pub fn live(&self) -> &[SessionId] {
+        &self.live
+    }
+
+    pub fn stopped(&self) -> &[SessionId] {
+        &self.stop
+    }
+
+    pub fn dead(&self) -> &[SessionId] {
+        &self.dead
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn stop_count(&self) -> usize {
+        self.stop.len()
+    }
+
+    pub fn dead_count(&self) -> usize {
+        self.dead.len()
+    }
+
+    pub fn locate(&self, id: SessionId) -> Option<Pool> {
+        if self.live.contains(&id) {
+            Some(Pool::Live)
+        } else if self.stop.contains(&id) {
+            Some(Pool::Stop)
+        } else if self.dead.contains(&id) {
+            Some(Pool::Dead)
+        } else {
+            None
+        }
+    }
+
+    /// Add a freshly created (running) session to the live pool.
+    pub fn add_live(&mut self, id: SessionId) {
+        debug_assert!(self.locate(id).is_none(), "{id} already pooled");
+        self.live.push(id);
+    }
+
+    /// Move live -> stop (early stop or Stop-and-Go preemption).
+    pub fn stop_session(&mut self, id: SessionId, preempted: bool) -> bool {
+        if let Some(i) = self.live.iter().position(|&s| s == id) {
+            self.live.remove(i);
+            self.stop.push(id);
+            if preempted {
+                self.preempted.insert(id);
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Move live -> stop as a tuner rung barrier: parked until an
+    /// explicit [`Pools::revive`] promotion; invisible to
+    /// [`Pools::pick_revival`].
+    pub fn park_session(&mut self, id: SessionId) -> bool {
+        if self.stop_session(id, false) {
+            self.parked.insert(id);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn is_parked(&self, id: SessionId) -> bool {
+        self.parked.contains(&id)
+    }
+
+    pub fn is_preempted(&self, id: SessionId) -> bool {
+        self.preempted.contains(&id)
+    }
+
+    /// Move live -> dead.
+    pub fn kill_live(&mut self, id: SessionId) -> bool {
+        if let Some(i) = self.live.iter().position(|&s| s == id) {
+            self.live.remove(i);
+            self.dead.push(id);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Move stop -> dead (storage GC or tuner eviction).
+    pub fn kill_stopped(&mut self, id: SessionId) -> bool {
+        if let Some(i) = self.stop.iter().position(|&s| s == id) {
+            self.stop.remove(i);
+            self.preempted.remove(&id);
+            self.parked.remove(&id);
+            self.dead.push(id);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Remove from live pool entirely (session finished training).
+    pub fn finish_live(&mut self, id: SessionId) -> bool {
+        if let Some(i) = self.live.iter().position(|&s| s == id) {
+            self.live.remove(i);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Exit a live session, routing stop-vs-dead by `stop_ratio`.
+    /// Returns the pool chosen.
+    pub fn exit_live(&mut self, id: SessionId, stop_ratio: f64, rng: &mut Rng, preempted: bool) -> Pool {
+        if rng.bool(stop_ratio) {
+            self.stop_session(id, preempted);
+            Pool::Stop
+        } else {
+            self.kill_live(id);
+            Pool::Dead
+        }
+    }
+
+    /// Pick a session to revive: preempted sessions first (FIFO), then the
+    /// general stop pool (random — the paper's future work notes smarter
+    /// policies; random is what CHOPT ships).  Parked sessions (tuner
+    /// rung barriers) are never picked — they resume only via their
+    /// promotion ([`Pools::revive`]).
+    pub fn pick_revival(&mut self, rng: &mut Rng) -> Option<SessionId> {
+        let id = if let Some(&id) = self.stop.iter().find(|id| self.preempted.contains(id)) {
+            id
+        } else {
+            let free: Vec<SessionId> = self
+                .stop
+                .iter()
+                .copied()
+                .filter(|id| !self.parked.contains(id))
+                .collect();
+            if free.is_empty() {
+                return None;
+            }
+            free[rng.index(free.len())]
+        };
+        let i = self.stop.iter().position(|&s| s == id).unwrap();
+        self.stop.remove(i);
+        self.preempted.remove(&id);
+        self.live.push(id);
+        Some(id)
+    }
+
+    /// Flag a stopped session for priority revival: clears a `parked`
+    /// mark (rung barrier) and sets `preempted`, so the next generic
+    /// [`Pools::pick_revival`] takes it first.  Used by the operator
+    /// resume command when no GPU is free at apply time — the session
+    /// revives as soon as capacity returns instead of staying invisible.
+    pub fn prioritize_revival(&mut self, id: SessionId) -> bool {
+        if self.stop.contains(&id) {
+            self.parked.remove(&id);
+            self.preempted.insert(id);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Revive a *specific* stopped session (Hyperband promotion).
+    pub fn revive(&mut self, id: SessionId) -> bool {
+        if let Some(i) = self.stop.iter().position(|&s| s == id) {
+            self.stop.remove(i);
+            self.preempted.remove(&id);
+            self.parked.remove(&id);
+            self.live.push(id);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Integrity check: a session appears in at most one pool.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = HashSet::new();
+        for (name, pool) in [("live", &self.live), ("stop", &self.stop), ("dead", &self.dead)] {
+            for id in pool {
+                if !seen.insert(*id) {
+                    return Err(format!("{id} appears in multiple pools (last: {name})"));
+                }
+            }
+        }
+        for id in &self.preempted {
+            if !self.stop.contains(id) {
+                return Err(format!("{id} marked preempted but not in stop pool"));
+            }
+        }
+        for id in &self.parked {
+            if !self.stop.contains(id) {
+                return Err(format!("{id} marked parked but not in stop pool"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_moves() {
+        let mut p = Pools::new();
+        let a = SessionId(1);
+        let b = SessionId(2);
+        p.add_live(a);
+        p.add_live(b);
+        assert_eq!(p.live_count(), 2);
+        assert!(p.stop_session(a, false));
+        assert_eq!(p.locate(a), Some(Pool::Stop));
+        assert!(p.kill_stopped(a));
+        assert_eq!(p.locate(a), Some(Pool::Dead));
+        assert!(p.kill_live(b));
+        assert_eq!(p.dead_count(), 2);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn exit_live_respects_stop_ratio() {
+        let mut rng = Rng::new(1);
+        let mut stopped = 0;
+        let n = 2000;
+        for i in 0..n {
+            let mut p = Pools::new();
+            let id = SessionId(i);
+            p.add_live(id);
+            if p.exit_live(id, 0.7, &mut rng, false) == Pool::Stop {
+                stopped += 1;
+            }
+            p.check_invariants().unwrap();
+        }
+        let frac = stopped as f64 / n as f64;
+        assert!((frac - 0.7).abs() < 0.05, "stop fraction {frac}");
+    }
+
+    #[test]
+    fn preempted_sessions_revive_first() {
+        let mut p = Pools::new();
+        let mut rng = Rng::new(2);
+        for i in 0..4 {
+            p.add_live(SessionId(i));
+        }
+        p.stop_session(SessionId(0), false);
+        p.stop_session(SessionId(1), true); // preempted by S&G
+        p.stop_session(SessionId(2), false);
+        let first = p.pick_revival(&mut rng).unwrap();
+        assert_eq!(first, SessionId(1));
+        assert_eq!(p.locate(SessionId(1)), Some(Pool::Live));
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn revive_specific() {
+        let mut p = Pools::new();
+        p.add_live(SessionId(5));
+        p.stop_session(SessionId(5), false);
+        assert!(p.revive(SessionId(5)));
+        assert_eq!(p.locate(SessionId(5)), Some(Pool::Live));
+        assert!(!p.revive(SessionId(5))); // already live
+    }
+
+    #[test]
+    fn empty_stop_pool_gives_nothing() {
+        let mut p = Pools::new();
+        let mut rng = Rng::new(3);
+        assert!(p.pick_revival(&mut rng).is_none());
+    }
+
+    #[test]
+    fn parked_sessions_skip_generic_revival() {
+        let mut p = Pools::new();
+        let mut rng = Rng::new(4);
+        for i in 0..3 {
+            p.add_live(SessionId(i));
+        }
+        p.park_session(SessionId(0)); // tuner rung barrier
+        p.park_session(SessionId(1));
+        p.stop_session(SessionId(2), false); // ordinary early stop
+        assert!(p.is_parked(SessionId(0)));
+        // Generic revival must only ever see the non-parked session.
+        for _ in 0..20 {
+            let got = p.pick_revival(&mut rng).unwrap();
+            assert_eq!(got, SessionId(2));
+            p.stop_session(SessionId(2), false);
+        }
+        p.check_invariants().unwrap();
+        // With only parked sessions left, generic revival finds nothing…
+        assert!(p.kill_stopped(SessionId(2)));
+        assert!(p.pick_revival(&mut rng).is_none());
+        // …but an explicit promotion still works and clears the flag.
+        assert!(p.revive(SessionId(0)));
+        assert!(!p.is_parked(SessionId(0)));
+        assert_eq!(p.locate(SessionId(0)), Some(Pool::Live));
+        p.check_invariants().unwrap();
+    }
+}

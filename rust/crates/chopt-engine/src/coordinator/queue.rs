@@ -1,0 +1,108 @@
+//! CHOPT session queue (paper §3.2, Fig. 1): submitted sessions wait here
+//! until an agent is available to run them.
+
+use std::collections::VecDeque;
+
+use chopt_core::config::ChoptConfig;
+use chopt_core::events::SimTime;
+
+/// A queued CHOPT session submission.
+#[derive(Debug, Clone)]
+pub struct Submission {
+    /// Monotonic submission id.
+    pub id: u64,
+    pub config: ChoptConfig,
+    pub submitted_at: SimTime,
+}
+
+/// FIFO queue of pending CHOPT sessions.
+#[derive(Debug, Default)]
+pub struct SessionQueue {
+    items: VecDeque<Submission>,
+    next_id: u64,
+}
+
+impl SessionQueue {
+    pub fn new() -> SessionQueue {
+        SessionQueue::default()
+    }
+
+    /// Submit a session; returns its id.
+    pub fn submit(&mut self, config: ChoptConfig, now: SimTime) -> u64 {
+        self.next_id += 1;
+        let id = self.next_id;
+        self.items.push_back(Submission {
+            id,
+            config,
+            submitted_at: now,
+        });
+        id
+    }
+
+    /// An agent became available: hand it the oldest submission.
+    pub fn pull(&mut self) -> Option<Submission> {
+        self.items.pop_front()
+    }
+
+    /// Pull the oldest submission whose submit time has arrived (delayed
+    /// submissions model users starting CHOPT sessions mid-trace, as in
+    /// Fig. 8's zone B).
+    pub fn pull_ready(&mut self, now: SimTime) -> Option<Submission> {
+        if self
+            .items
+            .front()
+            .map(|s| s.submitted_at <= now)
+            .unwrap_or(false)
+        {
+            self.items.pop_front()
+        } else {
+            None
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Cancel a queued (not yet running) submission.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        let before = self.items.len();
+        self.items.retain(|s| s.id != id);
+        self.items.len() != before
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use chopt_core::config::ChoptConfig;
+
+    fn cfg() -> ChoptConfig {
+        ChoptConfig::from_json_str(chopt_core::config::LISTING1_EXAMPLE).unwrap()
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut q = SessionQueue::new();
+        let a = q.submit(cfg(), 0.0);
+        let b = q.submit(cfg(), 1.0);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pull().unwrap().id, a);
+        assert_eq!(q.pull().unwrap().id, b);
+        assert!(q.pull().is_none());
+    }
+
+    #[test]
+    fn cancel_removes() {
+        let mut q = SessionQueue::new();
+        let a = q.submit(cfg(), 0.0);
+        let b = q.submit(cfg(), 0.0);
+        assert!(q.cancel(a));
+        assert!(!q.cancel(a));
+        assert_eq!(q.pull().unwrap().id, b);
+    }
+}

@@ -1,0 +1,1951 @@
+//! Multi-tenant study scheduler: N independent studies on one shared
+//! cluster (the paper's §3.3 sharing story, across *tenants*).
+//!
+//! PR 1 made the engine re-entrant but still single-study: one
+//! [`SimEngine`] owned one cluster and one batch of configs.  The
+//! `StudyScheduler` multiplexes many **studies** — each with its own
+//! [`ChoptConfig`], tuner, RNG stream, trainer, and session pools — onto
+//! one shared [`Cluster`], with:
+//!
+//! * **fair-share quotas** — every study is guaranteed `quota` GPUs (the
+//!   manifest validates Σ quota ≤ cluster size).  Enforced through
+//!   per-tenant caps in the allocator, checked *before* the tuner is
+//!   asked for work, so a study's decision stream on the shared cluster
+//!   is bit-identical to running alone on a dedicated cluster of its
+//!   quota size (the multi-tenant determinism contract, verified in
+//!   `rust/tests/multi_study.rs`);
+//! * **cross-study Stop-and-Go** — with `borrow: true`, a study whose
+//!   peers are idle may exceed its quota (opportunistic reclaim,
+//!   bounded by the policy's bonus cap); when an under-quota study
+//!   returns, the borrower is preempted back down by *pausing* sessions
+//!   into its stop pool ([`Agent::preempt_pause_to_target`]) — work is
+//!   suspended, never destroyed;
+//! * **deterministic interleave** — one shared event queue with
+//!   study-tagged events and FIFO tie-breaking; per-study event
+//!   subsequences are independent of how other studies interleave;
+//! * **parallel stepping** — master ticks and recorded inputs are the
+//!   only events that couple studies, so between them runs of interval
+//!   events can be stepped per study on worker threads
+//!   ([`StudyScheduler::set_step_threads`]), each against a shadow
+//!   cluster, and merged back in exact serial `(time, seq)` order —
+//!   outputs are bit-identical to a serial run (see
+//!   `StudyScheduler::parallel_window`);
+//! * **snapshot / restore by replay** — like the engine, a snapshot
+//!   records the manifest plus every external input (online study
+//!   submissions *and* `/api/v1` control commands) and the event count;
+//!   [`StudyScheduler::restore`] replays to the exact state.
+//!
+//! Identity: each study's agent keeps *local* id 1 (RNG/trainer/session
+//! ids match a solo run) while its cluster identity is the
+//! study-qualified [`Agent::tenant`], so tenants never collide in the
+//! allocator and merged platform documents label rows by study name.
+//!
+//! [`SimEngine`]: super::engine::SimEngine
+
+use std::collections::{BinaryHeap, VecDeque};
+
+use chopt_cluster::{Cluster, ClusterOp, ExternalLoadTrace, Owner};
+use chopt_core::config::ChoptConfig;
+use chopt_core::events::{DirtySet, EventQueue, SimTime};
+use chopt_core::nsml::SessionId;
+use chopt_core::trainer::Trainer;
+use chopt_core::util::json::Value as Json;
+
+use super::agent::{Agent, ScheduleReq};
+use super::master::StopAndGoPolicy;
+
+/// The agent type the scheduler manages.  Multi-study agents can be
+/// stepped on worker threads between reconciliations (see
+/// [`StudyScheduler::set_step_threads`]), so their trainers must be
+/// `Send` — the surrogate family is; the PJRT-backed trainer is
+/// deliberately not, and stays on the single-study engine.
+pub type StudyAgent = Agent<dyn Trainer + Send>;
+
+/// One study in a multi-tenant manifest.
+#[derive(Debug, Clone)]
+pub struct StudySpec {
+    pub name: String,
+    pub config: ChoptConfig,
+    /// Guaranteed GPU share.  Resolved at parse time (unspecified studies
+    /// split the unreserved remainder evenly).
+    pub quota: usize,
+    /// Fair-share weight (> 0, default 1.0): the study's share of
+    /// *redistributed* capacity — borrow bonus when peers are idle,
+    /// shrink share under external load — scales with it.  The `quota`
+    /// guarantee itself is not weighted.
+    pub priority: f64,
+    /// Virtual time the study joins the cluster.
+    pub submit_at: SimTime,
+    /// Failure injection: virtual times at which the study's agent
+    /// crashes (GPUs released, CHOPT session aborted with
+    /// `agent_failure`) — the multi-tenant analog of
+    /// `SimSetup::failures`.  Each entry fires at most once, at the
+    /// first master tick past its time, and only if the study's agent is
+    /// active then (a failure scheduled before activation is consumed
+    /// without effect — the stale-failure class the single-study engine
+    /// already guards against).
+    pub failures: Vec<SimTime>,
+}
+
+impl StudySpec {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("name", Json::Str(self.name.clone()))
+            .with("quota", Json::Num(self.quota as f64))
+            .with("priority", Json::Num(self.priority))
+            .with("submit_at", Json::Num(self.submit_at))
+            .with("failures", Json::from_f64_slice(&self.failures))
+            .with("config", self.config.to_json())
+    }
+
+    pub fn from_json(doc: &Json, index: usize) -> anyhow::Result<StudySpec> {
+        let name = doc
+            .get("name")
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| format!("study-{index}"));
+        let config = ChoptConfig::from_json(
+            doc.get("config")
+                .ok_or_else(|| anyhow::anyhow!("study '{name}' missing 'config'"))?,
+        )?;
+        let quota = doc.get("quota").and_then(|v| v.as_usize()).unwrap_or(0);
+        let priority = match doc.get("priority") {
+            None | Some(Json::Null) => 1.0,
+            Some(v) => {
+                let p = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("study '{name}': 'priority' must be a number"))?;
+                if !(p.is_finite() && p > 0.0) {
+                    anyhow::bail!("study '{name}': 'priority' must be > 0 (got {p})");
+                }
+                p
+            }
+        };
+        let submit_at = doc
+            .get("submit_at")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0)
+            .max(0.0);
+        let failures = doc
+            .get("failures")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+            .unwrap_or_default();
+        Ok(StudySpec {
+            name,
+            config,
+            quota,
+            priority,
+            submit_at,
+            failures,
+        })
+    }
+}
+
+/// The `chopt multi` manifest: a shared cluster plus a `studies: [...]`
+/// array.  See `README.md` for a worked two-study example.
+#[derive(Debug, Clone)]
+pub struct StudyManifest {
+    pub cluster_gpus: usize,
+    pub studies: Vec<StudySpec>,
+    pub policy: StopAndGoPolicy,
+    /// Optional non-CHOPT background load over the whole cluster.
+    pub trace: Option<ExternalLoadTrace>,
+    pub master_period: SimTime,
+    pub horizon: SimTime,
+    /// Work-conserving mode: studies may borrow idle peers' quota
+    /// (bounded by the policy bonus cap) and are pause-preempted back
+    /// when the owner returns.  `false` gives hard isolation — every
+    /// study behaves exactly as it would on a dedicated quota-size
+    /// cluster.
+    pub borrow: bool,
+}
+
+impl StudyManifest {
+    pub fn load(path: &str) -> anyhow::Result<StudyManifest> {
+        let text = std::fs::read_to_string(path)?;
+        StudyManifest::from_json_str(&text)
+    }
+
+    pub fn from_json_str(text: &str) -> anyhow::Result<StudyManifest> {
+        let doc = chopt_core::util::json::parse(text)?;
+        StudyManifest::from_json(&doc)
+    }
+
+    pub fn from_json(doc: &Json) -> anyhow::Result<StudyManifest> {
+        let cluster_gpus = doc
+            .get("cluster_gpus")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing numeric 'cluster_gpus'"))?;
+        let studies_doc = doc
+            .get("studies")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'studies' array"))?;
+        if studies_doc.is_empty() {
+            anyhow::bail!("manifest 'studies' must not be empty");
+        }
+        let mut studies = studies_doc
+            .iter()
+            .enumerate()
+            .map(|(i, s)| StudySpec::from_json(s, i))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        resolve_quotas(cluster_gpus, &mut studies)?;
+        let policy = doc
+            .get("policy")
+            .map(StopAndGoPolicy::from_json)
+            .transpose()?
+            .unwrap_or_default();
+        let trace = match doc.get("trace") {
+            None | Some(Json::Null) => None,
+            Some(t) => Some(ExternalLoadTrace::from_json(t)?),
+        };
+        Ok(StudyManifest {
+            cluster_gpus,
+            studies,
+            policy,
+            trace,
+            master_period: doc
+                .get("master_period")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(60.0),
+            horizon: doc
+                .get("horizon")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(400.0 * 24.0 * 3600.0),
+            borrow: doc.get("borrow").and_then(|v| v.as_bool()).unwrap_or(true),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("cluster_gpus", Json::Num(self.cluster_gpus as f64))
+            .with("master_period", Json::Num(self.master_period))
+            .with("horizon", Json::Num(self.horizon))
+            .with("borrow", Json::Bool(self.borrow))
+            .with("policy", self.policy.to_json())
+            .with(
+                "trace",
+                self.trace.as_ref().map(|t| t.to_json()).unwrap_or(Json::Null),
+            )
+            .with(
+                "studies",
+                Json::Arr(self.studies.iter().map(|s| s.to_json()).collect()),
+            )
+    }
+}
+
+/// Fill in unspecified quotas (even split of the unreserved remainder)
+/// and validate the fair-share guarantee is satisfiable.
+fn resolve_quotas(cluster_gpus: usize, studies: &mut [StudySpec]) -> anyhow::Result<()> {
+    let explicit: usize = studies.iter().map(|s| s.quota).sum();
+    if explicit > cluster_gpus {
+        anyhow::bail!(
+            "study quotas sum to {explicit} but the cluster has only {cluster_gpus} GPUs"
+        );
+    }
+    let unspecified = studies.iter().filter(|s| s.quota == 0).count();
+    if unspecified > 0 {
+        let share = (cluster_gpus - explicit) / unspecified;
+        if share == 0 {
+            anyhow::bail!(
+                "{unspecified} studies without quotas but only {} unreserved GPUs",
+                cluster_gpus - explicit
+            );
+        }
+        for s in studies.iter_mut().filter(|s| s.quota == 0) {
+            s.quota = share;
+        }
+    }
+    let mut names = std::collections::HashSet::new();
+    for s in studies.iter() {
+        if !valid_study_name(&s.name) {
+            anyhow::bail!(
+                "study name '{}' is invalid (allowed: [A-Za-z0-9._-], no leading dot)",
+                s.name
+            );
+        }
+        if !names.insert(s.name.as_str()) {
+            anyhow::bail!("duplicate study name '{}'", s.name);
+        }
+    }
+    Ok(())
+}
+
+/// Study names end up in file paths (`events-<name>.jsonl`,
+/// `sessions-<name>.json`) and URL routes, so restrict them to a safe
+/// charset — no separators, no `..`, no leading dot.
+fn valid_study_name(name: &str) -> bool {
+    !name.is_empty()
+        && !name.starts_with('.')
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-'))
+}
+
+/// Study-tagged simulation events.
+#[derive(Debug, Clone, Copy)]
+enum SEv {
+    /// A training interval of (study, session) completed.
+    Interval { study: usize, sid: SessionId },
+    /// Shared fair-share / Stop-and-Go control tick.
+    MasterTick,
+    /// A recorded external input (index into `inputs`) takes effect —
+    /// an online study submission or a control-plane command.
+    Input { idx: usize },
+}
+
+/// An external input that arrived while the scheduler was live.  Like
+/// the engine's log, this is the snapshot/replay record: commands change
+/// every event after them, so they must be re-issued on restore.
+#[derive(Debug, Clone)]
+enum MInputKind {
+    SubmitStudy(StudySpec),
+    PauseStudy(String),
+    ResumeStudy(String),
+    StopStudy(String),
+    PauseSession(String, SessionId),
+    ResumeSession(String, SessionId),
+    StopSession(String, SessionId),
+    SetQuota {
+        study: String,
+        quota: Option<usize>,
+        priority: Option<f64>,
+    },
+}
+
+#[derive(Debug, Clone)]
+struct MInput {
+    kind: MInputKind,
+    at: SimTime,
+    after_events: u64,
+}
+
+impl MInput {
+    fn to_json(&self) -> Json {
+        let base = Json::obj()
+            .with("at", Json::Num(self.at))
+            .with("after_events", Json::Num(self.after_events as f64));
+        let sid = |s: &SessionId| Json::Str(s.0.to_string());
+        let named = |kind: &str, study: &str| {
+            base.clone()
+                .with("kind", Json::Str(kind.into()))
+                .with("study", Json::Str(study.to_string()))
+        };
+        match &self.kind {
+            MInputKind::SubmitStudy(spec) => base
+                .clone()
+                .with("kind", Json::Str("submit_study".into()))
+                .with("study", spec.to_json()),
+            MInputKind::PauseStudy(n) => named("pause_study", n),
+            MInputKind::ResumeStudy(n) => named("resume_study", n),
+            MInputKind::StopStudy(n) => named("stop_study", n),
+            MInputKind::PauseSession(n, s) => named("pause_session", n).with("session", sid(s)),
+            MInputKind::ResumeSession(n, s) => named("resume_session", n).with("session", sid(s)),
+            MInputKind::StopSession(n, s) => named("stop_session", n).with("session", sid(s)),
+            MInputKind::SetQuota {
+                study,
+                quota,
+                priority,
+            } => named("set_quota", study)
+                .with(
+                    "quota",
+                    quota.map(|q| Json::Num(q as f64)).unwrap_or(Json::Null),
+                )
+                .with(
+                    "priority",
+                    priority.map(Json::Num).unwrap_or(Json::Null),
+                ),
+        }
+    }
+}
+
+/// Per-study runtime state.
+pub struct StudyState {
+    name: String,
+    config: ChoptConfig,
+    quota: usize,
+    /// Fair-share weight (see [`StudySpec::priority`]).
+    priority: f64,
+    submit_at: SimTime,
+    /// `None` until `submit_at` passes a master tick.
+    agent: Option<StudyAgent>,
+    /// Last fair-share target handed to the study (quota ± borrow).
+    last_target: usize,
+    /// Operator-paused: target/cap held at 0 until resumed (the study's
+    /// sessions sit in its stop pool with revival priority).
+    paused: bool,
+    /// One-shot grace consumed by the first master tick after a resume:
+    /// skip that tick's termination check (zero live sessions is the
+    /// operator's doing, not "done") and let `fill` revive first.
+    resume_grace: bool,
+    /// Operator-stopped before activation: never activates, counts as
+    /// done.  (Stopping an *active* study shuts its agent down instead.)
+    cancelled: bool,
+    /// Consumable runtime view of [`StudySpec::failures`]: `(at,
+    /// consumed)`.  Consumed exactly once — see the spec field's docs.
+    failures: Vec<(SimTime, bool)>,
+}
+
+impl StudyState {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn quota(&self) -> usize {
+        self.quota
+    }
+
+    /// Fair-share weight (manifest `priority` / `set_quota` command).
+    pub fn priority(&self) -> f64 {
+        self.priority
+    }
+
+    /// Last fair-share target (0 before activation / after completion).
+    pub fn target(&self) -> usize {
+        self.last_target
+    }
+
+    pub fn agent(&self) -> Option<&StudyAgent> {
+        self.agent.as_ref()
+    }
+
+    pub fn config(&self) -> &ChoptConfig {
+        &self.config
+    }
+
+    pub fn started(&self) -> bool {
+        self.agent.is_some()
+    }
+
+    /// Operator-paused (held at zero GPUs until resumed).
+    pub fn paused(&self) -> bool {
+        self.paused
+    }
+
+    pub fn done(&self) -> bool {
+        self.cancelled || self.agent.as_ref().map(|a| a.finished).unwrap_or(false)
+    }
+}
+
+/// Final state of one study after [`StudyScheduler::into_outcome`].
+pub struct StudyResult {
+    pub name: String,
+    pub quota: usize,
+    /// `None` if the study never activated (submit_at past the horizon).
+    pub agent: Option<StudyAgent>,
+}
+
+/// Results of a multi-study run.
+pub struct MultiOutcome {
+    pub studies: Vec<StudyResult>,
+    pub cluster: Cluster,
+    pub end_time: SimTime,
+    pub events_processed: u64,
+}
+
+impl MultiOutcome {
+    pub fn study(&self, name: &str) -> Option<&StudyResult> {
+        self.studies.iter().find(|s| s.name == name)
+    }
+}
+
+/// The multi-tenant scheduler.  See the module docs.
+pub struct StudyScheduler<'t> {
+    cluster: Cluster,
+    manifest: StudyManifest,
+    studies: Vec<StudyState>,
+    evq: EventQueue<SEv>,
+    /// External inputs (study submissions + commands) in arrival order —
+    /// the snapshot/replay input log.
+    inputs: Vec<MInput>,
+    /// Scheduled-but-unprocessed *submission* inputs (these keep the
+    /// scheduler alive; pending commands on a drained run don't).
+    submits_pending: usize,
+    ticks_pending: usize,
+    completed: bool,
+    horizon_reached: bool,
+    make_trainer: Box<dyn FnMut(usize, u64) -> Box<dyn Trainer + Send> + 't>,
+    /// Worker threads for windowed interval stepping (1 = serial).
+    step_threads: usize,
+    /// Studies whose agents may have appended events since the last
+    /// [`StudyScheduler::take_dirty_studies`] — lets the multi-platform
+    /// progress drain skip the O(studies) scan per processed event.
+    dirty: DirtySet,
+    /// Per-event progress marks from the last parallel window, in
+    /// serial processing order: `(study, event time, agent.events.len()
+    /// after that event)`.  They let a logging caller drain a whole
+    /// window with per-event timestamps — byte-identical to draining
+    /// after every serial step.  Cleared at each window's start; taken
+    /// via [`StudyScheduler::take_window_marks`].
+    window_marks: Vec<(usize, SimTime, usize)>,
+}
+
+impl<'t> StudyScheduler<'t> {
+    /// Build a scheduler: activate studies with `submit_at == 0`, fill
+    /// them within their quotas, and arm the shared master-tick chain —
+    /// the same bootstrap a solo engine performs per study.
+    ///
+    /// `make_trainer(study_index, chopt_id)` builds one trainer per
+    /// study; `chopt_id` is the study-*local* id (1 for the first agent),
+    /// matching what the same factory would see in a solo run.
+    pub fn new(
+        manifest: StudyManifest,
+        make_trainer: impl FnMut(usize, u64) -> Box<dyn Trainer + Send> + 't,
+    ) -> StudyScheduler<'t> {
+        let studies = manifest
+            .studies
+            .iter()
+            .map(|spec| StudyState {
+                name: spec.name.clone(),
+                config: spec.config.clone(),
+                quota: spec.quota,
+                priority: spec.priority,
+                submit_at: spec.submit_at,
+                agent: None,
+                last_target: 0,
+                paused: false,
+                resume_grace: false,
+                cancelled: false,
+                failures: spec.failures.iter().map(|&at| (at, false)).collect(),
+            })
+            .collect();
+        let n_studies = manifest.studies.len();
+        let mut sched = StudyScheduler {
+            cluster: Cluster::new(manifest.cluster_gpus),
+            manifest,
+            studies,
+            evq: EventQueue::new(),
+            inputs: Vec::new(),
+            submits_pending: 0,
+            ticks_pending: 0,
+            completed: false,
+            horizon_reached: false,
+            make_trainer: Box::new(make_trainer),
+            step_threads: 1,
+            dirty: DirtySet::with_len(n_studies),
+            window_marks: Vec::new(),
+        };
+        sched.activate_ready(0.0);
+        sched.evq.schedule_at(0.0, SEv::MasterTick);
+        sched.ticks_pending += 1;
+        sched
+    }
+
+    // -- observability -----------------------------------------------------
+
+    pub fn now(&self) -> SimTime {
+        self.evq.now()
+    }
+
+    pub fn events_processed(&self) -> u64 {
+        self.evq.processed()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.completed || self.horizon_reached || self.evq.is_empty()
+    }
+
+    pub fn horizon_reached(&self) -> bool {
+        self.horizon_reached
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    pub fn manifest(&self) -> &StudyManifest {
+        &self.manifest
+    }
+
+    pub fn studies(&self) -> &[StudyState] {
+        &self.studies
+    }
+
+    pub fn study(&self, name: &str) -> Option<&StudyState> {
+        self.studies.iter().find(|s| s.name == name)
+    }
+
+    /// Virtual time of the next pending event, if any.
+    pub fn next_event_time(&self) -> Option<SimTime> {
+        self.evq.peek_time()
+    }
+
+    /// Drain the list of studies touched since the last call (progress-
+    /// drain bookkeeping; see the `dirty` field).  First-touch order,
+    /// deterministic given the event order.
+    pub fn take_dirty_studies(&mut self) -> Vec<usize> {
+        self.dirty.take()
+    }
+
+    fn mark_dirty(&mut self, study: usize) {
+        self.dirty.mark(study);
+    }
+
+    /// Worker threads configured for windowed interval stepping.
+    pub fn step_threads(&self) -> usize {
+        self.step_threads
+    }
+
+    /// Drain the per-event progress marks recorded by the last
+    /// [`StudyScheduler::parallel_window`] call (see the `window_marks`
+    /// field).  Empty unless a window was just processed.
+    pub fn take_window_marks(&mut self) -> Vec<(usize, SimTime, usize)> {
+        std::mem::take(&mut self.window_marks)
+    }
+
+    // -- drivers -----------------------------------------------------------
+
+    /// Step independent studies on up to `n` worker threads between
+    /// fair-share reconciliations (1 = serial).  Purely a wall-clock
+    /// knob: event order, sequence numbers, RNG streams, snapshots, and
+    /// every rendered document are bit-identical across thread counts
+    /// (see `StudyScheduler::parallel_window`).
+    pub fn set_step_threads(&mut self, n: usize) {
+        self.step_threads = n.max(1);
+    }
+
+    /// Process exactly one event (see [`super::engine::Step`]).
+    pub fn step(&mut self) -> super::engine::Step {
+        use super::engine::Step;
+        if self.completed || self.horizon_reached {
+            return Step::Idle;
+        }
+        let Some((t, ev)) = self.evq.pop() else {
+            self.completed = true;
+            return Step::Idle;
+        };
+        if t > self.manifest.horizon {
+            self.horizon_reached = true;
+            return Step::HorizonReached;
+        }
+        self.dispatch(t, ev);
+        if self.all_done() {
+            self.completed = true;
+        }
+        Step::Advanced(t)
+    }
+
+    /// Process every event with timestamp `<= t`; returns events popped.
+    pub fn run_until(&mut self, t: SimTime) -> u64 {
+        use super::engine::Step;
+        let mut n = 0;
+        while !self.completed && !self.horizon_reached {
+            if self.step_threads > 1 {
+                n += self.parallel_window(t);
+                if self.completed || self.horizon_reached {
+                    break;
+                }
+            }
+            match self.evq.peek_time() {
+                Some(next) if next <= t => {
+                    if !matches!(self.step(), Step::Advanced(_)) {
+                        break;
+                    }
+                    n += 1;
+                }
+                _ => break,
+            }
+        }
+        n
+    }
+
+    /// Drive until every study finishes (or the horizon passes).
+    pub fn run_to_completion(&mut self) -> u64 {
+        use super::engine::Step;
+        let mut n = 0;
+        loop {
+            if self.step_threads > 1 && !self.completed && !self.horizon_reached {
+                n += self.parallel_window(f64::INFINITY);
+            }
+            if !matches!(self.step(), Step::Advanced(_)) {
+                break;
+            }
+            n += 1;
+        }
+        n
+    }
+
+    /// Process a *window* of interval events on worker threads — the
+    /// sorted run of already-queued `Interval` events due before both
+    /// `t_limit`/the horizon and the next non-interval event (master
+    /// ticks and recorded inputs are the cross-study barriers).
+    ///
+    /// Correctness rests on three facts, each checked or arranged here:
+    ///
+    /// 1. **Barriers**: targets, caps, external demand, and pending
+    ///    submissions only change at master ticks and input events, so
+    ///    cross-study state is constant inside the window.
+    /// 2. **Cap isolation**: when every window study holds at most its
+    ///    cap and the caps fit alongside everyone else's holdings,
+    ///    `available_for` is `cap − held` — a study-local quantity — so
+    ///    a shadow cluster of just `(cap, held)` reproduces the study's
+    ///    allocator decisions exactly.  Checked below; on violation the
+    ///    window is abandoned (serial fallback, returns 0).
+    /// 3. **Order-preserving merge**: workers key follow-on events past
+    ///    the queue's next unissued seq (so each study's local order
+    ///    equals its serial subsequence order), and the merge replays
+    ///    the recorded effects in global `(time, seq)` order, issuing
+    ///    real sequence numbers at exactly the points a serial run
+    ///    would — queue state, clock, processed count, dirty order, and
+    ///    the cluster usage series come out bit-identical.
+    ///
+    /// Returns the number of events processed; 0 means no
+    /// parallelizable window (the caller serial-steps one event).
+    ///
+    /// Public so a logging caller (the multi-platform) can interleave
+    /// windows with its own progress drains: after a non-zero return,
+    /// [`StudyScheduler::take_window_marks`] yields the per-event
+    /// `(study, time, events len)` marks in serial processing order.
+    pub fn parallel_window(&mut self, t_limit: SimTime) -> u64 {
+        self.window_marks.clear();
+        let cut = t_limit.min(self.manifest.horizon);
+        let drained = self.evq.drain_sorted();
+        let mut window = 0;
+        for &(at, _, ev) in &drained {
+            if at > cut || !matches!(ev, SEv::Interval { .. }) {
+                break;
+            }
+            window += 1;
+        }
+        // Follow-on events belong to the window only strictly before
+        // the barrier (ties go to the barrier: its seq is lower than
+        // any child's) and within the cut.
+        let open_until = match drained.get(window) {
+            Some(&(at, _, _)) if at <= cut => at,
+            _ => f64::INFINITY,
+        };
+        let mut per_study: Vec<Vec<LocalEv>> =
+            (0..self.studies.len()).map(|_| Vec::new()).collect();
+        let mut n_studies = 0;
+        for &(at, seq, ev) in &drained[..window] {
+            let SEv::Interval { study, sid } = ev else {
+                unreachable!("window holds interval events only");
+            };
+            if per_study[study].is_empty() {
+                n_studies += 1;
+            }
+            per_study[study].push(LocalEv { at, key: seq, sid });
+        }
+        if window < 2 || n_studies < 2 {
+            return self.reinsert(drained);
+        }
+        // Cap-isolation precondition (fact 2): every window study holds
+        // at most its binding cap, and all the caps could be filled
+        // simultaneously next to everyone else's current holdings.
+        let mut caps: Vec<(usize, usize, usize)> = Vec::new(); // (study, cap, held)
+        let mut cap_sum = 0usize;
+        let mut held_sum = 0usize;
+        let mut isolated = true;
+        for (study, evs) in per_study.iter().enumerate() {
+            if evs.is_empty() {
+                continue;
+            }
+            let Some(agent) = self.studies[study].agent.as_ref() else {
+                isolated = false;
+                break;
+            };
+            let owner = Owner::Chopt(agent.tenant);
+            let Some(cap) = self.cluster.cap_of(owner) else {
+                isolated = false;
+                break;
+            };
+            let held = self.cluster.held_by(owner);
+            if held > cap {
+                isolated = false;
+                break;
+            }
+            caps.push((study, cap, held));
+            cap_sum += cap;
+            held_sum += held;
+        }
+        if !isolated || self.cluster.used() + cap_sum > self.cluster.total() + held_sum {
+            return self.reinsert(drained);
+        }
+        // Pre-window completion state: the merge below must re-derive
+        // `all_done` *as of each replayed event*, and by then the agents
+        // already carry their end-of-window state.
+        let no_submits = self.submits_pending == 0;
+        let mut done_now: Vec<bool> = self.studies.iter().map(|s| s.done()).collect();
+        // Phase 1: step each window study against its shadow cluster.
+        let now = self.evq.now();
+        let temp_base = self.evq.next_seq();
+        for (at, seq, ev) in drained.into_iter().skip(window) {
+            self.evq.insert_prescheduled(at, seq, ev);
+        }
+        let mut items: Vec<WorkItem> = Vec::with_capacity(caps.len());
+        for &(study, cap, held) in &caps {
+            let agent = self.studies[study].agent.take().expect("checked above");
+            let shadow = Cluster::shadow_for(Owner::Chopt(agent.tenant), cap, held, now);
+            items.push(WorkItem {
+                study,
+                agent,
+                shadow,
+                initial: std::mem::take(&mut per_study[study]),
+                recs: VecDeque::new(),
+            });
+        }
+        let stride = items.len().div_ceil(self.step_threads.min(items.len()));
+        std::thread::scope(|scope| {
+            for group in items.chunks_mut(stride) {
+                scope.spawn(move || {
+                    for item in group.iter_mut() {
+                        step_study_window(item, temp_base, open_until, cut);
+                    }
+                });
+            }
+        });
+        let mut recs: Vec<VecDeque<StepRec>> =
+            (0..self.studies.len()).map(|_| VecDeque::new()).collect();
+        let mut merge: BinaryHeap<MergeEv> = BinaryHeap::with_capacity(window);
+        for item in items {
+            for ev in &item.initial {
+                merge.push(MergeEv {
+                    at: ev.at,
+                    seq: ev.key,
+                    study: item.study,
+                    sid: ev.sid,
+                });
+            }
+            self.studies[item.study].agent = Some(item.agent);
+            recs[item.study] = item.recs;
+        }
+        // Phase 2: serial merge.  Within a study, merge order equals
+        // local order (same keys), so the next record is always the
+        // front of that study's queue.
+        let mut processed = 0u64;
+        while let Some(MergeEv { at, seq: _, study, sid: _ }) = merge.pop() {
+            let rec = recs[study].pop_front().expect("one record per merged event");
+            debug_assert_eq!(rec.at, at, "merge order diverged from worker order");
+            self.evq.note_processed(at);
+            processed += 1;
+            for &op in &rec.ops {
+                self.cluster
+                    .apply_op(op)
+                    .expect("shadow ops fit the real cluster (cap isolation)");
+            }
+            self.mark_dirty(study);
+            self.window_marks.push((study, at, rec.events_len));
+            for (child_sid, child_at) in rec.children {
+                let child_seq = self.evq.alloc_seq();
+                if window_holds(child_at, open_until, cut) {
+                    merge.push(MergeEv {
+                        at: child_at,
+                        seq: child_seq,
+                        study,
+                        sid: child_sid,
+                    });
+                } else {
+                    self.evq.insert_prescheduled(
+                        child_at,
+                        child_seq,
+                        SEv::Interval {
+                            study,
+                            sid: child_sid,
+                        },
+                    );
+                }
+            }
+            done_now[study] = rec.finished_after;
+            if no_submits && done_now.iter().all(|&d| d) {
+                // Mid-window completion: a serial run stops here, so the
+                // rest of the merged events go back unprocessed.  Their
+                // phase-1 effects are no-ops — every agent is finished
+                // past this point.
+                self.completed = true;
+                for MergeEv { at, seq, study, sid } in merge.drain() {
+                    self.evq
+                        .insert_prescheduled(at, seq, SEv::Interval { study, sid });
+                }
+                break;
+            }
+        }
+        processed
+    }
+
+    /// Serial-fallback path of `parallel_window`: put the drained queue
+    /// back untouched (original sequence numbers) and process nothing.
+    fn reinsert(&mut self, drained: Vec<(SimTime, u64, SEv)>) -> u64 {
+        for (at, seq, ev) in drained {
+            self.evq.insert_prescheduled(at, seq, ev);
+        }
+        0
+    }
+
+    /// Submit a new study while the scheduler is live.  The spec must
+    /// carry an explicit quota that still fits next to the existing
+    /// guarantees; `at` is clamped to now.  Returns the effective submit
+    /// time, or `None` if the quota does not fit or the horizon has been
+    /// reached.
+    pub fn submit_study(&mut self, spec: StudySpec, at: SimTime) -> Option<SimTime> {
+        if self.horizon_reached
+            || spec.quota == 0
+            || !(spec.priority.is_finite() && spec.priority > 0.0)
+            || !valid_study_name(&spec.name)
+        {
+            return None;
+        }
+        let reserved: usize = self.studies.iter().map(|s| s.quota).sum();
+        if reserved + spec.quota > self.cluster.total() {
+            return None;
+        }
+        if self.studies.iter().any(|s| s.name == spec.name) {
+            return None;
+        }
+        let at = at.max(self.evq.now());
+        let mut spec = spec;
+        spec.submit_at = at;
+        self.studies.push(StudyState {
+            name: spec.name.clone(),
+            config: spec.config.clone(),
+            quota: spec.quota,
+            priority: spec.priority,
+            submit_at: at,
+            agent: None,
+            last_target: 0,
+            paused: false,
+            resume_grace: false,
+            cancelled: false,
+            failures: spec.failures.iter().map(|&f| (f, false)).collect(),
+        });
+        self.dirty.push_slot();
+        self.enqueue_input(MInputKind::SubmitStudy(spec), at);
+        self.submits_pending += 1;
+        self.completed = false;
+        Some(at)
+    }
+
+    /// Record an input and schedule its effect event (clamped to now).
+    fn enqueue_input(&mut self, kind: MInputKind, at: SimTime) -> SimTime {
+        let at = at.max(self.evq.now());
+        let idx = self.inputs.len();
+        self.inputs.push(MInput {
+            kind,
+            at,
+            after_events: self.evq.processed(),
+        });
+        self.evq.schedule_at(at, SEv::Input { idx });
+        at
+    }
+
+    fn study_idx(&self, name: &str) -> Option<usize> {
+        self.studies.iter().position(|s| s.name == name)
+    }
+
+    /// Control-plane pause: hold a study at zero GPUs (its live sessions
+    /// are paused into the stop pool with revival priority) until a
+    /// matching resume.  Returns the effective time, or `None` if the
+    /// study is unknown / already finished.
+    pub fn pause_study(&mut self, name: &str, at: SimTime) -> Option<SimTime> {
+        let idx = self.study_idx(name)?;
+        if self.horizon_reached || self.studies[idx].done() {
+            return None;
+        }
+        Some(self.enqueue_input(MInputKind::PauseStudy(name.to_string()), at))
+    }
+
+    /// Control-plane resume of a paused study: the next master tick
+    /// restores its fair-share target and revives its sessions.
+    pub fn resume_study(&mut self, name: &str, at: SimTime) -> Option<SimTime> {
+        let idx = self.study_idx(name)?;
+        if self.horizon_reached || self.studies[idx].done() {
+            return None;
+        }
+        Some(self.enqueue_input(MInputKind::ResumeStudy(name.to_string()), at))
+    }
+
+    /// Control-plane stop: shut the study down (horizon semantics for its
+    /// sessions); a not-yet-activated study is cancelled instead.
+    pub fn stop_study(&mut self, name: &str, at: SimTime) -> Option<SimTime> {
+        let idx = self.study_idx(name)?;
+        if self.horizon_reached || self.studies[idx].done() {
+            return None;
+        }
+        Some(self.enqueue_input(MInputKind::StopStudy(name.to_string()), at))
+    }
+
+    /// Control-plane re-quota / re-weight.  `quota` must keep
+    /// Σ quota ≤ cluster size; `priority` must be > 0.  `None` fields are
+    /// left unchanged.
+    pub fn set_quota(
+        &mut self,
+        name: &str,
+        quota: Option<usize>,
+        priority: Option<f64>,
+        at: SimTime,
+    ) -> Option<SimTime> {
+        let idx = self.study_idx(name)?;
+        if self.horizon_reached || (quota.is_none() && priority.is_none()) {
+            return None;
+        }
+        if let Some(q) = quota {
+            let others: usize = self
+                .studies
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| i != idx)
+                .map(|(_, s)| s.quota)
+                .sum();
+            if q == 0 || others + q > self.cluster.total() {
+                return None;
+            }
+        }
+        if let Some(p) = priority {
+            if !(p.is_finite() && p > 0.0) {
+                return None;
+            }
+        }
+        let at = self.enqueue_input(
+            MInputKind::SetQuota {
+                study: name.to_string(),
+                quota,
+                priority,
+            },
+            at,
+        );
+        // A drained scheduler must still process the input event (the
+        // ack promised it): lowering a finished study's quota frees
+        // guarantee room for later submits.  `step()` short-circuits on
+        // `completed`, so clear it; the run re-settles right after the
+        // input is applied.
+        self.completed = false;
+        Some(at)
+    }
+
+    /// Control-plane pause of one NSML session (`study` qualifies the
+    /// session id — local ids repeat across studies).
+    pub fn pause_session(&mut self, study: &str, sid: SessionId, at: SimTime) -> Option<SimTime> {
+        self.session_cmd_guard(study, sid, super::pools::Pool::Live)?;
+        Some(self.enqueue_input(MInputKind::PauseSession(study.to_string(), sid), at))
+    }
+
+    /// Control-plane resume of a paused session.
+    pub fn resume_session(&mut self, study: &str, sid: SessionId, at: SimTime) -> Option<SimTime> {
+        self.session_cmd_guard(study, sid, super::pools::Pool::Stop)?;
+        Some(self.enqueue_input(MInputKind::ResumeSession(study.to_string(), sid), at))
+    }
+
+    /// Control-plane stop (kill) of a live or paused session.
+    pub fn stop_session(&mut self, study: &str, sid: SessionId, at: SimTime) -> Option<SimTime> {
+        let pool = self.session_cmd_guard_any(study, sid)?;
+        if !matches!(pool, super::pools::Pool::Live | super::pools::Pool::Stop) {
+            return None;
+        }
+        Some(self.enqueue_input(MInputKind::StopSession(study.to_string(), sid), at))
+    }
+
+    fn session_cmd_guard(
+        &self,
+        study: &str,
+        sid: SessionId,
+        want: super::pools::Pool,
+    ) -> Option<()> {
+        (self.session_cmd_guard_any(study, sid)? == want).then_some(())
+    }
+
+    /// The session's current pool within `study`, if the scheduler can
+    /// accept commands for it.
+    fn session_cmd_guard_any(&self, study: &str, sid: SessionId) -> Option<super::pools::Pool> {
+        if self.horizon_reached {
+            return None;
+        }
+        let idx = self.study_idx(study)?;
+        let agent = self.studies[idx].agent.as_ref()?;
+        if agent.finished {
+            return None;
+        }
+        agent.pools.locate(sid)
+    }
+
+    // -- event dispatch ----------------------------------------------------
+
+    fn all_done(&self) -> bool {
+        self.submits_pending == 0 && self.studies.iter().all(|s| s.done())
+    }
+
+    fn any_alive(&self) -> bool {
+        self.submits_pending > 0 || self.studies.iter().any(|s| !s.done())
+    }
+
+    fn schedule_reqs(&mut self, study: usize, reqs: Vec<ScheduleReq>) {
+        for r in reqs {
+            self.evq.schedule_in(
+                r.seconds,
+                SEv::Interval {
+                    study,
+                    sid: r.session,
+                },
+            );
+        }
+    }
+
+    fn dispatch(&mut self, t: SimTime, ev: SEv) {
+        match ev {
+            SEv::Interval { study, sid } => self.on_interval(t, study, sid),
+            SEv::MasterTick => self.on_master_tick(t),
+            SEv::Input { idx } => self.on_input(t, idx),
+        }
+    }
+
+    fn on_interval(&mut self, t: SimTime, study: usize, sid: SessionId) {
+        let mut reqs: Vec<ScheduleReq> = Vec::new();
+        {
+            let Some(agent) = self.studies[study].agent.as_mut() else {
+                return;
+            };
+            agent.on_interval_done(sid, &mut self.cluster, t, &mut reqs);
+        }
+        self.mark_dirty(study);
+        self.schedule_reqs(study, reqs);
+    }
+
+    /// The study's own Stop-and-Go target, exactly as the master of a
+    /// dedicated quota-size cluster would compute it — the anchor of the
+    /// multi-tenant determinism contract.
+    fn solo_target(&self, study: usize) -> usize {
+        let st = &self.studies[study];
+        self.manifest
+            .policy
+            .targets(st.quota, 0, &[st.config.max_gpus])
+            .first()
+            .copied()
+            .unwrap_or(st.config.max_gpus)
+    }
+
+    /// Cross-study reconciliation of per-study solo targets against the
+    /// real shared cluster: with `borrow` the policy redistributes idle
+    /// headroom (bounded bonus, split ∝ each study's `priority` weight)
+    /// or shrinks ∝ base × weight under external load; without it,
+    /// targets pass through untouched unless external load overflows the
+    /// unreserved capacity.  `active` maps each solo entry back to its
+    /// study index.
+    fn reconcile_targets(&self, external: usize, active: &[usize], solo: &[usize]) -> Vec<usize> {
+        let total = self.cluster.total();
+        let sum: usize = solo.iter().sum();
+        if self.manifest.borrow || external + sum > total {
+            let weights: Vec<f64> = active.iter().map(|&i| self.studies[i].priority).collect();
+            let mut finals = self
+                .manifest
+                .policy
+                .targets_weighted(total, external, solo, &weights);
+            // The bonus cap is relative to each study's *configured*
+            // base (max_gpus), but the reconcile pass sees the already-
+            // bonused solo targets as bases — without this clamp the
+            // two-stage computation compounds max_bonus_factor (a
+            // quota-8/max_gpus-4 study on an idle 16-GPU cluster would
+            // reach 4× its configured limit instead of 2×).
+            let bonus = self.manifest.policy.max_bonus_factor;
+            for (k, f) in finals.iter_mut().enumerate() {
+                let base = self.studies[active[k]].config.max_gpus;
+                let cap = ((base as f64) * bonus).ceil() as usize;
+                *f = (*f).min(cap.max(base));
+            }
+            finals
+        } else {
+            solo.to_vec()
+        }
+    }
+
+    fn on_master_tick(&mut self, t: SimTime) {
+        self.ticks_pending = self.ticks_pending.saturating_sub(1);
+        // Activate due studies *before* reconciling targets so a
+        // newcomer counts in this tick's fair share: a borrowing peer is
+        // preempted on the same tick the newcomer arrives, not one
+        // master period later.
+        self.activate_ready(t);
+        // Failure injection: crash scheduled studies first so this
+        // tick's fair share reflects reality (the freed quota is
+        // redistributable immediately).  Each failure fires exactly once
+        // and only against an agent that is active *now* — a record due
+        // before activation is consumed without effect, so it can never
+        // crash a later incarnation (the single-engine stale-failure
+        // guard, per study).
+        for i in 0..self.studies.len() {
+            let mut crash = false;
+            for f in self.studies[i].failures.iter_mut() {
+                if !f.1 && f.0 <= t {
+                    f.1 = true;
+                    crash = true;
+                }
+            }
+            if !crash {
+                continue;
+            }
+            if let Some(agent) = self.studies[i].agent.as_mut() {
+                if !agent.finished {
+                    agent.shutdown("agent_failure", &mut self.cluster, t);
+                    self.studies[i].paused = false;
+                    self.studies[i].last_target = 0;
+                    self.mark_dirty(i);
+                }
+            }
+        }
+        let external = self
+            .manifest
+            .trace
+            .as_ref()
+            .map(|tr| tr.demand(t))
+            .unwrap_or(0);
+        self.cluster.set_external_demand(external, t);
+        // Paused studies are excluded entirely: their target/cap stays 0
+        // (set at pause time) and their termination checks are deferred —
+        // an operator pause must not look like "no live sessions left".
+        let active: Vec<usize> = (0..self.studies.len())
+            .filter(|&i| {
+                !self.studies[i].paused
+                    && self.studies[i]
+                        .agent
+                        .as_ref()
+                        .map(|a| !a.finished)
+                        .unwrap_or(false)
+            })
+            .collect();
+        let solo: Vec<usize> = active.iter().map(|&i| self.solo_target(i)).collect();
+        let finals = self.reconcile_targets(external, &active, &solo);
+        // Two-phase application: all shrinks (preempting borrowers)
+        // first, then all grows — so GPUs reclaimed this tick are free
+        // before any study fills, regardless of study index order.
+        let mut grows: Vec<(usize, usize)> = Vec::new();
+        for (k, &i) in active.iter().enumerate() {
+            let target = finals.get(k).copied().unwrap_or(self.studies[i].quota);
+            self.mark_dirty(i);
+            let mut reqs: Vec<ScheduleReq> = Vec::new();
+            {
+                let st = &mut self.studies[i];
+                let agent = st.agent.as_mut().unwrap();
+                // One-shot post-resume grace: a just-resumed study has
+                // zero live sessions *by operator decree*, which the
+                // max_session_number check would mistake for "done" —
+                // give it this tick to refill before checking again.
+                if !std::mem::take(&mut st.resume_grace) {
+                    agent.check_termination(&mut self.cluster, t);
+                }
+                if agent.finished {
+                    st.last_target = 0;
+                    continue;
+                }
+                st.last_target = target;
+                // The cap gates *new* grants: at least the quota (the
+                // guarantee), raised to the target when borrowing.
+                self.cluster
+                    .set_cap(Owner::Chopt(agent.tenant), target.max(st.quota));
+                if target < agent.gpus_in_use() {
+                    // Borrowed GPUs being reclaimed by an under-quota
+                    // peer: pause, never kill.
+                    agent.preempt_pause_to_target(target, &mut self.cluster, t, &mut reqs);
+                } else {
+                    grows.push((i, target));
+                }
+            }
+            self.schedule_reqs(i, reqs);
+        }
+        for (i, target) in grows {
+            let mut reqs: Vec<ScheduleReq> = Vec::new();
+            {
+                let agent = self.studies[i].agent.as_mut().unwrap();
+                if !agent.finished {
+                    agent.set_gpu_target(target, &mut self.cluster, t, &mut reqs);
+                }
+            }
+            self.schedule_reqs(i, reqs);
+        }
+        if self.any_alive() {
+            self.evq
+                .schedule_in(self.manifest.master_period, SEv::MasterTick);
+            self.ticks_pending += 1;
+        }
+    }
+
+    /// Activate studies whose submit time has arrived: build the agent
+    /// (local id 1, study-qualified tenant), cap it at its quota, and
+    /// fill — the same bootstrap a solo engine runs at t = 0.
+    fn activate_ready(&mut self, now: SimTime) {
+        for i in 0..self.studies.len() {
+            if self.studies[i].agent.is_some()
+                || self.studies[i].submit_at > now
+                || self.studies[i].paused
+                || self.studies[i].cancelled
+            {
+                continue;
+            }
+            let local_id = 1u64;
+            let tenant = (((i + 1) as u64) << 32) | local_id;
+            let trainer = (self.make_trainer)(i, local_id);
+            let mut agent = Agent::new(local_id, self.studies[i].config.clone(), trainer);
+            agent.tenant = tenant;
+            self.cluster
+                .set_cap(Owner::Chopt(tenant), self.studies[i].quota);
+            let mut reqs: Vec<ScheduleReq> = Vec::new();
+            agent.fill(&mut self.cluster, now, &mut reqs);
+            self.studies[i].last_target = agent.gpu_target();
+            self.studies[i].agent = Some(agent);
+            self.mark_dirty(i);
+            self.schedule_reqs(i, reqs);
+        }
+    }
+
+    /// Apply a recorded input at its event boundary.  Commands
+    /// re-validate against the state *now* and no-op when stale — the
+    /// original run and a replay see identical state here, so both no-op
+    /// identically.
+    fn on_input(&mut self, t: SimTime, idx: usize) {
+        let kind = self.inputs[idx].kind.clone();
+        match kind {
+            MInputKind::SubmitStudy(_) => {
+                self.submits_pending = self.submits_pending.saturating_sub(1);
+                // The study was appended at submit_study time.  Re-arm
+                // the tick chain if it died (everything had drained); the
+                // tick at `t` activates the new study and resumes the
+                // cadence.
+                self.rearm_ticks(t);
+            }
+            MInputKind::PauseStudy(name) => {
+                if let Some(i) = self.study_idx(&name) {
+                    if self.studies[i].done() {
+                        return;
+                    }
+                    self.studies[i].paused = true;
+                    let mut reqs: Vec<ScheduleReq> = Vec::new();
+                    if let Some(agent) = self.studies[i].agent.as_mut() {
+                        if !agent.finished {
+                            agent.preempt_pause_to_target(0, &mut self.cluster, t, &mut reqs);
+                            self.cluster.set_cap(Owner::Chopt(agent.tenant), 0);
+                        }
+                    }
+                    self.studies[i].last_target = 0;
+                    self.mark_dirty(i);
+                    self.schedule_reqs(i, reqs);
+                }
+            }
+            MInputKind::ResumeStudy(name) => {
+                if let Some(i) = self.study_idx(&name) {
+                    if self.studies[i].paused {
+                        self.studies[i].paused = false;
+                        self.studies[i].resume_grace = true;
+                    }
+                    self.mark_dirty(i);
+                    // The next tick recomputes the fair share and revives
+                    // (or first activates) the study.
+                    self.rearm_ticks(t);
+                }
+            }
+            MInputKind::StopStudy(name) => {
+                if let Some(i) = self.study_idx(&name) {
+                    self.studies[i].paused = false;
+                    match self.studies[i].agent.as_mut() {
+                        Some(agent) => {
+                            if !agent.finished {
+                                agent.shutdown("user_stop", &mut self.cluster, t);
+                            }
+                        }
+                        None => self.studies[i].cancelled = true,
+                    }
+                    self.studies[i].last_target = 0;
+                    self.mark_dirty(i);
+                }
+            }
+            MInputKind::PauseSession(name, sid) => {
+                if let Some(i) = self.study_idx(&name) {
+                    if let Some(agent) = self.studies[i].agent.as_mut() {
+                        agent.pause_session_cmd(sid, &mut self.cluster, t);
+                        self.mark_dirty(i);
+                    }
+                }
+            }
+            MInputKind::ResumeSession(name, sid) => {
+                if let Some(i) = self.study_idx(&name) {
+                    let mut reqs: Vec<ScheduleReq> = Vec::new();
+                    if let Some(agent) = self.studies[i].agent.as_mut() {
+                        agent.resume_session_cmd(sid, &mut self.cluster, t, &mut reqs);
+                        self.mark_dirty(i);
+                    }
+                    self.schedule_reqs(i, reqs);
+                }
+            }
+            MInputKind::StopSession(name, sid) => {
+                if let Some(i) = self.study_idx(&name) {
+                    if let Some(agent) = self.studies[i].agent.as_mut() {
+                        agent.stop_session_cmd(sid, &mut self.cluster, t);
+                        self.mark_dirty(i);
+                    }
+                }
+            }
+            MInputKind::SetQuota {
+                study,
+                quota,
+                priority,
+            } => {
+                if let Some(i) = self.study_idx(&study) {
+                    if let Some(q) = quota {
+                        // Re-check the guarantee against the *current*
+                        // quota set (it may have changed since enqueue).
+                        let others: usize = self
+                            .studies
+                            .iter()
+                            .enumerate()
+                            .filter(|&(j, _)| j != i)
+                            .map(|(_, s)| s.quota)
+                            .sum();
+                        if q > 0 && others + q <= self.cluster.total() {
+                            self.studies[i].quota = q;
+                        }
+                    }
+                    if let Some(p) = priority {
+                        if p.is_finite() && p > 0.0 {
+                            self.studies[i].priority = p;
+                        }
+                    }
+                    // The next tick folds the new quota/weight into caps
+                    // and targets.
+                }
+            }
+        }
+    }
+
+    fn rearm_ticks(&mut self, t: SimTime) {
+        if self.ticks_pending == 0 {
+            self.evq.schedule_at(t, SEv::MasterTick);
+            self.ticks_pending += 1;
+        }
+    }
+
+    // -- finalization ------------------------------------------------------
+
+    /// Consume the scheduler into the outcome: agents still running are
+    /// shut down with horizon semantics.
+    pub fn into_outcome(mut self) -> MultiOutcome {
+        let end_time = self.evq.now();
+        let studies = self
+            .studies
+            .into_iter()
+            .map(|mut st| {
+                if let Some(agent) = st.agent.as_mut() {
+                    if !agent.finished {
+                        agent.shutdown("horizon", &mut self.cluster, end_time);
+                    }
+                }
+                StudyResult {
+                    name: st.name,
+                    quota: st.quota,
+                    agent: st.agent,
+                }
+            })
+            .collect();
+        MultiOutcome {
+            studies,
+            cluster: self.cluster,
+            end_time,
+            events_processed: self.evq.processed(),
+        }
+    }
+
+    // -- snapshot / restore ------------------------------------------------
+
+    /// Serialize the replay inputs plus a progress summary.  Restore
+    /// rebuilds from the manifest and replays the recorded event count,
+    /// re-issuing every external input (study submissions *and*
+    /// control-plane commands) at the event counts where the original
+    /// calls happened — a run steered over `/api/v1/commands` stays
+    /// restorable.
+    pub fn snapshot_json(&self) -> Json {
+        let inputs = Json::Arr(self.inputs.iter().map(|i| i.to_json()).collect());
+        let progress = Json::Arr(
+            self.studies
+                .iter()
+                .map(|st| {
+                    Json::obj()
+                        .with("study", Json::Str(st.name.clone()))
+                        .with("started", Json::Bool(st.started()))
+                        .with("done", Json::Bool(st.done()))
+                        .with(
+                            "best",
+                            st.agent
+                                .as_ref()
+                                .and_then(|a| a.best())
+                                .map(|(_, m)| Json::Num(m))
+                                .unwrap_or(Json::Null),
+                        )
+                })
+                .collect(),
+        );
+        Json::obj()
+            .with("version", Json::Num(2.0))
+            .with("kind", Json::Str("multi_study".into()))
+            .with("t", Json::Num(self.evq.now()))
+            .with("events_processed", Json::Num(self.evq.processed() as f64))
+            .with("manifest", self.manifest.to_json())
+            .with("inputs", inputs)
+            .with("progress", progress)
+    }
+
+    fn replay_to(&mut self, target: u64) -> anyhow::Result<()> {
+        use super::engine::Step;
+        while self.events_processed() < target {
+            match self.step() {
+                Step::Advanced(_) | Step::HorizonReached => {}
+                Step::Idle => anyhow::bail!(
+                    "multi-study replay stalled at {} / {} events — snapshot does not match inputs",
+                    self.events_processed(),
+                    target
+                ),
+            }
+        }
+        Ok(())
+    }
+
+    /// Rebuild a scheduler from [`StudyScheduler::snapshot_json`] output.
+    /// `make_trainer` must be the factory the original run used.  Like
+    /// [`super::engine::SimEngine::restore`], the replay runs quiet:
+    /// integrator series retention is suspended until the target event
+    /// count is reached, then reconciled once.  A restored run's
+    /// utilization *plot* therefore starts at the snapshot point (the
+    /// pre-snapshot curve is not rebuilt; its integral is exact), and
+    /// simulation decisions are unaffected (snapshot-determinism tests
+    /// verify this).
+    pub fn restore(
+        doc: &Json,
+        make_trainer: impl FnMut(usize, u64) -> Box<dyn Trainer + Send> + 't,
+    ) -> anyhow::Result<StudyScheduler<'t>> {
+        StudyScheduler::restore_impl(doc, make_trainer, None, true)
+    }
+
+    /// [`StudyScheduler::restore`] with series retention kept **on**
+    /// during the replay: the utilization series is rebuilt point-for-
+    /// point so every rendered document is byte-identical to the live
+    /// run's (the `StoredRun` (chopt-control) read model).  Costs O(series)
+    /// extra work over the quiet restore.
+    pub fn restore_full(
+        doc: &Json,
+        make_trainer: impl FnMut(usize, u64) -> Box<dyn Trainer + Send> + 't,
+    ) -> anyhow::Result<StudyScheduler<'t>> {
+        StudyScheduler::restore_impl(doc, make_trainer, None, false)
+    }
+
+    /// Scrub restore: replay only the first `upto` events (capped at the
+    /// snapshot's recorded count), re-issuing exactly the inputs that
+    /// had been enqueued by that point.  The multi-study twin of
+    /// [`super::engine::SimEngine::restore_at`] — the `?at_event=`
+    /// primitive behind `ReplaySource` (chopt-control); the replay runs
+    /// quiet.
+    pub fn restore_at(
+        doc: &Json,
+        make_trainer: impl FnMut(usize, u64) -> Box<dyn Trainer + Send> + 't,
+        upto: u64,
+    ) -> anyhow::Result<StudyScheduler<'t>> {
+        StudyScheduler::restore_impl(doc, make_trainer, Some(upto), true)
+    }
+
+    fn restore_impl(
+        doc: &Json,
+        make_trainer: impl FnMut(usize, u64) -> Box<dyn Trainer + Send> + 't,
+        upto: Option<u64>,
+        quiet: bool,
+    ) -> anyhow::Result<StudyScheduler<'t>> {
+        if doc.get("kind").and_then(|v| v.as_str()) != Some("multi_study") {
+            anyhow::bail!("snapshot is not a multi-study snapshot");
+        }
+        let manifest = StudyManifest::from_json(
+            doc.get("manifest")
+                .ok_or_else(|| anyhow::anyhow!("snapshot missing 'manifest'"))?,
+        )?;
+        let recorded_target: u64 = doc
+            .get("events_processed")
+            .and_then(|v| v.as_i64())
+            .ok_or_else(|| anyhow::anyhow!("snapshot missing 'events_processed'"))?
+            as u64;
+        let target = upto
+            .map(|u| u.min(recorded_target))
+            .unwrap_or(recorded_target);
+        let mut sched = StudyScheduler::new(manifest, make_trainer);
+        if quiet {
+            sched.cluster.set_series_retention(false);
+        }
+        // "inputs" is the v2 unified log; v1 snapshots recorded online
+        // study submissions under "online" (kind implied).
+        let recorded = doc
+            .get("inputs")
+            .or_else(|| doc.get("online"))
+            .and_then(|v| v.as_arr())
+            .unwrap_or(&[]);
+        for (i, o) in recorded.iter().enumerate() {
+            let at = o
+                .get("at")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("recorded input missing 'at'"))?;
+            let after_events = o
+                .get("after_events")
+                .and_then(|v| v.as_i64())
+                .unwrap_or(0) as u64;
+            if after_events > target {
+                // Scrub point predates this input's enqueue: the state
+                // at `target` events had not seen it (nor any later
+                // input — the log is in arrival order).
+                break;
+            }
+            sched.replay_to(after_events)?;
+            let kind = o
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .unwrap_or("submit_study");
+            let study_name = || -> anyhow::Result<&str> {
+                o.get("study")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("recorded '{kind}' input missing 'study'"))
+            };
+            let session = || -> anyhow::Result<SessionId> {
+                o.get("session").and_then(SessionId::from_json).ok_or_else(|| {
+                    anyhow::anyhow!("recorded '{kind}' input missing a valid 'session' id")
+                })
+            };
+            let reissued = match kind {
+                "submit_study" => {
+                    let spec = StudySpec::from_json(
+                        o.get("study")
+                            .ok_or_else(|| anyhow::anyhow!("submit_study input missing 'study'"))?,
+                        i,
+                    )?;
+                    sched.submit_study(spec, at)
+                }
+                "pause_study" => sched.pause_study(study_name()?, at),
+                "resume_study" => sched.resume_study(study_name()?, at),
+                "stop_study" => sched.stop_study(study_name()?, at),
+                "pause_session" => sched.pause_session(study_name()?, session()?, at),
+                "resume_session" => sched.resume_session(study_name()?, session()?, at),
+                "stop_session" => sched.stop_session(study_name()?, session()?, at),
+                "set_quota" => {
+                    let quota = o.get("quota").and_then(|v| v.as_usize());
+                    let priority = o.get("priority").and_then(|v| v.as_f64());
+                    sched.set_quota(study_name()?, quota, priority, at)
+                }
+                other => anyhow::bail!("unknown recorded input kind '{other}'"),
+            };
+            if reissued.is_none() {
+                anyhow::bail!(
+                    "replay could not re-issue a recorded '{kind}' input at t={at} — snapshot does not match inputs"
+                );
+            }
+        }
+        sched.replay_to(target)?;
+        if quiet {
+            sched.cluster.set_series_retention(true);
+        }
+        Ok(sched)
+    }
+}
+
+// -- parallel-window machinery (see `StudyScheduler::parallel_window`) ----
+
+/// A pending event inside one study's window slice.  `key` is the real
+/// queue seq for pre-drained events and a temp key past the queue's next
+/// unissued seq for follow-on children — all temp keys sort after all
+/// real ones, and within a study they are issued in the same order a
+/// serial run issues real seqs, so local `(at, key)` order equals the
+/// study's serial subsequence order.
+#[derive(Clone, Copy)]
+struct LocalEv {
+    at: SimTime,
+    key: u64,
+    sid: SessionId,
+}
+
+impl PartialEq for LocalEv {
+    fn eq(&self, other: &LocalEv) -> bool {
+        self.at == other.at && self.key == other.key
+    }
+}
+
+impl Eq for LocalEv {}
+
+impl Ord for LocalEv {
+    // Reversed (earliest first, FIFO on ties) for the max-heap.
+    fn cmp(&self, other: &LocalEv) -> std::cmp::Ordering {
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| other.key.cmp(&self.key))
+    }
+}
+
+impl PartialOrd for LocalEv {
+    fn partial_cmp(&self, other: &LocalEv) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// A merged window event carrying its *real* sequence number.
+struct MergeEv {
+    at: SimTime,
+    seq: u64,
+    study: usize,
+    sid: SessionId,
+}
+
+impl PartialEq for MergeEv {
+    fn eq(&self, other: &MergeEv) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+
+impl Eq for MergeEv {}
+
+impl Ord for MergeEv {
+    // Reversed (earliest first, FIFO on ties) for the max-heap.
+    fn cmp(&self, other: &MergeEv) -> std::cmp::Ordering {
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for MergeEv {
+    fn partial_cmp(&self, other: &MergeEv) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Everything the serial dispatcher would have done for one interval
+/// event, recorded by a worker for the merge pass.
+struct StepRec {
+    at: SimTime,
+    /// Follow-on intervals in creation order: `(session, fire_at)`.
+    /// Real sequence numbers are assigned during the merge, at exactly
+    /// the points a serial run would assign them.
+    children: Vec<(SessionId, SimTime)>,
+    /// Shadow-cluster allocator calls, replayed onto the real cluster
+    /// to reproduce its counters and usage series byte-for-byte.
+    ops: Vec<ClusterOp>,
+    /// Whether the study's agent was finished after this event — the
+    /// merge re-derives `all_done` per replayed event from these.
+    finished_after: bool,
+    /// `agent.events.len()` after this event: the merge publishes it as
+    /// a progress mark so a logging caller can slice the agent's event
+    /// buffer per processed event, with that event's timestamp.
+    events_len: usize,
+}
+
+/// One study's unit of work for a window worker thread.
+struct WorkItem {
+    study: usize,
+    agent: StudyAgent,
+    shadow: Cluster,
+    initial: Vec<LocalEv>,
+    recs: VecDeque<StepRec>,
+}
+
+/// Whether a follow-on event still belongs to the current window:
+/// strictly before the barrier event (ties go to the barrier — its seq
+/// is lower than any child's) and within the time cut.
+fn window_holds(child_at: SimTime, open_until: SimTime, cut: SimTime) -> bool {
+    child_at < open_until && child_at <= cut
+}
+
+/// Phase 1 (worker): drain one study's window slice — its pre-drained
+/// events plus any follow-on intervals that land inside the window —
+/// against the shadow cluster, recording each event's effects.
+fn step_study_window(item: &mut WorkItem, temp_base: u64, open_until: SimTime, cut: SimTime) {
+    let mut heap: BinaryHeap<LocalEv> = item.initial.iter().copied().collect();
+    let mut next_temp = temp_base;
+    while let Some(LocalEv { at, key: _, sid }) = heap.pop() {
+        let mut reqs: Vec<ScheduleReq> = Vec::new();
+        item.agent
+            .on_interval_done(sid, &mut item.shadow, at, &mut reqs);
+        let ops = item.shadow.take_ops();
+        let mut children = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            let child_at = at + r.seconds.max(0.0);
+            if window_holds(child_at, open_until, cut) {
+                heap.push(LocalEv {
+                    at: child_at,
+                    key: next_temp,
+                    sid: r.session,
+                });
+                next_temp += 1;
+            }
+            children.push((r.session, child_at));
+        }
+        item.recs.push_back(StepRec {
+            at,
+            children,
+            ops,
+            finished_after: item.agent.finished,
+            events_len: item.agent.events.len(),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use chopt_core::trainer::surrogate::SurrogateTrainer;
+
+    fn study_json(name: &str, quota: usize) -> String {
+        format!(
+            r#"{{"name": "{name}", "quota": {quota}, "config": {{
+              "h_params": {{
+                "lr": {{"parameters": [0.005, 0.09], "distribution": "log_uniform",
+                        "type": "float", "p_range": [0.001, 0.2]}}
+              }},
+              "measure": "test/accuracy", "order": "descending", "step": 10,
+              "population": 4, "tune": {{"random": {{}}}},
+              "termination": {{"max_session_number": 6}},
+              "model": "surrogate:resnet", "max_epochs": 40, "max_gpus": 3,
+              "seed": 21
+            }}}}"#
+        )
+    }
+
+    fn manifest_json(borrow: bool) -> String {
+        format!(
+            r#"{{"cluster_gpus": 8, "borrow": {borrow},
+                "studies": [{}, {}]}}"#,
+            study_json("alice", 4),
+            study_json("bob", 4)
+        )
+    }
+
+    #[test]
+    fn manifest_parses_and_round_trips() {
+        let m = StudyManifest::from_json_str(&manifest_json(true)).unwrap();
+        assert_eq!(m.cluster_gpus, 8);
+        assert_eq!(m.studies.len(), 2);
+        assert_eq!(m.studies[0].name, "alice");
+        assert_eq!(m.studies[0].quota, 4);
+        assert!(m.borrow);
+        assert_eq!(m.master_period, 60.0);
+        let back = StudyManifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.studies[1].name, "bob");
+        assert_eq!(back.studies[1].quota, 4);
+        assert_eq!(back.borrow, m.borrow);
+    }
+
+    #[test]
+    fn default_quotas_split_the_cluster() {
+        let text = r#"{"cluster_gpus": 9, "studies": [
+            {"name": "a", "config": {"h_params": {}, "measure": "m",
+             "order": "descending", "tune": {"random": {}}}},
+            {"name": "b", "config": {"h_params": {}, "measure": "m",
+             "order": "descending", "tune": {"random": {}}}},
+            {"name": "c", "quota": 3, "config": {"h_params": {}, "measure": "m",
+             "order": "descending", "tune": {"random": {}}}}
+        ]}"#;
+        let m = StudyManifest::from_json_str(text).unwrap();
+        assert_eq!(m.studies[0].quota, 3);
+        assert_eq!(m.studies[1].quota, 3);
+        assert_eq!(m.studies[2].quota, 3);
+    }
+
+    #[test]
+    fn oversubscribed_quotas_rejected() {
+        let text = format!(
+            r#"{{"cluster_gpus": 6, "studies": [{}, {}]}}"#,
+            study_json("a", 4),
+            study_json("b", 4)
+        );
+        assert!(StudyManifest::from_json_str(&text).is_err());
+        let dup = format!(
+            r#"{{"cluster_gpus": 8, "studies": [{}, {}]}}"#,
+            study_json("same", 4),
+            study_json("same", 4)
+        );
+        assert!(StudyManifest::from_json_str(&dup).is_err());
+        // Names flow into file paths and routes: separators rejected.
+        for bad in ["a/b", "..", ".hidden", ""] {
+            let text = format!(
+                r#"{{"cluster_gpus": 8, "studies": [{}]}}"#,
+                study_json(bad, 4)
+            );
+            assert!(
+                StudyManifest::from_json_str(&text).is_err(),
+                "name {bad:?} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn two_studies_run_to_completion_deterministically() {
+        let run = || {
+            let m = StudyManifest::from_json_str(&manifest_json(false)).unwrap();
+            let mut sched = StudyScheduler::new(m, |study, id| {
+                Box::new(SurrogateTrainer::new(1000 * (study as u64 + 1) + id))
+                    as Box<dyn Trainer + Send>
+            });
+            sched.run_to_completion();
+            let out = sched.into_outcome();
+            assert_eq!(out.studies.len(), 2);
+            (
+                out.events_processed,
+                out.end_time,
+                out.studies
+                    .iter()
+                    .map(|s| s.agent.as_ref().and_then(|a| a.best()).map(|(_, m)| m))
+                    .collect::<Vec<_>>(),
+            )
+        };
+        let a = run();
+        assert!(a.2.iter().all(|b| b.is_some()));
+        assert_eq!(a, run());
+    }
+
+    #[test]
+    fn parallel_stepping_matches_serial_bit_for_bit() {
+        let run = |threads: usize| {
+            let m = StudyManifest::from_json_str(&manifest_json(true)).unwrap();
+            let mut sched = StudyScheduler::new(m, |study, id| {
+                Box::new(SurrogateTrainer::new(1000 * (study as u64 + 1) + id))
+                    as Box<dyn Trainer + Send>
+            });
+            sched.set_step_threads(threads);
+            sched.run_until(10_000.0);
+            let mid = sched.snapshot_json().to_string_pretty();
+            sched.run_to_completion();
+            (
+                mid,
+                sched.snapshot_json().to_string_pretty(),
+                sched.events_processed(),
+                sched.now(),
+            )
+        };
+        let serial = run(1);
+        for threads in [2, 8] {
+            assert_eq!(run(threads), serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn borrow_bonus_capped_relative_to_configured_base() {
+        // One study (quota 8, max_gpus 3) alone on an idle 16-GPU
+        // cluster: its solo target already carries the 2× bonus
+        // (min(8, ceil(3×2)) = 6); the cross-study reconcile pass must
+        // not compound the cap on top of it (12 before the clamp).
+        let text = format!(
+            r#"{{"cluster_gpus": 16, "borrow": true, "studies": [{}]}}"#,
+            study_json("solo", 8)
+        );
+        let m = StudyManifest::from_json_str(&text).unwrap();
+        let mut sched = StudyScheduler::new(m, |study, id| {
+            Box::new(SurrogateTrainer::new(100 * (study as u64 + 1) + id))
+                as Box<dyn Trainer + Send>
+        });
+        sched.run_until(120.0);
+        assert_eq!(sched.studies()[0].target(), 6);
+    }
+
+    #[test]
+    fn snapshot_round_trips_through_text() {
+        let m = StudyManifest::from_json_str(&manifest_json(true)).unwrap();
+        let mut sched = StudyScheduler::new(m, |study, id| {
+            Box::new(SurrogateTrainer::new(7 * (study as u64 + 1) + id)) as Box<dyn Trainer + Send>
+        });
+        sched.run_until(5_000.0);
+        let snap = sched.snapshot_json();
+        let snap = chopt_core::util::json::parse(&snap.to_string_pretty()).unwrap();
+        let restored = StudyScheduler::restore(&snap, |study, id| {
+            Box::new(SurrogateTrainer::new(7 * (study as u64 + 1) + id)) as Box<dyn Trainer + Send>
+        })
+        .unwrap();
+        assert_eq!(restored.now(), sched.now());
+        assert_eq!(restored.events_processed(), sched.events_processed());
+    }
+}

@@ -1,0 +1,14 @@
+//! `chopt-engine` — the simulation coordinator and its persistence.
+//!
+//! [`coordinator`] holds the steppable [`coordinator::SimEngine`], the
+//! per-study [`coordinator::Agent`], stop-and-go master policy, GPU
+//! pools, the submission queue, and the multi-tenant
+//! [`coordinator::StudyScheduler`] (fair share, borrow/preemption,
+//! deterministic parallel stepping).  [`storage`] persists runs:
+//! append-only [`storage::EventLog`]s, session/snapshot stores.
+//!
+//! The live/stored serving layers (`Platform`, `ReplaySource`) live
+//! above in `chopt-control`; this crate never renders a document.
+
+pub mod coordinator;
+pub mod storage;

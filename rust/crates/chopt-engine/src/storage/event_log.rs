@@ -1,0 +1,113 @@
+//! Append-only JSONL event log (one JSON object per line).
+//!
+//! Used by the CLI/examples to persist run histories that the viz server
+//! replays; also a debugging artifact (every pool transition is a line).
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use chopt_core::util::json::{self, Value as Json};
+
+pub struct EventLog {
+    path: PathBuf,
+    writer: BufWriter<File>,
+    written: u64,
+}
+
+impl EventLog {
+    /// Open (append) or create a log at `path`.
+    pub fn open(path: impl AsRef<Path>) -> std::io::Result<EventLog> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        Ok(EventLog {
+            path,
+            writer: BufWriter::new(file),
+            written: 0,
+        })
+    }
+
+    /// Append one event (compact single line).
+    pub fn append(&mut self, event: &Json) -> std::io::Result<()> {
+        let line = event.to_string_compact();
+        debug_assert!(!line.contains('\n'));
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.written += 1;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.writer.flush()
+    }
+
+    pub fn written(&self) -> u64 {
+        self.written
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Read a whole JSONL file back (skips blank lines; errors on bad JSON).
+    pub fn read_all(path: impl AsRef<Path>) -> anyhow::Result<Vec<Json>> {
+        let file = File::open(path)?;
+        let mut out = Vec::new();
+        for line in BufReader::new(file).lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            out.push(json::parse(&line)?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("chopt-test-{}-{name}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    #[test]
+    fn roundtrip() {
+        let path = tmp("roundtrip");
+        {
+            let mut log = EventLog::open(&path).unwrap();
+            log.append(&Json::obj().with("ev", Json::Str("launch".into()))).unwrap();
+            log.append(&Json::obj().with("ev", Json::Str("stop".into()))).unwrap();
+            assert_eq!(log.written(), 2);
+            log.flush().unwrap();
+        }
+        let events = EventLog::read_all(&path).unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[1].get("ev").unwrap().as_str(), Some("stop"));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn append_mode_preserves() {
+        let path = tmp("append");
+        {
+            let mut log = EventLog::open(&path).unwrap();
+            log.append(&Json::Num(1.0)).unwrap();
+            log.flush().unwrap();
+        }
+        {
+            let mut log = EventLog::open(&path).unwrap();
+            log.append(&Json::Num(2.0)).unwrap();
+            log.flush().unwrap();
+        }
+        assert_eq!(EventLog::read_all(&path).unwrap().len(), 2);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,15 @@
+//! Persistence: session store, JSONL event log, and snapshot GC
+//! accounting.  (The stored-run read models — `StoredRun` /
+//! `ReplaySource`, which serve `/api/v1` from a run directory with
+//! live-identical bodies — sit above in `chopt-control`.)
+//!
+//! The paper's motivation for the dead pool is storage pressure ("automl
+//! systems commonly create models a lot and it often takes up too much
+//! system storage space"); this module makes that concrete: snapshots of
+//! dead sessions are reclaimed, stopped sessions' snapshots are retained.
+
+mod event_log;
+mod store;
+
+pub use event_log::EventLog;
+pub use store::{SessionStore, SnapshotStore};

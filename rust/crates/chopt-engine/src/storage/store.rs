@@ -1,0 +1,192 @@
+//! Session result store and model-snapshot accounting.
+//!
+//! [`SessionStore`] persists finished CHOPT runs (sessions + metadata)
+//! as the JSON document the viz tool serves; [`SnapshotStore`] holds
+//! model snapshot blobs with dead-pool GC accounting.  The stored-run
+//! read models behind `chopt serve --store` (`StoredRun`,
+//! `ReplaySource`) live above in `chopt-control`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use chopt_core::nsml::{NsmlSession, SessionId};
+use chopt_core::util::json::{self, Value as Json};
+
+/// Persists finished CHOPT runs (sessions + metadata) as a JSON document
+/// the viz tool serves.
+#[derive(Debug, Default)]
+pub struct SessionStore {
+    runs: Vec<(String, Vec<NsmlSession>)>,
+}
+
+impl SessionStore {
+    pub fn new() -> SessionStore {
+        SessionStore::default()
+    }
+
+    /// Record one CHOPT run under a label (e.g. "session-1: lr only").
+    pub fn put_run(&mut self, label: &str, sessions: Vec<NsmlSession>) {
+        self.runs.push((label.to_string(), sessions));
+    }
+
+    pub fn runs(&self) -> &[(String, Vec<NsmlSession>)] {
+        &self.runs
+    }
+
+    pub fn to_json(&self) -> Json {
+        let runs = self
+            .runs
+            .iter()
+            .map(|(label, sessions)| {
+                let refs: Vec<&NsmlSession> = sessions.iter().collect();
+                SessionStore::run_json(label, &refs)
+            })
+            .collect();
+        Json::obj().with("runs", Json::Arr(runs))
+    }
+
+    /// One run as the `{"label", "sessions"}` object [`Self::to_json`]
+    /// emits — shared with live views that render straight from borrowed
+    /// sessions, so the owned and borrowed encodings cannot drift.
+    pub fn run_json(label: &str, sessions: &[&NsmlSession]) -> Json {
+        Json::obj()
+            .with("label", Json::Str(label.to_string()))
+            .with(
+                "sessions",
+                Json::Arr(sessions.iter().map(|s| s.to_json()).collect()),
+            )
+    }
+
+    /// Full store-shaped document from borrowed runs — the live platform
+    /// documents render through this instead of cloning every session
+    /// into a temporary store per refresh.
+    pub fn doc_from_refs(runs: &[(String, Vec<&NsmlSession>)]) -> Json {
+        Json::obj().with(
+            "runs",
+            Json::Arr(
+                runs.iter()
+                    .map(|(label, ss)| SessionStore::run_json(label, ss))
+                    .collect(),
+            ),
+        )
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())
+    }
+
+    /// Count of sessions across all runs.
+    pub fn session_count(&self) -> usize {
+        self.runs.iter().map(|(_, s)| s.len()).sum()
+    }
+
+    pub fn load_json(path: impl AsRef<Path>) -> anyhow::Result<Json> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(json::parse(&text)?)
+    }
+}
+
+/// Model snapshot store with dead-pool GC accounting.
+///
+/// Snapshots are byte blobs keyed by session; `gc` frees dead sessions'
+/// snapshots and reports reclaimed bytes (the paper's storage-pressure
+/// rationale for the dead pool, §3.2.1).
+#[derive(Debug, Default)]
+pub struct SnapshotStore {
+    blobs: HashMap<SessionId, Vec<u8>>,
+    reclaimed: u64,
+    dir: Option<PathBuf>,
+}
+
+impl SnapshotStore {
+    pub fn in_memory() -> SnapshotStore {
+        SnapshotStore::default()
+    }
+
+    /// Spill snapshots to disk under `dir` as well (optional).
+    pub fn on_disk(dir: impl AsRef<Path>) -> std::io::Result<SnapshotStore> {
+        std::fs::create_dir_all(&dir)?;
+        Ok(SnapshotStore {
+            dir: Some(dir.as_ref().to_path_buf()),
+            ..Default::default()
+        })
+    }
+
+    pub fn put(&mut self, id: SessionId, blob: Vec<u8>) -> std::io::Result<()> {
+        if let Some(dir) = &self.dir {
+            std::fs::write(dir.join(format!("{id}.ckpt")), &blob)?;
+        }
+        self.blobs.insert(id, blob);
+        Ok(())
+    }
+
+    pub fn get(&self, id: SessionId) -> Option<&[u8]> {
+        self.blobs.get(&id).map(|b| b.as_slice())
+    }
+
+    pub fn bytes_held(&self) -> u64 {
+        self.blobs.values().map(|b| b.len() as u64).sum()
+    }
+
+    /// Drop snapshots of `dead` sessions; returns bytes reclaimed.
+    pub fn gc(&mut self, dead: &[SessionId]) -> u64 {
+        let mut freed = 0u64;
+        for id in dead {
+            if let Some(blob) = self.blobs.remove(id) {
+                freed += blob.len() as u64;
+                if let Some(dir) = &self.dir {
+                    let _ = std::fs::remove_file(dir.join(format!("{id}.ckpt")));
+                }
+            }
+        }
+        self.reclaimed += freed;
+        freed
+    }
+
+    pub fn total_reclaimed(&self) -> u64 {
+        self.reclaimed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use chopt_core::hparam::Assignment;
+
+    #[test]
+    fn store_roundtrip() {
+        let mut st = SessionStore::new();
+        let mut s = NsmlSession::new(SessionId(1), Assignment::new(), "m", 0.0);
+        s.report(1, 0.5, 2.0);
+        st.put_run("run-a", vec![s]);
+        assert_eq!(st.session_count(), 1);
+        let j = st.to_json();
+        assert_eq!(j.get("runs").unwrap().as_arr().unwrap().len(), 1);
+        let path = std::env::temp_dir().join(format!("chopt-store-{}.json", std::process::id()));
+        st.save(&path).unwrap();
+        let loaded = SessionStore::load_json(&path).unwrap();
+        assert_eq!(
+            loaded.path("runs").unwrap().idx(0).unwrap().get("label").unwrap().as_str(),
+            Some("run-a")
+        );
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn snapshot_gc_reclaims() {
+        let mut ss = SnapshotStore::in_memory();
+        ss.put(SessionId(1), vec![0u8; 1000]).unwrap();
+        ss.put(SessionId(2), vec![0u8; 500]).unwrap();
+        assert_eq!(ss.bytes_held(), 1500);
+        let freed = ss.gc(&[SessionId(1), SessionId(99)]);
+        assert_eq!(freed, 1000);
+        assert_eq!(ss.bytes_held(), 500);
+        assert_eq!(ss.total_reclaimed(), 1000);
+        assert!(ss.get(SessionId(1)).is_none());
+        assert!(ss.get(SessionId(2)).is_some());
+    }
+}

@@ -1,0 +1,342 @@
+//! ASHA — Asynchronous Successive Halving (extension).
+//!
+//! The paper's future work asks for promotion policies that do not block
+//! on rung barriers; ASHA is the canonical answer: a configuration is
+//! promoted the moment it is in the top 1/eta of *results seen so far* at
+//! its rung, otherwise it stops.  No barrier, no idle GPUs waiting for
+//! stragglers — a good match for Stop-and-Go's elastic allocation.
+
+use std::collections::HashMap;
+
+use chopt_core::config::Order;
+use chopt_core::hparam::Space;
+use chopt_core::nsml::SessionId;
+use chopt_core::util::rng::Rng;
+
+use super::{better, Decision, Report, Trial, Tuner};
+
+pub struct Asha {
+    space: Space,
+    order: Order,
+    eta: usize,
+    /// Rung budgets: min_resource * eta^i, capped at max_resource.
+    rungs: Vec<usize>,
+    /// Results recorded per rung (measure only; promotion compares ranks).
+    rung_results: Vec<Vec<f64>>,
+    /// Session -> current rung membership.  A session is removed the
+    /// moment ASHA stops it (not-promoted, or top rung reached), so a
+    /// late report from a Stop-and-Go revival that trained past that
+    /// point resolves to an *unknown* session and is stopped without
+    /// touching any rung's promotion accounting (mirrors the Hyperband
+    /// straggler fix from PR 2 — the old `unwrap_or(&0)` default counted
+    /// such stragglers into rung 0 again).
+    session_rung: HashMap<SessionId, usize>,
+}
+
+impl Asha {
+    pub fn new(
+        space: Space,
+        order: Order,
+        min_resource: usize,
+        max_resource: usize,
+        eta: usize,
+    ) -> Asha {
+        let eta = eta.max(2);
+        let mut rungs = Vec::new();
+        let mut r = min_resource.max(1);
+        while r < max_resource {
+            rungs.push(r);
+            r = (r * eta).min(max_resource);
+        }
+        rungs.push(max_resource.max(1));
+        rungs.dedup();
+        let n = rungs.len();
+        Asha {
+            space,
+            order,
+            eta,
+            rungs,
+            rung_results: vec![Vec::new(); n],
+            session_rung: HashMap::new(),
+        }
+    }
+
+    /// Would a new result `measure` rank in the top 1/eta at `rung`?
+    fn promotable(&self, rung: usize, measure: f64) -> bool {
+        let results = &self.rung_results[rung];
+        // Count how many existing results beat `measure`.
+        let beaten_by = results
+            .iter()
+            .filter(|&&m| better(self.order, m, measure))
+            .count();
+        let total = results.len() + 1;
+        // Top 1/eta slots at this rung (at least 1 once eta results exist).
+        let slots = total / self.eta;
+        slots > 0 && beaten_by < slots
+    }
+
+    pub fn rung_budgets(&self) -> &[usize] {
+        &self.rungs
+    }
+}
+
+impl Tuner for Asha {
+    fn name(&self) -> &'static str {
+        "asha"
+    }
+
+    fn next_trial(&mut self, rng: &mut Rng) -> Option<Trial> {
+        // Unbounded stream of fresh configs at the base rung; the
+        // coordinator bounds concurrency and termination.
+        let hparams = self.space.sample(rng).ok()?;
+        Some(Trial::fresh(hparams, self.rungs[0]))
+    }
+
+    fn register(&mut self, id: SessionId, trial: &Trial) {
+        if trial.resume_of.is_none() {
+            self.session_rung.insert(id, 0);
+        }
+    }
+
+    fn report(&mut self, r: Report, _rng: &mut Rng) -> Decision {
+        // Membership gate: sessions ASHA already retired (stopped at a
+        // rung, or finished the top rung) have no entry — their late
+        // reports must not leak into rung accounting.
+        let Some(&rung) = self.session_rung.get(&r.id) else {
+            return Decision::Stop;
+        };
+        let budget = self.rungs[rung];
+        if r.epoch < budget {
+            return Decision::Continue { budget };
+        }
+        let promote = self.promotable(rung, r.measure);
+        self.rung_results[rung].push(r.measure);
+        if !promote || rung + 1 >= self.rungs.len() {
+            self.session_rung.remove(&r.id);
+            return Decision::Stop;
+        }
+        self.session_rung.insert(r.id, rung + 1);
+        Decision::Continue {
+            budget: self.rungs[rung + 1],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use chopt_core::config::ChoptConfig;
+
+    fn space() -> Space {
+        ChoptConfig::from_json_str(chopt_core::config::LISTING1_EXAMPLE)
+            .unwrap()
+            .space
+    }
+
+    fn mk() -> Asha {
+        Asha::new(space(), Order::Descending, 1, 27, 3)
+    }
+
+    #[test]
+    fn rung_ladder() {
+        let a = mk();
+        assert_eq!(a.rung_budgets(), &[1, 3, 9, 27]);
+        let b = Asha::new(space(), Order::Descending, 2, 20, 3);
+        assert_eq!(b.rung_budgets(), &[2, 6, 18, 20]);
+    }
+
+    #[test]
+    fn early_reports_continue_to_rung_budget() {
+        let mut a = mk();
+        let mut rng = Rng::new(1);
+        let trial = a.next_trial(&mut rng).unwrap();
+        a.register(SessionId(1), &trial);
+        let d = a.report(
+            Report {
+                id: SessionId(1),
+                epoch: 0,
+                measure: 0.1,
+            },
+            &mut rng,
+        );
+        assert_eq!(d, Decision::Continue { budget: 1 });
+    }
+
+    #[test]
+    fn asynchronous_promotion() {
+        let mut a = mk();
+        let mut rng = Rng::new(2);
+        // Feed 8 mediocre results at rung 0 first.
+        for i in 0..8 {
+            let t = a.next_trial(&mut rng).unwrap();
+            let id = SessionId(i);
+            a.register(id, &t);
+            let d = a.report(
+                Report {
+                    id,
+                    epoch: 1,
+                    measure: 0.1,
+                },
+                &mut rng,
+            );
+            // With eta=3, after >=2 prior results the third result can be
+            // promoted if it ties for top third; mediocre ties resolve by
+            // "beaten_by < slots" so identical scores promote some.
+            let _ = d;
+        }
+        // A clearly better result must be promoted to rung 1 (budget 3).
+        let t = a.next_trial(&mut rng).unwrap();
+        a.register(SessionId(99), &t);
+        let d = a.report(
+            Report {
+                id: SessionId(99),
+                epoch: 1,
+                measure: 0.9,
+            },
+            &mut rng,
+        );
+        assert_eq!(d, Decision::Continue { budget: 3 });
+    }
+
+    #[test]
+    fn bad_results_stop() {
+        let mut a = mk();
+        let mut rng = Rng::new(3);
+        for i in 0..6 {
+            let t = a.next_trial(&mut rng).unwrap();
+            a.register(SessionId(i), &t);
+            a.report(
+                Report {
+                    id: SessionId(i),
+                    epoch: 1,
+                    measure: 0.9,
+                },
+                &mut rng,
+            );
+        }
+        let t = a.next_trial(&mut rng).unwrap();
+        a.register(SessionId(50), &t);
+        let d = a.report(
+            Report {
+                id: SessionId(50),
+                epoch: 1,
+                measure: 0.01,
+            },
+            &mut rng,
+        );
+        assert_eq!(d, Decision::Stop);
+    }
+
+    #[test]
+    fn top_rung_stops_even_when_good() {
+        let mut a = Asha::new(space(), Order::Descending, 1, 3, 3);
+        let mut rng = Rng::new(4);
+        assert_eq!(a.rung_budgets(), &[1, 3]);
+        let t = a.next_trial(&mut rng).unwrap();
+        a.register(SessionId(1), &t);
+        // Promote through rung 0 (needs peers for a slot).
+        for i in 10..13 {
+            let t2 = a.next_trial(&mut rng).unwrap();
+            a.register(SessionId(i), &t2);
+            a.report(
+                Report {
+                    id: SessionId(i),
+                    epoch: 1,
+                    measure: 0.1,
+                },
+                &mut rng,
+            );
+        }
+        let d = a.report(
+            Report {
+                id: SessionId(1),
+                epoch: 1,
+                measure: 0.9,
+            },
+            &mut rng,
+        );
+        assert_eq!(d, Decision::Continue { budget: 3 });
+        // At the top rung, done is done.
+        let d2 = a.report(
+            Report {
+                id: SessionId(1),
+                epoch: 3,
+                measure: 0.95,
+            },
+            &mut rng,
+        );
+        assert_eq!(d2, Decision::Stop);
+    }
+
+    /// Regression (mirrors the Hyperband straggler fix): a session ASHA
+    /// already stopped can be revived by generic Stop-and-Go and report
+    /// again later.  That late report used to default to rung 0
+    /// (`unwrap_or(&0)`) and be counted into rung 0's results — an
+    /// absurdly good straggler would even *promote*, contaminating the
+    /// next rung's accounting.  It must be stopped without touching any
+    /// rung's results.
+    #[test]
+    fn straggler_report_does_not_contaminate_rung_accounting() {
+        let mut a = mk();
+        let mut rng = Rng::new(5);
+        // Fill rung 0 with a strong cohort so a weak newcomer stops.
+        for i in 0..6 {
+            let t = a.next_trial(&mut rng).unwrap();
+            a.register(SessionId(i), &t);
+            a.report(
+                Report {
+                    id: SessionId(i),
+                    epoch: 1,
+                    measure: 0.9,
+                },
+                &mut rng,
+            );
+        }
+        let t = a.next_trial(&mut rng).unwrap();
+        a.register(SessionId(50), &t);
+        let d = a.report(
+            Report {
+                id: SessionId(50),
+                epoch: 1,
+                measure: 0.01,
+            },
+            &mut rng,
+        );
+        assert_eq!(d, Decision::Stop);
+        assert!(!a.session_rung.contains_key(&SessionId(50)));
+
+        // The stopped session straggles back in (a Stop-and-Go revival
+        // that trained past rung 0) with an absurdly good result.
+        let counted_before: Vec<usize> = a.rung_results.iter().map(|r| r.len()).collect();
+        let d = a.report(
+            Report {
+                id: SessionId(50),
+                epoch: 3,
+                measure: 1e9, // would promote straight to rung 1 if counted
+            },
+            &mut rng,
+        );
+        assert_eq!(d, Decision::Stop, "retired straggler must be stopped");
+        let counted_after: Vec<usize> = a.rung_results.iter().map(|r| r.len()).collect();
+        assert_eq!(
+            counted_before, counted_after,
+            "straggler leaked into rung accounting"
+        );
+        assert!(!a.session_rung.contains_key(&SessionId(50)));
+
+        // A session that was never registered at all resolves the same way.
+        let d = a.report(
+            Report {
+                id: SessionId(999),
+                epoch: 1,
+                measure: 0.99,
+            },
+            &mut rng,
+        );
+        assert_eq!(d, Decision::Stop);
+        assert_eq!(
+            counted_after,
+            a.rung_results.iter().map(|r| r.len()).collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,0 +1,656 @@
+//! Hyperband (Li et al., 2017): successive-halving brackets over an
+//! epoch budget.
+//!
+//! Bracket `s` (from `s_max = floor(log_eta R)` down to 0) starts
+//! `n = ceil((s_max+1)/(s+1) · eta^s)` configurations at resource
+//! `r = R · eta^{-s}` and halves (well, eta-ths) the population each rung
+//! while multiplying the budget by eta.  Rung barriers map naturally onto
+//! CHOPT's stop pool: sessions awaiting promotion are `Pause`d (parked in
+//! the stop pool); promotions come back as `resume_of` trials; the
+//! unpromoted are evicted to the dead pool.
+
+use std::collections::HashMap;
+
+use chopt_core::config::Order;
+use chopt_core::hparam::Space;
+use chopt_core::nsml::SessionId;
+use chopt_core::util::rng::Rng;
+
+use super::{better, Decision, Report, Trial, Tuner};
+
+#[derive(Debug, Clone)]
+struct Rung {
+    /// Number of configs entering this rung.
+    n: usize,
+    /// Cumulative epoch budget at this rung.
+    budget: usize,
+}
+
+#[derive(Debug, Clone)]
+struct Bracket {
+    rungs: Vec<Rung>,
+}
+
+/// Compute the Hyperband bracket schedule for (R, eta).
+fn brackets(max_resource: usize, eta: usize) -> Vec<Bracket> {
+    let r = max_resource.max(1) as f64;
+    let eta_f = eta.max(2) as f64;
+    let s_max = r.ln() / eta_f.ln();
+    let s_max = s_max.floor() as i64;
+    let b = (s_max + 1) as f64;
+    let mut out = Vec::new();
+    for s in (0..=s_max).rev() {
+        let n = ((b / (s as f64 + 1.0)) * eta_f.powi(s as i32)).ceil() as usize;
+        let r0 = r * eta_f.powi(-(s as i32));
+        let mut rungs = Vec::new();
+        for i in 0..=(s as usize) {
+            let ni = ((n as f64) * eta_f.powi(-(i as i32))).floor() as usize;
+            let ri = (r0 * eta_f.powi(i as i32)).round() as usize;
+            rungs.push(Rung {
+                n: ni.max(1),
+                budget: ri.clamp(1, max_resource),
+            });
+        }
+        out.push(Bracket { rungs });
+    }
+    out
+}
+
+pub struct Hyperband {
+    space: Space,
+    order: Order,
+    max_resource: usize,
+    brackets: Vec<Bracket>,
+    /// Index of the active bracket.
+    bracket_idx: usize,
+    /// Active rung within the bracket.
+    rung_idx: usize,
+    /// Fresh launches made for rung 0 of the active bracket.
+    launched: usize,
+    /// Completed (id, measure) results for the active rung.
+    results: Vec<(SessionId, f64)>,
+    /// Active-rung members that will never report (operator-killed, or a
+    /// promotion shortfall carried from the previous rung): the barrier
+    /// counts them as arrived-with-no-result so the surviving cohort is
+    /// not stalled waiting on the dead.
+    retired: usize,
+    /// Promotions waiting to be handed out as resume trials.
+    promotions: Vec<(SessionId, usize)>,
+    /// Sessions the coordinator should move stop→dead.
+    evictions: Vec<SessionId>,
+    /// Hyperparameters by session (to refill resumes' Trial).
+    hparams: HashMap<SessionId, chopt_core::hparam::Assignment>,
+    /// (bracket, rung) each session belongs to.  Fresh registrations join
+    /// the active bracket's rung 0; promotions move the session at
+    /// hand-out time.  `report` only counts a result toward the barrier
+    /// when the session's membership matches the active rung — late
+    /// reports (e.g. a Stop-and-Go revival finishing after
+    /// `complete_rung_if_ready` advanced) used to leak into the *next*
+    /// rung's barrier.
+    membership: HashMap<SessionId, (usize, usize)>,
+}
+
+impl Hyperband {
+    pub fn new(space: Space, order: Order, max_resource: usize, eta: usize) -> Hyperband {
+        Hyperband {
+            space,
+            order,
+            max_resource,
+            brackets: brackets(max_resource, eta),
+            bracket_idx: 0,
+            rung_idx: 0,
+            launched: 0,
+            results: Vec::new(),
+            retired: 0,
+            promotions: Vec::new(),
+            evictions: Vec::new(),
+            hparams: HashMap::new(),
+            membership: HashMap::new(),
+        }
+    }
+
+    fn active(&self) -> Option<&Bracket> {
+        self.brackets.get(self.bracket_idx)
+    }
+
+    fn rung(&self) -> Option<&Rung> {
+        self.active().and_then(|b| b.rungs.get(self.rung_idx))
+    }
+
+    fn complete_rung_if_ready(&mut self) {
+        let Some(rung) = self.rung().cloned() else { return };
+        if self.results.len() + self.retired < rung.n {
+            return;
+        }
+        let Some(bracket) = self.active().cloned() else { return };
+        let is_last = self.rung_idx + 1 >= bracket.rungs.len();
+        if is_last {
+            // Bracket finished; everything in results is done (already
+            // Stopped by budget). Advance to the next bracket.
+            self.bracket_idx += 1;
+            self.rung_idx = 0;
+            self.launched = 0;
+            self.results.clear();
+            self.retired = 0;
+            return;
+        }
+        // Promote the top n_{i+1}.
+        let keep = bracket.rungs[self.rung_idx + 1].n.min(self.results.len());
+        let order = self.order;
+        self.results.sort_by(|a, b| {
+            if better(order, a.1, b.1) {
+                std::cmp::Ordering::Less
+            } else if better(order, b.1, a.1) {
+                std::cmp::Ordering::Greater
+            } else {
+                a.0.cmp(&b.0)
+            }
+        });
+        let next_budget = bracket.rungs[self.rung_idx + 1].budget;
+        for (i, (id, _)) in self.results.drain(..).enumerate() {
+            if i < keep {
+                self.promotions.push((id, next_budget));
+            } else {
+                self.evictions.push(id);
+            }
+        }
+        self.rung_idx += 1;
+        // Retirements can leave fewer survivors than the next rung
+        // expects; carry the shortfall so its barrier is not waiting on
+        // members that were never promoted.
+        self.retired = bracket.rungs[self.rung_idx].n.saturating_sub(keep);
+    }
+}
+
+impl Tuner for Hyperband {
+    fn name(&self) -> &'static str {
+        "hyperband"
+    }
+
+    fn next_trial(&mut self, rng: &mut Rng) -> Option<Trial> {
+        // Resume promotions first (they hold rung state).
+        if let Some((id, budget)) = self.promotions.pop() {
+            // A promoted session without a stored assignment is a broken
+            // invariant (it trained rung 0 with *some* hparams that are
+            // now lost); resuming it with an empty assignment would
+            // silently train a default model, so fail loudly instead.
+            let hp = self.hparams.get(&id).cloned().unwrap_or_else(|| {
+                panic!("hyperband: promoting {id} but its hparams were never registered")
+            });
+            // The session now belongs to the rung it is promoted into
+            // (complete_rung_if_ready already advanced rung_idx).
+            self.membership.insert(id, (self.bracket_idx, self.rung_idx));
+            return Some(Trial {
+                hparams: hp,
+                budget,
+                clone_of: None,
+                resume_of: Some(id),
+            });
+        }
+        // Fresh launches for rung 0 of the active bracket.
+        let rung0 = self.active()?.rungs.first()?.clone();
+        if self.rung_idx == 0 && self.launched < rung0.n {
+            let hparams = self.space.sample(rng).ok()?;
+            self.launched += 1;
+            return Some(Trial::fresh(hparams, rung0.budget));
+        }
+        None
+    }
+
+    fn register(&mut self, id: SessionId, trial: &Trial) {
+        // Stored for fresh launches *and* resumes: a resumed session must
+        // keep its assignment reachable for later promotions (before this,
+        // a restore-by-replay that re-registered only fresh trials left
+        // promoted sessions without hparams).
+        self.hparams.insert(id, trial.hparams.clone());
+        if trial.resume_of.is_none() {
+            self.membership.insert(id, (self.bracket_idx, self.rung_idx));
+        }
+    }
+
+    fn report(&mut self, r: Report, _rng: &mut Rng) -> Decision {
+        let Some(&(b, ri)) = self.membership.get(&r.id) else {
+            return Decision::Stop; // unknown/evicted session: nothing to count
+        };
+        if b != self.bracket_idx || ri != self.rung_idx {
+            // Straggler from an already-completed rung (or an earlier
+            // bracket): its barrier is long gone, so the result must not
+            // leak into the *active* rung's barrier.  If the session
+            // still holds a pending promotion, park it until the
+            // promotion resumes it properly; otherwise it was evicted or
+            // superseded — stop it.
+            return if self.promotions.iter().any(|&(id, _)| id == r.id) {
+                Decision::Pause
+            } else {
+                Decision::Stop
+            };
+        }
+        let Some(rung) = self.rung().cloned() else {
+            return Decision::Stop;
+        };
+        if r.epoch < rung.budget {
+            return Decision::Continue {
+                budget: rung.budget,
+            };
+        }
+        if self.results.iter().any(|&(id, _)| id == r.id) {
+            // Double report at the same barrier (revived straggler that
+            // trained past its budget): already counted once, wait for
+            // the rung to settle its fate.
+            return Decision::Pause;
+        }
+        // Rung budget reached: record and pause (or finish at final rung).
+        self.results.push((r.id, r.measure));
+        let is_final_budget = rung.budget >= self.max_resource
+            || self
+                .active()
+                .map(|b| self.rung_idx + 1 >= b.rungs.len())
+                .unwrap_or(true);
+        let decision = if is_final_budget {
+            Decision::Stop
+        } else {
+            Decision::Pause
+        };
+        self.complete_rung_if_ready();
+        decision
+    }
+
+    fn done(&self) -> bool {
+        self.bracket_idx >= self.brackets.len()
+    }
+
+    fn take_evictions(&mut self) -> Vec<SessionId> {
+        let evicted = std::mem::take(&mut self.evictions);
+        for id in &evicted {
+            // Evicted sessions can never be promoted again; drop their
+            // bookkeeping (a later straggler report resolves to Stop).
+            self.hparams.remove(id);
+            self.membership.remove(id);
+        }
+        evicted
+    }
+
+    /// Operator kill: the session will never report, so the barrier it
+    /// belongs to must not wait on it.  A queued promotion was already
+    /// counted toward the *active* rung's cohort at advance time, so
+    /// dropping one is also a retirement there.
+    fn retire(&mut self, id: SessionId) {
+        let before = self.promotions.len();
+        self.promotions.retain(|&(pid, _)| pid != id);
+        if self.promotions.len() < before {
+            self.retired += 1;
+        }
+        if let Some((b, r)) = self.membership.remove(&id) {
+            if b == self.bracket_idx && r == self.rung_idx {
+                // Whether it reported already (parked at the barrier) or
+                // not, the member is gone: drop any recorded result so a
+                // dead session is never promoted, and count it retired —
+                // the barrier sum stays consistent in both cases.
+                self.results.retain(|&(sid, _)| sid != id);
+                self.retired += 1;
+            }
+        }
+        self.hparams.remove(&id);
+        self.complete_rung_if_ready();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use chopt_core::config::ChoptConfig;
+
+    fn space() -> Space {
+        ChoptConfig::from_json_str(chopt_core::config::LISTING1_EXAMPLE)
+            .unwrap()
+            .space
+    }
+
+    #[test]
+    fn bracket_schedule_matches_li_et_al() {
+        // R=81, eta=3 -> s_max=4, first bracket: n=81 configs at r=1.
+        let bs = brackets(81, 3);
+        assert_eq!(bs.len(), 5);
+        assert_eq!(bs[0].rungs[0].n, 81);
+        assert_eq!(bs[0].rungs[0].budget, 1);
+        assert_eq!(bs[0].rungs.len(), 5);
+        assert_eq!(bs[0].rungs[4].budget, 81);
+        assert_eq!(bs[0].rungs[4].n, 1);
+        // Last bracket: n = s_max+1 = 5 configs straight at R.
+        assert_eq!(bs[4].rungs.len(), 1);
+        assert_eq!(bs[4].rungs[0].budget, 81);
+        assert_eq!(bs[4].rungs[0].n, 5);
+    }
+
+    #[test]
+    fn full_bracket_flow_promotes_best() {
+        // R=9, eta=3: bracket 0 has rungs (n=9,r=1),(n=3,r=3),(n=1,r=9).
+        let mut t = Hyperband::new(space(), Order::Descending, 9, 3);
+        let mut rng = Rng::new(1);
+        let mut ids = Vec::new();
+        while let Some(trial) = t.next_trial(&mut rng) {
+            let id = SessionId(ids.len() as u64);
+            t.register(id, &trial);
+            assert_eq!(trial.budget, 1);
+            ids.push(id);
+        }
+        assert_eq!(ids.len(), 9);
+        // Report rung 0: measure = id (so 6,7,8 are best).
+        let mut pauses = 0;
+        for &id in &ids {
+            let d = t.report(
+                Report {
+                    id,
+                    epoch: 1,
+                    measure: id.0 as f64,
+                },
+                &mut rng,
+            );
+            if d == Decision::Pause {
+                pauses += 1;
+            }
+        }
+        assert_eq!(pauses, 9);
+        // 6 evicted, 3 promoted with budget 3.
+        let ev = t.take_evictions();
+        assert_eq!(ev.len(), 6);
+        let mut resumed = Vec::new();
+        while let Some(trial) = t.next_trial(&mut rng) {
+            if let Some(rid) = trial.resume_of {
+                assert_eq!(trial.budget, 3);
+                resumed.push(rid);
+            } else {
+                break;
+            }
+        }
+        let mut resumed_ids: Vec<u64> = resumed.iter().map(|r| r.0).collect();
+        resumed_ids.sort_unstable();
+        assert_eq!(resumed_ids, vec![6, 7, 8]);
+    }
+
+    /// An operator-killed rung member (Tuner::retire) must not stall its
+    /// cohort's barrier, and the shortfall carries into the next rung.
+    #[test]
+    fn retired_member_does_not_stall_the_rung_barrier() {
+        // R=9, eta=3: bracket 0 rungs (n=9,r=1),(n=3,r=3),(n=1,r=9).
+        let mut t = Hyperband::new(space(), Order::Descending, 9, 3);
+        let mut rng = Rng::new(3);
+        let mut ids = Vec::new();
+        while let Some(trial) = t.next_trial(&mut rng) {
+            let id = SessionId(ids.len() as u64);
+            t.register(id, &trial);
+            ids.push(id);
+        }
+        assert_eq!(ids.len(), 9);
+        // 8 of 9 report; the 9th is killed by the operator instead.
+        for &id in &ids[..8] {
+            t.report(
+                Report {
+                    id,
+                    epoch: 1,
+                    measure: id.0 as f64,
+                },
+                &mut rng,
+            );
+        }
+        t.retire(ids[8]);
+        // Barrier completed without the dead member: promotions flow and
+        // the retired session is never among them.
+        let mut resumed = Vec::new();
+        while let Some(trial) = t.next_trial(&mut rng) {
+            match trial.resume_of {
+                Some(rid) => resumed.push(rid),
+                None => break,
+            }
+        }
+        assert_eq!(resumed.len(), 3, "rung must advance past the dead member");
+        assert!(!resumed.contains(&ids[8]));
+        // Retiring a *promoted* session keeps the next rung's barrier
+        // honest too: the two survivors' reports complete it.
+        t.retire(resumed[0]);
+        for (k, &id) in resumed[1..].iter().enumerate() {
+            t.register(id, &Trial {
+                hparams: chopt_core::hparam::Assignment::new(),
+                budget: 3,
+                clone_of: None,
+                resume_of: Some(id),
+            });
+            t.report(
+                Report {
+                    id,
+                    epoch: 3,
+                    measure: 100.0 + k as f64,
+                },
+                &mut rng,
+            );
+        }
+        // Next rung (n=1) promotion arrives despite the retirement.
+        let last = t.next_trial(&mut rng).expect("final-rung promotion");
+        assert!(last.resume_of.is_some());
+        assert_ne!(last.resume_of, Some(resumed[0]));
+    }
+
+    #[test]
+    fn final_rung_stops_outright() {
+        let mut t = Hyperband::new(space(), Order::Descending, 9, 3);
+        let mut rng = Rng::new(2);
+        // Drain bracket 0 completely.
+        let mut ids = Vec::new();
+        while let Some(trial) = t.next_trial(&mut rng) {
+            let id = SessionId(100 + ids.len() as u64);
+            t.register(id, &trial);
+            ids.push(id);
+        }
+        for &id in &ids {
+            t.report(
+                Report {
+                    id,
+                    epoch: 1,
+                    measure: id.0 as f64,
+                },
+                &mut rng,
+            );
+        }
+        t.take_evictions();
+        // Promote and finish rung 1.
+        let mut rung1 = Vec::new();
+        while let Some(trial) = t.next_trial(&mut rng) {
+            match trial.resume_of {
+                Some(rid) => rung1.push(rid),
+                None => break,
+            }
+        }
+        for &id in &rung1 {
+            let d = t.report(
+                Report {
+                    id,
+                    epoch: 3,
+                    measure: id.0 as f64,
+                },
+                &mut rng,
+            );
+            assert_eq!(d, Decision::Pause);
+        }
+        // Rung 2 (final, budget 9): the single survivor must get Stop.
+        let mut last = Vec::new();
+        while let Some(trial) = t.next_trial(&mut rng) {
+            match trial.resume_of {
+                Some(rid) => {
+                    assert_eq!(trial.budget, 9);
+                    last.push(rid);
+                }
+                None => break,
+            }
+        }
+        assert_eq!(last.len(), 1);
+        let d = t.report(
+            Report {
+                id: last[0],
+                epoch: 9,
+                measure: 1.0,
+            },
+            &mut rng,
+        );
+        assert_eq!(d, Decision::Stop);
+    }
+
+    #[test]
+    fn done_after_all_brackets() {
+        let mut t = Hyperband::new(space(), Order::Descending, 3, 3);
+        let mut rng = Rng::new(3);
+        assert!(!t.done());
+        // R=3,eta=3: bracket0 rungs (n=2? ...) just drive everything.
+        let mut guard = 0;
+        let mut minted = 0u64;
+        while !t.done() && guard < 1000 {
+            guard += 1;
+            let mut progressed = false;
+            while let Some(trial) = t.next_trial(&mut rng) {
+                progressed = true;
+                // Promotions resume their original session; only fresh
+                // trials get a new id (the agent behaves the same way).
+                let id = trial.resume_of.unwrap_or_else(|| {
+                    minted += 1;
+                    SessionId(1000 + minted)
+                });
+                t.register(id, &trial);
+                let budget = trial.budget;
+                t.report(
+                    Report {
+                        id,
+                        epoch: budget,
+                        measure: rng.f64(),
+                    },
+                    &mut rng,
+                );
+                t.take_evictions();
+            }
+            if !progressed {
+                break;
+            }
+        }
+        assert!(t.done(), "hyperband should exhaust its brackets");
+    }
+
+    #[test]
+    fn straggler_report_does_not_contaminate_next_rung() {
+        // R=9, eta=3: rung 0 (n=9, r=1) → rung 1 (n=3, r=3) → rung 2.
+        let mut t = Hyperband::new(space(), Order::Descending, 9, 3);
+        let mut rng = Rng::new(7);
+        let mut ids = Vec::new();
+        while let Some(trial) = t.next_trial(&mut rng) {
+            let id = SessionId(ids.len() as u64);
+            t.register(id, &trial);
+            ids.push(id);
+        }
+        for &id in &ids {
+            t.report(
+                Report {
+                    id,
+                    epoch: 1,
+                    measure: id.0 as f64,
+                },
+                &mut rng,
+            );
+        }
+        // Rung advanced: 6,7,8 promoted, 0..=5 evicted.
+        let evicted = t.take_evictions();
+        assert_eq!(evicted.len(), 6);
+        // An evicted rung-0 session straggles in (a Stop-and-Go revival
+        // that trained past its rung) — it must be stopped, not counted
+        // toward rung 1's 3-result barrier.
+        let d = t.report(
+            Report {
+                id: SessionId(2),
+                epoch: 3,
+                measure: 1e9, // absurdly good: would win rung 1 if counted
+            },
+            &mut rng,
+        );
+        assert_eq!(d, Decision::Stop);
+        assert!(t.results.is_empty(), "straggler leaked into rung 1 barrier");
+        // A *promoted* session reporting before its resume trial was
+        // handed out parks again instead of being double-counted.
+        let d = t.report(
+            Report {
+                id: SessionId(6),
+                epoch: 1,
+                measure: 6.0,
+            },
+            &mut rng,
+        );
+        assert_eq!(d, Decision::Pause);
+        assert!(t.results.is_empty());
+        // Rung 1 then completes with exactly the promoted trio.
+        let mut promoted = Vec::new();
+        while let Some(trial) = t.next_trial(&mut rng) {
+            match trial.resume_of {
+                Some(rid) => promoted.push(rid),
+                None => break,
+            }
+        }
+        assert_eq!(promoted.len(), 3);
+        for &id in &promoted {
+            t.report(
+                Report {
+                    id,
+                    epoch: 3,
+                    measure: id.0 as f64,
+                },
+                &mut rng,
+            );
+        }
+        // Exactly one survivor promoted into the final rung, and it is
+        // the true best (8), not the straggler.
+        let last = t.next_trial(&mut rng).unwrap();
+        assert_eq!(last.resume_of, Some(SessionId(8)));
+        assert_eq!(last.budget, 9);
+    }
+
+    #[test]
+    fn promoted_trials_carry_registered_hparams() {
+        let mut t = Hyperband::new(space(), Order::Descending, 9, 3);
+        let mut rng = Rng::new(8);
+        let mut by_id = std::collections::HashMap::new();
+        let mut ids = Vec::new();
+        while let Some(trial) = t.next_trial(&mut rng) {
+            let id = SessionId(ids.len() as u64);
+            t.register(id, &trial);
+            by_id.insert(id, trial.hparams.clone());
+            ids.push(id);
+        }
+        for &id in &ids {
+            t.report(
+                Report {
+                    id,
+                    epoch: 1,
+                    measure: id.0 as f64,
+                },
+                &mut rng,
+            );
+        }
+        t.take_evictions();
+        while let Some(trial) = t.next_trial(&mut rng) {
+            let Some(rid) = trial.resume_of else { break };
+            // Regression: this used to be `unwrap_or_default()` — a lost
+            // map entry silently resumed with an *empty* assignment.
+            assert!(!trial.hparams.is_empty(), "promotion lost its hparams");
+            assert_eq!(&trial.hparams, &by_id[&rid]);
+            // Re-registering the resume (as the agent now does) must keep
+            // the assignment reachable for the next promotion.
+            t.register(rid, &trial);
+            assert_eq!(t.hparams.get(&rid), Some(&by_id[&rid]));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "hparams were never registered")]
+    fn promotion_without_registered_hparams_is_a_hard_error() {
+        let mut t = Hyperband::new(space(), Order::Descending, 9, 3);
+        let mut rng = Rng::new(9);
+        // Force the broken invariant directly: a promotion for a session
+        // that was never registered.
+        t.promotions.push((SessionId(999), 3));
+        let _ = t.next_trial(&mut rng);
+    }
+}

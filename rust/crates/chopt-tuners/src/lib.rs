@@ -1,0 +1,206 @@
+//! HyperOpt algorithms hosted by CHOPT (paper §2.1, §3.4.2).
+//!
+//! All tuners implement the ask/tell [`Tuner`] trait the agent drives:
+//! `next_trial` asks for new work (fresh sessions, PBT clones, or
+//! Hyperband/ASHA promotions of paused sessions), `report` tells the tuner
+//! one early-stopping-interval result and returns a [`Decision`] for that
+//! session.  The tuners are pure algorithm state — no threads, no clocks —
+//! so the same code runs under the real-time coordinator and the
+//! virtual-time simulator.
+//!
+//! Hosted algorithms:
+//! * [`random::RandomSearch`] — random search, optionally with the
+//!   median-rule early stopping (the paper's "random search with early
+//!   stopping").
+//! * [`pbt::Pbt`] — Population Based Training (Jaderberg et al., 2017)
+//!   with truncation / binary-tournament exploit and perturb / resample
+//!   explore.
+//! * [`hyperband::Hyperband`] — Hyperband (Li et al., 2017) over
+//!   successive-halving brackets.
+//! * [`asha::Asha`] — asynchronous successive halving (extension; the
+//!   paper's future-work direction of promotion-based scheduling without
+//!   rung barriers).
+
+pub mod asha;
+pub mod hyperband;
+pub mod median_stop;
+pub mod pbt;
+pub mod random;
+
+use chopt_core::config::{ChoptConfig, Order, TuneAlgo};
+use chopt_core::hparam::Assignment;
+use chopt_core::nsml::SessionId;
+use chopt_core::util::rng::Rng;
+
+/// A unit of work the tuner wants scheduled.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trial {
+    pub hparams: Assignment,
+    /// Train until this epoch count (inclusive target, not an increment).
+    pub budget: usize,
+    /// Copy model weights from this session before training (PBT exploit).
+    pub clone_of: Option<SessionId>,
+    /// Resume this paused session instead of creating a new one
+    /// (Hyperband/ASHA rung promotion; rides the stop pool).
+    pub resume_of: Option<SessionId>,
+}
+
+impl Trial {
+    pub fn fresh(hparams: Assignment, budget: usize) -> Trial {
+        Trial {
+            hparams,
+            budget,
+            clone_of: None,
+            resume_of: None,
+        }
+    }
+}
+
+/// Tuner verdict for a session after one reported interval.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Decision {
+    /// Keep training toward `budget` epochs.
+    Continue { budget: usize },
+    /// Early-stop this session (goes to stop/dead pool per stop_ratio).
+    Stop,
+    /// Pause awaiting promotion (Hyperband rung barrier); parks in the
+    /// stop pool and may come back via `Trial::resume_of`.
+    Pause,
+    /// PBT: overwrite weights from `clone_of` and continue with new
+    /// hyperparameters (exploit + explore in place).
+    Mutate {
+        hparams: Assignment,
+        clone_of: SessionId,
+        budget: usize,
+    },
+}
+
+/// One reported result interval.
+#[derive(Debug, Clone, Copy)]
+pub struct Report {
+    pub id: SessionId,
+    pub epoch: usize,
+    pub measure: f64,
+}
+
+/// The ask/tell tuner interface.
+pub trait Tuner: Send {
+    fn name(&self) -> &'static str;
+
+    /// Next unit of work, or None if the algorithm has nothing to launch
+    /// right now (it may still be waiting on reports).
+    fn next_trial(&mut self, rng: &mut Rng) -> Option<Trial>;
+
+    /// The coordinator assigned `id` to the trial returned earlier.
+    fn register(&mut self, id: SessionId, trial: &Trial);
+
+    /// Tell the tuner one interval result; get the verdict for `id`.
+    fn report(&mut self, r: Report, rng: &mut Rng) -> Decision;
+
+    /// Algorithm-internal completion (all brackets exhausted, etc.).
+    /// The coordinator still enforces `termination` on top of this.
+    fn done(&self) -> bool {
+        false
+    }
+
+    /// Sessions the tuner no longer wants kept resumable (the coordinator
+    /// moves them stop-pool → dead-pool).  Drained on each call.
+    fn take_evictions(&mut self) -> Vec<SessionId> {
+        Vec::new()
+    }
+
+    /// The coordinator killed `id` outright (operator `stop_session`
+    /// command): it will never report again.  Report-driven tuners can
+    /// ignore this (the default), but synchronous-barrier tuners must
+    /// adjust their cohort accounting — a Hyperband rung waiting on a
+    /// member that can never report would otherwise stall forever.
+    fn retire(&mut self, _id: SessionId) {}
+}
+
+/// Build the tuner a config asks for.
+pub fn build(cfg: &ChoptConfig) -> Box<dyn Tuner> {
+    match &cfg.tune {
+        TuneAlgo::Random => Box::new(random::RandomSearch::new(
+            cfg.space.clone(),
+            cfg.order,
+            cfg.max_epochs,
+            cfg.early_stopping_enabled(),
+        )),
+        TuneAlgo::Pbt { exploit, explore } => Box::new(pbt::Pbt::new(
+            cfg.space.clone(),
+            cfg.order,
+            cfg.population,
+            cfg.max_epochs,
+            pbt::ExploitStrategy::parse(exploit),
+            pbt::ExploreStrategy::parse(explore),
+        )),
+        TuneAlgo::Hyperband { max_resource, eta } => Box::new(hyperband::Hyperband::new(
+            cfg.space.clone(),
+            cfg.order,
+            (*max_resource).min(cfg.max_epochs),
+            *eta,
+        )),
+        TuneAlgo::Asha {
+            min_resource,
+            max_resource,
+            eta,
+        } => Box::new(asha::Asha::new(
+            cfg.space.clone(),
+            cfg.order,
+            *min_resource,
+            (*max_resource).min(cfg.max_epochs),
+            *eta,
+        )),
+    }
+}
+
+/// Shared helper: compare two measures under an order with NaN safety.
+pub(crate) fn better(order: Order, a: f64, b: f64) -> bool {
+    if a.is_nan() {
+        return false;
+    }
+    if b.is_nan() {
+        return true;
+    }
+    order.better(a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use chopt_core::config::ChoptConfig;
+
+    #[test]
+    fn factory_builds_each_algo() {
+        let base = chopt_core::config::LISTING1_EXAMPLE;
+        let c = ChoptConfig::from_json_str(base).unwrap();
+        assert_eq!(build(&c).name(), "pbt");
+        let r = base.replace(
+            "{\"pbt\": {\"exploit\": \"truncation\", \"explore\": \"perturb\"}}",
+            "{\"random\": {}}",
+        );
+        assert_eq!(
+            build(&ChoptConfig::from_json_str(&r).unwrap()).name(),
+            "random"
+        );
+        let h = base.replace(
+            "{\"pbt\": {\"exploit\": \"truncation\", \"explore\": \"perturb\"}}",
+            "{\"hyperband\": {\"max_resource\": 27, \"eta\": 3}}",
+        );
+        assert_eq!(
+            build(&ChoptConfig::from_json_str(&h).unwrap()).name(),
+            "hyperband"
+        );
+        let a = base.replace(
+            "{\"pbt\": {\"exploit\": \"truncation\", \"explore\": \"perturb\"}}",
+            "{\"asha\": {\"min_resource\": 1, \"max_resource\": 27, \"eta\": 3}}",
+        );
+        assert_eq!(build(&ChoptConfig::from_json_str(&a).unwrap()).name(), "asha");
+    }
+
+    #[test]
+    fn better_handles_nan() {
+        assert!(!better(Order::Descending, f64::NAN, 0.5));
+        assert!(better(Order::Descending, 0.5, f64::NAN));
+    }
+}

@@ -1,0 +1,117 @@
+//! Median stopping rule (the early-stopping policy of Google Vizier and
+//! the "random search with early stopping" baseline in the paper).
+//!
+//! A session is stopped at epoch `e` if its measure is worse than the
+//! median of all *other* sessions' measures at the same epoch, once at
+//! least `min_peers` peers have reported there.
+
+use std::collections::HashMap;
+
+use chopt_core::config::Order;
+use chopt_core::nsml::SessionId;
+
+#[derive(Debug)]
+pub struct MedianStopper {
+    order: Order,
+    /// epoch -> (session, measure) observations.
+    by_epoch: HashMap<usize, Vec<(SessionId, f64)>>,
+    /// Don't stop anything before this epoch (grace period).
+    pub grace_epochs: usize,
+    /// Minimum peer observations at an epoch before the rule applies.
+    pub min_peers: usize,
+}
+
+impl MedianStopper {
+    pub fn new(order: Order) -> MedianStopper {
+        MedianStopper {
+            order,
+            by_epoch: HashMap::new(),
+            grace_epochs: 1,
+            min_peers: 3,
+        }
+    }
+
+    /// Record an observation and decide: should `id` be early-stopped?
+    pub fn observe_and_judge(&mut self, id: SessionId, epoch: usize, measure: f64) -> bool {
+        let obs = self.by_epoch.entry(epoch).or_default();
+        obs.push((id, measure));
+        if epoch <= self.grace_epochs {
+            return false;
+        }
+        let peers: Vec<f64> = obs
+            .iter()
+            .filter(|(sid, _)| *sid != id)
+            .map(|(_, m)| m)
+            .copied()
+            .collect();
+        if peers.len() < self.min_peers {
+            return false;
+        }
+        let median = median(&peers);
+        // Stop when strictly worse than the running median.
+        match self.order {
+            Order::Descending => measure < median,
+            Order::Ascending => measure > median,
+        }
+    }
+}
+
+fn median(xs: &[f64]) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn needs_min_peers() {
+        let mut m = MedianStopper::new(Order::Descending);
+        assert!(!m.observe_and_judge(SessionId(1), 5, 0.1));
+        assert!(!m.observe_and_judge(SessionId(2), 5, 0.9));
+        assert!(!m.observe_and_judge(SessionId(3), 5, 0.9));
+        // Fourth report has 3 peers; 0.1 < median(0.9,0.9,0.9).
+        assert!(m.observe_and_judge(SessionId(4), 5, 0.1));
+    }
+
+    #[test]
+    fn grace_period_protects() {
+        let mut m = MedianStopper::new(Order::Descending);
+        m.grace_epochs = 10;
+        for i in 0..5 {
+            assert!(!m.observe_and_judge(SessionId(i), 5, i as f64 / 10.0));
+        }
+    }
+
+    #[test]
+    fn good_sessions_survive() {
+        let mut m = MedianStopper::new(Order::Descending);
+        for i in 0..4 {
+            m.observe_and_judge(SessionId(i), 7, 0.5);
+        }
+        assert!(!m.observe_and_judge(SessionId(9), 7, 0.8));
+    }
+
+    #[test]
+    fn ascending_order_flips() {
+        let mut m = MedianStopper::new(Order::Ascending);
+        for i in 0..4 {
+            m.observe_and_judge(SessionId(i), 3, 1.0);
+        }
+        assert!(m.observe_and_judge(SessionId(8), 3, 2.0)); // higher loss -> stop
+        assert!(!m.observe_and_judge(SessionId(9), 3, 0.5));
+    }
+
+    #[test]
+    fn median_helper() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+}

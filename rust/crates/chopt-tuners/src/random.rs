@@ -1,0 +1,132 @@
+//! Random search, with optional median-rule early stopping.
+
+use chopt_core::config::Order;
+use chopt_core::hparam::Space;
+use chopt_core::nsml::SessionId;
+use chopt_core::util::rng::Rng;
+
+use super::median_stop::MedianStopper;
+use super::{Decision, Report, Trial, Tuner};
+
+/// Random search: every trial is an independent draw from the space and
+/// trains to `max_epochs` unless the median rule stops it first.
+pub struct RandomSearch {
+    space: Space,
+    max_epochs: usize,
+    early_stop: bool,
+    stopper: MedianStopper,
+    launched: usize,
+}
+
+impl RandomSearch {
+    pub fn new(space: Space, order: Order, max_epochs: usize, early_stop: bool) -> RandomSearch {
+        RandomSearch {
+            space,
+            max_epochs,
+            early_stop,
+            stopper: MedianStopper::new(order),
+            launched: 0,
+        }
+    }
+}
+
+impl Tuner for RandomSearch {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn next_trial(&mut self, rng: &mut Rng) -> Option<Trial> {
+        // Unbounded stream of fresh draws; the coordinator enforces
+        // termination (max_session_number / time / threshold).
+        let hparams = self.space.sample(rng).ok()?;
+        self.launched += 1;
+        Some(Trial::fresh(hparams, self.max_epochs))
+    }
+
+    fn register(&mut self, _id: SessionId, _trial: &Trial) {}
+
+    fn report(&mut self, r: Report, _rng: &mut Rng) -> Decision {
+        if r.epoch >= self.max_epochs {
+            return Decision::Stop; // budget exhausted (coordinator marks Finished)
+        }
+        if self.early_stop && self.stopper.observe_and_judge(r.id, r.epoch, r.measure) {
+            return Decision::Stop;
+        }
+        Decision::Continue {
+            budget: self.max_epochs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use chopt_core::config::ChoptConfig;
+
+    fn space() -> Space {
+        ChoptConfig::from_json_str(chopt_core::config::LISTING1_EXAMPLE)
+            .unwrap()
+            .space
+    }
+
+    #[test]
+    fn streams_fresh_trials() {
+        let mut t = RandomSearch::new(space(), Order::Descending, 10, false);
+        let mut rng = Rng::new(1);
+        let a = t.next_trial(&mut rng).unwrap();
+        let b = t.next_trial(&mut rng).unwrap();
+        assert_ne!(a.hparams, b.hparams);
+        assert_eq!(a.budget, 10);
+        assert!(a.clone_of.is_none() && a.resume_of.is_none());
+    }
+
+    #[test]
+    fn without_es_runs_to_budget() {
+        let mut t = RandomSearch::new(space(), Order::Descending, 5, false);
+        let mut rng = Rng::new(2);
+        // Terrible measure, but ES off -> continue.
+        let d = t.report(
+            Report {
+                id: SessionId(1),
+                epoch: 2,
+                measure: 0.0,
+            },
+            &mut rng,
+        );
+        assert_eq!(d, Decision::Continue { budget: 5 });
+        let d2 = t.report(
+            Report {
+                id: SessionId(1),
+                epoch: 5,
+                measure: 0.0,
+            },
+            &mut rng,
+        );
+        assert_eq!(d2, Decision::Stop);
+    }
+
+    #[test]
+    fn with_es_stops_laggards() {
+        let mut t = RandomSearch::new(space(), Order::Descending, 100, true);
+        let mut rng = Rng::new(3);
+        for i in 0..4 {
+            t.report(
+                Report {
+                    id: SessionId(i),
+                    epoch: 10,
+                    measure: 0.9,
+                },
+                &mut rng,
+            );
+        }
+        let d = t.report(
+            Report {
+                id: SessionId(99),
+                epoch: 10,
+                measure: 0.1,
+            },
+            &mut rng,
+        );
+        assert_eq!(d, Decision::Stop);
+    }
+}

@@ -14,9 +14,10 @@
 //!   tolerance band.
 //! * anything else — reported, never enforced.
 //!
-//! Metrics in the fresh file but absent from the baseline are ignored, so
-//! baselines can be adopted incrementally (pin only what a CI runner has
-//! actually produced).  Re-baseline intentionally with:
+//! Metrics in the fresh file but absent from the baseline are *skipped*
+//! (reported, never failed), so baselines can be adopted incrementally —
+//! wall-clock numbers are pinned only once a CI runner has actually
+//! produced them.  Re-baseline intentionally with:
 //!
 //!     cp BENCH_<name>.json rust/benches/baselines/
 //!
@@ -121,6 +122,7 @@ fn main() {
 
     let mut failures = 0usize;
     let mut gated = 0usize;
+    let mut skipped = 0usize;
     for base_path in &baselines {
         let file = base_path.file_name().unwrap().to_string_lossy().to_string();
         let base = match load(base_path) {
@@ -190,9 +192,24 @@ fn main() {
                 failures += 1;
             }
         }
+        // Fresh metrics with no committed baseline are skipped, never
+        // failed: wall-clock numbers can only be pinned from a CI
+        // runner's own output, so a new bench metric surfaces here
+        // until someone adopts a baseline for it.
+        if let Some(fresh) = cur.get("metrics").and_then(|m| m.as_obj()) {
+            for (key, fv) in fresh {
+                if metrics.iter().any(|(k, _)| k == key) {
+                    continue;
+                }
+                let Some(v) = fv.as_f64() else { continue };
+                skipped += 1;
+                println!("  skip {file} {key}: {v} (no committed baseline — not enforced)");
+            }
+        }
     }
     println!(
-        "bench_gate: {gated} metric(s) gated across {} baseline file(s), {failures} failure(s)",
+        "bench_gate: {gated} metric(s) gated across {} baseline file(s), \
+         {skipped} skipped (no baseline), {failures} failure(s)",
         baselines.len()
     );
     if failures > 0 {

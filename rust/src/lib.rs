@@ -4,9 +4,10 @@
 //! Optimization Framework for Cloud-Based Machine Learning Platforms"*
 //! (Kim et al., 2018) as a three-layer Rust + JAX + Pallas system:
 //!
-//! * **Layer 3 (this crate)** — the CHOPT coordinator: session queue,
-//!   agents, master agent with leader election, live/stop/dead session
-//!   pools, and the *Stop-and-Go* shared-cluster resource controller.
+//! * **Layer 3 (this workspace)** — the CHOPT coordinator: session
+//!   queue, agents, master agent with leader election, live/stop/dead
+//!   session pools, and the *Stop-and-Go* shared-cluster resource
+//!   controller.
 //! * **Layer 2** — JAX models (residual-MLP image classifier, BiDAF-lite
 //!   QA model) AOT-lowered to HLO text under `artifacts/`.
 //! * **Layer 1** — Pallas kernels (fused linear, SGD-momentum, random
@@ -21,22 +22,83 @@
 //! cluster scale (hundreds of models x 300 epochs) runs against the
 //! [`trainer::surrogate`] learning-curve model in virtual time, while the
 //! end-to-end examples drive *real* training through PJRT.
+//!
+//! ## Workspace layout
+//!
+//! This crate is a thin **facade** over the workspace members, kept so
+//! every published `chopt::...` path (tests, benches, examples, the CLI)
+//! survives the crate split unchanged:
+//!
+//! * [`chopt_core`] — events, hparam, config, nsml, surrogate trainers,
+//!   data, analysis/experiments, util (re-exported at the old paths).
+//! * [`chopt_cluster`] — the GPU [`cluster`] allocator + load traces.
+//! * [`chopt_tuners`] — the [`tuner`] zoo behind the `Tuner` trait.
+//! * [`chopt_engine`] — the [`coordinator`] engine/agent/scheduler and
+//!   [`storage`].
+//! * [`chopt_control`] — the [`viz`] control plane (api/server/sse,
+//!   `Platform`/`MultiPlatform`, stored runs, exports).
+//!
+//! Only the PJRT [`runtime`] and [`trainer::real`] live in this facade
+//! crate directly: they are the one seam that needs the `xla` FFI, and
+//! keeping them here keeps every workspace member FFI-free.
 
-pub mod analysis;
-pub mod cluster;
-pub mod experiments;
-pub mod config;
-pub mod coordinator;
-pub mod data;
-pub mod events;
-pub mod hparam;
-pub mod nsml;
+pub use chopt_core::{analysis, config, data, events, experiments, hparam, nsml, util};
+
+// Re-export the core macros at their historical crate-root paths
+// (`chopt::log_warn!` etc.); `#[macro_export]` already places them at
+// the root of `chopt_core`, this carries them through the facade.
+pub use chopt_core::{log_debug, log_error, log_info, log_warn, prop_assert};
+
+/// The shared-cluster GPU allocator and external load traces
+/// (re-export of [`chopt_cluster`]).
+pub mod cluster {
+    pub use chopt_cluster::*;
+}
+
+/// The tuner zoo: `Tuner` trait + random/median-stop/Hyperband/ASHA/PBT
+/// (re-export of [`chopt_tuners`]).
+pub mod tuner {
+    pub use chopt_tuners::*;
+}
+
+/// Trainers behind one trait: the surrogate family from
+/// [`chopt_core::trainer`] plus the PJRT-backed [`real::RealTrainer`],
+/// which lives in this facade crate so the workspace members stay
+/// FFI-free.
+pub mod trainer {
+    pub use chopt_core::trainer::{surrogate, EpochResult, Trainer};
+
+    // Inside an inline module the declaration's components are appended
+    // to this file's directory, so "real.rs" resolves to
+    // rust/src/trainer/real.rs.
+    #[path = "real.rs"]
+    pub mod real;
+}
+
 pub mod runtime;
-pub mod storage;
-pub mod trainer;
-pub mod tuner;
-pub mod util;
-pub mod viz;
+
+/// The simulation coordinator (re-export of
+/// [`chopt_engine::coordinator`]) plus the live `Platform` /
+/// `MultiPlatform` layer from [`chopt_control`], which historically
+/// lived under this module.
+pub mod coordinator {
+    pub use chopt_control::platform::{MultiPlatform, Platform};
+    pub use chopt_engine::coordinator::*;
+}
+
+/// Persistence (re-export of [`chopt_engine::storage`]) plus the
+/// stored-run read models from [`chopt_control`], which historically
+/// lived under this module.
+pub mod storage {
+    pub use chopt_control::stored::{ReplaySource, StoredRun};
+    pub use chopt_engine::storage::*;
+}
+
+/// The control plane and analytic visual tool (re-export of
+/// [`chopt_control`]).
+pub mod viz {
+    pub use chopt_control::*;
+}
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

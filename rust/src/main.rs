@@ -57,7 +57,12 @@ fn cli() -> Command {
                     "output directory (events-<study>.jsonl, snapshot.json, fair_share.json)",
                 )
                 .opt("chunk", Some("3600"), "virtual seconds per progress report")
-                .opt("snapshot-every", Some("14400"), "virtual seconds between snapshots"),
+                .opt("snapshot-every", Some("14400"), "virtual seconds between snapshots")
+                .opt(
+                    "step-threads",
+                    Some("1"),
+                    "worker threads for windowed study stepping (bit-identical output)",
+                ),
         )
         .subcommand(Command::new(
             "example-config",
@@ -81,6 +86,11 @@ fn cli() -> Command {
                 .opt("gpus", Some("8"), "simulated cluster size (--live)")
                 .opt("chunk", Some("1800"), "virtual seconds advanced per refresh (--live)")
                 .opt("throttle-ms", Some("250"), "wall-clock pause between refreshes (--live)")
+                .opt(
+                    "step-threads",
+                    Some("1"),
+                    "worker threads for windowed study stepping (multi-study --live)",
+                )
                 .opt(
                     "api-token",
                     None,
@@ -309,7 +319,7 @@ fn cmd_watch(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
 /// `serve --store` on a multi run directory all resolve to the
 /// library's one definition (restore-by-replay requires the factory
 /// the original run used).
-fn multi_trainer(study: usize, id: u64) -> Box<dyn Trainer> {
+fn multi_trainer(study: usize, id: u64) -> Box<dyn Trainer + Send> {
     surrogate::default_multi_factory(study, id)
 }
 
@@ -383,6 +393,7 @@ fn cmd_multi(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
     platform = platform
         .with_event_logs(&out_dir)?
         .with_snapshots(&snap_path, snap_every);
+    platform.set_step_threads(m.get_u64("step-threads").unwrap_or(1) as usize);
 
     loop {
         let n = platform.advance(chunk);
@@ -663,6 +674,7 @@ fn cmd_serve_live_multi(m: &chopt::util::cli::Matches, port: u16) -> anyhow::Res
 
     let feed = live_feed(m)?;
     let mut platform = MultiPlatform::new(manifest, multi_trainer).with_progress_feed(feed.clone());
+    platform.set_step_threads(m.get_u64("step-threads").unwrap_or(1) as usize);
     let server =
         viz::server::VizServer::start_with(port, viz::server::Routes::new(), server_config(m))?;
     server.serve_events(feed, SSE_HEARTBEAT);

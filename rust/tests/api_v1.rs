@@ -89,8 +89,8 @@ fn multi_manifest() -> StudyManifest {
     StudyManifest::from_json_str(&text).unwrap()
 }
 
-fn multi_trainer(study: usize, id: u64) -> Box<dyn Trainer> {
-    Box::new(SurrogateTrainer::new(9_000 + 1_000 * study as u64 + id)) as Box<dyn Trainer>
+fn multi_trainer(study: usize, id: u64) -> Box<dyn Trainer + Send> {
+    Box::new(SurrogateTrainer::new(9_000 + 1_000 * study as u64 + id)) as Box<dyn Trainer + Send>
 }
 
 /// Issue one HTTP request against the server while serving the inbox

@@ -57,8 +57,8 @@ fn study_seed(study: usize) -> u64 {
     7_000 + 1_000 * study as u64
 }
 
-fn multi_factory() -> impl FnMut(usize, u64) -> Box<dyn Trainer> {
-    |study, id| Box::new(SurrogateTrainer::new(study_seed(study) ^ id)) as Box<dyn Trainer>
+fn multi_factory() -> impl FnMut(usize, u64) -> Box<dyn Trainer + Send> {
+    |study, id| Box::new(SurrogateTrainer::new(study_seed(study) ^ id)) as Box<dyn Trainer + Send>
 }
 
 fn solo_factory(study: usize) -> impl FnMut(u64) -> Box<dyn Trainer> {

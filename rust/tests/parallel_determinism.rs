@@ -1,0 +1,190 @@
+//! Property test for the parallel-stepping contract: `--step-threads`
+//! is purely a wall-clock knob.  For every seed × manifest shape we
+//! run the same multi-study workload at 1, 2, and 8 step threads with
+//! event logging and periodic snapshots attached, then assert the
+//! observable outputs are **bit-identical** to the serial run:
+//!
+//! * the per-study `events-<name>.jsonl` logs (raw file bytes),
+//! * a mid-run and a final scheduler snapshot (compact JSON bytes),
+//! * every study leaderboard document and the fair-share document
+//!   (compact JSON bytes),
+//! * the final per-study agent state (sessions, best, finish time,
+//!   and the full in-memory event stream).
+//!
+//! Serial stepping is the specification; the windowed parallel path in
+//! `StudyScheduler::parallel_window` must be indistinguishable from it
+//! everywhere a user (or the control plane) can look.
+
+use chopt::coordinator::{MultiPlatform, StudyAgent, StudyManifest};
+use chopt::trainer::surrogate::SurrogateTrainer;
+use chopt::trainer::Trainer;
+
+fn config_json(step: i64, max_sessions: usize, max_gpus: usize, seed: u64) -> String {
+    format!(
+        r#"{{
+          "h_params": {{
+            "lr": {{"parameters": [0.005, 0.09], "distribution": "log_uniform",
+                    "type": "float", "p_range": [0.001, 0.2]}},
+            "momentum": {{"parameters": [0.5, 0.99], "distribution": "uniform",
+                    "type": "float", "p_range": [0.1, 0.999]}}
+          }},
+          "measure": "test/accuracy",
+          "order": "descending",
+          "step": {step},
+          "population": 4,
+          "tune": {{"random": {{}}}},
+          "termination": {{"max_session_number": {max_sessions}}},
+          "model": "surrogate:resnet",
+          "max_epochs": 60,
+          "max_gpus": {max_gpus},
+          "seed": {seed}
+        }}"#
+    )
+}
+
+/// Four tenants on 8 GPUs: three PBT-style studies with different
+/// session budgets plus one no-early-stop study, so windows mix
+/// interval cadences and studies finish at different times.
+fn manifest(borrow: bool, seed: u64) -> StudyManifest {
+    let text = format!(
+        r#"{{"cluster_gpus": 8, "borrow": {borrow}, "studies": [
+            {{"name": "s0", "quota": 2, "config": {}}},
+            {{"name": "s1", "quota": 2, "config": {}}},
+            {{"name": "s2", "quota": 2, "config": {}}},
+            {{"name": "s3", "quota": 2, "config": {}}}
+        ]}}"#,
+        config_json(10, 6, 2, seed),
+        config_json(10, 8, 2, seed + 1),
+        config_json(-1, 4, 2, seed + 2),
+        config_json(10, 6, 2, seed + 3)
+    );
+    StudyManifest::from_json_str(&text).unwrap()
+}
+
+fn factory(seed: u64) -> impl FnMut(usize, u64) -> Box<dyn Trainer + Send> {
+    move |study, id| {
+        Box::new(SurrogateTrainer::new(
+            (seed.wrapping_mul(1_000) + 97 * study as u64) ^ id,
+        )) as Box<dyn Trainer + Send>
+    }
+}
+
+/// Everything that characterizes one study's final agent, stringified
+/// so [`Fingerprint`] stays `PartialEq + Debug`.
+fn agent_key(a: &StudyAgent) -> String {
+    format!(
+        "created={} sessions={} best={:?} finished_at={:?} events={:?}",
+        a.created,
+        a.sessions.len(),
+        a.best().map(|(sid, m)| (sid.0, format!("{m:.12}"))),
+        a.finished_at,
+        a.events,
+    )
+}
+
+/// Every observable output of one run, for exact cross-thread-count
+/// comparison.
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    logs: Vec<(String, String)>,
+    mid_snapshot: String,
+    final_snapshot: String,
+    mid_leaderboards: Vec<String>,
+    final_leaderboards: Vec<String>,
+    fair_share: String,
+    agents: Vec<(String, String)>,
+    end_time: String,
+    events_processed: u64,
+}
+
+fn run(borrow: bool, seed: u64, threads: usize) -> Fingerprint {
+    let dir = std::env::temp_dir().join(format!(
+        "chopt-par-det-{}-{borrow}-{seed}-{threads}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let snap_path = dir.join("snapshot.json");
+
+    let mut platform = MultiPlatform::new(manifest(borrow, seed), factory(seed))
+        .with_event_logs(&dir)
+        .unwrap()
+        .with_snapshots(&snap_path, 2_000.0);
+    platform.set_step_threads(threads);
+
+    platform.run_until(6_000.0);
+    let mid_snapshot = platform.snapshot_now().unwrap().to_string_compact();
+    let names: Vec<String> = platform
+        .scheduler()
+        .studies()
+        .iter()
+        .map(|s| s.name().to_string())
+        .collect();
+    let mid_leaderboards = names
+        .iter()
+        .map(|n| platform.study_leaderboard_doc(n, 10).to_string_compact())
+        .collect();
+
+    platform.run_to_completion(1_000.0);
+    let final_snapshot = platform.snapshot_now().unwrap().to_string_compact();
+    let final_leaderboards = names
+        .iter()
+        .map(|n| platform.study_leaderboard_doc(n, 10).to_string_compact())
+        .collect();
+    let fair_share = platform.fair_share_doc().to_string_compact();
+
+    let outcome = platform.into_outcome();
+    let agents = outcome
+        .studies
+        .iter()
+        .map(|s| {
+            let key = s.agent.as_ref().map(agent_key).unwrap_or_default();
+            (s.name.clone(), key)
+        })
+        .collect();
+    let logs = names
+        .iter()
+        .map(|n| {
+            let path = dir.join(format!("events-{n}.jsonl"));
+            (n.clone(), std::fs::read_to_string(path).unwrap_or_default())
+        })
+        .collect();
+
+    let fp = Fingerprint {
+        logs,
+        mid_snapshot,
+        final_snapshot,
+        mid_leaderboards,
+        final_leaderboards,
+        fair_share,
+        agents,
+        end_time: format!("{:.9}", outcome.end_time),
+        events_processed: outcome.events_processed,
+    };
+    let _ = std::fs::remove_dir_all(&dir);
+    fp
+}
+
+/// The property: across seeds, borrow modes, and thread counts, every
+/// observable output matches the serial run byte for byte.
+#[test]
+fn parallel_stepping_is_bit_identical_across_seeds_and_threads() {
+    for (borrow, seed) in [(false, 100_u64), (true, 777), (false, 424_242)] {
+        let serial = run(borrow, seed, 1);
+        assert!(
+            serial.events_processed > 100,
+            "workload too small to exercise windows (borrow={borrow} seed={seed})"
+        );
+        assert!(
+            serial.logs.iter().all(|(_, body)| !body.is_empty()),
+            "every study must produce a non-empty event log (borrow={borrow} seed={seed})"
+        );
+        for threads in [2, 8] {
+            let parallel = run(borrow, seed, threads);
+            assert_eq!(
+                serial, parallel,
+                "parallel run diverged (borrow={borrow} seed={seed} threads={threads})"
+            );
+        }
+    }
+}
