@@ -35,6 +35,8 @@ fn main() {
         master_period: 250.0,
         horizon,
         failures: Vec::new(),
+        scenario: None,
+        retry: chopt::coordinator::RetryPolicy::default(),
     };
     let out = run_sim(setup, |id| {
         Box::new(SurrogateTrainer::new(400 + id)) as Box<dyn Trainer>

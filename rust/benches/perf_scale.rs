@@ -8,10 +8,12 @@
 
 use std::time::{Duration, Instant};
 
-use chopt::cluster::{Cluster, Owner};
+use chopt::cluster::{
+    Cluster, DiurnalLoad, FlashCrowd, Owner, Scenario, SpotReclaimWave, WeatherSource,
+};
 use chopt::config::ChoptConfig;
 use chopt::coordinator::{
-    MultiPlatform, StopAndGoPolicy, StudyManifest, StudyScheduler, StudySpec,
+    MultiPlatform, RetryPolicy, StopAndGoPolicy, StudyManifest, StudyScheduler, StudySpec,
 };
 use chopt::trainer::surrogate::SurrogateTrainer;
 use chopt::trainer::Trainer;
@@ -61,10 +63,34 @@ fn scale_manifest() -> StudyManifest {
         studies,
         policy: StopAndGoPolicy::default(),
         trace: None,
+        scenario: None,
+        retry: RetryPolicy::default(),
         master_period: 60.0,
         horizon: 400.0 * 24.0 * 3600.0,
         borrow: true,
     }
+}
+
+/// The scale manifest with adversarial weather attached: two demand
+/// sources polled at every master tick plus reclaim waves that crash
+/// four studies mid-run (backoff + revival churn).  Demand stays small
+/// (≲10% of the cluster) so the comparison against section A measures
+/// scenario-engine *overhead*, not a different workload.
+fn weather_manifest() -> StudyManifest {
+    let mut m = scale_manifest();
+    m.scenario = Some(Scenario::new(vec![
+        WeatherSource::Diurnal(DiurnalLoad::new(CLUSTER_GPUS, 0.05, 0.04, 30_000.0, 0.01, 9)),
+        WeatherSource::FlashCrowd(FlashCrowd::new(
+            CLUSTER_GPUS,
+            0.08,
+            15_000.0,
+            0.0,
+            3_000.0,
+            10,
+        )),
+        WeatherSource::SpotReclaim(SpotReclaimWave::new(STUDIES, 2, 10_000.0, 20_000.0, 2, 11)),
+    ]));
+    m
 }
 
 fn factory(study: usize, id: u64) -> Box<dyn Trainer + Send> {
@@ -261,6 +287,51 @@ fn main() {
         .metric("parallel_step_wall_secs", par_wall)
         .metric("parallel_step_events_per_sec", par_evps)
         .metric("parallel_step_speedup_x", par_speedup);
+
+    // -- G. scenario-engine overhead on the dense 64-study run -------------
+    // Section A's plain serial run is the reference.  The same manifest
+    // with weather attached polls two demand sources at every master
+    // tick and rides out two reclaim waves (4 crashed studies, backoff,
+    // revival).  `scenario_overhead_speedup_x = plain_wall / weather_wall`
+    // is pinned HigherBetter in the committed baseline at 0.909, i.e.
+    // CI fails if the scenario engine costs more than ~10% end to end.
+    let t3 = Instant::now();
+    let mut wx = StudyScheduler::new(weather_manifest(), factory);
+    wx.run_to_completion();
+    let wx_wall = t3.elapsed().as_secs_f64();
+    assert!(wx.is_done(), "weather run must drain");
+    let (fails_applied, fails_skipped) = wx.fail_stats();
+    assert!(fails_applied >= 4, "reclaim waves must land: applied {fails_applied}");
+    let recovered = wx.studies().iter().filter(|s| s.restarts() > 0).count();
+    assert!(recovered >= 1, "crashed studies must restart");
+    assert!(
+        wx.studies().iter().all(|s| s.done()),
+        "every study must finish under weather"
+    );
+    let wx_events = wx.events_processed();
+    let overhead = wall / wx_wall.max(1e-9);
+    println!(
+        "scenario weather: {wx_events} events, {fails_applied} crashes applied \
+         ({fails_skipped} skipped), {recovered} studies recovered, {wx_wall:.2}s wall \
+         -> {overhead:.3}x vs plain serial"
+    );
+
+    // Bit-identity under weather: 8 step threads must replay the dense
+    // scenario exactly (weather-bearing ticks take the serial path).
+    let mut wx8 = StudyScheduler::new(weather_manifest(), factory);
+    wx8.set_step_threads(8);
+    wx8.run_to_completion();
+    assert_eq!(wx8.events_processed(), wx_events, "weather event count diverged at 8 threads");
+    assert_eq!(wx8.now(), wx.now(), "weather virtual end time diverged at 8 threads");
+    assert_eq!(
+        wx8.snapshot_json().to_string_compact(),
+        wx.snapshot_json().to_string_compact(),
+        "weather snapshot diverged at 8 threads"
+    );
+    out.metric("scenario_events_total", wx_events as f64)
+        .metric("scenario_fails_applied", fails_applied as f64)
+        .metric("scenario_wall_secs", wx_wall)
+        .metric("scenario_overhead_speedup_x", overhead);
 
     match out.save() {
         Ok(path) => println!("wrote {}", path.display()),

@@ -7,7 +7,12 @@
 //! the series Fig. 8 plots.
 
 mod allocator;
+mod scenario;
 mod trace;
 
 pub use allocator::{AllocError, Cluster, ClusterOp, Owner};
+pub use scenario::{
+    DegradedNode, DiurnalLoad, FaultEvent, FlashCrowd, Scenario, ScenarioSource, SpotReclaimWave,
+    WeatherSource,
+};
 pub use trace::{ExternalLoadTrace, TraceZone};

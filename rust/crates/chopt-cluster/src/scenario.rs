@@ -1,0 +1,571 @@
+//! Adversarial cluster weather: composable scenario sources.
+//!
+//! A scenario describes *what the cluster does to you* — external users
+//! surging, spot instances being reclaimed, racks going degraded — as
+//! opposed to the benign single Fig. 8 trace.  Every source is a pure
+//! function of `(parameters, seed, virtual time)`: demand is sampled at
+//! master ticks and fault events are enumerated over tick windows, so a
+//! restored run re-polls identical weather and the whole scenario is
+//! replay-safe by construction (nothing but the parameters is ever
+//! serialized — no cursors, no consumed-flags).
+//!
+//! Sources compose through [`Scenario`]: demand adds across sources and
+//! fault schedules merge in deterministic `(time, slot)` order.
+
+use std::cmp::Ordering;
+
+use chopt_core::events::SimTime;
+use chopt_core::util::json::Value as Json;
+use chopt_core::util::rng::Rng;
+
+/// One injected failure produced by a scenario source.  `slot` is the
+/// engine agent slot (single-study) or the study index (multi-study);
+/// out-of-range slots are counted and skipped by the consumer, never
+/// silently dropped.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub at: SimTime,
+    pub slot: usize,
+}
+
+/// A composable weather source: external GPU demand plus fault events,
+/// both pure functions of virtual time.
+pub trait ScenarioSource {
+    /// External GPUs demanded at time `t` (summed across sources).
+    fn demand(&self, _t: SimTime) -> usize {
+        0
+    }
+
+    /// Append every fault in the half-open window `(from, to]`.
+    fn faults(&self, _from: SimTime, _to: SimTime, _out: &mut Vec<FaultEvent>) {}
+}
+
+/// Sinusoidal day/night external load with seeded per-bucket jitter —
+/// the diurnal rhythm of a shared research cluster.
+#[derive(Debug, Clone)]
+pub struct DiurnalLoad {
+    pub total_gpus: usize,
+    /// Mean demanded fraction of `total_gpus`.
+    pub base: f64,
+    /// Swing around the mean (fraction of `total_gpus`).
+    pub amp: f64,
+    pub period: SimTime,
+    pub jitter: f64,
+    seed: u64,
+}
+
+impl DiurnalLoad {
+    pub fn new(
+        total_gpus: usize,
+        base: f64,
+        amp: f64,
+        period: SimTime,
+        jitter: f64,
+        seed: u64,
+    ) -> DiurnalLoad {
+        DiurnalLoad {
+            total_gpus,
+            base,
+            amp,
+            period: period.max(1.0),
+            jitter,
+            seed,
+        }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+impl ScenarioSource for DiurnalLoad {
+    fn demand(&self, t: SimTime) -> usize {
+        let phase = (t / self.period) * std::f64::consts::TAU;
+        // Jitter varies per ~1%-of-period bucket so adjacent samples move.
+        let bucket = (t / (self.period / 100.0)) as u64;
+        let mut rng = Rng::new(self.seed ^ bucket.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let jit = (rng.f64() * 2.0 - 1.0) * self.jitter;
+        let frac = (self.base + self.amp * phase.sin() + jit).clamp(0.0, 1.0);
+        (frac * self.total_gpus as f64).round() as usize
+    }
+}
+
+/// Short, repeated demand spikes — a flash crowd piling onto the
+/// platform at once.  The crowd is modeled as external pressure on the
+/// shared pool (it squeezes every study's fair share the same way a
+/// burst of non-CHOPT submissions would).
+#[derive(Debug, Clone)]
+pub struct FlashCrowd {
+    pub total_gpus: usize,
+    /// Fraction of `total_gpus` demanded during a spike (±20% per-spike
+    /// seeded jitter).
+    pub spike: f64,
+    pub first_at: SimTime,
+    /// Spike spacing; `<= 0` means a single spike at `first_at`.
+    pub every: SimTime,
+    pub duration: SimTime,
+    seed: u64,
+}
+
+impl FlashCrowd {
+    pub fn new(
+        total_gpus: usize,
+        spike: f64,
+        first_at: SimTime,
+        every: SimTime,
+        duration: SimTime,
+        seed: u64,
+    ) -> FlashCrowd {
+        FlashCrowd {
+            total_gpus,
+            spike,
+            first_at,
+            every,
+            duration,
+            seed,
+        }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+impl ScenarioSource for FlashCrowd {
+    fn demand(&self, t: SimTime) -> usize {
+        if t < self.first_at {
+            return 0;
+        }
+        let k = if self.every > 0.0 {
+            ((t - self.first_at) / self.every).floor() as u64
+        } else {
+            0
+        };
+        let start = self.first_at + k as f64 * self.every.max(0.0);
+        if t - start >= self.duration {
+            return 0;
+        }
+        let mut rng = Rng::new(self.seed ^ k.wrapping_mul(0xA24B_AED4_963E_E407));
+        let frac = (self.spike * (0.8 + 0.4 * rng.f64())).clamp(0.0, 1.0);
+        (frac * self.total_gpus as f64).round() as usize
+    }
+}
+
+/// Correlated multi-slot failures: the cloud reclaims `wave_size` spot
+/// slots at once, `waves` times, every `every` seconds starting at
+/// `first_at`.  Which slots each wave hits is drawn from the wave index
+/// alone, so the schedule is identical however the window is polled.
+#[derive(Debug, Clone)]
+pub struct SpotReclaimWave {
+    /// Slot-index space the wave draws from (engine slots or studies).
+    pub slots: usize,
+    pub wave_size: usize,
+    pub first_at: SimTime,
+    pub every: SimTime,
+    pub waves: usize,
+    seed: u64,
+}
+
+impl SpotReclaimWave {
+    pub fn new(
+        slots: usize,
+        wave_size: usize,
+        first_at: SimTime,
+        every: SimTime,
+        waves: usize,
+        seed: u64,
+    ) -> SpotReclaimWave {
+        SpotReclaimWave {
+            slots,
+            wave_size,
+            first_at,
+            every,
+            waves,
+            seed,
+        }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The distinct slots reclaimed by wave `k`, ascending.
+    pub fn wave_slots(&self, k: usize) -> Vec<usize> {
+        let n = self.wave_size.min(self.slots);
+        let mut rng = Rng::new(self.seed ^ (k as u64).wrapping_mul(0xD134_2543_DE82_EF95));
+        let mut picked: Vec<usize> = Vec::with_capacity(n);
+        while picked.len() < n {
+            let s = ((rng.f64() * self.slots as f64) as usize).min(self.slots - 1);
+            if !picked.contains(&s) {
+                picked.push(s);
+            }
+        }
+        picked.sort_unstable();
+        picked
+    }
+}
+
+impl ScenarioSource for SpotReclaimWave {
+    fn faults(&self, from: SimTime, to: SimTime, out: &mut Vec<FaultEvent>) {
+        for k in 0..self.waves {
+            let at = self.first_at + k as f64 * self.every;
+            if at > from && at <= to {
+                for slot in self.wave_slots(k) {
+                    out.push(FaultEvent { at, slot });
+                }
+            }
+        }
+    }
+}
+
+/// Heterogeneous degraded-node episodes: a rack goes slow or flaky and
+/// its capacity is effectively withdrawn from the shared pool for the
+/// episode — modeled as `gpus` of extra external demand pinning that
+/// capacity, with a seeded per-episode duration wobble.
+#[derive(Debug, Clone)]
+pub struct DegradedNode {
+    pub gpus: usize,
+    pub first_at: SimTime,
+    /// Episode spacing; `<= 0` means a single episode at `first_at`.
+    pub every: SimTime,
+    pub duration: SimTime,
+    seed: u64,
+}
+
+impl DegradedNode {
+    pub fn new(
+        gpus: usize,
+        first_at: SimTime,
+        every: SimTime,
+        duration: SimTime,
+        seed: u64,
+    ) -> DegradedNode {
+        DegradedNode {
+            gpus,
+            first_at,
+            every,
+            duration,
+            seed,
+        }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+impl ScenarioSource for DegradedNode {
+    fn demand(&self, t: SimTime) -> usize {
+        if t < self.first_at {
+            return 0;
+        }
+        let k = if self.every > 0.0 {
+            ((t - self.first_at) / self.every).floor() as u64
+        } else {
+            0
+        };
+        let start = self.first_at + k as f64 * self.every.max(0.0);
+        let mut rng = Rng::new(self.seed ^ k.wrapping_mul(0x517C_C1B7_2722_0A95));
+        // Episodes run 75%..125% of the nominal duration.
+        let dur = self.duration * (0.75 + 0.5 * rng.f64());
+        if t - start < dur {
+            self.gpus
+        } else {
+            0
+        }
+    }
+}
+
+/// Tagged union of the concrete sources (`"kind"` in JSON).
+#[derive(Debug, Clone)]
+pub enum WeatherSource {
+    Diurnal(DiurnalLoad),
+    FlashCrowd(FlashCrowd),
+    SpotReclaim(SpotReclaimWave),
+    DegradedNode(DegradedNode),
+}
+
+impl ScenarioSource for WeatherSource {
+    fn demand(&self, t: SimTime) -> usize {
+        match self {
+            WeatherSource::Diurnal(s) => s.demand(t),
+            WeatherSource::FlashCrowd(s) => s.demand(t),
+            WeatherSource::SpotReclaim(s) => s.demand(t),
+            WeatherSource::DegradedNode(s) => s.demand(t),
+        }
+    }
+
+    fn faults(&self, from: SimTime, to: SimTime, out: &mut Vec<FaultEvent>) {
+        match self {
+            WeatherSource::Diurnal(s) => s.faults(from, to, out),
+            WeatherSource::FlashCrowd(s) => s.faults(from, to, out),
+            WeatherSource::SpotReclaim(s) => s.faults(from, to, out),
+            WeatherSource::DegradedNode(s) => s.faults(from, to, out),
+        }
+    }
+}
+
+/// A composed scenario: the sum of its sources' demand and the merged,
+/// `(time, slot)`-ordered union of their fault schedules.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub sources: Vec<WeatherSource>,
+}
+
+impl Scenario {
+    pub fn new(sources: Vec<WeatherSource>) -> Scenario {
+        Scenario { sources }
+    }
+
+    /// Total external GPU demand across every source at time `t`.
+    pub fn demand(&self, t: SimTime) -> usize {
+        self.sources.iter().map(|s| s.demand(t)).sum()
+    }
+
+    /// Every fault in the half-open window `(from, to]`, sorted by
+    /// `(time, slot)` so injection order never depends on source order
+    /// quirks or polling cadence.
+    pub fn faults_between(&self, from: SimTime, to: SimTime) -> Vec<FaultEvent> {
+        let mut out = Vec::new();
+        for s in &self.sources {
+            s.faults(from, to, &mut out);
+        }
+        out.sort_by(|a, b| {
+            a.at.partial_cmp(&b.at)
+                .unwrap_or(Ordering::Equal)
+                .then(a.slot.cmp(&b.slot))
+        });
+        out
+    }
+
+    /// Serialize for manifests and engine snapshots.  Seeds travel as
+    /// strings: JSON numbers are f64 and corrupt seeds ≥ 2^53.
+    pub fn to_json(&self) -> Json {
+        let sources = self
+            .sources
+            .iter()
+            .map(|s| match s {
+                WeatherSource::Diurnal(d) => Json::obj()
+                    .with("kind", Json::Str("diurnal".into()))
+                    .with("total_gpus", Json::Num(d.total_gpus as f64))
+                    .with("base", Json::Num(d.base))
+                    .with("amp", Json::Num(d.amp))
+                    .with("period", Json::Num(d.period))
+                    .with("jitter", Json::Num(d.jitter))
+                    .with("seed", Json::Str(d.seed.to_string())),
+                WeatherSource::FlashCrowd(f) => Json::obj()
+                    .with("kind", Json::Str("flash_crowd".into()))
+                    .with("total_gpus", Json::Num(f.total_gpus as f64))
+                    .with("spike", Json::Num(f.spike))
+                    .with("first_at", Json::Num(f.first_at))
+                    .with("every", Json::Num(f.every))
+                    .with("duration", Json::Num(f.duration))
+                    .with("seed", Json::Str(f.seed.to_string())),
+                WeatherSource::SpotReclaim(w) => Json::obj()
+                    .with("kind", Json::Str("spot_reclaim".into()))
+                    .with("slots", Json::Num(w.slots as f64))
+                    .with("wave_size", Json::Num(w.wave_size as f64))
+                    .with("first_at", Json::Num(w.first_at))
+                    .with("every", Json::Num(w.every))
+                    .with("waves", Json::Num(w.waves as f64))
+                    .with("seed", Json::Str(w.seed.to_string())),
+                WeatherSource::DegradedNode(d) => Json::obj()
+                    .with("kind", Json::Str("degraded_node".into()))
+                    .with("gpus", Json::Num(d.gpus as f64))
+                    .with("first_at", Json::Num(d.first_at))
+                    .with("every", Json::Num(d.every))
+                    .with("duration", Json::Num(d.duration))
+                    .with("seed", Json::Str(d.seed.to_string())),
+            })
+            .collect();
+        Json::obj().with("sources", Json::Arr(sources))
+    }
+
+    /// Inverse of [`Scenario::to_json`].
+    pub fn from_json(doc: &Json) -> anyhow::Result<Scenario> {
+        let arr = doc
+            .get("sources")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("scenario missing 'sources' array"))?;
+        let mut sources = Vec::with_capacity(arr.len());
+        for src in arr {
+            let kind = src
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow::anyhow!("scenario source missing 'kind'"))?;
+            let source = match kind {
+                "diurnal" => WeatherSource::Diurnal(DiurnalLoad::new(
+                    num(src, "total_gpus")? as usize,
+                    num(src, "base")?,
+                    num(src, "amp")?,
+                    num_or(src, "period", 86_400.0),
+                    num_or(src, "jitter", 0.05),
+                    seed_of(src)?,
+                )),
+                "flash_crowd" => WeatherSource::FlashCrowd(FlashCrowd::new(
+                    num(src, "total_gpus")? as usize,
+                    num(src, "spike")?,
+                    num(src, "first_at")?,
+                    num_or(src, "every", 0.0),
+                    num(src, "duration")?,
+                    seed_of(src)?,
+                )),
+                "spot_reclaim" => WeatherSource::SpotReclaim(SpotReclaimWave::new(
+                    num(src, "slots")? as usize,
+                    num(src, "wave_size")? as usize,
+                    num(src, "first_at")?,
+                    num_or(src, "every", 0.0),
+                    num_or(src, "waves", 1.0) as usize,
+                    seed_of(src)?,
+                )),
+                "degraded_node" => WeatherSource::DegradedNode(DegradedNode::new(
+                    num(src, "gpus")? as usize,
+                    num(src, "first_at")?,
+                    num_or(src, "every", 0.0),
+                    num(src, "duration")?,
+                    seed_of(src)?,
+                )),
+                other => anyhow::bail!("unknown scenario source kind {other:?}"),
+            };
+            sources.push(source);
+        }
+        Ok(Scenario { sources })
+    }
+
+    /// Load a scenario from a JSON file (the CLI `--scenario` path).
+    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<Scenario> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            anyhow::anyhow!("cannot read scenario {}: {e}", path.as_ref().display())
+        })?;
+        Scenario::from_json(&chopt_core::util::json::parse(&text)?)
+    }
+}
+
+fn num(doc: &Json, key: &str) -> anyhow::Result<f64> {
+    doc.get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow::anyhow!("scenario source missing numeric '{key}'"))
+}
+
+fn num_or(doc: &Json, key: &str, default: f64) -> f64 {
+    doc.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+}
+
+/// Seed parsing accepts the canonical string form or (legacy /
+/// hand-written) numbers.
+fn seed_of(doc: &Json) -> anyhow::Result<u64> {
+    match doc.get("seed") {
+        Some(v) => match v.as_str() {
+            Some(s) => s
+                .parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("scenario 'seed' is not a u64: {s:?}")),
+            None => Ok(v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("scenario 'seed' must be a string or number"))?
+                as u64),
+        },
+        None => anyhow::bail!("scenario source missing 'seed'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn weather() -> Scenario {
+        Scenario::new(vec![
+            WeatherSource::Diurnal(DiurnalLoad::new(64, 0.4, 0.3, 86_400.0, 0.05, 11)),
+            WeatherSource::FlashCrowd(FlashCrowd::new(64, 0.5, 3_600.0, 43_200.0, 1_800.0, 12)),
+            WeatherSource::SpotReclaim(SpotReclaimWave::new(8, 4, 7_200.0, 86_400.0, 2, 13)),
+            WeatherSource::DegradedNode(DegradedNode::new(6, 14_400.0, 86_400.0, 7_200.0, 14)),
+        ])
+    }
+
+    #[test]
+    fn demand_is_deterministic_and_composes() {
+        let sc = weather();
+        for i in 0..200 {
+            let t = i as f64 * 600.0;
+            let d1 = sc.demand(t);
+            let d2 = sc.demand(t);
+            assert_eq!(d1, d2, "demand must be pure in (seed, t)");
+            let by_hand: usize = sc.sources.iter().map(|s| s.demand(t)).sum();
+            assert_eq!(d1, by_hand);
+        }
+        // The flash crowd actually fires inside its window.
+        let sc = Scenario::new(vec![WeatherSource::FlashCrowd(FlashCrowd::new(
+            64, 0.5, 3_600.0, 0.0, 1_800.0, 12,
+        ))]);
+        assert_eq!(sc.demand(0.0), 0);
+        assert!(sc.demand(3_700.0) > 0);
+        assert_eq!(sc.demand(6_000.0), 0);
+    }
+
+    #[test]
+    fn fault_windows_are_half_open_and_sorted() {
+        let sc = weather();
+        // Wave 0 fires at t=7200: excluded when `from == at`, included
+        // when `to == at`.
+        assert!(sc.faults_between(7_200.0, 10_000.0).is_empty());
+        let hit = sc.faults_between(0.0, 7_200.0);
+        assert_eq!(hit.len(), 4, "wave_size=4 correlated failures");
+        for pair in hit.windows(2) {
+            assert!(
+                (pair[0].at, pair[0].slot) < (pair[1].at, pair[1].slot),
+                "faults must come out (time, slot)-sorted"
+            );
+        }
+        // Polling the same schedule in two half-windows sees each fault
+        // exactly once.
+        let a = sc.faults_between(0.0, 86_000.0);
+        let mut b = sc.faults_between(0.0, 50_000.0);
+        b.extend(sc.faults_between(50_000.0, 86_000.0));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn wave_slots_distinct_and_stable() {
+        let w = SpotReclaimWave::new(8, 4, 0.0, 3_600.0, 3, 99);
+        for k in 0..3 {
+            let slots = w.wave_slots(k);
+            assert_eq!(slots.len(), 4);
+            let mut dedup = slots.clone();
+            dedup.dedup();
+            assert_eq!(slots, dedup, "wave slots must be distinct");
+            assert!(slots.iter().all(|&s| s < 8));
+            assert_eq!(slots, w.wave_slots(k), "wave draw must be stable");
+        }
+        // Oversized waves clamp to the slot space.
+        let w = SpotReclaimWave::new(3, 10, 0.0, 1.0, 1, 1);
+        assert_eq!(w.wave_slots(0), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_weather() {
+        // Seeds above 2^53 must survive (strings, not f64 numbers).
+        let big = (1u64 << 60) | 91;
+        let sc = Scenario::new(vec![
+            WeatherSource::Diurnal(DiurnalLoad::new(32, 0.5, 0.2, 86_400.0, 0.05, big)),
+            WeatherSource::SpotReclaim(SpotReclaimWave::new(6, 3, 1_000.0, 2_000.0, 4, big + 1)),
+        ]);
+        let text = sc.to_json().to_string_pretty();
+        let back = Scenario::from_json(&chopt_core::util::json::parse(&text).unwrap()).unwrap();
+        for i in 0..100 {
+            let t = i as f64 * 777.0;
+            assert_eq!(sc.demand(t), back.demand(t));
+        }
+        assert_eq!(
+            sc.faults_between(0.0, 10_000.0),
+            back.faults_between(0.0, 10_000.0)
+        );
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_kind() {
+        let doc = chopt_core::util::json::parse(
+            r#"{"sources": [{"kind": "earthquake", "seed": "1"}]}"#,
+        )
+        .unwrap();
+        assert!(Scenario::from_json(&doc).is_err());
+    }
+}

@@ -36,6 +36,7 @@ use chopt_engine::coordinator::agent::{Agent, AgentEvent};
 use chopt_engine::coordinator::driver::{SimOutcome, SimSetup};
 use chopt_engine::coordinator::engine::{SimEngine, Step};
 use chopt_engine::coordinator::scheduler::{MultiOutcome, StudyManifest, StudyScheduler, StudySpec};
+use chopt_engine::coordinator::Health;
 
 /// Cached leaderboard document keyed by the engine's processed-event
 /// count: when nothing was processed between renders, the previous
@@ -599,6 +600,12 @@ impl<'t> Platform<'t> {
                 Json::Num(engine.cluster().utilization()),
             )
             .with("election_term", Json::Num(engine.election().term() as f64))
+            .with("injected_failures", {
+                let (applied, skipped) = engine.fail_stats();
+                Json::obj()
+                    .with("applied", Json::Num(applied as f64))
+                    .with("skipped", Json::Num(skipped as f64))
+            })
             .with("progress_events", Json::Num(self.progress_events as f64))
     }
 }
@@ -1043,6 +1050,8 @@ impl<'t> MultiPlatform<'t> {
                     .with("quota", Json::Num(st.quota() as f64))
                     .with("priority", Json::Num(st.priority()))
                     .with("paused", Json::Bool(st.paused()))
+                    .with("health", Json::Str(st.health_label().to_string()))
+                    .with("restarts", Json::Num(st.restarts() as f64))
                     .with("target", Json::Num(st.target() as f64))
                     .with("held", Json::Num(held as f64))
                     .with(
@@ -1162,6 +1171,7 @@ impl<'t> MultiPlatform<'t> {
                     .with("quota", Json::Num(st.quota() as f64))
                     .with("priority", Json::Num(st.priority()))
                     .with("paused", Json::Bool(st.paused()))
+                    .with("health", Json::Str(st.health_label().to_string()))
                     .with("started", Json::Bool(st.started()))
                     .with("done", Json::Bool(st.done()))
                     .with(
@@ -1193,15 +1203,23 @@ impl<'t> MultiPlatform<'t> {
         ))
     }
 
-    /// One-object run status across all studies.
+    /// One-object run status across all studies, including the
+    /// fault-tolerance rollup: how many studies are currently degraded
+    /// (crashed, backoff pending) or quarantined, and the injected-
+    /// failure accounting (`applied` vs `skipped`).
     pub fn status_doc(&self) -> Json {
         let sched = &self.sched;
-        let (started, done) = sched.studies().iter().fold((0, 0), |acc, st| {
-            (
-                acc.0 + usize::from(st.started()),
-                acc.1 + usize::from(st.done()),
-            )
-        });
+        let (started, done, degraded, quarantined) =
+            sched.studies().iter().fold((0, 0, 0, 0), |acc, st| {
+                let h = st.health();
+                (
+                    acc.0 + usize::from(st.started()),
+                    acc.1 + usize::from(st.done()),
+                    acc.2 + usize::from(matches!(h, Health::Down { .. })),
+                    acc.3 + usize::from(h.is_quarantined()),
+                )
+            });
+        let (applied, skipped) = sched.fail_stats();
         Json::obj()
             .with("t", Json::Num(sched.now()))
             .with("events_processed", Json::Num(sched.events_processed() as f64))
@@ -1209,6 +1227,14 @@ impl<'t> MultiPlatform<'t> {
             .with("studies", Json::Num(sched.studies().len() as f64))
             .with("studies_started", Json::Num(started as f64))
             .with("studies_done", Json::Num(done as f64))
+            .with("studies_degraded", Json::Num(degraded as f64))
+            .with("studies_quarantined", Json::Num(quarantined as f64))
+            .with(
+                "injected_failures",
+                Json::obj()
+                    .with("applied", Json::Num(applied as f64))
+                    .with("skipped", Json::Num(skipped as f64)),
+            )
             .with("utilization", Json::Num(sched.cluster().utilization()))
             .with("progress_events", Json::Num(self.progress_events as f64))
     }

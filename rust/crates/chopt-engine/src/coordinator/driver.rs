@@ -9,7 +9,7 @@
 //! (the `Platform` (chopt-control), `chopt watch`, `chopt serve
 //! --live`) drive the engine incrementally.
 
-use chopt_cluster::{Cluster, ExternalLoadTrace};
+use chopt_cluster::{Cluster, ExternalLoadTrace, Scenario};
 use chopt_core::config::ChoptConfig;
 use chopt_core::events::SimTime;
 use chopt_core::nsml::SessionId;
@@ -20,6 +20,7 @@ use super::agent::Agent;
 use super::election::Election;
 use super::engine::SimEngine;
 use super::master::{MasterTickLog, StopAndGoPolicy};
+use super::retry::RetryPolicy;
 
 /// Everything a simulated run needs.
 pub struct SimSetup {
@@ -38,10 +39,17 @@ pub struct SimSetup {
     /// Hard stop for the simulation clock.
     pub horizon: SimTime,
     /// Failure injection: (virtual time, agent slot) pairs — the slot's
-    /// agent crashes at that time (GPUs released, CHOPT session aborted),
-    /// and if it held master-agent leadership the election fails over.
-    /// Each failure fires exactly once.
+    /// agent crashes at that time (live sessions checkpoint into the stop
+    /// pool, GPUs released), and if it held master-agent leadership the
+    /// election fails over.  Each failure fires exactly once; recovery is
+    /// governed by `retry`.
     pub failures: Vec<(SimTime, usize)>,
+    /// Composable cluster weather (see `chopt_cluster::Scenario`): adds
+    /// synthetic external demand on top of `trace` and injects fault
+    /// events against agent slots.  `None` = calm weather.
+    pub scenario: Option<Scenario>,
+    /// Restart/backoff/quarantine policy for injected agent failures.
+    pub retry: RetryPolicy,
 }
 
 impl SimSetup {
@@ -56,6 +64,8 @@ impl SimSetup {
             master_period: 60.0,
             horizon: 400.0 * 24.0 * 3600.0, // 400 virtual days
             failures: Vec::new(),
+            scenario: None,
+            retry: RetryPolicy::default(),
         }
     }
 
@@ -71,6 +81,14 @@ impl SimSetup {
                 "trace",
                 self.trace.as_ref().map(|t| t.to_json()).unwrap_or(Json::Null),
             )
+            .with(
+                "scenario",
+                self.scenario
+                    .as_ref()
+                    .map(|s| s.to_json())
+                    .unwrap_or(Json::Null),
+            )
+            .with("retry", self.retry.to_json())
             .with(
                 "failures",
                 Json::Arr(
@@ -126,6 +144,14 @@ impl SimSetup {
             None | Some(Json::Null) => None,
             Some(t) => Some(ExternalLoadTrace::from_json(t)?),
         };
+        let scenario = match doc.get("scenario") {
+            None | Some(Json::Null) => None,
+            Some(s) => Some(Scenario::from_json(s)?),
+        };
+        let retry = doc
+            .get("retry")
+            .map(RetryPolicy::from_json)
+            .unwrap_or_default();
         let policy = doc
             .get("policy")
             .map(StopAndGoPolicy::from_json)
@@ -141,6 +167,8 @@ impl SimSetup {
             master_period: req_num("master_period")?,
             horizon: req_num("horizon")?,
             failures,
+            scenario,
+            retry,
         })
     }
 }
@@ -325,6 +353,15 @@ mod tests {
             master_period: 90.0,
             horizon: 1e7,
             failures: vec![(1000.0, 1)],
+            scenario: Some(Scenario::new(vec![
+                chopt_cluster::WeatherSource::SpotReclaim(
+                    chopt_cluster::SpotReclaimWave::new(3, 2, 50_000.0, 0.0, 1, 7),
+                ),
+            ])),
+            retry: RetryPolicy {
+                max_attempts: 2,
+                ..RetryPolicy::default()
+            },
         };
         let doc = setup.to_json();
         let back = SimSetup::from_json(&doc).unwrap();
@@ -334,6 +371,8 @@ mod tests {
         assert_eq!(back.failures, vec![(1000.0, 1)]);
         assert_eq!(back.master_period, 90.0);
         assert!(back.trace.is_some());
+        assert!(back.scenario.is_some());
+        assert_eq!(back.retry.max_attempts, 2);
         assert_eq!(back.configs.len(), 1);
         assert_eq!(back.configs[0].seed, 11);
         // Round-tripped setups produce identical runs.

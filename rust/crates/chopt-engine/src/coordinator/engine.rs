@@ -39,6 +39,7 @@ use super::driver::{SimOutcome, SimSetup};
 use super::election::Election;
 use super::master::{master_tick, MasterTickLog};
 use super::queue::SessionQueue;
+use super::retry::Health;
 
 /// Simulation events.
 #[derive(Debug, Clone, Copy)]
@@ -171,6 +172,26 @@ pub struct SimEngine<'t> {
     /// platform's progress drain visit only touched agents instead of
     /// scanning every slot after every processed event.
     dirty: DirtySet,
+    /// Per-slot fault tolerance (see [`super::retry`]): health, consecutive
+    /// crash attempts, last crash time, completed restarts.  Runtime state
+    /// — rebuilt deterministically by replay, never serialized.
+    slot_health: Vec<Health>,
+    slot_attempts: Vec<u32>,
+    slot_last_crash: Vec<SimTime>,
+    slot_restarts: Vec<u32>,
+    /// One-shot per slot: skip the termination check at the first tick
+    /// after a restart — the revived agent's sessions are all parked in
+    /// the stop pool, and "no live work" must not read as "done" before
+    /// the agent gets its resume target.
+    slot_grace: Vec<bool>,
+    /// Scenario fault polling cursor: faults in `(fault_cursor, t]` fire
+    /// at the master tick processed at `t`.
+    fault_cursor: SimTime,
+    /// Injected failures (setup records + scenario faults) that hit a
+    /// scheduled agent vs. targeted an idle/out-of-range slot.  Runtime
+    /// counters — surfaced as `injected_failures` in status docs.
+    fail_applied: u64,
+    fail_skipped: u64,
 }
 
 impl<'t> SimEngine<'t> {
@@ -213,6 +234,14 @@ impl<'t> SimEngine<'t> {
             completed: false,
             horizon_reached: false,
             dirty: DirtySet::with_len(n_slots),
+            slot_health: vec![Health::Ok; n_slots],
+            slot_attempts: vec![0; n_slots],
+            slot_last_crash: vec![f64::NEG_INFINITY; n_slots],
+            slot_restarts: vec![0; n_slots],
+            slot_grace: vec![false; n_slots],
+            fault_cursor: f64::NEG_INFINITY,
+            fail_applied: 0,
+            fail_skipped: 0,
         };
         engine.assign_idle(0.0);
         engine.evq.schedule_at(0.0, Ev::MasterTick);
@@ -257,6 +286,22 @@ impl<'t> SimEngine<'t> {
 
     pub fn election(&self) -> &Election {
         &self.election
+    }
+
+    /// Injected-failure accounting so far: `(applied, skipped)` — skipped
+    /// means the record targeted an idle or out-of-range slot.
+    pub fn fail_stats(&self) -> (u64, u64) {
+        (self.fail_applied, self.fail_skipped)
+    }
+
+    /// Fault-tolerance health per agent slot.
+    pub fn slot_healths(&self) -> &[Health] {
+        &self.slot_health
+    }
+
+    /// Completed restarts per agent slot.
+    pub fn slot_restarts(&self) -> &[u32] {
+        &self.slot_restarts
     }
 
     pub fn master_log(&self) -> &[MasterTickLog] {
@@ -453,10 +498,11 @@ impl<'t> SimEngine<'t> {
     }
 
     /// Fill idle slots from the session queue (same policy as the batch
-    /// driver: FIFO, first idle slot wins).
+    /// driver: FIFO, first idle slot wins).  Quarantined slots are out of
+    /// service — a crash-looping slot must not chew through the queue.
     fn assign_idle(&mut self, now: SimTime) {
         for slot_idx in 0..self.slots.len() {
-            if self.slots[slot_idx].is_none() {
+            if self.slots[slot_idx].is_none() && !self.slot_health[slot_idx].is_quarantined() {
                 if let Some(sub) = self.queue.pull_ready(now) {
                     self.next_chopt_id += 1;
                     let id = self.next_chopt_id;
@@ -506,11 +552,30 @@ impl<'t> SimEngine<'t> {
             let Failure { at, slot, consumed } = self.failures[i];
             if !consumed && at <= t {
                 self.failures[i].consumed = true;
-                if slot < self.slots.len() {
-                    if let Some(mut dead) = self.slots[slot].take() {
-                        dead.shutdown("agent_failure", &mut self.cluster, t);
-                        self.done.push(dead);
-                        self.election.fail(slot);
+                self.crash_slot(slot, at, t);
+            }
+        }
+        // Scenario weather: fire every fault in the half-open window since
+        // the last processed tick (the cursor advances exactly once per
+        // tick event, so replay re-fires the identical fault sequence).
+        let scenario_faults = match self.setup.scenario.as_ref() {
+            Some(sc) => sc.faults_between(self.fault_cursor, t),
+            None => Vec::new(),
+        };
+        self.fault_cursor = t;
+        for f in scenario_faults {
+            self.crash_slot(f.slot, f.at, t);
+        }
+        // Restart crashed agents whose backoff elapsed.  The restart
+        // consumes one grace tick (see `slot_grace`).
+        for i in 0..self.slots.len() {
+            if let Health::Down { until } = self.slot_health[i] {
+                if until <= t {
+                    self.slot_health[i] = Health::Ok;
+                    if self.slots[i].as_ref().map(|a| !a.finished).unwrap_or(false) {
+                        self.slot_restarts[i] += 1;
+                        self.slot_grace[i] = true;
+                        self.mark_dirty(i);
                     }
                 }
             }
@@ -518,14 +583,20 @@ impl<'t> SimEngine<'t> {
         // The elected leader runs Stop-and-Go (any agent could; the
         // election just decides who — in-process it's the policy call
         // below either way).
-        let external = self.setup.trace.as_ref().map(|tr| tr.demand(t)).unwrap_or(0);
+        let external = self.setup.trace.as_ref().map(|tr| tr.demand(t)).unwrap_or(0)
+            + self.setup.scenario.as_ref().map(|sc| sc.demand(t)).unwrap_or(0);
         // Record *which slot* produced each `bases` entry, so each agent
         // reads its own target even if an earlier agent terminates during
         // the loop below.  (The batch driver kept a running index that
         // skipped terminated agents without consuming their target slot,
-        // shifting every later agent onto its neighbor's target.)
+        // shifting every later agent onto its neighbor's target.)  Down
+        // slots sit the tick out: their agent keeps the slot (and its
+        // parked sessions) but gets no target and no termination check.
         let active: Vec<usize> = (0..self.slots.len())
-            .filter(|&i| self.slots[i].as_ref().map(|a| !a.finished).unwrap_or(false))
+            .filter(|&i| {
+                self.slots[i].as_ref().map(|a| !a.finished).unwrap_or(false)
+                    && self.slot_health[i].is_ok()
+            })
             .collect();
         let bases: Vec<usize> = active
             .iter()
@@ -539,8 +610,11 @@ impl<'t> SimEngine<'t> {
                 continue;
             }
             self.mark_dirty(slot_idx);
+            let grace = std::mem::take(&mut self.slot_grace[slot_idx]);
             let agent = self.slots[slot_idx].as_mut().unwrap();
-            agent.check_termination(&mut self.cluster, t);
+            if !grace {
+                agent.check_termination(&mut self.cluster, t);
+            }
             if agent.finished {
                 self.done.push(self.slots[slot_idx].take().unwrap());
                 continue;
@@ -551,11 +625,76 @@ impl<'t> SimEngine<'t> {
             self.schedule_reqs(slot_idx, reqs);
         }
         self.assign_idle(t);
-        let any_active = self.slots.iter().any(|s| s.is_some()) || !self.queue.is_empty();
+        // Queued work keeps the tick chain alive only while some slot can
+        // still take it — an all-quarantined platform stops ticking and
+        // the run ends with the leftover queue explicitly unserved.
+        let can_assign = self.slot_health.iter().any(|h| !h.is_quarantined());
+        let any_active =
+            self.slots.iter().any(|s| s.is_some()) || (!self.queue.is_empty() && can_assign);
         if any_active {
             self.evq.schedule_in(self.setup.master_period, Ev::MasterTick);
             self.ticks_pending += 1;
         }
+    }
+
+    /// Apply one injected failure (setup record or scenario fault) to
+    /// `slot`; `at` is the fault's nominal time (for the warning), `t` the
+    /// tick applying it.  Pause-not-kill: the agent's live sessions are
+    /// checkpointed into the stop pool and the agent *keeps its slot* (so
+    /// the queue cannot reassign it) while the slot serves a deterministic
+    /// bounded-exponential backoff in virtual time.  Crash-looping past
+    /// the attempt budget quarantines the slot: the agent shuts down with
+    /// reason `quarantined` (work parked, never silently lost) and the
+    /// slot leaves service for good.
+    fn crash_slot(&mut self, slot: usize, at: SimTime, t: SimTime) {
+        if slot >= self.slots.len() {
+            self.fail_skipped += 1;
+            chopt_core::log_warn!(
+                "engine",
+                "injected failure at t={:.0} targets slot {} but only {} slots exist — skipped",
+                at,
+                slot,
+                self.slots.len()
+            );
+            return;
+        }
+        let occupied = self.slots[slot].as_ref().map(|a| !a.finished).unwrap_or(false);
+        if !occupied {
+            self.fail_skipped += 1;
+            chopt_core::log_warn!(
+                "engine",
+                "injected failure at t={:.0} targets idle slot {} — skipped",
+                at,
+                slot
+            );
+            return;
+        }
+        self.fail_applied += 1;
+        let retry = self.setup.retry.clone();
+        let mut reqs: Vec<ScheduleReq> = Vec::new();
+        self.slots[slot]
+            .as_mut()
+            .unwrap()
+            .preempt_pause_to_target(0, &mut self.cluster, t, &mut reqs);
+        if t - self.slot_last_crash[slot] > retry.reset_window {
+            self.slot_attempts[slot] = 0;
+        }
+        self.slot_attempts[slot] += 1;
+        self.slot_last_crash[slot] = t;
+        self.election.fail(slot);
+        self.mark_dirty(slot);
+        if self.slot_attempts[slot] > retry.max_attempts {
+            self.slot_health[slot] = Health::Quarantined;
+            self.slot_grace[slot] = false;
+            let mut dead = self.slots[slot].take().unwrap();
+            dead.shutdown("quarantined", &mut self.cluster, t);
+            self.done.push(dead);
+        } else {
+            self.slot_health[slot] = Health::Down {
+                until: t + retry.backoff(self.slot_attempts[slot]),
+            };
+        }
+        self.schedule_reqs(slot, reqs);
     }
 
     /// Apply a recorded input at its event boundary.  Command inputs

@@ -27,6 +27,7 @@ pub mod engine;
 pub mod master;
 pub mod pools;
 pub mod queue;
+pub mod retry;
 pub mod scheduler;
 
 pub use agent::{Agent, AgentEvent, ScheduleReq};
@@ -36,6 +37,7 @@ pub use engine::{SimEngine, Step};
 pub use master::{master_tick, MasterTickLog, StopAndGoPolicy};
 pub use pools::{Pool, Pools};
 pub use queue::{SessionQueue, Submission};
+pub use retry::{Health, RetryPolicy};
 pub use scheduler::{
     MultiOutcome, StudyAgent, StudyManifest, StudyResult, StudyScheduler, StudySpec, StudyState,
 };

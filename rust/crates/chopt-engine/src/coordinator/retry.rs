@@ -1,0 +1,151 @@
+//! Deterministic fault-tolerance policy for injected agent failures.
+//!
+//! A crash no longer destroys work: the agent's live sessions are
+//! checkpointed into the stop pool (the same pause-not-kill machinery
+//! preemption uses), the slot goes *degraded* for a bounded-exponential
+//! backoff in **virtual** time, and the agent restarts at the first
+//! master tick past the backoff.  A slot that keeps crash-looping past
+//! `max_attempts` is *quarantined*: its work stays parked in the stop
+//! pool (explicitly, never silently lost) and its quota is released
+//! back to fair share.  Everything here is a pure function of the
+//! policy parameters and the crash times, so recovery replays
+//! bit-identically through snapshot/restore.
+
+use chopt_core::events::SimTime;
+use chopt_core::util::json::Value as Json;
+
+/// Bounded exponential backoff + attempt budget for agent restarts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetryPolicy {
+    /// Backoff before the first restart (virtual seconds).
+    pub base_backoff: SimTime,
+    /// Multiplier applied per consecutive failed attempt.
+    pub factor: f64,
+    /// Ceiling on any single backoff.
+    pub max_backoff: SimTime,
+    /// Consecutive crashes beyond this quarantine the slot.
+    pub max_attempts: u32,
+    /// A crash this long (virtual) after the previous one resets the
+    /// consecutive-attempt counter — sporadic faults never accumulate
+    /// into a quarantine.
+    pub reset_window: SimTime,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            base_backoff: 120.0,
+            factor: 2.0,
+            max_backoff: 3_600.0,
+            max_attempts: 5,
+            reset_window: 86_400.0,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before restart number `attempt` (1-based).
+    pub fn backoff(&self, attempt: u32) -> SimTime {
+        let exp = attempt.saturating_sub(1).min(63);
+        (self.base_backoff * self.factor.powi(exp as i32)).min(self.max_backoff)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("base_backoff", Json::Num(self.base_backoff))
+            .with("factor", Json::Num(self.factor))
+            .with("max_backoff", Json::Num(self.max_backoff))
+            .with("max_attempts", Json::Num(self.max_attempts as f64))
+            .with("reset_window", Json::Num(self.reset_window))
+    }
+
+    /// Missing keys keep their defaults (the `StopAndGoPolicy` parsing
+    /// discipline), so old manifests and snapshots stay readable.
+    pub fn from_json(doc: &Json) -> RetryPolicy {
+        let d = RetryPolicy::default();
+        let num = |key: &str, default: f64| doc.get(key).and_then(|v| v.as_f64()).unwrap_or(default);
+        RetryPolicy {
+            base_backoff: num("base_backoff", d.base_backoff),
+            factor: num("factor", d.factor),
+            max_backoff: num("max_backoff", d.max_backoff),
+            max_attempts: num("max_attempts", d.max_attempts as f64) as u32,
+            reset_window: num("reset_window", d.reset_window),
+        }
+    }
+}
+
+/// Fault-tolerance state of one agent slot / study.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Health {
+    /// Running normally.
+    Ok,
+    /// Crashed; restarts at the first master tick with `t >= until`.
+    Down { until: SimTime },
+    /// Crash-looped past the attempt budget; work parked, quota freed.
+    Quarantined,
+}
+
+impl Health {
+    /// The status-doc / `/api/v1` label for this state.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Health::Ok => "ok",
+            Health::Down { .. } => "degraded",
+            Health::Quarantined => "quarantined",
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        matches!(self, Health::Ok)
+    }
+
+    pub fn is_quarantined(&self) -> bool {
+        matches!(self, Health::Quarantined)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_bounded_exponential() {
+        let p = RetryPolicy::default();
+        assert_eq!(p.backoff(1), 120.0);
+        assert_eq!(p.backoff(2), 240.0);
+        assert_eq!(p.backoff(3), 480.0);
+        // ...and saturates at the ceiling instead of overflowing.
+        assert_eq!(p.backoff(10), 3_600.0);
+        assert_eq!(p.backoff(u32::MAX), 3_600.0);
+    }
+
+    #[test]
+    fn json_roundtrip_and_missing_keys_default() {
+        let p = RetryPolicy {
+            base_backoff: 30.0,
+            factor: 3.0,
+            max_backoff: 600.0,
+            max_attempts: 2,
+            reset_window: 7_200.0,
+        };
+        let back = RetryPolicy::from_json(&p.to_json());
+        assert_eq!(back, p);
+        let sparse = chopt_core::util::json::parse(r#"{"max_attempts": 1}"#).unwrap();
+        let got = RetryPolicy::from_json(&sparse);
+        assert_eq!(got.max_attempts, 1);
+        assert_eq!(got.base_backoff, RetryPolicy::default().base_backoff);
+        assert_eq!(
+            RetryPolicy::from_json(&Json::obj()),
+            RetryPolicy::default()
+        );
+    }
+
+    #[test]
+    fn health_labels() {
+        assert_eq!(Health::Ok.label(), "ok");
+        assert_eq!(Health::Down { until: 5.0 }.label(), "degraded");
+        assert_eq!(Health::Quarantined.label(), "quarantined");
+        assert!(Health::Ok.is_ok());
+        assert!(Health::Quarantined.is_quarantined());
+    }
+}

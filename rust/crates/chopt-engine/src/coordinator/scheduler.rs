@@ -44,7 +44,7 @@
 
 use std::collections::{BinaryHeap, VecDeque};
 
-use chopt_cluster::{Cluster, ClusterOp, ExternalLoadTrace, Owner};
+use chopt_cluster::{Cluster, ClusterOp, ExternalLoadTrace, Owner, Scenario};
 use chopt_core::config::ChoptConfig;
 use chopt_core::events::{DirtySet, EventQueue, SimTime};
 use chopt_core::nsml::SessionId;
@@ -53,6 +53,7 @@ use chopt_core::util::json::Value as Json;
 
 use super::agent::{Agent, ScheduleReq};
 use super::master::StopAndGoPolicy;
+use super::retry::{Health, RetryPolicy};
 
 /// The agent type the scheduler manages.  Multi-study agents can be
 /// stepped on worker threads between reconciliations (see
@@ -77,13 +78,13 @@ pub struct StudySpec {
     /// Virtual time the study joins the cluster.
     pub submit_at: SimTime,
     /// Failure injection: virtual times at which the study's agent
-    /// crashes (GPUs released, CHOPT session aborted with
-    /// `agent_failure`) — the multi-tenant analog of
-    /// `SimSetup::failures`.  Each entry fires at most once, at the
-    /// first master tick past its time, and only if the study's agent is
-    /// active then (a failure scheduled before activation is consumed
-    /// without effect — the stale-failure class the single-study engine
-    /// already guards against).
+    /// crashes — the multi-tenant analog of `SimSetup::failures`.  A
+    /// crash checkpoints live sessions into the stop pool and hands the
+    /// study to the manifest's [`RetryPolicy`] (backoff + restart, or
+    /// quarantine past the attempt budget) — work is parked, never
+    /// killed.  Each entry fires at most once, at the first master tick
+    /// past its time; a record targeting a study with no active agent is
+    /// counted as skipped and logged, not silently consumed.
     pub failures: Vec<SimTime>,
 }
 
@@ -151,6 +152,13 @@ pub struct StudyManifest {
     pub policy: StopAndGoPolicy,
     /// Optional non-CHOPT background load over the whole cluster.
     pub trace: Option<ExternalLoadTrace>,
+    /// Optional adversarial cluster weather: composed demand sources add
+    /// to `trace` at every master tick, and fault events crash study
+    /// agents through the same injection path as `StudySpec::failures`.
+    /// Seeded and replay-safe, so it snapshot-serializes like the trace.
+    pub scenario: Option<Scenario>,
+    /// Restart/backoff/quarantine discipline for crashed agents.
+    pub retry: RetryPolicy,
     pub master_period: SimTime,
     pub horizon: SimTime,
     /// Work-conserving mode: studies may borrow idle peers' quota
@@ -199,11 +207,21 @@ impl StudyManifest {
             None | Some(Json::Null) => None,
             Some(t) => Some(ExternalLoadTrace::from_json(t)?),
         };
+        let scenario = match doc.get("scenario") {
+            None | Some(Json::Null) => None,
+            Some(s) => Some(Scenario::from_json(s)?),
+        };
+        let retry = doc
+            .get("retry")
+            .map(RetryPolicy::from_json)
+            .unwrap_or_default();
         Ok(StudyManifest {
             cluster_gpus,
             studies,
             policy,
             trace,
+            scenario,
+            retry,
             master_period: doc
                 .get("master_period")
                 .and_then(|v| v.as_f64())
@@ -227,6 +245,14 @@ impl StudyManifest {
                 "trace",
                 self.trace.as_ref().map(|t| t.to_json()).unwrap_or(Json::Null),
             )
+            .with(
+                "scenario",
+                self.scenario
+                    .as_ref()
+                    .map(|s| s.to_json())
+                    .unwrap_or(Json::Null),
+            )
+            .with("retry", self.retry.to_json())
             .with(
                 "studies",
                 Json::Arr(self.studies.iter().map(|s| s.to_json()).collect()),
@@ -384,6 +410,16 @@ pub struct StudyState {
     /// Consumable runtime view of [`StudySpec::failures`]: `(at,
     /// consumed)`.  Consumed exactly once — see the spec field's docs.
     failures: Vec<(SimTime, bool)>,
+    /// Fault-tolerance state: `Ok` / `Down {until}` (crashed, waiting
+    /// out a backoff) / `Quarantined` (crash-looped past the attempt
+    /// budget; work parked in the stop pool, quota freed).
+    health: Health,
+    /// Consecutive crash count within the retry policy's reset window.
+    attempts: u32,
+    /// Virtual time of the most recent crash (−∞ before any).
+    last_crash: SimTime,
+    /// Successful restarts (backoffs served) so far.
+    restarts: u32,
 }
 
 impl StudyState {
@@ -420,6 +456,21 @@ impl StudyState {
     /// Operator-paused (held at zero GPUs until resumed).
     pub fn paused(&self) -> bool {
         self.paused
+    }
+
+    /// Fault-tolerance state (see [`Health`]).
+    pub fn health(&self) -> Health {
+        self.health
+    }
+
+    /// `"ok"` / `"degraded"` / `"quarantined"` — the status-doc label.
+    pub fn health_label(&self) -> &'static str {
+        self.health.label()
+    }
+
+    /// Agent restarts served through the retry policy so far.
+    pub fn restarts(&self) -> u32 {
+        self.restarts
     }
 
     pub fn done(&self) -> bool {
@@ -478,6 +529,15 @@ pub struct StudyScheduler<'t> {
     /// after every serial step.  Cleared at each window's start; taken
     /// via [`StudyScheduler::take_window_marks`].
     window_marks: Vec<(usize, SimTime, usize)>,
+    /// Scenario fault events strictly after this time were not yet
+    /// polled.  Runtime-only: restore-by-replay rebuilds it tick by
+    /// tick, so it never appears in the snapshot.
+    fault_cursor: SimTime,
+    /// Injected failures (manifest records + scenario faults) that hit
+    /// an active agent / were consumed without one.  Runtime counters,
+    /// rebuilt by replay; surfaced as `injected_failures` in status docs.
+    fail_applied: u64,
+    fail_skipped: u64,
 }
 
 impl<'t> StudyScheduler<'t> {
@@ -507,6 +567,10 @@ impl<'t> StudyScheduler<'t> {
                 resume_grace: false,
                 cancelled: false,
                 failures: spec.failures.iter().map(|&at| (at, false)).collect(),
+                health: Health::Ok,
+                attempts: 0,
+                last_crash: f64::NEG_INFINITY,
+                restarts: 0,
             })
             .collect();
         let n_studies = manifest.studies.len();
@@ -524,6 +588,9 @@ impl<'t> StudyScheduler<'t> {
             step_threads: 1,
             dirty: DirtySet::with_len(n_studies),
             window_marks: Vec::new(),
+            fault_cursor: f64::NEG_INFINITY,
+            fail_applied: 0,
+            fail_skipped: 0,
         };
         sched.activate_ready(0.0);
         sched.evq.schedule_at(0.0, SEv::MasterTick);
@@ -568,6 +635,14 @@ impl<'t> StudyScheduler<'t> {
     /// Virtual time of the next pending event, if any.
     pub fn next_event_time(&self) -> Option<SimTime> {
         self.evq.peek_time()
+    }
+
+    /// Injected-failure accounting: `(applied, skipped)`.  A failure is
+    /// *applied* when it crashes an active agent and *skipped* when it
+    /// targets a study with no active agent (stale record, out-of-range
+    /// scenario slot, already-quarantined study).
+    pub fn fail_stats(&self) -> (u64, u64) {
+        (self.fail_applied, self.fail_skipped)
     }
 
     /// Drain the list of studies touched since the last call (progress-
@@ -668,7 +743,12 @@ impl<'t> StudyScheduler<'t> {
     /// Process a *window* of interval events on worker threads — the
     /// sorted run of already-queued `Interval` events due before both
     /// `t_limit`/the horizon and the next non-interval event (master
-    /// ticks and recorded inputs are the cross-study barriers).
+    /// ticks and recorded inputs are the cross-study barriers).  One
+    /// exception: a borrow-free steady-state master tick — one whose
+    /// serial execution provably changes no cross-study state
+    /// ([`StudyScheduler::tick_parallel_safe`]) — is folded *into* the
+    /// window instead of breaking it, so hard-isolation runs keep their
+    /// windows open across reconciliations.
     ///
     /// Correctness rests on three facts, each checked or arranged here:
     ///
@@ -701,30 +781,99 @@ impl<'t> StudyScheduler<'t> {
         let cut = t_limit.min(self.manifest.horizon);
         let drained = self.evq.drain_sorted();
         let mut window = 0;
+        let mut tick_at: Option<SimTime> = None;
         for &(at, _, ev) in &drained {
-            if at > cut || !matches!(ev, SEv::Interval { .. }) {
+            if at > cut {
                 break;
             }
-            window += 1;
+            match ev {
+                SEv::Interval { .. } => {
+                    // Intervals at or past the included tick's reschedule
+                    // time belong to the next window: their (pre-drained)
+                    // seqs are lower than the next tick's, so the next
+                    // window's scan must order them against it.
+                    if let Some(tat) = tick_at {
+                        if at >= tat + self.manifest.master_period {
+                            break;
+                        }
+                    }
+                    window += 1;
+                }
+                // At most one MasterTick is ever pending, and a
+                // borrow-free steady-state tick provably changes no
+                // cross-study state — fold it into the window instead of
+                // breaking on it (the carried ROADMAP follow-up).
+                SEv::MasterTick if tick_at.is_none() && self.tick_parallel_safe(at) => {
+                    tick_at = Some(at);
+                    window += 1;
+                }
+                _ => break,
+            }
         }
         // Follow-on events belong to the window only strictly before
         // the barrier (ties go to the barrier: its seq is lower than
-        // any child's) and within the cut.
+        // any child's) and within the cut.  With a tick inside the
+        // window they must additionally stop before the rescheduled
+        // next tick.
         let open_until = match drained.get(window) {
             Some(&(at, _, _)) if at <= cut => at,
             _ => f64::INFINITY,
         };
+        let open_until = match tick_at {
+            Some(tat) => open_until.min(tat + self.manifest.master_period),
+            None => open_until,
+        };
         let mut per_study: Vec<Vec<LocalEv>> =
             (0..self.studies.len()).map(|_| Vec::new()).collect();
         let mut n_studies = 0;
+        let mut tick_seq = 0u64;
         for &(at, seq, ev) in &drained[..window] {
-            let SEv::Interval { study, sid } = ev else {
-                unreachable!("window holds interval events only");
-            };
-            if per_study[study].is_empty() {
-                n_studies += 1;
+            match ev {
+                SEv::Interval { study, sid } => {
+                    if per_study[study].is_empty() {
+                        n_studies += 1;
+                    }
+                    per_study[study].push(LocalEv {
+                        at,
+                        key: seq,
+                        sid,
+                        tick: false,
+                    });
+                }
+                SEv::MasterTick => tick_seq = seq,
+                SEv::Input { .. } => unreachable!("window holds interval/tick events only"),
             }
-            per_study[study].push(LocalEv { at, key: seq, sid });
+        }
+        // The tick's per-study slices: exactly the studies the serial
+        // tick's `active` filter would select at `tick_at` (paused and
+        // agent-less studies can't change inside the window; a study
+        // that *finishes* during its pre-tick events records a skipped
+        // tick slice — same as serial excluding it).
+        let tick_studies: Vec<usize> = match tick_at {
+            Some(_) => (0..self.studies.len())
+                .filter(|&i| {
+                    !self.studies[i].paused
+                        && self.studies[i]
+                            .agent
+                            .as_ref()
+                            .map(|a| !a.finished)
+                            .unwrap_or(false)
+                })
+                .collect(),
+            None => Vec::new(),
+        };
+        if let Some(tat) = tick_at {
+            for &i in &tick_studies {
+                if per_study[i].is_empty() {
+                    n_studies += 1;
+                }
+                per_study[i].push(LocalEv {
+                    at: tat,
+                    key: tick_seq,
+                    sid: SessionId(0),
+                    tick: true,
+                });
+            }
         }
         if window < 2 || n_studies < 2 {
             return self.reinsert(drained);
@@ -774,12 +923,14 @@ impl<'t> StudyScheduler<'t> {
         }
         let mut items: Vec<WorkItem> = Vec::with_capacity(caps.len());
         for &(study, cap, held) in &caps {
+            let solo = self.solo_target(study);
             let agent = self.studies[study].agent.take().expect("checked above");
             let shadow = Cluster::shadow_for(Owner::Chopt(agent.tenant), cap, held, now);
             items.push(WorkItem {
                 study,
                 agent,
                 shadow,
+                solo,
                 initial: std::mem::take(&mut per_study[study]),
                 recs: VecDeque::new(),
             });
@@ -799,21 +950,112 @@ impl<'t> StudyScheduler<'t> {
         let mut merge: BinaryHeap<MergeEv> = BinaryHeap::with_capacity(window);
         for item in items {
             for ev in &item.initial {
+                // The tick fans out to every tick study locally but is
+                // ONE merged event — seeded once below, not per study.
+                if ev.tick {
+                    continue;
+                }
                 merge.push(MergeEv {
                     at: ev.at,
                     seq: ev.key,
                     study: item.study,
                     sid: ev.sid,
+                    tick: false,
                 });
             }
             self.studies[item.study].agent = Some(item.agent);
             recs[item.study] = item.recs;
         }
+        if let Some(tat) = tick_at {
+            merge.push(MergeEv {
+                at: tat,
+                seq: tick_seq,
+                study: usize::MAX,
+                sid: SessionId(0),
+                tick: true,
+            });
+        }
         // Phase 2: serial merge.  Within a study, merge order equals
         // local order (same keys), so the next record is always the
         // front of that study's queue.
         let mut processed = 0u64;
-        while let Some(MergeEv { at, seq: _, study, sid: _ }) = merge.pop() {
+        while let Some(MergeEv { at, seq: _, study, sid: _, tick }) = merge.pop() {
+            if tick {
+                // The included master tick (see `tick_parallel_safe`):
+                // under the window precondition the serial tick reduces
+                // to per-study termination checks plus constant-target
+                // grows.  Replay them in serial order — every check
+                // first, then every grow, then the next-tick reschedule
+                // (so op order and seq issue points match exactly).
+                self.evq.note_processed(at);
+                processed += 1;
+                self.ticks_pending = self.ticks_pending.saturating_sub(1);
+                let mut tick_recs: Vec<(usize, StepRec)> =
+                    Vec::with_capacity(tick_studies.len());
+                for &i in &tick_studies {
+                    let rec = recs[i]
+                        .pop_front()
+                        .expect("one tick record per tick study");
+                    debug_assert!(rec.tick, "tick record out of order");
+                    tick_recs.push((i, rec));
+                }
+                for (i, rec) in &tick_recs {
+                    if rec.skipped {
+                        continue;
+                    }
+                    self.mark_dirty(*i);
+                    for &op in &rec.ops {
+                        self.cluster
+                            .apply_op(op)
+                            .expect("shadow ops fit the real cluster (cap isolation)");
+                    }
+                    self.window_marks.push((*i, at, rec.events_len));
+                    if rec.finished_at_check {
+                        self.studies[*i].last_target = 0;
+                    }
+                    done_now[*i] = rec.finished_after;
+                }
+                for (i, rec) in tick_recs {
+                    if rec.skipped || rec.finished_at_check {
+                        continue;
+                    }
+                    for &op in &rec.grow_ops {
+                        self.cluster
+                            .apply_op(op)
+                            .expect("shadow ops fit the real cluster (cap isolation)");
+                    }
+                    for (child_sid, child_at) in rec.children {
+                        let child_seq = self.evq.alloc_seq();
+                        if window_holds(child_at, open_until, cut) {
+                            merge.push(MergeEv {
+                                at: child_at,
+                                seq: child_seq,
+                                study: i,
+                                sid: child_sid,
+                                tick: false,
+                            });
+                        } else {
+                            self.evq.insert_prescheduled(
+                                child_at,
+                                child_seq,
+                                SEv::Interval {
+                                    study: i,
+                                    sid: child_sid,
+                                },
+                            );
+                        }
+                    }
+                }
+                if no_submits && done_now.iter().all(|&d| d) {
+                    self.completed = true;
+                    self.drain_merge(merge);
+                    break;
+                }
+                self.evq
+                    .schedule_in(self.manifest.master_period, SEv::MasterTick);
+                self.ticks_pending += 1;
+                continue;
+            }
             let rec = recs[study].pop_front().expect("one record per merged event");
             debug_assert_eq!(rec.at, at, "merge order diverged from worker order");
             self.evq.note_processed(at);
@@ -833,6 +1075,7 @@ impl<'t> StudyScheduler<'t> {
                         seq: child_seq,
                         study,
                         sid: child_sid,
+                        tick: false,
                     });
                 } else {
                     self.evq.insert_prescheduled(
@@ -852,14 +1095,24 @@ impl<'t> StudyScheduler<'t> {
                 // phase-1 effects are no-ops — every agent is finished
                 // past this point.
                 self.completed = true;
-                for MergeEv { at, seq, study, sid } in merge.drain() {
-                    self.evq
-                        .insert_prescheduled(at, seq, SEv::Interval { study, sid });
-                }
+                self.drain_merge(merge);
                 break;
             }
         }
         processed
+    }
+
+    /// Reinsert unprocessed merge-heap events into the queue with their
+    /// already-issued sequence numbers (mid-window completion path).
+    fn drain_merge(&mut self, mut merge: BinaryHeap<MergeEv>) {
+        for MergeEv { at, seq, study, sid, tick } in merge.drain() {
+            let ev = if tick {
+                SEv::MasterTick
+            } else {
+                SEv::Interval { study, sid }
+            };
+            self.evq.insert_prescheduled(at, seq, ev);
+        }
     }
 
     /// Serial-fallback path of `parallel_window`: put the drained queue
@@ -869,6 +1122,63 @@ impl<'t> StudyScheduler<'t> {
             self.evq.insert_prescheduled(at, seq, ev);
         }
         0
+    }
+
+    /// Whether the master tick due at `t` may be folded into a parallel
+    /// window instead of acting as a barrier.
+    ///
+    /// Inside a window each study steps against a shadow cluster of
+    /// constant `(cap, held)`, so the tick can join only when the serial
+    /// tick would provably change no cross-study state: no borrowing, no
+    /// external demand (trace or scenario — `set_external_demand(0)` on
+    /// a zero-demand cluster is a no-op), no activation / injected
+    /// failure / backoff recovery / resume grace due at `t`, and every
+    /// active study already sitting at its constant solo target and cap
+    /// with no shrink pending (so `reconcile_targets` passes the solo
+    /// targets through and `set_cap` re-writes the same value).  The
+    /// tick then reduces to per-study termination checks plus
+    /// same-target grows — both study-local, both shadow-steppable.
+    /// Anything else keeps today's behavior: the tick stays a barrier
+    /// and the serial path handles it.
+    fn tick_parallel_safe(&self, t: SimTime) -> bool {
+        let m = &self.manifest;
+        if m.borrow || m.trace.is_some() || m.scenario.is_some() {
+            return false;
+        }
+        let mut solo_sum = 0usize;
+        for (i, st) in self.studies.iter().enumerate() {
+            if st.resume_grace || matches!(st.health, Health::Down { .. }) {
+                return false;
+            }
+            if st.failures.iter().any(|&(at, used)| !used && at <= t) {
+                return false;
+            }
+            match st.agent.as_ref() {
+                None => {
+                    // `activate_ready` would build an agent at this tick.
+                    if !st.cancelled && !st.paused && st.submit_at <= t {
+                        return false;
+                    }
+                }
+                Some(agent) => {
+                    if st.paused || agent.finished {
+                        continue;
+                    }
+                    let solo = self.solo_target(i);
+                    if st.last_target != solo
+                        || self.cluster.cap_of(Owner::Chopt(agent.tenant))
+                            != Some(solo.max(st.quota))
+                        || agent.gpus_in_use() > solo
+                    {
+                        return false;
+                    }
+                    solo_sum += solo;
+                }
+            }
+        }
+        // `reconcile_targets` passes solo targets through only while
+        // external demand (0 here) plus their sum fits the cluster.
+        solo_sum <= self.cluster.total()
     }
 
     /// Submit a new study while the scheduler is live.  The spec must
@@ -906,6 +1216,10 @@ impl<'t> StudyScheduler<'t> {
             resume_grace: false,
             cancelled: false,
             failures: spec.failures.iter().map(|&f| (f, false)).collect(),
+            health: Health::Ok,
+            attempts: 0,
+            last_crash: f64::NEG_INFINITY,
+            restarts: 0,
         });
         self.dirty.push_slot();
         self.enqueue_input(MInputKind::SubmitStudy(spec), at);
@@ -1154,11 +1468,10 @@ impl<'t> StudyScheduler<'t> {
         self.activate_ready(t);
         // Failure injection: crash scheduled studies first so this
         // tick's fair share reflects reality (the freed quota is
-        // redistributable immediately).  Each failure fires exactly once
-        // and only against an agent that is active *now* — a record due
-        // before activation is consumed without effect, so it can never
-        // crash a later incarnation (the single-engine stale-failure
-        // guard, per study).
+        // redistributable immediately).  Each manifest record fires
+        // exactly once; scenario faults are polled over the half-open
+        // window since the previous tick.  A crash no longer destroys
+        // work — see `crash_study`.
         for i in 0..self.studies.len() {
             let mut crash = false;
             for f in self.studies[i].failures.iter_mut() {
@@ -1167,15 +1480,48 @@ impl<'t> StudyScheduler<'t> {
                     crash = true;
                 }
             }
-            if !crash {
+            if crash {
+                self.crash_study(i, t);
+            }
+        }
+        let faults = match self.manifest.scenario.as_ref() {
+            Some(sc) => sc.faults_between(self.fault_cursor, t),
+            None => Vec::new(),
+        };
+        self.fault_cursor = t;
+        for f in faults {
+            if f.slot >= self.studies.len() {
+                self.fail_skipped += 1;
+                chopt_core::log_warn!(
+                    "scheduler",
+                    "scenario fault at t={:.0} targets study slot {} but only {} studies exist — skipped",
+                    f.at,
+                    f.slot,
+                    self.studies.len()
+                );
                 continue;
             }
-            if let Some(agent) = self.studies[i].agent.as_mut() {
-                if !agent.finished {
-                    agent.shutdown("agent_failure", &mut self.cluster, t);
-                    self.studies[i].paused = false;
-                    self.studies[i].last_target = 0;
-                    self.mark_dirty(i);
+            self.crash_study(f.slot, t);
+        }
+        // Restart crashed studies whose backoff has elapsed: the study
+        // rejoins this tick's fair share with a one-shot termination
+        // grace (its empty live pool is the crash's doing, not "done"),
+        // and the grow phase below revives its checkpointed sessions
+        // from the stop pool.
+        for i in 0..self.studies.len() {
+            if let Health::Down { until } = self.studies[i].health {
+                if until <= t {
+                    self.studies[i].health = Health::Ok;
+                    let alive = self.studies[i]
+                        .agent
+                        .as_ref()
+                        .map(|a| !a.finished)
+                        .unwrap_or(false);
+                    if alive {
+                        self.studies[i].restarts += 1;
+                        self.studies[i].resume_grace = true;
+                        self.mark_dirty(i);
+                    }
                 }
             }
         }
@@ -1184,14 +1530,23 @@ impl<'t> StudyScheduler<'t> {
             .trace
             .as_ref()
             .map(|tr| tr.demand(t))
-            .unwrap_or(0);
+            .unwrap_or(0)
+            + self
+                .manifest
+                .scenario
+                .as_ref()
+                .map(|sc| sc.demand(t))
+                .unwrap_or(0);
         self.cluster.set_external_demand(external, t);
         // Paused studies are excluded entirely: their target/cap stays 0
         // (set at pause time) and their termination checks are deferred —
         // an operator pause must not look like "no live sessions left".
+        // Down (crashed, backoff pending) studies are excluded the same
+        // way; recovery above re-admits them.
         let active: Vec<usize> = (0..self.studies.len())
             .filter(|&i| {
                 !self.studies[i].paused
+                    && self.studies[i].health.is_ok()
                     && self.studies[i]
                         .agent
                         .as_ref()
@@ -1253,6 +1608,64 @@ impl<'t> StudyScheduler<'t> {
                 .schedule_in(self.manifest.master_period, SEv::MasterTick);
             self.ticks_pending += 1;
         }
+    }
+
+    /// Apply one injected failure to study `i` at tick time `t`.
+    ///
+    /// Pause-not-kill: the agent's live sessions are checkpointed into
+    /// its stop pool (the same machinery borrow preemption uses), the
+    /// study goes `Down` for a deterministic backoff, and the recovery
+    /// pass in [`StudyScheduler::on_master_tick`] revives the sessions
+    /// once the backoff elapses.  Crash-looping past the retry policy's
+    /// attempt budget quarantines the study instead: its parked sessions
+    /// stay explicitly `Stopped` (never silently lost) and its cap is
+    /// already zero, so the quota returns to fair share.  None of this
+    /// consumes a random draw, so peer studies stay bit-identical.
+    fn crash_study(&mut self, i: usize, t: SimTime) {
+        let retry = self.manifest.retry.clone();
+        let active = self.studies[i]
+            .agent
+            .as_ref()
+            .map(|a| !a.finished)
+            .unwrap_or(false);
+        if !active || self.studies[i].health.is_quarantined() {
+            self.fail_skipped += 1;
+            chopt_core::log_warn!(
+                "scheduler",
+                "injected failure at t={:.0} targets study '{}' with no active agent — skipped",
+                t,
+                self.studies[i].name
+            );
+            return;
+        }
+        self.fail_applied += 1;
+        let mut reqs: Vec<ScheduleReq> = Vec::new();
+        {
+            let st = &mut self.studies[i];
+            let agent = st.agent.as_mut().expect("checked active above");
+            agent.preempt_pause_to_target(0, &mut self.cluster, t, &mut reqs);
+            self.cluster.set_cap(Owner::Chopt(agent.tenant), 0);
+            st.last_target = 0;
+            if t - st.last_crash > retry.reset_window {
+                st.attempts = 0;
+            }
+            st.attempts += 1;
+            st.last_crash = t;
+            if st.attempts > retry.max_attempts {
+                st.health = Health::Quarantined;
+                st.paused = false;
+                // The live pool is already empty, so this only finishes
+                // the agent (Terminated event, quota release); the
+                // parked sessions stay in the stop pool.
+                agent.shutdown("quarantined", &mut self.cluster, t);
+            } else {
+                st.health = Health::Down {
+                    until: t + retry.backoff(st.attempts),
+                };
+            }
+        }
+        self.mark_dirty(i);
+        self.schedule_reqs(i, reqs);
     }
 
     /// Activate studies whose submit time has arrived: build the agent
@@ -1456,6 +1869,8 @@ impl<'t> StudyScheduler<'t> {
                         .with("study", Json::Str(st.name.clone()))
                         .with("started", Json::Bool(st.started()))
                         .with("done", Json::Bool(st.done()))
+                        .with("health", Json::Str(st.health.label().into()))
+                        .with("restarts", Json::Num(st.restarts as f64))
                         .with(
                             "best",
                             st.agent
@@ -1645,6 +2060,9 @@ struct LocalEv {
     at: SimTime,
     key: u64,
     sid: SessionId,
+    /// The study's slice of the window's included master tick (`sid`
+    /// unused; `key` is the tick's real seq, shared by every study).
+    tick: bool,
 }
 
 impl PartialEq for LocalEv {
@@ -1678,6 +2096,9 @@ struct MergeEv {
     seq: u64,
     study: usize,
     sid: SessionId,
+    /// The window's included master tick — one merged event fanning out
+    /// to every tick study (`study`/`sid` unused).
+    tick: bool,
 }
 
 impl PartialEq for MergeEv {
@@ -1714,11 +2135,24 @@ struct StepRec {
     /// the points a serial run would assign them.
     children: Vec<(SessionId, SimTime)>,
     /// Shadow-cluster allocator calls, replayed onto the real cluster
-    /// to reproduce its counters and usage series byte-for-byte.
+    /// to reproduce its counters and usage series byte-for-byte.  For a
+    /// tick record these are the termination-check phase's ops.
     ops: Vec<ClusterOp>,
+    /// Tick records only: the grow phase's ops, replayed after *every*
+    /// study's check ops — the serial tick's two-phase order.
+    grow_ops: Vec<ClusterOp>,
     /// Whether the study's agent was finished after this event — the
     /// merge re-derives `all_done` per replayed event from these.
     finished_after: bool,
+    /// Tick records only: the termination check finished the agent, so
+    /// the serial tick zeroes `last_target` and skips the grow.
+    finished_at_check: bool,
+    /// This record is the study's slice of the window's master tick.
+    tick: bool,
+    /// Tick records only: the agent had already finished before the
+    /// tick, so the serial `active` filter would have excluded it — the
+    /// merge applies nothing (not even a dirty mark).
+    skipped: bool,
     /// `agent.events.len()` after this event: the merge publishes it as
     /// a progress mark so a logging caller can slice the agent's event
     /// buffer per processed event, with that event's timestamp.
@@ -1730,6 +2164,10 @@ struct WorkItem {
     study: usize,
     agent: StudyAgent,
     shadow: Cluster,
+    /// The study's constant solo target — what the included tick's grow
+    /// phase re-applies (`tick_parallel_safe` guarantees it is what the
+    /// serial reconcile would hand back).
+    solo: usize,
     initial: Vec<LocalEv>,
     recs: VecDeque<StepRec>,
 }
@@ -1747,8 +2185,74 @@ fn window_holds(child_at: SimTime, open_until: SimTime, cut: SimTime) -> bool {
 fn step_study_window(item: &mut WorkItem, temp_base: u64, open_until: SimTime, cut: SimTime) {
     let mut heap: BinaryHeap<LocalEv> = item.initial.iter().copied().collect();
     let mut next_temp = temp_base;
-    while let Some(LocalEv { at, key: _, sid }) = heap.pop() {
+    while let Some(LocalEv { at, key: _, sid, tick }) = heap.pop() {
         let mut reqs: Vec<ScheduleReq> = Vec::new();
+        if tick {
+            // The study's slice of the window's included master tick:
+            // termination check, then (targets and caps are constant —
+            // `tick_parallel_safe`) a grow back to the solo target.
+            // Recorded two-phase so the merge can replay every study's
+            // check before any grow, exactly like the serial tick.
+            if item.agent.finished {
+                item.recs.push_back(StepRec {
+                    at,
+                    children: Vec::new(),
+                    ops: Vec::new(),
+                    grow_ops: Vec::new(),
+                    finished_after: true,
+                    finished_at_check: false,
+                    tick: true,
+                    skipped: true,
+                    events_len: item.agent.events.len(),
+                });
+                continue;
+            }
+            item.agent.check_termination(&mut item.shadow, at);
+            let ops = item.shadow.take_ops();
+            if item.agent.finished {
+                item.recs.push_back(StepRec {
+                    at,
+                    children: Vec::new(),
+                    ops,
+                    grow_ops: Vec::new(),
+                    finished_after: true,
+                    finished_at_check: true,
+                    tick: true,
+                    skipped: false,
+                    events_len: item.agent.events.len(),
+                });
+                continue;
+            }
+            item.agent
+                .set_gpu_target(item.solo, &mut item.shadow, at, &mut reqs);
+            let grow_ops = item.shadow.take_ops();
+            let mut children = Vec::with_capacity(reqs.len());
+            for r in reqs {
+                let child_at = at + r.seconds.max(0.0);
+                if window_holds(child_at, open_until, cut) {
+                    heap.push(LocalEv {
+                        at: child_at,
+                        key: next_temp,
+                        sid: r.session,
+                        tick: false,
+                    });
+                    next_temp += 1;
+                }
+                children.push((r.session, child_at));
+            }
+            item.recs.push_back(StepRec {
+                at,
+                children,
+                ops,
+                grow_ops,
+                finished_after: item.agent.finished,
+                finished_at_check: false,
+                tick: true,
+                skipped: false,
+                events_len: item.agent.events.len(),
+            });
+            continue;
+        }
         item.agent
             .on_interval_done(sid, &mut item.shadow, at, &mut reqs);
         let ops = item.shadow.take_ops();
@@ -1760,6 +2264,7 @@ fn step_study_window(item: &mut WorkItem, temp_base: u64, open_until: SimTime, c
                     at: child_at,
                     key: next_temp,
                     sid: r.session,
+                    tick: false,
                 });
                 next_temp += 1;
             }
@@ -1769,7 +2274,11 @@ fn step_study_window(item: &mut WorkItem, temp_base: u64, open_until: SimTime, c
             at,
             children,
             ops,
+            grow_ops: Vec::new(),
             finished_after: item.agent.finished,
+            finished_at_check: false,
+            tick: false,
+            skipped: false,
             events_len: item.agent.events.len(),
         });
     }

@@ -62,6 +62,11 @@ fn cli() -> Command {
                     "step-threads",
                     Some("1"),
                     "worker threads for windowed study stepping (bit-identical output)",
+                )
+                .opt(
+                    "scenario",
+                    None,
+                    "scenario JSON (adversarial cluster weather) overriding the manifest's",
                 ),
         )
         .subcommand(Command::new(
@@ -90,6 +95,11 @@ fn cli() -> Command {
                     "step-threads",
                     Some("1"),
                     "worker threads for windowed study stepping (multi-study --live)",
+                )
+                .opt(
+                    "scenario",
+                    None,
+                    "scenario JSON (adversarial cluster weather) overriding the manifest's (--live)",
                 )
                 .opt(
                     "api-token",
@@ -355,12 +365,21 @@ fn cmd_multi(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
         let Some(manifest_path) = m.get("manifest") else {
             anyhow::bail!("multi needs --manifest (or --restore)");
         };
-        let manifest = StudyManifest::load(manifest_path)?;
+        let mut manifest = StudyManifest::load(manifest_path)?;
+        if let Some(path) = m.get("scenario") {
+            manifest.scenario = Some(chopt::cluster::Scenario::load(path)?);
+        }
         println!(
-            "multi-study CHOPT: {} studies on {} GPUs (borrow={})",
+            "multi-study CHOPT: {} studies on {} GPUs (borrow={}, scenario={})",
             manifest.studies.len(),
             manifest.cluster_gpus,
-            manifest.borrow
+            manifest.borrow,
+            manifest
+                .scenario
+                .as_ref()
+                .map(|s| s.sources.len())
+                .map(|n| format!("{n} sources"))
+                .unwrap_or_else(|| "none".into())
         );
         for s in &manifest.studies {
             println!(
@@ -667,7 +686,10 @@ fn cmd_serve_live(m: &chopt::util::cli::Matches, port: u16) -> anyhow::Result<()
 /// fair-share and per-study queries under `/api/v1/studies/<name>/`,
 /// plus study-level commands (submit/pause/resume/stop/set_quota).
 fn cmd_serve_live_multi(m: &chopt::util::cli::Matches, port: u16) -> anyhow::Result<()> {
-    let manifest = StudyManifest::load(m.get("manifest").unwrap())?;
+    let mut manifest = StudyManifest::load(m.get("manifest").unwrap())?;
+    if let Some(path) = m.get("scenario") {
+        manifest.scenario = Some(chopt::cluster::Scenario::load(path)?);
+    }
     let chunk = m.get_f64("chunk").unwrap_or(1800.0).max(1.0);
     let throttle = std::time::Duration::from_millis(m.get_u64("throttle-ms").unwrap_or(250));
     let token = api_token(m);

@@ -58,6 +58,8 @@ fn setup(seed: u64) -> SimSetup {
         master_period: 60.0,
         horizon: 1e9,
         failures: Vec::new(),
+        scenario: None,
+        retry: chopt::coordinator::RetryPolicy::default(),
     }
 }
 

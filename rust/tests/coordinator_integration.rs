@@ -5,7 +5,7 @@
 
 use chopt::cluster::ExternalLoadTrace;
 use chopt::config::ChoptConfig;
-use chopt::coordinator::{run_sim, AgentEvent, SimSetup, StopAndGoPolicy};
+use chopt::coordinator::{run_sim, AgentEvent, RetryPolicy, SimSetup, StopAndGoPolicy};
 use chopt::trainer::surrogate::SurrogateTrainer;
 use chopt::trainer::Trainer;
 use chopt::util::proptest::{check, Config as PropConfig};
@@ -61,6 +61,8 @@ fn two_chopt_sessions_share_cluster_via_queue() {
         master_period: 60.0,
         horizon: 1e9,
         failures: Vec::new(),
+        scenario: None,
+        retry: RetryPolicy::default(),
     };
     let out = run_sim(setup, surrogate(7));
     assert_eq!(out.agents.len(), 2);
@@ -97,6 +99,8 @@ fn queued_sessions_wait_for_free_slot() {
         master_period: 60.0,
         horizon: 1e9,
         failures: Vec::new(),
+        scenario: None,
+        retry: RetryPolicy::default(),
     };
     let out = run_sim(setup, surrogate(9));
     assert_eq!(out.agents.len(), 3);
@@ -122,6 +126,8 @@ fn stop_and_go_preempts_under_external_surge() {
         master_period: 120.0,
         horizon,
         failures: Vec::new(),
+        scenario: None,
+        retry: RetryPolicy::default(),
     };
     let out = run_sim(setup, surrogate(20));
     let a = &out.agents[0];
@@ -202,10 +208,12 @@ fn election_term_advances() {
 }
 
 #[test]
-fn master_agent_failure_fails_over_and_work_continues() {
-    // Two agent slots; slot 0 (the initial master) crashes mid-run.  The
-    // election must fail over (term bump), the crashed agent's GPUs must
-    // be released, and the surviving CHOPT session must still finish.
+fn master_agent_failure_fails_over_and_quarantines_past_budget() {
+    // Two agent slots; slot 0 (the initial master) crashes mid-run with a
+    // zero-attempt retry budget, so the crash quarantines it immediately.
+    // The election must fail over (term bump), the quarantined agent's
+    // GPUs must be released (work parked, not silently lost), and the
+    // surviving CHOPT session must still finish.
     let setup = SimSetup {
         cluster_gpus: 6,
         configs: vec![
@@ -219,6 +227,11 @@ fn master_agent_failure_fails_over_and_work_continues() {
         master_period: 60.0,
         horizon: 1e9,
         failures: vec![(20_000.0, 0)],
+        scenario: None,
+        retry: RetryPolicy {
+            max_attempts: 0,
+            ..RetryPolicy::default()
+        },
     };
     let out = run_sim(setup, surrogate(55));
     assert!(
@@ -227,22 +240,60 @@ fn master_agent_failure_fails_over_and_work_continues() {
         out.election.term()
     );
     assert!(!out.election.is_leader(0), "slot 0 must not lead after crash");
-    // The crashed agent was aborted; the other finished normally.
+    // The crashed agent was quarantined; the other finished normally.
     let crashed = out
         .agents
         .iter()
-        .find(|a| a.events.contains(&AgentEvent::Terminated("agent_failure")))
-        .expect("one agent must have crashed");
+        .find(|a| a.events.contains(&AgentEvent::Terminated("quarantined")))
+        .expect("one agent must have been quarantined");
     assert!(crashed.finished_at.is_some());
     let survivor = out
         .agents
         .iter()
-        .find(|a| !a.events.contains(&AgentEvent::Terminated("agent_failure")))
+        .find(|a| !a.events.contains(&AgentEvent::Terminated("quarantined")))
         .expect("one agent must survive");
     assert!(survivor.finished);
     assert!(survivor.best().is_some());
     // All GPUs returned to the cluster at the end.
     assert_eq!(out.cluster.held_by_chopt(), 0, "crashed agent leaked GPUs");
+}
+
+#[test]
+fn crashed_agent_recovers_and_finishes() {
+    // Default retry budget: an injected crash pauses the agent's live
+    // sessions into the stop pool, the slot backs off, and the agent
+    // restarts and runs its study to completion — no work lost, no
+    // `agent_failure` abort.
+    let setup = SimSetup {
+        cluster_gpus: 6,
+        configs: vec![
+            cfg("{\"random\": {}}", 10, 12, 3, 1),
+            cfg("{\"random\": {}}", 10, 12, 3, 2),
+        ],
+        submit_times: Vec::new(),
+        agent_slots: 2,
+        trace: None,
+        policy: StopAndGoPolicy::default(),
+        master_period: 60.0,
+        horizon: 1e9,
+        failures: vec![(2_000.0, 0)],
+        scenario: None,
+        retry: RetryPolicy::default(),
+    };
+    let out = run_sim(setup, surrogate(56));
+    assert_eq!(out.agents.len(), 2);
+    for a in &out.agents {
+        assert!(a.finished, "agent {} must finish after recovery", a.id);
+        assert!(
+            !a.events.iter().any(|e| matches!(
+                e,
+                AgentEvent::Terminated("agent_failure") | AgentEvent::Terminated("quarantined")
+            )),
+            "no agent may be aborted under the retry budget"
+        );
+        a.pools.check_invariants().unwrap();
+    }
+    assert_eq!(out.cluster.held_by_chopt(), 0);
 }
 
 /// Property: for random configs and cluster sizes, the composed system

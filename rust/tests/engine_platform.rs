@@ -6,7 +6,7 @@
 
 use chopt::config::ChoptConfig;
 use chopt::coordinator::{
-    run_sim, AgentEvent, Platform, SimEngine, SimSetup, Step, StopAndGoPolicy,
+    run_sim, AgentEvent, Platform, RetryPolicy, SimEngine, SimSetup, Step, StopAndGoPolicy,
 };
 use chopt::trainer::surrogate::SurrogateTrainer;
 use chopt::trainer::Trainer;
@@ -53,6 +53,8 @@ fn setup(n_cfgs: usize, slots: usize, gpus: usize) -> SimSetup {
         master_period: 60.0,
         horizon: 1e9,
         failures: Vec::new(),
+        scenario: None,
+        retry: RetryPolicy::default(),
     }
 }
 
@@ -254,33 +256,34 @@ fn leaderboard_doc_is_cached_until_the_engine_advances() {
 #[test]
 fn failure_injection_fires_exactly_once() {
     // Regression for the stale-failure bug: a (t, slot) failure record
-    // used to be re-applied on *every* master tick with t <= now, so the
-    // next agent assigned to that slot was instantly crashed too.  One
-    // slot, two queued configs, one failure while the first is running:
-    // the second agent must survive.
+    // used to be re-applied on *every* master tick with t <= now.  Under
+    // the retry policy that would read as a crash loop — attempts piling
+    // up each tick straight into quarantine.  One slot, two queued
+    // configs, one failure while the first is running: the first agent
+    // recovers once and finishes, the second runs untouched.
     let mut s = setup(2, 1, 4);
-    s.configs[0] = cfg("{\"random\": {}}", 5, 5000, 3, 1); // long-runner
     s.failures = vec![(5_000.0, 0)];
-    let out = run_sim(s, surrogate(55));
-
-    assert_eq!(out.agents.len(), 2);
-    let crashed: Vec<_> = out
-        .agents
-        .iter()
-        .filter(|a| a.events.contains(&AgentEvent::Terminated("agent_failure")))
-        .collect();
+    let mut engine = SimEngine::new(s, surrogate(55));
+    engine.run_to_completion();
     assert_eq!(
-        crashed.len(),
-        1,
-        "the failure record must crash exactly one agent"
+        engine.fail_stats(),
+        (1, 0),
+        "the failure record must fire exactly once"
     );
-    let survivor = out
-        .agents
-        .iter()
-        .find(|a| !a.events.contains(&AgentEvent::Terminated("agent_failure")))
-        .expect("second agent must run");
-    assert!(survivor.finished);
-    assert!(survivor.best().is_some());
+    assert_eq!(engine.slot_restarts()[0], 1, "one recovery, no crash loop");
+    assert!(engine.slot_healths()[0].is_ok());
+    let out = engine.into_outcome();
+    assert_eq!(out.agents.len(), 2);
+    for a in &out.agents {
+        assert!(a.finished, "agent {} must finish", a.id);
+        assert!(
+            !a.events.iter().any(|e| matches!(
+                e,
+                AgentEvent::Terminated("agent_failure") | AgentEvent::Terminated("quarantined")
+            )),
+            "no agent may be aborted"
+        );
+    }
     assert_eq!(out.cluster.held_by_chopt(), 0);
 }
 

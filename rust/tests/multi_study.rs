@@ -569,7 +569,9 @@ fn multi_platform_streams_and_restores() {
 
 /// Failure injection for the multi-study scheduler (manifest
 /// `failures: [t, ...]` per study): the named study's agent crashes at
-/// the first master tick past `t` — and, because the crash consumes no
+/// the first master tick past `t`, its live sessions are checkpointed
+/// into the stop pool, and the retry policy restarts it after the
+/// backoff — work parked, never lost.  Because the crash consumes no
 /// random draws and frees quota only through the ordinary fair-share
 /// pass, a failure injected into study A never perturbs study B's RNG
 /// stream (B's run is bit-identical with and without A's crash under
@@ -592,26 +594,38 @@ fn injected_failure_never_perturbs_peer_study() {
     let run = |m: StudyManifest| {
         let mut sched = StudyScheduler::new(m, multi_factory());
         sched.run_to_completion();
-        sched.into_outcome()
+        let restarts = sched.study("alice").unwrap().restarts();
+        let stats = sched.fail_stats();
+        (sched.into_outcome(), restarts, stats)
     };
-    let clean = run(manifest(""));
-    let failed = run(manifest(r#""failures": [2000],"#));
+    let (clean, clean_restarts, clean_stats) = run(manifest(""));
+    let (failed, failed_restarts, failed_stats) = run(manifest(r#""failures": [2000],"#));
 
-    // Alice crashed in the failure run (and only there).
+    // Alice crashed and recovered in the failure run (and only there).
+    assert_eq!(clean_stats, (0, 0));
+    assert_eq!(clean_restarts, 0);
+    assert_eq!(failed_stats, (1, 0), "the failure record must be applied, not skipped");
+    assert_eq!(failed_restarts, 1, "alice must restart through the retry policy");
     let alice = failed.study("alice").unwrap().agent.as_ref().unwrap();
+    assert!(alice.finished, "alice must recover and run to completion");
     assert!(
-        alice.events.contains(&AgentEvent::Terminated("agent_failure")),
-        "failure record must crash alice's agent"
+        !alice.events.iter().any(|e| matches!(
+            e,
+            AgentEvent::Terminated("agent_failure") | AgentEvent::Terminated("quarantined")
+        )),
+        "a crash within the retry budget must not abort the study"
     );
-    assert!(alice.finished);
-    assert!(!clean
-        .study("alice")
-        .unwrap()
-        .agent
-        .as_ref()
-        .unwrap()
-        .events
-        .contains(&AgentEvent::Terminated("agent_failure")));
+    assert!(
+        alice
+            .events
+            .iter()
+            .any(|e| matches!(e, AgentEvent::Preempted(_, Pool::Stop))),
+        "the crash must checkpoint live sessions into the stop pool"
+    );
+    assert!(
+        alice.events.iter().any(|e| matches!(e, AgentEvent::Revived(_))),
+        "checkpointed sessions must revive after the backoff"
+    );
 
     // Bob's run is bit-identical either way: the injected failure never
     // touched his RNG stream or decisions.
@@ -635,19 +649,168 @@ fn injected_failure_never_perturbs_peer_study() {
     assert_eq!(measures(bob_clean), measures(bob_failed));
 
     // The failure replays: snapshot after the crash, restore, continue —
-    // identical outcome.
+    // identical outcome, restart counters rebuilt by the replay.
     let mut original = StudyScheduler::new(manifest(r#""failures": [2000],"#), multi_factory());
     original.run_until(8_000.0);
-    assert!(original.study("alice").unwrap().done(), "crash lands well before t=8000");
+    assert_eq!(original.fail_stats(), (1, 0), "crash lands well before t=8000");
+    assert_eq!(original.study("alice").unwrap().restarts(), 1);
     let snap = original.snapshot_json();
     let snap = chopt::util::json::parse(&snap.to_string_pretty()).unwrap();
     let mut restored = StudyScheduler::restore(&snap, multi_factory()).unwrap();
     assert_eq!(restored.events_processed(), original.events_processed());
+    assert_eq!(restored.fail_stats(), original.fail_stats());
+    assert_eq!(
+        restored.study("alice").unwrap().restarts(),
+        original.study("alice").unwrap().restarts(),
+        "replay must rebuild the restart counter"
+    );
     original.run_to_completion();
     restored.run_to_completion();
     let (a, b) = (original.into_outcome(), restored.into_outcome());
     assert_eq!(a.events_processed, b.events_processed);
     assert_eq!(a.end_time, b.end_time);
+}
+
+/// Acceptance: a spot-reclaim wave — four correlated study crashes at a
+/// single master tick — ends with zero silently lost sessions.  Every
+/// affected study's live sessions are checkpointed into its stop pool,
+/// the study restarts after its backoff, the parked sessions revive,
+/// and the run terminates with every study complete.
+#[test]
+fn reclaim_wave_recovers_every_study_with_zero_lost_sessions() {
+    let text = format!(
+        r#"{{"cluster_gpus": 8, "borrow": false,
+            "scenario": {{"sources": [
+              {{"kind": "spot_reclaim", "slots": 4, "wave_size": 4,
+                "first_at": 3000, "every": 0, "waves": 1, "seed": "9"}}
+            ]}},
+            "studies": [
+              {{"name": "s0", "quota": 2, "config": {}}},
+              {{"name": "s1", "quota": 2, "config": {}}},
+              {{"name": "s2", "quota": 2, "config": {}}},
+              {{"name": "s3", "quota": 2, "config": {}}}
+            ]}}"#,
+        config_json(10, 6, 2, 100),
+        config_json(10, 6, 2, 101),
+        config_json(10, 6, 2, 102),
+        config_json(10, 6, 2, 103)
+    );
+    let manifest = StudyManifest::from_json_str(&text).unwrap();
+    let mut sched = StudyScheduler::new(manifest, multi_factory());
+    sched.run_to_completion();
+    assert_eq!(sched.fail_stats(), (4, 0), "the wave must hit all four studies");
+    for st in sched.studies() {
+        assert_eq!(st.restarts(), 1, "study '{}' must restart exactly once", st.name());
+        assert!(st.health().is_ok(), "study '{}' must end healthy", st.name());
+    }
+    let out = sched.into_outcome();
+    for s in &out.studies {
+        let a = s.agent.as_ref().unwrap();
+        assert!(a.finished, "study '{}' must finish after the wave", s.name);
+        assert!(
+            !a.events.iter().any(|e| matches!(
+                e,
+                AgentEvent::Terminated("agent_failure") | AgentEvent::Terminated("quarantined")
+            )),
+            "study '{}' must not be aborted",
+            s.name
+        );
+        assert!(
+            a.events.iter().any(|e| matches!(e, AgentEvent::Revived(_))),
+            "study '{}': parked sessions must revive",
+            s.name
+        );
+        a.pools.check_invariants().unwrap();
+        // Zero silently lost sessions: every session ever created is in
+        // a pool, and nothing still claims GPUs.
+        assert_eq!(
+            a.pools.live_count() + a.pools.stop_count() + a.pools.dead_count(),
+            a.created,
+            "study '{}' lost sessions",
+            s.name
+        );
+    }
+    assert_eq!(out.cluster.held_by_chopt(), 0);
+}
+
+/// Satellite: a composed scenario (diurnal + flash-crowd demand, a
+/// reclaim wave, a degraded-node episode) is replay-safe.  A snapshot
+/// taken mid-weather restores bit-identically, and an `?at_event=`
+/// scrub (`restore_at`) re-converges to the reference outcome, because
+/// the weather is a pure function of the manifest — no cursors or
+/// consumed-flags are ever serialized.
+#[test]
+fn composed_scenario_replays_bit_identically() {
+    let text = format!(
+        r#"{{"cluster_gpus": 8, "borrow": true,
+            "scenario": {{"sources": [
+              {{"kind": "diurnal", "total_gpus": 8, "base": 0.2, "amp": 0.2,
+                "period": 20000, "jitter": 0.05, "seed": "5"}},
+              {{"kind": "flash_crowd", "total_gpus": 8, "spike": 0.5,
+                "first_at": 4000, "every": 0, "duration": 1500, "seed": "6"}},
+              {{"kind": "spot_reclaim", "slots": 2, "wave_size": 1,
+                "first_at": 5000, "every": 0, "waves": 1, "seed": "7"}},
+              {{"kind": "degraded_node", "gpus": 2, "first_at": 7000,
+                "every": 0, "duration": 2000, "seed": "8"}}
+            ]}},
+            "studies": [
+              {{"name": "alice", "quota": 4, "config": {}}},
+              {{"name": "bob", "quota": 4, "config": {}}}
+            ]}}"#,
+        config_json(10, 8, 3, 100),
+        config_json(10, 8, 3, 101)
+    );
+    let manifest = StudyManifest::from_json_str(&text).unwrap();
+    assert!(manifest.scenario.is_some());
+
+    // Reference: straight through, no interruption.
+    let mut reference = StudyScheduler::new(manifest.clone(), multi_factory());
+    reference.run_to_completion();
+    let ref_out = reference.into_outcome();
+
+    // Snapshot mid-weather (after the reclaim wave landed), restore.
+    let mut original = StudyScheduler::new(manifest, multi_factory());
+    original.run_until(6_000.0);
+    assert_eq!(original.fail_stats(), (1, 0), "the reclaim wave must land before t=6000");
+    let snap = original.snapshot_json();
+    let snap = chopt::util::json::parse(&snap.to_string_pretty()).unwrap();
+    let mut restored = StudyScheduler::restore(&snap, multi_factory()).unwrap();
+    assert!(restored.manifest().scenario.is_some(), "scenario must survive the snapshot");
+    assert_eq!(restored.now(), original.now());
+    assert_eq!(restored.events_processed(), original.events_processed());
+    assert_eq!(restored.fail_stats(), original.fail_stats(), "replay must rebuild fault counters");
+    let half = original.events_processed() / 2;
+    restored.run_to_completion();
+    let restored_out = restored.into_outcome();
+    assert_eq!(ref_out.end_time, restored_out.end_time);
+    assert_eq!(ref_out.events_processed, restored_out.events_processed);
+    for (a, b) in ref_out.studies.iter().zip(restored_out.studies.iter()) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(
+            agent_key(a.agent.as_ref().unwrap()),
+            agent_key(b.agent.as_ref().unwrap()),
+            "study {} diverged through snapshot/restore",
+            a.name
+        );
+    }
+
+    // `?at_event=` scrub: replay only half the recorded events, then run
+    // forward — the weather re-derives from the manifest, so the scrub
+    // converges to the same final outcome.
+    let mut scrubbed = StudyScheduler::restore_at(&snap, multi_factory(), half).unwrap();
+    assert_eq!(scrubbed.events_processed(), half);
+    scrubbed.run_to_completion();
+    let scrub_out = scrubbed.into_outcome();
+    assert_eq!(ref_out.end_time, scrub_out.end_time);
+    assert_eq!(ref_out.events_processed, scrub_out.events_processed);
+    for (a, b) in ref_out.studies.iter().zip(scrub_out.studies.iter()) {
+        assert_eq!(
+            agent_key(a.agent.as_ref().unwrap()),
+            agent_key(b.agent.as_ref().unwrap()),
+            "study {} diverged through the at_event scrub",
+            a.name
+        );
+    }
 }
 
 /// Cross-study reclaim picks the most recently granted live session

@@ -98,15 +98,19 @@ struct Fingerprint {
 }
 
 fn run(borrow: bool, seed: u64, threads: usize) -> Fingerprint {
+    run_manifest(manifest(borrow, seed), seed, threads, if borrow { "b" } else { "nb" })
+}
+
+fn run_manifest(m: StudyManifest, seed: u64, threads: usize, tag: &str) -> Fingerprint {
     let dir = std::env::temp_dir().join(format!(
-        "chopt-par-det-{}-{borrow}-{seed}-{threads}",
+        "chopt-par-det-{}-{tag}-{seed}-{threads}",
         std::process::id()
     ));
     let _ = std::fs::remove_dir_all(&dir);
     std::fs::create_dir_all(&dir).unwrap();
     let snap_path = dir.join("snapshot.json");
 
-    let mut platform = MultiPlatform::new(manifest(borrow, seed), factory(seed))
+    let mut platform = MultiPlatform::new(m, factory(seed))
         .with_event_logs(&dir)
         .unwrap()
         .with_snapshots(&snap_path, 2_000.0);
@@ -184,6 +188,56 @@ fn parallel_stepping_is_bit_identical_across_seeds_and_threads() {
             assert_eq!(
                 serial, parallel,
                 "parallel run diverged (borrow={borrow} seed={seed} threads={threads})"
+            );
+        }
+    }
+}
+
+/// Four tenants under adversarial weather: composed demand sources plus
+/// a correlated reclaim wave, so the window heuristic must cope with
+/// scenario-bearing ticks (routed through the serial tick path),
+/// crash/backoff recovery, and demand-squeezed fair shares.
+fn weather_manifest(seed: u64) -> StudyManifest {
+    let text = format!(
+        r#"{{"cluster_gpus": 8, "borrow": true,
+            "scenario": {{"sources": [
+              {{"kind": "diurnal", "total_gpus": 8, "base": 0.15, "amp": 0.15,
+                "period": 15000, "jitter": 0.05, "seed": "{seed}"}},
+              {{"kind": "flash_crowd", "total_gpus": 8, "spike": 0.4,
+                "first_at": 4000, "every": 0, "duration": 1200, "seed": "{seed}"}},
+              {{"kind": "spot_reclaim", "slots": 4, "wave_size": 2,
+                "first_at": 3000, "every": 0, "waves": 1, "seed": "{seed}"}}
+            ]}},
+            "studies": [
+              {{"name": "s0", "quota": 2, "config": {}}},
+              {{"name": "s1", "quota": 2, "config": {}}},
+              {{"name": "s2", "quota": 2, "config": {}}},
+              {{"name": "s3", "quota": 2, "config": {}}}
+            ]}}"#,
+        config_json(10, 6, 2, seed),
+        config_json(10, 8, 2, seed + 1),
+        config_json(-1, 4, 2, seed + 2),
+        config_json(10, 6, 2, seed + 3)
+    );
+    StudyManifest::from_json_str(&text).unwrap()
+}
+
+/// The same bit-identity property with a composed scenario attached:
+/// `--step-threads` stays a pure wall-clock knob even while the cluster
+/// weather is crashing agents and squeezing the fair share.
+#[test]
+fn parallel_stepping_is_bit_identical_under_scenario_weather() {
+    for seed in [100_u64, 777] {
+        let serial = run_manifest(weather_manifest(seed), seed, 1, "wx");
+        assert!(
+            serial.events_processed > 100,
+            "weather workload too small to exercise windows (seed={seed})"
+        );
+        for threads in [2, 8] {
+            let parallel = run_manifest(weather_manifest(seed), seed, threads, "wx");
+            assert_eq!(
+                serial, parallel,
+                "weather run diverged (seed={seed} threads={threads})"
             );
         }
     }
