@@ -6,6 +6,7 @@
 //!
 //!     cargo bench --bench perf_scale
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use chopt::cluster::{
@@ -18,6 +19,8 @@ use chopt::coordinator::{
 use chopt::trainer::surrogate::SurrogateTrainer;
 use chopt::trainer::Trainer;
 use chopt::util::bench::{BenchJson, Bencher};
+use chopt::viz::api::{ApiQuery, RunSource};
+use chopt::viz::fanout::{FanoutConfig, FanoutSource, TrainerFactory};
 use chopt::viz::server::{http_request, Routes, ServerConfig, VizServer};
 
 const STUDIES: usize = 64;
@@ -332,6 +335,49 @@ fn main() {
         .metric("scenario_fails_applied", fails_applied as f64)
         .metric("scenario_wall_secs", wx_wall)
         .metric("scenario_overhead_speedup_x", overhead);
+
+    // -- H. sharded control plane: 4 engine-worker shards vs 1 -------------
+    // The borrow-free variant of the scale manifest (hard isolation is
+    // the sharding contract) runs behind the aggregating FanoutSource
+    // at 1 and at 4 shards.  The merged fair_share/studies documents
+    // are asserted bit-identical across shard counts before the
+    // speedup is reported; the `shard_step_speedup_x` floor is pinned
+    // in the committed baseline, so CI fails if partitioning the
+    // event loop stops paying off.
+    let iso_manifest = || {
+        let mut m = scale_manifest();
+        m.borrow = false;
+        m
+    };
+    let shard_factory: TrainerFactory = Arc::new(factory);
+    let mut run_sharded = |shards: usize| {
+        let t = Instant::now();
+        let mut fan = FanoutSource::new(
+            iso_manifest(),
+            shard_factory.clone(),
+            FanoutConfig { shards, ..FanoutConfig::default() },
+        )
+        .unwrap();
+        fan.run_to_completion(50_000.0);
+        let sharded_wall = t.elapsed().as_secs_f64();
+        assert!(fan.is_done(), "sharded scale run must drain ({shards} shards)");
+        let docs = (
+            fan.query(&ApiQuery::FairShare).unwrap().to_string_compact(),
+            fan.query(&ApiQuery::Studies).unwrap().to_string_compact(),
+        );
+        (sharded_wall, docs)
+    };
+    let (wall_1, docs_1) = run_sharded(1);
+    let (wall_4, docs_4) = run_sharded(4);
+    assert_eq!(docs_1, docs_4, "merged documents diverged between 1 and 4 shards");
+    let shard_speedup = wall_1 / wall_4.max(1e-9);
+    println!(
+        "sharded control plane ({STUDIES} isolated studies): 1 shard {wall_1:.2}s, \
+         4 shards {wall_4:.2}s -> {shard_speedup:.2}x"
+    );
+    out.metric("shard_count", 4.0)
+        .metric("shard_step_wall_secs", wall_4)
+        .metric("shard_step_speedup_x", shard_speedup);
 
     match out.save() {
         Ok(path) => println!("wrote {}", path.display()),

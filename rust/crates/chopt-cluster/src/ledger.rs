@@ -1,0 +1,299 @@
+//! Global quota ledger for the sharded control plane.
+//!
+//! When studies are partitioned across engine shards, every shard runs
+//! its own `StudyScheduler` and can only see its *own* studies' quotas —
+//! but admission must still enforce the single-scheduler invariant that
+//! the sum of **all** reserved quotas (done studies keep theirs) never
+//! exceeds the cluster. The [`QuotaLedger`] is that single shared-state
+//! arbiter: shards and the submission path never touch each other's
+//! schedulers, they lease and adjust quota through one broker.
+//!
+//! The ledger is deliberately dumb — a name→quota map with a capacity
+//! check — so that whether a lease is granted is a pure function of the
+//! admission history, never of shard timing. The message-channel broker
+//! ([`QuotaBroker`] / [`QuotaClient`]) wraps it for cross-thread use:
+//! each request blocks on its own reply channel, so callers observe a
+//! strict serialization of ledger operations.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+/// Name→quota reservations against one fixed GPU total.
+///
+/// Mirrors `StudyScheduler::submit_study`'s global check: reservations
+/// are never released when a study finishes (a done study still counts
+/// against the pool, exactly as in the single-scheduler Σ-quota check),
+/// only [`QuotaLedger::adjust`] moves a live reservation.
+#[derive(Debug, Clone)]
+pub struct QuotaLedger {
+    total: usize,
+    reserved: BTreeMap<String, usize>,
+}
+
+impl QuotaLedger {
+    pub fn new(total_gpus: usize) -> QuotaLedger {
+        QuotaLedger {
+            total: total_gpus,
+            reserved: BTreeMap::new(),
+        }
+    }
+
+    /// Cluster capacity the ledger arbitrates.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Sum of every reservation (done studies included — see type docs).
+    pub fn reserved_total(&self) -> usize {
+        self.reserved.values().sum()
+    }
+
+    /// Capacity still leasable to new studies.
+    pub fn remaining(&self) -> usize {
+        self.total.saturating_sub(self.reserved_total())
+    }
+
+    /// Number of distinct reservations.
+    pub fn studies(&self) -> usize {
+        self.reserved.len()
+    }
+
+    pub fn quota_of(&self, study: &str) -> Option<usize> {
+        self.reserved.get(study).copied()
+    }
+
+    /// Reserve `quota` GPUs for a new study. Refused when the name is
+    /// already reserved, the quota is zero, or it does not fit beside
+    /// every existing reservation — the same three refusals
+    /// `submit_study` makes, so a ledger grant is never rolled back by
+    /// the owning shard.
+    pub fn lease(&mut self, study: &str, quota: usize) -> bool {
+        if quota == 0 || self.reserved.contains_key(study) {
+            return false;
+        }
+        if self.reserved_total() + quota > self.total {
+            return false;
+        }
+        self.reserved.insert(study.to_string(), quota);
+        true
+    }
+
+    /// Move an existing reservation to `quota` (the `set_quota` path).
+    /// Refused for unknown studies, zero, or when the new value does not
+    /// fit beside the *other* reservations.
+    pub fn adjust(&mut self, study: &str, quota: usize) -> bool {
+        let Some(&old) = self.reserved.get(study) else {
+            return false;
+        };
+        if quota == 0 {
+            return false;
+        }
+        if self.reserved_total() - old + quota > self.total {
+            return false;
+        }
+        self.reserved.insert(study.to_string(), quota);
+        true
+    }
+
+    /// Drop a reservation outright. Not used on study completion (done
+    /// studies keep quota); exists for callers that roll back a lease
+    /// whose downstream admission failed.
+    pub fn release(&mut self, study: &str) -> bool {
+        self.reserved.remove(study).is_some()
+    }
+}
+
+/// Point-in-time ledger summary returned by [`QuotaClient::stat`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LedgerStat {
+    pub total: usize,
+    pub reserved: usize,
+    pub studies: usize,
+}
+
+/// The broker's wire protocol: every request carries its own reply
+/// sender, so responses can never be misdelivered across callers.
+enum QuotaMsg {
+    Lease {
+        study: String,
+        quota: usize,
+        reply: Sender<bool>,
+    },
+    Adjust {
+        study: String,
+        quota: usize,
+        reply: Sender<bool>,
+    },
+    Release {
+        study: String,
+        reply: Sender<bool>,
+    },
+    Stat {
+        reply: Sender<LedgerStat>,
+    },
+}
+
+/// Cloneable handle shards use to talk to the ledger service thread.
+#[derive(Clone)]
+pub struct QuotaClient {
+    tx: Sender<QuotaMsg>,
+}
+
+impl QuotaClient {
+    fn ask<R>(&self, msg: impl FnOnce(Sender<R>) -> QuotaMsg, fallback: R) -> R {
+        let (reply, rx) = channel();
+        if self.tx.send(msg(reply)).is_err() {
+            return fallback;
+        }
+        rx.recv().unwrap_or(fallback)
+    }
+
+    /// See [`QuotaLedger::lease`]. `false` when refused or the broker
+    /// is gone.
+    pub fn lease(&self, study: &str, quota: usize) -> bool {
+        let study = study.to_string();
+        self.ask(|reply| QuotaMsg::Lease { study, quota, reply }, false)
+    }
+
+    /// See [`QuotaLedger::adjust`].
+    pub fn adjust(&self, study: &str, quota: usize) -> bool {
+        let study = study.to_string();
+        self.ask(|reply| QuotaMsg::Adjust { study, quota, reply }, false)
+    }
+
+    /// See [`QuotaLedger::release`].
+    pub fn release(&self, study: &str) -> bool {
+        let study = study.to_string();
+        self.ask(|reply| QuotaMsg::Release { study, reply }, false)
+    }
+
+    pub fn stat(&self) -> LedgerStat {
+        self.ask(
+            |reply| QuotaMsg::Stat { reply },
+            LedgerStat {
+                total: 0,
+                reserved: 0,
+                studies: 0,
+            },
+        )
+    }
+}
+
+/// Owns the ledger service thread; dropping the broker (after every
+/// [`QuotaClient`] clone is gone) shuts the thread down cleanly.
+pub struct QuotaBroker {
+    tx: Option<Sender<QuotaMsg>>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl QuotaBroker {
+    /// Start a service thread around a fresh ledger of `total_gpus`.
+    pub fn start(total_gpus: usize) -> (QuotaBroker, QuotaClient) {
+        QuotaBroker::with_ledger(QuotaLedger::new(total_gpus))
+    }
+
+    /// Start a service thread around a pre-populated ledger (restore).
+    pub fn with_ledger(mut ledger: QuotaLedger) -> (QuotaBroker, QuotaClient) {
+        let (tx, rx) = channel::<QuotaMsg>();
+        let thread = std::thread::Builder::new()
+            .name("chopt-quota-ledger".into())
+            .spawn(move || {
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        QuotaMsg::Lease { study, quota, reply } => {
+                            let _ = reply.send(ledger.lease(&study, quota));
+                        }
+                        QuotaMsg::Adjust { study, quota, reply } => {
+                            let _ = reply.send(ledger.adjust(&study, quota));
+                        }
+                        QuotaMsg::Release { study, reply } => {
+                            let _ = reply.send(ledger.release(&study));
+                        }
+                        QuotaMsg::Stat { reply } => {
+                            let _ = reply.send(LedgerStat {
+                                total: ledger.total(),
+                                reserved: ledger.reserved_total(),
+                                studies: ledger.studies(),
+                            });
+                        }
+                    }
+                }
+            })
+            .ok();
+        let client = QuotaClient { tx: tx.clone() };
+        (
+            QuotaBroker {
+                tx: Some(tx),
+                thread,
+            },
+            client,
+        )
+    }
+}
+
+impl Drop for QuotaBroker {
+    fn drop(&mut self) {
+        // The thread exits once every sender is dropped; clients may
+        // outlive the broker, in which case their requests fail closed
+        // (`false`) rather than hanging.
+        drop(self.tx.take());
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_enforces_global_capacity() {
+        let mut l = QuotaLedger::new(8);
+        assert!(l.lease("a", 3));
+        assert!(l.lease("b", 5));
+        assert_eq!(l.remaining(), 0);
+        // Full, duplicate, and zero leases are refused.
+        assert!(!l.lease("c", 1));
+        assert!(!l.lease("a", 1));
+        assert!(!l.lease("d", 0));
+        // Adjust moves within capacity; the displaced quota frees up.
+        assert!(l.adjust("b", 2));
+        assert!(l.lease("c", 3));
+        assert!(!l.adjust("b", 6), "2->6 would need 3+6+3 > 8");
+        assert!(!l.adjust("nope", 1));
+        assert_eq!(l.quota_of("b"), Some(2));
+        assert_eq!(l.reserved_total(), 8);
+        assert!(l.release("c"));
+        assert!(!l.release("c"));
+        assert_eq!(l.remaining(), 3);
+    }
+
+    #[test]
+    fn broker_serializes_requests_across_threads() {
+        let (_broker, client) = QuotaBroker::start(8);
+        let mut handles = Vec::new();
+        for i in 0..8 {
+            let c = client.clone();
+            handles.push(std::thread::spawn(move || c.lease(&format!("s{i}"), 2)));
+        }
+        let granted = handles
+            .into_iter()
+            .filter(|h| matches!(h.join(), Ok(true)))
+            .count();
+        // Exactly 4 leases of 2 fit in 8, whatever the arrival order.
+        assert_eq!(granted, 4);
+        let stat = client.stat();
+        assert_eq!((stat.total, stat.reserved, stat.studies), (8, 8, 4));
+    }
+
+    #[test]
+    fn client_fails_closed_after_broker_drop() {
+        let (broker, client) = QuotaBroker::start(4);
+        assert!(client.lease("a", 1));
+        drop(broker);
+        assert!(!client.lease("b", 1));
+        assert_eq!(client.stat().total, 0);
+    }
+}

@@ -7,12 +7,14 @@
 //! the series Fig. 8 plots.
 
 mod allocator;
+mod ledger;
 mod scenario;
 mod trace;
 
 pub use allocator::{AllocError, Cluster, ClusterOp, Owner};
+pub use ledger::{LedgerStat, QuotaBroker, QuotaClient, QuotaLedger};
 pub use scenario::{
-    DegradedNode, DiurnalLoad, FaultEvent, FlashCrowd, Scenario, ScenarioSource, SpotReclaimWave,
-    WeatherSource,
+    DegradedNode, DiurnalLoad, FaultEvent, FlashCrowd, Scenario, ScenarioSource,
+    ScenarioSubmission, SpotReclaimWave, WeatherSource,
 };
 pub use trace::{ExternalLoadTrace, TraceZone};

@@ -305,16 +305,41 @@ impl ScenarioSource for WeatherSource {
     }
 }
 
-/// A composed scenario: the sum of its sources' demand and the merged,
-/// `(time, slot)`-ordered union of their fault schedules.
+/// One scenario-driven study submission: at virtual time `at`, the
+/// study described by `spec` (a `StudySpec` JSON object — this crate
+/// never parses it) is pushed at the submission queue. This is the
+/// flash-crowd *submission* counterpart to [`FlashCrowd`]'s demand
+/// spike: instead of squeezing existing studies, a burst of new tenants
+/// arrives and must be admitted.
+#[derive(Debug, Clone)]
+pub struct ScenarioSubmission {
+    pub at: SimTime,
+    pub spec: Json,
+}
+
+/// A composed scenario: the sum of its sources' demand, the merged
+/// `(time, slot)`-ordered union of their fault schedules, and an
+/// optional schedule of study submissions.
 #[derive(Debug, Clone)]
 pub struct Scenario {
     pub sources: Vec<WeatherSource>,
+    pub submissions: Vec<ScenarioSubmission>,
 }
 
 impl Scenario {
     pub fn new(sources: Vec<WeatherSource>) -> Scenario {
-        Scenario { sources }
+        Scenario {
+            sources,
+            submissions: Vec::new(),
+        }
+    }
+
+    /// Attach a submission schedule (kept `(submit_at, index)`-sorted so
+    /// polling order never depends on authoring order).
+    pub fn with_submissions(mut self, mut submissions: Vec<ScenarioSubmission>) -> Scenario {
+        submissions.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap_or(Ordering::Equal));
+        self.submissions = submissions;
+        self
     }
 
     /// Total external GPU demand across every source at time `t`.
@@ -336,6 +361,17 @@ impl Scenario {
                 .then(a.slot.cmp(&b.slot))
         });
         out
+    }
+
+    /// Every scheduled submission in the half-open window `(from, to]`,
+    /// in `(submit_at, authoring index)` order — the same half-open
+    /// polling contract as [`Scenario::faults_between`], so a restored
+    /// run re-polls the identical schedule with no consumed-flags.
+    pub fn submissions_between(&self, from: SimTime, to: SimTime) -> Vec<&ScenarioSubmission> {
+        self.submissions
+            .iter()
+            .filter(|s| s.at > from && s.at <= to)
+            .collect()
     }
 
     /// Serialize for manifests and engine snapshots.  Seeds travel as
@@ -378,7 +414,26 @@ impl Scenario {
                     .with("seed", Json::Str(d.seed.to_string())),
             })
             .collect();
-        Json::obj().with("sources", Json::Arr(sources))
+        let mut doc = Json::obj().with("sources", Json::Arr(sources));
+        if !self.submissions.is_empty() {
+            // Emitted only when present so pre-submission scenario JSON
+            // (and every snapshot produced before this field existed)
+            // round-trips byte-identically.
+            doc.set(
+                "submissions",
+                Json::Arr(
+                    self.submissions
+                        .iter()
+                        .map(|s| {
+                            Json::obj()
+                                .with("submit_at", Json::Num(s.at))
+                                .with("study", s.spec.clone())
+                        })
+                        .collect(),
+                ),
+            );
+        }
+        doc
     }
 
     /// Inverse of [`Scenario::to_json`].
@@ -429,7 +484,18 @@ impl Scenario {
             };
             sources.push(source);
         }
-        Ok(Scenario { sources })
+        let mut submissions = Vec::new();
+        if let Some(subs) = doc.get("submissions").and_then(|v| v.as_arr()) {
+            for sub in subs {
+                let at = num(sub, "submit_at")?;
+                let spec = sub
+                    .get("study")
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("scenario submission missing 'study' spec"))?;
+                submissions.push(ScenarioSubmission { at, spec });
+            }
+        }
+        Ok(Scenario { sources, submissions: Vec::new() }.with_submissions(submissions))
     }
 
     /// Load a scenario from a JSON file (the CLI `--scenario` path).
@@ -558,6 +624,45 @@ mod tests {
             sc.faults_between(0.0, 10_000.0),
             back.faults_between(0.0, 10_000.0)
         );
+    }
+
+    #[test]
+    fn submissions_roundtrip_sorted_and_half_open() {
+        let spec = |name: &str| {
+            chopt_core::util::json::parse(&format!(
+                r#"{{"study": "{name}", "quota": 2, "sessions": 4}}"#
+            ))
+            .unwrap()
+        };
+        let sc = Scenario::new(vec![]).with_submissions(vec![
+            ScenarioSubmission { at: 300.0, spec: spec("late") },
+            ScenarioSubmission { at: 100.0, spec: spec("early") },
+            ScenarioSubmission { at: 300.0, spec: spec("late2") },
+        ]);
+        // with_submissions sorts by time, stable within a tie.
+        let names: Vec<_> = sc
+            .submissions
+            .iter()
+            .map(|s| s.spec.get("study").unwrap().as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(names, ["early", "late", "late2"]);
+        // Half-open (from, to] polling, same contract as faults_between.
+        assert_eq!(sc.submissions_between(0.0, 100.0).len(), 1);
+        assert_eq!(sc.submissions_between(100.0, 300.0).len(), 2);
+        assert!(sc.submissions_between(300.0, 500.0).is_empty());
+        // JSON round-trip preserves the schedule and the spec payloads.
+        let back =
+            Scenario::from_json(&chopt_core::util::json::parse(&sc.to_json().to_string_pretty())
+                .unwrap())
+            .unwrap();
+        assert_eq!(back.submissions.len(), 3);
+        assert_eq!(back.submissions[0].at, 100.0);
+        assert_eq!(
+            back.submissions[0].spec.to_string_compact(),
+            sc.submissions[0].spec.to_string_compact()
+        );
+        // A submission-free scenario keeps the legacy document shape.
+        assert!(weather().to_json().get("submissions").is_none());
     }
 
     #[test]

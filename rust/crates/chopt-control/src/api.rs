@@ -31,8 +31,9 @@
 //! * **replayed** — `stored::ReplaySource` scrubs a snapshot to any
 //!   recorded event count (`?at_event=N` on any query).
 //!
-//! The legacy unversioned `/api/*.json` paths are **deprecated aliases**
-//! onto the v1 handlers: they serve byte-identical v1 bodies.
+//! The legacy unversioned `/api/*.json` paths completed their documented
+//! deprecation: they answer `410 Gone` with a `Link` header pointing at
+//! the `/api/v1` path that replaced them.
 //!
 //! Threading: the HTTP server answers each connection on its own thread,
 //! but the platform is single-threaded by design (`&mut` engine loop).
@@ -274,14 +275,17 @@ pub enum RouteError {
     MethodNotAllowed,
     /// Bad query parameter or malformed command body.
     BadRequest(String),
+    /// A retired legacy `/api/*.json` alias; carries the `/api/v1`
+    /// path that replaced it (surfaced in the `Link` response header).
+    Gone(String),
 }
 
 /// Parse an HTTP request into a typed API call.  `query` is the raw
 /// query string (no leading `?`); `body` is the request body.
 ///
-/// Legacy `/api/*.json` paths parse to the same [`ApiQuery`] values as
-/// their `/api/v1` counterparts — the deprecation story is "same handler,
-/// same bytes, new name".
+/// The legacy `/api/*.json` aliases completed their documented
+/// deprecation: they answer `410 Gone` ([`RouteError::Gone`]) with a
+/// pointer to the `/api/v1` path that replaced them.
 pub fn parse_route(
     method: &str,
     path: &str,
@@ -315,36 +319,36 @@ pub fn parse_route(
     }
 }
 
-/// Map a path (v1 or legacy alias) to a query, or `None` if unknown.
+/// Map a `/api/v1` path to a query, or `None` if unknown.  Retired
+/// legacy aliases short-circuit to [`RouteError::Gone`] with their
+/// replacement path.
 fn route_query(path: &str, query: &str) -> Result<Option<ApiQuery>, RouteError> {
+    if let Some(v1) = legacy_alias_replacement(path) {
+        return Err(RouteError::Gone(v1));
+    }
     let k = || param_usize(query, "k", 10);
     let limit = || param_usize(query, "limit", usize::MAX);
     let offset = || param_usize(query, "offset", 0);
     let q = match path {
-        "/api/v1/status" | "/api/status.json" => ApiQuery::Status,
-        "/api/v1/cluster" | "/api/cluster.json" => ApiQuery::Cluster {
+        "/api/v1/status" => ApiQuery::Status,
+        "/api/v1/cluster" => ApiQuery::Cluster {
             window: param_f64(query, "window")?,
         },
-        "/api/v1/fair_share" | "/api/fair_share.json" => ApiQuery::FairShare,
+        "/api/v1/fair_share" => ApiQuery::FairShare,
         "/api/v1/studies" => ApiQuery::Studies,
-        "/api/v1/sessions" | "/api/sessions.json" => ApiQuery::Sessions {
+        "/api/v1/sessions" => ApiQuery::Sessions {
             limit: limit()?,
             offset: offset()?,
         },
-        "/api/v1/leaderboard" | "/api/leaderboard.json" => ApiQuery::Leaderboard { k: k()? },
-        "/api/v1/parallel" | "/api/parallel.json" => ApiQuery::Parallel,
-        "/api/v1/curves" | "/api/curves.json" => ApiQuery::Curves {
+        "/api/v1/leaderboard" => ApiQuery::Leaderboard { k: k()? },
+        "/api/v1/parallel" => ApiQuery::Parallel,
+        "/api/v1/curves" => ApiQuery::Curves {
             limit: limit()?,
             offset: offset()?,
         },
         _ => {
-            // /api/v1/studies/<name>/<view> and the legacy
-            // /api/studies/<name>/<view>.json per-study routes.
-            let rest = if let Some(r) = path.strip_prefix("/api/v1/studies/") {
-                r
-            } else if let Some(r) = path.strip_prefix("/api/studies/") {
-                r
-            } else {
+            // /api/v1/studies/<name>/<view> per-study routes.
+            let Some(rest) = path.strip_prefix("/api/v1/studies/") else {
                 return Ok(None);
             };
             let Some((study, view)) = rest.split_once('/') else {
@@ -355,16 +359,14 @@ fn route_query(path: &str, query: &str) -> Result<Option<ApiQuery>, RouteError> 
             }
             let study = study.to_string();
             match view {
-                "sessions" | "sessions.json" => ApiQuery::StudySessions {
+                "sessions" => ApiQuery::StudySessions {
                     study,
                     limit: limit()?,
                     offset: offset()?,
                 },
-                "leaderboard" | "leaderboard.json" => {
-                    ApiQuery::StudyLeaderboard { study, k: k()? }
-                }
-                "parallel" | "parallel.json" => ApiQuery::StudyParallel { study },
-                "curves" | "curves.json" => ApiQuery::StudyCurves {
+                "leaderboard" => ApiQuery::StudyLeaderboard { study, k: k()? },
+                "parallel" => ApiQuery::StudyParallel { study },
+                "curves" => ApiQuery::StudyCurves {
                     study,
                     limit: limit()?,
                     offset: offset()?,
@@ -374,6 +376,32 @@ fn route_query(path: &str, query: &str) -> Result<Option<ApiQuery>, RouteError> 
         }
     };
     Ok(Some(q))
+}
+
+/// The `/api/v1` path that replaced a retired legacy `/api/*.json`
+/// alias, or `None` for paths that were never aliases.
+fn legacy_alias_replacement(path: &str) -> Option<String> {
+    match path {
+        "/api/status.json" => Some("/api/v1/status".into()),
+        "/api/cluster.json" => Some("/api/v1/cluster".into()),
+        "/api/fair_share.json" => Some("/api/v1/fair_share".into()),
+        "/api/sessions.json" => Some("/api/v1/sessions".into()),
+        "/api/leaderboard.json" => Some("/api/v1/leaderboard".into()),
+        "/api/parallel.json" => Some("/api/v1/parallel".into()),
+        "/api/curves.json" => Some("/api/v1/curves".into()),
+        _ => {
+            let rest = path.strip_prefix("/api/studies/")?;
+            let (study, view) = rest.split_once('/')?;
+            if study.is_empty() || study.contains('/') {
+                return None;
+            }
+            // The alias family served both `/sessions.json` and the
+            // suffix-less `/sessions`; both are retired.
+            let view = view.strip_suffix(".json").unwrap_or(view);
+            matches!(view, "sessions" | "leaderboard" | "parallel" | "curves")
+                .then(|| format!("/api/v1/studies/{study}/{view}"))
+        }
+    }
 }
 
 fn param<'q>(query: &'q str, name: &str) -> Option<&'q str> {
@@ -887,25 +915,30 @@ mod tests {
     use super::*;
 
     #[test]
-    fn v1_and_legacy_paths_parse_to_the_same_query() {
-        for (v1, legacy) in [
-            ("/api/v1/status", "/api/status.json"),
-            ("/api/v1/cluster", "/api/cluster.json"),
-            ("/api/v1/fair_share", "/api/fair_share.json"),
-            ("/api/v1/sessions", "/api/sessions.json"),
-            ("/api/v1/leaderboard", "/api/leaderboard.json"),
-            ("/api/v1/parallel", "/api/parallel.json"),
-            ("/api/v1/curves", "/api/curves.json"),
-            ("/api/v1/studies/alice/sessions", "/api/studies/alice/sessions.json"),
-            (
-                "/api/v1/studies/alice/leaderboard",
-                "/api/studies/alice/leaderboard.json",
-            ),
+    fn legacy_aliases_are_gone_with_a_v1_pointer() {
+        for (legacy, v1) in [
+            ("/api/status.json", "/api/v1/status"),
+            ("/api/cluster.json", "/api/v1/cluster"),
+            ("/api/fair_share.json", "/api/v1/fair_share"),
+            ("/api/sessions.json", "/api/v1/sessions"),
+            ("/api/leaderboard.json", "/api/v1/leaderboard"),
+            ("/api/parallel.json", "/api/v1/parallel"),
+            ("/api/curves.json", "/api/v1/curves"),
+            ("/api/studies/alice/sessions.json", "/api/v1/studies/alice/sessions"),
+            ("/api/studies/alice/leaderboard", "/api/v1/studies/alice/leaderboard"),
         ] {
-            let a = parse_route("GET", v1, "", b"").unwrap();
-            let b = parse_route("GET", legacy, "", b"").unwrap();
-            assert_eq!(a, b, "{v1} vs {legacy}");
+            match parse_route("GET", legacy, "", b"") {
+                Err(RouteError::Gone(to)) => assert_eq!(to, v1, "{legacy}"),
+                other => panic!("{legacy} must be Gone, got {other:?}"),
+            }
+            // The replacement itself still parses.
+            assert!(parse_route("GET", v1, "", b"").is_ok(), "{v1}");
         }
+        // Never-alias paths are a plain 404, not Gone.
+        assert!(matches!(
+            parse_route("GET", "/api/nope.json", "", b""),
+            Err(RouteError::NotFound)
+        ));
     }
 
     #[test]

@@ -1,0 +1,1323 @@
+//! The sharded control plane's read side: an aggregating
+//! [`RunSource`] + [`CommandSink`] over N engine-worker shards.
+//!
+//! [`FanoutSource`] partitions the studies of one manifest across a
+//! [`ShardSupervisor`] of long-lived worker threads, each owning its
+//! own `MultiPlatform` (and therefore its own `StudyScheduler`), and
+//! re-merges their documents behind the unchanged `/api/v1` surface —
+//! a dashboard cannot tell a sharded run from a single-scheduler one.
+//!
+//! ## Topology
+//!
+//! * Every shard gets a **full-size cluster** (the manifest's
+//!   `cluster_gpus`) with a subset of the studies.  With `borrow:
+//!   false` (required), fair-share isolation makes each study's
+//!   behavior a pure function of its own quota — which is what makes
+//!   the sharded run *bit-identical* to the single-scheduler run per
+//!   study.  Global capacity is enforced by the one shared-state
+//!   arbiter, the `QuotaLedger` broker thread: every admission and
+//!   quota change is a message through its channel, so shards never
+//!   share mutable state.
+//! * New studies are admitted through a bounded [`SubmissionQueue`]
+//!   (spill + retry on overflow) to the least-loaded shard by reserved
+//!   quota ([`ShardPlan`]); each admission is recorded by the owning
+//!   shard's scheduler as a replay input, so snapshots restore by
+//!   replay exactly as single-scheduler snapshots do.
+//! * Trainer factories are **slot-remapped**: shard-local study index
+//!   `i` resolves through a shared slot map to the global slot the
+//!   study would have had in the single-scheduler run, so seed-by-slot
+//!   factories (`surrogate::default_multi_factory`) build identical
+//!   trainers under any shard count.
+//!
+//! ## Merge rules (deterministic, shard-count-invariant)
+//!
+//! * `t` = max over shard clocks (equals the single-scheduler clock);
+//!   counters are summed from raw per-shard integers, utilization is
+//!   re-derived as `Σ used / cluster_gpus` — never from rendered
+//!   floats.
+//! * Study rows interleave in **global slot order** (manifest order,
+//!   then admission order), so the merged `fair_share`/`studies`
+//!   arrays are byte-identical to the single-scheduler documents.
+//! * SSE records are drained per barrier from private per-shard feeds
+//!   and re-published sorted by `(t, global slot, per-shard order)` —
+//!   the same canonical order at every shard count (including 1).
+//! * `?at_event=` scrubbing rounds down to the nearest **barrier
+//!   mark** (a recorded vector of per-shard event counts), then
+//!   replays each shard's snapshot to its component and re-merges.
+//!
+//! ## Documented divergences from a single scheduler
+//!
+//! * `status.events_processed` (and the response envelope's
+//!   generation) is the *sum* of per-shard counts: master-tick events
+//!   replicate per shard, so the sum exceeds the single-scheduler
+//!   count.  Per-study state, documents, and event logs are still
+//!   bit-identical.
+//! * The cluster usage **series** is a deterministic step-function
+//!   merge of per-shard series, not the single-scheduler byte stream.
+//! * A submission routed to a fully-drained shard activates at its
+//!   submission time instead of the next global master tick, and
+//!   command `effective_at` clamps against the owning shard's clock.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use chopt_cluster::{Owner, QuotaBroker, QuotaClient, QuotaLedger};
+use chopt_core::events::SimTime;
+use chopt_core::trainer::Trainer;
+use chopt_core::util::json::Value as Json;
+use chopt_engine::coordinator::{StudyManifest, StudySpec};
+use chopt_engine::shard::{Admission, ShardPlan, ShardSupervisor, SubmissionQueue};
+
+use crate::api::{ApiCommand, ApiError, ApiQuery, CommandSink, RunSource};
+use crate::platform::MultiPlatform;
+use crate::sse::{EventFeed, DEFAULT_FEED_CAPACITY};
+
+/// A shared trainer factory keyed by **global** study slot; cloned into
+/// every shard (and every scrub replay), so restore-by-replay always
+/// resolves to the one factory the run was started with.
+pub type TrainerFactory = Arc<dyn Fn(usize, u64) -> Box<dyn Trainer + Send> + Send + Sync>;
+
+/// The rejection every invalid admission maps to — byte-identical to
+/// `MultiPlatform`'s `submit_study` rejection so clients see one
+/// message regardless of topology.
+const REJECT: &str = "study rejected (duplicate name, bad quota/priority, or quota does not fit)";
+
+/// Construction options for [`FanoutSource::new`].
+pub struct FanoutConfig {
+    /// Engine-worker shard count (`--shards N`); clamped to >= 1.
+    pub shards: usize,
+    /// Bounded submission-queue capacity; overflow spills + retries.
+    pub queue_capacity: usize,
+    /// Per-shard `--step-threads` (intra-shard windowed stepping).
+    pub step_threads: usize,
+    /// Stream per-study progress into `dir/events-<study>.jsonl`
+    /// (shards share the directory; study names are globally unique).
+    pub log_dir: Option<PathBuf>,
+    /// Publish the *merged* progress stream into this feed.
+    pub feed: Option<Arc<EventFeed>>,
+    /// Write a composite snapshot to `path` every `every` virtual
+    /// seconds (and once at completion).
+    pub snapshot: Option<(PathBuf, SimTime)>,
+}
+
+impl Default for FanoutConfig {
+    fn default() -> FanoutConfig {
+        FanoutConfig {
+            shards: 2,
+            queue_capacity: 64,
+            step_threads: 1,
+            log_dir: None,
+            feed: None,
+            snapshot: None,
+        }
+    }
+}
+
+/// One admission barrier: the merged event count, its per-shard
+/// components (the scrub target for `?at_event=`), and the merged
+/// clock at that instant.
+#[derive(Debug, Clone)]
+struct Mark {
+    total: u64,
+    per_shard: Vec<u64>,
+    t: SimTime,
+}
+
+/// The aggregating run source over engine-worker shards.
+pub struct FanoutSource {
+    sup: ShardSupervisor<MultiPlatform<'static>>,
+    plan: ShardPlan,
+    queue: SubmissionQueue,
+    /// Keeps the ledger broker thread alive for the run's lifetime.
+    _broker: QuotaBroker,
+    quota: QuotaClient,
+    factory: TrainerFactory,
+    /// Shard → (local study index → global slot); shared with that
+    /// shard's trainer factory.
+    slots: Vec<Arc<Mutex<Vec<usize>>>>,
+    /// Global slot → study name, admission order.
+    names: Vec<String>,
+    slot_of: HashMap<String, usize>,
+    total_gpus: usize,
+    /// Private per-shard feeds (only when a merged feed is attached).
+    shard_feeds: Vec<Arc<EventFeed>>,
+    feed_cursors: Vec<u64>,
+    feed: Option<Arc<EventFeed>>,
+    marks: Vec<Mark>,
+    cached_now: SimTime,
+    cached_generation: u64,
+    generation_gauge: Option<Arc<AtomicU64>>,
+    snapshot_path: Option<PathBuf>,
+    snapshot_every: SimTime,
+    last_snapshot_t: SimTime,
+    /// Queue drains refused by validation (duplicates, bad quota, …).
+    rejected: u64,
+}
+
+/// Wrap the global factory for one shard: local index → global slot.
+fn remap(
+    factory: TrainerFactory,
+    slots: Arc<Mutex<Vec<usize>>>,
+) -> impl FnMut(usize, u64) -> Box<dyn Trainer + Send> + 'static {
+    move |local, id| {
+        let global = slots.lock().unwrap().get(local).copied().unwrap_or(local);
+        (factory)(global, id)
+    }
+}
+
+/// The scheduler's study-name rule, mirrored so a fan-out refusal is
+/// indistinguishable from a scheduler refusal.
+fn valid_study_name(name: &str) -> bool {
+    !name.is_empty()
+        && !name.starts_with('.')
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-'))
+}
+
+fn num(doc: &Json, key: &str) -> f64 {
+    doc.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0)
+}
+
+impl FanoutSource {
+    /// Partition `manifest` across `cfg.shards` workers and start them.
+    ///
+    /// Sharded runs require hard isolation: `borrow: true`, an external
+    /// load trace, and scenario demand/fault sources are all
+    /// cluster-global couplings and are rejected.  Submissions-only
+    /// scenarios are accepted — their entries pre-load the bounded
+    /// submission queue.
+    pub fn new(
+        manifest: StudyManifest,
+        factory: TrainerFactory,
+        cfg: FanoutConfig,
+    ) -> anyhow::Result<FanoutSource> {
+        anyhow::ensure!(
+            !manifest.borrow,
+            "sharded runs require 'borrow: false' — cross-study borrowing couples \
+             every study through one allocator and cannot be partitioned"
+        );
+        anyhow::ensure!(
+            manifest.trace.is_none(),
+            "sharded runs do not support an external load trace (cluster-global demand)"
+        );
+        let mut queue = SubmissionQueue::new(cfg.queue_capacity);
+        if let Some(sc) = &manifest.scenario {
+            anyhow::ensure!(
+                sc.sources.is_empty(),
+                "sharded runs accept submissions-only scenarios; demand/fault sources \
+                 are cluster-global"
+            );
+            for (i, sub) in sc.submissions.iter().enumerate() {
+                let spec = StudySpec::from_json(&sub.spec, manifest.studies.len() + i)?;
+                // Overflow spills — deferred admission, not an error.
+                let _ = queue.submit(spec, sub.at);
+            }
+        }
+
+        let shards = cfg.shards.max(1);
+        let total_gpus = manifest.cluster_gpus;
+        let mut plan = ShardPlan::new(shards);
+        let mut ledger = QuotaLedger::new(total_gpus);
+        let mut names = Vec::new();
+        let mut slot_of = HashMap::new();
+        let mut shard_specs: Vec<Vec<StudySpec>> = vec![Vec::new(); shards];
+        for (slot, spec) in manifest.studies.iter().enumerate() {
+            anyhow::ensure!(
+                ledger.lease(&spec.name, spec.quota),
+                "manifest study '{}' does not fit the quota ledger \
+                 (duplicate name, zero quota, or sum of quotas over cluster_gpus)",
+                spec.name
+            );
+            let k = plan.assign(spec.quota);
+            names.push(spec.name.clone());
+            slot_of.insert(spec.name.clone(), slot);
+            shard_specs[k].push(spec.clone());
+        }
+        let (broker, quota) = QuotaBroker::with_ledger(ledger);
+
+        if let Some(dir) = &cfg.log_dir {
+            std::fs::create_dir_all(dir)?;
+        }
+        let slots: Vec<Arc<Mutex<Vec<usize>>>> = (0..shards)
+            .map(|k| Arc::new(Mutex::new(plan.slots_of(k))))
+            .collect();
+        let shard_feeds: Vec<Arc<EventFeed>> = if cfg.feed.is_some() {
+            (0..shards).map(|_| EventFeed::new(DEFAULT_FEED_CAPACITY)).collect()
+        } else {
+            Vec::new()
+        };
+
+        let inits = shard_specs
+            .into_iter()
+            .enumerate()
+            .map(|(k, studies)| {
+                let mut m = manifest.clone();
+                m.studies = studies;
+                // A shard must stay window-steppable and replay-pure:
+                // no scenario, no trace (both enforced above anyway).
+                m.scenario = None;
+                m.trace = None;
+                let factory = factory.clone();
+                let slot_map = slots[k].clone();
+                let feed = shard_feeds.get(k).cloned();
+                let log_dir = cfg.log_dir.clone();
+                let step_threads = cfg.step_threads;
+                Box::new(move || {
+                    let mut mp = MultiPlatform::new(m, remap(factory, slot_map));
+                    if let Some(dir) = log_dir {
+                        mp = mp.with_event_logs(dir).expect("open shard event-log dir");
+                    }
+                    if let Some(f) = feed {
+                        mp = mp.with_progress_feed(f);
+                    }
+                    if step_threads > 1 {
+                        mp.set_step_threads(step_threads);
+                    }
+                    mp
+                }) as Box<dyn FnOnce() -> MultiPlatform<'static> + Send>
+            })
+            .collect();
+
+        let feed_cursors = vec![0; shard_feeds.len()];
+        let (snapshot_path, snapshot_every) = match cfg.snapshot {
+            Some((p, e)) => (Some(p), e.max(1.0)),
+            None => (None, 3600.0),
+        };
+        let mut src = FanoutSource {
+            sup: ShardSupervisor::start(inits),
+            plan,
+            queue,
+            _broker: broker,
+            quota,
+            factory,
+            slots,
+            names,
+            slot_of,
+            total_gpus,
+            shard_feeds,
+            feed_cursors,
+            feed: cfg.feed,
+            marks: Vec::new(),
+            cached_now: 0.0,
+            cached_generation: 0,
+            generation_gauge: None,
+            snapshot_path,
+            snapshot_every,
+            last_snapshot_t: 0.0,
+            rejected: 0,
+        };
+        src.barrier();
+        Ok(src)
+    }
+
+    /// Rebuild a fan-out from a composite snapshot written by
+    /// [`FanoutSource::snapshot_now`]: each shard restores by replay
+    /// from its embedded `multi_study` snapshot, the placement plan and
+    /// queue backlog come back verbatim, and the quota ledger is
+    /// re-leased from the plan.
+    pub fn restore_doc(
+        doc: &Json,
+        factory: TrainerFactory,
+        cfg: FanoutConfig,
+    ) -> anyhow::Result<FanoutSource> {
+        let kind = doc.get("kind").and_then(|v| v.as_str());
+        anyhow::ensure!(
+            kind == Some("sharded_multi_study"),
+            "not a sharded snapshot (kind {kind:?}); single-scheduler snapshots \
+             restore through MultiPlatform"
+        );
+        let plan = ShardPlan::from_json(
+            doc.get("plan")
+                .ok_or_else(|| anyhow::anyhow!("sharded snapshot missing 'plan'"))?,
+        )?;
+        let queue = SubmissionQueue::from_json(
+            doc.get("queue")
+                .ok_or_else(|| anyhow::anyhow!("sharded snapshot missing 'queue'"))?,
+        )?;
+        let marks: Vec<Mark> = doc
+            .get("marks")
+            .and_then(|v| v.as_arr())
+            .map(|arr| {
+                arr.iter()
+                    .map(|m| Mark {
+                        total: num(m, "events") as u64,
+                        per_shard: m
+                            .get("per_shard")
+                            .and_then(|v| v.as_arr())
+                            .map(|a| a.iter().map(|v| v.as_f64().unwrap_or(0.0) as u64).collect())
+                            .unwrap_or_default(),
+                        t: num(m, "t"),
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        let shard_docs = doc
+            .get("shards")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("sharded snapshot missing 'shards'"))?;
+        anyhow::ensure!(
+            shard_docs.len() == plan.shards(),
+            "sharded snapshot has {} shard snapshots for a {}-shard plan",
+            shard_docs.len(),
+            plan.shards()
+        );
+        let total_gpus = shard_docs
+            .first()
+            .and_then(|d| d.get("manifest"))
+            .and_then(|m| m.get("cluster_gpus"))
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("shard snapshot missing manifest cluster_gpus"))?;
+
+        if let Some(dir) = &cfg.log_dir {
+            std::fs::create_dir_all(dir)?;
+        }
+        let shards = plan.shards();
+        let slots: Vec<Arc<Mutex<Vec<usize>>>> = (0..shards)
+            .map(|k| Arc::new(Mutex::new(plan.slots_of(k))))
+            .collect();
+        let shard_feeds: Vec<Arc<EventFeed>> = if cfg.feed.is_some() {
+            (0..shards).map(|_| EventFeed::new(DEFAULT_FEED_CAPACITY)).collect()
+        } else {
+            Vec::new()
+        };
+        let inits = shard_docs
+            .iter()
+            .enumerate()
+            .map(|(k, shard_doc)| {
+                let shard_doc = shard_doc.clone();
+                let factory = factory.clone();
+                let slot_map = slots[k].clone();
+                let feed = shard_feeds.get(k).cloned();
+                let log_dir = cfg.log_dir.clone();
+                let step_threads = cfg.step_threads;
+                Box::new(move || {
+                    let mut mp =
+                        MultiPlatform::restore_doc(&shard_doc, remap(factory, slot_map))
+                            .expect("restore shard snapshot by replay");
+                    if let Some(dir) = log_dir {
+                        mp = mp.with_event_logs(dir).expect("open shard event-log dir");
+                    }
+                    if let Some(f) = feed {
+                        mp = mp.with_progress_feed(f);
+                    }
+                    if step_threads > 1 {
+                        mp.set_step_threads(step_threads);
+                    }
+                    mp
+                }) as Box<dyn FnOnce() -> MultiPlatform<'static> + Send>
+            })
+            .collect();
+        let sup: ShardSupervisor<MultiPlatform<'static>> = ShardSupervisor::start(inits);
+
+        // Global slot → name, re-derived from the restored shards (each
+        // shard keeps its studies in global relative order).
+        let per_shard_names: Vec<Vec<String>> = sup.run_all(|_, mp| {
+            mp.scheduler()
+                .studies()
+                .iter()
+                .map(|st| st.name().to_string())
+                .collect()
+        });
+        let mut names = Vec::new();
+        let mut slot_of = HashMap::new();
+        let mut next = vec![0usize; shards];
+        let mut ledger = QuotaLedger::new(total_gpus);
+        for slot in 0..plan.len() {
+            let k = plan.owner_of(slot).unwrap_or(0);
+            let name = per_shard_names
+                .get(k)
+                .and_then(|ns| ns.get(next[k]))
+                .ok_or_else(|| anyhow::anyhow!("shard {k} snapshot is missing slot {slot}"))?
+                .clone();
+            next[k] += 1;
+            anyhow::ensure!(
+                ledger.lease(&name, plan.slot_quota(slot).unwrap_or(0)),
+                "restored study '{name}' does not fit the quota ledger"
+            );
+            slot_of.insert(name.clone(), slot);
+            names.push(name);
+        }
+        let (broker, quota) = QuotaBroker::with_ledger(ledger);
+
+        let feed_cursors = vec![0; shard_feeds.len()];
+        let (snapshot_path, snapshot_every) = match cfg.snapshot {
+            Some((p, e)) => (Some(p), e.max(1.0)),
+            None => (None, 3600.0),
+        };
+        let mut src = FanoutSource {
+            sup,
+            plan,
+            queue,
+            _broker: broker,
+            quota,
+            factory,
+            slots,
+            names,
+            slot_of,
+            total_gpus,
+            shard_feeds,
+            feed_cursors,
+            feed: cfg.feed,
+            marks,
+            cached_now: 0.0,
+            cached_generation: 0,
+            generation_gauge: None,
+            snapshot_path,
+            snapshot_every,
+            last_snapshot_t: 0.0,
+            rejected: 0,
+        };
+        src.barrier();
+        src.last_snapshot_t = src.cached_now;
+        Ok(src)
+    }
+
+    // -- driving -----------------------------------------------------------
+
+    /// Merged virtual clock: the max across shard clocks, which equals
+    /// the single-scheduler clock (the globally-last event lives on
+    /// some shard).
+    pub fn now(&self) -> SimTime {
+        self.cached_now
+    }
+
+    pub fn shards(&self) -> usize {
+        self.sup.len()
+    }
+
+    /// Admitted studies, global slot order.
+    pub fn study_names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// (queued, spilled, lifetime admitted, lifetime spilled, rejected).
+    pub fn queue_stats(&self) -> (usize, usize, u64, u64, u64) {
+        let (admitted, spilled) = self.queue.stats();
+        (self.queue.len(), self.queue.spill_len(), admitted, spilled, self.rejected)
+    }
+
+    /// Recorded admission barriers as `(merged_events, t)` — the valid
+    /// scrub targets for `?at_event=`.
+    pub fn barrier_marks(&self) -> Vec<(u64, SimTime)> {
+        self.marks.iter().map(|m| (m.total, m.t)).collect()
+    }
+
+    /// The run is over when every shard is drained **and** no
+    /// submission is waiting for a future barrier.
+    pub fn is_done(&self) -> bool {
+        self.queue.is_empty() && self.sup.run_all(|_, mp| mp.is_done()).into_iter().all(|d| d)
+    }
+
+    /// Publish the merged event count into `gauge` after every barrier
+    /// — same contract as `MultiPlatform::set_generation_gauge`.
+    pub fn set_generation_gauge(&mut self, gauge: Arc<AtomicU64>) {
+        gauge.store(self.cached_generation, Ordering::Release);
+        self.generation_gauge = Some(gauge);
+    }
+
+    /// Advance every shard to virtual time `target`, splitting the
+    /// advance at each queued submission time so a study is admitted
+    /// *exactly* at its requested time — the rule that keeps sharded
+    /// admission bit-identical to a single-scheduler driver performing
+    /// the same splits.  Returns events stepped + studies admitted.
+    pub fn run_until(&mut self, target: SimTime) -> u64 {
+        let mut n = 0u64;
+        let mut cursor = self.cached_now;
+        loop {
+            n += self.admit_ready(cursor);
+            let split = self.queue.next_ready_at().filter(|&a| a <= target);
+            let stop = split.unwrap_or(target);
+            if stop > cursor {
+                let stepped: u64 = self.sup.run_all(move |_, mp| mp.run_until(stop)).iter().sum();
+                n += stepped;
+            }
+            cursor = cursor.max(stop);
+            if split.is_none() {
+                break;
+            }
+        }
+        self.barrier();
+        n
+    }
+
+    /// Advance by `dt`; on an idle gap, jump to the next actionable
+    /// instant (earliest shard event or queued submission) so callers
+    /// looping on `advance` always make progress.  Returns 0 only when
+    /// the run is over.
+    pub fn advance(&mut self, dt: SimTime) -> u64 {
+        let target = self.cached_now + dt;
+        let n = self.run_until(target);
+        if n > 0 {
+            return n;
+        }
+        let next_ev = self
+            .sup
+            .run_all(|_, mp| mp.scheduler().next_event_time())
+            .into_iter()
+            .flatten()
+            .fold(f64::INFINITY, f64::min);
+        let next_sub = self.queue.next_ready_at().unwrap_or(f64::INFINITY);
+        let next = next_ev.min(next_sub);
+        if !next.is_finite() {
+            return 0;
+        }
+        self.run_until(next.max(target))
+    }
+
+    /// Drive to completion in `chunk`-sized slices.
+    pub fn run_to_completion(&mut self, chunk: SimTime) -> u64 {
+        let chunk = chunk.max(1.0);
+        let mut n = 0;
+        loop {
+            let stepped = self.advance(chunk);
+            n += stepped;
+            if stepped == 0 || self.is_done() {
+                break;
+            }
+        }
+        if self.snapshot_path.is_some() {
+            let _ = self.snapshot_now();
+        }
+        n
+    }
+
+    /// Enqueue a study for admission at `at` (the scenario-driven and
+    /// API submission path).  Returns the admission verdict; validation
+    /// happens at drain time so refusals match `submit_study`'s.
+    pub fn enqueue(&mut self, spec: StudySpec, at: SimTime) -> Admission {
+        self.queue.submit(spec, at)
+    }
+
+    fn admit_ready(&mut self, t: SimTime) -> u64 {
+        let mut n = 0;
+        for sub in self.queue.drain_ready(t) {
+            match self.admit(sub.spec, sub.at) {
+                Ok(_) => n += 1,
+                Err(_) => self.rejected += 1,
+            }
+        }
+        n
+    }
+
+    /// Admit one study: validate, lease global quota through the
+    /// ledger broker, place on the least-loaded shard, and record the
+    /// submission as that shard's replay input.
+    fn admit(&mut self, spec: StudySpec, at: SimTime) -> Result<SimTime, ApiError> {
+        let name = spec.name.clone();
+        if !valid_study_name(&name)
+            || spec.quota == 0
+            || !(spec.priority.is_finite() && spec.priority > 0.0)
+            || self.slot_of.contains_key(&name)
+        {
+            return Err(ApiError::BadRequest(REJECT.into()));
+        }
+        if !self.quota.lease(&name, spec.quota) {
+            return Err(ApiError::BadRequest(REJECT.into()));
+        }
+        let shard = self.plan.peek(spec.quota);
+        let slot = self.names.len();
+        self.slots[shard].lock().unwrap().push(slot);
+        let quota = spec.quota;
+        let effective = self.sup.run_on(shard, move |mp| mp.submit_study(spec, at));
+        match effective {
+            Some(t) => {
+                self.plan.place(shard, quota);
+                self.slot_of.insert(name.clone(), slot);
+                self.names.push(name);
+                Ok(t)
+            }
+            None => {
+                // Shard refused (e.g. horizon reached): unwind the
+                // placement and the lease.
+                self.slots[shard].lock().unwrap().pop();
+                self.quota.release(&name);
+                Err(ApiError::BadRequest(REJECT.into()))
+            }
+        }
+    }
+
+    /// Post-step bookkeeping: refresh the merged clock/generation,
+    /// record the scrub mark, publish SSE in canonical order, keep the
+    /// generation gauge and periodic snapshots honest.
+    fn barrier(&mut self) {
+        let stats = self.sup.run_all(|_, mp| (mp.scheduler().events_processed(), mp.now()));
+        let total: u64 = stats.iter().map(|&(e, _)| e).sum();
+        self.cached_now = stats.iter().map(|&(_, t)| t).fold(self.cached_now, f64::max);
+        self.cached_generation = total;
+        if self.marks.last().map(|m| m.total) != Some(total) {
+            self.marks.push(Mark {
+                total,
+                per_shard: stats.iter().map(|&(e, _)| e).collect(),
+                t: self.cached_now,
+            });
+        }
+        if let Some(gauge) = &self.generation_gauge {
+            gauge.store(total, Ordering::Release);
+        }
+        self.merge_feed();
+        self.maybe_snapshot();
+    }
+
+    /// Drain each shard's private feed and re-publish sorted by
+    /// `(t, global slot, per-shard order)` — studies are disjoint
+    /// across shards, so ties within `(t, slot)` come from one shard
+    /// and the stable sort preserves its local order.
+    fn merge_feed(&mut self) {
+        let Some(out) = self.feed.clone() else { return };
+        let mut records: Vec<(f64, usize, String)> = Vec::new();
+        for (k, feed) in self.shard_feeds.iter().enumerate() {
+            let (_missed, items) = feed.read_after(self.feed_cursors[k]);
+            for (seq, line) in items {
+                self.feed_cursors[k] = seq;
+                let (t, slot) = match chopt_core::util::json::parse(&line) {
+                    Ok(doc) => (
+                        num(&doc, "t"),
+                        doc.get("study")
+                            .and_then(|v| v.as_str())
+                            .and_then(|s| self.slot_of.get(s).copied())
+                            .unwrap_or(usize::MAX),
+                    ),
+                    Err(_) => (f64::MAX, usize::MAX),
+                };
+                records.push((t, slot, line));
+            }
+        }
+        records.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        for (_, _, line) in records {
+            out.publish(line);
+        }
+    }
+
+    fn maybe_snapshot(&mut self) {
+        if self.snapshot_path.is_some()
+            && self.cached_now - self.last_snapshot_t >= self.snapshot_every
+        {
+            let _ = self.snapshot_now();
+        }
+    }
+
+    // -- snapshots ---------------------------------------------------------
+
+    /// The composite snapshot: per-shard `multi_study` snapshots plus
+    /// the placement plan, the unadmitted queue backlog, and the scrub
+    /// marks.
+    pub fn snapshot_json(&self) -> Json {
+        let shards = self.sup.run_all(|_, mp| mp.scheduler().snapshot_json());
+        let marks: Vec<Json> = self
+            .marks
+            .iter()
+            .map(|m| {
+                Json::obj()
+                    .with("events", Json::Num(m.total as f64))
+                    .with(
+                        "per_shard",
+                        Json::Arr(m.per_shard.iter().map(|&e| Json::Num(e as f64)).collect()),
+                    )
+                    .with("t", Json::Num(m.t))
+            })
+            .collect();
+        Json::obj()
+            .with("version", Json::Num(1.0))
+            .with("kind", Json::Str("sharded_multi_study".into()))
+            .with("plan", self.plan.to_json())
+            .with("queue", self.queue.to_json())
+            .with("marks", Json::Arr(marks))
+            .with("shards", Json::Arr(shards))
+    }
+
+    /// Write (and return) the composite snapshot right now.
+    pub fn snapshot_now(&mut self) -> std::io::Result<Json> {
+        let doc = self.snapshot_json();
+        if let Some(path) = &self.snapshot_path {
+            if let Some(parent) = path.parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            std::fs::write(path, doc.to_string_pretty())?;
+        }
+        self.last_snapshot_t = self.cached_now;
+        Ok(doc)
+    }
+
+    // -- merged reads ------------------------------------------------------
+
+    /// Per-shard answers for a cluster-wide query: the shard's own
+    /// document plus the raw integers the merge re-derives utilization
+    /// from.  `mark` switches to scrub replays at that barrier.
+    fn gather(
+        &self,
+        q: &ApiQuery,
+        mark: Option<&Mark>,
+    ) -> Result<Vec<(Json, usize, usize)>, ApiError> {
+        let q2 = q.clone();
+        let answers: Vec<Result<(Json, usize, usize), ApiError>> = match mark {
+            None => self.sup.run_all(move |_, mp| {
+                let used = mp.scheduler().cluster().used();
+                let ext = mp.scheduler().cluster().held_by(Owner::External);
+                mp.query(&q2).map(|d| (d, used, ext))
+            }),
+            Some(m) => {
+                let per = m.per_shard.clone();
+                let factory = self.factory.clone();
+                let slots = self.slots.clone();
+                self.sup.run_all(move |k, mp| {
+                    let snap = mp.scheduler().snapshot_json();
+                    let scrub = MultiPlatform::restore_doc_at(
+                        &snap,
+                        remap(factory.clone(), slots[k].clone()),
+                        per.get(k).copied().unwrap_or(0),
+                    )
+                    .map_err(|e| ApiError::BadRequest(format!("scrub replay failed: {e:#}")))?;
+                    let used = scrub.scheduler().cluster().used();
+                    let ext = scrub.scheduler().cluster().held_by(Owner::External);
+                    scrub.query(&q2).map(|d| (d, used, ext))
+                })
+            }
+        };
+        answers.into_iter().collect()
+    }
+
+    /// Route a per-study query to its owning shard (scrub-replayed at
+    /// `mark` when given).
+    fn shard_query(&self, shard: usize, q: &ApiQuery, mark: Option<&Mark>) -> Result<Json, ApiError> {
+        let q2 = q.clone();
+        match mark {
+            None => self.sup.run_on(shard, move |mp| mp.query(&q2)),
+            Some(m) => {
+                let upto = m.per_shard.get(shard).copied().unwrap_or(0);
+                let factory = self.factory.clone();
+                let slot_map = self.slots[shard].clone();
+                self.sup.run_on(shard, move |mp| {
+                    let snap = mp.scheduler().snapshot_json();
+                    let scrub = MultiPlatform::restore_doc_at(&snap, remap(factory, slot_map), upto)
+                        .map_err(|e| {
+                            ApiError::BadRequest(format!("scrub replay failed: {e:#}"))
+                        })?;
+                    scrub.query(&q2)
+                })
+            }
+        }
+    }
+
+    /// Interleave per-shard study rows back into global slot order.
+    /// Scrub replays may hold fewer rows per shard (admissions after
+    /// the mark); exhausted shards are skipped, which is exactly the
+    /// set of studies that existed at the mark.
+    fn merged_rows(&self, docs: &[&Json], key: &str) -> Vec<Json> {
+        let arrs: Vec<&[Json]> = docs
+            .iter()
+            .map(|d| d.get(key).and_then(|v| v.as_arr()).unwrap_or(&[]))
+            .collect();
+        let mut next = vec![0usize; arrs.len()];
+        let mut rows = Vec::new();
+        for slot in 0..self.plan.len() {
+            let k = self.plan.owner_of(slot).unwrap_or(0);
+            if let Some(row) = arrs.get(k).and_then(|a| a.get(next[k])) {
+                rows.push(row.clone());
+                next[k] += 1;
+            }
+        }
+        rows
+    }
+
+    fn utilization_of(&self, used: usize) -> f64 {
+        if self.total_gpus == 0 {
+            0.0
+        } else {
+            used as f64 / self.total_gpus as f64
+        }
+    }
+
+    fn merge_status(&self, pieces: &[(Json, usize, usize)], live: bool) -> Json {
+        let docs: Vec<&Json> = pieces.iter().map(|(d, _, _)| d).collect();
+        let t = docs.iter().map(|d| num(d, "t")).fold(0.0, f64::max);
+        let sum = |key: &str| docs.iter().map(|d| num(d, key)).sum::<f64>();
+        let used: usize = pieces.iter().map(|&(_, u, _)| u).sum();
+        let all_done = docs
+            .iter()
+            .all(|d| d.get("done").and_then(|v| v.as_bool()).unwrap_or(false));
+        // The queue backlog only gates the *live* run loop; the shard
+        // AND mirrors the single scheduler's own is_done flag.
+        let _ = live;
+        let injected = |key: &str| {
+            docs.iter()
+                .map(|d| {
+                    d.get("injected_failures")
+                        .and_then(|f| f.get(key))
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(0.0)
+                })
+                .sum::<f64>()
+        };
+        Json::obj()
+            .with("t", Json::Num(t))
+            .with("events_processed", Json::Num(sum("events_processed")))
+            .with("done", Json::Bool(all_done))
+            .with("studies", Json::Num(sum("studies")))
+            .with("studies_started", Json::Num(sum("studies_started")))
+            .with("studies_done", Json::Num(sum("studies_done")))
+            .with("studies_degraded", Json::Num(sum("studies_degraded")))
+            .with("studies_quarantined", Json::Num(sum("studies_quarantined")))
+            .with(
+                "injected_failures",
+                Json::obj()
+                    .with("applied", Json::Num(injected("applied")))
+                    .with("skipped", Json::Num(injected("skipped"))),
+            )
+            .with("utilization", Json::Num(self.utilization_of(used)))
+            .with("progress_events", Json::Num(sum("progress_events")))
+    }
+
+    fn merge_fair_share(&self, pieces: &[(Json, usize, usize)]) -> Json {
+        let docs: Vec<&Json> = pieces.iter().map(|(d, _, _)| d).collect();
+        let t = docs.iter().map(|d| num(d, "t")).fold(0.0, f64::max);
+        let used: usize = pieces.iter().map(|&(_, u, _)| u).sum();
+        // Sharded runs reject external demand, so every shard reports
+        // 0; max (not sum) keeps the invariant under a hypothetical
+        // shard-replicated trace.
+        let external: usize = pieces.iter().map(|&(_, _, e)| e).max().unwrap_or(0);
+        let rows = self.merged_rows(&docs, "studies");
+        Json::obj()
+            .with("t", Json::Num(t))
+            .with("cluster_gpus", Json::Num(self.total_gpus as f64))
+            .with("used", Json::Num(used as f64))
+            .with("external", Json::Num(external as f64))
+            .with("utilization", Json::Num(self.utilization_of(used)))
+            .with("studies", Json::Arr(rows))
+    }
+
+    fn merge_studies(&self, pieces: &[(Json, usize, usize)]) -> Json {
+        let docs: Vec<&Json> = pieces.iter().map(|(d, _, _)| d).collect();
+        let t = docs.iter().map(|d| num(d, "t")).fold(0.0, f64::max);
+        let rows = self.merged_rows(&docs, "studies");
+        Json::obj()
+            .with("t", Json::Num(t))
+            .with("count", Json::Num(rows.len() as f64))
+            .with("studies", Json::Arr(rows))
+    }
+
+    /// Step-function sum of per-shard change-point series: walk all
+    /// change points in time order, maintain each shard's current
+    /// level, and emit the summed level at every distinct time.
+    fn merge_series(arrs: &[&[Json]]) -> Json {
+        let mut pts: Vec<(f64, usize, f64)> = Vec::new();
+        for (k, arr) in arrs.iter().enumerate() {
+            for p in arr.iter() {
+                let pair = p.as_arr().unwrap_or(&[]);
+                let t = pair.first().and_then(|v| v.as_f64()).unwrap_or(0.0);
+                let v = pair.get(1).and_then(|v| v.as_f64()).unwrap_or(0.0);
+                pts.push((t, k, v));
+            }
+        }
+        pts.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut cur = vec![0.0f64; arrs.len()];
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < pts.len() {
+            let t = pts[i].0;
+            while i < pts.len() && pts[i].0 == t {
+                cur[pts[i].1] = pts[i].2;
+                i += 1;
+            }
+            out.push(Json::Arr(vec![Json::Num(t), Json::Num(cur.iter().sum())]));
+        }
+        Json::Arr(out)
+    }
+
+    fn merge_cluster(&self, pieces: &[(Json, usize, usize)]) -> Json {
+        let docs: Vec<&Json> = pieces.iter().map(|(d, _, _)| d).collect();
+        let t = docs.iter().map(|d| num(d, "t")).fold(0.0, f64::max);
+        let used: usize = pieces.iter().map(|&(_, u, _)| u).sum();
+        let sum = |key: &str| docs.iter().map(|d| num(d, key)).sum::<f64>();
+        let series = |key: &str| {
+            let arrs: Vec<&[Json]> = docs
+                .iter()
+                .map(|d| d.get(key).and_then(|v| v.as_arr()).unwrap_or(&[]))
+                .collect();
+            FanoutSource::merge_series(&arrs)
+        };
+        Json::obj()
+            .with("t", Json::Num(t))
+            .with("total_gpus", Json::Num(self.total_gpus as f64))
+            .with("used", Json::Num(used as f64))
+            .with("chopt_held", Json::Num(sum("chopt_held")))
+            .with("utilization", Json::Num(self.utilization_of(used)))
+            .with("chopt_gpu_hours", Json::Num(sum("chopt_gpu_hours")))
+            .with(
+                "window",
+                docs.first()
+                    .and_then(|d| d.get("window"))
+                    .cloned()
+                    .unwrap_or(Json::Null),
+            )
+            .with("series_total", series("series_total"))
+            .with("series_chopt", series("series_chopt"))
+            .with("series_external", series("series_external"))
+    }
+
+    fn query_with(&self, q: &ApiQuery, mark: Option<&Mark>) -> Result<Json, ApiError> {
+        match q {
+            ApiQuery::Status => Ok(self.merge_status(&self.gather(q, mark)?, mark.is_none())),
+            ApiQuery::Cluster { .. } => Ok(self.merge_cluster(&self.gather(q, mark)?)),
+            ApiQuery::FairShare => Ok(self.merge_fair_share(&self.gather(q, mark)?)),
+            ApiQuery::Studies => Ok(self.merge_studies(&self.gather(q, mark)?)),
+            ApiQuery::StudySessions { study, .. }
+            | ApiQuery::StudyLeaderboard { study, .. }
+            | ApiQuery::StudyParallel { study }
+            | ApiQuery::StudyCurves { study, .. } => {
+                let slot = *self
+                    .slot_of
+                    .get(study)
+                    .ok_or_else(|| ApiError::NotFound(format!("unknown study '{study}'")))?;
+                let shard = self.plan.owner_of(slot).unwrap_or(0);
+                let mut doc = self.shard_query(shard, q, mark)?;
+                if matches!(q, ApiQuery::StudyLeaderboard { .. }) {
+                    // The shard stamps its local clock; rewrite in
+                    // place (key order preserved) to the merged one.
+                    let t = mark.map(|m| m.t).unwrap_or(self.cached_now);
+                    doc.set("t", Json::Num(t));
+                }
+                Ok(doc)
+            }
+            ApiQuery::Sessions { .. }
+            | ApiQuery::Leaderboard { .. }
+            | ApiQuery::Parallel
+            | ApiQuery::Curves { .. } => Err(ApiError::NotFound(
+                "single-study endpoint; use /api/v1/studies/<name>/…".into(),
+            )),
+        }
+    }
+}
+
+impl RunSource for FanoutSource {
+    /// Sum of per-shard processed-event counts (monotone; larger than
+    /// the single-scheduler count — ticks replicate per shard).
+    fn generation(&self) -> u64 {
+        self.cached_generation
+    }
+
+    fn query(&self, q: &ApiQuery) -> Result<Json, ApiError> {
+        self.query_with(q, None)
+    }
+
+    /// `?at_event=` across the sharded topology: round `at` down to the
+    /// nearest recorded barrier mark, scrub-replay every shard to its
+    /// per-shard component, and re-merge with the same rules as live.
+    fn query_at(&self, q: &ApiQuery, at: u64) -> Result<(u64, Json), ApiError> {
+        let mark = self
+            .marks
+            .iter()
+            .rev()
+            .find(|m| m.total <= at)
+            .cloned()
+            .ok_or_else(|| {
+                ApiError::BadRequest("no recorded barrier at or before that event".into())
+            })?;
+        let doc = self.query_with(q, Some(&mark))?;
+        Ok((mark.total, doc))
+    }
+}
+
+impl CommandSink for FanoutSource {
+    fn command(&mut self, c: &ApiCommand) -> Result<Json, ApiError> {
+        let ack = |kind: &str, at: SimTime| {
+            Json::obj()
+                .with("applied", Json::Bool(true))
+                .with("command", Json::Str(kind.to_string()))
+                .with("effective_at", Json::Num(at))
+        };
+        let rejected = |msg: &str| ApiError::BadRequest(msg.to_string());
+        // Route a study-scoped command to its owning shard verbatim;
+        // the shard's own CommandSink supplies the ack/error bytes.
+        let route = |study: &str, c: &ApiCommand| -> Option<Result<Json, ApiError>> {
+            let slot = *self.slot_of.get(study)?;
+            let shard = self.plan.owner_of(slot)?;
+            let c2 = c.clone();
+            Some(self.sup.run_on(shard, move |mp| mp.command(&c2)))
+        };
+        match c {
+            ApiCommand::SubmitStudy { spec, at } => {
+                let spec = StudySpec::from_json(spec, self.names.len())
+                    .map_err(|e| ApiError::BadRequest(format!("bad study spec: {e:#}")))?;
+                // Refuse what the scheduler would refuse *now*, before
+                // parking it in the queue.
+                if !valid_study_name(&spec.name)
+                    || spec.quota == 0
+                    || !(spec.priority.is_finite() && spec.priority > 0.0)
+                    || self.slot_of.contains_key(&spec.name)
+                {
+                    return Err(rejected(REJECT));
+                }
+                let name = spec.name.clone();
+                let requested = at.unwrap_or(self.cached_now);
+                match self.queue.submit(spec, requested) {
+                    Admission::Spilled => {
+                        // Deferred admission: parked on the spill list,
+                        // retried as the queue drains.
+                        Ok(ack(c.name(), requested).with("spilled", Json::Bool(true)))
+                    }
+                    Admission::Queued if requested > self.cached_now => {
+                        // Future-dated: admitted at the barrier that
+                        // reaches its requested time.
+                        Ok(ack(c.name(), requested).with("queued", Json::Bool(true)))
+                    }
+                    Admission::Queued => {
+                        // Due now: drain everything due (arrival order)
+                        // and answer for this entry.
+                        let mut effective = None;
+                        for sub in self.queue.drain_ready(self.cached_now) {
+                            let ours = sub.spec.name == name;
+                            match self.admit(sub.spec, sub.at) {
+                                Ok(t) if ours => effective = Some(t),
+                                Err(e) if ours => return Err(e),
+                                Ok(_) => {}
+                                Err(_) => self.rejected += 1,
+                            }
+                        }
+                        let at = effective.ok_or_else(|| rejected(REJECT))?;
+                        Ok(ack(c.name(), at))
+                    }
+                }
+            }
+            ApiCommand::PauseStudy { study }
+            | ApiCommand::ResumeStudy { study }
+            | ApiCommand::StopStudy { study } => route(study, c)
+                .unwrap_or_else(|| Err(rejected("unknown or finished study"))),
+            ApiCommand::SetQuota { study, quota, .. } => {
+                let msg = "rejected (unknown study, quota does not fit, or priority ≤ 0)";
+                let Some(&slot) = self.slot_of.get(study) else {
+                    return Err(rejected(msg));
+                };
+                let old = self.plan.slot_quota(slot).unwrap_or(0);
+                if let Some(q) = quota {
+                    // The ledger is the global arbiter: a quota change
+                    // must fit beside every other shard's reservations,
+                    // not just this shard's.
+                    if !self.quota.adjust(study, *q) {
+                        return Err(rejected(msg));
+                    }
+                }
+                let res = route(study, c).unwrap_or_else(|| Err(rejected(msg)));
+                match &res {
+                    Ok(_) => {
+                        if let Some(q) = quota {
+                            self.plan.set_slot_quota(slot, *q);
+                        }
+                    }
+                    Err(_) => {
+                        // Shard refused (e.g. bad priority): unwind the
+                        // ledger to the old reservation.
+                        if quota.is_some() {
+                            let _ = self.quota.adjust(study, old);
+                        }
+                    }
+                }
+                res
+            }
+            ApiCommand::PauseSession { study, .. } => {
+                let study = study.as_deref().ok_or_else(|| {
+                    rejected("session commands need a 'study' on a multi-study run")
+                })?;
+                route(study, c)
+                    .unwrap_or_else(|| Err(rejected("session is not live in that study")))
+            }
+            ApiCommand::ResumeSession { study, .. } => {
+                let study = study.as_deref().ok_or_else(|| {
+                    rejected("session commands need a 'study' on a multi-study run")
+                })?;
+                route(study, c)
+                    .unwrap_or_else(|| Err(rejected("session is not paused in that study")))
+            }
+            ApiCommand::StopSession { study, .. } => {
+                let study = study.as_deref().ok_or_else(|| {
+                    rejected("session commands need a 'study' on a multi-study run")
+                })?;
+                route(study, c).unwrap_or_else(|| {
+                    Err(rejected("session is not live or paused in that study"))
+                })
+            }
+            ApiCommand::Submit { .. } => Err(ApiError::NotFound(
+                "single-study command; use 'submit_study' on a multi-study run".into(),
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn study_json(name: &str, quota: usize, seed: u64) -> String {
+        format!(
+            r#"{{"name": "{name}", "quota": {quota}, "config": {{
+              "h_params": {{
+                "lr": {{"parameters": [0.005, 0.09], "distribution": "log_uniform",
+                        "type": "float", "p_range": [0.001, 0.2]}}
+              }},
+              "measure": "test/accuracy", "order": "descending", "step": 10,
+              "population": 3, "tune": {{"random": {{}}}},
+              "termination": {{"max_session_number": 5}},
+              "model": "surrogate:resnet", "max_epochs": 40, "max_gpus": 2,
+              "seed": {seed}
+            }}}}"#
+        )
+    }
+
+    fn manifest(n: usize, gpus: usize) -> StudyManifest {
+        let studies: Vec<String> = (0..n).map(|i| study_json(&format!("s{i}"), 2, 100 + i as u64)).collect();
+        StudyManifest::from_json_str(&format!(
+            r#"{{"cluster_gpus": {gpus}, "borrow": false, "studies": [{}]}}"#,
+            studies.join(",")
+        ))
+        .unwrap()
+    }
+
+    fn factory() -> TrainerFactory {
+        Arc::new(chopt_core::trainer::surrogate::default_multi_factory)
+    }
+
+    #[test]
+    fn sharded_run_merges_all_studies_and_finishes() {
+        let mut fan = FanoutSource::new(
+            manifest(4, 8),
+            factory(),
+            FanoutConfig { shards: 2, ..FanoutConfig::default() },
+        )
+        .unwrap();
+        fan.run_to_completion(5_000.0);
+        assert!(fan.is_done());
+        let studies = fan.query(&ApiQuery::Studies).unwrap();
+        assert_eq!(num(&studies, "count") as usize, 4);
+        let names: Vec<&str> = studies
+            .get("studies")
+            .and_then(|v| v.as_arr())
+            .unwrap()
+            .iter()
+            .map(|r| r.get("study").and_then(|v| v.as_str()).unwrap())
+            .collect();
+        // Merged directory interleaves back into manifest order.
+        assert_eq!(names, ["s0", "s1", "s2", "s3"]);
+        let status = fan.query(&ApiQuery::Status).unwrap();
+        assert_eq!(status.get("done"), Some(&Json::Bool(true)));
+        // Per-study queries route to the owning shard.
+        for n in ["s0", "s1", "s2", "s3"] {
+            let lb = fan
+                .query(&ApiQuery::StudyLeaderboard { study: n.into(), k: 3 })
+                .unwrap();
+            assert_eq!(lb.get("study").and_then(|v| v.as_str()), Some(n));
+            assert_eq!(num(&lb, "t"), fan.now());
+        }
+        let err = fan
+            .query(&ApiQuery::StudyLeaderboard { study: "nope".into(), k: 3 })
+            .unwrap_err();
+        assert!(matches!(err, ApiError::NotFound(_)));
+    }
+
+    #[test]
+    fn sharded_docs_match_single_scheduler_bytes() {
+        let m = manifest(4, 8);
+        let mut single = MultiPlatform::new(m.clone(), |study, id| {
+            chopt_core::trainer::surrogate::default_multi_factory(study, id)
+        });
+        single.run_to_completion(5_000.0);
+        for shards in [1usize, 3] {
+            let mut fan = FanoutSource::new(
+                m.clone(),
+                factory(),
+                FanoutConfig { shards, ..FanoutConfig::default() },
+            )
+            .unwrap();
+            fan.run_to_completion(5_000.0);
+            for q in [ApiQuery::FairShare, ApiQuery::Studies] {
+                assert_eq!(
+                    fan.query(&q).unwrap().to_string_compact(),
+                    single.query(&q).unwrap().to_string_compact(),
+                    "{q:?} diverged at {shards} shards"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn submission_command_admits_through_the_queue() {
+        let mut fan = FanoutSource::new(
+            manifest(2, 8),
+            factory(),
+            FanoutConfig { shards: 2, ..FanoutConfig::default() },
+        )
+        .unwrap();
+        fan.advance(50.0);
+        let spec = chopt_core::util::json::parse(&study_json("late", 2, 777)).unwrap();
+        let ack = fan
+            .command(&ApiCommand::SubmitStudy { spec: spec.clone(), at: None })
+            .unwrap();
+        assert_eq!(ack.get("applied"), Some(&Json::Bool(true)));
+        assert!(ack.get("queued").is_none(), "due-now submission admits immediately");
+        // Duplicate name is refused with the scheduler's message.
+        let err = fan
+            .command(&ApiCommand::SubmitStudy { spec, at: None })
+            .unwrap_err();
+        assert!(matches!(err, ApiError::BadRequest(ref m) if m == REJECT));
+        fan.run_to_completion(5_000.0);
+        let studies = fan.query(&ApiQuery::Studies).unwrap();
+        assert_eq!(num(&studies, "count") as usize, 3);
+        let (_, _, admitted, _, rejected) = fan.queue_stats();
+        assert_eq!((admitted, rejected), (1, 0));
+    }
+
+    #[test]
+    fn at_event_scrubs_to_barrier_marks() {
+        let mut fan = FanoutSource::new(
+            manifest(3, 6),
+            factory(),
+            FanoutConfig { shards: 2, ..FanoutConfig::default() },
+        )
+        .unwrap();
+        fan.run_to_completion(500.0);
+        let marks = fan.barrier_marks();
+        assert!(marks.len() >= 2);
+        let (mid_events, _) = marks[marks.len() / 2];
+        let (eff, doc) = fan.query_at(&ApiQuery::Studies, mid_events).unwrap();
+        assert_eq!(eff, mid_events);
+        assert!(num(&doc, "count") as usize <= 3);
+        // Scrubbing to the final mark reproduces the live document.
+        let (last_events, _) = *marks.last().unwrap();
+        let (eff, doc) = fan.query_at(&ApiQuery::Studies, last_events + 10).unwrap();
+        assert_eq!(eff, last_events);
+        assert_eq!(
+            doc.to_string_compact(),
+            fan.query(&ApiQuery::Studies).unwrap().to_string_compact()
+        );
+    }
+
+    #[test]
+    fn composite_snapshot_restores_by_replay() {
+        let m = manifest(3, 6);
+        let mut fan = FanoutSource::new(
+            m,
+            factory(),
+            FanoutConfig { shards: 2, ..FanoutConfig::default() },
+        )
+        .unwrap();
+        fan.run_to_completion(5_000.0);
+        let snap = fan.snapshot_json();
+        assert_eq!(snap.get("kind").and_then(|v| v.as_str()), Some("sharded_multi_study"));
+        let back = FanoutSource::restore_doc(
+            &snap,
+            factory(),
+            FanoutConfig { shards: 2, ..FanoutConfig::default() },
+        )
+        .unwrap();
+        assert_eq!(back.study_names(), fan.study_names());
+        assert_eq!(back.generation(), fan.generation());
+        for q in [ApiQuery::FairShare, ApiQuery::Studies, ApiQuery::Status] {
+            assert_eq!(
+                back.query(&q).unwrap().to_string_compact(),
+                fan.query(&q).unwrap().to_string_compact(),
+                "{q:?} diverged after restore"
+            );
+        }
+    }
+}

@@ -28,11 +28,16 @@
 //! * [`sse`] — the progress-event feed behind `GET /api/v1/events` and
 //!   the broadcast writer pool that fans it out to subscribers (SSE
 //!   push with `Last-Event-ID` resume, so dashboards stop polling).
+//! * [`fanout`] — the sharded control plane's read side: an aggregating
+//!   [`fanout::FanoutSource`] that partitions one manifest across
+//!   engine-worker shards and re-merges their documents behind the
+//!   unchanged `/api/v1` surface (`--shards N`).
 //! * [`report`] — terminal leaderboard/session tables.
 
 pub mod api;
 pub mod cluster_view;
 pub mod export;
+pub mod fanout;
 pub mod hierarchy;
 pub mod parallel_coords;
 pub mod platform;

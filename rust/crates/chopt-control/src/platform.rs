@@ -568,7 +568,7 @@ impl<'t> Platform<'t> {
         curves_page(&all, limit, offset)
     }
 
-    /// One-object run status (the `/api/status.json` heartbeat).
+    /// One-object run status (the `/api/v1/status` heartbeat).
     pub fn status_doc(&self) -> Json {
         let engine = &self.engine;
         let (live, stop, dead) = engine.active_agents().fold((0, 0, 0), |acc, a| {

@@ -8,8 +8,9 @@
 //!   when enabled via [`VizServer::enable_api`]: API paths are parsed
 //!   into typed calls and forwarded over a channel to the serving loop,
 //!   which answers them between advances from any `RunSource` — a live
-//!   platform, a stored run, or a replay scrubber.  Legacy `/api/*.json`
-//!   paths are deprecated aliases onto the same v1 handlers.  When a
+//!   platform, a stored run, or a replay scrubber.  The legacy
+//!   `/api/*.json` aliases completed their deprecation and answer
+//!   `410 Gone` with a `Link` pointer to the v1 path.  When a
 //!   bearer token is configured ([`VizServer::set_api_token`]) the
 //!   command surface (`POST /api/v1/commands`) answers 401/403 in the
 //!   envelope error format before anything reaches the engine loop; the
@@ -623,6 +624,17 @@ fn handle_api(
         Err(RouteError::BadRequest(msg)) => {
             return respond_json(stream, 400, &api::error_envelope(None, &msg));
         }
+        Err(RouteError::Gone(v1)) => {
+            // Retired legacy alias: 410 with a machine-readable pointer
+            // to the v1 replacement (RFC 8288 successor-version link).
+            let doc = api::error_envelope(
+                None,
+                &format!("this legacy endpoint was removed; use {v1}"),
+            );
+            let body = doc.to_string_compact().into_bytes();
+            let headers = format!("Link: <{v1}>; rel=\"successor-version\"\r\n");
+            return respond(stream, 410, "application/json", &body, &headers);
+        }
     };
     // Queries try the response cache first: at a fixed generation the
     // whole read path is a lock + Arc clone, no engine round trip.
@@ -709,6 +721,7 @@ fn status_text(status: u16) -> &'static str {
         403 => "Forbidden",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        410 => "Gone",
         503 => "Service Unavailable",
         _ => "OK",
     }
@@ -823,22 +836,19 @@ const VIEWER_HTML: &str = r#"<!doctype html>
 <div id="status"></div>
 <canvas id="c" width="1000" height="440"></canvas>
 <script>
-// v1 responses wrap the document in {schema_version, data}; static
-// tables may serve bare legacy documents on the unversioned paths —
-// accept both, preferring v1.
+// v1 responses wrap the document in {schema_version, data}.  The
+// legacy /api/*.json fallbacks are gone (the server answers them 410).
 const unwrap=j=>j&&j.data!==undefined?j.data:j;
-async function getDoc(paths){
-  for(const p of paths){
-    try{const r=await fetch(p);if(r.ok)return unwrap(await r.json());}catch(e){}
-  }
+async function getDoc(p){
+  try{const r=await fetch(p);if(r.ok)return unwrap(await r.json());}catch(e){}
   return null;
 }
 async function draw(){
-getDoc(['/api/v1/status','/api/status.json']).then(s=>{
+getDoc('/api/v1/status').then(s=>{
   if(s)document.getElementById('status').textContent=
     't='+Math.round(s.t)+'s  events='+s.events_processed+'  best='+(s.best==null?'-':s.best.toFixed(2))+(s.done?'  [done]':'');
 });
-getDoc(['/api/v1/parallel','/api/parallel.json']).then(doc=>{
+getDoc('/api/v1/parallel').then(doc=>{
   if(!doc||!doc.axes)return;
   const cv=document.getElementById('c'),g=cv.getContext('2d');
   g.clearRect(0,0,cv.width,cv.height);

@@ -4,11 +4,16 @@
 //! per-study [`coordinator::Agent`], stop-and-go master policy, GPU
 //! pools, the submission queue, and the multi-tenant
 //! [`coordinator::StudyScheduler`] (fair share, borrow/preemption,
-//! deterministic parallel stepping).  [`storage`] persists runs:
-//! append-only [`storage::EventLog`]s, session/snapshot stores.
+//! deterministic parallel stepping).  [`shard`] holds the sharded
+//! control plane's engine side: the thread-per-shard
+//! [`shard::ShardSupervisor`], the deterministic [`shard::ShardPlan`]
+//! placement, and the bounded [`shard::SubmissionQueue`].  [`storage`]
+//! persists runs: append-only [`storage::EventLog`]s, session/snapshot
+//! stores.
 //!
 //! The live/stored serving layers (`Platform`, `ReplaySource`) live
 //! above in `chopt-control`; this crate never renders a document.
 
 pub mod coordinator;
+pub mod shard;
 pub mod storage;

@@ -1,0 +1,190 @@
+//! Deterministic study→shard placement.
+//!
+//! Placement must be a pure function of the admission history — never
+//! of shard timing — or two runs of the same manifest could shard the
+//! same study differently and the bit-identity contract would be
+//! unfalsifiable. The rule: each admitted study goes to the shard with
+//! the least total *reserved quota* (done studies keep theirs, matching
+//! the ledger), ties broken by the lowest shard index.
+
+use chopt_core::util::json::Value as Json;
+
+/// The study→shard assignment, by global study slot (the index a study
+/// would have had in the equivalent single-scheduler run: manifest
+/// order, then admission order).
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    shards: usize,
+    /// Global slot → owning shard.
+    owner: Vec<usize>,
+    /// Global slot → reserved quota at assignment (the load metric;
+    /// updated by `set_quota` so later placements track reality).
+    quota: Vec<usize>,
+}
+
+impl ShardPlan {
+    pub fn new(shards: usize) -> ShardPlan {
+        ShardPlan {
+            shards: shards.max(1),
+            owner: Vec::new(),
+            quota: Vec::new(),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Global slots assigned so far.
+    pub fn len(&self) -> usize {
+        self.owner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.owner.is_empty()
+    }
+
+    /// Total reserved quota on `shard`.
+    pub fn load_of(&self, shard: usize) -> usize {
+        self.owner
+            .iter()
+            .zip(&self.quota)
+            .filter(|&(&o, _)| o == shard)
+            .map(|(_, &q)| q)
+            .sum()
+    }
+
+    /// The shard [`ShardPlan::assign`] would pick, without committing:
+    /// the admission path routes the submission to this shard first and
+    /// only records the placement once the shard accepts it.
+    pub fn peek(&self, _quota: usize) -> usize {
+        (0..self.shards)
+            .min_by_key(|&s| (self.load_of(s), s))
+            .unwrap_or(0)
+    }
+
+    /// Commit the next global slot to `shard` with quota `quota`.
+    pub fn place(&mut self, shard: usize, quota: usize) {
+        self.owner.push(shard.min(self.shards.saturating_sub(1)));
+        self.quota.push(quota);
+    }
+
+    /// Assign the next global slot (quota `quota`) to the least-loaded
+    /// shard, lowest index winning ties; returns the chosen shard.
+    pub fn assign(&mut self, quota: usize) -> usize {
+        let shard = self.peek(quota);
+        self.place(shard, quota);
+        shard
+    }
+
+    /// Owning shard of a global slot.
+    pub fn owner_of(&self, slot: usize) -> Option<usize> {
+        self.owner.get(slot).copied()
+    }
+
+    /// Reserved quota recorded for a global slot.
+    pub fn slot_quota(&self, slot: usize) -> Option<usize> {
+        self.quota.get(slot).copied()
+    }
+
+    /// Track a quota change so future placements see the new load.
+    pub fn set_slot_quota(&mut self, slot: usize, quota: usize) {
+        if let Some(q) = self.quota.get_mut(slot) {
+            *q = quota;
+        }
+    }
+
+    /// Global slots owned by `shard`, ascending — each shard's studies
+    /// keep their global relative order, which is what makes a shard's
+    /// scheduler identical to a single scheduler over that subset.
+    pub fn slots_of(&self, shard: usize) -> Vec<usize> {
+        (0..self.owner.len())
+            .filter(|&i| self.owner[i] == shard)
+            .collect()
+    }
+
+    /// Serialize into the composite (sharded) snapshot.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("shards", Json::Num(self.shards as f64))
+            .with(
+                "owner",
+                Json::Arr(self.owner.iter().map(|&o| Json::Num(o as f64)).collect()),
+            )
+            .with(
+                "quota",
+                Json::Arr(self.quota.iter().map(|&q| Json::Num(q as f64)).collect()),
+            )
+    }
+
+    pub fn from_json(doc: &Json) -> anyhow::Result<ShardPlan> {
+        let shards = doc
+            .get("shards")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("shard plan missing 'shards'"))?;
+        let ints = |key: &str| -> anyhow::Result<Vec<usize>> {
+            doc.get(key)
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("shard plan missing '{key}'"))?
+                .iter()
+                .map(|v| {
+                    v.as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("shard plan '{key}' entry not an integer"))
+                })
+                .collect()
+        };
+        let (owner, quota) = (ints("owner")?, ints("quota")?);
+        if owner.len() != quota.len() {
+            anyhow::bail!("shard plan owner/quota length mismatch");
+        }
+        Ok(ShardPlan {
+            shards: shards.max(1),
+            owner,
+            quota,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn least_loaded_with_lowest_index_ties() {
+        let mut p = ShardPlan::new(3);
+        // Empty shards tie: lowest index first.
+        assert_eq!(p.assign(4), 0);
+        assert_eq!(p.assign(2), 1);
+        assert_eq!(p.assign(2), 2);
+        // Loads now 4/2/2 — the 1-vs-2 tie goes to shard 1.
+        assert_eq!(p.assign(1), 1);
+        // Loads 4/3/2.
+        assert_eq!(p.assign(5), 2);
+        assert_eq!(p.load_of(0), 4);
+        assert_eq!(p.load_of(1), 3);
+        assert_eq!(p.load_of(2), 7);
+        assert_eq!(p.slots_of(1), vec![1, 3]);
+        assert_eq!(p.owner_of(4), Some(2));
+        assert_eq!(p.owner_of(9), None);
+        // set_quota feedback changes subsequent placement.
+        p.set_slot_quota(4, 0);
+        assert_eq!(p.assign(1), 2, "shard 2 dropped to load 2");
+    }
+
+    #[test]
+    fn roundtrip_preserves_placement() {
+        let mut p = ShardPlan::new(2);
+        for q in [3, 1, 4, 1, 5] {
+            p.assign(q);
+        }
+        let back = ShardPlan::from_json(&p.to_json()).unwrap();
+        assert_eq!(back.shards(), 2);
+        for slot in 0..p.len() {
+            assert_eq!(back.owner_of(slot), p.owner_of(slot));
+        }
+        // The restored plan continues the same deterministic sequence.
+        let (mut a, mut b) = (p.clone(), back);
+        assert_eq!(a.assign(2), b.assign(2));
+        assert!(ShardPlan::from_json(&Json::obj()).is_err());
+    }
+}

@@ -1,0 +1,231 @@
+//! A real bounded submission queue for the sharded control plane.
+//!
+//! Online submissions used to go straight into `submit_study`; at
+//! platform scale a flash crowd of tenants must be *admitted*, not
+//! absorbed. The queue is bounded; overflow goes to a spill list and is
+//! retried as the queue drains (at the next admission barrier), so the
+//! degradation mode is deferred admission — a spilled study is admitted
+//! at the barrier where room appears, with its requested time clamped
+//! to "now" exactly as a late `submit_study` would be. Every admission
+//! the driver performs is recorded by the owning shard's scheduler as a
+//! replay input, so the queue itself needs no replay log — only its
+//! *unadmitted* backlog is serialized into composite snapshots.
+
+use chopt_core::events::SimTime;
+use chopt_core::util::json::Value as Json;
+
+use crate::coordinator::StudySpec;
+
+/// One submission waiting for admission.
+#[derive(Debug, Clone)]
+pub struct QueuedSubmission {
+    pub spec: StudySpec,
+    /// Requested submission time (clamped to "now" at admission).
+    pub at: SimTime,
+}
+
+/// Outcome of [`SubmissionQueue::submit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// In the bounded queue; admitted at the next barrier at/after `at`.
+    Queued,
+    /// Queue full: parked on the spill list, retried as room appears.
+    Spilled,
+}
+
+/// Bounded FIFO + spill list. Pure data structure: validation (name,
+/// quota ledger, duplicate checks) happens in the admission path that
+/// drains it, so a refusal there matches `submit_study`'s refusals.
+#[derive(Debug)]
+pub struct SubmissionQueue {
+    capacity: usize,
+    pending: Vec<QueuedSubmission>,
+    spill: Vec<QueuedSubmission>,
+    admitted: u64,
+    spilled: u64,
+}
+
+impl SubmissionQueue {
+    pub fn new(capacity: usize) -> SubmissionQueue {
+        SubmissionQueue {
+            capacity: capacity.max(1),
+            pending: Vec::new(),
+            spill: Vec::new(),
+            admitted: 0,
+            spilled: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Submissions in the bounded queue.
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty() && self.spill.is_empty()
+    }
+
+    /// Submissions parked on the spill list.
+    pub fn spill_len(&self) -> usize {
+        self.spill.len()
+    }
+
+    /// Lifetime counters: (admissions drained, submissions ever spilled).
+    pub fn stats(&self) -> (u64, u64) {
+        (self.admitted, self.spilled)
+    }
+
+    /// Earliest requested time across the bounded queue — the admission
+    /// driver splits its advance at this time so every queued study is
+    /// admitted *exactly* at its requested time, never clamped forward
+    /// by a barrier that overshot it.
+    pub fn next_ready_at(&self) -> Option<SimTime> {
+        self.pending
+            .iter()
+            .map(|q| q.at)
+            .min_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
+    }
+
+    /// Enqueue one submission; spills when the bounded queue is full.
+    pub fn submit(&mut self, spec: StudySpec, at: SimTime) -> Admission {
+        let entry = QueuedSubmission { spec, at };
+        if self.pending.len() < self.capacity {
+            self.pending.push(entry);
+            Admission::Queued
+        } else {
+            self.spill.push(entry);
+            self.spilled += 1;
+            Admission::Spilled
+        }
+    }
+
+    /// Drain every queued submission whose requested time is `<= now`,
+    /// in arrival order, then promote spilled entries into the freed
+    /// room (they keep arrival order and their original requested time;
+    /// admission clamps it to "now" downstream). Called once per
+    /// supervisor barrier.
+    pub fn drain_ready(&mut self, now: SimTime) -> Vec<QueuedSubmission> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].at <= now {
+                out.push(self.pending.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        self.admitted += out.len() as u64;
+        // Retry the spill into the freed room — still bounded.
+        while self.pending.len() < self.capacity && !self.spill.is_empty() {
+            self.pending.push(self.spill.remove(0));
+        }
+        out
+    }
+
+    /// Serialize the unadmitted backlog (composite snapshots only —
+    /// admitted studies already live in per-shard replay logs).
+    pub fn to_json(&self) -> Json {
+        let entry = |q: &QueuedSubmission| {
+            Json::obj()
+                .with("at", Json::Num(q.at))
+                .with("study", q.spec.to_json())
+        };
+        Json::obj()
+            .with("capacity", Json::Num(self.capacity as f64))
+            .with("pending", Json::Arr(self.pending.iter().map(entry).collect()))
+            .with("spill", Json::Arr(self.spill.iter().map(entry).collect()))
+            .with("admitted", Json::Num(self.admitted as f64))
+            .with("spilled", Json::Num(self.spilled as f64))
+    }
+
+    pub fn from_json(doc: &Json) -> anyhow::Result<SubmissionQueue> {
+        let capacity = doc
+            .get("capacity")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("submission queue missing 'capacity'"))?;
+        let list = |key: &str| -> anyhow::Result<Vec<QueuedSubmission>> {
+            doc.get(key)
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("submission queue missing '{key}'"))?
+                .iter()
+                .enumerate()
+                .map(|(i, e)| {
+                    let at = e
+                        .get("at")
+                        .and_then(|v| v.as_f64())
+                        .ok_or_else(|| anyhow::anyhow!("queued submission missing 'at'"))?;
+                    let spec = StudySpec::from_json(
+                        e.get("study")
+                            .ok_or_else(|| anyhow::anyhow!("queued submission missing 'study'"))?,
+                        i,
+                    )?;
+                    Ok(QueuedSubmission { spec, at })
+                })
+                .collect()
+        };
+        let mut q = SubmissionQueue::new(capacity);
+        q.pending = list("pending")?;
+        q.spill = list("spill")?;
+        q.admitted = doc.get("admitted").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        q.spilled = doc.get("spilled").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        Ok(q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str) -> StudySpec {
+        let doc = chopt_core::util::json::parse(&format!(
+            r#"{{"name": "{name}", "quota": 2,
+                 "config": {}}}"#,
+            chopt_core::config::LISTING1_EXAMPLE
+        ))
+        .unwrap();
+        StudySpec::from_json(&doc, 0).unwrap()
+    }
+
+    #[test]
+    fn bounded_queue_spills_and_retries() {
+        let mut q = SubmissionQueue::new(2);
+        assert_eq!(q.submit(spec("a"), 10.0), Admission::Queued);
+        assert_eq!(q.submit(spec("b"), 5.0), Admission::Queued);
+        assert_eq!(q.submit(spec("c"), 1.0), Admission::Spilled);
+        assert_eq!((q.len(), q.spill_len()), (2, 1));
+        // Nothing ready before its requested time, and the spill stays
+        // parked: room only appears when something actually drains.
+        assert!(q.drain_ready(0.0).is_empty());
+        assert_eq!(q.spill_len(), 1);
+        // At t=7 only "b" is ready; "c" takes the freed slot.
+        let ready = q.drain_ready(7.0);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].spec.name, "b");
+        assert_eq!((q.len(), q.spill_len()), (2, 0));
+        // Everything drains in arrival order at a late barrier.
+        let rest = q.drain_ready(100.0);
+        let names: Vec<_> = rest.iter().map(|r| r.spec.name.as_str()).collect();
+        assert_eq!(names, ["a", "c"]);
+        assert_eq!(q.stats(), (3, 1));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn backlog_roundtrips_through_json() {
+        let mut q = SubmissionQueue::new(1);
+        q.submit(spec("x"), 3.0);
+        q.submit(spec("y"), 4.0);
+        let back = SubmissionQueue::from_json(&q.to_json()).unwrap();
+        assert_eq!(back.capacity(), 1);
+        assert_eq!((back.len(), back.spill_len()), (1, 1));
+        let mut back = back;
+        let ready = back.drain_ready(10.0);
+        assert_eq!(ready[0].spec.name, "x");
+        assert_eq!(ready[0].at, 3.0);
+        assert_eq!(back.spill_len(), 0, "spill promoted after drain");
+    }
+}

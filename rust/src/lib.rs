@@ -86,6 +86,14 @@ pub mod coordinator {
     pub use chopt_engine::coordinator::*;
 }
 
+/// The sharded control plane's engine side (re-export of
+/// [`chopt_engine::shard`]): shard supervisor, placement plan, and the
+/// bounded submission queue.  The aggregating `FanoutSource` lives in
+/// [`viz`] (`chopt::viz::fanout`).
+pub mod shard {
+    pub use chopt_engine::shard::*;
+}
+
 /// Persistence (re-export of [`chopt_engine::storage`]) plus the
 /// stored-run read models from [`chopt_control`], which historically
 /// lived under this module.

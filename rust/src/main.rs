@@ -16,11 +16,13 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use chopt::config::ChoptConfig;
-use chopt::coordinator::{run_sim, MultiPlatform, Platform, SimSetup, StudyManifest};
+use chopt::coordinator::{run_sim, MultiPlatform, Platform, SimSetup, StudyManifest, StudySpec};
 use chopt::storage::{SessionStore, StoredRun};
 use chopt::trainer::{real::RealTrainer, surrogate, surrogate::SurrogateTrainer, Trainer};
 use chopt::util::cli::{CliError, Command};
 use chopt::viz;
+use chopt::viz::api::{ApiQuery, RunSource};
+use chopt::viz::fanout::{FanoutConfig, FanoutSource};
 use chopt::viz::sse::EventFeed;
 
 fn cli() -> Command {
@@ -67,6 +69,16 @@ fn cli() -> Command {
                     "scenario",
                     None,
                     "scenario JSON (adversarial cluster weather) overriding the manifest's",
+                )
+                .opt(
+                    "shards",
+                    Some("1"),
+                    "engine-worker shards (sharded control plane; requires borrow: false)",
+                )
+                .opt(
+                    "queue-capacity",
+                    Some("64"),
+                    "bounded submission-queue depth (sharded runs; overflow spills + retries)",
                 ),
         )
         .subcommand(Command::new(
@@ -95,6 +107,16 @@ fn cli() -> Command {
                     "step-threads",
                     Some("1"),
                     "worker threads for windowed study stepping (multi-study --live)",
+                )
+                .opt(
+                    "shards",
+                    Some("1"),
+                    "engine-worker shards for multi-study --live (requires borrow: false)",
+                )
+                .opt(
+                    "queue-capacity",
+                    Some("64"),
+                    "bounded submission-queue depth (sharded --live; overflow spills + retries)",
                 )
                 .opt(
                     "scenario",
@@ -333,9 +355,83 @@ fn multi_trainer(study: usize, id: u64) -> Box<dyn Trainer + Send> {
     surrogate::default_multi_factory(study, id)
 }
 
+/// Take the scenario-driven submissions out of a manifest.  The driver
+/// admits each one by *splitting its advance* at the requested time —
+/// `run_until(sub.at)` then `submit_study(spec, sub.at)` — so a
+/// submission lands at exactly `submit_at` in every topology (single
+/// scheduler or `--shards N`), never clamped forward by a chunk
+/// boundary that overshot it.
+fn take_scenario_submissions(
+    manifest: &mut StudyManifest,
+) -> anyhow::Result<Vec<(f64, StudySpec)>> {
+    let mut subs = Vec::new();
+    if let Some(sc) = manifest.scenario.as_mut() {
+        let taken = std::mem::take(&mut sc.submissions);
+        for (i, sub) in taken.iter().enumerate() {
+            subs.push((
+                sub.at,
+                StudySpec::from_json(&sub.spec, manifest.studies.len() + i)?,
+            ));
+        }
+        // A submissions-only scenario leaves nothing for the scheduler
+        // to poll; dropping it keeps parallel stepping eligible.
+        if sc.sources.is_empty() {
+            manifest.scenario = None;
+        }
+    }
+    subs.sort_by(|a, b| a.0.total_cmp(&b.0));
+    Ok(subs)
+}
+
+/// Advance a single-scheduler [`MultiPlatform`] by `chunk`, splitting
+/// at each pending scenario submission (see
+/// [`take_scenario_submissions`]).  Jumps idle gaps to the next
+/// submission so a pending study is never stranded behind a drained
+/// event queue.  Admissions count as progress.
+fn advance_with_submissions(
+    platform: &mut MultiPlatform<'_>,
+    subs: &mut Vec<(f64, StudySpec)>,
+    chunk: f64,
+) -> u64 {
+    let target = platform.now() + chunk;
+    let mut n = 0;
+    while subs.first().map(|&(at, _)| at <= target).unwrap_or(false) {
+        let (at, spec) = subs.remove(0);
+        n += platform.run_until(at);
+        n += admit_scenario_study(platform, spec, at);
+    }
+    n += platform.advance((target - platform.now()).max(0.0));
+    if n == 0 && !subs.is_empty() {
+        // Idle before the next scheduled submission: jump to it.
+        let (at, spec) = subs.remove(0);
+        n += platform.run_until(at);
+        n += admit_scenario_study(platform, spec, at);
+    }
+    n
+}
+
+fn admit_scenario_study(platform: &mut MultiPlatform<'_>, spec: StudySpec, at: f64) -> u64 {
+    let name = spec.name.clone();
+    match platform.submit_study(spec, at) {
+        Some(t) => {
+            println!("scenario submission '{name}' admitted at t={t:.0}s");
+            1
+        }
+        None => {
+            eprintln!(
+                "scenario submission '{name}' rejected (duplicate name, bad quota/priority, \
+                 or quota does not fit)"
+            );
+            0
+        }
+    }
+}
+
 /// `chopt multi`: drive N studies from a manifest on one shared cluster
 /// through the live [`MultiPlatform`] — per-study JSONL streams, the
 /// merged fair-share document, periodic snapshots, and `--restore`.
+/// With `--shards N` (N > 1) the run is partitioned across engine-worker
+/// shards behind a [`FanoutSource`] instead.
 fn cmd_multi(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
     let out_dir = m.get_or("out", "reports/multi").to_string();
     let chunk = m.get_f64("chunk").unwrap_or(3600.0).max(1.0);
@@ -343,6 +439,26 @@ fn cmd_multi(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
     let snap_path = format!("{out_dir}/snapshot.json");
     std::fs::create_dir_all(&out_dir)?;
 
+    // Sharded dispatch: an explicit --shards N, or a --restore file
+    // whose snapshot is composite (written by a sharded run).
+    let shards = m.get_usize("shards").unwrap_or(1);
+    let restore_doc = match m.get("restore") {
+        Some(path) => Some(chopt::util::json::parse(&std::fs::read_to_string(path)?)?),
+        None => None,
+    };
+    let restored_sharded = restore_doc
+        .as_ref()
+        .map(|d| d.get("kind").and_then(|v| v.as_str()) == Some("sharded_multi_study"))
+        .unwrap_or(false);
+    if shards > 1 || restored_sharded {
+        anyhow::ensure!(
+            restore_doc.is_none() || restored_sharded,
+            "--shards cannot resume a single-scheduler snapshot; restore it without --shards"
+        );
+        return cmd_multi_sharded(m, shards, restore_doc.filter(|_| restored_sharded));
+    }
+
+    let mut subs: Vec<(f64, StudySpec)> = Vec::new();
     let mut platform = if let Some(restore) = m.get("restore") {
         let platform = MultiPlatform::restore(restore, multi_trainer)?;
         println!(
@@ -369,8 +485,9 @@ fn cmd_multi(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
         if let Some(path) = m.get("scenario") {
             manifest.scenario = Some(chopt::cluster::Scenario::load(path)?);
         }
+        subs = take_scenario_submissions(&mut manifest)?;
         println!(
-            "multi-study CHOPT: {} studies on {} GPUs (borrow={}, scenario={})",
+            "multi-study CHOPT: {} studies on {} GPUs (borrow={}, scenario={}, submissions={})",
             manifest.studies.len(),
             manifest.cluster_gpus,
             manifest.borrow,
@@ -379,7 +496,8 @@ fn cmd_multi(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
                 .as_ref()
                 .map(|s| s.sources.len())
                 .map(|n| format!("{n} sources"))
-                .unwrap_or_else(|| "none".into())
+                .unwrap_or_else(|| "none".into()),
+            subs.len(),
         );
         for s in &manifest.studies {
             println!(
@@ -415,7 +533,7 @@ fn cmd_multi(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
     platform.set_step_threads(m.get_u64("step-threads").unwrap_or(1) as usize);
 
     loop {
-        let n = platform.advance(chunk);
+        let n = advance_with_submissions(&mut platform, &mut subs, chunk);
         let fair = platform.fair_share_doc();
         let per_study: Vec<String> = fair
             .get("studies")
@@ -445,7 +563,7 @@ fn cmd_multi(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
             fair.get("utilization").and_then(|v| v.as_f64()).unwrap_or(0.0),
             per_study.join(" "),
         );
-        if platform.is_done() || n == 0 {
+        if (platform.is_done() && subs.is_empty()) || n == 0 {
             break;
         }
     }
@@ -479,6 +597,108 @@ fn cmd_multi(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
         platform.scheduler().events_processed(),
         platform.now() / 3600.0,
         platform.progress_events,
+    );
+    Ok(())
+}
+
+/// `chopt multi --shards N`: the sharded control plane.  Studies are
+/// partitioned across N engine-worker threads (each owning its own
+/// scheduler over a full-size cluster), global capacity is arbitrated by
+/// the quota-ledger broker, new studies are admitted through the bounded
+/// submission queue, and every document is re-merged by the
+/// [`FanoutSource`] — bit-identical per study to the single-scheduler
+/// run for borrow-free manifests.
+fn cmd_multi_sharded(
+    m: &chopt::util::cli::Matches,
+    shards: usize,
+    restore_doc: Option<chopt::util::json::Value>,
+) -> anyhow::Result<()> {
+    let out_dir = m.get_or("out", "reports/multi").to_string();
+    let chunk = m.get_f64("chunk").unwrap_or(3600.0).max(1.0);
+    let snap_every = m.get_f64("snapshot-every").unwrap_or(14400.0);
+    let snap_path = format!("{out_dir}/snapshot.json");
+    std::fs::create_dir_all(&out_dir)?;
+
+    let cfg = || FanoutConfig {
+        shards,
+        queue_capacity: m.get_usize("queue-capacity").unwrap_or(64),
+        step_threads: m.get_u64("step-threads").unwrap_or(1) as usize,
+        log_dir: Some(out_dir.clone().into()),
+        feed: None,
+        snapshot: Some((snap_path.clone().into(), snap_every)),
+    };
+    let mut fan = if let Some(doc) = restore_doc {
+        let fan = FanoutSource::restore_doc(&doc, Arc::new(multi_trainer), cfg())?;
+        println!(
+            "restored sharded run: t={:.0}s, {} shards, {} studies",
+            fan.now(),
+            fan.shards(),
+            fan.study_names().len()
+        );
+        for name in fan.study_names() {
+            trim_event_log(&format!("{out_dir}/events-{name}.jsonl"), fan.now())?;
+        }
+        fan
+    } else {
+        let Some(manifest_path) = m.get("manifest") else {
+            anyhow::bail!("multi needs --manifest (or --restore)");
+        };
+        let mut manifest = StudyManifest::load(manifest_path)?;
+        if let Some(path) = m.get("scenario") {
+            manifest.scenario = Some(chopt::cluster::Scenario::load(path)?);
+        }
+        println!(
+            "sharded multi-study CHOPT: {} studies on {} GPUs across {shards} shards",
+            manifest.studies.len(),
+            manifest.cluster_gpus,
+        );
+        // Start clean, same as the single-scheduler path: leftover logs
+        // from a previous run would be appended to.
+        if let Ok(entries) = std::fs::read_dir(&out_dir) {
+            for entry in entries.flatten() {
+                let name = entry.file_name();
+                let name = name.to_string_lossy();
+                let stale = (name.starts_with("events-") && name.ends_with(".jsonl"))
+                    || (name.starts_with("sessions-") && name.ends_with(".json"))
+                    || name.as_ref() == "fair_share.json";
+                if stale {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+            }
+        }
+        let _ = std::fs::remove_file(&snap_path);
+        FanoutSource::new(manifest, Arc::new(multi_trainer), cfg())?
+    };
+
+    loop {
+        let n = fan.advance(chunk);
+        let fair = fan
+            .query(&ApiQuery::FairShare)
+            .map_err(|e| anyhow::anyhow!("fair_share query failed: {}", e.message()))?;
+        let (queued, spilled, admitted, _, rejected) = fan.queue_stats();
+        println!(
+            "t={:>10.0}s events={:>7} util={:.2} queue={queued}+{spilled} admitted={admitted} rejected={rejected}",
+            fan.now(),
+            fan.generation(),
+            fair.get("utilization").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        );
+        if fan.is_done() || n == 0 {
+            break;
+        }
+    }
+    fan.snapshot_now()?;
+    std::fs::write(
+        format!("{out_dir}/fair_share.json"),
+        fan.query(&ApiQuery::FairShare)
+            .map_err(|e| anyhow::anyhow!("fair_share query failed: {}", e.message()))?
+            .to_string_pretty(),
+    )?;
+    println!(
+        "\ndone: {} events across {} shards, {:.1} virtual hours, {} studies\nwrote {out_dir}/{{events-<study>.jsonl,snapshot.json,fair_share.json}}\nresume anytime: chopt multi --restore {snap_path}",
+        fan.generation(),
+        fan.shards(),
+        fan.now() / 3600.0,
+        fan.study_names().len(),
     );
     Ok(())
 }
@@ -589,10 +809,10 @@ fn cmd_serve(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
         anyhow::bail!("serve needs --store (or --live with --config)");
     };
     // The stored run is rebuilt into the same incremental documents the
-    // live path serves (full-fidelity replay), so every /api/v1 query —
-    // and the legacy /api/*.json aliases — answers with bodies byte-
-    // identical to the run served live.  The old static sessions-table
-    // branch is gone.
+    // live path serves (full-fidelity replay), so every /api/v1 query
+    // answers with bodies byte-identical to the run served live.  The
+    // legacy /api/*.json aliases are retired: they answer 410 Gone with
+    // a Link header pointing at the /api/v1 replacement.
     let stored = StoredRun::open(store_path)?;
     // SSE replays the recorded progress stream, then heartbeats.
     let feed = EventFeed::new(usize::MAX);
@@ -690,6 +910,11 @@ fn cmd_serve_live_multi(m: &chopt::util::cli::Matches, port: u16) -> anyhow::Res
     if let Some(path) = m.get("scenario") {
         manifest.scenario = Some(chopt::cluster::Scenario::load(path)?);
     }
+    let shards = m.get_usize("shards").unwrap_or(1);
+    if shards > 1 {
+        return cmd_serve_live_sharded(m, port, manifest, shards);
+    }
+    let mut subs = take_scenario_submissions(&mut manifest)?;
     let chunk = m.get_f64("chunk").unwrap_or(1800.0).max(1.0);
     let throttle = std::time::Duration::from_millis(m.get_u64("throttle-ms").unwrap_or(250));
     let token = api_token(m);
@@ -711,8 +936,8 @@ fn cmd_serve_live_multi(m: &chopt::util::cli::Matches, port: u16) -> anyhow::Res
         if authed { " (bearer token required)" } else { "" }
     );
     loop {
-        let n = platform.advance(chunk);
-        let done = platform.is_done() || n == 0;
+        let n = advance_with_submissions(&mut platform, &mut subs, chunk);
+        let done = (platform.is_done() && subs.is_empty()) || n == 0;
         if done {
             println!(
                 "run complete at t={:.0}s ({} events); still serving /api/v1 — a submit_study command revives it, ctrl-c to stop",
@@ -727,6 +952,68 @@ fn cmd_serve_live_multi(m: &chopt::util::cli::Matches, port: u16) -> anyhow::Res
             // The between-advances breather doubles as the API window:
             // queries answered now, commands land on this tick boundary.
             inbox.serve_for(&mut platform, throttle);
+        }
+    }
+}
+
+/// `chopt serve --live --manifest --shards N`: the sharded control plane
+/// behind the unchanged `/api/v1` surface.  Queries are answered by the
+/// aggregating [`FanoutSource`] (merged fair_share/status/leaderboard
+/// documents, per-study routes to the owning shard), commands route
+/// through it (submissions enter the bounded queue), and SSE interleaves
+/// every shard's progress stream in virtual-time order.
+fn cmd_serve_live_sharded(
+    m: &chopt::util::cli::Matches,
+    port: u16,
+    manifest: StudyManifest,
+    shards: usize,
+) -> anyhow::Result<()> {
+    let chunk = m.get_f64("chunk").unwrap_or(1800.0).max(1.0);
+    let throttle = std::time::Duration::from_millis(m.get_u64("throttle-ms").unwrap_or(250));
+    let token = api_token(m);
+
+    let feed = live_feed(m)?;
+    let mut fan = FanoutSource::new(
+        manifest,
+        Arc::new(multi_trainer),
+        FanoutConfig {
+            shards,
+            queue_capacity: m.get_usize("queue-capacity").unwrap_or(64),
+            step_threads: m.get_u64("step-threads").unwrap_or(1) as usize,
+            log_dir: None,
+            feed: Some(feed.clone()),
+            snapshot: None,
+        },
+    )?;
+    let server =
+        viz::server::VizServer::start_with(port, viz::server::Routes::new(), server_config(m))?;
+    server.serve_events(feed, SSE_HEARTBEAT);
+    let authed = token.is_some();
+    server.set_api_token(token);
+    let inbox = server.enable_api();
+    fan.set_generation_gauge(inbox.generation_gauge());
+    println!(
+        "live sharded multi-study run ({shards} shards) on http://{}/ — GET /api/v1/{{status,cluster,fair_share,studies}}, /api/v1/studies/<name>/..., /api/v1/events (SSE), POST /api/v1/commands{}",
+        server.addr(),
+        if authed { " (bearer token required)" } else { "" }
+    );
+    loop {
+        let n = fan.advance(chunk);
+        let done = fan.is_done() || n == 0;
+        if done {
+            println!(
+                "run complete at t={:.0}s ({} events across {shards} shards); still serving /api/v1 — a submit_study command revives it, ctrl-c to stop",
+                fan.now(),
+                fan.generation()
+            );
+            // Idle: block on the inbox until a command revives the run.
+            while fan.is_done() {
+                inbox.serve_one(&mut fan, std::time::Duration::from_millis(500));
+            }
+        } else {
+            // The between-advances breather doubles as the API window:
+            // queries answered now, commands land on this tick boundary.
+            inbox.serve_for(&mut fan, throttle);
         }
     }
 }

@@ -1,8 +1,9 @@
 //! Integration tests for the versioned control-plane API: envelope
 //! schema + string ids on every endpoint, pagination bounds, HTTP error
 //! mapping (404/405/400/401/403), command round-trips (pause → parked at
-//! the next event boundary → resume), legacy-alias byte equivalence with
-//! the v1 bodies, engine-level command replay through snapshots,
+//! the next event boundary → resume), retired legacy aliases answering
+//! 410 Gone with a v1 pointer, engine-level command replay through
+//! snapshots,
 //! stored-vs-live byte parity per endpoint (`StoredRun`), `?at_event=`
 //! replay scrubbing (`ReplaySource`), and the SSE push stream
 //! (connect / heartbeat / `Last-Event-ID` resume over a real socket).
@@ -362,30 +363,43 @@ fn v1_command_round_trip_pause_resume_session() {
 }
 
 #[test]
-fn legacy_aliases_serve_v1_bytes() {
+fn legacy_aliases_answer_410_with_v1_pointer() {
     let mut platform = Platform::new(setup(19), surrogate(19));
     platform.run_until(4_000.0);
     let server = VizServer::start(0, Routes::new()).unwrap();
     let inbox = server.enable_api();
     let addr = server.addr();
 
-    for (v1, legacy) in [
-        ("/api/v1/status", "/api/status.json"),
-        ("/api/v1/cluster", "/api/cluster.json"),
-        ("/api/v1/leaderboard", "/api/leaderboard.json"),
-        ("/api/v1/sessions", "/api/sessions.json"),
-        ("/api/v1/parallel", "/api/parallel.json"),
+    for (legacy, v1) in [
+        ("/api/status.json", "/api/v1/status"),
+        ("/api/cluster.json", "/api/v1/cluster"),
+        ("/api/leaderboard.json", "/api/v1/leaderboard"),
+        ("/api/sessions.json", "/api/v1/sessions"),
+        ("/api/parallel.json", "/api/v1/parallel"),
+        ("/api/studies/alice/sessions.json", "/api/v1/studies/alice/sessions"),
     ] {
-        // The engine does not advance between the two requests, so the
-        // deprecated alias must serve byte-identical v1 bodies.
-        let (sa, a) = get(addr, &inbox, &mut platform, v1);
-        let (sb, b) = get(addr, &inbox, &mut platform, legacy);
-        assert_eq!((sa, sb), (200, 200), "{v1} vs {legacy}");
-        assert_eq!(
-            a.to_string_compact(),
-            b.to_string_compact(),
-            "{legacy} must be a byte-equivalent alias of {v1}"
+        // 410s are answered by the HTTP layer without consulting the
+        // platform, so a plain threaded request suffices.
+        let legacy_path = legacy.to_string();
+        let client = std::thread::spawn(move || {
+            http_request_full(addr, "GET", &legacy_path, &[], b"").unwrap()
+        });
+        let (status, head, body) = client.join().unwrap();
+        assert_eq!(status, 410, "{legacy} must be Gone");
+        assert!(
+            head.contains(&format!("Link: <{v1}>; rel=\"successor-version\"")),
+            "{legacy} must point at {v1} via Link; head:\n{head}"
         );
+        let doc = chopt::util::json::parse(&String::from_utf8(body).unwrap()).unwrap();
+        let msg = doc
+            .get("error")
+            .and_then(|v| v.as_str())
+            .unwrap_or_default()
+            .to_string();
+        assert!(msg.contains(v1), "error body must name the v1 path: {msg}");
+        // The replacement still serves.
+        let (s, _) = get(addr, &inbox, &mut platform, v1);
+        assert_eq!(s, 200, "{v1}");
     }
     server.stop();
 }

@@ -1,0 +1,280 @@
+//! Property test for the sharded control plane contract: `--shards N`
+//! is purely a topology knob.  For every seed × shard count × queue
+//! submission order we run the same borrow-free multi-study workload
+//! (four manifest studies plus two studies admitted mid-run through the
+//! submission queue) behind a [`FanoutSource`] and assert the merged
+//! observables are **bit-identical** to a single-scheduler run driven
+//! with the same admission splits:
+//!
+//! * the per-study `events-<name>.jsonl` logs (raw file bytes),
+//! * the merged `fair_share` / `studies` documents and every per-study
+//!   `/api/v1` document (compact JSON bytes),
+//! * the `status` document after zeroing `events_processed` — the one
+//!   documented divergence (master-tick events replicate per shard, so
+//!   the merged count is a sum),
+//! * the merged SSE feed (byte-equal across shard counts — its
+//!   canonical `(t, slot)` order is shard-count-invariant),
+//! * a composite snapshot restored by replay, and `?at_event=`
+//!   scrubbing to the final barrier mark.
+//!
+//! The single scheduler is the specification; the fan-out's partition /
+//! ledger / merge machinery must be indistinguishable from it
+//! everywhere a dashboard can look.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use chopt::coordinator::{MultiPlatform, StudyManifest, StudySpec};
+use chopt::trainer::surrogate::default_multi_factory;
+use chopt::util::json::{parse, Value as Json};
+use chopt::viz::api::{ApiQuery, RunSource};
+use chopt::viz::fanout::{FanoutConfig, FanoutSource, TrainerFactory};
+use chopt::viz::sse::EventFeed;
+
+const CHUNK: f64 = 2_000.0;
+
+fn study_json(name: &str, quota: usize, seed: u64) -> String {
+    format!(
+        r#"{{"name": "{name}", "quota": {quota}, "config": {{
+          "h_params": {{
+            "lr": {{"parameters": [0.005, 0.09], "distribution": "log_uniform",
+                    "type": "float", "p_range": [0.001, 0.2]}}
+          }},
+          "measure": "test/accuracy", "order": "descending", "step": 10,
+          "population": 3, "tune": {{"random": {{}}}},
+          "termination": {{"max_session_number": 6}},
+          "model": "surrogate:resnet", "max_epochs": 40, "max_gpus": 2,
+          "seed": {seed}
+        }}}}"#
+    )
+}
+
+/// Four tenants on 12 GPUs (hard isolation — sharding requires
+/// `borrow: false`), leaving 4 GPUs of quota headroom for the two
+/// studies submitted mid-run.
+fn manifest(seed: u64) -> StudyManifest {
+    let studies: Vec<String> = (0..4)
+        .map(|i| study_json(&format!("s{i}"), 2, seed + i as u64))
+        .collect();
+    StudyManifest::from_json_str(&format!(
+        r#"{{"cluster_gpus": 12, "borrow": false, "studies": [{}]}}"#,
+        studies.join(",")
+    ))
+    .unwrap()
+}
+
+/// Two mid-run submissions at distinct times, early enough that every
+/// shard still holds active manifest studies (a submission landing on a
+/// fully-drained shard activates at its submission time instead of the
+/// next master tick — the documented rearm edge this test stays clear
+/// of).  Sorted by submission time.
+fn submissions(seed: u64) -> Vec<(f64, StudySpec)> {
+    [(60.0, "late0", seed + 40), (240.0, "late1", seed + 41)]
+        .iter()
+        .enumerate()
+        .map(|(i, &(at, name, s))| {
+            let spec = StudySpec::from_json(&parse(&study_json(name, 2, s)).unwrap(), 4 + i)
+                .unwrap();
+            (at, spec)
+        })
+        .collect()
+}
+
+fn factory() -> TrainerFactory {
+    Arc::new(default_multi_factory)
+}
+
+fn temp_dir(tag: &str, seed: u64) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "chopt-shard-det-{}-{tag}-{seed}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Every observable output of one run, for exact cross-topology
+/// comparison.
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    names: Vec<String>,
+    logs: Vec<(String, String)>,
+    fair_share: String,
+    studies: String,
+    /// `status` with `events_processed` zeroed (the documented
+    /// sum-vs-count divergence).
+    status: String,
+    /// Per study: leaderboard, sessions page, parallel, curves page.
+    per_study: Vec<(String, Vec<String>)>,
+    end_time: String,
+}
+
+fn fingerprint<S: RunSource>(src: &S, names: &[String], dir: &Path, end: f64) -> Fingerprint {
+    let doc = |q: &ApiQuery| src.query(q).unwrap().to_string_compact();
+    let mut status = src.query(&ApiQuery::Status).unwrap();
+    status.set("events_processed", Json::Num(0.0));
+    let per_study = names
+        .iter()
+        .map(|n| {
+            let docs = vec![
+                doc(&ApiQuery::StudyLeaderboard { study: n.clone(), k: 10 }),
+                doc(&ApiQuery::StudySessions { study: n.clone(), limit: 100, offset: 0 }),
+                doc(&ApiQuery::StudyParallel { study: n.clone() }),
+                doc(&ApiQuery::StudyCurves { study: n.clone(), limit: 100, offset: 0 }),
+            ];
+            (n.clone(), docs)
+        })
+        .collect();
+    let logs = names
+        .iter()
+        .map(|n| {
+            let body = std::fs::read_to_string(dir.join(format!("events-{n}.jsonl")))
+                .unwrap_or_default();
+            (n.clone(), body)
+        })
+        .collect();
+    Fingerprint {
+        names: names.to_vec(),
+        logs,
+        fair_share: doc(&ApiQuery::FairShare),
+        studies: doc(&ApiQuery::Studies),
+        status: status.to_string_compact(),
+        per_study,
+        end_time: format!("{end:.9}"),
+    }
+}
+
+/// The single-scheduler specification run: the same chunked drive as
+/// `FanoutSource::run_until`, splitting each chunk at every pending
+/// submission time so the study is admitted *exactly* at its requested
+/// time — the admission rule both topologies share.
+fn single_run(seed: u64) -> (Fingerprint, PathBuf) {
+    let dir = temp_dir("single", seed);
+    let mut p = MultiPlatform::new(manifest(seed), |study, id| default_multi_factory(study, id))
+        .with_event_logs(&dir)
+        .unwrap();
+    let mut subs = submissions(seed);
+    loop {
+        let target = p.now() + CHUNK;
+        let mut n = 0;
+        while subs.first().is_some_and(|&(at, _)| at <= target) {
+            let (at, spec) = subs.remove(0);
+            p.run_until(at);
+            assert!(
+                p.submit_study(spec, at).is_some(),
+                "reference submission rejected (seed={seed})"
+            );
+            n += 1;
+        }
+        n += p.run_until(target);
+        if (p.is_done() && subs.is_empty()) || n == 0 {
+            break;
+        }
+    }
+    assert!(p.is_done(), "reference run did not finish (seed={seed})");
+    let names: Vec<String> = p
+        .scheduler()
+        .studies()
+        .iter()
+        .map(|s| s.name().to_string())
+        .collect();
+    assert_eq!(names, ["s0", "s1", "s2", "s3", "late0", "late1"]);
+    let fp = fingerprint(&p, &names, &dir, p.now());
+    (fp, dir)
+}
+
+/// One sharded run: submissions enqueue up-front (optionally in
+/// reversed order — admission order must be a function of submission
+/// *time*, not enqueue order), then the fan-out drives to completion.
+fn sharded_run(seed: u64, shards: usize, reverse: bool) -> (Fingerprint, Vec<String>, FanoutSource, PathBuf) {
+    let dir = temp_dir(&format!("fan{shards}{}", if reverse { "r" } else { "f" }), seed);
+    let feed = EventFeed::new(1 << 16);
+    let mut fan = FanoutSource::new(
+        manifest(seed),
+        factory(),
+        FanoutConfig {
+            shards,
+            log_dir: Some(dir.clone()),
+            feed: Some(feed.clone()),
+            ..FanoutConfig::default()
+        },
+    )
+    .unwrap();
+    let mut subs = submissions(seed);
+    if reverse {
+        subs.reverse();
+    }
+    for (at, spec) in subs {
+        fan.enqueue(spec, at);
+    }
+    fan.run_to_completion(CHUNK);
+    assert!(fan.is_done(), "sharded run did not finish (seed={seed} shards={shards})");
+    let (_, _, admitted, _, rejected) = fan.queue_stats();
+    assert_eq!((admitted, rejected), (2, 0), "seed={seed} shards={shards}");
+    let names = fan.study_names().to_vec();
+    let fp = fingerprint(&fan, &names, &dir, fan.now());
+    let feed_lines: Vec<String> = feed.read_after(0).1.into_iter().map(|(_, l)| l).collect();
+    (fp, feed_lines, fan, dir)
+}
+
+/// The property: across seeds, shard counts, and submission orders,
+/// the merged run matches the single-scheduler run byte for byte, the
+/// merged SSE feed is shard-count-invariant, and composite snapshots
+/// restore + scrub to the same documents.
+#[test]
+fn sharded_runs_are_bit_identical_across_seeds_shards_and_order() {
+    for seed in [100_u64, 777] {
+        let (reference, ref_dir) = single_run(seed);
+        assert!(
+            reference.logs.iter().all(|(_, body)| !body.is_empty()),
+            "every study must produce a non-empty event log (seed={seed})"
+        );
+        let mut canonical_feed: Option<Vec<String>> = None;
+        for shards in [1usize, 2, 4] {
+            for reverse in [false, true] {
+                let (fp, feed, fan, dir) = sharded_run(seed, shards, reverse);
+                assert_eq!(
+                    reference, fp,
+                    "sharded run diverged (seed={seed} shards={shards} reverse={reverse})"
+                );
+                match &canonical_feed {
+                    None => canonical_feed = Some(feed),
+                    Some(c) => assert_eq!(
+                        c, &feed,
+                        "merged SSE feed diverged (seed={seed} shards={shards} reverse={reverse})"
+                    ),
+                }
+
+                // Composite snapshot: restore-by-replay rebuilds the
+                // same merged documents at the same generation.
+                let snap = fan.snapshot_json();
+                let back = FanoutSource::restore_doc(
+                    &snap,
+                    factory(),
+                    FanoutConfig { shards, ..FanoutConfig::default() },
+                )
+                .unwrap();
+                assert_eq!(back.generation(), fan.generation());
+                assert_eq!(back.study_names(), fan.study_names());
+                for q in [ApiQuery::FairShare, ApiQuery::Studies] {
+                    assert_eq!(
+                        back.query(&q).unwrap().to_string_compact(),
+                        fan.query(&q).unwrap().to_string_compact(),
+                        "{q:?} diverged after restore (seed={seed} shards={shards})"
+                    );
+                }
+
+                // ?at_event= scrubbing rounds down to the last barrier
+                // mark, which reproduces the live document.
+                let (last, _) = *fan.barrier_marks().last().unwrap();
+                let (eff, doc) = fan.query_at(&ApiQuery::FairShare, last + 7).unwrap();
+                assert_eq!(eff, last);
+                assert_eq!(doc.to_string_compact(), fp.fair_share);
+
+                let _ = std::fs::remove_dir_all(&dir);
+            }
+        }
+        let _ = std::fs::remove_dir_all(&ref_dir);
+    }
+}
