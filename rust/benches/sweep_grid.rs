@@ -1,0 +1,150 @@
+//! §Sweep harness: wall-clock cost of a (scenario × tuner × policy)
+//! grid on the bounded cell-worker pool, the parallel speedup over a
+//! serial pool, and the cost of a no-op `--resume` pass.  The parallel
+//! artifact is asserted byte-identical to the serial one before any
+//! number is reported — the pool size is a wall-clock knob, never a
+//! results knob.  Written to `BENCH_sweep_grid.json` for the CI
+//! regression gate.
+//!
+//!     cargo bench --bench sweep_grid
+
+use std::time::Instant;
+
+use chopt::sweep::{run_sweep, SweepOptions, SweepSpec};
+use chopt::util::bench::BenchJson;
+use chopt::util::json::parse;
+
+fn study_json(name: &str, quota: usize, seed: u64) -> String {
+    format!(
+        r#"{{"name": "{name}", "quota": {quota}, "config": {{
+          "h_params": {{
+            "lr": {{"parameters": [0.005, 0.09], "distribution": "log_uniform",
+                    "type": "float", "p_range": [0.001, 0.2]}}
+          }},
+          "measure": "test/accuracy", "order": "descending", "step": 10,
+          "population": 3, "tune": {{"random": {{}}}},
+          "termination": {{"max_session_number": 8}},
+          "model": "surrogate:resnet", "max_epochs": 40, "max_gpus": 2,
+          "seed": {seed}
+        }}}}"#
+    )
+}
+
+/// 2 scenarios × 2 tuners × 2 policies = 8 cells, three studies each.
+fn spec() -> SweepSpec {
+    let doc = parse(&format!(
+        r#"{{
+            "base_manifest": {{"cluster_gpus": 8, "studies": [{}, {}, {}]}},
+            "seed": "42",
+            "target_measure": 0.3,
+            "axes": {{
+                "scenarios": [
+                    {{"name": "calm", "scenario": null}},
+                    {{"name": "diurnal", "scenario": {{"sources": [
+                        {{"kind": "diurnal", "total_gpus": 4, "base": 0.4, "amp": 0.4,
+                          "period": 86400, "jitter": 0.0, "seed": 5}}]}}}}
+                ],
+                "tuners": [
+                    {{"name": "random", "tune": {{"random": {{}}}}}},
+                    {{"name": "asha", "tune": {{"asha": {{"min_resource": 1,
+                        "max_resource": 27, "eta": 3}}}}}}
+                ],
+                "policies": [
+                    {{"name": "borrow", "borrow": true}},
+                    {{"name": "strict", "borrow": false}}
+                ]
+            }}
+        }}"#,
+        study_json("s0", 2, 11),
+        study_json("s1", 2, 12),
+        study_json("s2", 2, 13),
+    ))
+    .unwrap();
+    SweepSpec::from_json(&doc, None).unwrap()
+}
+
+fn main() {
+    let mut out = BenchJson::new("sweep_grid");
+    out.note("scenario", "2x2x2 grid, 3 studies x 8 GPUs per cell, cell workers 1 vs 4");
+
+    let spec = spec();
+    let dir_serial =
+        std::env::temp_dir().join(format!("chopt-bench-sweep-s-{}", std::process::id()));
+    let dir_par = std::env::temp_dir().join(format!("chopt-bench-sweep-p-{}", std::process::id()));
+
+    let t0 = Instant::now();
+    let serial = run_sweep(
+        &spec,
+        &dir_serial,
+        &SweepOptions { workers: 1, ..SweepOptions::default() },
+    )
+    .unwrap();
+    let serial_wall = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    let par = run_sweep(
+        &spec,
+        &dir_par,
+        &SweepOptions { workers: 4, ..SweepOptions::default() },
+    )
+    .unwrap();
+    let par_wall = t1.elapsed().as_secs_f64();
+
+    assert_eq!(serial.cells_total, 8);
+    assert_eq!(
+        serial.artifact.to_string_compact(),
+        par.artifact.to_string_compact(),
+        "worker-pool size changed the sweep artifact"
+    );
+    let events: i64 = serial
+        .artifact
+        .get("cells")
+        .and_then(|v| v.as_arr())
+        .map(|cells| {
+            cells
+                .iter()
+                .filter_map(|c| c.path("metrics.events").and_then(|v| v.as_i64()))
+                .sum()
+        })
+        .unwrap_or(0);
+    assert!(events > 1_000, "suspiciously few events across the grid: {events}");
+
+    // No-op resume over the completed parallel run: every cell's hash
+    // matches, so only the artifact is re-folded from disk.
+    let t2 = Instant::now();
+    let resumed = run_sweep(
+        &spec,
+        &dir_par,
+        &SweepOptions { workers: 4, resume: true, ..SweepOptions::default() },
+    )
+    .unwrap();
+    let resume_wall = t2.elapsed().as_secs_f64();
+    assert!(resumed.cells_run.is_empty(), "no-op resume recomputed cells");
+    assert_eq!(
+        resumed.artifact.to_string_compact(),
+        par.artifact.to_string_compact(),
+        "resume re-fold diverged from the original artifact"
+    );
+
+    let speedup = serial_wall / par_wall.max(1e-9);
+    let cells_per_sec = serial.cells_total as f64 / par_wall.max(1e-9);
+    println!(
+        "sweep 2x2x2: serial {serial_wall:.2}s, 4 workers {par_wall:.2}s -> {speedup:.2}x; \
+         no-op resume {:.0}ms ({events} events total)",
+        resume_wall * 1e3
+    );
+    out.metric("sweep_cells_total", serial.cells_total as f64)
+        .metric("sweep_events_total", events as f64)
+        .metric("sweep_serial_wall_secs", serial_wall)
+        .metric("sweep_parallel_wall_secs", par_wall)
+        .metric("sweep_parallel_speedup_x", speedup)
+        .metric("sweep_cells_per_sec", cells_per_sec)
+        .metric("sweep_resume_noop_ms", resume_wall * 1e3);
+
+    let _ = std::fs::remove_dir_all(&dir_serial);
+    let _ = std::fs::remove_dir_all(&dir_par);
+    match out.save() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+}

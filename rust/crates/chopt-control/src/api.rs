@@ -91,6 +91,10 @@ pub enum ApiQuery {
         limit: usize,
         offset: usize,
     },
+    /// The whole sweep comparison artifact (sweep servers only).
+    Sweep,
+    /// One sweep cell's record by id (sweep servers only).
+    SweepCell { cell: String },
 }
 
 /// A typed v1 command (the POST half).  Session ids travel as strings.
@@ -346,7 +350,17 @@ fn route_query(path: &str, query: &str) -> Result<Option<ApiQuery>, RouteError> 
             limit: limit()?,
             offset: offset()?,
         },
+        "/api/v1/sweep" => ApiQuery::Sweep,
         _ => {
+            // /api/v1/sweep/cells/<id> — one grid cell of a served sweep.
+            if let Some(cell) = path.strip_prefix("/api/v1/sweep/cells/") {
+                if cell.is_empty() || cell.contains('/') {
+                    return Ok(None);
+                }
+                return Ok(Some(ApiQuery::SweepCell {
+                    cell: cell.to_string(),
+                }));
+            }
             // /api/v1/studies/<name>/<view> per-study routes.
             let Some(rest) = path.strip_prefix("/api/v1/studies/") else {
                 return Ok(None);
@@ -967,6 +981,29 @@ mod tests {
         assert!(matches!(
             parse_route("GET", "/api/v1/cluster", "window=-5", b""),
             Err(RouteError::BadRequest(_))
+        ));
+    }
+
+    #[test]
+    fn sweep_routes_parse() {
+        assert_eq!(
+            parse_route("GET", "/api/v1/sweep", "", b"").unwrap(),
+            ApiCall::Query(ApiQuery::Sweep)
+        );
+        assert_eq!(
+            parse_route("GET", "/api/v1/sweep/cells/calm-random-strict", "", b"").unwrap(),
+            ApiCall::Query(ApiQuery::SweepCell {
+                cell: "calm-random-strict".into()
+            })
+        );
+        // Empty or nested cell ids are not routes.
+        assert!(matches!(
+            parse_route("GET", "/api/v1/sweep/cells/", "", b""),
+            Err(RouteError::NotFound)
+        ));
+        assert!(matches!(
+            parse_route("GET", "/api/v1/sweep/cells/a/b", "", b""),
+            Err(RouteError::NotFound)
         ));
     }
 

@@ -868,6 +868,28 @@ impl FanoutSource {
             )
             .with("utilization", Json::Num(self.utilization_of(used)))
             .with("progress_events", Json::Num(sum("progress_events")))
+            // Control-plane gauges, appended at the end so every older
+            // status key keeps its byte position (the shard-determinism
+            // fingerprint neutralizes these, not reorders around them).
+            // They read the aggregator's *current* queue/ledger state —
+            // under `?at_event` scrubs the run-level keys rewind but
+            // these gauges do not (the queue is not replay-indexed).
+            .with("submission_queue", {
+                let (depth, spilled, admitted, spill_total, rejected) = self.queue_stats();
+                Json::obj()
+                    .with("depth", Json::Num(depth as f64))
+                    .with("spilled", Json::Num(spilled as f64))
+                    .with("admitted", Json::Num(admitted as f64))
+                    .with("spill_total", Json::Num(spill_total as f64))
+                    .with("rejected", Json::Num(rejected as f64))
+            })
+            .with("quota_ledger", {
+                let stat = self.quota.stat();
+                Json::obj()
+                    .with("total_gpus", Json::Num(stat.total as f64))
+                    .with("reserved", Json::Num(stat.reserved as f64))
+                    .with("studies", Json::Num(stat.studies as f64))
+            })
     }
 
     fn merge_fair_share(&self, pieces: &[(Json, usize, usize)]) -> Json {
@@ -986,6 +1008,9 @@ impl FanoutSource {
             | ApiQuery::Parallel
             | ApiQuery::Curves { .. } => Err(ApiError::NotFound(
                 "single-study endpoint; use /api/v1/studies/<name>/…".into(),
+            )),
+            ApiQuery::Sweep | ApiQuery::SweepCell { .. } => Err(ApiError::NotFound(
+                "sweep endpoint; serve a sweep directory (chopt serve --sweep)".into(),
             )),
         }
     }

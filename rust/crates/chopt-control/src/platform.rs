@@ -1316,6 +1316,9 @@ impl<'t> RunSource for Platform<'t> {
             | ApiQuery::StudyCurves { .. } => Err(ApiError::NotFound(
                 "multi-study endpoint; this server runs a single study".into(),
             )),
+            ApiQuery::Sweep | ApiQuery::SweepCell { .. } => Err(ApiError::NotFound(
+                "sweep endpoint; serve a sweep directory (chopt serve --sweep)".into(),
+            )),
         }
     }
 }
@@ -1424,6 +1427,9 @@ impl<'t> RunSource for MultiPlatform<'t> {
             | ApiQuery::Parallel
             | ApiQuery::Curves { .. } => Err(ApiError::NotFound(
                 "single-study endpoint; use /api/v1/studies/<name>/…".into(),
+            )),
+            ApiQuery::Sweep | ApiQuery::SweepCell { .. } => Err(ApiError::NotFound(
+                "sweep endpoint; serve a sweep directory (chopt serve --sweep)".into(),
             )),
         }
     }

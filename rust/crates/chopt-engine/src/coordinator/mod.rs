@@ -39,5 +39,6 @@ pub use pools::{Pool, Pools};
 pub use queue::{SessionQueue, Submission};
 pub use retry::{Health, RetryPolicy};
 pub use scheduler::{
-    MultiOutcome, StudyAgent, StudyManifest, StudyResult, StudyScheduler, StudySpec, StudyState,
+    valid_study_name, MultiOutcome, StudyAgent, StudyManifest, StudyResult, StudyScheduler,
+    StudySpec, StudyState,
 };

@@ -299,8 +299,10 @@ fn resolve_quotas(cluster_gpus: usize, studies: &mut [StudySpec]) -> anyhow::Res
 
 /// Study names end up in file paths (`events-<name>.jsonl`,
 /// `sessions-<name>.json`) and URL routes, so restrict them to a safe
-/// charset — no separators, no `..`, no leading dot.
-fn valid_study_name(name: &str) -> bool {
+/// charset — no separators, no `..`, no leading dot.  Public because
+/// `chopt validate` and the sweep spec apply the same rule to axis
+/// names (they become path components and URL segments too).
+pub fn valid_study_name(name: &str) -> bool {
     !name.is_empty()
         && !name.starts_with('.')
         && name

@@ -1,0 +1,243 @@
+//! The versioned `sweep.json` comparison artifact.
+//!
+//! Folds per-cell `cell.json` documents into one document: the full
+//! grid in expansion order, per-axis marginals (mean score / GPU-hours
+//! / time-to-target over every cell sharing an axis value), and
+//! rankings.  Every field is a pure function of (spec, cell records) —
+//! no wall clock, no host identity — so re-running the same spec
+//! produces byte-identical output.
+
+use chopt_core::util::json::Value as Json;
+
+use crate::spec::{CellPlan, SweepSpec};
+
+/// Bumped whenever the artifact layout changes shape.
+pub const SWEEP_SCHEMA_VERSION: f64 = 1.0;
+
+/// Discriminator so `SweepSource`/tools can reject non-sweep JSON.
+pub const SWEEP_KIND: &str = "chopt_sweep";
+
+fn metric(rec: &Json, key: &str) -> Option<f64> {
+    rec.get("metrics").and_then(|m| m.get(key)).and_then(|v| v.as_f64())
+}
+
+fn mean(vals: &[f64]) -> Json {
+    if vals.is_empty() {
+        Json::Null
+    } else {
+        Json::Num(vals.iter().sum::<f64>() / vals.len() as f64)
+    }
+}
+
+/// One marginal row: aggregate metrics over every cell that shares an
+/// axis value.
+fn marginal_row(name: &str, idx: &[usize], records: &[Json]) -> Json {
+    let recs: Vec<&Json> = idx.iter().map(|&i| &records[i]).collect();
+    let scores: Vec<f64> = recs.iter().filter_map(|r| metric(r, "score")).collect();
+    let bests: Vec<f64> = recs
+        .iter()
+        .filter_map(|r| metric(r, "best_objective"))
+        .collect();
+    let gpu_hours: Vec<f64> = recs.iter().filter_map(|r| metric(r, "gpu_hours")).collect();
+    let hits: Vec<f64> = recs
+        .iter()
+        .filter_map(|r| metric(r, "time_to_target"))
+        .collect();
+    Json::obj()
+        .with("name", Json::Str(name.to_string()))
+        .with("cells", Json::Num(recs.len() as f64))
+        .with("mean_score", mean(&scores))
+        .with("mean_best", mean(&bests))
+        .with("mean_gpu_hours", mean(&gpu_hours))
+        .with("target_hits", Json::Num(hits.len() as f64))
+        .with("mean_time_to_target", mean(&hits))
+}
+
+/// Marginals for one axis, in the axis's declaration order.  `pick`
+/// selects the plan's value on that axis.
+fn axis_marginals(
+    names: &[String],
+    plans: &[CellPlan],
+    records: &[Json],
+    pick: impl Fn(&CellPlan) -> &str,
+) -> Json {
+    let rows = names
+        .iter()
+        .map(|name| {
+            let idx: Vec<usize> = plans
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| pick(p) == name)
+                .map(|(i, _)| i)
+                .collect();
+            marginal_row(name, &idx, records)
+        })
+        .collect();
+    Json::Arr(rows)
+}
+
+/// Rank cell ids by a metric.  Cells missing the metric sort last;
+/// ties keep grid order (the sort is stable).
+fn ranking(
+    plans: &[CellPlan],
+    records: &[Json],
+    key: &str,
+    descending: bool,
+) -> Json {
+    let mut order: Vec<(usize, Option<f64>)> = records
+        .iter()
+        .enumerate()
+        .map(|(i, r)| (i, metric(r, key)))
+        .collect();
+    order.sort_by(|(_, a), (_, b)| match (a, b) {
+        (Some(x), Some(y)) => {
+            if descending {
+                y.total_cmp(x)
+            } else {
+                x.total_cmp(y)
+            }
+        }
+        (Some(_), None) => std::cmp::Ordering::Less,
+        (None, Some(_)) => std::cmp::Ordering::Greater,
+        (None, None) => std::cmp::Ordering::Equal,
+    });
+    Json::Arr(
+        order
+            .into_iter()
+            .map(|(i, _)| Json::Str(plans[i].id.clone()))
+            .collect(),
+    )
+}
+
+/// Build the sweep artifact from the expanded plans and their cell
+/// records (both in grid order, same length).
+pub fn build_artifact(spec: &SweepSpec, plans: &[CellPlan], records: &[Json]) -> Json {
+    debug_assert_eq!(plans.len(), records.len());
+    let scenario_names: Vec<String> = spec.scenarios.iter().map(|a| a.name.clone()).collect();
+    let tuner_names: Vec<String> = spec.tuners.iter().map(|a| a.name.clone()).collect();
+    let policy_names: Vec<String> = spec.policies.iter().map(|a| a.name.clone()).collect();
+    let names_arr = |names: &[String]| {
+        Json::Arr(names.iter().map(|n| Json::Str(n.clone())).collect())
+    };
+    Json::obj()
+        .with("schema_version", Json::Num(SWEEP_SCHEMA_VERSION))
+        .with("kind", Json::Str(SWEEP_KIND.to_string()))
+        .with("seed", Json::Str(spec.seed.to_string()))
+        .with(
+            "axes",
+            Json::obj()
+                .with("scenarios", names_arr(&scenario_names))
+                .with("tuners", names_arr(&tuner_names))
+                .with("policies", names_arr(&policy_names)),
+        )
+        .with("cells", Json::Arr(records.to_vec()))
+        .with(
+            "marginals",
+            Json::obj()
+                .with(
+                    "scenarios",
+                    axis_marginals(&scenario_names, plans, records, |p| &p.scenario),
+                )
+                .with(
+                    "tuners",
+                    axis_marginals(&tuner_names, plans, records, |p| &p.tuner),
+                )
+                .with(
+                    "policies",
+                    axis_marginals(&policy_names, plans, records, |p| &p.policy),
+                ),
+        )
+        .with(
+            "rankings",
+            Json::obj()
+                .with("by_score", ranking(plans, records, "score", true))
+                .with("by_gpu_hours", ranking(plans, records, "gpu_hours", false))
+                .with(
+                    "by_time_to_target",
+                    ranking(plans, records, "time_to_target", false),
+                ),
+        )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: &str, score: Option<f64>, gpu: f64) -> Json {
+        let mut metrics = Json::obj().with("gpu_hours", Json::Num(gpu));
+        metrics = metrics.with(
+            "score",
+            score.map(Json::Num).unwrap_or(Json::Null),
+        );
+        Json::obj()
+            .with("id", Json::Str(id.to_string()))
+            .with("metrics", metrics)
+    }
+
+    fn toy_spec() -> SweepSpec {
+        let doc = chopt_core::util::json::parse(
+            r#"{
+                "base_manifest": {"cluster_gpus": 4,
+                    "studies": [{"name": "a", "quota": 2, "config": {
+                        "h_params": {"lr": {"parameters": [0.005, 0.09],
+                            "distribution": "log_uniform", "type": "float",
+                            "p_range": [0.001, 0.2]}},
+                        "measure": "test/accuracy", "order": "descending",
+                        "step": 10, "population": 2, "tune": {"random": {}},
+                        "termination": {"max_session_number": 4},
+                        "model": "surrogate:resnet", "max_epochs": 40,
+                        "max_gpus": 2, "seed": 1}}]},
+                "axes": {
+                    "scenarios": [{"name": "calm", "scenario": null},
+                                  {"name": "storm", "scenario": null}],
+                    "tuners": [{"name": "random", "tune": {"random": {}}}],
+                    "policies": [{"name": "strict"}]
+                }
+            }"#,
+        )
+        .unwrap();
+        SweepSpec::from_json(&doc, None).unwrap()
+    }
+
+    #[test]
+    fn rankings_order_and_null_metrics_last() {
+        let spec = toy_spec();
+        let plans = spec.cells().unwrap();
+        assert_eq!(plans.len(), 2);
+        let records = vec![
+            rec(&plans[0].id, None, 5.0),
+            rec(&plans[1].id, Some(0.9), 2.0),
+        ];
+        let art = build_artifact(&spec, &plans, &records);
+        let by_score: Vec<&str> = art
+            .path("rankings.by_score")
+            .and_then(|v| v.as_arr())
+            .unwrap()
+            .iter()
+            .map(|v| v.as_str().unwrap())
+            .collect();
+        // The cell with a score ranks ahead of the score-less one.
+        assert_eq!(by_score, vec![plans[1].id.as_str(), plans[0].id.as_str()]);
+        let by_gpu: Vec<&str> = art
+            .path("rankings.by_gpu_hours")
+            .and_then(|v| v.as_arr())
+            .unwrap()
+            .iter()
+            .map(|v| v.as_str().unwrap())
+            .collect();
+        assert_eq!(by_gpu, vec![plans[1].id.as_str(), plans[0].id.as_str()]);
+        assert_eq!(
+            art.get("kind").and_then(|v| v.as_str()),
+            Some(SWEEP_KIND)
+        );
+        // Marginals: the "calm" scenario row covers exactly one cell.
+        let row = art
+            .path("marginals.scenarios")
+            .and_then(|v| v.as_arr())
+            .unwrap()
+            .first()
+            .unwrap();
+        assert_eq!(row.get("name").and_then(|v| v.as_str()), Some("calm"));
+        assert_eq!(row.get("cells").and_then(|v| v.as_f64()), Some(1.0));
+    }
+}

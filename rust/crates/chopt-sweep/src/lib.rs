@@ -1,0 +1,46 @@
+//! `chopt-sweep` — the policy-evaluation harness (paper §5's iterative
+//! analysis procedure, made a first-class subsystem).
+//!
+//! CHOPT's pitch is not just running HyperOpt but *comparing* tuners
+//! and sharing policies across conditions.  This crate turns that loop
+//! into a deterministic grid evaluation:
+//!
+//! * [`spec`] — a sweep spec JSON declares three axes (scenarios ×
+//!   tuner configs × scheduler policies) over one base manifest; the
+//!   cross product expands into [`spec::CellPlan`]s, each carrying a
+//!   fully-resolved canonical manifest and a content hash of
+//!   (manifest, scenario, tuner, policy, seed, drive parameters).
+//! * [`runner`] — runs every cell as an independent deterministic
+//!   multi-study simulation on a bounded worker pool (cells share
+//!   nothing, so the worker count is purely a wall-clock knob: output
+//!   bytes are identical across pool sizes).  Completed cells are
+//!   recognized by their hash, so `--resume` recomputes only missing
+//!   or stale ones.
+//! * [`artifact`] — folds the per-cell metrics into a versioned
+//!   `sweep.json` comparison artifact: the full grid, per-axis
+//!   marginals, and rankings.  No wall-clock timestamps anywhere, so a
+//!   re-run of the same spec is byte-identical.
+//! * [`serve`] — [`serve::SweepSource`]: a read-only
+//!   `RunSource`/`CommandSink` over a sweep directory, answering
+//!   `GET /api/v1/sweep` and `/api/v1/sweep/cells/<id>` through the
+//!   unchanged control-plane server (fixed generation, so the response
+//!   cache pins every body).
+//! * [`validate`] — parse + semantic checks for manifests, scenarios,
+//!   and sweep specs with `path:line:col` diagnostics (the
+//!   `chopt validate` subcommand; the sweep CLI fails fast on it
+//!   before burning grid cells).
+
+pub mod artifact;
+pub mod runner;
+pub mod serve;
+pub mod spec;
+pub mod validate;
+
+pub use artifact::{build_artifact, SWEEP_KIND, SWEEP_SCHEMA_VERSION};
+pub use runner::{run_sweep, SweepOptions, SweepOutcome};
+pub use serve::SweepSource;
+pub use spec::{fnv1a64, CellPlan, SweepSpec};
+pub use validate::{
+    validate_manifest_file, validate_scenario_file, validate_sweep_file, Diagnostic, Report,
+    Severity,
+};

@@ -1,0 +1,422 @@
+//! Cell runner + bounded worker pool.
+//!
+//! Each cell is one deterministic multi-study run driven exactly like
+//! `chopt multi`'s single-scheduler path: chunked advances split at
+//! every scenario submission time, per-study JSONL event logs,
+//! periodic snapshots, and the same final exports (`snapshot.json`,
+//! `fair_share.json`, `sessions-<study>.json`).  A cell directory is
+//! therefore also a valid stored-run directory (`chopt serve --store
+//! <out>/cells/<id>` works).
+//!
+//! Cells share no mutable state — each owns its manifest, scheduler,
+//! RNGs, and output directory — so the worker-pool size is purely a
+//! wall-clock knob: every byte written is identical across pool sizes
+//! (property-tested in `rust/tests/sweep.rs`).
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context};
+use chopt_core::config::Order;
+use chopt_core::trainer::surrogate::default_multi_factory;
+use chopt_core::util::json::{parse, Value as Json};
+use chopt_control::platform::MultiPlatform;
+use chopt_engine::coordinator::{StudyManifest, StudySpec};
+
+use crate::artifact::build_artifact;
+use crate::spec::{CellPlan, SweepSpec};
+
+/// Schema version stamped into every `cell.json`.
+pub const CELL_SCHEMA_VERSION: f64 = 1.0;
+
+/// Worker-pool and resume knobs for one sweep invocation.
+#[derive(Debug, Clone)]
+pub struct SweepOptions {
+    /// Cell-worker threads (outer parallelism; inner stepping stays
+    /// serial so cells match standalone runs byte for byte).
+    pub workers: usize,
+    /// Keep completed cells whose hash matches the plan; recompute
+    /// only missing or stale ones.
+    pub resume: bool,
+    /// Suppress per-cell progress lines.
+    pub quiet: bool,
+}
+
+impl Default for SweepOptions {
+    fn default() -> SweepOptions {
+        SweepOptions {
+            workers: 2,
+            resume: false,
+            quiet: true,
+        }
+    }
+}
+
+/// What one sweep invocation did: the artifact plus which cells were
+/// actually computed vs reused.
+#[derive(Debug)]
+pub struct SweepOutcome {
+    pub artifact: Json,
+    pub cells_total: usize,
+    pub cells_run: Vec<String>,
+    pub cells_skipped: Vec<String>,
+}
+
+/// Expand the spec, run (or reuse) every cell on a bounded worker
+/// pool, and write `<out>/sweep.json`.  A fresh run (no `resume`)
+/// clears `<out>/cells/` first, so re-running the same spec is
+/// byte-identical from a clean slate.
+pub fn run_sweep(
+    spec: &SweepSpec,
+    out: impl AsRef<Path>,
+    opts: &SweepOptions,
+) -> anyhow::Result<SweepOutcome> {
+    let out = out.as_ref();
+    let plans = spec.cells()?;
+    std::fs::create_dir_all(out)
+        .with_context(|| format!("creating sweep dir {}", out.display()))?;
+    let cells_dir = out.join("cells");
+    if !opts.resume {
+        let _ = std::fs::remove_dir_all(&cells_dir);
+        let _ = std::fs::remove_file(out.join("sweep.json"));
+    }
+    std::fs::create_dir_all(&cells_dir)?;
+
+    let mut skipped = Vec::new();
+    let mut work: Vec<&CellPlan> = Vec::new();
+    for plan in &plans {
+        if opts.resume && cell_complete(&cells_dir.join(&plan.id), &plan.hash) {
+            skipped.push(plan.id.clone());
+        } else {
+            work.push(plan);
+        }
+    }
+
+    let workers = opts.workers.clamp(1, work.len().max(1));
+    let next = AtomicUsize::new(0);
+    let failures: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= work.len() {
+                    break;
+                }
+                let plan = work[i];
+                let dir = cells_dir.join(&plan.id);
+                match run_cell(plan, spec, &dir) {
+                    Ok(doc) => {
+                        if !opts.quiet {
+                            let best = doc
+                                .path("metrics.best_objective")
+                                .and_then(|v| v.as_f64())
+                                .map(|b| format!("{b:.4}"))
+                                .unwrap_or_else(|| "-".into());
+                            let events = doc
+                                .path("metrics.events")
+                                .and_then(|v| v.as_i64())
+                                .unwrap_or(0);
+                            println!("cell {:<32} best={best} events={events}", plan.id);
+                        }
+                    }
+                    Err(e) => failures
+                        .lock()
+                        .unwrap()
+                        .push(format!("cell '{}': {e:#}", plan.id)),
+                }
+            });
+        }
+    });
+    let failures = failures.into_inner().unwrap();
+    if !failures.is_empty() {
+        bail!(
+            "{} of {} cells failed:\n  {}",
+            failures.len(),
+            plans.len(),
+            failures.join("\n  ")
+        );
+    }
+
+    // Assemble the artifact from disk in grid order — reused and fresh
+    // cells go through the same bytes, so resume cannot perturb the
+    // artifact.
+    let mut records = Vec::with_capacity(plans.len());
+    for plan in &plans {
+        let path = cells_dir.join(&plan.id).join("cell.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        let hash = doc.get("hash").and_then(|v| v.as_str()).unwrap_or("");
+        if hash != plan.hash {
+            bail!(
+                "cell '{}' hash mismatch after run ({} vs planned {})",
+                plan.id,
+                hash,
+                plan.hash
+            );
+        }
+        records.push(doc);
+    }
+    let artifact = build_artifact(spec, &plans, &records);
+    std::fs::write(out.join("sweep.json"), artifact.to_string_pretty())
+        .with_context(|| format!("writing {}", out.join("sweep.json").display()))?;
+    Ok(SweepOutcome {
+        artifact,
+        cells_total: plans.len(),
+        cells_run: work.iter().map(|p| p.id.clone()).collect(),
+        cells_skipped: skipped,
+    })
+}
+
+/// A cell is complete iff its `cell.json` parses and records the
+/// planned content hash — the resume criterion.
+pub fn cell_complete(dir: &Path, hash: &str) -> bool {
+    std::fs::read_to_string(dir.join("cell.json"))
+        .ok()
+        .and_then(|text| parse(&text).ok())
+        .and_then(|doc| doc.get("hash").and_then(|v| v.as_str()).map(|h| h == hash))
+        .unwrap_or(false)
+}
+
+/// Take the scenario-driven submissions out of a manifest — the same
+/// rule `chopt multi` applies: each submission is admitted by
+/// splitting the advance at its requested time, and a
+/// submissions-only scenario is dropped so parallel stepping stays
+/// eligible.
+pub fn take_submissions(manifest: &mut StudyManifest) -> anyhow::Result<Vec<(f64, StudySpec)>> {
+    let mut subs = Vec::new();
+    if let Some(sc) = manifest.scenario.as_mut() {
+        let taken = std::mem::take(&mut sc.submissions);
+        for (i, sub) in taken.iter().enumerate() {
+            subs.push((
+                sub.at,
+                StudySpec::from_json(&sub.spec, manifest.studies.len() + i)?,
+            ));
+        }
+        if sc.sources.is_empty() {
+            manifest.scenario = None;
+        }
+    }
+    subs.sort_by(|a, b| a.0.total_cmp(&b.0));
+    Ok(subs)
+}
+
+/// One drive chunk, split at every pending submission time (the
+/// admission rule shared with `chopt multi`); jumps idle gaps to the
+/// next submission.  Errors on a rejected submission — in a sweep that
+/// is a spec bug, not something to log and shrug off.
+fn advance_cell(
+    platform: &mut MultiPlatform<'_>,
+    subs: &mut Vec<(f64, StudySpec)>,
+    chunk: f64,
+) -> anyhow::Result<u64> {
+    let target = platform.now() + chunk;
+    let mut n = 0;
+    while subs.first().map(|&(at, _)| at <= target).unwrap_or(false) {
+        let (at, spec) = subs.remove(0);
+        n += platform.run_until(at);
+        n += admit(platform, spec, at)?;
+    }
+    n += platform.advance((target - platform.now()).max(0.0));
+    if n == 0 && !subs.is_empty() {
+        let (at, spec) = subs.remove(0);
+        n += platform.run_until(at);
+        n += admit(platform, spec, at)?;
+    }
+    Ok(n)
+}
+
+fn admit(platform: &mut MultiPlatform<'_>, spec: StudySpec, at: f64) -> anyhow::Result<u64> {
+    let name = spec.name.clone();
+    match platform.submit_study(spec, at) {
+        Some(_) => Ok(1),
+        None => bail!(
+            "scenario submission '{name}' rejected (duplicate name, bad quota/priority, \
+             or quota does not fit)"
+        ),
+    }
+}
+
+/// Run one cell into `dir` (wiped first) and write `cell.json`.
+/// Returns the cell document.
+pub fn run_cell(plan: &CellPlan, spec: &SweepSpec, dir: &Path) -> anyhow::Result<Json> {
+    let _ = std::fs::remove_dir_all(dir);
+    std::fs::create_dir_all(dir)?;
+    let mut manifest = plan.manifest()?;
+    let mut subs = take_submissions(&mut manifest)?;
+    let snap_path = dir.join("snapshot.json");
+    let mut platform = MultiPlatform::new(manifest, default_multi_factory)
+        .with_event_logs(dir)?
+        .with_snapshots(&snap_path, spec.snapshot_every);
+
+    let mut time_to_target: Option<f64> = None;
+    loop {
+        let n = advance_cell(&mut platform, &mut subs, spec.chunk)?;
+        if let (Some(target), None) = (spec.target_measure, time_to_target) {
+            if target_hit(&platform, target) {
+                time_to_target = Some(platform.now());
+            }
+        }
+        if (platform.is_done() && subs.is_empty()) || n == 0 {
+            break;
+        }
+    }
+    if !platform.is_done() {
+        bail!("cell run stalled before completion (t={:.0}s)", platform.now());
+    }
+    platform.snapshot_now()?;
+    std::fs::write(
+        dir.join("fair_share.json"),
+        platform.fair_share_doc().to_string_pretty(),
+    )?;
+    let names: Vec<String> = platform
+        .scheduler()
+        .studies()
+        .iter()
+        .map(|s| s.name().to_string())
+        .collect();
+    for name in &names {
+        std::fs::write(
+            dir.join(format!("sessions-{name}.json")),
+            platform.study_sessions_doc(name).to_string_pretty(),
+        )?;
+    }
+
+    let doc = Json::obj()
+        .with("cell_schema_version", Json::Num(CELL_SCHEMA_VERSION))
+        .with("id", Json::Str(plan.id.clone()))
+        .with("hash", Json::Str(plan.hash.clone()))
+        .with("scenario", Json::Str(plan.scenario.clone()))
+        .with("tuner", Json::Str(plan.tuner.clone()))
+        .with("policy", Json::Str(plan.policy.clone()))
+        .with("seed", Json::Str(plan.seed.to_string()))
+        .with("metrics", cell_metrics(&platform, time_to_target));
+    std::fs::write(
+        dir.join("manifest.json"),
+        plan.manifest_doc.to_string_pretty(),
+    )?;
+    std::fs::write(dir.join("cell.json"), doc.to_string_pretty())?;
+    Ok(doc)
+}
+
+/// Has any study's best objective crossed `target` under its own
+/// order?  (Equality counts as a hit.)
+fn target_hit(platform: &MultiPlatform<'_>, target: f64) -> bool {
+    platform.scheduler().studies().iter().any(|st| {
+        st.agent()
+            .and_then(|a| a.best())
+            .map(|(_, best)| best == target || st.config().order.better(best, target))
+            .unwrap_or(false)
+    })
+}
+
+/// Order-normalized comparison score: higher is always better, so
+/// ascending-order (loss) studies rank alongside descending-order
+/// (accuracy) ones.
+fn score_of(order: Order, measure: f64) -> f64 {
+    match order {
+        Order::Descending => measure,
+        Order::Ascending => -measure,
+    }
+}
+
+/// Extract the per-cell comparison metrics from a finished platform.
+/// Everything here is a pure function of the deterministic simulation
+/// state — no wall clock, no host identity.
+fn cell_metrics(platform: &MultiPlatform<'_>, time_to_target: Option<f64>) -> Json {
+    let sched = platform.scheduler();
+    let now = sched.now();
+    let cluster = sched.cluster();
+    let gpu_hours = cluster.chopt_gpu_hours(now);
+    let total = cluster.total();
+    let hours = now / 3600.0;
+    let (applied, skipped) = sched.fail_stats();
+
+    let mut best: Option<(String, f64, f64)> = None;
+    let mut created = 0usize;
+    let mut live = 0usize;
+    let mut parked = 0usize;
+    let mut killed = 0usize;
+    let mut restarts = 0u64;
+    let mut quarantined = 0usize;
+    let mut rows = Vec::new();
+    for st in sched.studies() {
+        let st_best = st.agent().and_then(|a| a.best()).map(|(_, m)| m);
+        let st_score = st_best.map(|m| score_of(st.config().order, m));
+        if let (Some(m), Some(sc)) = (st_best, st_score) {
+            if best.as_ref().map(|(_, _, b)| sc > *b).unwrap_or(true) {
+                best = Some((st.name().to_string(), m, sc));
+            }
+        }
+        let (s_created, s_live, s_parked, s_killed) = st
+            .agent()
+            .map(|a| {
+                (
+                    a.sessions.len(),
+                    a.pools.live_count(),
+                    a.pools.stop_count(),
+                    a.pools.dead_count(),
+                )
+            })
+            .unwrap_or((0, 0, 0, 0));
+        created += s_created;
+        live += s_live;
+        parked += s_parked;
+        killed += s_killed;
+        restarts += st.restarts() as u64;
+        if st.health_label() == "quarantined" {
+            quarantined += 1;
+        }
+        rows.push(
+            Json::obj()
+                .with("study", Json::Str(st.name().to_string()))
+                .with("best", st_best.map(Json::Num).unwrap_or(Json::Null))
+                .with("score", st_score.map(Json::Num).unwrap_or(Json::Null))
+                .with("sessions", Json::Num(s_created as f64))
+                .with("restarts", Json::Num(st.restarts() as f64))
+                .with("health", Json::Str(st.health_label().to_string()))
+                .with("done", Json::Bool(st.done())),
+        );
+    }
+    let (best_study, best_objective, best_score) = match best {
+        Some((name, m, sc)) => (Json::Str(name), Json::Num(m), Json::Num(sc)),
+        None => (Json::Null, Json::Null, Json::Null),
+    };
+    Json::obj()
+        .with("end_time", Json::Num(now))
+        .with("events", Json::Num(sched.events_processed() as f64))
+        .with("best_objective", best_objective)
+        .with("best_study", best_study)
+        .with("score", best_score)
+        .with("gpu_hours", Json::Num(gpu_hours))
+        .with(
+            "utilization_integral",
+            Json::Num(if total > 0 {
+                gpu_hours / total as f64
+            } else {
+                0.0
+            }),
+        )
+        .with(
+            "avg_utilization",
+            Json::Num(if total > 0 && hours > 0.0 {
+                gpu_hours / (total as f64 * hours)
+            } else {
+                0.0
+            }),
+        )
+        .with("sessions_created", Json::Num(created as f64))
+        .with("sessions_live", Json::Num(live as f64))
+        .with("sessions_parked", Json::Num(parked as f64))
+        .with("sessions_killed", Json::Num(killed as f64))
+        .with("restarts", Json::Num(restarts as f64))
+        .with("quarantined", Json::Num(quarantined as f64))
+        .with("failures_applied", Json::Num(applied as f64))
+        .with("failures_skipped", Json::Num(skipped as f64))
+        .with(
+            "time_to_target",
+            time_to_target.map(Json::Num).unwrap_or(Json::Null),
+        )
+        .with("studies", Json::Arr(rows))
+}

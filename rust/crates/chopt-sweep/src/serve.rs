@@ -1,0 +1,173 @@
+//! Read-only `/api/v1` backend over a finished sweep directory.
+//!
+//! `chopt serve --sweep <dir>` loads `<dir>/sweep.json` once and
+//! answers `GET /api/v1/sweep` (the whole artifact) and
+//! `GET /api/v1/sweep/cells/<id>` (one embedded cell record) through
+//! the unchanged control-plane server.  Like a stored run, the source
+//! reports a **fixed generation** — the response cache pins every body,
+//! so after first touch the read surface costs no re-serialization.
+//! The generation itself is the sum of per-cell processed-event
+//! counts: a meaningful progress gauge, and different sweeps produce
+//! different ETags.
+
+use std::path::Path;
+
+use anyhow::{bail, Context};
+use chopt_core::util::json::{parse, Value as Json};
+use chopt_control::api::{ApiCommand, ApiError, ApiQuery, CommandSink, RunSource};
+
+use crate::artifact::SWEEP_KIND;
+
+/// A loaded sweep artifact behind the `RunSource` trait.
+pub struct SweepSource {
+    artifact: Json,
+    generation: u64,
+}
+
+impl SweepSource {
+    /// Load `<dir>/sweep.json` (or a direct path to the file).
+    pub fn open(path: impl AsRef<Path>) -> anyhow::Result<SweepSource> {
+        let path = path.as_ref();
+        let file = if path.is_dir() {
+            path.join("sweep.json")
+        } else {
+            path.to_path_buf()
+        };
+        let text = std::fs::read_to_string(&file)
+            .with_context(|| format!("reading sweep artifact {}", file.display()))?;
+        let artifact =
+            parse(&text).with_context(|| format!("parsing {}", file.display()))?;
+        SweepSource::from_artifact(artifact)
+            .with_context(|| format!("loading {}", file.display()))
+    }
+
+    /// Wrap an already-parsed artifact document.
+    pub fn from_artifact(artifact: Json) -> anyhow::Result<SweepSource> {
+        let kind = artifact.get("kind").and_then(|v| v.as_str()).unwrap_or("");
+        if kind != SWEEP_KIND {
+            bail!("not a sweep artifact (kind '{kind}', expected '{SWEEP_KIND}')");
+        }
+        let generation = artifact
+            .get("cells")
+            .and_then(|v| v.as_arr())
+            .map(|cells| {
+                cells
+                    .iter()
+                    .filter_map(|c| c.path("metrics.events").and_then(|v| v.as_i64()))
+                    .map(|n| n.max(0) as u64)
+                    .sum()
+            })
+            .unwrap_or(0);
+        Ok(SweepSource {
+            artifact,
+            generation,
+        })
+    }
+
+    /// Cell ids in grid order (used by the CLI to print a summary).
+    pub fn cell_ids(&self) -> Vec<&str> {
+        self.artifact
+            .get("cells")
+            .and_then(|v| v.as_arr())
+            .map(|cells| {
+                cells
+                    .iter()
+                    .filter_map(|c| c.get("id").and_then(|v| v.as_str()))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    fn cell(&self, id: &str) -> Option<&Json> {
+        self.artifact
+            .get("cells")
+            .and_then(|v| v.as_arr())?
+            .iter()
+            .find(|c| c.get("id").and_then(|v| v.as_str()) == Some(id))
+    }
+}
+
+impl RunSource for SweepSource {
+    fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    fn query(&self, q: &ApiQuery) -> Result<Json, ApiError> {
+        match q {
+            ApiQuery::Sweep => Ok(self.artifact.clone()),
+            ApiQuery::SweepCell { cell } => self.cell(cell).cloned().ok_or_else(|| {
+                ApiError::NotFound(format!("no cell '{cell}' in this sweep"))
+            }),
+            _ => Err(ApiError::NotFound(
+                "sweep server: only /api/v1/sweep and /api/v1/sweep/cells/<id> are served \
+                 (serve a cell directory with --store for run-level endpoints)"
+                    .into(),
+            )),
+        }
+    }
+
+    /// The artifact never changes after load — pin every cache entry.
+    fn fixed_generation(&self) -> bool {
+        true
+    }
+}
+
+impl CommandSink for SweepSource {
+    fn command(&mut self, c: &ApiCommand) -> Result<Json, ApiError> {
+        Err(ApiError::BadRequest(format!(
+            "sweep artifact is read-only — '{}' needs a live server (chopt serve --live)",
+            c.name()
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact() -> Json {
+        Json::obj()
+            .with("schema_version", Json::Num(1.0))
+            .with("kind", Json::Str(SWEEP_KIND.into()))
+            .with(
+                "cells",
+                Json::Arr(vec![
+                    Json::obj()
+                        .with("id", Json::Str("a-b-c".into()))
+                        .with("metrics", Json::obj().with("events", Json::Num(10.0))),
+                    Json::obj()
+                        .with("id", Json::Str("a-b-d".into()))
+                        .with("metrics", Json::obj().with("events", Json::Num(5.0))),
+                ]),
+            )
+    }
+
+    #[test]
+    fn serves_artifact_and_cells_with_fixed_generation() {
+        let src = SweepSource::from_artifact(artifact()).unwrap();
+        assert_eq!(src.generation(), 15);
+        assert!(src.fixed_generation());
+        assert_eq!(src.cell_ids(), vec!["a-b-c", "a-b-d"]);
+        assert!(src.query(&ApiQuery::Sweep).is_ok());
+        let cell = src
+            .query(&ApiQuery::SweepCell {
+                cell: "a-b-d".into(),
+            })
+            .unwrap();
+        assert_eq!(cell.get("id").and_then(|v| v.as_str()), Some("a-b-d"));
+        assert!(matches!(
+            src.query(&ApiQuery::SweepCell { cell: "nope".into() }),
+            Err(ApiError::NotFound(_))
+        ));
+        assert!(matches!(
+            src.query(&ApiQuery::Status),
+            Err(ApiError::NotFound(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_non_sweep_documents() {
+        let doc = Json::obj().with("kind", Json::Str("multi_study".into()));
+        assert!(SweepSource::from_artifact(doc).is_err());
+    }
+}

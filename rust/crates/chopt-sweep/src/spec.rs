@@ -1,0 +1,491 @@
+//! Sweep spec: three declarative axes over one base manifest, expanded
+//! into content-addressed cells.
+//!
+//! ```json
+//! {
+//!   "base_manifest": "examples/multi_study.json",
+//!   "seed": "0",
+//!   "chunk": 3600,
+//!   "snapshot_every": 14400,
+//!   "target_measure": 0.6,
+//!   "axes": {
+//!     "scenarios": [
+//!       {"name": "calm", "scenario": null},
+//!       {"name": "storm", "path": "scenarios/storm.json"},
+//!       {"name": "diurnal", "scenario": {"sources": [{"kind": "diurnal", "total_gpus": 8, "base": 1, "amp": 2}]}}
+//!     ],
+//!     "tuners": [
+//!       {"name": "random", "tune": {"random": {}}},
+//!       {"name": "asha", "tune": {"asha": {"eta": 3}}}
+//!     ],
+//!     "policies": [
+//!       {"name": "strict", "borrow": false},
+//!       {"name": "borrow", "borrow": true, "retry": {"max_attempts": 3}}
+//!     ]
+//!   }
+//! }
+//! ```
+//!
+//! `base_manifest` is a path (resolved against the spec file's
+//! directory) or an inline manifest object.  Each cell applies one
+//! entry per axis to the base: the scenario replaces
+//! `manifest.scenario`, the tuner replaces every study's
+//! `config.tune`, and the policy overrides `borrow` / `policy` /
+//! `retry` / `master_period`.  The sweep `seed` is added to every
+//! study's config seed, so one spec re-seeds the whole grid.
+//!
+//! The resolved manifest is re-serialized through
+//! [`StudyManifest::to_json`] — the **canonical form** (explicit
+//! quotas, fixed key order) — and the cell hash is FNV-1a 64 over
+//! those bytes plus the drive parameters.  Equal hash ⇒ equal cell
+//! output bytes, which is what makes `--resume` sound.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+use chopt_core::util::json::{parse, Value as Json};
+use chopt_engine::coordinator::{valid_study_name, StudyManifest};
+
+/// One entry of the scenario axis: a name plus the scenario document
+/// that replaces `manifest.scenario` (already loaded if it came from a
+/// `path`).  `Json::Null` means "no scenario".
+#[derive(Debug, Clone)]
+pub struct ScenarioAxis {
+    pub name: String,
+    pub scenario: Json,
+}
+
+/// One entry of the tuner axis: the `tune` object written into every
+/// study config.
+#[derive(Debug, Clone)]
+pub struct TunerAxis {
+    pub name: String,
+    pub tune: Json,
+}
+
+/// One entry of the policy axis: scheduler-level overrides, each
+/// optional so an entry can flip a single knob.
+#[derive(Debug, Clone, Default)]
+pub struct PolicyAxis {
+    pub name: String,
+    pub borrow: Option<bool>,
+    pub policy: Option<Json>,
+    pub retry: Option<Json>,
+    pub master_period: Option<f64>,
+}
+
+/// A parsed sweep spec: base manifest + axes + drive parameters.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// The raw base manifest document (inline, or loaded from
+    /// `base_manifest` as a path).
+    pub base: Json,
+    /// Added to every study's config seed in every cell.
+    pub seed: u64,
+    pub scenarios: Vec<ScenarioAxis>,
+    pub tuners: Vec<TunerAxis>,
+    pub policies: Vec<PolicyAxis>,
+    /// Virtual seconds per drive chunk (affects `time_to_target`
+    /// granularity, never simulation results).
+    pub chunk: f64,
+    /// Virtual seconds between periodic cell snapshots.
+    pub snapshot_every: f64,
+    /// Optional objective threshold: the first chunk boundary at which
+    /// any study's best crosses it becomes the cell's `time_to_target`.
+    pub target_measure: Option<f64>,
+}
+
+/// One expanded grid cell: axis coordinates, the canonical resolved
+/// manifest, and the content hash that names its output directory
+/// entry.
+#[derive(Debug, Clone)]
+pub struct CellPlan {
+    /// `<scenario>-<tuner>-<policy>` — path-safe by construction.
+    pub id: String,
+    pub scenario: String,
+    pub tuner: String,
+    pub policy: String,
+    /// (scenario, tuner, policy) axis indices, grid order.
+    pub index: (usize, usize, usize),
+    /// Canonical resolved manifest (`StudyManifest::to_json` form).
+    pub manifest_doc: Json,
+    /// FNV-1a 64 over the canonical manifest bytes + drive parameters,
+    /// as 16 hex digits.
+    pub hash: String,
+    pub seed: u64,
+}
+
+impl CellPlan {
+    /// Rebuild the runnable manifest from the canonical document.
+    pub fn manifest(&self) -> anyhow::Result<StudyManifest> {
+        StudyManifest::from_json(&self.manifest_doc)
+            .with_context(|| format!("cell '{}' manifest", self.id))
+    }
+}
+
+/// FNV-1a 64 — the same dependency-free hash the response cache uses
+/// for ETags; collisions across a sweep grid's handful of cells are
+/// not a realistic concern.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Axis names become path components and URL segments, so they obey
+/// the same charset rule as study names, plus: no `-` ambiguity is
+/// enforced (ids are joined with `-`, but axis coordinates are carried
+/// separately in `cell.json`, so a dash inside a name is allowed).
+fn valid_axis_name(name: &str) -> bool {
+    valid_study_name(name)
+}
+
+fn parse_seed(doc: &Json, key: &str) -> anyhow::Result<u64> {
+    match doc.get(key) {
+        None | Some(Json::Null) => Ok(0),
+        Some(Json::Str(s)) => s
+            .parse::<u64>()
+            .with_context(|| format!("'{key}' must be a u64 (got '{s}')")),
+        Some(v) => v
+            .as_i64()
+            .and_then(|n| u64::try_from(n).ok())
+            .with_context(|| format!("'{key}' must be a non-negative integer")),
+    }
+}
+
+impl SweepSpec {
+    /// Load a spec file; `base_manifest` / scenario `path` entries
+    /// resolve relative to the spec file's directory.
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<SweepSpec> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading sweep spec {}", path.display()))?;
+        let doc = parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        SweepSpec::from_json(&doc, path.parent())
+    }
+
+    /// Parse a spec document; `base_dir` anchors relative paths.
+    pub fn from_json(doc: &Json, base_dir: Option<&Path>) -> anyhow::Result<SweepSpec> {
+        let resolve = |p: &str| -> PathBuf {
+            match base_dir {
+                Some(dir) if !Path::new(p).is_absolute() => dir.join(p),
+                _ => PathBuf::from(p),
+            }
+        };
+        let base = match doc.require("base_manifest")? {
+            Json::Str(p) => {
+                let path = resolve(p);
+                let text = std::fs::read_to_string(&path)
+                    .with_context(|| format!("reading base manifest {}", path.display()))?;
+                parse(&text).with_context(|| format!("parsing {}", path.display()))?
+            }
+            inline @ Json::Obj(_) => inline.clone(),
+            _ => bail!("'base_manifest' must be a path string or an inline manifest object"),
+        };
+        let axes = doc.require("axes")?;
+
+        let mut scenarios = Vec::new();
+        for (i, entry) in axis_entries(axes, "scenarios")?.iter().enumerate() {
+            let name = axis_name(entry, "scenarios", i)?;
+            let scenario = match (entry.get("scenario"), entry.get("path")) {
+                (Some(s), None) => s.clone(),
+                (None, Some(Json::Str(p))) => {
+                    let path = resolve(p);
+                    let text = std::fs::read_to_string(&path)
+                        .with_context(|| format!("reading scenario {}", path.display()))?;
+                    parse(&text).with_context(|| format!("parsing {}", path.display()))?
+                }
+                (None, None) => bail!("scenario axis entry '{name}' needs 'scenario' or 'path'"),
+                _ => bail!("scenario axis entry '{name}': give 'scenario' or 'path', not both"),
+            };
+            scenarios.push(ScenarioAxis { name, scenario });
+        }
+
+        let mut tuners = Vec::new();
+        for (i, entry) in axis_entries(axes, "tuners")?.iter().enumerate() {
+            let name = axis_name(entry, "tuners", i)?;
+            let tune = entry
+                .get("tune")
+                .cloned()
+                .with_context(|| format!("tuner axis entry '{name}' needs a 'tune' object"))?;
+            if tune.as_obj().is_none() {
+                bail!("tuner axis entry '{name}': 'tune' must be an object");
+            }
+            tuners.push(TunerAxis { name, tune });
+        }
+
+        let mut policies = Vec::new();
+        for (i, entry) in axis_entries(axes, "policies")?.iter().enumerate() {
+            let name = axis_name(entry, "policies", i)?;
+            policies.push(PolicyAxis {
+                name,
+                borrow: entry.get("borrow").and_then(|v| v.as_bool()),
+                policy: entry.get("policy").filter(|v| !v.is_null()).cloned(),
+                retry: entry.get("retry").filter(|v| !v.is_null()).cloned(),
+                master_period: entry.get("master_period").and_then(|v| v.as_f64()),
+            });
+        }
+
+        for (axis, names) in [
+            ("scenarios", scenarios.iter().map(|a| &a.name).collect::<Vec<_>>()),
+            ("tuners", tuners.iter().map(|a| &a.name).collect()),
+            ("policies", policies.iter().map(|a| &a.name).collect()),
+        ] {
+            let mut seen = std::collections::HashSet::new();
+            for n in names {
+                if !seen.insert(n.as_str()) {
+                    bail!("duplicate name '{n}' in axis '{axis}'");
+                }
+            }
+        }
+
+        Ok(SweepSpec {
+            base,
+            seed: parse_seed(doc, "seed")?,
+            scenarios,
+            tuners,
+            policies,
+            chunk: doc.get("chunk").and_then(|v| v.as_f64()).unwrap_or(3600.0).max(1.0),
+            snapshot_every: doc
+                .get("snapshot_every")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(14400.0),
+            target_measure: doc.get("target_measure").and_then(|v| v.as_f64()),
+        })
+    }
+
+    /// The drive parameters folded into every cell hash: a cell is
+    /// only reusable if it was produced under the same chunking,
+    /// snapshot cadence, and target threshold.
+    fn drive_params(&self) -> String {
+        let target = match self.target_measure {
+            Some(t) => format!("{t}"),
+            None => "none".into(),
+        };
+        format!(
+            "seed={}|chunk={}|snapshot_every={}|target={}",
+            self.seed, self.chunk, self.snapshot_every, target
+        )
+    }
+
+    /// Expand the full cross product in grid order (scenario-major,
+    /// policy-minor).  Every cell's manifest is resolved and validated
+    /// here, so a bad axis combination fails before any cell runs.
+    pub fn cells(&self) -> anyhow::Result<Vec<CellPlan>> {
+        if self.scenarios.is_empty() || self.tuners.is_empty() || self.policies.is_empty() {
+            bail!("every axis needs at least one entry");
+        }
+        let params = self.drive_params();
+        let mut plans =
+            Vec::with_capacity(self.scenarios.len() * self.tuners.len() * self.policies.len());
+        for (si, sc) in self.scenarios.iter().enumerate() {
+            for (ti, tu) in self.tuners.iter().enumerate() {
+                for (pi, po) in self.policies.iter().enumerate() {
+                    let id = format!("{}-{}-{}", sc.name, tu.name, po.name);
+                    let manifest_doc = self
+                        .resolve_cell(sc, tu, po)
+                        .with_context(|| format!("resolving cell '{id}'"))?;
+                    let hash = format!(
+                        "{:016x}",
+                        fnv1a64(
+                            format!("{}\u{0}{}", manifest_doc.to_string_compact(), params)
+                                .as_bytes()
+                        )
+                    );
+                    plans.push(CellPlan {
+                        id,
+                        scenario: sc.name.clone(),
+                        tuner: tu.name.clone(),
+                        policy: po.name.clone(),
+                        index: (si, ti, pi),
+                        manifest_doc,
+                        hash,
+                        seed: self.seed,
+                    });
+                }
+            }
+        }
+        Ok(plans)
+    }
+
+    /// Apply one axis combination to the base manifest and return the
+    /// canonical (`to_json`) document.
+    fn resolve_cell(
+        &self,
+        sc: &ScenarioAxis,
+        tu: &TunerAxis,
+        po: &PolicyAxis,
+    ) -> anyhow::Result<Json> {
+        let mut doc = self.base.clone();
+        if doc.as_obj().is_none() {
+            bail!("base manifest must be a JSON object");
+        }
+        doc.set("scenario", sc.scenario.clone());
+        if let Some(b) = po.borrow {
+            doc.set("borrow", Json::Bool(b));
+        }
+        if let Some(p) = &po.policy {
+            doc.set("policy", p.clone());
+        }
+        if let Some(r) = &po.retry {
+            doc.set("retry", r.clone());
+        }
+        if let Some(mp) = po.master_period {
+            doc.set("master_period", Json::Num(mp));
+        }
+        // The tuner override edits raw study JSON (config.tune), then
+        // the whole document goes through the manifest parser — so a
+        // tune object a real config would reject is caught here.
+        if let Some(Json::Arr(studies)) = doc.get("studies").cloned().map(|s| {
+            let mut s = s;
+            if let Json::Arr(items) = &mut s {
+                for study in items.iter_mut() {
+                    if let Some(mut cfg) = study.get("config").cloned() {
+                        if cfg.as_obj().is_some() {
+                            cfg.set("tune", tu.tune.clone());
+                            study.set("config", cfg);
+                        }
+                    }
+                }
+            }
+            s
+        }) {
+            doc.set("studies", Json::Arr(studies));
+        }
+        let mut manifest = StudyManifest::from_json(&doc)?;
+        for s in &mut manifest.studies {
+            s.config.seed = s.config.seed.wrapping_add(self.seed);
+        }
+        Ok(manifest.to_json())
+    }
+}
+
+fn axis_entries<'a>(axes: &'a Json, key: &str) -> anyhow::Result<&'a [Json]> {
+    axes.require(key)?
+        .as_arr()
+        .with_context(|| format!("'axes.{key}' must be an array"))
+}
+
+fn axis_name(entry: &Json, axis: &str, i: usize) -> anyhow::Result<String> {
+    let name = entry
+        .get("name")
+        .and_then(|v| v.as_str())
+        .with_context(|| format!("axis '{axis}' entry {i} needs a string 'name'"))?;
+    if !valid_axis_name(name) {
+        bail!("axis '{axis}' name '{name}' is invalid (allowed: [A-Za-z0-9._-], no leading dot)");
+    }
+    Ok(name.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn study(name: &str, seed: u64) -> String {
+        format!(
+            r#"{{"name": "{name}", "quota": 2, "config": {{
+              "h_params": {{"lr": {{"parameters": [0.005, 0.09],
+                "distribution": "log_uniform", "type": "float",
+                "p_range": [0.001, 0.2]}}}},
+              "measure": "test/accuracy", "order": "descending", "step": 10,
+              "population": 2, "tune": {{"random": {{}}}},
+              "termination": {{"max_session_number": 4}},
+              "model": "surrogate:resnet", "max_epochs": 40, "max_gpus": 2,
+              "seed": {seed}
+            }}}}"#
+        )
+    }
+
+    fn spec_doc() -> Json {
+        let text = format!(
+            r#"{{
+              "base_manifest": {{"cluster_gpus": 4, "borrow": false,
+                                 "studies": [{}, {}]}},
+              "seed": "7",
+              "axes": {{
+                "scenarios": [{{"name": "calm", "scenario": null}}],
+                "tuners": [{{"name": "random", "tune": {{"random": {{}}}}}},
+                           {{"name": "asha", "tune": {{"asha": {{}}}}}}],
+                "policies": [{{"name": "strict", "borrow": false}},
+                             {{"name": "borrow", "borrow": true}}]
+              }}
+            }}"#,
+            study("a", 1),
+            study("b", 2)
+        );
+        parse(&text).unwrap()
+    }
+
+    #[test]
+    fn cells_expand_in_grid_order_with_stable_hashes() {
+        let spec = SweepSpec::from_json(&spec_doc(), None).unwrap();
+        let cells = spec.cells().unwrap();
+        let ids: Vec<&str> = cells.iter().map(|c| c.id.as_str()).collect();
+        assert_eq!(
+            ids,
+            [
+                "calm-random-strict",
+                "calm-random-borrow",
+                "calm-asha-strict",
+                "calm-asha-borrow"
+            ]
+        );
+        // Same spec, same hash bytes; distinct cells, distinct hashes.
+        let again = SweepSpec::from_json(&spec_doc(), None).unwrap().cells().unwrap();
+        for (a, b) in cells.iter().zip(&again) {
+            assert_eq!(a.hash, b.hash);
+        }
+        let mut hashes: Vec<&str> = cells.iter().map(|c| c.hash.as_str()).collect();
+        hashes.sort_unstable();
+        hashes.dedup();
+        assert_eq!(hashes.len(), 4);
+    }
+
+    #[test]
+    fn overrides_land_in_the_resolved_manifest() {
+        let spec = SweepSpec::from_json(&spec_doc(), None).unwrap();
+        let cells = spec.cells().unwrap();
+        let strict = cells.iter().find(|c| c.id == "calm-asha-strict").unwrap();
+        let m = strict.manifest().unwrap();
+        assert!(!m.borrow);
+        assert_eq!(m.studies[0].config.tune.name(), "asha");
+        // Sweep seed 7 added to the study seeds 1 and 2.
+        assert_eq!(m.studies[0].config.seed, 8);
+        assert_eq!(m.studies[1].config.seed, 9);
+        let borrow = cells.iter().find(|c| c.id == "calm-random-borrow").unwrap();
+        assert!(borrow.manifest().unwrap().borrow);
+    }
+
+    #[test]
+    fn seed_changes_every_hash() {
+        let spec = SweepSpec::from_json(&spec_doc(), None).unwrap();
+        let mut reseeded = spec_doc();
+        reseeded.set("seed", Json::Str("8".into()));
+        let other = SweepSpec::from_json(&reseeded, None).unwrap();
+        for (a, b) in spec.cells().unwrap().iter().zip(other.cells().unwrap().iter()) {
+            assert_ne!(a.hash, b.hash, "cell {}", a.id);
+        }
+    }
+
+    #[test]
+    fn bad_axis_entries_fail_fast() {
+        let mut doc = spec_doc();
+        let axes = doc.get("axes").unwrap().clone();
+        let mut bad = axes.clone();
+        bad.set("tuners", parse(r#"[{"name": "x"}]"#).unwrap());
+        doc.set("axes", bad);
+        assert!(SweepSpec::from_json(&doc, None).is_err());
+
+        let mut doc = spec_doc();
+        let mut bad = axes;
+        bad.set(
+            "policies",
+            parse(r#"[{"name": "p"}, {"name": "p"}]"#).unwrap(),
+        );
+        doc.set("axes", bad);
+        assert!(SweepSpec::from_json(&doc, None).is_err());
+    }
+}

@@ -1,0 +1,616 @@
+//! Parse + semantic validation for manifests, scenarios, and sweep
+//! specs — the `chopt validate` subcommand.
+//!
+//! Every diagnostic carries a `line:col` pointer into the file:
+//! parse errors map the parser's byte offset, semantic errors point at
+//! the first occurrence of the offending key or value (best-effort
+//! text scan — good enough to land an editor cursor).  Unknown keys
+//! are **warnings** (forward compatibility: engines ignore them
+//! silently, which is exactly how typos ship), everything that would
+//! make the run refuse to start or behave nonsensically is an
+//! **error**.  The sweep runner calls this before expanding the grid,
+//! so a bad spec fails in milliseconds instead of after burning cells.
+
+use std::path::Path;
+
+use chopt_core::util::json::{parse, JsonError, Value as Json};
+use chopt_engine::coordinator::{valid_study_name, StudyManifest};
+
+use crate::spec::SweepSpec;
+
+/// Diagnostic severity: errors fail validation (non-zero exit),
+/// warnings do not.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+impl Severity {
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        }
+    }
+}
+
+/// One finding, anchored to a 1-based `line:col` in the validated file.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub severity: Severity,
+    pub message: String,
+    pub line: usize,
+    pub col: usize,
+}
+
+/// All findings for one file.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub path: String,
+    pub diags: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn has_errors(&self) -> bool {
+        self.diags.iter().any(|d| d.severity == Severity::Error)
+    }
+
+    /// `path:line:col: severity: message` — one finding per line, the
+    /// grep/compiler convention editors already know how to jump on.
+    pub fn render(&self) -> String {
+        self.diags
+            .iter()
+            .map(|d| {
+                format!(
+                    "{}:{}:{}: {}: {}",
+                    self.path,
+                    d.line,
+                    d.col,
+                    d.severity.label(),
+                    d.message
+                )
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+/// Map a byte offset to a 1-based (line, col).
+fn line_col(text: &str, offset: usize) -> (usize, usize) {
+    let offset = offset.min(text.len());
+    let before = &text[..offset];
+    let line = before.bytes().filter(|&b| b == b'\n').count() + 1;
+    let col = before.rfind('\n').map(|p| offset - p).unwrap_or(offset + 1);
+    (line, col)
+}
+
+/// Best-effort pointer at a JSON key or string value: the first
+/// occurrence of the quoted token.  Falls back to 1:1.
+fn locate(text: &str, token: &str) -> (usize, usize) {
+    let needle = format!("\"{token}\"");
+    match text.find(&needle) {
+        Some(pos) => line_col(text, pos),
+        None => (1, 1),
+    }
+}
+
+struct Ctx<'a> {
+    text: &'a str,
+    diags: Vec<Diagnostic>,
+}
+
+impl<'a> Ctx<'a> {
+    fn new(text: &'a str) -> Ctx<'a> {
+        Ctx {
+            text,
+            diags: Vec::new(),
+        }
+    }
+
+    fn push(&mut self, severity: Severity, at: (usize, usize), message: String) {
+        self.diags.push(Diagnostic {
+            severity,
+            message,
+            line: at.0,
+            col: at.1,
+        });
+    }
+
+    fn error_at_token(&mut self, token: &str, message: String) {
+        let at = locate(self.text, token);
+        self.push(Severity::Error, at, message);
+    }
+
+    fn warn_at_token(&mut self, token: &str, message: String) {
+        let at = locate(self.text, token);
+        self.push(Severity::Warning, at, message);
+    }
+
+    /// Warn on every key of `obj` not in `known`.
+    fn check_keys(&mut self, obj: &Json, known: &[&str], what: &str) {
+        if let Some(pairs) = obj.as_obj() {
+            for (key, _) in pairs {
+                if !known.contains(&key.as_str()) {
+                    self.warn_at_token(
+                        key,
+                        format!(
+                            "unknown {what} key '{key}' (ignored by the engine; known: {})",
+                            known.join(", ")
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn read_and_parse(path: &Path) -> Result<(String, Json), Report> {
+    let display = path.display().to_string();
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            return Err(Report {
+                path: display,
+                diags: vec![Diagnostic {
+                    severity: Severity::Error,
+                    message: format!("cannot read file: {e}"),
+                    line: 1,
+                    col: 1,
+                }],
+            })
+        }
+    };
+    match parse(&text) {
+        Ok(doc) => Ok((text, doc)),
+        Err(err) => {
+            let (line, col, msg) = match &err {
+                JsonError::Parse { offset, msg } => {
+                    let (l, c) = line_col(&text, *offset);
+                    (l, c, msg.clone())
+                }
+                other => (1, 1, other.to_string()),
+            };
+            Err(Report {
+                path: display,
+                diags: vec![Diagnostic {
+                    severity: Severity::Error,
+                    message: format!("JSON parse error: {msg}"),
+                    line,
+                    col,
+                }],
+            })
+        }
+    }
+}
+
+const MANIFEST_KEYS: &[&str] = &[
+    "cluster_gpus",
+    "master_period",
+    "horizon",
+    "borrow",
+    "policy",
+    "trace",
+    "scenario",
+    "retry",
+    "studies",
+];
+const STUDY_KEYS: &[&str] = &["name", "quota", "priority", "submit_at", "failures", "config"];
+const RETRY_KEYS: &[&str] = &[
+    "base_backoff",
+    "factor",
+    "max_backoff",
+    "max_attempts",
+    "reset_window",
+];
+const POLICY_KEYS: &[&str] = &["low_util", "max_bonus_factor", "min_gpus"];
+const SCENARIO_KEYS: &[&str] = &["sources", "submissions"];
+const SWEEP_KEYS: &[&str] = &[
+    "base_manifest",
+    "seed",
+    "chunk",
+    "snapshot_every",
+    "target_measure",
+    "axes",
+];
+const AXES_KEYS: &[&str] = &["scenarios", "tuners", "policies"];
+const SCENARIO_AXIS_KEYS: &[&str] = &["name", "scenario", "path"];
+const TUNER_AXIS_KEYS: &[&str] = &["name", "tune"];
+const POLICY_AXIS_KEYS: &[&str] = &["name", "borrow", "policy", "retry", "master_period"];
+
+/// Semantic checks on a multi-study manifest document (shared between
+/// `--manifest` files and a sweep spec's inline base).
+fn check_manifest_doc(ctx: &mut Ctx<'_>, doc: &Json) {
+    ctx.check_keys(doc, MANIFEST_KEYS, "manifest");
+    let cluster_gpus = doc.get("cluster_gpus").and_then(|v| v.as_usize());
+    if cluster_gpus.is_none() {
+        ctx.error_at_token(
+            "cluster_gpus",
+            "manifest needs a numeric 'cluster_gpus'".into(),
+        );
+    }
+    if let Some(mp) = doc.get("master_period").and_then(|v| v.as_f64()) {
+        if !(mp.is_finite() && mp > 0.0) {
+            ctx.error_at_token("master_period", format!("'master_period' must be > 0 (got {mp})"));
+        }
+    }
+    if let Some(h) = doc.get("horizon").and_then(|v| v.as_f64()) {
+        if !(h.is_finite() && h > 0.0) {
+            ctx.error_at_token("horizon", format!("'horizon' must be > 0 (got {h})"));
+        }
+    }
+    if let Some(policy) = doc.get("policy").filter(|v| !v.is_null()) {
+        ctx.check_keys(policy, POLICY_KEYS, "policy");
+        if let Some(lu) = policy.get("low_util").and_then(|v| v.as_f64()) {
+            if !(lu > 0.0 && lu <= 1.0) {
+                ctx.error_at_token("low_util", format!("'low_util' must be in (0, 1] (got {lu})"));
+            }
+        }
+        if let Some(mb) = policy.get("max_bonus_factor").and_then(|v| v.as_f64()) {
+            if !(mb.is_finite() && mb >= 1.0) {
+                ctx.error_at_token(
+                    "max_bonus_factor",
+                    format!("'max_bonus_factor' must be >= 1 (got {mb})"),
+                );
+            }
+        }
+        if policy.get("min_gpus").and_then(|v| v.as_usize()) == Some(0) {
+            ctx.error_at_token("min_gpus", "'min_gpus' must be >= 1".into());
+        }
+    }
+    if let Some(retry) = doc.get("retry").filter(|v| !v.is_null()) {
+        check_retry_doc(ctx, retry);
+    }
+    if let Some(scenario) = doc.get("scenario").filter(|v| !v.is_null()) {
+        check_scenario_doc(ctx, scenario);
+    }
+
+    let studies = doc.get("studies").and_then(|v| v.as_arr());
+    let Some(studies) = studies else {
+        ctx.error_at_token("studies", "manifest needs a 'studies' array".into());
+        return;
+    };
+    if studies.is_empty() {
+        ctx.error_at_token("studies", "'studies' must not be empty".into());
+        return;
+    }
+    let mut seen = std::collections::HashSet::new();
+    let mut explicit = 0usize;
+    let mut unspecified = 0usize;
+    for (i, study) in studies.iter().enumerate() {
+        ctx.check_keys(study, STUDY_KEYS, "study");
+        let name = study
+            .get("name")
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| format!("study-{i}"));
+        if !valid_study_name(&name) {
+            ctx.error_at_token(
+                &name,
+                format!(
+                    "study name '{name}' is invalid (allowed: [A-Za-z0-9._-], no leading dot)"
+                ),
+            );
+        }
+        if !seen.insert(name.clone()) {
+            ctx.error_at_token(&name, format!("duplicate study name '{name}'"));
+        }
+        match study.get("quota").and_then(|v| v.as_usize()) {
+            Some(0) | None => unspecified += 1,
+            Some(q) => explicit += q,
+        }
+        if let Some(p) = study.get("priority").filter(|v| !v.is_null()) {
+            match p.as_f64() {
+                Some(p) if p.is_finite() && p > 0.0 => {}
+                got => ctx.error_at_token(
+                    "priority",
+                    format!("study '{name}': 'priority' must be a finite number > 0 (got {got:?})"),
+                ),
+            }
+        }
+        if study.get("config").is_none() {
+            ctx.error_at_token(&name, format!("study '{name}' is missing 'config'"));
+        }
+    }
+    if let Some(total) = cluster_gpus {
+        if explicit > total {
+            ctx.error_at_token(
+                "cluster_gpus",
+                format!("study quotas sum to {explicit} but the cluster has only {total} GPUs"),
+            );
+        } else if unspecified > 0 && (total - explicit) / unspecified == 0 {
+            ctx.error_at_token(
+                "studies",
+                format!(
+                    "{unspecified} studies without quotas but only {} unreserved GPUs",
+                    total - explicit
+                ),
+            );
+        }
+    }
+}
+
+fn check_retry_doc(ctx: &mut Ctx<'_>, retry: &Json) {
+    ctx.check_keys(retry, RETRY_KEYS, "retry");
+    let base = retry.get("base_backoff").and_then(|v| v.as_f64());
+    if let Some(b) = base {
+        if !(b.is_finite() && b > 0.0) {
+            ctx.error_at_token("base_backoff", format!("'base_backoff' must be > 0 (got {b})"));
+        }
+    }
+    if let Some(f) = retry.get("factor").and_then(|v| v.as_f64()) {
+        if !(f.is_finite() && f >= 1.0) {
+            ctx.error_at_token("factor", format!("retry 'factor' must be >= 1 (got {f})"));
+        }
+    }
+    if let Some(m) = retry.get("max_backoff").and_then(|v| v.as_f64()) {
+        let b = base.unwrap_or(120.0);
+        if !(m.is_finite() && m >= b) {
+            ctx.error_at_token(
+                "max_backoff",
+                format!("'max_backoff' ({m}) must be >= base_backoff ({b})"),
+            );
+        }
+    }
+    if retry.get("max_attempts").and_then(|v| v.as_usize()) == Some(0) {
+        ctx.error_at_token("max_attempts", "'max_attempts' must be >= 1".into());
+    }
+}
+
+/// Semantic checks on a scenario document (standalone file or the
+/// manifest's `scenario` field).
+fn check_scenario_doc(ctx: &mut Ctx<'_>, doc: &Json) {
+    ctx.check_keys(doc, SCENARIO_KEYS, "scenario");
+    let known: &[(&str, &[&str])] = &[
+        ("diurnal", &["kind", "total_gpus", "base", "amp", "period", "jitter", "seed"]),
+        ("flash_crowd", &["kind", "total_gpus", "spike", "first_at", "every", "duration", "seed"]),
+        ("spot_reclaim", &["kind", "slots", "wave_size", "first_at", "every", "waves", "seed"]),
+        ("degraded_node", &["kind", "gpus", "first_at", "every", "duration", "seed"]),
+    ];
+    if let Some(sources) = doc.get("sources").and_then(|v| v.as_arr()) {
+        for (i, src) in sources.iter().enumerate() {
+            match src.get("kind").and_then(|v| v.as_str()) {
+                Some(kind) => match known.iter().find(|(k, _)| *k == kind) {
+                    Some((_, keys)) => ctx.check_keys(src, keys, "scenario source"),
+                    None => ctx.error_at_token(
+                        kind,
+                        format!(
+                            "unknown scenario source kind '{kind}' (known: {})",
+                            known.iter().map(|(k, _)| *k).collect::<Vec<_>>().join(", ")
+                        ),
+                    ),
+                },
+                None => ctx.error_at_token(
+                    "sources",
+                    format!("scenario source {i} is missing 'kind'"),
+                ),
+            }
+        }
+    } else {
+        ctx.error_at_token("sources", "scenario needs a 'sources' array".into());
+    }
+    if let Some(subs) = doc.get("submissions").and_then(|v| v.as_arr()) {
+        for (i, sub) in subs.iter().enumerate() {
+            ctx.check_keys(sub, &["submit_at", "study"], "scenario submission");
+            if sub.get("submit_at").and_then(|v| v.as_f64()).is_none() {
+                ctx.error_at_token(
+                    "submissions",
+                    format!("scenario submission {i} needs a numeric 'submit_at'"),
+                );
+            }
+            if sub.get("study").is_none() {
+                ctx.error_at_token(
+                    "submissions",
+                    format!("scenario submission {i} needs a 'study' spec object"),
+                );
+            }
+        }
+    }
+}
+
+fn check_sweep_doc(ctx: &mut Ctx<'_>, doc: &Json) {
+    ctx.check_keys(doc, SWEEP_KEYS, "sweep spec");
+    if let Some(Json::Obj(_)) = doc.get("base_manifest") {
+        check_manifest_doc(ctx, doc.get("base_manifest").unwrap());
+    }
+    if let Some(c) = doc.get("chunk").and_then(|v| v.as_f64()) {
+        if !(c.is_finite() && c >= 1.0) {
+            ctx.error_at_token("chunk", format!("'chunk' must be >= 1 virtual second (got {c})"));
+        }
+    }
+    let Some(axes) = doc.get("axes") else {
+        ctx.error_at_token("axes", "sweep spec needs an 'axes' object".into());
+        return;
+    };
+    ctx.check_keys(axes, AXES_KEYS, "axes");
+    let per_axis: &[(&str, &[&str])] = &[
+        ("scenarios", SCENARIO_AXIS_KEYS),
+        ("tuners", TUNER_AXIS_KEYS),
+        ("policies", POLICY_AXIS_KEYS),
+    ];
+    for (axis, keys) in per_axis {
+        match axes.get(axis).and_then(|v| v.as_arr()) {
+            Some(entries) if !entries.is_empty() => {
+                for entry in entries {
+                    ctx.check_keys(entry, keys, &format!("{axis} axis entry"));
+                    if let Some(retry) = entry.get("retry").filter(|v| !v.is_null()) {
+                        if *axis == "policies" {
+                            check_retry_doc(ctx, retry);
+                        }
+                    }
+                    if let Some(sc) = entry.get("scenario").filter(|v| !v.is_null()) {
+                        if *axis == "scenarios" {
+                            check_scenario_doc(ctx, sc);
+                        }
+                    }
+                }
+            }
+            _ => ctx.error_at_token(
+                axis,
+                format!("sweep axis '{axis}' needs a non-empty array"),
+            ),
+        }
+    }
+}
+
+/// Validate a multi-study manifest file.  Structural checks first for
+/// pointed diagnostics, then the real parser as a backstop so nothing
+/// the engine would reject slips through with a clean report.
+pub fn validate_manifest_file(path: impl AsRef<Path>) -> Report {
+    let path = path.as_ref();
+    let (text, doc) = match read_and_parse(path) {
+        Ok(ok) => ok,
+        Err(report) => return report,
+    };
+    let mut ctx = Ctx::new(&text);
+    check_manifest_doc(&mut ctx, &doc);
+    if !ctx.diags.iter().any(|d| d.severity == Severity::Error) {
+        if let Err(e) = StudyManifest::from_json(&doc) {
+            ctx.push(Severity::Error, (1, 1), format!("{e:#}"));
+        }
+    }
+    Report {
+        path: path.display().to_string(),
+        diags: ctx.diags,
+    }
+}
+
+/// Validate a standalone scenario file.
+pub fn validate_scenario_file(path: impl AsRef<Path>) -> Report {
+    let path = path.as_ref();
+    let (text, doc) = match read_and_parse(path) {
+        Ok(ok) => ok,
+        Err(report) => return report,
+    };
+    let mut ctx = Ctx::new(&text);
+    check_scenario_doc(&mut ctx, &doc);
+    if !ctx.diags.iter().any(|d| d.severity == Severity::Error) {
+        if let Err(e) = chopt_cluster::Scenario::from_json(&doc) {
+            ctx.push(Severity::Error, (1, 1), format!("{e:#}"));
+        }
+    }
+    Report {
+        path: path.display().to_string(),
+        diags: ctx.diags,
+    }
+}
+
+/// Validate a sweep spec file, including full grid expansion (every
+/// resolved cell manifest must parse) — exactly what `chopt sweep`
+/// runs before touching the worker pool.
+pub fn validate_sweep_file(path: impl AsRef<Path>) -> Report {
+    let path = path.as_ref();
+    let (text, doc) = match read_and_parse(path) {
+        Ok(ok) => ok,
+        Err(report) => return report,
+    };
+    let mut ctx = Ctx::new(&text);
+    check_sweep_doc(&mut ctx, &doc);
+    if !ctx.diags.iter().any(|d| d.severity == Severity::Error) {
+        match SweepSpec::from_json(&doc, path.parent()) {
+            Err(e) => ctx.push(Severity::Error, (1, 1), format!("{e:#}")),
+            Ok(spec) => {
+                if let Err(e) = spec.cells() {
+                    ctx.push(Severity::Error, (1, 1), format!("{e:#}"));
+                }
+            }
+        }
+    }
+    Report {
+        path: path.display().to_string(),
+        diags: ctx.diags,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str, text: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("chopt-validate-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        std::fs::write(&path, text).unwrap();
+        path
+    }
+
+    const GOOD_STUDY: &str = r#"{"name": "a", "quota": 2, "config": {
+        "h_params": {"lr": {"parameters": [0.005, 0.09],
+            "distribution": "log_uniform", "type": "float",
+            "p_range": [0.001, 0.2]}},
+        "measure": "test/accuracy", "order": "descending", "step": 10,
+        "population": 2, "tune": {"random": {}},
+        "termination": {"max_session_number": 4},
+        "model": "surrogate:resnet", "max_epochs": 40, "max_gpus": 2,
+        "seed": 1}}"#;
+
+    #[test]
+    fn parse_errors_carry_line_and_col() {
+        let path = tmp("broken.json", "{\n  \"cluster_gpus\": 8,\n  oops\n}");
+        let report = validate_manifest_file(&path);
+        assert!(report.has_errors());
+        assert_eq!(report.diags[0].line, 3);
+        assert!(report.render().contains("error"));
+    }
+
+    #[test]
+    fn quota_overflow_and_unknown_keys() {
+        let text = format!(
+            r#"{{"cluster_gpus": 1, "tpyo": 1, "studies": [{GOOD_STUDY}]}}"#
+        );
+        let path = tmp("over.json", &text);
+        let report = validate_manifest_file(&path);
+        assert!(report.has_errors(), "{}", report.render());
+        assert!(report.render().contains("quotas sum to 2"), "{}", report.render());
+        assert!(report.render().contains("unknown manifest key 'tpyo'"));
+    }
+
+    #[test]
+    fn good_manifest_passes() {
+        let text = format!(r#"{{"cluster_gpus": 4, "studies": [{GOOD_STUDY}]}}"#);
+        let path = tmp("good.json", &text);
+        let report = validate_manifest_file(&path);
+        assert!(!report.has_errors(), "{}", report.render());
+    }
+
+    #[test]
+    fn retry_bounds_are_checked() {
+        let text = format!(
+            r#"{{"cluster_gpus": 4,
+                 "retry": {{"base_backoff": 0, "max_attempts": 0}},
+                 "studies": [{GOOD_STUDY}]}}"#
+        );
+        let path = tmp("retry.json", &text);
+        let report = validate_manifest_file(&path);
+        assert!(report.has_errors());
+        let rendered = report.render();
+        assert!(rendered.contains("base_backoff"), "{rendered}");
+        assert!(rendered.contains("max_attempts"), "{rendered}");
+    }
+
+    #[test]
+    fn scenario_unknown_kind_is_an_error() {
+        let path = tmp(
+            "scenario.json",
+            r#"{"sources": [{"kind": "tsunami", "total_gpus": 8}]}"#,
+        );
+        let report = validate_scenario_file(&path);
+        assert!(report.has_errors());
+        assert!(report.render().contains("tsunami"));
+    }
+
+    #[test]
+    fn sweep_spec_missing_axis_fails() {
+        let text = format!(
+            r#"{{"base_manifest": {{"cluster_gpus": 4, "studies": [{GOOD_STUDY}]}},
+                 "axes": {{"scenarios": [{{"name": "calm", "scenario": null}}],
+                           "tuners": []}}}}"#
+        );
+        let path = tmp("sweep.json", &text);
+        let report = validate_sweep_file(&path);
+        assert!(report.has_errors());
+        let rendered = report.render();
+        assert!(rendered.contains("tuners"), "{rendered}");
+        assert!(rendered.contains("policies"), "{rendered}");
+    }
+}

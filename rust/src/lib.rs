@@ -108,5 +108,13 @@ pub mod viz {
     pub use chopt_control::*;
 }
 
+/// The sweep harness (re-export of [`chopt_sweep`]): declarative
+/// (scenario × tuner × policy) grids over one base manifest, the
+/// content-addressed cell runner, the `sweep.json` comparison
+/// artifact, the read-only sweep `RunSource`, and `chopt validate`.
+pub mod sweep {
+    pub use chopt_sweep::*;
+}
+
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

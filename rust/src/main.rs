@@ -6,10 +6,14 @@
 //!                  periodic snapshots, stop-and-go restore
 //!   multi          run N studies from a manifest on one shared cluster
 //!                  (fair-share quotas + cross-study Stop-and-Go)
+//!   sweep          evaluate a (scenario x tuner x policy) grid from a
+//!                  sweep spec into a comparison artifact (sweep.json)
+//!   validate       check a manifest / scenario / sweep spec without
+//!                  running it (file:line:col diagnostics)
 //!   example-config print the paper's Listing-1 example configuration
 //!   artifacts      inspect the AOT artifact manifest
-//!   serve          serve stored results (or a live run) through the viz
-//!                  HTTP server
+//!   serve          serve stored results, a sweep artifact, or a live
+//!                  run through the viz HTTP server
 
 use std::collections::HashSet;
 use std::sync::Arc;
@@ -81,6 +85,24 @@ fn cli() -> Command {
                     "bounded submission-queue depth (sharded runs; overflow spills + retries)",
                 ),
         )
+        .subcommand(
+            Command::new("sweep", "evaluate a (scenario x tuner x policy) grid from a sweep spec")
+                .opt_required("spec", "path to a sweep spec JSON (see README §Sweeps)")
+                .opt(
+                    "out",
+                    Some("reports/sweep"),
+                    "output directory (cells/<id>/..., sweep.json)",
+                )
+                .opt("cell-workers", Some("2"), "worker threads running whole cells in parallel")
+                .flag("resume", "keep completed cells whose content hash matches the plan")
+                .flag("quiet", "suppress per-cell progress lines"),
+        )
+        .subcommand(
+            Command::new("validate", "check a manifest / scenario / sweep spec without running it")
+                .opt("manifest", None, "studies manifest to check")
+                .opt("scenario", None, "scenario JSON to check")
+                .opt("sweep", None, "sweep spec JSON to check (axes + base manifest + cells)"),
+        )
         .subcommand(Command::new(
             "example-config",
             "print the paper's Listing-1 example configuration",
@@ -95,6 +117,12 @@ fn cli() -> Command {
                     "store",
                     None,
                     "run directory (snapshot.json + events JSONL) written by `watch`/`multi`",
+                )
+                .opt(
+                    "sweep",
+                    None,
+                    "sweep directory (or sweep.json) written by `sweep`; serves \
+                     /api/v1/sweep read-only",
                 )
                 .opt("port", Some("8787"), "listen port")
                 .flag("live", "drive a run in-process and answer /api/v1 as it advances")
@@ -167,6 +195,8 @@ fn main() {
             "run" => cmd_run(sub),
             "watch" => cmd_watch(sub),
             "multi" => cmd_multi(sub),
+            "sweep" => cmd_sweep(sub),
+            "validate" => cmd_validate(sub),
             "example-config" => {
                 println!("{}", chopt::config::LISTING1_EXAMPLE);
                 Ok(())
@@ -703,6 +733,101 @@ fn cmd_multi_sharded(
     Ok(())
 }
 
+/// `chopt sweep`: expand a (scenario × tuner × policy) grid from a
+/// sweep spec, run every cell as an independent deterministic
+/// multi-study run on a bounded worker pool, and fold the per-cell
+/// metrics into `sweep.json`.  Cells are content-addressed, so
+/// `--resume` recomputes only missing or stale ones and a re-run of the
+/// same spec is byte-identical.
+fn cmd_sweep(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
+    let spec_path = m.get("spec").unwrap();
+    // Fail fast with the same file:line:col diagnostics `chopt validate
+    // --sweep` prints, before any cell starts burning virtual hours.
+    let report = chopt::sweep::validate_sweep_file(spec_path);
+    let rendered = report.render();
+    if !rendered.is_empty() {
+        eprintln!("{rendered}");
+    }
+    anyhow::ensure!(!report.has_errors(), "sweep spec {spec_path} failed validation");
+
+    let spec = chopt::sweep::SweepSpec::load(spec_path)?;
+    let out = m.get_or("out", "reports/sweep").to_string();
+    let opts = chopt::sweep::SweepOptions {
+        workers: m.get_usize("cell-workers").unwrap_or(2).max(1),
+        resume: m.flag("resume"),
+        quiet: m.flag("quiet"),
+    };
+    println!(
+        "sweep: {} scenarios × {} tuners × {} policies = {} cells on {} workers{}",
+        spec.scenarios.len(),
+        spec.tuners.len(),
+        spec.policies.len(),
+        spec.scenarios.len() * spec.tuners.len() * spec.policies.len(),
+        opts.workers,
+        if opts.resume { " (resume)" } else { "" },
+    );
+    let outcome = chopt::sweep::run_sweep(&spec, &out, &opts)?;
+    if !outcome.cells_skipped.is_empty() {
+        println!(
+            "reused {} completed cells: {}",
+            outcome.cells_skipped.len(),
+            outcome.cells_skipped.join(" ")
+        );
+    }
+    let top: Vec<&str> = outcome
+        .artifact
+        .path("rankings.by_score")
+        .and_then(|v| v.as_arr())
+        .map(|ids| ids.iter().filter_map(|v| v.as_str()).take(3).collect())
+        .unwrap_or_default();
+    println!(
+        "done: {} cells ({} computed), best by score: {}\nwrote {out}/{{sweep.json,cells/<id>/...}}\nserve it: chopt serve --sweep {out}",
+        outcome.cells_total,
+        outcome.cells_run.len(),
+        if top.is_empty() {
+            "-".to_string()
+        } else {
+            top.join(" > ")
+        },
+    );
+    Ok(())
+}
+
+/// `chopt validate`: parse + semantic checks for a manifest, scenario,
+/// or sweep spec without running anything.  Diagnostics render as
+/// `path:line:col: severity: message`; exits non-zero on errors so CI
+/// and the sweep harness can gate on it.
+fn cmd_validate(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
+    let mut reports = Vec::new();
+    if let Some(path) = m.get("manifest") {
+        reports.push(chopt::sweep::validate_manifest_file(path));
+    }
+    if let Some(path) = m.get("scenario") {
+        reports.push(chopt::sweep::validate_scenario_file(path));
+    }
+    if let Some(path) = m.get("sweep") {
+        reports.push(chopt::sweep::validate_sweep_file(path));
+    }
+    anyhow::ensure!(
+        !reports.is_empty(),
+        "validate needs --manifest, --scenario, or --sweep"
+    );
+    let mut errors = false;
+    for report in &reports {
+        let rendered = report.render();
+        if !rendered.is_empty() {
+            println!("{rendered}");
+        }
+        if report.has_errors() {
+            errors = true;
+        } else {
+            println!("{}: ok", report.path);
+        }
+    }
+    anyhow::ensure!(!errors, "validation failed");
+    Ok(())
+}
+
 /// Drop event-log records stamped after `cut` (the restored snapshot's
 /// virtual time): the continued run re-emits that window, and the log is
 /// opened in append mode, so keeping them would duplicate every pool
@@ -805,8 +930,11 @@ fn cmd_serve(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
     if m.flag("live") {
         return cmd_serve_live(m, port);
     }
+    if let Some(sweep_path) = m.get("sweep") {
+        return cmd_serve_sweep(m, port, sweep_path);
+    }
     let Some(store_path) = m.get("store") else {
-        anyhow::bail!("serve needs --store (or --live with --config)");
+        anyhow::bail!("serve needs --store, --sweep, or --live with --config");
     };
     // The stored run is rebuilt into the same incremental documents the
     // live path serves (full-fidelity replay), so every /api/v1 query
@@ -839,6 +967,30 @@ fn cmd_serve(m: &chopt::util::cli::Matches) -> anyhow::Result<()> {
         },
     );
     let mut source = stored;
+    loop {
+        inbox.serve_one(&mut source, Duration::from_millis(500));
+    }
+}
+
+/// `chopt serve --sweep`: serve a sweep artifact read-only through the
+/// same worker-pool HTTP server.  The artifact has a fixed generation,
+/// so every response body is rendered once and stays cache-resident;
+/// an individual cell's run directory is still servable in full with
+/// `--store <out>/cells/<id>` (cells are valid stored runs).
+fn cmd_serve_sweep(m: &chopt::util::cli::Matches, port: u16, path: &str) -> anyhow::Result<()> {
+    let mut source = chopt::sweep::SweepSource::open(path)?;
+    // No recorded progress stream for an artifact: SSE stays connected
+    // on heartbeats alone so dashboards keep one code path.
+    let feed = EventFeed::new(usize::MAX);
+    let server =
+        viz::server::VizServer::start_with(port, viz::server::Routes::new(), server_config(m))?;
+    server.serve_events(feed, SSE_HEARTBEAT);
+    let inbox = server.enable_api();
+    println!(
+        "serving sweep {path} on http://{}/ — GET /api/v1/sweep, /api/v1/sweep/cells/<id> ({} cells) (read-only; ctrl-c to stop)",
+        server.addr(),
+        source.cell_ids().len(),
+    );
     loop {
         inbox.serve_one(&mut source, Duration::from_millis(500));
     }

@@ -114,6 +114,12 @@ fn fingerprint<S: RunSource>(src: &S, names: &[String], dir: &Path, end: f64) ->
     let doc = |q: &ApiQuery| src.query(q).unwrap().to_string_compact();
     let mut status = src.query(&ApiQuery::Status).unwrap();
     status.set("events_processed", Json::Num(0.0));
+    // Sharded status docs append control-plane gauges
+    // (submission_queue depth / quota_ledger reservations) that a
+    // single scheduler has no analog for; neutralize on both sides —
+    // `set` appends missing keys at the end, so the bytes still match.
+    status.set("submission_queue", Json::Null);
+    status.set("quota_ledger", Json::Null);
     let per_study = names
         .iter()
         .map(|n| {

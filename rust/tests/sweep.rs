@@ -1,0 +1,226 @@
+//! Property tests for the sweep harness contract:
+//!
+//! 1. **Pool-size invariance** — the worker-pool size is purely a
+//!    wall-clock knob: every byte the sweep writes (`sweep.json` and
+//!    every file in every cell directory) is identical across
+//!    cell-worker counts {1, 4}.
+//! 2. **Standalone equivalence** — a sweep cell is exactly the
+//!    deterministic multi-study run `chopt multi` would produce from
+//!    the same (manifest, scenario, seed): per-study event logs and
+//!    the final snapshot are bit-identical to an independently driven
+//!    `MultiPlatform` over the cell's resolved manifest.
+//! 3. **Resume soundness** — after deleting half the cell directories,
+//!    `--resume` recomputes exactly the missing cells and reproduces a
+//!    byte-identical `sweep.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use chopt::coordinator::MultiPlatform;
+use chopt::sweep::runner::take_submissions;
+use chopt::sweep::{run_sweep, SweepOptions, SweepSpec};
+use chopt::trainer::surrogate::default_multi_factory;
+use chopt::util::json::parse;
+
+fn study_json(name: &str, quota: usize, seed: u64) -> String {
+    format!(
+        r#"{{"name": "{name}", "quota": {quota}, "config": {{
+          "h_params": {{
+            "lr": {{"parameters": [0.005, 0.09], "distribution": "log_uniform",
+                    "type": "float", "p_range": [0.001, 0.2]}}
+          }},
+          "measure": "test/accuracy", "order": "descending", "step": 10,
+          "population": 2, "tune": {{"random": {{}}}},
+          "termination": {{"max_session_number": 4}},
+          "model": "surrogate:resnet", "max_epochs": 40, "max_gpus": 2,
+          "seed": {seed}
+        }}}}"#
+    )
+}
+
+/// 2 scenarios (calm / external-load storm with a mid-run submission)
+/// × 1 tuner × 2 policies (borrow on / off) — 4 cells on a 4-GPU
+/// cluster with quota headroom for the submitted study.
+fn spec() -> SweepSpec {
+    let storm = format!(
+        r#"{{"sources": [{{"kind": "diurnal", "total_gpus": 2, "base": 0.5,
+                          "amp": 0.5, "period": 86400, "jitter": 0.0, "seed": 5}}],
+            "submissions": [{{"submit_at": 120, "study": {}}}]}}"#,
+        study_json("late", 1, 30)
+    );
+    let doc = parse(&format!(
+        r#"{{
+            "base_manifest": {{"cluster_gpus": 4, "studies": [{}, {}]}},
+            "seed": "7",
+            "target_measure": 0.2,
+            "axes": {{
+                "scenarios": [{{"name": "calm", "scenario": null}},
+                              {{"name": "storm", "scenario": {storm}}}],
+                "tuners": [{{"name": "random", "tune": {{"random": {{}}}}}}],
+                "policies": [{{"name": "borrow", "borrow": true}},
+                             {{"name": "strict", "borrow": false}}]
+            }}
+        }}"#,
+        study_json("s0", 1, 11),
+        study_json("s1", 1, 12),
+    ))
+    .unwrap();
+    SweepSpec::from_json(&doc, None).unwrap()
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("chopt-sweep-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Every file under `dir`, keyed by relative path — the byte-level
+/// fingerprint the invariance properties compare.
+fn tree_bytes(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(root: &Path, dir: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        for entry in std::fs::read_dir(dir).unwrap().flatten() {
+            let path = entry.path();
+            if path.is_dir() {
+                walk(root, &path, out);
+            } else {
+                let rel = path.strip_prefix(root).unwrap().to_string_lossy().into_owned();
+                out.insert(rel, std::fs::read(&path).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(dir, dir, &mut out);
+    out
+}
+
+#[test]
+fn sweep_bytes_invariant_across_worker_counts() {
+    let spec = spec();
+    let a = temp_dir("w1");
+    let b = temp_dir("w4");
+    let one = run_sweep(&spec, &a, &SweepOptions { workers: 1, ..SweepOptions::default() })
+        .unwrap();
+    let four = run_sweep(&spec, &b, &SweepOptions { workers: 4, ..SweepOptions::default() })
+        .unwrap();
+    assert_eq!(one.cells_total, 4);
+    assert_eq!(one.cells_run.len(), 4);
+    assert_eq!(four.cells_run.len(), 4);
+    assert_eq!(
+        one.artifact.to_string_compact(),
+        four.artifact.to_string_compact()
+    );
+    let ta = tree_bytes(&a);
+    assert_eq!(ta, tree_bytes(&b), "worker-pool size changed sweep output bytes");
+    assert!(ta.contains_key("sweep.json"));
+    // The storm cells admit the scenario-submitted study, so their cell
+    // directories carry its event log too.
+    assert!(ta.contains_key("cells/storm-random-borrow/events-late.jsonl"));
+    let _ = std::fs::remove_dir_all(&a);
+    let _ = std::fs::remove_dir_all(&b);
+}
+
+/// Drive `plan.manifest()` exactly the way `chopt multi` does — chunked
+/// advances split at each scenario-submission time — and compare the
+/// run's bytes with the sweep cell's.
+#[test]
+fn sweep_cell_matches_standalone_multi_run() {
+    let spec = spec();
+    let out = temp_dir("cells");
+    run_sweep(&spec, &out, &SweepOptions::default()).unwrap();
+
+    for plan in spec.cells().unwrap() {
+        let solo = temp_dir(&format!("solo-{}", plan.id));
+        std::fs::create_dir_all(&solo).unwrap();
+        let mut manifest = plan.manifest().unwrap();
+        let mut subs = take_submissions(&mut manifest).unwrap();
+        let mut p = MultiPlatform::new(manifest, default_multi_factory)
+            .with_event_logs(&solo)
+            .unwrap()
+            .with_snapshots(solo.join("snapshot.json"), spec.snapshot_every);
+        loop {
+            let target = p.now() + spec.chunk;
+            let mut n = 0;
+            while subs.first().map(|&(at, _)| at <= target).unwrap_or(false) {
+                let (at, s) = subs.remove(0);
+                n += p.run_until(at);
+                assert!(p.submit_study(s, at).is_some(), "cell {}", plan.id);
+                n += 1;
+            }
+            n += p.advance((target - p.now()).max(0.0));
+            if n == 0 && !subs.is_empty() {
+                let (at, s) = subs.remove(0);
+                n += p.run_until(at);
+                assert!(p.submit_study(s, at).is_some(), "cell {}", plan.id);
+                n += 1;
+            }
+            if (p.is_done() && subs.is_empty()) || n == 0 {
+                break;
+            }
+        }
+        assert!(p.is_done(), "standalone run stalled (cell {})", plan.id);
+        p.snapshot_now().unwrap();
+
+        let cell_dir = out.join("cells").join(&plan.id);
+        for name in p.scheduler().studies().iter().map(|s| s.name().to_string()) {
+            let log = format!("events-{name}.jsonl");
+            assert_eq!(
+                std::fs::read(solo.join(&log)).unwrap(),
+                std::fs::read(cell_dir.join(&log)).unwrap(),
+                "event log {log} diverged (cell {})",
+                plan.id
+            );
+        }
+        assert_eq!(
+            std::fs::read(solo.join("snapshot.json")).unwrap(),
+            std::fs::read(cell_dir.join("snapshot.json")).unwrap(),
+            "snapshot diverged (cell {})",
+            plan.id
+        );
+        let _ = std::fs::remove_dir_all(&solo);
+    }
+    let _ = std::fs::remove_dir_all(&out);
+}
+
+#[test]
+fn resume_recomputes_only_missing_cells_byte_identically() {
+    let spec = spec();
+    let out = temp_dir("resume");
+    let first = run_sweep(&spec, &out, &SweepOptions::default()).unwrap();
+    assert_eq!(first.cells_run.len(), 4);
+    let baseline = tree_bytes(&out);
+
+    // Knock out half the grid (one per scenario) and the artifact.
+    let gone = ["calm-random-strict", "storm-random-borrow"];
+    for id in gone {
+        std::fs::remove_dir_all(out.join("cells").join(id)).unwrap();
+    }
+    std::fs::remove_file(out.join("sweep.json")).unwrap();
+
+    let second = run_sweep(
+        &spec,
+        &out,
+        &SweepOptions { resume: true, ..SweepOptions::default() },
+    )
+    .unwrap();
+    assert_eq!(second.cells_run, gone.to_vec());
+    assert_eq!(
+        second.cells_skipped,
+        vec!["calm-random-borrow".to_string(), "storm-random-strict".to_string()]
+    );
+    assert_eq!(
+        baseline,
+        tree_bytes(&out),
+        "resume did not reproduce the original sweep bytes"
+    );
+
+    // A third resume with nothing missing runs zero cells.
+    let third = run_sweep(
+        &spec,
+        &out,
+        &SweepOptions { resume: true, ..SweepOptions::default() },
+    )
+    .unwrap();
+    assert!(third.cells_run.is_empty());
+    assert_eq!(third.cells_skipped.len(), 4);
+    let _ = std::fs::remove_dir_all(&out);
+}
